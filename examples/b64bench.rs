@@ -1,0 +1,16 @@
+fn main() {
+    use feddart::util::base64::{encode_f32, decode_f32};
+    let v: Vec<f32> = (0..436736).map(|i| (i as f32).sin()).collect();
+    let t0 = std::time::Instant::now();
+    let mut s = String::new();
+    for _ in 0..20 { s = encode_f32(&v); }
+    let enc = t0.elapsed() / 20;
+    let t0 = std::time::Instant::now();
+    let mut back = Vec::new();
+    for _ in 0..20 { back = decode_f32(&s).unwrap(); }
+    let dec = t0.elapsed() / 20;
+    assert_eq!(back, v);
+    let mb = (v.len() * 4) as f64 / 1e6;
+    println!("encode: {:?} ({:.0} MB/s)  decode: {:?} ({:.0} MB/s)",
+             enc, mb / enc.as_secs_f64(), dec, mb / dec.as_secs_f64());
+}

@@ -1,0 +1,74 @@
+//! Quickstart: federated training of an MLP classifier in local test mode.
+//!
+//! This is the paper's §3 workflow end to end: synthesize per-client data,
+//! register the `@feddart` client functions, start the simulated DART
+//! runtime, initialize the FACT Server with a model + stopping criterion,
+//! call `learn()`, and evaluate.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use feddart::coordinator::WorkflowManager;
+use feddart::dart::TaskRegistry;
+use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
+use feddart::fact::model::{HloModel, Hyper};
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::{Aggregation, FactClientRuntime, FactServer};
+use feddart::metrics::logserver::LogServer;
+use feddart::runtime::{default_artifacts_dir, Engine};
+
+fn main() -> feddart::Result<()> {
+    LogServer::init(log::LevelFilter::Warn);
+
+    // 1. The AOT-compiled compute (JAX + Pallas, built by `make artifacts`).
+    let engine = Engine::load(&default_artifacts_dir(), 1)?;
+
+    // 2. Client side: local data + the predefined @feddart functions.
+    //    (In production each physical client runs this; in test mode one
+    //    process hosts all of them — same code, paper §3.)
+    let clients = 8;
+    let registry = TaskRegistry::new();
+    let client_rt = FactClientRuntime::new(engine.clone());
+    let data = synthesize(&SyntheticConfig {
+        clients,
+        samples_per_client: 512,
+        dim: 32,
+        classes: 10,
+        partition: Partition::Iid,
+        seed: 42,
+    })?;
+    for (name, d) in data {
+        client_rt.add_supervised(&name, d);
+    }
+    client_rt.register(&registry);
+
+    // 3. The Fed-DART runtime in test mode (simulated DART-server+clients).
+    let wm = WorkflowManager::test_mode(clients, registry, 4);
+
+    // 4. The FACT Server: model + aggregation + stopping criterion.
+    let mut server = FactServer::new(wm)
+        .with_hyper(Hyper { lr: 0.2, mu: 0.0, local_steps: 4, round: 0 });
+    let model = HloModel::arc(&engine, "mlp_default", Aggregation::WeightedFedAvg)?;
+    server.initialization_by_model(model, Arc::new(FixedRoundFl(20)), 42)?;
+
+    // 5. Train.
+    server.learn()?;
+
+    println!("round  mean_client_loss");
+    for r in server.history() {
+        println!("{:>5}  {:.4}", r.round, r.mean_loss);
+    }
+
+    // 6. Evaluate the global model on every client's held-out data.
+    for e in server.evaluate()? {
+        println!(
+            "\nheld-out: loss {:.4}, accuracy {:.3} (chance would be 0.100)",
+            e.loss, e.accuracy
+        );
+    }
+    engine.shutdown();
+    Ok(())
+}

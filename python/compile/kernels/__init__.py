@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only): dense matmul path and fedavg reduce."""
+from .dense import dense, matmul  # noqa: F401
+from .fedavg import fedavg  # noqa: F401

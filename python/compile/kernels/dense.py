@@ -1,0 +1,204 @@
+"""L1 Pallas kernels: tiled matmul and fused dense (matmul + bias + activation).
+
+These are the compute hot-spots of the client-side training steps (L2,
+``compile/model.py``).  They are written in the TPU discipline — block-tiled
+for VMEM with the HBM<->VMEM schedule expressed through ``BlockSpec`` and the
+MXU-shaped inner ``jnp.dot`` — but are lowered with ``interpret=True`` so the
+resulting HLO runs on any PJRT backend (the Rust coordinator's CPU client
+included).  Real-TPU efficiency is estimated analytically in EXPERIMENTS.md.
+
+The differentiable entry point is :func:`dense`, a ``jax.custom_vjp`` whose
+forward *and* backward matmuls all route through the same Pallas kernel, so
+``jax.grad`` of any model built on :func:`dense` stays on the kernel path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes follow the MXU systolic-array shape (128x128) with a smaller
+# K-step so one (bm, bk) + (bk, bn) + (bm, bn) working set fits comfortably
+# in VMEM (~16 MiB).  See EXPERIMENTS.md "L1 kernel footprint" for the sweep.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _block(dim: int, preferred: int) -> int:
+    """Pick a block size: the preferred MXU tile, shrunk for tiny dims."""
+    if dim >= preferred:
+        return preferred
+    # Round tiny dims up to a multiple of 8 (VPU sublane) instead of 128.
+    return max(8, _ceil_to(dim, 8))
+
+
+def _pad2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid (M/bm, N/bn, K/bk); K innermost revisits the output block."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pallas-tiled ``x @ y`` for 2-D float inputs of any shape.
+
+    Inputs are zero-padded up to block multiples; the result is sliced back.
+    """
+    (m, k), (k2, n) = x.shape, y.shape
+    assert k == k2, f"matmul shape mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = _block(m, BLOCK_M), _block(n, BLOCK_N), _block(k, BLOCK_K)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xq, yq = _pad2(x, mp, kp), _pad2(y, kp, np_)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xq, yq)
+    return out[:m, :n]
+
+
+def _act_fwd(z: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "none":
+        return z
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "gelu":
+        # tanh-approximate GELU: cheap on the VPU, matches jax.nn.gelu default.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        return 0.5 * z * (1.0 + jnp.tanh(c * (z + 0.044715 * z**3)))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _act_bwd(z: jnp.ndarray, act: str) -> jnp.ndarray:
+    """d act(z) / dz evaluated at the saved pre-activation."""
+    if act == "none":
+        return jnp.ones_like(z)
+    if act == "relu":
+        return (z > 0.0).astype(z.dtype)
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        t = jnp.tanh(c * (z + 0.044715 * z**3))
+        dt = (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * z**2)
+        return 0.5 * (1.0 + t) + 0.5 * z * dt
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, z_ref, *, nk: int, act: str):
+    """Fused ``act(x @ w + b)``; also emits pre-activation z as a residual."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    z_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=z_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        z = z_ref[...] + b_ref[...]
+        z_ref[...] = z
+        o_ref[...] = _act_fwd(z, act)
+
+
+def _dense_fwd_impl(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    (m, k), (_, n) = x.shape, w.shape
+    bm, bn, bk = _block(m, BLOCK_M), _block(n, BLOCK_N), _block(k, BLOCK_K)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xq, wq = _pad2(x, mp, kp), _pad2(w, kp, np_)
+    bq = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    nk = kp // bk
+    out, z = pl.pallas_call(
+        functools.partial(_dense_kernel, nk=nk, act=act),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        ],
+        interpret=True,
+    )(xq, wq, bq)
+    return out[:m, :n], z[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str = "none"):
+    """Differentiable fused dense layer ``act(x @ w + b)`` on the Pallas path."""
+    out, _ = _dense_fwd_impl(x, w, b, act)
+    return out
+
+
+def _dense_vjp_fwd(x, w, b, act):
+    out, z = _dense_fwd_impl(x, w, b, act)
+    return out, (x, w, z)
+
+
+def _dense_vjp_bwd(act, res, g):
+    x, w, z = res
+    dz = g * _act_bwd(z, act)          # elementwise: VPU work, stays in jnp
+    dx = matmul(dz, w.T)               # dgrad on the Pallas kernel
+    dw = matmul(x.T, dz)               # wgrad on the Pallas kernel
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM working set of one dense grid step (for DESIGN/EXPERIMENTS).
+
+    x-block + w-block + bias-block + out-block + z-block, double-buffered
+    on the input streams (x, w) as the Mosaic pipeliner would.
+    """
+    xb = bm * bk * dtype_bytes
+    wb = bk * bn * dtype_bytes
+    bb = bn * dtype_bytes
+    ob = bm * bn * dtype_bytes
+    return 2 * (xb + wb) + bb + 2 * ob
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             bm: int = BLOCK_M, bn: int = BLOCK_N,
+                             bk: int = BLOCK_K) -> float:
+    """Fraction of MXU issue slots doing useful work, from padding overhead."""
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    return (m * n * k) / float(mp * np_ * kp)

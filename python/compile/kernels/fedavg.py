@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused weighted federated averaging.
+
+Aggregates K client parameter vectors (stacked as ``[K, P]``) into one global
+vector with per-client weights — the Reduce step of the paper's MapReduce
+analogy (Fed-DART paper §2.1).  The kernel streams P-blocks of the stacked
+matrix through VMEM; the (tiny) weight vector rides along in full each step.
+
+The Rust coordinator uses its native chunked-parallel reduction on the hot
+path for arbitrary K; this kernel is the HLO-fused variant benched against it
+in experiment E7 (``cargo bench --bench bench_aggregation``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The P-block is chosen adaptively per K: the largest power of two such
+# that the double-buffered (K, bp) input block plus the output block stays
+# inside a 12 MiB VMEM budget (16 MiB minus headroom).  The §Perf sweep
+# (EXPERIMENTS.md) measured 4096 -> 32768 -> adaptive at 674ms -> 293ms ->
+# 220ms per (8, 2^20) aggregation under interpret mode, with the same
+# relative ordering expected from the HBM-revisit count on real TPU.
+VMEM_BUDGET = 12 * 1024 * 1024
+BLOCK_P_MAX = 1 << 17
+
+
+def block_p(k: int) -> int:
+    """Largest power-of-two block with 2*(K*bp*4) + bp*4 <= VMEM_BUDGET."""
+    bp = BLOCK_P_MAX
+    while bp > 1024 and (2 * k * bp * 4 + bp * 4) > VMEM_BUDGET:
+        bp //= 2
+    return bp
+
+
+def _fedavg_kernel(w_ref, x_ref, o_ref):
+    # (K,) @ (K, bp) -> (bp,): a skinny matvec; on TPU this maps onto the
+    # VPU as a K-deep multiply-accumulate over 8x128 vregs.
+    o_ref[...] = jnp.dot(w_ref[...], x_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def fedavg(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted average over axis 0: ``sum_k w_k x_k / sum_k w_k``.
+
+    ``stacked``: ``[K, P]`` float32, ``weights``: ``[K]`` float32 (>= 0).
+    Zero-weight rows are ignored, which is how the Rust side pads a variable
+    client count up to the compiled K.
+    """
+    k, p = stacked.shape
+    wn = weights / jnp.maximum(jnp.sum(weights), jnp.finfo(stacked.dtype).tiny)
+    bp = min(block_p(k), p)
+    rem = p % bp
+    if rem:
+        stacked = jnp.pad(stacked, ((0, 0), (0, bp - rem)))
+    pp = stacked.shape[1]
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), stacked.dtype),
+        interpret=True,
+    )(wn, stacked)
+    return out[:p]
+
+
+def vmem_footprint_bytes(k: int, bp: int = 0, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM working set of one grid step (double-buffered input)."""
+    if bp == 0:
+        bp = block_p(k)
+    return 2 * (k * bp * dtype_bytes) + k * dtype_bytes + bp * dtype_bytes

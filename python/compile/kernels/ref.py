@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package has a reference implementation here written with
+nothing but ``jax.numpy``; pytest (``python/tests/test_kernels.py``) sweeps
+shapes with hypothesis and asserts allclose between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.matmul(x, y)
+
+
+def act_ref(z: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "none":
+        return z
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        return 0.5 * z * (1.0 + jnp.tanh(c * (z + 0.044715 * z**3)))
+    raise ValueError(act)
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              act: str = "none") -> jnp.ndarray:
+    return act_ref(jnp.matmul(x, w) + b, act)
+
+
+def fedavg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    wn = weights / jnp.maximum(jnp.sum(weights), jnp.finfo(stacked.dtype).tiny)
+    return jnp.einsum("k,kp->p", wn, stacked)

@@ -1,0 +1,316 @@
+"""L2: client-side compute graphs (JAX, build time only).
+
+Every graph the Rust coordinator executes is defined here as a pure function
+over a *flat* ``f32[P]`` parameter vector plus batch inputs, so the Rust side
+handles parameters as opaque vectors (the paper's client sends/receives
+"model parameters" as plain arrays through Fed-DART's parameterDict — §A.1).
+
+Models:
+  * **MLP classifier** (≙ the paper's KerasModel / ScikitNNModel): dense
+    layers on the L1 Pallas kernel (:func:`kernels.dense`), softmax
+    cross-entropy, one SGD step per call with an optional FedProx proximal
+    term — ``mu = 0`` recovers plain FedAvg local training, so one artifact
+    serves both aggregation families.
+  * **Causal transformer LM** (the end-to-end driver's workload): decoder-only
+    LM with tied embeddings; the position-wise MLP block rides the Pallas
+    dense kernel, attention stays in jnp (it is XLA-fusable as-is).
+  * **fedavg** aggregation graph on the L1 fedavg kernel (benched against the
+    Rust-native reduction in E7).
+
+All entry points are AOT-lowered to HLO text by :mod:`compile.aot`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense, fedavg as fedavg_kernel
+
+# --------------------------------------------------------------------------
+# Parameter flattening
+# --------------------------------------------------------------------------
+
+ParamSpec = List[Tuple[str, Tuple[int, ...]]]
+
+
+def spec_size(spec: ParamSpec) -> int:
+    n = 0
+    for _, shape in spec:
+        c = 1
+        for d in shape:
+            c *= d
+        n += c
+    return n
+
+
+def unflatten(spec: ParamSpec, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    out, off = {}, 0
+    for name, shape in spec:
+        c = 1
+        for d in shape:
+            c *= d
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (c,)).reshape(shape)
+        off += c
+    return out
+
+
+def flatten(spec: ParamSpec, tree: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate([tree[name].reshape(-1) for name, _ in spec])
+
+
+# --------------------------------------------------------------------------
+# MLP classifier
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    name: str
+    in_dim: int
+    hidden: Tuple[int, ...]
+    classes: int
+    act: str = "relu"
+    train_batch: int = 32
+    eval_batch: int = 128
+
+    def spec(self) -> ParamSpec:
+        spec: ParamSpec = []
+        dims = (self.in_dim,) + self.hidden + (self.classes,)
+        for i in range(len(dims) - 1):
+            spec.append((f"w{i}", (dims[i], dims[i + 1])))
+            spec.append((f"b{i}", (dims[i + 1],)))
+        return spec
+
+    @property
+    def param_count(self) -> int:
+        return spec_size(self.spec())
+
+
+def mlp_init(cfg: MlpConfig, seed: jnp.ndarray) -> jnp.ndarray:
+    """He-initialised flat parameter vector from an int32 seed."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    tree = {}
+    dims = (cfg.in_dim,) + cfg.hidden + (cfg.classes,)
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i]).astype(jnp.float32)
+        tree[f"w{i}"] = scale * jax.random.normal(
+            sub, (dims[i], dims[i + 1]), jnp.float32
+        )
+        tree[f"b{i}"] = jnp.zeros((dims[i + 1],), jnp.float32)
+    return flatten(cfg.spec(), tree)
+
+
+def mlp_logits(cfg: MlpConfig, flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    tree = unflatten(cfg.spec(), flat)
+    h = x
+    nlayers = len(cfg.hidden) + 1
+    for i in range(nlayers):
+        act = cfg.act if i < nlayers - 1 else "none"
+        h = dense(h, tree[f"w{i}"], tree[f"b{i}"], act)
+    return h
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+
+
+def mlp_loss(cfg: MlpConfig, flat, x, y, mu, gflat) -> jnp.ndarray:
+    data = jnp.mean(softmax_xent(mlp_logits(cfg, flat, x), y))
+    prox = 0.5 * mu * jnp.sum((flat - gflat) ** 2)
+    return data + prox
+
+
+def mlp_train_step(cfg: MlpConfig, flat, x, y, lr, mu, gflat):
+    """One local SGD step (FedProx when mu > 0).  Returns (params', loss)."""
+    loss, grad = jax.value_and_grad(
+        lambda p: mlp_loss(cfg, p, x, y, mu, gflat)
+    )(flat)
+    return flat - lr * grad, loss
+
+
+def mlp_eval(cfg: MlpConfig, flat, x, y):
+    """Returns (summed loss, count of correct predictions) as f32 scalars."""
+    logits = mlp_logits(cfg, flat, x)
+    loss_sum = jnp.sum(softmax_xent(logits, y))
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss_sum, ncorrect
+
+
+def mlp_predict(cfg: MlpConfig, flat, x):
+    """Class logits — used by the federated stacking ensemble (E8)."""
+    return mlp_logits(cfg, flat, x)
+
+
+# --------------------------------------------------------------------------
+# Causal transformer LM
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TfmConfig:
+    name: str
+    vocab: int
+    d_model: int
+    heads: int
+    layers: int
+    seq: int
+    train_batch: int = 8
+    eval_batch: int = 8
+    mlp_mult: int = 4
+    use_pallas_mlp: bool = True
+
+    def spec(self) -> ParamSpec:
+        d, h = self.d_model, self.mlp_mult * self.d_model
+        spec: ParamSpec = [
+            ("embed", (self.vocab, d)),
+            ("pos", (self.seq, d)),
+        ]
+        for l in range(self.layers):
+            spec += [
+                (f"l{l}.ln1_s", (d,)), (f"l{l}.ln1_b", (d,)),
+                (f"l{l}.wq", (d, d)), (f"l{l}.wk", (d, d)),
+                (f"l{l}.wv", (d, d)), (f"l{l}.wo", (d, d)),
+                (f"l{l}.ln2_s", (d,)), (f"l{l}.ln2_b", (d,)),
+                (f"l{l}.w1", (d, h)), (f"l{l}.b1", (h,)),
+                (f"l{l}.w2", (h, d)), (f"l{l}.b2", (d,)),
+            ]
+        spec += [("lnf_s", (d,)), ("lnf_b", (d,))]
+        return spec
+
+    @property
+    def param_count(self) -> int:
+        return spec_size(self.spec())
+
+
+def tfm_init(cfg: TfmConfig, seed: jnp.ndarray) -> jnp.ndarray:
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    tree = {}
+    # GPT-2-style: N(0, 0.02) with residual projections scaled by 1/sqrt(2L).
+    resid_scale = 0.02 / jnp.sqrt(2.0 * cfg.layers)
+    for name, shape in cfg.spec():
+        key, sub = jax.random.split(key)
+        if name.endswith("_s"):
+            tree[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", ".b1", ".b2")):
+            tree[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith((".wo", ".w2")):
+            tree[name] = resid_scale * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            tree[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return flatten(cfg.spec(), tree)
+
+
+def _layernorm(x, s, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * s + b
+
+
+def _attention(cfg: TfmConfig, t, x):
+    b, s, d = x.shape
+    nh, hd = cfg.heads, d // cfg.heads
+
+    def proj(w):
+        return jnp.einsum("bsd,de->bse", x, w).reshape(b, s, nh, hd)
+
+    q, k, v = proj(t["wq"]), proj(t["wk"]), proj(t["wv"])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(mask[None, None, :, :] > 0, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+    return jnp.einsum("bsd,de->bse", out, t["wo"])
+
+
+def _tfm_mlp(cfg: TfmConfig, t, x):
+    b, s, d = x.shape
+    if cfg.use_pallas_mlp:
+        h = dense(x.reshape(b * s, d), t["w1"], t["b1"], "gelu")
+        o = dense(h, t["w2"], t["b2"], "none")
+        return o.reshape(b, s, d)
+    h = jax.nn.gelu(jnp.einsum("bsd,dh->bsh", x, t["w1"]) + t["b1"])
+    return jnp.einsum("bsh,hd->bsd", h, t["w2"]) + t["b2"]
+
+
+def tfm_logits(cfg: TfmConfig, flat: jnp.ndarray, tokens: jnp.ndarray):
+    """tokens: int32 [B, S] -> logits [B, S, V] (tied unembedding)."""
+    tree = unflatten(cfg.spec(), flat)
+    x = jnp.take(tree["embed"], tokens, axis=0) + tree["pos"][None, :, :]
+    for l in range(cfg.layers):
+        t = {k.split(".", 1)[1]: v for k, v in tree.items()
+             if k.startswith(f"l{l}.")}
+        x = x + _attention(cfg, t, _layernorm(x, t["ln1_s"], t["ln1_b"]))
+        x = x + _tfm_mlp(cfg, t, _layernorm(x, t["ln2_s"], t["ln2_b"]))
+    x = _layernorm(x, tree["lnf_s"], tree["lnf_b"])
+    return jnp.einsum("bsd,vd->bsv", x, tree["embed"])
+
+
+def tfm_loss(cfg: TfmConfig, flat, tokens, mu, gflat):
+    """tokens: int32 [B, S+1]; next-token cross-entropy averaged per token."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = tfm_logits(cfg, flat, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[:, :, 0]
+    data = jnp.mean(nll)
+    prox = 0.5 * mu * jnp.sum((flat - gflat) ** 2)
+    return data + prox
+
+
+def tfm_train_step(cfg: TfmConfig, flat, tokens, lr, mu, gflat):
+    loss, grad = jax.value_and_grad(
+        lambda p: tfm_loss(cfg, p, tokens, mu, gflat)
+    )(flat)
+    return flat - lr * grad, loss
+
+
+def tfm_eval(cfg: TfmConfig, flat, tokens):
+    """Returns (summed nll, token count) as f32 scalars."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = tfm_logits(cfg, flat, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[:, :, 0]
+    return jnp.sum(nll), jnp.asarray(float(nll.size), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Aggregation graph (L1 fedavg kernel)
+# --------------------------------------------------------------------------
+
+
+def fedavg_agg(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted federated averaging on the Pallas kernel; zero-weight rows pad."""
+    return fedavg_kernel(stacked, weights)
+
+
+# --------------------------------------------------------------------------
+# Registry of shipped configurations
+# --------------------------------------------------------------------------
+
+MLP_CONFIGS: Dict[str, MlpConfig] = {
+    c.name: c
+    for c in [
+        # the default cross-silo workload (E1..E6 benches + examples)
+        MlpConfig("mlp_default", in_dim=32, hidden=(64, 64), classes=10),
+        # tiny variant for fast unit/integration tests
+        MlpConfig("mlp_tiny", in_dim=8, hidden=(16,), classes=4,
+                  train_batch=16, eval_batch=32),
+    ]
+}
+
+TFM_CONFIGS: Dict[str, TfmConfig] = {
+    c.name: c
+    for c in [
+        # end-to-end federated LM driver
+        TfmConfig("tfm_tiny", vocab=256, d_model=128, heads=4, layers=2,
+                  seq=64, train_batch=8, eval_batch=8),
+    ]
+}
+
+# fedavg HLO variants for E7: (K clients, P params).
+FEDAVG_VARIANTS: List[Tuple[int, int]] = [(8, 1 << 20), (32, 1 << 20)]

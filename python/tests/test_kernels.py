@@ -1,0 +1,195 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes; fixed cases cover the block-boundary edge cases
+(exact multiples, one-off, tiny dims) that tiling bugs hide in.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, matmul, fedavg
+from compile.kernels import ref
+from compile.kernels.dense import (
+    BLOCK_K, BLOCK_M, BLOCK_N,
+    mxu_utilization_estimate, vmem_footprint_bytes,
+)
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ----------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 8),
+        (128, 128, 128),          # exactly one MXU block
+        (129, 127, 130),          # one past / one short of block
+        (256, 384, 128),          # multi-block K accumulation
+        (3, 200, 5),              # skinny
+        (200, 3, 200),            # tiny K
+    ],
+)
+def test_matmul_shapes(m, k, n):
+    x, y = rand(0, m, k), rand(1, k, n)
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(m, k, n, seed):
+    x, y = rand(seed, m, k), rand(seed + 1, k, n)
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL
+    )
+
+
+# ------------------------------------------------------------------ dense
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu"])
+@pytest.mark.parametrize("m,k,n", [(32, 32, 10), (130, 64, 65), (1, 7, 3)])
+def test_dense_fused(act, m, k, n):
+    x, w, b = rand(2, m, k), rand(3, k, n), rand(4, n)
+    np.testing.assert_allclose(
+        dense(x, w, b, act), ref.dense_ref(x, w, b, act), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_hypothesis(m, k, n, act, seed):
+    x, w, b = rand(seed, m, k), rand(seed + 1, k, n), rand(seed + 2, n)
+    np.testing.assert_allclose(
+        dense(x, w, b, act), ref.dense_ref(x, w, b, act), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu"])
+def test_dense_grads_match_reference(act):
+    """custom_vjp backward (Pallas dgrad/wgrad) vs jax autodiff of the oracle."""
+    x, w, b = rand(5, 33, 47), rand(6, 47, 11), rand(7, 11)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(jnp.sin(dense(x, w, b, act)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.dense_ref(x, w, b, act)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_grad_under_jit():
+    x, w, b = rand(8, 16, 16), rand(9, 16, 16), rand(10, 16)
+    f = jax.jit(jax.grad(lambda w: jnp.sum(dense(x, w, b, "relu") ** 2)))
+    g = jax.grad(lambda w: jnp.sum(ref.dense_ref(x, w, b, "relu") ** 2))(w)
+    np.testing.assert_allclose(f(w), g, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- fedavg
+
+@pytest.mark.parametrize("k,p", [(1, 10), (2, 4096), (8, 4097), (32, 12345)])
+def test_fedavg_shapes(k, p):
+    s = rand(11, k, p)
+    w = jnp.abs(rand(12, k)) + 0.05
+    np.testing.assert_allclose(
+        fedavg(s, w), ref.fedavg_ref(s, w), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(1, 40),
+    p=st.integers(1, 9000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fedavg_hypothesis(k, p, seed):
+    s = rand(seed, k, p)
+    w = jnp.abs(rand(seed + 1, k)) + 0.05
+    np.testing.assert_allclose(
+        fedavg(s, w), ref.fedavg_ref(s, w), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_fedavg_zero_weight_rows_are_padding():
+    """Padding scheme: rows with zero weight must not affect the average."""
+    s = rand(13, 8, 100)
+    w = jnp.array([1.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0], jnp.float32)
+    out_full = fedavg(s, w)
+    out_sub = fedavg(s[:3], w[:3])
+    np.testing.assert_allclose(out_full, out_sub, rtol=RTOL, atol=ATOL)
+
+
+def test_fedavg_identity_single_client():
+    s = rand(14, 1, 500)
+    out = fedavg(s, jnp.ones((1,), jnp.float32))
+    np.testing.assert_allclose(out, s[0], rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------- analytic models
+
+def test_vmem_footprint_within_budget():
+    """Default block config must fit a 16 MiB VMEM with double buffering."""
+    assert vmem_footprint_bytes(BLOCK_M, BLOCK_N, BLOCK_K) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_estimates():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(129, 128, 128) < 0.6
+    assert 0.99 < mxu_utilization_estimate(1024, 1024, 1024) <= 1.0
+
+
+# ------------------------------------------------- adaptive fedavg blocks
+
+def test_fedavg_block_p_respects_vmem_budget():
+    from compile.kernels.fedavg import block_p, VMEM_BUDGET, BLOCK_P_MAX
+    for k in [1, 2, 8, 32, 64, 128, 512]:
+        bp = block_p(k)
+        assert bp & (bp - 1) == 0, f"block_p({k})={bp} not a power of two"
+        assert 2 * k * bp * 4 + bp * 4 <= VMEM_BUDGET or bp == 1024
+        assert bp <= BLOCK_P_MAX
+    # monotone non-increasing in K
+    bps = [block_p(k) for k in [1, 4, 16, 64, 256]]
+    assert bps == sorted(bps, reverse=True)
+
+
+def test_fedavg_correct_across_block_boundaries():
+    """P values straddling the adaptive block size still match the oracle."""
+    from compile.kernels.fedavg import block_p
+    k = 8
+    bp = block_p(k)
+    for p in [bp - 1, bp, bp + 1, 2 * bp + 17]:
+        s = rand(21, k, p)
+        w = jnp.abs(rand(22, k)) + 0.1
+        np.testing.assert_allclose(
+            fedavg(s, w), ref.fedavg_ref(s, w), rtol=RTOL, atol=ATOL
+        )
+
+
+def test_fedavg_vmem_default_uses_adaptive_block():
+    from compile.kernels.fedavg import vmem_footprint_bytes, VMEM_BUDGET
+    assert vmem_footprint_bytes(8) <= VMEM_BUDGET
+    assert vmem_footprint_bytes(32) <= VMEM_BUDGET

@@ -1,0 +1,108 @@
+//! E7 — aggregation scaling (paper §A.2: the Aggregator "can spawn
+//! ChildAggregators to create a tree structure. This allows balancing and
+//! parallelization of operations").
+//!
+//! Regenerates: time to aggregate K client parameter vectors of dimension
+//! P with (a) the flat single-thread reduction, (b) the Aggregator-tree
+//! parallel reduction, and (c) the HLO-fused L1 Pallas kernel (fixed-K
+//! artifacts with zero-weight padding).  Expected shape: flat wins for
+//! small K*P; the tree wins for large K; the HLO kernel is competitive at
+//! its compiled shape but pays padding for small real sizes.
+
+#[path = "common.rs"]
+mod common;
+
+use feddart::benchkit::{fmt_s, time_n, Table};
+use feddart::coordinator::{flat_reduce_weighted, parallel_reduce_weighted, tree_reduce_weighted};
+use feddart::fact::aggregation::{hlo_fedavg, ClientUpdate};
+use feddart::util::pool::ThreadPool;
+use feddart::util::rng::Rng;
+
+fn updates(k: usize, p: usize, rng: &mut Rng) -> Vec<ClientUpdate> {
+    (0..k)
+        .map(|i| ClientUpdate {
+            device: format!("c{i}"),
+            params: rng.normal_vec(p),
+            n_samples: 1.0 + (i % 7) as f32,
+            loss: 0.0,
+            duration: 0.0,
+        })
+        .collect()
+}
+
+fn main() {
+    let engine = common::require_artifacts();
+    let pool = ThreadPool::default_size();
+    let mut rng = Rng::new(3);
+    let mut t = Table::new(&["K", "P", "flat", "tree(K-chunk)", "parallel(P-chunk)", "hlo_kernel"]);
+
+    for &(k, p) in &[
+        (8usize, 6922usize),     // the real mlp_default shape
+        (8, 1 << 20),
+        (32, 1 << 20),
+        (64, 1 << 20),
+        (128, 1 << 20),
+    ] {
+        let ups = updates(k, p, &mut rng);
+        let vectors: Vec<Vec<f32>> = ups.iter().map(|u| u.params.clone()).collect();
+        let weights: Vec<f32> = ups.iter().map(|u| u.n_samples).collect();
+
+        let flat = time_n(1, 5, || {
+            std::hint::black_box(flat_reduce_weighted(&vectors, &weights));
+        });
+        let tree = time_n(1, 5, || {
+            std::hint::black_box(tree_reduce_weighted(&vectors, &weights, 8, &pool));
+        });
+        let par = time_n(1, 5, || {
+            std::hint::black_box(parallel_reduce_weighted(
+                &vectors, &weights, pool.worker_count(),
+            ));
+        });
+        // HLO variant only exists for compiled (K<=8|32, P<=2^20) shapes
+        let hlo_entry = if k <= 8 {
+            Some("fedavg_k8_p1048576")
+        } else if k <= 32 {
+            Some("fedavg_k32_p1048576")
+        } else {
+            None
+        };
+        let hlo_cell = match hlo_entry {
+            Some(entry) if p <= (1 << 20) => {
+                let s = time_n(1, 3, || {
+                    std::hint::black_box(
+                        hlo_fedavg(&engine, entry, &ups, &weights).unwrap(),
+                    );
+                });
+                fmt_s(s.mean)
+            }
+            _ => "-".into(),
+        };
+        t.row(&[
+            k.to_string(),
+            p.to_string(),
+            fmt_s(flat.mean),
+            fmt_s(tree.mean),
+            fmt_s(par.mean),
+            hlo_cell,
+        ]);
+    }
+    t.print("E7: weighted aggregation — flat vs Aggregator tree vs HLO Pallas kernel");
+
+    // correctness cross-check at one large shape
+    let ups = updates(32, 1 << 18, &mut rng);
+    let vectors: Vec<Vec<f32>> = ups.iter().map(|u| u.params.clone()).collect();
+    let weights: Vec<f32> = ups.iter().map(|u| u.n_samples).collect();
+    let a = flat_reduce_weighted(&vectors, &weights);
+    let b = tree_reduce_weighted(&vectors, &weights, 8, &pool);
+    let c = hlo_fedavg(&engine, "fedavg_k32_p1048576", &ups, &weights).unwrap();
+    let d = parallel_reduce_weighted(&vectors, &weights, pool.worker_count());
+    let d_ab = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    let d_ac = a.iter().zip(&c).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    let d_ad = a.iter().zip(&d).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    println!("\ncross-check max|flat-tree| = {d_ab:.2e}, max|flat-hlo| = {d_ac:.2e}, max|flat-parallel| = {d_ad:.2e}");
+    println!(
+        "E7 shape check (all variants agree; parallel bit-identical): {}",
+        if d_ab < 1e-4 && d_ac < 1e-4 && d_ad == 0.0 { "PASS" } else { "FAIL" }
+    );
+    engine.shutdown();
+}

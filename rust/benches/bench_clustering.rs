@@ -1,0 +1,147 @@
+//! E4 — personalized FL via clustering (paper §1.2, §2.2.1, Alg 4).
+//!
+//! Regenerates: held-out accuracy of (a) one global FedAvg model, (b)
+//! FACT's clustered FL (k-means over client updates), and (c) the oracle
+//! (separate FL per true latent group) on a 12-client / 3-latent-group
+//! federation with permuted labels.  Expected shape:
+//! single-global << clustered ≈ oracle, and k-means recovers the true
+//! grouping.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use feddart::benchkit::Table;
+use feddart::fact::clustering::{ClusterContainer, KMeansClustering};
+use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
+use feddart::fact::model::{FactModel, Hyper};
+use feddart::fact::stopping::{FixedClusteringRounds, FixedRoundFl};
+use feddart::fact::Aggregation;
+
+const GROUPS: usize = 3;
+const CLIENTS: usize = 12;
+const SEED: u64 = 11;
+
+fn main() {
+    let engine = common::require_artifacts();
+    let hyper = Hyper { lr: 0.2, mu: 0.0, local_steps: 4, round: 0 };
+
+    // (a) single global model, 12 rounds
+    let (mut single, model) = common::mlp_fact_server(
+        &engine, CLIENTS, Partition::LatentGroups { groups: GROUPS }, SEED,
+        common::cores(), Aggregation::WeightedFedAvg,
+    );
+    single.hyper = hyper.clone();
+    single
+        .initialization_by_model(Arc::clone(&model), Arc::new(FixedRoundFl(12)), 1)
+        .unwrap();
+    single.learn().unwrap();
+    let acc_single = single.evaluate().unwrap()[0].accuracy;
+
+    // (b) clustered FL: 1 warmup clustering round (4 rounds) + recluster + 8 rounds
+    let (mut clustered, model2) = common::mlp_fact_server(
+        &engine, CLIENTS, Partition::LatentGroups { groups: GROUPS }, SEED,
+        common::cores(), Aggregation::WeightedFedAvg,
+    );
+    clustered.hyper = hyper.clone();
+    let names = clustered.workflow_manager().get_all_device_names().unwrap();
+    let container = ClusterContainer::single(
+        Arc::clone(&model2),
+        model2.init_params(1).unwrap(),
+        names,
+    );
+    clustered
+        .initialization_by_cluster_container(
+            container,
+            Box::new(KMeansClustering::new(GROUPS)),
+            Box::new(FixedClusteringRounds(2)),
+            Arc::new(FixedRoundFl(6)),
+        )
+        .unwrap();
+    clustered.learn().unwrap();
+    let evals = clustered.evaluate().unwrap();
+    let acc_clustered: f64 = evals
+        .iter()
+        .map(|e| e.accuracy * e.n_clients as f64)
+        .sum::<f64>()
+        / CLIENTS as f64;
+
+    // did k-means recover the ground-truth groups?  (round-robin truth)
+    let truth = |name: &str| -> usize {
+        name.strip_prefix("client-").unwrap().parse::<usize>().unwrap() % GROUPS
+    };
+    let assign = clustered.container().assignment();
+    let mut pure = 0usize;
+    for c in &clustered.container().clusters {
+        let g0 = truth(&c.clients[0]);
+        if c.clients.iter().all(|cl| truth(cl) == g0) {
+            pure += 1;
+        }
+    }
+    let _ = assign;
+
+    // (c) oracle: separate FL per true group (upper bound)
+    let data = synthesize(&SyntheticConfig {
+        clients: CLIENTS,
+        samples_per_client: 512,
+        dim: 32,
+        classes: 10,
+        partition: Partition::LatentGroups { groups: GROUPS },
+        seed: SEED,
+    })
+    .unwrap();
+    let mut acc_oracle_sum = 0.0;
+    for g in 0..GROUPS {
+        let (mut oracle, model3) = common::mlp_fact_server(
+            &engine, CLIENTS, Partition::LatentGroups { groups: GROUPS }, SEED,
+            common::cores(), Aggregation::WeightedFedAvg,
+        );
+        oracle.hyper = hyper.clone();
+        let members: Vec<String> = data
+            .iter()
+            .filter(|(_, d)| d.group == g)
+            .map(|(n, _)| n.clone())
+            .collect();
+        let n_members = members.len();
+        let container = ClusterContainer::single(
+            Arc::clone(&model3),
+            model3.init_params(1).unwrap(),
+            members,
+        );
+        oracle
+            .initialization_by_cluster_container(
+                container,
+                Box::new(feddart::fact::clustering::StaticClustering),
+                Box::new(FixedClusteringRounds(1)),
+                Arc::new(FixedRoundFl(12)),
+            )
+            .unwrap();
+        oracle.learn().unwrap();
+        acc_oracle_sum += oracle.evaluate().unwrap()[0].accuracy * n_members as f64;
+    }
+    let acc_oracle = acc_oracle_sum / CLIENTS as f64;
+
+    let mut t = Table::new(&["configuration", "mean_accuracy", "clusters"]);
+    t.row(&["single global (FedAvg)".into(), format!("{acc_single:.3}"), "1".into()]);
+    t.row(&[
+        "FACT clustered (k-means)".into(),
+        format!("{acc_clustered:.3}"),
+        clustered.container().clusters.len().to_string(),
+    ]);
+    t.row(&["oracle (true groups)".into(), format!("{acc_oracle:.3}"), GROUPS.to_string()]);
+    t.print("E4: personalized FL on 3 latent groups (12 clients, permuted labels)");
+    println!(
+        "\ncluster purity: {pure}/{} clusters single-group",
+        clustered.container().clusters.len()
+    );
+    println!(
+        "E4 shape check (single << clustered ~= oracle): {}",
+        if acc_clustered > acc_single + 0.05 && acc_clustered > acc_oracle - 0.15 {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+    engine.shutdown();
+}

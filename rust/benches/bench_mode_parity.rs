@@ -1,0 +1,118 @@
+//! E6 — test mode == production workflow (paper §3: "the test mode has
+//! the same workflow as the production mode so the conversion ... is just
+//! a matter of configuration changes").
+//!
+//! Regenerates: (1) maximum parameter divergence between the in-process
+//! test mode and the full TCP/REST production path on the identical seeded
+//! workload — expected 0.0 — and (2) the per-round latency overhead the
+//! real transport adds.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use feddart::benchkit::{fmt_s, Table};
+use feddart::config::ServerConfig;
+use feddart::coordinator::WorkflowManager;
+use feddart::dart::client::{DartClient, DartClientConfig};
+use feddart::dart::server::{DartServer, DartServerConfig};
+use feddart::dart::TaskRegistry;
+use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
+use feddart::fact::model::{HloModel, Hyper};
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::{Aggregation, FactClientRuntime, FactServer};
+use feddart::runtime::Engine;
+
+const N: usize = 4;
+const ROUNDS: usize = 8;
+const SEED: u64 = 77;
+
+fn registry_with_data(engine: &Engine) -> TaskRegistry {
+    let registry = TaskRegistry::new();
+    let rt = FactClientRuntime::new(engine.clone());
+    let data = synthesize(&SyntheticConfig {
+        clients: N,
+        samples_per_client: 256,
+        dim: 32,
+        classes: 10,
+        partition: Partition::Iid,
+        seed: SEED,
+    })
+    .unwrap();
+    for (name, d) in data {
+        rt.add_supervised(&name, d);
+    }
+    rt.register(&registry);
+    registry
+}
+
+fn run(wm: WorkflowManager, engine: &Engine) -> (Vec<f32>, Vec<f64>) {
+    let mut server = FactServer::new(wm)
+        .with_hyper(Hyper { lr: 0.2, mu: 0.0, local_steps: 3, round: 0 });
+    server.round_timeout = Duration::from_secs(120);
+    let model = HloModel::arc(engine, "mlp_default", Aggregation::WeightedFedAvg).unwrap();
+    server
+        .initialization_by_model(model, Arc::new(FixedRoundFl(ROUNDS)), SEED as i32)
+        .unwrap();
+    server.learn().unwrap();
+    let lat: Vec<f64> = server.history().iter().map(|r| r.round_ms / 1e3).collect();
+    (server.container().clusters[0].params.clone(), lat)
+}
+
+fn main() {
+    let engine = common::require_artifacts();
+
+    let wm_test = WorkflowManager::test_mode(N, registry_with_data(&engine), 2);
+    let (p_test, lat_test) = run(wm_test, &engine);
+
+    let dart = DartServer::start(DartServerConfig::default()).unwrap();
+    let registry = registry_with_data(&engine);
+    let _clients: Vec<DartClient> = (0..N)
+        .map(|i| {
+            DartClient::spawn(
+                DartClientConfig::new(
+                    &format!("client-{i}"),
+                    &dart.dart_addr().to_string(),
+                    b"feddart-demo-key",
+                ),
+                registry.clone(),
+            )
+        })
+        .collect();
+    let wm_prod = WorkflowManager::production(&ServerConfig {
+        server: dart.rest_addr().to_string(),
+        client_key: "000".into(),
+    })
+    .unwrap();
+    wm_prod.start_fed_dart(N, Duration::from_secs(10)).unwrap();
+    let (p_prod, lat_prod) = run(wm_prod, &engine);
+
+    let max_diff = p_test
+        .iter()
+        .zip(&p_prod)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let mut t = Table::new(&["backend", "mean_round", "max_round", "param_divergence"]);
+    t.row(&[
+        "test mode (in-process)".into(),
+        fmt_s(mean(&lat_test)),
+        fmt_s(lat_test.iter().fold(0.0f64, |a, &b| a.max(b))),
+        "-".into(),
+    ]);
+    t.row(&[
+        "production (TCP+REST)".into(),
+        fmt_s(mean(&lat_prod)),
+        fmt_s(lat_prod.iter().fold(0.0f64, |a, &b| a.max(b))),
+        format!("{max_diff:e}"),
+    ]);
+    t.print("E6: test mode vs production mode — same workload, same seed");
+    println!(
+        "\nE6 shape check (bit-identical parameters): {}",
+        if max_diff == 0.0 { "PASS" } else { "FAIL" }
+    );
+    engine.shutdown();
+}

@@ -1,0 +1,79 @@
+//! E9 — non-blocking task API (paper §A.1: "Since Fed-DART is
+//! non-blocking, this handle allows the user to continue with their
+//! workflow ... there is no need to wait until all participating clients
+//! have finished executing the task").
+//!
+//! Regenerates: time-to-first-result vs time-to-last-result for a task
+//! fanned out to 8 clients, one of which is a 10x straggler.  Expected
+//! shape: first results arrive ~10x earlier than the barrier; the
+//! partial-results API exposes them while the task is still in progress.
+
+#[path = "common.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use feddart::benchkit::{fmt_s, Table};
+use feddart::coordinator::{WfTaskStatus, WorkflowManager};
+use feddart::dart::faults::{FaultInjector, FaultProfile};
+use feddart::dart::testmode::SimClient;
+use feddart::dart::TaskRegistry;
+use feddart::json::Json;
+
+fn main() {
+    let n = 8;
+    let registry = TaskRegistry::new();
+    registry.register("work", |p| {
+        let ms = p.get("ms").and_then(Json::as_i64).unwrap_or(10) as u64;
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(Json::obj().set("ok", true))
+    });
+    let clients: Vec<SimClient> = (0..n)
+        .map(|i| SimClient {
+            name: format!("client-{i}"),
+            hardware: Default::default(),
+            faults: if i == n - 1 {
+                FaultInjector::new(1, FaultProfile::straggler(10.0, 0))
+            } else {
+                FaultInjector::none()
+            },
+        })
+        .collect();
+    let wm = WorkflowManager::test_mode_with(clients, registry, n);
+
+    let mut t = Table::new(&["trial", "first_result", "half_results", "all_results"]);
+    for trial in 0..5 {
+        let dict: BTreeMap<String, Json> = (0..n)
+            .map(|i| (format!("client-{i}"), Json::obj().set("ms", 40)))
+            .collect();
+        let t0 = Instant::now();
+        let h = wm.start_task(dict, "work").unwrap();
+        let mut t_first = None;
+        let mut t_half = None;
+        let t_all;
+        loop {
+            let k = wm.get_task_result(h).unwrap().len();
+            if k >= 1 && t_first.is_none() {
+                t_first = Some(t0.elapsed());
+            }
+            if k >= n / 2 && t_half.is_none() {
+                t_half = Some(t0.elapsed());
+            }
+            if wm.get_task_status(h).unwrap() != WfTaskStatus::InProgress {
+                t_all = t0.elapsed();
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(300));
+            assert!(t0.elapsed() < Duration::from_secs(30), "stuck");
+        }
+        t.row(&[
+            trial.to_string(),
+            fmt_s(t_first.unwrap().as_secs_f64()),
+            fmt_s(t_half.unwrap().as_secs_f64()),
+            fmt_s(t_all.as_secs_f64()),
+        ]);
+    }
+    t.print("E9: non-blocking partial results with one 10x straggler (8 clients, 40ms units)");
+    println!("\nE9 shape check: first_result << all_results (straggler dominates the barrier).");
+}

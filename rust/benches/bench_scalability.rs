@@ -1,0 +1,54 @@
+//! E2 — cross-silo scalability (paper §1.1/§2.1: "usually around 2-100
+//! clients"; GPI-Space "scales efficiently").
+//!
+//! Regenerates: round latency and client-task throughput vs client count
+//! for the full coordination path (WorkflowManager -> Selector ->
+//! Scheduler -> simulated clients).  The linear model keeps per-client
+//! compute ~constant and tiny, so the series isolates runtime overhead.
+//! Expected shape: near-linear task throughput growth until the dispatcher
+//! pool saturates, round latency staying in the low milliseconds.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use feddart::benchkit::{fmt_s, Stats, Table};
+use feddart::fact::model::Hyper;
+use feddart::fact::stopping::FixedRoundFl;
+
+fn main() {
+    let engine = common::require_artifacts();
+    let rounds = 6;
+    let mut t = Table::new(&[
+        "clients", "round_p50", "round_p95", "client_tasks/s", "agg_ms",
+    ]);
+
+    for &clients in &[2usize, 4, 8, 16, 32, 64, 100] {
+        let (mut server, model) =
+            common::linear_fact_server(&engine, clients, common::cores());
+        server.hyper = Hyper { lr: 0.2, mu: 0.0, local_steps: 2, round: 0 };
+        server
+            .initialization_by_model(model, Arc::new(FixedRoundFl(rounds)), 1)
+            .unwrap();
+        let t0 = std::time::Instant::now();
+        server.learn().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let hist = server.history();
+        let per_round: Vec<f64> = hist.iter().map(|r| r.round_ms / 1e3).collect();
+        let stats = Stats::from_samples(per_round);
+        let tasks = (clients * rounds) as f64;
+        let agg_ms: f64 =
+            hist.iter().map(|r| r.agg_ms).sum::<f64>() / hist.len() as f64;
+        t.row(&[
+            clients.to_string(),
+            fmt_s(stats.p50),
+            fmt_s(stats.p95),
+            format!("{:.0}", tasks / wall),
+            format!("{agg_ms:.2}"),
+        ]);
+    }
+    t.print("E2: coordination scalability vs client count (test mode, linear model)");
+    println!("\nE2 shape check: throughput should grow with clients until core saturation.");
+    engine.shutdown();
+}

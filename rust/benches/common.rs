@@ -1,0 +1,82 @@
+//! Shared fixtures for the benchmark targets (included per-bench via
+//! `#[path = "common.rs"] mod common;`).
+
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use feddart::coordinator::WorkflowManager;
+use feddart::dart::TaskRegistry;
+use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
+use feddart::fact::model::{FactModel, HloModel};
+use feddart::fact::{Aggregation, FactClientRuntime, FactServer};
+use feddart::runtime::{default_artifacts_dir, Engine};
+
+pub fn require_artifacts() -> Engine {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("ERROR: artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    Engine::load(&dir, 1).expect("engine")
+}
+
+/// A complete test-mode FL stack over mlp_default with synthetic data.
+pub fn mlp_fact_server(
+    engine: &Engine,
+    clients: usize,
+    partition: Partition,
+    seed: u64,
+    parallelism: usize,
+    agg: Aggregation,
+) -> (FactServer, Arc<dyn FactModel>) {
+    let registry = TaskRegistry::new();
+    let rt = FactClientRuntime::new(engine.clone());
+    let data = synthesize(&SyntheticConfig {
+        clients,
+        samples_per_client: 512,
+        dim: 32,
+        classes: 10,
+        partition,
+        seed,
+    })
+    .expect("synthesize");
+    for (name, d) in data {
+        rt.add_supervised(&name, d);
+    }
+    rt.register(&registry);
+    let wm = WorkflowManager::test_mode(clients, registry, parallelism);
+    let model = HloModel::arc(engine, "mlp_default", agg).expect("model");
+    (FactServer::new(wm), model)
+}
+
+/// Linear-model stack (no HLO on the learn path — pure coordination cost),
+/// used where the bench measures the runtime rather than the math.
+pub fn linear_fact_server(
+    engine: &Engine,
+    clients: usize,
+    parallelism: usize,
+) -> (FactServer, Arc<dyn FactModel>) {
+    let registry = TaskRegistry::new();
+    let rt = FactClientRuntime::new(engine.clone());
+    let data = synthesize(&SyntheticConfig {
+        clients,
+        samples_per_client: 128,
+        dim: 8,
+        classes: 4,
+        partition: Partition::Iid,
+        seed: 1,
+    })
+    .expect("synthesize");
+    for (name, d) in data {
+        rt.add_supervised(&name, d);
+    }
+    rt.register(&registry);
+    let wm = WorkflowManager::test_mode(clients, registry, parallelism);
+    let model = feddart::fact::LinearModel::arc(8, 4, Aggregation::WeightedFedAvg);
+    (FactServer::new(wm), model)
+}
+
+pub fn cores() -> usize {
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+}

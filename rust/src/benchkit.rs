@@ -1,0 +1,169 @@
+//! Benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Each `rust/benches/bench_*.rs` target is a `harness = false` binary that
+//! uses this module: warmup + repeated measurement, robust statistics, and
+//! aligned table output matching the rows EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+/// Robust summary of a sample set (times in seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(f64::total_cmp);
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(2) as f64;
+        let q = |p: f64| xs[((n - 1) as f64 * p).round() as usize];
+        Stats {
+            n,
+            mean,
+            sd: var.sqrt(),
+            min: xs[0],
+            p50: q(0.5),
+            p95: q(0.95),
+            max: xs[n - 1],
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean * 1e3
+    }
+}
+
+/// Time `f` `iters` times after `warmup` runs.
+pub fn time_n<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Stats::from_samples(samples)
+}
+
+/// Time `f` repeatedly until `budget` elapses (at least `min_iters`).
+pub fn time_budget<F: FnMut()>(budget: Duration, min_iters: usize, mut f: F) -> Stats {
+    let mut samples = Vec::new();
+    let t_start = Instant::now();
+    while samples.len() < min_iters || t_start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("  {}", parts.join("  "));
+        };
+        line(&self.headers);
+        line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Format seconds human-readably for table cells.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!(s.p95 >= 94.0);
+    }
+
+    #[test]
+    fn time_n_counts() {
+        let mut calls = 0;
+        let s = time_n(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["clients", "latency"]);
+        t.row(&["8".to_string(), fmt_s(0.0123)]);
+        t.row(&["16".to_string(), fmt_s(1.5)]);
+        t.print("demo");
+        assert_eq!(fmt_s(0.5e-4), "50.0us");
+    }
+}

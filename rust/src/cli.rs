@@ -1,0 +1,127 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `feddart <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+use crate::error::{FedError, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Options that take no value (everything else with `--` takes one).
+const KNOWN_FLAGS: &[&str] = &["verbose", "quiet", "help", "test-mode", "json"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        FedError::Config(format!("option --{name} needs a value"))
+                    })?;
+                    out.options.insert(name.to_string(), v.clone());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                FedError::Config(format!("--{name} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                FedError::Config(format!("--{name} expects a number, got '{v}'"))
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+            .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("server --port 7777 --clients 8 --verbose extra");
+        assert_eq!(a.subcommand.as_deref(), Some("server"));
+        assert_eq!(a.opt("port"), Some("7777"));
+        assert_eq!(a.opt_usize("clients", 0).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --rounds=20 --lr=0.5");
+        assert_eq!(a.opt_usize("rounds", 0).unwrap(), 20);
+        assert!((a.opt_f64("lr", 0.0).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let argv: Vec<String> = vec!["run".into(), "--port".into()];
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("run --rounds ten");
+        assert!(a.opt_usize("rounds", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.opt_or("addr", "127.0.0.1:0"), "127.0.0.1:0");
+        assert_eq!(a.opt_usize("clients", 4).unwrap(), 4);
+        assert!(!a.flag("verbose"));
+    }
+}

@@ -1,0 +1,282 @@
+//! Configuration files — the paper's server / device configs (Listings 2-3)
+//! plus the federated-learning hyperparameter block used by examples and the
+//! CLI.
+//!
+//! ```json
+//! { "server": "https://dart-server:7777", "client_key": "000" }
+//! ```
+//!
+//! ```json
+//! [ {"name": "client-0", "ipAddress": "127.0.0.1", "port": 2883,
+//!    "hardware_config": {"cpus": 4, "mem_gb": 8, "accelerator": "none"}} ]
+//! ```
+
+use std::path::Path;
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// Server configuration (paper Listing 2).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// `host:port` of the https-server (scheme stripped).
+    pub server: String,
+    /// Shared client key presented on the REST-API.
+    pub client_key: String,
+}
+
+impl ServerConfig {
+    pub fn from_json(j: &Json) -> Result<ServerConfig> {
+        let server = j
+            .need("server")?
+            .as_str()
+            .ok_or_else(|| FedError::Config("'server' must be a string".into()))?
+            .to_string();
+        let client_key = j
+            .get("client_key")
+            .and_then(Json::as_str)
+            .unwrap_or("000")
+            .to_string();
+        Ok(ServerConfig { server, client_key })
+    }
+
+    pub fn load(path: &Path) -> Result<ServerConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("server", self.server.as_str())
+            .set("client_key", self.client_key.as_str())
+    }
+}
+
+/// Hardware description used by the Task `check` function (§A.2:
+/// "verifies the task requirements to ensure that hardware requirements
+/// and device availability are fulfilled").
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareConfig {
+    pub cpus: usize,
+    pub mem_gb: usize,
+    pub accelerator: String,
+}
+
+impl Default for HardwareConfig {
+    fn default() -> Self {
+        HardwareConfig { cpus: 1, mem_gb: 1, accelerator: "none".into() }
+    }
+}
+
+impl HardwareConfig {
+    pub fn from_json(j: &Json) -> HardwareConfig {
+        if j.is_null() {
+            return HardwareConfig::default();
+        }
+        HardwareConfig {
+            cpus: j.get("cpus").and_then(Json::as_usize).unwrap_or(1),
+            mem_gb: j.get("mem_gb").and_then(Json::as_usize).unwrap_or(1),
+            accelerator: j
+                .get("accelerator")
+                .and_then(Json::as_str)
+                .unwrap_or("none")
+                .to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("cpus", self.cpus)
+            .set("mem_gb", self.mem_gb)
+            .set("accelerator", self.accelerator.as_str())
+    }
+
+    /// Does this hardware satisfy `req`?
+    pub fn satisfies(&self, req: &HardwareConfig) -> bool {
+        self.cpus >= req.cpus
+            && self.mem_gb >= req.mem_gb
+            && (req.accelerator == "none" || req.accelerator == self.accelerator)
+    }
+}
+
+/// One device entry (paper Listing 3).
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub name: String,
+    pub ip_address: String,
+    pub port: u16,
+    pub hardware: HardwareConfig,
+}
+
+impl DeviceConfig {
+    pub fn from_json(idx: usize, j: &Json) -> Result<DeviceConfig> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .map(String::from)
+            .unwrap_or_else(|| format!("client-{idx}"));
+        let ip = j
+            .need("ipAddress")?
+            .as_str()
+            .ok_or_else(|| FedError::Config("'ipAddress' must be a string".into()))?
+            .to_string();
+        let port = j
+            .need("port")?
+            .as_usize()
+            .ok_or_else(|| FedError::Config("'port' must be an integer".into()))?
+            as u16;
+        let hardware = j
+            .get("hardware_config")
+            .map(HardwareConfig::from_json)
+            .unwrap_or_default();
+        Ok(DeviceConfig { name, ip_address: ip, port, hardware })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("ipAddress", self.ip_address.as_str())
+            .set("port", self.port as usize)
+            .set("hardware_config", self.hardware.to_json())
+    }
+}
+
+/// Parse a device file: a JSON array of device configs.
+pub fn load_devices(path: &Path) -> Result<Vec<DeviceConfig>> {
+    let text = std::fs::read_to_string(path)?;
+    parse_devices(&Json::parse(&text)?)
+}
+
+pub fn parse_devices(j: &Json) -> Result<Vec<DeviceConfig>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| FedError::Config("device file must be a JSON array".into()))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, d)| DeviceConfig::from_json(i, d))
+        .collect()
+}
+
+/// Federated-learning run settings shared by the CLI and examples.
+#[derive(Debug, Clone)]
+pub struct FlConfig {
+    pub model: String,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub lr: f32,
+    /// FedProx proximal coefficient; 0 disables (plain FedAvg local step).
+    pub mu: f32,
+    pub seed: u64,
+    pub aggregation: String,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        FlConfig {
+            model: "mlp_default".into(),
+            rounds: 20,
+            local_steps: 4,
+            lr: 0.1,
+            mu: 0.0,
+            seed: 42,
+            aggregation: "weighted_fedavg".into(),
+        }
+    }
+}
+
+impl FlConfig {
+    pub fn from_json(j: &Json) -> FlConfig {
+        let d = FlConfig::default();
+        FlConfig {
+            model: j.get("model").and_then(Json::as_str).unwrap_or(&d.model).into(),
+            rounds: j.get("rounds").and_then(Json::as_usize).unwrap_or(d.rounds),
+            local_steps: j
+                .get("local_steps")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.local_steps),
+            lr: j.get("lr").and_then(Json::as_f64).unwrap_or(d.lr as f64) as f32,
+            mu: j.get("mu").and_then(Json::as_f64).unwrap_or(d.mu as f64) as f32,
+            seed: j.get("seed").and_then(Json::as_i64).unwrap_or(d.seed as i64) as u64,
+            aggregation: j
+                .get("aggregation")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.aggregation)
+                .into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_config_minimal() {
+        let j = Json::parse(
+            r#"{"server": "https://dart-server:7777", "client_key": "000"}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&j).unwrap();
+        assert_eq!(c.server, "https://dart-server:7777");
+        assert_eq!(c.client_key, "000");
+    }
+
+    #[test]
+    fn server_config_requires_server_key() {
+        let j = Json::parse(r#"{"client_key": "000"}"#).unwrap();
+        assert!(ServerConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn device_file_with_null_hardware() {
+        // the paper: "In test mode, these can be set to dummy values and
+        // the hardware_config can be set to null" (§C.1.2)
+        let j = Json::parse(
+            r#"[{"ipAddress": "0.0.0.0", "port": 1, "hardware_config": null},
+                {"name": "edge-7", "ipAddress": "10.0.0.7", "port": 2883,
+                 "hardware_config": {"cpus": 8, "mem_gb": 16,
+                                     "accelerator": "tpu"}}]"#,
+        )
+        .unwrap();
+        let devs = parse_devices(&j).unwrap();
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[0].name, "client-0");
+        assert_eq!(devs[0].hardware, HardwareConfig::default());
+        assert_eq!(devs[1].name, "edge-7");
+        assert_eq!(devs[1].hardware.cpus, 8);
+        assert_eq!(devs[1].hardware.accelerator, "tpu");
+    }
+
+    #[test]
+    fn hardware_satisfies() {
+        let big = HardwareConfig { cpus: 8, mem_gb: 16, accelerator: "tpu".into() };
+        let small = HardwareConfig { cpus: 2, mem_gb: 4, accelerator: "none".into() };
+        assert!(big.satisfies(&small));
+        assert!(!small.satisfies(&big));
+        let need_tpu = HardwareConfig { cpus: 1, mem_gb: 1, accelerator: "tpu".into() };
+        assert!(big.satisfies(&need_tpu));
+        assert!(!small.satisfies(&need_tpu));
+    }
+
+    #[test]
+    fn fl_config_defaults_and_overrides() {
+        let j = Json::parse(r#"{"rounds": 5, "mu": 0.1}"#).unwrap();
+        let c = FlConfig::from_json(&j);
+        assert_eq!(c.rounds, 5);
+        assert!((c.mu - 0.1).abs() < 1e-6);
+        assert_eq!(c.model, "mlp_default");
+        assert_eq!(c.local_steps, 4);
+    }
+
+    #[test]
+    fn config_roundtrip_through_files() {
+        let dir = std::env::temp_dir().join("feddart-config-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let sc = ServerConfig { server: "127.0.0.1:7777".into(), client_key: "abc".into() };
+        let p = dir.join("server.json");
+        std::fs::write(&p, sc.to_json().to_string()).unwrap();
+        let back = ServerConfig::load(&p).unwrap();
+        assert_eq!(back.server, sc.server);
+        assert_eq!(back.client_key, sc.client_key);
+    }
+}

@@ -1,0 +1,272 @@
+//! DeviceSingle / DeviceHolder — the virtual client representations
+//! (paper §A.2).
+//!
+//! "DeviceSingle is the virtual representation of each real physical
+//! client. ... Each deviceSingle caches the task parameters of an open task
+//! and the task results of already finished tasks."
+//!
+//! "DeviceHolder groups multiple DeviceSingles together. Every request to a
+//! client must go through the DeviceHolder. If possible, computations or
+//! requests are performed on deviceHolder level to avoid too many small
+//! operations on deviceSingle level."
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::HardwareConfig;
+use crate::dart::scheduler::TaskResult;
+use crate::json::Json;
+
+/// Virtual representation of one physical client.
+#[derive(Debug)]
+pub struct DeviceSingle {
+    pub name: String,
+    pub hardware: HardwareConfig,
+    state: Mutex<DeviceState>,
+}
+
+#[derive(Debug, Default)]
+struct DeviceState {
+    alive: bool,
+    /// parameters of the currently open task (if any), by task handle
+    open_params: BTreeMap<u64, Json>,
+    /// finished task results, by task handle
+    finished: BTreeMap<u64, TaskResult>,
+    /// has the init task completed on this device?
+    initialized: bool,
+}
+
+impl DeviceSingle {
+    pub fn new(name: &str, hardware: HardwareConfig) -> Arc<DeviceSingle> {
+        Arc::new(DeviceSingle {
+            name: name.to_string(),
+            hardware,
+            state: Mutex::new(DeviceState { alive: true, ..Default::default() }),
+        })
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.state.lock().unwrap().alive
+    }
+
+    pub fn set_alive(&self, alive: bool) {
+        self.state.lock().unwrap().alive = alive;
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.state.lock().unwrap().initialized
+    }
+
+    pub fn mark_initialized(&self) {
+        self.state.lock().unwrap().initialized = true;
+    }
+
+    /// Cache the parameters of an open task.
+    pub fn open_task(&self, handle: u64, params: Json) {
+        self.state.lock().unwrap().open_params.insert(handle, params);
+    }
+
+    /// Parameters cached for an open task.
+    pub fn open_params(&self, handle: u64) -> Option<Json> {
+        self.state.lock().unwrap().open_params.get(&handle).cloned()
+    }
+
+    /// Record a finished result (moves the task out of the open set).
+    pub fn finish_task(&self, handle: u64, result: TaskResult) {
+        let mut st = self.state.lock().unwrap();
+        st.open_params.remove(&handle);
+        st.finished.insert(handle, result);
+    }
+
+    /// Cached result of a finished task.
+    pub fn finished_result(&self, handle: u64) -> Option<TaskResult> {
+        self.state.lock().unwrap().finished.get(&handle).cloned()
+    }
+
+    /// Number of cached finished results.
+    pub fn finished_count(&self) -> usize {
+        self.state.lock().unwrap().finished.len()
+    }
+
+    /// Drop cached results older than the newest `keep` (bounded cache).
+    pub fn prune_finished(&self, keep: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.finished.len() > keep {
+            let oldest = *st.finished.keys().next().unwrap();
+            st.finished.remove(&oldest);
+        }
+    }
+}
+
+/// A group of devices; holder-level bulk operations.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceHolder {
+    devices: Vec<Arc<DeviceSingle>>,
+}
+
+impl DeviceHolder {
+    pub fn new(devices: Vec<Arc<DeviceSingle>>) -> DeviceHolder {
+        DeviceHolder { devices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn devices(&self) -> &[Arc<DeviceSingle>] {
+        &self.devices
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.devices.iter().map(|d| d.name.clone()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<DeviceSingle>> {
+        self.devices.iter().find(|d| d.name == name)
+    }
+
+    /// Holder-level: open a task on every contained device at once.
+    pub fn open_task_all(&self, handle: u64, params: &BTreeMap<String, Json>) {
+        for d in &self.devices {
+            if let Some(p) = params.get(&d.name) {
+                d.open_task(handle, p.clone());
+            }
+        }
+    }
+
+    /// Holder-level: record finished results in bulk.
+    pub fn finish_tasks(&self, handle: u64, results: &[TaskResult]) {
+        for r in results {
+            if let Some(d) = self.get(&r.device_name) {
+                d.finish_task(handle, r.clone());
+            }
+        }
+    }
+
+    /// Holder-level: collect all cached results for a task.
+    pub fn collect_results(&self, handle: u64) -> Vec<TaskResult> {
+        self.devices
+            .iter()
+            .filter_map(|d| d.finished_result(handle))
+            .collect()
+    }
+
+    /// All devices satisfying a hardware requirement.
+    pub fn satisfying(&self, req: &HardwareConfig) -> Vec<Arc<DeviceSingle>> {
+        self.devices
+            .iter()
+            .filter(|d| d.hardware.satisfies(req))
+            .cloned()
+            .collect()
+    }
+
+    /// Split into `n` balanced holders (for the Aggregator tree).
+    pub fn split(&self, n: usize) -> Vec<DeviceHolder> {
+        let n = n.max(1).min(self.devices.len().max(1));
+        let mut parts: Vec<Vec<Arc<DeviceSingle>>> = vec![Vec::new(); n];
+        for (i, d) in self.devices.iter().enumerate() {
+            parts[i % n].push(Arc::clone(d));
+        }
+        parts.into_iter().map(DeviceHolder::new).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn holder(n: usize) -> DeviceHolder {
+        DeviceHolder::new(
+            (0..n)
+                .map(|i| DeviceSingle::new(&format!("d{i}"), HardwareConfig::default()))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn device_caches_open_and_finished() {
+        let d = DeviceSingle::new("edge", HardwareConfig::default());
+        assert!(d.is_alive());
+        assert!(!d.is_initialized());
+        d.open_task(1, Json::obj().set("lr", 0.1));
+        assert_eq!(
+            d.open_params(1).unwrap().get("lr").unwrap().as_f64(),
+            Some(0.1)
+        );
+        d.finish_task(
+            1,
+            TaskResult { device_name: "edge".into(), duration: 1.0, result: Json::Null },
+        );
+        assert!(d.open_params(1).is_none(), "open params cleared on finish");
+        assert!(d.finished_result(1).is_some());
+        d.mark_initialized();
+        assert!(d.is_initialized());
+    }
+
+    #[test]
+    fn prune_keeps_newest() {
+        let d = DeviceSingle::new("edge", HardwareConfig::default());
+        for h in 0..10 {
+            d.finish_task(h, TaskResult {
+                device_name: "edge".into(), duration: 0.0, result: Json::Null,
+            });
+        }
+        d.prune_finished(3);
+        assert_eq!(d.finished_count(), 3);
+        assert!(d.finished_result(9).is_some());
+        assert!(d.finished_result(0).is_none());
+    }
+
+    #[test]
+    fn holder_bulk_operations() {
+        let h = holder(3);
+        let mut params = BTreeMap::new();
+        for i in 0..3 {
+            params.insert(format!("d{i}"), Json::obj().set("i", i));
+        }
+        h.open_task_all(7, &params);
+        assert_eq!(
+            h.get("d1").unwrap().open_params(7).unwrap().get("i").unwrap().as_i64(),
+            Some(1)
+        );
+        let results: Vec<TaskResult> = (0..3)
+            .map(|i| TaskResult {
+                device_name: format!("d{i}"),
+                duration: i as f64,
+                result: Json::Null,
+            })
+            .collect();
+        h.finish_tasks(7, &results);
+        assert_eq!(h.collect_results(7).len(), 3);
+    }
+
+    #[test]
+    fn holder_split_balances() {
+        let h = holder(10);
+        let parts = h.split(3);
+        assert_eq!(parts.len(), 3);
+        let sizes: Vec<usize> = parts.iter().map(DeviceHolder::len).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4));
+        // split of an empty holder does not panic
+        assert_eq!(DeviceHolder::default().split(4).len(), 1);
+    }
+
+    #[test]
+    fn satisfying_filters_hardware() {
+        let strong = DeviceSingle::new(
+            "strong",
+            HardwareConfig { cpus: 16, mem_gb: 64, accelerator: "tpu".into() },
+        );
+        let weak = DeviceSingle::new("weak", HardwareConfig::default());
+        let h = DeviceHolder::new(vec![strong, weak]);
+        let req = HardwareConfig { cpus: 8, mem_gb: 8, accelerator: "none".into() };
+        let ok = h.satisfying(&req);
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].name, "strong");
+    }
+}

@@ -1,0 +1,22 @@
+//! The Fed-DART coordination library (the paper's Python-library layer,
+//! natively in Rust).
+//!
+//! * [`workflow::WorkflowManager`] — the user entry point (§A.1).
+//! * [`selector::Selector`] — accept/reject, init-task scheduling, task
+//!   queue, aggregator management (§A.2, non-ephemeral).
+//! * [`aggregator::Aggregator`] — per-task tree of result collectors with
+//!   the parallel weighted reduction (§A.2, ephemeral).
+//! * [`device`] — `DeviceSingle` / `DeviceHolder` caches (§A.2).
+//! * [`task`] — task representation + the `check` function (§A.2).
+
+pub mod aggregator;
+pub mod device;
+pub mod selector;
+pub mod task;
+pub mod workflow;
+
+pub use aggregator::{flat_reduce_weighted, parallel_reduce_weighted, tree_reduce_weighted, Aggregator};
+pub use device::{DeviceHolder, DeviceSingle};
+pub use selector::{InitTask, Selector, WfTaskStatus};
+pub use task::{Task, TaskHandle, TaskKind};
+pub use workflow::WorkflowManager;

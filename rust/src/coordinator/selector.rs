@@ -1,0 +1,525 @@
+//! Selector — the central orchestration instance of the Fed-DART library
+//! (paper §A.2).
+//!
+//! "Selector has knowledge about the connected clients and is responsible
+//! for accepting or rejecting incoming task requests from the
+//! WorkflowManager. It schedules the initTask to new clients. If a task
+//! request is accepted, the task is put into a queue until the DART-Server
+//! has capacity to schedule a new task. After scheduling a task, [it]
+//! creates an Aggregator and hands over the DeviceSingles to them. It
+//! manages all existing Aggregators."
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::aggregator::{Aggregator, DEFAULT_FANOUT};
+use crate::coordinator::device::{DeviceHolder, DeviceSingle};
+use crate::coordinator::task::{Task, TaskHandle, TaskKind};
+use crate::dart::scheduler::{TaskResult, TaskStatus};
+use crate::dart::DartApi;
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// Coordinator-level task status (adds `Queued` over the backend enum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WfTaskStatus {
+    Queued,
+    InProgress,
+    Finished,
+    PartiallyFailed,
+    Stopped,
+}
+
+impl From<TaskStatus> for WfTaskStatus {
+    fn from(s: TaskStatus) -> Self {
+        match s {
+            TaskStatus::InProgress => WfTaskStatus::InProgress,
+            TaskStatus::Finished => WfTaskStatus::Finished,
+            TaskStatus::PartiallyFailed => WfTaskStatus::PartiallyFailed,
+            TaskStatus::Stopped => WfTaskStatus::Stopped,
+        }
+    }
+}
+
+/// The template for the init task (function + shared parameters); scheduled
+/// to every client before any other task runs on it (Alg. 1).
+#[derive(Debug, Clone)]
+pub struct InitTask {
+    pub execute_function: String,
+    pub shared_params: Json,
+}
+
+enum Slot {
+    /// accepted but not yet dispatched to the backend
+    Queued(Task),
+    /// dispatched
+    Running(Arc<Aggregator>),
+    /// cancelled before dispatch
+    StoppedBeforeDispatch,
+}
+
+pub struct Selector {
+    api: Arc<dyn DartApi>,
+    devices: Mutex<DeviceHolder>,
+    slots: Mutex<BTreeMap<TaskHandle, Slot>>,
+    queue: Mutex<VecDeque<TaskHandle>>,
+    init_task: Mutex<Option<InitTask>>,
+    next_handle: AtomicU64,
+    /// settled backend statuses — settled tasks are never re-queried, so a
+    /// poll costs O(active tasks) instead of O(all tasks ever submitted)
+    /// (§Perf: this was the dominant REST-path overhead after ~10 rounds)
+    terminal: Mutex<BTreeMap<TaskHandle, WfTaskStatus>>,
+    /// backend capacity: max tasks dispatched concurrently
+    max_concurrent: usize,
+    fanout: usize,
+}
+
+impl Selector {
+    pub fn new(api: Arc<dyn DartApi>) -> Selector {
+        Selector {
+            api,
+            devices: Mutex::new(DeviceHolder::default()),
+            slots: Mutex::new(BTreeMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+            init_task: Mutex::new(None),
+            next_handle: AtomicU64::new(1),
+            terminal: Mutex::new(BTreeMap::new()),
+            max_concurrent: 16,
+            fanout: DEFAULT_FANOUT,
+        }
+    }
+
+    pub fn with_capacity(mut self, max_concurrent: usize) -> Selector {
+        self.max_concurrent = max_concurrent.max(1);
+        self
+    }
+
+    pub fn with_fanout(mut self, fanout: usize) -> Selector {
+        self.fanout = fanout.max(2);
+        self
+    }
+
+    pub fn api(&self) -> &Arc<dyn DartApi> {
+        &self.api
+    }
+
+    /// Configure the init task (Alg. 1 step 3).
+    pub fn set_init_task(&self, init: InitTask) {
+        *self.init_task.lock().unwrap() = Some(init);
+    }
+
+    /// Refresh the device view from the backend.  New devices get a
+    /// DeviceSingle; vanished devices are marked dead (their cached state
+    /// is retained — the paper's DeviceSingle caches survive reconnects).
+    pub fn refresh_devices(&self) -> Result<DeviceHolder> {
+        let infos = self.api.devices()?;
+        let mut holder = self.devices.lock().unwrap();
+        let mut devices: Vec<Arc<DeviceSingle>> = holder.devices().to_vec();
+        for info in &infos {
+            match devices.iter().find(|d| d.name == info.name) {
+                Some(d) => d.set_alive(info.alive),
+                None => {
+                    devices.push(DeviceSingle::new(&info.name, info.hardware.clone()))
+                }
+            }
+        }
+        // devices the backend no longer reports are dead
+        for d in &devices {
+            if !infos.iter().any(|i| i.name == d.name) {
+                d.set_alive(false);
+            }
+        }
+        *holder = DeviceHolder::new(devices);
+        Ok(holder.clone())
+    }
+
+    /// Names of alive, known devices.
+    pub fn device_names(&self) -> Result<Vec<String>> {
+        Ok(self
+            .refresh_devices()?
+            .devices()
+            .iter()
+            .filter(|d| d.is_alive())
+            .map(|d| d.name.clone())
+            .collect())
+    }
+
+    /// Accept (or reject) a task request.  Accepted tasks get a handle
+    /// immediately; dispatch happens now if the backend has capacity,
+    /// otherwise the task waits in the queue (pumped on every poll).
+    pub fn submit(&self, task: Task) -> Result<TaskHandle> {
+        let devices = self.refresh_devices()?;
+        task.check(&devices)?; // accept/reject decision
+        let handle = TaskHandle(self.next_handle.fetch_add(1, Ordering::Relaxed));
+        self.slots.lock().unwrap().insert(handle, Slot::Queued(task));
+        self.queue.lock().unwrap().push_back(handle);
+        self.pump()?;
+        Ok(handle)
+    }
+
+    /// Backend status with a terminal-status cache.
+    fn backend_status(&self, handle: TaskHandle, agg: &Aggregator) -> Result<WfTaskStatus> {
+        if let Some(st) = self.terminal.lock().unwrap().get(&handle) {
+            return Ok(*st);
+        }
+        let st: WfTaskStatus = agg.status(self.api.as_ref())?.into();
+        if st != WfTaskStatus::InProgress {
+            self.terminal.lock().unwrap().insert(handle, st);
+        }
+        Ok(st)
+    }
+
+    /// Dispatch queued tasks while the backend has capacity.
+    pub fn pump(&self) -> Result<()> {
+        loop {
+            // count running (settled tasks resolve from the cache)
+            let running = {
+                let entries: Vec<(TaskHandle, Arc<Aggregator>)> = {
+                    let slots = self.slots.lock().unwrap();
+                    slots
+                        .iter()
+                        .filter_map(|(h, s)| match s {
+                            Slot::Running(a) => Some((*h, Arc::clone(a))),
+                            _ => None,
+                        })
+                        .collect()
+                };
+                entries
+                    .into_iter()
+                    .filter(|(h, a)| {
+                        self.backend_status(*h, a)
+                            .map(|st| st == WfTaskStatus::InProgress)
+                            .unwrap_or(false)
+                    })
+                    .count()
+            };
+            if running >= self.max_concurrent {
+                return Ok(());
+            }
+            let Some(handle) = self.queue.lock().unwrap().pop_front() else {
+                return Ok(());
+            };
+            let task = {
+                let slots = self.slots.lock().unwrap();
+                match slots.get(&handle) {
+                    Some(Slot::Queued(t)) => t.clone(),
+                    _ => continue, // stopped before dispatch
+                }
+            };
+            match self.dispatch(handle, task) {
+                Ok(agg) => {
+                    self.slots.lock().unwrap().insert(handle, Slot::Running(agg));
+                }
+                Err(e) => {
+                    // dispatch failure surfaces when the user polls
+                    log::error!(target: "coordinator::selector",
+                        "dispatch of {handle} failed: {e}");
+                    self.slots
+                        .lock()
+                        .unwrap()
+                        .insert(handle, Slot::StoppedBeforeDispatch);
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    fn dispatch(&self, handle: TaskHandle, task: Task) -> Result<Arc<Aggregator>> {
+        // Alg 1 guarantee: init runs on each addressed client first.
+        if task.kind == TaskKind::Default {
+            self.ensure_initialized(&task.client_names())?;
+        }
+        let id = self.api.submit(task.to_spec())?;
+        let devices = {
+            let holder = self.devices.lock().unwrap();
+            let subset: Vec<Arc<DeviceSingle>> = task
+                .client_names()
+                .iter()
+                .filter_map(|n| holder.get(n).cloned())
+                .collect();
+            DeviceHolder::new(subset)
+        };
+        Ok(Arc::new(Aggregator::new(handle, task, id, devices, self.fanout)))
+    }
+
+    /// Run the init task on every addressed client that has not been
+    /// initialized yet, waiting for completion (bounded).
+    pub fn ensure_initialized(&self, clients: &[String]) -> Result<()> {
+        let init = self.init_task.lock().unwrap().clone();
+        let Some(init) = init else { return Ok(()) };
+        let pending: Vec<String> = {
+            let holder = self.devices.lock().unwrap();
+            clients
+                .iter()
+                .filter(|c| {
+                    holder.get(c).map(|d| !d.is_initialized()).unwrap_or(false)
+                })
+                .cloned()
+                .collect()
+        };
+        if pending.is_empty() {
+            return Ok(());
+        }
+        log::info!(target: "coordinator::selector",
+            "scheduling initTask to {} new client(s)", pending.len());
+        let dict: BTreeMap<String, Json> = pending
+            .iter()
+            .map(|c| (c.clone(), init.shared_params.clone()))
+            .collect();
+        let task = Task::new(TaskKind::Init, &init.execute_function, dict);
+        let id = self.api.submit(task.to_spec())?;
+        // bounded wait: init must complete before other tasks run (Alg 1)
+        let t0 = Instant::now();
+        loop {
+            match self.api.status(id)? {
+                TaskStatus::Finished => break,
+                TaskStatus::InProgress => {
+                    if t0.elapsed() > Duration::from_secs(120) {
+                        return Err(FedError::Task("initTask timed out".into()));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                other => {
+                    return Err(FedError::Task(format!(
+                        "initTask ended with {other:?}"
+                    )))
+                }
+            }
+        }
+        let holder = self.devices.lock().unwrap();
+        for c in &pending {
+            if let Some(d) = holder.get(c) {
+                d.mark_initialized();
+            }
+        }
+        Ok(())
+    }
+
+    /// Status of a handle (includes `Queued` before dispatch).
+    pub fn status(&self, handle: TaskHandle) -> Result<WfTaskStatus> {
+        self.pump().ok();
+        let slots = self.slots.lock().unwrap();
+        match slots.get(&handle) {
+            None => Err(FedError::Task(format!("unknown handle {handle}"))),
+            Some(Slot::Queued(_)) => Ok(WfTaskStatus::Queued),
+            Some(Slot::StoppedBeforeDispatch) => Ok(WfTaskStatus::Stopped),
+            Some(Slot::Running(agg)) => {
+                let agg = Arc::clone(agg);
+                drop(slots);
+                self.backend_status(handle, &agg)
+            }
+        }
+    }
+
+    /// Results available so far (partial, non-blocking).
+    pub fn results(&self, handle: TaskHandle) -> Result<Vec<TaskResult>> {
+        self.pump().ok();
+        let agg = {
+            let slots = self.slots.lock().unwrap();
+            match slots.get(&handle) {
+                None => return Err(FedError::Task(format!("unknown handle {handle}"))),
+                Some(Slot::Queued(_)) | Some(Slot::StoppedBeforeDispatch) => {
+                    return Ok(Vec::new())
+                }
+                Some(Slot::Running(agg)) => Arc::clone(agg),
+            }
+        };
+        agg.sync_results(self.api.as_ref())
+    }
+
+    /// Stop a task (queued or running).
+    pub fn stop(&self, handle: TaskHandle) -> Result<()> {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.get(&handle) {
+            None => Err(FedError::Task(format!("unknown handle {handle}"))),
+            Some(Slot::Queued(_)) => {
+                slots.insert(handle, Slot::StoppedBeforeDispatch);
+                Ok(())
+            }
+            Some(Slot::StoppedBeforeDispatch) => Ok(()),
+            Some(Slot::Running(agg)) => agg.stop(self.api.as_ref()),
+        }
+    }
+
+    /// The aggregator managing a dispatched handle (None while queued).
+    pub fn aggregator(&self, handle: TaskHandle) -> Option<Arc<Aggregator>> {
+        match self.slots.lock().unwrap().get(&handle) {
+            Some(Slot::Running(agg)) => Some(Arc::clone(agg)),
+            _ => None,
+        }
+    }
+
+    /// Number of aggregators ever created (observability).
+    pub fn aggregator_count(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Running(_)))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dart::testmode::TestModeDart;
+    use crate::dart::TaskRegistry;
+
+    fn registry() -> TaskRegistry {
+        let reg = TaskRegistry::new();
+        reg.register("init", |p| Ok(p.clone()));
+        reg.register("learn", |p| {
+            Ok(Json::obj().set("echo", p.clone()))
+        });
+        reg
+    }
+
+    fn selector(n: usize) -> (Selector, Arc<TestModeDart>) {
+        let sim = Arc::new(TestModeDart::start_reliable(n, registry(), 2));
+        let sel = Selector::new(sim.clone() as Arc<dyn DartApi>);
+        (sel, sim)
+    }
+
+    fn dict(names: &[String]) -> BTreeMap<String, Json> {
+        names.iter().map(|n| (n.clone(), Json::obj().set("w", 1))).collect()
+    }
+
+    fn wait(sel: &Selector, h: TaskHandle) -> WfTaskStatus {
+        let t0 = Instant::now();
+        loop {
+            let st = sel.status(h).unwrap();
+            if st != WfTaskStatus::InProgress && st != WfTaskStatus::Queued {
+                return st;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "task stuck");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn submit_and_complete() {
+        let (sel, _sim) = selector(3);
+        let names = sel.device_names().unwrap();
+        assert_eq!(names.len(), 3);
+        let h = sel
+            .submit(Task::new(TaskKind::Default, "learn", dict(&names)))
+            .unwrap();
+        assert_eq!(wait(&sel, h), WfTaskStatus::Finished);
+        assert_eq!(sel.results(h).unwrap().len(), 3);
+        assert_eq!(sel.aggregator_count(), 1);
+    }
+
+    #[test]
+    fn rejects_unknown_client() {
+        let (sel, _sim) = selector(2);
+        let res = sel.submit(Task::new(
+            TaskKind::Default,
+            "learn",
+            dict(&["nope".to_string()]),
+        ));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn init_task_runs_before_first_default_task() {
+        let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let order: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let reg = TaskRegistry::new();
+        {
+            let order = Arc::clone(&order);
+            reg.register("init", move |_| {
+                order.lock().unwrap().push("init".into());
+                Ok(Json::Null)
+            });
+        }
+        {
+            let order = Arc::clone(&order);
+            let counter = Arc::clone(&counter);
+            reg.register("learn", move |_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+                order.lock().unwrap().push("learn".into());
+                Ok(Json::Null)
+            });
+        }
+        let sim = Arc::new(TestModeDart::start_reliable(2, reg, 1));
+        let sel = Selector::new(sim as Arc<dyn DartApi>);
+        sel.set_init_task(InitTask {
+            execute_function: "init".into(),
+            shared_params: Json::obj().set("model", "mlp"),
+        });
+        let names = sel.device_names().unwrap();
+        let h = sel
+            .submit(Task::new(TaskKind::Default, "learn", dict(&names)))
+            .unwrap();
+        assert_eq!(wait(&sel, h), WfTaskStatus::Finished);
+        let ord = order.lock().unwrap().clone();
+        // both inits strictly precede all learns
+        let last_init = ord.iter().rposition(|s| s == "init").unwrap();
+        let first_learn = ord.iter().position(|s| s == "learn").unwrap();
+        assert!(last_init < first_learn, "order was {ord:?}");
+
+        // second task: init must NOT run again
+        let before = ord.len();
+        let h2 = sel
+            .submit(Task::new(TaskKind::Default, "learn", dict(&names)))
+            .unwrap();
+        assert_eq!(wait(&sel, h2), WfTaskStatus::Finished);
+        let ord2 = order.lock().unwrap().clone();
+        assert_eq!(
+            ord2[before..].iter().filter(|s| *s == "init").count(),
+            0,
+            "init re-ran: {ord2:?}"
+        );
+    }
+
+    #[test]
+    fn capacity_queues_tasks() {
+        let (sel, _sim) = selector(2);
+        let sel = sel.with_capacity(1);
+        let names = sel.device_names().unwrap();
+        let reg_handles: Vec<TaskHandle> = (0..3)
+            .map(|_| {
+                sel.submit(Task::new(TaskKind::Default, "learn", dict(&names)))
+                    .unwrap()
+            })
+            .collect();
+        // all eventually finish despite capacity 1
+        for h in reg_handles {
+            assert_eq!(wait(&sel, h), WfTaskStatus::Finished);
+        }
+    }
+
+    #[test]
+    fn stop_queued_task() {
+        let (sel, _sim) = selector(1);
+        let sel = sel.with_capacity(1);
+        let names = sel.device_names().unwrap();
+        // a slow first task would be needed to truly queue; with fast echo
+        // tasks we simply verify stop on an already-finished handle is ok
+        let h = sel
+            .submit(Task::new(TaskKind::Default, "learn", dict(&names)))
+            .unwrap();
+        wait(&sel, h);
+        assert!(sel.stop(h).is_ok());
+        assert!(sel.status(TaskHandle(999)).is_err());
+    }
+
+    #[test]
+    fn device_view_tracks_liveness() {
+        let (sel, sim) = selector(2);
+        assert_eq!(sel.device_names().unwrap().len(), 2);
+        sim.scheduler().remove_worker("client-0");
+        let names = sel.device_names().unwrap();
+        assert_eq!(names, vec!["client-1".to_string()]);
+        // rejoin
+        sim.scheduler().add_worker(
+            "client-0",
+            crate::config::HardwareConfig::default(),
+            1,
+        );
+        assert_eq!(sel.device_names().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,188 @@
+//! Coordinator-level task representation (paper §A.2 "Task": "manages all
+//! relevant information, such as the function to be executed and the
+//! function parameters for each client. A check function verifies the task
+//! requirements to ensure that hardware requirements and device
+//! availability are fulfilled.")
+
+use std::collections::BTreeMap;
+
+use crate::config::HardwareConfig;
+use crate::coordinator::device::DeviceHolder;
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// Opaque task handle returned to the user (paper §A.1: "If the task was
+/// accepted, a handle is returned to the user").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskHandle(pub u64);
+
+impl std::fmt::Display for TaskHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "task#{}", self.0)
+    }
+}
+
+/// Kind of task in the Fed-DART workflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// The init task, guaranteed to run on each client before anything else
+    /// (Alg. 1).
+    Init,
+    /// A regular (default / learning) task.
+    Default,
+}
+
+/// A task as the coordinator tracks it.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub kind: TaskKind,
+    /// client-side `@feddart` function name
+    pub execute_function: String,
+    /// per-client parameters (the parameterDict, §A.1)
+    pub parameter_dict: BTreeMap<String, Json>,
+    pub requirements: HardwareConfig,
+    pub max_retries: u32,
+}
+
+impl Task {
+    pub fn new(
+        kind: TaskKind,
+        execute_function: &str,
+        parameter_dict: BTreeMap<String, Json>,
+    ) -> Task {
+        Task {
+            kind,
+            execute_function: execute_function.to_string(),
+            parameter_dict,
+            requirements: HardwareConfig::default(),
+            max_retries: 2,
+        }
+    }
+
+    pub fn with_requirements(mut self, req: HardwareConfig) -> Task {
+        self.requirements = req;
+        self
+    }
+
+    pub fn with_retries(mut self, r: u32) -> Task {
+        self.max_retries = r;
+        self
+    }
+
+    pub fn client_names(&self) -> Vec<String> {
+        self.parameter_dict.keys().cloned().collect()
+    }
+
+    /// The paper's check function: hardware requirements and device
+    /// availability must be fulfilled for every addressed client.
+    pub fn check(&self, devices: &DeviceHolder) -> Result<()> {
+        if self.parameter_dict.is_empty() {
+            return Err(FedError::Task("task addresses no clients".into()));
+        }
+        if self.execute_function.is_empty() {
+            return Err(FedError::Task("executeFunction must be non-empty".into()));
+        }
+        for name in self.parameter_dict.keys() {
+            let dev = devices.get(name).ok_or_else(|| {
+                FedError::Task(format!("unknown device '{name}'"))
+            })?;
+            if !dev.is_alive() {
+                return Err(FedError::Task(format!("device '{name}' not connected")));
+            }
+            if !dev.hardware.satisfies(&self.requirements) {
+                return Err(FedError::Task(format!(
+                    "device '{name}' fails hardware check (has {:?}, needs {:?})",
+                    dev.hardware, self.requirements
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Convert into the scheduler-level spec.
+    pub fn to_spec(&self) -> crate::dart::scheduler::TaskSpec {
+        crate::dart::scheduler::TaskSpec {
+            function: self.execute_function.clone(),
+            params: self.parameter_dict.clone(),
+            requirements: self.requirements.clone(),
+            max_retries: self.max_retries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::device::DeviceSingle;
+
+    fn holder() -> DeviceHolder {
+        DeviceHolder::new(vec![
+            DeviceSingle::new("a", HardwareConfig::default()),
+            DeviceSingle::new(
+                "b",
+                HardwareConfig { cpus: 8, mem_gb: 16, accelerator: "tpu".into() },
+            ),
+        ])
+    }
+
+    fn dict(names: &[&str]) -> BTreeMap<String, Json> {
+        names.iter().map(|n| (n.to_string(), Json::Null)).collect()
+    }
+
+    #[test]
+    fn check_passes_for_known_alive_devices() {
+        let t = Task::new(TaskKind::Default, "learn", dict(&["a", "b"]));
+        assert!(t.check(&holder()).is_ok());
+        assert_eq!(t.client_names(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn check_rejects_unknown_device() {
+        let t = Task::new(TaskKind::Default, "learn", dict(&["ghost"]));
+        assert!(t.check(&holder()).is_err());
+    }
+
+    #[test]
+    fn check_rejects_dead_device() {
+        let h = holder();
+        h.get("a").unwrap().set_alive(false);
+        let t = Task::new(TaskKind::Default, "learn", dict(&["a"]));
+        assert!(t.check(&h).is_err());
+    }
+
+    #[test]
+    fn check_rejects_insufficient_hardware() {
+        let t = Task::new(TaskKind::Default, "learn", dict(&["a"]))
+            .with_requirements(HardwareConfig {
+                cpus: 4,
+                mem_gb: 8,
+                accelerator: "none".into(),
+            });
+        assert!(t.check(&holder()).is_err());
+        // device b satisfies it
+        let t2 = Task::new(TaskKind::Default, "learn", dict(&["b"]))
+            .with_requirements(HardwareConfig {
+                cpus: 4,
+                mem_gb: 8,
+                accelerator: "tpu".into(),
+            });
+        assert!(t2.check(&holder()).is_ok());
+    }
+
+    #[test]
+    fn check_rejects_empty() {
+        let t = Task::new(TaskKind::Default, "learn", BTreeMap::new());
+        assert!(t.check(&holder()).is_err());
+        let t2 = Task::new(TaskKind::Default, "", dict(&["a"]));
+        assert!(t2.check(&holder()).is_err());
+    }
+
+    #[test]
+    fn to_spec_preserves_fields() {
+        let t = Task::new(TaskKind::Default, "learn", dict(&["a"])).with_retries(7);
+        let s = t.to_spec();
+        assert_eq!(s.function, "learn");
+        assert_eq!(s.max_retries, 7);
+        assert_eq!(s.params.len(), 1);
+    }
+}

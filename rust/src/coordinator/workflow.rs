@@ -1,0 +1,290 @@
+//! WorkflowManager — the user-facing entry point of the Fed-DART library
+//! (paper §A.1, Figure A.8: createInitTask, startFedDART,
+//! getAllDeviceNames, startTask, getTaskStatus, getTaskResult, stopTask).
+//!
+//! The same manager drives both backends — the in-process test mode and the
+//! production REST path — which is the paper's "seamless transition from
+//! rapid, local prototyping to deployment in a production environment".
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{DeviceConfig, ServerConfig};
+use crate::coordinator::selector::{InitTask, Selector, WfTaskStatus};
+use crate::coordinator::task::{Task, TaskHandle, TaskKind};
+use crate::dart::rest::RestDartApi;
+use crate::dart::scheduler::TaskResult;
+use crate::dart::testmode::{SimClient, TestModeDart};
+use crate::dart::{DartApi, TaskRegistry};
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// The WorkflowManager.
+pub struct WorkflowManager {
+    selector: Selector,
+    test_mode: bool,
+    /// kept alive for the lifetime of a test-mode manager
+    _sim: Option<Arc<TestModeDart>>,
+}
+
+impl WorkflowManager {
+    // ------------------------------------------------------------ builders
+
+    /// Test mode with `n` reliable simulated clients (paper §3).
+    /// `parallelism = 1` matches the paper's sequential dummy server.
+    pub fn test_mode(n: usize, registry: TaskRegistry, parallelism: usize) -> Self {
+        let sim = Arc::new(TestModeDart::start_reliable(n, registry, parallelism));
+        WorkflowManager {
+            selector: Selector::new(sim.clone() as Arc<dyn DartApi>),
+            test_mode: true,
+            _sim: Some(sim),
+        }
+    }
+
+    /// Test mode with explicit simulated clients (fault profiles, hardware).
+    pub fn test_mode_with(
+        clients: Vec<SimClient>,
+        registry: TaskRegistry,
+        parallelism: usize,
+    ) -> Self {
+        let sim = Arc::new(TestModeDart::start(clients, registry, parallelism));
+        WorkflowManager {
+            selector: Selector::new(sim.clone() as Arc<dyn DartApi>),
+            test_mode: true,
+            _sim: Some(sim),
+        }
+    }
+
+    /// Test mode from device config entries (paper Listing 3 — in test
+    /// mode addresses are dummies; names and hardware are used).
+    pub fn test_mode_from_devices(
+        devices: &[DeviceConfig],
+        registry: TaskRegistry,
+        parallelism: usize,
+    ) -> Self {
+        let clients = devices
+            .iter()
+            .map(|d| SimClient {
+                name: d.name.clone(),
+                hardware: d.hardware.clone(),
+                faults: crate::dart::faults::FaultInjector::none(),
+            })
+            .collect();
+        Self::test_mode_with(clients, registry, parallelism)
+    }
+
+    /// Production mode: connect to a running DART-server through the
+    /// REST-API (paper Listing 2 server config).
+    pub fn production(cfg: &ServerConfig) -> Result<Self> {
+        let api = RestDartApi::connect(cfg);
+        if !api.health().unwrap_or(false) {
+            return Err(FedError::Config(format!(
+                "DART-server at {} is not healthy",
+                cfg.server
+            )));
+        }
+        Ok(WorkflowManager {
+            selector: Selector::new(Arc::new(api) as Arc<dyn DartApi>),
+            test_mode: false,
+            _sim: None,
+        })
+    }
+
+    /// Bring-your-own backend (tests / custom deployments).
+    pub fn with_backend(api: Arc<dyn DartApi>) -> Self {
+        WorkflowManager { selector: Selector::new(api), test_mode: false, _sim: None }
+    }
+
+    pub fn is_test_mode(&self) -> bool {
+        self.test_mode
+    }
+
+    pub fn selector(&self) -> &Selector {
+        &self.selector
+    }
+
+    // ------------------------------------------------------- paper methods
+
+    /// `createInitTask` (Alg 1): register the function every client must
+    /// run before other tasks.  "Typically the model structure is passed
+    /// via the parameter Dict."
+    pub fn create_init_task(&self, shared_params: Json, execute_function: &str) {
+        self.selector.set_init_task(InitTask {
+            execute_function: execute_function.to_string(),
+            shared_params,
+        });
+    }
+
+    /// `startFedDART`: connect to the runtime and wait until at least
+    /// `min_clients` are visible (0 = no wait).
+    pub fn start_fed_dart(&self, min_clients: usize, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            let n = self.selector.device_names()?.len();
+            if n >= min_clients {
+                log::info!(target: "coordinator::workflow",
+                    "startFedDART: {n} client(s) connected");
+                return Ok(());
+            }
+            if t0.elapsed() > timeout {
+                return Err(FedError::Device(format!(
+                    "only {n}/{min_clients} clients connected after {timeout:?}"
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// `getAllDeviceNames`.
+    pub fn get_all_device_names(&self) -> Result<Vec<String>> {
+        self.selector.device_names()
+    }
+
+    /// `startTask`: submit a default task with per-client parameters.
+    /// Non-blocking — returns the handle immediately (§A.1).
+    pub fn start_task(
+        &self,
+        parameter_dict: BTreeMap<String, Json>,
+        execute_function: &str,
+    ) -> Result<TaskHandle> {
+        self.selector
+            .submit(Task::new(TaskKind::Default, execute_function, parameter_dict))
+    }
+
+    /// `startTask` with an explicit task (requirements, retries).
+    pub fn start_task_full(&self, task: Task) -> Result<TaskHandle> {
+        self.selector.submit(task)
+    }
+
+    /// `getTaskStatus`.
+    pub fn get_task_status(&self, handle: TaskHandle) -> Result<WfTaskStatus> {
+        self.selector.status(handle)
+    }
+
+    /// `getTaskResult`: the results available *now* (possibly partial).
+    pub fn get_task_result(&self, handle: TaskHandle) -> Result<Vec<TaskResult>> {
+        self.selector.results(handle)
+    }
+
+    /// `stopTask`.
+    pub fn stop_task(&self, handle: TaskHandle) -> Result<()> {
+        self.selector.stop(handle)
+    }
+
+    // -------------------------------------------------------- conveniences
+
+    /// Poll until the task settles or `timeout` elapses (Alg 2's wait loop).
+    pub fn wait_for_task(
+        &self,
+        handle: TaskHandle,
+        timeout: Duration,
+    ) -> Result<WfTaskStatus> {
+        let t0 = Instant::now();
+        loop {
+            let st = self.get_task_status(handle)?;
+            match st {
+                WfTaskStatus::Queued | WfTaskStatus::InProgress => {
+                    if t0.elapsed() > timeout {
+                        return Ok(st);
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                settled => return Ok(settled),
+            }
+        }
+    }
+
+    /// Run a task to completion and return its results (the common Alg 2
+    /// body: start, wait, fetch).
+    pub fn run_task(
+        &self,
+        parameter_dict: BTreeMap<String, Json>,
+        execute_function: &str,
+        timeout: Duration,
+    ) -> Result<Vec<TaskResult>> {
+        let h = self.start_task(parameter_dict, execute_function)?;
+        let st = self.wait_for_task(h, timeout)?;
+        match st {
+            WfTaskStatus::Finished | WfTaskStatus::PartiallyFailed => {
+                self.get_task_result(h)
+            }
+            other => Err(FedError::Task(format!(
+                "task {h} did not finish: {other:?}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> TaskRegistry {
+        let reg = TaskRegistry::new();
+        reg.register("init", |_| Ok(Json::Null));
+        reg.register("learn", |p| {
+            let lr = p.get("lr").and_then(Json::as_f64).unwrap_or(0.0);
+            Ok(Json::obj().set("loss", 1.0 / (1.0 + lr)))
+        });
+        reg
+    }
+
+    #[test]
+    fn paper_workflow_end_to_end() {
+        // Alg 1: init the manager, create the init task, start Fed-DART
+        let wm = WorkflowManager::test_mode(4, registry(), 2);
+        assert!(wm.is_test_mode());
+        wm.create_init_task(Json::obj().set("model", "mlp"), "init");
+        wm.start_fed_dart(4, Duration::from_secs(5)).unwrap();
+
+        // Alg 2: learning rounds
+        for round in 0..3 {
+            let clients = wm.get_all_device_names().unwrap();
+            assert_eq!(clients.len(), 4);
+            let dict: BTreeMap<String, Json> = clients
+                .iter()
+                .map(|c| (c.clone(), Json::obj().set("lr", 0.1 * (round + 1) as f64)))
+                .collect();
+            let handle = wm.start_task(dict, "learn").unwrap();
+            let st = wm.wait_for_task(handle, Duration::from_secs(10)).unwrap();
+            assert_eq!(st, WfTaskStatus::Finished);
+            let results = wm.get_task_result(handle).unwrap();
+            assert_eq!(results.len(), 4);
+            for r in &results {
+                assert!(r.result.get("loss").unwrap().as_f64().unwrap() < 1.0);
+                assert!(r.duration >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn run_task_convenience() {
+        let wm = WorkflowManager::test_mode(2, registry(), 1);
+        let clients = wm.get_all_device_names().unwrap();
+        let dict: BTreeMap<String, Json> = clients
+            .iter()
+            .map(|c| (c.clone(), Json::obj().set("lr", 1.0)))
+            .collect();
+        let results = wm.run_task(dict, "learn", Duration::from_secs(10)).unwrap();
+        assert_eq!(results.len(), 2);
+    }
+
+    #[test]
+    fn start_fed_dart_times_out_without_clients() {
+        let wm = WorkflowManager::test_mode(1, registry(), 1);
+        let err = wm.start_fed_dart(5, Duration::from_millis(100));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn unknown_function_partially_fails() {
+        let wm = WorkflowManager::test_mode(2, registry(), 1);
+        let clients = wm.get_all_device_names().unwrap();
+        let dict: BTreeMap<String, Json> =
+            clients.iter().map(|c| (c.clone(), Json::Null)).collect();
+        let h = wm.start_task(dict, "no_such_fn").unwrap();
+        let st = wm.wait_for_task(h, Duration::from_secs(10)).unwrap();
+        assert_eq!(st, WfTaskStatus::PartiallyFailed);
+    }
+}

@@ -1,0 +1,284 @@
+//! The DART-client: the worker that "is responsible for executing the tasks
+//! and sending the results back to the DART-Server" (§2.1.1).
+//!
+//! The client connects on its own (it holds the shared transport key — the
+//! paper's SSH-key arrangement), polls for work, executes the addressed
+//! `@feddart` function from its [`TaskRegistry`], and reports results.
+//! On connection loss it re-connects with exponential backoff, so a client
+//! can leave and rejoin a running workflow (the E3 churn scenario).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::HardwareConfig;
+use crate::dart::protocol::{ClientMsg, ServerMsg};
+use crate::dart::transport::{recv_json, send_json};
+use crate::dart::TaskRegistry;
+use crate::error::{FedError, Result};
+
+/// Configuration of one DART-client process.
+#[derive(Clone)]
+pub struct DartClientConfig {
+    pub name: String,
+    pub server_addr: String,
+    pub transport_key: Vec<u8>,
+    pub hardware: HardwareConfig,
+    pub capacity: usize,
+    /// poll interval when idle
+    pub poll_interval: Duration,
+}
+
+impl DartClientConfig {
+    pub fn new(name: &str, server_addr: &str, key: &[u8]) -> Self {
+        DartClientConfig {
+            name: name.to_string(),
+            server_addr: server_addr.to_string(),
+            transport_key: key.to_vec(),
+            hardware: HardwareConfig::default(),
+            capacity: 1,
+            poll_interval: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Handle to a running client thread.
+pub struct DartClient {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+    pub name: String,
+}
+
+impl DartClient {
+    /// Spawn the client loop on a background thread.
+    pub fn spawn(cfg: DartClientConfig, registry: TaskRegistry) -> DartClient {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let name = cfg.name.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("feddart-client-{}", cfg.name))
+            .spawn(move || client_loop(cfg, registry, stop2))
+            .expect("spawn dart client");
+        DartClient { stop, thread: Some(thread), name }
+    }
+
+    /// Run the client loop on the current thread until `stop` is set
+    /// (used by the `feddart client` CLI subcommand).
+    pub fn run_blocking(
+        cfg: DartClientConfig,
+        registry: TaskRegistry,
+        stop: Arc<AtomicBool>,
+    ) {
+        client_loop(cfg, registry, stop);
+    }
+
+    /// Signal the loop to stop and join it.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for DartClient {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn client_loop(cfg: DartClientConfig, registry: TaskRegistry, stop: Arc<AtomicBool>) {
+    let mut backoff = Duration::from_millis(50);
+    while !stop.load(Ordering::Relaxed) {
+        match session(&cfg, &registry, &stop) {
+            Ok(()) => return, // clean shutdown (Bye sent)
+            Err(e) => {
+                log::warn!(target: "dart::client",
+                    "client '{}' session ended: {e}; reconnecting in {backoff:?}",
+                    cfg.name);
+                // interruptible backoff
+                let t0 = Instant::now();
+                while t0.elapsed() < backoff && !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                backoff = (backoff * 2).min(Duration::from_secs(2));
+            }
+        }
+    }
+}
+
+/// One connected session; returns Ok on clean shutdown, Err on broken link.
+fn session(
+    cfg: &DartClientConfig,
+    registry: &TaskRegistry,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let stream = TcpStream::connect(&cfg.server_addr)
+        .map_err(|e| FedError::Transport(format!("connect: {e}")))?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_nodelay(true).ok();
+    let key = &cfg.transport_key;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    send_json(
+        &mut writer,
+        key,
+        &ClientMsg::Hello {
+            name: cfg.name.clone(),
+            hardware: cfg.hardware.clone(),
+            capacity: cfg.capacity,
+        }
+        .to_json(),
+    )?;
+    match ServerMsg::from_json(&recv_json(&mut reader, key)?)? {
+        ServerMsg::Welcome { .. } => {}
+        ServerMsg::Deny { reason } => {
+            return Err(FedError::Transport(format!("server denied join: {reason}")))
+        }
+        other => {
+            return Err(FedError::Transport(format!("unexpected reply {other:?}")))
+        }
+    }
+    log::info!(target: "dart::client", "'{}' joined {}", cfg.name, cfg.server_addr);
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            send_json(&mut writer, key, &ClientMsg::Bye.to_json())?;
+            let _ = recv_json(&mut reader, key); // Ack
+            return Ok(());
+        }
+        send_json(&mut writer, key, &ClientMsg::Poll.to_json())?;
+        match ServerMsg::from_json(&recv_json(&mut reader, key)?)? {
+            ServerMsg::Assign { task_id, function, client, params } => {
+                let t0 = Instant::now();
+                let outcome = registry.call_as(&client, &function, &params);
+                let duration = t0.elapsed().as_secs_f64();
+                let msg = match outcome {
+                    Ok(result) => {
+                        ClientMsg::Result { task_id, client, duration, result }
+                    }
+                    Err(e) => ClientMsg::Error {
+                        task_id,
+                        client,
+                        reason: e.to_string(),
+                    },
+                };
+                send_json(&mut writer, key, &msg.to_json())?;
+                let _ = recv_json(&mut reader, key)?; // Ack
+            }
+            ServerMsg::Idle => {
+                std::thread::sleep(cfg.poll_interval);
+            }
+            ServerMsg::Ack => {}
+            ServerMsg::Deny { reason } => {
+                return Err(FedError::Transport(format!("denied: {reason}")))
+            }
+            ServerMsg::Welcome { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dart::server::{DartServer, DartServerConfig};
+    use crate::dart::scheduler::{TaskSpec, TaskStatus};
+    use crate::json::Json;
+    use std::collections::BTreeMap;
+
+    fn registry() -> TaskRegistry {
+        let reg = TaskRegistry::new();
+        reg.register("square", |p| {
+            let x = p.need("x")?.as_f64().unwrap_or(0.0);
+            Ok(Json::obj().set("y", x * x))
+        });
+        reg
+    }
+
+    fn wait_for_clients(server: &DartServer, n: usize) {
+        let t0 = Instant::now();
+        while server.scheduler().alive_workers().len() < n {
+            assert!(t0.elapsed() < Duration::from_secs(5), "clients did not join");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn end_to_end_task_over_tcp() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let addr = server.dart_addr().to_string();
+        let key = b"feddart-demo-key";
+        let _c1 = DartClient::spawn(
+            DartClientConfig::new("alpha", &addr, key),
+            registry(),
+        );
+        let _c2 = DartClient::spawn(
+            DartClientConfig::new("beta", &addr, key),
+            registry(),
+        );
+        wait_for_clients(&server, 2);
+
+        let mut params = BTreeMap::new();
+        params.insert("alpha".to_string(), Json::obj().set("x", 3.0));
+        params.insert("beta".to_string(), Json::obj().set("x", 4.0));
+        let id = server.scheduler().submit(TaskSpec::new("square", params)).unwrap();
+
+        let t0 = Instant::now();
+        while server.scheduler().status(id).unwrap() == TaskStatus::InProgress {
+            assert!(t0.elapsed() < Duration::from_secs(10), "task stuck");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(server.scheduler().status(id).unwrap(), TaskStatus::Finished);
+        let mut ys: Vec<f64> = server
+            .scheduler()
+            .results(id)
+            .unwrap()
+            .iter()
+            .map(|r| r.result.get("y").unwrap().as_f64().unwrap())
+            .collect();
+        ys.sort_by(f64::total_cmp);
+        assert_eq!(ys, vec![9.0, 16.0]);
+    }
+
+    #[test]
+    fn wrong_transport_key_cannot_join() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let addr = server.dart_addr().to_string();
+        let _bad = DartClient::spawn(
+            DartClientConfig::new("mallory", &addr, b"wrong-key"),
+            registry(),
+        );
+        std::thread::sleep(Duration::from_millis(300));
+        assert!(server.scheduler().alive_workers().is_empty());
+    }
+
+    #[test]
+    fn client_disconnect_is_detected_and_rejoin_works() {
+        let mut cfg = DartServerConfig::default();
+        cfg.heartbeat_timeout_ms = 200;
+        let server = DartServer::start(cfg).unwrap();
+        let addr = server.dart_addr().to_string();
+        let key = b"feddart-demo-key";
+        let mut c = DartClient::spawn(
+            DartClientConfig::new("gamma", &addr, key),
+            registry(),
+        );
+        wait_for_clients(&server, 1);
+        c.shutdown(); // graceful Bye
+        let t0 = Instant::now();
+        while !server.scheduler().alive_workers().is_empty() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "bye not processed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // rejoin under the same name
+        let _c2 = DartClient::spawn(
+            DartClientConfig::new("gamma", &addr, key),
+            registry(),
+        );
+        wait_for_clients(&server, 1);
+    }
+}

@@ -1,0 +1,176 @@
+//! Fault injection — the substitute for real flaky edge devices.
+//!
+//! The paper's claim under test (E3): "a client can connect or disconnect
+//! at any time, without stopping the execution of the workflow" (§2.1).
+//! Real cross-silo deployments see stragglers, transient latency, and
+//! clients dropping mid-round; this module synthesizes those behaviours
+//! deterministically so the fault-tolerance path is exercised in tests,
+//! examples, and `bench_fault_tolerance`.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Per-client fault profile.  All probabilities are per-unit-of-work.
+#[derive(Debug, Clone)]
+pub struct FaultProfile {
+    /// fixed network latency added before each unit
+    pub latency_ms: u64,
+    /// uniform jitter added on top of `latency_ms`
+    pub jitter_ms: u64,
+    /// multiply compute time by this factor (straggler simulation; 1.0 = none)
+    pub straggle_factor: f64,
+    /// probability the client drops *before* starting a unit
+    pub drop_before: f64,
+    /// probability the client crashes *during* a unit (result lost)
+    pub crash_during: f64,
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile {
+            latency_ms: 0,
+            jitter_ms: 0,
+            straggle_factor: 1.0,
+            drop_before: 0.0,
+            crash_during: 0.0,
+        }
+    }
+}
+
+impl FaultProfile {
+    /// A well-behaved client.
+    pub fn reliable() -> Self {
+        Self::default()
+    }
+
+    /// A flaky client: drops or crashes with probability `p` each unit.
+    pub fn flaky(p: f64) -> Self {
+        FaultProfile { drop_before: p / 2.0, crash_during: p / 2.0, ..Self::default() }
+    }
+
+    /// A straggler running `factor`x slower with some network latency.
+    pub fn straggler(factor: f64, latency_ms: u64) -> Self {
+        FaultProfile {
+            latency_ms,
+            jitter_ms: latency_ms / 2,
+            straggle_factor: factor,
+            ..Self::default()
+        }
+    }
+}
+
+/// Decision for one unit of work.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// Execute after `delay`; if `crash_after` is set, the client "crashes"
+    /// (disconnects, losing the result) after computing.
+    Proceed { delay: Duration, crash_after: bool },
+    /// The client drops before even starting the unit.
+    DropBefore,
+}
+
+/// Deterministic fault injector (seeded).
+pub struct FaultInjector {
+    rng: Mutex<Rng>,
+    profile: FaultProfile,
+}
+
+impl FaultInjector {
+    pub fn new(seed: u64, profile: FaultProfile) -> Self {
+        FaultInjector { rng: Mutex::new(Rng::new(seed)), profile }
+    }
+
+    pub fn none() -> Self {
+        Self::new(0, FaultProfile::reliable())
+    }
+
+    pub fn profile(&self) -> &FaultProfile {
+        &self.profile
+    }
+
+    /// Decide the fate of the next unit.
+    pub fn next_action(&self) -> FaultAction {
+        let mut rng = self.rng.lock().unwrap();
+        if rng.chance(self.profile.drop_before) {
+            return FaultAction::DropBefore;
+        }
+        let jitter = if self.profile.jitter_ms > 0 {
+            rng.below(self.profile.jitter_ms as usize + 1) as u64
+        } else {
+            0
+        };
+        FaultAction::Proceed {
+            delay: Duration::from_millis(self.profile.latency_ms + jitter),
+            crash_after: rng.chance(self.profile.crash_during),
+        }
+    }
+
+    /// Scale a compute duration by the straggle factor.
+    pub fn straggle(&self, compute: Duration) -> Duration {
+        compute.mul_f64(self.profile.straggle_factor.max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reliable_always_proceeds_immediately() {
+        let inj = FaultInjector::none();
+        for _ in 0..100 {
+            assert_eq!(
+                inj.next_action(),
+                FaultAction::Proceed { delay: Duration::ZERO, crash_after: false }
+            );
+        }
+    }
+
+    #[test]
+    fn flaky_client_fails_at_configured_rate() {
+        let inj = FaultInjector::new(7, FaultProfile::flaky(0.4));
+        let n = 10_000;
+        let mut drops = 0;
+        let mut crashes = 0;
+        for _ in 0..n {
+            match inj.next_action() {
+                FaultAction::DropBefore => drops += 1,
+                FaultAction::Proceed { crash_after: true, .. } => crashes += 1,
+                _ => {}
+            }
+        }
+        let drop_rate = drops as f64 / n as f64;
+        let crash_rate = crashes as f64 / n as f64;
+        assert!((drop_rate - 0.2).abs() < 0.03, "drop rate {drop_rate}");
+        // crash is conditioned on not dropping: 0.8 * 0.2 = 0.16
+        assert!((crash_rate - 0.16).abs() < 0.03, "crash rate {crash_rate}");
+    }
+
+    #[test]
+    fn straggler_delays_and_scales() {
+        let inj = FaultInjector::new(1, FaultProfile::straggler(3.0, 100));
+        match inj.next_action() {
+            FaultAction::Proceed { delay, crash_after } => {
+                assert!(delay >= Duration::from_millis(100));
+                assert!(delay <= Duration::from_millis(150));
+                assert!(!crash_after);
+            }
+            a => panic!("unexpected {a:?}"),
+        }
+        assert_eq!(
+            inj.straggle(Duration::from_millis(10)),
+            Duration::from_millis(30)
+        );
+    }
+
+    #[test]
+    fn injector_is_deterministic_per_seed() {
+        let a = FaultInjector::new(3, FaultProfile::flaky(0.5));
+        let b = FaultInjector::new(3, FaultProfile::flaky(0.5));
+        for _ in 0..100 {
+            assert_eq!(a.next_action(), b.next_action());
+        }
+    }
+}

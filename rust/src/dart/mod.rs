@@ -1,0 +1,156 @@
+//! The DART runtime — the paper's distributed backbone.
+//!
+//! "The Distributed Analytics Runtime (DART) is a Python API for GPI-Space
+//! ... Fed-DART is therefore an adaptation and further development of DART
+//! to meet the special requirements of a FL runtime in the domain of a
+//! server-centric FL scheme." (§2.1)
+//!
+//! Components (one module each):
+//! * [`petri`] — Petri-net workflow substrate (the GPI-Space role).
+//! * [`scheduler`] — capability/requirement-aware task scheduler with
+//!   fault-tolerant re-queue.
+//! * [`transport`] — HMAC-authenticated framed TCP (the SSH-channel role).
+//! * [`protocol`] — wire + REST message formats.
+//! * [`server`] — the DART-server: client connections + https REST-API.
+//! * [`client`] — the DART-client worker loop.
+//! * [`rest`] — REST-side [`DartApi`] used by the aggregation component.
+//! * [`testmode`] — the local simulation backend with the identical
+//!   workflow (paper §3: "the test mode has the same workflow as the
+//!   production mode").
+//! * [`faults`] — deterministic fault injection for churn experiments.
+
+pub mod client;
+pub mod faults;
+pub mod petri;
+pub mod protocol;
+pub mod rest;
+pub mod scheduler;
+pub mod server;
+pub mod testmode;
+pub mod transport;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::HardwareConfig;
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::dart::scheduler::{TaskId, TaskResult, TaskSpec, TaskStatus};
+
+/// A device as seen by the aggregation side.
+#[derive(Debug, Clone)]
+pub struct DeviceInfo {
+    pub name: String,
+    pub hardware: HardwareConfig,
+    pub alive: bool,
+}
+
+/// The backend interface the Fed-DART coordinator programs against.
+///
+/// Two implementations with the *same* observable workflow:
+/// [`testmode::TestModeDart`] (local simulation) and [`rest::RestDartApi`]
+/// (production: REST to a running [`server::DartServer`]).  E6
+/// (`bench_mode_parity`) checks the parity claim quantitatively.
+pub trait DartApi: Send + Sync {
+    /// Connected devices (alive and lost).
+    fn devices(&self) -> Result<Vec<DeviceInfo>>;
+    /// Submit a task; the selector/scheduler may reject it.
+    fn submit(&self, spec: TaskSpec) -> Result<TaskId>;
+    /// Aggregate status of a task.
+    fn status(&self, id: TaskId) -> Result<TaskStatus>;
+    /// Results available so far (non-blocking, possibly partial).
+    fn results(&self, id: TaskId) -> Result<Vec<TaskResult>>;
+    /// Cancel a task.
+    fn stop_task(&self, id: TaskId) -> Result<()>;
+
+    /// Names of currently alive devices.
+    fn device_names(&self) -> Result<Vec<String>> {
+        Ok(self
+            .devices()?
+            .into_iter()
+            .filter(|d| d.alive)
+            .map(|d| d.name)
+            .collect())
+    }
+}
+
+/// Client-side function registry — the `@feddart` annotation equivalent
+/// (§2.1.1: functions the DART-client can call to execute a task "should
+/// be annotated with @feddart").
+pub type TaskFn = Arc<dyn Fn(&Json) -> Result<Json> + Send + Sync>;
+
+#[derive(Default, Clone)]
+pub struct TaskRegistry {
+    fns: Arc<Mutex<HashMap<String, TaskFn>>>,
+}
+
+impl TaskRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a named task function.
+    pub fn register<F>(&self, name: &str, f: F)
+    where
+        F: Fn(&Json) -> Result<Json> + Send + Sync + 'static,
+    {
+        self.fns.lock().unwrap().insert(name.to_string(), Arc::new(f));
+    }
+
+    /// Look up a function.
+    pub fn get(&self, name: &str) -> Result<TaskFn> {
+        self.fns
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| FedError::Task(format!("no @feddart function '{name}'")))
+    }
+
+    /// Invoke a function by name.
+    pub fn call(&self, name: &str, params: &Json) -> Result<Json> {
+        (self.get(name)?)(params)
+    }
+
+    /// Invoke a function with the executing device's name injected as
+    /// `"_device"` (object params only).  Client-side code uses this to
+    /// select its own local data partition: on a real client it is the
+    /// process's own name; in test mode it identifies the simulated client.
+    pub fn call_as(&self, device: &str, name: &str, params: &Json) -> Result<Json> {
+        let injected = match params {
+            Json::Obj(_) => params.clone().set("_device", device),
+            other => other.clone(),
+        };
+        self.call(name, &injected)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.fns.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_register_and_call() {
+        let reg = TaskRegistry::new();
+        reg.register("double", |p| {
+            let x = p.need("x")?.as_f64().unwrap_or(0.0);
+            Ok(Json::obj().set("y", x * 2.0))
+        });
+        let out = reg.call("double", &Json::obj().set("x", 21.0)).unwrap();
+        assert_eq!(out.get("y").unwrap().as_f64(), Some(42.0));
+        assert!(reg.call("missing", &Json::Null).is_err());
+        assert_eq!(reg.names(), vec!["double".to_string()]);
+    }
+
+    #[test]
+    fn registry_is_shared_via_clone() {
+        let reg = TaskRegistry::new();
+        let reg2 = reg.clone();
+        reg.register("f", |_| Ok(Json::Null));
+        assert!(reg2.call("f", &Json::Null).is_ok());
+    }
+}

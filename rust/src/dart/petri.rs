@@ -1,0 +1,374 @@
+//! Petri-net workflow substrate — the GPI-Space role.
+//!
+//! GPI-Space "separates the coordination, which describes dependencies
+//! between tasks, from the computation on data. Using Petri nets as the
+//! workflow description language, GPI-Space can represent arbitrary
+//! dependency graphs between tasks" (paper §2.1).  The DART scheduler builds
+//! one of these nets per federated task to track its lifecycle (queued ->
+//! per-client running -> results -> aggregatable), and the net is what makes
+//! fault-tolerant re-queue principled: a lost client's token moves back from
+//! `running` to `queued` without disturbing the rest of the workflow.
+
+
+use crate::error::{FedError, Result};
+
+/// Identifier of a place (token holder).
+pub type PlaceId = usize;
+/// Identifier of a transition.
+pub type TransitionId = usize;
+
+/// A transition: consumes `inputs` tokens and produces `outputs` tokens.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub name: String,
+    /// (place, token count required/consumed)
+    pub inputs: Vec<(PlaceId, usize)>,
+    /// (place, token count produced)
+    pub outputs: Vec<(PlaceId, usize)>,
+}
+
+/// A marked Petri net.
+#[derive(Debug, Clone, Default)]
+pub struct PetriNet {
+    place_names: Vec<String>,
+    marking: Vec<usize>,
+    transitions: Vec<Transition>,
+    /// firing log (transition ids, in order) for observability/debugging
+    history: Vec<TransitionId>,
+}
+
+impl PetriNet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a place with an initial token count; returns its id.
+    pub fn add_place(&mut self, name: &str, tokens: usize) -> PlaceId {
+        self.place_names.push(name.to_string());
+        self.marking.push(tokens);
+        self.place_names.len() - 1
+    }
+
+    /// Add a transition; returns its id.
+    pub fn add_transition(
+        &mut self,
+        name: &str,
+        inputs: Vec<(PlaceId, usize)>,
+        outputs: Vec<(PlaceId, usize)>,
+    ) -> TransitionId {
+        for &(p, _) in inputs.iter().chain(outputs.iter()) {
+            assert!(p < self.marking.len(), "unknown place {p}");
+        }
+        self.transitions.push(Transition {
+            name: name.to_string(),
+            inputs,
+            outputs,
+        });
+        self.transitions.len() - 1
+    }
+
+    pub fn tokens(&self, place: PlaceId) -> usize {
+        self.marking[place]
+    }
+
+    pub fn place_name(&self, place: PlaceId) -> &str {
+        &self.place_names[place]
+    }
+
+    pub fn transition_name(&self, t: TransitionId) -> &str {
+        &self.transitions[t].name
+    }
+
+    /// Is the transition enabled under the current marking?
+    pub fn enabled(&self, t: TransitionId) -> bool {
+        self.transitions[t]
+            .inputs
+            .iter()
+            .all(|&(p, n)| self.marking[p] >= n)
+    }
+
+    /// All currently enabled transitions.
+    pub fn enabled_transitions(&self) -> Vec<TransitionId> {
+        (0..self.transitions.len()).filter(|&t| self.enabled(t)).collect()
+    }
+
+    /// Fire a transition; errors if it is not enabled.
+    pub fn fire(&mut self, t: TransitionId) -> Result<()> {
+        if !self.enabled(t) {
+            return Err(FedError::Task(format!(
+                "transition '{}' not enabled",
+                self.transitions[t].name
+            )));
+        }
+        // clone arc lists to appease the borrow checker cheaply (small vecs)
+        let inputs = self.transitions[t].inputs.clone();
+        let outputs = self.transitions[t].outputs.clone();
+        for (p, n) in inputs {
+            self.marking[p] -= n;
+        }
+        for (p, n) in outputs {
+            self.marking[p] += n;
+        }
+        self.history.push(t);
+        Ok(())
+    }
+
+    /// Fire enabled transitions until quiescence (deterministic order:
+    /// lowest transition id first).  Returns the number of firings.
+    /// `max_steps` guards against non-terminating nets.
+    pub fn run_to_quiescence(&mut self, max_steps: usize) -> Result<usize> {
+        let mut steps = 0;
+        while steps < max_steps {
+            match self.enabled_transitions().first() {
+                None => return Ok(steps),
+                Some(&t) => {
+                    self.fire(t)?;
+                    steps += 1;
+                }
+            }
+        }
+        Err(FedError::Task(format!(
+            "petri net did not quiesce in {max_steps} steps"
+        )))
+    }
+
+    /// Total token count (for conservation checks in tests).
+    pub fn total_tokens(&self) -> usize {
+        self.marking.iter().sum()
+    }
+
+    /// Firing history (transition names).
+    pub fn history(&self) -> Vec<&str> {
+        self.history
+            .iter()
+            .map(|&t| self.transitions[t].name.as_str())
+            .collect()
+    }
+
+    /// Dead marking: no transition enabled.
+    pub fn is_quiescent(&self) -> bool {
+        self.enabled_transitions().is_empty()
+    }
+}
+
+/// The lifecycle net the DART scheduler instantiates per federated task:
+///
+/// ```text
+///   queued(n) --assign--> running --complete--> done
+///                  ^          |
+///                  +--requeue-+   (client lost)
+///   done(n == clients) --finish--> finished(1)
+/// ```
+#[derive(Debug, Clone)]
+pub struct TaskNet {
+    pub net: PetriNet,
+    pub queued: PlaceId,
+    pub running: PlaceId,
+    pub done: PlaceId,
+    pub failed: PlaceId,
+    pub finished: PlaceId,
+    pub t_assign: TransitionId,
+    pub t_complete: TransitionId,
+    pub t_requeue: TransitionId,
+    pub t_fail: TransitionId,
+    pub t_finish: TransitionId,
+    pub clients: usize,
+}
+
+impl TaskNet {
+    /// Build the lifecycle net for a task fanned out to `clients` clients.
+    pub fn new(clients: usize) -> TaskNet {
+        let mut net = PetriNet::new();
+        let queued = net.add_place("queued", clients);
+        let running = net.add_place("running", 0);
+        let done = net.add_place("done", 0);
+        let failed = net.add_place("failed", 0);
+        let finished = net.add_place("finished", 0);
+        let t_assign = net.add_transition("assign", vec![(queued, 1)], vec![(running, 1)]);
+        let t_complete =
+            net.add_transition("complete", vec![(running, 1)], vec![(done, 1)]);
+        let t_requeue =
+            net.add_transition("requeue", vec![(running, 1)], vec![(queued, 1)]);
+        let t_fail = net.add_transition("fail", vec![(running, 1)], vec![(failed, 1)]);
+        // finish consumes all `clients` completion tokens at once: the
+        // aggregation barrier (only meaningful when every client finished
+        // or permanently failed — the scheduler fires it appropriately).
+        let t_finish =
+            net.add_transition("finish", vec![(done, clients)], vec![(finished, 1)]);
+        TaskNet {
+            net,
+            queued,
+            running,
+            done,
+            failed,
+            finished,
+            t_assign,
+            t_complete,
+            t_requeue,
+            t_fail,
+            t_finish,
+            clients,
+        }
+    }
+
+    pub fn assign(&mut self) -> Result<()> {
+        self.net.fire(self.t_assign)
+    }
+    pub fn complete(&mut self) -> Result<()> {
+        self.net.fire(self.t_complete)
+    }
+    pub fn requeue(&mut self) -> Result<()> {
+        self.net.fire(self.t_requeue)
+    }
+    pub fn fail(&mut self) -> Result<()> {
+        self.net.fire(self.t_fail)
+    }
+
+    pub fn queued_count(&self) -> usize {
+        self.net.tokens(self.queued)
+    }
+    pub fn running_count(&self) -> usize {
+        self.net.tokens(self.running)
+    }
+    pub fn done_count(&self) -> usize {
+        self.net.tokens(self.done)
+    }
+    pub fn failed_count(&self) -> usize {
+        self.net.tokens(self.failed)
+    }
+
+    /// All work is accounted for (nothing queued or running).
+    pub fn is_settled(&self) -> bool {
+        self.queued_count() == 0 && self.running_count() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basic_fire_semantics() {
+        let mut net = PetriNet::new();
+        let a = net.add_place("a", 2);
+        let b = net.add_place("b", 0);
+        let t = net.add_transition("t", vec![(a, 1)], vec![(b, 1)]);
+        assert!(net.enabled(t));
+        net.fire(t).unwrap();
+        net.fire(t).unwrap();
+        assert_eq!(net.tokens(a), 0);
+        assert_eq!(net.tokens(b), 2);
+        assert!(!net.enabled(t));
+        assert!(net.fire(t).is_err());
+        assert_eq!(net.history(), vec!["t", "t"]);
+    }
+
+    #[test]
+    fn multi_input_barrier() {
+        let mut net = PetriNet::new();
+        let a = net.add_place("a", 3);
+        let out = net.add_place("out", 0);
+        let barrier = net.add_transition("barrier", vec![(a, 3)], vec![(out, 1)]);
+        assert!(net.enabled(barrier));
+        net.fire(barrier).unwrap();
+        assert_eq!(net.tokens(out), 1);
+        assert!(net.is_quiescent());
+    }
+
+    #[test]
+    fn run_to_quiescence_pipeline() {
+        // a -> b -> c pipeline moves all tokens to c
+        let mut net = PetriNet::new();
+        let a = net.add_place("a", 5);
+        let b = net.add_place("b", 0);
+        let c = net.add_place("c", 0);
+        net.add_transition("ab", vec![(a, 1)], vec![(b, 1)]);
+        net.add_transition("bc", vec![(b, 1)], vec![(c, 1)]);
+        let steps = net.run_to_quiescence(100).unwrap();
+        assert_eq!(steps, 10);
+        assert_eq!(net.tokens(c), 5);
+        assert_eq!(net.total_tokens(), 5); // conservation for 1-1 transitions
+    }
+
+    #[test]
+    fn nonterminating_net_is_caught() {
+        let mut net = PetriNet::new();
+        let a = net.add_place("a", 1);
+        net.add_transition("loop", vec![(a, 1)], vec![(a, 1)]);
+        assert!(net.run_to_quiescence(50).is_err());
+    }
+
+    #[test]
+    fn task_net_happy_path() {
+        let mut t = TaskNet::new(3);
+        for _ in 0..3 {
+            t.assign().unwrap();
+        }
+        assert_eq!(t.running_count(), 3);
+        for _ in 0..3 {
+            t.complete().unwrap();
+        }
+        assert!(t.net.enabled(t.t_finish));
+        t.net.fire(t.t_finish).unwrap();
+        assert_eq!(t.net.tokens(t.finished), 1);
+        assert!(t.is_settled());
+    }
+
+    #[test]
+    fn task_net_requeue_on_client_loss() {
+        let mut t = TaskNet::new(2);
+        t.assign().unwrap();
+        t.assign().unwrap();
+        t.requeue().unwrap(); // client lost mid-task
+        assert_eq!(t.queued_count(), 1);
+        assert_eq!(t.running_count(), 1);
+        t.assign().unwrap(); // rescheduled elsewhere
+        t.complete().unwrap();
+        t.complete().unwrap();
+        assert_eq!(t.done_count(), 2);
+        assert!(t.is_settled());
+    }
+
+    #[test]
+    fn task_net_permanent_failure() {
+        let mut t = TaskNet::new(2);
+        t.assign().unwrap();
+        t.fail().unwrap();
+        t.assign().unwrap();
+        t.complete().unwrap();
+        assert_eq!(t.failed_count(), 1);
+        assert_eq!(t.done_count(), 1);
+        assert!(t.is_settled());
+        // barrier for all clients can not fire — scheduler handles partial
+        assert!(!t.net.enabled(t.t_finish));
+    }
+
+    /// Property: random interleavings of assign/complete/requeue/fail keep
+    /// the task-token invariant: queued + running + done + failed == clients.
+    #[test]
+    fn property_token_conservation_under_churn() {
+        let mut rng = Rng::new(5);
+        for trial in 0..100 {
+            let clients = 1 + rng.below(16);
+            let mut t = TaskNet::new(clients);
+            for _ in 0..200 {
+                let choice = rng.below(4);
+                let _ = match choice {
+                    0 => t.assign(),
+                    1 => t.complete(),
+                    2 => t.requeue(),
+                    _ => t.fail(),
+                };
+                let total = t.queued_count()
+                    + t.running_count()
+                    + t.done_count()
+                    + t.failed_count();
+                assert_eq!(
+                    total, clients,
+                    "trial {trial}: token leak: {total} != {clients}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! Wire messages between DART-server and DART-clients, and the shared
+//! JSON conventions used by the REST-API.
+//!
+//! Model parameters travel as base64-encoded little-endian f32 blobs under
+//! the `"params_b64"` convention (see [`crate::util::base64`]).
+
+use std::collections::BTreeMap;
+
+use crate::config::HardwareConfig;
+use crate::dart::scheduler::{TaskResult, TaskStatus, WorkUnit};
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// Messages from a DART-client to the DART-server.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// Join the runtime (paper: the client connects on its own at runtime
+    /// once it holds the server's key).
+    Hello { name: String, hardware: HardwareConfig, capacity: usize },
+    /// Liveness signal.
+    Heartbeat,
+    /// Ask for work (pull dispatch).
+    Poll,
+    /// Successful unit result.
+    Result { task_id: u64, client: String, duration: f64, result: Json },
+    /// Unit execution error.
+    Error { task_id: u64, client: String, reason: String },
+    /// Graceful disconnect.
+    Bye,
+}
+
+/// Messages from the DART-server to a DART-client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    /// Hello accepted.
+    Welcome { server_name: String },
+    /// A unit of work to execute.
+    Assign { task_id: u64, function: String, client: String, params: Json },
+    /// Nothing to do right now.
+    Idle,
+    /// Acknowledgement (results, heartbeats).
+    Ack,
+    /// Protocol-level rejection.
+    Deny { reason: String },
+}
+
+impl ClientMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClientMsg::Hello { name, hardware, capacity } => Json::obj()
+                .set("type", "hello")
+                .set("name", name.as_str())
+                .set("hardware", hardware.to_json())
+                .set("capacity", *capacity),
+            ClientMsg::Heartbeat => Json::obj().set("type", "heartbeat"),
+            ClientMsg::Poll => Json::obj().set("type", "poll"),
+            ClientMsg::Result { task_id, client, duration, result } => Json::obj()
+                .set("type", "result")
+                .set("task_id", *task_id)
+                .set("client", client.as_str())
+                .set("duration", *duration)
+                .set("result", result.clone()),
+            ClientMsg::Error { task_id, client, reason } => Json::obj()
+                .set("type", "error")
+                .set("task_id", *task_id)
+                .set("client", client.as_str())
+                .set("reason", reason.as_str()),
+            ClientMsg::Bye => Json::obj().set("type", "bye"),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClientMsg> {
+        let ty = j.need("type")?.as_str().unwrap_or("");
+        match ty {
+            "hello" => Ok(ClientMsg::Hello {
+                name: j.need("name")?.as_str().unwrap_or("").to_string(),
+                hardware: j
+                    .get("hardware")
+                    .map(HardwareConfig::from_json)
+                    .unwrap_or_default(),
+                capacity: j.get("capacity").and_then(Json::as_usize).unwrap_or(1),
+            }),
+            "heartbeat" => Ok(ClientMsg::Heartbeat),
+            "poll" => Ok(ClientMsg::Poll),
+            "result" => Ok(ClientMsg::Result {
+                task_id: j.need("task_id")?.as_i64().unwrap_or(0) as u64,
+                client: j.need("client")?.as_str().unwrap_or("").to_string(),
+                duration: j.get("duration").and_then(Json::as_f64).unwrap_or(0.0),
+                result: j.get("result").cloned().unwrap_or(Json::Null),
+            }),
+            "error" => Ok(ClientMsg::Error {
+                task_id: j.need("task_id")?.as_i64().unwrap_or(0) as u64,
+                client: j.need("client")?.as_str().unwrap_or("").to_string(),
+                reason: j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+            }),
+            "bye" => Ok(ClientMsg::Bye),
+            other => Err(FedError::Transport(format!("unknown client msg '{other}'"))),
+        }
+    }
+}
+
+impl ServerMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerMsg::Welcome { server_name } => Json::obj()
+                .set("type", "welcome")
+                .set("server_name", server_name.as_str()),
+            ServerMsg::Assign { task_id, function, client, params } => Json::obj()
+                .set("type", "assign")
+                .set("task_id", *task_id)
+                .set("function", function.as_str())
+                .set("client", client.as_str())
+                .set("params", params.clone()),
+            ServerMsg::Idle => Json::obj().set("type", "idle"),
+            ServerMsg::Ack => Json::obj().set("type", "ack"),
+            ServerMsg::Deny { reason } => Json::obj()
+                .set("type", "deny")
+                .set("reason", reason.as_str()),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServerMsg> {
+        let ty = j.need("type")?.as_str().unwrap_or("");
+        match ty {
+            "welcome" => Ok(ServerMsg::Welcome {
+                server_name: j
+                    .get("server_name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("dart")
+                    .to_string(),
+            }),
+            "assign" => Ok(ServerMsg::Assign {
+                task_id: j.need("task_id")?.as_i64().unwrap_or(0) as u64,
+                function: j.need("function")?.as_str().unwrap_or("").to_string(),
+                client: j.need("client")?.as_str().unwrap_or("").to_string(),
+                params: j.get("params").cloned().unwrap_or(Json::Null),
+            }),
+            "idle" => Ok(ServerMsg::Idle),
+            "ack" => Ok(ServerMsg::Ack),
+            "deny" => Ok(ServerMsg::Deny {
+                reason: j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+            }),
+            other => Err(FedError::Transport(format!("unknown server msg '{other}'"))),
+        }
+    }
+
+    pub fn assign_from_unit(u: &WorkUnit) -> ServerMsg {
+        ServerMsg::Assign {
+            task_id: u.task_id,
+            function: u.function.clone(),
+            client: u.client.clone(),
+            params: u.params.clone(),
+        }
+    }
+}
+
+// -------------------------------------------------------- REST-side helpers
+
+/// Serialize a task result for the REST-API (`GET /tasks/{id}/results`).
+pub fn task_result_to_json(r: &TaskResult) -> Json {
+    Json::obj()
+        .set("deviceName", r.device_name.as_str())
+        .set("duration", r.duration)
+        .set("resultDict", r.result.clone())
+}
+
+pub fn task_result_from_json(j: &Json) -> Result<TaskResult> {
+    Ok(TaskResult {
+        device_name: j.need("deviceName")?.as_str().unwrap_or("").to_string(),
+        duration: j.get("duration").and_then(Json::as_f64).unwrap_or(0.0),
+        result: j.get("resultDict").cloned().unwrap_or(Json::Null),
+    })
+}
+
+pub fn status_to_str(s: TaskStatus) -> &'static str {
+    match s {
+        TaskStatus::InProgress => "in_progress",
+        TaskStatus::Finished => "finished",
+        TaskStatus::PartiallyFailed => "partially_failed",
+        TaskStatus::Stopped => "stopped",
+    }
+}
+
+pub fn status_from_str(s: &str) -> Result<TaskStatus> {
+    match s {
+        "in_progress" => Ok(TaskStatus::InProgress),
+        "finished" => Ok(TaskStatus::Finished),
+        "partially_failed" => Ok(TaskStatus::PartiallyFailed),
+        "stopped" => Ok(TaskStatus::Stopped),
+        other => Err(FedError::Transport(format!("unknown status '{other}'"))),
+    }
+}
+
+/// Build a per-client parameter dict for a task spec from shared and
+/// client-specific parts (the paper's parameterDict, §A.1).
+pub fn parameter_dict(
+    clients: &[String],
+    shared: &Json,
+    per_client: &BTreeMap<String, Json>,
+) -> BTreeMap<String, Json> {
+    clients
+        .iter()
+        .map(|c| {
+            let mut obj = shared.clone();
+            if let (Json::Obj(base), Some(Json::Obj(extra))) =
+                (&mut obj, per_client.get(c))
+            {
+                for (k, v) in extra {
+                    base.insert(k.clone(), v.clone());
+                }
+            }
+            (c.clone(), obj)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_msgs_roundtrip() {
+        let msgs = vec![
+            ClientMsg::Hello {
+                name: "edge-1".into(),
+                hardware: HardwareConfig::default(),
+                capacity: 2,
+            },
+            ClientMsg::Heartbeat,
+            ClientMsg::Poll,
+            ClientMsg::Result {
+                task_id: 9,
+                client: "edge-1".into(),
+                duration: 1.25,
+                result: Json::obj().set("loss", 0.5),
+            },
+            ClientMsg::Error {
+                task_id: 9,
+                client: "edge-1".into(),
+                reason: "oom".into(),
+            },
+            ClientMsg::Bye,
+        ];
+        for m in msgs {
+            let j = m.to_json();
+            assert_eq!(ClientMsg::from_json(&j).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn server_msgs_roundtrip() {
+        let msgs = vec![
+            ServerMsg::Welcome { server_name: "dart".into() },
+            ServerMsg::Assign {
+                task_id: 3,
+                function: "learn".into(),
+                client: "edge-1".into(),
+                params: Json::obj().set("lr", 0.1),
+            },
+            ServerMsg::Idle,
+            ServerMsg::Ack,
+            ServerMsg::Deny { reason: "bad key".into() },
+        ];
+        for m in msgs {
+            let j = m.to_json();
+            assert_eq!(ServerMsg::from_json(&j).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn unknown_type_is_error() {
+        let j = Json::obj().set("type", "quack");
+        assert!(ClientMsg::from_json(&j).is_err());
+        assert!(ServerMsg::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn status_str_roundtrip() {
+        for s in [
+            TaskStatus::InProgress,
+            TaskStatus::Finished,
+            TaskStatus::PartiallyFailed,
+            TaskStatus::Stopped,
+        ] {
+            assert_eq!(status_from_str(status_to_str(s)).unwrap(), s);
+        }
+        assert!(status_from_str("nope").is_err());
+    }
+
+    #[test]
+    fn parameter_dict_merges_shared_and_specific() {
+        let clients = vec!["a".to_string(), "b".to_string()];
+        let shared = Json::obj().set("lr", 0.1).set("epochs", 2);
+        let mut per = BTreeMap::new();
+        per.insert("b".to_string(), Json::obj().set("lr", 0.5));
+        let dict = parameter_dict(&clients, &shared, &per);
+        assert_eq!(dict["a"].get("lr").unwrap().as_f64(), Some(0.1));
+        assert_eq!(dict["b"].get("lr").unwrap().as_f64(), Some(0.5));
+        assert_eq!(dict["b"].get("epochs").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn task_result_json_roundtrip() {
+        let r = TaskResult {
+            device_name: "edge-3".into(),
+            duration: 2.5,
+            result: Json::obj().set("result_0", 5).set("result_1", 2),
+        };
+        let j = task_result_to_json(&r);
+        let back = task_result_from_json(&j).unwrap();
+        assert_eq!(back.device_name, r.device_name);
+        assert_eq!(back.duration, r.duration);
+        assert_eq!(back.result, r.result);
+    }
+}

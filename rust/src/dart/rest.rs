@@ -1,0 +1,177 @@
+//! REST-side [`DartApi`] — the production backend the aggregation component
+//! uses (the paper's `DartRuntime` helper class role, §A.2: "translate
+//! DeviceSingle's requests into a compliant format for the REST client.
+//! In the other direction, the incoming traffic from the REST client is
+//! decoded").
+
+use std::time::Duration;
+
+use crate::config::{HardwareConfig, ServerConfig};
+use crate::dart::protocol::{status_from_str, task_result_from_json};
+use crate::dart::scheduler::{TaskId, TaskResult, TaskSpec, TaskStatus};
+use crate::dart::server::task_spec_to_json;
+use crate::dart::{DartApi, DeviceInfo};
+use crate::error::{FedError, Result};
+use crate::http::client::HttpClient;
+use crate::json::Json;
+
+/// DartApi over the https-server REST-API.
+pub struct RestDartApi {
+    http: HttpClient,
+}
+
+impl RestDartApi {
+    /// Connect using a server config (paper Listing 2).
+    pub fn connect(cfg: &ServerConfig) -> RestDartApi {
+        RestDartApi {
+            http: HttpClient::new(&cfg.server)
+                .with_key(&cfg.client_key)
+                .with_timeout(Duration::from_secs(60)),
+        }
+    }
+
+    pub fn from_addr(addr: &str, key: &str) -> RestDartApi {
+        Self::connect(&ServerConfig { server: addr.to_string(), client_key: key.to_string() })
+    }
+
+    /// `GET /health` — readiness probe.
+    pub fn health(&self) -> Result<bool> {
+        let resp = self.http.get("/health")?;
+        Ok(resp.status == 200)
+    }
+
+    /// `GET /metrics` — server-side metrics snapshot.
+    pub fn metrics(&self) -> Result<Json> {
+        let resp = self.http.get("/metrics")?;
+        resp.parse_json()
+    }
+
+    fn expect_ok(resp: crate::http::Response) -> Result<Json> {
+        let body = resp.parse_json().unwrap_or(Json::Null);
+        if resp.status >= 400 {
+            let msg = body
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("request failed")
+                .to_string();
+            return Err(FedError::Task(msg));
+        }
+        Ok(body)
+    }
+}
+
+impl DartApi for RestDartApi {
+    fn devices(&self) -> Result<Vec<DeviceInfo>> {
+        let body = Self::expect_ok(self.http.get("/clients")?)?;
+        let arr = body
+            .as_arr()
+            .ok_or_else(|| FedError::Http("expected array".into()))?;
+        Ok(arr
+            .iter()
+            .map(|d| DeviceInfo {
+                name: d
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                hardware: d
+                    .get("hardware")
+                    .map(HardwareConfig::from_json)
+                    .unwrap_or_default(),
+                alive: d.get("alive").and_then(Json::as_bool).unwrap_or(false),
+            })
+            .collect())
+    }
+
+    fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
+        let body = Self::expect_ok(self.http.post("/tasks", &task_spec_to_json(&spec))?)?;
+        body.need("task_id")?
+            .as_i64()
+            .map(|v| v as TaskId)
+            .ok_or_else(|| FedError::Http("bad task_id".into()))
+    }
+
+    fn status(&self, id: TaskId) -> Result<TaskStatus> {
+        let body = Self::expect_ok(self.http.get(&format!("/tasks/{id}/status"))?)?;
+        status_from_str(body.need("status")?.as_str().unwrap_or(""))
+    }
+
+    fn results(&self, id: TaskId) -> Result<Vec<TaskResult>> {
+        let body = Self::expect_ok(self.http.get(&format!("/tasks/{id}/results"))?)?;
+        let arr = body
+            .as_arr()
+            .ok_or_else(|| FedError::Http("expected array".into()))?;
+        arr.iter().map(task_result_from_json).collect()
+    }
+
+    fn stop_task(&self, id: TaskId) -> Result<()> {
+        Self::expect_ok(self.http.delete(&format!("/tasks/{id}"))?)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dart::client::{DartClient, DartClientConfig};
+    use crate::dart::server::{DartServer, DartServerConfig};
+    use crate::dart::TaskRegistry;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    /// Full production-path smoke test: aggregation side -> REST ->
+    /// DART-server -> TCP client -> result -> REST.
+    #[test]
+    fn rest_api_full_cycle() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let reg = TaskRegistry::new();
+        reg.register("inc", |p| {
+            Ok(Json::obj().set("v", p.need("v")?.as_f64().unwrap_or(0.0) + 1.0))
+        });
+        let _client = DartClient::spawn(
+            DartClientConfig::new("edge", &server.dart_addr().to_string(),
+                                  b"feddart-demo-key"),
+            reg,
+        );
+        let api = RestDartApi::from_addr(&server.rest_addr().to_string(), "000");
+        assert!(api.health().unwrap());
+
+        // wait for the edge client to appear through the REST view
+        let t0 = Instant::now();
+        while api.device_names().unwrap().is_empty() {
+            assert!(t0.elapsed() < Duration::from_secs(5));
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(api.device_names().unwrap(), vec!["edge".to_string()]);
+
+        let mut params = BTreeMap::new();
+        params.insert("edge".to_string(), Json::obj().set("v", 41.0));
+        let id = api.submit(TaskSpec::new("inc", params)).unwrap();
+
+        let t0 = Instant::now();
+        while api.status(id).unwrap() == TaskStatus::InProgress {
+            assert!(t0.elapsed() < Duration::from_secs(10));
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(api.status(id).unwrap(), TaskStatus::Finished);
+        let rs = api.results(id).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].device_name, "edge");
+        assert_eq!(rs[0].result.get("v").unwrap().as_f64(), Some(42.0));
+        assert!(rs[0].duration >= 0.0);
+
+        // metrics flowed
+        let m = api.metrics().unwrap();
+        assert!(m.get("counters").unwrap().get("rest.requests").is_some());
+    }
+
+    #[test]
+    fn submit_rejection_surfaces_as_error() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let api = RestDartApi::from_addr(&server.rest_addr().to_string(), "000");
+        let mut params = BTreeMap::new();
+        params.insert("ghost".to_string(), Json::Null);
+        let err = api.submit(TaskSpec::new("f", params)).unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+    }
+}

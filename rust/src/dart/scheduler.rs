@@ -1,0 +1,677 @@
+//! The DART-server's task scheduler.
+//!
+//! Server-centric FL (paper §2.1): the server decides which client executes
+//! which work.  A federated task addresses *named* clients (the
+//! parameterDict keys, §A.1); the scheduler splits it into per-client work
+//! units, tracks them through a [`TaskNet`] Petri net, enforces hardware
+//! requirements (the Task `check` function, §A.2), and re-queues units when
+//! a client disconnects mid-task — the GPI-Space fault-tolerance property
+//! ("a client can connect or disconnect at any time, without stopping the
+//! execution of the workflow").
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::config::HardwareConfig;
+use crate::dart::petri::TaskNet;
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::util::now_ms;
+
+/// Unique task identifier.
+pub type TaskId = u64;
+
+/// A connected worker (DART-client) as the scheduler sees it.
+#[derive(Debug, Clone)]
+pub struct WorkerInfo {
+    pub name: String,
+    pub hardware: HardwareConfig,
+    /// units this worker may run concurrently (cross-silo default 1)
+    pub capacity: usize,
+    pub inflight: usize,
+    pub alive: bool,
+    pub connected_ms: u64,
+    pub last_seen_ms: u64,
+}
+
+/// Specification of a federated task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// client-side function name (an `@feddart`-registered function)
+    pub function: String,
+    /// per-client parameters; keys are client names
+    pub params: BTreeMap<String, Json>,
+    /// minimum hardware each addressed client must have
+    pub requirements: HardwareConfig,
+    /// per-unit retry budget when a client is lost mid-unit
+    pub max_retries: u32,
+}
+
+impl TaskSpec {
+    pub fn new(function: &str, params: BTreeMap<String, Json>) -> TaskSpec {
+        TaskSpec {
+            function: function.to_string(),
+            params,
+            requirements: HardwareConfig::default(),
+            max_retries: 2,
+        }
+    }
+}
+
+/// One client's result for one task (paper §A.1 taskResult).
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub device_name: String,
+    /// seconds the client spent on the unit
+    pub duration: f64,
+    pub result: Json,
+}
+
+/// Lifecycle state of one per-client work unit.
+#[derive(Debug, Clone, PartialEq)]
+enum UnitState {
+    Queued { retries_left: u32 },
+    Running { worker: String, retries_left: u32 },
+    Done,
+    Failed { reason: String },
+}
+
+/// Aggregate task status exposed through the API (§A.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskStatus {
+    /// accepted, some units still queued/running
+    InProgress,
+    /// every unit finished successfully
+    Finished,
+    /// all units settled but at least one failed permanently
+    PartiallyFailed,
+    /// cancelled via stop_task
+    Stopped,
+}
+
+struct TaskState {
+    spec: TaskSpec,
+    net: TaskNet,
+    units: BTreeMap<String, UnitState>,
+    results: Vec<TaskResult>,
+    stopped: bool,
+    submitted_ms: u64,
+}
+
+/// A unit of work handed to a worker.
+#[derive(Debug, Clone)]
+pub struct WorkUnit {
+    pub task_id: TaskId,
+    pub function: String,
+    pub client: String,
+    pub params: Json,
+}
+
+/// The scheduler.  All methods are thread-safe.
+pub struct Scheduler {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    workers: BTreeMap<String, WorkerInfo>,
+    tasks: BTreeMap<TaskId, TaskState>,
+    /// FIFO of (task, client) units ready for dispatch
+    ready: VecDeque<(TaskId, String)>,
+    next_id: TaskId,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler {
+            inner: Mutex::new(Inner {
+                workers: BTreeMap::new(),
+                tasks: BTreeMap::new(),
+                ready: VecDeque::new(),
+                next_id: 1,
+            }),
+        }
+    }
+
+    // ------------------------------------------------------------- workers
+
+    /// Register (or re-register) a worker.  Re-registering a lost worker
+    /// marks it alive again.
+    pub fn add_worker(&self, name: &str, hardware: HardwareConfig, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let now = now_ms();
+        g.workers
+            .entry(name.to_string())
+            .and_modify(|w| {
+                w.alive = true;
+                w.hardware = hardware.clone();
+                w.last_seen_ms = now;
+            })
+            .or_insert(WorkerInfo {
+                name: name.to_string(),
+                hardware,
+                capacity: capacity.max(1),
+                inflight: 0,
+                alive: true,
+                connected_ms: now,
+                last_seen_ms: now,
+            });
+        log::info!(target: "dart::scheduler", "worker '{name}' connected");
+    }
+
+    /// Worker disconnected (or declared lost by heartbeat monitoring):
+    /// its running units are re-queued (or failed once retries exhaust).
+    pub fn remove_worker(&self, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = g.workers.get_mut(name) {
+            w.alive = false;
+            w.inflight = 0;
+        }
+        // re-queue everything this worker was running
+        let mut requeues: Vec<(TaskId, String, u32)> = Vec::new();
+        let mut failures: Vec<(TaskId, String)> = Vec::new();
+        for (&tid, task) in g.tasks.iter_mut() {
+            if task.stopped {
+                continue;
+            }
+            for (client, unit) in task.units.iter_mut() {
+                if let UnitState::Running { worker, retries_left } = unit {
+                    if worker == name {
+                        if *retries_left > 0 {
+                            let r = *retries_left - 1;
+                            *unit = UnitState::Queued { retries_left: r };
+                            task.net.requeue().ok();
+                            requeues.push((tid, client.clone(), r));
+                        } else {
+                            *unit = UnitState::Failed {
+                                reason: format!("worker '{name}' lost, retries exhausted"),
+                            };
+                            task.net.fail().ok();
+                            failures.push((tid, client.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        for (tid, client, r) in requeues {
+            log::warn!(target: "dart::scheduler",
+                "task {tid} unit '{client}' re-queued after loss of '{name}' ({r} retries left)");
+            g.ready.push_back((tid, client));
+        }
+        for (tid, client) in failures {
+            log::error!(target: "dart::scheduler",
+                "task {tid} unit '{client}' failed permanently after loss of '{name}'");
+        }
+    }
+
+    /// Heartbeat from a worker.
+    pub fn heartbeat(&self, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = g.workers.get_mut(name) {
+            w.last_seen_ms = now_ms();
+            w.alive = true;
+        }
+    }
+
+    /// Declare workers lost whose last heartbeat is older than `timeout_ms`.
+    /// Returns the names declared lost.
+    pub fn reap_stale_workers(&self, timeout_ms: u64) -> Vec<String> {
+        let stale: Vec<String> = {
+            let g = self.inner.lock().unwrap();
+            let now = now_ms();
+            g.workers
+                .values()
+                .filter(|w| w.alive && now.saturating_sub(w.last_seen_ms) > timeout_ms)
+                .map(|w| w.name.clone())
+                .collect()
+        };
+        for name in &stale {
+            log::warn!(target: "dart::scheduler", "worker '{name}' missed heartbeats; declaring lost");
+            self.remove_worker(name);
+        }
+        stale
+    }
+
+    pub fn workers(&self) -> Vec<WorkerInfo> {
+        self.inner.lock().unwrap().workers.values().cloned().collect()
+    }
+
+    pub fn alive_workers(&self) -> Vec<WorkerInfo> {
+        self.inner
+            .lock()
+            .unwrap()
+            .workers
+            .values()
+            .filter(|w| w.alive)
+            .cloned()
+            .collect()
+    }
+
+    // --------------------------------------------------------------- tasks
+
+    /// Submit a task.  Rejects (the Selector's accept/reject, §A.2) if any
+    /// addressed client is unknown, dead, or fails the hardware check.
+    pub fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
+        let mut g = self.inner.lock().unwrap();
+        if spec.params.is_empty() {
+            return Err(FedError::Task("task addresses no clients".into()));
+        }
+        for client in spec.params.keys() {
+            match g.workers.get(client) {
+                None => {
+                    return Err(FedError::Task(format!(
+                        "unknown client '{client}'"
+                    )))
+                }
+                Some(w) if !w.alive => {
+                    return Err(FedError::Task(format!(
+                        "client '{client}' is not connected"
+                    )))
+                }
+                Some(w) if !w.hardware.satisfies(&spec.requirements) => {
+                    return Err(FedError::Task(format!(
+                        "client '{client}' fails hardware requirement check"
+                    )))
+                }
+                Some(_) => {}
+            }
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        let clients: Vec<String> = spec.params.keys().cloned().collect();
+        let units = clients
+            .iter()
+            .map(|c| {
+                (
+                    c.clone(),
+                    UnitState::Queued { retries_left: spec.max_retries },
+                )
+            })
+            .collect();
+        let net = TaskNet::new(clients.len());
+        g.tasks.insert(
+            id,
+            TaskState {
+                spec,
+                net,
+                units,
+                results: Vec::new(),
+                stopped: false,
+                submitted_ms: now_ms(),
+            },
+        );
+        for c in clients {
+            g.ready.push_back((id, c));
+        }
+        log::info!(target: "dart::scheduler", "task {id} accepted");
+        Ok(id)
+    }
+
+    /// Pull the next unit for `worker` (a unit is only dispatched to the
+    /// client it addresses).  Returns `None` when nothing is ready.
+    pub fn next_unit(&self, worker: &str) -> Option<WorkUnit> {
+        let mut g = self.inner.lock().unwrap();
+        let w = g.workers.get(worker)?;
+        if !w.alive || w.inflight >= w.capacity {
+            return None;
+        }
+        // find the first ready unit addressed to this worker
+        let pos = g
+            .ready
+            .iter()
+            .position(|(tid, client)| {
+                client == worker
+                    && g.tasks
+                        .get(tid)
+                        .map(|t| !t.stopped)
+                        .unwrap_or(false)
+            })?;
+        let (tid, client) = g.ready.remove(pos).unwrap();
+        let task = g.tasks.get_mut(&tid).unwrap();
+        let retries = match task.units.get(&client) {
+            Some(UnitState::Queued { retries_left }) => *retries_left,
+            _ => return None, // raced with stop/removal
+        };
+        task.units.insert(
+            client.clone(),
+            UnitState::Running { worker: worker.to_string(), retries_left: retries },
+        );
+        task.net.assign().ok();
+        let params = task.spec.params.get(&client).cloned().unwrap_or(Json::Null);
+        let function = task.spec.function.clone();
+        g.workers.get_mut(worker).unwrap().inflight += 1;
+        Some(WorkUnit { task_id: tid, function, client, params })
+    }
+
+    /// Worker reports a successful unit result.
+    pub fn complete_unit(
+        &self,
+        task_id: TaskId,
+        client: &str,
+        duration: f64,
+        result: Json,
+    ) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        // decrement inflight for whichever worker ran it
+        let task = g
+            .tasks
+            .get_mut(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        let worker = match task.units.get(client) {
+            Some(UnitState::Running { worker, .. }) => worker.clone(),
+            other => {
+                return Err(FedError::Task(format!(
+                    "unit '{client}' of task {task_id} not running ({other:?})"
+                )))
+            }
+        };
+        task.units.insert(client.to_string(), UnitState::Done);
+        task.net.complete().ok();
+        task.results.push(TaskResult {
+            device_name: client.to_string(),
+            duration,
+            result,
+        });
+        if let Some(w) = g.workers.get_mut(&worker) {
+            w.inflight = w.inflight.saturating_sub(1);
+        }
+        Ok(())
+    }
+
+    /// Worker reports a unit error (the function itself failed — counts as a
+    /// permanent failure for that client, no retry).
+    pub fn fail_unit(&self, task_id: TaskId, client: &str, reason: &str) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get_mut(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        let worker = match task.units.get(client) {
+            Some(UnitState::Running { worker, .. }) => worker.clone(),
+            _ => String::new(),
+        };
+        task.units.insert(
+            client.to_string(),
+            UnitState::Failed { reason: reason.to_string() },
+        );
+        task.net.fail().ok();
+        if let Some(w) = g.workers.get_mut(&worker) {
+            w.inflight = w.inflight.saturating_sub(1);
+        }
+        log::error!(target: "dart::scheduler",
+            "task {task_id} unit '{client}' failed: {reason}");
+        Ok(())
+    }
+
+    /// Current aggregate status.
+    pub fn status(&self, task_id: TaskId) -> Result<TaskStatus> {
+        let g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        if task.stopped {
+            return Ok(TaskStatus::Stopped);
+        }
+        let mut any_failed = false;
+        for u in task.units.values() {
+            match u {
+                UnitState::Queued { .. } | UnitState::Running { .. } => {
+                    return Ok(TaskStatus::InProgress)
+                }
+                UnitState::Failed { .. } => any_failed = true,
+                UnitState::Done => {}
+            }
+        }
+        Ok(if any_failed {
+            TaskStatus::PartiallyFailed
+        } else {
+            TaskStatus::Finished
+        })
+    }
+
+    /// Results available *so far* — Fed-DART is non-blocking: "there is no
+    /// need to wait until all participating clients have finished" (§A.1).
+    pub fn results(&self, task_id: TaskId) -> Result<Vec<TaskResult>> {
+        let g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        Ok(task.results.clone())
+    }
+
+    /// Cancel a task: queued units are dropped, running units' results will
+    /// be ignored.
+    pub fn stop_task(&self, task_id: TaskId) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get_mut(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        task.stopped = true;
+        g.ready.retain(|(tid, _)| *tid != task_id);
+        Ok(())
+    }
+
+    /// Age of a task in milliseconds (observability).
+    pub fn task_age_ms(&self, task_id: TaskId) -> Result<u64> {
+        let g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        Ok(now_ms().saturating_sub(task.submitted_ms))
+    }
+
+    /// Number of tasks tracked (observability).
+    pub fn task_count(&self) -> usize {
+        self.inner.lock().unwrap().tasks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::default()
+    }
+
+    fn spec_for(clients: &[&str]) -> TaskSpec {
+        let params = clients
+            .iter()
+            .map(|c| (c.to_string(), Json::obj().set("x", 1)))
+            .collect();
+        TaskSpec::new("learn", params)
+    }
+
+    #[test]
+    fn happy_path_two_clients() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 1);
+        s.add_worker("b", hw(), 1);
+        let tid = s.submit(spec_for(&["a", "b"])).unwrap();
+        assert_eq!(s.status(tid).unwrap(), TaskStatus::InProgress);
+
+        let ua = s.next_unit("a").unwrap();
+        assert_eq!(ua.client, "a");
+        assert_eq!(ua.function, "learn");
+        // capacity 1: no second unit for the same worker
+        assert!(s.next_unit("a").is_none());
+        let ub = s.next_unit("b").unwrap();
+
+        s.complete_unit(tid, &ua.client, 0.5, Json::obj().set("loss", 1.0)).unwrap();
+        assert_eq!(s.status(tid).unwrap(), TaskStatus::InProgress);
+        assert_eq!(s.results(tid).unwrap().len(), 1); // partial results visible
+        s.complete_unit(tid, &ub.client, 0.7, Json::obj().set("loss", 2.0)).unwrap();
+        assert_eq!(s.status(tid).unwrap(), TaskStatus::Finished);
+        let rs = s.results(tid).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert!(rs.iter().any(|r| r.device_name == "a" && r.duration == 0.5));
+    }
+
+    #[test]
+    fn submit_rejects_unknown_or_dead_or_weak_clients() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 1);
+        assert!(s.submit(spec_for(&["ghost"])).is_err());
+
+        s.remove_worker("a");
+        assert!(s.submit(spec_for(&["a"])).is_err());
+
+        s.add_worker("a", hw(), 1); // reconnect
+        let mut spec = spec_for(&["a"]);
+        spec.requirements = HardwareConfig { cpus: 64, mem_gb: 1, accelerator: "none".into() };
+        assert!(s.submit(spec).is_err());
+
+        assert!(s.submit(TaskSpec::new("f", BTreeMap::new())).is_err());
+    }
+
+    #[test]
+    fn worker_loss_requeues_then_fails() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 1);
+        let mut spec = spec_for(&["a"]);
+        spec.max_retries = 1;
+        let tid = s.submit(spec).unwrap();
+
+        let u = s.next_unit("a").unwrap();
+        s.remove_worker("a"); // lost mid-unit -> requeue (1 retry)
+        assert_eq!(s.status(tid).unwrap(), TaskStatus::InProgress);
+
+        s.add_worker("a", hw(), 1); // rejoins
+        let u2 = s.next_unit("a").unwrap();
+        assert_eq!(u2.client, u.client);
+        s.remove_worker("a"); // lost again -> retries exhausted -> failed
+        assert_eq!(s.status(tid).unwrap(), TaskStatus::PartiallyFailed);
+    }
+
+    #[test]
+    fn function_error_is_permanent() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 1);
+        let tid = s.submit(spec_for(&["a"])).unwrap();
+        let u = s.next_unit("a").unwrap();
+        s.fail_unit(tid, &u.client, "oom").unwrap();
+        assert_eq!(s.status(tid).unwrap(), TaskStatus::PartiallyFailed);
+        assert!(s.results(tid).unwrap().is_empty());
+    }
+
+    #[test]
+    fn stop_task_drops_queued_units() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 1);
+        s.add_worker("b", hw(), 1);
+        let tid = s.submit(spec_for(&["a", "b"])).unwrap();
+        let _ua = s.next_unit("a").unwrap();
+        s.stop_task(tid).unwrap();
+        assert_eq!(s.status(tid).unwrap(), TaskStatus::Stopped);
+        assert!(s.next_unit("b").is_none());
+    }
+
+    #[test]
+    fn heartbeat_reaping() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 1);
+        // fresh heartbeat: not reaped
+        assert!(s.reap_stale_workers(10_000).is_empty());
+        // ancient heartbeat: simulate by reaping with timeout 0 after a sleep
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let lost = s.reap_stale_workers(0);
+        assert_eq!(lost, vec!["a".to_string()]);
+        assert!(s.alive_workers().is_empty());
+        // rejoin restores
+        s.add_worker("a", hw(), 1);
+        assert_eq!(s.alive_workers().len(), 1);
+    }
+
+    #[test]
+    fn units_only_dispatch_to_addressed_client() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 4);
+        s.add_worker("b", hw(), 4);
+        let tid = s.submit(spec_for(&["a"])).unwrap();
+        assert!(s.next_unit("b").is_none());
+        let u = s.next_unit("a").unwrap();
+        assert_eq!(u.task_id, tid);
+    }
+
+    #[test]
+    fn multiple_tasks_interleave() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 2);
+        let t1 = s.submit(spec_for(&["a"])).unwrap();
+        let t2 = s.submit(spec_for(&["a"])).unwrap();
+        let u1 = s.next_unit("a").unwrap();
+        let u2 = s.next_unit("a").unwrap();
+        assert_ne!(u1.task_id, u2.task_id);
+        s.complete_unit(t1, "a", 0.1, Json::Null).unwrap();
+        s.complete_unit(t2, "a", 0.1, Json::Null).unwrap();
+        assert_eq!(s.status(t1).unwrap(), TaskStatus::Finished);
+        assert_eq!(s.status(t2).unwrap(), TaskStatus::Finished);
+    }
+
+    /// Property: under random worker churn every submitted unit eventually
+    /// settles (done or failed), and no unit is ever dispatched to a worker
+    /// that does not match its addressed client.
+    #[test]
+    fn property_settles_under_churn() {
+        let mut rng = Rng::new(42);
+        for trial in 0..20 {
+            let s = Scheduler::new();
+            let names: Vec<String> = (0..4).map(|i| format!("w{i}")).collect();
+            for n in &names {
+                s.add_worker(n, hw(), 1);
+            }
+            let mut spec = spec_for(&names.iter().map(String::as_str).collect::<Vec<_>>());
+            spec.max_retries = 50;
+            let tid = s.submit(spec).unwrap();
+
+            let mut alive: Vec<bool> = vec![true; names.len()];
+            for _step in 0..2000 {
+                if s.status(tid).unwrap() != TaskStatus::InProgress {
+                    break;
+                }
+                let i = rng.below(names.len());
+                match rng.below(10) {
+                    0 => {
+                        if alive[i] {
+                            s.remove_worker(&names[i]);
+                            alive[i] = false;
+                        } else {
+                            s.add_worker(&names[i], hw(), 1);
+                            alive[i] = true;
+                        }
+                    }
+                    _ => {
+                        if alive[i] {
+                            if let Some(u) = s.next_unit(&names[i]) {
+                                assert_eq!(u.client, names[i], "misrouted unit");
+                                // 80%: complete; 20%: worker dies mid-unit
+                                if rng.chance(0.8) {
+                                    s.complete_unit(u.task_id, &u.client, 0.0, Json::Null)
+                                        .unwrap();
+                                } else {
+                                    s.remove_worker(&names[i]);
+                                    alive[i] = false;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            let st = s.status(tid).unwrap();
+            assert!(
+                st == TaskStatus::Finished || st == TaskStatus::PartiallyFailed,
+                "trial {trial}: task stuck at {st:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,471 @@
+//! The DART-server: accepts DART-client connections over the authenticated
+//! transport and exposes the https-server REST-API to the aggregation
+//! component (paper §2.1.1, Figure 2).
+//!
+//! Layout mirrors the paper's server component: "A https-server handles the
+//! communication with the aggregation component over a REST-API.
+//! Furthermore, the https-server has an interface to manage the
+//! communication with DART. The server component of DART (DART-Server)
+//! orchestrates the clients and schedules the tasks to them."
+//!
+//! REST surface:
+//! * `GET  /health`              → `{"ok": true}`
+//! * `GET  /clients`             → `[{name, hardware, alive}]`
+//! * `POST /tasks`               → submit; `{"task_id": n}` or 409
+//! * `GET  /tasks/{id}/status`   → `{"status": "..."}`
+//! * `GET  /tasks/{id}/results`  → `[taskResult]` (partial ok)
+//! * `DELETE /tasks/{id}`        → stop task
+//! * `GET  /metrics`             → metrics registry snapshot
+//! * `GET  /logs?n=100`          → LogServer tail
+//!
+//! All REST requests must carry the configured `x-client-key` header
+//! (the paper's `client_key`, Listing 2).
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::HardwareConfig;
+use crate::dart::protocol::{
+    status_to_str, task_result_to_json, ClientMsg, ServerMsg,
+};
+use crate::dart::scheduler::{Scheduler, TaskSpec};
+use crate::dart::transport::{recv_json, send_json};
+use crate::error::{FedError, Result};
+use crate::http::server::{Handler, HttpServer};
+use crate::http::{Request, Response};
+use crate::json::Json;
+use crate::metrics::logserver::LogServer;
+use crate::metrics::Registry;
+
+/// Default heartbeat timeout before a client is declared lost.
+pub const HEARTBEAT_TIMEOUT_MS: u64 = 3_000;
+
+/// A running DART-server.
+pub struct DartServer {
+    scheduler: Arc<Scheduler>,
+    metrics: Registry,
+    rest: HttpServer,
+    dart_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+/// Server configuration.
+pub struct DartServerConfig {
+    /// bind address for DART-client connections (framed TCP)
+    pub dart_addr: String,
+    /// bind address for the REST-API
+    pub rest_addr: String,
+    /// shared transport key (the SSH-key role)
+    pub transport_key: Vec<u8>,
+    /// REST `x-client-key`
+    pub rest_key: String,
+    pub heartbeat_timeout_ms: u64,
+}
+
+impl Default for DartServerConfig {
+    fn default() -> Self {
+        DartServerConfig {
+            dart_addr: "127.0.0.1:0".into(),
+            rest_addr: "127.0.0.1:0".into(),
+            transport_key: b"feddart-demo-key".to_vec(),
+            rest_key: "000".into(),
+            heartbeat_timeout_ms: HEARTBEAT_TIMEOUT_MS,
+        }
+    }
+}
+
+impl DartServer {
+    /// Start the server (both listeners + the heartbeat reaper).
+    pub fn start(cfg: DartServerConfig) -> Result<DartServer> {
+        let scheduler = Arc::new(Scheduler::new());
+        let metrics = Registry::new();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // --- DART transport listener ---
+        let listener = TcpListener::bind(&cfg.dart_addr)?;
+        let dart_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let key = Arc::new(cfg.transport_key.clone());
+        let mut threads = Vec::new();
+        {
+            let scheduler = Arc::clone(&scheduler);
+            let stop = Arc::clone(&stop);
+            let metrics = metrics.clone();
+            let key = Arc::clone(&key);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("feddart-dart-accept".into())
+                    .spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            match listener.accept() {
+                                Ok((stream, peer)) => {
+                                    let scheduler = Arc::clone(&scheduler);
+                                    let key = Arc::clone(&key);
+                                    let metrics = metrics.clone();
+                                    std::thread::spawn(move || {
+                                        if let Err(e) = serve_client(
+                                            stream, peer, &scheduler, &key, &metrics,
+                                        ) {
+                                            log::debug!(target: "dart::server",
+                                                "client conn {peer} ended: {e}");
+                                        }
+                                    });
+                                }
+                                Err(e)
+                                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                                {
+                                    std::thread::sleep(Duration::from_millis(5));
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                    })
+                    .expect("spawn dart accept loop"),
+            );
+        }
+
+        // --- heartbeat reaper ---
+        {
+            let scheduler = Arc::clone(&scheduler);
+            let stop = Arc::clone(&stop);
+            let metrics = metrics.clone();
+            let timeout = cfg.heartbeat_timeout_ms;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("feddart-reaper".into())
+                    .spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            let lost = scheduler.reap_stale_workers(timeout);
+                            if !lost.is_empty() {
+                                metrics
+                                    .counter("dart.clients_lost")
+                                    .add(lost.len() as u64);
+                            }
+                            std::thread::sleep(Duration::from_millis(
+                                (timeout / 4).max(10),
+                            ));
+                        }
+                    })
+                    .expect("spawn reaper"),
+            );
+        }
+
+        // --- REST-API (the https-server role) ---
+        let rest = HttpServer::serve(
+            &cfg.rest_addr,
+            Arc::new(RestHandler {
+                scheduler: Arc::clone(&scheduler),
+                metrics: metrics.clone(),
+                key: cfg.rest_key.clone(),
+            }),
+        )?;
+
+        log::info!(target: "dart::server",
+            "DART-server up: dart={dart_addr} rest={}", rest.addr());
+        Ok(DartServer { scheduler, metrics, rest, dart_addr, stop, threads })
+    }
+
+    pub fn dart_addr(&self) -> SocketAddr {
+        self.dart_addr
+    }
+
+    pub fn rest_addr(&self) -> SocketAddr {
+        self.rest.addr()
+    }
+
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.scheduler
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.rest.shutdown();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for DartServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-connection loop for one DART-client.
+fn serve_client(
+    stream: TcpStream,
+    peer: SocketAddr,
+    scheduler: &Scheduler,
+    key: &[u8],
+    metrics: &Registry,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    // First frame must be a Hello; a wrong transport key fails MAC here.
+    let hello = recv_json(&mut reader, key)?;
+    let (name, hardware, capacity) = match ClientMsg::from_json(&hello)? {
+        ClientMsg::Hello { name, hardware, capacity } => (name, hardware, capacity),
+        other => {
+            send_json(&mut writer, key,
+                &ServerMsg::Deny { reason: format!("expected hello, got {other:?}") }
+                    .to_json())?;
+            return Err(FedError::Transport("protocol violation".into()));
+        }
+    };
+    scheduler.add_worker(&name, hardware, capacity);
+    metrics.counter("dart.clients_connected").inc();
+    send_json(&mut writer, key,
+        &ServerMsg::Welcome { server_name: "feddart".into() }.to_json())?;
+    log::info!(target: "dart::server", "client '{name}' joined from {peer}");
+
+    loop {
+        let msg = match recv_json(&mut reader, key) {
+            Ok(j) => ClientMsg::from_json(&j)?,
+            Err(_) => {
+                // disconnect (EOF, timeout, bad frame): mark lost
+                scheduler.remove_worker(&name);
+                log::warn!(target: "dart::server", "client '{name}' disconnected");
+                return Ok(());
+            }
+        };
+        match msg {
+            ClientMsg::Poll => {
+                scheduler.heartbeat(&name);
+                let reply = match scheduler.next_unit(&name) {
+                    Some(u) => {
+                        metrics.counter("dart.units_dispatched").inc();
+                        ServerMsg::assign_from_unit(&u)
+                    }
+                    None => ServerMsg::Idle,
+                };
+                send_json(&mut writer, key, &reply.to_json())?;
+            }
+            ClientMsg::Heartbeat => {
+                scheduler.heartbeat(&name);
+                send_json(&mut writer, key, &ServerMsg::Ack.to_json())?;
+            }
+            ClientMsg::Result { task_id, client, duration, result } => {
+                metrics.counter("dart.units_completed").inc();
+                let _ = scheduler.complete_unit(task_id, &client, duration, result);
+                send_json(&mut writer, key, &ServerMsg::Ack.to_json())?;
+            }
+            ClientMsg::Error { task_id, client, reason } => {
+                metrics.counter("dart.units_failed").inc();
+                let _ = scheduler.fail_unit(task_id, &client, &reason);
+                send_json(&mut writer, key, &ServerMsg::Ack.to_json())?;
+            }
+            ClientMsg::Bye => {
+                scheduler.remove_worker(&name);
+                send_json(&mut writer, key, &ServerMsg::Ack.to_json())?;
+                log::info!(target: "dart::server", "client '{name}' left");
+                return Ok(());
+            }
+            ClientMsg::Hello { .. } => {
+                send_json(&mut writer, key,
+                    &ServerMsg::Deny { reason: "already joined".into() }.to_json())?;
+            }
+        }
+    }
+}
+
+/// REST-API handler (the https-server role).
+struct RestHandler {
+    scheduler: Arc<Scheduler>,
+    metrics: Registry,
+    key: String,
+}
+
+impl Handler for RestHandler {
+    fn handle(&self, req: Request) -> Response {
+        // authentication: the paper's client_key
+        if req.headers.get("x-client-key").map(String::as_str) != Some(self.key.as_str())
+        {
+            return Response::error(401, "missing or wrong x-client-key");
+        }
+        self.metrics.counter("rest.requests").inc();
+        match self.route(&req) {
+            Ok(resp) => resp,
+            Err(e) => Response::error(409, &e.to_string()),
+        }
+    }
+}
+
+impl RestHandler {
+    fn route(&self, req: &Request) -> Result<Response> {
+        let segs = req.segments();
+        match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["health"]) => Ok(Response::ok_json(&Json::obj().set("ok", true))),
+            ("GET", ["clients"]) => {
+                let devices: Vec<Json> = self
+                    .scheduler
+                    .workers()
+                    .into_iter()
+                    .map(|w| {
+                        Json::obj()
+                            .set("name", w.name.as_str())
+                            .set("hardware", w.hardware.to_json())
+                            .set("alive", w.alive)
+                    })
+                    .collect();
+                Ok(Response::ok_json(&Json::Arr(devices)))
+            }
+            ("POST", ["tasks"]) => {
+                let body = req.json()?;
+                let spec = task_spec_from_json(&body)?;
+                let id = self.scheduler.submit(spec)?;
+                Ok(Response::json(201, &Json::obj().set("task_id", id)))
+            }
+            ("GET", ["tasks", id, "status"]) => {
+                let id = parse_id(id)?;
+                let st = self.scheduler.status(id)?;
+                Ok(Response::ok_json(
+                    &Json::obj().set("status", status_to_str(st)),
+                ))
+            }
+            ("GET", ["tasks", id, "results"]) => {
+                let id = parse_id(id)?;
+                let rs = self.scheduler.results(id)?;
+                Ok(Response::ok_json(&Json::Arr(
+                    rs.iter().map(task_result_to_json).collect(),
+                )))
+            }
+            ("DELETE", ["tasks", id]) => {
+                let id = parse_id(id)?;
+                self.scheduler.stop_task(id)?;
+                Ok(Response::ok_json(&Json::obj().set("stopped", true)))
+            }
+            ("GET", ["metrics"]) => Ok(Response::ok_json(&self.metrics.snapshot())),
+            ("GET", ["logs"]) => {
+                let n = req
+                    .query
+                    .get("n")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(100usize);
+                let j = LogServer::get()
+                    .map(|ls| ls.snapshot(n))
+                    .unwrap_or(Json::Arr(vec![]));
+                Ok(Response::ok_json(&j))
+            }
+            _ => Ok(Response::error(404, "no such endpoint")),
+        }
+    }
+}
+
+fn parse_id(s: &str) -> Result<u64> {
+    s.parse()
+        .map_err(|_| FedError::Http(format!("bad task id '{s}'")))
+}
+
+/// Deserialize a task spec from the REST body.
+pub fn task_spec_from_json(j: &Json) -> Result<TaskSpec> {
+    let function = j
+        .need("function")?
+        .as_str()
+        .ok_or_else(|| FedError::Task("'function' must be a string".into()))?
+        .to_string();
+    let mut params = BTreeMap::new();
+    if let Some(obj) = j.need("params")?.as_obj() {
+        for (k, v) in obj {
+            params.insert(k.clone(), v.clone());
+        }
+    }
+    let requirements = j
+        .get("requirements")
+        .map(HardwareConfig::from_json)
+        .unwrap_or_default();
+    let max_retries = j
+        .get("max_retries")
+        .and_then(Json::as_usize)
+        .unwrap_or(2) as u32;
+    Ok(TaskSpec { function, params, requirements, max_retries })
+}
+
+/// Serialize a task spec into the REST body format.
+pub fn task_spec_to_json(spec: &TaskSpec) -> Json {
+    let mut params = Json::obj();
+    for (k, v) in &spec.params {
+        params = params.set(k, v.clone());
+    }
+    Json::obj()
+        .set("function", spec.function.as_str())
+        .set("params", params)
+        .set("requirements", spec.requirements.to_json())
+        .set("max_retries", spec.max_retries as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::client::HttpClient;
+
+    #[test]
+    fn rest_requires_key() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let addr = server.rest_addr().to_string();
+        let no_key = HttpClient::new(&addr);
+        assert_eq!(no_key.get("/health").unwrap().status, 401);
+        let with_key = HttpClient::new(&addr).with_key("000");
+        assert_eq!(with_key.get("/health").unwrap().status, 200);
+        let wrong = HttpClient::new(&addr).with_key("999");
+        assert_eq!(wrong.get("/health").unwrap().status, 401);
+    }
+
+    #[test]
+    fn rest_unknown_endpoint_404() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+        assert_eq!(c.get("/nope").unwrap().status, 404);
+    }
+
+    #[test]
+    fn rest_submit_rejects_unknown_client() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+        let body = Json::obj()
+            .set("function", "learn")
+            .set("params", Json::obj().set("ghost", Json::obj()));
+        let resp = c.post("/tasks", &body).unwrap();
+        assert_eq!(resp.status, 409);
+        let err = resp.parse_json().unwrap();
+        assert!(err.get("error").unwrap().as_str().unwrap().contains("ghost"));
+    }
+
+    #[test]
+    fn task_spec_json_roundtrip() {
+        let mut params = BTreeMap::new();
+        params.insert("a".to_string(), Json::obj().set("lr", 0.1));
+        let spec = TaskSpec {
+            function: "learn".into(),
+            params,
+            requirements: HardwareConfig { cpus: 2, mem_gb: 4, accelerator: "none".into() },
+            max_retries: 5,
+        };
+        let j = task_spec_to_json(&spec);
+        let back = task_spec_from_json(&j).unwrap();
+        assert_eq!(back.function, "learn");
+        assert_eq!(back.max_retries, 5);
+        assert_eq!(back.requirements.cpus, 2);
+        assert_eq!(back.params["a"].get("lr").unwrap().as_f64(), Some(0.1));
+    }
+
+    #[test]
+    fn bad_task_id_is_http_error() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+        assert_eq!(c.get("/tasks/abc/status").unwrap().status, 409);
+        assert_eq!(c.get("/tasks/999/status").unwrap().status, 409);
+    }
+}

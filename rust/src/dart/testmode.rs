@@ -1,0 +1,357 @@
+//! Test mode — the paper's local simulation backend.
+//!
+//! "For simulating FL on a local system before implementing it as
+//! distributed system, the test mode of WorkflowManager can be activated.
+//! In this mode a DART-Server together with DART-clients are simulated
+//! locally" (§2.1.1); "the test mode has the same workflow as the
+//! production mode so the conversion to a production system is then just a
+//! matter of configuration changes" (§3).
+//!
+//! Parity is engineered, not asserted: test mode drives the *same*
+//! [`Scheduler`] (accept/reject, Petri-net lifecycle, re-queue) as the real
+//! [`super::server::DartServer`]; only the transport (in-process worker
+//! threads vs authenticated TCP) differs.  E6 measures the remaining
+//! numeric gap (zero, for deterministic workloads).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::HardwareConfig;
+use crate::dart::faults::{FaultAction, FaultInjector};
+use crate::dart::scheduler::{Scheduler, TaskId, TaskResult, TaskSpec, TaskStatus};
+use crate::dart::{DartApi, DeviceInfo, TaskRegistry};
+use crate::error::Result;
+
+/// Configuration of one simulated client.
+pub struct SimClient {
+    pub name: String,
+    pub hardware: HardwareConfig,
+    pub faults: FaultInjector,
+}
+
+impl SimClient {
+    pub fn reliable(name: &str) -> SimClient {
+        SimClient {
+            name: name.to_string(),
+            hardware: HardwareConfig::default(),
+            faults: FaultInjector::none(),
+        }
+    }
+}
+
+/// The simulated DART backend.
+///
+/// `parallelism = 1` reproduces the paper's "sequential manner on the local
+/// machine"; higher values execute clients concurrently (useful for the
+/// scalability benches where client compute is the bottleneck).
+pub struct TestModeDart {
+    scheduler: Arc<Scheduler>,
+    stop: Arc<AtomicBool>,
+    dispatchers: Vec<JoinHandle<()>>,
+}
+
+impl TestModeDart {
+    /// Start the simulation with the given clients, all sharing one task
+    /// registry (as real deployments share the client script).
+    pub fn start(
+        clients: Vec<SimClient>,
+        registry: TaskRegistry,
+        parallelism: usize,
+    ) -> TestModeDart {
+        let scheduler = Arc::new(Scheduler::new());
+        for c in &clients {
+            scheduler.add_worker(&c.name, c.hardware.clone(), 1);
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared: Arc<Vec<SimClient>> = Arc::new(clients);
+        let nthreads = parallelism.max(1);
+        // Partition clients across dispatcher threads round-robin so that a
+        // straggling client never blocks clients owned by other threads.
+        let dispatchers = (0..nthreads)
+            .map(|t| {
+                let scheduler = Arc::clone(&scheduler);
+                let stop = Arc::clone(&stop);
+                let clients = Arc::clone(&shared);
+                let registry = registry.clone();
+                std::thread::Builder::new()
+                    .name(format!("feddart-sim-{t}"))
+                    .spawn(move || {
+                        dispatcher_loop(t, nthreads, &clients, &scheduler, &registry, &stop)
+                    })
+                    .expect("spawn sim dispatcher")
+            })
+            .collect();
+        TestModeDart { scheduler, stop, dispatchers }
+    }
+
+    /// Convenience: `n` reliable clients named `client-0..n`.
+    pub fn start_reliable(n: usize, registry: TaskRegistry, parallelism: usize) -> TestModeDart {
+        let clients = (0..n)
+            .map(|i| SimClient::reliable(&format!("client-{i}")))
+            .collect();
+        Self::start(clients, registry, parallelism)
+    }
+
+    /// Direct scheduler access (examples/benches inspect internal state).
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.scheduler
+    }
+
+    /// Block until `id` leaves `InProgress` or `timeout` elapses.
+    pub fn wait(&self, id: TaskId, timeout: Duration) -> Result<TaskStatus> {
+        let t0 = Instant::now();
+        loop {
+            let st = self.status(id)?;
+            if st != TaskStatus::InProgress || t0.elapsed() > timeout {
+                return Ok(st);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for d in self.dispatchers.drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for TestModeDart {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn dispatcher_loop(
+    thread_idx: usize,
+    nthreads: usize,
+    clients: &[SimClient],
+    scheduler: &Scheduler,
+    registry: &TaskRegistry,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        let mut did_work = false;
+        for (i, c) in clients.iter().enumerate() {
+            if i % nthreads != thread_idx {
+                continue;
+            }
+            if let Some(unit) = scheduler.next_unit(&c.name) {
+                did_work = true;
+                match c.faults.next_action() {
+                    FaultAction::DropBefore => {
+                        // client vanishes; heartbeat monitoring requeues,
+                        // then the client "rejoins" (next loop iteration)
+                        scheduler.remove_worker(&c.name);
+                        scheduler.add_worker(&c.name, c.hardware.clone(), 1);
+                    }
+                    FaultAction::Proceed { delay, crash_after } => {
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        let t0 = Instant::now();
+                        let outcome =
+                            registry.call_as(&unit.client, &unit.function, &unit.params);
+                        let wall = c.faults.straggle(t0.elapsed());
+                        if wall > t0.elapsed() {
+                            std::thread::sleep(wall - t0.elapsed());
+                        }
+                        if crash_after {
+                            scheduler.remove_worker(&c.name);
+                            scheduler.add_worker(&c.name, c.hardware.clone(), 1);
+                        } else {
+                            match outcome {
+                                Ok(result) => {
+                                    let _ = scheduler.complete_unit(
+                                        unit.task_id,
+                                        &unit.client,
+                                        wall.as_secs_f64(),
+                                        result,
+                                    );
+                                }
+                                Err(e) => {
+                                    let _ = scheduler.fail_unit(
+                                        unit.task_id,
+                                        &unit.client,
+                                        &e.to_string(),
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !did_work {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+impl DartApi for TestModeDart {
+    fn devices(&self) -> Result<Vec<DeviceInfo>> {
+        Ok(self
+            .scheduler
+            .workers()
+            .into_iter()
+            .map(|w| DeviceInfo { name: w.name, hardware: w.hardware, alive: w.alive })
+            .collect())
+    }
+
+    fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
+        self.scheduler.submit(spec)
+    }
+
+    fn status(&self, id: TaskId) -> Result<TaskStatus> {
+        self.scheduler.status(id)
+    }
+
+    fn results(&self, id: TaskId) -> Result<Vec<TaskResult>> {
+        self.scheduler.results(id)
+    }
+
+    fn stop_task(&self, id: TaskId) -> Result<()> {
+        self.scheduler.stop_task(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+    use crate::json::Json;
+    use super::*;
+    use crate::dart::faults::FaultProfile;
+
+    fn echo_registry() -> TaskRegistry {
+        let reg = TaskRegistry::new();
+        reg.register("echo", |p| Ok(p.clone()));
+        reg.register("boom", |_| {
+            Err(crate::error::FedError::Task("deliberate".into()))
+        });
+        reg
+    }
+
+    fn params_for(clients: &[&str]) -> BTreeMap<String, Json> {
+        clients
+            .iter()
+            .map(|c| (c.to_string(), Json::obj().set("who", *c)))
+            .collect()
+    }
+
+    #[test]
+    fn sequential_execution_completes() {
+        let sim = TestModeDart::start_reliable(4, echo_registry(), 1);
+        let names = sim.device_names().unwrap();
+        assert_eq!(names.len(), 4);
+        let spec = TaskSpec::new(
+            "echo",
+            params_for(&names.iter().map(String::as_str).collect::<Vec<_>>()),
+        );
+        let id = sim.submit(spec).unwrap();
+        let st = sim.wait(id, Duration::from_secs(5)).unwrap();
+        assert_eq!(st, TaskStatus::Finished);
+        let rs = sim.results(id).unwrap();
+        assert_eq!(rs.len(), 4);
+        for r in &rs {
+            assert_eq!(
+                r.result.get("who").unwrap().as_str(),
+                Some(r.device_name.as_str())
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_execution_completes() {
+        let sim = TestModeDart::start_reliable(8, echo_registry(), 4);
+        let names = sim.device_names().unwrap();
+        let id = sim
+            .submit(TaskSpec::new(
+                "echo",
+                params_for(&names.iter().map(String::as_str).collect::<Vec<_>>()),
+            ))
+            .unwrap();
+        assert_eq!(
+            sim.wait(id, Duration::from_secs(5)).unwrap(),
+            TaskStatus::Finished
+        );
+    }
+
+    #[test]
+    fn function_error_partially_fails() {
+        let sim = TestModeDart::start_reliable(2, echo_registry(), 1);
+        let id = sim
+            .submit(TaskSpec::new("boom", params_for(&["client-0", "client-1"])))
+            .unwrap();
+        let st = sim.wait(id, Duration::from_secs(5)).unwrap();
+        assert_eq!(st, TaskStatus::PartiallyFailed);
+        assert!(sim.results(id).unwrap().is_empty());
+    }
+
+    #[test]
+    fn flaky_clients_still_finish_with_retries() {
+        let clients = (0..4)
+            .map(|i| SimClient {
+                name: format!("client-{i}"),
+                hardware: HardwareConfig::default(),
+                faults: FaultInjector::new(i as u64, FaultProfile::flaky(0.3)),
+            })
+            .collect();
+        let sim = TestModeDart::start(clients, echo_registry(), 2);
+        let names: Vec<String> = sim.device_names().unwrap();
+        let mut spec = TaskSpec::new(
+            "echo",
+            params_for(&names.iter().map(String::as_str).collect::<Vec<_>>()),
+        );
+        spec.max_retries = 100;
+        let id = sim.submit(spec).unwrap();
+        let st = sim.wait(id, Duration::from_secs(20)).unwrap();
+        assert_eq!(st, TaskStatus::Finished, "flaky run did not converge");
+    }
+
+    #[test]
+    fn nonblocking_partial_results() {
+        let reg = TaskRegistry::new();
+        reg.register("slowfast", |p| {
+            if p.get("slow").and_then(Json::as_bool).unwrap_or(false) {
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            Ok(Json::obj().set("ok", true))
+        });
+        let sim = TestModeDart::start_reliable(2, reg, 2);
+        let mut params = BTreeMap::new();
+        params.insert("client-0".to_string(), Json::obj().set("slow", false));
+        params.insert("client-1".to_string(), Json::obj().set("slow", true));
+        let id = sim.submit(TaskSpec::new("slowfast", params)).unwrap();
+        // fast client's result should be visible before the slow one ends
+        let t0 = Instant::now();
+        loop {
+            let rs = sim.results(id).unwrap();
+            if !rs.is_empty() {
+                assert_eq!(rs[0].device_name, "client-0");
+                assert_eq!(sim.status(id).unwrap(), TaskStatus::InProgress);
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "no partial result");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        sim.wait(id, Duration::from_secs(5)).unwrap();
+    }
+
+    #[test]
+    fn stop_task_is_observable() {
+        let reg = TaskRegistry::new();
+        reg.register("sleepy", |_| {
+            std::thread::sleep(Duration::from_millis(50));
+            Ok(Json::Null)
+        });
+        let sim = TestModeDart::start_reliable(2, reg, 1);
+        let id = sim
+            .submit(TaskSpec::new("sleepy", params_for(&["client-0", "client-1"])))
+            .unwrap();
+        sim.stop_task(id).unwrap();
+        assert_eq!(sim.status(id).unwrap(), TaskStatus::Stopped);
+    }
+}

@@ -1,0 +1,52 @@
+//! Unified error type for the Fed-DART/FACT stack.
+
+use thiserror::Error;
+
+/// Errors surfaced by any layer of the runtime.
+#[derive(Error, Debug)]
+pub enum FedError {
+    /// JSON parse / type errors from the hand-rolled codec.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Configuration file problems (missing keys, bad values).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// HTTP transport / framing problems.
+    #[error("http error: {0}")]
+    Http(String),
+
+    /// DART transport (framing, authentication, disconnects).
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    /// Task rejected or failed at the scheduling layer.
+    #[error("task error: {0}")]
+    Task(String),
+
+    /// Device is unknown, unavailable or failed its requirement check.
+    #[error("device error: {0}")]
+    Device(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// FACT-level (model / aggregation / clustering) failures.
+    #[error("fact error: {0}")]
+    Fact(String),
+
+    /// Underlying I/O.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for FedError {
+    fn from(e: xla::Error) -> Self {
+        FedError::Runtime(e.to_string())
+    }
+}
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, FedError>;

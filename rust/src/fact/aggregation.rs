@@ -1,0 +1,343 @@
+//! Aggregation algorithms (paper §B.3, §C.1.1).
+//!
+//! "FACT offers a variety of pre-implemented aggregation algorithms or if
+//! needed, new ones can be added easily through the modular design."
+//!
+//! Shipped: (weighted) federated averaging [McMahan et al.], FedProx [Li et
+//! al.] (server side identical to weighted FedAvg — the proximal term acts
+//! in the *client* objective, carried by the `mu` hyperparameter), and two
+//! robust rules (coordinate-wise median and trimmed mean) demonstrating the
+//! "new ones can be added easily" extension point.  The HLO-fused variant
+//! (L1 Pallas kernel) lives behind [`hlo_fedavg`] and is benched in E7.
+
+use crate::coordinator::aggregator::{flat_reduce_weighted, parallel_reduce_weighted};
+use crate::error::{FedError, Result};
+use crate::runtime::{Engine, Tensor};
+use crate::util::pool::ThreadPool;
+
+/// One client's round contribution.
+#[derive(Debug, Clone)]
+pub struct ClientUpdate {
+    pub device: String,
+    pub params: Vec<f32>,
+    /// local sample count (the FedAvg weight)
+    pub n_samples: f32,
+    /// mean local training loss (observability / stopping criteria)
+    pub loss: f32,
+    /// client wall time in seconds (paper taskResult.duration)
+    pub duration: f64,
+}
+
+/// The aggregation rule.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Aggregation {
+    /// uniform average over clients
+    FedAvg,
+    /// sample-count-weighted average (the McMahan et al. estimator)
+    WeightedFedAvg,
+    /// server side of FedProx == weighted FedAvg; clients add the proximal
+    /// term (mu) to their local objective
+    FedProx,
+    /// coordinate-wise median (robust to outliers / poisoned clients)
+    Median,
+    /// coordinate-wise trimmed mean, discarding `trim` clients at each end
+    TrimmedMean { trim: usize },
+}
+
+impl Aggregation {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Result<Aggregation> {
+        match s {
+            "fedavg" => Ok(Aggregation::FedAvg),
+            "weighted_fedavg" => Ok(Aggregation::WeightedFedAvg),
+            "fedprox" => Ok(Aggregation::FedProx),
+            "median" => Ok(Aggregation::Median),
+            s if s.starts_with("trimmed_mean") => {
+                let trim = s
+                    .split(':')
+                    .nth(1)
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(1);
+                Ok(Aggregation::TrimmedMean { trim })
+            }
+            other => Err(FedError::Fact(format!("unknown aggregation '{other}'"))),
+        }
+    }
+
+    /// Aggregate client updates into new global parameters.
+    ///
+    /// `pool` enables the Aggregator-tree parallel reduction for large K;
+    /// pass `None` for the flat loop.
+    pub fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        pool: Option<&ThreadPool>,
+    ) -> Result<Vec<f32>> {
+        if updates.is_empty() {
+            return Err(FedError::Fact("no updates to aggregate".into()));
+        }
+        let p = updates[0].params.len();
+        if updates.iter().any(|u| u.params.len() != p) {
+            return Err(FedError::Fact("update length mismatch".into()));
+        }
+        match self {
+            Aggregation::FedAvg => {
+                let w = vec![1.0f32; updates.len()];
+                Ok(reduce(updates, &w, pool))
+            }
+            Aggregation::WeightedFedAvg | Aggregation::FedProx => {
+                let w: Vec<f32> =
+                    updates.iter().map(|u| u.n_samples.max(0.0)).collect();
+                if w.iter().sum::<f32>() <= 0.0 {
+                    return Err(FedError::Fact("all sample weights zero".into()));
+                }
+                Ok(reduce(updates, &w, pool))
+            }
+            Aggregation::Median => Ok(coordinate_median(updates)),
+            Aggregation::TrimmedMean { trim } => {
+                if 2 * trim >= updates.len() {
+                    return Err(FedError::Fact(format!(
+                        "trim {trim} too large for {} clients",
+                        updates.len()
+                    )));
+                }
+                Ok(trimmed_mean(updates, *trim))
+            }
+        }
+    }
+}
+
+fn reduce(
+    updates: &[ClientUpdate],
+    weights: &[f32],
+    pool: Option<&ThreadPool>,
+) -> Vec<f32> {
+    // borrow parameter vectors directly — no copies on the hot path
+    let vectors: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+    match pool {
+        // P-chunked parallel reduction; bit-identical to the flat loop
+        Some(pool) => parallel_reduce_weighted(&vectors, weights, pool.worker_count()),
+        None => flat_reduce_weighted(&vectors, weights),
+    }
+}
+
+fn coordinate_median(updates: &[ClientUpdate]) -> Vec<f32> {
+    let p = updates[0].params.len();
+    let k = updates.len();
+    let mut out = vec![0.0f32; p];
+    let mut col = vec![0.0f32; k];
+    for j in 0..p {
+        for (i, u) in updates.iter().enumerate() {
+            col[i] = u.params[j];
+        }
+        col.sort_by(f32::total_cmp);
+        out[j] = if k % 2 == 1 {
+            col[k / 2]
+        } else {
+            0.5 * (col[k / 2 - 1] + col[k / 2])
+        };
+    }
+    out
+}
+
+fn trimmed_mean(updates: &[ClientUpdate], trim: usize) -> Vec<f32> {
+    let p = updates[0].params.len();
+    let k = updates.len();
+    let keep = k - 2 * trim;
+    let mut out = vec![0.0f32; p];
+    let mut col = vec![0.0f32; k];
+    for j in 0..p {
+        for (i, u) in updates.iter().enumerate() {
+            col[i] = u.params[j];
+        }
+        col.sort_by(f32::total_cmp);
+        out[j] = col[trim..k - trim].iter().sum::<f32>() / keep as f32;
+    }
+    out
+}
+
+/// HLO-fused weighted FedAvg on the L1 Pallas kernel.
+///
+/// The compiled entries have fixed `(K, P)`; updates are padded with
+/// zero-weight rows up to K and zero-padded up to P (zero weights are
+/// ignored by the kernel — verified in `python/tests/test_kernels.py`).
+pub fn hlo_fedavg(
+    engine: &Engine,
+    entry: &str,
+    updates: &[ClientUpdate],
+    weights: &[f32],
+) -> Result<Vec<f32>> {
+    let (k, p) = *engine
+        .manifest()
+        .aggregators
+        .get(entry)
+        .ok_or_else(|| FedError::Fact(format!("unknown aggregator entry '{entry}'")))?;
+    if updates.len() > k {
+        return Err(FedError::Fact(format!(
+            "{} updates exceed compiled K={k}",
+            updates.len()
+        )));
+    }
+    let real_p = updates[0].params.len();
+    if real_p > p {
+        return Err(FedError::Fact(format!(
+            "param count {real_p} exceeds compiled P={p}"
+        )));
+    }
+    let mut stacked = vec![0.0f32; k * p];
+    let mut w = vec![0.0f32; k];
+    for (i, u) in updates.iter().enumerate() {
+        stacked[i * p..i * p + real_p].copy_from_slice(&u.params);
+        w[i] = weights[i];
+    }
+    let out = engine.execute(
+        entry,
+        vec![
+            Tensor::with_shape_f32(vec![k, p], stacked)?,
+            Tensor::with_shape_f32(vec![k], w)?,
+        ],
+    )?;
+    let mut full = out.into_iter().next().unwrap().into_f32s()?;
+    full.truncate(real_p);
+    Ok(full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(device: &str, params: Vec<f32>, n: f32) -> ClientUpdate {
+        ClientUpdate {
+            device: device.into(),
+            params,
+            n_samples: n,
+            loss: 0.0,
+            duration: 0.0,
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Aggregation::parse("fedavg").unwrap(), Aggregation::FedAvg);
+        assert_eq!(
+            Aggregation::parse("weighted_fedavg").unwrap(),
+            Aggregation::WeightedFedAvg
+        );
+        assert_eq!(Aggregation::parse("fedprox").unwrap(), Aggregation::FedProx);
+        assert_eq!(Aggregation::parse("median").unwrap(), Aggregation::Median);
+        assert_eq!(
+            Aggregation::parse("trimmed_mean:2").unwrap(),
+            Aggregation::TrimmedMean { trim: 2 }
+        );
+        assert!(Aggregation::parse("maxpool").is_err());
+    }
+
+    #[test]
+    fn fedavg_uniform() {
+        let ups = vec![upd("a", vec![0.0, 2.0], 1.0), upd("b", vec![2.0, 4.0], 99.0)];
+        let out = Aggregation::FedAvg.aggregate(&ups, None).unwrap();
+        assert_eq!(out, vec![1.0, 3.0]); // ignores n_samples
+    }
+
+    #[test]
+    fn weighted_fedavg_by_samples() {
+        let ups = vec![upd("a", vec![0.0], 1.0), upd("b", vec![4.0], 3.0)];
+        let out = Aggregation::WeightedFedAvg.aggregate(&ups, None).unwrap();
+        assert!((out[0] - 3.0).abs() < 1e-6);
+        // FedProx server-side is identical
+        let out2 = Aggregation::FedProx.aggregate(&ups, None).unwrap();
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn median_resists_poisoned_client() {
+        let mut ups: Vec<ClientUpdate> =
+            (0..9).map(|i| upd(&format!("c{i}"), vec![1.0, -1.0], 1.0)).collect();
+        ups.push(upd("evil", vec![1e9, -1e9], 1.0));
+        let med = Aggregation::Median.aggregate(&ups, None).unwrap();
+        assert!((med[0] - 1.0).abs() < 1e-6);
+        let avg = Aggregation::FedAvg.aggregate(&ups, None).unwrap();
+        assert!(avg[0] > 1e7, "mean should be poisoned");
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let ups = vec![
+            upd("lo", vec![-100.0], 1.0),
+            upd("a", vec![1.0], 1.0),
+            upd("b", vec![2.0], 1.0),
+            upd("c", vec![3.0], 1.0),
+            upd("hi", vec![100.0], 1.0),
+        ];
+        let out = Aggregation::TrimmedMean { trim: 1 }.aggregate(&ups, None).unwrap();
+        assert!((out[0] - 2.0).abs() < 1e-6);
+        assert!(Aggregation::TrimmedMean { trim: 3 }.aggregate(&ups, None).is_err());
+    }
+
+    #[test]
+    fn median_even_count() {
+        let ups = vec![
+            upd("a", vec![1.0], 1.0),
+            upd("b", vec![3.0], 1.0),
+            upd("c", vec![5.0], 1.0),
+            upd("d", vec![7.0], 1.0),
+        ];
+        let out = Aggregation::Median.aggregate(&ups, None).unwrap();
+        assert!((out[0] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn errors_on_degenerate_input() {
+        assert!(Aggregation::FedAvg.aggregate(&[], None).is_err());
+        let mismatched = vec![upd("a", vec![1.0], 1.0), upd("b", vec![1.0, 2.0], 1.0)];
+        assert!(Aggregation::FedAvg.aggregate(&mismatched, None).is_err());
+        let zero_w = vec![upd("a", vec![1.0], 0.0)];
+        assert!(Aggregation::WeightedFedAvg.aggregate(&zero_w, None).is_err());
+    }
+
+    #[test]
+    fn pooled_reduction_matches_flat() {
+        let pool = ThreadPool::new(4);
+        let ups: Vec<ClientUpdate> = (0..24)
+            .map(|i| {
+                upd(
+                    &format!("c{i}"),
+                    (0..100).map(|j| ((i * j) % 7) as f32).collect(),
+                    (i + 1) as f32,
+                )
+            })
+            .collect();
+        let flat = Aggregation::WeightedFedAvg.aggregate(&ups, None).unwrap();
+        let tree = Aggregation::WeightedFedAvg.aggregate(&ups, Some(&pool)).unwrap();
+        for (a, b) in flat.iter().zip(tree.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn hlo_fedavg_matches_rust_if_artifacts_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let engine = Engine::load(&dir, 1).unwrap();
+        let p_real = 1000;
+        let ups: Vec<ClientUpdate> = (0..5)
+            .map(|i| {
+                upd(
+                    &format!("c{i}"),
+                    crate::util::rng::golden_f32(i as u32 + 1, p_real),
+                    (i + 1) as f32,
+                )
+            })
+            .collect();
+        let weights: Vec<f32> = ups.iter().map(|u| u.n_samples).collect();
+        let hlo = hlo_fedavg(&engine, "fedavg_k8_p1048576", &ups, &weights).unwrap();
+        let rust = Aggregation::WeightedFedAvg.aggregate(&ups, None).unwrap();
+        assert_eq!(hlo.len(), p_real);
+        for (a, b) in hlo.iter().zip(rust.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        engine.shutdown();
+    }
+}

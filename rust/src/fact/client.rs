@@ -1,0 +1,477 @@
+//! Client-side FACT runtime — the code a physical client runs (paper
+//! §2.2.1 Client class, §C.2.2 client main script).
+//!
+//! Registers the three predefined `@feddart` functions in a
+//! [`TaskRegistry`]:
+//! * `fact_init` — receives the model structure; validates it is runnable.
+//! * `fact_learn` — receives global parameters + hyperparameters, runs
+//!   `local_steps` SGD steps on the client's own data (through the PJRT
+//!   engine for HLO models, natively for linear models), returns updated
+//!   parameters + metadata.
+//! * `fact_evaluate` — evaluates given parameters on the client's held-out
+//!   data.
+//!
+//! The same registry object serves every simulated client in test mode
+//! (data is keyed by the injected `_device` name) and exactly one client in
+//! a real deployment.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{FedError, Result};
+use crate::fact::data::{ClientCorpus, ClientData};
+use crate::fact::model::LinearModel;
+use crate::json::Json;
+use crate::runtime::{Engine, Tensor};
+use crate::util::base64;
+use crate::util::rng::splitmix64;
+use crate::dart::TaskRegistry;
+
+/// Local data owned by one device.
+pub enum LocalData {
+    Supervised { train: ClientData, test: ClientData },
+    Corpus(ClientCorpus),
+}
+
+/// Per-device mutable state (cached across task calls — the paper's Client
+/// class holds the local model/loaders between rounds).
+#[derive(Default)]
+struct DeviceState {
+    /// models initialised on this device (fact_init ran)
+    initialized: Vec<String>,
+    /// ensemble base-learner cache (see `fact::ensemble`)
+    pub base_params: BTreeMap<String, Vec<f32>>,
+}
+
+/// The client runtime shared by all `@feddart` functions.
+pub struct FactClientRuntime {
+    engine: Engine,
+    data: Mutex<BTreeMap<String, Arc<LocalData>>>,
+    state: Mutex<BTreeMap<String, DeviceState>>,
+}
+
+impl FactClientRuntime {
+    pub fn new(engine: Engine) -> Arc<FactClientRuntime> {
+        Arc::new(FactClientRuntime {
+            engine,
+            data: Mutex::new(BTreeMap::new()),
+            state: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Attach a device's supervised dataset (80/20 split).
+    pub fn add_supervised(&self, device: &str, data: ClientData) {
+        let (train, test) = data.train_test_split(0.2);
+        self.data
+            .lock()
+            .unwrap()
+            .insert(device.to_string(), Arc::new(LocalData::Supervised { train, test }));
+    }
+
+    /// Attach a device's token corpus.
+    pub fn add_corpus(&self, device: &str, corpus: ClientCorpus) {
+        self.data
+            .lock()
+            .unwrap()
+            .insert(device.to_string(), Arc::new(LocalData::Corpus(corpus)));
+    }
+
+    /// Clone out a device's supervised split (ensemble tasks, diagnostics).
+    pub fn supervised_of(&self, device: &str) -> Result<(ClientData, ClientData)> {
+        match self.local(device)?.as_ref() {
+            LocalData::Supervised { train, test } => Ok((train.clone(), test.clone())),
+            _ => Err(FedError::Fact(format!(
+                "device '{device}' has no supervised data"
+            ))),
+        }
+    }
+
+    fn local(&self, device: &str) -> Result<Arc<LocalData>> {
+        self.data
+            .lock()
+            .unwrap()
+            .get(device)
+            .cloned()
+            .ok_or_else(|| FedError::Fact(format!("device '{device}' has no local data")))
+    }
+
+    /// Store a value in the per-device ensemble cache.
+    pub fn cache_base_params(&self, device: &str, model: &str, params: Vec<f32>) {
+        self.state
+            .lock()
+            .unwrap()
+            .entry(device.to_string())
+            .or_default()
+            .base_params
+            .insert(model.to_string(), params);
+    }
+
+    pub fn cached_base_params(&self, device: &str, model: &str) -> Option<Vec<f32>> {
+        self.state
+            .lock()
+            .unwrap()
+            .get(device)
+            .and_then(|s| s.base_params.get(model).cloned())
+    }
+
+    /// Register `fact_init`, `fact_learn`, `fact_evaluate` on a registry.
+    pub fn register(self: &Arc<Self>, registry: &TaskRegistry) {
+        let rt = Arc::clone(self);
+        registry.register("fact_init", move |p| rt.clone().fact_init(p));
+        let rt = Arc::clone(self);
+        registry.register("fact_learn", move |p| rt.clone().fact_learn(p));
+        let rt = Arc::clone(self);
+        registry.register("fact_evaluate", move |p| rt.clone().fact_evaluate(p));
+    }
+
+    // ------------------------------------------------------------- helpers
+
+    fn device_of(p: &Json) -> Result<String> {
+        p.get("_device")
+            .and_then(Json::as_str)
+            .map(String::from)
+            .ok_or_else(|| FedError::Fact("missing _device".into()))
+    }
+
+    fn params_of(p: &Json) -> Result<Vec<f32>> {
+        base64::decode_f32(
+            p.need("params")?
+                .as_str()
+                .ok_or_else(|| FedError::Fact("params must be base64".into()))?,
+        )
+    }
+
+    /// Deterministic batch seed: device identity x round x step.
+    fn batch_seed(device: &str, round: u64, step: u64) -> u64 {
+        let mut h = 0xcbf29ce484222325u64; // FNV offset
+        for b in device.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        splitmix64(h ^ (round << 20) ^ step)
+    }
+
+    // --------------------------------------------------------------- tasks
+
+    fn fact_init(&self, p: &Json) -> Result<Json> {
+        let device = Self::device_of(p)?;
+        let model = p.need("model")?.as_str().unwrap_or("").to_string();
+        // validate the model is servable on this client
+        if !model.starts_with("linear") && !model.starts_with("ensemble") {
+            self.engine.manifest().model(&model)?;
+        }
+        self.local(&device)?; // data must be attached
+        self.state
+            .lock()
+            .unwrap()
+            .entry(device.clone())
+            .or_default()
+            .initialized
+            .push(model.clone());
+        log::debug!(target: "fact::client", "'{device}' initialised model '{model}'");
+        Ok(Json::obj().set("initialized", model))
+    }
+
+    fn fact_learn(&self, p: &Json) -> Result<Json> {
+        let device = Self::device_of(p)?;
+        let model = p.need("model")?.as_str().unwrap_or("").to_string();
+        let mut params = Self::params_of(p)?;
+        let global = params.clone();
+        let lr = p.get("lr").and_then(Json::as_f64).unwrap_or(0.1) as f32;
+        let mu = p.get("mu").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+        let steps = p.get("local_steps").and_then(Json::as_usize).unwrap_or(1).max(1);
+        let round = p.get("round").and_then(Json::as_i64).unwrap_or(0) as u64;
+        let local = self.local(&device)?;
+
+        let (loss_sum, n_samples);
+        if let Some(rest) = model.strip_prefix("linear_") {
+            // native path
+            let (dim, classes) = parse_linear_dims(rest)?;
+            let LocalData::Supervised { train, .. } = local.as_ref() else {
+                return Err(FedError::Fact("linear model needs supervised data".into()));
+            };
+            let b = 32.min(train.n()).max(1);
+            let mut acc = 0.0f32;
+            for s in 0..steps {
+                let (x, y) =
+                    train.sample_batch(Self::batch_seed(&device, round, s as u64), b);
+                acc += LinearModel::sgd_step(
+                    &mut params, &x, &y, dim, classes, lr, mu, &global,
+                );
+            }
+            loss_sum = acc;
+            n_samples = train.n() as f32;
+        } else {
+            let meta = self.engine.manifest().model(&model)?.clone();
+            let train_entry = meta.entry("train")?.to_string();
+            match (meta.kind.as_str(), local.as_ref()) {
+                ("mlp", LocalData::Supervised { train, .. }) => {
+                    let bt = meta.field_usize("train_batch")?;
+                    let d = meta.field_usize("in_dim")?;
+                    let mut acc = 0.0f32;
+                    for s in 0..steps {
+                        let (x, y) = train
+                            .sample_batch(Self::batch_seed(&device, round, s as u64), bt);
+                        let out = self.engine.execute(
+                            &train_entry,
+                            vec![
+                                Tensor::vec_f32(params),
+                                Tensor::with_shape_f32(vec![bt, d], x)?,
+                                Tensor::with_shape_i32(vec![bt], y)?,
+                                Tensor::scalar_f32(lr),
+                                Tensor::scalar_f32(mu),
+                                Tensor::vec_f32(global.clone()),
+                            ],
+                        )?;
+                        let mut it = out.into_iter();
+                        params = it.next().unwrap().into_f32s()?;
+                        acc += it.next().unwrap().scalar()?;
+                    }
+                    loss_sum = acc;
+                    n_samples = train.n() as f32;
+                }
+                ("transformer", LocalData::Corpus(corpus)) => {
+                    let bt = meta.field_usize("train_batch")?;
+                    let s_len = meta.field_usize("seq")?;
+                    let mut acc = 0.0f32;
+                    for s in 0..steps {
+                        let toks = corpus.sample_windows(
+                            Self::batch_seed(&device, round, s as u64),
+                            bt,
+                            s_len,
+                        );
+                        let out = self.engine.execute(
+                            &train_entry,
+                            vec![
+                                Tensor::vec_f32(params),
+                                Tensor::with_shape_i32(vec![bt, s_len + 1], toks)?,
+                                Tensor::scalar_f32(lr),
+                                Tensor::scalar_f32(mu),
+                                Tensor::vec_f32(global.clone()),
+                            ],
+                        )?;
+                        let mut it = out.into_iter();
+                        params = it.next().unwrap().into_f32s()?;
+                        acc += it.next().unwrap().scalar()?;
+                    }
+                    loss_sum = acc;
+                    n_samples = corpus.tokens.len() as f32;
+                }
+                (kind, _) => {
+                    return Err(FedError::Fact(format!(
+                        "model kind '{kind}' incompatible with local data of '{device}'"
+                    )))
+                }
+            }
+        }
+        Ok(Json::obj()
+            .set("params", base64::encode_f32(&params))
+            .set("n_samples", n_samples)
+            .set("loss", loss_sum / steps as f32))
+    }
+
+    fn fact_evaluate(&self, p: &Json) -> Result<Json> {
+        let device = Self::device_of(p)?;
+        let model = p.need("model")?.as_str().unwrap_or("").to_string();
+        let params = Self::params_of(p)?;
+        let local = self.local(&device)?;
+
+        if let Some(rest) = model.strip_prefix("linear_") {
+            let (dim, classes) = parse_linear_dims(rest)?;
+            let LocalData::Supervised { test, .. } = local.as_ref() else {
+                return Err(FedError::Fact("linear model needs supervised data".into()));
+            };
+            let (loss_sum, correct) =
+                LinearModel::evaluate(&params, &test.x, &test.y, dim, classes);
+            return Ok(Json::obj()
+                .set("loss_sum", loss_sum)
+                .set("correct", correct)
+                .set("n", test.n()));
+        }
+
+        let meta = self.engine.manifest().model(&model)?.clone();
+        let eval_entry = meta.entry("eval")?.to_string();
+        match (meta.kind.as_str(), local.as_ref()) {
+            ("mlp", LocalData::Supervised { test, .. }) => {
+                let be = meta.field_usize("eval_batch")?;
+                let d = meta.field_usize("in_dim")?;
+                // fixed deterministic eval sample (seed 0) of one eval batch
+                let (x, y) = test.sample_batch(Self::batch_seed(&device, 0, u64::MAX), be);
+                let out = self.engine.execute(
+                    &eval_entry,
+                    vec![
+                        Tensor::vec_f32(params),
+                        Tensor::with_shape_f32(vec![be, d], x)?,
+                        Tensor::with_shape_i32(vec![be], y)?,
+                    ],
+                )?;
+                Ok(Json::obj()
+                    .set("loss_sum", out[0].scalar()?)
+                    .set("correct", out[1].scalar()?)
+                    .set("n", be))
+            }
+            ("transformer", LocalData::Corpus(corpus)) => {
+                let be = meta.field_usize("eval_batch")?;
+                let s_len = meta.field_usize("seq")?;
+                let toks = corpus.sample_windows(
+                    Self::batch_seed(&device, 0, u64::MAX),
+                    be,
+                    s_len,
+                );
+                let out = self.engine.execute(
+                    &eval_entry,
+                    vec![
+                        Tensor::vec_f32(params),
+                        Tensor::with_shape_i32(vec![be, s_len + 1], toks)?,
+                    ],
+                )?;
+                Ok(Json::obj()
+                    .set("loss_sum", out[0].scalar()?)
+                    .set("ntok", out[1].scalar()?)
+                    .set("n", be))
+            }
+            (kind, _) => Err(FedError::Fact(format!(
+                "model kind '{kind}' incompatible with local data of '{device}'"
+            ))),
+        }
+    }
+}
+
+fn parse_linear_dims(rest: &str) -> Result<(usize, usize)> {
+    let (d, c) = rest
+        .split_once('x')
+        .ok_or_else(|| FedError::Fact(format!("bad linear model name '{rest}'")))?;
+    Ok((
+        d.parse()
+            .map_err(|_| FedError::Fact("bad linear dim".into()))?,
+        c.parse()
+            .map_err(|_| FedError::Fact("bad linear classes".into()))?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fact::aggregation::Aggregation;
+    use crate::fact::data::{synthesize, SyntheticConfig};
+    use crate::fact::model::{FactModel, Hyper};
+    use crate::runtime::default_artifacts_dir;
+
+    fn runtime_with_data() -> Option<(Arc<FactClientRuntime>, Vec<String>)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let engine = Engine::load(&dir, 1).unwrap();
+        let rt = FactClientRuntime::new(engine);
+        let data = synthesize(&SyntheticConfig {
+            clients: 2,
+            samples_per_client: 128,
+            dim: 8,
+            classes: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let names: Vec<String> = data.keys().cloned().collect();
+        for (name, d) in data {
+            rt.add_supervised(&name, d);
+        }
+        Some((rt, names))
+    }
+
+    #[test]
+    fn linear_learn_evaluate_cycle_no_engine_models() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let (rt, names) = runtime_with_data().unwrap();
+        let m = LinearModel::new(8, 4, Aggregation::WeightedFedAvg);
+        let global = m.init_params(0).unwrap();
+        let hp = Hyper { lr: 0.3, mu: 0.0, local_steps: 5, round: 0 };
+        let p = m
+            .learn_params(&global, &hp)
+            .set("_device", names[0].as_str());
+        let out = rt.fact_learn(&p).unwrap();
+        let u = m.parse_update(&names[0], 0.1, &out).unwrap();
+        assert_eq!(u.params.len(), m.param_count());
+        assert!(u.loss.is_finite());
+        assert!(u.n_samples > 0.0);
+
+        let pe = m
+            .eval_params(&u.params)
+            .set("_device", names[0].as_str());
+        let ev = rt.fact_evaluate(&pe).unwrap();
+        assert!(ev.get("loss_sum").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn mlp_learn_reduces_loss_over_rounds() {
+        let Some((rt, names)) = runtime_with_data() else { return };
+        let m = crate::fact::model::HloModel::new(
+            rt.engine(),
+            "mlp_tiny",
+            Aggregation::WeightedFedAvg,
+        )
+        .unwrap();
+        let mut global = m.init_params(1).unwrap();
+        let mut first = None;
+        let mut last = 0.0f32;
+        for round in 0..8 {
+            let hp = Hyper { lr: 0.5, mu: 0.0, local_steps: 4, round };
+            let p = m
+                .learn_params(&global, &hp)
+                .set("_device", names[0].as_str());
+            let out = rt.fact_learn(&p).unwrap();
+            let u = m.parse_update(&names[0], 0.0, &out).unwrap();
+            global = u.params;
+            first = first.or(Some(u.loss));
+            last = u.loss;
+        }
+        assert!(
+            last < first.unwrap(),
+            "loss did not decrease: {first:?} -> {last}"
+        );
+    }
+
+    #[test]
+    fn init_validates_model_and_data() {
+        let Some((rt, names)) = runtime_with_data() else { return };
+        let ok = rt.fact_init(
+            &Json::obj()
+                .set("model", "mlp_tiny")
+                .set("_device", names[0].as_str()),
+        );
+        assert!(ok.is_ok());
+        let bad_model = rt.fact_init(
+            &Json::obj()
+                .set("model", "no_such")
+                .set("_device", names[0].as_str()),
+        );
+        assert!(bad_model.is_err());
+        let bad_device = rt.fact_init(
+            &Json::obj().set("model", "mlp_tiny").set("_device", "stranger"),
+        );
+        assert!(bad_device.is_err());
+    }
+
+    #[test]
+    fn batch_seeds_differ_by_device_round_step() {
+        let a = FactClientRuntime::batch_seed("client-0", 1, 0);
+        let b = FactClientRuntime::batch_seed("client-1", 1, 0);
+        let c = FactClientRuntime::batch_seed("client-0", 2, 0);
+        let d = FactClientRuntime::batch_seed("client-0", 1, 1);
+        assert!(a != b && a != c && a != d);
+        assert_eq!(a, FactClientRuntime::batch_seed("client-0", 1, 0));
+    }
+
+    #[test]
+    fn parse_linear_dims_cases() {
+        assert_eq!(parse_linear_dims("32x10").unwrap(), (32, 10));
+        assert!(parse_linear_dims("32").is_err());
+        assert!(parse_linear_dims("ax2").is_err());
+    }
+}

@@ -1,0 +1,430 @@
+//! ClusterContainer / Cluster and the clustering algorithms — the
+//! personalized-FL machinery (paper §2.2.1, Alg 3-4).
+//!
+//! "Each cluster contains a central model, so instead of having one global
+//! model on the server there is one global model for each cluster."
+//!
+//! Clustering operates on the clients' latest parameter vectors (the
+//! "fine-grained mapping of which client delivered which results" that
+//! Fed-DART's meta-information enables, §1.2).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::{FedError, Result};
+use crate::fact::model::FactModel;
+use crate::util::rng::Rng;
+
+/// One cluster: a set of clients sharing a global model.
+pub struct Cluster {
+    pub id: usize,
+    pub model: Arc<dyn FactModel>,
+    pub params: Vec<f32>,
+    pub clients: Vec<String>,
+    /// mean client loss per completed training round
+    pub loss_history: Vec<f32>,
+    /// server-side momentum buffer (FedAvgM), lazily initialised
+    pub momentum: Vec<f32>,
+}
+
+impl Cluster {
+    pub fn new(
+        id: usize,
+        model: Arc<dyn FactModel>,
+        params: Vec<f32>,
+        clients: Vec<String>,
+    ) -> Cluster {
+        Cluster {
+            id,
+            model,
+            params,
+            clients,
+            loss_history: Vec::new(),
+            momentum: Vec::new(),
+        }
+    }
+}
+
+/// The container orchestrating all clusters (paper: "responsible for the
+/// clustering and when to stop").
+#[derive(Default)]
+pub struct ClusterContainer {
+    pub clusters: Vec<Cluster>,
+}
+
+impl ClusterContainer {
+    /// Alg 3 fallback: one cluster holding every client — "equivalent to
+    /// standard FL".
+    pub fn single(
+        model: Arc<dyn FactModel>,
+        params: Vec<f32>,
+        clients: Vec<String>,
+    ) -> ClusterContainer {
+        ClusterContainer { clusters: vec![Cluster::new(0, model, params, clients)] }
+    }
+
+    pub fn client_count(&self) -> usize {
+        self.clusters.iter().map(|c| c.clients.len()).sum()
+    }
+
+    /// Which cluster each client belongs to.
+    pub fn assignment(&self) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for c in &self.clusters {
+            for cl in &c.clients {
+                m.insert(cl.clone(), c.id);
+            }
+        }
+        m
+    }
+}
+
+/// A clustering algorithm reassigns clients to clusters based on their
+/// latest local parameter vectors.
+pub trait ClusteringAlgorithm: Send + Sync {
+    /// `latest` maps client -> its last local update (post-training).
+    fn recluster(
+        &self,
+        container: ClusterContainer,
+        latest: &BTreeMap<String, Vec<f32>>,
+    ) -> Result<ClusterContainer>;
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's default from `initialization_by_model`: "the clustering
+/// algorithm is set to do nothing".
+pub struct StaticClustering;
+
+impl ClusteringAlgorithm for StaticClustering {
+    fn recluster(
+        &self,
+        container: ClusterContainer,
+        _latest: &BTreeMap<String, Vec<f32>>,
+    ) -> Result<ClusterContainer> {
+        Ok(container)
+    }
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// K-means over client parameter vectors (cosine-normalised), k fixed.
+/// New clusters inherit the model of the old container and start from the
+/// mean of their members' parameters.
+pub struct KMeansClustering {
+    pub k: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl KMeansClustering {
+    pub fn new(k: usize) -> KMeansClustering {
+        KMeansClustering { k, iters: 20, seed: 1 }
+    }
+}
+
+fn normalize(v: &[f32]) -> Vec<f32> {
+    let n = v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32;
+    if n <= 0.0 {
+        return v.to_vec();
+    }
+    v.iter().map(|x| x / n).collect()
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+impl ClusteringAlgorithm for KMeansClustering {
+    fn recluster(
+        &self,
+        container: ClusterContainer,
+        latest: &BTreeMap<String, Vec<f32>>,
+    ) -> Result<ClusterContainer> {
+        let clients: Vec<&String> = latest.keys().collect();
+        if clients.is_empty() {
+            return Ok(container);
+        }
+        let k = self.k.min(clients.len()).max(1);
+        let model = Arc::clone(&container.clusters[0].model);
+        let vecs: Vec<Vec<f32>> =
+            clients.iter().map(|c| normalize(&latest[*c])).collect();
+        let p = vecs[0].len();
+        if vecs.iter().any(|v| v.len() != p) {
+            return Err(FedError::Fact("inconsistent update lengths".into()));
+        }
+
+        // k-means++ style init (greedy farthest point, deterministic seed)
+        let mut rng = Rng::new(self.seed);
+        let mut centers: Vec<Vec<f32>> = vec![vecs[rng.below(vecs.len())].clone()];
+        while centers.len() < k {
+            let (far_idx, _) = vecs
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    let d = centers
+                        .iter()
+                        .map(|c| sq_dist(v, c))
+                        .fold(f32::INFINITY, f32::min);
+                    (i, d)
+                })
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .unwrap();
+            centers.push(vecs[far_idx].clone());
+        }
+
+        let mut assign = vec![0usize; vecs.len()];
+        for _ in 0..self.iters {
+            let mut changed = false;
+            for (i, v) in vecs.iter().enumerate() {
+                let best = centers
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| sq_dist(v, a.1).total_cmp(&sq_dist(v, b.1)))
+                    .unwrap()
+                    .0;
+                if assign[i] != best {
+                    assign[i] = best;
+                    changed = true;
+                }
+            }
+            // recompute centers
+            for (ci, center) in centers.iter_mut().enumerate() {
+                let members: Vec<&Vec<f32>> = vecs
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| assign[*i] == ci)
+                    .map(|(_, v)| v)
+                    .collect();
+                if members.is_empty() {
+                    continue;
+                }
+                let mut mean = vec![0.0f32; p];
+                for m in &members {
+                    for (a, &b) in mean.iter_mut().zip(m.iter()) {
+                        *a += b;
+                    }
+                }
+                for a in mean.iter_mut() {
+                    *a /= members.len() as f32;
+                }
+                *center = mean;
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        // build clusters; initial params = mean of members' raw updates
+        let mut clusters = Vec::new();
+        for ci in 0..k {
+            let members: Vec<String> = clients
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| assign[*i] == ci)
+                .map(|(_, c)| (*c).clone())
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut mean = vec![0.0f32; latest[&members[0]].len()];
+            for m in &members {
+                for (a, &b) in mean.iter_mut().zip(latest[m].iter()) {
+                    *a += b;
+                }
+            }
+            for a in mean.iter_mut() {
+                *a /= members.len() as f32;
+            }
+            clusters.push(Cluster::new(clusters.len(), Arc::clone(&model), mean, members));
+        }
+        Ok(ClusterContainer { clusters })
+    }
+
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+}
+
+/// Agglomerative clustering by cosine similarity: merge clients whose
+/// parameter vectors have similarity above `threshold`.  Cluster count is
+/// data-driven (unlike k-means).
+pub struct CosineThresholdClustering {
+    pub threshold: f32,
+}
+
+impl ClusteringAlgorithm for CosineThresholdClustering {
+    fn recluster(
+        &self,
+        container: ClusterContainer,
+        latest: &BTreeMap<String, Vec<f32>>,
+    ) -> Result<ClusterContainer> {
+        let clients: Vec<&String> = latest.keys().collect();
+        if clients.is_empty() {
+            return Ok(container);
+        }
+        let model = Arc::clone(&container.clusters[0].model);
+        let vecs: Vec<Vec<f32>> =
+            clients.iter().map(|c| normalize(&latest[*c])).collect();
+        let n = clients.len();
+        // union-find
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(parent: &mut Vec<usize>, i: usize) -> usize {
+            if parent[i] != i {
+                let r = find(parent, parent[i]);
+                parent[i] = r;
+            }
+            parent[i]
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let cos: f32 = vecs[i].iter().zip(&vecs[j]).map(|(a, b)| a * b).sum();
+                if cos >= self.threshold {
+                    let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+                    if ri != rj {
+                        parent[ri] = rj;
+                    }
+                }
+            }
+        }
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for i in 0..n {
+            let r = find(&mut parent, i);
+            groups.entry(r).or_default().push(i);
+        }
+        let mut clusters = Vec::new();
+        for (_, members) in groups {
+            let names: Vec<String> =
+                members.iter().map(|&i| clients[i].clone()).collect();
+            let mut mean = vec![0.0f32; latest[&names[0]].len()];
+            for m in &names {
+                for (a, &b) in mean.iter_mut().zip(latest[m].iter()) {
+                    *a += b;
+                }
+            }
+            for a in mean.iter_mut() {
+                *a /= names.len() as f32;
+            }
+            clusters.push(Cluster::new(clusters.len(), Arc::clone(&model), mean, names));
+        }
+        Ok(ClusterContainer { clusters })
+    }
+
+    fn name(&self) -> &'static str {
+        "cosine_threshold"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fact::aggregation::Aggregation;
+    use crate::fact::model::LinearModel;
+
+    fn model() -> Arc<dyn FactModel> {
+        LinearModel::arc(4, 2, Aggregation::FedAvg)
+    }
+
+    /// Two well-separated groups of client vectors.
+    fn grouped_updates() -> BTreeMap<String, Vec<f32>> {
+        let mut rng = Rng::new(9);
+        let mut m = BTreeMap::new();
+        for i in 0..6 {
+            let group = i % 2;
+            let base: Vec<f32> = if group == 0 {
+                vec![10.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+            } else {
+                vec![0.0, 0.0, 0.0, 0.0, 0.0, 10.0, 0.0, 0.0, 0.0, 0.0]
+            };
+            let noisy: Vec<f32> =
+                base.iter().map(|v| v + 0.1 * rng.normal() as f32).collect();
+            m.insert(format!("client-{i}"), noisy);
+        }
+        m
+    }
+
+    #[test]
+    fn single_container_and_assignment() {
+        let c = ClusterContainer::single(
+            model(),
+            vec![0.0; 10],
+            vec!["a".into(), "b".into()],
+        );
+        assert_eq!(c.clusters.len(), 1);
+        assert_eq!(c.client_count(), 2);
+        assert_eq!(c.assignment()["a"], 0);
+    }
+
+    #[test]
+    fn static_clustering_is_identity() {
+        let c = ClusterContainer::single(model(), vec![0.0; 10], vec!["a".into()]);
+        let out = StaticClustering.recluster(c, &grouped_updates()).unwrap();
+        assert_eq!(out.clusters.len(), 1);
+        assert_eq!(out.clusters[0].clients, vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn kmeans_recovers_two_groups() {
+        let updates = grouped_updates();
+        let c = ClusterContainer::single(
+            model(),
+            vec![0.0; 10],
+            updates.keys().cloned().collect(),
+        );
+        let out = KMeansClustering::new(2).recluster(c, &updates).unwrap();
+        assert_eq!(out.clusters.len(), 2);
+        let assign = out.assignment();
+        // even-indexed clients together, odd together
+        assert_eq!(assign["client-0"], assign["client-2"]);
+        assert_eq!(assign["client-0"], assign["client-4"]);
+        assert_eq!(assign["client-1"], assign["client-3"]);
+        assert_ne!(assign["client-0"], assign["client-1"]);
+        // cluster params near the group means
+        for cl in &out.clusters {
+            assert_eq!(cl.params.len(), 10);
+            assert!(!cl.clients.is_empty());
+        }
+    }
+
+    #[test]
+    fn kmeans_k_larger_than_clients_clamps() {
+        let mut updates = BTreeMap::new();
+        updates.insert("only".to_string(), vec![1.0f32, 2.0]);
+        let c = ClusterContainer::single(model(), vec![0.0; 2], vec!["only".into()]);
+        let out = KMeansClustering::new(5).recluster(c, &updates).unwrap();
+        assert_eq!(out.clusters.len(), 1);
+    }
+
+    #[test]
+    fn cosine_threshold_merges_similar() {
+        let updates = grouped_updates();
+        let c = ClusterContainer::single(
+            model(),
+            vec![0.0; 10],
+            updates.keys().cloned().collect(),
+        );
+        let out = CosineThresholdClustering { threshold: 0.9 }
+            .recluster(c, &updates)
+            .unwrap();
+        assert_eq!(out.clusters.len(), 2, "expected 2 clusters");
+        // a very low threshold merges everyone
+        let c2 = ClusterContainer::single(
+            model(),
+            vec![0.0; 10],
+            updates.keys().cloned().collect(),
+        );
+        let all = CosineThresholdClustering { threshold: -1.0 }
+            .recluster(c2, &updates)
+            .unwrap();
+        assert_eq!(all.clusters.len(), 1);
+    }
+
+    #[test]
+    fn empty_latest_is_identity() {
+        let c = ClusterContainer::single(model(), vec![0.0; 4], vec!["a".into()]);
+        let out = KMeansClustering::new(2)
+            .recluster(c, &BTreeMap::new())
+            .unwrap();
+        assert_eq!(out.clusters.len(), 1);
+    }
+}

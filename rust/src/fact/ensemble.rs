@@ -1,0 +1,315 @@
+//! Ensemble FL by stacking (paper §B.3 ScikitEnsembleFLModel).
+//!
+//! "We introduced a new method named ensemble FL to use further model types
+//! for FL which makes use of the stacking technique. It allows to use
+//! arbitrary ML models like decision trees, random forests, support vector
+//! machine etc. in a federated setup. ... Implemented aggregation
+//! algorithm: it inherits the aggregation algorithms [of the NN model] via
+//! applying the aggregation only to the final model."
+//!
+//! Mechanics here: each client first fits a **local base learner** (a
+//! class-prototype / nearest-centroid model — a non-gradient model family
+//! standing in for trees/SVMs) on its own data; the base never leaves the
+//! client.  The *federated* part is the stacking head, a softmax regression
+//! over the base learner's per-class scores, trained with the standard
+//! FedAvg loop — only the head's parameters are aggregated.
+
+use std::sync::Arc;
+
+use crate::error::{FedError, Result};
+use crate::fact::aggregation::Aggregation;
+use crate::fact::client::FactClientRuntime;
+use crate::fact::data::ClientData;
+use crate::fact::model::{FactModel, LinearModel};
+use crate::json::Json;
+use crate::util::base64;
+use crate::dart::TaskRegistry;
+
+/// Server-side handle: a linear stacking head over `classes` base scores.
+pub struct EnsembleFlModel {
+    name: String,
+    head: LinearModel,
+    pub classes: usize,
+}
+
+impl EnsembleFlModel {
+    pub fn new(classes: usize, aggregation: Aggregation) -> EnsembleFlModel {
+        EnsembleFlModel {
+            name: format!("ensemble_{classes}"),
+            // head input = the base learner's per-class score vector
+            head: LinearModel::new(classes, classes, aggregation),
+            classes,
+        }
+    }
+
+    pub fn arc(classes: usize, agg: Aggregation) -> Arc<dyn FactModel> {
+        Arc::new(Self::new(classes, agg))
+    }
+}
+
+impl FactModel for EnsembleFlModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn param_count(&self) -> usize {
+        self.head.param_count()
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        self.head.init_params(seed)
+    }
+
+    fn aggregation(&self) -> &Aggregation {
+        self.head.aggregation()
+    }
+
+    fn init_task_params(&self) -> Json {
+        Json::obj()
+            .set("model", self.name())
+            .set("classes", self.classes)
+    }
+}
+
+/// Nearest-centroid base learner: per-class feature centroids; score of a
+/// sample for class c = -||x - centroid_c||^2.  Trained in one pass, no
+/// gradients — the "arbitrary ML model" role.
+pub struct CentroidBase {
+    pub centroids: Vec<f32>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl CentroidBase {
+    pub fn fit(data: &ClientData, classes: usize) -> CentroidBase {
+        let dim = data.dim;
+        let mut sums = vec![0.0f32; classes * dim];
+        let mut counts = vec![0.0f32; classes];
+        for i in 0..data.n() {
+            let c = data.y[i] as usize;
+            counts[c] += 1.0;
+            for j in 0..dim {
+                sums[c * dim + j] += data.x[i * dim + j];
+            }
+        }
+        for c in 0..classes {
+            let denom = counts[c].max(1.0);
+            for j in 0..dim {
+                sums[c * dim + j] /= denom;
+            }
+        }
+        CentroidBase { centroids: sums, dim, classes }
+    }
+
+    pub fn from_flat(flat: &[f32], dim: usize, classes: usize) -> CentroidBase {
+        CentroidBase { centroids: flat.to_vec(), dim, classes }
+    }
+
+    /// Per-class scores for one sample: negative squared distances,
+    /// standardized per sample so the stacking head sees well-conditioned
+    /// features (raw -||x-c||^2 has magnitude ~dim and a large shared
+    /// offset, which cripples a softmax-regression head).
+    pub fn scores(&self, x: &[f32]) -> Vec<f32> {
+        let raw: Vec<f32> = (0..self.classes)
+            .map(|c| {
+                let mut d = 0.0f32;
+                for j in 0..self.dim {
+                    let diff = x[j] - self.centroids[c * self.dim + j];
+                    d += diff * diff;
+                }
+                -d
+            })
+            .collect();
+        let mean = raw.iter().sum::<f32>() / raw.len() as f32;
+        let var = raw.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+            / raw.len() as f32;
+        let sd = var.sqrt().max(1e-6);
+        raw.iter().map(|v| (v - mean) / sd).collect()
+    }
+
+    /// Transform a dataset into head-space (scores as features).
+    pub fn transform(&self, data: &ClientData) -> ClientData {
+        let mut x = Vec::with_capacity(data.n() * self.classes);
+        for i in 0..data.n() {
+            let s = self.scores(&data.x[i * data.dim..(i + 1) * data.dim]);
+            x.extend(s);
+        }
+        ClientData { x, y: data.y.clone(), dim: self.classes, group: data.group }
+    }
+}
+
+/// Register the ensemble `@feddart` functions (`ensemble_learn`,
+/// `ensemble_evaluate`) on a registry backed by the shared client runtime.
+/// The base learner is fitted once per device on first use and cached.
+pub fn register_ensemble_tasks(rt: &Arc<FactClientRuntime>, registry: &TaskRegistry) {
+    let rt_learn = Arc::clone(rt);
+    registry.register("ensemble_learn", move |p| ensemble_learn(&rt_learn, p));
+    let rt_eval = Arc::clone(rt);
+    registry.register("ensemble_evaluate", move |p| ensemble_evaluate(&rt_eval, p));
+}
+
+fn device_data(
+    rt: &FactClientRuntime,
+    p: &Json,
+) -> Result<(String, ClientData, ClientData, usize)> {
+    let device = p
+        .get("_device")
+        .and_then(Json::as_str)
+        .ok_or_else(|| FedError::Fact("missing _device".into()))?
+        .to_string();
+    let classes = p.need("classes")?.as_usize().unwrap_or(0);
+    let (train, test) = rt.supervised_of(&device)?;
+    Ok((device, train, test, classes))
+}
+
+/// Fit-or-fetch the cached base learner for a device.
+fn base_for(
+    rt: &FactClientRuntime,
+    device: &str,
+    model: &str,
+    train: &ClientData,
+    classes: usize,
+) -> CentroidBase {
+    match rt.cached_base_params(device, model) {
+        Some(flat) => CentroidBase::from_flat(&flat, train.dim, classes),
+        None => {
+            let base = CentroidBase::fit(train, classes);
+            rt.cache_base_params(device, model, base.centroids.clone());
+            base
+        }
+    }
+}
+
+fn ensemble_learn(rt: &FactClientRuntime, p: &Json) -> Result<Json> {
+    let (device, train, _test, classes) = device_data(rt, p)?;
+    let model = p.need("model")?.as_str().unwrap_or("").to_string();
+    let mut head = base64::decode_f32(
+        p.need("params")?
+            .as_str()
+            .ok_or_else(|| FedError::Fact("params must be base64".into()))?,
+    )?;
+    let global = head.clone();
+    let lr = p.get("lr").and_then(Json::as_f64).unwrap_or(0.1) as f32;
+    let mu = p.get("mu").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+    let steps = p.get("local_steps").and_then(Json::as_usize).unwrap_or(1).max(1);
+    let round = p.get("round").and_then(Json::as_i64).unwrap_or(0) as u64;
+
+    let base = base_for(rt, &device, &model, &train, classes);
+    let head_space = base.transform(&train);
+    let b = 32.min(head_space.n()).max(1);
+    let mut loss_acc = 0.0f32;
+    for s in 0..steps {
+        let seed = crate::util::rng::splitmix64(
+            (round << 16) ^ s as u64 ^ device.len() as u64,
+        );
+        let (x, y) = head_space.sample_batch(seed, b);
+        loss_acc += LinearModel::sgd_step(
+            &mut head, &x, &y, classes, classes, lr, mu, &global,
+        );
+    }
+    Ok(Json::obj()
+        .set("params", base64::encode_f32(&head))
+        .set("n_samples", train.n())
+        .set("loss", loss_acc / steps as f32))
+}
+
+fn ensemble_evaluate(rt: &FactClientRuntime, p: &Json) -> Result<Json> {
+    let (device, train, test, classes) = device_data(rt, p)?;
+    let model = p.need("model")?.as_str().unwrap_or("").to_string();
+    let head = base64::decode_f32(
+        p.need("params")?
+            .as_str()
+            .ok_or_else(|| FedError::Fact("params must be base64".into()))?,
+    )?;
+    let base = base_for(rt, &device, &model, &train, classes);
+    let head_space = base.transform(&test);
+    let (loss_sum, correct) = LinearModel::evaluate(
+        &head, &head_space.x, &head_space.y, classes, classes,
+    );
+    Ok(Json::obj()
+        .set("loss_sum", loss_sum)
+        .set("correct", correct)
+        .set("n", test.n()))
+}
+
+/// Baseline for E8: base learner alone (no federated head) — accuracy on
+/// the local test set using argmax of base scores.
+pub fn local_only_accuracy(train: &ClientData, test: &ClientData, classes: usize) -> f64 {
+    let base = CentroidBase::fit(train, classes);
+    let mut correct = 0usize;
+    for i in 0..test.n() {
+        let s = base.scores(&test.x[i * test.dim..(i + 1) * test.dim]);
+        let pred = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0 as i32;
+        if pred == test.y[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / test.n().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fact::data::{synthesize, SyntheticConfig};
+
+    fn data() -> ClientData {
+        synthesize(&SyntheticConfig {
+            clients: 1,
+            samples_per_client: 300,
+            dim: 6,
+            classes: 3,
+            ..Default::default()
+        })
+        .unwrap()
+        .remove("client-0")
+        .unwrap()
+    }
+
+    #[test]
+    fn centroid_base_learns_something() {
+        let d = data();
+        let (train, test) = d.train_test_split(0.3);
+        let acc = local_only_accuracy(&train, &test, 3);
+        assert!(acc > 1.0 / 3.0 + 0.05, "base accuracy {acc} not above chance");
+    }
+
+    #[test]
+    fn transform_shapes() {
+        let d = data();
+        let base = CentroidBase::fit(&d, 3);
+        let t = base.transform(&d);
+        assert_eq!(t.dim, 3);
+        assert_eq!(t.n(), d.n());
+        assert_eq!(t.y, d.y);
+    }
+
+    #[test]
+    fn ensemble_model_trait_surface() {
+        let m = EnsembleFlModel::new(4, Aggregation::WeightedFedAvg);
+        assert_eq!(m.param_count(), 4 * 4 + 4);
+        assert_eq!(m.init_params(1).unwrap().len(), 20);
+        let j = m.init_task_params();
+        assert_eq!(j.get("classes").unwrap().as_usize(), Some(4));
+        assert!(m.name().starts_with("ensemble"));
+    }
+
+    #[test]
+    fn scores_prefer_own_centroid() {
+        let d = ClientData {
+            x: vec![0.0, 0.0, 10.0, 10.0],
+            y: vec![0, 1],
+            dim: 2,
+            group: 0,
+        };
+        let base = CentroidBase::fit(&d, 2);
+        let s0 = base.scores(&[0.1, -0.1]);
+        assert!(s0[0] > s0[1]);
+        let s1 = base.scores(&[9.5, 10.2]);
+        assert!(s1[1] > s1[0]);
+    }
+}

@@ -1,0 +1,31 @@
+//! FACT — the Federated Aggregation and Clustering Toolkit (paper §2.2).
+//!
+//! * [`server::FactServer`] — the user entry point (Alg 3-5).
+//! * [`model`] — the AbstractModel layer: [`model::HloModel`] (MLP ≙
+//!   KerasModel/ScikitNNModel, transformer LM), [`model::LinearModel`]
+//!   (native), [`ensemble::EnsembleFlModel`] (stacking ensemble FL).
+//! * [`aggregation`] — FedAvg / weighted / FedProx / median / trimmed mean
+//!   + the HLO-fused kernel variant.
+//! * [`clustering`] — ClusterContainer / Cluster, static / k-means /
+//!   cosine-threshold algorithms (personalized FL).
+//! * [`stopping`] — FL and clustering stopping criteria.
+//! * [`client`] — the client-side runtime registering the `@feddart`
+//!   functions (init / learn / evaluate).
+//! * [`data`] — federated data synthesis (IID / label-skew / latent
+//!   groups) and the DataImporter abstraction.
+
+pub mod aggregation;
+pub mod client;
+pub mod clustering;
+pub mod data;
+pub mod ensemble;
+pub mod model;
+pub mod server;
+pub mod stopping;
+pub mod store;
+
+pub use aggregation::{Aggregation, ClientUpdate};
+pub use client::FactClientRuntime;
+pub use clustering::{Cluster, ClusterContainer, ClusteringAlgorithm};
+pub use model::{FactModel, HloModel, Hyper, LinearModel};
+pub use server::{EvalRecord, FactServer, RoundRecord};

@@ -1,0 +1,403 @@
+//! The model abstraction layer (paper §2.2.1, §B.3).
+//!
+//! "This independence from the underlying library is achieved by
+//! introducing an abstraction layer with the AbstractModel class. ... The
+//! aggregation algorithms ... are part of the model class."
+//!
+//! Concrete implementations:
+//! * [`HloModel`] — any model shipped in the AOT manifest (the MLP ≙ the
+//!   paper's KerasModel / ScikitNNModel, the transformer LM).  All compute
+//!   runs through the PJRT engine; parameters are opaque flat `f32`
+//!   vectors.
+//! * [`LinearModel`] — pure-Rust softmax regression, demonstrating that a
+//!   model family with no HLO artifacts plugs into the same trait (the
+//!   framework-agnosticism claim).
+//! * `EnsembleFlModel` (in [`super::ensemble`]) — the stacking-based
+//!   ensemble FL method (§B.3).
+
+use std::sync::Arc;
+
+use crate::error::{FedError, Result};
+use crate::fact::aggregation::{Aggregation, ClientUpdate};
+use crate::json::Json;
+use crate::runtime::{Engine, Tensor};
+use crate::util::base64;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
+
+/// Hyperparameters carried to the clients each round.
+#[derive(Debug, Clone)]
+pub struct Hyper {
+    pub lr: f32,
+    /// FedProx proximal coefficient (0 = plain FedAvg local objective)
+    pub mu: f32,
+    pub local_steps: usize,
+    pub round: u64,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { lr: 0.1, mu: 0.0, local_steps: 4, round: 0 }
+    }
+}
+
+/// The AbstractModel role.
+pub trait FactModel: Send + Sync {
+    fn name(&self) -> &str;
+    fn param_count(&self) -> usize;
+
+    /// Fresh global parameters.
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>>;
+
+    /// The aggregation rule owned by this model class (paper B.3).
+    fn aggregation(&self) -> &Aggregation;
+
+    /// Aggregate client updates (default: delegate to the rule).
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        pool: Option<&ThreadPool>,
+    ) -> Result<Vec<f32>> {
+        self.aggregation().aggregate(updates, pool)
+    }
+
+    /// parameterDict payload for the client init task ("typically the
+    /// model structure is passed via the parameter Dict", Alg 1).
+    fn init_task_params(&self) -> Json {
+        Json::obj().set("model", self.name())
+    }
+
+    /// parameterDict payload for one client learn call.
+    fn learn_params(&self, global: &[f32], hp: &Hyper) -> Json {
+        Json::obj()
+            .set("model", self.name())
+            .set("params", base64::encode_f32(global))
+            .set("lr", hp.lr)
+            .set("mu", hp.mu)
+            .set("local_steps", hp.local_steps)
+            .set("round", hp.round)
+    }
+
+    /// parameterDict payload for one client evaluate call.
+    fn eval_params(&self, global: &[f32]) -> Json {
+        Json::obj()
+            .set("model", self.name())
+            .set("params", base64::encode_f32(global))
+    }
+
+    /// Decode one client learn result into an update.
+    fn parse_update(&self, device: &str, duration: f64, result: &Json) -> Result<ClientUpdate> {
+        let params = base64::decode_f32(
+            result
+                .need("params")?
+                .as_str()
+                .ok_or_else(|| FedError::Fact("params must be base64 string".into()))?,
+        )?;
+        if params.len() != self.param_count() {
+            return Err(FedError::Fact(format!(
+                "update from '{device}' has {} params, expected {}",
+                params.len(),
+                self.param_count()
+            )));
+        }
+        Ok(ClientUpdate {
+            device: device.to_string(),
+            params,
+            n_samples: result
+                .get("n_samples")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0) as f32,
+            loss: result.get("loss").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
+            duration,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO-backed model (MLP / transformer from the AOT manifest)
+// ---------------------------------------------------------------------------
+
+/// Server-side handle to a model whose compute lives in `artifacts/`.
+pub struct HloModel {
+    name: String,
+    param_count: usize,
+    init_entry: String,
+    aggregation: Aggregation,
+    engine: Engine,
+}
+
+impl HloModel {
+    /// Look the model up in the engine's manifest.  Warms (pre-compiles)
+    /// the train/eval executables so the first federated round does not
+    /// pay XLA compilation (§Perf: the first-round spike was ~200ms for
+    /// the MLP and ~4s for the transformer).
+    pub fn new(engine: &Engine, model_name: &str, aggregation: Aggregation) -> Result<HloModel> {
+        let meta = engine.manifest().model(model_name)?.clone();
+        for role in ["train", "eval"] {
+            if let Ok(entry) = meta.entry(role) {
+                let _ = engine.warm(entry);
+            }
+        }
+        Ok(HloModel {
+            name: model_name.to_string(),
+            param_count: meta.param_count,
+            init_entry: meta.entry("init")?.to_string(),
+            aggregation,
+            engine: engine.clone(),
+        })
+    }
+
+    pub fn arc(engine: &Engine, model_name: &str, agg: Aggregation) -> Result<Arc<dyn FactModel>> {
+        Ok(Arc::new(Self::new(engine, model_name, agg)?))
+    }
+}
+
+impl FactModel for HloModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let out = self
+            .engine
+            .execute(&self.init_entry, vec![Tensor::scalar_i32(seed)])?;
+        out.into_iter().next().unwrap().into_f32s()
+    }
+
+    fn aggregation(&self) -> &Aggregation {
+        &self.aggregation
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pure-Rust linear (softmax regression) model
+// ---------------------------------------------------------------------------
+
+/// Softmax regression `y = softmax(x W + b)` implemented natively; shows
+/// the trait is framework-agnostic (no artifacts involved).
+pub struct LinearModel {
+    name: String,
+    pub dim: usize,
+    pub classes: usize,
+    aggregation: Aggregation,
+}
+
+impl LinearModel {
+    pub fn new(dim: usize, classes: usize, aggregation: Aggregation) -> LinearModel {
+        LinearModel { name: format!("linear_{dim}x{classes}"), dim, classes, aggregation }
+    }
+
+    pub fn arc(dim: usize, classes: usize, agg: Aggregation) -> Arc<dyn FactModel> {
+        Arc::new(Self::new(dim, classes, agg))
+    }
+
+    /// Forward pass: logits for one row.
+    pub fn logits(params: &[f32], x: &[f32], dim: usize, classes: usize) -> Vec<f32> {
+        let (w, b) = params.split_at(dim * classes);
+        let mut out = b.to_vec();
+        for (i, &xi) in x.iter().enumerate() {
+            for c in 0..classes {
+                out[c] += xi * w[i * classes + c];
+            }
+        }
+        out
+    }
+
+    /// One SGD step on a batch; returns mean loss.  Used by the client-side
+    /// runtime (`fact::client`) — same math as the HLO train step but in
+    /// plain Rust.
+    pub fn sgd_step(
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        dim: usize,
+        classes: usize,
+        lr: f32,
+        mu: f32,
+        global: &[f32],
+    ) -> f32 {
+        let b = y.len();
+        let mut grad = vec![0.0f32; params.len()];
+        let mut loss = 0.0f32;
+        for (r, &yr) in y.iter().enumerate() {
+            let xi = &x[r * dim..(r + 1) * dim];
+            let logits = Self::logits(params, xi, dim, classes);
+            let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let exps: Vec<f32> = logits.iter().map(|v| (v - mx).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            loss += z.ln() + mx - logits[yr as usize];
+            for c in 0..classes {
+                let p = exps[c] / z - if c as i32 == yr { 1.0 } else { 0.0 };
+                for (i, &xv) in xi.iter().enumerate() {
+                    grad[i * classes + c] += p * xv;
+                }
+                grad[dim * classes + c] += p;
+            }
+        }
+        let scale = 1.0 / b as f32;
+        for ((p, g), &gp) in params.iter_mut().zip(&grad).zip(global.iter()) {
+            *p -= lr * (g * scale + mu * (*p - gp));
+        }
+        loss * scale
+    }
+
+    /// Evaluate: (summed loss, correct count).
+    pub fn evaluate(
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        dim: usize,
+        classes: usize,
+    ) -> (f32, f32) {
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        for (r, &yr) in y.iter().enumerate() {
+            let xi = &x[r * dim..(r + 1) * dim];
+            let logits = Self::logits(params, xi, dim, classes);
+            let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let z: f32 = logits.iter().map(|v| (v - mx).exp()).sum();
+            loss_sum += z.ln() + mx - logits[yr as usize];
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            if pred == yr {
+                correct += 1.0;
+            }
+        }
+        (loss_sum, correct)
+    }
+}
+
+impl FactModel for LinearModel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn param_count(&self) -> usize {
+        self.dim * self.classes + self.classes
+    }
+
+    fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let mut rng = Rng::new(seed as u64);
+        let mut p = vec![0.0f32; self.param_count()];
+        for v in p.iter_mut().take(self.dim * self.classes) {
+            *v = 0.01 * rng.normal() as f32;
+        }
+        Ok(p)
+    }
+
+    fn aggregation(&self) -> &Aggregation {
+        &self.aggregation
+    }
+
+    fn init_task_params(&self) -> Json {
+        Json::obj()
+            .set("model", self.name())
+            .set("dim", self.dim)
+            .set("classes", self.classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    #[test]
+    fn linear_model_learns_separable_task() {
+        let m = LinearModel::new(4, 3, Aggregation::FedAvg);
+        let mut params = m.init_params(1).unwrap();
+        let global = params.clone();
+        // separable: class = argmax of first 3 features
+        let mut rng = Rng::new(5);
+        let n = 64;
+        let x: Vec<f32> = rng.normal_vec(n * 4);
+        let y: Vec<i32> = (0..n)
+            .map(|i| {
+                let row = &x[i * 4..i * 4 + 3];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0 as i32
+            })
+            .collect();
+        let first = LinearModel::sgd_step(&mut params, &x, &y, 4, 3, 0.5, 0.0, &global);
+        let mut last = first;
+        for _ in 0..60 {
+            last = LinearModel::sgd_step(&mut params, &x, &y, 4, 3, 0.5, 0.0, &global);
+        }
+        assert!(last < 0.5 * first, "loss {first} -> {last}");
+        let (_, correct) = LinearModel::evaluate(&params, &x, &y, 4, 3);
+        assert!(correct / n as f32 > 0.8);
+    }
+
+    #[test]
+    fn linear_prox_term_shrinks_step() {
+        let m = LinearModel::new(3, 2, Aggregation::FedProx);
+        // start far from the global point so the proximal pull dominates
+        let base = vec![1.0f32; m.param_count()];
+        let global = vec![0.0f32; base.len()];
+        let x = vec![1.0, -1.0, 0.5, 0.3, 0.8, -0.2];
+        let y = vec![0, 1];
+        let mut plain = base.clone();
+        let mut prox = base.clone();
+        // keep lr*mu < 1 so the proximal pull is a contraction
+        LinearModel::sgd_step(&mut plain, &x, &y, 3, 2, 0.5, 0.0, &global);
+        LinearModel::sgd_step(&mut prox, &x, &y, 3, 2, 0.5, 1.0, &global);
+        let norm = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(norm(&prox) < norm(&plain));
+    }
+
+    #[test]
+    fn learn_params_roundtrip_through_parse_update() {
+        let m = LinearModel::new(2, 2, Aggregation::WeightedFedAvg);
+        let global = m.init_params(3).unwrap();
+        let hp = Hyper { lr: 0.2, mu: 0.1, local_steps: 3, round: 7 };
+        let j = m.learn_params(&global, &hp);
+        assert_eq!(j.get("model").unwrap().as_str(), Some(m.name()));
+        assert_eq!(j.get("round").unwrap().as_i64(), Some(7));
+        // simulate a client echoing updated params back
+        let result = Json::obj()
+            .set("params", j.get("params").unwrap().clone())
+            .set("n_samples", 17)
+            .set("loss", 0.5);
+        let u = m.parse_update("edge", 1.5, &result).unwrap();
+        assert_eq!(u.params, global);
+        assert_eq!(u.n_samples, 17.0);
+        assert_eq!(u.duration, 1.5);
+    }
+
+    #[test]
+    fn parse_update_rejects_wrong_length() {
+        let m = LinearModel::new(2, 2, Aggregation::FedAvg);
+        let result = Json::obj()
+            .set("params", base64::encode_f32(&[1.0, 2.0]))
+            .set("n_samples", 1);
+        assert!(m.parse_update("edge", 0.0, &result).is_err());
+    }
+
+    #[test]
+    fn hlo_model_if_artifacts_built() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let engine = Engine::load(&dir, 1).unwrap();
+        let m = HloModel::new(&engine, "mlp_tiny", Aggregation::WeightedFedAvg).unwrap();
+        assert_eq!(m.param_count(), 212);
+        let p = m.init_params(42).unwrap();
+        assert_eq!(p.len(), 212);
+        let p2 = m.init_params(42).unwrap();
+        assert_eq!(p, p2);
+        assert!(HloModel::new(&engine, "no_such_model", Aggregation::FedAvg).is_err());
+        engine.shutdown();
+    }
+}

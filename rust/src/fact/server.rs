@@ -1,0 +1,590 @@
+//! The FACT Server — the user's entry point (paper §2.2.1, Alg 3-5).
+//!
+//! "The entry point for the user is the Server class. Internally it stores
+//! an instance of the Workflowmanager of Fed-DART to do the communication
+//! with the clients and sending tasks to them. The Server has two main
+//! methods, one for initializing the server and the clients and one to
+//! launch the training."
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::workflow::WorkflowManager;
+use crate::error::{FedError, Result};
+use crate::fact::aggregation::ClientUpdate;
+use crate::fact::clustering::{ClusterContainer, ClusteringAlgorithm, StaticClustering};
+use crate::fact::model::{FactModel, Hyper};
+use crate::fact::stopping::{
+    ClusteringStoppingCriterion, FixedClusteringRounds, FlStoppingCriterion,
+};
+use crate::json::Json;
+use crate::metrics::Registry;
+use crate::util::pool::ThreadPool;
+use crate::util::Stopwatch;
+
+/// Per-round record (feeds EXPERIMENTS.md and the benches).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub clustering_round: usize,
+    pub cluster_id: usize,
+    pub round: usize,
+    /// clients that contributed this round
+    pub n_clients: usize,
+    /// mean local training loss across contributing clients
+    pub mean_loss: f32,
+    /// wall time of the whole round (dispatch -> aggregated) in ms
+    pub round_ms: f64,
+    /// aggregation-only time in ms
+    pub agg_ms: f64,
+    /// mean client-reported duration (paper taskResult.duration), seconds
+    pub mean_client_s: f64,
+}
+
+/// Evaluation summary for one cluster.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub cluster_id: usize,
+    pub loss: f64,
+    /// classification accuracy, or NaN for LM workloads
+    pub accuracy: f64,
+    /// per-token nll for LM workloads, or NaN
+    pub nll_per_token: f64,
+    pub n_clients: usize,
+}
+
+/// Server-side update rule applied to the aggregated target (FedAvgM,
+/// Hsu et al. 2019 — the "new aggregation algorithms can be added easily"
+/// extension point, paper §B.3).  `lr = 1, momentum = 0` is plain
+/// parameter replacement (classic FedAvg) and takes a fast path that is
+/// bit-identical to assignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerOpt {
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+impl Default for ServerOpt {
+    fn default() -> Self {
+        ServerOpt { lr: 1.0, momentum: 0.0 }
+    }
+}
+
+impl ServerOpt {
+    /// params <- params + lr * buf, where buf <- momentum*buf + (target - params).
+    pub fn apply(&self, params: &mut Vec<f32>, target: Vec<f32>, buf: &mut Vec<f32>) {
+        if self.lr == 1.0 && self.momentum == 0.0 {
+            *params = target; // exact FedAvg replacement
+            return;
+        }
+        if buf.len() != params.len() {
+            *buf = vec![0.0; params.len()];
+        }
+        for ((p, t), b) in params.iter_mut().zip(target).zip(buf.iter_mut()) {
+            *b = self.momentum * *b + (t - *p);
+            *p += self.lr * *b;
+        }
+    }
+}
+
+/// The FACT Server.
+pub struct FactServer {
+    wm: Arc<WorkflowManager>,
+    container: ClusterContainer,
+    clustering: Box<dyn ClusteringAlgorithm>,
+    cluster_stop: Box<dyn ClusteringStoppingCriterion>,
+    fl_stop: Arc<dyn FlStoppingCriterion>,
+    pub hyper: Hyper,
+    pub server_opt: ServerOpt,
+    pub round_timeout: Duration,
+    pool: Arc<ThreadPool>,
+    metrics: Registry,
+    history: Vec<RoundRecord>,
+    /// latest local update per client (clustering input)
+    latest_updates: BTreeMap<String, Vec<f32>>,
+    initialized: bool,
+}
+
+impl FactServer {
+    /// Construct around a WorkflowManager (test-mode or production).
+    pub fn new(wm: WorkflowManager) -> FactServer {
+        FactServer {
+            wm: Arc::new(wm),
+            container: ClusterContainer::default(),
+            clustering: Box::new(StaticClustering),
+            cluster_stop: Box::new(FixedClusteringRounds(1)),
+            fl_stop: Arc::new(crate::fact::stopping::FixedRoundFl(10)),
+            hyper: Hyper::default(),
+            server_opt: ServerOpt::default(),
+            round_timeout: Duration::from_secs(300),
+            pool: Arc::new(ThreadPool::default_size()),
+            metrics: Registry::new(),
+            history: Vec::new(),
+            latest_updates: BTreeMap::new(),
+            initialized: false,
+        }
+    }
+
+    pub fn with_hyper(mut self, hyper: Hyper) -> FactServer {
+        self.hyper = hyper;
+        self
+    }
+
+    pub fn with_fl_stop(mut self, s: Arc<dyn FlStoppingCriterion>) -> FactServer {
+        self.fl_stop = s;
+        self
+    }
+
+    pub fn workflow_manager(&self) -> &WorkflowManager {
+        &self.wm
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    pub fn history(&self) -> &[RoundRecord] {
+        &self.history
+    }
+
+    pub fn container(&self) -> &ClusterContainer {
+        &self.container
+    }
+
+    /// Latest per-client local updates (clustering / diagnostics).
+    pub fn latest_updates(&self) -> &BTreeMap<String, Vec<f32>> {
+        &self.latest_updates
+    }
+
+    /// Persist every cluster's current global parameters to an object
+    /// store (the paper's MinIO/S3 role, §4.2).  Key layout:
+    /// `models/<model>-c<cluster>/round-<n>.json`.
+    pub fn checkpoint<S: crate::fact::store::ObjectStore>(
+        &self,
+        store: &crate::fact::store::ModelStore<S>,
+        round: u64,
+    ) -> Result<()> {
+        for cluster in &self.container.clusters {
+            let meta = Json::obj()
+                .set("cluster_id", cluster.id)
+                .set("clients", cluster.clients.len())
+                .set(
+                    "last_loss",
+                    cluster.loss_history.last().copied().unwrap_or(f32::NAN),
+                );
+            store.save(&crate::fact::store::Snapshot {
+                model: format!("{}-c{}", cluster.model.name(), cluster.id),
+                params: cluster.params.clone(),
+                round,
+                meta,
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Restore a cluster's parameters from the latest snapshot, if one
+    /// exists.  Returns whether a snapshot was applied.
+    pub fn restore_latest<S: crate::fact::store::ObjectStore>(
+        &mut self,
+        store: &crate::fact::store::ModelStore<S>,
+        cluster_idx: usize,
+    ) -> Result<bool> {
+        let cluster = self
+            .container
+            .clusters
+            .get_mut(cluster_idx)
+            .ok_or_else(|| FedError::Fact(format!("no cluster {cluster_idx}")))?;
+        let key = format!("{}-c{}", cluster.model.name(), cluster.id);
+        match store.load_latest(&key)? {
+            Some(snap) if snap.params.len() == cluster.params.len() => {
+                cluster.params = snap.params;
+                Ok(true)
+            }
+            Some(_) => Err(FedError::Fact("snapshot size mismatch".into())),
+            None => Ok(false),
+        }
+    }
+
+    // ----------------------------------------------------------- Alg 3
+
+    /// `initialization_by_model`: standard FL — one cluster with every
+    /// connected client, static clustering, one clustering round.
+    pub fn initialization_by_model(
+        &mut self,
+        model: Arc<dyn FactModel>,
+        fl_stop: Arc<dyn FlStoppingCriterion>,
+        seed: i32,
+    ) -> Result<()> {
+        let clients = self.wm.get_all_device_names()?;
+        if clients.is_empty() {
+            return Err(FedError::Fact("no clients connected".into()));
+        }
+        let params = model.init_params(seed)?;
+        let container = ClusterContainer::single(model, params, clients);
+        self.initialization_by_cluster_container(
+            container,
+            Box::new(StaticClustering),
+            Box::new(FixedClusteringRounds(1)),
+            fl_stop,
+        )
+    }
+
+    /// `initialization_by_cluster_container`: personalized FL with explicit
+    /// clusters, clustering algorithm, and stopping criteria.
+    pub fn initialization_by_cluster_container(
+        &mut self,
+        container: ClusterContainer,
+        clustering: Box<dyn ClusteringAlgorithm>,
+        cluster_stop: Box<dyn ClusteringStoppingCriterion>,
+        fl_stop: Arc<dyn FlStoppingCriterion>,
+    ) -> Result<()> {
+        if container.clusters.is_empty() {
+            return Err(FedError::Fact("empty cluster container".into()));
+        }
+        // Alg 3: register the init task and run it on every cluster's
+        // clients ("Initialize the local models on the clients ... based on
+        // the global model in the cluster").
+        let model0 = Arc::clone(&container.clusters[0].model);
+        self.wm.create_init_task(model0.init_task_params(), "fact_init");
+        for cluster in &container.clusters {
+            self.wm
+                .selector()
+                .ensure_initialized(&cluster.clients.to_vec())?;
+        }
+        self.container = container;
+        self.clustering = clustering;
+        self.cluster_stop = cluster_stop;
+        self.fl_stop = fl_stop;
+        self.initialized = true;
+        log::info!(target: "fact::server",
+            "initialized: {} cluster(s), {} client(s)",
+            self.container.clusters.len(),
+            self.container.client_count());
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- Alg 4/5
+
+    /// The learning method (Alg 4): clustering rounds over parallel
+    /// per-cluster training sessions.
+    pub fn learn(&mut self) -> Result<()> {
+        if !self.initialized {
+            return Err(FedError::Fact("server not initialized".into()));
+        }
+        let mut clustering_round = 0;
+        loop {
+            // Alg 4 line 2: "foreach cluster ... do in parallel".
+            let clusters = std::mem::take(&mut self.container.clusters);
+            let wm = Arc::clone(&self.wm);
+            let hyper = self.hyper.clone();
+            let server_opt = self.server_opt;
+            let timeout = self.round_timeout;
+            let fl_stop = Arc::clone(&self.fl_stop);
+            let pool_for_agg = Arc::clone(&self.pool);
+            let outputs = self.pool.map(clusters, move |mut cluster| {
+                let r = train_cluster(
+                    &wm,
+                    &mut cluster,
+                    &hyper,
+                    server_opt,
+                    fl_stop.as_ref(),
+                    timeout,
+                    clustering_round,
+                    &pool_for_agg,
+                );
+                (cluster, r)
+            });
+            let mut latest = BTreeMap::new();
+            let mut restored = Vec::new();
+            for (cluster, result) in outputs {
+                let (records, updates) = result?;
+                self.history.extend(records);
+                for (dev, params) in updates {
+                    latest.insert(dev, params);
+                }
+                restored.push(cluster);
+            }
+            self.container.clusters = restored;
+            self.latest_updates.extend(latest);
+            self.metrics.counter("fact.clustering_rounds").inc();
+
+            clustering_round += 1;
+            if self.cluster_stop.should_stop(clustering_round) {
+                break;
+            }
+            // Alg 4 line 5: apply the clustering algorithm.
+            let container = std::mem::take(&mut self.container);
+            self.container = self
+                .clustering
+                .recluster(container, &self.latest_updates)?;
+            log::info!(target: "fact::server",
+                "clustering round {clustering_round}: now {} cluster(s)",
+                self.container.clusters.len());
+        }
+        Ok(())
+    }
+
+    /// Evaluate every cluster's model on its clients' held-out data.
+    pub fn evaluate(&self) -> Result<Vec<EvalRecord>> {
+        let mut out = Vec::new();
+        for cluster in &self.container.clusters {
+            let dict: BTreeMap<String, Json> = cluster
+                .clients
+                .iter()
+                .map(|c| (c.clone(), cluster.model.eval_params(&cluster.params)))
+                .collect();
+            let results = self.wm.run_task(dict, "fact_evaluate", self.round_timeout)?;
+            let mut loss_sum = 0.0f64;
+            let mut correct = 0.0f64;
+            let mut ntok = 0.0f64;
+            let mut n = 0.0f64;
+            for r in &results {
+                loss_sum += r.result.get("loss_sum").and_then(Json::as_f64).unwrap_or(0.0);
+                correct += r.result.get("correct").and_then(Json::as_f64).unwrap_or(0.0);
+                ntok += r.result.get("ntok").and_then(Json::as_f64).unwrap_or(0.0);
+                n += r.result.get("n").and_then(Json::as_f64).unwrap_or(0.0);
+            }
+            let is_lm = ntok > 0.0;
+            out.push(EvalRecord {
+                cluster_id: cluster.id,
+                loss: if is_lm { loss_sum / ntok.max(1.0) } else { loss_sum / n.max(1.0) },
+                accuracy: if is_lm { f64::NAN } else { correct / n.max(1.0) },
+                nll_per_token: if is_lm { loss_sum / ntok } else { f64::NAN },
+                n_clients: results.len(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Alg 5: the training session of one cluster.  Returns the round records
+/// and each client's final local update (for clustering).
+#[allow(clippy::too_many_arguments)]
+fn train_cluster(
+    wm: &WorkflowManager,
+    cluster: &mut crate::fact::clustering::Cluster,
+    hyper: &Hyper,
+    server_opt: ServerOpt,
+    fl_stop: &dyn FlStoppingCriterion,
+    timeout: Duration,
+    clustering_round: usize,
+    pool: &ThreadPool,
+) -> Result<(Vec<RoundRecord>, BTreeMap<String, Vec<f32>>)> {
+    let mut records = Vec::new();
+    let mut latest: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut round = 0usize;
+    loop {
+        let sw = Stopwatch::start();
+        let hp = Hyper { round: round as u64, ..hyper.clone() };
+        // Alg 5 line 3: send a training task to each client in the cluster.
+        let dict: BTreeMap<String, Json> = cluster
+            .clients
+            .iter()
+            .map(|c| (c.clone(), cluster.model.learn_params(&cluster.params, &hp)))
+            .collect();
+        let t_start = Instant::now();
+        let results = wm.run_task(dict, "fact_learn", timeout)?;
+        if results.is_empty() {
+            return Err(FedError::Fact(format!(
+                "cluster {}: no client returned a result in round {round}",
+                cluster.id
+            )));
+        }
+        // Alg 5 line 5: fetch updated parameters and aggregate.
+        let mut updates: Vec<ClientUpdate> = results
+            .iter()
+            .map(|r| cluster.model.parse_update(&r.device_name, r.duration, &r.result))
+            .collect::<Result<Vec<_>>>()?;
+        // deterministic aggregation order regardless of arrival order:
+        // f32 reduction is order-sensitive, and mode parity (E6) demands
+        // bit-identical results between test mode and the TCP path
+        updates.sort_by(|a, b| a.device.cmp(&b.device));
+        let agg_sw = Stopwatch::start();
+        let target = cluster.model.aggregate(&updates, Some(pool))?;
+        let mut buf = std::mem::take(&mut cluster.momentum);
+        server_opt.apply(&mut cluster.params, target, &mut buf);
+        cluster.momentum = buf;
+        let agg_ms = agg_sw.elapsed_ms();
+
+        let mean_loss =
+            updates.iter().map(|u| u.loss).sum::<f32>() / updates.len() as f32;
+        let mean_client_s =
+            updates.iter().map(|u| u.duration).sum::<f64>() / updates.len() as f64;
+        cluster.loss_history.push(mean_loss);
+        for u in &updates {
+            latest.insert(u.device.clone(), u.params.clone());
+        }
+        records.push(RoundRecord {
+            clustering_round,
+            cluster_id: cluster.id,
+            round,
+            n_clients: updates.len(),
+            mean_loss,
+            round_ms: sw.elapsed_ms(),
+            agg_ms,
+            mean_client_s,
+        });
+        log::debug!(target: "fact::server",
+            "cluster {} round {round}: loss {mean_loss:.4} ({} clients, {:.1}ms)",
+            cluster.id, updates.len(), t_start.elapsed().as_secs_f64() * 1e3);
+
+        round += 1;
+        // Alg 5 line 7: stopping criterion.
+        if fl_stop.should_stop(round, &cluster.loss_history) {
+            break;
+        }
+    }
+    Ok((records, latest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_opt_replacement_is_exact() {
+        let opt = ServerOpt::default();
+        let mut p = vec![1.0f32, 2.0];
+        let mut buf = Vec::new();
+        opt.apply(&mut p, vec![5.0, -1.0], &mut buf);
+        assert_eq!(p, vec![5.0, -1.0]);
+        assert!(buf.is_empty(), "fast path must not allocate a buffer");
+    }
+
+    #[test]
+    fn server_opt_momentum_accumulates() {
+        let opt = ServerOpt { lr: 1.0, momentum: 0.5 };
+        let mut p = vec![0.0f32];
+        let mut buf = Vec::new();
+        // constant target 1.0: step1 delta=1 -> p=1; step2 buf=0.5*1+(1-1)=0.5 -> p=1.5
+        opt.apply(&mut p, vec![1.0], &mut buf);
+        assert!((p[0] - 1.0).abs() < 1e-6);
+        opt.apply(&mut p, vec![1.0], &mut buf);
+        assert!((p[0] - 1.5).abs() < 1e-6, "momentum overshoot expected, got {}", p[0]);
+    }
+
+    #[test]
+    fn server_opt_small_lr_damps() {
+        let opt = ServerOpt { lr: 0.1, momentum: 0.0 };
+        let mut p = vec![0.0f32];
+        let mut buf = Vec::new();
+        opt.apply(&mut p, vec![1.0], &mut buf);
+        assert!((p[0] - 0.1).abs() < 1e-6);
+    }
+    use crate::dart::TaskRegistry;
+    use crate::fact::aggregation::Aggregation;
+    use crate::fact::client::FactClientRuntime;
+    use crate::fact::data::{synthesize, Partition, SyntheticConfig};
+    use crate::fact::model::LinearModel;
+    use crate::fact::stopping::FixedRoundFl;
+    use crate::runtime::{default_artifacts_dir, Engine};
+
+    /// Full FACT loop over test mode with the pure-Rust linear model
+    /// (runs even without artifacts) — federated loss must decrease.
+    fn linear_fixture(
+        clients: usize,
+        partition: Partition,
+    ) -> Option<(FactServer, Arc<dyn FactModel>)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None; // engine construction requires the manifest
+        }
+        let engine = Engine::load(&dir, 1).unwrap();
+        let registry = TaskRegistry::new();
+        let rt = FactClientRuntime::new(engine);
+        let data = synthesize(&SyntheticConfig {
+            clients,
+            samples_per_client: 256,
+            dim: 8,
+            classes: 4,
+            partition,
+            ..Default::default()
+        })
+        .unwrap();
+        for (name, d) in data {
+            rt.add_supervised(&name, d);
+        }
+        rt.register(&registry);
+        let wm = WorkflowManager::test_mode(clients, registry, 2);
+        let model = LinearModel::arc(8, 4, Aggregation::WeightedFedAvg);
+        Some((FactServer::new(wm), model))
+    }
+
+    #[test]
+    fn standard_fl_loss_decreases() {
+        let Some((mut server, model)) = linear_fixture(4, Partition::Iid) else {
+            return;
+        };
+        server.hyper = Hyper { lr: 0.3, mu: 0.0, local_steps: 6, round: 0 };
+        server
+            .initialization_by_model(model, Arc::new(FixedRoundFl(10)), 42)
+            .unwrap();
+        server.learn().unwrap();
+        let hist = server.history();
+        assert_eq!(hist.len(), 10);
+        let first = hist.first().unwrap().mean_loss;
+        let last = hist.last().unwrap().mean_loss;
+        assert!(
+            last < 0.7 * first,
+            "federated loss did not decrease: {first} -> {last}"
+        );
+        assert!(hist.iter().all(|r| r.n_clients == 4));
+        // evaluation works and accuracy is above chance (0.25)
+        let evals = server.evaluate().unwrap();
+        assert_eq!(evals.len(), 1);
+        assert!(evals[0].accuracy > 0.3, "accuracy {}", evals[0].accuracy);
+    }
+
+    #[test]
+    fn learn_requires_initialization() {
+        let Some((mut server, _)) = linear_fixture(2, Partition::Iid) else {
+            return;
+        };
+        assert!(server.learn().is_err());
+    }
+
+    #[test]
+    fn latest_updates_are_tracked_per_client() {
+        let Some((mut server, model)) = linear_fixture(3, Partition::Iid) else {
+            return;
+        };
+        server
+            .initialization_by_model(model, Arc::new(FixedRoundFl(2)), 1)
+            .unwrap();
+        server.learn().unwrap();
+        assert_eq!(server.latest_updates().len(), 3);
+        for v in server.latest_updates().values() {
+            assert_eq!(v.len(), 8 * 4 + 4);
+        }
+    }
+
+    #[test]
+    fn clustered_fl_runs_multiple_clustering_rounds() {
+        use crate::fact::clustering::KMeansClustering;
+        let Some((mut server, model)) =
+            linear_fixture(6, Partition::LatentGroups { groups: 2 })
+        else {
+            return;
+        };
+        server.hyper = Hyper { lr: 0.3, mu: 0.0, local_steps: 4, round: 0 };
+        let clients = server.workflow_manager().get_all_device_names().unwrap();
+        let params = model.init_params(0).unwrap();
+        let container = ClusterContainer::single(model, params, clients);
+        server
+            .initialization_by_cluster_container(
+                container,
+                Box::new(KMeansClustering::new(2)),
+                Box::new(FixedClusteringRounds(2)),
+                Arc::new(FixedRoundFl(3)),
+            )
+            .unwrap();
+        server.learn().unwrap();
+        // after round 1 the container was re-clustered into 2 clusters
+        assert_eq!(server.container().clusters.len(), 2);
+        // history spans both clustering rounds
+        assert!(server.history().iter().any(|r| r.clustering_round == 0));
+        assert!(server.history().iter().any(|r| r.clustering_round == 1));
+        let evals = server.evaluate().unwrap();
+        assert_eq!(evals.len(), 2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Stopping criteria (paper §B.4).
+//!
+//! Two abstract families: one for the FL rounds within a cluster, one for
+//! the outer clustering loop.  The paper ships fixed-round subclasses of
+//! each; we add a loss-plateau FL criterion as the documented extension
+//! path ("to create new stopping criteria, one only has to implement a
+//! subclass ... further information, such as how much the weights ...
+//! have changed, [is passed] via keyword arguments" — here, the loss
+//! history slice).
+
+/// AbstractFLStoppingCriterion: decides after each training round of one
+/// cluster.  `losses` is the cluster's mean-client-loss history including
+/// the round just finished.
+pub trait FlStoppingCriterion: Send + Sync {
+    fn should_stop(&self, rounds_done: usize, losses: &[f32]) -> bool;
+    fn name(&self) -> &'static str;
+}
+
+/// AbstractClusteringStoppingCriterion: decides after each clustering round.
+pub trait ClusteringStoppingCriterion: Send + Sync {
+    fn should_stop(&self, clustering_rounds_done: usize) -> bool;
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's FixedRoundFLStoppingCriterion.
+pub struct FixedRoundFl(pub usize);
+
+impl FlStoppingCriterion for FixedRoundFl {
+    fn should_stop(&self, rounds_done: usize, _losses: &[f32]) -> bool {
+        rounds_done >= self.0
+    }
+    fn name(&self) -> &'static str {
+        "fixed_round"
+    }
+}
+
+/// Stop when the loss has not improved by `min_delta` for `patience`
+/// consecutive rounds (the extension example).
+pub struct LossPlateauFl {
+    pub patience: usize,
+    pub min_delta: f32,
+    /// hard cap regardless of plateau
+    pub max_rounds: usize,
+}
+
+impl FlStoppingCriterion for LossPlateauFl {
+    fn should_stop(&self, rounds_done: usize, losses: &[f32]) -> bool {
+        if rounds_done >= self.max_rounds {
+            return true;
+        }
+        if losses.len() <= self.patience {
+            return false;
+        }
+        let recent = &losses[losses.len() - self.patience..];
+        let best_before = losses[..losses.len() - self.patience]
+            .iter()
+            .fold(f32::INFINITY, |a, &b| a.min(b));
+        recent.iter().all(|&l| l > best_before - self.min_delta)
+    }
+    fn name(&self) -> &'static str {
+        "loss_plateau"
+    }
+}
+
+/// The paper's fixed-iteration clustering criterion; `1` (the default from
+/// `initialization_by_model`, Alg 3) makes the setup "equivalent to
+/// standard FL".
+pub struct FixedClusteringRounds(pub usize);
+
+impl ClusteringStoppingCriterion for FixedClusteringRounds {
+    fn should_stop(&self, clustering_rounds_done: usize) -> bool {
+        clustering_rounds_done >= self.0
+    }
+    fn name(&self) -> &'static str {
+        "fixed_clustering_rounds"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_round_counts() {
+        let c = FixedRoundFl(3);
+        assert!(!c.should_stop(0, &[]));
+        assert!(!c.should_stop(2, &[1.0, 0.9]));
+        assert!(c.should_stop(3, &[1.0, 0.9, 0.8]));
+        assert!(c.should_stop(4, &[]));
+    }
+
+    #[test]
+    fn plateau_stops_on_stagnation() {
+        let c = LossPlateauFl { patience: 3, min_delta: 0.01, max_rounds: 100 };
+        // improving: never stops
+        let improving: Vec<f32> = (0..10).map(|i| 1.0 - 0.1 * i as f32).collect();
+        assert!(!c.should_stop(10, &improving));
+        // stagnant after round 4
+        let mut stagnant = vec![1.0, 0.8, 0.6, 0.5];
+        stagnant.extend([0.5001, 0.4999, 0.5002]);
+        assert!(c.should_stop(7, &stagnant));
+        // not enough history
+        assert!(!c.should_stop(2, &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn plateau_hard_cap() {
+        let c = LossPlateauFl { patience: 3, min_delta: 0.01, max_rounds: 5 };
+        let improving: Vec<f32> = (0..6).map(|i| 1.0 - 0.1 * i as f32).collect();
+        assert!(c.should_stop(5, &improving));
+    }
+
+    #[test]
+    fn clustering_rounds() {
+        let c = FixedClusteringRounds(1);
+        assert!(!c.should_stop(0));
+        assert!(c.should_stop(1));
+    }
+}

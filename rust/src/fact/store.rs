@@ -1,0 +1,238 @@
+//! Model persistence — the paper's §4.2 object-store integration ("MinIO,
+//! a distributed object storage server, can be integrated in order to,
+//! for example, save trained ML models to persistent S3 storage").
+//!
+//! The abstraction is a minimal object store (put/get/list bytes under
+//! string keys); [`FsObjectStore`] is the filesystem-backed stand-in for
+//! MinIO/S3 on this testbed.  [`ModelStore`] layers model semantics on
+//! top: versioned parameter snapshots with a JSON metadata envelope, used
+//! by [`super::server::FactServer::checkpoint`] for save/resume.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::util::base64;
+
+/// Minimal object-store interface (the MinIO/S3 role).
+pub trait ObjectStore: Send + Sync {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()>;
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+    fn exists(&self, key: &str) -> bool {
+        self.get(key).is_ok()
+    }
+}
+
+/// Filesystem-backed object store.  Keys map to files under the root;
+/// key segments (`a/b/c`) become directories.
+pub struct FsObjectStore {
+    root: PathBuf,
+}
+
+impl FsObjectStore {
+    pub fn new(root: impl AsRef<Path>) -> Result<FsObjectStore> {
+        std::fs::create_dir_all(root.as_ref())?;
+        Ok(FsObjectStore { root: root.as_ref().to_path_buf() })
+    }
+
+    fn path_of(&self, key: &str) -> Result<PathBuf> {
+        if key.contains("..") || key.starts_with('/') {
+            return Err(FedError::Config(format!("invalid object key '{key}'")));
+        }
+        Ok(self.root.join(key))
+    }
+}
+
+impl ObjectStore for FsObjectStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        let path = self.path_of(key)?;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        // write-then-rename for atomicity
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, data)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        Ok(std::fs::read(self.path_of(key)?)?)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let base = self.root.clone();
+        fn walk(dir: &Path, base: &Path, out: &mut Vec<String>) {
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    let p = e.path();
+                    if p.is_dir() {
+                        walk(&p, base, out);
+                    } else if let Ok(rel) = p.strip_prefix(base) {
+                        out.push(rel.to_string_lossy().replace('\\', "/"));
+                    }
+                }
+            }
+        }
+        walk(&base, &base, &mut out);
+        out.retain(|k| k.starts_with(prefix) && !k.ends_with(".tmp"));
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// A saved model snapshot.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub model: String,
+    pub params: Vec<f32>,
+    /// clustering round / FL round the snapshot was taken at
+    pub round: u64,
+    /// free-form metadata (loss, accuracy, hyperparameters, ...)
+    pub meta: Json,
+}
+
+/// Versioned model storage over any [`ObjectStore`].
+pub struct ModelStore<S: ObjectStore> {
+    store: S,
+}
+
+impl<S: ObjectStore> ModelStore<S> {
+    pub fn new(store: S) -> ModelStore<S> {
+        ModelStore { store }
+    }
+
+    fn key(model: &str, round: u64) -> String {
+        format!("models/{model}/round-{round:08}.json")
+    }
+
+    /// Persist a snapshot (atomic per object).
+    pub fn save(&self, snap: &Snapshot) -> Result<()> {
+        let doc = Json::obj()
+            .set("model", snap.model.as_str())
+            .set("round", snap.round)
+            .set("param_count", snap.params.len())
+            .set("params_b64", base64::encode_f32(&snap.params))
+            .set("meta", snap.meta.clone());
+        self.store
+            .put(&Self::key(&snap.model, snap.round), doc.to_string().as_bytes())
+    }
+
+    /// Load a specific snapshot.
+    pub fn load(&self, model: &str, round: u64) -> Result<Snapshot> {
+        let bytes = self.store.get(&Self::key(model, round))?;
+        let doc = Json::parse(
+            std::str::from_utf8(&bytes)
+                .map_err(|_| FedError::Fact("corrupt snapshot".into()))?,
+        )?;
+        let params = base64::decode_f32(
+            doc.need("params_b64")?
+                .as_str()
+                .ok_or_else(|| FedError::Fact("corrupt snapshot".into()))?,
+        )?;
+        let expect = doc.need("param_count")?.as_usize().unwrap_or(0);
+        if params.len() != expect {
+            return Err(FedError::Fact(format!(
+                "snapshot corrupt: {} params, header says {expect}",
+                params.len()
+            )));
+        }
+        Ok(Snapshot {
+            model: doc.need("model")?.as_str().unwrap_or("").to_string(),
+            params,
+            round: doc.need("round")?.as_i64().unwrap_or(0) as u64,
+            meta: doc.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    /// Rounds with saved snapshots for a model, ascending.
+    pub fn rounds(&self, model: &str) -> Result<Vec<u64>> {
+        let keys = self.store.list(&format!("models/{model}/"))?;
+        let mut out: Vec<u64> = keys
+            .iter()
+            .filter_map(|k| {
+                k.rsplit('/')
+                    .next()?
+                    .strip_prefix("round-")?
+                    .strip_suffix(".json")?
+                    .parse()
+                    .ok()
+            })
+            .collect();
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Load the most recent snapshot, if any.
+    pub fn load_latest(&self, model: &str) -> Result<Option<Snapshot>> {
+        match self.rounds(model)?.last() {
+            None => Ok(None),
+            Some(&r) => Ok(Some(self.load(model, r)?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ModelStore<FsObjectStore> {
+        let dir = std::env::temp_dir().join(format!(
+            "feddart-store-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        ModelStore::new(FsObjectStore::new(&dir).unwrap())
+    }
+
+    fn snap(round: u64) -> Snapshot {
+        Snapshot {
+            model: "mlp_default".into(),
+            params: vec![1.5, -2.25, 0.0, round as f32],
+            round,
+            meta: Json::obj().set("loss", 0.5),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_bit_exact() {
+        let ms = store();
+        ms.save(&snap(3)).unwrap();
+        let back = ms.load("mlp_default", 3).unwrap();
+        assert_eq!(back.params, snap(3).params);
+        assert_eq!(back.round, 3);
+        assert_eq!(back.meta.get("loss").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn versioning_and_latest() {
+        let ms = store();
+        for r in [5u64, 1, 9] {
+            ms.save(&snap(r)).unwrap();
+        }
+        assert_eq!(ms.rounds("mlp_default").unwrap(), vec![1, 5, 9]);
+        let latest = ms.load_latest("mlp_default").unwrap().unwrap();
+        assert_eq!(latest.round, 9);
+        assert!(ms.load_latest("other").unwrap().is_none());
+    }
+
+    #[test]
+    fn missing_snapshot_errors() {
+        let ms = store();
+        assert!(ms.load("mlp_default", 42).is_err());
+    }
+
+    #[test]
+    fn object_store_rejects_escaping_keys() {
+        let dir = std::env::temp_dir().join("feddart-store-esc");
+        let s = FsObjectStore::new(&dir).unwrap();
+        assert!(s.put("../evil", b"x").is_err());
+        assert!(s.put("/abs", b"x").is_err());
+        assert!(s.put("ok/nested/key", b"x").is_ok());
+        assert!(s.exists("ok/nested/key"));
+        assert_eq!(s.list("ok/").unwrap(), vec!["ok/nested/key".to_string()]);
+    }
+}

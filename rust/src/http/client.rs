@@ -1,0 +1,181 @@
+//! Blocking HTTP/1.1 client with keep-alive connection reuse and retry.
+//!
+//! Used by the Fed-DART library side (`coordinator::DartRuntime`) to talk to
+//! the https-server REST-API, and by DART-clients polling for work.
+//!
+//! §Perf: the original connect-per-request client put ~26ms of TCP setup
+//! into every federated round on the REST path; the pooled persistent
+//! connection below brought the production round within ~1.5x of test mode
+//! (see EXPERIMENTS.md §Perf and `bench_mode_parity`).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::{read_response, write_request, Response};
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// Simple HTTP client bound to one `host:port` base address.  Thread-safe;
+/// one cached keep-alive connection is shared (serialized) across threads.
+#[derive(Debug)]
+pub struct HttpClient {
+    addr: String,
+    timeout: Duration,
+    retries: u32,
+    /// optional bearer-ish key sent as `x-client-key` on every request —
+    /// the REST-side analogue of the paper's `client_key` (Listing 2).
+    key: Option<String>,
+    /// cached keep-alive connection
+    conn: Mutex<Option<TcpStream>>,
+}
+
+impl Clone for HttpClient {
+    fn clone(&self) -> Self {
+        HttpClient {
+            addr: self.addr.clone(),
+            timeout: self.timeout,
+            retries: self.retries,
+            key: self.key.clone(),
+            conn: Mutex::new(None), // clones get their own connection
+        }
+    }
+}
+
+impl HttpClient {
+    pub fn new(addr: &str) -> Self {
+        HttpClient {
+            addr: normalize_addr(addr),
+            timeout: Duration::from_secs(30),
+            retries: 2,
+            key: None,
+            conn: Mutex::new(None),
+        }
+    }
+
+    pub fn with_key(mut self, key: &str) -> Self {
+        self.key = Some(key.to_string());
+        self
+    }
+
+    pub fn with_timeout(mut self, t: Duration) -> Self {
+        self.timeout = t;
+        self
+    }
+
+    pub fn with_retries(mut self, n: u32) -> Self {
+        self.retries = n;
+        self
+    }
+
+    pub fn get(&self, path: &str) -> Result<Response> {
+        self.request("GET", path, &[])
+    }
+
+    pub fn post(&self, path: &str, body: &Json) -> Result<Response> {
+        self.request("POST", path, body.to_string().as_bytes())
+    }
+
+    pub fn post_bytes(&self, path: &str, body: &[u8]) -> Result<Response> {
+        self.request("POST", path, body)
+    }
+
+    pub fn delete(&self, path: &str) -> Result<Response> {
+        self.request("DELETE", path, &[])
+    }
+
+    fn request(&self, method: &str, path: &str, body: &[u8]) -> Result<Response> {
+        let mut last_err = None;
+        for attempt in 0..=self.retries {
+            // a cached connection may have been closed by the server; the
+            // first failure invalidates it and the retry reconnects
+            match self.request_once(method, path, body) {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    last_err = Some(e);
+                    if attempt < self.retries {
+                        std::thread::sleep(Duration::from_millis(
+                            20 * (attempt as u64 + 1),
+                        ));
+                    }
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| FedError::Http("request failed".into())))
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        let stream = TcpStream::connect(&self.addr)
+            .map_err(|e| FedError::Http(format!("connect {}: {e}", self.addr)))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        stream.set_nodelay(true).ok();
+        Ok(stream)
+    }
+
+    fn request_once(&self, method: &str, path: &str, body: &[u8]) -> Result<Response> {
+        let mut guard = self.conn.lock().unwrap();
+        let stream = match guard.take() {
+            Some(s) => s,
+            None => self.connect()?,
+        };
+        let mut writer = stream.try_clone()?;
+        let mut headers = std::collections::BTreeMap::new();
+        headers.insert("host".to_string(), self.addr.clone());
+        if let Some(k) = &self.key {
+            headers.insert("x-client-key".to_string(), k.clone());
+        }
+        let result = (|| -> Result<Response> {
+            write_request(&mut writer, method, path, &headers, body)?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            read_response(&mut reader)
+        })();
+        match result {
+            Ok(resp) => {
+                *guard = Some(stream); // keep-alive: cache for reuse
+                Ok(resp)
+            }
+            Err(e) => Err(e), // drop the broken connection
+        }
+    }
+}
+
+/// Accept `host:port`, `http://host:port`, or the paper's
+/// `https://dart-server:7777` form (TLS stripped on this testbed).
+fn normalize_addr(addr: &str) -> String {
+    let addr = addr
+        .strip_prefix("https://")
+        .or_else(|| addr.strip_prefix("http://"))
+        .unwrap_or(addr);
+    addr.trim_end_matches('/').to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_addresses() {
+        assert_eq!(normalize_addr("https://dart-server:7777"), "dart-server:7777");
+        assert_eq!(normalize_addr("http://127.0.0.1:80/"), "127.0.0.1:80");
+        assert_eq!(normalize_addr("127.0.0.1:8080"), "127.0.0.1:8080");
+    }
+
+    #[test]
+    fn connect_error_is_reported() {
+        // port 1 is essentially never listening
+        let c = HttpClient::new("127.0.0.1:1")
+            .with_retries(0)
+            .with_timeout(Duration::from_millis(100));
+        assert!(c.get("/x").is_err());
+    }
+
+    #[test]
+    fn clone_gets_fresh_connection_cache() {
+        let c = HttpClient::new("127.0.0.1:1").with_key("k");
+        let c2 = c.clone();
+        assert!(c2.key.is_some());
+        assert!(c2.conn.lock().unwrap().is_none());
+    }
+}

@@ -1,0 +1,284 @@
+//! Minimal HTTP/1.1 substrate (server + client).
+//!
+//! The paper's Fed-DART puts an https-server between the aggregation
+//! component and the DART backbone ("for a loose coupling ... a https-server
+//! is introduced as an intermediate layer", §2.1.1) speaking a REST-API.
+//! No HTTP crate is available offline, so this module implements the subset
+//! the REST surface needs: request/response parsing with Content-Length
+//! bodies, a threaded server with graceful shutdown, and a blocking client.
+//!
+//! TLS is out of scope on this testbed; channel authentication happens one
+//! layer down in `dart::transport` (HMAC) — see DESIGN.md §Substitutions.
+
+pub mod client;
+pub mod server;
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// Maximum accepted body size (64 MiB) — model parameters for the largest
+/// shipped config fit with an order of magnitude to spare.
+pub const MAX_BODY: usize = 64 << 20;
+
+/// An HTTP request (server-side view).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without query string, e.g. `/tasks/42`.
+    pub path: String,
+    /// Decoded query parameters.
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn json(&self) -> Result<Json> {
+        let s = std::str::from_utf8(&self.body)
+            .map_err(|_| FedError::Http("non-utf8 body".into()))?;
+        Json::parse(s)
+    }
+
+    /// Split path into segments: `/tasks/42` -> `["tasks", "42"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// An HTTP response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Self {
+        Response { status, headers: BTreeMap::new(), body: Vec::new() }
+    }
+
+    pub fn json(status: u16, j: &Json) -> Self {
+        let mut r = Response::new(status);
+        r.headers
+            .insert("content-type".into(), "application/json".into());
+        r.body = j.to_string().into_bytes();
+        r
+    }
+
+    pub fn ok_json(j: &Json) -> Self {
+        Self::json(200, j)
+    }
+
+    pub fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, &Json::obj().set("error", msg))
+    }
+
+    pub fn parse_json(&self) -> Result<Json> {
+        let s = std::str::from_utf8(&self.body)
+            .map_err(|_| FedError::Http("non-utf8 body".into()))?;
+        Json::parse(s)
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            202 => "Accepted",
+            204 => "No Content",
+            400 => "Bad Request",
+            401 => "Unauthorized",
+            404 => "Not Found",
+            409 => "Conflict",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// Read one HTTP request from a stream. Returns `Ok(None)` on clean EOF
+/// (client closed a keep-alive connection).
+pub fn read_request<R: Read>(stream: &mut BufReader<R>) -> Result<Option<Request>> {
+    let mut line = String::new();
+    let n = stream.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| FedError::Http("empty request line".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| FedError::Http("missing request target".into()))?;
+    let (path, query) = split_target(target);
+
+    let headers = read_headers(stream)?;
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.trim().parse().unwrap_or(0))
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        return Err(FedError::Http(format!("body too large: {len}")));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+/// Read one HTTP response from a stream.
+pub fn read_response<R: Read>(stream: &mut BufReader<R>) -> Result<Response> {
+    let mut line = String::new();
+    stream.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| FedError::Http(format!("bad status line {line:?}")))?;
+    let headers = read_headers(stream)?;
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.trim().parse().unwrap_or(0))
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        return Err(FedError::Http(format!("body too large: {len}")));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok(Response { status, headers, body })
+}
+
+fn read_headers<R: Read>(
+    stream: &mut BufReader<R>,
+) -> Result<BTreeMap<String, String>> {
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut line = String::new();
+        stream.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+}
+
+/// Write a request to a stream.
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    headers: &BTreeMap<String, String>,
+    body: &[u8],
+) -> Result<()> {
+    write!(w, "{method} {path} HTTP/1.1\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a response to a stream.
+pub fn write_response<W: Write>(w: &mut W, r: &Response) -> Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", r.status, r.status_text())?;
+    for (k, v) in &r.headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n\r\n", r.body.len())?;
+    w.write_all(&r.body)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
+    match target.split_once('?') {
+        None => (target.to_string(), BTreeMap::new()),
+        Some((p, q)) => {
+            let mut m = BTreeMap::new();
+            for pair in q.split('&') {
+                if let Some((k, v)) = pair.split_once('=') {
+                    m.insert(k.to_string(), v.to_string());
+                } else if !pair.is_empty() {
+                    m.insert(pair.to_string(), String::new());
+                }
+            }
+            (p.to_string(), m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut buf = Vec::new();
+        let mut headers = BTreeMap::new();
+        headers.insert("x-key".to_string(), "000".to_string());
+        write_request(&mut buf, "POST", "/tasks?kind=init", &headers,
+                      br#"{"a":1}"#).unwrap();
+        let mut reader = BufReader::new(Cursor::new(buf));
+        let req = read_request(&mut reader).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/tasks");
+        assert_eq!(req.query.get("kind").map(String::as_str), Some("init"));
+        assert_eq!(req.headers.get("x-key").map(String::as_str), Some("000"));
+        assert_eq!(req.json().unwrap().get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(req.segments(), vec!["tasks"]);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        let resp = Response::ok_json(&Json::obj().set("status", "finished"));
+        write_response(&mut buf, &resp).unwrap();
+        let mut reader = BufReader::new(Cursor::new(buf));
+        let back = read_response(&mut reader).unwrap();
+        assert_eq!(back.status, 200);
+        assert_eq!(
+            back.parse_json().unwrap().get("status").unwrap().as_str(),
+            Some("finished")
+        );
+    }
+
+    #[test]
+    fn eof_returns_none() {
+        let mut reader = BufReader::new(Cursor::new(Vec::<u8>::new()));
+        assert!(read_request(&mut reader).unwrap().is_none());
+    }
+
+    #[test]
+    fn segments_split() {
+        let req = Request {
+            method: "GET".into(),
+            path: "/tasks/42/results".into(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body: vec![],
+        };
+        assert_eq!(req.segments(), vec!["tasks", "42", "results"]);
+    }
+
+    #[test]
+    fn oversized_body_rejected() {
+        let raw = format!(
+            "POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+            MAX_BODY + 1
+        );
+        let mut reader = BufReader::new(Cursor::new(raw.into_bytes()));
+        assert!(read_request(&mut reader).is_err());
+    }
+}

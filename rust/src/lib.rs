@@ -1,0 +1,37 @@
+//! # Fed-DART + FACT
+//!
+//! A production-grade reproduction of *"Fed-DART and FACT: A solution for
+//! Federated Learning in a production environment"* (Fraunhofer ITWM, 2022)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **[`dart`]** — the distributed runtime: task scheduler over a Petri-net
+//!   workflow substrate (the GPI-Space role), DART-server with REST-API,
+//!   DART-clients over an HMAC-authenticated transport, fault tolerance,
+//!   and a local **test mode** with the identical workflow.
+//! * **[`coordinator`]** — the Fed-DART Python-library role, natively in
+//!   Rust: `WorkflowManager`, `Selector`, `Aggregator` tree,
+//!   `DeviceHolder`/`DeviceSingle`, `Task` lifecycle.
+//! * **[`fact`]** — the FL toolkit: `FactModel` abstraction, aggregation
+//!   algorithms (FedAvg / weighted / FedProx / robust), clustering for
+//!   personalized FL, stopping criteria, federated data synthesis.
+//! * **[`runtime`]** — PJRT engine executing the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); Python never runs at request time.
+//!
+//! Substrate modules ([`json`], [`http`], [`metrics`], [`util`], [`cli`],
+//! [`config`]) replace the crates unavailable in this offline environment —
+//! see DESIGN.md §Substitutions.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dart;
+pub mod error;
+pub mod fact;
+pub mod http;
+pub mod json;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+pub use error::{FedError, Result};

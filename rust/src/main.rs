@@ -1,0 +1,288 @@
+//! `feddart` — the leader binary.
+//!
+//! Subcommands:
+//! * `run`    — full federated training in local test mode (paper §3).
+//! * `server` — start a DART-server (transport + REST-API).
+//! * `client` — start a DART-client with the FACT task functions and a
+//!              synthetic data shard, connecting to a server.
+//! * `train`  — drive federated training against a running server through
+//!              the REST-API (the aggregation component role).
+//! * `info`   — show the AOT artifact manifest.
+//!
+//! A full distributed demo on one machine:
+//! ```text
+//! feddart server --dart-addr 127.0.0.1:7700 --rest-addr 127.0.0.1:7701 &
+//! feddart client --name client-0 --index 0 --clients 2 --server 127.0.0.1:7700 &
+//! feddart client --name client-1 --index 1 --clients 2 --server 127.0.0.1:7700 &
+//! feddart train --server 127.0.0.1:7701 --rounds 20
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use feddart::cli::Args;
+use feddart::config::ServerConfig;
+use feddart::coordinator::WorkflowManager;
+use feddart::dart::client::{DartClient, DartClientConfig};
+use feddart::dart::server::{DartServer, DartServerConfig};
+use feddart::dart::TaskRegistry;
+use feddart::error::Result;
+use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
+use feddart::fact::model::{HloModel, Hyper};
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::{Aggregation, FactClientRuntime, FactServer};
+use feddart::metrics::logserver::LogServer;
+use feddart::runtime::{default_artifacts_dir, Engine};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let level = if args.flag("verbose") {
+        log::LevelFilter::Debug
+    } else if args.flag("quiet") {
+        log::LevelFilter::Error
+    } else {
+        log::LevelFilter::Info
+    };
+    LogServer::init(level);
+
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("server") => cmd_server(&args),
+        Some("client") => cmd_client(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "feddart — Fed-DART + FACT federated learning runtime
+
+USAGE: feddart <run|server|client|train|info> [options]
+
+run     --model mlp_default --clients 8 --rounds 20 --local-steps 4
+        --lr 0.1 --mu 0.0 --aggregation weighted_fedavg
+        --partition iid|dirichlet:0.1|groups:3 --seed 42 --parallelism 4
+server  --dart-addr 127.0.0.1:7700 --rest-addr 127.0.0.1:7701
+        --transport-key feddart-demo-key --rest-key 000
+client  --name client-0 --clients 2 --server 127.0.0.1:7700
+        --transport-key feddart-demo-key --seed 42
+train   --server 127.0.0.1:7701 --rest-key 000 --model mlp_default
+        --rounds 20 --min-clients 2
+info    [--artifacts DIR]"
+    );
+}
+
+fn parse_partition(s: &str) -> Partition {
+    if let Some(alpha) = s.strip_prefix("dirichlet:") {
+        Partition::LabelSkew { alpha: alpha.parse().unwrap_or(0.5) }
+    } else if let Some(g) = s.strip_prefix("groups:") {
+        Partition::LatentGroups { groups: g.parse().unwrap_or(2) }
+    } else {
+        Partition::Iid
+    }
+}
+
+/// Build a FACT client runtime with this process's share of the synthetic
+/// federation (all processes derive the same global dataset from the seed).
+fn client_runtime(
+    engine: Engine,
+    clients: usize,
+    seed: u64,
+    partition: &str,
+    only: Option<&str>,
+) -> Result<Arc<FactClientRuntime>> {
+    let data = synthesize(&SyntheticConfig {
+        clients,
+        samples_per_client: 512,
+        dim: 32,
+        classes: 10,
+        partition: parse_partition(partition),
+        seed,
+    })?;
+    let rt = FactClientRuntime::new(engine);
+    for (name, d) in data {
+        if only.map(|o| o == name).unwrap_or(true) {
+            rt.add_supervised(&name, d);
+        }
+    }
+    Ok(rt)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let model_name = args.opt_or("model", "mlp_default").to_string();
+    let clients = args.opt_usize("clients", 8)?;
+    let rounds = args.opt_usize("rounds", 20)?;
+    let parallelism = args.opt_usize("parallelism", 4)?;
+    let seed = args.opt_usize("seed", 42)? as u64;
+    let engine = Engine::load(&default_artifacts_dir(), 1)?;
+
+    let registry = TaskRegistry::new();
+    let rt = client_runtime(
+        engine.clone(),
+        clients,
+        seed,
+        args.opt_or("partition", "iid"),
+        None,
+    )?;
+    rt.register(&registry);
+
+    let wm = WorkflowManager::test_mode(clients, registry, parallelism);
+    let mut server = FactServer::new(wm).with_hyper(Hyper {
+        lr: args.opt_f64("lr", 0.1)? as f32,
+        mu: args.opt_f64("mu", 0.0)? as f32,
+        local_steps: args.opt_usize("local-steps", 4)?,
+        round: 0,
+    });
+    let model = HloModel::arc(
+        &engine,
+        &model_name,
+        Aggregation::parse(args.opt_or("aggregation", "weighted_fedavg"))?,
+    )?;
+    server.initialization_by_model(model, Arc::new(FixedRoundFl(rounds)), seed as i32)?;
+    server.learn()?;
+
+    println!("\nround  mean_loss  round_ms  agg_ms");
+    for r in server.history() {
+        println!(
+            "{:>5}  {:>9.4}  {:>8.1}  {:>6.2}",
+            r.round, r.mean_loss, r.round_ms, r.agg_ms
+        );
+    }
+    for e in server.evaluate()? {
+        println!(
+            "\neval: cluster {} loss {:.4} accuracy {:.3} ({} clients)",
+            e.cluster_id, e.loss, e.accuracy, e.n_clients
+        );
+    }
+    engine.shutdown();
+    Ok(())
+}
+
+fn cmd_server(args: &Args) -> Result<()> {
+    let cfg = DartServerConfig {
+        dart_addr: args.opt_or("dart-addr", "127.0.0.1:7700").to_string(),
+        rest_addr: args.opt_or("rest-addr", "127.0.0.1:7701").to_string(),
+        transport_key: args.opt_or("transport-key", "feddart-demo-key").into(),
+        rest_key: args.opt_or("rest-key", "000").to_string(),
+        heartbeat_timeout_ms: args.opt_usize("heartbeat-ms", 3000)? as u64,
+    };
+    let server = DartServer::start(cfg)?;
+    println!(
+        "DART-server running: dart={} rest={} (ctrl-c to stop)",
+        server.dart_addr(),
+        server.rest_addr()
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let name = args.opt_or("name", "client-0").to_string();
+    let clients = args.opt_usize("clients", 2)?;
+    let seed = args.opt_usize("seed", 42)? as u64;
+    let engine = Engine::load(&default_artifacts_dir(), 1)?;
+    let registry = TaskRegistry::new();
+    let rt = client_runtime(
+        engine,
+        clients,
+        seed,
+        args.opt_or("partition", "iid"),
+        Some(&name),
+    )?;
+    rt.register(&registry);
+
+    let cfg = DartClientConfig::new(
+        &name,
+        args.opt_or("server", "127.0.0.1:7700"),
+        args.opt_or("transport-key", "feddart-demo-key").as_bytes(),
+    );
+    println!("DART-client '{name}' connecting to {} ...", cfg.server_addr);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    DartClient::run_blocking(cfg, registry, stop);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let server_cfg = ServerConfig {
+        server: args.opt_or("server", "127.0.0.1:7701").to_string(),
+        client_key: args.opt_or("rest-key", "000").to_string(),
+    };
+    let engine = Engine::load(&default_artifacts_dir(), 1)?;
+    let wm = WorkflowManager::production(&server_cfg)?;
+    wm.start_fed_dart(
+        args.opt_usize("min-clients", 2)?,
+        Duration::from_secs(30),
+    )?;
+    let mut server = FactServer::new(wm).with_hyper(Hyper {
+        lr: args.opt_f64("lr", 0.1)? as f32,
+        mu: args.opt_f64("mu", 0.0)? as f32,
+        local_steps: args.opt_usize("local-steps", 4)?,
+        round: 0,
+    });
+    let model = HloModel::arc(
+        &engine,
+        args.opt_or("model", "mlp_default"),
+        Aggregation::parse(args.opt_or("aggregation", "weighted_fedavg"))?,
+    )?;
+    server.initialization_by_model(
+        model,
+        Arc::new(FixedRoundFl(args.opt_usize("rounds", 20)?)),
+        args.opt_usize("seed", 42)? as i32,
+    )?;
+    server.learn()?;
+    for r in server.history() {
+        println!("round {:>3}: loss {:.4} ({:.1}ms)", r.round, r.mean_loss, r.round_ms);
+    }
+    for e in server.evaluate()? {
+        println!("eval: loss {:.4} accuracy {:.3}", e.loss, e.accuracy);
+    }
+    engine.shutdown();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args
+        .opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let m = feddart::runtime::Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!("\nmodels:");
+    for (name, meta) in &m.models {
+        println!(
+            "  {name:<14} kind={:<12} params={:<8} entries={:?}",
+            meta.kind,
+            meta.param_count,
+            meta.entries.keys().collect::<Vec<_>>()
+        );
+    }
+    println!("\naggregators:");
+    for (name, (k, p)) in &m.aggregators {
+        println!("  {name:<22} K={k} P={p}");
+    }
+    println!("\nentries: {}", m.entries.len());
+    for (name, e) in &m.entries {
+        println!(
+            "  {name:<24} {} inputs -> {} outputs",
+            e.inputs.len(),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}

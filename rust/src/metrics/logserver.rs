@@ -1,0 +1,169 @@
+//! LogServer — the paper's levelled logging component (§A.2):
+//! "logs the communication between the DART-Server and the involved classes
+//! ... The user can specify different log levels. Especially for debugging
+//! distributed systems it is of essential advantage."
+//!
+//! Implements the `log` crate facade (so every module just uses
+//! `log::info!` etc.) while additionally retaining recent records in a ring
+//! buffer that the REST-API serves at `/logs`.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+use crate::json::Json;
+use crate::util::now_ms;
+
+const RING_CAPACITY: usize = 4096;
+
+/// One retained log record.
+#[derive(Debug, Clone)]
+pub struct LogRecord {
+    pub ts_ms: u64,
+    pub level: Level,
+    pub target: String,
+    pub message: String,
+}
+
+/// The global LogServer instance (install with [`LogServer::init`]).
+pub struct LogServer {
+    ring: Mutex<VecDeque<LogRecord>>,
+    stderr_level: LevelFilter,
+}
+
+static INSTANCE: OnceLock<LogServer> = OnceLock::new();
+
+impl LogServer {
+    /// Install as the `log` crate's global logger.  Idempotent; later calls
+    /// keep the first configuration.
+    pub fn init(stderr_level: LevelFilter) -> &'static LogServer {
+        let inst = INSTANCE.get_or_init(|| LogServer {
+            ring: Mutex::new(VecDeque::with_capacity(RING_CAPACITY)),
+            stderr_level,
+        });
+        let _ = log::set_logger(inst);
+        log::set_max_level(LevelFilter::Debug);
+        inst
+    }
+
+    /// The installed instance, if any.
+    pub fn get() -> Option<&'static LogServer> {
+        INSTANCE.get()
+    }
+
+    /// Most recent `n` records (newest last).
+    pub fn tail(&self, n: usize) -> Vec<LogRecord> {
+        let ring = self.ring.lock().unwrap();
+        ring.iter().rev().take(n).cloned().collect::<Vec<_>>()
+            .into_iter().rev().collect()
+    }
+
+    /// Number of retained records.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// JSON view for the REST-API `/logs` endpoint.
+    pub fn snapshot(&self, n: usize) -> Json {
+        Json::Arr(
+            self.tail(n)
+                .into_iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("ts_ms", r.ts_ms)
+                        .set("level", r.level.as_str())
+                        .set("target", r.target.as_str())
+                        .set("message", r.message.as_str())
+                })
+                .collect(),
+        )
+    }
+
+    fn push(&self, rec: LogRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == RING_CAPACITY {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+    }
+}
+
+impl log::Log for LogServer {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= Level::Debug
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let rec = LogRecord {
+            ts_ms: now_ms(),
+            level: record.level(),
+            target: record.target().to_string(),
+            message: record.args().to_string(),
+        };
+        if record.level() <= self.stderr_level {
+            eprintln!(
+                "[{:>8}ms {:>5} {}] {}",
+                rec.ts_ms, rec.level, rec.target, rec.message
+            );
+        }
+        self.push(rec);
+    }
+
+    fn flush(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_buffer_retains_and_bounds() {
+        // Use a private instance to avoid global logger interference.
+        let ls = LogServer {
+            ring: Mutex::new(VecDeque::new()),
+            stderr_level: LevelFilter::Off,
+        };
+        for i in 0..(RING_CAPACITY + 10) {
+            ls.push(LogRecord {
+                ts_ms: i as u64,
+                level: Level::Info,
+                target: "t".into(),
+                message: format!("m{i}"),
+            });
+        }
+        assert_eq!(ls.len(), RING_CAPACITY);
+        let tail = ls.tail(3);
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail[2].message, format!("m{}", RING_CAPACITY + 9));
+        // newest-last ordering
+        assert!(tail[0].ts_ms < tail[2].ts_ms);
+    }
+
+    #[test]
+    fn snapshot_is_json_array() {
+        let ls = LogServer {
+            ring: Mutex::new(VecDeque::new()),
+            stderr_level: LevelFilter::Off,
+        };
+        ls.push(LogRecord {
+            ts_ms: 1,
+            level: Level::Warn,
+            target: "dart".into(),
+            message: "client lost".into(),
+        });
+        let j = ls.snapshot(10);
+        assert_eq!(j.as_arr().unwrap().len(), 1);
+        assert_eq!(
+            j.idx(0).unwrap().get("level").unwrap().as_str(),
+            Some("WARN")
+        );
+    }
+}

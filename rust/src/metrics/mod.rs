@@ -1,0 +1,289 @@
+//! Metrics registry: counters, gauges, and histograms with a JSON snapshot.
+//!
+//! The Rust coordinator owns "the event loop, process topology, metrics, CLI"
+//! (session architecture); every subsystem reports here and the REST-API
+//! exposes `/metrics` for scraping.
+
+pub mod logserver;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::json::Json;
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge that can go up and down.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram storing raw samples (bounded reservoir) + running aggregates.
+pub struct Histogram {
+    inner: Mutex<HistInner>,
+}
+
+struct HistInner {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// bounded sample reservoir for quantiles
+    samples: Vec<f64>,
+}
+
+const RESERVOIR: usize = 4096;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            inner: Mutex::new(HistInner {
+                count: 0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+                samples: Vec::new(),
+            }),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let mut h = self.inner.lock().unwrap();
+        h.count += 1;
+        h.sum += v;
+        h.min = h.min.min(v);
+        h.max = h.max.max(v);
+        if h.samples.len() < RESERVOIR {
+            h.samples.push(v);
+        } else {
+            // reservoir sampling keeps quantiles unbiased under load
+            let count = h.count;
+            let idx = (crate::util::rng::splitmix64(count) % count) as usize;
+            if idx < RESERVOIR {
+                h.samples[idx] = v;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().count
+    }
+
+    pub fn mean(&self) -> f64 {
+        let h = self.inner.lock().unwrap();
+        if h.count == 0 {
+            0.0
+        } else {
+            h.sum / h.count as f64
+        }
+    }
+
+    /// Quantile estimate from the reservoir (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let h = self.inner.lock().unwrap();
+        if h.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = h.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        s[idx]
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let h = self.inner.lock().unwrap();
+        let (min, max) = if h.count == 0 {
+            (0.0, 0.0)
+        } else {
+            (h.min, h.max)
+        };
+        drop(h);
+        Json::obj()
+            .set("count", self.count())
+            .set("mean", self.mean())
+            .set("min", min)
+            .set("max", max)
+            .set("p50", self.quantile(0.5))
+            .set("p95", self.quantile(0.95))
+            .set("p99", self.quantile(0.99))
+    }
+}
+
+/// Named metrics registry shared across the process.
+#[derive(Default, Clone)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.inner
+                .counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            self.inner
+                .gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.inner
+                .histograms
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Observe a duration in milliseconds under `name`.
+    pub fn time_ms(&self, name: &str, ms: f64) {
+        self.histogram(name).observe(ms);
+    }
+
+    /// JSON snapshot of everything (served at `/metrics`).
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in self.inner.counters.lock().unwrap().iter() {
+            counters = counters.set(k, v.get());
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in self.inner.gauges.lock().unwrap().iter() {
+            gauges = gauges.set(k, v.get());
+        }
+        let mut hists = Json::obj();
+        for (k, v) in self.inner.histograms.lock().unwrap().iter() {
+            hists = hists.set(k, v.snapshot());
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        r.counter("tasks.accepted").inc();
+        r.counter("tasks.accepted").add(2);
+        assert_eq!(r.counter("tasks.accepted").get(), 3);
+        r.gauge("clients.connected").set(5);
+        r.gauge("clients.connected").add(-2);
+        assert_eq!(r.gauge("clients.connected").get(), 3);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        let p50 = h.quantile(0.5);
+        assert!((45.0..=56.0).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= 98.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn histogram_reservoir_bounded() {
+        let h = Histogram::default();
+        for i in 0..20_000 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), 20_000);
+        // quantiles still sane after reservoir churn
+        let p50 = h.quantile(0.5);
+        assert!((5_000.0..15_000.0).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let r = Registry::new();
+        r.counter("c").inc();
+        r.gauge("g").set(-1);
+        r.histogram("h").observe(2.0);
+        let s = r.snapshot();
+        assert_eq!(
+            s.get("counters").unwrap().get("c").unwrap().as_i64(),
+            Some(1)
+        );
+        assert_eq!(s.get("gauges").unwrap().get("g").unwrap().as_i64(), Some(-1));
+        assert_eq!(
+            s.get("histograms")
+                .unwrap()
+                .get("h")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_i64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn registry_is_shared_via_clone() {
+        let r = Registry::new();
+        let r2 = r.clone();
+        r.counter("x").inc();
+        assert_eq!(r2.counter("x").get(), 1);
+    }
+}

@@ -1,0 +1,367 @@
+//! The PJRT execution engine: dedicated engine threads owning non-`Send`
+//! XLA state, fed by a channel.  See module docs in [`super`].
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::{FedError, Result};
+use crate::runtime::{Manifest, Tensor};
+
+enum Msg {
+    Exec {
+        entry: String,
+        inputs: Vec<Tensor>,
+        reply: SyncSender<Result<Vec<Tensor>>>,
+    },
+    /// Pre-compile an entry on every engine thread (startup warming).
+    Warm {
+        entry: String,
+        reply: SyncSender<Result<()>>,
+    },
+    Stop,
+}
+
+/// Cumulative engine statistics (shared across threads).
+#[derive(Default)]
+pub struct EngineStats {
+    pub executions: AtomicU64,
+    pub compiles: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub compile_ns: AtomicU64,
+}
+
+impl EngineStats {
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+    pub fn exec_seconds(&self) -> f64 {
+        self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+    pub fn compile_seconds(&self) -> f64 {
+        self.compile_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+/// Handle to the engine thread pool.  Cheap to clone; all clones feed the
+/// same threads.  The engine shuts down when the last clone is dropped.
+#[derive(Clone)]
+pub struct Engine {
+    tx: Sender<Msg>,
+    manifest: Arc<Manifest>,
+    stats: Arc<EngineStats>,
+    shared: Arc<EngineShared>,
+}
+
+struct EngineShared {
+    tx: Mutex<Option<Sender<Msg>>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` and start `threads` engine threads.
+    pub fn load(dir: &std::path::Path, threads: usize) -> Result<Engine> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(EngineStats::default());
+        let mut handles = Vec::new();
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let manifest = Arc::clone(&manifest);
+            let stats = Arc::clone(&stats);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("feddart-engine-{i}"))
+                    .spawn(move || engine_thread(rx, manifest, stats))
+                    .expect("spawn engine thread"),
+            );
+        }
+        Ok(Engine {
+            tx: tx.clone(),
+            manifest,
+            stats,
+            shared: Arc::new(EngineShared {
+                tx: Mutex::new(Some(tx)),
+                threads: Mutex::new(handles),
+            }),
+        })
+    }
+
+    /// Load from the default artifacts dir with one engine thread.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&super::default_artifacts_dir(), 1)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Execute an entry point; blocks until the result is ready.
+    pub fn execute(&self, entry: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        // validate against the manifest before crossing the channel
+        let meta = self.manifest.entry(entry)?;
+        if inputs.len() != meta.inputs.len() {
+            return Err(FedError::Runtime(format!(
+                "{entry}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, m)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
+                return Err(FedError::Runtime(format!(
+                    "{entry}: input {i} mismatch: got {:?}/{:?}, manifest says {:?}/{:?}",
+                    t.shape(),
+                    t.dtype(),
+                    m.shape,
+                    m.dtype
+                )));
+            }
+        }
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Exec { entry: entry.to_string(), inputs, reply: rtx })
+            .map_err(|_| FedError::Runtime("engine stopped".into()))?;
+        rrx.recv()
+            .map_err(|_| FedError::Runtime("engine thread died".into()))?
+    }
+
+    /// Pre-compile an entry so the first hot-path call does not pay the
+    /// compile.  Warms one engine thread per call; call `threads` times to
+    /// warm all (each thread takes one Warm message off the queue).
+    pub fn warm(&self, entry: &str) -> Result<()> {
+        self.manifest.entry(entry)?;
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Warm { entry: entry.to_string(), reply: rtx })
+            .map_err(|_| FedError::Runtime("engine stopped".into()))?;
+        rrx.recv()
+            .map_err(|_| FedError::Runtime("engine thread died".into()))?
+    }
+
+    /// Stop all engine threads and wait for them.  Idempotent.
+    pub fn shutdown(&self) {
+        let mut tx_guard = self.shared.tx.lock().unwrap();
+        if let Some(tx) = tx_guard.take() {
+            let n = self.shared.threads.lock().unwrap().len();
+            for _ in 0..n {
+                let _ = tx.send(Msg::Stop);
+            }
+        }
+        drop(tx_guard);
+        let mut threads = self.shared.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn engine_thread(
+    rx: Arc<Mutex<Receiver<Msg>>>,
+    manifest: Arc<Manifest>,
+    stats: Arc<EngineStats>,
+) {
+    // Non-Send XLA state lives and dies on this thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            log::error!(target: "runtime", "PJRT client init failed: {e}");
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Exec { entry, inputs, reply }) => {
+                let result = exec_one(
+                    &client, &mut cache, &manifest, &stats, &entry, inputs,
+                );
+                let _ = reply.send(result);
+            }
+            Ok(Msg::Warm { entry, reply }) => {
+                let r = compile_cached(&client, &mut cache, &manifest, &stats, &entry)
+                    .map(|_| ());
+                let _ = reply.send(r);
+            }
+            Ok(Msg::Stop) | Err(_) => return,
+        }
+    }
+}
+
+fn compile_cached<'a>(
+    client: &xla::PjRtClient,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    stats: &EngineStats,
+    entry: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(entry) {
+        let path: PathBuf = manifest.hlo_path(entry)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| FedError::Runtime("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        stats.compiles.fetch_add(1, Ordering::Relaxed);
+        stats
+            .compile_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        log::debug!(target: "runtime", "compiled {entry} in {:?}", t0.elapsed());
+        cache.insert(entry.to_string(), exe);
+    }
+    Ok(cache.get(entry).unwrap())
+}
+
+fn exec_one(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    stats: &EngineStats,
+    entry: &str,
+    inputs: Vec<Tensor>,
+) -> Result<Vec<Tensor>> {
+    let exe = compile_cached(client, cache, manifest, stats, entry)?;
+    let literals = inputs
+        .iter()
+        .map(Tensor::to_literal)
+        .collect::<Result<Vec<_>>>()?;
+    let t0 = Instant::now();
+    let bufs = exe.execute::<xla::Literal>(&literals)?;
+    let out = bufs[0][0].to_literal_sync()?;
+    stats.executions.fetch_add(1, Ordering::Relaxed);
+    stats
+        .exec_ns
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    // aot.py lowers with return_tuple=True: output is always a tuple
+    let parts = out.to_tuple()?;
+    parts.iter().map(Tensor::from_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+    use crate::util::rng::{golden_f32, golden_i32};
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Engine::load(&dir, 1).unwrap())
+        } else {
+            None // artifacts not built; integration tests cover this fully
+        }
+    }
+
+    #[test]
+    fn init_entry_runs_and_is_deterministic() {
+        let Some(engine) = engine() else { return };
+        let p = engine.manifest().model("mlp_tiny").unwrap().param_count;
+        let out1 = engine
+            .execute("mlp_tiny_init", vec![Tensor::scalar_i32(42)])
+            .unwrap();
+        let out2 = engine
+            .execute("mlp_tiny_init", vec![Tensor::scalar_i32(42)])
+            .unwrap();
+        assert_eq!(out1.len(), 1);
+        assert_eq!(out1[0].shape(), &[p]);
+        assert_eq!(out1[0], out2[0]);
+        assert!(engine.stats().executions() >= 2);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn train_step_shapes_and_loss() {
+        let Some(engine) = engine() else { return };
+        let m = engine.manifest().model("mlp_tiny").unwrap().clone();
+        let p = m.param_count;
+        let bt = m.field_usize("train_batch").unwrap();
+        let d = m.field_usize("in_dim").unwrap();
+        let c = m.field_usize("classes").unwrap();
+        let params = engine
+            .execute("mlp_tiny_init", vec![Tensor::scalar_i32(1)])
+            .unwrap()
+            .remove(0);
+        let x = Tensor::with_shape_f32(vec![bt, d], golden_f32(1, bt * d)).unwrap();
+        let y = Tensor::with_shape_i32(vec![bt], golden_i32(2, bt, c as u32)).unwrap();
+        let out = engine
+            .execute(
+                "mlp_tiny_train",
+                vec![
+                    params.clone(),
+                    x,
+                    y,
+                    Tensor::scalar_f32(0.1),
+                    Tensor::scalar_f32(0.0),
+                    params.clone(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape(), &[p]);
+        let loss = out[1].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        // params changed
+        assert_ne!(out[0], params);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shapes() {
+        let Some(engine) = engine() else { return };
+        let err = engine.execute("mlp_tiny_init", vec![Tensor::scalar_f32(1.0)]);
+        assert!(err.is_err());
+        let err = engine.execute("mlp_tiny_init", vec![]);
+        assert!(err.is_err());
+        let err = engine.execute("no_such_entry", vec![]);
+        assert!(err.is_err());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn multithreaded_clients_single_engine() {
+        let Some(engine) = engine() else { return };
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let e = engine.clone();
+                std::thread::spawn(move || {
+                    let out = e
+                        .execute("mlp_tiny_init", vec![Tensor::scalar_i32(i)])
+                        .unwrap();
+                    out[0].f32s().unwrap().iter().sum::<f32>()
+                })
+            })
+            .collect();
+        let sums: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // different seeds give different params
+        assert!(sums.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn warm_compiles_without_execute() {
+        let Some(engine) = engine() else { return };
+        engine.warm("mlp_tiny_eval").unwrap();
+        assert!(engine.stats().compiles() >= 1);
+        assert_eq!(engine.stats().executions(), 0);
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,287 @@
+//! Runtime layer: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them through the PJRT CPU client (`xla` crate).
+//!
+//! Python runs only at build time (`make artifacts`); every training /
+//! evaluation / aggregation execution on the request path goes through
+//! [`Engine`].  The interchange format is HLO *text* — see
+//! `python/compile/aot.py` for why serialized protos are rejected by
+//! xla_extension 0.5.1.
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and its `execute` clones the
+//! `Rc` internally, so the client and executables are **not** shareable
+//! across threads.  [`Engine`] therefore owns one or more dedicated engine
+//! threads, each with its own `PjRtClient` and lazily-compiled executables;
+//! callers submit requests over a channel and block on a reply.
+//! XLA's CPU backend parallelizes each execution internally, so a single
+//! engine thread already saturates the machine for large programs; extra
+//! threads mainly help many small concurrent programs (simulated clients).
+
+pub mod engine;
+pub mod tensor;
+
+pub use engine::{Engine, EngineStats};
+pub use tensor::{Dtype, Tensor};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// Shape + dtype of one input/output of an entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorMeta> {
+        let shape = j
+            .need("shape")?
+            .as_arr()
+            .ok_or_else(|| FedError::Runtime("shape must be array".into()))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| FedError::Runtime("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match j.need("dtype")?.as_str() {
+            Some("f32") => Dtype::F32,
+            Some("i32") => Dtype::I32,
+            other => {
+                return Err(FedError::Runtime(format!("unsupported dtype {other:?}")))
+            }
+        };
+        Ok(TensorMeta { shape, dtype })
+    }
+}
+
+/// One AOT entry point as described by `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// Metadata for one shipped model (an MLP or transformer config).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: String,
+    pub param_count: usize,
+    /// role ("init" / "train" / "eval" / "predict") -> entry name
+    pub entries: BTreeMap<String, String>,
+    /// raw extra fields (in_dim, classes, vocab, seq, batch sizes, ...)
+    pub raw: Json,
+}
+
+impl ModelMeta {
+    pub fn entry(&self, role: &str) -> Result<&str> {
+        self.entries
+            .get(role)
+            .map(String::as_str)
+            .ok_or_else(|| {
+                FedError::Runtime(format!("model {} has no '{role}' entry", self.name))
+            })
+    }
+
+    pub fn field_usize(&self, key: &str) -> Result<usize> {
+        self.raw
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| {
+                FedError::Runtime(format!("model {} missing field {key}", self.name))
+            })
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, EntryMeta>,
+    pub models: BTreeMap<String, ModelMeta>,
+    /// fedavg HLO variants: name -> (k, p)
+    pub aggregators: BTreeMap<String, (usize, usize)>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            FedError::Runtime(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+
+        let mut entries = BTreeMap::new();
+        for (name, ej) in j
+            .need("entries")?
+            .as_obj()
+            .ok_or_else(|| FedError::Runtime("entries must be object".into()))?
+        {
+            let inputs = ej
+                .need("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = ej
+                .need("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let file = ej
+                .need("file")?
+                .as_str()
+                .ok_or_else(|| FedError::Runtime("file must be string".into()))?
+                .to_string();
+            entries.insert(
+                name.clone(),
+                EntryMeta { name: name.clone(), file, inputs, outputs },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(ms) = j.get("models").and_then(Json::as_obj) {
+            for (name, mj) in ms {
+                let mut roles = BTreeMap::new();
+                if let Some(es) = mj.get("entries").and_then(Json::as_obj) {
+                    for (role, ename) in es {
+                        if let Some(e) = ename.as_str() {
+                            roles.insert(role.clone(), e.to_string());
+                        }
+                    }
+                }
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name: name.clone(),
+                        kind: mj
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .unwrap_or("unknown")
+                            .to_string(),
+                        param_count: mj
+                            .get("param_count")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0),
+                        entries: roles,
+                        raw: mj.clone(),
+                    },
+                );
+            }
+        }
+
+        let mut aggregators = BTreeMap::new();
+        if let Some(ags) = j.get("aggregators").and_then(Json::as_obj) {
+            for (name, aj) in ags {
+                let k = aj.get("k").and_then(Json::as_usize).unwrap_or(0);
+                let p = aj.get("p").and_then(Json::as_usize).unwrap_or(0);
+                aggregators.insert(name.clone(), (k, p));
+            }
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), entries, models, aggregators })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| FedError::Runtime(format!("unknown entry '{name}'")))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| FedError::Runtime(format!("unknown model '{name}'")))
+    }
+
+    pub fn hlo_path(&self, entry: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(entry)?.file))
+    }
+}
+
+/// Default artifacts directory: `$FEDDART_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("FEDDART_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+          "entries": {
+            "m_train": {"file": "m_train.hlo.txt",
+              "inputs": [{"shape": [10], "dtype": "f32"},
+                         {"shape": [4, 2], "dtype": "f32"},
+                         {"shape": [4], "dtype": "i32"},
+                         {"shape": [], "dtype": "f32"}],
+              "outputs": [{"shape": [10], "dtype": "f32"},
+                          {"shape": [], "dtype": "f32"}]}
+          },
+          "models": {
+            "m": {"kind": "mlp", "param_count": 10, "in_dim": 2,
+                  "entries": {"train": "m_train"}}
+          },
+          "aggregators": {"fedavg_k8_p100": {"k": 8, "p": 100, "entry": "fedavg_k8_p100"}}
+        }"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("feddart-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.entry("m_train").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[0].shape, vec![10]);
+        assert_eq!(e.inputs[2].dtype, Dtype::I32);
+        assert_eq!(e.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(e.outputs[1].elements(), 1);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.entry("train").unwrap(), "m_train");
+        assert_eq!(model.field_usize("in_dim").unwrap(), 2);
+        assert!(model.entry("eval").is_err());
+        assert_eq!(m.aggregators["fedavg_k8_p100"], (8, 100));
+        assert!(m.entry("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent-dir"))
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // exercised fully in tests/runtime_goldens.rs; here just parse if present
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.contains_key("mlp_default_train"));
+            assert!(m.models.contains_key("mlp_default"));
+        }
+    }
+}

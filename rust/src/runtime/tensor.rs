@@ -1,0 +1,200 @@
+//! Host-side tensor values exchanged with the PJRT engine.
+
+use crate::error::{FedError, Result};
+
+/// Supported element types (all shipped artifacts use f32/i32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// A host tensor: shape + data.  Scalars have an empty shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec_f32(data: Vec<f32>) -> Tensor {
+        let shape = vec![data.len()];
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn mat_f32(rows: usize, cols: usize, data: Vec<f32>) -> Result<Tensor> {
+        if data.len() != rows * cols {
+            return Err(FedError::Runtime(format!(
+                "mat_f32: {}x{} needs {} elements, got {}",
+                rows, cols, rows * cols, data.len()
+            )));
+        }
+        Ok(Tensor::F32 { shape: vec![rows, cols], data })
+    }
+
+    pub fn with_shape_f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        if data.len() != shape.iter().product::<usize>() {
+            return Err(FedError::Runtime("shape/data mismatch".into()));
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn with_shape_i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor> {
+        if data.len() != shape.iter().product::<usize>() {
+            return Err(FedError::Runtime("shape/data mismatch".into()));
+        }
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32 { .. } => Dtype::F32,
+            Tensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } => shape,
+            Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow f32 data (error if i32).
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(FedError::Runtime("expected f32 tensor".into())),
+        }
+    }
+
+    /// Consume into f32 data.
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(FedError::Runtime("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(FedError::Runtime("expected i32 tensor".into())),
+        }
+    }
+
+    /// Scalar f32 value.
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.f32s()?;
+        if d.len() != 1 {
+            return Err(FedError::Runtime(format!(
+                "expected scalar, got {} elements",
+                d.len()
+            )));
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal (bytes are copied).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, dims, bytes): (xla::ElementType, &[usize], &[u8]) = match self {
+            Tensor::F32 { shape, data } => (
+                xla::ElementType::F32,
+                shape,
+                bytemuck_f32(data),
+            ),
+            Tensor::I32 { shape, data } => (
+                xla::ElementType::S32,
+                shape,
+                bytemuck_i32(data),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+            .map_err(Into::into)
+    }
+
+    /// Convert from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => Err(FedError::Runtime(format!(
+                "unsupported literal type {other:?}"
+            ))),
+        }
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::vec_f32(vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.shape(), &[3]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.f32s().unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(t.i32s().is_err());
+        assert!(t.scalar().is_err());
+        assert_eq!(Tensor::scalar_f32(5.0).scalar().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::mat_f32(2, 3, vec![0.0; 6]).is_ok());
+        assert!(Tensor::mat_f32(2, 3, vec![0.0; 5]).is_err());
+        assert!(Tensor::with_shape_i32(vec![2, 2], vec![1, 2, 3, 4]).is_ok());
+        assert!(Tensor::with_shape_i32(vec![2, 2], vec![1]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::mat_f32(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = Tensor::scalar_i32(-7);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

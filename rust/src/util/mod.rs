@@ -1,0 +1,66 @@
+//! Shared utilities: deterministic RNG, a work-stealing-free thread pool,
+//! and timing helpers used by the bench harness and metrics.
+
+pub mod base64;
+pub mod pool;
+pub mod rng;
+
+use std::time::{Duration, Instant};
+
+/// A simple scope timer returning elapsed wall time.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a duration human-readably for logs/benches.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Monotonic unix-ish timestamp in milliseconds (process-relative).
+pub fn now_ms() -> u64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_millis() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("us"));
+    }
+
+    #[test]
+    fn now_ms_monotonic() {
+        let a = now_ms();
+        let b = now_ms();
+        assert!(b >= a);
+    }
+}

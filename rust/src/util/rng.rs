@@ -1,0 +1,251 @@
+//! Deterministic RNG utilities.
+//!
+//! `golden_f32` / `golden_i32` mirror `python/compile/aot.py` *exactly* —
+//! they regenerate the inputs recorded in `artifacts/goldens.json` so the
+//! Rust integration tests can pin HLO numerics against the Python-side
+//! executions.  `python/tests/test_aot.py::test_golden_f32_pinned_values`
+//! is the cross-language tripwire.
+//!
+//! `Rng` is a splitmix64-seeded xorshift generator used everywhere the
+//! coordinator needs reproducible randomness (data synthesis, shuffles,
+//! fault injection).  It is deliberately not cryptographic.
+
+/// The splitmix64 mixing function (public-domain, Vigna).
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Counter-based f32 stream in `[-1, 1)`, identical to `aot.golden_f32`.
+pub fn golden_f32(seed: u32, n: usize) -> Vec<f32> {
+    let base = (seed as u64) << 32;
+    (0..n as u64)
+        .map(|i| {
+            let z = splitmix64(base + i);
+            (((z >> 40) as f64 / (1u64 << 24) as f64) * 2.0 - 1.0) as f32
+        })
+        .collect()
+}
+
+/// Counter-based i32 stream in `[0, modulus)`, identical to `aot.golden_i32`.
+pub fn golden_i32(seed: u32, n: usize, modulus: u32) -> Vec<i32> {
+    let base = (seed as u64) << 32;
+    (0..n as u64)
+        .map(|i| (splitmix64(base + i) % modulus as u64) as i32)
+        .collect()
+}
+
+/// Small fast deterministic RNG (xorshift128+ seeded via splitmix64).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s0: u64,
+    s1: u64,
+    /// cached second Box-Muller sample
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let s0 = splitmix64(seed);
+        let s1 = splitmix64(s0);
+        Rng { s0, s1, spare: None }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.s0;
+        let y = self.s1;
+        self.s0 = y;
+        x ^= x << 23;
+        self.s1 = x ^ y ^ (x >> 17) ^ (y >> 26);
+        self.s1.wrapping_add(y)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Vector of standard-normal f32s.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Sample from a Dirichlet(alpha * 1) distribution of dimension `k`
+    /// using Gamma(alpha) marginals (Marsaglia-Tsang for alpha >= 1,
+    /// boosted for alpha < 1).  Used for non-IID label splits (E5).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            return vec![1.0 / k as f64; k];
+        }
+        for v in &mut g {
+            *v /= sum;
+        }
+        g
+    }
+
+    fn gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // Johnk / boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.uniform().max(1e-300);
+            return self.gamma(alpha + 1.0) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        assert_eq!(splitmix64(0), splitmix64(0));
+        assert_ne!(splitmix64(1), splitmix64(2));
+    }
+
+    #[test]
+    fn golden_f32_in_range_and_deterministic() {
+        let a = golden_f32(1, 1000);
+        let b = golden_f32(1, 1000);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| (-1.0..1.0).contains(v)));
+        // different seeds diverge
+        assert_ne!(golden_f32(2, 10), golden_f32(3, 10));
+    }
+
+    #[test]
+    fn golden_i32_in_range() {
+        let v = golden_i32(2, 1000, 10);
+        assert!(v.iter().all(|&x| (0..10).contains(&x)));
+        // roughly uniform: every class appears
+        for c in 0..10 {
+            assert!(v.iter().filter(|&&x| x == c).count() > 50);
+        }
+    }
+
+    #[test]
+    fn rng_uniform_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(13);
+        for &alpha in &[0.1, 0.5, 1.0, 10.0] {
+            let d = r.dirichlet(alpha, 8);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_effect() {
+        // small alpha -> sparse (max component large), large alpha -> even
+        let mut r = Rng::new(17);
+        let avg_max = |alpha: f64, r: &mut Rng| -> f64 {
+            (0..200)
+                .map(|_| {
+                    r.dirichlet(alpha, 10)
+                        .into_iter()
+                        .fold(0.0f64, f64::max)
+                })
+                .sum::<f64>()
+                / 200.0
+        };
+        let sparse = avg_max(0.1, &mut r);
+        let even = avg_max(100.0, &mut r);
+        assert!(sparse > 0.5, "sparse {sparse}");
+        assert!(even < 0.2, "even {even}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,163 @@
+//! E6: the production path (DART-server + DART-clients over authenticated
+//! TCP + the REST-API) must expose the *same workflow* as test mode —
+//! "the conversion to a production system is then just a matter of
+//! configuration changes" (paper §3).
+//!
+//! We run the identical federated workload (same seed, same data, same
+//! hyperparameters) through both backends and require bit-identical global
+//! parameters, plus churn behaviour on the real TCP path.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use feddart::config::ServerConfig;
+use feddart::coordinator::WorkflowManager;
+use feddart::dart::client::{DartClient, DartClientConfig};
+use feddart::dart::server::{DartServer, DartServerConfig};
+use feddart::dart::TaskRegistry;
+use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
+use feddart::fact::model::{HloModel, Hyper};
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::{Aggregation, FactClientRuntime, FactServer};
+use feddart::runtime::{default_artifacts_dir, Engine};
+
+fn have_artifacts() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+const N: usize = 4;
+const ROUNDS: usize = 5;
+const SEED: u64 = 77;
+
+fn registry_with_data(engine: &Engine) -> TaskRegistry {
+    let registry = TaskRegistry::new();
+    let rt = FactClientRuntime::new(engine.clone());
+    let data = synthesize(&SyntheticConfig {
+        clients: N,
+        samples_per_client: 256,
+        dim: 32,
+        classes: 10,
+        partition: Partition::Iid,
+        seed: SEED,
+    })
+    .unwrap();
+    for (name, d) in data {
+        rt.add_supervised(&name, d);
+    }
+    rt.register(&registry);
+    registry
+}
+
+fn run_fl(wm: WorkflowManager, engine: &Engine) -> Vec<f32> {
+    let mut server = FactServer::new(wm)
+        .with_hyper(Hyper { lr: 0.2, mu: 0.0, local_steps: 3, round: 0 });
+    server.round_timeout = Duration::from_secs(120);
+    let model = HloModel::arc(engine, "mlp_default", Aggregation::WeightedFedAvg).unwrap();
+    server
+        .initialization_by_model(model, Arc::new(FixedRoundFl(ROUNDS)), SEED as i32)
+        .unwrap();
+    server.learn().unwrap();
+    assert_eq!(server.history().len(), ROUNDS);
+    server.container().clusters[0].params.clone()
+}
+
+#[test]
+fn test_mode_and_tcp_mode_produce_identical_parameters() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::load(&default_artifacts_dir(), 2).unwrap();
+
+    // --- test mode ---
+    let wm_test = WorkflowManager::test_mode(N, registry_with_data(&engine), 2);
+    let params_test = run_fl(wm_test, &engine);
+
+    // --- production mode: real DART-server, TCP clients, REST-API ---
+    let dart = DartServer::start(DartServerConfig::default()).unwrap();
+    let key = b"feddart-demo-key";
+    let registry = registry_with_data(&engine);
+    let _clients: Vec<DartClient> = (0..N)
+        .map(|i| {
+            DartClient::spawn(
+                DartClientConfig::new(
+                    &format!("client-{i}"),
+                    &dart.dart_addr().to_string(),
+                    key,
+                ),
+                registry.clone(),
+            )
+        })
+        .collect();
+    let wm_prod = WorkflowManager::production(&ServerConfig {
+        server: dart.rest_addr().to_string(),
+        client_key: "000".into(),
+    })
+    .unwrap();
+    wm_prod.start_fed_dart(N, Duration::from_secs(10)).unwrap();
+    let params_prod = run_fl(wm_prod, &engine);
+
+    assert_eq!(params_test.len(), params_prod.len());
+    let max_diff = params_test
+        .iter()
+        .zip(&params_prod)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert_eq!(
+        max_diff, 0.0,
+        "test mode and production mode diverged by {max_diff}"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn tcp_client_churn_mid_training_recovers() {
+    if !have_artifacts() {
+        return;
+    }
+    // Kill one TCP client mid-run; the unit re-queues and a re-joined
+    // client finishes the round (the paper's connect/disconnect-any-time).
+    let engine = Engine::load(&default_artifacts_dir(), 2).unwrap();
+    let mut cfg = DartServerConfig::default();
+    cfg.heartbeat_timeout_ms = 500;
+    let dart = DartServer::start(cfg).unwrap();
+    let key = b"feddart-demo-key";
+    let registry = registry_with_data(&engine);
+    let mut clients: Vec<DartClient> = (0..N)
+        .map(|i| {
+            DartClient::spawn(
+                DartClientConfig::new(
+                    &format!("client-{i}"),
+                    &dart.dart_addr().to_string(),
+                    key,
+                ),
+                registry.clone(),
+            )
+        })
+        .collect();
+    let wm = WorkflowManager::production(&ServerConfig {
+        server: dart.rest_addr().to_string(),
+        client_key: "000".into(),
+    })
+    .unwrap();
+    wm.start_fed_dart(N, Duration::from_secs(10)).unwrap();
+
+    // run training on a background thread while we churn a client
+    let engine2 = engine.clone();
+    let trainer = std::thread::spawn(move || run_fl(wm, &engine2));
+
+    // churn: drop client-3 then bring it back
+    std::thread::sleep(Duration::from_millis(150));
+    clients.pop().unwrap().shutdown();
+    std::thread::sleep(Duration::from_millis(300));
+    clients.push(DartClient::spawn(
+        DartClientConfig::new("client-3", &dart.dart_addr().to_string(), key),
+        registry.clone(),
+    ));
+
+    let params = trainer.join().expect("training paniced under churn");
+    assert_eq!(
+        params.len(),
+        engine.manifest().model("mlp_default").unwrap().param_count
+    );
+    engine.shutdown();
+}

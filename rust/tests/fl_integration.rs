@@ -1,0 +1,309 @@
+//! End-to-end federated learning through the full stack in test mode:
+//! FactServer (Alg 3-5) -> WorkflowManager -> Selector/Aggregator ->
+//! TestModeDart (real Scheduler + Petri nets) -> FactClientRuntime ->
+//! PJRT engine executing the AOT JAX/Pallas artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use feddart::coordinator::WorkflowManager;
+use feddart::dart::faults::{FaultInjector, FaultProfile};
+use feddart::dart::testmode::SimClient;
+use feddart::dart::TaskRegistry;
+use feddart::fact::clustering::{ClusterContainer, KMeansClustering};
+use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
+use feddart::fact::ensemble::{register_ensemble_tasks, EnsembleFlModel};
+use feddart::fact::model::{FactModel, HloModel, Hyper};
+use feddart::fact::stopping::{FixedClusteringRounds, FixedRoundFl, LossPlateauFl};
+use feddart::fact::{Aggregation, FactClientRuntime, FactServer};
+use feddart::runtime::{default_artifacts_dir, Engine};
+
+fn have_artifacts() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+/// Build a complete test-mode FL stack over the mlp_default model.
+fn mlp_stack(
+    clients: usize,
+    partition: Partition,
+    seed: u64,
+    parallelism: usize,
+    agg: Aggregation,
+) -> (FactServer, Arc<dyn FactModel>, Engine) {
+    let engine = Engine::load(&default_artifacts_dir(), 1).unwrap();
+    let registry = TaskRegistry::new();
+    let rt = FactClientRuntime::new(engine.clone());
+    let data = synthesize(&SyntheticConfig {
+        clients,
+        samples_per_client: 512,
+        dim: 32,
+        classes: 10,
+        partition,
+        seed,
+    })
+    .unwrap();
+    for (name, d) in data {
+        rt.add_supervised(&name, d);
+    }
+    rt.register(&registry);
+    let wm = WorkflowManager::test_mode(clients, registry, parallelism);
+    let model = HloModel::arc(&engine, "mlp_default", agg).unwrap();
+    (FactServer::new(wm), model, engine)
+}
+
+#[test]
+fn fedavg_mlp_converges_and_beats_chance() {
+    if !have_artifacts() {
+        return;
+    }
+    let (mut server, model, engine) =
+        mlp_stack(6, Partition::Iid, 42, 4, Aggregation::WeightedFedAvg);
+    server.hyper = Hyper { lr: 0.2, mu: 0.0, local_steps: 4, round: 0 };
+    server
+        .initialization_by_model(model, Arc::new(FixedRoundFl(15)), 42)
+        .unwrap();
+    server.learn().unwrap();
+    let hist = server.history();
+    assert_eq!(hist.len(), 15);
+    let first = hist[0].mean_loss;
+    let last = hist.last().unwrap().mean_loss;
+    assert!(last < 0.8 * first, "no convergence: {first} -> {last}");
+    let evals = server.evaluate().unwrap();
+    assert!(evals[0].accuracy > 0.25, "accuracy {}", evals[0].accuracy);
+    // every round heard from every client
+    assert!(hist.iter().all(|r| r.n_clients == 6));
+    engine.shutdown();
+}
+
+#[test]
+fn loss_plateau_criterion_stops_early() {
+    if !have_artifacts() {
+        return;
+    }
+    let (mut server, model, engine) =
+        mlp_stack(4, Partition::Iid, 7, 4, Aggregation::WeightedFedAvg);
+    // tiny lr: loss barely moves, plateau should fire well before the cap
+    server.hyper = Hyper { lr: 1e-5, mu: 0.0, local_steps: 1, round: 0 };
+    server
+        .initialization_by_model(
+            model,
+            Arc::new(LossPlateauFl { patience: 3, min_delta: 0.05, max_rounds: 40 }),
+            7,
+        )
+        .unwrap();
+    server.learn().unwrap();
+    assert!(
+        server.history().len() < 40,
+        "plateau criterion never fired ({} rounds)",
+        server.history().len()
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn fault_injection_does_not_stop_the_workflow() {
+    if !have_artifacts() {
+        return;
+    }
+    // E3 in miniature: flaky clients + stragglers, training still completes
+    let engine = Engine::load(&default_artifacts_dir(), 1).unwrap();
+    let registry = TaskRegistry::new();
+    let rt = FactClientRuntime::new(engine.clone());
+    let n = 6;
+    let data = synthesize(&SyntheticConfig {
+        clients: n,
+        samples_per_client: 256,
+        dim: 32,
+        classes: 10,
+        partition: Partition::Iid,
+        seed: 3,
+    })
+    .unwrap();
+    for (name, d) in data {
+        rt.add_supervised(&name, d);
+    }
+    rt.register(&registry);
+    let clients: Vec<SimClient> = (0..n)
+        .map(|i| SimClient {
+            name: format!("client-{i}"),
+            hardware: Default::default(),
+            faults: if i % 2 == 0 {
+                FaultInjector::new(i as u64, FaultProfile::flaky(0.3))
+            } else {
+                FaultInjector::new(i as u64, FaultProfile::straggler(2.0, 5))
+            },
+        })
+        .collect();
+    let wm = WorkflowManager::test_mode_with(clients, registry, 4);
+    let mut server = FactServer::new(wm)
+        .with_hyper(Hyper { lr: 0.2, mu: 0.0, local_steps: 2, round: 0 });
+    server.round_timeout = Duration::from_secs(120);
+    let model = HloModel::arc(&engine, "mlp_default", Aggregation::WeightedFedAvg).unwrap();
+    server
+        .initialization_by_model(model, Arc::new(FixedRoundFl(8)), 3)
+        .unwrap();
+    server.learn().unwrap();
+    let hist = server.history();
+    assert_eq!(hist.len(), 8, "rounds did not complete under churn");
+    let first = hist[0].mean_loss;
+    let last = hist.last().unwrap().mean_loss;
+    assert!(last < first, "no progress under churn: {first} -> {last}");
+    engine.shutdown();
+}
+
+#[test]
+fn clustered_fl_beats_single_global_on_latent_groups() {
+    if !have_artifacts() {
+        return;
+    }
+    // E4 in miniature: 3 latent groups with permuted labels.
+    let groups = 3;
+    let clients = 6;
+    let seed = 11;
+
+    // --- single global model ---
+    let (mut single, model, engine) = mlp_stack(
+        clients,
+        Partition::LatentGroups { groups },
+        seed,
+        4,
+        Aggregation::WeightedFedAvg,
+    );
+    single.hyper = Hyper { lr: 0.2, mu: 0.0, local_steps: 4, round: 0 };
+    single
+        .initialization_by_model(Arc::clone(&model), Arc::new(FixedRoundFl(10)), 1)
+        .unwrap();
+    single.learn().unwrap();
+    let acc_single = single.evaluate().unwrap()[0].accuracy;
+
+    // --- clustered FL: warmup round then k-means reclustering ---
+    let (mut clustered, model2, engine2) = mlp_stack(
+        clients,
+        Partition::LatentGroups { groups },
+        seed,
+        4,
+        Aggregation::WeightedFedAvg,
+    );
+    clustered.hyper = Hyper { lr: 0.2, mu: 0.0, local_steps: 4, round: 0 };
+    let names = clustered.workflow_manager().get_all_device_names().unwrap();
+    let params = model2.init_params(1).unwrap();
+    let container = ClusterContainer::single(Arc::clone(&model2), params, names);
+    clustered
+        .initialization_by_cluster_container(
+            container,
+            Box::new(KMeansClustering::new(groups)),
+            Box::new(FixedClusteringRounds(2)),
+            Arc::new(FixedRoundFl(5)),
+        )
+        .unwrap();
+    clustered.learn().unwrap();
+    let evals = clustered.evaluate().unwrap();
+    let acc_clustered: f64 = evals
+        .iter()
+        .map(|e| e.accuracy * e.n_clients as f64)
+        .sum::<f64>()
+        / clients as f64;
+
+    // k-means should recover the latent groups
+    assert_eq!(clustered.container().clusters.len(), groups);
+    assert!(
+        acc_clustered > acc_single + 0.05,
+        "clustering did not help: clustered {acc_clustered:.3} vs single {acc_single:.3}"
+    );
+    engine.shutdown();
+    engine2.shutdown();
+}
+
+#[test]
+fn ensemble_fl_stacking_runs_federated() {
+    if !have_artifacts() {
+        return;
+    }
+    // E8 in miniature: federated stacking head over local base learners.
+    let engine = Engine::load(&default_artifacts_dir(), 1).unwrap();
+    let registry = TaskRegistry::new();
+    let rt = FactClientRuntime::new(engine.clone());
+    let n = 4;
+    let classes = 4;
+    let data = synthesize(&SyntheticConfig {
+        clients: n,
+        samples_per_client: 400,
+        dim: 8,
+        classes,
+        partition: Partition::Iid,
+        seed: 5,
+    })
+    .unwrap();
+    for (name, d) in data {
+        rt.add_supervised(&name, d);
+    }
+    rt.register(&registry);
+    register_ensemble_tasks(&rt, &registry);
+    let wm = WorkflowManager::test_mode(n, registry, 2);
+    let model = EnsembleFlModel::arc(classes, Aggregation::WeightedFedAvg);
+
+    // drive the ensemble head through the generic task API
+    let mut head = model.init_params(0).unwrap();
+    for round in 0..12 {
+        let hp = Hyper { lr: 0.3, mu: 0.0, local_steps: 5, round };
+        let dict: std::collections::BTreeMap<String, feddart::json::Json> = wm
+            .get_all_device_names()
+            .unwrap()
+            .into_iter()
+            .map(|c| (c, model.learn_params(&head, &hp).set("classes", classes)))
+            .collect();
+        let results =
+            wm.run_task(dict, "ensemble_learn", Duration::from_secs(60)).unwrap();
+        let updates: Vec<_> = results
+            .iter()
+            .map(|r| model.parse_update(&r.device_name, r.duration, &r.result).unwrap())
+            .collect();
+        head = model.aggregate(&updates, None).unwrap();
+    }
+    // evaluate the federated head
+    let dict: std::collections::BTreeMap<String, feddart::json::Json> = wm
+        .get_all_device_names()
+        .unwrap()
+        .into_iter()
+        .map(|c| (c, model.eval_params(&head).set("classes", classes)))
+        .collect();
+    let results = wm
+        .run_task(dict, "ensemble_evaluate", Duration::from_secs(60))
+        .unwrap();
+    let (mut correct, mut total) = (0.0, 0.0);
+    for r in &results {
+        correct += r.result.get("correct").and_then(feddart::json::Json::as_f64).unwrap();
+        total += r.result.get("n").and_then(feddart::json::Json::as_f64).unwrap();
+    }
+    let acc = correct / total;
+    assert!(acc > 1.0 / classes as f64 + 0.1, "ensemble accuracy {acc}");
+    engine.shutdown();
+}
+
+#[test]
+fn fedprox_not_catastrophic_under_skew() {
+    if !have_artifacts() {
+        return;
+    }
+    // E5 in miniature: strong label skew + many local steps makes FedAvg
+    // drift; FedProx (mu > 0) must stay in the same ballpark or better.
+    let run = |mu: f32| -> f32 {
+        let agg = if mu > 0.0 { Aggregation::FedProx } else { Aggregation::WeightedFedAvg };
+        let (mut server, model, engine) =
+            mlp_stack(6, Partition::LabelSkew { alpha: 0.1 }, 21, 4, agg);
+        server.hyper = Hyper { lr: 0.3, mu, local_steps: 12, round: 0 };
+        server
+            .initialization_by_model(model, Arc::new(FixedRoundFl(12)), 21)
+            .unwrap();
+        server.learn().unwrap();
+        let loss = server.history().last().unwrap().mean_loss;
+        engine.shutdown();
+        loss
+    };
+    let l_fedavg = run(0.0);
+    let l_fedprox = run(0.1);
+    assert!(
+        l_fedprox < l_fedavg * 1.5,
+        "fedprox {l_fedprox} catastrophically worse than fedavg {l_fedavg}"
+    );
+}

@@ -1,0 +1,270 @@
+//! Numeric pinning: every AOT entry executed from Rust must reproduce the
+//! outputs `python/compile/aot.py` recorded in `artifacts/goldens.json`.
+//!
+//! Inputs are regenerated with the splitmix64 scheme mirrored between
+//! `aot.golden_f32/golden_i32` and `util::rng::golden_f32/golden_i32`; a
+//! cross-language drift in either the RNG mirror or the HLO execution
+//! fails loudly here.
+
+use feddart::json::Json;
+use feddart::runtime::{default_artifacts_dir, Engine, Tensor};
+use feddart::util::rng::{golden_f32, golden_i32};
+
+struct Checksum {
+    mean: f64,
+    l2: f64,
+    first: Vec<f64>,
+    len: usize,
+}
+
+fn checksum_of(j: &Json) -> Checksum {
+    Checksum {
+        mean: j.get("mean").and_then(Json::as_f64).unwrap(),
+        l2: j.get("l2").and_then(Json::as_f64).unwrap(),
+        first: j
+            .get("first")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect(),
+        len: j.get("len").and_then(Json::as_usize).unwrap(),
+    }
+}
+
+fn compute_checksum(v: &[f32]) -> Checksum {
+    let flat: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+    Checksum {
+        mean: flat.iter().sum::<f64>() / flat.len() as f64,
+        l2: flat.iter().map(|x| x * x).sum::<f64>().sqrt(),
+        first: flat.iter().take(8).copied().collect(),
+        len: flat.len(),
+    }
+}
+
+fn assert_close(name: &str, got: &Checksum, want: &Checksum) {
+    assert_eq!(got.len, want.len, "{name}: length");
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-6);
+    assert!(
+        rel(got.l2, want.l2) < 2e-4,
+        "{name}: l2 {} vs {}",
+        got.l2,
+        want.l2
+    );
+    assert!(
+        (got.mean - want.mean).abs() < 1e-5 + 1e-3 * want.mean.abs(),
+        "{name}: mean {} vs {}",
+        got.mean,
+        want.mean
+    );
+    for (i, (g, w)) in got.first.iter().zip(&want.first).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-4 + 1e-3 * w.abs(),
+            "{name}: first[{i}] {g} vs {w}"
+        );
+    }
+}
+
+fn load() -> Option<(Engine, Json)> {
+    let dir = default_artifacts_dir();
+    if !dir.join("goldens.json").exists() {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        return None;
+    }
+    let goldens = Json::parse(&std::fs::read_to_string(dir.join("goldens.json")).unwrap())
+        .unwrap();
+    Some((Engine::load(&dir, 1).unwrap(), goldens))
+}
+
+#[test]
+fn mlp_goldens() {
+    let Some((engine, goldens)) = load() else { return };
+    for model in ["mlp_tiny", "mlp_default"] {
+        let g = goldens.need(model).unwrap();
+        let meta = engine.manifest().model(model).unwrap().clone();
+        let bt = meta.field_usize("train_batch").unwrap();
+        let be = meta.field_usize("eval_batch").unwrap();
+        let d = meta.field_usize("in_dim").unwrap();
+        let c = meta.field_usize("classes").unwrap() as u32;
+
+        // init
+        let seed = g.need("init_seed").unwrap().as_i64().unwrap() as i32;
+        let params = engine
+            .execute(&format!("{model}_init"), vec![Tensor::scalar_i32(seed)])
+            .unwrap()
+            .remove(0);
+        assert_close(
+            &format!("{model}.init"),
+            &compute_checksum(params.f32s().unwrap()),
+            &checksum_of(g.need("init_params").unwrap()),
+        );
+
+        // train
+        let tr = g.need("train").unwrap();
+        let x = golden_f32(tr.need("x_seed").unwrap().as_i64().unwrap() as u32, bt * d);
+        let y = golden_i32(tr.need("y_seed").unwrap().as_i64().unwrap() as u32, bt, c);
+        let out = engine
+            .execute(
+                &format!("{model}_train"),
+                vec![
+                    params.clone(),
+                    Tensor::with_shape_f32(vec![bt, d], x).unwrap(),
+                    Tensor::with_shape_i32(vec![bt], y).unwrap(),
+                    Tensor::scalar_f32(
+                        tr.need("lr").unwrap().as_f64().unwrap() as f32
+                    ),
+                    Tensor::scalar_f32(
+                        tr.need("mu").unwrap().as_f64().unwrap() as f32
+                    ),
+                    params.clone(),
+                ],
+            )
+            .unwrap();
+        let want_loss = tr.need("loss").unwrap().as_f64().unwrap();
+        let got_loss = out[1].scalar().unwrap() as f64;
+        assert!(
+            (got_loss - want_loss).abs() < 1e-4 + 1e-3 * want_loss.abs(),
+            "{model}.train loss {got_loss} vs {want_loss}"
+        );
+        assert_close(
+            &format!("{model}.train.params"),
+            &compute_checksum(out[0].f32s().unwrap()),
+            &checksum_of(tr.need("new_params").unwrap()),
+        );
+
+        // eval
+        let ev = g.need("eval").unwrap();
+        let xe = golden_f32(ev.need("x_seed").unwrap().as_i64().unwrap() as u32, be * d);
+        let ye = golden_i32(ev.need("y_seed").unwrap().as_i64().unwrap() as u32, be, c);
+        let out = engine
+            .execute(
+                &format!("{model}_eval"),
+                vec![
+                    params.clone(),
+                    Tensor::with_shape_f32(vec![be, d], xe).unwrap(),
+                    Tensor::with_shape_i32(vec![be], ye).unwrap(),
+                ],
+            )
+            .unwrap();
+        let want_ls = ev.need("loss_sum").unwrap().as_f64().unwrap();
+        let got_ls = out[0].scalar().unwrap() as f64;
+        assert!(
+            (got_ls - want_ls).abs() < 1e-3 + 1e-3 * want_ls.abs(),
+            "{model}.eval loss_sum {got_ls} vs {want_ls}"
+        );
+        // correct-count must match exactly
+        assert_eq!(
+            out[1].scalar().unwrap() as f64,
+            ev.need("ncorrect").unwrap().as_f64().unwrap(),
+            "{model}.eval ncorrect"
+        );
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn transformer_goldens() {
+    let Some((engine, goldens)) = load() else { return };
+    let model = "tfm_tiny";
+    let g = goldens.need(model).unwrap();
+    let meta = engine.manifest().model(model).unwrap().clone();
+    let bt = meta.field_usize("train_batch").unwrap();
+    let s = meta.field_usize("seq").unwrap();
+    let v = meta.field_usize("vocab").unwrap() as u32;
+
+    let params = engine
+        .execute(&format!("{model}_init"), vec![Tensor::scalar_i32(42)])
+        .unwrap()
+        .remove(0);
+    assert_close(
+        "tfm.init",
+        &compute_checksum(params.f32s().unwrap()),
+        &checksum_of(g.need("init_params").unwrap()),
+    );
+
+    let tr = g.need("train").unwrap();
+    let toks = golden_i32(
+        tr.need("tok_seed").unwrap().as_i64().unwrap() as u32,
+        bt * (s + 1),
+        v,
+    );
+    let out = engine
+        .execute(
+            &format!("{model}_train"),
+            vec![
+                params.clone(),
+                Tensor::with_shape_i32(vec![bt, s + 1], toks.clone()).unwrap(),
+                Tensor::scalar_f32(tr.need("lr").unwrap().as_f64().unwrap() as f32),
+                Tensor::scalar_f32(tr.need("mu").unwrap().as_f64().unwrap() as f32),
+                params.clone(),
+            ],
+        )
+        .unwrap();
+    let want_loss = tr.need("loss").unwrap().as_f64().unwrap();
+    let got_loss = out[1].scalar().unwrap() as f64;
+    assert!(
+        (got_loss - want_loss).abs() < 1e-3 + 1e-3 * want_loss.abs(),
+        "tfm.train loss {got_loss} vs {want_loss}"
+    );
+    assert_close(
+        "tfm.train.params",
+        &compute_checksum(out[0].f32s().unwrap()),
+        &checksum_of(tr.need("new_params").unwrap()),
+    );
+
+    let ev = g.need("eval").unwrap();
+    let out = engine
+        .execute(
+            &format!("{model}_eval"),
+            vec![
+                params.clone(),
+                Tensor::with_shape_i32(vec![bt, s + 1], toks).unwrap(),
+            ],
+        )
+        .unwrap();
+    let want_ls = ev.need("loss_sum").unwrap().as_f64().unwrap();
+    let got_ls = out[0].scalar().unwrap() as f64;
+    assert!(
+        (got_ls - want_ls).abs() < 0.05 + 1e-3 * want_ls.abs(),
+        "tfm.eval loss_sum {got_ls} vs {want_ls}"
+    );
+    assert_eq!(
+        out[1].scalar().unwrap() as f64,
+        ev.need("ntok").unwrap().as_f64().unwrap()
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn fedavg_kernel_goldens() {
+    let Some((engine, goldens)) = load() else { return };
+    for (name, (k, p)) in engine.manifest().aggregators.clone() {
+        let g = goldens.need(&name).unwrap();
+        let stacked = golden_f32(
+            g.need("stacked_seed").unwrap().as_i64().unwrap() as u32,
+            k * p,
+        );
+        let weights: Vec<f32> = golden_f32(
+            g.need("weights_seed").unwrap().as_i64().unwrap() as u32,
+            k,
+        )
+        .iter()
+        .map(|v| v.abs() + 0.1)
+        .collect();
+        let out = engine
+            .execute(
+                &name,
+                vec![
+                    Tensor::with_shape_f32(vec![k, p], stacked).unwrap(),
+                    Tensor::with_shape_f32(vec![k], weights).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_close(
+            &name,
+            &compute_checksum(out[0].f32s().unwrap()),
+            &checksum_of(g.need("out").unwrap()),
+        );
+    }
+    engine.shutdown();
+}
