@@ -55,6 +55,7 @@ fn main() -> feddart::Result<()> {
                 name: format!("client-{i}"),
                 hardware: Default::default(),
                 faults: FaultInjector::new(i as u64, profile),
+                capacity: 1,
             }
         })
         .collect();

@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make `compile.*` importable when tests run as
+`python -m pytest python/tests` from the repository root (the tier-1/CI
+invocation), without requiring an installed package or PYTHONPATH."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

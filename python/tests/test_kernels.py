@@ -8,7 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property sweeps skipped"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import dense, matmul, fedavg
 from compile.kernels import ref

@@ -52,6 +52,7 @@ fn main() {
                 name: format!("client-{i}"),
                 hardware: Default::default(),
                 faults: FaultInjector::new(i as u64, FaultProfile::flaky(rate)),
+                capacity: 1,
             })
             .collect();
         let wm = WorkflowManager::test_mode_with(clients, registry, common::cores());

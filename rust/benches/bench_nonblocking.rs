@@ -38,6 +38,7 @@ fn main() {
             } else {
                 FaultInjector::none()
             },
+            capacity: 1,
         })
         .collect();
     let wm = WorkflowManager::test_mode_with(clients, registry, n);

@@ -1,37 +1,277 @@
-//! E2 — cross-silo scalability (paper §1.1/§2.1: "usually around 2-100
-//! clients"; GPI-Space "scales efficiently").
+//! E2 — scalability.
 //!
-//! Regenerates: round latency and client-task throughput vs client count
-//! for the full coordination path (WorkflowManager -> Selector ->
-//! Scheduler -> simulated clients).  The linear model keeps per-client
-//! compute ~constant and tiny, so the series isolates runtime overhead.
-//! Expected shape: near-linear task throughput growth until the dispatcher
-//! pool saturates, round latency staying in the low milliseconds.
+//! Part 1 (always runs, artifact-free): **contended scheduler dispatch**.
+//! Many workers poll/complete concurrently while tasks stream in, heartbeats
+//! hammer the registry and a reaper scans for stale workers — the hot paths
+//! of a busy DART-server.  Measured for the retained single-mutex baseline
+//! (`SingleLockScheduler`) and the sharded scheduler (batch 1 and the
+//! default batch), reporting dispatch throughput in units/sec and emitting
+//! `BENCH_scheduler.json` for per-PR regression tracking.  Smoke mode
+//! (`BENCH_SMOKE=1` or `--smoke`) shrinks iteration counts for CI.
+//!
+//! Part 2 (needs artifacts): the original cross-silo coordination bench
+//! (paper §1.1/§2.1: "usually around 2-100 clients") — round latency and
+//! client-task throughput vs client count through the full coordination
+//! path (WorkflowManager -> Selector -> Scheduler -> simulated clients).
 
 #[path = "common.rs"]
 mod common;
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
-use feddart::benchkit::{fmt_s, Stats, Table};
+use feddart::benchkit::{fmt_s, smoke, BenchReport, Stats, Table};
+use feddart::config::HardwareConfig;
+use feddart::dart::scheduler::{Scheduler, TaskSpec, UnitReport, WorkUnit, DEFAULT_BATCH};
+use feddart::dart::scheduler_single::SingleLockScheduler;
 use feddart::fact::model::Hyper;
 use feddart::fact::stopping::FixedRoundFl;
+use feddart::json::Json;
 
-fn main() {
-    let engine = common::require_artifacts();
+/// The scheduler surface the contention bench drives (implemented by both
+/// the sharded scheduler and the single-mutex baseline).
+trait BenchSched: Send + Sync + 'static {
+    fn add_worker(&self, name: &str, capacity: usize);
+    fn submit(&self, spec: TaskSpec) -> feddart::Result<u64>;
+    fn next_units(&self, worker: &str, max: usize) -> Vec<WorkUnit>;
+    fn complete_units(&self, reports: Vec<UnitReport>) -> usize;
+    fn heartbeat(&self, worker: &str);
+    fn reap_stale_workers(&self, timeout_ms: u64) -> Vec<String>;
+}
+
+impl BenchSched for Scheduler {
+    fn add_worker(&self, name: &str, capacity: usize) {
+        Scheduler::add_worker(self, name, HardwareConfig::default(), capacity);
+    }
+    fn submit(&self, spec: TaskSpec) -> feddart::Result<u64> {
+        Scheduler::submit(self, spec)
+    }
+    fn next_units(&self, worker: &str, max: usize) -> Vec<WorkUnit> {
+        Scheduler::next_units(self, worker, max)
+    }
+    fn complete_units(&self, reports: Vec<UnitReport>) -> usize {
+        Scheduler::complete_units(self, reports)
+    }
+    fn heartbeat(&self, worker: &str) {
+        Scheduler::heartbeat(self, worker);
+    }
+    fn reap_stale_workers(&self, timeout_ms: u64) -> Vec<String> {
+        Scheduler::reap_stale_workers(self, timeout_ms)
+    }
+}
+
+impl BenchSched for SingleLockScheduler {
+    fn add_worker(&self, name: &str, capacity: usize) {
+        SingleLockScheduler::add_worker(self, name, HardwareConfig::default(), capacity);
+    }
+    fn submit(&self, spec: TaskSpec) -> feddart::Result<u64> {
+        SingleLockScheduler::submit(self, spec)
+    }
+    fn next_units(&self, worker: &str, max: usize) -> Vec<WorkUnit> {
+        SingleLockScheduler::next_units(self, worker, max)
+    }
+    fn complete_units(&self, reports: Vec<UnitReport>) -> usize {
+        SingleLockScheduler::complete_units(self, reports)
+    }
+    fn heartbeat(&self, worker: &str) {
+        SingleLockScheduler::heartbeat(self, worker);
+    }
+    fn reap_stale_workers(&self, timeout_ms: u64) -> Vec<String> {
+        SingleLockScheduler::reap_stale_workers(self, timeout_ms)
+    }
+}
+
+/// One contended run: `workers` worker threads batch-polling and completing,
+/// a submitter streaming `tasks` broadcast tasks, one heartbeat hammer and
+/// one reaper.  Returns dispatch throughput in units/sec (a unit counts
+/// once dispatched *and* completed).
+fn contended_run<S: BenchSched>(
+    sched: Arc<S>,
+    workers: usize,
+    tasks: usize,
+    capacity: usize,
+    batch: usize,
+) -> f64 {
+    let names: Vec<String> = (0..workers).map(|i| format!("w{i}")).collect();
+    for n in &names {
+        sched.add_worker(n, capacity);
+    }
+    let expected = workers * tasks; // every task addresses every worker
+    let completed = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+
+    // worker threads: poll a batch, "execute" (no-op), complete the batch
+    for name in &names {
+        let sched = Arc::clone(&sched);
+        let completed = Arc::clone(&completed);
+        let stop = Arc::clone(&stop);
+        let name = name.clone();
+        handles.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let units = sched.next_units(&name, batch);
+                if units.is_empty() {
+                    std::thread::yield_now();
+                    continue;
+                }
+                let n = units.len();
+                let reports = units
+                    .into_iter()
+                    .map(|u| UnitReport::Done {
+                        task_id: u.task_id,
+                        client: u.client,
+                        duration: 0.0,
+                        result: Json::Null,
+                    })
+                    .collect();
+                sched.complete_units(reports);
+                completed.fetch_add(n, Ordering::Relaxed);
+            }
+        }));
+    }
+
+    // submitter: stream all tasks in (each addressing every worker)
+    {
+        let sched = Arc::clone(&sched);
+        let names = names.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..tasks {
+                let params = names
+                    .iter()
+                    .map(|n| (n.clone(), Json::obj().set("x", 1)))
+                    .collect();
+                sched.submit(TaskSpec::new("noop", params)).expect("submit");
+            }
+        }));
+    }
+
+    // heartbeat hammer: the read-mostly registry must not slow dispatch
+    {
+        let sched = Arc::clone(&sched);
+        let names = names.clone();
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                for n in &names {
+                    sched.heartbeat(n);
+                }
+            }
+        }));
+    }
+
+    // reaper: periodic stale scan with a huge timeout (never fires)
+    {
+        let sched = Arc::clone(&sched);
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                sched.reap_stale_workers(3_600_000);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }));
+    }
+
+    while completed.load(Ordering::Relaxed) < expected {
+        std::thread::yield_now();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    expected as f64 / wall
+}
+
+fn scheduler_contention_bench() -> (f64, f64) {
+    let (tasks, worker_counts): (usize, Vec<usize>) = if smoke() {
+        (30, vec![8, 64])
+    } else {
+        (200, vec![8, 64])
+    };
+    let capacity = 4;
+
+    let mut t = Table::new(&[
+        "workers",
+        "baseline_ups",
+        "sharded_b1_ups",
+        "sharded_b16_ups",
+        "speedup_b1",
+        "speedup_b16",
+    ]);
+    let mut report = BenchReport::new("scheduler")
+        .set("tasks", tasks)
+        .set("capacity", capacity)
+        .set("batch", DEFAULT_BATCH)
+        .set("smoke", smoke());
+    let mut final_speedups = (0.0, 0.0);
+
+    for &workers in &worker_counts {
+        let baseline = contended_run(
+            Arc::new(SingleLockScheduler::new()),
+            workers,
+            tasks,
+            capacity,
+            1,
+        );
+        let sharded_b1 =
+            contended_run(Arc::new(Scheduler::new()), workers, tasks, capacity, 1);
+        let sharded_bn = contended_run(
+            Arc::new(Scheduler::new()),
+            workers,
+            tasks,
+            capacity,
+            DEFAULT_BATCH,
+        );
+        let s1 = sharded_b1 / baseline;
+        let sn = sharded_bn / baseline;
+        t.row(&[
+            workers.to_string(),
+            format!("{baseline:.0}"),
+            format!("{sharded_b1:.0}"),
+            format!("{sharded_bn:.0}"),
+            format!("{s1:.2}x"),
+            format!("{sn:.2}x"),
+        ]);
+        report = report
+            .set(&format!("baseline_ups_w{workers}"), baseline)
+            .set(&format!("sharded_b1_ups_w{workers}"), sharded_b1)
+            .set(&format!("sharded_b16_ups_w{workers}"), sharded_bn)
+            .set(&format!("speedup_b1_w{workers}"), s1)
+            .set(&format!("speedup_b16_w{workers}"), sn);
+        if workers == 64 {
+            final_speedups = (s1, sn);
+        }
+    }
+    t.print("E2a: contended dispatch throughput (units/sec), single-mutex vs sharded");
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_scheduler.json: {e}"),
+    }
+    final_speedups
+}
+
+fn coordination_bench(engine: &feddart::runtime::Engine) {
     let rounds = 6;
     let mut t = Table::new(&[
         "clients", "round_p50", "round_p95", "client_tasks/s", "agg_ms",
     ]);
+    let client_counts: &[usize] = if smoke() {
+        &[2, 8]
+    } else {
+        &[2, 4, 8, 16, 32, 64, 100]
+    };
 
-    for &clients in &[2usize, 4, 8, 16, 32, 64, 100] {
+    for &clients in client_counts {
         let (mut server, model) =
-            common::linear_fact_server(&engine, clients, common::cores());
+            common::linear_fact_server(engine, clients, common::cores());
         server.hyper = Hyper { lr: 0.2, mu: 0.0, local_steps: 2, round: 0 };
         server
             .initialization_by_model(model, Arc::new(FixedRoundFl(rounds)), 1)
             .unwrap();
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         server.learn().unwrap();
         let wall = t0.elapsed().as_secs_f64();
         let hist = server.history();
@@ -48,7 +288,27 @@ fn main() {
             format!("{agg_ms:.2}"),
         ]);
     }
-    t.print("E2: coordination scalability vs client count (test mode, linear model)");
+    t.print("E2b: coordination scalability vs client count (test mode, linear model)");
     println!("\nE2 shape check: throughput should grow with clients until core saturation.");
-    engine.shutdown();
+}
+
+fn main() {
+    let (s1, sn) = scheduler_contention_bench();
+    println!(
+        "\nE2a verdict at 64 workers: sharded is {s1:.2}x (batch 1) / {sn:.2}x \
+         (batch {DEFAULT_BATCH}) the single-mutex baseline."
+    );
+
+    match common::try_artifacts() {
+        Some(engine) => {
+            coordination_bench(&engine);
+            engine.shutdown();
+        }
+        None => {
+            println!(
+                "\nE2b skipped: artifacts missing (run `make artifacts` to include \
+                 the coordination bench)."
+            );
+        }
+    }
 }

@@ -13,12 +13,24 @@ use feddart::fact::{Aggregation, FactClientRuntime, FactServer};
 use feddart::runtime::{default_artifacts_dir, Engine};
 
 pub fn require_artifacts() -> Engine {
+    match try_artifacts() {
+        Some(e) => e,
+        None => {
+            eprintln!("ERROR: artifacts missing — run `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Like [`require_artifacts`] but non-fatal: benches with artifact-free
+/// sections (the scheduler contention bench) skip the HLO parts instead of
+/// aborting the whole binary.
+pub fn try_artifacts() -> Option<Engine> {
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("ERROR: artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
+        return None;
     }
-    Engine::load(&dir, 1).expect("engine")
+    Some(Engine::load(&dir, 1).expect("engine"))
 }
 
 /// A complete test-mode FL stack over mlp_default with synthetic data.

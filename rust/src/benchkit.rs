@@ -4,7 +4,10 @@
 //! uses this module: warmup + repeated measurement, robust statistics, and
 //! aligned table output matching the rows EXPERIMENTS.md records.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::json::Json;
 
 /// Robust summary of a sample set (times in seconds).
 #[derive(Debug, Clone)]
@@ -123,6 +126,48 @@ impl Table {
     }
 }
 
+/// True when the bench should run with tiny iteration counts (CI smoke):
+/// `BENCH_SMOKE=1` in the environment or `--smoke` on the command line.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke")
+}
+
+/// Machine-readable bench output: accumulates key/value fields and writes
+/// `BENCH_<name>.json` (into `$BENCH_OUT` if set, else the working
+/// directory), so CI can upload per-PR artifacts and diff regressions.
+pub struct BenchReport {
+    name: String,
+    fields: Json,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), fields: Json::obj() }
+    }
+
+    pub fn set(mut self, key: &str, value: impl Into<Json>) -> BenchReport {
+        self.fields = self.fields.set(key, value);
+        self
+    }
+
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var("BENCH_OUT")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("."));
+        dir.join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write the report; returns the path written.
+    pub fn write(self) -> std::io::Result<PathBuf> {
+        let path = self.path();
+        std::fs::write(&path, self.fields.to_pretty())?;
+        Ok(path)
+    }
+}
+
 /// Format seconds human-readably for table cells.
 pub fn fmt_s(s: f64) -> String {
     if s >= 1.0 {
@@ -156,6 +201,23 @@ mod tests {
         assert_eq!(calls, 7);
         assert_eq!(s.n, 5);
         assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_report_writes_json() {
+        let dir = std::env::temp_dir().join("feddart-benchkit-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("BENCH_OUT", &dir);
+        let path = BenchReport::new("unittest")
+            .set("workers", 64usize)
+            .set("speedup", 3.5)
+            .write()
+            .unwrap();
+        std::env::remove_var("BENCH_OUT");
+        assert!(path.ends_with("BENCH_unittest.json"));
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("workers").unwrap().as_usize(), Some(64));
+        assert_eq!(j.get("speedup").unwrap().as_f64(), Some(3.5));
     }
 
     #[test]

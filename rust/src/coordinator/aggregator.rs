@@ -161,14 +161,14 @@ pub fn tree_reduce_weighted<V: AsRef<[f32]> + Sync>(
 
     // each leaf computes an *unnormalized* weighted partial sum over a
     // fanout-sized chunk of clients, borrowing the inputs directly
-    let partials: Vec<Vec<f32>> = crossbeam_utils::thread::scope(|scope| {
+    let partials: Vec<Vec<f32>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..k)
             .step_by(fanout)
             .map(|s| {
                 let e = (s + fanout).min(k);
                 let vectors = &vectors[s..e];
                 let weights = &weights[s..e];
-                scope.spawn(move |_| {
+                scope.spawn(move || {
                     let mut acc = vec![0.0f32; p];
                     for (v, &w) in vectors.iter().zip(weights) {
                         for (a, &x) in acc.iter_mut().zip(v.as_ref().iter()) {
@@ -180,8 +180,7 @@ pub fn tree_reduce_weighted<V: AsRef<[f32]> + Sync>(
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
-    })
-    .expect("tree reduce scope");
+    });
 
     // root combine + normalize
     let mut out = vec![0.0f32; p];
@@ -217,10 +216,10 @@ pub fn parallel_reduce_weighted<V: AsRef<[f32]> + Sync>(
         return flat_reduce_weighted(vectors, weights);
     }
     let chunk = p.div_ceil(nthreads);
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         for (t, out_chunk) in out.chunks_mut(chunk).enumerate() {
             let start = t * chunk;
-            scope.spawn(move |_| {
+            scope.spawn(move || {
                 for (v, &w) in vectors.iter().zip(weights) {
                     let wn = w / wsum;
                     let src = &v.as_ref()[start..start + out_chunk.len()];
@@ -230,8 +229,7 @@ pub fn parallel_reduce_weighted<V: AsRef<[f32]> + Sync>(
                 }
             });
         }
-    })
-    .expect("parallel reduce scope");
+    });
     out
 }
 

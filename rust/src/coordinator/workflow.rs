@@ -42,6 +42,31 @@ impl WorkflowManager {
         }
     }
 
+    /// Test mode with an explicit per-client capacity and poll batch size —
+    /// the batched-dispatch analogue of [`WorkflowManager::test_mode`].
+    pub fn test_mode_batched(
+        n: usize,
+        registry: TaskRegistry,
+        parallelism: usize,
+        capacity: usize,
+        batch: usize,
+    ) -> Self {
+        let clients = (0..n)
+            .map(|i| SimClient::reliable(&format!("client-{i}")).with_capacity(capacity))
+            .collect();
+        let sim = Arc::new(TestModeDart::start_with_batch(
+            clients,
+            registry,
+            parallelism,
+            batch,
+        ));
+        WorkflowManager {
+            selector: Selector::new(sim.clone() as Arc<dyn DartApi>),
+            test_mode: true,
+            _sim: Some(sim),
+        }
+    }
+
     /// Test mode with explicit simulated clients (fault profiles, hardware).
     pub fn test_mode_with(
         clients: Vec<SimClient>,
@@ -69,6 +94,7 @@ impl WorkflowManager {
                 name: d.name.clone(),
                 hardware: d.hardware.clone(),
                 faults: crate::dart::faults::FaultInjector::none(),
+                capacity: 1,
             })
             .collect();
         Self::test_mode_with(clients, registry, parallelism)
@@ -255,6 +281,23 @@ mod tests {
                 assert!(r.result.get("loss").unwrap().as_f64().unwrap() < 1.0);
                 assert!(r.duration >= 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn batched_test_mode_runs_rounds() {
+        // capacity 4, poll batch 4: the same paper workflow over the
+        // batched dispatch path
+        let wm = WorkflowManager::test_mode_batched(4, registry(), 2, 4, 4);
+        wm.start_fed_dart(4, Duration::from_secs(5)).unwrap();
+        for _ in 0..3 {
+            let clients = wm.get_all_device_names().unwrap();
+            let dict: BTreeMap<String, Json> = clients
+                .iter()
+                .map(|c| (c.clone(), Json::obj().set("lr", 0.5)))
+                .collect();
+            let results = wm.run_task(dict, "learn", Duration::from_secs(10)).unwrap();
+            assert_eq!(results.len(), 4);
         }
     }
 

@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::HardwareConfig;
 use crate::dart::protocol::{ClientMsg, ServerMsg};
+use crate::dart::scheduler::{UnitReport, WorkUnit, DEFAULT_BATCH};
 use crate::dart::transport::{recv_json, send_json};
 use crate::dart::TaskRegistry;
 use crate::error::{FedError, Result};
@@ -30,6 +31,9 @@ pub struct DartClientConfig {
     pub capacity: usize,
     /// poll interval when idle
     pub poll_interval: Duration,
+    /// units fetched per poll round-trip (the server additionally caps the
+    /// batch by this worker's free capacity)
+    pub batch: usize,
 }
 
 impl DartClientConfig {
@@ -41,7 +45,15 @@ impl DartClientConfig {
             hardware: HardwareConfig::default(),
             capacity: 1,
             poll_interval: Duration::from_millis(2),
+            batch: DEFAULT_BATCH,
         }
+    }
+
+    /// Set capacity and poll batch together (the common batched setup).
+    pub fn with_batch(mut self, capacity: usize, batch: usize) -> Self {
+        self.capacity = capacity.max(1);
+        self.batch = batch.max(1);
+        self
     }
 }
 
@@ -151,21 +163,35 @@ fn session(
             let _ = recv_json(&mut reader, key); // Ack
             return Ok(());
         }
-        send_json(&mut writer, key, &ClientMsg::Poll.to_json())?;
+        send_json(
+            &mut writer,
+            key,
+            &ClientMsg::PollBatch { max: cfg.batch.max(1) }.to_json(),
+        )?;
         match ServerMsg::from_json(&recv_json(&mut reader, key)?)? {
+            ServerMsg::AssignBatch { units } => {
+                // execute the whole batch, then report every outcome in one
+                // round-trip
+                let reports: Vec<UnitReport> =
+                    units.into_iter().map(|u| execute_unit(registry, u)).collect();
+                send_json(
+                    &mut writer,
+                    key,
+                    &ClientMsg::ResultBatch { reports }.to_json(),
+                )?;
+                let _ = recv_json(&mut reader, key)?; // Ack
+            }
+            // legacy single-unit assignment (server predates batch dispatch)
             ServerMsg::Assign { task_id, function, client, params } => {
-                let t0 = Instant::now();
-                let outcome = registry.call_as(&client, &function, &params);
-                let duration = t0.elapsed().as_secs_f64();
-                let msg = match outcome {
-                    Ok(result) => {
+                let unit = WorkUnit { task_id, function, client, params };
+                let report = execute_unit(registry, unit);
+                let msg = match report {
+                    UnitReport::Done { task_id, client, duration, result } => {
                         ClientMsg::Result { task_id, client, duration, result }
                     }
-                    Err(e) => ClientMsg::Error {
-                        task_id,
-                        client,
-                        reason: e.to_string(),
-                    },
+                    UnitReport::Failed { task_id, client, reason } => {
+                        ClientMsg::Error { task_id, client, reason }
+                    }
                 };
                 send_json(&mut writer, key, &msg.to_json())?;
                 let _ = recv_json(&mut reader, key)?; // Ack
@@ -179,6 +205,19 @@ fn session(
             }
             ServerMsg::Welcome { .. } => {}
         }
+    }
+}
+
+/// Run one unit through the registry and wrap the outcome.  Shared with the
+/// REST worker path ([`crate::dart::rest::RestWorker`]).
+pub(crate) fn execute_unit(registry: &TaskRegistry, unit: WorkUnit) -> UnitReport {
+    let WorkUnit { task_id, function, client, params } = unit;
+    let t0 = Instant::now();
+    let outcome = registry.call_as(&client, &function, &params);
+    let duration = t0.elapsed().as_secs_f64();
+    match outcome {
+        Ok(result) => UnitReport::Done { task_id, client, duration, result },
+        Err(e) => UnitReport::Failed { task_id, client, reason: e.to_string() },
     }
 }
 
@@ -242,6 +281,35 @@ mod tests {
             .collect();
         ys.sort_by(f64::total_cmp);
         assert_eq!(ys, vec![9.0, 16.0]);
+    }
+
+    #[test]
+    fn batched_client_drains_many_tasks() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let addr = server.dart_addr().to_string();
+        let key = b"feddart-demo-key";
+        // capacity 8, poll batch 8: twenty tasks drain in few round-trips
+        let cfg = DartClientConfig::new("bulk", &addr, key).with_batch(8, 8);
+        let _c = DartClient::spawn(cfg, registry());
+        wait_for_clients(&server, 1);
+        let tids: Vec<u64> = (0..20)
+            .map(|i| {
+                let mut params = BTreeMap::new();
+                params.insert("bulk".to_string(), Json::obj().set("x", i as f64));
+                server.scheduler().submit(TaskSpec::new("square", params)).unwrap()
+            })
+            .collect();
+        let t0 = Instant::now();
+        for tid in &tids {
+            while server.scheduler().status(*tid).unwrap() == TaskStatus::InProgress {
+                assert!(t0.elapsed() < Duration::from_secs(10), "batched drain stuck");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            assert_eq!(
+                server.scheduler().status(*tid).unwrap(),
+                TaskStatus::Finished
+            );
+        }
     }
 
     #[test]

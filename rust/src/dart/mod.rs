@@ -8,7 +8,10 @@
 //! Components (one module each):
 //! * [`petri`] — Petri-net workflow substrate (the GPI-Space role).
 //! * [`scheduler`] — capability/requirement-aware task scheduler with
-//!   fault-tolerant re-queue.
+//!   fault-tolerant re-queue (sharded: per-worker dispatch queues, a
+//!   sharded task table, batched dispatch/completion).
+//! * [`scheduler_single`] — the original single-mutex scheduler, retained
+//!   as the contention baseline for `bench_scalability`.
 //! * [`transport`] — HMAC-authenticated framed TCP (the SSH-channel role).
 //! * [`protocol`] — wire + REST message formats.
 //! * [`server`] — the DART-server: client connections + https REST-API.
@@ -25,6 +28,7 @@ pub mod petri;
 pub mod protocol;
 pub mod rest;
 pub mod scheduler;
+pub mod scheduler_single;
 pub mod server;
 pub mod testmode;
 pub mod transport;

@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::HardwareConfig;
-use crate::dart::scheduler::{TaskResult, TaskStatus, WorkUnit};
+use crate::dart::scheduler::{TaskResult, TaskStatus, UnitReport, WorkUnit};
 use crate::error::{FedError, Result};
 use crate::json::Json;
 
@@ -21,10 +21,14 @@ pub enum ClientMsg {
     Heartbeat,
     /// Ask for work (pull dispatch).
     Poll,
+    /// Ask for up to `max` units in one round-trip (batched pull dispatch).
+    PollBatch { max: usize },
     /// Successful unit result.
     Result { task_id: u64, client: String, duration: f64, result: Json },
     /// Unit execution error.
     Error { task_id: u64, client: String, reason: String },
+    /// Batched unit outcomes (success and error mixed).
+    ResultBatch { reports: Vec<UnitReport> },
     /// Graceful disconnect.
     Bye,
 }
@@ -36,6 +40,8 @@ pub enum ServerMsg {
     Welcome { server_name: String },
     /// A unit of work to execute.
     Assign { task_id: u64, function: String, client: String, params: Json },
+    /// A batch of units to execute (reply to `PollBatch`).
+    AssignBatch { units: Vec<WorkUnit> },
     /// Nothing to do right now.
     Idle,
     /// Acknowledgement (results, heartbeats).
@@ -54,6 +60,15 @@ impl ClientMsg {
                 .set("capacity", *capacity),
             ClientMsg::Heartbeat => Json::obj().set("type", "heartbeat"),
             ClientMsg::Poll => Json::obj().set("type", "poll"),
+            ClientMsg::PollBatch { max } => {
+                Json::obj().set("type", "poll_batch").set("max", *max)
+            }
+            ClientMsg::ResultBatch { reports } => Json::obj()
+                .set("type", "result_batch")
+                .set(
+                    "reports",
+                    Json::Arr(reports.iter().map(unit_report_to_json).collect()),
+                ),
             ClientMsg::Result { task_id, client, duration, result } => Json::obj()
                 .set("type", "result")
                 .set("task_id", *task_id)
@@ -82,6 +97,18 @@ impl ClientMsg {
             }),
             "heartbeat" => Ok(ClientMsg::Heartbeat),
             "poll" => Ok(ClientMsg::Poll),
+            "poll_batch" => Ok(ClientMsg::PollBatch {
+                max: j.get("max").and_then(Json::as_usize).unwrap_or(1),
+            }),
+            "result_batch" => Ok(ClientMsg::ResultBatch {
+                reports: j
+                    .need("reports")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(unit_report_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            }),
             "result" => Ok(ClientMsg::Result {
                 task_id: j.need("task_id")?.as_i64().unwrap_or(0) as u64,
                 client: j.need("client")?.as_str().unwrap_or("").to_string(),
@@ -115,6 +142,9 @@ impl ServerMsg {
                 .set("function", function.as_str())
                 .set("client", client.as_str())
                 .set("params", params.clone()),
+            ServerMsg::AssignBatch { units } => Json::obj()
+                .set("type", "assign_batch")
+                .set("units", Json::Arr(units.iter().map(work_unit_to_json).collect())),
             ServerMsg::Idle => Json::obj().set("type", "idle"),
             ServerMsg::Ack => Json::obj().set("type", "ack"),
             ServerMsg::Deny { reason } => Json::obj()
@@ -139,6 +169,15 @@ impl ServerMsg {
                 client: j.need("client")?.as_str().unwrap_or("").to_string(),
                 params: j.get("params").cloned().unwrap_or(Json::Null),
             }),
+            "assign_batch" => Ok(ServerMsg::AssignBatch {
+                units: j
+                    .need("units")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(work_unit_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            }),
             "idle" => Ok(ServerMsg::Idle),
             "ack" => Ok(ServerMsg::Ack),
             "deny" => Ok(ServerMsg::Deny {
@@ -159,6 +198,68 @@ impl ServerMsg {
             client: u.client.clone(),
             params: u.params.clone(),
         }
+    }
+}
+
+// ------------------------------------------------- batch message payloads
+
+/// Serialize one work unit (used by `assign_batch` and the REST
+/// `/worker/poll_batch` endpoint).
+pub fn work_unit_to_json(u: &WorkUnit) -> Json {
+    Json::obj()
+        .set("task_id", u.task_id)
+        .set("function", u.function.as_str())
+        .set("client", u.client.as_str())
+        .set("params", u.params.clone())
+}
+
+pub fn work_unit_from_json(j: &Json) -> Result<WorkUnit> {
+    Ok(WorkUnit {
+        task_id: j.need("task_id")?.as_i64().unwrap_or(0) as u64,
+        function: j.need("function")?.as_str().unwrap_or("").to_string(),
+        client: j.need("client")?.as_str().unwrap_or("").to_string(),
+        params: j.get("params").cloned().unwrap_or(Json::Null),
+    })
+}
+
+/// Serialize one unit outcome (used by `result_batch` and the REST
+/// `/worker/complete_batch` endpoint).
+pub fn unit_report_to_json(r: &UnitReport) -> Json {
+    match r {
+        UnitReport::Done { task_id, client, duration, result } => Json::obj()
+            .set("task_id", *task_id)
+            .set("client", client.as_str())
+            .set("ok", true)
+            .set("duration", *duration)
+            .set("result", result.clone()),
+        UnitReport::Failed { task_id, client, reason } => Json::obj()
+            .set("task_id", *task_id)
+            .set("client", client.as_str())
+            .set("ok", false)
+            .set("reason", reason.as_str()),
+    }
+}
+
+pub fn unit_report_from_json(j: &Json) -> Result<UnitReport> {
+    let task_id = j.need("task_id")?.as_i64().unwrap_or(0) as u64;
+    let client = j.need("client")?.as_str().unwrap_or("").to_string();
+    if j.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+        Ok(UnitReport::Done {
+            task_id,
+            client,
+            duration: j.get("duration").and_then(Json::as_f64).unwrap_or(0.0),
+            result: j.get("result").cloned().unwrap_or(Json::Null),
+        })
+    } else {
+        Ok(UnitReport::Failed {
+            task_id,
+            client,
+            reason: j
+                .get("reason")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+        })
     }
 }
 
@@ -273,6 +374,53 @@ mod tests {
             let j = m.to_json();
             assert_eq!(ServerMsg::from_json(&j).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn batch_msgs_roundtrip() {
+        let units = vec![
+            WorkUnit {
+                task_id: 1,
+                function: "learn".into(),
+                client: "edge-0".into(),
+                params: Json::obj().set("lr", 0.1),
+            },
+            WorkUnit {
+                task_id: 2,
+                function: "learn".into(),
+                client: "edge-0".into(),
+                params: Json::Null,
+            },
+        ];
+        let m = ServerMsg::AssignBatch { units };
+        assert_eq!(ServerMsg::from_json(&m.to_json()).unwrap(), m);
+
+        let poll = ClientMsg::PollBatch { max: 16 };
+        assert_eq!(ClientMsg::from_json(&poll.to_json()).unwrap(), poll);
+
+        let reports = vec![
+            UnitReport::Done {
+                task_id: 1,
+                client: "edge-0".into(),
+                duration: 0.25,
+                result: Json::obj().set("loss", 0.5),
+            },
+            UnitReport::Failed {
+                task_id: 2,
+                client: "edge-0".into(),
+                reason: "oom".into(),
+            },
+        ];
+        let m = ClientMsg::ResultBatch { reports };
+        assert_eq!(ClientMsg::from_json(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn empty_batch_roundtrip() {
+        let m = ServerMsg::AssignBatch { units: vec![] };
+        assert_eq!(ServerMsg::from_json(&m.to_json()).unwrap(), m);
+        let m = ClientMsg::ResultBatch { reports: vec![] };
+        assert_eq!(ClientMsg::from_json(&m.to_json()).unwrap(), m);
     }
 
     #[test]

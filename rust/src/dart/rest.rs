@@ -7,10 +7,14 @@
 use std::time::Duration;
 
 use crate::config::{HardwareConfig, ServerConfig};
-use crate::dart::protocol::{status_from_str, task_result_from_json};
-use crate::dart::scheduler::{TaskId, TaskResult, TaskSpec, TaskStatus};
+use crate::dart::protocol::{
+    status_from_str, task_result_from_json, unit_report_to_json, work_unit_from_json,
+};
+use crate::dart::scheduler::{
+    TaskId, TaskResult, TaskSpec, TaskStatus, UnitReport, WorkUnit, DEFAULT_BATCH,
+};
 use crate::dart::server::task_spec_to_json;
-use crate::dart::{DartApi, DeviceInfo};
+use crate::dart::{DartApi, DeviceInfo, TaskRegistry};
 use crate::error::{FedError, Result};
 use crate::http::client::HttpClient;
 use crate::json::Json;
@@ -46,23 +50,151 @@ impl RestDartApi {
         resp.parse_json()
     }
 
-    fn expect_ok(resp: crate::http::Response) -> Result<Json> {
-        let body = resp.parse_json().unwrap_or(Json::Null);
-        if resp.status >= 400 {
-            let msg = body
-                .get("error")
-                .and_then(Json::as_str)
-                .unwrap_or("request failed")
-                .to_string();
-            return Err(FedError::Task(msg));
+}
+
+fn expect_ok(resp: crate::http::Response) -> Result<Json> {
+    let body = resp.parse_json().unwrap_or(Json::Null);
+    if resp.status >= 400 {
+        let msg = body
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("request failed")
+            .to_string();
+        return Err(FedError::Task(msg));
+    }
+    Ok(body)
+}
+
+/// Worker-side REST client: a device that cannot hold a DART TCP connection
+/// participates through the https-server's batched `/worker/*` endpoints —
+/// register, poll a batch of units, report a batch of outcomes.
+pub struct RestWorker {
+    http: HttpClient,
+    name: String,
+    batch: usize,
+    /// registration replayed on recovery (hardware, capacity)
+    registration: std::sync::Mutex<Option<(HardwareConfig, usize)>>,
+}
+
+impl RestWorker {
+    pub fn connect(addr: &str, key: &str, name: &str) -> RestWorker {
+        RestWorker {
+            http: HttpClient::new(addr)
+                .with_key(key)
+                .with_timeout(Duration::from_secs(60))
+                .with_retries(2),
+            name: name.to_string(),
+            batch: DEFAULT_BATCH,
+            registration: std::sync::Mutex::new(None),
         }
-        Ok(body)
+    }
+
+    /// Units requested per poll round-trip.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// `POST /worker/register` — join (or re-join) the runtime.
+    pub fn register(&self, hardware: &HardwareConfig, capacity: usize) -> Result<()> {
+        expect_ok(self.http.post(
+            "/worker/register",
+            &Json::obj()
+                .set("name", self.name.as_str())
+                .set("hardware", hardware.to_json())
+                .set("capacity", capacity),
+        )?)?;
+        *self.registration.lock().unwrap() = Some((hardware.clone(), capacity));
+        Ok(())
+    }
+
+    /// `POST /worker/heartbeat`.
+    pub fn heartbeat(&self) -> Result<()> {
+        expect_ok(self.http.post(
+            "/worker/heartbeat",
+            &Json::obj().set("worker", self.name.as_str()),
+        )?)?;
+        Ok(())
+    }
+
+    /// `POST /worker/poll_batch` — fetch up to the configured batch of units.
+    pub fn poll_batch(&self) -> Result<Vec<WorkUnit>> {
+        let body = expect_ok(self.http.post(
+            "/worker/poll_batch",
+            &Json::obj()
+                .set("worker", self.name.as_str())
+                .set("max", self.batch),
+        )?)?;
+        body.need("units")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(work_unit_from_json)
+            .collect()
+    }
+
+    /// `POST /worker/complete_batch` — report a batch of unit outcomes;
+    /// returns how many the scheduler accepted.
+    pub fn complete_batch(&self, reports: &[UnitReport]) -> Result<usize> {
+        let body = expect_ok(self.http.post(
+            "/worker/complete_batch",
+            &Json::obj().set(
+                "reports",
+                Json::Arr(reports.iter().map(unit_report_to_json).collect()),
+            ),
+        )?)?;
+        Ok(body
+            .get("accepted")
+            .and_then(Json::as_usize)
+            .unwrap_or(0))
+    }
+
+    /// `POST /worker/bye` — graceful disconnect.
+    pub fn bye(&self) -> Result<()> {
+        expect_ok(self.http.post(
+            "/worker/bye",
+            &Json::obj().set("worker", self.name.as_str()),
+        )?)?;
+        Ok(())
+    }
+
+    /// One poll→execute→report cycle against a task registry.  Returns the
+    /// number of units processed (0 = idle).
+    ///
+    /// If reporting fails even after the HTTP-level retries, the polled
+    /// units would otherwise be stranded `Running` on the server (continued
+    /// heartbeats keep the reaper away).  Recovery: best-effort `bye` —
+    /// which requeues this worker's running units server-side — followed by
+    /// re-registration from the recorded config, then the error surfaces.
+    pub fn step(&self, registry: &TaskRegistry) -> Result<usize> {
+        let units = self.poll_batch()?;
+        if units.is_empty() {
+            return Ok(0);
+        }
+        let reports: Vec<UnitReport> = units
+            .into_iter()
+            .map(|u| crate::dart::client::execute_unit(registry, u))
+            .collect();
+        let n = reports.len();
+        if let Err(e) = self.complete_batch(&reports) {
+            let _ = self.bye();
+            let registration = self.registration.lock().unwrap().clone();
+            if let Some((hardware, capacity)) = registration {
+                let _ = self.register(&hardware, capacity);
+            }
+            return Err(e);
+        }
+        Ok(n)
     }
 }
 
 impl DartApi for RestDartApi {
     fn devices(&self) -> Result<Vec<DeviceInfo>> {
-        let body = Self::expect_ok(self.http.get("/clients")?)?;
+        let body = expect_ok(self.http.get("/clients")?)?;
         let arr = body
             .as_arr()
             .ok_or_else(|| FedError::Http("expected array".into()))?;
@@ -84,7 +216,7 @@ impl DartApi for RestDartApi {
     }
 
     fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
-        let body = Self::expect_ok(self.http.post("/tasks", &task_spec_to_json(&spec))?)?;
+        let body = expect_ok(self.http.post("/tasks", &task_spec_to_json(&spec))?)?;
         body.need("task_id")?
             .as_i64()
             .map(|v| v as TaskId)
@@ -92,12 +224,12 @@ impl DartApi for RestDartApi {
     }
 
     fn status(&self, id: TaskId) -> Result<TaskStatus> {
-        let body = Self::expect_ok(self.http.get(&format!("/tasks/{id}/status"))?)?;
+        let body = expect_ok(self.http.get(&format!("/tasks/{id}/status"))?)?;
         status_from_str(body.need("status")?.as_str().unwrap_or(""))
     }
 
     fn results(&self, id: TaskId) -> Result<Vec<TaskResult>> {
-        let body = Self::expect_ok(self.http.get(&format!("/tasks/{id}/results"))?)?;
+        let body = expect_ok(self.http.get(&format!("/tasks/{id}/results"))?)?;
         let arr = body
             .as_arr()
             .ok_or_else(|| FedError::Http("expected array".into()))?;
@@ -105,7 +237,7 @@ impl DartApi for RestDartApi {
     }
 
     fn stop_task(&self, id: TaskId) -> Result<()> {
-        Self::expect_ok(self.http.delete(&format!("/tasks/{id}"))?)?;
+        expect_ok(self.http.delete(&format!("/tasks/{id}"))?)?;
         Ok(())
     }
 }
@@ -163,6 +295,49 @@ mod tests {
         // metrics flowed
         let m = api.metrics().unwrap();
         assert!(m.get("counters").unwrap().get("rest.requests").is_some());
+    }
+
+    /// A pure-REST worker (no DART TCP connection) serves batched units
+    /// end-to-end through the `/worker/*` endpoints.
+    #[test]
+    fn rest_worker_full_cycle() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let addr = server.rest_addr().to_string();
+        let reg = TaskRegistry::new();
+        reg.register("double", |p| {
+            Ok(Json::obj().set("v", p.need("v")?.as_f64().unwrap_or(0.0) * 2.0))
+        });
+        let worker = RestWorker::connect(&addr, "000", "edge-rest").with_batch(8);
+        worker.register(&HardwareConfig::default(), 8).unwrap();
+        worker.heartbeat().unwrap();
+
+        let api = RestDartApi::from_addr(&addr, "000");
+        let tids: Vec<_> = (0..5)
+            .map(|i| {
+                let mut params = BTreeMap::new();
+                params
+                    .insert("edge-rest".to_string(), Json::obj().set("v", i as f64));
+                api.submit(TaskSpec::new("double", params)).unwrap()
+            })
+            .collect();
+
+        let mut processed = 0;
+        let t0 = Instant::now();
+        while processed < 5 {
+            processed += worker.step(&reg).unwrap();
+            assert!(t0.elapsed() < Duration::from_secs(10), "REST worker stuck");
+        }
+        for (i, tid) in tids.iter().enumerate() {
+            assert_eq!(api.status(*tid).unwrap(), TaskStatus::Finished);
+            let rs = api.results(*tid).unwrap();
+            assert_eq!(rs.len(), 1);
+            assert_eq!(
+                rs[0].result.get("v").unwrap().as_f64(),
+                Some(i as f64 * 2.0)
+            );
+        }
+        worker.bye().unwrap();
+        assert!(server.scheduler().alive_workers().is_empty());
     }
 
     #[test]

@@ -8,9 +8,34 @@
 //! a client disconnects mid-task — the GPI-Space fault-tolerance property
 //! ("a client can connect or disconnect at any time, without stopping the
 //! execution of the workflow").
+//!
+//! ## Sharded architecture
+//!
+//! The original implementation serialized every operation — heartbeats,
+//! submission, dispatch, completion — behind one global `Mutex`, so
+//! throughput collapsed as workers grew.  This version splits the state
+//! three ways so the hot paths contend only on what they touch:
+//!
+//! * **Per-worker dispatch queues** — a task's units are routed to the
+//!   addressed worker's own queue at submit time, so `next_units` is an
+//!   O(1) pop from a queue only that worker (and requeues targeting it)
+//!   ever locks.
+//! * **A sharded task-state table** — task lifecycle state lives in
+//!   [`DEFAULT_SHARDS`] shards keyed by `TaskId`, each behind its own lock;
+//!   completions for different tasks proceed in parallel.
+//! * **A read-mostly worker registry** — worker liveness/inflight are
+//!   atomics behind an `RwLock` map of `Arc` entries; heartbeats and
+//!   [`Scheduler::reap_stale_workers`] never contend with dispatch.
+//!
+//! Batched dispatch ([`Scheduler::next_units`]) and batched completion
+//! ([`Scheduler::complete_units`]) amortize the remaining per-unit work
+//! over one round-trip; `bench_scalability` measures the combined effect
+//! against the retained single-mutex baseline
+//! ([`crate::dart::scheduler_single::SingleLockScheduler`]).
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::HardwareConfig;
 use crate::dart::petri::TaskNet;
@@ -20,6 +45,12 @@ use crate::util::now_ms;
 
 /// Unique task identifier.
 pub type TaskId = u64;
+
+/// Number of task-table shards (power of two; tasks hash by id).
+pub const DEFAULT_SHARDS: usize = 64;
+
+/// Default number of units a worker fetches per poll round-trip.
+pub const DEFAULT_BATCH: usize = 16;
 
 /// A connected worker (DART-client) as the scheduler sees it.
 #[derive(Debug, Clone)]
@@ -99,7 +130,7 @@ struct TaskState {
 }
 
 /// A unit of work handed to a worker.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkUnit {
     pub task_id: TaskId,
     pub function: String,
@@ -107,17 +138,66 @@ pub struct WorkUnit {
     pub params: Json,
 }
 
-/// The scheduler.  All methods are thread-safe.
-pub struct Scheduler {
-    inner: Mutex<Inner>,
+/// Outcome of one executed unit, as reported back by a worker.  The batched
+/// completion path ([`Scheduler::complete_units`]) and the wire/REST batch
+/// messages both carry these.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UnitReport {
+    /// successful execution
+    Done { task_id: TaskId, client: String, duration: f64, result: Json },
+    /// the function itself failed — permanent for that client, no retry
+    Failed { task_id: TaskId, client: String, reason: String },
 }
 
-struct Inner {
-    workers: BTreeMap<String, WorkerInfo>,
-    tasks: BTreeMap<TaskId, TaskState>,
-    /// FIFO of (task, client) units ready for dispatch
-    ready: VecDeque<(TaskId, String)>,
-    next_id: TaskId,
+impl UnitReport {
+    pub fn task_id(&self) -> TaskId {
+        match self {
+            UnitReport::Done { task_id, .. } | UnitReport::Failed { task_id, .. } => {
+                *task_id
+            }
+        }
+    }
+
+    pub fn client(&self) -> &str {
+        match self {
+            UnitReport::Done { client, .. } | UnitReport::Failed { client, .. } => client,
+        }
+    }
+}
+
+/// One worker's registry entry.  Liveness and inflight accounting are
+/// atomics so heartbeats/polls never take a registry-wide lock; the dispatch
+/// queue holds `(task, client)` units routed here at submit time.
+struct WorkerEntry {
+    name: String,
+    hardware: Mutex<HardwareConfig>,
+    capacity: AtomicUsize,
+    inflight: AtomicUsize,
+    alive: AtomicBool,
+    connected_ms: AtomicU64,
+    last_seen_ms: AtomicU64,
+    queue: Mutex<VecDeque<(TaskId, String)>>,
+}
+
+impl WorkerEntry {
+    fn snapshot(&self) -> WorkerInfo {
+        WorkerInfo {
+            name: self.name.clone(),
+            hardware: self.hardware.lock().unwrap().clone(),
+            capacity: self.capacity.load(Ordering::SeqCst),
+            inflight: self.inflight.load(Ordering::SeqCst),
+            alive: self.alive.load(Ordering::SeqCst),
+            connected_ms: self.connected_ms.load(Ordering::SeqCst),
+            last_seen_ms: self.last_seen_ms.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// The scheduler.  All methods are thread-safe.
+pub struct Scheduler {
+    workers: RwLock<BTreeMap<String, Arc<WorkerEntry>>>,
+    shards: Vec<Mutex<BTreeMap<TaskId, TaskState>>>,
+    next_id: AtomicU64,
 }
 
 impl Default for Scheduler {
@@ -128,14 +208,29 @@ impl Default for Scheduler {
 
 impl Scheduler {
     pub fn new() -> Scheduler {
+        Self::with_shards(DEFAULT_SHARDS)
+    }
+
+    /// Build with an explicit shard count (tests/benches).
+    pub fn with_shards(shards: usize) -> Scheduler {
+        let shards = shards.max(1);
         Scheduler {
-            inner: Mutex::new(Inner {
-                workers: BTreeMap::new(),
-                tasks: BTreeMap::new(),
-                ready: VecDeque::new(),
-                next_id: 1,
-            }),
+            workers: RwLock::new(BTreeMap::new()),
+            shards: (0..shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            next_id: AtomicU64::new(1),
         }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, id: TaskId) -> &Mutex<BTreeMap<TaskId, TaskState>> {
+        &self.shards[(id as usize) % self.shards.len()]
+    }
+
+    fn worker_entry(&self, name: &str) -> Option<Arc<WorkerEntry>> {
+        self.workers.read().unwrap().get(name).cloned()
     }
 
     // ------------------------------------------------------------- workers
@@ -143,65 +238,84 @@ impl Scheduler {
     /// Register (or re-register) a worker.  Re-registering a lost worker
     /// marks it alive again.
     pub fn add_worker(&self, name: &str, hardware: HardwareConfig, capacity: usize) {
-        let mut g = self.inner.lock().unwrap();
         let now = now_ms();
-        g.workers
-            .entry(name.to_string())
-            .and_modify(|w| {
-                w.alive = true;
-                w.hardware = hardware.clone();
-                w.last_seen_ms = now;
-            })
-            .or_insert(WorkerInfo {
-                name: name.to_string(),
-                hardware,
-                capacity: capacity.max(1),
-                inflight: 0,
-                alive: true,
-                connected_ms: now,
-                last_seen_ms: now,
-            });
+        {
+            let mut g = self.workers.write().unwrap();
+            match g.get(name) {
+                Some(e) => {
+                    *e.hardware.lock().unwrap() = hardware;
+                    e.capacity.store(capacity.max(1), Ordering::SeqCst);
+                    e.last_seen_ms.store(now, Ordering::SeqCst);
+                    e.alive.store(true, Ordering::SeqCst);
+                }
+                None => {
+                    g.insert(
+                        name.to_string(),
+                        Arc::new(WorkerEntry {
+                            name: name.to_string(),
+                            hardware: Mutex::new(hardware),
+                            capacity: AtomicUsize::new(capacity.max(1)),
+                            inflight: AtomicUsize::new(0),
+                            alive: AtomicBool::new(true),
+                            connected_ms: AtomicU64::new(now),
+                            last_seen_ms: AtomicU64::new(now),
+                            queue: Mutex::new(VecDeque::new()),
+                        }),
+                    );
+                }
+            }
+        }
         log::info!(target: "dart::scheduler", "worker '{name}' connected");
     }
 
     /// Worker disconnected (or declared lost by heartbeat monitoring):
     /// its running units are re-queued (or failed once retries exhaust).
     pub fn remove_worker(&self, name: &str) {
-        let mut g = self.inner.lock().unwrap();
-        if let Some(w) = g.workers.get_mut(name) {
-            w.alive = false;
-            w.inflight = 0;
-        }
-        // re-queue everything this worker was running
+        let Some(entry) = self.worker_entry(name) else { return };
+        // Mark dead *before* scanning shards: any dispatch that transitions
+        // a unit to Running after this store will observe `alive == false`
+        // inside its shard critical section and revert (see next_units).
+        entry.alive.store(false, Ordering::SeqCst);
+        entry.inflight.store(0, Ordering::SeqCst);
+
         let mut requeues: Vec<(TaskId, String, u32)> = Vec::new();
         let mut failures: Vec<(TaskId, String)> = Vec::new();
-        for (&tid, task) in g.tasks.iter_mut() {
-            if task.stopped {
-                continue;
-            }
-            for (client, unit) in task.units.iter_mut() {
-                if let UnitState::Running { worker, retries_left } = unit {
-                    if worker == name {
-                        if *retries_left > 0 {
-                            let r = *retries_left - 1;
-                            *unit = UnitState::Queued { retries_left: r };
-                            task.net.requeue().ok();
-                            requeues.push((tid, client.clone(), r));
-                        } else {
-                            *unit = UnitState::Failed {
-                                reason: format!("worker '{name}' lost, retries exhausted"),
-                            };
-                            task.net.fail().ok();
-                            failures.push((tid, client.clone()));
+        for shard in &self.shards {
+            let mut g = shard.lock().unwrap();
+            for (&tid, task) in g.iter_mut() {
+                if task.stopped {
+                    continue;
+                }
+                for (client, unit) in task.units.iter_mut() {
+                    if let UnitState::Running { worker, retries_left } = unit {
+                        if worker == name {
+                            if *retries_left > 0 {
+                                let r = *retries_left - 1;
+                                *unit = UnitState::Queued { retries_left: r };
+                                task.net.requeue().ok();
+                                requeues.push((tid, client.clone(), r));
+                            } else {
+                                *unit = UnitState::Failed {
+                                    reason: format!(
+                                        "worker '{name}' lost, retries exhausted"
+                                    ),
+                                };
+                                task.net.fail().ok();
+                                failures.push((tid, client.clone()));
+                            }
                         }
                     }
                 }
             }
         }
-        for (tid, client, r) in requeues {
-            log::warn!(target: "dart::scheduler",
-                "task {tid} unit '{client}' re-queued after loss of '{name}' ({r} retries left)");
-            g.ready.push_back((tid, client));
+        if !requeues.is_empty() {
+            let mut q = entry.queue.lock().unwrap();
+            for (tid, client, r) in requeues {
+                log::warn!(target: "dart::scheduler",
+                    "task {tid} unit '{client}' re-queued after loss of '{name}' \
+                     ({r} retries left)");
+                q.push_back((tid, client));
+            }
         }
         for (tid, client) in failures {
             log::error!(target: "dart::scheduler",
@@ -209,12 +323,20 @@ impl Scheduler {
         }
     }
 
-    /// Heartbeat from a worker.
+    /// Heartbeat from a worker.  Lock-free except for the registry read
+    /// lock — never contends with dispatch or completion.
+    ///
+    /// A heartbeat re-announces liveness (`alive = true`), matching the
+    /// original contract: a worker the reaper declared lost while it was
+    /// busy executing a long unit revives on its next poll.  The flip side
+    /// is a benign race with [`Scheduler::remove_worker`]: a heartbeat
+    /// landing between its `alive = false` store and its shard scan can let
+    /// one dispatch through that the scan then requeues — the stale
+    /// completion is rejected and the unit retries, so nothing is lost.
     pub fn heartbeat(&self, name: &str) {
-        let mut g = self.inner.lock().unwrap();
-        if let Some(w) = g.workers.get_mut(name) {
-            w.last_seen_ms = now_ms();
-            w.alive = true;
+        if let Some(e) = self.worker_entry(name) {
+            e.last_seen_ms.store(now_ms(), Ordering::SeqCst);
+            e.alive.store(true, Ordering::SeqCst);
         }
     }
 
@@ -222,33 +344,41 @@ impl Scheduler {
     /// Returns the names declared lost.
     pub fn reap_stale_workers(&self, timeout_ms: u64) -> Vec<String> {
         let stale: Vec<String> = {
-            let g = self.inner.lock().unwrap();
+            let g = self.workers.read().unwrap();
             let now = now_ms();
-            g.workers
-                .values()
-                .filter(|w| w.alive && now.saturating_sub(w.last_seen_ms) > timeout_ms)
+            g.values()
+                .filter(|w| {
+                    w.alive.load(Ordering::SeqCst)
+                        && now.saturating_sub(w.last_seen_ms.load(Ordering::SeqCst))
+                            > timeout_ms
+                })
                 .map(|w| w.name.clone())
                 .collect()
         };
         for name in &stale {
-            log::warn!(target: "dart::scheduler", "worker '{name}' missed heartbeats; declaring lost");
+            log::warn!(target: "dart::scheduler",
+                "worker '{name}' missed heartbeats; declaring lost");
             self.remove_worker(name);
         }
         stale
     }
 
     pub fn workers(&self) -> Vec<WorkerInfo> {
-        self.inner.lock().unwrap().workers.values().cloned().collect()
+        self.workers
+            .read()
+            .unwrap()
+            .values()
+            .map(|e| e.snapshot())
+            .collect()
     }
 
     pub fn alive_workers(&self) -> Vec<WorkerInfo> {
-        self.inner
-            .lock()
+        self.workers
+            .read()
             .unwrap()
-            .workers
             .values()
-            .filter(|w| w.alive)
-            .cloned()
+            .filter(|e| e.alive.load(Ordering::SeqCst))
+            .map(|e| e.snapshot())
             .collect()
     }
 
@@ -256,45 +386,51 @@ impl Scheduler {
 
     /// Submit a task.  Rejects (the Selector's accept/reject, §A.2) if any
     /// addressed client is unknown, dead, or fails the hardware check.
+    /// Units are routed into the addressed workers' dispatch queues here,
+    /// so dispatch later never searches a global structure.
     pub fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
-        let mut g = self.inner.lock().unwrap();
         if spec.params.is_empty() {
             return Err(FedError::Task("task addresses no clients".into()));
         }
-        for client in spec.params.keys() {
-            match g.workers.get(client) {
-                None => {
-                    return Err(FedError::Task(format!(
-                        "unknown client '{client}'"
-                    )))
+        // validate under the registry read lock, keeping the entries for
+        // queue routing below
+        let entries: Vec<Arc<WorkerEntry>> = {
+            let g = self.workers.read().unwrap();
+            let mut entries = Vec::with_capacity(spec.params.len());
+            for client in spec.params.keys() {
+                match g.get(client) {
+                    None => {
+                        return Err(FedError::Task(format!("unknown client '{client}'")))
+                    }
+                    Some(e) if !e.alive.load(Ordering::SeqCst) => {
+                        return Err(FedError::Task(format!(
+                            "client '{client}' is not connected"
+                        )))
+                    }
+                    Some(e)
+                        if !e
+                            .hardware
+                            .lock()
+                            .unwrap()
+                            .satisfies(&spec.requirements) =>
+                    {
+                        return Err(FedError::Task(format!(
+                            "client '{client}' fails hardware requirement check"
+                        )))
+                    }
+                    Some(e) => entries.push(Arc::clone(e)),
                 }
-                Some(w) if !w.alive => {
-                    return Err(FedError::Task(format!(
-                        "client '{client}' is not connected"
-                    )))
-                }
-                Some(w) if !w.hardware.satisfies(&spec.requirements) => {
-                    return Err(FedError::Task(format!(
-                        "client '{client}' fails hardware requirement check"
-                    )))
-                }
-                Some(_) => {}
             }
-        }
-        let id = g.next_id;
-        g.next_id += 1;
+            entries
+        };
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let clients: Vec<String> = spec.params.keys().cloned().collect();
         let units = clients
             .iter()
-            .map(|c| {
-                (
-                    c.clone(),
-                    UnitState::Queued { retries_left: spec.max_retries },
-                )
-            })
+            .map(|c| (c.clone(), UnitState::Queued { retries_left: spec.max_retries }))
             .collect();
         let net = TaskNet::new(clients.len());
-        g.tasks.insert(
+        self.shard(id).lock().unwrap().insert(
             id,
             TaskState {
                 spec,
@@ -305,8 +441,10 @@ impl Scheduler {
                 submitted_ms: now_ms(),
             },
         );
-        for c in clients {
-            g.ready.push_back((id, c));
+        // route units to the addressed workers' queues (after the task is
+        // visible in its shard, so a concurrent pop always finds it)
+        for (client, entry) in clients.into_iter().zip(entries) {
+            entry.queue.lock().unwrap().push_back((id, client));
         }
         log::info!(target: "dart::scheduler", "task {id} accepted");
         Ok(id)
@@ -315,37 +453,144 @@ impl Scheduler {
     /// Pull the next unit for `worker` (a unit is only dispatched to the
     /// client it addresses).  Returns `None` when nothing is ready.
     pub fn next_unit(&self, worker: &str) -> Option<WorkUnit> {
-        let mut g = self.inner.lock().unwrap();
-        let w = g.workers.get(worker)?;
-        if !w.alive || w.inflight >= w.capacity {
-            return None;
+        self.next_units(worker, 1).pop()
+    }
+
+    /// Batched dispatch: pull up to `max` units for `worker` in one call,
+    /// bounded by the worker's free capacity.  Stopped/stale queue entries
+    /// are dropped lazily here.
+    pub fn next_units(&self, worker: &str, max: usize) -> Vec<WorkUnit> {
+        if max == 0 {
+            return Vec::new();
         }
-        // find the first ready unit addressed to this worker
-        let pos = g
-            .ready
-            .iter()
-            .position(|(tid, client)| {
-                client == worker
-                    && g.tasks
-                        .get(tid)
-                        .map(|t| !t.stopped)
-                        .unwrap_or(false)
-            })?;
-        let (tid, client) = g.ready.remove(pos).unwrap();
-        let task = g.tasks.get_mut(&tid).unwrap();
-        let retries = match task.units.get(&client) {
-            Some(UnitState::Queued { retries_left }) => *retries_left,
-            _ => return None, // raced with stop/removal
+        let Some(entry) = self.worker_entry(worker) else {
+            return Vec::new();
         };
-        task.units.insert(
-            client.clone(),
-            UnitState::Running { worker: worker.to_string(), retries_left: retries },
-        );
-        task.net.assign().ok();
-        let params = task.spec.params.get(&client).cloned().unwrap_or(Json::Null);
-        let function = task.spec.function.clone();
-        g.workers.get_mut(worker).unwrap().inflight += 1;
-        Some(WorkUnit { task_id: tid, function, client, params })
+        if !entry.alive.load(Ordering::SeqCst) {
+            return Vec::new();
+        }
+        // reserve inflight slots up front so concurrent polls for the same
+        // worker can never over-dispatch past its capacity
+        let mut reserved = 0usize;
+        let reservation =
+            entry
+                .inflight
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+                    let cap = entry.capacity.load(Ordering::SeqCst);
+                    let take = cap.saturating_sub(cur).min(max);
+                    if take == 0 {
+                        None
+                    } else {
+                        reserved = take;
+                        Some(cur + take)
+                    }
+                });
+        if reservation.is_err() {
+            return Vec::new();
+        }
+
+        let mut units = Vec::with_capacity(reserved);
+        while units.len() < reserved {
+            let popped = entry.queue.lock().unwrap().pop_front();
+            let Some((tid, client)) = popped else { break };
+            let mut g = self.shard(tid).lock().unwrap();
+            let Some(task) = g.get_mut(&tid) else { continue };
+            if task.stopped {
+                continue; // stop_task drops queued units lazily
+            }
+            let retries = match task.units.get(&client) {
+                Some(UnitState::Queued { retries_left }) => *retries_left,
+                _ => continue, // stale entry (raced with requeue/stop)
+            };
+            task.units.insert(
+                client.clone(),
+                UnitState::Running { worker: worker.to_string(), retries_left: retries },
+            );
+            task.net.assign().ok();
+            // The worker may have been declared lost between our entry check
+            // and this transition.  remove_worker stores `alive = false`
+            // before scanning shards, so checking here — still inside the
+            // shard critical section — guarantees either we see the death
+            // and revert, or the reaper's scan sees our Running unit and
+            // requeues it.  No unit can be stranded.
+            if !entry.alive.load(Ordering::SeqCst) {
+                task.units
+                    .insert(client.clone(), UnitState::Queued { retries_left: retries });
+                task.net.requeue().ok();
+                drop(g);
+                entry.queue.lock().unwrap().push_front((tid, client));
+                break;
+            }
+            let params = task.spec.params.get(&client).cloned().unwrap_or(Json::Null);
+            let function = task.spec.function.clone();
+            drop(g);
+            units.push(WorkUnit { task_id: tid, function, client, params });
+        }
+        // release reservations we could not fill
+        if units.len() < reserved {
+            let unused = reserved - units.len();
+            let _ = entry
+                .inflight
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+                    Some(cur.saturating_sub(unused))
+                });
+        }
+        units
+    }
+
+    /// Settle one unit inside an already-locked task.  Returns the worker
+    /// that was running it (empty if none recorded).
+    fn settle_locked(
+        task: &mut TaskState,
+        client: &str,
+        report_ok: Option<(f64, Json)>,
+        reason: &str,
+    ) -> Result<String> {
+        match report_ok {
+            Some((duration, result)) => {
+                let worker = match task.units.get(client) {
+                    Some(UnitState::Running { worker, .. }) => worker.clone(),
+                    other => {
+                        return Err(FedError::Task(format!(
+                            "unit '{client}' not running ({other:?})"
+                        )))
+                    }
+                };
+                task.units.insert(client.to_string(), UnitState::Done);
+                task.net.complete().ok();
+                task.results.push(TaskResult {
+                    device_name: client.to_string(),
+                    duration,
+                    result,
+                });
+                Ok(worker)
+            }
+            None => {
+                let worker = match task.units.get(client) {
+                    Some(UnitState::Running { worker, .. }) => worker.clone(),
+                    _ => String::new(),
+                };
+                task.units.insert(
+                    client.to_string(),
+                    UnitState::Failed { reason: reason.to_string() },
+                );
+                task.net.fail().ok();
+                Ok(worker)
+            }
+        }
+    }
+
+    fn dec_inflight(&self, worker: &str, n: usize) {
+        if worker.is_empty() || n == 0 {
+            return;
+        }
+        if let Some(e) = self.worker_entry(worker) {
+            let _ = e
+                .inflight
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+                    Some(cur.saturating_sub(n))
+                });
+        }
     }
 
     /// Worker reports a successful unit result.
@@ -356,63 +601,82 @@ impl Scheduler {
         duration: f64,
         result: Json,
     ) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
-        // decrement inflight for whichever worker ran it
-        let task = g
-            .tasks
-            .get_mut(&task_id)
-            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
-        let worker = match task.units.get(client) {
-            Some(UnitState::Running { worker, .. }) => worker.clone(),
-            other => {
-                return Err(FedError::Task(format!(
-                    "unit '{client}' of task {task_id} not running ({other:?})"
-                )))
-            }
+        let worker = {
+            let mut g = self.shard(task_id).lock().unwrap();
+            let task = g
+                .get_mut(&task_id)
+                .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+            Self::settle_locked(task, client, Some((duration, result)), "")?
         };
-        task.units.insert(client.to_string(), UnitState::Done);
-        task.net.complete().ok();
-        task.results.push(TaskResult {
-            device_name: client.to_string(),
-            duration,
-            result,
-        });
-        if let Some(w) = g.workers.get_mut(&worker) {
-            w.inflight = w.inflight.saturating_sub(1);
-        }
+        self.dec_inflight(&worker, 1);
         Ok(())
     }
 
     /// Worker reports a unit error (the function itself failed — counts as a
     /// permanent failure for that client, no retry).
     pub fn fail_unit(&self, task_id: TaskId, client: &str, reason: &str) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
-        let task = g
-            .tasks
-            .get_mut(&task_id)
-            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
-        let worker = match task.units.get(client) {
-            Some(UnitState::Running { worker, .. }) => worker.clone(),
-            _ => String::new(),
+        let worker = {
+            let mut g = self.shard(task_id).lock().unwrap();
+            let task = g
+                .get_mut(&task_id)
+                .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+            Self::settle_locked(task, client, None, reason)?
         };
-        task.units.insert(
-            client.to_string(),
-            UnitState::Failed { reason: reason.to_string() },
-        );
-        task.net.fail().ok();
-        if let Some(w) = g.workers.get_mut(&worker) {
-            w.inflight = w.inflight.saturating_sub(1);
-        }
+        self.dec_inflight(&worker, 1);
         log::error!(target: "dart::scheduler",
             "task {task_id} unit '{client}' failed: {reason}");
         Ok(())
     }
 
+    /// Batched completion: settle many unit reports, locking each task
+    /// shard once.  Per-unit errors (unknown task, unit not running — e.g.
+    /// after a mid-flight requeue) are skipped; returns the number of
+    /// reports accepted.
+    pub fn complete_units(&self, reports: Vec<UnitReport>) -> usize {
+        if reports.is_empty() {
+            return 0;
+        }
+        let nshards = self.shards.len();
+        let mut by_shard: BTreeMap<usize, Vec<UnitReport>> = BTreeMap::new();
+        for r in reports {
+            by_shard
+                .entry((r.task_id() as usize) % nshards)
+                .or_default()
+                .push(r);
+        }
+        let mut accepted = 0usize;
+        // worker -> number of inflight slots to release
+        let mut decrements: BTreeMap<String, usize> = BTreeMap::new();
+        for (shard_idx, batch) in by_shard {
+            let mut g = self.shards[shard_idx].lock().unwrap();
+            for report in batch {
+                let Some(task) = g.get_mut(&report.task_id()) else { continue };
+                let outcome = match report {
+                    UnitReport::Done { client, duration, result, .. } => {
+                        Self::settle_locked(task, &client, Some((duration, result)), "")
+                    }
+                    UnitReport::Failed { client, reason, .. } => {
+                        Self::settle_locked(task, &client, None, &reason)
+                    }
+                };
+                if let Ok(worker) = outcome {
+                    accepted += 1;
+                    if !worker.is_empty() {
+                        *decrements.entry(worker).or_default() += 1;
+                    }
+                }
+            }
+        }
+        for (worker, n) in decrements {
+            self.dec_inflight(&worker, n);
+        }
+        accepted
+    }
+
     /// Current aggregate status.
     pub fn status(&self, task_id: TaskId) -> Result<TaskStatus> {
-        let g = self.inner.lock().unwrap();
+        let g = self.shard(task_id).lock().unwrap();
         let task = g
-            .tasks
             .get(&task_id)
             .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
         if task.stopped {
@@ -438,32 +702,28 @@ impl Scheduler {
     /// Results available *so far* — Fed-DART is non-blocking: "there is no
     /// need to wait until all participating clients have finished" (§A.1).
     pub fn results(&self, task_id: TaskId) -> Result<Vec<TaskResult>> {
-        let g = self.inner.lock().unwrap();
+        let g = self.shard(task_id).lock().unwrap();
         let task = g
-            .tasks
             .get(&task_id)
             .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
         Ok(task.results.clone())
     }
 
-    /// Cancel a task: queued units are dropped, running units' results will
-    /// be ignored.
+    /// Cancel a task: queued units are dropped (lazily, at dispatch time),
+    /// running units' results will be ignored.
     pub fn stop_task(&self, task_id: TaskId) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shard(task_id).lock().unwrap();
         let task = g
-            .tasks
             .get_mut(&task_id)
             .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
         task.stopped = true;
-        g.ready.retain(|(tid, _)| *tid != task_id);
         Ok(())
     }
 
     /// Age of a task in milliseconds (observability).
     pub fn task_age_ms(&self, task_id: TaskId) -> Result<u64> {
-        let g = self.inner.lock().unwrap();
+        let g = self.shard(task_id).lock().unwrap();
         let task = g
-            .tasks
             .get(&task_id)
             .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
         Ok(now_ms().saturating_sub(task.submitted_ms))
@@ -471,7 +731,7 @@ impl Scheduler {
 
     /// Number of tasks tracked (observability).
     pub fn task_count(&self) -> usize {
-        self.inner.lock().unwrap().tasks.len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 }
 
@@ -616,6 +876,119 @@ mod tests {
         s.complete_unit(t2, "a", 0.1, Json::Null).unwrap();
         assert_eq!(s.status(t1).unwrap(), TaskStatus::Finished);
         assert_eq!(s.status(t2).unwrap(), TaskStatus::Finished);
+    }
+
+    #[test]
+    fn next_units_respects_capacity_and_max() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 3);
+        for _ in 0..5 {
+            s.submit(spec_for(&["a"])).unwrap();
+        }
+        // max larger than capacity: capacity wins
+        let batch = s.next_units("a", 10);
+        assert_eq!(batch.len(), 3);
+        // capacity exhausted
+        assert!(s.next_units("a", 10).is_empty());
+        // completing frees slots
+        for u in &batch {
+            s.complete_unit(u.task_id, &u.client, 0.0, Json::Null).unwrap();
+        }
+        // max smaller than capacity: max wins
+        let batch2 = s.next_units("a", 1);
+        assert_eq!(batch2.len(), 1);
+        let batch3 = s.next_units("a", 10);
+        assert_eq!(batch3.len(), 1); // only one queued unit left
+    }
+
+    #[test]
+    fn batched_complete_units() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 8);
+        let tids: Vec<TaskId> =
+            (0..4).map(|_| s.submit(spec_for(&["a"])).unwrap()).collect();
+        let units = s.next_units("a", 8);
+        assert_eq!(units.len(), 4);
+        let reports: Vec<UnitReport> = units
+            .iter()
+            .enumerate()
+            .map(|(i, u)| {
+                if i == 0 {
+                    UnitReport::Failed {
+                        task_id: u.task_id,
+                        client: u.client.clone(),
+                        reason: "oom".into(),
+                    }
+                } else {
+                    UnitReport::Done {
+                        task_id: u.task_id,
+                        client: u.client.clone(),
+                        duration: 0.1,
+                        result: Json::obj().set("ok", true),
+                    }
+                }
+            })
+            .collect();
+        assert_eq!(s.complete_units(reports), 4);
+        let statuses: Vec<TaskStatus> =
+            tids.iter().map(|t| s.status(*t).unwrap()).collect();
+        assert_eq!(
+            statuses
+                .iter()
+                .filter(|st| **st == TaskStatus::Finished)
+                .count(),
+            3
+        );
+        assert_eq!(
+            statuses
+                .iter()
+                .filter(|st| **st == TaskStatus::PartiallyFailed)
+                .count(),
+            1
+        );
+        // inflight fully released
+        assert_eq!(s.workers()[0].inflight, 0);
+        // batch dispatch works again
+        assert!(s.next_units("a", 8).is_empty()); // nothing queued
+    }
+
+    #[test]
+    fn tasks_route_across_shards() {
+        let s = Scheduler::with_shards(4);
+        s.add_worker("a", hw(), 128);
+        let tids: Vec<TaskId> =
+            (0..100).map(|_| s.submit(spec_for(&["a"])).unwrap()).collect();
+        assert_eq!(s.task_count(), 100);
+        let units = s.next_units("a", 128);
+        assert_eq!(units.len(), 100);
+        let reports = units
+            .iter()
+            .map(|u| UnitReport::Done {
+                task_id: u.task_id,
+                client: u.client.clone(),
+                duration: 0.0,
+                result: Json::Null,
+            })
+            .collect();
+        assert_eq!(s.complete_units(reports), 100);
+        for t in tids {
+            assert_eq!(s.status(t).unwrap(), TaskStatus::Finished);
+        }
+    }
+
+    #[test]
+    fn stale_queue_entries_are_dropped_not_dispatched() {
+        let s = Scheduler::new();
+        s.add_worker("a", hw(), 4);
+        let t1 = s.submit(spec_for(&["a"])).unwrap();
+        let t2 = s.submit(spec_for(&["a"])).unwrap();
+        s.stop_task(t1).unwrap();
+        // t1's queued unit is dropped lazily; the batch contains only t2
+        let units = s.next_units("a", 4);
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].task_id, t2);
+        // the dropped entry must not leak an inflight slot
+        assert_eq!(s.workers()[0].inflight, 1);
     }
 
     /// Property: under random worker churn every submitted unit eventually

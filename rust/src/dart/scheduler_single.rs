@@ -1,0 +1,395 @@
+//! The original single-mutex scheduler, retained as the contention baseline
+//! for `bench_scalability`.
+//!
+//! Every operation — heartbeats, submission, dispatch, completion —
+//! serializes behind one global `Mutex<Inner>`, and dispatch scans a global
+//! ready FIFO for the first unit addressed to the polling worker (O(queue)).
+//! [`crate::dart::scheduler::Scheduler`] replaces this design with
+//! per-worker queues, a sharded task table and a read-mostly worker
+//! registry; the bench reports dispatch throughput of both so the speedup
+//! stays measurable per-PR.  Not used on any production path.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::config::HardwareConfig;
+use crate::dart::petri::TaskNet;
+use crate::dart::scheduler::{
+    TaskId, TaskResult, TaskSpec, TaskStatus, UnitReport, WorkUnit, WorkerInfo,
+};
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::util::now_ms;
+
+#[derive(Debug, Clone, PartialEq)]
+enum UnitState {
+    Queued { retries_left: u32 },
+    Running { worker: String, retries_left: u32 },
+    Done,
+    Failed { reason: String },
+}
+
+struct TaskState {
+    spec: TaskSpec,
+    net: TaskNet,
+    units: BTreeMap<String, UnitState>,
+    results: Vec<TaskResult>,
+    stopped: bool,
+}
+
+struct Inner {
+    workers: BTreeMap<String, WorkerInfo>,
+    tasks: BTreeMap<TaskId, TaskState>,
+    /// FIFO of (task, client) units ready for dispatch
+    ready: VecDeque<(TaskId, String)>,
+    next_id: TaskId,
+}
+
+/// The single-global-lock scheduler (baseline).
+pub struct SingleLockScheduler {
+    inner: Mutex<Inner>,
+}
+
+impl Default for SingleLockScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SingleLockScheduler {
+    pub fn new() -> SingleLockScheduler {
+        SingleLockScheduler {
+            inner: Mutex::new(Inner {
+                workers: BTreeMap::new(),
+                tasks: BTreeMap::new(),
+                ready: VecDeque::new(),
+                next_id: 1,
+            }),
+        }
+    }
+
+    pub fn add_worker(&self, name: &str, hardware: HardwareConfig, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let now = now_ms();
+        g.workers
+            .entry(name.to_string())
+            .and_modify(|w| {
+                w.alive = true;
+                w.hardware = hardware.clone();
+                w.last_seen_ms = now;
+            })
+            .or_insert(WorkerInfo {
+                name: name.to_string(),
+                hardware,
+                capacity: capacity.max(1),
+                inflight: 0,
+                alive: true,
+                connected_ms: now,
+                last_seen_ms: now,
+            });
+    }
+
+    pub fn remove_worker(&self, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = g.workers.get_mut(name) {
+            w.alive = false;
+            w.inflight = 0;
+        }
+        let mut requeues: Vec<(TaskId, String)> = Vec::new();
+        for (&tid, task) in g.tasks.iter_mut() {
+            if task.stopped {
+                continue;
+            }
+            for (client, unit) in task.units.iter_mut() {
+                if let UnitState::Running { worker, retries_left } = unit {
+                    if worker == name {
+                        if *retries_left > 0 {
+                            let r = *retries_left - 1;
+                            *unit = UnitState::Queued { retries_left: r };
+                            task.net.requeue().ok();
+                            requeues.push((tid, client.clone()));
+                        } else {
+                            *unit = UnitState::Failed {
+                                reason: format!("worker '{name}' lost, retries exhausted"),
+                            };
+                            task.net.fail().ok();
+                        }
+                    }
+                }
+            }
+        }
+        for rq in requeues {
+            g.ready.push_back(rq);
+        }
+    }
+
+    pub fn heartbeat(&self, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = g.workers.get_mut(name) {
+            w.last_seen_ms = now_ms();
+            w.alive = true;
+        }
+    }
+
+    pub fn reap_stale_workers(&self, timeout_ms: u64) -> Vec<String> {
+        let stale: Vec<String> = {
+            let g = self.inner.lock().unwrap();
+            let now = now_ms();
+            g.workers
+                .values()
+                .filter(|w| w.alive && now.saturating_sub(w.last_seen_ms) > timeout_ms)
+                .map(|w| w.name.clone())
+                .collect()
+        };
+        for name in &stale {
+            self.remove_worker(name);
+        }
+        stale
+    }
+
+    pub fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
+        let mut g = self.inner.lock().unwrap();
+        if spec.params.is_empty() {
+            return Err(FedError::Task("task addresses no clients".into()));
+        }
+        for client in spec.params.keys() {
+            match g.workers.get(client) {
+                None => {
+                    return Err(FedError::Task(format!("unknown client '{client}'")))
+                }
+                Some(w) if !w.alive => {
+                    return Err(FedError::Task(format!(
+                        "client '{client}' is not connected"
+                    )))
+                }
+                Some(w) if !w.hardware.satisfies(&spec.requirements) => {
+                    return Err(FedError::Task(format!(
+                        "client '{client}' fails hardware requirement check"
+                    )))
+                }
+                Some(_) => {}
+            }
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        let clients: Vec<String> = spec.params.keys().cloned().collect();
+        let units = clients
+            .iter()
+            .map(|c| (c.clone(), UnitState::Queued { retries_left: spec.max_retries }))
+            .collect();
+        let net = TaskNet::new(clients.len());
+        g.tasks.insert(
+            id,
+            TaskState { spec, net, units, results: Vec::new(), stopped: false },
+        );
+        for c in clients {
+            g.ready.push_back((id, c));
+        }
+        Ok(id)
+    }
+
+    pub fn next_unit(&self, worker: &str) -> Option<WorkUnit> {
+        let mut g = self.inner.lock().unwrap();
+        let w = g.workers.get(worker)?;
+        if !w.alive || w.inflight >= w.capacity {
+            return None;
+        }
+        let pos = g.ready.iter().position(|(tid, client)| {
+            client == worker
+                && g.tasks.get(tid).map(|t| !t.stopped).unwrap_or(false)
+        })?;
+        let (tid, client) = g.ready.remove(pos).unwrap();
+        let task = g.tasks.get_mut(&tid).unwrap();
+        let retries = match task.units.get(&client) {
+            Some(UnitState::Queued { retries_left }) => *retries_left,
+            _ => return None,
+        };
+        task.units.insert(
+            client.clone(),
+            UnitState::Running { worker: worker.to_string(), retries_left: retries },
+        );
+        task.net.assign().ok();
+        let params = task.spec.params.get(&client).cloned().unwrap_or(Json::Null);
+        let function = task.spec.function.clone();
+        g.workers.get_mut(worker).unwrap().inflight += 1;
+        Some(WorkUnit { task_id: tid, function, client, params })
+    }
+
+    /// Batched poll for API parity with the sharded scheduler: one global
+    /// lock acquisition *per unit* — exactly the cost model being replaced.
+    pub fn next_units(&self, worker: &str, max: usize) -> Vec<WorkUnit> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.next_unit(worker) {
+                Some(u) => out.push(u),
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub fn complete_unit(
+        &self,
+        task_id: TaskId,
+        client: &str,
+        duration: f64,
+        result: Json,
+    ) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get_mut(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        let worker = match task.units.get(client) {
+            Some(UnitState::Running { worker, .. }) => worker.clone(),
+            other => {
+                return Err(FedError::Task(format!(
+                    "unit '{client}' of task {task_id} not running ({other:?})"
+                )))
+            }
+        };
+        task.units.insert(client.to_string(), UnitState::Done);
+        task.net.complete().ok();
+        task.results.push(TaskResult {
+            device_name: client.to_string(),
+            duration,
+            result,
+        });
+        if let Some(w) = g.workers.get_mut(&worker) {
+            w.inflight = w.inflight.saturating_sub(1);
+        }
+        Ok(())
+    }
+
+    pub fn fail_unit(&self, task_id: TaskId, client: &str, reason: &str) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get_mut(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        let worker = match task.units.get(client) {
+            Some(UnitState::Running { worker, .. }) => worker.clone(),
+            _ => String::new(),
+        };
+        task.units.insert(
+            client.to_string(),
+            UnitState::Failed { reason: reason.to_string() },
+        );
+        task.net.fail().ok();
+        if let Some(w) = g.workers.get_mut(&worker) {
+            w.inflight = w.inflight.saturating_sub(1);
+        }
+        Ok(())
+    }
+
+    /// Batched completion wrapper (one lock round-trip per report).
+    pub fn complete_units(&self, reports: Vec<UnitReport>) -> usize {
+        let mut accepted = 0;
+        for r in reports {
+            let ok = match r {
+                UnitReport::Done { task_id, client, duration, result } => {
+                    self.complete_unit(task_id, &client, duration, result).is_ok()
+                }
+                UnitReport::Failed { task_id, client, reason } => {
+                    self.fail_unit(task_id, &client, &reason).is_ok()
+                }
+            };
+            if ok {
+                accepted += 1;
+            }
+        }
+        accepted
+    }
+
+    pub fn status(&self, task_id: TaskId) -> Result<TaskStatus> {
+        let g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        if task.stopped {
+            return Ok(TaskStatus::Stopped);
+        }
+        let mut any_failed = false;
+        for u in task.units.values() {
+            match u {
+                UnitState::Queued { .. } | UnitState::Running { .. } => {
+                    return Ok(TaskStatus::InProgress)
+                }
+                UnitState::Failed { .. } => any_failed = true,
+                UnitState::Done => {}
+            }
+        }
+        Ok(if any_failed {
+            TaskStatus::PartiallyFailed
+        } else {
+            TaskStatus::Finished
+        })
+    }
+
+    pub fn results(&self, task_id: TaskId) -> Result<Vec<TaskResult>> {
+        let g = self.inner.lock().unwrap();
+        let task = g
+            .tasks
+            .get(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        Ok(task.results.clone())
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.inner.lock().unwrap().tasks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_for(clients: &[&str]) -> TaskSpec {
+        let params = clients
+            .iter()
+            .map(|c| (c.to_string(), Json::obj().set("x", 1)))
+            .collect();
+        TaskSpec::new("learn", params)
+    }
+
+    /// The baseline must agree with the sharded scheduler on the basic
+    /// lifecycle so the bench compares like with like.
+    #[test]
+    fn baseline_lifecycle_matches() {
+        let s = SingleLockScheduler::new();
+        s.add_worker("a", HardwareConfig::default(), 2);
+        let t1 = s.submit(spec_for(&["a"])).unwrap();
+        let t2 = s.submit(spec_for(&["a"])).unwrap();
+        let units = s.next_units("a", 8);
+        assert_eq!(units.len(), 2);
+        let reports = units
+            .iter()
+            .map(|u| UnitReport::Done {
+                task_id: u.task_id,
+                client: u.client.clone(),
+                duration: 0.0,
+                result: Json::Null,
+            })
+            .collect();
+        assert_eq!(s.complete_units(reports), 2);
+        assert_eq!(s.status(t1).unwrap(), TaskStatus::Finished);
+        assert_eq!(s.status(t2).unwrap(), TaskStatus::Finished);
+        assert_eq!(s.task_count(), 2);
+        assert_eq!(s.results(t1).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn baseline_requeue_on_loss() {
+        let s = SingleLockScheduler::new();
+        s.add_worker("a", HardwareConfig::default(), 1);
+        let tid = s.submit(spec_for(&["a"])).unwrap();
+        let _u = s.next_unit("a").unwrap();
+        s.remove_worker("a");
+        assert_eq!(s.status(tid).unwrap(), TaskStatus::InProgress);
+        s.add_worker("a", HardwareConfig::default(), 1);
+        assert!(s.next_unit("a").is_some());
+        assert!(s.reap_stale_workers(60_000).is_empty());
+        s.heartbeat("a");
+    }
+}

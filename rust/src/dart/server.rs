@@ -18,6 +18,14 @@
 //! * `GET  /metrics`             → metrics registry snapshot
 //! * `GET  /logs?n=100`          → LogServer tail
 //!
+//! Worker-side REST (batched dispatch for clients that cannot hold a DART
+//! TCP connection — see [`crate::dart::rest::RestWorker`]):
+//! * `POST /worker/register`       → `{name, hardware?, capacity?}` → `{ok}`
+//! * `POST /worker/heartbeat`      → `{worker}` → `{ok}`
+//! * `POST /worker/poll_batch`     → `{worker, max?}` → `{units: [...]}`
+//! * `POST /worker/complete_batch` → `{reports: [...]}` → `{accepted: n}`
+//! * `POST /worker/bye`            → `{worker}` → `{ok}`
+//!
 //! All REST requests must carry the configured `x-client-key` header
 //! (the paper's `client_key`, Listing 2).
 
@@ -31,9 +39,10 @@ use std::time::Duration;
 
 use crate::config::HardwareConfig;
 use crate::dart::protocol::{
-    status_to_str, task_result_to_json, ClientMsg, ServerMsg,
+    status_to_str, task_result_to_json, unit_report_from_json, work_unit_to_json,
+    ClientMsg, ServerMsg,
 };
-use crate::dart::scheduler::{Scheduler, TaskSpec};
+use crate::dart::scheduler::{Scheduler, TaskSpec, DEFAULT_BATCH};
 use crate::dart::transport::{recv_json, send_json};
 use crate::error::{FedError, Result};
 use crate::http::server::{Handler, HttpServer};
@@ -44,6 +53,10 @@ use crate::metrics::Registry;
 
 /// Default heartbeat timeout before a client is declared lost.
 pub const HEARTBEAT_TIMEOUT_MS: u64 = 3_000;
+
+/// Upper bound on units handed out per poll round-trip (defensive cap on
+/// client-requested batch sizes).
+pub const MAX_POLL_BATCH: usize = 256;
 
 /// A running DART-server.
 pub struct DartServer {
@@ -253,6 +266,32 @@ fn serve_client(
                 };
                 send_json(&mut writer, key, &reply.to_json())?;
             }
+            ClientMsg::PollBatch { max } => {
+                scheduler.heartbeat(&name);
+                let units =
+                    scheduler.next_units(&name, max.clamp(1, MAX_POLL_BATCH));
+                let reply = if units.is_empty() {
+                    ServerMsg::Idle
+                } else {
+                    metrics
+                        .counter("dart.units_dispatched")
+                        .add(units.len() as u64);
+                    ServerMsg::AssignBatch { units }
+                };
+                send_json(&mut writer, key, &reply.to_json())?;
+            }
+            ClientMsg::ResultBatch { reports } => {
+                let (ok, err) = reports.iter().fold((0u64, 0u64), |(o, e), r| {
+                    match r {
+                        crate::dart::scheduler::UnitReport::Done { .. } => (o + 1, e),
+                        crate::dart::scheduler::UnitReport::Failed { .. } => (o, e + 1),
+                    }
+                });
+                metrics.counter("dart.units_completed").add(ok);
+                metrics.counter("dart.units_failed").add(err);
+                scheduler.complete_units(reports);
+                send_json(&mut writer, key, &ServerMsg::Ack.to_json())?;
+            }
             ClientMsg::Heartbeat => {
                 scheduler.heartbeat(&name);
                 send_json(&mut writer, key, &ServerMsg::Ack.to_json())?;
@@ -346,6 +385,73 @@ impl RestHandler {
                 let id = parse_id(id)?;
                 self.scheduler.stop_task(id)?;
                 Ok(Response::ok_json(&Json::obj().set("stopped", true)))
+            }
+            // ------------------------- worker-side REST (batched dispatch)
+            ("POST", ["worker", "register"]) => {
+                let body = req.json()?;
+                let name = body
+                    .need("name")?
+                    .as_str()
+                    .ok_or_else(|| FedError::Http("'name' must be a string".into()))?
+                    .to_string();
+                let hardware = body
+                    .get("hardware")
+                    .map(HardwareConfig::from_json)
+                    .unwrap_or_default();
+                let capacity =
+                    body.get("capacity").and_then(Json::as_usize).unwrap_or(1);
+                self.scheduler.add_worker(&name, hardware, capacity);
+                Ok(Response::ok_json(&Json::obj().set("ok", true)))
+            }
+            ("POST", ["worker", "heartbeat"]) => {
+                let body = req.json()?;
+                let worker = body.need("worker")?.as_str().unwrap_or("");
+                self.scheduler.heartbeat(worker);
+                Ok(Response::ok_json(&Json::obj().set("ok", true)))
+            }
+            ("POST", ["worker", "poll_batch"]) => {
+                let body = req.json()?;
+                let worker = body.need("worker")?.as_str().unwrap_or("").to_string();
+                let max = body
+                    .get("max")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(DEFAULT_BATCH)
+                    .clamp(1, MAX_POLL_BATCH);
+                self.scheduler.heartbeat(&worker);
+                let units = self.scheduler.next_units(&worker, max);
+                if !units.is_empty() {
+                    self.metrics
+                        .counter("dart.units_dispatched")
+                        .add(units.len() as u64);
+                }
+                Ok(Response::ok_json(&Json::obj().set(
+                    "units",
+                    Json::Arr(units.iter().map(work_unit_to_json).collect()),
+                )))
+            }
+            ("POST", ["worker", "complete_batch"]) => {
+                let body = req.json()?;
+                let reports = body
+                    .need("reports")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(unit_report_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let (ok, err) = reports.iter().fold((0u64, 0u64), |(o, e), r| match r {
+                    crate::dart::scheduler::UnitReport::Done { .. } => (o + 1, e),
+                    crate::dart::scheduler::UnitReport::Failed { .. } => (o, e + 1),
+                });
+                self.metrics.counter("dart.units_completed").add(ok);
+                self.metrics.counter("dart.units_failed").add(err);
+                let accepted = self.scheduler.complete_units(reports);
+                Ok(Response::ok_json(&Json::obj().set("accepted", accepted)))
+            }
+            ("POST", ["worker", "bye"]) => {
+                let body = req.json()?;
+                let worker = body.need("worker")?.as_str().unwrap_or("");
+                self.scheduler.remove_worker(worker);
+                Ok(Response::ok_json(&Json::obj().set("ok", true)))
             }
             ("GET", ["metrics"]) => Ok(Response::ok_json(&self.metrics.snapshot())),
             ("GET", ["logs"]) => {
@@ -459,6 +565,79 @@ mod tests {
         assert_eq!(back.max_retries, 5);
         assert_eq!(back.requirements.cpus, 2);
         assert_eq!(back.params["a"].get("lr").unwrap().as_f64(), Some(0.1));
+    }
+
+    #[test]
+    fn rest_worker_batch_cycle() {
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+
+        // register a REST worker with capacity 4
+        let r = c
+            .post(
+                "/worker/register",
+                &Json::obj().set("name", "edge-rest").set("capacity", 4usize),
+            )
+            .unwrap();
+        assert_eq!(r.status, 200);
+
+        // submit a task addressed to it
+        let body = Json::obj().set("function", "f").set(
+            "params",
+            Json::obj().set("edge-rest", Json::obj().set("x", 1)),
+        );
+        let resp = c.post("/tasks", &body).unwrap();
+        assert_eq!(resp.status, 201);
+        let tid = resp
+            .parse_json()
+            .unwrap()
+            .get("task_id")
+            .unwrap()
+            .as_i64()
+            .unwrap();
+
+        // batched poll returns the unit
+        let resp = c
+            .post(
+                "/worker/poll_batch",
+                &Json::obj().set("worker", "edge-rest").set("max", 8usize),
+            )
+            .unwrap();
+        let poll = resp.parse_json().unwrap();
+        let units = poll.get("units").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].get("client").unwrap().as_str(), Some("edge-rest"));
+
+        // batched completion settles the task
+        let report = Json::obj()
+            .set("task_id", tid)
+            .set("client", "edge-rest")
+            .set("ok", true)
+            .set("duration", 0.1)
+            .set("result", Json::obj().set("y", 2));
+        let resp = c
+            .post(
+                "/worker/complete_batch",
+                &Json::obj().set("reports", Json::Arr(vec![report])),
+            )
+            .unwrap();
+        assert_eq!(
+            resp.parse_json().unwrap().get("accepted").unwrap().as_i64(),
+            Some(1)
+        );
+        let st = c
+            .get(&format!("/tasks/{tid}/status"))
+            .unwrap()
+            .parse_json()
+            .unwrap();
+        assert_eq!(st.get("status").unwrap().as_str(), Some("finished"));
+
+        // graceful bye marks the worker lost
+        let r = c
+            .post("/worker/bye", &Json::obj().set("worker", "edge-rest"))
+            .unwrap();
+        assert_eq!(r.status, 200);
+        assert!(server.scheduler().alive_workers().is_empty());
     }
 
     #[test]

@@ -20,7 +20,9 @@ use std::time::{Duration, Instant};
 
 use crate::config::HardwareConfig;
 use crate::dart::faults::{FaultAction, FaultInjector};
-use crate::dart::scheduler::{Scheduler, TaskId, TaskResult, TaskSpec, TaskStatus};
+use crate::dart::scheduler::{
+    Scheduler, TaskId, TaskResult, TaskSpec, TaskStatus, UnitReport, DEFAULT_BATCH,
+};
 use crate::dart::{DartApi, DeviceInfo, TaskRegistry};
 use crate::error::Result;
 
@@ -29,6 +31,8 @@ pub struct SimClient {
     pub name: String,
     pub hardware: HardwareConfig,
     pub faults: FaultInjector,
+    /// units this client may hold concurrently (cross-silo default 1)
+    pub capacity: usize,
 }
 
 impl SimClient {
@@ -37,7 +41,13 @@ impl SimClient {
             name: name.to_string(),
             hardware: HardwareConfig::default(),
             faults: FaultInjector::none(),
+            capacity: 1,
         }
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> SimClient {
+        self.capacity = capacity.max(1);
+        self
     }
 }
 
@@ -60,13 +70,26 @@ impl TestModeDart {
         registry: TaskRegistry,
         parallelism: usize,
     ) -> TestModeDart {
+        Self::start_with_batch(clients, registry, parallelism, DEFAULT_BATCH)
+    }
+
+    /// [`TestModeDart::start`] with an explicit poll batch size — the number
+    /// of units a simulated client fetches from the scheduler per round
+    /// (production parity with `/worker/poll_batch`).
+    pub fn start_with_batch(
+        clients: Vec<SimClient>,
+        registry: TaskRegistry,
+        parallelism: usize,
+        batch: usize,
+    ) -> TestModeDart {
         let scheduler = Arc::new(Scheduler::new());
         for c in &clients {
-            scheduler.add_worker(&c.name, c.hardware.clone(), 1);
+            scheduler.add_worker(&c.name, c.hardware.clone(), c.capacity.max(1));
         }
         let stop = Arc::new(AtomicBool::new(false));
         let shared: Arc<Vec<SimClient>> = Arc::new(clients);
         let nthreads = parallelism.max(1);
+        let batch = batch.max(1);
         // Partition clients across dispatcher threads round-robin so that a
         // straggling client never blocks clients owned by other threads.
         let dispatchers = (0..nthreads)
@@ -78,7 +101,9 @@ impl TestModeDart {
                 std::thread::Builder::new()
                     .name(format!("feddart-sim-{t}"))
                     .spawn(move || {
-                        dispatcher_loop(t, nthreads, &clients, &scheduler, &registry, &stop)
+                        dispatcher_loop(
+                            t, nthreads, batch, &clients, &scheduler, &registry, &stop,
+                        )
                     })
                     .expect("spawn sim dispatcher")
             })
@@ -128,6 +153,7 @@ impl Drop for TestModeDart {
 fn dispatcher_loop(
     thread_idx: usize,
     nthreads: usize,
+    batch: usize,
     clients: &[SimClient],
     scheduler: &Scheduler,
     registry: &TaskRegistry,
@@ -139,14 +165,24 @@ fn dispatcher_loop(
             if i % nthreads != thread_idx {
                 continue;
             }
-            if let Some(unit) = scheduler.next_unit(&c.name) {
-                did_work = true;
+            // batched poll: one scheduler round-trip fetches up to `batch`
+            // units (bounded by the client's capacity), mirroring the
+            // production `/worker/poll_batch` path
+            let units = scheduler.next_units(&c.name, batch);
+            if units.is_empty() {
+                continue;
+            }
+            did_work = true;
+            // outcomes of the batch, reported together at the end
+            let mut reports: Vec<UnitReport> = Vec::with_capacity(units.len());
+            for unit in units {
                 match c.faults.next_action() {
                     FaultAction::DropBefore => {
-                        // client vanishes; heartbeat monitoring requeues,
+                        // client vanishes; heartbeat monitoring requeues its
+                        // running units (including the rest of this batch),
                         // then the client "rejoins" (next loop iteration)
                         scheduler.remove_worker(&c.name);
-                        scheduler.add_worker(&c.name, c.hardware.clone(), 1);
+                        scheduler.add_worker(&c.name, c.hardware.clone(), c.capacity);
                     }
                     FaultAction::Proceed { delay, crash_after } => {
                         if !delay.is_zero() {
@@ -161,29 +197,28 @@ fn dispatcher_loop(
                         }
                         if crash_after {
                             scheduler.remove_worker(&c.name);
-                            scheduler.add_worker(&c.name, c.hardware.clone(), 1);
+                            scheduler.add_worker(&c.name, c.hardware.clone(), c.capacity);
                         } else {
-                            match outcome {
-                                Ok(result) => {
-                                    let _ = scheduler.complete_unit(
-                                        unit.task_id,
-                                        &unit.client,
-                                        wall.as_secs_f64(),
-                                        result,
-                                    );
-                                }
-                                Err(e) => {
-                                    let _ = scheduler.fail_unit(
-                                        unit.task_id,
-                                        &unit.client,
-                                        &e.to_string(),
-                                    );
-                                }
-                            }
+                            reports.push(match outcome {
+                                Ok(result) => UnitReport::Done {
+                                    task_id: unit.task_id,
+                                    client: unit.client.clone(),
+                                    duration: wall.as_secs_f64(),
+                                    result,
+                                },
+                                Err(e) => UnitReport::Failed {
+                                    task_id: unit.task_id,
+                                    client: unit.client.clone(),
+                                    reason: e.to_string(),
+                                },
+                            });
                         }
                     }
                 }
             }
+            // batched completion (reports for units requeued by a mid-batch
+            // drop are rejected by the scheduler, preserving the retry path)
+            scheduler.complete_units(reports);
         }
         if !did_work {
             std::thread::sleep(Duration::from_micros(200));
@@ -297,6 +332,7 @@ mod tests {
                 name: format!("client-{i}"),
                 hardware: HardwareConfig::default(),
                 faults: FaultInjector::new(i as u64, FaultProfile::flaky(0.3)),
+                capacity: 1,
             })
             .collect();
         let sim = TestModeDart::start(clients, echo_registry(), 2);
@@ -338,6 +374,25 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         sim.wait(id, Duration::from_secs(5)).unwrap();
+    }
+
+    /// A capacity-4 client with batched polling drains many tasks; the
+    /// batched dispatch/completion paths are the same ones production uses.
+    #[test]
+    fn batched_client_capacity_drains_tasks() {
+        let clients = vec![SimClient::reliable("client-0").with_capacity(4)];
+        let sim = TestModeDart::start_with_batch(clients, echo_registry(), 1, 4);
+        let ids: Vec<TaskId> = (0..12)
+            .map(|_| {
+                sim.submit(TaskSpec::new("echo", params_for(&["client-0"]))).unwrap()
+            })
+            .collect();
+        for id in ids {
+            assert_eq!(
+                sim.wait(id, Duration::from_secs(5)).unwrap(),
+                TaskStatus::Finished
+            );
+        }
     }
 
     #[test]

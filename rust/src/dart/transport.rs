@@ -12,13 +12,9 @@
 
 use std::io::{Read, Write};
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
-
 use crate::error::{FedError, Result};
 use crate::json::Json;
-
-type HmacSha256 = Hmac<Sha256>;
+use crate::util::hmacsha::hmac_sha256;
 
 /// Maximum frame payload (64 MiB), matching the HTTP layer.
 pub const MAX_FRAME: usize = 64 << 20;
@@ -27,12 +23,7 @@ const MAC_LEN: usize = 32;
 
 /// Compute the HMAC-SHA256 tag for a payload.
 fn tag(key: &[u8], payload: &[u8]) -> [u8; MAC_LEN] {
-    let mut mac = <HmacSha256 as Mac>::new_from_slice(key).expect("hmac accepts any key len");
-    mac.update(payload);
-    let out = mac.finalize().into_bytes();
-    let mut t = [0u8; MAC_LEN];
-    t.copy_from_slice(&out);
-    t
+    hmac_sha256(key, payload)
 }
 
 /// Write one authenticated frame.

@@ -1,45 +1,71 @@
 //! Unified error type for the Fed-DART/FACT stack.
+//!
+//! Hand-rolled `Display`/`Error` impls — the `thiserror` derive is a
+//! crates.io dependency and this workspace builds offline with the vendored
+//! substrate only.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by any layer of the runtime.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum FedError {
     /// JSON parse / type errors from the hand-rolled codec.
-    #[error("json error: {0}")]
     Json(String),
 
     /// Configuration file problems (missing keys, bad values).
-    #[error("config error: {0}")]
     Config(String),
 
     /// HTTP transport / framing problems.
-    #[error("http error: {0}")]
     Http(String),
 
     /// DART transport (framing, authentication, disconnects).
-    #[error("transport error: {0}")]
     Transport(String),
 
     /// Task rejected or failed at the scheduling layer.
-    #[error("task error: {0}")]
     Task(String),
 
     /// Device is unknown, unavailable or failed its requirement check.
-    #[error("device error: {0}")]
     Device(String),
 
     /// PJRT / XLA runtime failures.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// FACT-level (model / aggregation / clustering) failures.
-    #[error("fact error: {0}")]
     Fact(String),
 
     /// Underlying I/O.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for FedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FedError::Json(m) => write!(f, "json error: {m}"),
+            FedError::Config(m) => write!(f, "config error: {m}"),
+            FedError::Http(m) => write!(f, "http error: {m}"),
+            FedError::Transport(m) => write!(f, "transport error: {m}"),
+            FedError::Task(m) => write!(f, "task error: {m}"),
+            FedError::Device(m) => write!(f, "device error: {m}"),
+            FedError::Runtime(m) => write!(f, "runtime error: {m}"),
+            FedError::Fact(m) => write!(f, "fact error: {m}"),
+            FedError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FedError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FedError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FedError {
+    fn from(e: std::io::Error) -> Self {
+        FedError::Io(e)
+    }
 }
 
 impl From<xla::Error> for FedError {
@@ -50,3 +76,19 @@ impl From<xla::Error> for FedError {
 
 /// Convenience alias used across the crate.
 pub type Result<T> = std::result::Result<T, FedError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(FedError::Task("nope".into()).to_string(), "task error: nope");
+        assert!(FedError::Io(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "disk"
+        ))
+        .to_string()
+        .contains("disk"));
+    }
+}

@@ -2,6 +2,7 @@
 //! and timing helpers used by the bench harness and metrics.
 
 pub mod base64;
+pub mod hmacsha;
 pub mod pool;
 pub mod rng;
 

@@ -132,6 +132,7 @@ fn fault_injection_does_not_stop_the_workflow() {
             } else {
                 FaultInjector::new(i as u64, FaultProfile::straggler(2.0, 5))
             },
+            capacity: 1,
         })
         .collect();
     let wm = WorkflowManager::test_mode_with(clients, registry, 4);

@@ -1,0 +1,285 @@
+//! Concurrency stress tests for the sharded scheduler.
+//!
+//! The sharded design (per-worker queues, task shards, atomic worker
+//! registry) replaces a single global mutex, so these tests drive it from
+//! many threads at once and assert the two invariants that matter:
+//!
+//! 1. **No unit is dispatched twice** while running (exactly-once dispatch
+//!    when no worker is ever lost).
+//! 2. **No task is lost**: every submitted task settles with every unit
+//!    accounted for.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use feddart::config::HardwareConfig;
+use feddart::dart::scheduler::{Scheduler, TaskSpec, TaskStatus, UnitReport};
+use feddart::json::Json;
+
+fn hw() -> HardwareConfig {
+    HardwareConfig::default()
+}
+
+fn broadcast_spec(workers: &[String], max_retries: u32) -> TaskSpec {
+    let params = workers
+        .iter()
+        .map(|w| (w.clone(), Json::obj().set("x", 1)))
+        .collect();
+    let mut spec = TaskSpec::new("stress", params);
+    spec.max_retries = max_retries;
+    spec
+}
+
+/// ≥8 worker threads + 2 submitters + heartbeat hammer + reaper, no worker
+/// churn: every unit must be dispatched exactly once and every task must
+/// finish with a full result set.
+#[test]
+fn stress_exactly_once_dispatch_no_churn() {
+    const WORKERS: usize = 8;
+    const TASKS_PER_SUBMITTER: usize = 150;
+    const SUBMITTERS: usize = 2;
+    let total_tasks = TASKS_PER_SUBMITTER * SUBMITTERS;
+    let expected_units = total_tasks * WORKERS;
+
+    let sched = Arc::new(Scheduler::new());
+    let names: Vec<String> = (0..WORKERS).map(|i| format!("w{i}")).collect();
+    for n in &names {
+        sched.add_worker(n, hw(), 4);
+    }
+
+    // (task, client) -> dispatch count; must end at exactly 1 everywhere
+    let dispatched: Arc<Mutex<HashMap<(u64, String), usize>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let completed = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let task_ids: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let mut handles = Vec::new();
+
+    // worker threads (8): batched poll + batched complete
+    for name in &names {
+        let sched = Arc::clone(&sched);
+        let dispatched = Arc::clone(&dispatched);
+        let completed = Arc::clone(&completed);
+        let stop = Arc::clone(&stop);
+        let name = name.clone();
+        handles.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let units = sched.next_units(&name, 4);
+                if units.is_empty() {
+                    std::thread::yield_now();
+                    continue;
+                }
+                {
+                    let mut d = dispatched.lock().unwrap();
+                    for u in &units {
+                        *d.entry((u.task_id, u.client.clone())).or_insert(0) += 1;
+                    }
+                }
+                let n = units.len();
+                let reports = units
+                    .into_iter()
+                    .map(|u| UnitReport::Done {
+                        task_id: u.task_id,
+                        client: u.client,
+                        duration: 0.0,
+                        result: Json::obj().set("ok", true),
+                    })
+                    .collect();
+                assert_eq!(sched.complete_units(reports), n, "completion rejected");
+                completed.fetch_add(n, Ordering::Relaxed);
+            }
+        }));
+    }
+
+    // submitter threads (2)
+    for _ in 0..SUBMITTERS {
+        let sched = Arc::clone(&sched);
+        let names = names.clone();
+        let task_ids = Arc::clone(&task_ids);
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..TASKS_PER_SUBMITTER {
+                let id = sched.submit(broadcast_spec(&names, 2)).unwrap();
+                task_ids.lock().unwrap().push(id);
+            }
+        }));
+    }
+
+    // heartbeat hammer
+    {
+        let sched = Arc::clone(&sched);
+        let names = names.clone();
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                for n in &names {
+                    sched.heartbeat(n);
+                }
+                std::thread::yield_now();
+            }
+        }));
+    }
+
+    // reaper with a huge timeout: scans concurrently, never fires
+    {
+        let sched = Arc::clone(&sched);
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                assert!(sched.reap_stale_workers(3_600_000).is_empty());
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }));
+    }
+
+    // wait for the full drain (bounded)
+    let t0 = Instant::now();
+    while completed.load(Ordering::Relaxed) < expected_units {
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "stress drain stuck: {}/{} units",
+            completed.load(Ordering::Relaxed),
+            expected_units
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // invariant 1: exactly-once dispatch
+    let d = dispatched.lock().unwrap();
+    assert_eq!(d.len(), expected_units, "not every unit dispatched");
+    for ((tid, client), count) in d.iter() {
+        assert_eq!(*count, 1, "unit ({tid}, {client}) dispatched {count} times");
+    }
+
+    // invariant 2: no task lost, full result sets
+    let ids = task_ids.lock().unwrap();
+    assert_eq!(ids.len(), total_tasks);
+    for id in ids.iter() {
+        assert_eq!(sched.status(*id).unwrap(), TaskStatus::Finished, "task {id}");
+        assert_eq!(sched.results(*id).unwrap().len(), WORKERS);
+    }
+    assert_eq!(sched.task_count(), total_tasks);
+}
+
+/// Worker churn from a dedicated thread (remove_worker/add_worker racing
+/// dispatch and completion): every task must still settle — nothing may be
+/// stranded Running on a dead worker or lost from the queues.
+#[test]
+fn stress_settles_under_concurrent_churn() {
+    const WORKERS: usize = 6;
+    const TASKS: usize = 60;
+
+    let sched = Arc::new(Scheduler::new());
+    let names: Vec<String> = (0..WORKERS).map(|i| format!("w{i}")).collect();
+    for n in &names {
+        sched.add_worker(n, hw(), 2);
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+
+    // worker threads: poll, complete (sometimes fail a unit)
+    for (wi, name) in names.iter().enumerate() {
+        let sched = Arc::clone(&sched);
+        let stop = Arc::clone(&stop);
+        let name = name.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let units = sched.next_units(&name, 2);
+                if units.is_empty() {
+                    std::thread::yield_now();
+                    continue;
+                }
+                let reports = units
+                    .into_iter()
+                    .map(|u| {
+                        i += 1;
+                        if (i + wi) % 17 == 0 {
+                            UnitReport::Failed {
+                                task_id: u.task_id,
+                                client: u.client,
+                                reason: "injected".into(),
+                            }
+                        } else {
+                            UnitReport::Done {
+                                task_id: u.task_id,
+                                client: u.client,
+                                duration: 0.0,
+                                result: Json::Null,
+                            }
+                        }
+                    })
+                    .collect();
+                sched.complete_units(reports);
+            }
+        }));
+    }
+
+    // churn thread: rip workers out and bring them back, racing everything
+    {
+        let sched = Arc::clone(&sched);
+        let names = names.clone();
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let mut k = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let n = &names[k % names.len()];
+                sched.remove_worker(n);
+                std::thread::sleep(Duration::from_micros(200));
+                sched.add_worker(n, hw(), 2);
+                k += 1;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }));
+    }
+
+    // submit with a huge retry budget so churn cannot exhaust retries; a
+    // submit can race a churn-induced dead window ("not connected"), which
+    // is a valid rejection — retry until accepted
+    let submit_deadline = Instant::now() + Duration::from_secs(30);
+    let ids: Vec<u64> = (0..TASKS)
+        .map(|_| loop {
+            match sched.submit(broadcast_spec(&names, 10_000)) {
+                Ok(id) => break id,
+                Err(_) => {
+                    assert!(
+                        Instant::now() < submit_deadline,
+                        "submit kept racing churn rejections"
+                    );
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        })
+        .collect();
+
+    // every task must settle
+    let t0 = Instant::now();
+    for id in &ids {
+        loop {
+            let st = sched.status(*id).unwrap();
+            if st != TaskStatus::InProgress {
+                assert!(
+                    st == TaskStatus::Finished || st == TaskStatus::PartiallyFailed,
+                    "task {id} ended {st:?}"
+                );
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(60),
+                "task {id} stuck under churn"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,277 @@
+//! Vendored minimal logging facade.
+//!
+//! API-compatible subset of the `log` crate (macros with `target:` syntax,
+//! `Level`/`LevelFilter`, the `Log` trait, `set_logger`/`set_max_level`)
+//! implemented with zero dependencies so the workspace builds offline.
+//! `feddart::metrics::logserver::LogServer` is the crate's one `Log`
+//! implementation.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Log verbosity levels, most severe first (matches the real facade:
+/// `Error < Warn < Info < Debug < Trace`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn to_level_filter(&self) -> LevelFilter {
+        match self {
+            Level::Error => LevelFilter::Error,
+            Level::Warn => LevelFilter::Warn,
+            Level::Info => LevelFilter::Info,
+            Level::Debug => LevelFilter::Debug,
+            Level::Trace => LevelFilter::Trace,
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// Level filters: `Off` plus one filter per level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a log record (level + target).
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record passed to the installed logger.
+#[derive(Debug, Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+}
+
+/// The trait a logger implements.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Install the global logger.  The first call wins; later calls error.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// The installed logger, if any.
+pub fn logger() -> Option<&'static dyn Log> {
+    LOGGER.get().copied()
+}
+
+// Called by the macros; not part of the public API contract.
+#[doc(hidden)]
+pub fn __private_api_log(args: fmt::Arguments, level: Level, target: &str) {
+    if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level, target }, args };
+        if logger.enabled(&record.metadata) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    (target: $target:expr, $lvl:expr, $($arg:tt)+) => {
+        $crate::__private_api_log(format_args!($($arg)+), $lvl, $target)
+    };
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::log!(target: module_path!(), $lvl, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Error, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Error, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Warn, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Warn, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Info, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Info, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Debug, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Debug, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Trace, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Trace, $($arg)+)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_matches_facade() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Warn <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(!(Level::Error <= LevelFilter::Off));
+        assert_eq!(Level::Warn.as_str(), "WARN");
+        assert_eq!(format!("{}", Level::Info), "INFO");
+        assert_eq!(format!("{:>5}", Level::Warn), " WARN");
+    }
+
+    #[test]
+    fn max_level_gate() {
+        set_max_level(LevelFilter::Info);
+        assert_eq!(max_level(), LevelFilter::Info);
+        // Debug record is gated out before touching the (absent) logger.
+        __private_api_log(format_args!("dropped"), Level::Debug, "t");
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+    }
+}

@@ -1,0 +1,262 @@
+//! Vendored offline stub of the `xla` PJRT bindings.
+//!
+//! The feddart runtime executes AOT-compiled HLO through a PJRT CPU client.
+//! That native runtime is not available in this offline environment, so this
+//! crate ships the API surface the engine programs against:
+//!
+//! * [`Literal`] is a **real** host-side container (type + dims + bytes) —
+//!   tensor<->literal round-trips work and are unit-tested in `feddart`.
+//! * [`PjRtClient::cpu`] returns an error, so engine threads report the
+//!   runtime as unavailable instead of executing.  Everything artifact-gated
+//!   (golden tests, FL integration, HLO benches) skips cleanly.
+//!
+//! Swapping in a linked PJRT build is a dependency change only; no feddart
+//! source changes are required.
+
+use std::fmt;
+
+/// Error type of the bindings.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable (offline stub build) — HLO execution disabled";
+
+/// Element types used by the shipped artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(&self) -> usize {
+        4
+    }
+}
+
+/// Sealed-ish trait mapping native element types onto [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_ne_bytes4(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_ne_bytes4(b: [u8; 4]) -> Self {
+        f32::from_ne_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_ne_bytes4(b: [u8; 4]) -> Self {
+        i32::from_ne_bytes(b)
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side literal: either an array (type + dims + raw bytes) or a tuple.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array {
+        ty: ElementType,
+        dims: Vec<usize>,
+        bytes: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build an array literal from untyped bytes (the engine's upload path).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let expect = dims.iter().product::<usize>() * ty.byte_width();
+        if bytes.len() != expect {
+            return Err(Error(format!(
+                "literal data mismatch: {} dims need {} bytes, got {}",
+                dims.len(),
+                expect,
+                bytes.len()
+            )));
+        }
+        Ok(Literal::Array { ty, dims: dims.to_vec(), bytes: bytes.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { ty, dims, .. } => Ok(ArrayShape {
+                ty: *ty,
+                dims: dims.iter().map(|&d| d as i64).collect(),
+            }),
+            Literal::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+        }
+    }
+
+    /// Decode the element data (native endianness; same-process round-trip).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { ty, bytes, .. } => {
+                if *ty != T::TY {
+                    return Err(Error(format!(
+                        "literal type mismatch: {ty:?} vs requested {:?}",
+                        T::TY
+                    )));
+                }
+                Ok(bytes
+                    .chunks_exact(4)
+                    .map(|c| T::from_ne_bytes4([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            Literal::Tuple(_) => Err(Error("cannot decode a tuple literal".into())),
+        }
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            Literal::Array { .. } => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// An HLO module parsed from text.  Stub: retains the path only.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error(format!("no such HLO file: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// An XLA computation.  Stub: carries the proto through.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// The PJRT client.  Stub: construction fails with a clear message.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// A compiled executable.  Stub: never constructible (client construction
+/// fails), but the type checks the engine's cache/execute code paths.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<f32> = vec![1.0, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+                .unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        let err = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2, 2],
+            &[0u8; 4],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let a = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[1],
+            &7i32.to_ne_bytes(),
+        )
+        .unwrap();
+        let t = Literal::Tuple(vec![a]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
