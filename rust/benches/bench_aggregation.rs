@@ -22,7 +22,9 @@ fn updates(k: usize, p: usize, rng: &mut Rng) -> Vec<ClientUpdate> {
     (0..k)
         .map(|i| ClientUpdate {
             device: format!("c{i}"),
-            params: rng.normal_vec(p),
+            params: feddart::util::tensorbuf::TensorBuf::from_f32_vec(
+                rng.normal_vec(p),
+            ),
             n_samples: 1.0 + (i % 7) as f32,
             loss: 0.0,
             duration: 0.0,
@@ -44,14 +46,14 @@ fn main() {
         (128, 1 << 20),
     ] {
         let ups = updates(k, p, &mut rng);
-        let vectors: Vec<Vec<f32>> = ups.iter().map(|u| u.params.clone()).collect();
+        let vectors: Vec<Vec<f32>> = ups.iter().map(|u| u.params.to_vec()).collect();
         let weights: Vec<f32> = ups.iter().map(|u| u.n_samples).collect();
 
         let flat = time_n(1, 5, || {
             std::hint::black_box(flat_reduce_weighted(&vectors, &weights));
         });
         let tree = time_n(1, 5, || {
-            std::hint::black_box(tree_reduce_weighted(&vectors, &weights, 8, &pool));
+            std::hint::black_box(tree_reduce_weighted(&vectors, &weights, 8));
         });
         let par = time_n(1, 5, || {
             std::hint::black_box(parallel_reduce_weighted(
@@ -90,10 +92,10 @@ fn main() {
 
     // correctness cross-check at one large shape
     let ups = updates(32, 1 << 18, &mut rng);
-    let vectors: Vec<Vec<f32>> = ups.iter().map(|u| u.params.clone()).collect();
+    let vectors: Vec<Vec<f32>> = ups.iter().map(|u| u.params.to_vec()).collect();
     let weights: Vec<f32> = ups.iter().map(|u| u.n_samples).collect();
     let a = flat_reduce_weighted(&vectors, &weights);
-    let b = tree_reduce_weighted(&vectors, &weights, 8, &pool);
+    let b = tree_reduce_weighted(&vectors, &weights, 8);
     let c = hlo_fedavg(&engine, "fedavg_k32_p1048576", &ups, &weights).unwrap();
     let d = parallel_reduce_weighted(&vectors, &weights, pool.worker_count());
     let d_ab = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);

@@ -1,0 +1,286 @@
+//! E9 — the tensor wire format: base64-inside-JSON vs the binary
+//! envelope (`application/x-feddart-tensor`).
+//!
+//! Three measurements, all artifact-free:
+//!
+//! 1. **Codec micro-bench** — encode/decode one parameter vector at
+//!    10k / 100k / 1M f32 params through both paths, with bytes-on-wire
+//!    for each.  The per-tensor size win is the base64 expansion (~1.33x);
+//!    the time win is skipping base64 entirely.
+//! 2. **Model broadcast** — the submit body of one federated round
+//!    addressing N clients with the *same* global parameters.  The JSON
+//!    path embeds one base64 copy per client; the envelope writes the
+//!    shared tensor once (Arc-level dedup), so the body shrinks ~N*1.33x.
+//! 3. **Full round-trip** — submit → REST worker poll → execute →
+//!    complete → fetch results → weighted aggregation, through a real
+//!    DART-server over localhost TCP, in binary mode vs JSON-only mode.
+//!
+//! Writes `BENCH_wire.json` (`$BENCH_OUT` selects the directory); smoke
+//! mode (`BENCH_SMOKE=1` / `--smoke`) shrinks iteration counts for CI.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use feddart::benchkit::{fmt_s, smoke, time_n, BenchReport, Table};
+use feddart::config::HardwareConfig;
+use feddart::dart::rest::{RestDartApi, RestWorker};
+use feddart::dart::scheduler::{TaskSpec, TaskStatus};
+use feddart::dart::server::{DartServer, DartServerConfig};
+use feddart::dart::{DartApi, TaskRegistry};
+use feddart::fact::aggregation::{Aggregation, ClientUpdate};
+use feddart::json::Json;
+use feddart::util::base64;
+use feddart::util::rng::Rng;
+use feddart::util::tensorbuf::TensorBuf;
+
+const CLIENTS: usize = 8;
+
+fn codec_bench(report: BenchReport) -> BenchReport {
+    let sizes: &[usize] = &[10_000, 100_000, 1_000_000];
+    let iters = if smoke() { 3 } else { 10 };
+    let mut t = Table::new(&[
+        "params",
+        "b64_bytes",
+        "bin_bytes",
+        "b64_enc",
+        "bin_enc",
+        "b64_dec",
+        "bin_dec",
+    ]);
+    let mut report = report;
+    let mut rng = Rng::new(1);
+
+    for &n in sizes {
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+        // base64+JSON path: params embedded as a base64 string in a JSON
+        // message, serialized to text (what every round used to ship)
+        let b64_body = Json::obj()
+            .set("params", base64::encode_f32(&v))
+            .to_string()
+            .into_bytes();
+        let b64_enc = time_n(1, iters, || {
+            let body = Json::obj()
+                .set("params", base64::encode_f32(&v))
+                .to_string();
+            std::hint::black_box(body);
+        });
+        let b64_dec = time_n(1, iters, || {
+            let j = Json::parse(std::str::from_utf8(&b64_body).unwrap()).unwrap();
+            let back = base64::decode_f32(j.need("params").unwrap().as_str().unwrap())
+                .unwrap();
+            std::hint::black_box(back);
+        });
+
+        // binary path: the same message as a tensor envelope
+        let tb = TensorBuf::from_f32_slice(&v);
+        let bin_body = Json::obj().set("params", tb.clone()).to_envelope();
+        let bin_enc = time_n(1, iters, || {
+            let body = Json::obj().set("params", tb.clone()).to_envelope();
+            std::hint::black_box(body);
+        });
+        let bin_dec = time_n(1, iters, || {
+            let j = Json::from_envelope(&bin_body).unwrap();
+            // zero-copy: the view is enough for aggregation
+            let t = j.need("params").unwrap().as_tensor().unwrap().clone();
+            std::hint::black_box(t.as_f32_slice()[0]);
+        });
+
+        t.row(&[
+            n.to_string(),
+            b64_body.len().to_string(),
+            bin_body.len().to_string(),
+            fmt_s(b64_enc.mean),
+            fmt_s(bin_enc.mean),
+            fmt_s(b64_dec.mean),
+            fmt_s(bin_dec.mean),
+        ]);
+        report = report
+            .set(&format!("codec_b64_bytes_{n}"), b64_body.len())
+            .set(&format!("codec_bin_bytes_{n}"), bin_body.len())
+            .set(&format!("codec_b64_enc_s_{n}"), b64_enc.mean)
+            .set(&format!("codec_bin_enc_s_{n}"), bin_enc.mean)
+            .set(&format!("codec_b64_dec_s_{n}"), b64_dec.mean)
+            .set(&format!("codec_bin_dec_s_{n}"), bin_dec.mean);
+    }
+    t.print("E9a: single-tensor codec — base64+JSON vs binary envelope");
+    report
+}
+
+/// The submit body of one round: N clients, one shared global tensor.
+fn broadcast_bench(report: BenchReport) -> BenchReport {
+    let sizes: &[usize] = &[10_000, 100_000, 1_000_000];
+    let mut t = Table::new(&["params", "clients", "json_bytes", "bin_bytes", "ratio"]);
+    let mut report = report;
+    let mut rng = Rng::new(2);
+    let mut ratio_1m = 0.0f64;
+
+    for &n in sizes {
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let global = TensorBuf::from_f32_slice(&v);
+        let mut params = BTreeMap::new();
+        for i in 0..CLIENTS {
+            params.insert(
+                format!("edge-{i}"),
+                Json::obj().set("params", global.clone()).set("lr", 0.1),
+            );
+        }
+        let spec = TaskSpec::new("fact_learn", params);
+        let body = feddart::dart::server::task_spec_to_json(&spec);
+        let json_bytes = body.to_string().len();
+        let bin_bytes = body.to_envelope().len();
+        let ratio = json_bytes as f64 / bin_bytes as f64;
+        if n == 1_000_000 {
+            ratio_1m = ratio;
+        }
+        t.row(&[
+            n.to_string(),
+            CLIENTS.to_string(),
+            json_bytes.to_string(),
+            bin_bytes.to_string(),
+            format!("{ratio:.1}x"),
+        ]);
+        report = report
+            .set(&format!("broadcast_json_bytes_{n}"), json_bytes)
+            .set(&format!("broadcast_bin_bytes_{n}"), bin_bytes)
+            .set(&format!("broadcast_ratio_{n}"), ratio);
+    }
+    t.print("E9b: model broadcast body (shared global params, envelope dedup)");
+    println!(
+        "\nE9b verdict: binary broadcast is {ratio_1m:.1}x smaller on the wire at \
+         1M params x {CLIENTS} clients (target >= 5x)."
+    );
+    report.set("broadcast_ratio_1m_ok", ratio_1m >= 5.0)
+}
+
+/// One full federated round through a real DART-server: submit a task
+/// addressing every worker, workers poll/execute/complete over REST,
+/// results are fetched and aggregated.  Returns the wall time.
+fn run_round(n_params: usize, binary: bool) -> f64 {
+    let server = DartServer::start(DartServerConfig::default()).unwrap();
+    let addr = server.rest_addr().to_string();
+    let reg = Arc::new(TaskRegistry::new());
+    reg.register("learn_echo", |p| {
+        // stand-in for local training: scale the received parameters
+        let t = TensorBuf::from_json(p.need("params")?)?;
+        let out: Vec<f32> = t.as_f32_slice().iter().map(|v| v * 0.99).collect();
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(out))
+            .set("n_samples", 32))
+    });
+
+    let names: Vec<String> = (0..CLIENTS).map(|i| format!("edge-{i}")).collect();
+    let workers: Vec<Arc<RestWorker>> = names
+        .iter()
+        .map(|name| {
+            let w = Arc::new(
+                RestWorker::connect(&addr, "000", name)
+                    .with_batch(4)
+                    .with_binary(binary),
+            );
+            w.register(&HardwareConfig::default(), 4).unwrap();
+            w
+        })
+        .collect();
+    let api = RestDartApi::from_addr(&addr, "000").with_binary(binary);
+
+    let mut rng = Rng::new(3);
+    let v: Vec<f32> = (0..n_params).map(|_| rng.normal() as f32).collect();
+    let global = TensorBuf::from_f32_vec(v);
+
+    let t0 = Instant::now();
+    let mut params = BTreeMap::new();
+    for name in &names {
+        params.insert(name.clone(), Json::obj().set("params", global.clone()));
+    }
+    let tid = api.submit(TaskSpec::new("learn_echo", params)).unwrap();
+
+    // each worker drains its own units on its own thread
+    let handles: Vec<_> = workers
+        .iter()
+        .map(|w| {
+            let w = Arc::clone(w);
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                while w.step(&reg).unwrap() == 0 {
+                    if t0.elapsed() > Duration::from_secs(30) {
+                        panic!("worker starved");
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(api.status(tid).unwrap(), TaskStatus::Finished);
+
+    // fetch + aggregate straight from the received buffers
+    let results = api.results(tid).unwrap();
+    assert_eq!(results.len(), CLIENTS);
+    let updates: Vec<ClientUpdate> = results
+        .iter()
+        .map(|r| ClientUpdate {
+            device: r.device_name.clone(),
+            params: TensorBuf::from_json(r.result.need("params").unwrap()).unwrap(),
+            n_samples: 32.0,
+            loss: 0.0,
+            duration: r.duration,
+        })
+        .collect();
+    let agg = Aggregation::WeightedFedAvg.aggregate(&updates, None).unwrap();
+    assert_eq!(agg.len(), n_params);
+    t0.elapsed().as_secs_f64()
+}
+
+fn roundtrip_bench(report: BenchReport) -> BenchReport {
+    let sizes: &[usize] = if smoke() {
+        &[10_000, 1_000_000]
+    } else {
+        &[10_000, 100_000, 1_000_000]
+    };
+    let reps = if smoke() { 1 } else { 3 };
+    let mut t = Table::new(&["params", "json_round", "bin_round", "speedup"]);
+    let mut report = report;
+    let mut speedup_1m = 0.0f64;
+
+    for &n in sizes {
+        let json_s = (0..reps).map(|_| run_round(n, false)).fold(f64::MAX, f64::min);
+        let bin_s = (0..reps).map(|_| run_round(n, true)).fold(f64::MAX, f64::min);
+        let speedup = json_s / bin_s;
+        if n == 1_000_000 {
+            speedup_1m = speedup;
+        }
+        t.row(&[
+            n.to_string(),
+            fmt_s(json_s),
+            fmt_s(bin_s),
+            format!("{speedup:.2}x"),
+        ]);
+        report = report
+            .set(&format!("roundtrip_json_s_{n}"), json_s)
+            .set(&format!("roundtrip_bin_s_{n}"), bin_s)
+            .set(&format!("roundtrip_speedup_{n}"), speedup);
+    }
+    t.print("E9c: full round-trip (submit -> poll -> complete -> aggregate), 8 REST workers");
+    println!(
+        "\nE9c verdict: binary round-trip is {speedup_1m:.2}x the JSON path at 1M params."
+    );
+    report.set("roundtrip_speedup_1m", speedup_1m)
+}
+
+fn main() {
+    let mut report = BenchReport::new("wire")
+        .set("clients", CLIENTS)
+        .set("smoke", smoke());
+    report = codec_bench(report);
+    report = broadcast_bench(report);
+    report = roundtrip_bench(report);
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_wire.json: {e}"),
+    }
+}

@@ -10,16 +10,16 @@
 //! Besides result bookkeeping, the tree structure is what makes parameter
 //! aggregation scale: [`tree_reduce_weighted`] reduces K client parameter
 //! vectors through a fanout-bounded tree with each node's partial sums
-//! computed in parallel on the shared [`ThreadPool`] — benched against the
-//! flat loop and the HLO-fused kernel in E7 (`bench_aggregation`).
-
+//! computed on scoped threads — benched against the flat loop and the
+//! HLO-fused kernel in E7 (`bench_aggregation`).  All reductions are
+//! generic over `AsRef<[f32]>`, so they consume received
+//! [`crate::util::tensorbuf::TensorBuf`]s directly (zero-copy views).
 
 use crate::coordinator::device::DeviceHolder;
 use crate::coordinator::task::{Task, TaskHandle};
 use crate::dart::scheduler::{TaskId, TaskResult, TaskStatus};
 use crate::dart::DartApi;
 use crate::error::Result;
-use crate::util::pool::ThreadPool;
 
 /// Fanout above which an aggregator splits its devices into children.
 pub const DEFAULT_FANOUT: usize = 8;
@@ -143,11 +143,15 @@ pub fn flat_reduce_weighted<V: AsRef<[f32]> + Sync>(
 /// earlier clone-into-`Arc` variant at up to 8x *slower* than the flat
 /// loop), and the root combines the partials.  Equivalent to
 /// [`flat_reduce_weighted`] up to f32 re-association.
+///
+/// Scoped threads borrow the inputs directly; the shared
+/// [`crate::util::pool::ThreadPool`] cannot do that (its jobs must be
+/// `'static`), which is why leaves spawn scoped threads rather than going
+/// through the pool.
 pub fn tree_reduce_weighted<V: AsRef<[f32]> + Sync>(
     vectors: &[V],
     weights: &[f32],
     fanout: usize,
-    _pool: &ThreadPool,
 ) -> Vec<f32> {
     assert_eq!(vectors.len(), weights.len());
     assert!(!vectors.is_empty());
@@ -300,7 +304,6 @@ mod tests {
     #[test]
     fn tree_reduce_matches_flat() {
         let mut rng = Rng::new(3);
-        let pool = ThreadPool::new(4);
         for &(k, p) in &[(3usize, 17usize), (9, 100), (33, 257), (64, 1000)] {
             let vectors: Vec<Vec<f32>> =
                 (0..k).map(|_| rng.normal_vec(p)).collect();
@@ -308,12 +311,27 @@ mod tests {
                 (0..k).map(|_| rng.range_f32(0.1, 2.0)).collect();
             let flat = flat_reduce_weighted(&vectors, &weights);
             for fanout in [2, 4, 8] {
-                let tree = tree_reduce_weighted(&vectors, &weights, fanout, &pool);
+                let tree = tree_reduce_weighted(&vectors, &weights, fanout);
                 for (a, b) in flat.iter().zip(tree.iter()) {
                     assert!((a - b).abs() < 1e-4, "k={k} fanout={fanout}: {a} vs {b}");
                 }
             }
         }
+    }
+
+    #[test]
+    fn reduces_accept_tensor_buffers_directly() {
+        use crate::util::tensorbuf::TensorBuf;
+        // TensorBuf implements AsRef<[f32]>, so received buffers feed the
+        // reductions without re-materializing Vec<f32>
+        let bufs: Vec<TensorBuf> = vec![
+            TensorBuf::from_f32_vec(vec![1.0, 2.0]),
+            TensorBuf::from_f32_vec(vec![3.0, 4.0]),
+        ];
+        let out = flat_reduce_weighted(&bufs, &[1.0, 3.0]);
+        assert_eq!(out, vec![2.5, 3.5]);
+        let tree = tree_reduce_weighted(&bufs, &[1.0, 3.0], 2);
+        assert_eq!(out, tree);
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Wire messages between DART-server and DART-clients, and the shared
 //! JSON conventions used by the REST-API.
 //!
-//! Model parameters travel as base64-encoded little-endian f32 blobs under
-//! the `"params_b64"` convention (see [`crate::util::base64`]).
+//! Model parameters travel as [`crate::util::tensorbuf::TensorBuf`]
+//! values ([`crate::json::Json::Tensor`]): binary envelope frames on the
+//! tensor-aware wire (see [`crate::json::Json::to_envelope`]), degrading
+//! to base64-encoded little-endian f32 strings whenever a message is
+//! serialized as plain JSON text for a legacy peer.
 
 use std::collections::BTreeMap;
 

@@ -20,8 +20,16 @@ use crate::http::client::HttpClient;
 use crate::json::Json;
 
 /// DartApi over the https-server REST-API.
+///
+/// By default the weights hot path uses the binary tensor envelope
+/// (`application/x-feddart-tensor`): task submissions with
+/// [`crate::json::Json::Tensor`] parameters go out as envelopes, and the
+/// `accept` header asks for binary results.  [`RestDartApi::with_binary`]
+/// `(false)` forces plain JSON (base64 parameters) end to end — the
+/// legacy-client mode the negotiation fallback test exercises.
 pub struct RestDartApi {
     http: HttpClient,
+    binary: bool,
 }
 
 impl RestDartApi {
@@ -31,11 +39,22 @@ impl RestDartApi {
             http: HttpClient::new(&cfg.server)
                 .with_key(&cfg.client_key)
                 .with_timeout(Duration::from_secs(60)),
+            binary: true,
         }
     }
 
     pub fn from_addr(addr: &str, key: &str) -> RestDartApi {
         Self::connect(&ServerConfig { server: addr.to_string(), client_key: key.to_string() })
+    }
+
+    /// Enable/disable the binary tensor wire format (default on).
+    pub fn with_binary(mut self, binary: bool) -> Self {
+        self.binary = binary;
+        self
+    }
+
+    fn post(&self, path: &str, body: &Json) -> Result<crate::http::Response> {
+        post_maybe_binary(&self.http, self.binary, path, body)
     }
 
     /// `GET /health` — readiness probe.
@@ -52,8 +71,24 @@ impl RestDartApi {
 
 }
 
+/// The single place that decides between the negotiated binary wire and
+/// plain JSON — shared by the aggregation-side API and the REST worker so
+/// the two can never drift apart.
+fn post_maybe_binary(
+    http: &HttpClient,
+    binary: bool,
+    path: &str,
+    body: &Json,
+) -> Result<crate::http::Response> {
+    if binary {
+        http.post_negotiated(path, body)
+    } else {
+        http.post(path, body)
+    }
+}
+
 fn expect_ok(resp: crate::http::Response) -> Result<Json> {
-    let body = resp.parse_json().unwrap_or(Json::Null);
+    let body = resp.parse_body().unwrap_or(Json::Null);
     if resp.status >= 400 {
         let msg = body
             .get("error")
@@ -72,6 +107,8 @@ pub struct RestWorker {
     http: HttpClient,
     name: String,
     batch: usize,
+    /// binary tensor wire format (default on; off = legacy JSON client)
+    binary: bool,
     /// registration replayed on recovery (hardware, capacity)
     registration: std::sync::Mutex<Option<(HardwareConfig, usize)>>,
 }
@@ -85,6 +122,7 @@ impl RestWorker {
                 .with_retries(2),
             name: name.to_string(),
             batch: DEFAULT_BATCH,
+            binary: true,
             registration: std::sync::Mutex::new(None),
         }
     }
@@ -93,6 +131,18 @@ impl RestWorker {
     pub fn with_batch(mut self, batch: usize) -> Self {
         self.batch = batch.max(1);
         self
+    }
+
+    /// Enable/disable the binary tensor wire format (default on).  With
+    /// it off the worker behaves like a plain-JSON client: no `accept`
+    /// header, base64 parameters both ways.
+    pub fn with_binary(mut self, binary: bool) -> Self {
+        self.binary = binary;
+        self
+    }
+
+    fn post(&self, path: &str, body: &Json) -> Result<crate::http::Response> {
+        post_maybe_binary(&self.http, self.binary, path, body)
     }
 
     pub fn name(&self) -> &str {
@@ -123,7 +173,7 @@ impl RestWorker {
 
     /// `POST /worker/poll_batch` — fetch up to the configured batch of units.
     pub fn poll_batch(&self) -> Result<Vec<WorkUnit>> {
-        let body = expect_ok(self.http.post(
+        let body = expect_ok(self.post(
             "/worker/poll_batch",
             &Json::obj()
                 .set("worker", self.name.as_str())
@@ -140,7 +190,7 @@ impl RestWorker {
     /// `POST /worker/complete_batch` — report a batch of unit outcomes;
     /// returns how many the scheduler accepted.
     pub fn complete_batch(&self, reports: &[UnitReport]) -> Result<usize> {
-        let body = expect_ok(self.http.post(
+        let body = expect_ok(self.post(
             "/worker/complete_batch",
             &Json::obj().set(
                 "reports",
@@ -216,7 +266,9 @@ impl DartApi for RestDartApi {
     }
 
     fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
-        let body = expect_ok(self.http.post("/tasks", &task_spec_to_json(&spec))?)?;
+        // the model broadcast: tensor parameters ship as one deduplicated
+        // binary envelope in binary mode
+        let body = expect_ok(self.post("/tasks", &task_spec_to_json(&spec))?)?;
         body.need("task_id")?
             .as_i64()
             .map(|v| v as TaskId)
@@ -229,7 +281,13 @@ impl DartApi for RestDartApi {
     }
 
     fn results(&self, id: TaskId) -> Result<Vec<TaskResult>> {
-        let body = expect_ok(self.http.get(&format!("/tasks/{id}/results"))?)?;
+        let path = format!("/tasks/{id}/results");
+        let resp = if self.binary {
+            self.http.get_negotiated(&path)?
+        } else {
+            self.http.get(&path)?
+        };
+        let body = expect_ok(resp)?;
         let arr = body
             .as_arr()
             .ok_or_else(|| FedError::Http("expected array".into()))?;
@@ -338,6 +396,105 @@ mod tests {
         }
         worker.bye().unwrap();
         assert!(server.scheduler().alive_workers().is_empty());
+    }
+
+    /// Tensor parameters flow binary end-to-end: envelope submit, binary
+    /// poll reply, binary completion, binary results — and arrive back as
+    /// `Json::Tensor` with bit-exact payloads.
+    #[test]
+    fn binary_tensor_round_trip() {
+        use crate::util::tensorbuf::TensorBuf;
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let addr = server.rest_addr().to_string();
+        let reg = TaskRegistry::new();
+        reg.register("scale", |p| {
+            let t = TensorBuf::from_json(p.need("params")?)?;
+            let scaled: Vec<f32> = t.as_f32_slice().iter().map(|v| v * 2.0).collect();
+            Ok(Json::obj().set("params", TensorBuf::from_f32_vec(scaled)))
+        });
+        let worker = RestWorker::connect(&addr, "000", "edge-bin").with_batch(4);
+        worker.register(&HardwareConfig::default(), 4).unwrap();
+
+        let api = RestDartApi::from_addr(&addr, "000");
+        let global = TensorBuf::from_f32_slice(&[1.5, -0.25, f32::MIN_POSITIVE]);
+        let mut params = BTreeMap::new();
+        params.insert(
+            "edge-bin".to_string(),
+            Json::obj().set("params", global.clone()),
+        );
+        let tid = api.submit(TaskSpec::new("scale", params)).unwrap();
+
+        let t0 = Instant::now();
+        while worker.step(&reg).unwrap() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10));
+        }
+        assert_eq!(api.status(tid).unwrap(), TaskStatus::Finished);
+        let rs = api.results(tid).unwrap();
+        assert_eq!(rs.len(), 1);
+        // binary results: params must arrive as a tensor, not a string
+        let back = rs[0].result.get("params").unwrap().as_tensor().unwrap();
+        assert_eq!(back.to_vec(), vec![3.0, -0.5, f32::MIN_POSITIVE * 2.0]);
+    }
+
+    /// Negotiation fallback: a JSON-only worker (no accept header, base64
+    /// payloads) completes a round against the upgraded server even when
+    /// the aggregation side submits binary tensors.
+    #[test]
+    fn json_only_client_completes_round_against_binary_server() {
+        use crate::util::base64;
+        use crate::util::tensorbuf::TensorBuf;
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let addr = server.rest_addr().to_string();
+        let reg = TaskRegistry::new();
+        // a legacy client: decodes base64 strings, returns base64 strings
+        reg.register("scale", |p| {
+            let s = p.need("params")?.as_str().expect("JSON worker gets base64");
+            let v: Vec<f32> =
+                base64::decode_f32(s)?.iter().map(|x| x * 2.0).collect();
+            Ok(Json::obj().set("params", base64::encode_f32(&v)))
+        });
+        let worker = RestWorker::connect(&addr, "000", "edge-json")
+            .with_batch(4)
+            .with_binary(false); // JSON-only client
+        worker.register(&HardwareConfig::default(), 4).unwrap();
+
+        // the aggregation side stays binary
+        let api = RestDartApi::from_addr(&addr, "000");
+        let global = TensorBuf::from_f32_slice(&[0.5, 4.0]);
+        let mut params = BTreeMap::new();
+        params.insert(
+            "edge-json".to_string(),
+            Json::obj().set("params", global.clone()),
+        );
+        let tid = api.submit(TaskSpec::new("scale", params)).unwrap();
+
+        let t0 = Instant::now();
+        while worker.step(&reg).unwrap() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10));
+        }
+        assert_eq!(api.status(tid).unwrap(), TaskStatus::Finished);
+        let rs = api.results(tid).unwrap();
+        assert_eq!(rs.len(), 1);
+        // the JSON worker produced base64; either representation decodes
+        let back = TensorBuf::from_json(rs[0].result.get("params").unwrap()).unwrap();
+        assert_eq!(back.to_vec(), vec![1.0, 8.0]);
+
+        // and a fully-JSON aggregation side works against the same server
+        let api_json = RestDartApi::from_addr(&addr, "000").with_binary(false);
+        let mut params = BTreeMap::new();
+        params.insert(
+            "edge-json".to_string(),
+            Json::obj().set("params", TensorBuf::from_f32_slice(&[2.0])),
+        );
+        let tid2 = api_json.submit(TaskSpec::new("scale", params)).unwrap();
+        let t0 = Instant::now();
+        while worker.step(&reg).unwrap() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10));
+        }
+        let rs2 = api_json.results(tid2).unwrap();
+        let back2 =
+            TensorBuf::from_json(rs2[0].result.get("params").unwrap()).unwrap();
+        assert_eq!(back2.to_vec(), vec![4.0]);
     }
 
     #[test]

@@ -101,10 +101,16 @@ impl DartServer {
         let stop = Arc::new(AtomicBool::new(false));
 
         // --- DART transport listener ---
+        // Blocking accept (no poll/sleep); shutdown() self-connects once to
+        // unblock it — same pattern as the HTTP server's accept loop.
+        // Connection handlers are bounded by the same ConnGate the HTTP
+        // server uses (permits release on drop, panic included).
         let listener = TcpListener::bind(&cfg.dart_addr)?;
         let dart_addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let key = Arc::new(cfg.transport_key.clone());
+        let gate = crate::http::server::ConnGate::new(
+            crate::http::server::MAX_CONNECTIONS,
+        );
         let mut threads = Vec::new();
         {
             let scheduler = Arc::clone(&scheduler);
@@ -115,28 +121,23 @@ impl DartServer {
                 std::thread::Builder::new()
                     .name("feddart-dart-accept".into())
                     .spawn(move || {
-                        while !stop.load(Ordering::Relaxed) {
-                            match listener.accept() {
-                                Ok((stream, peer)) => {
-                                    let scheduler = Arc::clone(&scheduler);
-                                    let key = Arc::clone(&key);
-                                    let metrics = metrics.clone();
-                                    std::thread::spawn(move || {
-                                        if let Err(e) = serve_client(
-                                            stream, peer, &scheduler, &key, &metrics,
-                                        ) {
-                                            log::debug!(target: "dart::server",
-                                                "client conn {peer} ended: {e}");
-                                        }
-                                    });
-                                }
-                                Err(e)
-                                    if e.kind() == std::io::ErrorKind::WouldBlock =>
-                                {
-                                    std::thread::sleep(Duration::from_millis(5));
-                                }
-                                Err(_) => break,
+                        while let Ok((stream, peer)) = listener.accept() {
+                            if stop.load(Ordering::Relaxed) {
+                                break; // the shutdown wake connection
                             }
+                            let permit = gate.acquire();
+                            let scheduler = Arc::clone(&scheduler);
+                            let key = Arc::clone(&key);
+                            let metrics = metrics.clone();
+                            std::thread::spawn(move || {
+                                let _permit = permit;
+                                if let Err(e) = serve_client(
+                                    stream, peer, &scheduler, &key, &metrics,
+                                ) {
+                                    log::debug!(target: "dart::server",
+                                        "client conn {peer} ended: {e}");
+                                }
+                            });
                         }
                     })
                     .expect("spawn dart accept loop"),
@@ -203,6 +204,8 @@ impl DartServer {
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         self.rest.shutdown();
+        // unblock the DART accept loop (blocking accept, no poll)
+        crate::http::server::wake_accept_loop(self.dart_addr);
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -362,7 +365,8 @@ impl RestHandler {
                 Ok(Response::ok_json(&Json::Arr(devices)))
             }
             ("POST", ["tasks"]) => {
-                let body = req.json()?;
+                // body may be a binary tensor envelope (model broadcast)
+                let body = req.body_json()?;
                 let spec = task_spec_from_json(&body)?;
                 let id = self.scheduler.submit(spec)?;
                 Ok(Response::json(201, &Json::obj().set("task_id", id)))
@@ -377,9 +381,13 @@ impl RestHandler {
             ("GET", ["tasks", id, "results"]) => {
                 let id = parse_id(id)?;
                 let rs = self.scheduler.results(id)?;
-                Ok(Response::ok_json(&Json::Arr(
-                    rs.iter().map(task_result_to_json).collect(),
-                )))
+                // results carry client parameter tensors: binary for
+                // clients that accept it, base64-JSON for everyone else
+                Ok(Response::negotiated(
+                    req,
+                    200,
+                    &Json::Arr(rs.iter().map(task_result_to_json).collect()),
+                ))
             }
             ("DELETE", ["tasks", id]) => {
                 let id = parse_id(id)?;
@@ -388,7 +396,7 @@ impl RestHandler {
             }
             // ------------------------- worker-side REST (batched dispatch)
             ("POST", ["worker", "register"]) => {
-                let body = req.json()?;
+                let body = req.body_json()?;
                 let name = body
                     .need("name")?
                     .as_str()
@@ -404,13 +412,13 @@ impl RestHandler {
                 Ok(Response::ok_json(&Json::obj().set("ok", true)))
             }
             ("POST", ["worker", "heartbeat"]) => {
-                let body = req.json()?;
+                let body = req.body_json()?;
                 let worker = body.need("worker")?.as_str().unwrap_or("");
                 self.scheduler.heartbeat(worker);
                 Ok(Response::ok_json(&Json::obj().set("ok", true)))
             }
             ("POST", ["worker", "poll_batch"]) => {
-                let body = req.json()?;
+                let body = req.body_json()?;
                 let worker = body.need("worker")?.as_str().unwrap_or("").to_string();
                 let max = body
                     .get("max")
@@ -424,13 +432,18 @@ impl RestHandler {
                         .counter("dart.units_dispatched")
                         .add(units.len() as u64);
                 }
-                Ok(Response::ok_json(&Json::obj().set(
-                    "units",
-                    Json::Arr(units.iter().map(work_unit_to_json).collect()),
-                )))
+                // units carry the global parameter tensors downstream
+                Ok(Response::negotiated(
+                    req,
+                    200,
+                    &Json::obj().set(
+                        "units",
+                        Json::Arr(units.iter().map(work_unit_to_json).collect()),
+                    ),
+                ))
             }
             ("POST", ["worker", "complete_batch"]) => {
-                let body = req.json()?;
+                let body = req.body_json()?;
                 let reports = body
                     .need("reports")?
                     .as_arr()
@@ -448,7 +461,7 @@ impl RestHandler {
                 Ok(Response::ok_json(&Json::obj().set("accepted", accepted)))
             }
             ("POST", ["worker", "bye"]) => {
-                let body = req.json()?;
+                let body = req.body_json()?;
                 let worker = body.need("worker")?.as_str().unwrap_or("");
                 self.scheduler.remove_worker(worker);
                 Ok(Response::ok_json(&Json::obj().set("ok", true)))

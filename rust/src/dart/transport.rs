@@ -67,17 +67,20 @@ pub fn read_frame<R: Read>(r: &mut R, key: &[u8]) -> Result<Vec<u8>> {
     Ok(payload)
 }
 
-/// Send a JSON message as one frame.
+/// Send a JSON message as one frame.  Messages carrying tensors
+/// ([`Json::Tensor`]) are framed as a binary envelope (JSON metadata +
+/// raw little-endian tensor frames, no base64); plain messages stay JSON
+/// text.  [`recv_json`] sniffs the format, so both coexist on one
+/// connection.
 pub fn send_json<W: Write>(w: &mut W, key: &[u8], j: &Json) -> Result<()> {
-    write_frame(w, key, j.to_string().as_bytes())
+    let (payload, _binary) = j.encode_body();
+    write_frame(w, key, &payload)
 }
 
-/// Receive a JSON message from one frame.
+/// Receive a JSON message from one frame (envelope or JSON text).
 pub fn recv_json<R: Read>(r: &mut R, key: &[u8]) -> Result<Json> {
     let payload = read_frame(r, key)?;
-    let s = std::str::from_utf8(&payload)
-        .map_err(|_| FedError::Transport("non-utf8 frame".into()))?;
-    Json::parse(s)
+    Json::decode_body(&payload)
 }
 
 #[cfg(test)]
@@ -123,6 +126,23 @@ mod tests {
         send_json(&mut buf, key, &j).unwrap();
         let mut r = Cursor::new(buf);
         assert_eq!(recv_json(&mut r, key).unwrap(), j);
+    }
+
+    #[test]
+    fn tensor_messages_travel_as_binary_envelopes() {
+        use crate::util::tensorbuf::TensorBuf;
+        let key = b"k";
+        let t = TensorBuf::from_f32_slice(&[1.0, f32::INFINITY, -0.0]);
+        let j = Json::obj().set("type", "result").set("params", t.clone());
+        let mut buf = Vec::new();
+        send_json(&mut buf, key, &j).unwrap();
+        // the frame payload must be the envelope, not base64 JSON text
+        let mut r = Cursor::new(buf.clone());
+        let payload = read_frame(&mut r, key).unwrap();
+        assert!(Json::is_envelope(&payload));
+        let mut r = Cursor::new(buf);
+        let back = recv_json(&mut r, key).unwrap();
+        assert_eq!(back.get("params").unwrap().as_tensor().unwrap(), &t);
     }
 
     #[test]

@@ -14,12 +14,15 @@ use crate::coordinator::aggregator::{flat_reduce_weighted, parallel_reduce_weigh
 use crate::error::{FedError, Result};
 use crate::runtime::{Engine, Tensor};
 use crate::util::pool::ThreadPool;
+use crate::util::tensorbuf::TensorBuf;
 
-/// One client's round contribution.
+/// One client's round contribution.  `params` is the received tensor
+/// buffer itself — aggregation reduces over zero-copy views of it, so a
+/// binary-path update is never re-materialized as an owned `Vec<f32>`.
 #[derive(Debug, Clone)]
 pub struct ClientUpdate {
     pub device: String,
-    pub params: Vec<f32>,
+    pub params: TensorBuf,
     /// local sample count (the FedAvg weight)
     pub n_samples: f32,
     /// mean local training loss (observability / stopping criteria)
@@ -112,8 +115,9 @@ fn reduce(
     weights: &[f32],
     pool: Option<&ThreadPool>,
 ) -> Vec<f32> {
-    // borrow parameter vectors directly — no copies on the hot path
-    let vectors: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+    // zero-copy views straight into the received buffers
+    let vectors: Vec<&[f32]> =
+        updates.iter().map(|u| u.params.as_f32_slice()).collect();
     match pool {
         // P-chunked parallel reduction; bit-identical to the flat loop
         Some(pool) => parallel_reduce_weighted(&vectors, weights, pool.worker_count()),
@@ -122,13 +126,15 @@ fn reduce(
 }
 
 fn coordinate_median(updates: &[ClientUpdate]) -> Vec<f32> {
-    let p = updates[0].params.len();
-    let k = updates.len();
+    let views: Vec<&[f32]> =
+        updates.iter().map(|u| u.params.as_f32_slice()).collect();
+    let p = views[0].len();
+    let k = views.len();
     let mut out = vec![0.0f32; p];
     let mut col = vec![0.0f32; k];
     for j in 0..p {
-        for (i, u) in updates.iter().enumerate() {
-            col[i] = u.params[j];
+        for (i, v) in views.iter().enumerate() {
+            col[i] = v[j];
         }
         col.sort_by(f32::total_cmp);
         out[j] = if k % 2 == 1 {
@@ -141,14 +147,16 @@ fn coordinate_median(updates: &[ClientUpdate]) -> Vec<f32> {
 }
 
 fn trimmed_mean(updates: &[ClientUpdate], trim: usize) -> Vec<f32> {
-    let p = updates[0].params.len();
-    let k = updates.len();
+    let views: Vec<&[f32]> =
+        updates.iter().map(|u| u.params.as_f32_slice()).collect();
+    let p = views[0].len();
+    let k = views.len();
     let keep = k - 2 * trim;
     let mut out = vec![0.0f32; p];
     let mut col = vec![0.0f32; k];
     for j in 0..p {
-        for (i, u) in updates.iter().enumerate() {
-            col[i] = u.params[j];
+        for (i, v) in views.iter().enumerate() {
+            col[i] = v[j];
         }
         col.sort_by(f32::total_cmp);
         out[j] = col[trim..k - trim].iter().sum::<f32>() / keep as f32;
@@ -187,7 +195,7 @@ pub fn hlo_fedavg(
     let mut stacked = vec![0.0f32; k * p];
     let mut w = vec![0.0f32; k];
     for (i, u) in updates.iter().enumerate() {
-        stacked[i * p..i * p + real_p].copy_from_slice(&u.params);
+        stacked[i * p..i * p + real_p].copy_from_slice(u.params.as_f32_slice());
         w[i] = weights[i];
     }
     let out = engine.execute(
@@ -209,7 +217,7 @@ mod tests {
     fn upd(device: &str, params: Vec<f32>, n: f32) -> ClientUpdate {
         ClientUpdate {
             device: device.into(),
-            params,
+            params: TensorBuf::from_f32_vec(params),
             n_samples: n,
             loss: 0.0,
             duration: 0.0,

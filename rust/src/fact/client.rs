@@ -23,8 +23,8 @@ use crate::fact::data::{ClientCorpus, ClientData};
 use crate::fact::model::LinearModel;
 use crate::json::Json;
 use crate::runtime::{Engine, Tensor};
-use crate::util::base64;
 use crate::util::rng::splitmix64;
+use crate::util::tensorbuf::TensorBuf;
 use crate::dart::TaskRegistry;
 
 /// Local data owned by one device.
@@ -137,12 +137,11 @@ impl FactClientRuntime {
             .ok_or_else(|| FedError::Fact("missing _device".into()))
     }
 
-    fn params_of(p: &Json) -> Result<Vec<f32>> {
-        base64::decode_f32(
-            p.need("params")?
-                .as_str()
-                .ok_or_else(|| FedError::Fact("params must be base64".into()))?,
-        )
+    /// Global parameters from the task dict: a binary tensor on the new
+    /// wire path, a base64 string from legacy JSON peers.
+    fn params_of(p: &Json) -> Result<TensorBuf> {
+        TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Fact(format!("bad params: {e}")))
     }
 
     /// Deterministic batch seed: device identity x round x step.
@@ -178,8 +177,11 @@ impl FactClientRuntime {
     fn fact_learn(&self, p: &Json) -> Result<Json> {
         let device = Self::device_of(p)?;
         let model = p.need("model")?.as_str().unwrap_or("").to_string();
-        let mut params = Self::params_of(p)?;
-        let global = params.clone();
+        let global_buf = Self::params_of(p)?;
+        // local SGD mutates its own copy; the read-only global (FedProx
+        // anchor) stays a zero-copy view of the received buffer
+        let mut params = global_buf.to_vec();
+        let global = global_buf.as_f32_slice();
         let lr = p.get("lr").and_then(Json::as_f64).unwrap_or(0.1) as f32;
         let mu = p.get("mu").and_then(Json::as_f64).unwrap_or(0.0) as f32;
         let steps = p.get("local_steps").and_then(Json::as_usize).unwrap_or(1).max(1);
@@ -199,7 +201,7 @@ impl FactClientRuntime {
                 let (x, y) =
                     train.sample_batch(Self::batch_seed(&device, round, s as u64), b);
                 acc += LinearModel::sgd_step(
-                    &mut params, &x, &y, dim, classes, lr, mu, &global,
+                    &mut params, &x, &y, dim, classes, lr, mu, global,
                 );
             }
             loss_sum = acc;
@@ -223,7 +225,7 @@ impl FactClientRuntime {
                                 Tensor::with_shape_i32(vec![bt], y)?,
                                 Tensor::scalar_f32(lr),
                                 Tensor::scalar_f32(mu),
-                                Tensor::vec_f32(global.clone()),
+                                Tensor::vec_f32(global.to_vec()),
                             ],
                         )?;
                         let mut it = out.into_iter();
@@ -250,7 +252,7 @@ impl FactClientRuntime {
                                 Tensor::with_shape_i32(vec![bt, s_len + 1], toks)?,
                                 Tensor::scalar_f32(lr),
                                 Tensor::scalar_f32(mu),
-                                Tensor::vec_f32(global.clone()),
+                                Tensor::vec_f32(global.to_vec()),
                             ],
                         )?;
                         let mut it = out.into_iter();
@@ -268,7 +270,7 @@ impl FactClientRuntime {
             }
         }
         Ok(Json::obj()
-            .set("params", base64::encode_f32(&params))
+            .set("params", TensorBuf::from_f32_vec(params))
             .set("n_samples", n_samples)
             .set("loss", loss_sum / steps as f32))
     }
@@ -284,8 +286,13 @@ impl FactClientRuntime {
             let LocalData::Supervised { test, .. } = local.as_ref() else {
                 return Err(FedError::Fact("linear model needs supervised data".into()));
             };
-            let (loss_sum, correct) =
-                LinearModel::evaluate(&params, &test.x, &test.y, dim, classes);
+            let (loss_sum, correct) = LinearModel::evaluate(
+                params.as_f32_slice(),
+                &test.x,
+                &test.y,
+                dim,
+                classes,
+            );
             return Ok(Json::obj()
                 .set("loss_sum", loss_sum)
                 .set("correct", correct)
@@ -303,7 +310,7 @@ impl FactClientRuntime {
                 let out = self.engine.execute(
                     &eval_entry,
                     vec![
-                        Tensor::vec_f32(params),
+                        Tensor::vec_f32(params.to_vec()),
                         Tensor::with_shape_f32(vec![be, d], x)?,
                         Tensor::with_shape_i32(vec![be], y)?,
                     ],
@@ -324,7 +331,7 @@ impl FactClientRuntime {
                 let out = self.engine.execute(
                     &eval_entry,
                     vec![
-                        Tensor::vec_f32(params),
+                        Tensor::vec_f32(params.to_vec()),
                         Tensor::with_shape_i32(vec![be, s_len + 1], toks)?,
                     ],
                 )?;
@@ -402,7 +409,7 @@ mod tests {
         assert!(u.n_samples > 0.0);
 
         let pe = m
-            .eval_params(&u.params)
+            .eval_params_buf(&u.params)
             .set("_device", names[0].as_str());
         let ev = rt.fact_evaluate(&pe).unwrap();
         assert!(ev.get("loss_sum").unwrap().as_f64().unwrap() > 0.0);
@@ -427,7 +434,7 @@ mod tests {
                 .set("_device", names[0].as_str());
             let out = rt.fact_learn(&p).unwrap();
             let u = m.parse_update(&names[0], 0.0, &out).unwrap();
-            global = u.params;
+            global = u.params.to_vec();
             first = first.or(Some(u.loss));
             last = u.loss;
         }

@@ -22,7 +22,7 @@ use crate::fact::client::FactClientRuntime;
 use crate::fact::data::ClientData;
 use crate::fact::model::{FactModel, LinearModel};
 use crate::json::Json;
-use crate::util::base64;
+use crate::util::tensorbuf::TensorBuf;
 use crate::dart::TaskRegistry;
 
 /// Server-side handle: a linear stacking head over `classes` base scores.
@@ -183,11 +183,9 @@ fn base_for(
 fn ensemble_learn(rt: &FactClientRuntime, p: &Json) -> Result<Json> {
     let (device, train, _test, classes) = device_data(rt, p)?;
     let model = p.need("model")?.as_str().unwrap_or("").to_string();
-    let mut head = base64::decode_f32(
-        p.need("params")?
-            .as_str()
-            .ok_or_else(|| FedError::Fact("params must be base64".into()))?,
-    )?;
+    let mut head = TensorBuf::from_json(p.need("params")?)
+        .map_err(|e| FedError::Fact(format!("bad ensemble params: {e}")))?
+        .to_vec();
     let global = head.clone();
     let lr = p.get("lr").and_then(Json::as_f64).unwrap_or(0.1) as f32;
     let mu = p.get("mu").and_then(Json::as_f64).unwrap_or(0.0) as f32;
@@ -208,7 +206,7 @@ fn ensemble_learn(rt: &FactClientRuntime, p: &Json) -> Result<Json> {
         );
     }
     Ok(Json::obj()
-        .set("params", base64::encode_f32(&head))
+        .set("params", TensorBuf::from_f32_vec(head))
         .set("n_samples", train.n())
         .set("loss", loss_acc / steps as f32))
 }
@@ -216,15 +214,16 @@ fn ensemble_learn(rt: &FactClientRuntime, p: &Json) -> Result<Json> {
 fn ensemble_evaluate(rt: &FactClientRuntime, p: &Json) -> Result<Json> {
     let (device, train, test, classes) = device_data(rt, p)?;
     let model = p.need("model")?.as_str().unwrap_or("").to_string();
-    let head = base64::decode_f32(
-        p.need("params")?
-            .as_str()
-            .ok_or_else(|| FedError::Fact("params must be base64".into()))?,
-    )?;
+    let head = TensorBuf::from_json(p.need("params")?)
+        .map_err(|e| FedError::Fact(format!("bad ensemble params: {e}")))?;
     let base = base_for(rt, &device, &model, &train, classes);
     let head_space = base.transform(&test);
     let (loss_sum, correct) = LinearModel::evaluate(
-        &head, &head_space.x, &head_space.y, classes, classes,
+        head.as_f32_slice(),
+        &head_space.x,
+        &head_space.y,
+        classes,
+        classes,
     );
     Ok(Json::obj()
         .set("loss_sum", loss_sum)

@@ -21,9 +21,9 @@ use crate::error::{FedError, Result};
 use crate::fact::aggregation::{Aggregation, ClientUpdate};
 use crate::json::Json;
 use crate::runtime::{Engine, Tensor};
-use crate::util::base64;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
+use crate::util::tensorbuf::TensorBuf;
 
 /// Hyperparameters carried to the clients each round.
 #[derive(Debug, Clone)]
@@ -67,32 +67,42 @@ pub trait FactModel: Send + Sync {
         Json::obj().set("model", self.name())
     }
 
-    /// parameterDict payload for one client learn call.
-    fn learn_params(&self, global: &[f32], hp: &Hyper) -> Json {
+    /// parameterDict payload for one client learn call, from a shared
+    /// tensor buffer.  The same `TensorBuf` cheap-cloned into every
+    /// client's dict means the global parameters are materialized once per
+    /// round and deduplicated on the binary wire.
+    fn learn_params_buf(&self, global: &TensorBuf, hp: &Hyper) -> Json {
         Json::obj()
             .set("model", self.name())
-            .set("params", base64::encode_f32(global))
+            .set("params", global.clone())
             .set("lr", hp.lr)
             .set("mu", hp.mu)
             .set("local_steps", hp.local_steps)
             .set("round", hp.round)
     }
 
-    /// parameterDict payload for one client evaluate call.
-    fn eval_params(&self, global: &[f32]) -> Json {
-        Json::obj()
-            .set("model", self.name())
-            .set("params", base64::encode_f32(global))
+    /// parameterDict payload for one client learn call (slice
+    /// convenience; copies into a fresh buffer).
+    fn learn_params(&self, global: &[f32], hp: &Hyper) -> Json {
+        self.learn_params_buf(&TensorBuf::from_f32_slice(global), hp)
     }
 
-    /// Decode one client learn result into an update.
+    /// parameterDict payload for one client evaluate call.
+    fn eval_params_buf(&self, global: &TensorBuf) -> Json {
+        Json::obj()
+            .set("model", self.name())
+            .set("params", global.clone())
+    }
+
+    fn eval_params(&self, global: &[f32]) -> Json {
+        self.eval_params_buf(&TensorBuf::from_f32_slice(global))
+    }
+
+    /// Decode one client learn result into an update.  Accepts both the
+    /// binary tensor form and the legacy base64 string.
     fn parse_update(&self, device: &str, duration: f64, result: &Json) -> Result<ClientUpdate> {
-        let params = base64::decode_f32(
-            result
-                .need("params")?
-                .as_str()
-                .ok_or_else(|| FedError::Fact("params must be base64 string".into()))?,
-        )?;
+        let params = TensorBuf::from_json(result.need("params")?)
+            .map_err(|e| FedError::Fact(format!("bad params from '{device}': {e}")))?;
         if params.len() != self.param_count() {
             return Err(FedError::Fact(format!(
                 "update from '{device}' has {} params, expected {}",
@@ -370,16 +380,28 @@ mod tests {
             .set("n_samples", 17)
             .set("loss", 0.5);
         let u = m.parse_update("edge", 1.5, &result).unwrap();
-        assert_eq!(u.params, global);
+        assert_eq!(u.params.to_vec(), global);
         assert_eq!(u.n_samples, 17.0);
         assert_eq!(u.duration, 1.5);
+    }
+
+    #[test]
+    fn parse_update_accepts_legacy_base64_strings() {
+        // a plain-JSON client returns base64; the fallback must decode it
+        let m = LinearModel::new(2, 2, Aggregation::WeightedFedAvg);
+        let v: Vec<f32> = (0..m.param_count()).map(|i| i as f32).collect();
+        let result = Json::obj()
+            .set("params", crate::util::base64::encode_f32(&v))
+            .set("n_samples", 3);
+        let u = m.parse_update("edge", 0.0, &result).unwrap();
+        assert_eq!(u.params.to_vec(), v);
     }
 
     #[test]
     fn parse_update_rejects_wrong_length() {
         let m = LinearModel::new(2, 2, Aggregation::FedAvg);
         let result = Json::obj()
-            .set("params", base64::encode_f32(&[1.0, 2.0]))
+            .set("params", crate::util::base64::encode_f32(&[1.0, 2.0]))
             .set("n_samples", 1);
         assert!(m.parse_update("edge", 0.0, &result).is_err());
     }

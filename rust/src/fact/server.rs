@@ -174,7 +174,9 @@ impl FactServer {
                 );
             store.save(&crate::fact::store::Snapshot {
                 model: format!("{}-c{}", cluster.model.name(), cluster.id),
-                params: cluster.params.clone(),
+                params: crate::util::tensorbuf::TensorBuf::from_f32_slice(
+                    &cluster.params,
+                ),
                 round,
                 meta,
             })?;
@@ -197,7 +199,7 @@ impl FactServer {
         let key = format!("{}-c{}", cluster.model.name(), cluster.id);
         match store.load_latest(&key)? {
             Some(snap) if snap.params.len() == cluster.params.len() => {
-                cluster.params = snap.params;
+                cluster.params = snap.params.to_vec();
                 Ok(true)
             }
             Some(_) => Err(FedError::Fact("snapshot size mismatch".into())),
@@ -328,10 +330,13 @@ impl FactServer {
     pub fn evaluate(&self) -> Result<Vec<EvalRecord>> {
         let mut out = Vec::new();
         for cluster in &self.container.clusters {
+            // one shared buffer for the whole cluster (see train_cluster)
+            let global =
+                crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
             let dict: BTreeMap<String, Json> = cluster
                 .clients
                 .iter()
-                .map(|c| (c.clone(), cluster.model.eval_params(&cluster.params)))
+                .map(|c| (c.clone(), cluster.model.eval_params_buf(&global)))
                 .collect();
             let results = self.wm.run_task(dict, "fact_evaluate", self.round_timeout)?;
             let mut loss_sum = 0.0f64;
@@ -377,10 +382,15 @@ fn train_cluster(
         let sw = Stopwatch::start();
         let hp = Hyper { round: round as u64, ..hyper.clone() };
         // Alg 5 line 3: send a training task to each client in the cluster.
+        // The global parameters are materialized into ONE shared buffer;
+        // every client's dict holds a cheap clone of it, and the binary
+        // wire encoding writes it once (envelope dedup) instead of one
+        // base64 copy per client.
+        let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
         let dict: BTreeMap<String, Json> = cluster
             .clients
             .iter()
-            .map(|c| (c.clone(), cluster.model.learn_params(&cluster.params, &hp)))
+            .map(|c| (c.clone(), cluster.model.learn_params_buf(&global, &hp)))
             .collect();
         let t_start = Instant::now();
         let results = wm.run_task(dict, "fact_learn", timeout)?;
@@ -412,7 +422,7 @@ fn train_cluster(
             updates.iter().map(|u| u.duration).sum::<f64>() / updates.len() as f64;
         cluster.loss_history.push(mean_loss);
         for u in &updates {
-            latest.insert(u.device.clone(), u.params.clone());
+            latest.insert(u.device.clone(), u.params.to_vec());
         }
         records.push(RoundRecord {
             clustering_round,

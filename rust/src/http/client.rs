@@ -70,27 +70,58 @@ impl HttpClient {
     }
 
     pub fn get(&self, path: &str) -> Result<Response> {
-        self.request("GET", path, &[])
+        self.request("GET", path, &[], &[])
     }
 
     pub fn post(&self, path: &str, body: &Json) -> Result<Response> {
-        self.request("POST", path, body.to_string().as_bytes())
+        self.request("POST", path, body.to_string().as_bytes(), &[])
     }
 
     pub fn post_bytes(&self, path: &str, body: &[u8]) -> Result<Response> {
-        self.request("POST", path, body)
+        self.request("POST", path, body, &[])
+    }
+
+    /// POST with the binary tensor negotiation: the body is an envelope
+    /// when it carries tensors (content-type
+    /// `application/x-feddart-tensor`), plain JSON otherwise, and the
+    /// `accept` header advertises that binary responses are welcome.
+    /// Decode replies with [`Response::parse_body`].
+    pub fn post_negotiated(&self, path: &str, body: &Json) -> Result<Response> {
+        let (bytes, binary) = body.encode_body();
+        let ct = if binary {
+            super::TENSOR_CONTENT_TYPE
+        } else {
+            super::JSON_CONTENT_TYPE
+        };
+        self.request(
+            "POST",
+            path,
+            &bytes,
+            &[("content-type", ct), ("accept", super::TENSOR_CONTENT_TYPE)],
+        )
+    }
+
+    /// GET advertising binary tensor responses via `accept`.
+    pub fn get_negotiated(&self, path: &str) -> Result<Response> {
+        self.request("GET", path, &[], &[("accept", super::TENSOR_CONTENT_TYPE)])
     }
 
     pub fn delete(&self, path: &str) -> Result<Response> {
-        self.request("DELETE", path, &[])
+        self.request("DELETE", path, &[], &[])
     }
 
-    fn request(&self, method: &str, path: &str, body: &[u8]) -> Result<Response> {
+    fn request(
+        &self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        extra_headers: &[(&str, &str)],
+    ) -> Result<Response> {
         let mut last_err = None;
         for attempt in 0..=self.retries {
             // a cached connection may have been closed by the server; the
             // first failure invalidates it and the retry reconnects
-            match self.request_once(method, path, body) {
+            match self.request_once(method, path, body, extra_headers) {
                 Ok(r) => return Ok(r),
                 Err(e) => {
                     last_err = Some(e);
@@ -114,7 +145,13 @@ impl HttpClient {
         Ok(stream)
     }
 
-    fn request_once(&self, method: &str, path: &str, body: &[u8]) -> Result<Response> {
+    fn request_once(
+        &self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        extra_headers: &[(&str, &str)],
+    ) -> Result<Response> {
         let mut guard = self.conn.lock().unwrap();
         let stream = match guard.take() {
             Some(s) => s,
@@ -125,6 +162,9 @@ impl HttpClient {
         headers.insert("host".to_string(), self.addr.clone());
         if let Some(k) = &self.key {
             headers.insert("x-client-key".to_string(), k.clone());
+        }
+        for (k, v) in extra_headers {
+            headers.insert(k.to_string(), v.to_string());
         }
         let result = (|| -> Result<Response> {
             write_request(&mut writer, method, path, &headers, body)?;

@@ -23,6 +23,13 @@ use crate::json::Json;
 /// shipped config fit with an order of magnitude to spare.
 pub const MAX_BODY: usize = 64 << 20;
 
+/// Content type of the binary tensor envelope (JSON metadata + raw
+/// little-endian f32 frames, see [`crate::json::Json::to_envelope`]).
+pub const TENSOR_CONTENT_TYPE: &str = "application/x-feddart-tensor";
+
+/// Content type of plain JSON bodies.
+pub const JSON_CONTENT_TYPE: &str = "application/json";
+
 /// An HTTP request (server-side view).
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -40,6 +47,35 @@ impl Request {
         let s = std::str::from_utf8(&self.body)
             .map_err(|_| FedError::Http("non-utf8 body".into()))?;
         Json::parse(s)
+    }
+
+    /// Decode the body by content type: binary tensor envelopes
+    /// (`application/x-feddart-tensor`) and plain JSON both parse into a
+    /// [`Json`] tree.  The envelope magic is also sniffed, so a client
+    /// that forgot the header still decodes.
+    pub fn body_json(&self) -> Result<Json> {
+        if self.is_tensor_body() || Json::is_envelope(&self.body) {
+            Json::from_envelope(&self.body)
+        } else {
+            self.json()
+        }
+    }
+
+    fn is_tensor_body(&self) -> bool {
+        self.headers
+            .get("content-type")
+            .map(|v| v.contains(TENSOR_CONTENT_TYPE))
+            .unwrap_or(false)
+    }
+
+    /// Whether the client advertised it understands binary tensor bodies
+    /// (`accept: application/x-feddart-tensor`).  Responses to anyone
+    /// else fall back to plain JSON with base64 parameters.
+    pub fn accepts_tensor(&self) -> bool {
+        self.headers
+            .get("accept")
+            .map(|v| v.contains(TENSOR_CONTENT_TYPE))
+            .unwrap_or(false)
     }
 
     /// Split path into segments: `/tasks/42` -> `["tasks", "42"]`.
@@ -64,13 +100,32 @@ impl Response {
     pub fn json(status: u16, j: &Json) -> Self {
         let mut r = Response::new(status);
         r.headers
-            .insert("content-type".into(), "application/json".into());
+            .insert("content-type".into(), JSON_CONTENT_TYPE.into());
         r.body = j.to_string().into_bytes();
         r
     }
 
     pub fn ok_json(j: &Json) -> Self {
         Self::json(200, j)
+    }
+
+    /// Content-negotiated response: a binary tensor envelope when the
+    /// requester accepts it *and* the payload holds tensors, else plain
+    /// JSON (tensors degrade to base64 strings automatically).  One
+    /// serialization pass either way.
+    pub fn negotiated(req: &Request, status: u16, j: &Json) -> Self {
+        if req.accepts_tensor() {
+            let (body, binary) = j.encode_body();
+            let mut r = Response::new(status);
+            r.headers.insert(
+                "content-type".into(),
+                if binary { TENSOR_CONTENT_TYPE } else { JSON_CONTENT_TYPE }.into(),
+            );
+            r.body = body;
+            r
+        } else {
+            Self::json(status, j)
+        }
     }
 
     pub fn error(status: u16, msg: &str) -> Self {
@@ -81,6 +136,11 @@ impl Response {
         let s = std::str::from_utf8(&self.body)
             .map_err(|_| FedError::Http("non-utf8 body".into()))?;
         Json::parse(s)
+    }
+
+    /// Decode a possibly-binary body (tensor envelope or JSON text).
+    pub fn parse_body(&self) -> Result<Json> {
+        Json::decode_body(&self.body)
     }
 
     fn status_text(&self) -> &'static str {

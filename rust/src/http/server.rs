@@ -3,16 +3,34 @@
 //! One handler thread per connection with keep-alive; adequate for the
 //! cross-silo regime (the paper targets 2-100 clients, §1.1) and benched in
 //! E2 up to 100 concurrent clients.
+//!
+//! The accept loop *blocks* in `accept(2)` — no polling, no idle wakeups.
+//! Shutdown stores the stop flag and then self-connects once to unblock the
+//! accept call (see [`wake_accept_loop`]).  Connection handlers are capped
+//! by a counting gate: past [`MAX_CONNECTIONS`] the accept loop applies
+//! backpressure (stops accepting) instead of spawning without bound.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::{read_request, write_response, Request, Response};
 use crate::error::Result;
+
+/// Upper bound on concurrently served connections; beyond it the accept
+/// loop blocks (TCP backlog absorbs the burst) rather than spawning
+/// unboundedly.
+pub const MAX_CONNECTIONS: usize = 512;
+
+/// Keep-alive connections idle longer than this are closed, releasing
+/// their handler slot.  Without shedding, `MAX_CONNECTIONS` idle clients
+/// would pin every permit and wedge the accept loop; clients reconnect
+/// transparently (the `HttpClient` retry path replaces a dead cached
+/// connection).
+pub const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// A request handler.  Must be cheap to share across threads.
 pub trait Handler: Send + Sync + 'static {
@@ -28,50 +46,109 @@ where
     }
 }
 
+/// Counting gate bounding concurrent connection handlers.  Shared with the
+/// DART transport listener ([`crate::dart::server::DartServer`]), which has
+/// the same unbounded-spawn problem.
+pub(crate) struct ConnGate {
+    count: Mutex<usize>,
+    cv: Condvar,
+    max: usize,
+}
+
+/// RAII permit for one connection slot: released on drop, so a panicking
+/// handler thread (unwinding drops its locals) can never leak a slot and
+/// starve the accept loop.
+pub(crate) struct ConnPermit {
+    gate: Arc<ConnGate>,
+}
+
+impl Drop for ConnPermit {
+    fn drop(&mut self) {
+        self.gate.release();
+    }
+}
+
+impl ConnGate {
+    pub(crate) fn new(max: usize) -> Arc<ConnGate> {
+        Arc::new(ConnGate { count: Mutex::new(0), cv: Condvar::new(), max: max.max(1) })
+    }
+
+    /// Block until a handler slot is free, then take it.
+    pub(crate) fn acquire(self: &Arc<Self>) -> ConnPermit {
+        let mut g = self.count.lock().unwrap();
+        while *g >= self.max {
+            g = self.cv.wait(g).unwrap();
+        }
+        *g += 1;
+        drop(g);
+        ConnPermit { gate: Arc::clone(self) }
+    }
+
+    fn release(&self) {
+        let mut g = self.count.lock().unwrap();
+        *g = g.saturating_sub(1);
+        self.cv.notify_one();
+    }
+
+    pub(crate) fn active(&self) -> usize {
+        *self.count.lock().unwrap()
+    }
+}
+
+/// Unblock a thread sitting in `accept(2)` on `addr` by connecting once.
+/// Used for graceful shutdown of blocking accept loops (here and by the
+/// DART-server's transport listener).
+pub fn wake_accept_loop(addr: SocketAddr) {
+    let _ = TcpStream::connect(addr);
+}
+
 /// Running server handle; dropping it (or calling [`HttpServer::shutdown`])
 /// stops the accept loop and joins it.
 pub struct HttpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
-    active: Arc<AtomicUsize>,
+    gate: Arc<ConnGate>,
 }
 
 impl HttpServer {
     /// Bind to `addr` (use port 0 for an ephemeral port) and start serving.
     pub fn serve(addr: &str, handler: Arc<dyn Handler>) -> Result<HttpServer> {
+        Self::serve_with_limit(addr, handler, MAX_CONNECTIONS)
+    }
+
+    /// [`HttpServer::serve`] with an explicit connection cap.
+    pub fn serve_with_limit(
+        addr: &str,
+        handler: Arc<dyn Handler>,
+        max_connections: usize,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        // Poll for stop flag with a short accept timeout.
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let active = Arc::new(AtomicUsize::new(0));
+        let gate = ConnGate::new(max_connections);
         let stop2 = Arc::clone(&stop);
-        let active2 = Arc::clone(&active);
+        let gate2 = Arc::clone(&gate);
         let accept_thread = std::thread::Builder::new()
             .name("feddart-http-accept".into())
             .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let handler = Arc::clone(&handler);
-                            let stop3 = Arc::clone(&stop2);
-                            let active3 = Arc::clone(&active2);
-                            active3.fetch_add(1, Ordering::Relaxed);
-                            std::thread::spawn(move || {
-                                let _ = serve_conn(stream, handler, stop3);
-                                active3.fetch_sub(1, Ordering::Relaxed);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => break,
+                // Blocking accept: zero CPU while idle.  shutdown() stores
+                // the stop flag and self-connects to break the block.
+                while let Ok((stream, _)) = listener.accept() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break; // the wake connection (or a late client)
                     }
+                    let permit = gate2.acquire(); // backpressure past the cap
+                    let handler = Arc::clone(&handler);
+                    let stop3 = Arc::clone(&stop2);
+                    std::thread::spawn(move || {
+                        let _permit = permit; // released on drop, even on panic
+                        let _ = serve_conn(stream, handler, stop3);
+                    });
                 }
             })
             .expect("spawn http accept loop");
-        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread), active })
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread), gate })
     }
 
     /// The bound address (with the resolved ephemeral port).
@@ -81,13 +158,14 @@ impl HttpServer {
 
     /// Number of currently open connections.
     pub fn active_connections(&self) -> usize {
-        self.active.load(Ordering::Relaxed)
+        self.gate.active()
     }
 
     /// Stop accepting and join the accept loop.
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
+            self.stop.store(true, Ordering::Relaxed);
+            wake_accept_loop(self.addr);
             let _ = t.join();
         }
     }
@@ -107,6 +185,7 @@ fn serve_conn(
     stream.set_read_timeout(Some(Duration::from_millis(500)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    let mut last_request = std::time::Instant::now();
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
@@ -115,6 +194,7 @@ fn serve_conn(
             Ok(Some(req)) => {
                 let resp = handler.handle(req);
                 write_response(&mut writer, &resp)?;
+                last_request = std::time::Instant::now();
             }
             Ok(None) => return Ok(()), // clean close
             Err(crate::error::FedError::Io(e))
@@ -123,7 +203,12 @@ fn serve_conn(
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                 ) =>
             {
-                continue; // idle keep-alive; re-check stop flag
+                // idle keep-alive: re-check the stop flag, shed the
+                // connection (and its handler slot) past the idle deadline
+                if last_request.elapsed() > IDLE_TIMEOUT {
+                    return Ok(());
+                }
+                continue;
             }
             Err(_) => return Ok(()), // malformed request: drop connection
         }
@@ -206,5 +291,70 @@ mod tests {
         let client = HttpClient::new(&addr);
         let r = client.get("/after");
         assert!(r.is_err() || r.unwrap().status != 200);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_prompt() {
+        let mut server = echo_server();
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        server.shutdown(); // second call must be a no-op
+        // with a blocking accept loop, shutdown must not wait for any
+        // poll interval — generous bound to avoid CI flakiness
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn panicking_handler_does_not_leak_a_slot() {
+        // cap of 1: if a panic leaked the permit, the second request would
+        // hang the accept loop forever
+        let server = HttpServer::serve_with_limit(
+            "127.0.0.1:0",
+            Arc::new(|req: Request| {
+                if req.path == "/boom" {
+                    panic!("handler panic");
+                }
+                Response::ok_json(&Json::obj().set("ok", true))
+            }),
+            1,
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let c1 = HttpClient::new(&addr).with_retries(0);
+        let _ = c1.get("/boom"); // connection dies mid-response
+        drop(c1);
+        let c2 = HttpClient::new(&addr);
+        let resp = c2.get("/fine").unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(server.active_connections() <= 1);
+    }
+
+    #[test]
+    fn connection_cap_applies_backpressure() {
+        // cap of 2: a third concurrent connection is not served until one
+        // of the first two closes, but all requests eventually complete
+        let server = HttpServer::serve_with_limit(
+            "127.0.0.1:0",
+            Arc::new(|_req: Request| {
+                std::thread::sleep(Duration::from_millis(30));
+                Response::ok_json(&Json::obj().set("ok", true))
+            }),
+            2,
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let client = HttpClient::new(&addr);
+                    client.get("/slow").unwrap().status
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 200);
+        }
+        assert!(server.active_connections() <= 2);
     }
 }

@@ -11,8 +11,16 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::error::{FedError, Result};
+use crate::util::tensorbuf::TensorBuf;
 
 /// A JSON value.  Objects use `BTreeMap` for deterministic serialization.
+///
+/// The extra [`Json::Tensor`] variant carries an f32 tensor by reference
+/// (cheap to clone) through the in-memory protocol.  It is *not* part of
+/// JSON: text serialization falls back to a base64 string (so any plain
+/// JSON peer interoperates), while the binary envelope format
+/// ([`Json::to_envelope`]) ships it as a raw little-endian frame.
+/// `Json::parse` never produces this variant.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -21,6 +29,7 @@ pub enum Json {
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+    Tensor(TensorBuf),
 }
 
 impl Json {
@@ -112,8 +121,26 @@ impl Json {
         }
     }
 
+    pub fn as_tensor(&self) -> Option<&TensorBuf> {
+        match self {
+            Json::Tensor(t) => Some(t),
+            _ => None,
+        }
+    }
+
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
+    }
+
+    /// Whether any [`Json::Tensor`] occurs in this tree (drives the choice
+    /// between plain-JSON and envelope wire encodings).
+    pub fn contains_tensor(&self) -> bool {
+        match self {
+            Json::Tensor(_) => true,
+            Json::Arr(v) => v.iter().any(Json::contains_tensor),
+            Json::Obj(m) => m.values().any(Json::contains_tensor),
+            _ => false,
+        }
     }
 
     // --------------------------------------------------------------- string
@@ -159,6 +186,11 @@ impl Json {
                     v.write(out);
                 }
                 out.push('}');
+            }
+            // JSON fallback: a tensor serializes as its base64 payload, so
+            // plain-JSON peers keep working (they see the legacy format)
+            Json::Tensor(t) => {
+                write_str(&crate::util::base64::encode_f32(t.as_f32_slice()), out)
             }
         }
     }
@@ -276,6 +308,229 @@ impl From<String> for Json {
 impl<T: Into<Json>> From<Vec<T>> for Json {
     fn from(v: Vec<T>) -> Json {
         Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+impl From<TensorBuf> for Json {
+    fn from(t: TensorBuf) -> Json {
+        Json::Tensor(t)
+    }
+}
+
+// ------------------------------------------------------- binary envelope
+//
+// The envelope is the binary wire encoding of a `Json` tree that may hold
+// tensors: the tree is serialized as JSON text with each tensor replaced
+// by a `{"__tensor__": i}` marker, followed by the referenced tensor
+// frames back to back.  A tensor addressed to many recipients (the same
+// `Arc` cloned into N branches) is written once and referenced N times.
+//
+// ```text
+// magic "FDTE" (4) | u32 LE tensor count | u32 LE json length |
+// json bytes | tensor frame 0 | tensor frame 1 | ...
+// ```
+
+/// Envelope magic.  `'F'` can never start a JSON document, so a body is
+/// unambiguously sniffable as envelope vs plain JSON text.
+pub const ENVELOPE_MAGIC: [u8; 4] = *b"FDTE";
+
+const TENSOR_MARKER: &str = "__tensor__";
+const TENSOR_ESCAPE: &str = "__tensor_escaped__";
+
+fn build_envelope(js: &str, tensors: &[TensorBuf]) -> Vec<u8> {
+    let frames_len: usize = tensors.iter().map(TensorBuf::frame_len).sum();
+    let mut out = Vec::with_capacity(12 + js.len() + frames_len);
+    out.extend_from_slice(&ENVELOPE_MAGIC);
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(js.len() as u32).to_le_bytes());
+    out.extend_from_slice(js.as_bytes());
+    for t in tensors {
+        out.extend_from_slice(&t.encode_frame());
+    }
+    out
+}
+
+fn restore_tensors(j: Json, tensors: &[TensorBuf]) -> Result<Json> {
+    match j {
+        Json::Obj(m) => {
+            if m.len() == 1 {
+                if let Some(idx) = m.get(TENSOR_MARKER).and_then(Json::as_usize) {
+                    let t = tensors.get(idx).ok_or_else(|| {
+                        FedError::Transport(format!(
+                            "envelope references tensor {idx} of {}",
+                            tensors.len()
+                        ))
+                    })?;
+                    return Ok(Json::Tensor(t.clone()));
+                }
+                // unwrap an escaped marker-lookalike: restore its values
+                // but do NOT reinterpret the unwrapped object itself
+                if let Some(Json::Obj(inner)) = m.get(TENSOR_ESCAPE) {
+                    let mut out = BTreeMap::new();
+                    for (k, v) in inner {
+                        out.insert(k.clone(), restore_tensors(v.clone(), tensors)?);
+                    }
+                    return Ok(Json::Obj(out));
+                }
+            }
+            let mut out = BTreeMap::new();
+            for (k, v) in m {
+                out.insert(k, restore_tensors(v, tensors)?);
+            }
+            Ok(Json::Obj(out))
+        }
+        Json::Arr(v) => Ok(Json::Arr(
+            v.into_iter()
+                .map(|e| restore_tensors(e, tensors))
+                .collect::<Result<Vec<_>>>()?,
+        )),
+        other => Ok(other),
+    }
+}
+
+impl Json {
+    /// Single-pass wire serialization: writes the marker-JSON text while
+    /// collecting referenced tensors — no intermediate cloned tree and no
+    /// separate contains-tensor pre-walk on the hot path.
+    fn write_wire(
+        &self,
+        out: &mut String,
+        tensors: &mut Vec<TensorBuf>,
+        escaped: &mut bool,
+    ) {
+        match self {
+            Json::Tensor(t) => {
+                let idx = tensors
+                    .iter()
+                    .position(|x| x.ptr_eq(t))
+                    .unwrap_or_else(|| {
+                        tensors.push(t.clone());
+                        tensors.len() - 1
+                    });
+                out.push_str("{\"");
+                out.push_str(TENSOR_MARKER);
+                out.push_str("\":");
+                out.push_str(&idx.to_string());
+                out.push('}');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    e.write_wire(out, tensors, escaped);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                // a genuine user object that *looks like* a marker (single
+                // key "__tensor__"/"__tensor_escaped__") is wrapped so the
+                // decoder cannot misread it as a tensor reference
+                let lookalike = m.len() == 1
+                    && (m.contains_key(TENSOR_MARKER)
+                        || m.contains_key(TENSOR_ESCAPE));
+                if lookalike {
+                    *escaped = true;
+                    out.push_str("{\"");
+                    out.push_str(TENSOR_ESCAPE);
+                    out.push_str("\":");
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write_wire(out, tensors, escaped);
+                }
+                out.push('}');
+                if lookalike {
+                    out.push('}');
+                }
+            }
+            other => other.write(out),
+        }
+    }
+
+    fn wire_parts(&self) -> (String, Vec<TensorBuf>, bool) {
+        let mut js = String::new();
+        let mut tensors = Vec::new();
+        let mut escaped = false;
+        self.write_wire(&mut js, &mut tensors, &mut escaped);
+        (js, tensors, escaped)
+    }
+
+    /// Serialize as a binary envelope (JSON metadata + tensor frames).
+    pub fn to_envelope(&self) -> Vec<u8> {
+        let (js, tensors, _) = self.wire_parts();
+        build_envelope(&js, &tensors)
+    }
+
+    /// Parse a binary envelope back into a tree with [`Json::Tensor`]
+    /// nodes.
+    pub fn from_envelope(bytes: &[u8]) -> Result<Json> {
+        if bytes.len() < 12 || bytes[0..4] != ENVELOPE_MAGIC {
+            return Err(FedError::Transport("not a tensor envelope".into()));
+        }
+        let ntensors =
+            u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let json_len =
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        let json_end = 12usize
+            .checked_add(json_len)
+            .filter(|&e| e <= bytes.len())
+            .ok_or_else(|| FedError::Transport("truncated envelope json".into()))?;
+        let js = std::str::from_utf8(&bytes[12..json_end])
+            .map_err(|_| FedError::Transport("non-utf8 envelope json".into()))?;
+        let tree = Json::parse(js)?;
+        // every frame is at least a header: a forged count field cannot
+        // force an allocation larger than the body could ever hold
+        let max_frames =
+            (bytes.len() - json_end) / crate::util::tensorbuf::TENSOR_HEADER_LEN;
+        if ntensors > max_frames {
+            return Err(FedError::Transport(format!(
+                "envelope claims {ntensors} tensors but body fits at most {max_frames}"
+            )));
+        }
+        let mut tensors = Vec::with_capacity(ntensors);
+        let mut off = json_end;
+        for _ in 0..ntensors {
+            let (t, used) = TensorBuf::decode_frame(&bytes[off..])?;
+            tensors.push(t);
+            off += used;
+        }
+        restore_tensors(tree, &tensors)
+    }
+
+    /// Whether a wire body is an envelope (vs plain JSON text).
+    pub fn is_envelope(bytes: &[u8]) -> bool {
+        bytes.len() >= 4 && bytes[0..4] == ENVELOPE_MAGIC
+    }
+
+    /// Encode for the wire in one pass: an envelope iff the tree holds
+    /// tensors (or marker-lookalike objects that need the envelope's
+    /// escape layer), else plain JSON text.  Returns the bytes and
+    /// whether they are binary.
+    pub fn encode_body(&self) -> (Vec<u8>, bool) {
+        let (js, tensors, escaped) = self.wire_parts();
+        if tensors.is_empty() && !escaped {
+            (js.into_bytes(), false)
+        } else {
+            (build_envelope(&js, &tensors), true)
+        }
+    }
+
+    /// Decode a wire body produced by [`Json::encode_body`] (or by any
+    /// plain-JSON peer): sniffs the envelope magic, falls back to text.
+    pub fn decode_body(bytes: &[u8]) -> Result<Json> {
+        if Self::is_envelope(bytes) {
+            Json::from_envelope(bytes)
+        } else {
+            let s = std::str::from_utf8(bytes)
+                .map_err(|_| FedError::Json("non-utf8 body".into()))?;
+            Json::parse(s)
+        }
     }
 }
 
@@ -633,6 +888,94 @@ mod tests {
         let pretty = j.to_pretty();
         assert!(pretty.contains('\n'));
         assert_eq!(Json::parse(&pretty).unwrap(), j);
+    }
+
+    #[test]
+    fn tensor_serializes_as_base64_fallback() {
+        let v = vec![1.0f32, -2.5];
+        let j = Json::obj()
+            .set("params", TensorBuf::from_f32_slice(&v))
+            .set("round", 3);
+        assert!(j.contains_tensor());
+        // text form is plain JSON a legacy peer can read
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        let s = back.get("params").unwrap().as_str().unwrap();
+        assert_eq!(crate::util::base64::decode_f32(s).unwrap(), v);
+    }
+
+    #[test]
+    fn envelope_roundtrip_preserves_tensors() {
+        let v = vec![0.5f32, f32::NAN, -0.0];
+        let t = TensorBuf::from_f32_slice(&v);
+        let j = Json::obj()
+            .set("a", t.clone())
+            .set("nested", Json::obj().set("b", t.clone()).set("x", 1))
+            .set("arr", Json::Arr(vec![Json::Tensor(t.clone()), Json::Num(2.0)]));
+        let bytes = j.to_envelope();
+        assert!(Json::is_envelope(&bytes));
+        // the shared tensor is written once (dedup): 3 references, 1 frame
+        let ntensors = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        assert_eq!(ntensors, 1);
+        let back = Json::from_envelope(&bytes).unwrap();
+        let ta = back.get("a").unwrap().as_tensor().unwrap();
+        assert_eq!(ta.len(), 3);
+        assert_eq!(ta.as_f32_slice()[1].to_bits(), f32::NAN.to_bits());
+        assert_eq!(
+            back.get("nested").unwrap().get("b").unwrap().as_tensor().unwrap(),
+            ta
+        );
+        assert!(back.get("arr").unwrap().idx(0).unwrap().as_tensor().is_some());
+    }
+
+    #[test]
+    fn marker_lookalike_objects_survive_envelope() {
+        // a user object that happens to look like a tensor marker must not
+        // be misread as a reference (or corrupted) after a round-trip
+        let lookalike = Json::obj().set("__tensor__", 0);
+        let nested_escape =
+            Json::obj().set("__tensor_escaped__", Json::obj().set("__tensor__", 7));
+        let j = Json::obj()
+            .set("user", lookalike.clone())
+            .set("deep", nested_escape.clone())
+            .set("real", TensorBuf::from_f32_slice(&[9.0]));
+        let back = Json::from_envelope(&j.to_envelope()).unwrap();
+        assert_eq!(back.get("user").unwrap(), &lookalike);
+        assert_eq!(back.get("deep").unwrap(), &nested_escape);
+        assert_eq!(
+            back.get("real").unwrap().as_tensor().unwrap().as_f32_slice(),
+            &[9.0]
+        );
+    }
+
+    #[test]
+    fn forged_tensor_count_rejected_without_allocation() {
+        // 'FDTE' + ntensors=u32::MAX + json_len=2 + '{}' must error, not
+        // attempt a multi-gigabyte Vec allocation
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&ENVELOPE_MAGIC);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(b"{}");
+        let err = Json::from_envelope(&bytes).unwrap_err();
+        assert!(err.to_string().contains("fits at most"), "{err}");
+    }
+
+    #[test]
+    fn encode_decode_body_negotiates_format() {
+        // no tensors: plain JSON text
+        let j = Json::obj().set("x", 1);
+        let (bytes, binary) = j.encode_body();
+        assert!(!binary);
+        assert_eq!(Json::decode_body(&bytes).unwrap(), j);
+        // tensors: envelope
+        let jt = Json::obj().set("p", TensorBuf::from_f32_slice(&[1.0]));
+        let (bytes, binary) = jt.encode_body();
+        assert!(binary);
+        assert_eq!(Json::decode_body(&bytes).unwrap(), jt);
+        // garbage envelope rejected
+        assert!(Json::from_envelope(b"FDTExxxx").is_err());
+        assert!(Json::from_envelope(b"{}").is_err());
     }
 
     /// Property test: random JSON trees round-trip through serialize+parse.

@@ -5,6 +5,7 @@ pub mod base64;
 pub mod hmacsha;
 pub mod pool;
 pub mod rng;
+pub mod tensorbuf;
 
 use std::time::{Duration, Instant};
 
