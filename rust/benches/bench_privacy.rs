@@ -1,0 +1,191 @@
+//! E10 — the privacy subsystem: mask-expansion throughput, masked vs
+//! clear round aggregation, and dropout-recovery cost.
+//!
+//! Three measurements, all artifact-free:
+//!
+//! 1. **Mask expansion** — HMAC-PRF expansion of pair masks at
+//!    10k / 100k / 1M params: values/s and GB/s of mask output (the
+//!    per-peer client-side cost and the per-reveal server-side cost).
+//! 2. **Masked vs clear aggregation** — one K-client round reduced with
+//!    weighted FedAvg in the clear vs lattice unmasking (`secagg`), plus
+//!    the client-side `mask_update` cost at K−1 peers.
+//! 3. **Dropout recovery** — the same masked round with 2 dropouts: the
+//!    extra cost is expanding and subtracting `survivors × dropped` pair
+//!    masks.
+//!
+//! Writes `BENCH_privacy.json` (`$BENCH_OUT` selects the directory);
+//! smoke mode (`BENCH_SMOKE=1` / `--smoke`) shrinks iteration counts and
+//! drops the 1M size for CI.
+
+use feddart::benchkit::{fmt_s, smoke, time_n, BenchReport, Table};
+use feddart::fact::aggregation::{Aggregation, ClientUpdate};
+use feddart::privacy::masking::{
+    expand_mask_into, mask_update, pair_seed, DEFAULT_FRAC_BITS,
+};
+use feddart::privacy::secagg::{unmask_aggregate, MaskedUpdate, RevealedSeed};
+use feddart::util::rng::Rng;
+use feddart::util::tensorbuf::TensorBuf;
+
+const CLIENTS: usize = 8;
+const DROPPED: usize = 2;
+const KEY: &[u8] = b"bench-cohort-key";
+const ROUND: u64 = 1;
+
+fn names() -> Vec<String> {
+    (0..CLIENTS).map(|i| format!("client-{i}")).collect()
+}
+
+fn expansion_bench(mut report: BenchReport) -> BenchReport {
+    let sizes: &[usize] =
+        if smoke() { &[10_000, 100_000] } else { &[10_000, 100_000, 1_000_000] };
+    let iters = if smoke() { 3 } else { 10 };
+    let mut t = Table::new(&["params", "expand", "Mvals/s", "GB/s"]);
+    let seed = pair_seed(KEY, ROUND, "a", "b");
+    for &n in sizes {
+        let mut out = vec![0i32; n];
+        let st = time_n(1, iters, || {
+            expand_mask_into(&seed, &mut out);
+            std::hint::black_box(&out);
+        });
+        let vals_per_s = n as f64 / st.mean;
+        let gbps = vals_per_s * 4.0 / 1e9;
+        t.row(&[
+            n.to_string(),
+            fmt_s(st.mean),
+            format!("{:.1}", vals_per_s / 1e6),
+            format!("{gbps:.3}"),
+        ]);
+        report = report
+            .set(&format!("expand_s_{n}"), st.mean)
+            .set(&format!("expand_gbps_{n}"), gbps);
+    }
+    t.print("mask expansion (HMAC-PRF, per pair seed)");
+    report
+}
+
+/// Build one round's worth of clear updates and their masked twins.
+fn build_round(n: usize) -> (Vec<ClientUpdate>, Vec<MaskedUpdate>) {
+    let ns = names();
+    let mut rng = Rng::new(7);
+    let mut clear = Vec::new();
+    let mut masked = Vec::new();
+    for (i, me) in ns.iter().enumerate() {
+        let v = rng.normal_vec(n);
+        let n_samples = 100.0 + i as f32;
+        let weight = n_samples as f64 / 128.0;
+        let peers: Vec<String> = ns.iter().filter(|p| *p != me).cloned().collect();
+        let m =
+            mask_update(&v, weight, me, &peers, KEY, ROUND, DEFAULT_FRAC_BITS)
+                .unwrap();
+        clear.push(ClientUpdate {
+            device: me.clone(),
+            params: TensorBuf::from_f32_vec(v),
+            n_samples,
+            loss: 0.0,
+            duration: 0.0,
+        });
+        masked.push(MaskedUpdate {
+            device: me.clone(),
+            params: TensorBuf::from_f32_vec(m),
+            weight,
+        });
+    }
+    (clear, masked)
+}
+
+fn round_bench(mut report: BenchReport) -> BenchReport {
+    let sizes: &[usize] = if smoke() { &[10_000] } else { &[10_000, 100_000] };
+    let iters = if smoke() { 3 } else { 10 };
+    let mut t = Table::new(&[
+        "params",
+        "mask_client",
+        "clear_agg",
+        "masked_agg",
+        "recovery",
+    ]);
+    let ns = names();
+    for &n in sizes {
+        let (clear, masked) = build_round(n);
+
+        // client-side masking cost (K-1 pair expansions + quantize)
+        let v = clear[0].params.to_vec();
+        let peers: Vec<String> = ns[1..].to_vec();
+        let mask_client = time_n(1, iters, || {
+            let m = mask_update(
+                &v, 1.0, &ns[0], &peers, KEY, ROUND, DEFAULT_FRAC_BITS,
+            )
+            .unwrap();
+            std::hint::black_box(m);
+        });
+
+        // clear weighted FedAvg over all K
+        let clear_agg = time_n(1, iters, || {
+            let out = Aggregation::WeightedFedAvg.aggregate(&clear, None).unwrap();
+            std::hint::black_box(out);
+        });
+
+        // masked aggregation, no dropouts
+        let masked_agg = time_n(1, iters, || {
+            let out = unmask_aggregate(&masked, &[], DEFAULT_FRAC_BITS).unwrap();
+            std::hint::black_box(out);
+        });
+
+        // dropout recovery: the last DROPPED clients never submitted;
+        // subtract survivors x dropped revealed masks
+        let survivors = &masked[..CLIENTS - DROPPED];
+        let revealed: Vec<RevealedSeed> = survivors
+            .iter()
+            .flat_map(|s| {
+                ns[CLIENTS - DROPPED..].iter().map(move |d| RevealedSeed {
+                    survivor: s.device.clone(),
+                    dropped: d.clone(),
+                    seed: pair_seed(KEY, ROUND, &s.device, d),
+                })
+            })
+            .collect();
+        let recovery = time_n(1, iters, || {
+            let out =
+                unmask_aggregate(survivors, &revealed, DEFAULT_FRAC_BITS).unwrap();
+            std::hint::black_box(out);
+        });
+
+        t.row(&[
+            n.to_string(),
+            fmt_s(mask_client.mean),
+            fmt_s(clear_agg.mean),
+            fmt_s(masked_agg.mean),
+            fmt_s(recovery.mean),
+        ]);
+        report = report
+            .set(&format!("mask_client_s_{n}"), mask_client.mean)
+            .set(&format!("clear_agg_s_{n}"), clear_agg.mean)
+            .set(&format!("masked_agg_s_{n}"), masked_agg.mean)
+            .set(&format!("recovery_s_{n}"), recovery.mean)
+            .set(
+                &format!("masked_over_clear_{n}"),
+                masked_agg.mean / clear_agg.mean.max(1e-12),
+            );
+    }
+    t.print(&format!(
+        "masked vs clear round (K={CLIENTS}, {DROPPED} dropouts in recovery)"
+    ));
+    report
+}
+
+fn main() {
+    println!(
+        "bench_privacy: K={CLIENTS} smoke={} (BENCH_SMOKE=1 for CI mode)",
+        smoke()
+    );
+    let mut report = BenchReport::new("privacy")
+        .set("clients", CLIENTS)
+        .set("dropped", DROPPED)
+        .set("frac_bits", DEFAULT_FRAC_BITS as usize)
+        .set("smoke", smoke());
+    report = expansion_bench(report);
+    report = round_bench(report);
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write report: {e}"),
+    }
+}

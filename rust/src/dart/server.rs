@@ -50,6 +50,10 @@ use crate::http::{Request, Response};
 use crate::json::Json;
 use crate::metrics::logserver::LogServer;
 use crate::metrics::Registry;
+use crate::privacy::secagg::{RoundRegistry, SecAggConfig};
+use crate::privacy::{round_id_from_hex, PrivacyMode};
+use crate::util::hmacsha::ct_eq;
+use crate::util::tensorbuf::TensorBuf;
 
 /// Default heartbeat timeout before a client is declared lost.
 pub const HEARTBEAT_TIMEOUT_MS: u64 = 3_000;
@@ -79,6 +83,9 @@ pub struct DartServerConfig {
     /// REST `x-client-key`
     pub rest_key: String,
     pub heartbeat_timeout_ms: u64,
+    /// Whether `/round/{id}/...` privacy rounds may be negotiated; when
+    /// false every round config request is downgraded to mode `off`.
+    pub privacy_enabled: bool,
 }
 
 impl Default for DartServerConfig {
@@ -89,6 +96,7 @@ impl Default for DartServerConfig {
             transport_key: b"feddart-demo-key".to_vec(),
             rest_key: "000".into(),
             heartbeat_timeout_ms: HEARTBEAT_TIMEOUT_MS,
+            privacy_enabled: true,
         }
     }
 }
@@ -177,6 +185,8 @@ impl DartServer {
                 scheduler: Arc::clone(&scheduler),
                 metrics: metrics.clone(),
                 key: cfg.rest_key.clone(),
+                rounds: RoundRegistry::default(),
+                privacy_enabled: cfg.privacy_enabled,
             }),
         )?;
 
@@ -328,13 +338,22 @@ struct RestHandler {
     scheduler: Arc<Scheduler>,
     metrics: Registry,
     key: String,
+    /// secure-aggregation rounds (the privacy bulletin board)
+    rounds: RoundRegistry,
+    privacy_enabled: bool,
 }
 
 impl Handler for RestHandler {
     fn handle(&self, req: Request) -> Response {
-        // authentication: the paper's client_key
-        if req.headers.get("x-client-key").map(String::as_str) != Some(self.key.as_str())
-        {
+        // authentication: the paper's client_key, compared in constant
+        // time — `==` short-circuits at the first differing byte and
+        // leaks how much of a guessed key matched through latency
+        let presented = req
+            .headers
+            .get("x-client-key")
+            .map(String::as_bytes)
+            .unwrap_or(b"");
+        if !ct_eq(presented, self.key.as_bytes()) {
             return Response::error(401, "missing or wrong x-client-key");
         }
         self.metrics.counter("rest.requests").inc();
@@ -466,6 +485,105 @@ impl RestHandler {
                 self.scheduler.remove_worker(worker);
                 Ok(Response::ok_json(&Json::obj().set("ok", true)))
             }
+            // ------------------- privacy rounds (secure-aggregation board)
+            ("POST", ["round", id, "config"]) => self.round_config(req, id),
+            ("GET", ["round", id, "config"]) => {
+                let rid = round_id_from_hex(id)?;
+                let status = self.rounds.with(rid, |r| Ok(r.status_json()))?;
+                Ok(Response::ok_json(&status))
+            }
+            ("POST", ["round", id, "seeds"]) => {
+                let rid = round_id_from_hex(id)?;
+                let body = req.body_json()?;
+                let client = need_str(&body, "client")?;
+                let nonce = need_str(&body, "nonce")?;
+                let complete = self.rounds.with(rid, |r| {
+                    r.advertise(&client, &nonce)?;
+                    Ok(r.all_advertised())
+                })?;
+                Ok(Response::ok_json(
+                    &Json::obj().set("ok", true).set("complete", complete),
+                ))
+            }
+            ("GET", ["round", id, "seeds"]) => {
+                let rid = round_id_from_hex(id)?;
+                let doc = self.rounds.with(rid, |r| {
+                    let mut nonces = Json::obj();
+                    for (c, n) in r.nonces() {
+                        nonces = nonces.set(c, n.as_str());
+                    }
+                    Ok(Json::obj()
+                        .set("nonces", nonces)
+                        .set("complete", r.all_advertised()))
+                })?;
+                Ok(Response::ok_json(&doc))
+            }
+            ("POST", ["round", id, "commit"]) => {
+                let rid = round_id_from_hex(id)?;
+                let body = req.body_json()?;
+                let client = need_str(&body, "client")?;
+                let mut commits = BTreeMap::new();
+                if let Some(obj) = body.need("commits")?.as_obj() {
+                    for (peer, c) in obj {
+                        commits.insert(
+                            peer.clone(),
+                            c.as_str().unwrap_or("").to_string(),
+                        );
+                    }
+                }
+                self.rounds.with(rid, |r| r.commit(&client, commits))?;
+                Ok(Response::ok_json(&Json::obj().set("ok", true)))
+            }
+            ("POST", ["round", id, "submit"]) => {
+                let rid = round_id_from_hex(id)?;
+                // masked updates travel as binary tensor envelopes
+                let body = req.body_json()?;
+                let client = need_str(&body, "client")?;
+                let n = body
+                    .get("n_samples")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(1.0);
+                let params = TensorBuf::from_json(body.need("params")?)
+                    .map_err(|e| FedError::Privacy(format!("bad params: {e}")))?;
+                self.rounds.with(rid, |r| r.submit(&client, params, n))?;
+                Ok(Response::ok_json(&Json::obj().set("ok", true)))
+            }
+            ("POST", ["round", id, "reveal"]) => {
+                let rid = round_id_from_hex(id)?;
+                let body = req.body_json()?;
+                let client = need_str(&body, "client")?;
+                let mut seeds = BTreeMap::new();
+                if let Some(obj) = body.need("seeds")?.as_obj() {
+                    for (dropped, s) in obj {
+                        seeds.insert(
+                            dropped.clone(),
+                            s.as_str().unwrap_or("").to_string(),
+                        );
+                    }
+                }
+                let missing = self.rounds.with(rid, |r| {
+                    r.reveal(&client, &seeds)?;
+                    Ok(r.missing_reveals().len())
+                })?;
+                Ok(Response::ok_json(
+                    &Json::obj().set("ok", true).set("missing_reveals", missing),
+                ))
+            }
+            ("GET", ["round", id, "aggregate"]) => {
+                let rid = round_id_from_hex(id)?;
+                let (agg, n, w) = self.rounds.with(rid, |r| {
+                    let agg = r.try_aggregate()?;
+                    Ok((agg, r.survivors().len(), r.total_weight()))
+                })?;
+                Ok(Response::negotiated(
+                    req,
+                    200,
+                    &Json::obj()
+                        .set("params", agg)
+                        .set("n_clients", n)
+                        .set("total_weight", w),
+                ))
+            }
             ("GET", ["metrics"]) => Ok(Response::ok_json(&self.metrics.snapshot())),
             ("GET", ["logs"]) => {
                 let n = req
@@ -481,6 +599,62 @@ impl RestHandler {
             _ => Ok(Response::error(404, "no such endpoint")),
         }
     }
+}
+
+impl RestHandler {
+    /// `POST /round/{id}/config` — negotiate a privacy round.  The client
+    /// (the aggregation component) requests a mode; the server grants it
+    /// when privacy is enabled, else downgrades to `off`.  The granted
+    /// mode in the response is authoritative — clients must run the round
+    /// at that mode, not the requested one.
+    fn round_config(&self, req: &Request, id: &str) -> Result<Response> {
+        let rid = round_id_from_hex(id)?;
+        let body = req.body_json()?;
+        let requested = PrivacyMode::parse(
+            body.get("privacy").and_then(Json::as_str).unwrap_or("off"),
+        )?;
+        let granted = if self.privacy_enabled { requested } else { PrivacyMode::Off };
+        if granted.has_secagg() {
+            let participants: Vec<String> = body
+                .need("participants")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect();
+            let defaults = SecAggConfig::default();
+            let cfg = SecAggConfig {
+                frac_bits: body
+                    .get("frac_bits")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(defaults.frac_bits as usize)
+                    as u32,
+                weighted: body
+                    .get("weighted")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(defaults.weighted),
+                weight_scale: body
+                    .get("weight_scale")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(defaults.weight_scale as f64)
+                    as f32,
+            };
+            self.rounds.create(rid, participants, cfg)?;
+        }
+        Ok(Response::json(
+            201,
+            &Json::obj()
+                .set("round_id", id)
+                .set("privacy", granted.as_str()),
+        ))
+    }
+}
+
+fn need_str(body: &Json, key: &str) -> Result<String> {
+    body.need(key)?
+        .as_str()
+        .map(String::from)
+        .ok_or_else(|| FedError::Http(format!("'{key}' must be a string")))
 }
 
 fn parse_id(s: &str) -> Result<u64> {
@@ -651,6 +825,174 @@ mod tests {
             .unwrap();
         assert_eq!(r.status, 200);
         assert!(server.scheduler().alive_workers().is_empty());
+    }
+
+    #[test]
+    fn round_config_negotiates_privacy_mode() {
+        use crate::privacy::round_id_to_hex;
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+        let rid = round_id_to_hex(7);
+        let body = Json::obj()
+            .set("privacy", "secagg")
+            .set(
+                "participants",
+                Json::Arr(vec![Json::Str("a".into()), Json::Str("b".into())]),
+            )
+            .set("weight_scale", 8.0);
+        let resp = c.post(&format!("/round/{rid}/config"), &body).unwrap();
+        assert_eq!(resp.status, 201);
+        let j = resp.parse_json().unwrap();
+        assert_eq!(j.get("privacy").unwrap().as_str(), Some("secagg"));
+        // the round exists and reports the seeds phase
+        let st = c
+            .get(&format!("/round/{rid}/config"))
+            .unwrap()
+            .parse_json()
+            .unwrap();
+        assert_eq!(st.get("phase").unwrap().as_str(), Some("seeds"));
+        // unknown mode is a 409
+        let bad = c
+            .post(
+                &format!("/round/{}/config", round_id_to_hex(8)),
+                &Json::obj().set("privacy", "tee"),
+            )
+            .unwrap();
+        assert_eq!(bad.status, 409);
+
+        // a privacy-disabled server downgrades the negotiation to off
+        let locked = DartServer::start(DartServerConfig {
+            privacy_enabled: false,
+            ..DartServerConfig::default()
+        })
+        .unwrap();
+        let c2 = HttpClient::new(&locked.rest_addr().to_string()).with_key("000");
+        let resp = c2
+            .post(&format!("/round/{}/config", round_id_to_hex(9)), &body)
+            .unwrap();
+        assert_eq!(resp.status, 201);
+        assert_eq!(
+            resp.parse_json().unwrap().get("privacy").unwrap().as_str(),
+            Some("off")
+        );
+    }
+
+    #[test]
+    fn rest_secagg_round_with_dropout_end_to_end() {
+        use crate::privacy::masking::{
+            mask_update, pair_seed, seed_commitment,
+        };
+        use crate::privacy::{round_id_to_hex, to_hex};
+
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+        let cohort_key = b"rest-cohort-key";
+        let rid_u = 4242u64;
+        let rid = round_id_to_hex(rid_u);
+        let names: Vec<String> = (0..3).map(|i| format!("edge-{i}")).collect();
+        let frac_bits = 16u32;
+
+        // negotiate the round (uniform weighting for a crisp expectation)
+        let resp = c
+            .post(
+                &format!("/round/{rid}/config"),
+                &Json::obj()
+                    .set("privacy", "secagg")
+                    .set("weighted", false)
+                    .set(
+                        "participants",
+                        Json::Arr(
+                            names.iter().map(|n| Json::Str(n.clone())).collect(),
+                        ),
+                    ),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 201);
+
+        // phase 1+2: everyone advertises and commits
+        for me in &names {
+            let r = c
+                .post(
+                    &format!("/round/{rid}/seeds"),
+                    &Json::obj().set("client", me.as_str()).set("nonce", "n"),
+                )
+                .unwrap();
+            assert_eq!(r.status, 200);
+            let mut commits = Json::obj();
+            for peer in names.iter().filter(|p| *p != me) {
+                let s = pair_seed(cohort_key, rid_u, me, peer);
+                commits = commits.set(peer, to_hex(&seed_commitment(&s)));
+            }
+            let r = c
+                .post(
+                    &format!("/round/{rid}/commit"),
+                    &Json::obj().set("client", me.as_str()).set("commits", commits),
+                )
+                .unwrap();
+            assert_eq!(r.status, 200);
+        }
+        let seeds_doc = c
+            .get(&format!("/round/{rid}/seeds"))
+            .unwrap()
+            .parse_json()
+            .unwrap();
+        assert_eq!(seeds_doc.get("complete").unwrap().as_bool(), Some(true));
+
+        // phase 3: edge-0 and edge-1 submit; edge-2 drops mid-round
+        let vecs = [vec![1.0f32, -2.0, 0.5], vec![3.0f32, 0.0, -0.5]];
+        for (i, me) in names[..2].iter().enumerate() {
+            let peers: Vec<String> =
+                names.iter().filter(|p| *p != me).cloned().collect();
+            let masked = mask_update(
+                &vecs[i], 1.0, me, &peers, cohort_key, rid_u, frac_bits,
+            )
+            .unwrap();
+            let r = c
+                .post(
+                    &format!("/round/{rid}/submit"),
+                    &Json::obj()
+                        .set("client", me.as_str())
+                        .set("n_samples", 1.0)
+                        .set(
+                            "params",
+                            crate::util::tensorbuf::TensorBuf::from_f32_vec(masked),
+                        ),
+                )
+                .unwrap();
+            assert_eq!(r.status, 200);
+        }
+
+        // aggregate is blocked until the dropout's masks are revealed
+        assert_eq!(c.get(&format!("/round/{rid}/aggregate")).unwrap().status, 409);
+
+        // phase 4: survivors reveal their pair seed with edge-2
+        for me in &names[..2] {
+            let seed = pair_seed(cohort_key, rid_u, me, &names[2]);
+            let r = c
+                .post(
+                    &format!("/round/{rid}/reveal"),
+                    &Json::obj().set("client", me.as_str()).set(
+                        "seeds",
+                        Json::obj().set(names[2].as_str(), to_hex(&seed)),
+                    ),
+                )
+                .unwrap();
+            assert_eq!(r.status, 200);
+        }
+
+        let resp = c.get(&format!("/round/{rid}/aggregate")).unwrap();
+        assert_eq!(resp.status, 200);
+        let agg = resp.parse_body().unwrap();
+        assert_eq!(agg.get("n_clients").unwrap().as_usize(), Some(2));
+        let params = crate::util::tensorbuf::TensorBuf::from_json(
+            agg.need("params").unwrap(),
+        )
+        .unwrap();
+        // mean of the two submitted (lattice-exact) vectors
+        let expect = [2.0f32, -1.0, 0.0];
+        for (a, e) in params.as_f32_slice().iter().zip(expect.iter()) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
     }
 
     #[test]

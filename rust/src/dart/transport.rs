@@ -55,13 +55,7 @@ pub fn read_frame<R: Read>(r: &mut R, key: &[u8]) -> Result<Vec<u8>> {
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
     let expect = tag(key, &payload);
-    // constant-time-ish comparison (not security-critical on this testbed,
-    // but cheap to do right)
-    let mut diff = 0u8;
-    for (a, b) in expect.iter().zip(mac_buf.iter()) {
-        diff |= a ^ b;
-    }
-    if diff != 0 {
+    if !crate::util::hmacsha::ct_eq(&expect, &mac_buf) {
         return Err(FedError::Transport("frame MAC mismatch (bad key or tampering)".into()));
     }
     Ok(payload)

@@ -33,6 +33,9 @@ pub enum FedError {
     /// FACT-level (model / aggregation / clustering) failures.
     Fact(String),
 
+    /// Privacy subsystem failures (masking, secure aggregation, DP).
+    Privacy(String),
+
     /// Underlying I/O.
     Io(std::io::Error),
 }
@@ -48,6 +51,7 @@ impl fmt::Display for FedError {
             FedError::Device(m) => write!(f, "device error: {m}"),
             FedError::Runtime(m) => write!(f, "runtime error: {m}"),
             FedError::Fact(m) => write!(f, "fact error: {m}"),
+            FedError::Privacy(m) => write!(f, "privacy error: {m}"),
             FedError::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -48,6 +48,24 @@ pub enum Aggregation {
 }
 
 impl Aggregation {
+    /// Whether this rule can run under secure aggregation.  Masked
+    /// aggregation only ever recovers the weighted *sum* of updates, so
+    /// linear rules (FedAvg / weighted / FedProx) compose with it, while
+    /// the order-statistic rules (median, trimmed mean) need the
+    /// individual updates the masking deliberately hides.
+    pub fn supports_secure_sum(&self) -> bool {
+        matches!(
+            self,
+            Aggregation::FedAvg | Aggregation::WeightedFedAvg | Aggregation::FedProx
+        )
+    }
+
+    /// Whether client contributions are weighted by sample count (decides
+    /// the client-side pre-weighting under secure aggregation).
+    pub fn is_weighted(&self) -> bool {
+        matches!(self, Aggregation::WeightedFedAvg | Aggregation::FedProx)
+    }
+
     /// Parse from a config string.
     pub fn parse(s: &str) -> Result<Aggregation> {
         match s {
@@ -238,6 +256,17 @@ mod tests {
             Aggregation::TrimmedMean { trim: 2 }
         );
         assert!(Aggregation::parse("maxpool").is_err());
+    }
+
+    #[test]
+    fn secure_sum_compatibility() {
+        assert!(Aggregation::FedAvg.supports_secure_sum());
+        assert!(Aggregation::WeightedFedAvg.supports_secure_sum());
+        assert!(Aggregation::FedProx.supports_secure_sum());
+        assert!(!Aggregation::Median.supports_secure_sum());
+        assert!(!Aggregation::TrimmedMean { trim: 1 }.supports_secure_sum());
+        assert!(!Aggregation::FedAvg.is_weighted());
+        assert!(Aggregation::WeightedFedAvg.is_weighted());
     }
 
     #[test]

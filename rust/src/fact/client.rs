@@ -48,6 +48,16 @@ pub struct FactClientRuntime {
     engine: Engine,
     data: Mutex<BTreeMap<String, Arc<LocalData>>>,
     state: Mutex<BTreeMap<String, DeviceState>>,
+    /// Cohort key for privacy-enabled rounds.  Provisioned out of band
+    /// (like the transport key) and shared among clients only — the
+    /// coordinator never holds it, which is what stops it from expanding
+    /// pair masks itself.
+    privacy_secret: Mutex<Option<Vec<u8>>>,
+    /// Client-local entropy mixed into every DP noise seed.  The seed
+    /// must not be a function of public values only (device name +
+    /// round id), or the coordinator could replay the stream and
+    /// subtract the noise, reducing dp-mode privacy to zero.
+    noise_nonce: u64,
 }
 
 impl FactClientRuntime {
@@ -56,11 +66,25 @@ impl FactClientRuntime {
             engine,
             data: Mutex::new(BTreeMap::new()),
             state: Mutex::new(BTreeMap::new()),
+            privacy_secret: Mutex::new(None),
+            noise_nonce: splitmix64(
+                std::process::id() as u64
+                    ^ std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_nanos() as u64)
+                        .unwrap_or(0),
+            ),
         })
     }
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// Install the clients' shared cohort key (required before any
+    /// `secagg` round; `dp`-only rounds work without it).
+    pub fn set_privacy_secret(&self, key: &[u8]) {
+        *self.privacy_secret.lock().unwrap() = Some(key.to_vec());
     }
 
     /// Attach a device's supervised dataset (80/20 split).
@@ -118,7 +142,8 @@ impl FactClientRuntime {
             .and_then(|s| s.base_params.get(model).cloned())
     }
 
-    /// Register `fact_init`, `fact_learn`, `fact_evaluate` on a registry.
+    /// Register `fact_init`, `fact_learn`, `fact_evaluate`, `fact_reveal`
+    /// on a registry.
     pub fn register(self: &Arc<Self>, registry: &TaskRegistry) {
         let rt = Arc::clone(self);
         registry.register("fact_init", move |p| rt.clone().fact_init(p));
@@ -126,6 +151,8 @@ impl FactClientRuntime {
         registry.register("fact_learn", move |p| rt.clone().fact_learn(p));
         let rt = Arc::clone(self);
         registry.register("fact_evaluate", move |p| rt.clone().fact_evaluate(p));
+        let rt = Arc::clone(self);
+        registry.register("fact_reveal", move |p| rt.clone().fact_reveal(p));
     }
 
     // ------------------------------------------------------------- helpers
@@ -269,10 +296,140 @@ impl FactClientRuntime {
                 }
             }
         }
+        let params_out = self.apply_privacy(&device, p, params, global, n_samples)?;
         Ok(Json::obj()
-            .set("params", TensorBuf::from_f32_vec(params))
+            .set("params", params_out)
             .set("n_samples", n_samples)
             .set("loss", loss_sum / steps as f32))
+    }
+
+    /// Apply the round's negotiated privacy transform to a finished local
+    /// update: DP clip+noise on the delta against the (public) global
+    /// parameters, then pairwise lattice masking of the weighted update.
+    /// With no `privacy` object in the task (or mode `off`) the update
+    /// passes through unchanged.
+    fn apply_privacy(
+        &self,
+        device: &str,
+        task: &Json,
+        mut params: Vec<f32>,
+        global: &[f32],
+        n_samples: f32,
+    ) -> Result<TensorBuf> {
+        use crate::privacy::{masking, PrivacyConfig, PrivacyMode};
+        let Some(pj) = task.get("privacy").filter(|j| !j.is_null()) else {
+            return Ok(TensorBuf::from_f32_vec(params));
+        };
+        let cfg = PrivacyConfig::from_json(pj)?;
+        if cfg.mode == PrivacyMode::Off {
+            return Ok(TensorBuf::from_f32_vec(params));
+        }
+        let round_id = crate::privacy::round_id_from_hex(
+            pj.get("round_id").and_then(Json::as_str).ok_or_else(|| {
+                FedError::Privacy("privacy round without round_id".into())
+            })?,
+        )?;
+        if cfg.mode.has_dp() {
+            let mut rng =
+                crate::util::rng::Rng::new(self.noise_seed(device, round_id));
+            crate::privacy::dp::privatize_update(
+                &mut params,
+                global,
+                cfg.clip_norm,
+                cfg.noise_multiplier,
+                &mut rng,
+            )?;
+        }
+        if cfg.mode.has_secagg() {
+            let key = self
+                .privacy_secret
+                .lock()
+                .unwrap()
+                .clone()
+                .ok_or_else(|| {
+                    FedError::Privacy(format!(
+                        "'{device}' has no cohort key for secagg round"
+                    ))
+                })?;
+            let participants: Vec<String> = pj
+                .need("participants")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect();
+            if !participants.iter().any(|p| p == device) {
+                return Err(FedError::Privacy(format!(
+                    "'{device}' is not in the round's participant set"
+                )));
+            }
+            let peers: Vec<String> =
+                participants.into_iter().filter(|p| p != device).collect();
+            let weighted =
+                pj.get("weighted").and_then(Json::as_bool).unwrap_or(true);
+            let weight = if weighted {
+                n_samples as f64 / cfg.weight_scale as f64
+            } else {
+                1.0
+            };
+            params = masking::mask_update(
+                &params,
+                weight,
+                device,
+                &peers,
+                &key,
+                round_id,
+                cfg.frac_bits,
+            )?;
+        }
+        Ok(TensorBuf::from_f32_vec(params))
+    }
+
+    /// Seed for one (device, round)'s DP noise stream: unique per round
+    /// (no noise reuse), but mixed with client-local entropy — and the
+    /// cohort key when one is installed — so the coordinator cannot
+    /// regenerate the stream from the public device name + round id and
+    /// subtract the noise.
+    fn noise_seed(&self, device: &str, round_id: u64) -> u64 {
+        let mut s = Self::batch_seed(device, 0, round_id) ^ self.noise_nonce;
+        if let Some(key) = self.privacy_secret.lock().unwrap().as_ref() {
+            let mac =
+                crate::util::hmacsha::hmac_sha256(key, b"feddart-dp-noise");
+            s ^= u64::from_le_bytes(mac[..8].try_into().unwrap());
+        }
+        splitmix64(s)
+    }
+
+    /// Dropout-recovery task: reveal this device's pair seeds with the
+    /// listed dropped peers so the coordinator can subtract their masks.
+    fn fact_reveal(&self, p: &Json) -> Result<Json> {
+        use crate::privacy::{masking, to_hex};
+        let device = Self::device_of(p)?;
+        let key = self
+            .privacy_secret
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| {
+                FedError::Privacy(format!("'{device}' has no cohort key to reveal"))
+            })?;
+        let round_id = crate::privacy::round_id_from_hex(
+            p.need("round_id")?
+                .as_str()
+                .ok_or_else(|| FedError::Privacy("round_id must be a string".into()))?,
+        )?;
+        let mut seeds = Json::obj();
+        for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
+            let Some(name) = d.as_str() else { continue };
+            if name == device {
+                continue;
+            }
+            seeds = seeds.set(
+                name,
+                to_hex(&masking::pair_seed(&key, round_id, &device, name)),
+            );
+        }
+        Ok(Json::obj().set("seeds", seeds))
     }
 
     fn fact_evaluate(&self, p: &Json) -> Result<Json> {

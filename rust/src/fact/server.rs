@@ -20,7 +20,11 @@ use crate::fact::stopping::{
 };
 use crate::json::Json;
 use crate::metrics::Registry;
+use crate::privacy::dp::DpAccountant;
+use crate::privacy::secagg::{unmask_aggregate, MaskedUpdate, RevealedSeed};
+use crate::privacy::{round_id_to_hex, seed_from_hex, PrivacyConfig, PrivacyMode};
 use crate::util::pool::ThreadPool;
+use crate::util::rng::splitmix64;
 use crate::util::Stopwatch;
 
 /// Per-round record (feeds EXPERIMENTS.md and the benches).
@@ -97,6 +101,14 @@ pub struct FactServer {
     pub hyper: Hyper,
     pub server_opt: ServerOpt,
     pub round_timeout: Duration,
+    /// Negotiated privacy mode + parameters for every training round.
+    pub privacy: PrivacyConfig,
+    /// (ε, δ) ledger for DP-enabled sessions; persisted with snapshots.
+    accountant: DpAccountant,
+    /// Per-process tag mixed into round ids so pair seeds never repeat
+    /// across server restarts (mask reuse across rounds would leak the
+    /// difference of two updates).
+    session_tag: u64,
     pool: Arc<ThreadPool>,
     metrics: Registry,
     history: Vec<RoundRecord>,
@@ -117,6 +129,15 @@ impl FactServer {
             hyper: Hyper::default(),
             server_opt: ServerOpt::default(),
             round_timeout: Duration::from_secs(300),
+            privacy: PrivacyConfig::default(),
+            accountant: DpAccountant::new(1.0),
+            session_tag: splitmix64(
+                std::process::id() as u64
+                    ^ std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_nanos() as u64)
+                        .unwrap_or(0),
+            ),
             pool: Arc::new(ThreadPool::default_size()),
             metrics: Registry::new(),
             history: Vec::new(),
@@ -128,6 +149,19 @@ impl FactServer {
     pub fn with_hyper(mut self, hyper: Hyper) -> FactServer {
         self.hyper = hyper;
         self
+    }
+
+    /// Enable a privacy mode for every subsequent training round.  The
+    /// accountant restarts with the configured noise multiplier.
+    pub fn with_privacy(mut self, cfg: PrivacyConfig) -> FactServer {
+        self.accountant = DpAccountant::new(cfg.noise_multiplier as f64);
+        self.privacy = cfg;
+        self
+    }
+
+    /// The DP ledger accumulated so far (all zeros for non-DP modes).
+    pub fn accountant(&self) -> &DpAccountant {
+        &self.accountant
     }
 
     pub fn with_fl_stop(mut self, s: Arc<dyn FlStoppingCriterion>) -> FactServer {
@@ -164,6 +198,20 @@ impl FactServer {
         store: &crate::fact::store::ModelStore<S>,
         round: u64,
     ) -> Result<()> {
+        // the accountant rides with every snapshot of a privacy-enabled
+        // session so a restore resumes the ε ledger
+        let privacy = if self.privacy.mode == PrivacyMode::Off {
+            Json::Null
+        } else {
+            Json::obj()
+                .set("mode", self.privacy.mode.as_str())
+                .set("accountant", self.accountant.to_json())
+                .set(
+                    "epsilon",
+                    self.accountant.epsilon(self.privacy.delta),
+                )
+                .set("delta", self.privacy.delta)
+        };
         for cluster in &self.container.clusters {
             let meta = Json::obj()
                 .set("cluster_id", cluster.id)
@@ -179,6 +227,7 @@ impl FactServer {
                 ),
                 round,
                 meta,
+                privacy: privacy.clone(),
             })?;
         }
         Ok(())
@@ -200,6 +249,15 @@ impl FactServer {
         match store.load_latest(&key)? {
             Some(snap) if snap.params.len() == cluster.params.len() => {
                 cluster.params = snap.params.to_vec();
+                // resume the DP ledger recorded with the snapshot (never
+                // backwards — a fresher in-memory ledger wins)
+                if let Some(aj) = snap.privacy.get("accountant") {
+                    if let Ok(acct) = DpAccountant::from_json(aj) {
+                        if acct.steps > self.accountant.steps {
+                            self.accountant = acct;
+                        }
+                    }
+                }
                 Ok(true)
             }
             Some(_) => Err(FedError::Fact("snapshot size mismatch".into())),
@@ -273,6 +331,20 @@ impl FactServer {
         if !self.initialized {
             return Err(FedError::Fact("server not initialized".into()));
         }
+        if self.privacy.mode.has_secagg() {
+            // masked aggregation only recovers sums — order-statistic
+            // rules (median / trimmed mean) cannot run under it, and the
+            // per-client updates clustering would need stay hidden
+            for cluster in &self.container.clusters {
+                if !cluster.model.aggregation().supports_secure_sum() {
+                    return Err(FedError::Privacy(format!(
+                        "aggregation {:?} is incompatible with secure \
+                         aggregation (only linear rules recover from sums)",
+                        cluster.model.aggregation()
+                    )));
+                }
+            }
+        }
         let mut clustering_round = 0;
         loop {
             // Alg 4 line 2: "foreach cluster ... do in parallel".
@@ -283,6 +355,8 @@ impl FactServer {
             let timeout = self.round_timeout;
             let fl_stop = Arc::clone(&self.fl_stop);
             let pool_for_agg = Arc::clone(&self.pool);
+            let privacy = self.privacy.clone();
+            let session_tag = self.session_tag;
             let outputs = self.pool.map(clusters, move |mut cluster| {
                 let r = train_cluster(
                     &wm,
@@ -293,18 +367,30 @@ impl FactServer {
                     timeout,
                     clustering_round,
                     &pool_for_agg,
+                    &privacy,
+                    session_tag,
                 );
                 (cluster, r)
             });
             let mut latest = BTreeMap::new();
             let mut restored = Vec::new();
+            let mut max_cluster_rounds = 0u64;
             for (cluster, result) in outputs {
                 let (records, updates) = result?;
+                max_cluster_rounds = max_cluster_rounds.max(records.len() as u64);
                 self.history.extend(records);
                 for (dev, params) in updates {
                     latest.insert(dev, params);
                 }
                 restored.push(cluster);
+            }
+            if self.privacy.mode.has_dp() {
+                // one accountant step per aggregation round a model ran.
+                // Clusters train in parallel on DISJOINT clients, so a
+                // client's (and each model's) privacy loss composes over
+                // its own cluster's rounds — summing records across
+                // clusters would over-count ε by the cluster count
+                self.accountant.add_steps(max_cluster_rounds);
             }
             self.container.clusters = restored;
             self.latest_updates.extend(latest);
@@ -374,6 +460,8 @@ fn train_cluster(
     timeout: Duration,
     clustering_round: usize,
     pool: &ThreadPool,
+    privacy: &PrivacyConfig,
+    session_tag: u64,
 ) -> Result<(Vec<RoundRecord>, BTreeMap<String, Vec<f32>>)> {
     let mut records = Vec::new();
     let mut latest: BTreeMap<String, Vec<f32>> = BTreeMap::new();
@@ -387,10 +475,46 @@ fn train_cluster(
         // wire encoding writes it once (envelope dedup) instead of one
         // base64 copy per client.
         let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
+        // privacy negotiation: the round's mode and a fresh round id ride
+        // in every learn task; clients transform their update accordingly
+        let privacy_round = if privacy.mode == PrivacyMode::Off {
+            None
+        } else {
+            let round_id = splitmix64(
+                session_tag
+                    ^ ((clustering_round as u64) << 42)
+                    ^ ((cluster.id as u64) << 21)
+                    ^ round as u64,
+            );
+            let mut pj = privacy
+                .to_json()
+                .set("round_id", round_id_to_hex(round_id));
+            if privacy.mode.has_secagg() {
+                pj = pj
+                    .set(
+                        "participants",
+                        Json::Arr(
+                            cluster
+                                .clients
+                                .iter()
+                                .map(|c| Json::Str(c.clone()))
+                                .collect(),
+                        ),
+                    )
+                    .set("weighted", cluster.model.aggregation().is_weighted());
+            }
+            Some((round_id, pj))
+        };
         let dict: BTreeMap<String, Json> = cluster
             .clients
             .iter()
-            .map(|c| (c.clone(), cluster.model.learn_params_buf(&global, &hp)))
+            .map(|c| {
+                let mut params = cluster.model.learn_params_buf(&global, &hp);
+                if let Some((_, pj)) = &privacy_round {
+                    params = params.set("privacy", pj.clone());
+                }
+                (c.clone(), params)
+            })
             .collect();
         let t_start = Instant::now();
         let results = wm.run_task(dict, "fact_learn", timeout)?;
@@ -410,7 +534,14 @@ fn train_cluster(
         // bit-identical results between test mode and the TCP path
         updates.sort_by(|a, b| a.device.cmp(&b.device));
         let agg_sw = Stopwatch::start();
-        let target = cluster.model.aggregate(&updates, Some(pool))?;
+        let target = if privacy.mode.has_secagg() {
+            let (round_id, _) = privacy_round.as_ref().unwrap();
+            secagg_recover_aggregate(
+                wm, cluster, &updates, *round_id, privacy, timeout,
+            )?
+        } else {
+            cluster.model.aggregate(&updates, Some(pool))?
+        };
         let mut buf = std::mem::take(&mut cluster.momentum);
         server_opt.apply(&mut cluster.params, target, &mut buf);
         cluster.momentum = buf;
@@ -421,8 +552,12 @@ fn train_cluster(
         let mean_client_s =
             updates.iter().map(|u| u.duration).sum::<f64>() / updates.len() as f64;
         cluster.loss_history.push(mean_loss);
-        for u in &updates {
-            latest.insert(u.device.clone(), u.params.to_vec());
+        if !privacy.mode.has_secagg() {
+            // under secagg the per-client vectors are masked lattice noise
+            // — recording them would feed garbage to the clustering input
+            for u in &updates {
+                latest.insert(u.device.clone(), u.params.to_vec());
+            }
         }
         records.push(RoundRecord {
             clustering_round,
@@ -445,6 +580,91 @@ fn train_cluster(
         }
     }
     Ok((records, latest))
+}
+
+/// Secure-aggregation server path for one round: every participant that
+/// answered is a survivor, everyone else in the cluster dropped mid-round.
+/// Survivors are asked (via the `fact_reveal` task) for their pair seeds
+/// with each dropped peer; the revealed masks are subtracted and the
+/// lattice sum decoded.  The coordinator never materializes an unmasked
+/// individual update — `unmask_aggregate` folds zero-copy views of the
+/// masked buffers straight into the integer accumulator.
+fn secagg_recover_aggregate(
+    wm: &WorkflowManager,
+    cluster: &crate::fact::clustering::Cluster,
+    updates: &[ClientUpdate],
+    round_id: u64,
+    privacy: &PrivacyConfig,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let weighted = cluster.model.aggregation().is_weighted();
+    let masked: Vec<MaskedUpdate> = updates
+        .iter()
+        .map(|u| MaskedUpdate {
+            device: u.device.clone(),
+            params: u.params.clone(),
+            weight: if weighted {
+                u.n_samples as f64 / privacy.weight_scale as f64
+            } else {
+                1.0
+            },
+        })
+        .collect();
+    let dropped: Vec<String> = cluster
+        .clients
+        .iter()
+        .filter(|c| !updates.iter().any(|u| &u.device == *c))
+        .cloned()
+        .collect();
+    let mut revealed: Vec<RevealedSeed> = Vec::new();
+    if !dropped.is_empty() {
+        log::info!(target: "fact::server",
+            "cluster {}: {} dropout(s) in secagg round, recovering masks",
+            cluster.id, dropped.len());
+        let dropped_json =
+            Json::Arr(dropped.iter().cloned().map(Json::Str).collect());
+        let dict: BTreeMap<String, Json> = updates
+            .iter()
+            .map(|u| {
+                (
+                    u.device.clone(),
+                    Json::obj()
+                        .set("round_id", round_id_to_hex(round_id))
+                        .set("dropped", dropped_json.clone()),
+                )
+            })
+            .collect();
+        let reveals = wm.run_task(dict, "fact_reveal", timeout)?;
+        for r in &reveals {
+            if let Some(seeds) = r.result.get("seeds").and_then(Json::as_obj) {
+                for (d, hex) in seeds {
+                    let Some(hex) = hex.as_str() else { continue };
+                    revealed.push(RevealedSeed {
+                        survivor: r.device_name.clone(),
+                        dropped: d.clone(),
+                        seed: seed_from_hex(hex)?,
+                    });
+                }
+            }
+        }
+        // every (survivor, dropped) mask must be recoverable or the
+        // aggregate would still carry uncancelled masks
+        for u in updates {
+            for d in &dropped {
+                if !revealed
+                    .iter()
+                    .any(|rv| rv.survivor == u.device && &rv.dropped == d)
+                {
+                    return Err(FedError::Privacy(format!(
+                        "survivor '{}' did not reveal its seed for dropped \
+                         '{d}' — round unrecoverable",
+                        u.device
+                    )));
+                }
+            }
+        }
+    }
+    unmask_aggregate(&masked, &revealed, privacy.frac_bits)
 }
 
 #[cfg(test)]

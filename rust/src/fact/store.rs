@@ -97,6 +97,11 @@ pub struct Snapshot {
     pub round: u64,
     /// free-form metadata (loss, accuracy, hyperparameters, ...)
     pub meta: Json,
+    /// privacy state at snapshot time (DP accountant + mode), or
+    /// `Json::Null` for clear-mode snapshots.  Persisting the accountant
+    /// with the model means a restore resumes the ε ledger instead of
+    /// silently resetting it.
+    pub privacy: Json,
 }
 
 /// Versioned model storage over any [`ObjectStore`].
@@ -127,12 +132,15 @@ impl<S: ObjectStore> ModelStore<S> {
         let crc = u32::from_le_bytes([frame[8], frame[9], frame[10], frame[11]]);
         self.store
             .put(&Self::tensor_key(&snap.model, snap.round), &frame)?;
-        let doc = Json::obj()
+        let mut doc = Json::obj()
             .set("model", snap.model.as_str())
             .set("round", snap.round)
             .set("param_count", snap.params.len())
             .set("params_crc32", crc as u64)
             .set("meta", snap.meta.clone());
+        if !snap.privacy.is_null() {
+            doc = doc.set("privacy", snap.privacy.clone());
+        }
         self.store
             .put(&Self::key(&snap.model, snap.round), doc.to_string().as_bytes())
     }
@@ -190,6 +198,7 @@ impl<S: ObjectStore> ModelStore<S> {
             params,
             round: doc.need("round")?.as_i64().unwrap_or(0) as u64,
             meta: doc.get("meta").cloned().unwrap_or(Json::Null),
+            privacy: doc.get("privacy").cloned().unwrap_or(Json::Null),
         })
     }
 
@@ -240,6 +249,7 @@ mod tests {
             params: TensorBuf::from_f32_vec(vec![1.5, -2.25, 0.0, round as f32]),
             round,
             meta: Json::obj().set("loss", 0.5),
+            privacy: Json::Null,
         }
     }
 
@@ -263,6 +273,32 @@ mod tests {
         let latest = ms.load_latest("mlp_default").unwrap().unwrap();
         assert_eq!(latest.round, 9);
         assert!(ms.load_latest("other").unwrap().is_none());
+    }
+
+    #[test]
+    fn privacy_state_roundtrips_with_snapshot() {
+        use crate::privacy::dp::DpAccountant;
+        let ms = store();
+        let mut acct = DpAccountant::new(1.2);
+        acct.add_steps(7);
+        let s = Snapshot {
+            privacy: Json::obj()
+                .set("mode", "secagg+dp")
+                .set("accountant", acct.to_json()),
+            ..snap(6)
+        };
+        ms.save(&s).unwrap();
+        let back = ms.load("mlp_default", 6).unwrap();
+        assert_eq!(
+            back.privacy.get("mode").and_then(Json::as_str),
+            Some("secagg+dp")
+        );
+        let back_acct =
+            DpAccountant::from_json(back.privacy.get("accountant").unwrap()).unwrap();
+        assert_eq!(back_acct, acct);
+        // clear snapshots stay privacy-free
+        ms.save(&snap(7)).unwrap();
+        assert!(ms.load("mlp_default", 7).unwrap().privacy.is_null());
     }
 
     #[test]

@@ -16,6 +16,9 @@
 //!   personalized FL, stopping criteria, federated data synthesis.
 //! * **[`runtime`]** — PJRT engine executing the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python never runs at request time.
+//! * **[`privacy`]** — maskable secure aggregation (pairwise lattice
+//!   masks with dropout recovery) and differential privacy (clip + noise
+//!   + accountant) for the FACT round pipeline.
 //!
 //! Substrate modules ([`json`], [`http`], [`metrics`], [`util`], [`cli`],
 //! [`config`]) replace the crates unavailable in this offline environment —
@@ -31,6 +34,7 @@ pub mod fact;
 pub mod http;
 pub mod json;
 pub mod metrics;
+pub mod privacy;
 pub mod runtime;
 pub mod util;
 

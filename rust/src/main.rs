@@ -180,6 +180,7 @@ fn cmd_server(args: &Args) -> Result<()> {
         transport_key: args.opt_or("transport-key", "feddart-demo-key").into(),
         rest_key: args.opt_or("rest-key", "000").to_string(),
         heartbeat_timeout_ms: args.opt_usize("heartbeat-ms", 3000)? as u64,
+        privacy_enabled: args.opt_or("privacy", "on") != "off",
     };
     let server = DartServer::start(cfg)?;
     println!(

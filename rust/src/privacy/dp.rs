@@ -1,0 +1,242 @@
+//! Differential privacy for client updates: per-update L2 clipping +
+//! calibrated Gaussian noise (the DP-FedAvg recipe of McMahan et al.),
+//! plus a simple moments-style accountant.
+//!
+//! The clients in this codebase return *updated parameters*, not deltas,
+//! so the DP transform operates on the update delta `params − global`
+//! (the global model is public — it was broadcast in the clear): the
+//! delta is clipped to `clip_norm` in L2, Gaussian noise with
+//! `σ = clip_norm · noise_multiplier` is added, and the client ships
+//! `global + privatized delta`.  Sensitivity of the aggregate sum to any
+//! one client is then at most `clip_norm`, which is what the accountant
+//! assumes.
+//!
+//! ## Accountant
+//!
+//! [`DpAccountant`] tracks `(steps, noise_multiplier)` per model and
+//! converts to `(ε, δ)` through Rényi differential privacy: the Gaussian
+//! mechanism with multiplier `z` satisfies RDP `(α, α / 2z²)` at every
+//! order `α > 1`; composition over `T` rounds multiplies the RDP cost by
+//! `T`; conversion takes the minimum over a grid of orders of
+//! `T·α/(2z²) + ln(1/δ)/(α−1)`.  No subsampling amplification is applied
+//! (every connected client participates in every round — the paper's
+//! cross-silo setting), so this is a conservative bound.  The state
+//! serializes to JSON and is persisted alongside model snapshots by
+//! [`crate::fact::store::ModelStore`].
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::util::rng::Rng;
+
+/// Clip `v` to L2 norm ≤ `clip` in place; returns the pre-clip norm.
+pub fn clip_l2(v: &mut [f32], clip: f32) -> f64 {
+    let norm = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    if norm > clip as f64 && norm > 0.0 {
+        let scale = (clip as f64 / norm) as f32;
+        for x in v.iter_mut() {
+            *x *= scale;
+        }
+    }
+    norm
+}
+
+/// Privatize one client update in place: clip the delta `params − global`
+/// to `clip_norm`, add `N(0, (clip_norm·noise_multiplier)²)` per
+/// coordinate, and rebase onto `global`.
+pub fn privatize_update(
+    params: &mut [f32],
+    global: &[f32],
+    clip_norm: f32,
+    noise_multiplier: f32,
+    rng: &mut Rng,
+) -> Result<()> {
+    if params.len() != global.len() {
+        return Err(FedError::Privacy(format!(
+            "update length {} != global length {}",
+            params.len(),
+            global.len()
+        )));
+    }
+    if clip_norm <= 0.0 {
+        return Err(FedError::Privacy("clip_norm must be positive".into()));
+    }
+    let mut delta: Vec<f32> =
+        params.iter().zip(global.iter()).map(|(p, g)| p - g).collect();
+    clip_l2(&mut delta, clip_norm);
+    let sigma = (clip_norm * noise_multiplier) as f64;
+    for (p, (g, d)) in params.iter_mut().zip(global.iter().zip(delta.iter())) {
+        let noise = if sigma > 0.0 { rng.normal() * sigma } else { 0.0 };
+        *p = g + d + noise as f32;
+    }
+    Ok(())
+}
+
+/// Per-model (ε, δ) accountant over composed Gaussian-mechanism rounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpAccountant {
+    /// Aggregation rounds composed so far.
+    pub steps: u64,
+    /// The noise multiplier the rounds were run with.
+    pub noise_multiplier: f64,
+}
+
+impl DpAccountant {
+    pub fn new(noise_multiplier: f64) -> DpAccountant {
+        DpAccountant { steps: 0, noise_multiplier }
+    }
+
+    /// Record `n` more aggregation rounds.
+    pub fn add_steps(&mut self, n: u64) {
+        self.steps += n;
+    }
+
+    /// The ε consumed so far at target `delta`, via RDP composition over
+    /// a grid of orders.  `f64::INFINITY` when no noise is configured.
+    pub fn epsilon(&self, delta: f64) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        if self.noise_multiplier <= 0.0 || delta <= 0.0 || delta >= 1.0 {
+            return f64::INFINITY;
+        }
+        let z2 = self.noise_multiplier * self.noise_multiplier;
+        let t = self.steps as f64;
+        let log_inv_delta = (1.0 / delta).ln();
+        let mut best = f64::INFINITY;
+        let mut alpha = 1.25f64;
+        while alpha <= 512.0 {
+            let eps = t * alpha / (2.0 * z2) + log_inv_delta / (alpha - 1.0);
+            best = best.min(eps);
+            alpha *= 1.1;
+        }
+        best
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("steps", self.steps)
+            .set("noise_multiplier", self.noise_multiplier)
+    }
+
+    pub fn from_json(j: &Json) -> Result<DpAccountant> {
+        Ok(DpAccountant {
+            steps: j
+                .get("steps")
+                .and_then(Json::as_i64)
+                .ok_or_else(|| FedError::Privacy("accountant missing steps".into()))?
+                as u64,
+            noise_multiplier: j
+                .get("noise_multiplier")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| {
+                    FedError::Privacy("accountant missing noise_multiplier".into())
+                })?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_bounds_norm_and_leaves_small_vectors() {
+        let mut v = vec![3.0f32, 4.0]; // norm 5
+        let pre = clip_l2(&mut v, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post = v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((post - 1.0).abs() < 1e-5, "post-clip norm {post}");
+        // direction preserved
+        assert!((v[0] / v[1] - 0.75).abs() < 1e-5);
+
+        let mut small = vec![0.1f32, 0.1];
+        let orig = small.clone();
+        clip_l2(&mut small, 1.0);
+        assert_eq!(small, orig);
+    }
+
+    #[test]
+    fn privatize_clips_and_noises_within_tolerance() {
+        // satellite requirement: clipping bound + empirical noise std
+        // within tolerance under a fixed seed
+        let n = 20_000;
+        let global = vec![0.0f32; n];
+        // a huge delta so the clipped direction contributes ~nothing per
+        // coordinate and the residual is almost pure noise
+        let mut params = vec![100.0f32; n];
+        let clip = 1.0f32;
+        let z = 2.0f32;
+        let mut rng = Rng::new(77);
+        privatize_update(&mut params, &global, clip, z, &mut rng).unwrap();
+
+        let clipped_coord = 1.0 / (n as f64).sqrt(); // |delta|/√n after clip
+        let mean = params.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        assert!((mean - clipped_coord).abs() < 0.05, "mean {mean}");
+        let var = params
+            .iter()
+            .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+            .sum::<f64>()
+            / n as f64;
+        let sigma = (clip * z) as f64;
+        assert!(
+            (var.sqrt() - sigma).abs() < 0.05 * sigma,
+            "std {} vs sigma {sigma}",
+            var.sqrt()
+        );
+        // determinism under a fixed seed
+        let mut again = vec![100.0f32; n];
+        privatize_update(&mut again, &global, clip, z, &mut Rng::new(77)).unwrap();
+        assert_eq!(params, again);
+    }
+
+    #[test]
+    fn privatize_validates_inputs() {
+        let mut p = vec![0.0f32; 3];
+        let g2 = vec![0.0f32; 2];
+        assert!(privatize_update(&mut p, &g2, 1.0, 1.0, &mut Rng::new(1)).is_err());
+        let g3 = vec![0.0f32; 3];
+        assert!(privatize_update(&mut p, &g3, 0.0, 1.0, &mut Rng::new(1)).is_err());
+    }
+
+    #[test]
+    fn zero_noise_multiplier_only_clips() {
+        let global = vec![0.0f32; 2];
+        let mut params = vec![3.0f32, 4.0];
+        privatize_update(&mut params, &global, 1.0, 0.0, &mut Rng::new(5)).unwrap();
+        assert!((params[0] - 0.6).abs() < 1e-6);
+        assert!((params[1] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accountant_epsilon_behaviour() {
+        let mut a = DpAccountant::new(1.0);
+        assert_eq!(a.epsilon(1e-5), 0.0);
+        a.add_steps(10);
+        let e10 = a.epsilon(1e-5);
+        a.add_steps(90);
+        let e100 = a.epsilon(1e-5);
+        assert!(e10 > 0.0 && e100 > e10, "ε must grow with steps: {e10} {e100}");
+
+        // more noise -> less ε at the same step count
+        let mut quiet = DpAccountant::new(4.0);
+        quiet.add_steps(100);
+        assert!(quiet.epsilon(1e-5) < e100);
+
+        // no noise -> unbounded
+        let mut none = DpAccountant::new(0.0);
+        none.add_steps(1);
+        assert!(none.epsilon(1e-5).is_infinite());
+
+        // sanity: z=1, T=10, δ=1e-5 should land in the single digits
+        assert!(e10 > 1.0 && e10 < 50.0, "e10 {e10}");
+    }
+
+    #[test]
+    fn accountant_json_roundtrip() {
+        let mut a = DpAccountant::new(1.5);
+        a.add_steps(42);
+        let back = DpAccountant::from_json(&a.to_json()).unwrap();
+        assert_eq!(back, a);
+        assert!(DpAccountant::from_json(&Json::obj()).is_err());
+    }
+}

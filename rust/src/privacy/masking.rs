@@ -1,0 +1,349 @@
+//! Pairwise additive masking over an exact f32 lattice.
+//!
+//! ## The lattice trick
+//!
+//! Secure aggregation needs masks that cancel *exactly* when the
+//! coordinator sums the masked updates — any floating-point rounding at
+//! mask-application time would leak into the aggregate.  Plain f32
+//! arithmetic rounds, so we restrict every value to a **lattice of dyadic
+//! rationals**: multiples of `2^-frac_bits` with integer part bounded by
+//! `2^24 / 2^frac_bits`.  Every lattice point has at most 25 significant
+//! bits, so each is exactly representable as an f32 (24-bit mantissa
+//! covers the magnitude after the sign), and the wire stays ordinary
+//! `TensorBuf` f32 — *lattice representatives* of the underlying integers.
+//!
+//! Internally all masking arithmetic runs on the integers `q = v·2^b` in
+//! `[-2^24, 2^24)` with **wrap-around** (the group `Z_{2^25}`).  Wrapping
+//! buys two things: a mask uniform over the full group is a one-time pad
+//! (perfect hiding of the masked value), and addition never leaves the
+//! exactly-representable band.  The coordinator sums masked integers in
+//! i64 (no overflow below ~2^38 clients), subtracts recovered masks of
+//! dropped peers, wraps once, and divides by the total weight.  The whole
+//! pipeline is exact integer arithmetic; the only approximation in a
+//! masked round is the initial quantization of each update to the lattice
+//! (≤ `2^-(frac_bits+1)` per coordinate per client).
+//!
+//! ## Mask expansion
+//!
+//! Pair masks are expanded chunkwise from a 32-byte pair seed with
+//! HMAC-SHA256 as the PRF: block `t` is `HMAC(seed, LE64(t))`, yielding
+//! eight 32-bit words per call, each reduced to a uniform 25-bit group
+//! element.  [`crate::util::hmacsha::HmacKey`] caches the ipad/opad
+//! midstates so expansion costs two SHA-256 compressions per 8 values.
+//!
+//! The pair seed for clients `a`, `b` in round `r` is derived from the
+//! shared cohort key (never known to the coordinator):
+//! `HMAC(cohort_key, "feddart-secagg-pair" ‖ LE64(r) ‖ lo ‖ 0x00 ‖ hi)`
+//! where `(lo, hi)` are the two names in sorted order — both ends derive
+//! the same seed with no interaction.  The client with the smaller name
+//! *adds* the mask, the larger one *subtracts* it, so the pair
+//! contributes zero to the aggregate.
+
+use crate::error::{FedError, Result};
+use crate::util::hmacsha::{sha256, HmacKey};
+
+/// Group order is `2^GROUP_BITS`; lattice integers live in `[-HALF, HALF)`.
+pub const GROUP_BITS: u32 = 25;
+
+/// Half the group order (`2^24`): the lattice integer magnitude bound.
+pub const HALF: i64 = 1 << (GROUP_BITS - 1);
+
+/// Default lattice fraction bits: step `2^-16 ≈ 1.5e-5`, representable
+/// band `±256` — room for weight-scaled updates of every in-tree model
+/// while keeping the quantization error ~1e-6 relative in the aggregate.
+pub const DEFAULT_FRAC_BITS: u32 = 16;
+
+const PAIR_LABEL: &[u8] = b"feddart-secagg-pair";
+
+/// Quantize one value to the lattice integer domain (round-to-nearest,
+/// clamped to the representable band).  Prefer [`quantize_checked`] on
+/// data paths — silent saturation corrupts a masked aggregate with no
+/// error anywhere downstream.
+#[inline]
+pub fn quantize(x: f64, frac_bits: u32) -> i64 {
+    let q = (x * (1u64 << frac_bits) as f64).round() as i64;
+    q.clamp(-HALF, HALF - 1)
+}
+
+/// [`quantize`] that rejects values outside the representable band
+/// `±2^(24-frac_bits)` instead of saturating.  A clamped coordinate is
+/// still a valid lattice point, so nothing after it would ever notice —
+/// the unmasked aggregate would just silently be wrong.
+#[inline]
+pub fn quantize_checked(x: f64, frac_bits: u32) -> Result<i64> {
+    let q = (x * (1u64 << frac_bits) as f64).round() as i64;
+    if !(-HALF..HALF).contains(&q) {
+        return Err(FedError::Privacy(format!(
+            "value {x} exceeds the lattice band ±{} (frac_bits {frac_bits}) — \
+             raise weight_scale or lower frac_bits",
+            (HALF as f64) / (1u64 << frac_bits) as f64
+        )));
+    }
+    Ok(q)
+}
+
+/// The f32 lattice representative of integer `q` (exact for `|q| ≤ 2^24`).
+#[inline]
+pub fn dequantize(q: i64, frac_bits: u32) -> f32 {
+    debug_assert!((-HALF..=HALF).contains(&q));
+    (q as f64 / (1u64 << frac_bits) as f64) as f32
+}
+
+/// Recover the lattice integer behind an f32 representative.  Exact for
+/// values produced by [`dequantize`]; rejects off-lattice inputs (a
+/// malformed or non-lattice submission).
+#[inline]
+pub fn requantize(y: f32, frac_bits: u32) -> Result<i64> {
+    let scaled = y as f64 * (1u64 << frac_bits) as f64;
+    let q = scaled.round();
+    if (scaled - q).abs() > 1e-6 || !(-(HALF as f64)..=HALF as f64).contains(&q) {
+        return Err(FedError::Privacy(format!(
+            "value {y} is not a lattice representative (frac_bits {frac_bits})"
+        )));
+    }
+    Ok(q as i64)
+}
+
+/// Wrap a lattice integer into the centered range `[-HALF, HALF)`.
+#[inline]
+pub fn wrap(v: i64) -> i64 {
+    (v + HALF).rem_euclid(1 << GROUP_BITS) - HALF
+}
+
+/// Mask sign for the (me, peer) pair: the lexicographically smaller name
+/// adds, the larger subtracts.  `me` and `peer` must differ.
+#[inline]
+pub fn pair_sign(me: &str, peer: &str) -> i64 {
+    debug_assert_ne!(me, peer);
+    if me < peer {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Derive the pair seed shared by clients `a` and `b` for `round_id`.
+/// Symmetric in `(a, b)`; requires the cohort key both clients hold.
+pub fn pair_seed(cohort_key: &[u8], round_id: u64, a: &str, b: &str) -> [u8; 32] {
+    let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+    let mut msg =
+        Vec::with_capacity(PAIR_LABEL.len() + 8 + lo.len() + 1 + hi.len());
+    msg.extend_from_slice(PAIR_LABEL);
+    msg.extend_from_slice(&round_id.to_le_bytes());
+    msg.extend_from_slice(lo.as_bytes());
+    msg.push(0); // unambiguous name separator (names are UTF-8, no NUL)
+    msg.extend_from_slice(hi.as_bytes());
+    HmacKey::new(cohort_key).mac(&msg)
+}
+
+/// Commitment to one pair seed: `SHA-256(seed)`.  Published during the
+/// commit phase so a later dropout reveal can be checked byte-for-byte.
+pub fn seed_commitment(seed: &[u8; 32]) -> [u8; 32] {
+    sha256(seed)
+}
+
+/// Expand `out.len()` uniform group elements from `seed` (chunkwise
+/// HMAC-PRF, counter mode).  Deterministic; i32 holds the full `±2^24`
+/// range.
+pub fn expand_mask_into(seed: &[u8; 32], out: &mut [i32]) {
+    let key = HmacKey::new(seed);
+    let mut filled = 0usize;
+    let mut block: u64 = 0;
+    while filled < out.len() {
+        let digest = key.mac(&block.to_le_bytes());
+        for chunk in digest.chunks_exact(4) {
+            if filled == out.len() {
+                break;
+            }
+            let u = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            out[filled] = ((u & ((1 << GROUP_BITS) - 1)) as i64 - HALF) as i32;
+            filled += 1;
+        }
+        block += 1;
+    }
+}
+
+/// Allocating convenience over [`expand_mask_into`].
+pub fn expand_mask(seed: &[u8; 32], n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; n];
+    expand_mask_into(seed, &mut out);
+    out
+}
+
+/// Mask one client's weighted update for a secure-aggregation round.
+///
+/// Quantizes `weight · x` to the lattice, adds the signed pair mask for
+/// every peer, wraps, and returns the f32 lattice representatives ready
+/// for the wire.  The coordinator recovers `Σ weightᵢ·xᵢ` from the sum of
+/// these vectors (see [`super::secagg::unmask_aggregate`]) but learns
+/// nothing about an individual `x`.
+pub fn mask_update(
+    x: &[f32],
+    weight: f64,
+    me: &str,
+    peers: &[String],
+    cohort_key: &[u8],
+    round_id: u64,
+    frac_bits: u32,
+) -> Result<Vec<f32>> {
+    if peers.iter().any(|p| p == me) {
+        return Err(FedError::Privacy(format!(
+            "client '{me}' cannot be its own masking peer"
+        )));
+    }
+    let mut q: Vec<i64> = x
+        .iter()
+        .map(|&v| quantize_checked(v as f64 * weight, frac_bits))
+        .collect::<Result<_>>()?;
+    let mut mask = vec![0i32; x.len()];
+    for peer in peers {
+        let seed = pair_seed(cohort_key, round_id, me, peer);
+        expand_mask_into(&seed, &mut mask);
+        let sign = pair_sign(me, peer);
+        for (qi, &mi) in q.iter_mut().zip(mask.iter()) {
+            *qi = wrap(*qi + sign * mi as i64);
+        }
+    }
+    Ok(q.into_iter().map(|qi| dequantize(qi, frac_bits)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const KEY: &[u8] = b"cohort-secret";
+
+    #[test]
+    fn lattice_roundtrip_is_exact() {
+        for b in [12u32, 16, 18] {
+            for q in [-HALF, -HALF + 1, -1, 0, 1, 12345, HALF - 1] {
+                let y = dequantize(q, b);
+                assert_eq!(requantize(y, b).unwrap(), q, "q={q} b={b}");
+            }
+        }
+        // off-lattice values are rejected
+        assert!(requantize(0.3, 2).is_err());
+    }
+
+    #[test]
+    fn quantize_rounds_and_clamps() {
+        assert_eq!(quantize(0.0, 16), 0);
+        assert_eq!(quantize(1.0, 16), 1 << 16);
+        assert_eq!(quantize(1e12, 16), HALF - 1);
+        assert_eq!(quantize(-1e12, 16), -HALF);
+        // round-to-nearest at half a step
+        assert_eq!(quantize(1.5 / 65536.0, 16), 2);
+    }
+
+    #[test]
+    fn wrap_centers_into_group() {
+        assert_eq!(wrap(0), 0);
+        assert_eq!(wrap(HALF), -HALF);
+        assert_eq!(wrap(-HALF - 1), HALF - 1);
+        assert_eq!(wrap(HALF - 1), HALF - 1);
+        let g = 1i64 << GROUP_BITS;
+        assert_eq!(wrap(3 * g + 17), 17);
+        assert_eq!(wrap(-3 * g - 17), -17);
+    }
+
+    #[test]
+    fn pair_seed_symmetric_and_round_scoped() {
+        let ab = pair_seed(KEY, 7, "alice", "bob");
+        assert_eq!(ab, pair_seed(KEY, 7, "bob", "alice"));
+        assert_ne!(ab, pair_seed(KEY, 8, "alice", "bob"));
+        assert_ne!(ab, pair_seed(KEY, 7, "alice", "carol"));
+        assert_ne!(ab, pair_seed(b"other-key", 7, "alice", "bob"));
+        // the NUL separator keeps concatenated names unambiguous
+        assert_ne!(
+            pair_seed(KEY, 7, "ab", "c"),
+            pair_seed(KEY, 7, "a", "bc")
+        );
+    }
+
+    #[test]
+    fn expansion_deterministic_and_in_range() {
+        let seed = pair_seed(KEY, 1, "a", "b");
+        let m1 = expand_mask(&seed, 1000);
+        let m2 = expand_mask(&seed, 1000);
+        assert_eq!(m1, m2);
+        assert!(m1.iter().all(|&v| (-(HALF as i32)..HALF as i32).contains(&v)));
+        // a prefix expansion matches (counter mode)
+        assert_eq!(&expand_mask(&seed, 10)[..], &m1[..10]);
+        // crude uniformity: mean near zero relative to the range
+        let mean: f64 = m1.iter().map(|&v| v as f64).sum::<f64>() / 1000.0;
+        assert!(mean.abs() < HALF as f64 * 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn masks_cancel_exactly_in_the_lattice_sum() {
+        // K clients, all survive: the wrapped sum of masked lattice ints
+        // must equal the wrapped sum of the clear quantized ints EXACTLY.
+        let names: Vec<String> = (0..6).map(|i| format!("client-{i}")).collect();
+        let mut rng = Rng::new(3);
+        let p = 257; // odd length crosses PRF block boundaries
+        let b = DEFAULT_FRAC_BITS;
+        let clear: Vec<Vec<f32>> =
+            (0..names.len()).map(|_| rng.normal_vec(p)).collect();
+
+        let mut masked_sum = vec![0i64; p];
+        let mut clear_sum = vec![0i64; p];
+        for (i, me) in names.iter().enumerate() {
+            let peers: Vec<String> =
+                names.iter().filter(|n| *n != me).cloned().collect();
+            let masked =
+                mask_update(&clear[i], 1.0, me, &peers, KEY, 42, b).unwrap();
+            for j in 0..p {
+                masked_sum[j] += requantize(masked[j], b).unwrap();
+                clear_sum[j] += quantize(clear[i][j] as f64, b);
+            }
+        }
+        for j in 0..p {
+            assert_eq!(wrap(masked_sum[j]), wrap(clear_sum[j]), "coord {j}");
+        }
+    }
+
+    #[test]
+    fn masked_vector_is_on_lattice_and_unlike_input() {
+        let x = vec![0.5f32; 64];
+        let peers = vec!["b".to_string(), "c".to_string()];
+        let y = mask_update(&x, 1.0, "a", &peers, KEY, 9, 16).unwrap();
+        let mut moved = 0;
+        for &v in &y {
+            requantize(v, 16).unwrap(); // every output is a lattice point
+            if (v - 0.5).abs() > 1.0 {
+                moved += 1;
+            }
+        }
+        // masks are group-wide uniform: almost every coordinate moves far
+        assert!(moved > 48, "only {moved}/64 coordinates moved");
+    }
+
+    #[test]
+    fn self_peer_rejected() {
+        let x = vec![0.0f32; 4];
+        let peers = vec!["a".to_string()];
+        assert!(mask_update(&x, 1.0, "a", &peers, KEY, 1, 16).is_err());
+    }
+
+    #[test]
+    fn out_of_band_values_rejected_not_clamped() {
+        // an unscaled sample-count weight (the weight_scale footgun) must
+        // fail loudly, not saturate into a silently-wrong aggregate
+        let x = vec![1.0f32; 4];
+        let peers = vec!["b".to_string()];
+        let err = mask_update(&x, 1000.0, "a", &peers, KEY, 1, 16).unwrap_err();
+        assert!(err.to_string().contains("weight_scale"), "{err}");
+        assert!(quantize_checked(255.9, 16).is_ok());
+        assert!(quantize_checked(256.1, 16).is_err());
+        assert!(quantize_checked(-300.0, 16).is_err());
+    }
+
+    #[test]
+    fn commitment_binds_seed() {
+        let s1 = pair_seed(KEY, 1, "a", "b");
+        let s2 = pair_seed(KEY, 1, "a", "c");
+        assert_eq!(seed_commitment(&s1), seed_commitment(&s1));
+        assert_ne!(seed_commitment(&s1), seed_commitment(&s2));
+    }
+}

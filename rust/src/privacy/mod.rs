@@ -1,0 +1,297 @@
+//! Privacy subsystem: maskable secure aggregation + differential privacy
+//! for the FACT round pipeline.
+//!
+//! The paper pitches Fed-DART/FACT as FL *in production* — "helping the
+//! user to fully leverage the potential of their private and decentralized
+//! data" — yet the plain round pipeline ships every client's updated
+//! parameters to the coordinator in the clear.  This module closes that
+//! gap with the two standard mitigations (Yang et al., *Federated Machine
+//! Learning: Concept and Applications*; Nguyen et al., *Federated Learning
+//! for Industrial IoT*):
+//!
+//! * [`masking`] — pairwise additive masks on an exact f32 lattice, the
+//!   masked-aggregation shape of xaynet/Bonawitz et al.: the coordinator
+//!   only ever sees masked per-client vectors, and the masks cancel
+//!   *exactly* in the aggregate sum.
+//! * [`dp`] — per-update L2 clipping + calibrated Gaussian noise on the
+//!   client, with a simple moments-style accountant reporting (ε, δ).
+//! * [`secagg`] — the server-side round state machine (seed advertisement,
+//!   mask commitment, masked-update submit, dropout recovery by seed
+//!   reveal) driving the DART REST `/round/{id}/...` endpoints and the
+//!   in-process FACT pipeline.
+//!
+//! ## Threat model (testbed honest-but-curious)
+//!
+//! The coordinator is honest-but-curious: it follows the protocol but may
+//! inspect everything it receives.  Clients share a *cohort key* that is
+//! provisioned out of band (alongside the DART transport key) and never
+//! crosses the coordinator, so the coordinator cannot expand any pair
+//! mask on its own.  What each mode guarantees:
+//!
+//! * `dp` — every individual update is clipped and noised before upload;
+//!   the coordinator sees noisy updates and the accountant bounds the
+//!   cumulative leakage.
+//! * `secagg` — the coordinator sees only lattice-masked vectors (each a
+//!   one-time-pad over the wrap-around lattice group) plus clear sample
+//!   counts and losses; it learns the *aggregate* but no individual
+//!   update, unless it colludes with every other participant of a pair.
+//! * `secagg+dp` — both: the aggregate itself also carries DP noise.
+//!
+//! Known simplifications, recorded in ROADMAP follow-ups: pair seeds are
+//! derived from the shared cohort key (a compromised client reveals every
+//! pair it participates in — Shamir seed shares fix this), the dropout
+//! reveal trusts survivors (commitments catch inconsistent reveals but
+//! not collusion), and the Gaussian noise uses the deterministic testbed
+//! [`crate::util::rng::Rng`] rather than an OS CSPRNG.
+
+pub mod dp;
+pub mod masking;
+pub mod secagg;
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+
+/// The negotiated privacy mode of a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrivacyMode {
+    /// Clear updates (the original pipeline).
+    Off,
+    /// Per-update clipping + Gaussian noise on the client.
+    Dp,
+    /// Pairwise-masked secure aggregation.
+    SecAgg,
+    /// Both: masked aggregation over clipped+noised updates.
+    SecAggDp,
+}
+
+impl PrivacyMode {
+    /// Parse the wire string (`off | dp | secagg | secagg+dp`).
+    pub fn parse(s: &str) -> Result<PrivacyMode> {
+        match s {
+            "off" => Ok(PrivacyMode::Off),
+            "dp" => Ok(PrivacyMode::Dp),
+            "secagg" => Ok(PrivacyMode::SecAgg),
+            "secagg+dp" => Ok(PrivacyMode::SecAggDp),
+            other => Err(FedError::Privacy(format!("unknown privacy mode '{other}'"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PrivacyMode::Off => "off",
+            PrivacyMode::Dp => "dp",
+            PrivacyMode::SecAgg => "secagg",
+            PrivacyMode::SecAggDp => "secagg+dp",
+        }
+    }
+
+    /// Does this mode clip + noise individual updates?
+    pub fn has_dp(&self) -> bool {
+        matches!(self, PrivacyMode::Dp | PrivacyMode::SecAggDp)
+    }
+
+    /// Does this mode mask individual updates?
+    pub fn has_secagg(&self) -> bool {
+        matches!(self, PrivacyMode::SecAgg | PrivacyMode::SecAggDp)
+    }
+}
+
+impl std::fmt::Display for PrivacyMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Server-side privacy configuration for a FACT training session; the
+/// non-secret fields travel to the clients inside each learn task's
+/// `privacy` object.
+#[derive(Debug, Clone)]
+pub struct PrivacyConfig {
+    pub mode: PrivacyMode,
+    /// DP: L2 clipping bound on the update delta (params − global).
+    pub clip_norm: f32,
+    /// DP: noise multiplier z; per-round Gaussian std = `clip_norm * z`.
+    pub noise_multiplier: f32,
+    /// DP: target δ for ε reporting.
+    pub delta: f64,
+    /// SecAgg: clients submit `(n_samples / weight_scale) · params`, so
+    /// the per-coordinate magnitude stays inside the exact lattice band
+    /// (see [`masking`]).  Pick ≈ the typical per-client sample count.
+    pub weight_scale: f32,
+    /// SecAgg: lattice fraction bits (quantization step `2^-frac_bits`).
+    pub frac_bits: u32,
+}
+
+impl Default for PrivacyConfig {
+    fn default() -> Self {
+        PrivacyConfig {
+            mode: PrivacyMode::Off,
+            clip_norm: 1.0,
+            noise_multiplier: 1.0,
+            delta: 1e-5,
+            weight_scale: 1.0,
+            frac_bits: masking::DEFAULT_FRAC_BITS,
+        }
+    }
+}
+
+impl PrivacyConfig {
+    pub fn with_mode(mode: PrivacyMode) -> PrivacyConfig {
+        PrivacyConfig { mode, ..Default::default() }
+    }
+
+    /// Serialize the shareable fields (everything here is public — the
+    /// cohort key never appears).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("mode", self.mode.as_str())
+            .set("clip_norm", self.clip_norm)
+            .set("noise_multiplier", self.noise_multiplier)
+            .set("delta", self.delta)
+            .set("weight_scale", self.weight_scale)
+            .set("frac_bits", self.frac_bits as usize)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PrivacyConfig> {
+        let d = PrivacyConfig::default();
+        Ok(PrivacyConfig {
+            mode: PrivacyMode::parse(
+                j.get("mode").and_then(Json::as_str).unwrap_or("off"),
+            )?,
+            clip_norm: j
+                .get("clip_norm")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.clip_norm as f64) as f32,
+            noise_multiplier: j
+                .get("noise_multiplier")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.noise_multiplier as f64) as f32,
+            delta: j.get("delta").and_then(Json::as_f64).unwrap_or(d.delta),
+            weight_scale: j
+                .get("weight_scale")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.weight_scale as f64) as f32,
+            frac_bits: j
+                .get("frac_bits")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.frac_bits as usize) as u32,
+        })
+    }
+}
+
+/// Lowercase hex encoding (seeds, commitments, round ids on the wire —
+/// JSON numbers are f64 and cannot carry 64-bit ids exactly).
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Decode lowercase/uppercase hex.
+pub fn from_hex(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(FedError::Privacy("odd-length hex string".into()));
+    }
+    let bytes = s.as_bytes();
+    let nib = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(FedError::Privacy(format!("bad hex byte '{}'", c as char))),
+        }
+    };
+    (0..s.len() / 2)
+        .map(|i| Ok(nib(bytes[2 * i])? << 4 | nib(bytes[2 * i + 1])?))
+        .collect()
+}
+
+/// Parse a 32-byte pair seed from its hex wire form.
+pub fn seed_from_hex(s: &str) -> Result<[u8; 32]> {
+    let b = from_hex(s)?;
+    if b.len() != 32 {
+        return Err(FedError::Privacy(format!(
+            "pair seed must be 32 bytes, got {}",
+            b.len()
+        )));
+    }
+    let mut seed = [0u8; 32];
+    seed.copy_from_slice(&b);
+    Ok(seed)
+}
+
+/// Encode a 64-bit round id as hex (see [`to_hex`] for why not a number).
+pub fn round_id_to_hex(id: u64) -> String {
+    to_hex(&id.to_be_bytes())
+}
+
+pub fn round_id_from_hex(s: &str) -> Result<u64> {
+    let b = from_hex(s)?;
+    if b.len() != 8 {
+        return Err(FedError::Privacy(format!("bad round id '{s}'")));
+    }
+    Ok(u64::from_be_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [
+            PrivacyMode::Off,
+            PrivacyMode::Dp,
+            PrivacyMode::SecAgg,
+            PrivacyMode::SecAggDp,
+        ] {
+            assert_eq!(PrivacyMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(PrivacyMode::parse("tee").is_err());
+        assert!(PrivacyMode::Dp.has_dp() && !PrivacyMode::Dp.has_secagg());
+        assert!(PrivacyMode::SecAgg.has_secagg() && !PrivacyMode::SecAgg.has_dp());
+        assert!(PrivacyMode::SecAggDp.has_dp() && PrivacyMode::SecAggDp.has_secagg());
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = PrivacyConfig {
+            mode: PrivacyMode::SecAggDp,
+            clip_norm: 2.5,
+            noise_multiplier: 0.7,
+            delta: 1e-6,
+            weight_scale: 256.0,
+            frac_bits: 18,
+        };
+        let back = PrivacyConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.mode, cfg.mode);
+        assert_eq!(back.clip_norm, cfg.clip_norm);
+        assert_eq!(back.noise_multiplier, cfg.noise_multiplier);
+        assert_eq!(back.delta, cfg.delta);
+        assert_eq!(back.weight_scale, cfg.weight_scale);
+        assert_eq!(back.frac_bits, cfg.frac_bits);
+        // defaults fill missing fields
+        let d = PrivacyConfig::from_json(&Json::obj()).unwrap();
+        assert_eq!(d.mode, PrivacyMode::Off);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let v: Vec<u8> = (0..=255).collect();
+        assert_eq!(from_hex(&to_hex(&v)).unwrap(), v);
+        assert!(from_hex("abc").is_err());
+        assert!(from_hex("zz").is_err());
+        assert_eq!(from_hex("DEADbeef").unwrap(), vec![0xde, 0xad, 0xbe, 0xef]);
+    }
+
+    #[test]
+    fn round_id_hex_roundtrip() {
+        for id in [0u64, 1, u64::MAX, 0x0123_4567_89ab_cdef] {
+            assert_eq!(round_id_from_hex(&round_id_to_hex(id)).unwrap(), id);
+        }
+        assert!(round_id_from_hex("abcd").is_err());
+    }
+}

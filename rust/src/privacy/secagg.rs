@@ -1,0 +1,818 @@
+//! Secure-aggregation round state machine + masked aggregation.
+//!
+//! The coordinator-side half of the masking protocol in
+//! [`super::masking`].  One [`SecAggRound`] tracks a single aggregation
+//! round through four phases:
+//!
+//! 1. **Seed advertisement** — every participant posts a nonce,
+//!    signalling it holds the cohort key and is in the round.
+//! 2. **Mask commit** — each participant publishes `SHA-256(seed)` per
+//!    pair, letting the coordinator cross-check that both ends of a pair
+//!    derived the same seed and later verify dropout reveals.
+//! 3. **Masked submit** — participants upload their lattice-masked
+//!    weighted updates plus clear sample counts.
+//! 4. **Dropout recovery** — participants that advertised but never
+//!    submitted are *dropped*; each survivor reveals its pair seed with
+//!    every dropped peer so the coordinator can expand those masks and
+//!    subtract them (a dropped client's own masks never entered the sum).
+//!
+//! [`unmask_aggregate`] then recovers `Σ wᵢ·xᵢ / Σ wᵢ` over the survivors
+//! without ever materializing an unmasked individual update — each
+//! submission is read only as a zero-copy [`TensorBuf`] view and folded
+//! into the i64 lattice accumulator.
+//!
+//! [`RoundRegistry`] is the thread-safe map behind the DART REST
+//! `/round/{id}/...` endpoints.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::privacy::masking::{
+    expand_mask_into, pair_sign, requantize, seed_commitment, wrap,
+};
+use crate::privacy::{seed_from_hex, to_hex};
+use crate::util::tensorbuf::TensorBuf;
+
+/// Lattice / weighting parameters shared by every participant of a round.
+#[derive(Debug, Clone)]
+pub struct SecAggConfig {
+    pub frac_bits: u32,
+    /// Sample-count weighting (weighted FedAvg / FedProx) vs uniform.
+    pub weighted: bool,
+    /// Divisor applied to `n_samples` before client-side pre-weighting.
+    pub weight_scale: f32,
+}
+
+impl Default for SecAggConfig {
+    fn default() -> Self {
+        SecAggConfig {
+            frac_bits: super::masking::DEFAULT_FRAC_BITS,
+            weighted: true,
+            weight_scale: 1.0,
+        }
+    }
+}
+
+/// One masked submission: the lattice-masked weighted parameters and the
+/// aggregation weight recovered from the clear sample count.
+#[derive(Debug, Clone)]
+pub struct MaskedUpdate {
+    pub device: String,
+    pub params: TensorBuf,
+    pub weight: f64,
+}
+
+/// A pair seed revealed by `survivor` for `dropped` during recovery.
+#[derive(Debug, Clone)]
+pub struct RevealedSeed {
+    pub survivor: String,
+    pub dropped: String,
+    pub seed: [u8; 32],
+}
+
+/// Recover the weighted aggregate from masked submissions.
+///
+/// Sums the lattice integers behind every masked vector (exact i64
+/// arithmetic), subtracts the expanded mask for every revealed
+/// survivor/dropped pair, wraps into the group, and divides by the total
+/// weight.  Pair masks between survivors cancel inside the sum by
+/// construction; the caller must supply a reveal for every
+/// (survivor, dropped) pair or the leftover masks surface as an error in
+/// the output — hence [`SecAggRound::try_aggregate`] refuses to call this
+/// until recovery is complete.
+pub fn unmask_aggregate(
+    updates: &[MaskedUpdate],
+    revealed: &[RevealedSeed],
+    frac_bits: u32,
+) -> Result<Vec<f32>> {
+    if updates.is_empty() {
+        return Err(FedError::Privacy("no masked updates to aggregate".into()));
+    }
+    let p = updates[0].params.len();
+    if updates.iter().any(|u| u.params.len() != p) {
+        return Err(FedError::Privacy("masked update length mismatch".into()));
+    }
+    let total_weight: f64 = updates.iter().map(|u| u.weight).sum();
+    if total_weight <= 0.0 {
+        return Err(FedError::Privacy("total aggregation weight is zero".into()));
+    }
+    let mut acc = vec![0i64; p];
+    for u in updates {
+        for (a, &y) in acc.iter_mut().zip(u.params.as_f32_slice()) {
+            *a += requantize(y, frac_bits)?;
+        }
+    }
+    let mut mask = vec![0i32; p];
+    for r in revealed {
+        expand_mask_into(&r.seed, &mut mask);
+        let sign = pair_sign(&r.survivor, &r.dropped);
+        for (a, &m) in acc.iter_mut().zip(mask.iter()) {
+            *a -= sign * m as i64;
+        }
+    }
+    let step = (1u64 << frac_bits) as f64;
+    Ok(acc
+        .into_iter()
+        .map(|a| (wrap(a) as f64 / step / total_weight) as f32)
+        .collect())
+}
+
+/// Derived phase of a round (for status reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Seeds,
+    Commit,
+    Submit,
+    Reveal,
+    Done,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Seeds => "seeds",
+            Phase::Commit => "commit",
+            Phase::Submit => "submit",
+            Phase::Reveal => "reveal",
+            Phase::Done => "done",
+        }
+    }
+}
+
+/// Server-side state of one secure-aggregation round.
+#[derive(Debug)]
+pub struct SecAggRound {
+    pub id: u64,
+    pub cfg: SecAggConfig,
+    participants: Vec<String>,
+    nonces: BTreeMap<String, String>,
+    /// client -> peer -> hex(SHA-256(pair seed))
+    commits: BTreeMap<String, BTreeMap<String, String>>,
+    updates: BTreeMap<String, MaskedUpdate>,
+    /// survivor -> dropped -> hex(pair seed)
+    reveals: BTreeMap<String, BTreeMap<String, String>>,
+    aggregate: Option<TensorBuf>,
+}
+
+impl SecAggRound {
+    pub fn new(id: u64, participants: Vec<String>, cfg: SecAggConfig) -> Result<SecAggRound> {
+        let mut p = participants;
+        p.sort();
+        p.dedup();
+        if p.len() < 2 {
+            return Err(FedError::Privacy(
+                "secagg needs at least 2 participants".into(),
+            ));
+        }
+        Ok(SecAggRound {
+            id,
+            cfg,
+            participants: p,
+            nonces: BTreeMap::new(),
+            commits: BTreeMap::new(),
+            updates: BTreeMap::new(),
+            reveals: BTreeMap::new(),
+            aggregate: None,
+        })
+    }
+
+    pub fn participants(&self) -> &[String] {
+        &self.participants
+    }
+
+    fn check_participant(&self, client: &str) -> Result<()> {
+        if !self.participants.iter().any(|p| p == client) {
+            return Err(FedError::Privacy(format!(
+                "'{client}' is not a participant of round {}",
+                self.id
+            )));
+        }
+        Ok(())
+    }
+
+    /// Phase 1: a participant advertises its round nonce.  Idempotent for
+    /// the same nonce; a different nonce from the same client is a
+    /// protocol violation.
+    pub fn advertise(&mut self, client: &str, nonce: &str) -> Result<()> {
+        self.check_participant(client)?;
+        if !self.updates.is_empty() {
+            return Err(FedError::Privacy(
+                "seed advertisement after submissions started".into(),
+            ));
+        }
+        match self.nonces.get(client) {
+            Some(prev) if prev != nonce => Err(FedError::Privacy(format!(
+                "'{client}' re-advertised with a different nonce"
+            ))),
+            _ => {
+                self.nonces.insert(client.to_string(), nonce.to_string());
+                Ok(())
+            }
+        }
+    }
+
+    pub fn all_advertised(&self) -> bool {
+        self.nonces.len() == self.participants.len()
+    }
+
+    pub fn nonces(&self) -> &BTreeMap<String, String> {
+        &self.nonces
+    }
+
+    /// Phase 2: a participant commits `hex(SHA-256(seed))` per peer.
+    /// When both ends of a pair have committed, the two commitments must
+    /// agree — a mismatch means the pair derived different seeds (wrong
+    /// cohort key or an equivocating client) and poisons the round early,
+    /// before any masked data is uploaded.
+    pub fn commit(
+        &mut self,
+        client: &str,
+        commits: BTreeMap<String, String>,
+    ) -> Result<()> {
+        self.check_participant(client)?;
+        for peer in commits.keys() {
+            if peer == client {
+                return Err(FedError::Privacy(format!(
+                    "'{client}' committed a seed for itself"
+                )));
+            }
+            self.check_participant(peer)?;
+        }
+        for (peer, c) in &commits {
+            if let Some(theirs) = self.commits.get(peer).and_then(|m| m.get(client)) {
+                if theirs != c {
+                    return Err(FedError::Privacy(format!(
+                        "commitment mismatch for pair ({client}, {peer})"
+                    )));
+                }
+            }
+        }
+        self.commits.insert(client.to_string(), commits);
+        Ok(())
+    }
+
+    /// Phase 3: a masked weighted update plus the clear sample count.
+    pub fn submit(
+        &mut self,
+        client: &str,
+        params: TensorBuf,
+        n_samples: f64,
+    ) -> Result<()> {
+        self.check_participant(client)?;
+        if !self.nonces.contains_key(client) {
+            return Err(FedError::Privacy(format!(
+                "'{client}' submitted before advertising a seed"
+            )));
+        }
+        if self.aggregate.is_some() {
+            return Err(FedError::Privacy("round already aggregated".into()));
+        }
+        if let Some(first) = self.updates.values().next() {
+            if first.params.len() != params.len() {
+                return Err(FedError::Privacy(format!(
+                    "'{client}' submitted {} params, round carries {}",
+                    params.len(),
+                    first.params.len()
+                )));
+            }
+        }
+        let weight = if self.cfg.weighted {
+            n_samples / self.cfg.weight_scale as f64
+        } else {
+            1.0
+        };
+        if weight <= 0.0 {
+            return Err(FedError::Privacy(format!(
+                "'{client}' submitted non-positive weight"
+            )));
+        }
+        self.updates.insert(
+            client.to_string(),
+            MaskedUpdate { device: client.to_string(), params, weight },
+        );
+        Ok(())
+    }
+
+    /// Advertised participants that never submitted (the dropout set).
+    pub fn dropped(&self) -> Vec<String> {
+        self.nonces
+            .keys()
+            .filter(|c| !self.updates.contains_key(*c))
+            .cloned()
+            .collect()
+    }
+
+    pub fn survivors(&self) -> Vec<String> {
+        self.updates.keys().cloned().collect()
+    }
+
+    /// Phase 4: a survivor reveals its pair seeds with dropped peers.
+    /// Verified against the survivor's commitment when one exists.
+    pub fn reveal(
+        &mut self,
+        survivor: &str,
+        seeds: &BTreeMap<String, String>,
+    ) -> Result<()> {
+        if !self.updates.contains_key(survivor) {
+            return Err(FedError::Privacy(format!(
+                "'{survivor}' is not a survivor of round {}",
+                self.id
+            )));
+        }
+        let dropped = self.dropped();
+        for (peer, seed_hex) in seeds {
+            if !dropped.iter().any(|d| d == peer) {
+                return Err(FedError::Privacy(format!(
+                    "'{survivor}' revealed a seed for non-dropped '{peer}'"
+                )));
+            }
+            let seed = seed_from_hex(seed_hex)?;
+            if let Some(commit) = self.commits.get(survivor).and_then(|m| m.get(peer))
+            {
+                if to_hex(&seed_commitment(&seed)) != *commit {
+                    return Err(FedError::Privacy(format!(
+                        "revealed seed for ({survivor}, {peer}) does not match \
+                         its commitment"
+                    )));
+                }
+            }
+            self.reveals
+                .entry(survivor.to_string())
+                .or_default()
+                .insert(peer.clone(), seed_hex.clone());
+        }
+        Ok(())
+    }
+
+    /// (survivor, dropped) pairs still lacking a reveal.
+    pub fn missing_reveals(&self) -> Vec<(String, String)> {
+        let dropped = self.dropped();
+        let mut missing = Vec::new();
+        for s in self.updates.keys() {
+            for d in &dropped {
+                let have = self
+                    .reveals
+                    .get(s)
+                    .map(|m| m.contains_key(d))
+                    .unwrap_or(false);
+                if !have {
+                    missing.push((s.clone(), d.clone()));
+                }
+            }
+        }
+        missing
+    }
+
+    pub fn phase(&self) -> Phase {
+        if self.aggregate.is_some() {
+            Phase::Done
+        } else if !self.updates.is_empty() {
+            if self.dropped().is_empty() && !self.all_advertised() {
+                // submissions underway, stragglers may still advertise
+                Phase::Submit
+            } else if self.missing_reveals().is_empty() {
+                Phase::Submit
+            } else {
+                Phase::Reveal
+            }
+        } else if self.all_advertised() {
+            Phase::Commit
+        } else {
+            Phase::Seeds
+        }
+    }
+
+    /// Finish the round: requires at least one submission and a complete
+    /// reveal set for every dropout.  Caches and returns the aggregate.
+    pub fn try_aggregate(&mut self) -> Result<TensorBuf> {
+        if let Some(agg) = &self.aggregate {
+            return Ok(agg.clone());
+        }
+        let missing = self.missing_reveals();
+        if !missing.is_empty() {
+            return Err(FedError::Privacy(format!(
+                "round {} not recoverable: {} reveal(s) missing (first: {:?})",
+                self.id,
+                missing.len(),
+                missing[0]
+            )));
+        }
+        let updates: Vec<MaskedUpdate> = self.updates.values().cloned().collect();
+        let mut revealed = Vec::new();
+        for (survivor, per_dropped) in &self.reveals {
+            for (dropped, seed_hex) in per_dropped {
+                revealed.push(RevealedSeed {
+                    survivor: survivor.clone(),
+                    dropped: dropped.clone(),
+                    seed: seed_from_hex(seed_hex)?,
+                });
+            }
+        }
+        let agg = TensorBuf::from_f32_vec(unmask_aggregate(
+            &updates,
+            &revealed,
+            self.cfg.frac_bits,
+        )?);
+        self.aggregate = Some(agg.clone());
+        Ok(agg)
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.updates.values().map(|u| u.weight).sum()
+    }
+
+    /// Status document for the REST surface.
+    pub fn status_json(&self) -> Json {
+        Json::obj()
+            .set("round_id", super::round_id_to_hex(self.id))
+            .set("phase", self.phase().as_str())
+            .set(
+                "participants",
+                Json::Arr(
+                    self.participants.iter().map(|p| Json::Str(p.clone())).collect(),
+                ),
+            )
+            .set("advertised", self.nonces.len())
+            .set("committed", self.commits.len())
+            .set("submitted", self.updates.len())
+            .set(
+                "dropped",
+                Json::Arr(self.dropped().into_iter().map(Json::Str).collect()),
+            )
+    }
+}
+
+/// Thread-safe registry of active rounds (the REST handler's state).
+/// Bounded: creating a round beyond `cap` evicts the round created
+/// longest ago.  Insertion order is tracked explicitly — round ids are
+/// splitmix hashes (or client-chosen), so id order says nothing about
+/// age, and evicting the smallest id could destroy an in-flight round
+/// mid-protocol while long-dead rounds with larger ids stay cached.
+pub struct RoundRegistry {
+    inner: Mutex<RegistryInner>,
+    cap: usize,
+}
+
+struct RegistryInner {
+    rounds: BTreeMap<u64, SecAggRound>,
+    /// ids in creation order, front = oldest
+    order: std::collections::VecDeque<u64>,
+}
+
+impl Default for RoundRegistry {
+    fn default() -> Self {
+        RoundRegistry::new(64)
+    }
+}
+
+impl RoundRegistry {
+    pub fn new(cap: usize) -> RoundRegistry {
+        RoundRegistry {
+            inner: Mutex::new(RegistryInner {
+                rounds: BTreeMap::new(),
+                order: std::collections::VecDeque::new(),
+            }),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn create(
+        &self,
+        id: u64,
+        participants: Vec<String>,
+        cfg: SecAggConfig,
+    ) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.rounds.contains_key(&id) {
+            return Err(FedError::Privacy(format!("round {id} already exists")));
+        }
+        while inner.rounds.len() >= self.cap {
+            match inner.order.pop_front() {
+                Some(oldest) => {
+                    inner.rounds.remove(&oldest);
+                }
+                None => break,
+            }
+        }
+        inner.rounds.insert(id, SecAggRound::new(id, participants, cfg)?);
+        inner.order.push_back(id);
+        Ok(())
+    }
+
+    /// Run `f` against a round, or error if the id is unknown.
+    pub fn with<R>(
+        &self,
+        id: u64,
+        f: impl FnOnce(&mut SecAggRound) -> Result<R>,
+    ) -> Result<R> {
+        let mut inner = self.inner.lock().unwrap();
+        let round = inner
+            .rounds
+            .get_mut(&id)
+            .ok_or_else(|| FedError::Privacy(format!("no such round {id}")))?;
+        f(round)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().rounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::privacy::masking::{mask_update, pair_seed, seed_commitment};
+    use crate::util::rng::Rng;
+
+    const KEY: &[u8] = b"cohort-secret";
+
+    fn names(k: usize) -> Vec<String> {
+        (0..k).map(|i| format!("client-{i}")).collect()
+    }
+
+    /// Clear weighted average (f64 reference).
+    fn clear_avg(vecs: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+        let p = vecs[0].len();
+        let total: f64 = weights.iter().sum();
+        (0..p)
+            .map(|j| {
+                (vecs
+                    .iter()
+                    .zip(weights)
+                    .map(|(v, w)| v[j] as f64 * w)
+                    .sum::<f64>()
+                    / total) as f32
+            })
+            .collect()
+    }
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+        let num: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum::<f64>().sqrt();
+        num / den.max(1e-12)
+    }
+
+    /// Drive a full round through the state machine.
+    fn run_round(
+        k: usize,
+        drop_idx: &[usize],
+        weighted: bool,
+        with_commits: bool,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let ns = names(k);
+        let round_id = 99u64;
+        let p = 301;
+        let mut rng = Rng::new(11);
+        let vecs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(p)).collect();
+        let samples: Vec<f64> =
+            (0..k).map(|i| if weighted { 100.0 + i as f64 } else { 1.0 }).collect();
+
+        let cfg = SecAggConfig {
+            frac_bits: 16,
+            weighted,
+            weight_scale: if weighted { 128.0 } else { 1.0 },
+        };
+        let mut round = SecAggRound::new(round_id, ns.clone(), cfg.clone()).unwrap();
+
+        // phase 1: everyone advertises (including soon-to-drop clients)
+        for n in &ns {
+            round.advertise(n, &format!("nonce-{n}")).unwrap();
+        }
+        assert!(round.all_advertised());
+
+        // phase 2 (optional): commitments
+        if with_commits {
+            for me in &ns {
+                let commits: BTreeMap<String, String> = ns
+                    .iter()
+                    .filter(|p| *p != me)
+                    .map(|p| {
+                        let s = pair_seed(KEY, round_id, me, p);
+                        (p.clone(), to_hex(&seed_commitment(&s)))
+                    })
+                    .collect();
+                round.commit(me, commits).unwrap();
+            }
+        }
+
+        // phase 3: survivors submit masked weighted updates
+        for (i, me) in ns.iter().enumerate() {
+            if drop_idx.contains(&i) {
+                continue;
+            }
+            let peers: Vec<String> =
+                ns.iter().filter(|n| *n != me).cloned().collect();
+            let w = if weighted {
+                samples[i] / cfg.weight_scale as f64
+            } else {
+                1.0
+            };
+            let masked =
+                mask_update(&vecs[i], w, me, &peers, KEY, round_id, cfg.frac_bits)
+                    .unwrap();
+            round
+                .submit(me, TensorBuf::from_f32_vec(masked), samples[i])
+                .unwrap();
+        }
+        assert_eq!(round.dropped().len(), drop_idx.len());
+
+        // phase 4: recovery
+        if !drop_idx.is_empty() {
+            assert_eq!(round.phase(), Phase::Reveal);
+            let dropped = round.dropped();
+            for me in round.survivors() {
+                let seeds: BTreeMap<String, String> = dropped
+                    .iter()
+                    .map(|d| (d.clone(), to_hex(&pair_seed(KEY, round_id, &me, d))))
+                    .collect();
+                round.reveal(&me, &seeds).unwrap();
+            }
+        }
+
+        let agg = round.try_aggregate().unwrap().to_vec();
+        assert_eq!(round.phase(), Phase::Done);
+
+        let surv_vecs: Vec<Vec<f32>> = (0..k)
+            .filter(|i| !drop_idx.contains(i))
+            .map(|i| vecs[i].clone())
+            .collect();
+        let surv_w: Vec<f64> = (0..k)
+            .filter(|i| !drop_idx.contains(i))
+            .map(|i| if weighted { samples[i] } else { 1.0 })
+            .collect();
+        (agg, clear_avg(&surv_vecs, &surv_w))
+    }
+
+    #[test]
+    fn full_round_no_dropouts_matches_clear() {
+        let (agg, clear) = run_round(4, &[], true, true);
+        let e = rel_err(&agg, &clear);
+        assert!(e < 1e-5, "rel err {e}");
+    }
+
+    #[test]
+    fn dropout_recovery_parity() {
+        // satellite requirement: dropout-recovery parity
+        let (agg, clear) = run_round(5, &[1, 3], true, false);
+        let e = rel_err(&agg, &clear);
+        assert!(e < 1e-5, "rel err {e}");
+    }
+
+    #[test]
+    fn uniform_weighting_mode() {
+        let (agg, clear) = run_round(3, &[0], false, false);
+        let e = rel_err(&agg, &clear);
+        assert!(e < 1e-5, "rel err {e}");
+    }
+
+    #[test]
+    fn aggregate_blocked_until_reveals_complete() {
+        let ns = names(3);
+        let mut round =
+            SecAggRound::new(1, ns.clone(), SecAggConfig::default()).unwrap();
+        for n in &ns {
+            round.advertise(n, "x").unwrap();
+        }
+        // only client-0 and client-1 submit; client-2 drops
+        for me in &ns[..2] {
+            let peers: Vec<String> =
+                ns.iter().filter(|n| *n != me).cloned().collect();
+            let masked =
+                mask_update(&[1.0, 2.0], 1.0, me, &peers, KEY, 1, 16).unwrap();
+            round.submit(me, TensorBuf::from_f32_vec(masked), 1.0).unwrap();
+        }
+        let err = round.try_aggregate().unwrap_err();
+        assert!(err.to_string().contains("reveal"), "{err}");
+        assert_eq!(round.missing_reveals().len(), 2);
+
+        // one reveal in: still blocked
+        let seeds: BTreeMap<String, String> = [(
+            ns[2].clone(),
+            to_hex(&pair_seed(KEY, 1, &ns[0], &ns[2])),
+        )]
+        .into();
+        round.reveal(&ns[0], &seeds).unwrap();
+        assert!(round.try_aggregate().is_err());
+
+        let seeds: BTreeMap<String, String> = [(
+            ns[2].clone(),
+            to_hex(&pair_seed(KEY, 1, &ns[1], &ns[2])),
+        )]
+        .into();
+        round.reveal(&ns[1], &seeds).unwrap();
+        let agg = round.try_aggregate().unwrap();
+        assert_eq!(agg.len(), 2);
+        // survivors both submitted (1,2): mean is (1,2) up to quantization
+        assert!((agg.as_f32_slice()[0] - 1.0).abs() < 1e-4);
+        assert!((agg.as_f32_slice()[1] - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn commitment_mismatch_poisons_round_early() {
+        let ns = names(2);
+        let mut round =
+            SecAggRound::new(5, ns.clone(), SecAggConfig::default()).unwrap();
+        let good = pair_seed(KEY, 5, &ns[0], &ns[1]);
+        let bad = pair_seed(b"wrong-key", 5, &ns[0], &ns[1]);
+        round
+            .commit(
+                &ns[0],
+                [(ns[1].clone(), to_hex(&seed_commitment(&good)))].into(),
+            )
+            .unwrap();
+        let err = round
+            .commit(
+                &ns[1],
+                [(ns[0].clone(), to_hex(&seed_commitment(&bad)))].into(),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("mismatch"), "{err}");
+    }
+
+    #[test]
+    fn reveal_checked_against_commitment() {
+        let ns = names(3);
+        let mut round =
+            SecAggRound::new(7, ns.clone(), SecAggConfig::default()).unwrap();
+        for n in &ns {
+            round.advertise(n, "x").unwrap();
+        }
+        // client-0 commits honestly
+        let commits: BTreeMap<String, String> = ns
+            .iter()
+            .filter(|p| *p != &ns[0])
+            .map(|p| {
+                let s = pair_seed(KEY, 7, &ns[0], p);
+                (p.clone(), to_hex(&seed_commitment(&s)))
+            })
+            .collect();
+        round.commit(&ns[0], commits).unwrap();
+        // client-0 and client-1 submit, client-2 drops
+        for me in &ns[..2] {
+            let peers: Vec<String> =
+                ns.iter().filter(|n| *n != me).cloned().collect();
+            let masked = mask_update(&[0.0], 1.0, me, &peers, KEY, 7, 16).unwrap();
+            round.submit(me, TensorBuf::from_f32_vec(masked), 1.0).unwrap();
+        }
+        // a forged reveal from client-0 is rejected by its commitment
+        let forged: BTreeMap<String, String> =
+            [(ns[2].clone(), to_hex(&[0u8; 32]))].into();
+        assert!(round.reveal(&ns[0], &forged).is_err());
+        // the honest reveal passes
+        let honest: BTreeMap<String, String> = [(
+            ns[2].clone(),
+            to_hex(&pair_seed(KEY, 7, &ns[0], &ns[2])),
+        )]
+        .into();
+        round.reveal(&ns[0], &honest).unwrap();
+    }
+
+    #[test]
+    fn protocol_violations_rejected() {
+        let ns = names(2);
+        let mut round =
+            SecAggRound::new(2, ns.clone(), SecAggConfig::default()).unwrap();
+        // unknown client
+        assert!(round.advertise("stranger", "x").is_err());
+        // submit before advertising
+        assert!(round
+            .submit(&ns[0], TensorBuf::from_f32_vec(vec![0.0]), 1.0)
+            .is_err());
+        // nonce equivocation
+        round.advertise(&ns[0], "a").unwrap();
+        round.advertise(&ns[0], "a").unwrap(); // idempotent
+        assert!(round.advertise(&ns[0], "b").is_err());
+        // reveal from a non-survivor
+        assert!(round.reveal(&ns[1], &BTreeMap::new()).is_err());
+        // fewer than 2 participants
+        assert!(SecAggRound::new(3, vec!["solo".into()], SecAggConfig::default())
+            .is_err());
+    }
+
+    #[test]
+    fn registry_evicts_by_creation_order_not_id() {
+        let reg = RoundRegistry::new(2);
+        // creation order 5, 1, 9: the OLDEST (id 5) must go, even though
+        // id 1 is numerically smaller
+        for id in [5u64, 1, 9] {
+            reg.create(id, names(2), SecAggConfig::default()).unwrap();
+        }
+        assert_eq!(reg.len(), 2);
+        assert!(reg.with(5, |_| Ok(())).is_err(), "oldest (5) should be evicted");
+        assert!(reg.with(1, |_| Ok(())).is_ok());
+        assert!(reg.with(9, |_| Ok(())).is_ok());
+        // duplicate id rejected
+        assert!(reg.create(9, names(2), SecAggConfig::default()).is_err());
+    }
+}

@@ -73,16 +73,20 @@ fn compress(state: &mut [u32; 8], block: &[u8]) {
     state[7] = state[7].wrapping_add(h);
 }
 
-/// SHA-256 digest of `data`.
-pub fn sha256(data: &[u8]) -> [u8; 32] {
-    let mut state = H0;
+/// Continue SHA-256 from `state` over `data`, where `prefix_len` bytes
+/// (a whole number of 64-byte blocks) have already been compressed into
+/// `state`.  The Merkle–Damgård padding covers `prefix_len + data.len()`.
+fn sha256_from_state(mut state: [u32; 8], data: &[u8], prefix_len: u64) -> [u8; 32] {
+    debug_assert_eq!(prefix_len % 64, 0);
     let mut chunks = data.chunks_exact(64);
     for block in &mut chunks {
         compress(&mut state, block);
     }
     // padding: 0x80, zeros, 64-bit big-endian bit length
     let rem = chunks.remainder();
-    let bit_len = (data.len() as u64).wrapping_mul(8);
+    let bit_len = prefix_len
+        .wrapping_add(data.len() as u64)
+        .wrapping_mul(8);
     let mut tail = [0u8; 128];
     tail[..rem.len()].copy_from_slice(rem);
     tail[rem.len()] = 0x80;
@@ -99,28 +103,69 @@ pub fn sha256(data: &[u8]) -> [u8; 32] {
     out
 }
 
+/// SHA-256 digest of `data`.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    sha256_from_state(H0, data, 0)
+}
+
+/// A prepared HMAC-SHA256 key: the compression states after the ipad and
+/// opad blocks are cached, so each [`HmacKey::mac`] of a short message
+/// costs two compressions instead of four.  The privacy subsystem's mask
+/// expansion calls the PRF once per 32 output bytes, which makes this the
+/// hot path of a masked round.
+#[derive(Debug, Clone)]
+pub struct HmacKey {
+    inner: [u32; 8],
+    outer: [u32; 8],
+}
+
+impl HmacKey {
+    pub fn new(key: &[u8]) -> HmacKey {
+        let mut k = [0u8; 64];
+        if key.len() > 64 {
+            k[..32].copy_from_slice(&sha256(key));
+        } else {
+            k[..key.len()].copy_from_slice(key);
+        }
+        let mut ipad = [0x36u8; 64];
+        let mut opad = [0x5cu8; 64];
+        for i in 0..64 {
+            ipad[i] ^= k[i];
+            opad[i] ^= k[i];
+        }
+        let mut inner = H0;
+        compress(&mut inner, &ipad);
+        let mut outer = H0;
+        compress(&mut outer, &opad);
+        HmacKey { inner, outer }
+    }
+
+    /// HMAC-SHA256 of `msg` under the prepared key.
+    pub fn mac(&self, msg: &[u8]) -> [u8; 32] {
+        let inner_hash = sha256_from_state(self.inner, msg, 64);
+        sha256_from_state(self.outer, &inner_hash, 64)
+    }
+}
+
 /// HMAC-SHA256 of `msg` under `key` (RFC 2104).
 pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
-    let mut k = [0u8; 64];
-    if key.len() > 64 {
-        k[..32].copy_from_slice(&sha256(key));
-    } else {
-        k[..key.len()].copy_from_slice(key);
+    HmacKey::new(key).mac(msg)
+}
+
+/// Constant-time byte-slice equality: the comparison time depends only on
+/// the lengths, never on where the first differing byte sits.  Use this
+/// for every key / MAC comparison — `==` on secrets is a timing side
+/// channel (an attacker measuring response latency learns how long a
+/// prefix of their guess matched).
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
     }
-    let mut ipad = [0x36u8; 64];
-    let mut opad = [0x5cu8; 64];
-    for i in 0..64 {
-        ipad[i] ^= k[i];
-        opad[i] ^= k[i];
+    let mut diff = 0u8;
+    for (x, y) in a.iter().zip(b.iter()) {
+        diff |= x ^ y;
     }
-    let mut inner = Vec::with_capacity(64 + msg.len());
-    inner.extend_from_slice(&ipad);
-    inner.extend_from_slice(msg);
-    let inner_hash = sha256(&inner);
-    let mut outer = [0u8; 96];
-    outer[..64].copy_from_slice(&opad);
-    outer[64..].copy_from_slice(&inner_hash);
-    sha256(&outer)
+    diff == 0
 }
 
 #[cfg(test)]
@@ -187,5 +232,35 @@ mod tests {
             )),
             "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
         );
+    }
+
+    #[test]
+    fn hmac_key_matches_one_shot() {
+        // the midstate-cached key must produce byte-identical MACs for
+        // message lengths across the padding boundaries
+        let key = HmacKey::new(b"prf-seed");
+        for len in [0usize, 1, 8, 31, 32, 55, 56, 63, 64, 65, 200] {
+            let msg: Vec<u8> = (0..len).map(|i| i as u8).collect();
+            assert_eq!(key.mac(&msg), hmac_sha256(b"prf-seed", &msg), "len {len}");
+        }
+        // long keys are pre-hashed identically
+        let long = HmacKey::new(&[0xaa; 131]);
+        assert_eq!(
+            long.mac(b"Test Using Larger Than Block-Size Key - Hash Key First"),
+            hmac_sha256(
+                &[0xaa; 131],
+                b"Test Using Larger Than Block-Size Key - Hash Key First"
+            )
+        );
+    }
+
+    #[test]
+    fn ct_eq_semantics() {
+        assert!(ct_eq(b"", b""));
+        assert!(ct_eq(b"secret", b"secret"));
+        assert!(!ct_eq(b"secret", b"secreT"));
+        assert!(!ct_eq(b"secret", b"Xecret")); // first byte differs
+        assert!(!ct_eq(b"secret", b"secre"));  // length differs
+        assert!(!ct_eq(b"", b"x"));
     }
 }

@@ -77,9 +77,28 @@ impl Rng {
     }
 
     /// Uniform integer in `[0, n)`. `n` must be > 0.
+    ///
+    /// Lemire's multiply-shift with rejection of the biased low zone
+    /// (*Fast Random Integer Generation in an Interval*, 2019): the old
+    /// `next_u64() % n` had modulo bias for any `n` that does not divide
+    /// 2^64 — small (≤ n/2^64 per value) but systematic, and visible to a
+    /// chi-square test at billions of draws.  The rejection loop runs at
+    /// most once in expectation and keeps the exact-uniformity guarantee.
     pub fn below(&mut self, n: usize) -> usize {
         debug_assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        let n = n as u64;
+        let mut m = (self.next_u64() as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            // threshold = 2^64 mod n; values of `lo` under it are the
+            // over-represented remainders — reject and redraw
+            let threshold = n.wrapping_neg() % n;
+            while lo < threshold {
+                m = (self.next_u64() as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as usize
     }
 
     /// Standard normal via Box-Muller (cached pair).
@@ -184,6 +203,43 @@ mod tests {
         for c in 0..10 {
             assert!(v.iter().filter(|&&x| x == c).count() > 50);
         }
+    }
+
+    #[test]
+    fn below_in_range_and_deterministic() {
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        for _ in 0..10_000 {
+            let n = 1 + (a.next_u64() % 1000) as usize;
+            b.next_u64();
+            let va = a.below(n);
+            let vb = b.below(n);
+            assert!(va < n);
+            assert_eq!(va, vb);
+        }
+        assert_eq!(a.below(1), 0);
+    }
+
+    #[test]
+    fn below_chi_square_non_power_of_two() {
+        // 12 buckets (not a power of two — the case the old modulo path
+        // biased), 120k draws: expected 10k per bucket.  Chi-square with
+        // 11 degrees of freedom; the 99.9th percentile is 31.26, so a
+        // bound of 35 fails with probability well under 1e-3 for a
+        // uniform generator while catching any systematic skew.
+        let mut r = Rng::new(0xC0FFEE);
+        let n = 12usize;
+        let draws = 120_000usize;
+        let mut counts = vec![0f64; n];
+        for _ in 0..draws {
+            counts[r.below(n)] += 1.0;
+        }
+        let expected = draws as f64 / n as f64;
+        let chi2: f64 = counts
+            .iter()
+            .map(|c| (c - expected) * (c - expected) / expected)
+            .sum();
+        assert!(chi2 < 35.0, "chi-square {chi2} over 12 buckets");
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Privacy subsystem integration: the FACT round pipeline under secure
+//! aggregation with mid-round client dropouts.
+//!
+//! Acceptance: a secagg round with 8 clients and 2 mid-round dropouts
+//! produces an aggregate bitwise-close (≤ 1e-5 relative) to the
+//! clear-mode aggregate of the survivors.
+//!
+//! The tests run engine-free: a custom task registry plays the client
+//! side (computing deterministic local updates and applying the privacy
+//! transform with the same `privacy::masking` primitives the real
+//! `FactClientRuntime` uses), so they exercise the full
+//! server-side path — privacy negotiation in the learn task, dropout
+//! detection, the `fact_reveal` recovery task, and the lattice unmasking
+//! — without needing compiled artifacts.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use feddart::dart::TaskRegistry;
+use feddart::error::FedError;
+use feddart::fact::aggregation::Aggregation;
+use feddart::fact::model::FactModel;
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::store::{FsObjectStore, ModelStore};
+use feddart::fact::FactServer;
+use feddart::coordinator::workflow::WorkflowManager;
+use feddart::json::Json;
+use feddart::privacy::{
+    dp, masking, round_id_from_hex, to_hex, PrivacyConfig, PrivacyMode,
+};
+use feddart::util::rng::{golden_f32, Rng};
+use feddart::util::tensorbuf::TensorBuf;
+
+const COHORT_KEY: &[u8] = b"integration-cohort-key";
+const PARAMS: usize = 512;
+
+/// Minimal engine-free model: fixed params, weighted FedAvg.
+struct TestModel;
+
+impl FactModel for TestModel {
+    fn name(&self) -> &str {
+        "testmodel"
+    }
+    fn param_count(&self) -> usize {
+        PARAMS
+    }
+    fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+        Ok(golden_f32(seed as u32, PARAMS))
+    }
+    fn aggregation(&self) -> &Aggregation {
+        &Aggregation::WeightedFedAvg
+    }
+}
+
+fn device_index(device: &str) -> usize {
+    device.rsplit('-').next().unwrap().parse().unwrap()
+}
+
+fn samples_of(idx: usize) -> f32 {
+    100.0 + 10.0 * idx as f32
+}
+
+/// Client-side registry: deterministic local updates, the round's privacy
+/// transform, and deterministic mid-round dropouts.  Captures every
+/// survivor's *clear* (post-DP, pre-mask) update so the test can compute
+/// the reference aggregate.
+fn registry_with_privacy_clients(
+    dropped_idx: &'static [usize],
+    captured: Arc<Mutex<BTreeMap<String, (Vec<f32>, f32)>>>,
+) -> TaskRegistry {
+    let registry = TaskRegistry::new();
+    registry.register("fact_init", |_| Ok(Json::Null));
+
+    registry.register("fact_learn", move |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let idx = device_index(&device);
+        if dropped_idx.contains(&idx) {
+            // the client computed nothing visible: it crashed mid-round,
+            // after advertising (it is in the participant set) but before
+            // uploading its masked update
+            return Err(FedError::Task(format!("'{device}' crashed mid-round")));
+        }
+        let global = TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Task(e.to_string()))?;
+        let gs = global.as_f32_slice();
+        // deterministic local training: global + a per-device delta
+        let delta = golden_f32(idx as u32 + 1, gs.len());
+        let mut params: Vec<f32> =
+            gs.iter().zip(&delta).map(|(g, d)| g + 0.1 * d).collect();
+        let n_samples = samples_of(idx);
+
+        let pj = p.need("privacy")?;
+        let cfg = PrivacyConfig::from_json(pj)?;
+        let round_id = round_id_from_hex(
+            pj.need("round_id")?.as_str().unwrap_or_default(),
+        )?;
+        if cfg.mode.has_dp() {
+            let mut rng = Rng::new(round_id ^ idx as u64);
+            dp::privatize_update(
+                &mut params,
+                gs,
+                cfg.clip_norm,
+                cfg.noise_multiplier,
+                &mut rng,
+            )?;
+        }
+        // the clear update as the reference aggregate will see it
+        captured
+            .lock()
+            .unwrap()
+            .insert(device.clone(), (params.clone(), n_samples));
+        if cfg.mode.has_secagg() {
+            let participants: Vec<String> = pj
+                .need("participants")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect();
+            let peers: Vec<String> =
+                participants.into_iter().filter(|c| *c != device).collect();
+            let weighted = pj.get("weighted").and_then(Json::as_bool).unwrap_or(true);
+            let weight = if weighted {
+                n_samples as f64 / cfg.weight_scale as f64
+            } else {
+                1.0
+            };
+            params = masking::mask_update(
+                &params,
+                weight,
+                &device,
+                &peers,
+                COHORT_KEY,
+                round_id,
+                cfg.frac_bits,
+            )?;
+        }
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(params))
+            .set("n_samples", n_samples)
+            .set("loss", 0.5))
+    });
+
+    registry.register("fact_reveal", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let round_id = round_id_from_hex(
+            p.need("round_id")?.as_str().unwrap_or_default(),
+        )?;
+        let mut seeds = Json::obj();
+        for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
+            let Some(name) = d.as_str() else { continue };
+            seeds = seeds.set(
+                name,
+                to_hex(&masking::pair_seed(COHORT_KEY, round_id, &device, name)),
+            );
+        }
+        Ok(Json::obj().set("seeds", seeds))
+    });
+    registry
+}
+
+/// Weighted average of the captured survivor updates (f64 reference).
+fn reference_aggregate(
+    captured: &BTreeMap<String, (Vec<f32>, f32)>,
+) -> Vec<f32> {
+    let total: f64 = captured.values().map(|(_, n)| *n as f64).sum();
+    let p = captured.values().next().unwrap().0.len();
+    (0..p)
+        .map(|j| {
+            (captured
+                .values()
+                .map(|(v, n)| v[j] as f64 * *n as f64)
+                .sum::<f64>()
+                / total) as f32
+        })
+        .collect()
+}
+
+fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let num = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let den = b.iter().map(|&y| (y as f64).powi(2)).sum::<f64>().sqrt();
+    num / den.max(1e-12)
+}
+
+fn run_private_session(
+    mode: PrivacyMode,
+    dropped: &'static [usize],
+    rounds: usize,
+) -> (FactServer, Arc<Mutex<BTreeMap<String, (Vec<f32>, f32)>>>) {
+    let captured = Arc::new(Mutex::new(BTreeMap::new()));
+    let registry = registry_with_privacy_clients(dropped, Arc::clone(&captured));
+    let wm = WorkflowManager::test_mode(8, registry, 4);
+    let mut server = FactServer::new(wm).with_privacy(PrivacyConfig {
+        mode,
+        clip_norm: 4.0,
+        noise_multiplier: 0.05,
+        weight_scale: 128.0,
+        ..PrivacyConfig::default()
+    });
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(rounds)),
+            3,
+        )
+        .unwrap();
+    server.learn().unwrap();
+    (server, captured)
+}
+
+#[test]
+fn secagg_8_clients_2_dropouts_matches_clear_survivor_aggregate() {
+    let (server, captured) = run_private_session(PrivacyMode::SecAgg, &[6, 7], 1);
+
+    // 6 survivors contributed; 2 dropped mid-round
+    let hist = server.history();
+    assert_eq!(hist.len(), 1);
+    assert_eq!(hist[0].n_clients, 6);
+
+    let captured = captured.lock().unwrap();
+    assert_eq!(captured.len(), 6);
+    assert!(!captured.contains_key("client-6"));
+    assert!(!captured.contains_key("client-7"));
+
+    let expect = reference_aggregate(&captured);
+    let got = &server.container().clusters[0].params;
+    let e = rel_err(got, &expect);
+    assert!(e <= 1e-5, "secagg aggregate off by {e} (rel)");
+
+    // masked per-client vectors must NOT be recorded as latest updates
+    assert!(server.latest_updates().is_empty());
+}
+
+#[test]
+fn secagg_without_dropouts_matches_clear() {
+    let (server, captured) = run_private_session(PrivacyMode::SecAgg, &[], 1);
+    assert_eq!(server.history()[0].n_clients, 8);
+    let captured = captured.lock().unwrap();
+    let expect = reference_aggregate(&captured);
+    let e = rel_err(&server.container().clusters[0].params, &expect);
+    assert!(e <= 1e-5, "rel err {e}");
+}
+
+#[test]
+fn secagg_dp_combined_round_recovers_the_noised_aggregate() {
+    // with DP stacked on top, the aggregate must equal the weighted
+    // average of the *privatized* survivor updates — masking must not
+    // interfere with the noise, and vice versa
+    let (server, captured) =
+        run_private_session(PrivacyMode::SecAggDp, &[2], 1);
+    assert_eq!(server.history()[0].n_clients, 7);
+    let captured = captured.lock().unwrap();
+    let expect = reference_aggregate(&captured);
+    let got = &server.container().clusters[0].params;
+    let e = rel_err(got, &expect);
+    assert!(e <= 1e-5, "rel err {e}");
+    // and the DP ledger advanced
+    assert_eq!(server.accountant().steps, 1);
+    assert!(server.accountant().epsilon(1e-5) > 0.0);
+}
+
+#[test]
+fn dp_only_mode_steps_accountant_and_persists_with_snapshots() {
+    let (server, _) = run_private_session(PrivacyMode::Dp, &[], 3);
+    assert_eq!(server.accountant().steps, 3);
+    let eps = server.accountant().epsilon(1e-5);
+    assert!(eps.is_finite() && eps > 0.0);
+
+    // checkpoint carries the accountant; restore resumes the ledger
+    let dir = std::env::temp_dir().join(format!(
+        "feddart-privacy-int-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ModelStore::new(FsObjectStore::new(&dir).unwrap());
+    server.checkpoint(&store, 3).unwrap();
+
+    let snap = store.load_latest("testmodel-c0").unwrap().unwrap();
+    assert_eq!(
+        snap.privacy.get("mode").and_then(Json::as_str),
+        Some("dp")
+    );
+    let acct = dp::DpAccountant::from_json(
+        snap.privacy.get("accountant").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(acct.steps, 3);
+
+    // a fresh server restoring the snapshot adopts the ε ledger
+    let captured = Arc::new(Mutex::new(BTreeMap::new()));
+    let registry = registry_with_privacy_clients(&[], captured);
+    let wm = WorkflowManager::test_mode(8, registry, 4);
+    let mut resumed = FactServer::new(wm)
+        .with_privacy(PrivacyConfig::with_mode(PrivacyMode::Dp));
+    resumed
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(1)), 3)
+        .unwrap();
+    assert_eq!(resumed.accountant().steps, 0);
+    assert!(resumed.restore_latest(&store, 0).unwrap());
+    assert_eq!(resumed.accountant().steps, 3);
+}
+
+#[test]
+fn secagg_rejects_order_statistic_aggregation() {
+    struct MedianModel;
+    impl FactModel for MedianModel {
+        fn name(&self) -> &str {
+            "medianmodel"
+        }
+        fn param_count(&self) -> usize {
+            PARAMS
+        }
+        fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+            Ok(golden_f32(seed as u32, PARAMS))
+        }
+        fn aggregation(&self) -> &Aggregation {
+            &Aggregation::Median
+        }
+    }
+    let captured = Arc::new(Mutex::new(BTreeMap::new()));
+    let registry = registry_with_privacy_clients(&[], captured);
+    let wm = WorkflowManager::test_mode(4, registry, 2);
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig::with_mode(PrivacyMode::SecAgg));
+    server
+        .initialization_by_model(Arc::new(MedianModel), Arc::new(FixedRoundFl(1)), 1)
+        .unwrap();
+    let err = server.learn().unwrap_err();
+    assert!(
+        err.to_string().contains("incompatible with secure"),
+        "{err}"
+    );
+}
