@@ -1,0 +1,138 @@
+//! E11 — partial participation: round close latency vs cohort size.
+//!
+//! Measures the production round loop (`run_task_quorum`) over test-mode
+//! federations: a pool of 2·K clients, a sampled cohort of K, quorum 0.8
+//! — the round closes as soon as 80% of the cohort reported, so the
+//! number is the *close* latency of a K-cohort round, not the tail of its
+//! slowest client.  Also reports the pure cohort-draw cost per strategy
+//! (the scheduler-side overhead partial participation adds to a round).
+//!
+//! Cohort sizes 10 / 100 / 1k (smoke mode drops 1k).  Writes
+//! `BENCH_participation.json` (`$BENCH_OUT` selects the directory);
+//! smoke mode (`BENCH_SMOKE=1` / `--smoke`) shrinks iteration counts for
+//! CI.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use feddart::benchkit::{fmt_s, smoke, time_n, BenchReport, Table};
+use feddart::config::{ParticipationConfig, SamplingStrategy};
+use feddart::coordinator::participation::{
+    participation_round_key, Candidate, CohortSampler,
+};
+use feddart::coordinator::WorkflowManager;
+use feddart::dart::TaskRegistry;
+use feddart::json::Json;
+
+fn registry() -> TaskRegistry {
+    let reg = TaskRegistry::new();
+    reg.register("learn", |p| Ok(Json::obj().set("echo", p.clone())));
+    reg
+}
+
+fn sampler_bench(mut report: BenchReport) -> BenchReport {
+    let sizes: &[usize] =
+        if smoke() { &[20, 200] } else { &[20, 200, 2_000, 20_000] };
+    let iters = if smoke() { 20 } else { 200 };
+    let mut t = Table::new(&["pool", "uniform", "weighted", "stratified"]);
+    for &n in sizes {
+        let pool: Vec<Candidate> = (0..n)
+            .map(|i| Candidate { name: format!("client-{i}"), weight: 1.0 + i as f64 })
+            .collect();
+        let mut row = vec![n.to_string()];
+        for strategy in [
+            SamplingStrategy::Uniform,
+            SamplingStrategy::WeightedBySamples,
+            SamplingStrategy::StickyStratified { strata: 8 },
+        ] {
+            let key = strategy.as_string();
+            let sampler = CohortSampler::new(ParticipationConfig {
+                sample_rate: 0.5,
+                strategy,
+                ..Default::default()
+            });
+            let mut round = 0u64;
+            let st = time_n(2, iters, || {
+                round += 1;
+                let cohort = sampler.sample(
+                    participation_round_key(1, 0, 0, round as usize),
+                    &pool,
+                );
+                std::hint::black_box(cohort);
+            });
+            row.push(fmt_s(st.mean));
+            report = report.set(&format!("sample_{key}_s_{n}"), st.mean);
+        }
+        t.row(&row);
+    }
+    t.print("cohort draw cost (q=0.5)");
+    report
+}
+
+fn round_close_bench(mut report: BenchReport) -> BenchReport {
+    let cohorts: &[usize] = if smoke() { &[10, 100] } else { &[10, 100, 1_000] };
+    let iters = if smoke() { 2 } else { 5 };
+    let mut t = Table::new(&["cohort", "pool", "round_close", "rounds/s"]);
+    for &k in cohorts {
+        let n = 2 * k;
+        let wm = WorkflowManager::test_mode_batched(n, registry(), 8, 4, 32);
+        let part = ParticipationConfig {
+            sample_rate: 0.5,
+            quorum: 0.8,
+            deadline_ms: 30_000,
+            strategy: SamplingStrategy::Uniform,
+            ..Default::default()
+        };
+        let sampler = CohortSampler::new(part);
+        let names: Vec<String> = (0..n).map(|i| format!("client-{i}")).collect();
+        let pool: Vec<Candidate> =
+            names.iter().map(|nm| Candidate::uniform(nm)).collect();
+        let mut round = 0usize;
+        let st = time_n(1, iters, || {
+            round += 1;
+            let cohort =
+                sampler.sample(participation_round_key(7, 0, 0, round), &pool);
+            let quorum = sampler.quorum_count(cohort.len());
+            let dict: BTreeMap<String, Json> = cohort
+                .into_iter()
+                .map(|c| (c, Json::obj().set("r", round)))
+                .collect();
+            let out = wm
+                .run_task_quorum(
+                    dict,
+                    "learn",
+                    quorum,
+                    Duration::from_secs(30),
+                    Duration::ZERO,
+                )
+                .expect("round");
+            assert!(out.results.len() >= quorum);
+            std::hint::black_box(out);
+        });
+        t.row(&[
+            k.to_string(),
+            n.to_string(),
+            fmt_s(st.mean),
+            format!("{:.1}", 1.0 / st.mean.max(1e-9)),
+        ]);
+        report = report
+            .set(&format!("round_close_s_{k}"), st.mean)
+            .set(&format!("rounds_per_s_{k}"), 1.0 / st.mean.max(1e-9));
+    }
+    t.print("round close latency (q=0.5, quorum=0.8, test mode)");
+    report
+}
+
+fn main() {
+    println!(
+        "bench_participation: smoke={} (BENCH_SMOKE=1 for CI mode)",
+        smoke()
+    );
+    let mut report = BenchReport::new("participation").set("smoke", smoke());
+    report = sampler_bench(report);
+    report = round_close_bench(report);
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write report: {e}"),
+    }
+}

@@ -77,6 +77,19 @@ impl Args {
             }),
         }
     }
+
+    /// A ratio option: must parse as a number in (0, 1] (sampling rates,
+    /// quorum fractions).
+    pub fn opt_ratio(&self, name: &str, default: f64) -> Result<f64> {
+        let v = self.opt_f64(name, default)?;
+        if v > 0.0 && v <= 1.0 {
+            Ok(v)
+        } else {
+            Err(FedError::Config(format!(
+                "--{name} expects a ratio in (0, 1], got {v}"
+            )))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +128,17 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("run --rounds ten");
         assert!(a.opt_usize("rounds", 0).is_err());
+    }
+
+    #[test]
+    fn ratio_option_enforces_range() {
+        let a = parse("run --sample-rate 0.25 --quorum 1.0");
+        assert!((a.opt_ratio("sample-rate", 1.0).unwrap() - 0.25).abs() < 1e-12);
+        assert!((a.opt_ratio("quorum", 1.0).unwrap() - 1.0).abs() < 1e-12);
+        assert!((a.opt_ratio("missing", 0.5).unwrap() - 0.5).abs() < 1e-12);
+        assert!(parse("run --q 0").opt_ratio("q", 1.0).is_err());
+        assert!(parse("run --q 1.5").opt_ratio("q", 1.0).is_err());
+        assert!(parse("run --q nope").opt_ratio("q", 1.0).is_err());
     }
 
     #[test]

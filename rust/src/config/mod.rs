@@ -206,6 +206,227 @@ impl FlConfig {
     }
 }
 
+/// How the participation cohort of a round is drawn from the client pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SamplingStrategy {
+    /// Fixed-size uniform without replacement: exactly
+    /// `dispatch_size(N)` clients per round.  Earns DP amplification at
+    /// the realized rate — NOTE this applies the Poisson-subsampling RDP
+    /// bound to a fixed-size draw, the standard production approximation
+    /// (tf-privacy / Opacus practice); [`SamplingStrategy::Poisson`]
+    /// matches the bound's hypothesis exactly, and an exact
+    /// without-replacement accountant is a ROADMAP follow-up.
+    Uniform,
+    /// Poisson subsampling: every client is included independently with
+    /// probability `sample_rate`, which is *exactly* the sampled
+    /// Gaussian mechanism the accountant's RDP bound is proved for.
+    /// Cohort size varies round to round (`over_provision`/`min_cohort`
+    /// do not apply); an empty draw falls back to one uniformly chosen
+    /// client so a round cannot abort.
+    Poisson,
+    /// Sample-count-weighted without replacement (Efraimidis–Spirakis
+    /// keys); weights are the last-known per-client sample counts.
+    WeightedBySamples,
+    /// Clients are hashed into `strata` buckets; each round takes a
+    /// session-stable priority slice round-robin across buckets, so the
+    /// cohort is *sticky* (stable round over round) while still spread
+    /// across strata.
+    StickyStratified { strata: usize },
+}
+
+impl SamplingStrategy {
+    /// Parse the wire/CLI string:
+    /// `uniform | poisson | weighted | stratified[:k]`.
+    pub fn parse(s: &str) -> Result<SamplingStrategy> {
+        match s {
+            "uniform" => Ok(SamplingStrategy::Uniform),
+            "poisson" => Ok(SamplingStrategy::Poisson),
+            "weighted" => Ok(SamplingStrategy::WeightedBySamples),
+            "stratified" => Ok(SamplingStrategy::StickyStratified { strata: 4 }),
+            s if s.starts_with("stratified:") => {
+                // a malformed strata count must error, not silently run a
+                // different stratification than the user asked for
+                let k = &s["stratified:".len()..];
+                let strata: usize = k.parse().map_err(|_| {
+                    FedError::Config(format!(
+                        "bad strata count '{k}' in sampling strategy '{s}'"
+                    ))
+                })?;
+                Ok(SamplingStrategy::StickyStratified { strata: strata.max(1) })
+            }
+            other => Err(FedError::Config(format!(
+                "unknown sampling strategy '{other}' \
+                 (expected uniform | poisson | weighted | stratified[:k])"
+            ))),
+        }
+    }
+
+    pub fn as_string(&self) -> String {
+        match self {
+            SamplingStrategy::Uniform => "uniform".into(),
+            SamplingStrategy::Poisson => "poisson".into(),
+            SamplingStrategy::WeightedBySamples => "weighted".into(),
+            SamplingStrategy::StickyStratified { strata } => {
+                format!("stratified:{strata}")
+            }
+        }
+    }
+
+    /// Whether the sampling rate may be claimed as DP
+    /// amplification-by-subsampling.  Poisson sampling satisfies the
+    /// subsampled-Gaussian RDP theorem exactly; fixed-size uniform
+    /// applies the same bound as the standard production approximation
+    /// (see the variant docs).  Weighted sampling is data-dependent and
+    /// sticky cohorts are not resampled at all, so both account at q = 1
+    /// (no amplification — conservative).
+    pub fn amplifies(&self) -> bool {
+        matches!(self, SamplingStrategy::Uniform | SamplingStrategy::Poisson)
+    }
+}
+
+/// Partial-participation round configuration: cohort sampling, quorum and
+/// deadline semantics.  Shared by the FACT server, the CLI, and the DART
+/// REST round-config endpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParticipationConfig {
+    /// Target sampling rate q ∈ (0, 1]: each round addresses ⌈q·N⌉ of the
+    /// N pool clients.
+    pub sample_rate: f64,
+    /// Over-provisioning factor ≥ 1 applied to the target cohort before
+    /// dispatch (extra clients absorb expected dropouts).
+    pub over_provision: f64,
+    /// Fraction of the dispatched cohort that must report before the
+    /// round closes early (K-of-N).
+    pub quorum: f64,
+    /// Round deadline in milliseconds; 0 falls back to the server's
+    /// round timeout.  The round closes at quorum or deadline, whichever
+    /// comes first; results arriving later are dropped.
+    pub deadline_ms: u64,
+    /// Post-close window in which late arrivals are still *observed* (and
+    /// counted in metrics) before being discarded.  0 skips the sweep.
+    pub late_grace_ms: u64,
+    /// Floor on the cohort size (clamped to the pool size).
+    pub min_cohort: usize,
+    pub strategy: SamplingStrategy,
+    /// Session seed; every round's draw is `splitmix64`-derived from it,
+    /// so cohorts are reproducible given (seed, clustering round,
+    /// cluster, round).
+    pub seed: u64,
+}
+
+impl Default for ParticipationConfig {
+    fn default() -> Self {
+        ParticipationConfig {
+            sample_rate: 1.0,
+            over_provision: 1.0,
+            quorum: 1.0,
+            deadline_ms: 0,
+            late_grace_ms: 0,
+            min_cohort: 1,
+            strategy: SamplingStrategy::Uniform,
+            seed: 0x5eed_c0c0_a11e_d000,
+        }
+    }
+}
+
+impl ParticipationConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.sample_rate > 0.0 && self.sample_rate <= 1.0) {
+            return Err(FedError::Config(format!(
+                "sample_rate must be in (0, 1], got {}",
+                self.sample_rate
+            )));
+        }
+        if !(self.quorum > 0.0 && self.quorum <= 1.0) {
+            return Err(FedError::Config(format!(
+                "quorum must be in (0, 1], got {}",
+                self.quorum
+            )));
+        }
+        if !(self.over_provision >= 1.0) {
+            return Err(FedError::Config(format!(
+                "over_provision must be >= 1, got {}",
+                self.over_provision
+            )));
+        }
+        if self.min_cohort == 0 {
+            return Err(FedError::Config("min_cohort must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Clamp every field into its valid range (the server-side grant for
+    /// REST-negotiated configs — the granted values are authoritative).
+    pub fn normalized(mut self) -> ParticipationConfig {
+        self.sample_rate = self.sample_rate.clamp(1e-6, 1.0);
+        self.quorum = self.quorum.clamp(1e-6, 1.0);
+        self.over_provision = self.over_provision.max(1.0);
+        self.min_cohort = self.min_cohort.max(1);
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("sample_rate", self.sample_rate)
+            .set("over_provision", self.over_provision)
+            .set("quorum", self.quorum)
+            .set("deadline_ms", self.deadline_ms)
+            .set("late_grace_ms", self.late_grace_ms)
+            .set("min_cohort", self.min_cohort)
+            .set("strategy", self.strategy.as_string())
+            // decimal string: JSON numbers are f64 and silently corrupt
+            // u64 seeds above 2^53 (the round-id hex precedent)
+            .set("seed", self.seed.to_string())
+    }
+
+    pub fn from_json(j: &Json) -> Result<ParticipationConfig> {
+        let d = ParticipationConfig::default();
+        Ok(ParticipationConfig {
+            sample_rate: j
+                .get("sample_rate")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.sample_rate),
+            over_provision: j
+                .get("over_provision")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.over_provision),
+            quorum: j.get("quorum").and_then(Json::as_f64).unwrap_or(d.quorum),
+            // negative wire values must clamp to 0, not wrap to ~u64::MAX
+            // (a wrapped deadline never fires; a wrapped grace sleeps the
+            // round thread effectively forever)
+            deadline_ms: j
+                .get("deadline_ms")
+                .and_then(Json::as_i64)
+                .unwrap_or(d.deadline_ms as i64)
+                .max(0) as u64,
+            late_grace_ms: j
+                .get("late_grace_ms")
+                .and_then(Json::as_i64)
+                .unwrap_or(d.late_grace_ms as i64)
+                .max(0) as u64,
+            min_cohort: j
+                .get("min_cohort")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.min_cohort),
+            strategy: match j.get("strategy").and_then(Json::as_str) {
+                Some(s) => SamplingStrategy::parse(s)?,
+                None => d.strategy,
+            },
+            seed: match j.get("seed") {
+                None => d.seed,
+                // string form is exact for the full u64 range
+                Some(v) => match v.as_str() {
+                    Some(s) => s.parse().map_err(|_| {
+                        FedError::Config(format!("bad participation seed '{s}'"))
+                    })?,
+                    // legacy numeric form: best effort, negatives clamp
+                    None => v.as_i64().unwrap_or(d.seed as i64).max(0) as u64,
+                },
+            },
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +487,84 @@ mod tests {
         assert!((c.mu - 0.1).abs() < 1e-6);
         assert_eq!(c.model, "mlp_default");
         assert_eq!(c.local_steps, 4);
+    }
+
+    #[test]
+    fn sampling_strategy_parse_roundtrip() {
+        for s in [
+            SamplingStrategy::Uniform,
+            SamplingStrategy::Poisson,
+            SamplingStrategy::WeightedBySamples,
+            SamplingStrategy::StickyStratified { strata: 3 },
+        ] {
+            assert_eq!(SamplingStrategy::parse(&s.as_string()).unwrap(), s);
+        }
+        assert_eq!(
+            SamplingStrategy::parse("stratified").unwrap(),
+            SamplingStrategy::StickyStratified { strata: 4 }
+        );
+        assert!(SamplingStrategy::parse("lottery").is_err());
+        // malformed strata counts error instead of silently defaulting
+        assert!(SamplingStrategy::parse("stratified:ten").is_err());
+        assert!(SamplingStrategy::parse("stratified-8").is_err());
+        assert_eq!(
+            SamplingStrategy::parse("stratified:0").unwrap(),
+            SamplingStrategy::StickyStratified { strata: 1 }
+        );
+        assert!(SamplingStrategy::Uniform.amplifies());
+        assert!(SamplingStrategy::Poisson.amplifies());
+        assert!(!SamplingStrategy::WeightedBySamples.amplifies());
+        assert!(!SamplingStrategy::StickyStratified { strata: 2 }.amplifies());
+    }
+
+    #[test]
+    fn participation_config_json_roundtrip_and_validation() {
+        let cfg = ParticipationConfig {
+            sample_rate: 0.25,
+            over_provision: 1.5,
+            quorum: 0.75,
+            deadline_ms: 2_000,
+            late_grace_ms: 100,
+            min_cohort: 3,
+            strategy: SamplingStrategy::StickyStratified { strata: 2 },
+            // above 2^53 AND bit 63 set: a numeric JSON roundtrip would
+            // corrupt this; the string form must carry it exactly
+            seed: 0xC0FF_EE01_2345_6789,
+        };
+        cfg.validate().unwrap();
+        let back = ParticipationConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.seed, 0xC0FF_EE01_2345_6789);
+        // legacy numeric seeds still parse (best effort)
+        let num = ParticipationConfig::from_json(&Json::obj().set("seed", 42))
+            .unwrap();
+        assert_eq!(num.seed, 42);
+        assert!(ParticipationConfig::from_json(
+            &Json::obj().set("seed", "not-a-number")
+        )
+        .is_err());
+        // defaults fill missing fields and validate
+        let d = ParticipationConfig::from_json(&Json::obj()).unwrap();
+        assert_eq!(d, ParticipationConfig::default());
+        d.validate().unwrap();
+        // bad strategy string is an error, bad numbers fail validation
+        assert!(ParticipationConfig::from_json(
+            &Json::obj().set("strategy", "lottery")
+        )
+        .is_err());
+        let bad = ParticipationConfig { sample_rate: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        assert!(bad.clone().normalized().validate().is_ok());
+        let bad_q = ParticipationConfig { quorum: 1.5, ..Default::default() };
+        assert!(bad_q.validate().is_err());
+        assert!((bad_q.normalized().quorum - 1.0).abs() < 1e-12);
+        // negative millisecond fields clamp to 0 instead of wrapping
+        let neg = ParticipationConfig::from_json(
+            &Json::obj().set("deadline_ms", -1).set("late_grace_ms", -500),
+        )
+        .unwrap();
+        assert_eq!(neg.deadline_ms, 0);
+        assert_eq!(neg.late_grace_ms, 0);
     }
 
     #[test]

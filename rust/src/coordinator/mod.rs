@@ -8,15 +8,19 @@
 //!   the parallel weighted reduction (§A.2, ephemeral).
 //! * [`device`] — `DeviceSingle` / `DeviceHolder` caches (§A.2).
 //! * [`task`] — task representation + the `check` function (§A.2).
+//! * [`participation`] — deterministic cohort sampling for
+//!   partial-participation rounds (uniform / weighted / sticky-stratified).
 
 pub mod aggregator;
 pub mod device;
+pub mod participation;
 pub mod selector;
 pub mod task;
 pub mod workflow;
 
 pub use aggregator::{flat_reduce_weighted, parallel_reduce_weighted, tree_reduce_weighted, Aggregator};
 pub use device::{DeviceHolder, DeviceSingle};
+pub use participation::{participation_round_key, Candidate, CohortSampler};
 pub use selector::{InitTask, Selector, WfTaskStatus};
 pub use task::{Task, TaskHandle, TaskKind};
-pub use workflow::WorkflowManager;
+pub use workflow::{QuorumOutcome, RoundClose, WorkflowManager};

@@ -1,0 +1,407 @@
+//! Cohort sampling for partial-participation rounds.
+//!
+//! Cross-device FL at production scale cannot address every alive client
+//! each round: a round over-provisions a sampled cohort of ⌈q·N⌉ clients
+//! and closes on a K-of-N quorum/deadline instead of waiting for
+//! stragglers (Nguyen et al., *FL for IIoT*; Zhang et al., *EdgeFL*).
+//! [`CohortSampler`] is the deterministic draw behind that: seeded per
+//! round from [`crate::util::rng`], so a (seed, clustering round,
+//! cluster, round) tuple always reproduces the same cohort — the property
+//! the participation integration tests and the DP accountant both rely
+//! on.
+//!
+//! Three strategies (see [`SamplingStrategy`]): uniform (the only one
+//! that earns DP amplification-by-subsampling), weighted-by-samples
+//! (Efraimidis–Spirakis keys over last-known client sample counts), and
+//! sticky-stratified (hash strata, session-stable priorities — stable
+//! cohorts for warm-client locality).
+
+use crate::config::{ParticipationConfig, SamplingStrategy};
+use crate::util::rng::{fnv1a, splitmix64, Rng};
+
+/// One pool member offered to the sampler.  `weight` is the last-known
+/// sample count (1.0 when unknown); only [`SamplingStrategy::WeightedBySamples`]
+/// reads it.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub name: String,
+    pub weight: f64,
+}
+
+impl Candidate {
+    pub fn uniform(name: &str) -> Candidate {
+        Candidate { name: name.to_string(), weight: 1.0 }
+    }
+}
+
+/// Deterministic per-round draw key: every field shifts a disjoint bit
+/// range so distinct (clustering round, cluster, round) tuples never
+/// collide before the splitmix avalanche.
+pub fn participation_round_key(
+    seed: u64,
+    clustering_round: usize,
+    cluster_id: usize,
+    round: usize,
+) -> u64 {
+    splitmix64(
+        seed ^ ((clustering_round as u64) << 42)
+            ^ ((cluster_id as u64) << 21)
+            ^ round as u64,
+    )
+}
+
+fn name_hash(name: &str) -> u64 {
+    splitmix64(fnv1a(name))
+}
+
+/// The cohort sampler: pure function of (config, round key, pool).
+#[derive(Debug, Clone)]
+pub struct CohortSampler {
+    cfg: ParticipationConfig,
+}
+
+impl CohortSampler {
+    pub fn new(cfg: ParticipationConfig) -> CohortSampler {
+        CohortSampler { cfg }
+    }
+
+    pub fn config(&self) -> &ParticipationConfig {
+        &self.cfg
+    }
+
+    /// Target cohort size for a pool of `n`: ⌈q·n⌉, floored by
+    /// `min_cohort`, capped at the pool.
+    pub fn target(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let t = (self.cfg.sample_rate * n as f64).ceil() as usize;
+        t.max(self.cfg.min_cohort).max(1).min(n)
+    }
+
+    /// Dispatch size: the target inflated by `over_provision`, capped at
+    /// the pool.
+    pub fn dispatch_size(&self, n: usize) -> usize {
+        let t = self.target(n);
+        (((t as f64) * self.cfg.over_provision).ceil() as usize).clamp(t, n)
+    }
+
+    /// Reports needed before the round may close early: ⌈quorum·cohort⌉.
+    pub fn quorum_count(&self, cohort: usize) -> usize {
+        if cohort == 0 {
+            return 0;
+        }
+        ((self.cfg.quorum * cohort as f64).ceil() as usize).clamp(1, cohort)
+    }
+
+    /// The sampling rate the DP accountant may claim for a cohort drawn
+    /// from a pool of `n`: the configured inclusion probability for
+    /// Poisson draws (the quantity the RDP bound is stated in — NOT the
+    /// realized cohort fraction), the realized q for fixed-size uniform
+    /// draws (standard approximation, see [`SamplingStrategy`]), and 1.0
+    /// (no amplification) for the data-dependent / sticky strategies.
+    pub fn amplification_rate(&self, cohort: usize, n: usize) -> f64 {
+        match self.cfg.strategy {
+            SamplingStrategy::Poisson => {
+                let q = self.cfg.sample_rate.clamp(0.0, 1.0);
+                if n > 0 {
+                    // the empty-draw fallback (see `sample`) force-includes
+                    // one uniformly chosen client with probability
+                    // (1-q)^n, raising each client's true inclusion
+                    // probability — charge the corrected rate, not the
+                    // configured one, or small pools under-report ε
+                    (q + (1.0 - q).powi(n as i32) / n as f64).min(1.0)
+                } else {
+                    q
+                }
+            }
+            SamplingStrategy::Uniform if n > 0 => {
+                (cohort as f64 / n as f64).min(1.0)
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Draw this round's dispatch cohort.  Deterministic in
+    /// (config, `round_key`, pool contents) and independent of the
+    /// caller's pool ordering.
+    pub fn sample(&self, round_key: u64, pool: &[Candidate]) -> Vec<String> {
+        let mut pool: Vec<&Candidate> = pool.iter().collect();
+        pool.sort_by(|a, b| a.name.cmp(&b.name));
+        pool.dedup_by(|a, b| a.name == b.name);
+        let n = pool.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.cfg.strategy == SamplingStrategy::Poisson {
+            // independent per-client inclusion at exactly `sample_rate` —
+            // the sampled Gaussian mechanism the accountant's bound is
+            // proved for.  One uniform draw per (sorted) candidate keeps
+            // the result deterministic and pool-order-independent.
+            let q = self.cfg.sample_rate.clamp(0.0, 1.0);
+            let mut rng = Rng::new(round_key);
+            let mut picked: Vec<String> = pool
+                .iter()
+                .filter(|_| rng.uniform() < q)
+                .map(|c| c.name.clone())
+                .collect();
+            if picked.is_empty() {
+                // probability (1-q)^n — fall back to one client rather
+                // than abort the round; `amplification_rate` charges the
+                // correspondingly raised inclusion probability
+                picked.push(pool[rng.below(n)].name.clone());
+            }
+            return picked;
+        }
+        let k = self.dispatch_size(n);
+        if k >= n {
+            return pool.into_iter().map(|c| c.name.clone()).collect();
+        }
+        match self.cfg.strategy {
+            // handled by the early return above
+            SamplingStrategy::Poisson => unreachable!("poisson draws early-return"),
+            SamplingStrategy::Uniform => {
+                // partial Fisher-Yates: the first k slots of a seeded
+                // shuffle are a uniform k-subset
+                let mut rng = Rng::new(round_key);
+                let mut idx: Vec<usize> = (0..n).collect();
+                for i in 0..k {
+                    let j = i + rng.below(n - i);
+                    idx.swap(i, j);
+                }
+                idx[..k].iter().map(|&i| pool[i].name.clone()).collect()
+            }
+            SamplingStrategy::WeightedBySamples => {
+                // Efraimidis–Spirakis: key_i = u_i^(1/w_i); the top-k keys
+                // are a weighted-without-replacement sample
+                let mut rng = Rng::new(round_key);
+                let mut keyed: Vec<(f64, usize)> = pool
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        let u = rng.uniform().max(1e-300);
+                        (u.powf(1.0 / c.weight.max(1e-9)), i)
+                    })
+                    .collect();
+                keyed.sort_by(|a, b| {
+                    b.0.partial_cmp(&a.0)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then_with(|| pool[a.1].name.cmp(&pool[b.1].name))
+                });
+                let mut picked: Vec<String> =
+                    keyed[..k].iter().map(|&(_, i)| pool[i].name.clone()).collect();
+                picked.sort();
+                picked
+            }
+            SamplingStrategy::StickyStratified { strata } => {
+                // hash into strata; inside each stratum order by a
+                // session-stable priority (seed, not round key), then take
+                // slots round-robin across strata — the cohort is stable
+                // from round to round ("sticky") yet spread across strata
+                let s = strata.max(1);
+                let mut buckets: Vec<Vec<&Candidate>> = vec![Vec::new(); s];
+                for c in &pool {
+                    buckets[(name_hash(&c.name) % s as u64) as usize].push(*c);
+                }
+                for b in buckets.iter_mut() {
+                    // cached: sort_by_key may re-evaluate (hash + String
+                    // clone) per comparison
+                    b.sort_by_cached_key(|c| {
+                        (splitmix64(self.cfg.seed ^ name_hash(&c.name)), c.name.clone())
+                    });
+                }
+                let mut picked = Vec::with_capacity(k);
+                let mut cursor = vec![0usize; s];
+                'outer: loop {
+                    let mut advanced = false;
+                    for (b, cur) in buckets.iter().zip(cursor.iter_mut()) {
+                        if let Some(c) = b.get(*cur) {
+                            *cur += 1;
+                            advanced = true;
+                            picked.push(c.name.clone());
+                            if picked.len() == k {
+                                break 'outer;
+                            }
+                        }
+                    }
+                    if !advanced {
+                        break;
+                    }
+                }
+                picked.sort();
+                picked
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(rate: f64, strategy: SamplingStrategy) -> ParticipationConfig {
+        ParticipationConfig {
+            sample_rate: rate,
+            strategy,
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    fn pool(n: usize) -> Vec<Candidate> {
+        (0..n).map(|i| Candidate::uniform(&format!("client-{i}"))).collect()
+    }
+
+    #[test]
+    fn sizes_target_dispatch_quorum() {
+        let s = CohortSampler::new(ParticipationConfig {
+            sample_rate: 0.25,
+            over_provision: 1.5,
+            quorum: 0.75,
+            min_cohort: 2,
+            ..Default::default()
+        });
+        assert_eq!(s.target(16), 4);
+        assert_eq!(s.dispatch_size(16), 6); // ceil(4 * 1.5)
+        assert_eq!(s.quorum_count(6), 5); // ceil(0.75 * 6)
+        // min_cohort floors, pool caps
+        assert_eq!(s.target(4), 2);
+        assert_eq!(s.target(1), 1);
+        assert_eq!(s.target(0), 0);
+        assert_eq!(s.dispatch_size(4), 3);
+        assert_eq!(s.quorum_count(0), 0);
+    }
+
+    #[test]
+    fn uniform_deterministic_and_round_varying() {
+        let s = CohortSampler::new(cfg(0.5, SamplingStrategy::Uniform));
+        let p = pool(12);
+        let a = s.sample(participation_round_key(42, 0, 0, 0), &p);
+        let b = s.sample(participation_round_key(42, 0, 0, 0), &p);
+        assert_eq!(a, b, "same key must reproduce the cohort");
+        assert_eq!(a.len(), 6);
+        // pool order must not matter
+        let mut rev = p.clone();
+        rev.reverse();
+        assert_eq!(s.sample(participation_round_key(42, 0, 0, 0), &rev), a);
+        // different rounds draw different cohorts (with overwhelming prob.)
+        let later: Vec<Vec<String>> = (1..6)
+            .map(|r| s.sample(participation_round_key(42, 0, 0, r), &p))
+            .collect();
+        assert!(later.iter().any(|c| *c != a), "cohort never rotated");
+    }
+
+    #[test]
+    fn uniform_coverage_is_roughly_q() {
+        // every client should be sampled ~q of the time over many rounds
+        let s = CohortSampler::new(cfg(0.5, SamplingStrategy::Uniform));
+        let p = pool(12);
+        let rounds = 400;
+        let mut hits = std::collections::BTreeMap::<String, usize>::new();
+        for r in 0..rounds {
+            for name in s.sample(participation_round_key(7, 0, 0, r), &p) {
+                *hits.entry(name).or_default() += 1;
+            }
+        }
+        for (name, h) in hits {
+            assert!(
+                (120..=280).contains(&h),
+                "client {name} sampled {h}/{rounds} times at q=0.5"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_clients() {
+        let mut p = pool(10);
+        p[0].weight = 50.0; // client-0 carries 50x the samples
+        let s = CohortSampler::new(cfg(0.3, SamplingStrategy::WeightedBySamples));
+        let rounds = 200;
+        let mut heavy = 0;
+        let mut light = 0;
+        for r in 0..rounds {
+            let c = s.sample(participation_round_key(3, 0, 0, r), &p);
+            assert_eq!(c.len(), 3);
+            if c.iter().any(|n| n == "client-0") {
+                heavy += 1;
+            }
+            if c.iter().any(|n| n == "client-1") {
+                light += 1;
+            }
+        }
+        assert!(
+            heavy > 2 * light,
+            "heavy client sampled {heavy}, light {light}"
+        );
+    }
+
+    #[test]
+    fn sticky_stratified_is_stable_across_rounds() {
+        let s = CohortSampler::new(cfg(
+            0.5,
+            SamplingStrategy::StickyStratified { strata: 3 },
+        ));
+        let p = pool(12);
+        let first = s.sample(participation_round_key(42, 0, 0, 0), &p);
+        assert_eq!(first.len(), 6);
+        for r in 1..10 {
+            assert_eq!(
+                s.sample(participation_round_key(42, 0, 0, r), &p),
+                first,
+                "sticky cohort drifted at round {r}"
+            );
+        }
+        // a different session seed picks a different cohort
+        let other = CohortSampler::new(ParticipationConfig {
+            seed: 43,
+            ..cfg(0.5, SamplingStrategy::StickyStratified { strata: 3 })
+        });
+        assert_ne!(other.sample(participation_round_key(43, 0, 0, 0), &p), first);
+    }
+
+    #[test]
+    fn poisson_draws_independently_at_rate_q() {
+        let s = CohortSampler::new(cfg(0.25, SamplingStrategy::Poisson));
+        let p = pool(16);
+        let a = s.sample(participation_round_key(5, 0, 0, 0), &p);
+        let b = s.sample(participation_round_key(5, 0, 0, 0), &p);
+        assert_eq!(a, b, "same key must reproduce the draw");
+        assert!(!a.is_empty(), "empty-draw fallback must fire");
+        // mean cohort size over many rounds ≈ q·n = 4
+        let rounds = 500;
+        let total: usize = (0..rounds)
+            .map(|r| s.sample(participation_round_key(5, 0, 0, r), &p).len())
+            .sum();
+        let mean = total as f64 / rounds as f64;
+        assert!(
+            (3.0..=5.0).contains(&mean),
+            "poisson mean cohort {mean}, expected ~4"
+        );
+        // accountant claims the inclusion probability corrected for the
+        // empty-draw fallback: q + (1-q)^n / n
+        let expect = 0.25 + 0.75f64.powi(16) / 16.0;
+        assert!((s.amplification_rate(7, 16) - expect).abs() < 1e-12);
+        assert!(s.amplification_rate(7, 16) > 0.25);
+    }
+
+    #[test]
+    fn amplification_only_for_uniform() {
+        let u = CohortSampler::new(cfg(0.25, SamplingStrategy::Uniform));
+        assert!((u.amplification_rate(4, 16) - 0.25).abs() < 1e-12);
+        let w = CohortSampler::new(cfg(0.25, SamplingStrategy::WeightedBySamples));
+        assert_eq!(w.amplification_rate(4, 16), 1.0);
+        let st = CohortSampler::new(cfg(
+            0.25,
+            SamplingStrategy::StickyStratified { strata: 2 },
+        ));
+        assert_eq!(st.amplification_rate(4, 16), 1.0);
+    }
+
+    #[test]
+    fn full_rate_returns_whole_pool() {
+        let s = CohortSampler::new(cfg(1.0, SamplingStrategy::Uniform));
+        let p = pool(5);
+        let c = s.sample(participation_round_key(1, 0, 0, 0), &p);
+        assert_eq!(c.len(), 5);
+    }
+}

@@ -71,6 +71,11 @@ pub struct Selector {
     /// poll costs O(active tasks) instead of O(all tasks ever submitted)
     /// (§Perf: this was the dominant REST-path overhead after ~10 rounds)
     terminal: Mutex<BTreeMap<TaskHandle, WfTaskStatus>>,
+    /// serializes initTask scheduling: concurrent submits must not both
+    /// observe a device as uninitialized and double-run init (Alg 1)
+    init_lock: Mutex<()>,
+    /// aggregators ever created (dispatch successes), for observability
+    aggregators_created: AtomicU64,
     /// backend capacity: max tasks dispatched concurrently
     max_concurrent: usize,
     fanout: usize,
@@ -86,6 +91,8 @@ impl Selector {
             init_task: Mutex::new(None),
             next_handle: AtomicU64::new(1),
             terminal: Mutex::new(BTreeMap::new()),
+            init_lock: Mutex::new(()),
+            aggregators_created: AtomicU64::new(0),
             max_concurrent: 16,
             fanout: DEFAULT_FANOUT,
         }
@@ -174,6 +181,12 @@ impl Selector {
     /// Dispatch queued tasks while the backend has capacity.
     pub fn pump(&self) -> Result<()> {
         loop {
+            // nothing queued — skip the running-count probe entirely (it
+            // costs one backend status RPC per in-flight task, and pump
+            // runs on every poll of every quorum loop)
+            if self.queue.lock().unwrap().is_empty() {
+                return Ok(());
+            }
             // count running (settled tasks resolve from the cache)
             let running = {
                 let entries: Vec<(TaskHandle, Arc<Aggregator>)> = {
@@ -210,17 +223,22 @@ impl Selector {
             };
             match self.dispatch(handle, task) {
                 Ok(agg) => {
+                    self.aggregators_created.fetch_add(1, Ordering::Relaxed);
                     self.slots.lock().unwrap().insert(handle, Slot::Running(agg));
                 }
                 Err(e) => {
-                    // dispatch failure surfaces when the user polls
+                    // A dispatch failure is THAT task's failure, not the
+                    // pumping caller's: propagating it here failed a
+                    // freshly *accepted* submit whenever an unrelated
+                    // queued task could not dispatch.  The failed handle
+                    // surfaces `Stopped` on poll; keep pumping the queue.
                     log::error!(target: "coordinator::selector",
                         "dispatch of {handle} failed: {e}");
                     self.slots
                         .lock()
                         .unwrap()
                         .insert(handle, Slot::StoppedBeforeDispatch);
-                    return Err(e);
+                    continue;
                 }
             }
         }
@@ -249,6 +267,28 @@ impl Selector {
     pub fn ensure_initialized(&self, clients: &[String]) -> Result<()> {
         let init = self.init_task.lock().unwrap().clone();
         let Some(init) = init else { return Ok(()) };
+        // Fast path: initialized flags are only ever set AFTER an init
+        // task finished, so observing every addressed client initialized
+        // is proof there is nothing to schedule — return without touching
+        // the init lock.  Otherwise a submit for long-initialized clients
+        // would convoy behind an unrelated in-flight init for up to the
+        // full bounded wait.
+        {
+            let holder = self.devices.lock().unwrap();
+            let all_done = clients.iter().all(|c| {
+                holder.get(c).map(|d| d.is_initialized()).unwrap_or(true)
+            });
+            if all_done {
+                return Ok(());
+            }
+        }
+        // Serialize init scheduling end to end: without this, two
+        // concurrent submits both read `!is_initialized()` and schedule
+        // the initTask twice to the same clients, violating Alg. 1's
+        // "init exactly once".  The second comer blocks here until the
+        // first init completes, then re-reads the updated flags and
+        // finds nothing pending.
+        let _init_guard = self.init_lock.lock().unwrap();
         let pending: Vec<String> = {
             let holder = self.devices.lock().unwrap();
             clients
@@ -329,6 +369,58 @@ impl Selector {
         agg.sync_results(self.api.as_ref())
     }
 
+    /// Number of results available for a handle — the payload-free poll
+    /// quorum loops use (the full `results` fetch clones every client's
+    /// parameter tensors; over REST it re-downloads them).
+    pub fn result_count(&self, handle: TaskHandle) -> Result<usize> {
+        self.pump().ok();
+        let id = {
+            let slots = self.slots.lock().unwrap();
+            match slots.get(&handle) {
+                None => {
+                    return Err(FedError::Task(format!(
+                        "unknown handle {handle}"
+                    )))
+                }
+                Some(Slot::Queued(_)) | Some(Slot::StoppedBeforeDispatch) => {
+                    return Ok(0)
+                }
+                Some(Slot::Running(agg)) => agg.scheduler_id(),
+            }
+        };
+        self.api.result_count(id)
+    }
+
+    /// Status + result count in one backend query (with the terminal
+    /// cache): what a quorum loop polls every couple of milliseconds.
+    pub fn progress(&self, handle: TaskHandle) -> Result<(WfTaskStatus, usize)> {
+        self.pump().ok();
+        let id = {
+            let slots = self.slots.lock().unwrap();
+            match slots.get(&handle) {
+                None => {
+                    return Err(FedError::Task(format!(
+                        "unknown handle {handle}"
+                    )))
+                }
+                Some(Slot::Queued(_)) => return Ok((WfTaskStatus::Queued, 0)),
+                Some(Slot::StoppedBeforeDispatch) => {
+                    return Ok((WfTaskStatus::Stopped, 0))
+                }
+                Some(Slot::Running(agg)) => agg.scheduler_id(),
+            }
+        };
+        if let Some(st) = self.terminal.lock().unwrap().get(&handle).copied() {
+            return Ok((st, self.api.result_count(id)?));
+        }
+        let (st, n) = self.api.progress(id)?;
+        let wf: WfTaskStatus = st.into();
+        if wf != WfTaskStatus::InProgress {
+            self.terminal.lock().unwrap().insert(handle, wf);
+        }
+        Ok((wf, n))
+    }
+
     /// Stop a task (queued or running).
     pub fn stop(&self, handle: TaskHandle) -> Result<()> {
         let mut slots = self.slots.lock().unwrap();
@@ -351,14 +443,29 @@ impl Selector {
         }
     }
 
-    /// Number of aggregators ever created (observability).
+    /// Number of aggregators ever created (observability).  Counted at
+    /// dispatch time — the slot map also holds queued and
+    /// stopped-before-dispatch handles, so filtering it for `Running`
+    /// undercounted whenever dispatches failed and would stop matching
+    /// "ever created" the moment slots are ever pruned.
     pub fn aggregator_count(&self) -> usize {
-        self.slots
-            .lock()
-            .unwrap()
-            .values()
-            .filter(|s| matches!(s, Slot::Running(_)))
-            .count()
+        self.aggregators_created.load(Ordering::Relaxed) as usize
+    }
+
+    /// Sample a participation cohort from the currently alive devices
+    /// (uniform candidate weights — the coordinator has no sample counts;
+    /// the FACT server feeds observed per-client weights instead).
+    pub fn sample_cohort(
+        &self,
+        sampler: &crate::coordinator::participation::CohortSampler,
+        round_key: u64,
+    ) -> Result<Vec<String>> {
+        let pool: Vec<crate::coordinator::participation::Candidate> = self
+            .device_names()?
+            .iter()
+            .map(|n| crate::coordinator::participation::Candidate::uniform(n))
+            .collect();
+        Ok(sampler.sample(round_key, &pool))
     }
 }
 
@@ -505,6 +612,188 @@ mod tests {
         wait(&sel, h);
         assert!(sel.stop(h).is_ok());
         assert!(sel.status(TaskHandle(999)).is_err());
+    }
+
+    /// Backend wrapper whose `submit` fails for one function name —
+    /// simulates a dispatch error for a specific queued task.
+    struct FailingSubmit {
+        inner: Arc<TestModeDart>,
+        fail_fn: &'static str,
+    }
+
+    impl crate::dart::DartApi for FailingSubmit {
+        fn devices(&self) -> Result<Vec<crate::dart::DeviceInfo>> {
+            self.inner.devices()
+        }
+        fn submit(&self, spec: crate::dart::scheduler::TaskSpec) -> Result<u64> {
+            if spec.function == self.fail_fn {
+                return Err(FedError::Task("backend rejected spec".into()));
+            }
+            self.inner.submit(spec)
+        }
+        fn status(&self, id: u64) -> Result<TaskStatus> {
+            self.inner.status(id)
+        }
+        fn results(&self, id: u64) -> Result<Vec<TaskResult>> {
+            self.inner.results(id)
+        }
+        fn stop_task(&self, id: u64) -> Result<()> {
+            self.inner.stop_task(id)
+        }
+    }
+
+    /// Regression (PR 4): a queued task whose dispatch fails must not fail
+    /// the unrelated submit that happened to pump the queue — the new
+    /// handle is returned, the failed handle polls as `Stopped`.
+    #[test]
+    fn queued_dispatch_failure_does_not_fail_unrelated_submit() {
+        let reg = registry();
+        reg.register("sleepy", |p| {
+            std::thread::sleep(Duration::from_millis(150));
+            Ok(p.clone())
+        });
+        // "bad" never runs — the wrapped backend rejects its spec
+        reg.register("bad", |p| Ok(p.clone()));
+        let sim = Arc::new(TestModeDart::start_reliable(2, reg, 2));
+        let api = Arc::new(FailingSubmit { inner: sim, fail_fn: "bad" });
+        let sel = Selector::new(api as Arc<dyn crate::dart::DartApi>)
+            .with_capacity(1);
+        let names = sel.device_names().unwrap();
+
+        // occupy the single slot so the next submit only queues
+        let _slow = sel
+            .submit(Task::new(TaskKind::Default, "sleepy", dict(&names)))
+            .unwrap();
+        let doomed = sel
+            .submit(Task::new(TaskKind::Default, "bad", dict(&names)))
+            .unwrap();
+        // let the slow task finish WITHOUT polling (polling would pump
+        // the queue early); the next submit is then the first pump that
+        // sees free capacity and dispatches the doomed task
+        std::thread::sleep(Duration::from_millis(400));
+
+        // pumping for this unrelated submit dispatches (and fails) the
+        // queued "bad" task; the submit itself must still succeed
+        let fresh = sel
+            .submit(Task::new(TaskKind::Default, "learn", dict(&names)))
+            .expect("unrelated submit must not absorb the dispatch failure");
+        assert_eq!(wait(&sel, fresh), WfTaskStatus::Finished);
+        assert_eq!(sel.status(doomed).unwrap(), WfTaskStatus::Stopped);
+    }
+
+    /// Regression (PR 4): two concurrent submits must not both schedule
+    /// the initTask to the same clients (Alg. 1 "init exactly once").
+    #[test]
+    fn concurrent_submits_run_init_exactly_once() {
+        for attempt in 0..5 {
+            let init_calls: Arc<Mutex<BTreeMap<String, usize>>> =
+                Arc::new(Mutex::new(BTreeMap::new()));
+            let reg = TaskRegistry::new();
+            {
+                let init_calls = Arc::clone(&init_calls);
+                reg.register("init", move |p| {
+                    let dev = p
+                        .get("_device")
+                        .and_then(Json::as_str)
+                        .unwrap_or("?")
+                        .to_string();
+                    // widen the race window the serialization must close
+                    std::thread::sleep(Duration::from_millis(10));
+                    *init_calls.lock().unwrap().entry(dev).or_insert(0) += 1;
+                    Ok(Json::Null)
+                });
+            }
+            reg.register("learn", |p| Ok(p.clone()));
+            let sim = Arc::new(TestModeDart::start_reliable(3, reg, 4));
+            let sel = Arc::new(Selector::new(sim as Arc<dyn DartApi>));
+            sel.set_init_task(InitTask {
+                execute_function: "init".into(),
+                shared_params: Json::obj().set("seed", attempt),
+            });
+            let names = sel.device_names().unwrap();
+
+            let barrier = Arc::new(std::sync::Barrier::new(2));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let sel = Arc::clone(&sel);
+                    let names = names.clone();
+                    let barrier = Arc::clone(&barrier);
+                    std::thread::spawn(move || {
+                        barrier.wait();
+                        let h = sel
+                            .submit(Task::new(
+                                TaskKind::Default,
+                                "learn",
+                                dict(&names),
+                            ))
+                            .unwrap();
+                        loop {
+                            let st = sel.status(h).unwrap();
+                            if st != WfTaskStatus::InProgress
+                                && st != WfTaskStatus::Queued
+                            {
+                                return st;
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), WfTaskStatus::Finished);
+            }
+            let calls = init_calls.lock().unwrap();
+            for name in &names {
+                assert_eq!(
+                    calls.get(name).copied().unwrap_or(0),
+                    1,
+                    "attempt {attempt}: init ran {:?} times on {name}",
+                    calls.get(name)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aggregator_count_is_ever_created_not_currently_running() {
+        let (sel, _sim) = selector(2);
+        let names = sel.device_names().unwrap();
+        for _ in 0..3 {
+            let h = sel
+                .submit(Task::new(TaskKind::Default, "learn", dict(&names)))
+                .unwrap();
+            assert_eq!(wait(&sel, h), WfTaskStatus::Finished);
+        }
+        // all three settled long ago — the count still reports 3
+        assert_eq!(sel.aggregator_count(), 3);
+    }
+
+    #[test]
+    fn sample_cohort_draws_from_alive_devices() {
+        use crate::config::ParticipationConfig;
+        use crate::coordinator::participation::{
+            participation_round_key, CohortSampler,
+        };
+        let (sel, sim) = selector(8);
+        let sampler = CohortSampler::new(ParticipationConfig {
+            sample_rate: 0.5,
+            ..Default::default()
+        });
+        let cohort = sel
+            .sample_cohort(&sampler, participation_round_key(1, 0, 0, 0))
+            .unwrap();
+        assert_eq!(cohort.len(), 4);
+        // dead devices never enter the pool
+        sim.scheduler().remove_worker("client-0");
+        for r in 0..20 {
+            let c = sel
+                .sample_cohort(&sampler, participation_round_key(1, 0, 0, r))
+                .unwrap();
+            assert!(
+                !c.contains(&"client-0".to_string()),
+                "dead device sampled in round {r}"
+            );
+        }
     }
 
     #[test]

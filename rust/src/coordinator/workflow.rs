@@ -20,6 +20,30 @@ use crate::dart::{DartApi, TaskRegistry};
 use crate::error::{FedError, Result};
 use crate::json::Json;
 
+/// Why a quorum round stopped collecting results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundClose {
+    /// Every addressed client reported.
+    Complete,
+    /// The quorum was reached before the deadline; stragglers dropped.
+    Quorum,
+    /// The deadline fired below quorum; whatever arrived is the report set.
+    Deadline,
+    /// The backend settled (failures) below quorum before the deadline.
+    Settled,
+}
+
+/// Outcome of [`WorkflowManager::run_task_quorum`].
+#[derive(Debug)]
+pub struct QuorumOutcome {
+    /// Results that arrived before the round closed (the aggregate set).
+    pub results: Vec<TaskResult>,
+    pub close: RoundClose,
+    /// Devices whose results arrived *after* the close (observed during
+    /// the late-grace sweep) — counted, then discarded.
+    pub late: Vec<String>,
+}
+
 /// The WorkflowManager.
 pub struct WorkflowManager {
     selector: Selector,
@@ -193,6 +217,19 @@ impl WorkflowManager {
         self.selector.results(handle)
     }
 
+    /// Number of results available now, without fetching their payloads.
+    pub fn get_task_result_count(&self, handle: TaskHandle) -> Result<usize> {
+        self.selector.result_count(handle)
+    }
+
+    /// Status and result count in one backend query.
+    pub fn get_task_progress(
+        &self,
+        handle: TaskHandle,
+    ) -> Result<(WfTaskStatus, usize)> {
+        self.selector.progress(handle)
+    }
+
     /// `stopTask`.
     pub fn stop_task(&self, handle: TaskHandle) -> Result<()> {
         self.selector.stop(handle)
@@ -219,6 +256,94 @@ impl WorkflowManager {
                 settled => return Ok(settled),
             }
         }
+    }
+
+    /// Run a task as a partial-participation round: collect results until
+    /// `quorum` of the addressed clients reported or `deadline` fired,
+    /// whichever comes first, then cancel the task.  Results arriving
+    /// after the close are dropped; with a non-zero `late_grace` they are
+    /// swept once (already-running stragglers can still settle at the
+    /// backend after the stop) and reported in
+    /// [`QuorumOutcome::late`] so participation metrics can count them.
+    ///
+    /// This is the production cross-device round loop: a round never
+    /// waits for its slowest sampled client.
+    pub fn run_task_quorum(
+        &self,
+        parameter_dict: BTreeMap<String, Json>,
+        execute_function: &str,
+        quorum: usize,
+        deadline: Duration,
+        late_grace: Duration,
+    ) -> Result<QuorumOutcome> {
+        let expected = parameter_dict.len();
+        let quorum = quorum.clamp(1, expected.max(1));
+        let h = self.start_task(parameter_dict, execute_function)?;
+        let t0 = Instant::now();
+        // poll the payload-free (status, count) pair in one backend query
+        // per iteration; the full result set (every client's parameter
+        // tensors — re-downloaded per fetch over REST) is fetched exactly
+        // once, at close
+        let (results, close, backend_settled) = loop {
+            let (st, n) = self.get_task_progress(h)?;
+            if n >= expected {
+                break (self.get_task_result(h)?, RoundClose::Complete, true);
+            }
+            match st {
+                WfTaskStatus::Queued | WfTaskStatus::InProgress => {
+                    if n >= quorum {
+                        break (
+                            self.get_task_result(h)?,
+                            RoundClose::Quorum,
+                            false,
+                        );
+                    }
+                    if t0.elapsed() >= deadline {
+                        break (
+                            self.get_task_result(h)?,
+                            RoundClose::Deadline,
+                            false,
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                // the backend settled early (client failures): whatever
+                // arrived is final
+                _ => {
+                    let rs = self.get_task_result(h)?;
+                    let close = if rs.len() >= quorum {
+                        RoundClose::Quorum
+                    } else {
+                        RoundClose::Settled
+                    };
+                    break (rs, close, true);
+                }
+            }
+        };
+        let mut late = Vec::new();
+        if !backend_settled {
+            // cancel outstanding units; units already running when the
+            // round closed may still settle into the backend's result set
+            // (a settled backend has nothing outstanding — stopping it
+            // would only overwrite its Finished/PartiallyFailed status,
+            // and sleeping out the grace window could observe nothing)
+            let _ = self.stop_task(h);
+            if !late_grace.is_zero() {
+                std::thread::sleep(late_grace);
+                if let Ok(after) = self.get_task_result(h) {
+                    for r in after {
+                        if !results
+                            .iter()
+                            .any(|x| x.device_name == r.device_name)
+                        {
+                            late.push(r.device_name);
+                        }
+                    }
+                }
+                late.sort();
+            }
+        }
+        Ok(QuorumOutcome { results, close, late })
     }
 
     /// Run a task to completion and return its results (the common Alg 2
@@ -311,6 +436,91 @@ mod tests {
             .collect();
         let results = wm.run_task(dict, "learn", Duration::from_secs(10)).unwrap();
         assert_eq!(results.len(), 2);
+    }
+
+    #[test]
+    fn quorum_round_closes_early_and_counts_late_stragglers() {
+        let reg = TaskRegistry::new();
+        reg.register("slowfast", |p| {
+            if p.get("slow").and_then(Json::as_bool).unwrap_or(false) {
+                std::thread::sleep(Duration::from_millis(250));
+            }
+            Ok(Json::obj().set("ok", true))
+        });
+        // one dispatcher thread per client so a straggler never delays
+        // the fast clients' execution
+        let wm = WorkflowManager::test_mode(4, reg, 4);
+        let clients = wm.get_all_device_names().unwrap();
+        let slow = clients[3].clone();
+        let dict: BTreeMap<String, Json> = clients
+            .iter()
+            .map(|c| (c.clone(), Json::obj().set("slow", *c == slow)))
+            .collect();
+        let out = wm
+            .run_task_quorum(
+                dict,
+                "slowfast",
+                3,
+                Duration::from_secs(10),
+                Duration::from_millis(800),
+            )
+            .unwrap();
+        assert_eq!(out.close, RoundClose::Quorum);
+        assert_eq!(out.results.len(), 3);
+        assert!(out.results.iter().all(|r| r.device_name != slow));
+        // the straggler settled during the grace sweep: counted as late
+        assert_eq!(out.late, vec![slow]);
+    }
+
+    #[test]
+    fn quorum_round_completes_without_stop_when_everyone_reports() {
+        let wm = WorkflowManager::test_mode(3, registry(), 3);
+        let clients = wm.get_all_device_names().unwrap();
+        let dict: BTreeMap<String, Json> = clients
+            .iter()
+            .map(|c| (c.clone(), Json::obj().set("lr", 1.0)))
+            .collect();
+        let out = wm
+            .run_task_quorum(
+                dict,
+                "learn",
+                3,
+                Duration::from_secs(10),
+                Duration::from_millis(500),
+            )
+            .unwrap();
+        assert_eq!(out.close, RoundClose::Complete);
+        assert_eq!(out.results.len(), 3);
+        assert!(out.late.is_empty());
+    }
+
+    #[test]
+    fn deadline_closes_a_round_below_quorum() {
+        let reg = TaskRegistry::new();
+        reg.register("sleepy", |_| {
+            std::thread::sleep(Duration::from_millis(400));
+            Ok(Json::obj().set("ok", true))
+        });
+        let wm = WorkflowManager::test_mode(2, reg, 2);
+        let clients = wm.get_all_device_names().unwrap();
+        let dict: BTreeMap<String, Json> =
+            clients.iter().map(|c| (c.clone(), Json::Null)).collect();
+        let t0 = Instant::now();
+        let out = wm
+            .run_task_quorum(
+                dict,
+                "sleepy",
+                2,
+                Duration::from_millis(60),
+                Duration::ZERO,
+            )
+            .unwrap();
+        assert_eq!(out.close, RoundClose::Deadline);
+        assert!(out.results.is_empty());
+        assert!(
+            t0.elapsed() < Duration::from_millis(350),
+            "deadline close waited for the stragglers"
+        );
     }
 
     #[test]

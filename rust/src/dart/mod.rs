@@ -64,6 +64,17 @@ pub trait DartApi: Send + Sync {
     fn status(&self, id: TaskId) -> Result<TaskStatus>;
     /// Results available so far (non-blocking, possibly partial).
     fn results(&self, id: TaskId) -> Result<Vec<TaskResult>>;
+    /// Number of results available so far.  Quorum loops poll this every
+    /// few milliseconds — backends should override the default (which
+    /// fetches and counts the full result set) with a payload-free count.
+    fn result_count(&self, id: TaskId) -> Result<usize> {
+        Ok(self.results(id)?.len())
+    }
+    /// Status and result count in one backend round-trip (the quorum
+    /// loop's per-poll call) — override where one query serves both.
+    fn progress(&self, id: TaskId) -> Result<(TaskStatus, usize)> {
+        Ok((self.status(id)?, self.result_count(id)?))
+    }
     /// Cancel a task.
     fn stop_task(&self, id: TaskId) -> Result<()>;
 

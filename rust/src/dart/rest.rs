@@ -69,6 +69,37 @@ impl RestDartApi {
         resp.parse_json()
     }
 
+    /// `POST /round/{id}/config` — negotiate a privacy round, optionally
+    /// with a partial-participation cohort config.  Returns the granted
+    /// document; the granted `privacy` mode and `participation` values
+    /// are authoritative (the server may downgrade the mode and clamp the
+    /// cohort config), so callers must run the round at the returned
+    /// values, not the requested ones.
+    pub fn negotiate_round(
+        &self,
+        round_id: u64,
+        privacy: &str,
+        participants: &[String],
+        participation: Option<&crate::config::ParticipationConfig>,
+    ) -> Result<Json> {
+        let mut body = Json::obj().set("privacy", privacy).set(
+            "participants",
+            Json::Arr(
+                participants.iter().map(|p| Json::Str(p.clone())).collect(),
+            ),
+        );
+        if let Some(p) = participation {
+            body = body.set("participation", p.to_json());
+        }
+        let resp = self.post(
+            &format!(
+                "/round/{}/config",
+                crate::privacy::round_id_to_hex(round_id)
+            ),
+            &body,
+        )?;
+        expect_ok(resp)
+    }
 }
 
 /// The single place that decides between the negotiated binary wire and
@@ -292,6 +323,23 @@ impl DartApi for RestDartApi {
             .as_arr()
             .ok_or_else(|| FedError::Http("expected array".into()))?;
         arr.iter().map(task_result_from_json).collect()
+    }
+
+    fn result_count(&self, id: TaskId) -> Result<usize> {
+        Ok(self.progress(id)?.1)
+    }
+
+    fn progress(&self, id: TaskId) -> Result<(TaskStatus, usize)> {
+        // the status document carries both fields — ONE tiny GET per
+        // quorum poll instead of a status GET plus a full result download
+        let body = expect_ok(self.http.get(&format!("/tasks/{id}/status"))?)?;
+        let st = status_from_str(body.need("status")?.as_str().unwrap_or(""))?;
+        let n = match body.get("results").and_then(Json::as_usize) {
+            Some(n) => n,
+            // pre-PR-4 server without the count field: fall back
+            None => self.results(id)?.len(),
+        };
+        Ok((st, n))
     }
 
     fn stop_task(&self, id: TaskId) -> Result<()> {

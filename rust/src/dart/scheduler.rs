@@ -673,30 +673,43 @@ impl Scheduler {
         accepted
     }
 
+    fn aggregate_status(task: &TaskState) -> TaskStatus {
+        if task.stopped {
+            return TaskStatus::Stopped;
+        }
+        let mut any_failed = false;
+        for u in task.units.values() {
+            match u {
+                UnitState::Queued { .. } | UnitState::Running { .. } => {
+                    return TaskStatus::InProgress
+                }
+                UnitState::Failed { .. } => any_failed = true,
+                UnitState::Done => {}
+            }
+        }
+        if any_failed {
+            TaskStatus::PartiallyFailed
+        } else {
+            TaskStatus::Finished
+        }
+    }
+
     /// Current aggregate status.
     pub fn status(&self, task_id: TaskId) -> Result<TaskStatus> {
         let g = self.shard(task_id).lock().unwrap();
         let task = g
             .get(&task_id)
             .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
-        if task.stopped {
-            return Ok(TaskStatus::Stopped);
-        }
-        let mut any_failed = false;
-        for u in task.units.values() {
-            match u {
-                UnitState::Queued { .. } | UnitState::Running { .. } => {
-                    return Ok(TaskStatus::InProgress)
-                }
-                UnitState::Failed { .. } => any_failed = true,
-                UnitState::Done => {}
-            }
-        }
-        Ok(if any_failed {
-            TaskStatus::PartiallyFailed
-        } else {
-            TaskStatus::Finished
-        })
+        Ok(Self::aggregate_status(task))
+    }
+
+    /// Status + result count under one lock — the quorum poll's one-shot.
+    pub fn progress(&self, task_id: TaskId) -> Result<(TaskStatus, usize)> {
+        let g = self.shard(task_id).lock().unwrap();
+        let task = g
+            .get(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        Ok((Self::aggregate_status(task), task.results.len()))
     }
 
     /// Results available *so far* — Fed-DART is non-blocking: "there is no
@@ -707,6 +720,16 @@ impl Scheduler {
             .get(&task_id)
             .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
         Ok(task.results.clone())
+    }
+
+    /// Number of results available so far — the cheap poll for quorum
+    /// loops (no cloning of result payloads).
+    pub fn result_count(&self, task_id: TaskId) -> Result<usize> {
+        let g = self.shard(task_id).lock().unwrap();
+        let task = g
+            .get(&task_id)
+            .ok_or_else(|| FedError::Task(format!("unknown task {task_id}")))?;
+        Ok(task.results.len())
     }
 
     /// Cancel a task: queued units are dropped (lazily, at dispatch time),

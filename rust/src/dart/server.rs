@@ -392,9 +392,14 @@ impl RestHandler {
             }
             ("GET", ["tasks", id, "status"]) => {
                 let id = parse_id(id)?;
-                let st = self.scheduler.status(id)?;
+                // one lock, one consistent (status, count) snapshot: the
+                // result count rides along so quorum loops can poll
+                // progress without re-downloading every result payload
+                let (st, n) = self.scheduler.progress(id)?;
                 Ok(Response::ok_json(
-                    &Json::obj().set("status", status_to_str(st)),
+                    &Json::obj()
+                        .set("status", status_to_str(st))
+                        .set("results", n),
                 ))
             }
             ("GET", ["tasks", id, "results"]) => {
@@ -603,10 +608,12 @@ impl RestHandler {
 
 impl RestHandler {
     /// `POST /round/{id}/config` — negotiate a privacy round.  The client
-    /// (the aggregation component) requests a mode; the server grants it
-    /// when privacy is enabled, else downgrades to `off`.  The granted
-    /// mode in the response is authoritative — clients must run the round
-    /// at that mode, not the requested one.
+    /// (the aggregation component) requests a mode plus an optional
+    /// participation/cohort config; the server grants the mode when
+    /// privacy is enabled (else downgrades to `off`) and clamps the
+    /// participation config into valid ranges.  The granted values in the
+    /// response are authoritative — clients must run the round at them,
+    /// not the requested ones.
     fn round_config(&self, req: &Request, id: &str) -> Result<Response> {
         let rid = round_id_from_hex(id)?;
         let body = req.body_json()?;
@@ -614,7 +621,29 @@ impl RestHandler {
             body.get("privacy").and_then(Json::as_str).unwrap_or("off"),
         )?;
         let granted = if self.privacy_enabled { requested } else { PrivacyMode::Off };
+        // cohort config: parse errors (bad strategy) reject the request;
+        // out-of-range numbers are clamped, and the clamped values win
+        let mut participation = match body.get("participation") {
+            Some(pj) if !pj.is_null() => Some(
+                crate::config::ParticipationConfig::from_json(pj)?.normalized(),
+            ),
+            _ => None,
+        };
         if granted.has_secagg() {
+            // keep the grant consistent with what the FACT learn path
+            // enforces: pairwise masking needs a fixed-size cohort with
+            // at least one peer — a Poisson draw can yield a 1-client
+            // cohort whose "masked" update is the bare quantized vector
+            if let Some(p) = participation.as_mut() {
+                if p.strategy == crate::config::SamplingStrategy::Poisson {
+                    return Err(FedError::Privacy(
+                        "secagg rounds cannot use poisson sampling \
+                         (variable cohorts can lose every mask peer)"
+                            .into(),
+                    ));
+                }
+                p.min_cohort = p.min_cohort.max(2);
+            }
             let participants: Vec<String> = body
                 .need("participants")?
                 .as_arr()
@@ -640,12 +669,25 @@ impl RestHandler {
                     as f32,
             };
             self.rounds.create(rid, participants, cfg)?;
+            if let Some(p) = &participation {
+                self.rounds.with(rid, |r| {
+                    r.set_participation(p.to_json());
+                    Ok(())
+                })?;
+            }
         }
         Ok(Response::json(
             201,
             &Json::obj()
                 .set("round_id", id)
-                .set("privacy", granted.as_str()),
+                .set("privacy", granted.as_str())
+                .set(
+                    "participation",
+                    participation
+                        .as_ref()
+                        .map(|p| p.to_json())
+                        .unwrap_or(Json::Null),
+                ),
         ))
     }
 }
@@ -874,6 +916,101 @@ mod tests {
         assert_eq!(
             resp.parse_json().unwrap().get("privacy").unwrap().as_str(),
             Some("off")
+        );
+    }
+
+    #[test]
+    fn round_config_negotiates_participation() {
+        use crate::config::{ParticipationConfig, SamplingStrategy};
+        use crate::dart::rest::RestDartApi;
+        use crate::privacy::round_id_to_hex;
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let api = RestDartApi::from_addr(&server.rest_addr().to_string(), "000");
+        let names = vec!["a".to_string(), "b".to_string()];
+        // out-of-range values are clamped server-side; the granted
+        // (clamped) config is authoritative and echoed back
+        let requested = ParticipationConfig {
+            sample_rate: 0.25,
+            quorum: 1.7, // over-range: clamps to 1.0
+            over_provision: 0.2, // under-range: clamps to 1.0
+            deadline_ms: 1500,
+            min_cohort: 2,
+            strategy: SamplingStrategy::Uniform,
+            ..Default::default()
+        };
+        let granted = api
+            .negotiate_round(21, "secagg", &names, Some(&requested))
+            .unwrap();
+        assert_eq!(granted.get("privacy").unwrap().as_str(), Some("secagg"));
+        let gp = ParticipationConfig::from_json(
+            granted.get("participation").unwrap(),
+        )
+        .unwrap();
+        gp.validate().unwrap();
+        assert!((gp.sample_rate - 0.25).abs() < 1e-12);
+        assert!((gp.quorum - 1.0).abs() < 1e-12);
+        assert!((gp.over_provision - 1.0).abs() < 1e-12);
+        assert_eq!(gp.deadline_ms, 1500);
+
+        // the grant agrees with the FACT learn path's secagg rules:
+        // min_cohort raises to 2, poisson sampling is rejected outright
+        let low = ParticipationConfig { min_cohort: 1, ..requested.clone() };
+        let g = api
+            .negotiate_round(24, "secagg", &names, Some(&low))
+            .unwrap();
+        assert_eq!(
+            g.get("participation")
+                .unwrap()
+                .get("min_cohort")
+                .and_then(Json::as_usize),
+            Some(2)
+        );
+        let poisson = ParticipationConfig {
+            strategy: SamplingStrategy::Poisson,
+            ..requested.clone()
+        };
+        assert!(api
+            .negotiate_round(25, "secagg", &names, Some(&poisson))
+            .is_err());
+
+        // the secagg round's status document carries the granted config
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+        let st = c
+            .get(&format!("/round/{}/config", round_id_to_hex(21)))
+            .unwrap()
+            .parse_json()
+            .unwrap();
+        let pj = st.get("participation").unwrap();
+        assert_eq!(
+            pj.get("deadline_ms").and_then(Json::as_i64),
+            Some(1500)
+        );
+
+        // a bad strategy string rejects the whole negotiation
+        let bad = c
+            .post(
+                &format!("/round/{}/config", round_id_to_hex(22)),
+                &Json::obj()
+                    .set("privacy", "dp")
+                    .set(
+                        "participation",
+                        Json::obj().set("strategy", "lottery"),
+                    ),
+            )
+            .unwrap();
+        assert_eq!(bad.status, 409);
+
+        // dp-only rounds still echo a granted participation config
+        // (no secagg round state is created for them)
+        let granted = api.negotiate_round(23, "dp", &[], Some(&requested)).unwrap();
+        assert_eq!(granted.get("privacy").unwrap().as_str(), Some("dp"));
+        assert!(granted.get("participation").unwrap().get("quorum").is_some());
+        assert_eq!(
+            c.get(&format!("/round/{}/config", round_id_to_hex(23)))
+                .unwrap()
+                .status,
+            409,
+            "dp-only negotiation must not create secagg round state"
         );
     }
 

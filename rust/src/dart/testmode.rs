@@ -248,6 +248,14 @@ impl DartApi for TestModeDart {
         self.scheduler.results(id)
     }
 
+    fn result_count(&self, id: TaskId) -> Result<usize> {
+        self.scheduler.result_count(id)
+    }
+
+    fn progress(&self, id: TaskId) -> Result<(TaskStatus, usize)> {
+        self.scheduler.progress(id)
+    }
+
     fn stop_task(&self, id: TaskId) -> Result<()> {
         self.scheduler.stop_task(id)
     }

@@ -173,11 +173,7 @@ impl FactClientRuntime {
 
     /// Deterministic batch seed: device identity x round x step.
     fn batch_seed(device: &str, round: u64, step: u64) -> u64 {
-        let mut h = 0xcbf29ce484222325u64; // FNV offset
-        for b in device.bytes() {
-            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
-        }
-        splitmix64(h ^ (round << 20) ^ step)
+        splitmix64(crate::util::rng::fnv1a(device) ^ (round << 20) ^ step)
     }
 
     // --------------------------------------------------------------- tasks
@@ -329,6 +325,18 @@ impl FactClientRuntime {
                 FedError::Privacy("privacy round without round_id".into())
             })?,
         )?;
+        // Participation guard: when the round pins a sampled cohort, a
+        // client outside it must not contribute an update.  The
+        // accountant's amplification-by-subsampling claim assumes ONLY
+        // sampled clients respond — a stray dispatch to a non-cohort
+        // client would silently void the ε bound.
+        if let Some(cohort) = pj.get("cohort").and_then(Json::as_arr) {
+            if !cohort.iter().any(|c| c.as_str() == Some(device)) {
+                return Err(FedError::Privacy(format!(
+                    "'{device}' is not in the round's sampled cohort"
+                )));
+            }
+        }
         if cfg.mode.has_dp() {
             let mut rng =
                 crate::util::rng::Rng::new(self.noise_seed(device, round_id));

@@ -10,7 +10,11 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::workflow::WorkflowManager;
+use crate::config::ParticipationConfig;
+use crate::coordinator::participation::{
+    participation_round_key, Candidate, CohortSampler,
+};
+use crate::coordinator::workflow::{RoundClose, WorkflowManager};
 use crate::error::{FedError, Result};
 use crate::fact::aggregation::ClientUpdate;
 use crate::fact::clustering::{ClusterContainer, ClusteringAlgorithm, StaticClustering};
@@ -35,6 +39,18 @@ pub struct RoundRecord {
     pub round: usize,
     /// clients that contributed this round
     pub n_clients: usize,
+    /// cohort size dispatched this round (== cluster size without
+    /// participation sampling)
+    pub sampled: usize,
+    /// sampled clients whose results arrived after the round closed
+    /// (observed in the late-grace sweep, then discarded)
+    pub late: usize,
+    /// sampled clients that never delivered a counted result
+    pub dropped: usize,
+    /// realized sampling rate the DP accountant may claim for this round
+    /// (1.0 without participation sampling or for non-amplifying
+    /// strategies)
+    pub sample_rate: f64,
     /// mean local training loss across contributing clients
     pub mean_loss: f32,
     /// wall time of the whole round (dispatch -> aggregated) in ms
@@ -103,6 +119,11 @@ pub struct FactServer {
     pub round_timeout: Duration,
     /// Negotiated privacy mode + parameters for every training round.
     pub privacy: PrivacyConfig,
+    /// Partial-participation rounds: cohort sampling + quorum/deadline.
+    /// `None` = the legacy loop (address everyone, wait for all).
+    participation: Option<ParticipationConfig>,
+    /// Last-known per-client sample counts (feeds weighted sampling).
+    client_samples: BTreeMap<String, f64>,
     /// (ε, δ) ledger for DP-enabled sessions; persisted with snapshots.
     accountant: DpAccountant,
     /// Per-process tag mixed into round ids so pair seeds never repeat
@@ -130,6 +151,8 @@ impl FactServer {
             server_opt: ServerOpt::default(),
             round_timeout: Duration::from_secs(300),
             privacy: PrivacyConfig::default(),
+            participation: None,
+            client_samples: BTreeMap::new(),
             accountant: DpAccountant::new(1.0),
             session_tag: splitmix64(
                 std::process::id() as u64
@@ -162,6 +185,19 @@ impl FactServer {
     /// The DP ledger accumulated so far (all zeros for non-DP modes).
     pub fn accountant(&self) -> &DpAccountant {
         &self.accountant
+    }
+
+    /// Enable partial-participation rounds: every training round samples
+    /// a cohort, over-provisions it, and closes at quorum or deadline
+    /// instead of waiting for every client.  Validated at `learn()`.
+    pub fn with_participation(mut self, cfg: ParticipationConfig) -> FactServer {
+        self.participation = Some(cfg);
+        self
+    }
+
+    /// The active participation config, if partial rounds are enabled.
+    pub fn participation(&self) -> Option<&ParticipationConfig> {
+        self.participation.as_ref()
     }
 
     pub fn with_fl_stop(mut self, s: Arc<dyn FlStoppingCriterion>) -> FactServer {
@@ -345,6 +381,29 @@ impl FactServer {
                 }
             }
         }
+        if let Some(p) = &self.participation {
+            p.validate()?;
+            if self.privacy.mode.has_secagg() {
+                if p.strategy == crate::config::SamplingStrategy::Poisson {
+                    // a Poisson draw can produce a 1-client cohort, whose
+                    // "masked" update would be the bare quantized vector
+                    return Err(FedError::Privacy(
+                        "secagg requires a fixed-size cohort (>= 2 for \
+                         pairwise masks) — use the uniform strategy, not \
+                         poisson"
+                            .into(),
+                    ));
+                }
+                if p.min_cohort < 2 {
+                    // pairwise masking needs at least one peer per cohort
+                    return Err(FedError::Privacy(
+                        "secagg under participation sampling requires \
+                         min_cohort >= 2 (pairwise masks need a peer)"
+                            .into(),
+                    ));
+                }
+            }
+        }
         let mut clustering_round = 0;
         loop {
             // Alg 4 line 2: "foreach cluster ... do in parallel".
@@ -356,31 +415,47 @@ impl FactServer {
             let fl_stop = Arc::clone(&self.fl_stop);
             let pool_for_agg = Arc::clone(&self.pool);
             let privacy = self.privacy.clone();
+            let participation = self.participation.clone();
+            let known_samples = self.client_samples.clone();
+            let metrics = self.metrics.clone();
             let session_tag = self.session_tag;
             let outputs = self.pool.map(clusters, move |mut cluster| {
-                let r = train_cluster(
-                    &wm,
-                    &mut cluster,
-                    &hyper,
+                let ctx = RoundCtx {
+                    wm: &wm,
+                    hyper: &hyper,
                     server_opt,
-                    fl_stop.as_ref(),
+                    fl_stop: fl_stop.as_ref(),
                     timeout,
                     clustering_round,
-                    &pool_for_agg,
-                    &privacy,
+                    pool: &pool_for_agg,
+                    privacy: &privacy,
+                    participation: &participation,
+                    known_samples: &known_samples,
+                    metrics: &metrics,
                     session_tag,
-                );
-                (cluster, r)
+                };
+                let out = train_cluster(&ctx, &mut cluster);
+                (cluster, out)
             });
             let mut latest = BTreeMap::new();
             let mut restored = Vec::new();
-            let mut max_cluster_rounds = 0u64;
-            for (cluster, result) in outputs {
-                let (records, updates) = result?;
-                max_cluster_rounds = max_cluster_rounds.max(records.len() as u64);
-                self.history.extend(records);
-                for (dev, params) in updates {
+            let hist_before = self.history.len();
+            // Collect EVERY cluster's outcome before propagating a
+            // failure: completed rounds — including the failing cluster's
+            // own rounds before the error (their noised aggregates were
+            // already applied) — must be recorded and charged to the ε
+            // ledger below.
+            let mut first_err: Option<FedError> = None;
+            for (cluster, out) in outputs {
+                self.history.extend(out.records);
+                for (dev, params) in out.latest {
                     latest.insert(dev, params);
+                }
+                self.client_samples.extend(out.samples);
+                if let Some(e) = out.err {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
                 }
                 restored.push(cluster);
             }
@@ -389,11 +464,27 @@ impl FactServer {
                 // Clusters train in parallel on DISJOINT clients, so a
                 // client's (and each model's) privacy loss composes over
                 // its own cluster's rounds — summing records across
-                // clusters would over-count ε by the cluster count
-                self.accountant.add_steps(max_cluster_rounds);
+                // clusters would over-count ε by the cluster count.  Per
+                // round index, the *max* realized sampling rate across
+                // clusters upper-bounds every cluster's subsampled cost
+                // (RDP of the sampled Gaussian is monotone in q).
+                let mut per_round: BTreeMap<usize, f64> = BTreeMap::new();
+                for r in &self.history[hist_before..] {
+                    let q = per_round.entry(r.round).or_insert(0.0);
+                    if r.sample_rate > *q {
+                        *q = r.sample_rate;
+                    }
+                }
+                for (_, q) in per_round {
+                    self.accountant.add_round(q);
+                }
             }
             self.container.clusters = restored;
             self.latest_updates.extend(latest);
+            if let Some(e) = first_err {
+                // state and ledger are consistent; surface the failure
+                return Err(e);
+            }
             self.metrics.counter("fact.clustering_rounds").inc();
 
             clustering_round += 1;
@@ -448,28 +539,109 @@ impl FactServer {
     }
 }
 
-/// Alg 5: the training session of one cluster.  Returns the round records
-/// and each client's final local update (for clustering).
-#[allow(clippy::too_many_arguments)]
-fn train_cluster(
-    wm: &WorkflowManager,
-    cluster: &mut crate::fact::clustering::Cluster,
-    hyper: &Hyper,
+/// Outcome of one cluster's training session: everything that completed
+/// plus the first error.  Completed rounds ride OUTSIDE the error so a
+/// failure in round k never discards rounds 0..k — those aggregates were
+/// already applied to the cluster and must still be charged to the DP
+/// ledger.
+struct ClusterOutcome {
+    records: Vec<RoundRecord>,
+    latest: BTreeMap<String, Vec<f32>>,
+    samples: BTreeMap<String, f64>,
+    err: Option<FedError>,
+}
+
+/// The per-session invariants every cluster's round loop reads — one
+/// bundle instead of a dozen parameters threaded through two signatures
+/// and the dispatch closure (future round-loop features extend this
+/// struct, not every call site).
+struct RoundCtx<'a> {
+    wm: &'a WorkflowManager,
+    hyper: &'a Hyper,
     server_opt: ServerOpt,
-    fl_stop: &dyn FlStoppingCriterion,
+    fl_stop: &'a dyn FlStoppingCriterion,
     timeout: Duration,
     clustering_round: usize,
-    pool: &ThreadPool,
-    privacy: &PrivacyConfig,
+    pool: &'a ThreadPool,
+    privacy: &'a PrivacyConfig,
+    participation: &'a Option<ParticipationConfig>,
+    known_samples: &'a BTreeMap<String, f64>,
+    metrics: &'a Registry,
     session_tag: u64,
-) -> Result<(Vec<RoundRecord>, BTreeMap<String, Vec<f32>>)> {
+}
+
+/// Alg 5: the training session of one cluster.
+fn train_cluster(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+) -> ClusterOutcome {
     let mut records = Vec::new();
-    let mut latest: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut latest = BTreeMap::new();
+    let mut samples = BTreeMap::new();
+    let err =
+        train_cluster_rounds(ctx, cluster, &mut records, &mut latest, &mut samples)
+            .err();
+    ClusterOutcome { records, latest, samples, err }
+}
+
+/// The round loop behind [`train_cluster`]; completed rounds accumulate
+/// into the out-params so they survive an error return.
+fn train_cluster_rounds(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    let RoundCtx {
+        wm,
+        hyper,
+        server_opt,
+        fl_stop,
+        timeout,
+        clustering_round,
+        pool,
+        privacy,
+        participation,
+        known_samples,
+        metrics,
+        session_tag,
+    } = *ctx;
     let mut round = 0usize;
     loop {
         let sw = Stopwatch::start();
         let hp = Hyper { round: round as u64, ..hyper.clone() };
-        // Alg 5 line 3: send a training task to each client in the cluster.
+        // --- participation: draw this round's cohort (everyone without) --
+        let (cohort, realized_q, sampler) = match participation {
+            Some(p) => {
+                let sampler = CohortSampler::new(p.clone());
+                let key = participation_round_key(
+                    p.seed,
+                    clustering_round,
+                    cluster.id,
+                    round,
+                );
+                let candidates: Vec<Candidate> = cluster
+                    .clients
+                    .iter()
+                    .map(|n| Candidate {
+                        name: n.clone(),
+                        weight: seen_samples
+                            .get(n)
+                            .or_else(|| known_samples.get(n))
+                            .copied()
+                            .unwrap_or(1.0)
+                            .max(1.0),
+                    })
+                    .collect();
+                let cohort = sampler.sample(key, &candidates);
+                let q = sampler
+                    .amplification_rate(cohort.len(), cluster.clients.len());
+                (cohort, q, Some(sampler))
+            }
+            None => (cluster.clients.clone(), 1.0, None),
+        };
+        // Alg 5 line 3: send a training task to each cohort client.
         // The global parameters are materialized into ONE shared buffer;
         // every client's dict holds a cheap clone of it, and the binary
         // wire encoding writes it once (envelope dedup) instead of one
@@ -489,13 +661,24 @@ fn train_cluster(
             let mut pj = privacy
                 .to_json()
                 .set("round_id", round_id_to_hex(round_id));
+            if participation.is_some() {
+                // pin the sampled cohort in the task: a client outside it
+                // must refuse to contribute, or the accountant's
+                // amplification claim (only sampled clients respond)
+                // would be unsound
+                pj = pj.set(
+                    "cohort",
+                    Json::Arr(
+                        cohort.iter().map(|c| Json::Str(c.clone())).collect(),
+                    ),
+                );
+            }
             if privacy.mode.has_secagg() {
                 pj = pj
                     .set(
                         "participants",
                         Json::Arr(
-                            cluster
-                                .clients
+                            cohort
                                 .iter()
                                 .map(|c| Json::Str(c.clone()))
                                 .collect(),
@@ -505,8 +688,7 @@ fn train_cluster(
             }
             Some((round_id, pj))
         };
-        let dict: BTreeMap<String, Json> = cluster
-            .clients
+        let dict: BTreeMap<String, Json> = cohort
             .iter()
             .map(|c| {
                 let mut params = cluster.model.learn_params_buf(&global, &hp);
@@ -517,7 +699,61 @@ fn train_cluster(
             })
             .collect();
         let t_start = Instant::now();
-        let results = wm.run_task(dict, "fact_learn", timeout)?;
+        let sampled = cohort.len();
+        let (results, late, dropped) = match (&sampler, participation) {
+            (Some(sampler), Some(p)) => {
+                // production round loop: close at quorum or deadline,
+                // drop (and count) stragglers
+                let quorum = sampler.quorum_count(sampled);
+                let deadline = if p.deadline_ms > 0 {
+                    Duration::from_millis(p.deadline_ms)
+                } else {
+                    timeout
+                };
+                let out = wm.run_task_quorum(
+                    dict,
+                    "fact_learn",
+                    quorum,
+                    deadline,
+                    Duration::from_millis(p.late_grace_ms),
+                )?;
+                let late = out.late.len();
+                let dropped =
+                    sampled.saturating_sub(out.results.len() + late);
+                metrics
+                    .counter(match out.close {
+                        RoundClose::Complete => {
+                            "fact.participation.complete_closes"
+                        }
+                        RoundClose::Quorum => "fact.participation.quorum_closes",
+                        RoundClose::Deadline => {
+                            "fact.participation.deadline_closes"
+                        }
+                        RoundClose::Settled => {
+                            "fact.participation.settled_closes"
+                        }
+                    })
+                    .inc();
+                if out.results.len() < quorum {
+                    log::warn!(target: "fact::server",
+                        "cluster {} round {round}: closed below quorum \
+                         ({}/{quorum} of {sampled} sampled)",
+                        cluster.id, out.results.len());
+                }
+                (out.results, late, dropped)
+            }
+            _ => {
+                let results = wm.run_task(dict, "fact_learn", timeout)?;
+                let dropped = sampled.saturating_sub(results.len());
+                (results, 0usize, dropped)
+            }
+        };
+        metrics.counter("fact.participation.sampled").add(sampled as u64);
+        metrics
+            .counter("fact.participation.reported")
+            .add(results.len() as u64);
+        metrics.counter("fact.participation.late").add(late as u64);
+        metrics.counter("fact.participation.dropped").add(dropped as u64);
         if results.is_empty() {
             return Err(FedError::Fact(format!(
                 "cluster {}: no client returned a result in round {round}",
@@ -537,7 +773,7 @@ fn train_cluster(
         let target = if privacy.mode.has_secagg() {
             let (round_id, _) = privacy_round.as_ref().unwrap();
             secagg_recover_aggregate(
-                wm, cluster, &updates, *round_id, privacy, timeout,
+                wm, cluster, &cohort, &updates, *round_id, privacy, timeout,
             )?
         } else {
             cluster.model.aggregate(&updates, Some(pool))?
@@ -552,6 +788,11 @@ fn train_cluster(
         let mean_client_s =
             updates.iter().map(|u| u.duration).sum::<f64>() / updates.len() as f64;
         cluster.loss_history.push(mean_loss);
+        for u in &updates {
+            // n_samples is clear even under secagg (the protocol ships it
+            // alongside the masked vector); it feeds weighted sampling
+            seen_samples.insert(u.device.clone(), u.n_samples as f64);
+        }
         if !privacy.mode.has_secagg() {
             // under secagg the per-client vectors are masked lattice noise
             // — recording them would feed garbage to the clustering input
@@ -564,13 +805,18 @@ fn train_cluster(
             cluster_id: cluster.id,
             round,
             n_clients: updates.len(),
+            sampled,
+            late,
+            dropped,
+            sample_rate: realized_q,
             mean_loss,
             round_ms: sw.elapsed_ms(),
             agg_ms,
             mean_client_s,
         });
         log::debug!(target: "fact::server",
-            "cluster {} round {round}: loss {mean_loss:.4} ({} clients, {:.1}ms)",
+            "cluster {} round {round}: loss {mean_loss:.4} \
+             ({}/{sampled} sampled clients, {:.1}ms)",
             cluster.id, updates.len(), t_start.elapsed().as_secs_f64() * 1e3);
 
         round += 1;
@@ -579,11 +825,14 @@ fn train_cluster(
             break;
         }
     }
-    Ok((records, latest))
+    Ok(())
 }
 
-/// Secure-aggregation server path for one round: every participant that
-/// answered is a survivor, everyone else in the cluster dropped mid-round.
+/// Secure-aggregation server path for one round: every round participant
+/// that answered is a survivor, everyone else in the *cohort* dropped
+/// mid-round (under partial participation the cohort — not the whole
+/// cluster — is the participant set the masks were derived over, so a
+/// straggler cut off at the deadline is recovered exactly like a crash).
 /// Survivors are asked (via the `fact_reveal` task) for their pair seeds
 /// with each dropped peer; the revealed masks are subtracted and the
 /// lattice sum decoded.  The coordinator never materializes an unmasked
@@ -592,6 +841,7 @@ fn train_cluster(
 fn secagg_recover_aggregate(
     wm: &WorkflowManager,
     cluster: &crate::fact::clustering::Cluster,
+    cohort: &[String],
     updates: &[ClientUpdate],
     round_id: u64,
     privacy: &PrivacyConfig,
@@ -610,8 +860,7 @@ fn secagg_recover_aggregate(
             },
         })
         .collect();
-    let dropped: Vec<String> = cluster
-        .clients
+    let dropped: Vec<String> = cohort
         .iter()
         .filter(|c| !updates.iter().any(|u| &u.device == *c))
         .cloned()

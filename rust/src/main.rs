@@ -21,7 +21,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use feddart::cli::Args;
-use feddart::config::ServerConfig;
+use feddart::config::{ParticipationConfig, SamplingStrategy, ServerConfig};
 use feddart::coordinator::WorkflowManager;
 use feddart::dart::client::{DartClient, DartClientConfig};
 use feddart::dart::server::{DartServer, DartServerConfig};
@@ -83,8 +83,43 @@ client  --name client-0 --clients 2 --server 127.0.0.1:7700
         --transport-key feddart-demo-key --seed 42
 train   --server 127.0.0.1:7701 --rest-key 000 --model mlp_default
         --rounds 20 --min-clients 2
-info    [--artifacts DIR]"
+info    [--artifacts DIR]
+
+participation (run/train): --sample-rate 0.25 --quorum 0.75
+        --deadline-ms 2000 --over-provision 1.3 --min-cohort 1
+        --late-grace-ms 0
+        --cohort-strategy uniform|poisson|weighted|stratified:k
+        --participation-seed 17
+        (rounds sample a cohort and close at quorum/deadline; uniform
+         sampling earns DP amplification in the accountant)"
     );
+}
+
+/// Build a participation config from the CLI flags; `None` when every
+/// flag is at its "address everyone, wait for all" default.
+fn participation_from_args(args: &Args) -> Result<Option<ParticipationConfig>> {
+    // parse and validate EVERY flag before deciding the config is a
+    // no-op: `--cohort-strategy lottery` must error even when the
+    // sampling/quorum flags are at their defaults
+    let cfg = ParticipationConfig {
+        sample_rate: args.opt_ratio("sample-rate", 1.0)?,
+        quorum: args.opt_ratio("quorum", 1.0)?,
+        deadline_ms: args.opt_usize("deadline-ms", 0)? as u64,
+        late_grace_ms: args.opt_usize("late-grace-ms", 0)? as u64,
+        // no silent clamp: validate() rejects over_provision < 1 with an
+        // error, consistent with the other flags
+        over_provision: args.opt_f64("over-provision", 1.0)?,
+        min_cohort: args.opt_usize("min-cohort", 1)?,
+        strategy: SamplingStrategy::parse(
+            args.opt_or("cohort-strategy", "uniform"),
+        )?,
+        seed: args.opt_usize("participation-seed", 17)? as u64,
+    };
+    cfg.validate()?;
+    if cfg.sample_rate >= 1.0 && cfg.quorum >= 1.0 && cfg.deadline_ms == 0 {
+        return Ok(None); // "address everyone, wait for all" — legacy loop
+    }
+    Ok(Some(cfg))
 }
 
 fn parse_partition(s: &str) -> Partition {
@@ -148,6 +183,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         local_steps: args.opt_usize("local-steps", 4)?,
         round: 0,
     });
+    if let Some(p) = participation_from_args(args)? {
+        println!(
+            "participation: q={} quorum={} deadline={}ms strategy={}",
+            p.sample_rate,
+            p.quorum,
+            p.deadline_ms,
+            p.strategy.as_string()
+        );
+        server = server.with_participation(p);
+    }
     let model = HloModel::arc(
         &engine,
         &model_name,
@@ -156,11 +201,18 @@ fn cmd_run(args: &Args) -> Result<()> {
     server.initialization_by_model(model, Arc::new(FixedRoundFl(rounds)), seed as i32)?;
     server.learn()?;
 
-    println!("\nround  mean_loss  round_ms  agg_ms");
+    println!("\nround  mean_loss  round_ms  agg_ms  sampled  reported  late  dropped");
     for r in server.history() {
         println!(
-            "{:>5}  {:>9.4}  {:>8.1}  {:>6.2}",
-            r.round, r.mean_loss, r.round_ms, r.agg_ms
+            "{:>5}  {:>9.4}  {:>8.1}  {:>6.2}  {:>7}  {:>8}  {:>4}  {:>7}",
+            r.round,
+            r.mean_loss,
+            r.round_ms,
+            r.agg_ms,
+            r.sampled,
+            r.n_clients,
+            r.late,
+            r.dropped
         );
     }
     for e in server.evaluate()? {
@@ -236,6 +288,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         local_steps: args.opt_usize("local-steps", 4)?,
         round: 0,
     });
+    if let Some(p) = participation_from_args(args)? {
+        server = server.with_participation(p);
+    }
     let model = HloModel::arc(
         &engine,
         args.opt_or("model", "mlp_default"),

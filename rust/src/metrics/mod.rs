@@ -56,12 +56,22 @@ struct HistInner {
     max: f64,
     /// bounded sample reservoir for quantiles
     samples: Vec<f64>,
+    /// per-histogram reservoir RNG.  A shared `splitmix64(count)` stream
+    /// made every histogram at the same count overwrite the *same* index
+    /// (correlated reservoirs) and skewed the acceptance probability away
+    /// from the unbiased `RESERVOIR / count` of Vitter's algorithm R.
+    rng: crate::util::rng::Rng,
 }
 
 const RESERVOIR: usize = 4096;
 
+/// Distinct seed per histogram instance.
+static HIST_SEED: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
 impl Default for Histogram {
     fn default() -> Self {
+        let seed = HIST_SEED.fetch_add(0x6A09_E667_F3BC_C909, Ordering::Relaxed);
         Histogram {
             inner: Mutex::new(HistInner {
                 count: 0,
@@ -69,6 +79,7 @@ impl Default for Histogram {
                 min: f64::INFINITY,
                 max: f64::NEG_INFINITY,
                 samples: Vec::new(),
+                rng: crate::util::rng::Rng::new(seed),
             }),
         }
     }
@@ -84,13 +95,20 @@ impl Histogram {
         if h.samples.len() < RESERVOIR {
             h.samples.push(v);
         } else {
-            // reservoir sampling keeps quantiles unbiased under load
-            let count = h.count;
-            let idx = (crate::util::rng::splitmix64(count) % count) as usize;
+            // Vitter's algorithm R: replace a uniformly drawn index of
+            // [0, count); acceptance probability is exactly RESERVOIR/count,
+            // keeping the reservoir a uniform sample of everything seen
+            let n = h.count as usize;
+            let idx = h.rng.below(n);
             if idx < RESERVOIR {
                 h.samples[idx] = v;
             }
         }
+    }
+
+    #[cfg(test)]
+    fn raw_samples(&self) -> Vec<f64> {
+        self.inner.lock().unwrap().samples.clone()
     }
 
     pub fn count(&self) -> u64 {
@@ -253,6 +271,50 @@ mod tests {
         // quantiles still sane after reservoir churn
         let p50 = h.quantile(0.5);
         assert!((5_000.0..15_000.0).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn reservoirs_are_decorrelated_across_histograms() {
+        // regression: the old splitmix64(count) % count replacement index
+        // was a pure function of the count, so every histogram at the same
+        // count overwrote identical slots — two histograms fed the same
+        // stream kept byte-identical reservoirs forever
+        let a = Histogram::default();
+        let b = Histogram::default();
+        for i in 0..3 * RESERVOIR {
+            a.observe(i as f64);
+            b.observe(i as f64);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_ne!(
+            a.raw_samples(),
+            b.raw_samples(),
+            "independent histograms must not share a replacement stream"
+        );
+    }
+
+    #[test]
+    fn reservoir_acceptance_is_uniform_over_stream() {
+        // algorithm R keeps the reservoir a uniform sample of the whole
+        // stream: after R zeros then R ones, the expected fraction of
+        // ones in the reservoir is 1/2 (sd ≈ 1/(2√R) ≈ 0.008)
+        let h = Histogram::default();
+        for _ in 0..RESERVOIR {
+            h.observe(0.0);
+        }
+        for _ in 0..RESERVOIR {
+            h.observe(1.0);
+        }
+        let ones = h
+            .raw_samples()
+            .iter()
+            .filter(|&&v| v == 1.0)
+            .count() as f64;
+        let frac = ones / RESERVOIR as f64;
+        assert!(
+            (0.42..=0.58).contains(&frac),
+            "reservoir holds {frac:.3} ones, expected ~0.5"
+        );
     }
 
     #[test]

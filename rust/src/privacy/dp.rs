@@ -13,14 +13,16 @@
 //!
 //! ## Accountant
 //!
-//! [`DpAccountant`] tracks `(steps, noise_multiplier)` per model and
-//! converts to `(ε, δ)` through Rényi differential privacy: the Gaussian
-//! mechanism with multiplier `z` satisfies RDP `(α, α / 2z²)` at every
-//! order `α > 1`; composition over `T` rounds multiplies the RDP cost by
-//! `T`; conversion takes the minimum over a grid of orders of
-//! `T·α/(2z²) + ln(1/δ)/(α−1)`.  No subsampling amplification is applied
-//! (every connected client participates in every round — the paper's
-//! cross-silo setting), so this is a conservative bound.  The state
+//! [`DpAccountant`] tracks per-round RDP costs and converts to `(ε, δ)`
+//! through Rényi differential privacy: the Gaussian mechanism with
+//! multiplier `z` satisfies RDP `(α, α / 2z²)` at every order `α > 1`;
+//! a *subsampled* round run on a uniformly sampled cohort at rate `q < 1`
+//! costs strictly less — the sampled-Gaussian-mechanism bound of
+//! Mironov–Talwar–Zhang 2019 at integer orders
+//! ([`rdp_gaussian_subsampled`]) — which is the
+//! amplification-by-subsampling partial-participation rounds earn.
+//! Composition sums the per-round costs per order; conversion takes the
+//! minimum over [`RDP_ORDERS`] of `rdp(α) + ln(1/δ)/(α−1)`.  The state
 //! serializes to JSON and is persisted alongside model snapshots by
 //! [`crate::fact::store::ModelStore`].
 
@@ -71,27 +73,109 @@ pub fn privatize_update(
     Ok(())
 }
 
-/// Per-model (ε, δ) accountant over composed Gaussian-mechanism rounds.
+/// Integer RDP orders the accountant composes over.  Integer orders are
+/// required by the subsampled-Gaussian bound (binomial expansion); the
+/// grid spans the small orders that win at large ε and the large orders
+/// that win at small ε / many rounds.
+pub const RDP_ORDERS: [u64; 20] = [
+    2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512,
+];
+
+/// Per-round RDP cost of the (possibly subsampled) Gaussian mechanism at
+/// integer order `alpha` with noise multiplier `z` and sampling rate `q`.
+///
+/// * `q = 1` (full participation): the classic `α / 2z²`.
+/// * `q < 1`: the sampled-Gaussian-mechanism bound at integer orders
+///   (Mironov–Talwar–Zhang 2019, the formula behind tf-privacy's
+///   integer-order accountant):
+///   `ε(α) = ln( Σ_{k=0}^{α} C(α,k)·(1−q)^{α−k}·q^k·e^{k(k−1)/2z²} ) / (α−1)`
+///   — evaluated in log space so the `e^{k(k−1)/2z²}` factors cannot
+///   overflow at large orders.  Strictly below the full-participation
+///   cost for every q < 1, which is exactly the amplification the
+///   partial-participation test pins.
+pub fn rdp_gaussian_subsampled(alpha: u64, q: f64, z: f64) -> f64 {
+    debug_assert!(alpha >= 2);
+    if z <= 0.0 {
+        return f64::INFINITY;
+    }
+    let a = alpha as f64;
+    if q >= 1.0 {
+        return a / (2.0 * z * z);
+    }
+    if q <= 0.0 {
+        return 0.0;
+    }
+    let ln_q = q.ln();
+    let ln_1q = (1.0 - q).ln();
+    let inv_2z2 = 1.0 / (2.0 * z * z);
+    // log-sum-exp over the binomial expansion
+    let mut terms = Vec::with_capacity(alpha as usize + 1);
+    let mut ln_choose = 0.0f64;
+    for k in 0..=alpha {
+        if k > 0 {
+            ln_choose += ((a - k as f64 + 1.0) / k as f64).ln();
+        }
+        let kf = k as f64;
+        terms.push(
+            ln_choose + (a - kf) * ln_1q + kf * ln_q + kf * (kf - 1.0) * inv_2z2,
+        );
+    }
+    let m = terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let sum: f64 = terms.iter().map(|t| (t - m).exp()).sum();
+    ((m + sum.ln()) / (a - 1.0)).max(0.0)
+}
+
+/// Per-model (ε, δ) accountant over composed (subsampled) Gaussian rounds.
+///
+/// Each round contributes its RDP cost at every order in [`RDP_ORDERS`];
+/// partial-participation rounds pass their realized sampling rate `q` and
+/// earn amplification-by-subsampling, full rounds compose at `q = 1`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DpAccountant {
     /// Aggregation rounds composed so far.
     pub steps: u64,
     /// The noise multiplier the rounds were run with.
     pub noise_multiplier: f64,
+    /// Accumulated RDP cost per order in [`RDP_ORDERS`] (nats).
+    rdp: Vec<f64>,
 }
 
 impl DpAccountant {
     pub fn new(noise_multiplier: f64) -> DpAccountant {
-        DpAccountant { steps: 0, noise_multiplier }
+        DpAccountant {
+            steps: 0,
+            noise_multiplier,
+            rdp: vec![0.0; RDP_ORDERS.len()],
+        }
     }
 
-    /// Record `n` more aggregation rounds.
+    /// Record one aggregation round run at sampling rate `q` (clients
+    /// sampled uniformly at rate q; pass 1.0 for full participation).
+    pub fn add_round(&mut self, q: f64) {
+        let q = q.clamp(0.0, 1.0);
+        self.steps += 1;
+        for (cost, &alpha) in self.rdp.iter_mut().zip(RDP_ORDERS.iter()) {
+            *cost += rdp_gaussian_subsampled(alpha, q, self.noise_multiplier);
+        }
+    }
+
+    /// Record `n` more full-participation aggregation rounds.
     pub fn add_steps(&mut self, n: u64) {
-        self.steps += n;
+        for _ in 0..n {
+            self.add_round(1.0);
+        }
     }
 
-    /// The ε consumed so far at target `delta`, via RDP composition over
-    /// a grid of orders.  `f64::INFINITY` when no noise is configured.
+    /// Record `n` rounds at sampling rate `q` (subsampling amplification).
+    pub fn add_subsampled_steps(&mut self, n: u64, q: f64) {
+        for _ in 0..n {
+            self.add_round(q);
+        }
+    }
+
+    /// The ε consumed so far at target `delta`: the RDP→DP conversion
+    /// minimized over the order grid.  `f64::INFINITY` when no noise is
+    /// configured.
     pub fn epsilon(&self, delta: f64) -> f64 {
         if self.steps == 0 {
             return 0.0;
@@ -99,39 +183,56 @@ impl DpAccountant {
         if self.noise_multiplier <= 0.0 || delta <= 0.0 || delta >= 1.0 {
             return f64::INFINITY;
         }
-        let z2 = self.noise_multiplier * self.noise_multiplier;
-        let t = self.steps as f64;
         let log_inv_delta = (1.0 / delta).ln();
-        let mut best = f64::INFINITY;
-        let mut alpha = 1.25f64;
-        while alpha <= 512.0 {
-            let eps = t * alpha / (2.0 * z2) + log_inv_delta / (alpha - 1.0);
-            best = best.min(eps);
-            alpha *= 1.1;
-        }
-        best
+        self.rdp
+            .iter()
+            .zip(RDP_ORDERS.iter())
+            .map(|(&cost, &alpha)| cost + log_inv_delta / (alpha as f64 - 1.0))
+            .fold(f64::INFINITY, f64::min)
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("steps", self.steps)
             .set("noise_multiplier", self.noise_multiplier)
+            .set(
+                "rdp",
+                Json::Arr(self.rdp.iter().map(|&c| Json::Num(c)).collect()),
+            )
     }
 
     pub fn from_json(j: &Json) -> Result<DpAccountant> {
-        Ok(DpAccountant {
-            steps: j
-                .get("steps")
-                .and_then(Json::as_i64)
-                .ok_or_else(|| FedError::Privacy("accountant missing steps".into()))?
-                as u64,
-            noise_multiplier: j
-                .get("noise_multiplier")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| {
-                    FedError::Privacy("accountant missing noise_multiplier".into())
-                })?,
-        })
+        let steps = j
+            .get("steps")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| FedError::Privacy("accountant missing steps".into()))?
+            as u64;
+        let noise_multiplier = j
+            .get("noise_multiplier")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| {
+                FedError::Privacy("accountant missing noise_multiplier".into())
+            })?;
+        let rdp = match j.get("rdp").and_then(Json::as_arr) {
+            // non-finite costs serialize as JSON null; read them back as ∞
+            Some(arr) if arr.len() == RDP_ORDERS.len() => arr
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(f64::INFINITY))
+                .collect(),
+            // legacy snapshot (pre-subsampling): reconstruct as q = 1 rounds
+            _ => RDP_ORDERS
+                .iter()
+                .map(|&alpha| {
+                    if steps == 0 {
+                        0.0
+                    } else {
+                        steps as f64
+                            * rdp_gaussian_subsampled(alpha, 1.0, noise_multiplier)
+                    }
+                })
+                .collect(),
+        };
+        Ok(DpAccountant { steps, noise_multiplier, rdp })
     }
 }
 
@@ -238,5 +339,67 @@ mod tests {
         let back = DpAccountant::from_json(&a.to_json()).unwrap();
         assert_eq!(back, a);
         assert!(DpAccountant::from_json(&Json::obj()).is_err());
+        // subsampled rounds survive persistence too
+        let mut s = DpAccountant::new(1.0);
+        s.add_subsampled_steps(5, 0.25);
+        let back = DpAccountant::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert!((back.epsilon(1e-5) - s.epsilon(1e-5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn legacy_snapshot_without_rdp_reconstructs_full_participation() {
+        // a pre-subsampling snapshot carries only steps + noise_multiplier
+        let legacy = Json::obj().set("steps", 10).set("noise_multiplier", 1.0);
+        let a = DpAccountant::from_json(&legacy).unwrap();
+        let mut b = DpAccountant::new(1.0);
+        b.add_steps(10);
+        assert!((a.epsilon(1e-5) - b.epsilon(1e-5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn subsampling_amplification_strictly_reduces_epsilon() {
+        // the acceptance-pinned property: at equal σ and step count, a
+        // q<1 cohort's ε is STRICTLY below full participation
+        for &q in &[0.1, 0.25, 0.5, 0.9] {
+            let mut sub = DpAccountant::new(1.0);
+            sub.add_subsampled_steps(10, q);
+            let mut full = DpAccountant::new(1.0);
+            full.add_steps(10);
+            let (es, ef) = (sub.epsilon(1e-5), full.epsilon(1e-5));
+            assert!(
+                es < ef,
+                "q={q}: subsampled ε {es} not below full ε {ef}"
+            );
+            assert!(es > 0.0);
+        }
+        // and ε is monotone in q
+        let eps_at = |q: f64| {
+            let mut a = DpAccountant::new(1.0);
+            a.add_subsampled_steps(20, q);
+            a.epsilon(1e-5)
+        };
+        assert!(eps_at(0.1) < eps_at(0.3));
+        assert!(eps_at(0.3) < eps_at(0.7));
+        assert!(eps_at(0.7) < eps_at(1.0));
+    }
+
+    #[test]
+    fn subsampled_rdp_limits() {
+        // q=1 recovers the plain Gaussian RDP exactly
+        for &alpha in &RDP_ORDERS {
+            let a = alpha as f64;
+            let z = 1.7f64;
+            assert!(
+                (rdp_gaussian_subsampled(alpha, 1.0, z) - a / (2.0 * z * z)).abs()
+                    < 1e-12
+            );
+        }
+        // q=0 costs nothing; z=0 costs everything
+        assert_eq!(rdp_gaussian_subsampled(8, 0.0, 1.0), 0.0);
+        assert!(rdp_gaussian_subsampled(8, 0.5, 0.0).is_infinite());
+        // never negative, finite at the largest order (log-space eval)
+        let v = rdp_gaussian_subsampled(512, 0.01, 0.8);
+        assert!(v.is_finite() && v >= 0.0, "rdp(512) = {v}");
     }
 }

@@ -154,6 +154,11 @@ pub struct SecAggRound {
     /// survivor -> dropped -> hex(pair seed)
     reveals: BTreeMap<String, BTreeMap<String, String>>,
     aggregate: Option<TensorBuf>,
+    /// Granted participation/cohort config (quorum, deadline, sampling) —
+    /// negotiated alongside the privacy mode on `/round/{id}/config` and
+    /// echoed in the status document so clients learn the round's close
+    /// semantics from the bulletin board.
+    participation: Option<Json>,
 }
 
 impl SecAggRound {
@@ -175,11 +180,21 @@ impl SecAggRound {
             updates: BTreeMap::new(),
             reveals: BTreeMap::new(),
             aggregate: None,
+            participation: None,
         })
     }
 
     pub fn participants(&self) -> &[String] {
         &self.participants
+    }
+
+    /// Attach the granted participation config (see the field docs).
+    pub fn set_participation(&mut self, cfg: Json) {
+        self.participation = Some(cfg);
+    }
+
+    pub fn participation(&self) -> Option<&Json> {
+        self.participation.as_ref()
     }
 
     fn check_participant(&self, client: &str) -> Result<()> {
@@ -440,6 +455,10 @@ impl SecAggRound {
             .set(
                 "dropped",
                 Json::Arr(self.dropped().into_iter().map(Json::Str).collect()),
+            )
+            .set(
+                "participation",
+                self.participation.clone().unwrap_or(Json::Null),
             )
     }
 }

@@ -19,6 +19,18 @@ pub fn splitmix64(x: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// FNV-1a over a string's bytes — the shared pre-mix for name-keyed
+/// seeds (client batch seeds, cohort stratification).  Callers mix the
+/// result with their own context and finish with [`splitmix64`].
+#[inline]
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// Counter-based f32 stream in `[-1, 1)`, identical to `aot.golden_f32`.
 pub fn golden_f32(seed: u32, n: usize) -> Vec<f32> {
     let base = (seed as u64) << 32;

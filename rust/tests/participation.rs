@@ -1,0 +1,491 @@
+//! Partial-participation integration: sampled cohorts, straggler
+//! deadlines, quorum closes, and DP amplification through the FACT
+//! server.
+//!
+//! Acceptance (ISSUE 4): a sampled round (q < 1, quorum enforced)
+//! completes end-to-end through the FACT server with stragglers dropped,
+//! the aggregate matches the reporting subset, and the accountant
+//! reports a strictly smaller ε than full participation at the same
+//! noise multiplier.
+//!
+//! The tests run engine-free (the `privacy_secagg.rs` pattern): a custom
+//! task registry plays the client side with deterministic per-device
+//! updates, scripted stragglers (sleeps past the round close) and
+//! mid-round dropouts (task errors), so the full server-side path —
+//! cohort sampling, quorum/deadline close, late sweeps, secagg dropout
+//! recovery, ε accounting — runs without compiled artifacts.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use feddart::config::{ParticipationConfig, SamplingStrategy};
+use feddart::coordinator::participation::{
+    participation_round_key, Candidate, CohortSampler,
+};
+use feddart::coordinator::workflow::WorkflowManager;
+use feddart::dart::TaskRegistry;
+use feddart::error::FedError;
+use feddart::fact::aggregation::Aggregation;
+use feddart::fact::model::FactModel;
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::FactServer;
+use feddart::json::Json;
+use feddart::privacy::dp::DpAccountant;
+use feddart::privacy::{
+    masking, round_id_from_hex, to_hex, PrivacyConfig, PrivacyMode,
+};
+use feddart::util::rng::golden_f32;
+use feddart::util::tensorbuf::TensorBuf;
+
+const PARAMS: usize = 32;
+const COHORT_KEY: &[u8] = b"participation-cohort-key";
+
+/// Minimal engine-free model with a uniform (secure-sum-capable) rule.
+struct TestModel;
+
+impl FactModel for TestModel {
+    fn name(&self) -> &str {
+        "partmodel"
+    }
+    fn param_count(&self) -> usize {
+        PARAMS
+    }
+    fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+        Ok(golden_f32(seed as u32, PARAMS))
+    }
+    fn aggregation(&self) -> &Aggregation {
+        &Aggregation::FedAvg
+    }
+}
+
+fn device_index(device: &str) -> usize {
+    device.rsplit('-').next().unwrap().parse().unwrap()
+}
+
+/// The deterministic per-device "local training" delta.
+fn bump(device: &str) -> f32 {
+    0.01 * (device_index(device) + 1) as f32
+}
+
+/// Precompute the cohort the server will draw for (clustering round 0,
+/// cluster 0, `round`) — the sampler is a pure function of (config, key,
+/// pool), which is exactly what lets the test script stragglers inside
+/// the real cohort.
+fn expected_cohort(
+    part: &ParticipationConfig,
+    n: usize,
+    round: usize,
+) -> Vec<String> {
+    let sampler = CohortSampler::new(part.clone());
+    let pool: Vec<Candidate> = (0..n)
+        .map(|i| Candidate::uniform(&format!("client-{i}")))
+        .collect();
+    sampler.sample(participation_round_key(part.seed, 0, 0, round), &pool)
+}
+
+/// Client registry: `fact_learn` returns `global + bump(device)`, sleeps
+/// for scripted stragglers (keyed by (round, device)), and errors for
+/// scripted dropouts.
+fn scripted_registry(
+    stragglers: Arc<BTreeSet<(usize, String)>>,
+    dropouts: Arc<BTreeSet<String>>,
+    straggle: Duration,
+) -> TaskRegistry {
+    let reg = TaskRegistry::new();
+    reg.register("fact_init", |_| Ok(Json::Null));
+    reg.register("fact_learn", move |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        if dropouts.contains(&device) {
+            return Err(FedError::Task(format!("'{device}' crashed mid-round")));
+        }
+        let round =
+            p.get("round").and_then(Json::as_usize).unwrap_or(0);
+        if stragglers.contains(&(round, device.clone())) {
+            std::thread::sleep(straggle);
+        }
+        let global = TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Task(e.to_string()))?;
+        let b = bump(&device);
+        let out: Vec<f32> =
+            global.as_f32_slice().iter().map(|g| g + b).collect();
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(out))
+            .set("n_samples", 16.0)
+            .set("loss", 1.0))
+    });
+    reg
+}
+
+/// ISSUE satellite scenario: N=12, cohort of 8, 2 stragglers past the
+/// deadline, 1 mid-round dropout — the round closes at quorum and the
+/// aggregate matches the reporting subset exactly.
+#[test]
+fn round_closes_at_quorum_and_aggregates_the_reporting_subset() {
+    let n = 12;
+    let part = ParticipationConfig {
+        sample_rate: 0.65, // ceil(0.65 * 12) = 8
+        quorum: 0.6,       // ceil(0.6 * 8) = 5
+        deadline_ms: 10_000,
+        strategy: SamplingStrategy::Uniform,
+        seed: 2024,
+        ..Default::default()
+    };
+    let cohort = expected_cohort(&part, n, 0);
+    assert_eq!(cohort.len(), 8, "cohort {cohort:?}");
+
+    // 2 stragglers + 1 dropout leave exactly quorum (5) reporters
+    let stragglers: Arc<BTreeSet<(usize, String)>> = Arc::new(
+        [(0usize, cohort[0].clone()), (0usize, cohort[1].clone())].into(),
+    );
+    let dropouts: Arc<BTreeSet<String>> =
+        Arc::new([cohort[2].clone()].into());
+    let reporting: Vec<String> = cohort[3..].to_vec();
+
+    let reg = scripted_registry(
+        Arc::clone(&stragglers),
+        Arc::clone(&dropouts),
+        Duration::from_millis(2_000),
+    );
+    let wm = WorkflowManager::test_mode(n, reg, n);
+    let mut server =
+        FactServer::new(wm).with_participation(part.clone());
+    server
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(1)), 5)
+        .unwrap();
+    let global0 = server.container().clusters[0].params.clone();
+    server.learn().unwrap();
+
+    // the round closed at quorum, long before the stragglers woke up
+    let r = &server.history()[0];
+    assert_eq!(r.sampled, 8);
+    assert_eq!(r.n_clients, 5);
+    assert_eq!(r.late, 0, "no grace window — stragglers count as dropped");
+    assert_eq!(r.dropped, 3);
+    assert!((r.sample_rate - 8.0 / 12.0).abs() < 1e-9);
+    assert!(
+        r.round_ms < 1_800.0,
+        "round waited for the stragglers: {} ms",
+        r.round_ms
+    );
+
+    // aggregate == uniform mean over exactly the reporting subset
+    let mean_bump: f32 =
+        reporting.iter().map(|d| bump(d)).sum::<f32>() / reporting.len() as f32;
+    for (got, g0) in
+        server.container().clusters[0].params.iter().zip(global0.iter())
+    {
+        assert!(
+            (got - (g0 + mean_bump)).abs() < 1e-5,
+            "aggregate drifted from the reporting subset: {got} vs {}",
+            g0 + mean_bump
+        );
+    }
+
+    // participation metrics recorded the round
+    let m = server.metrics();
+    assert_eq!(m.counter("fact.participation.sampled").get(), 8);
+    assert_eq!(m.counter("fact.participation.reported").get(), 5);
+    assert_eq!(m.counter("fact.participation.dropped").get(), 3);
+    assert_eq!(m.counter("fact.participation.quorum_closes").get(), 1);
+}
+
+/// Late results arriving inside the grace window are observed (counted)
+/// and still excluded from the aggregate.
+#[test]
+fn late_stragglers_are_counted_then_discarded() {
+    let n = 6;
+    let part = ParticipationConfig {
+        sample_rate: 1.0,
+        quorum: 0.5, // ceil(0.5 * 6) = 3
+        deadline_ms: 10_000,
+        late_grace_ms: 1_500,
+        strategy: SamplingStrategy::Uniform,
+        seed: 9,
+        ..Default::default()
+    };
+    let stragglers: Arc<BTreeSet<(usize, String)>> = Arc::new(
+        [(0usize, "client-4".to_string()), (0usize, "client-5".to_string())]
+            .into(),
+    );
+    let dropouts: Arc<BTreeSet<String>> = Arc::new(BTreeSet::new());
+    let reg = scripted_registry(
+        stragglers,
+        dropouts,
+        Duration::from_millis(300),
+    );
+    let wm = WorkflowManager::test_mode(n, reg, n);
+    let mut server = FactServer::new(wm).with_participation(part);
+    server
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(1)), 3)
+        .unwrap();
+    server.learn().unwrap();
+
+    let r = &server.history()[0];
+    assert_eq!(r.sampled, 6);
+    assert!(r.n_clients >= 3, "closed below quorum: {}", r.n_clients);
+    assert!(
+        r.late >= 2,
+        "stragglers settling in the grace window must be counted late \
+         (late={}, reported={}, dropped={})",
+        r.late,
+        r.n_clients,
+        r.dropped
+    );
+    assert_eq!(r.n_clients + r.late + r.dropped, 6);
+    assert!(
+        r.n_clients + r.late >= 5,
+        "grace sweep missed settled stragglers"
+    );
+}
+
+/// Acceptance: a q=0.25 sampled session (quorum 0.75, deadline enforced)
+/// runs end-to-end with one straggler per round dropped at the quorum
+/// close, and the accountant's ε is STRICTLY below full participation at
+/// the same noise multiplier.
+#[test]
+fn dp_amplification_of_sampled_rounds_end_to_end() {
+    let n = 16;
+    let rounds = 3;
+    let part = ParticipationConfig {
+        sample_rate: 0.25, // cohort 4
+        quorum: 0.75,      // ceil(0.75 * 4) = 3
+        deadline_ms: 8_000,
+        strategy: SamplingStrategy::Uniform,
+        seed: 31,
+        ..Default::default()
+    };
+    // one scripted straggler per round, always a real cohort member
+    let mut stragglers = BTreeSet::new();
+    for r in 0..rounds {
+        let cohort = expected_cohort(&part, n, r);
+        assert_eq!(cohort.len(), 4);
+        stragglers.insert((r, cohort[0].clone()));
+    }
+    let reg = scripted_registry(
+        Arc::new(stragglers),
+        Arc::new(BTreeSet::new()),
+        Duration::from_millis(1_000),
+    );
+    let wm = WorkflowManager::test_mode(n, reg, n);
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig::with_mode(PrivacyMode::Dp))
+        .with_participation(part);
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(rounds)),
+            11,
+        )
+        .unwrap();
+    server.learn().unwrap();
+
+    assert_eq!(server.history().len(), rounds);
+    for r in server.history() {
+        assert_eq!(r.sampled, 4);
+        assert_eq!(r.n_clients, 3, "round {} kept its straggler", r.round);
+        assert_eq!(r.dropped, 1);
+        assert!((r.sample_rate - 0.25).abs() < 1e-9);
+    }
+
+    // the pinned amplification claim: ε(q=0.25) < ε(q=1) at equal σ, T
+    assert_eq!(server.accountant().steps, rounds as u64);
+    let eps = server.accountant().epsilon(1e-5);
+    let mut full = DpAccountant::new(1.0);
+    full.add_steps(rounds as u64);
+    let full_eps = full.epsilon(1e-5);
+    assert!(eps > 0.0 && eps.is_finite());
+    assert!(
+        eps < full_eps,
+        "subsampled ε {eps} not strictly below full-participation ε {full_eps}"
+    );
+}
+
+/// Secagg under partial participation: a sampled cohort with one
+/// deadline-dropped straggler and one mid-round crash — both are
+/// recovered through the `fact_reveal` path and the unmasked aggregate
+/// equals the clear mean of the reporting subset.
+#[test]
+fn secagg_cohort_recovers_straggler_and_dropout_masks() {
+    let n = 8;
+    let part = ParticipationConfig {
+        sample_rate: 0.75, // cohort 6
+        quorum: 0.65,      // ceil(0.65 * 6) = 4
+        deadline_ms: 10_000,
+        min_cohort: 2,
+        strategy: SamplingStrategy::Uniform,
+        seed: 77,
+        ..Default::default()
+    };
+    let cohort = expected_cohort(&part, n, 0);
+    assert_eq!(cohort.len(), 6);
+    let straggler = cohort[0].clone();
+    let dropout = cohort[1].clone();
+    let reporting: Vec<String> = cohort[2..].to_vec();
+
+    let reg = TaskRegistry::new();
+    reg.register("fact_init", |_| Ok(Json::Null));
+    {
+        let straggler = straggler.clone();
+        let dropout = dropout.clone();
+        reg.register("fact_learn", move |p| {
+            let device = p
+                .get("_device")
+                .and_then(Json::as_str)
+                .ok_or_else(|| FedError::Task("missing _device".into()))?
+                .to_string();
+            if device == dropout {
+                return Err(FedError::Task(format!(
+                    "'{device}' crashed mid-round"
+                )));
+            }
+            if device == straggler {
+                std::thread::sleep(Duration::from_millis(1_200));
+            }
+            let pj = p.need("privacy")?;
+            let cfg = PrivacyConfig::from_json(pj)?;
+            let round_id = round_id_from_hex(
+                pj.need("round_id")?.as_str().unwrap_or_default(),
+            )?;
+            let participants: Vec<String> = pj
+                .need("participants")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect();
+            if !participants.contains(&device) {
+                return Err(FedError::Task(format!(
+                    "'{device}' dispatched outside the cohort"
+                )));
+            }
+            let peers: Vec<String> = participants
+                .into_iter()
+                .filter(|c| *c != device)
+                .collect();
+            let update = vec![bump(&device); PARAMS];
+            let masked = masking::mask_update(
+                &update,
+                1.0, // uniform rule -> weighted=false
+                &device,
+                &peers,
+                COHORT_KEY,
+                round_id,
+                cfg.frac_bits,
+            )?;
+            Ok(Json::obj()
+                .set("params", TensorBuf::from_f32_vec(masked))
+                .set("n_samples", 1.0)
+                .set("loss", 1.0))
+        });
+    }
+    reg.register("fact_reveal", move |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let round_id = round_id_from_hex(
+            p.need("round_id")?.as_str().unwrap_or_default(),
+        )?;
+        let mut seeds = Json::obj();
+        for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
+            let Some(name) = d.as_str() else { continue };
+            if name == device {
+                continue;
+            }
+            seeds = seeds.set(
+                name,
+                to_hex(&masking::pair_seed(COHORT_KEY, round_id, &device, name)),
+            );
+        }
+        Ok(Json::obj().set("seeds", seeds))
+    });
+
+    let wm = WorkflowManager::test_mode(n, reg, n);
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig::with_mode(PrivacyMode::SecAgg))
+        .with_participation(part);
+    server
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(1)), 2)
+        .unwrap();
+    server.learn().unwrap();
+
+    let r = &server.history()[0];
+    assert_eq!(r.sampled, 6);
+    assert_eq!(r.n_clients, 4);
+    assert_eq!(r.dropped, 2, "straggler + crash both recovered as dropouts");
+
+    // unmasked aggregate == clear mean over exactly the reporting subset
+    let mean_bump: f32 =
+        reporting.iter().map(|d| bump(d)).sum::<f32>() / reporting.len() as f32;
+    for got in server.container().clusters[0].params.iter() {
+        assert!(
+            (got - mean_bump).abs() < 1e-3,
+            "unmasked aggregate {got} vs clear {mean_bump}"
+        );
+    }
+}
+
+/// Config-level guardrail: secagg + participation demands min_cohort >= 2.
+#[test]
+fn secagg_participation_requires_min_cohort_of_two() {
+    let reg = TaskRegistry::new();
+    reg.register("fact_init", |_| Ok(Json::Null));
+    let wm = WorkflowManager::test_mode(4, reg, 2);
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig::with_mode(PrivacyMode::SecAgg))
+        .with_participation(ParticipationConfig {
+            sample_rate: 0.25,
+            min_cohort: 1,
+            ..Default::default()
+        });
+    server
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(1)), 1)
+        .unwrap();
+    let err = server.learn().unwrap_err();
+    assert!(err.to_string().contains("min_cohort"), "{err}");
+}
+
+/// The deadline path: a round whose whole cohort straggles closes at the
+/// deadline with whatever reported and errors only when nothing did.
+#[test]
+fn deadline_close_with_zero_reports_is_an_error() {
+    let n = 4;
+    let part = ParticipationConfig {
+        sample_rate: 1.0,
+        quorum: 1.0,
+        deadline_ms: 120,
+        strategy: SamplingStrategy::Uniform,
+        ..Default::default()
+    };
+    let stragglers: Arc<BTreeSet<(usize, String)>> = Arc::new(
+        (0..n).map(|i| (0usize, format!("client-{i}"))).collect(),
+    );
+    let reg = scripted_registry(
+        stragglers,
+        Arc::new(BTreeSet::new()),
+        Duration::from_millis(700),
+    );
+    let wm = WorkflowManager::test_mode(n, reg, n);
+    let mut server = FactServer::new(wm).with_participation(part);
+    server
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(1)), 1)
+        .unwrap();
+    let err = server.learn().unwrap_err();
+    assert!(
+        err.to_string().contains("no client returned a result"),
+        "{err}"
+    );
+    assert_eq!(
+        server
+            .metrics()
+            .counter("fact.participation.deadline_closes")
+            .get(),
+        1
+    );
+}
