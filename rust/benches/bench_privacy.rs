@@ -23,6 +23,7 @@ use feddart::privacy::masking::{
     expand_mask_into, mask_update, pair_seed, DEFAULT_FRAC_BITS,
 };
 use feddart::privacy::secagg::{unmask_aggregate, MaskedUpdate, RevealedSeed};
+use feddart::privacy::{keys, shamir};
 use feddart::util::rng::Rng;
 use feddart::util::tensorbuf::TensorBuf;
 
@@ -172,6 +173,85 @@ fn round_bench(mut report: BenchReport) -> BenchReport {
     report
 }
 
+/// Threshold-recovery cost: the per-round fixed overhead of per-pair key
+/// agreement (DH keypair + pairwise key) and the t-of-n Shamir machinery
+/// (split at dealing time, reconstruct + seed re-derivation at recovery).
+fn threshold_bench(mut report: BenchReport) -> BenchReport {
+    let iters = if smoke() { 3 } else { 10 };
+    let t = (CLIENTS + 1) / 2; // the auto threshold at K clients
+    let names = names();
+    let mut t_table = Table::new(&["op", "time"]);
+
+    let secrets: Vec<[u8; 32]> =
+        (0..CLIENTS).map(|i| [i as u8 + 1; 32]).collect();
+    let kp = time_n(1, iters, || {
+        std::hint::black_box(keys::keypair(&secrets[0]));
+    });
+    let kps: Vec<keys::RoundKeys> =
+        secrets.iter().map(keys::keypair).collect();
+    let shared = time_n(1, iters, || {
+        std::hint::black_box(keys::shared_key(&kps[0].secret, &kps[1].public));
+    });
+
+    let xs: Vec<u8> = (1..CLIENTS as u8).collect(); // K-1 peer shares
+    let mut rng = Rng::new(9);
+    let split = time_n(1, iters, || {
+        let s = shamir::split_at(&secrets[0], t, &xs, &mut rng).unwrap();
+        std::hint::black_box(s);
+    });
+    let shares = {
+        let mut r = Rng::new(10);
+        shamir::split_at(&secrets[0], t, &xs, &mut r).unwrap()
+    };
+    let reconstruct = time_n(1, iters, || {
+        let s = shamir::reconstruct(&shares[..t], t).unwrap();
+        std::hint::black_box(s);
+    });
+
+    // full recovery of DROPPED dealers: reconstruct each secret from t
+    // shares, then re-derive the pair seed with every survivor via DH
+    let survivors = CLIENTS - DROPPED;
+    let dealer_shares: Vec<Vec<shamir::Share>> = (0..DROPPED)
+        .map(|d| {
+            let mut r = Rng::new(100 + d as u64);
+            shamir::split_at(&secrets[CLIENTS - DROPPED + d], t, &xs, &mut r)
+                .unwrap()
+        })
+        .collect();
+    let recovery = time_n(1, iters, || {
+        for (d, shares) in dealer_shares.iter().enumerate() {
+            let raw = shamir::reconstruct(&shares[..t], t).unwrap();
+            let secret: [u8; 32] = raw.as_slice().try_into().unwrap();
+            for s in 0..survivors {
+                let sk = keys::shared_key(&secret, &kps[s].public);
+                std::hint::black_box(keys::pair_seed_from_shared(
+                    &sk,
+                    ROUND,
+                    &names[s],
+                    &names[CLIENTS - DROPPED + d],
+                ));
+            }
+        }
+    });
+
+    t_table.row(&["dh_keypair".into(), fmt_s(kp.mean)]);
+    t_table.row(&["dh_shared_key".into(), fmt_s(shared.mean)]);
+    t_table.row(&[format!("shamir_split(t={t},n={})", xs.len()), fmt_s(split.mean)]);
+    t_table.row(&[format!("shamir_reconstruct(t={t})"), fmt_s(reconstruct.mean)]);
+    t_table.row(&[
+        format!("threshold_recovery({DROPPED} dealers x {survivors} seeds)"),
+        fmt_s(recovery.mean),
+    ]);
+    t_table.print("threshold recovery (per-pair DH + t-of-n Shamir)");
+    report
+        .set("dh_keypair_s", kp.mean)
+        .set("dh_shared_key_s", shared.mean)
+        .set("shamir_split_s", split.mean)
+        .set("shamir_reconstruct_s", reconstruct.mean)
+        .set("threshold_recovery_s", recovery.mean)
+        .set("reveal_threshold", t)
+}
+
 fn main() {
     println!(
         "bench_privacy: K={CLIENTS} smoke={} (BENCH_SMOKE=1 for CI mode)",
@@ -184,6 +264,7 @@ fn main() {
         .set("smoke", smoke());
     report = expansion_bench(report);
     report = round_bench(report);
+    report = threshold_bench(report);
     match report.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\nfailed to write report: {e}"),

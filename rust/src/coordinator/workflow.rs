@@ -321,26 +321,39 @@ impl WorkflowManager {
             }
         };
         let mut late = Vec::new();
+        let mut close = close;
         if !backend_settled {
-            // cancel outstanding units; units already running when the
-            // round closed may still settle into the backend's result set
-            // (a settled backend has nothing outstanding — stopping it
-            // would only overwrite its Finished/PartiallyFailed status,
-            // and sleeping out the grace window could observe nothing)
-            let _ = self.stop_task(h);
-            if !late_grace.is_zero() {
-                std::thread::sleep(late_grace);
-                if let Ok(after) = self.get_task_result(h) {
-                    for r in after {
-                        if !results
-                            .iter()
-                            .any(|x| x.device_name == r.device_name)
-                        {
-                            late.push(r.device_name);
+            if results.len() >= expected {
+                // Every addressed client's result landed between the
+                // payload-free progress poll and the full fetch: nothing
+                // is outstanding, so there is no straggler to stop or
+                // sweep — sleeping out the grace window here stalled a
+                // fully-reported round for the whole `late_grace` for
+                // nothing (and the stop would clobber the backend's
+                // settled status).
+                close = RoundClose::Complete;
+            } else {
+                // cancel outstanding units; units already running when
+                // the round closed may still settle into the backend's
+                // result set (a settled backend has nothing outstanding —
+                // stopping it would only overwrite its
+                // Finished/PartiallyFailed status, and sleeping out the
+                // grace window could observe nothing)
+                let _ = self.stop_task(h);
+                if !late_grace.is_zero() {
+                    std::thread::sleep(late_grace);
+                    if let Ok(after) = self.get_task_result(h) {
+                        for r in after {
+                            if !results
+                                .iter()
+                                .any(|x| x.device_name == r.device_name)
+                            {
+                                late.push(r.device_name);
+                            }
                         }
                     }
+                    late.sort();
                 }
-                late.sort();
             }
         }
         Ok(QuorumOutcome { results, close, late })
@@ -520,6 +533,94 @@ mod tests {
         assert!(
             t0.elapsed() < Duration::from_millis(350),
             "deadline close waited for the stragglers"
+        );
+    }
+
+    /// Backend that reports quorum-level progress while the full fetch
+    /// already returns every result — the exact race where the old code
+    /// stopped the task and slept out the entire late-grace window even
+    /// though every addressed client had reported.
+    struct FullFetchApi {
+        n: usize,
+        stopped: std::sync::atomic::AtomicBool,
+    }
+
+    impl crate::dart::DartApi for FullFetchApi {
+        fn devices(&self) -> Result<Vec<crate::dart::DeviceInfo>> {
+            Ok((0..self.n)
+                .map(|i| crate::dart::DeviceInfo {
+                    name: format!("client-{i}"),
+                    hardware: Default::default(),
+                    alive: true,
+                })
+                .collect())
+        }
+        fn submit(&self, _: crate::dart::scheduler::TaskSpec) -> Result<u64> {
+            Ok(1)
+        }
+        fn status(&self, _: u64) -> Result<crate::dart::scheduler::TaskStatus> {
+            Ok(crate::dart::scheduler::TaskStatus::InProgress)
+        }
+        fn progress(
+            &self,
+            _: u64,
+        ) -> Result<(crate::dart::scheduler::TaskStatus, usize)> {
+            // report exactly quorum-many results available
+            Ok((crate::dart::scheduler::TaskStatus::InProgress, self.n - 1))
+        }
+        fn results(&self, _: u64) -> Result<Vec<TaskResult>> {
+            // ...but by fetch time EVERY client has settled
+            Ok((0..self.n)
+                .map(|i| TaskResult {
+                    device_name: format!("client-{i}"),
+                    duration: 0.0,
+                    result: Json::obj().set("ok", true),
+                })
+                .collect())
+        }
+        fn stop_task(&self, _: u64) -> Result<()> {
+            self.stopped
+                .store(true, std::sync::atomic::Ordering::SeqCst);
+            Ok(())
+        }
+    }
+
+    /// Regression: a quorum close whose result fetch already covers every
+    /// addressed client must skip the stop + grace sleep entirely —
+    /// `reported == expected` means no straggler can exist.
+    #[test]
+    fn fully_reported_quorum_close_skips_grace_sleep() {
+        let api = Arc::new(FullFetchApi {
+            n: 4,
+            stopped: std::sync::atomic::AtomicBool::new(false),
+        });
+        let wm = WorkflowManager::with_backend(
+            api.clone() as Arc<dyn crate::dart::DartApi>
+        );
+        let dict: BTreeMap<String, Json> = (0..4)
+            .map(|i| (format!("client-{i}"), Json::Null))
+            .collect();
+        let t0 = Instant::now();
+        let out = wm
+            .run_task_quorum(
+                dict,
+                "f",
+                3,
+                Duration::from_secs(10),
+                Duration::from_secs(5), // the old code slept out all 5s
+            )
+            .unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "fully-reported round paid the grace stall: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(out.results.len(), 4);
+        assert_eq!(out.close, RoundClose::Complete);
+        assert!(out.late.is_empty());
+        assert!(
+            !api.stopped.load(std::sync::atomic::Ordering::SeqCst),
+            "nothing outstanding — stop would clobber the settled status"
         );
     }
 

@@ -100,6 +100,125 @@ impl RestDartApi {
         )?;
         expect_ok(resp)
     }
+
+    /// [`RestDartApi::negotiate_round`] with the full secagg privacy
+    /// config: lattice parameters plus the t-of-n reveal threshold and
+    /// below-threshold policy.  The granted (clamped) values in the
+    /// response are authoritative.
+    pub fn negotiate_round_secagg(
+        &self,
+        round_id: u64,
+        privacy: &crate::privacy::PrivacyConfig,
+        participants: &[String],
+        participation: Option<&crate::config::ParticipationConfig>,
+    ) -> Result<Json> {
+        let mut body = Json::obj()
+            .set("privacy", privacy.mode.as_str())
+            .set("frac_bits", privacy.frac_bits as usize)
+            .set("weight_scale", privacy.weight_scale)
+            .set("reveal_threshold", privacy.reveal_threshold)
+            .set("reveal_policy", privacy.reveal_policy.as_str())
+            .set(
+                "participants",
+                Json::Arr(
+                    participants.iter().map(|p| Json::Str(p.clone())).collect(),
+                ),
+            );
+        if let Some(p) = participation {
+            body = body.set("participation", p.to_json());
+        }
+        let resp = self.post(
+            &format!(
+                "/round/{}/config",
+                crate::privacy::round_id_to_hex(round_id)
+            ),
+            &body,
+        )?;
+        expect_ok(resp)
+    }
+
+    /// `POST /round/{id}/keys` — post this client's per-round DH public
+    /// key; returns whether every participant has keyed.
+    pub fn post_round_key(
+        &self,
+        round_id: u64,
+        client: &str,
+        pubkey_hex: &str,
+    ) -> Result<bool> {
+        let body = expect_ok(self.post(
+            &format!("/round/{}/keys", crate::privacy::round_id_to_hex(round_id)),
+            &Json::obj().set("client", client).set("pubkey", pubkey_hex),
+        )?)?;
+        Ok(body.get("complete").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    /// `GET /round/{id}/keys` — every posted public key.
+    pub fn round_keys(
+        &self,
+        round_id: u64,
+    ) -> Result<std::collections::BTreeMap<String, String>> {
+        let body = expect_ok(self.http.get(&format!(
+            "/round/{}/keys",
+            crate::privacy::round_id_to_hex(round_id)
+        ))?)?;
+        let mut out = std::collections::BTreeMap::new();
+        if let Some(obj) = body.need("keys")?.as_obj() {
+            for (k, v) in obj {
+                out.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    /// `POST /round/{id}/shares` — deal this client's encrypted Shamir
+    /// shares (recipient -> ciphertext hex) plus their commitments.
+    pub fn post_round_shares(
+        &self,
+        round_id: u64,
+        client: &str,
+        shares: &std::collections::BTreeMap<String, String>,
+        commits: &std::collections::BTreeMap<String, String>,
+    ) -> Result<()> {
+        let mut sj = Json::obj();
+        for (k, v) in shares {
+            sj = sj.set(k, v.as_str());
+        }
+        let mut cj = Json::obj();
+        for (k, v) in commits {
+            cj = cj.set(k, v.as_str());
+        }
+        expect_ok(self.post(
+            &format!(
+                "/round/{}/shares",
+                crate::privacy::round_id_to_hex(round_id)
+            ),
+            &Json::obj()
+                .set("client", client)
+                .set("shares", sj)
+                .set("commits", cj),
+        )?)?;
+        Ok(())
+    }
+
+    /// `GET /round/{id}/shares?client=me` — the encrypted shares
+    /// addressed to `client` (dealer -> ciphertext hex).
+    pub fn round_shares_for(
+        &self,
+        round_id: u64,
+        client: &str,
+    ) -> Result<std::collections::BTreeMap<String, String>> {
+        let body = expect_ok(self.http.get(&format!(
+            "/round/{}/shares?client={client}",
+            crate::privacy::round_id_to_hex(round_id)
+        ))?)?;
+        let mut out = std::collections::BTreeMap::new();
+        if let Some(obj) = body.need("shares")?.as_obj() {
+            for (k, v) in obj {
+                out.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// The single place that decides between the negotiated binary wire and

@@ -492,6 +492,75 @@ impl RestHandler {
             }
             // ------------------- privacy rounds (secure-aggregation board)
             ("POST", ["round", id, "config"]) => self.round_config(req, id),
+            ("POST", ["round", id, "keys"]) => {
+                let rid = round_id_from_hex(id)?;
+                let body = req.body_json()?;
+                let client = need_str(&body, "client")?;
+                let pubkey = need_str(&body, "pubkey")?;
+                let complete = self.rounds.with(rid, |r| {
+                    r.post_key(&client, &pubkey)?;
+                    Ok(r.all_keyed())
+                })?;
+                Ok(Response::ok_json(
+                    &Json::obj().set("ok", true).set("complete", complete),
+                ))
+            }
+            ("GET", ["round", id, "keys"]) => {
+                let rid = round_id_from_hex(id)?;
+                let doc = self.rounds.with(rid, |r| {
+                    let mut keys = Json::obj();
+                    for (c, k) in r.pubkeys() {
+                        keys = keys.set(c, k.as_str());
+                    }
+                    Ok(Json::obj()
+                        .set("keys", keys)
+                        .set("complete", r.all_keyed())
+                        .set("reveal_threshold", r.threshold()))
+                })?;
+                Ok(Response::ok_json(&doc))
+            }
+            ("POST", ["round", id, "shares"]) => {
+                let rid = round_id_from_hex(id)?;
+                let body = req.body_json()?;
+                let client = need_str(&body, "client")?;
+                let str_map = |key: &str| -> Result<BTreeMap<String, String>> {
+                    let mut out = BTreeMap::new();
+                    if let Some(obj) = body.need(key)?.as_obj() {
+                        for (k, v) in obj {
+                            out.insert(
+                                k.clone(),
+                                v.as_str().unwrap_or("").to_string(),
+                            );
+                        }
+                    }
+                    Ok(out)
+                };
+                let shares = str_map("shares")?;
+                let commits = str_map("commits")?;
+                self.rounds
+                    .with(rid, |r| r.post_shares(&client, shares, commits))?;
+                Ok(Response::ok_json(&Json::obj().set("ok", true)))
+            }
+            ("GET", ["round", id, "shares"]) => {
+                // ?client=me — the encrypted shares addressed to one
+                // recipient (ciphertext the server cannot read)
+                let rid = round_id_from_hex(id)?;
+                let client = req
+                    .query
+                    .get("client")
+                    .cloned()
+                    .ok_or_else(|| {
+                        FedError::Http("missing ?client= query".into())
+                    })?;
+                let doc = self.rounds.with(rid, |r| {
+                    let mut shares = Json::obj();
+                    for (dealer, ct) in r.shares_for(&client) {
+                        shares = shares.set(&dealer, ct.as_str());
+                    }
+                    Ok(Json::obj().set("shares", shares))
+                })?;
+                Ok(Response::ok_json(&doc))
+            }
             ("GET", ["round", id, "config"]) => {
                 let rid = round_id_from_hex(id)?;
                 let status = self.rounds.with(rid, |r| Ok(r.status_json()))?;
@@ -554,11 +623,15 @@ impl RestHandler {
                 Ok(Response::ok_json(&Json::obj().set("ok", true)))
             }
             ("POST", ["round", id, "reveal"]) => {
+                // direct pair-seed reveals ("seeds") and/or decrypted
+                // Shamir share reveals ("shares": dealer -> share hex)
                 let rid = round_id_from_hex(id)?;
                 let body = req.body_json()?;
                 let client = need_str(&body, "client")?;
                 let mut seeds = BTreeMap::new();
-                if let Some(obj) = body.need("seeds")?.as_obj() {
+                if let Some(obj) =
+                    body.get("seeds").and_then(Json::as_obj)
+                {
                     for (dropped, s) in obj {
                         seeds.insert(
                             dropped.clone(),
@@ -566,8 +639,27 @@ impl RestHandler {
                         );
                     }
                 }
+                let mut shares = BTreeMap::new();
+                if let Some(obj) = body.get("shares").and_then(Json::as_obj) {
+                    for (dealer, s) in obj {
+                        shares.insert(
+                            dealer.clone(),
+                            s.as_str().unwrap_or("").to_string(),
+                        );
+                    }
+                }
+                if seeds.is_empty() && shares.is_empty() {
+                    return Err(FedError::Http(
+                        "reveal needs 'seeds' and/or 'shares'".into(),
+                    ));
+                }
                 let missing = self.rounds.with(rid, |r| {
-                    r.reveal(&client, &seeds)?;
+                    if !seeds.is_empty() {
+                        r.reveal(&client, &seeds)?;
+                    }
+                    for (dealer, share_hex) in &shares {
+                        r.reveal_share(&client, dealer, share_hex)?;
+                    }
                     Ok(r.missing_reveals().len())
                 })?;
                 Ok(Response::ok_json(
@@ -667,6 +759,19 @@ impl RestHandler {
                     .and_then(Json::as_f64)
                     .unwrap_or(defaults.weight_scale as f64)
                     as f32,
+                // 0 = auto; SecAggRound::new resolves + clamps into
+                // [2, n-1], and the grant echoes the resolved value
+                reveal_threshold: body
+                    .get("reveal_threshold")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(defaults.reveal_threshold),
+                reveal_policy: match body
+                    .get("reveal_policy")
+                    .and_then(Json::as_str)
+                {
+                    Some(s) => crate::privacy::RevealPolicy::parse(s)?,
+                    None => defaults.reveal_policy,
+                },
             };
             self.rounds.create(rid, participants, cfg)?;
             if let Some(p) = &participation {
@@ -676,19 +781,27 @@ impl RestHandler {
                 })?;
             }
         }
-        Ok(Response::json(
-            201,
-            &Json::obj()
-                .set("round_id", id)
-                .set("privacy", granted.as_str())
-                .set(
-                    "participation",
-                    participation
-                        .as_ref()
-                        .map(|p| p.to_json())
-                        .unwrap_or(Json::Null),
-                ),
-        ))
+        let mut grant = Json::obj()
+            .set("round_id", id)
+            .set("privacy", granted.as_str())
+            .set(
+                "participation",
+                participation
+                    .as_ref()
+                    .map(|p| p.to_json())
+                    .unwrap_or(Json::Null),
+            );
+        if granted.has_secagg() {
+            // echo the resolved (clamped) threshold + policy — granted
+            // values are authoritative, like the participation clamp
+            grant = self.rounds.with(rid, |r| {
+                Ok(grant
+                    .clone()
+                    .set("reveal_threshold", r.threshold())
+                    .set("reveal_policy", r.cfg.reveal_policy.as_str()))
+            })?;
+        }
+        Ok(Response::json(201, &grant))
     }
 }
 
@@ -1130,6 +1243,166 @@ mod tests {
         for (a, e) in params.as_f32_slice().iter().zip(expect.iter()) {
             assert!((a - e).abs() < 1e-4, "{a} vs {e}");
         }
+    }
+
+    /// Per-pair keys + threshold shares over the REST board: 4 clients,
+    /// one drops after dealing shares, NO direct seed reveals — t=2
+    /// share reveals from two survivors recover the round.
+    #[test]
+    fn rest_secagg_threshold_share_recovery_end_to_end() {
+        use crate::privacy::masking::{mask_update_with_seeds, pair_sign};
+        use crate::privacy::{from_hex, keys, round_id_to_hex, shamir, to_hex,
+                             PrivacyConfig, PrivacyMode, RevealPolicy};
+        use crate::dart::rest::RestDartApi;
+        use std::collections::BTreeMap as Map;
+
+        let server = DartServer::start(DartServerConfig::default()).unwrap();
+        let api = RestDartApi::from_addr(&server.rest_addr().to_string(), "000");
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+        let rid_u = 31337u64;
+        let rid = round_id_to_hex(rid_u);
+        let names: Vec<String> = (0..4).map(|i| format!("edge-{i}")).collect();
+
+        let privacy = PrivacyConfig {
+            mode: PrivacyMode::SecAgg,
+            weight_scale: 1.0,
+            reveal_threshold: 2,
+            reveal_policy: RevealPolicy::Proceed,
+            ..PrivacyConfig::default()
+        };
+        let granted = api
+            .negotiate_round_secagg(rid_u, &privacy, &names, None)
+            .unwrap();
+        assert_eq!(granted.get("privacy").unwrap().as_str(), Some("secagg"));
+        assert_eq!(
+            granted.get("reveal_threshold").and_then(Json::as_usize),
+            Some(2)
+        );
+        assert_eq!(
+            granted.get("reveal_policy").and_then(Json::as_str),
+            Some("proceed")
+        );
+
+        // key agreement
+        let kps: Vec<keys::RoundKeys> = (0..4)
+            .map(|i| {
+                keys::keypair(&keys::derive_round_secret(
+                    &[i as u8 + 1; 32],
+                    rid_u,
+                    &names[i],
+                ))
+            })
+            .collect();
+        for (i, name) in names.iter().enumerate() {
+            let complete = api
+                .post_round_key(rid_u, name, &keys::pubkey_hex(&kps[i].public))
+                .unwrap();
+            assert_eq!(complete, i == 3);
+        }
+        assert_eq!(api.round_keys(rid_u).unwrap().len(), 4);
+
+        // share distribution (x = 1-based index in the sorted name list)
+        let mut rng = crate::util::rng::Rng::new(1);
+        for (i, dealer) in names.iter().enumerate() {
+            let peers: Vec<usize> = (0..4).filter(|j| *j != i).collect();
+            let xs: Vec<u8> = peers.iter().map(|&j| j as u8 + 1).collect();
+            let split =
+                shamir::split_at(&kps[i].secret, 2, &xs, &mut rng).unwrap();
+            let mut shares = Map::new();
+            let mut commits = Map::new();
+            for (share, &j) in split.iter().zip(peers.iter()) {
+                let sk = keys::shared_key(&kps[i].secret, &kps[j].public);
+                let ct = keys::encrypt_share(
+                    &sk, rid_u, dealer, &names[j], &share.to_bytes(),
+                );
+                shares.insert(names[j].clone(), to_hex(&ct));
+                commits.insert(
+                    names[j].clone(),
+                    to_hex(&shamir::share_commitment(share)),
+                );
+            }
+            api.post_round_shares(rid_u, dealer, &shares, &commits).unwrap();
+        }
+
+        // masked submits: edge-3 drops after dealing
+        let vecs =
+            [vec![1.0f32, -2.0], vec![3.0f32, 0.0], vec![0.0f32, 2.0]];
+        for i in 0..3 {
+            let seeds: Vec<(i64, [u8; 32])> = (0..4)
+                .filter(|j| *j != i)
+                .map(|j| {
+                    let sk = keys::shared_key(&kps[i].secret, &kps[j].public);
+                    (
+                        pair_sign(&names[i], &names[j]),
+                        keys::pair_seed_from_shared(
+                            &sk, rid_u, &names[i], &names[j],
+                        ),
+                    )
+                })
+                .collect();
+            let masked =
+                mask_update_with_seeds(&vecs[i], 1.0, &seeds, 16).unwrap();
+            let r = c
+                .post(
+                    &format!("/round/{rid}/submit"),
+                    &Json::obj()
+                        .set("client", names[i].as_str())
+                        .set("n_samples", 1.0)
+                        .set(
+                            "params",
+                            crate::util::tensorbuf::TensorBuf::from_f32_vec(
+                                masked,
+                            ),
+                        ),
+                )
+                .unwrap();
+            assert_eq!(r.status, 200, "{:?}", r.parse_body());
+        }
+
+        // blocked until recovery
+        assert_eq!(c.get(&format!("/round/{rid}/aggregate")).unwrap().status, 409);
+
+        // TWO survivors fetch + decrypt + reveal their shares of edge-3;
+        // edge-2 never reveals anything — threshold covers its pair too
+        for i in 0..2 {
+            let cts = api.round_shares_for(rid_u, &names[i]).unwrap();
+            let ct = from_hex(&cts[&names[3]]).unwrap();
+            let sk = keys::shared_key(&kps[i].secret, &kps[3].public);
+            let plain =
+                keys::decrypt_share(&sk, rid_u, &names[3], &names[i], &ct)
+                    .unwrap();
+            let r = c
+                .post(
+                    &format!("/round/{rid}/reveal"),
+                    &Json::obj().set("client", names[i].as_str()).set(
+                        "shares",
+                        Json::obj().set(names[3].as_str(), to_hex(&plain)),
+                    ),
+                )
+                .unwrap();
+            assert_eq!(r.status, 200, "{:?}", r.parse_body());
+        }
+
+        let resp = c.get(&format!("/round/{rid}/aggregate")).unwrap();
+        assert_eq!(resp.status, 200, "{:?}", resp.parse_body());
+        let agg = resp.parse_body().unwrap();
+        let params = crate::util::tensorbuf::TensorBuf::from_json(
+            agg.need("params").unwrap(),
+        )
+        .unwrap();
+        let expect = [4.0f32 / 3.0, 0.0];
+        for (a, e) in params.as_f32_slice().iter().zip(expect.iter()) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+        // the status document carries the reconstruction audit
+        let st = c
+            .get(&format!("/round/{rid}/config"))
+            .unwrap()
+            .parse_json()
+            .unwrap();
+        let audit = st.get("audit").unwrap().as_arr().unwrap().to_vec();
+        assert!(audit.iter().any(|a| a.get("event").and_then(Json::as_str)
+            == Some("share_reconstruction")));
     }
 
     #[test]

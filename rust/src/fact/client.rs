@@ -1,8 +1,7 @@
 //! Client-side FACT runtime — the code a physical client runs (paper
 //! §2.2.1 Client class, §C.2.2 client main script).
 //!
-//! Registers the three predefined `@feddart` functions in a
-//! [`TaskRegistry`]:
+//! Registers the predefined `@feddart` functions in a [`TaskRegistry`]:
 //! * `fact_init` — receives the model structure; validates it is runnable.
 //! * `fact_learn` — receives global parameters + hyperparameters, runs
 //!   `local_steps` SGD steps on the client's own data (through the PJRT
@@ -10,6 +9,10 @@
 //!   parameters + metadata.
 //! * `fact_evaluate` — evaluates given parameters on the client's held-out
 //!   data.
+//! * `fact_keys` / `fact_shares` / `fact_reveal` — the secure-aggregation
+//!   side tasks: per-round DH key posting, encrypted Shamir share
+//!   dealing, and dropout recovery (direct pair-seed reveals plus share
+//!   reveals for threshold reconstruction).
 //!
 //! The same registry object serves every simulated client in test mode
 //! (data is keyed by the injected `_device` name) and exactly one client in
@@ -41,6 +44,23 @@ struct DeviceState {
     initialized: Vec<String>,
     /// ensemble base-learner cache (see `fact::ensemble`)
     pub base_params: BTreeMap<String, Vec<f32>>,
+    /// DH crypto cache for the most recent secagg round.  The
+    /// keys/shares/learn/reveal tasks of one round all need the same
+    /// pairwise keys (and the learn task re-checks its own public key
+    /// against the coordinator's echo), and each derivation is a
+    /// 2048-bit modpow — recompute-per-task would triple the round's
+    /// exponentiation cost.
+    round_crypto: Option<RoundCrypto>,
+}
+
+/// Cached per-(device, round) DH material.
+#[derive(Clone)]
+struct RoundCrypto {
+    round_id: u64,
+    /// this device's own round public key (hex), for echo verification
+    my_pub_hex: String,
+    /// peer -> pairwise shared key
+    shared: BTreeMap<String, [u8; 32]>,
 }
 
 /// The client runtime shared by all `@feddart` functions.
@@ -48,15 +68,23 @@ pub struct FactClientRuntime {
     engine: Engine,
     data: Mutex<BTreeMap<String, Arc<LocalData>>>,
     state: Mutex<BTreeMap<String, DeviceState>>,
-    /// Cohort key for privacy-enabled rounds.  Provisioned out of band
-    /// (like the transport key) and shared among clients only — the
-    /// coordinator never holds it, which is what stops it from expanding
-    /// pair masks itself.
+    /// Legacy cohort key for pre-key-agreement secagg rounds (a learn
+    /// task without a `keys` map).  Provisioned out of band (like the
+    /// transport key) and shared among clients only — the coordinator
+    /// never holds it.
     privacy_secret: Mutex<Option<Vec<u8>>>,
-    /// Client-local entropy mixed into every DP noise seed.  The seed
-    /// must not be a function of public values only (device name +
-    /// round id), or the coordinator could replay the stream and
-    /// subtract the noise, reducing dp-mode privacy to zero.
+    /// Per-device client secrets for per-pair key agreement.  Generated
+    /// from the OS CSPRNG on first use (or installed via
+    /// [`FactClientRuntime::set_client_secret`] for reproducible tests);
+    /// NEVER shared with anyone — per-round DH keypairs derive from it.
+    client_secrets: Mutex<BTreeMap<String, [u8; 32]>>,
+    /// Test hook: when set, DP noise comes from the deterministic
+    /// seeded [`Rng`](crate::util::rng::Rng) instead of the OS CSPRNG.
+    deterministic_noise: std::sync::atomic::AtomicBool,
+    /// Client-local entropy mixed into every deterministic DP noise
+    /// seed.  The seed must not be a function of public values only
+    /// (device name + round id), or the coordinator could replay the
+    /// stream and subtract the noise, reducing dp-mode privacy to zero.
     noise_nonce: u64,
 }
 
@@ -67,13 +95,9 @@ impl FactClientRuntime {
             data: Mutex::new(BTreeMap::new()),
             state: Mutex::new(BTreeMap::new()),
             privacy_secret: Mutex::new(None),
-            noise_nonce: splitmix64(
-                std::process::id() as u64
-                    ^ std::time::SystemTime::now()
-                        .duration_since(std::time::UNIX_EPOCH)
-                        .map(|d| d.as_nanos() as u64)
-                        .unwrap_or(0),
-            ),
+            client_secrets: Mutex::new(BTreeMap::new()),
+            deterministic_noise: std::sync::atomic::AtomicBool::new(false),
+            noise_nonce: crate::util::rng::entropy_seed(),
         })
     }
 
@@ -81,10 +105,95 @@ impl FactClientRuntime {
         &self.engine
     }
 
-    /// Install the clients' shared cohort key (required before any
-    /// `secagg` round; `dp`-only rounds work without it).
+    /// Install the clients' shared cohort key (only needed for legacy
+    /// secagg rounds without per-pair key agreement; `dp`-only rounds
+    /// and key-agreement rounds work without it).
     pub fn set_privacy_secret(&self, key: &[u8]) {
         *self.privacy_secret.lock().unwrap() = Some(key.to_vec());
+    }
+
+    /// Install a device's long-lived client secret (per-pair key
+    /// agreement).  Without one, a fresh secret is drawn from the OS
+    /// CSPRNG at first use — call this only to pin determinism in tests
+    /// or to provision a managed identity.
+    pub fn set_client_secret(&self, device: &str, secret: [u8; 32]) {
+        self.client_secrets
+            .lock()
+            .unwrap()
+            .insert(device.to_string(), secret);
+    }
+
+    /// Test hook: route DP noise through the deterministic seeded Rng
+    /// instead of the OS CSPRNG.
+    pub fn set_deterministic_noise(&self, on: bool) {
+        self.deterministic_noise
+            .store(on, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn client_secret(&self, device: &str) -> [u8; 32] {
+        let mut secrets = self.client_secrets.lock().unwrap();
+        *secrets.entry(device.to_string()).or_insert_with(|| {
+            let mut s = [0u8; 32];
+            if !crate::util::rng::entropy_bytes(&mut s) {
+                log::warn!(target: "fact::client",
+                    "'{device}': no OS CSPRNG, client secret from mixed \
+                     time/pid entropy");
+            }
+            s
+        })
+    }
+
+    /// The DH material of one secagg round — this device's own public
+    /// key plus the pairwise key per peer — computed once per
+    /// (device, round) and cached across the round's tasks.  `keys` maps
+    /// participant name -> hex public key (from the round board).
+    fn round_crypto(
+        &self,
+        device: &str,
+        round_id: u64,
+        keys: &BTreeMap<String, String>,
+    ) -> Result<RoundCrypto> {
+        {
+            let state = self.state.lock().unwrap();
+            if let Some(s) = state.get(device) {
+                if let Some(rc) = &s.round_crypto {
+                    if rc.round_id == round_id
+                        && keys.keys().filter(|k| *k != device).all(|k| {
+                            rc.shared.contains_key(k)
+                        })
+                    {
+                        return Ok(rc.clone());
+                    }
+                }
+            }
+        }
+        let my = crate::privacy::keys::derive_round_secret(
+            &self.client_secret(device),
+            round_id,
+            device,
+        );
+        let my_pub_hex = crate::privacy::keys::pubkey_hex(
+            &crate::privacy::keys::keypair(&my).public,
+        );
+        let mut shared = BTreeMap::new();
+        for (peer, pub_hex) in keys {
+            if peer == device {
+                continue;
+            }
+            let their = crate::privacy::keys::parse_pubkey_hex(pub_hex)?;
+            shared.insert(
+                peer.clone(),
+                crate::privacy::keys::shared_key(&my, &their),
+            );
+        }
+        let rc = RoundCrypto { round_id, my_pub_hex, shared };
+        self.state
+            .lock()
+            .unwrap()
+            .entry(device.to_string())
+            .or_default()
+            .round_crypto = Some(rc.clone());
+        Ok(rc)
     }
 
     /// Attach a device's supervised dataset (80/20 split).
@@ -142,8 +251,8 @@ impl FactClientRuntime {
             .and_then(|s| s.base_params.get(model).cloned())
     }
 
-    /// Register `fact_init`, `fact_learn`, `fact_evaluate`, `fact_reveal`
-    /// on a registry.
+    /// Register `fact_init`, `fact_learn`, `fact_evaluate`, `fact_keys`,
+    /// `fact_shares`, `fact_reveal` on a registry.
     pub fn register(self: &Arc<Self>, registry: &TaskRegistry) {
         let rt = Arc::clone(self);
         registry.register("fact_init", move |p| rt.clone().fact_init(p));
@@ -151,6 +260,10 @@ impl FactClientRuntime {
         registry.register("fact_learn", move |p| rt.clone().fact_learn(p));
         let rt = Arc::clone(self);
         registry.register("fact_evaluate", move |p| rt.clone().fact_evaluate(p));
+        let rt = Arc::clone(self);
+        registry.register("fact_keys", move |p| rt.clone().fact_keys(p));
+        let rt = Arc::clone(self);
+        registry.register("fact_shares", move |p| rt.clone().fact_shares(p));
         let rt = Arc::clone(self);
         registry.register("fact_reveal", move |p| rt.clone().fact_reveal(p));
     }
@@ -162,6 +275,14 @@ impl FactClientRuntime {
             .and_then(Json::as_str)
             .map(String::from)
             .ok_or_else(|| FedError::Fact("missing _device".into()))
+    }
+
+    fn round_id_of(p: &Json) -> Result<u64> {
+        crate::privacy::round_id_from_hex(
+            p.need("round_id")?.as_str().ok_or_else(|| {
+                FedError::Privacy("round_id must be a string".into())
+            })?,
+        )
     }
 
     /// Global parameters from the task dict: a binary tensor on the new
@@ -338,27 +459,41 @@ impl FactClientRuntime {
             }
         }
         if cfg.mode.has_dp() {
-            let mut rng =
-                crate::util::rng::Rng::new(self.noise_seed(device, round_id));
+            use crate::util::rng::{NoiseSource, OsRng, Rng};
+            let deterministic = self
+                .deterministic_noise
+                .load(std::sync::atomic::Ordering::Relaxed);
+            // OS CSPRNG by default: privacy noise from a seeded testbed
+            // stream is replayable by anyone who learns the seed inputs
+            let mut det;
+            let mut os;
+            let rng: &mut dyn NoiseSource = if deterministic {
+                det = Rng::new(self.noise_seed(device, round_id));
+                &mut det
+            } else {
+                match OsRng::new() {
+                    Ok(r) => {
+                        os = r;
+                        &mut os
+                    }
+                    Err(_) => {
+                        log::warn!(target: "fact::client",
+                            "'{device}': no OS CSPRNG, DP noise from the \
+                             nonce-mixed deterministic fallback");
+                        det = Rng::new(self.noise_seed(device, round_id));
+                        &mut det
+                    }
+                }
+            };
             crate::privacy::dp::privatize_update(
                 &mut params,
                 global,
                 cfg.clip_norm,
                 cfg.noise_multiplier,
-                &mut rng,
+                rng,
             )?;
         }
         if cfg.mode.has_secagg() {
-            let key = self
-                .privacy_secret
-                .lock()
-                .unwrap()
-                .clone()
-                .ok_or_else(|| {
-                    FedError::Privacy(format!(
-                        "'{device}' has no cohort key for secagg round"
-                    ))
-                })?;
             let participants: Vec<String> = pj
                 .need("participants")?
                 .as_arr()
@@ -371,8 +506,11 @@ impl FactClientRuntime {
                     "'{device}' is not in the round's participant set"
                 )));
             }
-            let peers: Vec<String> =
-                participants.into_iter().filter(|p| p != device).collect();
+            let peers: Vec<String> = participants
+                .iter()
+                .filter(|p| *p != device)
+                .cloned()
+                .collect();
             let weighted =
                 pj.get("weighted").and_then(Json::as_bool).unwrap_or(true);
             let weight = if weighted {
@@ -380,17 +518,177 @@ impl FactClientRuntime {
             } else {
                 1.0
             };
-            params = masking::mask_update(
-                &params,
-                weight,
-                device,
-                &peers,
-                &key,
-                round_id,
-                cfg.frac_bits,
-            )?;
+            if let Some(keys_obj) = pj.get("keys").and_then(Json::as_obj) {
+                // per-pair key agreement: every pair seed comes from the
+                // DH shared secret with that peer — no cohort key at all
+                let keys: BTreeMap<String, String> = keys_obj
+                    .iter()
+                    .filter_map(|(k, v)| {
+                        v.as_str().map(|s| (k.clone(), s.to_string()))
+                    })
+                    .collect();
+                let rc = self.round_crypto(device, round_id, &keys)?;
+                // the coordinator must echo OUR posted key back intact —
+                // a swapped key would silently redirect our pair masks
+                match keys.get(device) {
+                    Some(echoed) if *echoed == rc.my_pub_hex => {}
+                    Some(_) => {
+                        return Err(FedError::Privacy(format!(
+                            "round keys echo a different public key for \
+                             '{device}' — refusing to mask"
+                        )))
+                    }
+                    None => {
+                        return Err(FedError::Privacy(format!(
+                            "'{device}' missing from the round key set"
+                        )))
+                    }
+                }
+                let seeds: Vec<(i64, [u8; 32])> = peers
+                    .iter()
+                    .map(|peer| {
+                        let sk = rc.shared.get(peer).ok_or_else(|| {
+                            FedError::Privacy(format!(
+                                "no key posted for peer '{peer}'"
+                            ))
+                        })?;
+                        Ok((
+                            masking::pair_sign(device, peer),
+                            crate::privacy::keys::pair_seed_from_shared(
+                                sk, round_id, device, peer,
+                            ),
+                        ))
+                    })
+                    .collect::<Result<_>>()?;
+                params = masking::mask_update_with_seeds(
+                    &params,
+                    weight,
+                    &seeds,
+                    cfg.frac_bits,
+                )?;
+            } else {
+                // legacy cohort-key round (pre-key-agreement peer)
+                let key = self
+                    .privacy_secret
+                    .lock()
+                    .unwrap()
+                    .clone()
+                    .ok_or_else(|| {
+                        FedError::Privacy(format!(
+                            "'{device}' has no cohort key for legacy secagg \
+                             round"
+                        ))
+                    })?;
+                params = masking::mask_update(
+                    &params,
+                    weight,
+                    device,
+                    &peers,
+                    &key,
+                    round_id,
+                    cfg.frac_bits,
+                )?;
+            }
         }
         Ok(TensorBuf::from_f32_vec(params))
+    }
+
+    /// Key-agreement task: post this device's per-round DH public key.
+    fn fact_keys(&self, p: &Json) -> Result<Json> {
+        let device = Self::device_of(p)?;
+        let round_id = Self::round_id_of(p)?;
+        let secret = crate::privacy::keys::derive_round_secret(
+            &self.client_secret(&device),
+            round_id,
+            &device,
+        );
+        let kp = crate::privacy::keys::keypair(&secret);
+        Ok(Json::obj()
+            .set("pubkey", crate::privacy::keys::pubkey_hex(&kp.public)))
+    }
+
+    /// Share-distribution task: Shamir-split this device's round secret
+    /// and deal one end-to-end encrypted share per peer, plus a clear
+    /// commitment per share so the coordinator can verify later reveals.
+    fn fact_shares(&self, p: &Json) -> Result<Json> {
+        use crate::privacy::{keys, shamir, to_hex};
+        let device = Self::device_of(p)?;
+        let round_id = Self::round_id_of(p)?;
+        let threshold = p
+            .need("threshold")?
+            .as_usize()
+            .ok_or_else(|| FedError::Privacy("threshold must be a number".into()))?;
+        let keys_map: BTreeMap<String, String> = p
+            .need("keys")?
+            .as_obj()
+            .ok_or_else(|| FedError::Privacy("keys must be an object".into()))?
+            .iter()
+            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+            .collect();
+        if !keys_map.contains_key(&device) {
+            return Err(FedError::Privacy(format!(
+                "'{device}' missing from the round key set"
+            )));
+        }
+        if keys_map.len() > 255 {
+            // GF(256) share x-coordinates are 1-based u8 positions:
+            // index 255 would wrap to x = 0 (the secret itself)
+            return Err(FedError::Privacy(format!(
+                "{} participants exceed the 255-participant limit of \
+                 GF(256) share coordinates",
+                keys_map.len()
+            )));
+        }
+        let my_secret = keys::derive_round_secret(
+            &self.client_secret(&device),
+            round_id,
+            &device,
+        );
+        let rc = self.round_crypto(&device, round_id, &keys_map)?;
+        // x-coordinates: 1-based index in the sorted key-poster list —
+        // self-describing on the wire ([x] ‖ data) but deterministic so
+        // dealers and re-dealers agree
+        let peers: Vec<(String, u8)> = keys_map
+            .keys()
+            .enumerate()
+            .filter(|(_, n)| *n != &device)
+            .map(|(i, n)| (n.clone(), i as u8 + 1))
+            .collect();
+        let xs: Vec<u8> = peers.iter().map(|(_, x)| *x).collect();
+        let mut rng_os;
+        let mut rng_det;
+        let rng: &mut dyn crate::util::rng::NoiseSource =
+            match crate::util::rng::OsRng::new() {
+                Ok(r) => {
+                    rng_os = r;
+                    &mut rng_os
+                }
+                Err(_) => {
+                    rng_det = crate::util::rng::Rng::new(
+                        self.noise_nonce ^ round_id,
+                    );
+                    &mut rng_det
+                }
+            };
+        let split = shamir::split_at(&my_secret, threshold, &xs, rng)?;
+        let mut shares = Json::obj();
+        let mut commits = Json::obj();
+        for (share, (peer, _)) in split.iter().zip(peers.iter()) {
+            let sk = rc.shared.get(peer).ok_or_else(|| {
+                FedError::Privacy(format!("no shared key with '{peer}'"))
+            })?;
+            let ct = keys::encrypt_share(
+                sk,
+                round_id,
+                &device,
+                peer,
+                &share.to_bytes(),
+            );
+            shares = shares.set(peer, to_hex(&ct));
+            commits =
+                commits.set(peer, to_hex(&shamir::share_commitment(share)));
+        }
+        Ok(Json::obj().set("shares", shares).set("commits", commits))
     }
 
     /// Seed for one (device, round)'s DP noise stream: unique per round
@@ -409,10 +707,59 @@ impl FactClientRuntime {
     }
 
     /// Dropout-recovery task: reveal this device's pair seeds with the
-    /// listed dropped peers so the coordinator can subtract their masks.
+    /// listed dropped peers, and — when the round ran per-pair key
+    /// agreement — the decrypted Shamir shares of each dropped dealer's
+    /// round secret, so any `t` responsive survivors suffice for the
+    /// coordinator to reconstruct the missing masks.
     fn fact_reveal(&self, p: &Json) -> Result<Json> {
-        use crate::privacy::{masking, to_hex};
+        use crate::privacy::{from_hex, keys, masking, to_hex};
         let device = Self::device_of(p)?;
+        let round_id = Self::round_id_of(p)?;
+        let dropped: Vec<String> = p
+            .need("dropped")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|d| d.as_str().map(String::from))
+            .filter(|d| *d != device)
+            .collect();
+        if let Some(keys_obj) = p.get("keys").and_then(Json::as_obj) {
+            // key-agreement round: derive the pair seed with each dropped
+            // peer from the DH shared key, and decrypt the dealer shares
+            // the coordinator relayed to us
+            let keys_map: BTreeMap<String, String> = keys_obj
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect();
+            let rc = self.round_crypto(&device, round_id, &keys_map)?;
+            let mut seeds = Json::obj();
+            let mut shares_out = Json::obj();
+            for d in &dropped {
+                let Some(sk) = rc.shared.get(d) else {
+                    continue; // dealer never posted a key: nothing to reveal
+                };
+                seeds = seeds.set(
+                    d,
+                    to_hex(&keys::pair_seed_from_shared(
+                        sk, round_id, &device, d,
+                    )),
+                );
+                if let Some(ct_hex) =
+                    p.get("shares").and_then(|s| s.get(d)).and_then(Json::as_str)
+                {
+                    let plain = keys::decrypt_share(
+                        sk,
+                        round_id,
+                        d,
+                        &device,
+                        &from_hex(ct_hex)?,
+                    )?;
+                    shares_out = shares_out.set(d, to_hex(&plain));
+                }
+            }
+            return Ok(Json::obj().set("seeds", seeds).set("shares", shares_out));
+        }
+        // legacy cohort-key round
         let key = self
             .privacy_secret
             .lock()
@@ -421,17 +768,8 @@ impl FactClientRuntime {
             .ok_or_else(|| {
                 FedError::Privacy(format!("'{device}' has no cohort key to reveal"))
             })?;
-        let round_id = crate::privacy::round_id_from_hex(
-            p.need("round_id")?
-                .as_str()
-                .ok_or_else(|| FedError::Privacy("round_id must be a string".into()))?,
-        )?;
         let mut seeds = Json::obj();
-        for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
-            let Some(name) = d.as_str() else { continue };
-            if name == device {
-                continue;
-            }
+        for name in &dropped {
             seeds = seeds.set(
                 name,
                 to_hex(&masking::pair_seed(&key, round_id, &device, name)),

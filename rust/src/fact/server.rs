@@ -26,10 +26,33 @@ use crate::json::Json;
 use crate::metrics::Registry;
 use crate::privacy::dp::DpAccountant;
 use crate::privacy::secagg::{unmask_aggregate, MaskedUpdate, RevealedSeed};
-use crate::privacy::{round_id_to_hex, seed_from_hex, PrivacyConfig, PrivacyMode};
+use crate::privacy::{
+    from_hex, keys, resolve_reveal_threshold, round_id_to_hex, seed_from_hex,
+    shamir, PrivacyConfig, PrivacyMode, RevealPolicy,
+};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::splitmix64;
 use crate::util::Stopwatch;
+
+/// Audit record of one secure-aggregation round's recovery (surfaced in
+/// [`RoundRecord`] and counted in `fact.secagg.*` metrics).
+#[derive(Debug, Clone)]
+pub struct SecAggAudit {
+    /// masking participants (clients that completed key + share setup)
+    pub participants: usize,
+    /// resolved t of the t-of-n share recovery
+    pub threshold: usize,
+    pub dropped: Vec<String>,
+    /// (survivor, dropped) pairs covered by direct seed reveals
+    pub direct_reveals: usize,
+    /// dropped clients whose secret was reconstructed from >= t shares
+    pub reconstructed: Vec<String>,
+    /// dropped clients left unrecoverable (below threshold)
+    pub unrecovered: Vec<String>,
+    pub policy: RevealPolicy,
+    /// "ok" | "recovered" | "skipped" (proceed policy voided the round)
+    pub outcome: &'static str,
+}
 
 /// Per-round record (feeds EXPERIMENTS.md and the benches).
 #[derive(Debug, Clone)]
@@ -59,6 +82,8 @@ pub struct RoundRecord {
     pub agg_ms: f64,
     /// mean client-reported duration (paper taskResult.duration), seconds
     pub mean_client_s: f64,
+    /// secure-aggregation recovery audit (None outside secagg modes)
+    pub secagg: Option<SecAggAudit>,
 }
 
 /// Evaluation summary for one cluster.
@@ -649,15 +674,26 @@ fn train_cluster_rounds(
         let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
         // privacy negotiation: the round's mode and a fresh round id ride
         // in every learn task; clients transform their update accordingly
+        let round_id = splitmix64(
+            session_tag
+                ^ ((clustering_round as u64) << 42)
+                ^ ((cluster.id as u64) << 21)
+                ^ round as u64,
+        );
+        // secagg setup phases: per-pair key agreement + encrypted Shamir
+        // share distribution run BEFORE the learn dispatch (clients that
+        // fail either phase are excluded from the masking participant set)
+        let secagg_setup = if privacy.mode.has_secagg() {
+            Some(secagg_setup_phases(
+                wm, cluster, &cohort, round_id, privacy, participation,
+                timeout, metrics,
+            )?)
+        } else {
+            None
+        };
         let privacy_round = if privacy.mode == PrivacyMode::Off {
             None
         } else {
-            let round_id = splitmix64(
-                session_tag
-                    ^ ((clustering_round as u64) << 42)
-                    ^ ((cluster.id as u64) << 21)
-                    ^ round as u64,
-            );
             let mut pj = privacy
                 .to_json()
                 .set("round_id", round_id_to_hex(round_id));
@@ -673,33 +709,41 @@ fn train_cluster_rounds(
                     ),
                 );
             }
-            if privacy.mode.has_secagg() {
+            if let Some(setup) = &secagg_setup {
                 pj = pj
                     .set(
                         "participants",
                         Json::Arr(
-                            cohort
+                            setup
+                                .participants
                                 .iter()
                                 .map(|c| Json::Str(c.clone()))
                                 .collect(),
                         ),
                     )
+                    .set("keys", setup.keys_json.clone())
                     .set("weighted", cluster.model.aggregation().is_weighted());
             }
-            Some((round_id, pj))
+            Some(pj)
         };
-        let dict: BTreeMap<String, Json> = cohort
+        // under secagg, only the key+share completers can mask: they are
+        // the round's addressed set
+        let addressed: &[String] = match &secagg_setup {
+            Some(setup) => &setup.participants,
+            None => &cohort,
+        };
+        let dict: BTreeMap<String, Json> = addressed
             .iter()
             .map(|c| {
                 let mut params = cluster.model.learn_params_buf(&global, &hp);
-                if let Some((_, pj)) = &privacy_round {
+                if let Some(pj) = &privacy_round {
                     params = params.set("privacy", pj.clone());
                 }
                 (c.clone(), params)
             })
             .collect();
         let t_start = Instant::now();
-        let sampled = cohort.len();
+        let sampled = dict.len();
         let (results, late, dropped) = match (&sampler, participation) {
             (Some(sampler), Some(p)) => {
                 // production round loop: close at quorum or deadline,
@@ -770,17 +814,32 @@ fn train_cluster_rounds(
         // bit-identical results between test mode and the TCP path
         updates.sort_by(|a, b| a.device.cmp(&b.device));
         let agg_sw = Stopwatch::start();
-        let target = if privacy.mode.has_secagg() {
-            let (round_id, _) = privacy_round.as_ref().unwrap();
-            secagg_recover_aggregate(
-                wm, cluster, &cohort, &updates, *round_id, privacy, timeout,
-            )?
+        let (target, secagg_audit) = if let Some(setup) = &secagg_setup {
+            let out = secagg_recover_aggregate(
+                wm, cluster, setup, &updates, round_id, privacy, timeout,
+                metrics,
+            )?;
+            (out.target, Some(out.audit))
         } else {
-            cluster.model.aggregate(&updates, Some(pool))?
+            (Some(cluster.model.aggregate(&updates, Some(pool))?), None)
         };
-        let mut buf = std::mem::take(&mut cluster.momentum);
-        server_opt.apply(&mut cluster.params, target, &mut buf);
-        cluster.momentum = buf;
+        match target {
+            Some(target) => {
+                let mut buf = std::mem::take(&mut cluster.momentum);
+                server_opt.apply(&mut cluster.params, target, &mut buf);
+                cluster.momentum = buf;
+            }
+            None => {
+                // reveal policy `proceed`: the round is unrecoverable
+                // below the share threshold — void it (parameters
+                // unchanged), audit it, keep training
+                metrics.counter("fact.secagg.rounds_voided").inc();
+                log::warn!(target: "fact::server",
+                    "cluster {} round {round}: secagg recovery below \
+                     threshold, policy=proceed voids the round",
+                    cluster.id);
+            }
+        }
         let agg_ms = agg_sw.elapsed_ms();
 
         let mean_loss =
@@ -813,6 +872,7 @@ fn train_cluster_rounds(
             round_ms: sw.elapsed_ms(),
             agg_ms,
             mean_client_s,
+            secagg: secagg_audit,
         });
         log::debug!(target: "fact::server",
             "cluster {} round {round}: loss {mean_loss:.4} \
@@ -828,25 +888,233 @@ fn train_cluster_rounds(
     Ok(())
 }
 
-/// Secure-aggregation server path for one round: every round participant
-/// that answered is a survivor, everyone else in the *cohort* dropped
-/// mid-round (under partial participation the cohort — not the whole
-/// cluster — is the participant set the masks were derived over, so a
-/// straggler cut off at the deadline is recovered exactly like a crash).
-/// Survivors are asked (via the `fact_reveal` task) for their pair seeds
-/// with each dropped peer; the revealed masks are subtracted and the
-/// lattice sum decoded.  The coordinator never materializes an unmasked
-/// individual update — `unmask_aggregate` folds zero-copy views of the
-/// masked buffers straight into the integer accumulator.
-fn secagg_recover_aggregate(
+/// The artifacts of a round's secagg setup phases: who completed key
+/// agreement + share distribution, their public keys, and the relayed
+/// (still encrypted) shares + clear commitments.
+struct SecAggSetup {
+    /// sorted clients that completed BOTH setup phases — the masking
+    /// participant set of the round
+    participants: Vec<String>,
+    /// participant -> hex DH public key
+    keys: BTreeMap<String, String>,
+    keys_json: Json,
+    /// dealer -> recipient -> hex ciphertext (end-to-end encrypted)
+    enc_shares: BTreeMap<String, BTreeMap<String, String>>,
+    /// dealer -> recipient -> hex share commitment
+    commits: BTreeMap<String, BTreeMap<String, String>>,
+    /// resolved t of the t-of-n recovery (what the dealers split with)
+    threshold: usize,
+}
+
+/// Run the two secagg setup phases before a learn dispatch:
+///
+/// 1. `fact_keys` — every cohort client posts its per-round DH public
+///    key (validated here, so a malformed key fails fast).
+/// 2. `fact_shares` — every key-poster Shamir-splits its round secret at
+///    the resolved threshold and returns one end-to-end encrypted share
+///    per peer plus a clear commitment per share.  The coordinator
+///    relays ciphertext it cannot read — holding `t` *readable* shares
+///    would let it reconstruct any client's masks.
+///
+/// Clients whose phase task errors — or misses the participation
+/// deadline, when one is configured — are excluded from the masking
+/// participant set (they never derived the round's pair masks).
+/// Without a deadline, a client that hangs past the round timeout
+/// stalls the task like any other task.
+#[allow(clippy::too_many_arguments)]
+fn secagg_setup_phases(
     wm: &WorkflowManager,
     cluster: &crate::fact::clustering::Cluster,
     cohort: &[String],
+    round_id: u64,
+    privacy: &PrivacyConfig,
+    participation: &Option<ParticipationConfig>,
+    timeout: Duration,
+    metrics: &Registry,
+) -> Result<SecAggSetup> {
+    // setup phases want EVERY response but must not wait on a hung
+    // client forever: under a participation deadline, close at the
+    // deadline and exclude whoever had not answered (the straggler
+    // tolerance the learn phase already has)
+    let run_phase = |dict: BTreeMap<String, Json>,
+                     func: &str|
+     -> Result<Vec<crate::dart::scheduler::TaskResult>> {
+        match participation {
+            Some(p) if p.deadline_ms > 0 => {
+                let expected = dict.len();
+                Ok(wm
+                    .run_task_quorum(
+                        dict,
+                        func,
+                        expected, // close only when everyone reported...
+                        Duration::from_millis(p.deadline_ms),
+                        Duration::ZERO,
+                    )?
+                    .results) // ...or at the deadline, with whoever did
+            }
+            _ => wm.run_task(dict, func, timeout),
+        }
+    };
+    let rid_hex = round_id_to_hex(round_id);
+    // phase 1: key agreement
+    let dict: BTreeMap<String, Json> = cohort
+        .iter()
+        .map(|c| (c.clone(), Json::obj().set("round_id", rid_hex.as_str())))
+        .collect();
+    let results = run_phase(dict, "fact_keys")?;
+    let mut pubkeys: BTreeMap<String, String> = BTreeMap::new();
+    for r in &results {
+        if let Some(hex) = r.result.get("pubkey").and_then(Json::as_str) {
+            // a malformed or degenerate key excludes THAT client from the
+            // round (like a missing response) — it must not abort the
+            // whole training session
+            match keys::parse_pubkey_hex(hex) {
+                Ok(_) => {
+                    // lowercase: the reconstruction integrity check
+                    // compares against regenerated (lowercase) hex
+                    pubkeys.insert(r.device_name.clone(), hex.to_lowercase());
+                }
+                Err(e) => {
+                    metrics.counter("fact.secagg.bad_keys").inc();
+                    log::warn!(target: "fact::server",
+                        "cluster {}: '{}' posted an invalid DH key ({e}) \
+                         — excluded from the round",
+                        cluster.id, r.device_name);
+                }
+            }
+        }
+    }
+    if pubkeys.len() < 2 {
+        return Err(FedError::Privacy(format!(
+            "cluster {}: only {} client(s) completed secagg key agreement \
+             (need >= 2)",
+            cluster.id,
+            pubkeys.len()
+        )));
+    }
+    if pubkeys.len() > 255 {
+        // GF(256) share x-coordinates are 1-based u8 positions: index
+        // 255 would wrap to x = 0 (the secret itself), so the holder
+        // list caps at 255 participants
+        return Err(FedError::Privacy(format!(
+            "cluster {}: {} secagg participants exceed the 255-participant \
+             limit of GF(256) share coordinates — shard the cohort",
+            cluster.id,
+            pubkeys.len()
+        )));
+    }
+    let threshold =
+        resolve_reveal_threshold(privacy.reveal_threshold, pubkeys.len());
+    let mut keys_json = Json::obj();
+    for (name, hex) in &pubkeys {
+        keys_json = keys_json.set(name, hex.as_str());
+    }
+    if pubkeys.len() < 3 {
+        // a 2-client round has a single share holder per dealer — below
+        // any meaningful threshold (t >= 2).  Skip share dealing and
+        // rely on direct reveals, the pre-threshold recovery path.
+        let participants: Vec<String> = pubkeys.keys().cloned().collect();
+        return Ok(SecAggSetup {
+            participants,
+            keys: pubkeys,
+            keys_json,
+            enc_shares: BTreeMap::new(),
+            commits: BTreeMap::new(),
+            threshold,
+        });
+    }
+    // phase 2: encrypted share distribution among the key posters
+    let dict: BTreeMap<String, Json> = pubkeys
+        .keys()
+        .map(|c| {
+            (
+                c.clone(),
+                Json::obj()
+                    .set("round_id", rid_hex.as_str())
+                    .set("keys", keys_json.clone())
+                    .set("threshold", threshold),
+            )
+        })
+        .collect();
+    let results = run_phase(dict, "fact_shares")?;
+    let mut enc_shares = BTreeMap::new();
+    let mut commits = BTreeMap::new();
+    for r in &results {
+        let (Some(shares), Some(cs)) = (
+            r.result.get("shares").and_then(Json::as_obj),
+            r.result.get("commits").and_then(Json::as_obj),
+        ) else {
+            continue;
+        };
+        let to_map = |obj: &BTreeMap<String, Json>| -> BTreeMap<String, String> {
+            obj.iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect()
+        };
+        enc_shares.insert(r.device_name.clone(), to_map(shares));
+        commits.insert(r.device_name.clone(), to_map(cs));
+    }
+    let participants: Vec<String> = enc_shares.keys().cloned().collect();
+    if participants.len() < 2 {
+        return Err(FedError::Privacy(format!(
+            "cluster {}: only {} client(s) dealt secagg shares (need >= 2)",
+            cluster.id,
+            participants.len()
+        )));
+    }
+    if participants.len() < cohort.len() {
+        metrics
+            .counter("fact.secagg.setup_dropouts")
+            .add((cohort.len() - participants.len()) as u64);
+    }
+    Ok(SecAggSetup {
+        participants,
+        keys: pubkeys,
+        keys_json,
+        enc_shares,
+        commits,
+        threshold,
+    })
+}
+
+/// Outcome of [`secagg_recover_aggregate`]: `target` is `None` when the
+/// round was unrecoverable and the `proceed` policy voided it.
+struct SecAggOutcome {
+    target: Option<Vec<f32>>,
+    audit: SecAggAudit,
+}
+
+/// Secure-aggregation server path for one round: every masking
+/// participant that answered is a survivor, everyone else dropped
+/// mid-round (under partial participation the cohort — not the whole
+/// cluster — was sampled first, so a straggler cut off at the deadline is
+/// recovered exactly like a crash).  Recovery is **threshold-based**:
+///
+/// * each responsive survivor reveals its own DH-derived pair seed with
+///   every dropped peer (covering its own pairs), and its decrypted
+///   Shamir share of each dropped dealer's round secret;
+/// * any `t` commitment-verified shares reconstruct a dropped client's
+///   secret, from which the coordinator derives the pair seed with
+///   *every* survivor — including survivors that never answered the
+///   reveal task, the exact wedge the PR 3 all-survivors-must-reveal
+///   protocol could not recover from;
+/// * below `t`, [`PrivacyConfig::reveal_policy`] decides: `abort` fails
+///   the session, `proceed` voids the round (audited either way).
+///
+/// The coordinator never materializes an unmasked individual update —
+/// `unmask_aggregate` folds zero-copy views of the masked buffers
+/// straight into the integer accumulator.
+#[allow(clippy::too_many_arguments)]
+fn secagg_recover_aggregate(
+    wm: &WorkflowManager,
+    cluster: &crate::fact::clustering::Cluster,
+    setup: &SecAggSetup,
     updates: &[ClientUpdate],
     round_id: u64,
     privacy: &PrivacyConfig,
     timeout: Duration,
-) -> Result<Vec<f32>> {
+    metrics: &Registry,
+) -> Result<SecAggOutcome> {
     let weighted = cluster.model.aggregation().is_weighted();
     let masked: Vec<MaskedUpdate> = updates
         .iter()
@@ -860,30 +1128,61 @@ fn secagg_recover_aggregate(
             },
         })
         .collect();
-    let dropped: Vec<String> = cohort
+    let survivors: Vec<String> =
+        updates.iter().map(|u| u.device.clone()).collect();
+    let dropped: Vec<String> = setup
+        .participants
         .iter()
-        .filter(|c| !updates.iter().any(|u| &u.device == *c))
+        .filter(|c| !survivors.contains(c))
         .cloned()
         .collect();
+    let mut audit = SecAggAudit {
+        participants: setup.participants.len(),
+        threshold: setup.threshold,
+        dropped: dropped.clone(),
+        direct_reveals: 0,
+        reconstructed: Vec::new(),
+        unrecovered: Vec::new(),
+        policy: privacy.reveal_policy,
+        outcome: "ok",
+    };
     let mut revealed: Vec<RevealedSeed> = Vec::new();
     if !dropped.is_empty() {
         log::info!(target: "fact::server",
-            "cluster {}: {} dropout(s) in secagg round, recovering masks",
-            cluster.id, dropped.len());
+            "cluster {}: {} dropout(s) in secagg round, recovering masks \
+             (t={} of {})",
+            cluster.id, dropped.len(), setup.threshold,
+            setup.participants.len());
+        metrics.counter("fact.secagg.dropouts").add(dropped.len() as u64);
         let dropped_json =
             Json::Arr(dropped.iter().cloned().map(Json::Str).collect());
-        let dict: BTreeMap<String, Json> = updates
+        let dict: BTreeMap<String, Json> = survivors
             .iter()
-            .map(|u| {
+            .map(|s| {
+                // the encrypted shares each dropped dealer addressed to
+                // this survivor, relayed for client-side decryption
+                let mut shares = Json::obj();
+                for d in &dropped {
+                    if let Some(ct) =
+                        setup.enc_shares.get(d).and_then(|m| m.get(s))
+                    {
+                        shares = shares.set(d, ct.as_str());
+                    }
+                }
                 (
-                    u.device.clone(),
+                    s.clone(),
                     Json::obj()
                         .set("round_id", round_id_to_hex(round_id))
-                        .set("dropped", dropped_json.clone()),
+                        .set("dropped", dropped_json.clone())
+                        .set("keys", setup.keys_json.clone())
+                        .set("shares", shares),
                 )
             })
             .collect();
         let reveals = wm.run_task(dict, "fact_reveal", timeout)?;
+        // collect direct seed reveals and decrypted shares
+        let mut shares_by_dealer: BTreeMap<String, Vec<shamir::Share>> =
+            BTreeMap::new();
         for r in &reveals {
             if let Some(seeds) = r.result.get("seeds").and_then(Json::as_obj) {
                 for (d, hex) in seeds {
@@ -893,27 +1192,151 @@ fn secagg_recover_aggregate(
                         dropped: d.clone(),
                         seed: seed_from_hex(hex)?,
                     });
+                    audit.direct_reveals += 1;
+                }
+            }
+            if let Some(shares) = r.result.get("shares").and_then(Json::as_obj)
+            {
+                for (d, hex) in shares {
+                    let Some(hex) = hex.as_str() else { continue };
+                    // a malformed share is discarded exactly like a
+                    // commitment-failing one — one bad reveal must not
+                    // abort a recovery that t other valid shares can
+                    // still complete
+                    let share = match from_hex(hex)
+                        .ok()
+                        .and_then(|b| shamir::Share::from_bytes(&b).ok())
+                    {
+                        Some(s) => s,
+                        None => {
+                            metrics
+                                .counter("fact.secagg.corrupt_shares")
+                                .inc();
+                            log::warn!(target: "fact::server",
+                                "cluster {}: malformed share of '{d}' from \
+                                 '{}' — discarded",
+                                cluster.id, r.device_name);
+                            continue;
+                        }
+                    };
+                    // verify against the dealer's commitment for this
+                    // holder — a corrupted share must not enter the pool
+                    let commit_ok = setup
+                        .commits
+                        .get(d)
+                        .and_then(|m| m.get(&r.device_name))
+                        .and_then(|c| from_hex(c).ok())
+                        .map(|want| {
+                            want.len() == 32
+                                && shamir::verify_share(
+                                    &share,
+                                    want.as_slice().try_into().unwrap(),
+                                )
+                        })
+                        .unwrap_or(false);
+                    if !commit_ok {
+                        metrics.counter("fact.secagg.corrupt_shares").inc();
+                        log::warn!(target: "fact::server",
+                            "cluster {}: share of '{d}' revealed by '{}' \
+                             fails its commitment — discarded",
+                            cluster.id, r.device_name);
+                        continue;
+                    }
+                    shares_by_dealer.entry(d.clone()).or_default().push(share);
                 }
             }
         }
-        // every (survivor, dropped) mask must be recoverable or the
-        // aggregate would still carry uncancelled masks
-        for u in updates {
-            for d in &dropped {
-                if !revealed
-                    .iter()
-                    .any(|rv| rv.survivor == u.device && &rv.dropped == d)
-                {
+        // per dropped dealer: direct reveals may already cover every
+        // survivor; otherwise reconstruct from >= t verified shares
+        for d in &dropped {
+            let uncovered: Vec<String> = survivors
+                .iter()
+                .filter(|s| {
+                    !revealed
+                        .iter()
+                        .any(|rv| &rv.survivor == *s && &rv.dropped == d)
+                })
+                .cloned()
+                .collect();
+            if uncovered.is_empty() {
+                continue;
+            }
+            let shares = shares_by_dealer.get(d).map(Vec::as_slice).unwrap_or(&[]);
+            if shares.len() < setup.threshold {
+                audit.unrecovered.push(d.clone());
+                continue;
+            }
+            let Some(posted) = setup.keys.get(d) else {
+                audit.unrecovered.push(d.clone());
+                continue;
+            };
+            // shared with the REST board: reconstruct + length check +
+            // posted-pubkey integrity check.  A failure here (duplicate
+            // coordinates, or commitment-passing shares from a lying
+            // dealer that fail the pubkey check) makes THIS dealer
+            // unrecoverable — the reveal policy decides the round's
+            // fate, not a hard error that would bypass `proceed`.
+            let secret = match crate::privacy::secagg::reconstruct_dealer_secret(
+                shares,
+                setup.threshold,
+                posted,
+                d,
+            ) {
+                Ok(s) => s,
+                Err(e) => {
+                    metrics.counter("fact.secagg.corrupt_shares").inc();
+                    log::warn!(target: "fact::server",
+                        "cluster {}: reconstruction of '{d}' failed ({e}) \
+                         — dealer unrecoverable",
+                        cluster.id);
+                    audit.unrecovered.push(d.clone());
+                    continue;
+                }
+            };
+            for s in &uncovered {
+                let their = keys::parse_pubkey_hex(&setup.keys[s])?;
+                let shared = keys::shared_key(&secret, &their);
+                revealed.push(RevealedSeed {
+                    survivor: s.clone(),
+                    dropped: d.clone(),
+                    seed: keys::pair_seed_from_shared(&shared, round_id, s, d),
+                });
+            }
+            audit.reconstructed.push(d.clone());
+        }
+        metrics
+            .counter("fact.secagg.reconstructions")
+            .add(audit.reconstructed.len() as u64);
+        if !audit.reconstructed.is_empty() {
+            audit.outcome = "recovered";
+        }
+        if !audit.unrecovered.is_empty() {
+            metrics.counter("fact.secagg.below_threshold").inc();
+            let detail = format!(
+                "cluster {}: secagg round below reveal threshold t={} for \
+                 {:?} ({} dropout(s), {} direct reveal(s))",
+                cluster.id,
+                setup.threshold,
+                audit.unrecovered,
+                dropped.len(),
+                audit.direct_reveals,
+            );
+            match privacy.reveal_policy {
+                RevealPolicy::Abort => {
+                    audit.outcome = "aborted";
                     return Err(FedError::Privacy(format!(
-                        "survivor '{}' did not reveal its seed for dropped \
-                         '{d}' — round unrecoverable",
-                        u.device
+                        "{detail} — reveal policy abort"
                     )));
+                }
+                RevealPolicy::Proceed => {
+                    audit.outcome = "skipped";
+                    return Ok(SecAggOutcome { target: None, audit });
                 }
             }
         }
     }
-    unmask_aggregate(&masked, &revealed, privacy.frac_bits)
+    let target = unmask_aggregate(&masked, &revealed, privacy.frac_bits)?;
+    Ok(SecAggOutcome { target: Some(target), audit })
 }
 
 #[cfg(test)]

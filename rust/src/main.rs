@@ -91,8 +91,41 @@ participation (run/train): --sample-rate 0.25 --quorum 0.75
         --cohort-strategy uniform|poisson|weighted|stratified:k
         --participation-seed 17
         (rounds sample a cohort and close at quorum/deadline; uniform
-         sampling earns DP amplification in the accountant)"
+         sampling earns DP amplification in the accountant)
+
+privacy (run/train): --privacy off|dp|secagg|secagg+dp
+        --clip-norm 1.0 --noise-multiplier 1.0 --dp-delta 1e-5
+        --weight-scale 128 --frac-bits 16
+        --reveal-threshold 0 --reveal-policy abort|proceed
+        (secagg rounds run per-pair DH key agreement + t-of-n Shamir
+         share recovery; --reveal-threshold 0 = majority auto)"
     );
+}
+
+/// Build a privacy config from the CLI flags; `None` when `--privacy` is
+/// absent or `off`.
+fn privacy_from_args(
+    args: &Args,
+) -> Result<Option<feddart::privacy::PrivacyConfig>> {
+    use feddart::privacy::{PrivacyConfig, PrivacyMode, RevealPolicy};
+    let mode = PrivacyMode::parse(args.opt_or("privacy", "off"))?;
+    let d = PrivacyConfig::default();
+    let cfg = PrivacyConfig {
+        mode,
+        clip_norm: args.opt_f64("clip-norm", d.clip_norm as f64)? as f32,
+        noise_multiplier: args
+            .opt_f64("noise-multiplier", d.noise_multiplier as f64)?
+            as f32,
+        delta: args.opt_f64("dp-delta", d.delta)?,
+        weight_scale: args.opt_f64("weight-scale", d.weight_scale as f64)? as f32,
+        frac_bits: args.opt_usize("frac-bits", d.frac_bits as usize)? as u32,
+        reveal_threshold: args.opt_usize("reveal-threshold", 0)?,
+        reveal_policy: RevealPolicy::parse(args.opt_or("reveal-policy", "abort"))?,
+    };
+    if cfg.mode == PrivacyMode::Off {
+        return Ok(None);
+    }
+    Ok(Some(cfg))
 }
 
 /// Build a participation config from the CLI flags; `None` when every
@@ -193,6 +226,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
         server = server.with_participation(p);
     }
+    if let Some(pc) = privacy_from_args(args)? {
+        println!(
+            "privacy: mode={} t={} policy={}",
+            pc.mode, pc.reveal_threshold, pc.reveal_policy
+        );
+        server = server.with_privacy(pc);
+    }
     let model = HloModel::arc(
         &engine,
         &model_name,
@@ -290,6 +330,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     });
     if let Some(p) = participation_from_args(args)? {
         server = server.with_participation(p);
+    }
+    if let Some(pc) = privacy_from_args(args)? {
+        server = server.with_privacy(pc);
     }
     let model = HloModel::arc(
         &engine,

@@ -28,7 +28,7 @@
 
 use crate::error::{FedError, Result};
 use crate::json::Json;
-use crate::util::rng::Rng;
+use crate::util::rng::NoiseSource;
 
 /// Clip `v` to L2 norm ≤ `clip` in place; returns the pre-clip norm.
 pub fn clip_l2(v: &mut [f32], clip: f32) -> f64 {
@@ -45,12 +45,16 @@ pub fn clip_l2(v: &mut [f32], clip: f32) -> f64 {
 /// Privatize one client update in place: clip the delta `params − global`
 /// to `clip_norm`, add `N(0, (clip_norm·noise_multiplier)²)` per
 /// coordinate, and rebase onto `global`.
+///
+/// `rng` is any [`NoiseSource`]: production clients pass the OS CSPRNG
+/// ([`crate::util::rng::OsRng`]), tests keep the deterministic
+/// [`crate::util::rng::Rng`] behind the same interface.
 pub fn privatize_update(
     params: &mut [f32],
     global: &[f32],
     clip_norm: f32,
     noise_multiplier: f32,
-    rng: &mut Rng,
+    rng: &mut dyn NoiseSource,
 ) -> Result<()> {
     if params.len() != global.len() {
         return Err(FedError::Privacy(format!(
@@ -67,7 +71,7 @@ pub fn privatize_update(
     clip_l2(&mut delta, clip_norm);
     let sigma = (clip_norm * noise_multiplier) as f64;
     for (p, (g, d)) in params.iter_mut().zip(global.iter().zip(delta.iter())) {
-        let noise = if sigma > 0.0 { rng.normal() * sigma } else { 0.0 };
+        let noise = if sigma > 0.0 { rng.normal_f64() * sigma } else { 0.0 };
         *p = g + d + noise as f32;
     }
     Ok(())
@@ -239,6 +243,7 @@ impl DpAccountant {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn clip_bounds_norm_and_leaves_small_vectors() {

@@ -1,0 +1,506 @@
+//! Per-pair key agreement for secure aggregation: finite-field
+//! Diffie–Hellman over the RFC 3526 group-14 safe prime (2048-bit MODP,
+//! generator 2), implemented in-tree with Montgomery arithmetic — zero
+//! new dependencies.
+//!
+//! PR 3 derived every pair mask seed from one shared *cohort key*, so a
+//! single compromised client could expand every pair mask in the round.
+//! Here each client derives a per-round DH keypair from its own
+//! **client secret** (never shared with anyone), posts the public key to
+//! the round board, and derives the pair seed for `(a, b)` from the DH
+//! shared secret `g^(a·b)` hashed through the in-tree HMAC-SHA256 — a
+//! compromised client now exposes only the pairs it is itself in.
+//!
+//! The same module carries the share-transport cipher: Shamir shares of a
+//! client's round secret travel coordinator-relayed but **end-to-end
+//! encrypted** under the pairwise key (HMAC-PRF keystream + HMAC tag), so
+//! the honest-but-curious coordinator never holds `t` readable shares.
+//!
+//! Exponentiation is square-and-multiply over CIOS Montgomery
+//! multiplication (not constant-time — acceptable for the testbed threat
+//! model where the coordinator sees only public keys, recorded as a
+//! production follow-up).  The algorithm is pinned by known-answer tests
+//! generated with an independent bignum implementation.
+
+use crate::error::{FedError, Result};
+use crate::privacy::{from_hex, to_hex};
+use crate::util::hmacsha::{sha256, HmacKey};
+
+/// Limbs of the 2048-bit modulus (little-endian u64).
+const L: usize = 32;
+
+/// Public key wire size in bytes (big-endian, fixed width).
+pub const PUBKEY_BYTES: usize = 256;
+
+/// RFC 3526 group 14 prime, little-endian u64 limbs.
+const P: [u64; L] = [
+    0xffffffffffffffff, 0x15728e5a8aacaa68, 0x15d2261898fa0510, 0x3995497cea956ae5,
+    0xde2bcbf695581718, 0xb5c55df06f4c52c9, 0x9b2783a2ec07a28f, 0xe39e772c180e8603,
+    0x32905e462e36ce3b, 0xf1746c08ca18217c, 0x670c354e4abc9804, 0x9ed529077096966d,
+    0x1c62f356208552bb, 0x83655d23dca3ad96, 0x69163fa8fd24cf5f, 0x98da48361c55d39a,
+    0xc2007cb8a163bf05, 0x49286651ece45b3d, 0xae9f24117c4b1fe6, 0xee386bfb5a899fa5,
+    0x0bff5cb6f406b7ed, 0xf44c42e9a637ed6b, 0xe485b576625e7ec6, 0x4fe1356d6d51c245,
+    0x302b0a6df25f1437, 0xef9519b3cd3a431b, 0x514a08798e3404dd, 0x020bbea63b139b22,
+    0x29024e088a67cc74, 0xc4c6628b80dc1cd1, 0xc90fdaa22168c234, 0xffffffffffffffff,
+];
+
+/// `-p⁻¹ mod 2⁶⁴` (p ≡ −1 mod 2⁶⁴ for this prime, so N0 = 1).
+const N0: u64 = 1;
+
+/// `R² mod p` with `R = 2²⁰⁴⁸` (Montgomery domain conversion constant).
+const RR: [u64; L] = [
+    0x477122ce125fb664, 0xb03548fb9b38d313, 0x4c2153ff6fd412c1, 0x2a092b50873f9bc6,
+    0xbbc71629fcb7f5f9, 0x4bec06e136bd84e7, 0x27ba725a6b020cb1, 0xf8115426ed939eeb,
+    0x4bc1b1878a0e30d9, 0x5620820e258633ff, 0x074ed6ab785a3071, 0xf228105f81f1cb61,
+    0x570e436f4e2e6f7f, 0x5ca52ff7d7450bd9, 0x552272d275f10a7e, 0xac2b7925739c7978,
+    0xa2f88257325b54d0, 0xbc821c9de8d72bd5, 0xdbd442b3866d2986, 0x9478951b70c4b2ce,
+    0x5d998fb394910c76, 0xf273b2937e300867, 0x8c106bbe38569f92, 0xf83c92cb14e992c5,
+    0xd85d6e7eed6880dd, 0xeb5b276fbe06a1df, 0x2a492090fa11e105, 0x63bdd96d19ea00be,
+    0x272382970a1698ab, 0x8a3a686c9240c974, 0x3ed8570366613000, 0x0cd37a33628b3197,
+];
+
+const ROUND_SECRET_LABEL: &[u8] = b"feddart-dh-round";
+const SHARED_LABEL: &[u8] = b"feddart-dh-shared";
+const PAIR_LABEL_V2: &[u8] = b"feddart-secagg-pair-v2";
+const SHARE_ENC_LABEL: &[u8] = b"feddart-share-enc";
+const SHARE_MAC_LABEL: &[u8] = b"feddart-share-mac";
+
+/// Byte length of the MAC appended to an encrypted share.
+pub const SHARE_MAC_BYTES: usize = 32;
+
+#[inline]
+fn geq(a: &[u64; L], b: &[u64; L]) -> bool {
+    for j in (0..L).rev() {
+        if a[j] != b[j] {
+            return a[j] > b[j];
+        }
+    }
+    true
+}
+
+#[inline]
+fn sub_in_place(a: &mut [u64; L], b: &[u64; L]) {
+    let mut borrow = 0u64;
+    for j in 0..L {
+        let (v1, b1) = a[j].overflowing_sub(b[j]);
+        let (v2, b2) = v1.overflowing_sub(borrow);
+        a[j] = v2;
+        borrow = (b1 | b2) as u64;
+    }
+}
+
+/// CIOS Montgomery multiplication: returns `a·b·R⁻¹ mod p`.
+fn mont_mul(a: &[u64; L], b: &[u64; L]) -> [u64; L] {
+    let mut t = [0u64; L + 2];
+    for i in 0..L {
+        let bi = b[i] as u128;
+        let mut carry = 0u128;
+        for j in 0..L {
+            let v = t[j] as u128 + a[j] as u128 * bi + carry;
+            t[j] = v as u64;
+            carry = v >> 64;
+        }
+        let v = t[L] as u128 + carry;
+        t[L] = v as u64;
+        t[L + 1] += (v >> 64) as u64;
+
+        let m = t[0].wrapping_mul(N0) as u128;
+        let v = t[0] as u128 + m * P[0] as u128;
+        let mut carry = v >> 64;
+        for j in 1..L {
+            let v = t[j] as u128 + m * P[j] as u128 + carry;
+            t[j - 1] = v as u64;
+            carry = v >> 64;
+        }
+        let v = t[L] as u128 + carry;
+        t[L - 1] = v as u64;
+        t[L] = t[L + 1] + (v >> 64) as u64;
+        t[L + 1] = 0;
+    }
+    let mut out = [0u64; L];
+    out.copy_from_slice(&t[..L]);
+    if t[L] != 0 || geq(&out, &P) {
+        sub_in_place(&mut out, &P);
+    }
+    out
+}
+
+fn limbs_from_be(bytes: &[u8; PUBKEY_BYTES]) -> [u64; L] {
+    let mut out = [0u64; L];
+    for (i, limb) in out.iter_mut().enumerate() {
+        let off = PUBKEY_BYTES - 8 * (i + 1);
+        *limb = u64::from_be_bytes(bytes[off..off + 8].try_into().unwrap());
+    }
+    out
+}
+
+fn be_from_limbs(limbs: &[u64; L]) -> [u8; PUBKEY_BYTES] {
+    let mut out = [0u8; PUBKEY_BYTES];
+    for (i, limb) in limbs.iter().enumerate() {
+        let off = PUBKEY_BYTES - 8 * (i + 1);
+        out[off..off + 8].copy_from_slice(&limb.to_be_bytes());
+    }
+    out
+}
+
+/// Clamp a 32-byte secret into a 256-bit exponent with the top bit set —
+/// guarantees a large exponent and rules out the zero exponent without
+/// rejection sampling.  Applied consistently wherever a secret is used,
+/// so a Shamir-reconstructed raw secret regenerates the same keys.
+#[inline]
+fn clamp(secret: &[u8; 32]) -> [u8; 32] {
+    let mut e = *secret;
+    e[0] |= 0x80;
+    e
+}
+
+/// `base^exp mod p`, exponent big-endian (square-and-multiply).
+fn modpow(base: &[u64; L], exp: &[u8; 32]) -> [u64; L] {
+    let base_m = mont_mul(base, &RR);
+    let mut acc = [0u64; L];
+    let mut started = false;
+    for byte in exp {
+        for bit in (0..8).rev() {
+            if started {
+                acc = mont_mul(&acc, &acc);
+            }
+            if (byte >> bit) & 1 == 1 {
+                if started {
+                    acc = mont_mul(&acc, &base_m);
+                } else {
+                    acc = base_m;
+                    started = true;
+                }
+            }
+        }
+    }
+    let mut one = [0u64; L];
+    one[0] = 1;
+    if !started {
+        return one; // base^0 = 1 (unreachable with clamped exponents)
+    }
+    mont_mul(&acc, &one)
+}
+
+/// A per-round DH keypair.
+#[derive(Debug, Clone)]
+pub struct RoundKeys {
+    /// The raw 32-byte secret (pre-clamp) — this exact value is what
+    /// Shamir shares carry, so reconstruction regenerates the keypair.
+    pub secret: [u8; 32],
+    /// `g^clamp(secret) mod p`, fixed-width big-endian.
+    pub public: [u8; PUBKEY_BYTES],
+}
+
+/// Derive a client's round secret from its long-lived client secret:
+/// `HMAC(client_secret, label ‖ LE64(round) ‖ device)`.  Deterministic,
+/// so `fact_keys` / `fact_shares` / `fact_learn` / `fact_reveal` all
+/// regenerate the same keypair without shared mutable state.
+pub fn derive_round_secret(
+    client_secret: &[u8],
+    round_id: u64,
+    device: &str,
+) -> [u8; 32] {
+    let mut msg =
+        Vec::with_capacity(ROUND_SECRET_LABEL.len() + 8 + device.len());
+    msg.extend_from_slice(ROUND_SECRET_LABEL);
+    msg.extend_from_slice(&round_id.to_le_bytes());
+    msg.extend_from_slice(device.as_bytes());
+    HmacKey::new(client_secret).mac(&msg)
+}
+
+/// Generate the keypair for a 32-byte secret.
+pub fn keypair(secret: &[u8; 32]) -> RoundKeys {
+    let mut g = [0u64; L];
+    g[0] = 2;
+    RoundKeys { secret: *secret, public: be_from_limbs(&modpow(&g, &clamp(secret))) }
+}
+
+/// Parse and validate a hex public key: fixed width, `1 < y < p−1`
+/// (rejects the identity and the order-2 element, the classic degenerate
+/// contributions).
+pub fn parse_pubkey_hex(s: &str) -> Result<[u8; PUBKEY_BYTES]> {
+    let bytes = from_hex(s)?;
+    if bytes.len() != PUBKEY_BYTES {
+        return Err(FedError::Privacy(format!(
+            "public key must be {PUBKEY_BYTES} bytes, got {}",
+            bytes.len()
+        )));
+    }
+    let mut fixed = [0u8; PUBKEY_BYTES];
+    fixed.copy_from_slice(&bytes);
+    let y = limbs_from_be(&fixed);
+    let mut small = true; // y <= 1 ?
+    for (i, &limb) in y.iter().enumerate() {
+        if (i == 0 && limb > 1) || (i > 0 && limb != 0) {
+            small = false;
+            break;
+        }
+    }
+    let mut p1 = P;
+    p1[0] -= 1; // p - 1 (p is odd, no borrow)
+    if small || geq(&y, &p1) {
+        return Err(FedError::Privacy("degenerate DH public key".into()));
+    }
+    Ok(fixed)
+}
+
+pub fn pubkey_hex(public: &[u8; PUBKEY_BYTES]) -> String {
+    to_hex(public)
+}
+
+/// The 32-byte pairwise key: `SHA-256(label ‖ BE(their_pub^my_secret))`.
+/// Symmetric — both ends derive the same value.
+pub fn shared_key(
+    my_secret: &[u8; 32],
+    their_public: &[u8; PUBKEY_BYTES],
+) -> [u8; 32] {
+    let s = modpow(&limbs_from_be(their_public), &clamp(my_secret));
+    let be = be_from_limbs(&s);
+    let mut msg = Vec::with_capacity(SHARED_LABEL.len() + PUBKEY_BYTES);
+    msg.extend_from_slice(SHARED_LABEL);
+    msg.extend_from_slice(&be);
+    sha256(&msg)
+}
+
+/// Pair mask seed for clients `a`, `b` in `round_id`, derived from their
+/// DH pairwise key (replaces the PR 3 cohort-key derivation).  Symmetric
+/// in the names; the name encoding matches `masking::pair_seed` (sorted,
+/// NUL-separated).
+pub fn pair_seed_from_shared(
+    shared: &[u8; 32],
+    round_id: u64,
+    a: &str,
+    b: &str,
+) -> [u8; 32] {
+    let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+    let mut msg =
+        Vec::with_capacity(PAIR_LABEL_V2.len() + 8 + lo.len() + 1 + hi.len());
+    msg.extend_from_slice(PAIR_LABEL_V2);
+    msg.extend_from_slice(&round_id.to_le_bytes());
+    msg.extend_from_slice(lo.as_bytes());
+    msg.push(0);
+    msg.extend_from_slice(hi.as_bytes());
+    HmacKey::new(shared).mac(&msg)
+}
+
+fn share_keystream_block(
+    key: &HmacKey,
+    round_id: u64,
+    from: &str,
+    to: &str,
+    block: u64,
+) -> [u8; 32] {
+    let mut msg = Vec::with_capacity(
+        SHARE_ENC_LABEL.len() + 8 + from.len() + 1 + to.len() + 1 + 8,
+    );
+    msg.extend_from_slice(SHARE_ENC_LABEL);
+    msg.extend_from_slice(&round_id.to_le_bytes());
+    msg.extend_from_slice(from.as_bytes());
+    msg.push(0);
+    msg.extend_from_slice(to.as_bytes());
+    msg.push(0);
+    msg.extend_from_slice(&block.to_le_bytes());
+    key.mac(&msg)
+}
+
+fn share_mac(
+    key: &HmacKey,
+    round_id: u64,
+    from: &str,
+    to: &str,
+    ct: &[u8],
+) -> [u8; 32] {
+    let mut msg = Vec::with_capacity(
+        SHARE_MAC_LABEL.len() + 8 + from.len() + 1 + to.len() + 1 + ct.len(),
+    );
+    msg.extend_from_slice(SHARE_MAC_LABEL);
+    msg.extend_from_slice(&round_id.to_le_bytes());
+    msg.extend_from_slice(from.as_bytes());
+    msg.push(0);
+    msg.extend_from_slice(to.as_bytes());
+    msg.push(0);
+    msg.extend_from_slice(ct);
+    key.mac(&msg)
+}
+
+/// Encrypt a Shamir share for coordinator-relayed transport from `from`
+/// (the dealer) to `to`: HMAC-PRF keystream XOR + appended HMAC tag, both
+/// keyed by the pairwise DH key.  The key is unique per (pair, round,
+/// direction), so no nonce is needed — each (round, from, to) encrypts
+/// exactly one share.
+pub fn encrypt_share(
+    shared: &[u8; 32],
+    round_id: u64,
+    from: &str,
+    to: &str,
+    plain: &[u8],
+) -> Vec<u8> {
+    let key = HmacKey::new(shared);
+    let mut out = Vec::with_capacity(plain.len() + SHARE_MAC_BYTES);
+    for (i, chunk) in plain.chunks(32).enumerate() {
+        let ks = share_keystream_block(&key, round_id, from, to, i as u64);
+        out.extend(chunk.iter().zip(ks.iter()).map(|(p, k)| p ^ k));
+    }
+    let mac = share_mac(&key, round_id, from, to, &out);
+    out.extend_from_slice(&mac);
+    out
+}
+
+/// Decrypt and authenticate an encrypted share.
+pub fn decrypt_share(
+    shared: &[u8; 32],
+    round_id: u64,
+    from: &str,
+    to: &str,
+    ct_and_mac: &[u8],
+) -> Result<Vec<u8>> {
+    if ct_and_mac.len() < SHARE_MAC_BYTES {
+        return Err(FedError::Privacy("encrypted share too short".into()));
+    }
+    let key = HmacKey::new(shared);
+    let (ct, mac) = ct_and_mac.split_at(ct_and_mac.len() - SHARE_MAC_BYTES);
+    let expect = share_mac(&key, round_id, from, to, ct);
+    if !crate::util::hmacsha::ct_eq(&expect, mac) {
+        return Err(FedError::Privacy(format!(
+            "share from '{from}' to '{to}' failed authentication"
+        )));
+    }
+    let mut out = Vec::with_capacity(ct.len());
+    for (i, chunk) in ct.chunks(32).enumerate() {
+        let ks = share_keystream_block(&key, round_id, from, to, i as u64);
+        out.extend(chunk.iter().zip(ks.iter()).map(|(c, k)| c ^ k));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secret_a() -> [u8; 32] {
+        let mut s = [0u8; 32];
+        for (i, b) in s.iter_mut().enumerate() {
+            *b = i as u8 + 1;
+        }
+        s
+    }
+
+    fn secret_b() -> [u8; 32] {
+        sha256(b"feddart-kat-b")
+    }
+
+    /// Known-answer vectors computed with an independent bignum
+    /// implementation (`pow(2, clamp(secret), p)` over the RFC 3526
+    /// group-14 prime).
+    #[test]
+    fn keypair_matches_known_answers() {
+        let ka = keypair(&secret_a());
+        let hex_a = to_hex(&ka.public);
+        assert!(hex_a.starts_with("212cdf8c27dc1e3c"), "pub_a = {}", &hex_a[..32]);
+        assert!(hex_a.ends_with("fd4d19251fdfd"), "pub_a tail");
+        let kb = keypair(&secret_b());
+        let hex_b = to_hex(&kb.public);
+        assert!(hex_b.starts_with("4731f2463682d44d"), "pub_b = {}", &hex_b[..32]);
+    }
+
+    #[test]
+    fn shared_key_symmetric_and_matches_kat() {
+        let ka = keypair(&secret_a());
+        let kb = keypair(&secret_b());
+        let sab = shared_key(&ka.secret, &kb.public);
+        let sba = shared_key(&kb.secret, &ka.public);
+        assert_eq!(sab, sba);
+        assert_eq!(
+            to_hex(&sab),
+            "13defa0ea0e820ff608bdad617ffe155b8a1bd82d0cbc08a344cbd61cb27363a"
+        );
+        // a third party's shared key differs
+        let kc = keypair(&sha256(b"c"));
+        assert_ne!(shared_key(&kc.secret, &kb.public), sab);
+    }
+
+    #[test]
+    fn round_secret_derivation_scopes() {
+        let cs = b"client-local-secret";
+        let s = derive_round_secret(cs, 7, "alice");
+        assert_eq!(s, derive_round_secret(cs, 7, "alice"));
+        assert_ne!(s, derive_round_secret(cs, 8, "alice"));
+        assert_ne!(s, derive_round_secret(cs, 7, "bob"));
+        assert_ne!(s, derive_round_secret(b"other", 7, "alice"));
+    }
+
+    #[test]
+    fn pubkey_validation() {
+        let ka = keypair(&secret_a());
+        let hex = pubkey_hex(&ka.public);
+        assert_eq!(parse_pubkey_hex(&hex).unwrap(), ka.public);
+        // wrong length
+        assert!(parse_pubkey_hex("abcd").is_err());
+        // zero / one / p-1 rejected
+        let zero = [0u8; PUBKEY_BYTES];
+        assert!(parse_pubkey_hex(&to_hex(&zero)).is_err());
+        let mut one = [0u8; PUBKEY_BYTES];
+        one[PUBKEY_BYTES - 1] = 1;
+        assert!(parse_pubkey_hex(&to_hex(&one)).is_err());
+        let mut p1 = P;
+        p1[0] -= 1;
+        assert!(parse_pubkey_hex(&to_hex(&be_from_limbs(&p1))).is_err());
+        // p itself (>= p-1)
+        assert!(parse_pubkey_hex(&to_hex(&be_from_limbs(&P))).is_err());
+    }
+
+    #[test]
+    fn pair_seed_symmetric_and_scoped() {
+        let shared = [9u8; 32];
+        let ab = pair_seed_from_shared(&shared, 4, "a", "b");
+        assert_eq!(ab, pair_seed_from_shared(&shared, 4, "b", "a"));
+        assert_ne!(ab, pair_seed_from_shared(&shared, 5, "a", "b"));
+        assert_ne!(ab, pair_seed_from_shared(&[8u8; 32], 4, "a", "b"));
+        assert_ne!(
+            pair_seed_from_shared(&shared, 4, "ab", "c"),
+            pair_seed_from_shared(&shared, 4, "a", "bc")
+        );
+    }
+
+    #[test]
+    fn share_transport_roundtrip_and_tamper_detection() {
+        let shared = sha256(b"pair");
+        let plain: Vec<u8> = (0..33).collect(); // crosses a keystream block
+        let ct = encrypt_share(&shared, 3, "dealer", "holder", &plain);
+        assert_eq!(ct.len(), plain.len() + SHARE_MAC_BYTES);
+        // ciphertext hides the plaintext
+        assert_ne!(&ct[..plain.len()], &plain[..]);
+        let back = decrypt_share(&shared, 3, "dealer", "holder", &ct).unwrap();
+        assert_eq!(back, plain);
+        // flipped bit fails the MAC
+        let mut bad = ct.clone();
+        bad[5] ^= 1;
+        assert!(decrypt_share(&shared, 3, "dealer", "holder", &bad).is_err());
+        // wrong direction, round or key fails the MAC
+        assert!(decrypt_share(&shared, 3, "holder", "dealer", &ct).is_err());
+        assert!(decrypt_share(&shared, 4, "dealer", "holder", &ct).is_err());
+        assert!(decrypt_share(&sha256(b"x"), 3, "dealer", "holder", &ct).is_err());
+        // truncated input
+        assert!(decrypt_share(&shared, 3, "dealer", "holder", &ct[..10]).is_err());
+    }
+
+    #[test]
+    fn montgomery_small_value_sanity() {
+        // 2^1 = 2, 2^2 = 4, 3^5 = 243 — exercises the non-KAT small path
+        let mut g = [0u64; L];
+        g[0] = 2;
+        let mut e = [0u8; 32];
+        e[31] = 1;
+        // NOTE: modpow clamps nothing itself; pass the exponent directly
+        assert_eq!(modpow(&g, &e)[0], 2);
+        e[31] = 2;
+        assert_eq!(modpow(&g, &e)[0], 4);
+        let mut three = [0u64; L];
+        three[0] = 3;
+        e[31] = 5;
+        let r = modpow(&three, &e);
+        assert_eq!(r[0], 243);
+        assert!(r[1..].iter().all(|&v| v == 0));
+    }
+}

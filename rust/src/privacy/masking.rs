@@ -191,15 +191,32 @@ pub fn mask_update(
             "client '{me}' cannot be its own masking peer"
         )));
     }
+    let seeds: Vec<(i64, [u8; 32])> = peers
+        .iter()
+        .map(|peer| {
+            (pair_sign(me, peer), pair_seed(cohort_key, round_id, me, peer))
+        })
+        .collect();
+    mask_update_with_seeds(x, weight, &seeds, frac_bits)
+}
+
+/// [`mask_update`] over precomputed signed pair seeds — the path used by
+/// per-pair key agreement, where each seed comes from a DH pairwise key
+/// ([`crate::privacy::keys::pair_seed_from_shared`]) instead of the
+/// legacy shared cohort key.
+pub fn mask_update_with_seeds(
+    x: &[f32],
+    weight: f64,
+    seeds: &[(i64, [u8; 32])],
+    frac_bits: u32,
+) -> Result<Vec<f32>> {
     let mut q: Vec<i64> = x
         .iter()
         .map(|&v| quantize_checked(v as f64 * weight, frac_bits))
         .collect::<Result<_>>()?;
     let mut mask = vec![0i32; x.len()];
-    for peer in peers {
-        let seed = pair_seed(cohort_key, round_id, me, peer);
-        expand_mask_into(&seed, &mut mask);
-        let sign = pair_sign(me, peer);
+    for (sign, seed) in seeds {
+        expand_mask_into(seed, &mut mask);
         for (qi, &mi) in q.iter_mut().zip(mask.iter()) {
             *qi = wrap(*qi + sign * mi as i64);
         }

@@ -37,16 +37,25 @@
 //!   update, unless it colludes with every other participant of a pair.
 //! * `secagg+dp` — both: the aggregate itself also carries DP noise.
 //!
-//! Known simplifications, recorded in ROADMAP follow-ups: pair seeds are
-//! derived from the shared cohort key (a compromised client reveals every
-//! pair it participates in — Shamir seed shares fix this), the dropout
-//! reveal trusts survivors (commitments catch inconsistent reveals but
-//! not collusion), and the Gaussian noise uses the deterministic testbed
-//! [`crate::util::rng::Rng`] rather than an OS CSPRNG.
+//! Pair seeds come from per-pair **key agreement** ([`keys`]: in-tree
+//! finite-field DH over the RFC 3526 group-14 safe prime) rather than a
+//! shared cohort key, and dropout recovery is **threshold-based**
+//! ([`shamir`]): each client Shamir-splits its round mask secret across
+//! the cohort, so any `t`-of-`n` survivor subset reconstructs a dropped
+//! client's masks and one compromised client exposes only its own pairs.
+//! A [`RevealPolicy`] decides what a round does when recovery falls below
+//! `t` (abort vs proceed-without-the-round), surfaced in the per-round
+//! audit record.
+//!
+//! Remaining simplifications, recorded in ROADMAP follow-ups: the DH
+//! exponentiation is not constant-time, and a malicious (not just
+//! curious) coordinator could partition clients across rounds.
 
 pub mod dp;
+pub mod keys;
 pub mod masking;
 pub mod secagg;
+pub mod shamir;
 
 use crate::error::{FedError, Result};
 use crate::json::Json;
@@ -102,6 +111,56 @@ impl std::fmt::Display for PrivacyMode {
     }
 }
 
+/// What a secure-aggregation round does when dropout recovery falls
+/// below the share threshold (some dropped client's masks cannot be
+/// cancelled, so no masked aggregate exists for the round).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RevealPolicy {
+    /// Fail the training session (default — the conservative choice).
+    #[default]
+    Abort,
+    /// Void the round (global parameters unchanged), record an audit
+    /// entry, and continue with the next round.
+    Proceed,
+}
+
+impl RevealPolicy {
+    pub fn parse(s: &str) -> Result<RevealPolicy> {
+        match s {
+            "abort" => Ok(RevealPolicy::Abort),
+            "proceed" => Ok(RevealPolicy::Proceed),
+            other => Err(FedError::Privacy(format!(
+                "unknown reveal policy '{other}' (expected abort | proceed)"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RevealPolicy::Abort => "abort",
+            RevealPolicy::Proceed => "proceed",
+        }
+    }
+}
+
+impl std::fmt::Display for RevealPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Resolve the share threshold `t` for an `n`-participant round:
+/// `0` (auto) means a majority-ish `max(2, (n+1)/2)`; explicit values are
+/// clamped into `[2, n−1]` (shares are held by the `n−1` peers).
+pub fn resolve_reveal_threshold(requested: usize, n: usize) -> usize {
+    let ceil = n.saturating_sub(1).max(2);
+    if requested == 0 {
+        ((n + 1) / 2).max(2).min(ceil)
+    } else {
+        requested.clamp(2, ceil)
+    }
+}
+
 /// Server-side privacy configuration for a FACT training session; the
 /// non-secret fields travel to the clients inside each learn task's
 /// `privacy` object.
@@ -120,6 +179,11 @@ pub struct PrivacyConfig {
     pub weight_scale: f32,
     /// SecAgg: lattice fraction bits (quantization step `2^-frac_bits`).
     pub frac_bits: u32,
+    /// SecAgg: `t` of the t-of-n Shamir share recovery; 0 = auto
+    /// (see [`resolve_reveal_threshold`]).
+    pub reveal_threshold: usize,
+    /// SecAgg: behaviour when a round's recovery falls below `t`.
+    pub reveal_policy: RevealPolicy,
 }
 
 impl Default for PrivacyConfig {
@@ -131,6 +195,8 @@ impl Default for PrivacyConfig {
             delta: 1e-5,
             weight_scale: 1.0,
             frac_bits: masking::DEFAULT_FRAC_BITS,
+            reveal_threshold: 0,
+            reveal_policy: RevealPolicy::Abort,
         }
     }
 }
@@ -150,6 +216,8 @@ impl PrivacyConfig {
             .set("delta", self.delta)
             .set("weight_scale", self.weight_scale)
             .set("frac_bits", self.frac_bits as usize)
+            .set("reveal_threshold", self.reveal_threshold)
+            .set("reveal_policy", self.reveal_policy.as_str())
     }
 
     pub fn from_json(j: &Json) -> Result<PrivacyConfig> {
@@ -175,6 +243,14 @@ impl PrivacyConfig {
                 .get("frac_bits")
                 .and_then(Json::as_usize)
                 .unwrap_or(d.frac_bits as usize) as u32,
+            reveal_threshold: j
+                .get("reveal_threshold")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.reveal_threshold),
+            reveal_policy: match j.get("reveal_policy").and_then(Json::as_str) {
+                Some(s) => RevealPolicy::parse(s)?,
+                None => d.reveal_policy,
+            },
         })
     }
 }
@@ -265,6 +341,8 @@ mod tests {
             delta: 1e-6,
             weight_scale: 256.0,
             frac_bits: 18,
+            reveal_threshold: 4,
+            reveal_policy: RevealPolicy::Proceed,
         };
         let back = PrivacyConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.mode, cfg.mode);
@@ -273,9 +351,39 @@ mod tests {
         assert_eq!(back.delta, cfg.delta);
         assert_eq!(back.weight_scale, cfg.weight_scale);
         assert_eq!(back.frac_bits, cfg.frac_bits);
+        assert_eq!(back.reveal_threshold, 4);
+        assert_eq!(back.reveal_policy, RevealPolicy::Proceed);
         // defaults fill missing fields
         let d = PrivacyConfig::from_json(&Json::obj()).unwrap();
         assert_eq!(d.mode, PrivacyMode::Off);
+        assert_eq!(d.reveal_threshold, 0);
+        assert_eq!(d.reveal_policy, RevealPolicy::Abort);
+        // bad policy string errors
+        assert!(PrivacyConfig::from_json(
+            &Json::obj().set("reveal_policy", "shrug")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reveal_policy_parse_roundtrip() {
+        for p in [RevealPolicy::Abort, RevealPolicy::Proceed] {
+            assert_eq!(RevealPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(RevealPolicy::parse("panic").is_err());
+    }
+
+    #[test]
+    fn threshold_resolution() {
+        // auto: majority-ish, capped at n-1, floored at 2
+        assert_eq!(resolve_reveal_threshold(0, 8), 4); // the acceptance shape
+        assert_eq!(resolve_reveal_threshold(0, 5), 3);
+        assert_eq!(resolve_reveal_threshold(0, 3), 2);
+        assert_eq!(resolve_reveal_threshold(0, 2), 2);
+        // explicit values clamp into [2, n-1]
+        assert_eq!(resolve_reveal_threshold(6, 8), 6);
+        assert_eq!(resolve_reveal_threshold(1, 8), 2);
+        assert_eq!(resolve_reveal_threshold(99, 8), 7);
     }
 
     #[test]

@@ -2,19 +2,29 @@
 //!
 //! The coordinator-side half of the masking protocol in
 //! [`super::masking`].  One [`SecAggRound`] tracks a single aggregation
-//! round through four phases:
+//! round through its phases:
 //!
-//! 1. **Seed advertisement** — every participant posts a nonce,
-//!    signalling it holds the cohort key and is in the round.
-//! 2. **Mask commit** — each participant publishes `SHA-256(seed)` per
-//!    pair, letting the coordinator cross-check that both ends of a pair
-//!    derived the same seed and later verify dropout reveals.
-//! 3. **Masked submit** — participants upload their lattice-masked
+//! 1. **Key agreement** — every participant posts its per-round DH
+//!    public key ([`super::keys`]); pair mask seeds derive from the
+//!    pairwise shared secrets, so no cohort-wide key exists.
+//! 2. **Share distribution** — each participant Shamir-splits its round
+//!    mask secret ([`super::shamir`]) and posts one *end-to-end
+//!    encrypted* share per peer (the coordinator relays ciphertext it
+//!    cannot read), plus a clear commitment per share.
+//! 3. **Seed advertisement / mask commit** — the legacy phases are still
+//!    accepted (a nonce per participant, `SHA-256(seed)` per pair) and
+//!    let the coordinator verify direct dropout reveals byte-for-byte.
+//! 4. **Masked submit** — participants upload their lattice-masked
 //!    weighted updates plus clear sample counts.
-//! 4. **Dropout recovery** — participants that advertised but never
-//!    submitted are *dropped*; each survivor reveals its pair seed with
-//!    every dropped peer so the coordinator can expand those masks and
-//!    subtract them (a dropped client's own masks never entered the sum).
+//! 5. **Dropout recovery** — participants that advertised but never
+//!    submitted are *dropped*.  Survivors either reveal their own pair
+//!    seed with a dropped peer directly, or reveal their (decrypted,
+//!    commitment-checked) Shamir share of the dropped client's secret;
+//!    any `t` valid shares let the coordinator reconstruct the secret
+//!    and derive **every** survivor's pair seed with that client — no
+//!    individual survivor is load-bearing.  Below `t`, the configured
+//!    [`super::RevealPolicy`] decides abort vs proceed, and the round's
+//!    audit log records the event either way.
 //!
 //! [`unmask_aggregate`] then recovers `Σ wᵢ·xᵢ / Σ wᵢ` over the survivors
 //! without ever materializing an unmasked individual update — each
@@ -32,7 +42,10 @@ use crate::json::Json;
 use crate::privacy::masking::{
     expand_mask_into, pair_sign, requantize, seed_commitment, wrap,
 };
-use crate::privacy::{seed_from_hex, to_hex};
+use crate::privacy::{
+    from_hex, keys, resolve_reveal_threshold, seed_from_hex, shamir, to_hex,
+    RevealPolicy,
+};
 use crate::util::tensorbuf::TensorBuf;
 
 /// Lattice / weighting parameters shared by every participant of a round.
@@ -43,6 +56,11 @@ pub struct SecAggConfig {
     pub weighted: bool,
     /// Divisor applied to `n_samples` before client-side pre-weighting.
     pub weight_scale: f32,
+    /// Requested t of the t-of-n share recovery; 0 = auto
+    /// ([`resolve_reveal_threshold`]).
+    pub reveal_threshold: usize,
+    /// Behaviour when recovery falls below the threshold.
+    pub reveal_policy: RevealPolicy,
 }
 
 impl Default for SecAggConfig {
@@ -51,6 +69,8 @@ impl Default for SecAggConfig {
             frac_bits: super::masking::DEFAULT_FRAC_BITS,
             weighted: true,
             weight_scale: 1.0,
+            reveal_threshold: 0,
+            reveal_policy: RevealPolicy::Abort,
         }
     }
 }
@@ -119,6 +139,35 @@ pub fn unmask_aggregate(
         .collect())
 }
 
+/// Reconstruct a dealer's 32-byte round secret from at least `threshold`
+/// verified shares and integrity-check it against the dealer's posted
+/// public key — shares that pass their commitments but were dealt from a
+/// *different* secret (a consistently-lying dealer) still cannot
+/// impersonate the posted identity.  Shared by the in-process FACT
+/// recovery path and the REST board so the two cannot drift.
+pub fn reconstruct_dealer_secret(
+    shares: &[shamir::Share],
+    threshold: usize,
+    posted_pubkey_hex: &str,
+    dealer: &str,
+) -> Result<[u8; 32]> {
+    let raw = shamir::reconstruct(shares, threshold)?;
+    let secret: [u8; 32] = raw.as_slice().try_into().map_err(|_| {
+        FedError::Privacy(format!(
+            "reconstructed secret of '{dealer}' has {} bytes, want 32",
+            raw.len()
+        ))
+    })?;
+    let expect = keys::keypair(&secret);
+    if keys::pubkey_hex(&expect.public) != posted_pubkey_hex {
+        return Err(FedError::Privacy(format!(
+            "reconstructed secret of '{dealer}' does not match its posted \
+             public key"
+        )));
+    }
+    Ok(secret)
+}
+
 /// Derived phase of a round (for status reporting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -147,6 +196,16 @@ pub struct SecAggRound {
     pub id: u64,
     pub cfg: SecAggConfig,
     participants: Vec<String>,
+    /// resolved t of the t-of-n share recovery
+    threshold: usize,
+    /// client -> hex DH public key (key-agreement phase)
+    pubkeys: BTreeMap<String, String>,
+    /// dealer -> recipient -> hex ciphertext (end-to-end encrypted share)
+    enc_shares: BTreeMap<String, BTreeMap<String, String>>,
+    /// dealer -> recipient -> hex share commitment
+    share_commits: BTreeMap<String, BTreeMap<String, String>>,
+    /// dropped dealer -> holder -> revealed (verified) share
+    revealed_shares: BTreeMap<String, BTreeMap<String, shamir::Share>>,
     nonces: BTreeMap<String, String>,
     /// client -> peer -> hex(SHA-256(pair seed))
     commits: BTreeMap<String, BTreeMap<String, String>>,
@@ -154,6 +213,9 @@ pub struct SecAggRound {
     /// survivor -> dropped -> hex(pair seed)
     reveals: BTreeMap<String, BTreeMap<String, String>>,
     aggregate: Option<TensorBuf>,
+    /// per-round audit log (reconstructions, threshold violations) —
+    /// surfaced in the status document
+    audit: Vec<Json>,
     /// Granted participation/cohort config (quorum, deadline, sampling) —
     /// negotiated alongside the privacy mode on `/round/{id}/config` and
     /// echoed in the status document so clients learn the round's close
@@ -171,21 +233,46 @@ impl SecAggRound {
                 "secagg needs at least 2 participants".into(),
             ));
         }
+        let threshold = resolve_reveal_threshold(cfg.reveal_threshold, p.len());
         Ok(SecAggRound {
             id,
             cfg,
             participants: p,
+            threshold,
+            pubkeys: BTreeMap::new(),
+            enc_shares: BTreeMap::new(),
+            share_commits: BTreeMap::new(),
+            revealed_shares: BTreeMap::new(),
             nonces: BTreeMap::new(),
             commits: BTreeMap::new(),
             updates: BTreeMap::new(),
             reveals: BTreeMap::new(),
             aggregate: None,
+            audit: Vec::new(),
             participation: None,
         })
     }
 
     pub fn participants(&self) -> &[String] {
         &self.participants
+    }
+
+    /// Resolved t of the t-of-n share recovery.
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// Every state transition is rejected once the round aggregated: a
+    /// late reveal (or key/share/submit) must never mutate state behind a
+    /// cached aggregate.
+    fn check_not_done(&self) -> Result<()> {
+        if self.aggregate.is_some() {
+            return Err(FedError::Privacy(format!(
+                "round {} already aggregated — phase violation",
+                self.id
+            )));
+        }
+        Ok(())
     }
 
     /// Attach the granted participation config (see the field docs).
@@ -207,10 +294,188 @@ impl SecAggRound {
         Ok(())
     }
 
+    /// Key-agreement phase: a participant posts its per-round DH public
+    /// key.  Idempotent for the same key; a different key from the same
+    /// client is a protocol violation (equivocation).
+    pub fn post_key(&mut self, client: &str, pubkey_hex: &str) -> Result<()> {
+        self.check_not_done()?;
+        self.check_participant(client)?;
+        if !self.updates.is_empty() {
+            return Err(FedError::Privacy(
+                "key posted after submissions started".into(),
+            ));
+        }
+        keys::parse_pubkey_hex(pubkey_hex)?; // validate early
+        // normalize: from_hex accepts uppercase, but the reconstruction
+        // integrity check regenerates lowercase — a case mismatch must
+        // not read as a different key
+        let pubkey_hex = pubkey_hex.to_lowercase();
+        match self.pubkeys.get(client) {
+            Some(prev) if *prev != pubkey_hex => Err(FedError::Privacy(format!(
+                "'{client}' re-posted a different public key"
+            ))),
+            _ => {
+                self.pubkeys.insert(client.to_string(), pubkey_hex);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn pubkeys(&self) -> &BTreeMap<String, String> {
+        &self.pubkeys
+    }
+
+    pub fn all_keyed(&self) -> bool {
+        self.pubkeys.len() == self.participants.len()
+    }
+
+    /// Share-distribution phase: a dealer posts one encrypted Shamir
+    /// share of its round secret per recipient, plus a clear commitment
+    /// per share.  The ciphertext is end-to-end encrypted under the
+    /// (dealer, recipient) pairwise key — this coordinator only relays.
+    pub fn post_shares(
+        &mut self,
+        dealer: &str,
+        shares: BTreeMap<String, String>,
+        commits: BTreeMap<String, String>,
+    ) -> Result<()> {
+        self.check_not_done()?;
+        self.check_participant(dealer)?;
+        if !self.pubkeys.contains_key(dealer) {
+            return Err(FedError::Privacy(format!(
+                "'{dealer}' dealt shares before posting a public key"
+            )));
+        }
+        if !self.updates.is_empty() {
+            return Err(FedError::Privacy(
+                "shares dealt after submissions started".into(),
+            ));
+        }
+        for recipient in shares.keys().chain(commits.keys()) {
+            if recipient == dealer {
+                return Err(FedError::Privacy(format!(
+                    "'{dealer}' dealt a share to itself"
+                )));
+            }
+            self.check_participant(recipient)?;
+        }
+        // shares and commitments must pair up exactly: a share without a
+        // commitment could later be "revealed" as arbitrary bytes
+        for recipient in shares.keys() {
+            if !commits.contains_key(recipient) {
+                return Err(FedError::Privacy(format!(
+                    "share for '{recipient}' without a commitment"
+                )));
+            }
+        }
+        for (recipient, c) in &commits {
+            from_hex(c)?; // malformed commitments poison reveals later
+            if !shares.contains_key(recipient) {
+                return Err(FedError::Privacy(format!(
+                    "commitment for '{recipient}' without a matching share"
+                )));
+            }
+        }
+        self.enc_shares.insert(dealer.to_string(), shares);
+        self.share_commits.insert(dealer.to_string(), commits);
+        Ok(())
+    }
+
+    /// The encrypted shares addressed to `recipient` (dealer -> hex ct).
+    pub fn shares_for(&self, recipient: &str) -> BTreeMap<String, String> {
+        let mut out = BTreeMap::new();
+        for (dealer, per_recipient) in &self.enc_shares {
+            if let Some(ct) = per_recipient.get(recipient) {
+                out.insert(dealer.clone(), ct.clone());
+            }
+        }
+        out
+    }
+
+    /// Dealers that have dealt shares.
+    pub fn share_dealers(&self) -> Vec<String> {
+        self.enc_shares.keys().cloned().collect()
+    }
+
+    /// Recovery: a survivor reveals its (decrypted) Shamir share of a
+    /// *dropped* dealer's round secret.  Verified against the dealer's
+    /// commitment for this holder; a corrupted share is rejected here,
+    /// before it can poison a reconstruction.
+    pub fn reveal_share(
+        &mut self,
+        holder: &str,
+        dealer: &str,
+        share_hex: &str,
+    ) -> Result<()> {
+        self.check_not_done()?;
+        if !self.updates.contains_key(holder) {
+            return Err(FedError::Privacy(format!(
+                "'{holder}' is not a survivor of round {}",
+                self.id
+            )));
+        }
+        if !self.dropped().iter().any(|d| d == dealer) {
+            return Err(FedError::Privacy(format!(
+                "'{holder}' revealed a share of non-dropped '{dealer}'"
+            )));
+        }
+        let share = shamir::Share::from_bytes(&from_hex(share_hex)?)?;
+        // every dealt share has a commitment (post_shares enforces the
+        // pairing), so an uncommitted reveal is either a fabrication or
+        // a share that was never dealt — reject rather than trust
+        let Some(commit_hex) =
+            self.share_commits.get(dealer).and_then(|m| m.get(holder))
+        else {
+            return Err(FedError::Privacy(format!(
+                "no commitment on record for a share of '{dealer}' held \
+                 by '{holder}'"
+            )));
+        };
+        let want = from_hex(commit_hex)?;
+        if want.len() != 32
+            || !shamir::verify_share(
+                &share,
+                want.as_slice().try_into().unwrap(),
+            )
+        {
+            self.audit.push(
+                Json::obj()
+                    .set("event", "corrupt_share")
+                    .set("dealer", dealer)
+                    .set("holder", holder),
+            );
+            return Err(FedError::Privacy(format!(
+                "share of '{dealer}' revealed by '{holder}' does not \
+                 match its commitment"
+            )));
+        }
+        self.revealed_shares
+            .entry(dealer.to_string())
+            .or_default()
+            .insert(holder.to_string(), share);
+        Ok(())
+    }
+
+    /// Valid shares revealed so far for a dropped dealer.
+    pub fn revealed_share_count(&self, dealer: &str) -> usize {
+        self.revealed_shares.get(dealer).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Whether a dropped dealer's secret can be reconstructed: at least
+    /// `t` verified shares, and a posted public key for every survivor
+    /// whose pair seed would have to be derived (plus the dealer's own
+    /// key, used to integrity-check the reconstruction).
+    fn reconstructable(&self, dealer: &str) -> bool {
+        self.revealed_share_count(dealer) >= self.threshold
+            && self.pubkeys.contains_key(dealer)
+            && self.updates.keys().all(|s| self.pubkeys.contains_key(s))
+    }
+
     /// Phase 1: a participant advertises its round nonce.  Idempotent for
     /// the same nonce; a different nonce from the same client is a
     /// protocol violation.
     pub fn advertise(&mut self, client: &str, nonce: &str) -> Result<()> {
+        self.check_not_done()?;
         self.check_participant(client)?;
         if !self.updates.is_empty() {
             return Err(FedError::Privacy(
@@ -246,6 +511,7 @@ impl SecAggRound {
         client: &str,
         commits: BTreeMap<String, String>,
     ) -> Result<()> {
+        self.check_not_done()?;
         self.check_participant(client)?;
         for peer in commits.keys() {
             if peer == client {
@@ -275,14 +541,14 @@ impl SecAggRound {
         params: TensorBuf,
         n_samples: f64,
     ) -> Result<()> {
+        self.check_not_done()?;
         self.check_participant(client)?;
-        if !self.nonces.contains_key(client) {
+        if !self.nonces.contains_key(client) && !self.pubkeys.contains_key(client)
+        {
             return Err(FedError::Privacy(format!(
-                "'{client}' submitted before advertising a seed"
+                "'{client}' submitted before advertising a seed or posting \
+                 a key"
             )));
-        }
-        if self.aggregate.is_some() {
-            return Err(FedError::Privacy("round already aggregated".into()));
         }
         if let Some(first) = self.updates.values().next() {
             if first.params.len() != params.len() {
@@ -310,13 +576,20 @@ impl SecAggRound {
         Ok(())
     }
 
-    /// Advertised participants that never submitted (the dropout set).
+    /// Participants that entered the round (advertised a nonce or posted
+    /// a DH key) but never submitted — the dropout set whose masks must
+    /// be recovered.
     pub fn dropped(&self) -> Vec<String> {
-        self.nonces
+        let mut out: Vec<String> = self
+            .nonces
             .keys()
+            .chain(self.pubkeys.keys())
             .filter(|c| !self.updates.contains_key(*c))
             .cloned()
-            .collect()
+            .collect();
+        out.sort();
+        out.dedup();
+        out
     }
 
     pub fn survivors(&self) -> Vec<String> {
@@ -330,6 +603,7 @@ impl SecAggRound {
         survivor: &str,
         seeds: &BTreeMap<String, String>,
     ) -> Result<()> {
+        self.check_not_done()?;
         if !self.updates.contains_key(survivor) {
             return Err(FedError::Privacy(format!(
                 "'{survivor}' is not a survivor of round {}",
@@ -361,12 +635,19 @@ impl SecAggRound {
         Ok(())
     }
 
-    /// (survivor, dropped) pairs still lacking a reveal.
+    /// (survivor, dropped) pairs still lacking a reveal.  Threshold
+    /// semantics: once a dropped client's secret is reconstructable from
+    /// `t` verified shares, **all** of its pairs count as covered — the
+    /// all-survivors-must-individually-reveal requirement of PR 3 is
+    /// gone, only the gap the shares cannot close remains missing.
     pub fn missing_reveals(&self) -> Vec<(String, String)> {
         let dropped = self.dropped();
         let mut missing = Vec::new();
-        for s in self.updates.keys() {
-            for d in &dropped {
+        for d in &dropped {
+            if self.reconstructable(d) {
+                continue;
+            }
+            for s in self.updates.keys() {
                 let have = self
                     .reveals
                     .get(s)
@@ -377,54 +658,125 @@ impl SecAggRound {
                 }
             }
         }
+        missing.sort();
         missing
+    }
+
+    /// Participants that entered the round through either path (legacy
+    /// nonce advertisement or DH key posting).
+    fn entered(&self) -> usize {
+        self.participants
+            .iter()
+            .filter(|p| {
+                self.nonces.contains_key(*p) || self.pubkeys.contains_key(*p)
+            })
+            .count()
     }
 
     pub fn phase(&self) -> Phase {
         if self.aggregate.is_some() {
             Phase::Done
         } else if !self.updates.is_empty() {
-            if self.dropped().is_empty() && !self.all_advertised() {
-                // submissions underway, stragglers may still advertise
+            if self.dropped().is_empty() && self.entered() < self.participants.len()
+            {
+                // submissions underway, stragglers may still enter
                 Phase::Submit
             } else if self.missing_reveals().is_empty() {
                 Phase::Submit
             } else {
                 Phase::Reveal
             }
-        } else if self.all_advertised() {
+        } else if self.entered() == self.participants.len() {
             Phase::Commit
         } else {
             Phase::Seeds
         }
     }
 
-    /// Finish the round: requires at least one submission and a complete
-    /// reveal set for every dropout.  Caches and returns the aggregate.
+    /// Finish the round: every dropped client's masks must be coverable —
+    /// by direct reveals, or by a threshold share reconstruction of its
+    /// round secret.  Below the threshold the round is unrecoverable:
+    /// the configured [`RevealPolicy`] is recorded in the audit log and
+    /// the error names it, so the driving component can abort the session
+    /// or void just this round.  Caches and returns the aggregate.
     pub fn try_aggregate(&mut self) -> Result<TensorBuf> {
         if let Some(agg) = &self.aggregate {
             return Ok(agg.clone());
         }
-        let missing = self.missing_reveals();
-        if !missing.is_empty() {
-            return Err(FedError::Privacy(format!(
-                "round {} not recoverable: {} reveal(s) missing (first: {:?})",
-                self.id,
-                missing.len(),
-                missing[0]
-            )));
-        }
-        let updates: Vec<MaskedUpdate> = self.updates.values().cloned().collect();
+        let dropped = self.dropped();
+        let survivors: Vec<String> = self.updates.keys().cloned().collect();
         let mut revealed = Vec::new();
         for (survivor, per_dropped) in &self.reveals {
-            for (dropped, seed_hex) in per_dropped {
+            for (d, seed_hex) in per_dropped {
                 revealed.push(RevealedSeed {
                     survivor: survivor.clone(),
-                    dropped: dropped.clone(),
+                    dropped: d.clone(),
                     seed: seed_from_hex(seed_hex)?,
                 });
             }
         }
+        let mut audit_events = Vec::new();
+        for d in &dropped {
+            let uncovered: Vec<&String> = survivors
+                .iter()
+                .filter(|s| {
+                    !revealed
+                        .iter()
+                        .any(|r| &r.survivor == *s && &r.dropped == d)
+                })
+                .collect();
+            if uncovered.is_empty() {
+                continue;
+            }
+            if !self.reconstructable(d) {
+                let have = self.revealed_share_count(d);
+                self.audit.push(
+                    Json::obj()
+                        .set("event", "below_threshold")
+                        .set("dealer", d.as_str())
+                        .set("shares", have)
+                        .set("threshold", self.threshold)
+                        .set("policy", self.cfg.reveal_policy.as_str()),
+                );
+                return Err(FedError::Privacy(format!(
+                    "round {} below reveal threshold for '{d}': {have} \
+                     share(s) < t={} and {} pair(s) unrevealed (policy: {})",
+                    self.id,
+                    self.threshold,
+                    uncovered.len(),
+                    self.cfg.reveal_policy
+                )));
+            }
+            // reconstruct the dealer's round secret from t verified shares
+            let shares: Vec<shamir::Share> = self.revealed_shares[d]
+                .values()
+                .cloned()
+                .collect();
+            let secret = reconstruct_dealer_secret(
+                &shares,
+                self.threshold,
+                &self.pubkeys[d],
+                d,
+            )?;
+            for s in uncovered {
+                let their = keys::parse_pubkey_hex(&self.pubkeys[s])?;
+                let shared = keys::shared_key(&secret, &their);
+                revealed.push(RevealedSeed {
+                    survivor: s.clone(),
+                    dropped: d.clone(),
+                    seed: keys::pair_seed_from_shared(&shared, self.id, s, d),
+                });
+            }
+            audit_events.push(
+                Json::obj()
+                    .set("event", "share_reconstruction")
+                    .set("dealer", d.as_str())
+                    .set("shares", shares.len())
+                    .set("threshold", self.threshold),
+            );
+        }
+        self.audit.extend(audit_events);
+        let updates: Vec<MaskedUpdate> = self.updates.values().cloned().collect();
         let agg = TensorBuf::from_f32_vec(unmask_aggregate(
             &updates,
             &revealed,
@@ -432,6 +784,12 @@ impl SecAggRound {
         )?);
         self.aggregate = Some(agg.clone());
         Ok(agg)
+    }
+
+    /// The per-round audit log (reconstructions, threshold violations,
+    /// corrupted shares).
+    pub fn audit(&self) -> &[Json] {
+        &self.audit
     }
 
     pub fn total_weight(&self) -> f64 {
@@ -450,12 +808,17 @@ impl SecAggRound {
                 ),
             )
             .set("advertised", self.nonces.len())
+            .set("keyed", self.pubkeys.len())
+            .set("share_dealers", self.enc_shares.len())
+            .set("reveal_threshold", self.threshold)
+            .set("reveal_policy", self.cfg.reveal_policy.as_str())
             .set("committed", self.commits.len())
             .set("submitted", self.updates.len())
             .set(
                 "dropped",
                 Json::Arr(self.dropped().into_iter().map(Json::Str).collect()),
             )
+            .set("audit", Json::Arr(self.audit.clone()))
             .set(
                 "participation",
                 self.participation.clone().unwrap_or(Json::Null),
@@ -601,6 +964,7 @@ mod tests {
             frac_bits: 16,
             weighted,
             weight_scale: if weighted { 128.0 } else { 1.0 },
+            ..Default::default()
         };
         let mut round = SecAggRound::new(round_id, ns.clone(), cfg.clone()).unwrap();
 
@@ -817,6 +1181,302 @@ mod tests {
         // fewer than 2 participants
         assert!(SecAggRound::new(3, vec!["solo".into()], SecAggConfig::default())
             .is_err());
+    }
+
+    // ------------------------------------------------ threshold recovery
+
+    use crate::privacy::keys;
+    use crate::privacy::shamir;
+
+    /// Per-client round material for the DH-keyed board tests.
+    struct Client {
+        name: String,
+        keys: keys::RoundKeys,
+    }
+
+    fn dh_clients(k: usize, round_id: u64) -> Vec<Client> {
+        (0..k)
+            .map(|i| {
+                let name = format!("client-{i}");
+                let secret =
+                    keys::derive_round_secret(&[i as u8 + 1; 32], round_id, &name);
+                Client { name: name.clone(), keys: keys::keypair(&secret) }
+            })
+            .collect()
+    }
+
+    /// Drive the full DH + share flow on the board: keys, shares, masked
+    /// submits from survivors, then threshold recovery via share reveals
+    /// from `revealers` (no direct seed reveals at all).
+    fn dh_round(
+        round_id: u64,
+        k: usize,
+        drop_idx: &[usize],
+        threshold: usize,
+        revealers: &[usize],
+    ) -> (SecAggRound, Vec<Client>, Vec<Vec<f32>>) {
+        let clients = dh_clients(k, round_id);
+        let names: Vec<String> = clients.iter().map(|c| c.name.clone()).collect();
+        let cfg = SecAggConfig {
+            frac_bits: 16,
+            weighted: false,
+            weight_scale: 1.0,
+            reveal_threshold: threshold,
+            ..Default::default()
+        };
+        let mut round = SecAggRound::new(round_id, names.clone(), cfg).unwrap();
+        assert_eq!(round.threshold(), threshold);
+
+        // key agreement
+        for c in &clients {
+            round.post_key(&c.name, &keys::pubkey_hex(&c.keys.public)).unwrap();
+        }
+        assert!(round.all_keyed());
+
+        // share distribution: dealer i splits its raw secret for peers
+        let mut rng = Rng::new(round_id);
+        for (i, dealer) in clients.iter().enumerate() {
+            let peers: Vec<usize> = (0..k).filter(|j| *j != i).collect();
+            let xs: Vec<u8> = peers.iter().map(|&j| j as u8 + 1).collect();
+            let shares =
+                shamir::split_at(&dealer.keys.secret, threshold, &xs, &mut rng)
+                    .unwrap();
+            let mut enc = BTreeMap::new();
+            let mut commits = BTreeMap::new();
+            for (share, &j) in shares.iter().zip(peers.iter()) {
+                let shared = keys::shared_key(
+                    &dealer.keys.secret,
+                    &clients[j].keys.public,
+                );
+                let ct = keys::encrypt_share(
+                    &shared,
+                    round_id,
+                    &dealer.name,
+                    &names[j],
+                    &share.to_bytes(),
+                );
+                enc.insert(names[j].clone(), to_hex(&ct));
+                commits
+                    .insert(names[j].clone(), to_hex(&shamir::share_commitment(share)));
+            }
+            round.post_shares(&dealer.name, enc, commits).unwrap();
+        }
+
+        // masked submits from the survivors
+        let mut rngv = Rng::new(77);
+        let p = 203;
+        let vecs: Vec<Vec<f32>> = (0..k).map(|_| rngv.normal_vec(p)).collect();
+        for (i, me) in clients.iter().enumerate() {
+            if drop_idx.contains(&i) {
+                continue;
+            }
+            let seeds: Vec<(i64, [u8; 32])> = (0..k)
+                .filter(|j| *j != i)
+                .map(|j| {
+                    let shared =
+                        keys::shared_key(&me.keys.secret, &clients[j].keys.public);
+                    (
+                        crate::privacy::masking::pair_sign(&me.name, &names[j]),
+                        keys::pair_seed_from_shared(
+                            &shared, round_id, &me.name, &names[j],
+                        ),
+                    )
+                })
+                .collect();
+            let masked = crate::privacy::masking::mask_update_with_seeds(
+                &vecs[i], 1.0, &seeds, 16,
+            )
+            .unwrap();
+            round
+                .submit(&me.name, TensorBuf::from_f32_vec(masked), 1.0)
+                .unwrap();
+        }
+
+        // recovery: the chosen revealers decrypt + reveal their shares of
+        // every dropped dealer
+        for &j in revealers {
+            assert!(!drop_idx.contains(&j), "revealer {j} must be a survivor");
+            for &d in drop_idx {
+                let ct_hex = round.shares_for(&names[j])[&names[d]].clone();
+                let shared = keys::shared_key(
+                    &clients[j].keys.secret,
+                    &clients[d].keys.public,
+                );
+                let plain = keys::decrypt_share(
+                    &shared,
+                    round_id,
+                    &names[d],
+                    &names[j],
+                    &crate::privacy::from_hex(&ct_hex).unwrap(),
+                )
+                .unwrap();
+                round
+                    .reveal_share(&names[j], &names[d], &to_hex(&plain))
+                    .unwrap();
+            }
+        }
+        (round, clients, vecs)
+    }
+
+    #[test]
+    fn threshold_share_recovery_replaces_all_survivor_reveals() {
+        // 8 clients, 2 dropouts, t = 4: FOUR of the six survivors reveal
+        // shares, ZERO direct seed reveals — the round still aggregates,
+        // and the aggregate matches the clear survivor mean
+        let (mut round, _clients, vecs) = dh_round(41, 8, &[6, 7], 4, &[0, 2, 3, 5]);
+        assert_eq!(round.dropped().len(), 2);
+        assert!(round.missing_reveals().is_empty(), "threshold should cover");
+        let agg = round.try_aggregate().unwrap().to_vec();
+        let clear = clear_avg(
+            &(0..6).map(|i| vecs[i].clone()).collect::<Vec<_>>(),
+            &[1.0; 6],
+        );
+        let e = rel_err(&agg, &clear);
+        assert!(e < 1e-5, "rel err {e}");
+        // audit records the reconstructions
+        let events: Vec<&str> = round
+            .audit()
+            .iter()
+            .filter_map(|a| a.get("event").and_then(Json::as_str))
+            .collect();
+        assert_eq!(
+            events.iter().filter(|e| **e == "share_reconstruction").count(),
+            2
+        );
+    }
+
+    #[test]
+    fn below_threshold_blocks_and_audits() {
+        // only 3 of 6 survivors reveal shares with t = 4: unrecoverable
+        let (mut round, _c, _v) = dh_round(43, 8, &[6, 7], 4, &[0, 1, 2]);
+        assert!(!round.missing_reveals().is_empty());
+        let err = round.try_aggregate().unwrap_err().to_string();
+        assert!(err.contains("below reveal threshold"), "{err}");
+        assert!(err.contains("abort"), "policy must be named: {err}");
+        assert!(round
+            .audit()
+            .iter()
+            .any(|a| a.get("event").and_then(Json::as_str)
+                == Some("below_threshold")));
+        // status surfaces the audit trail
+        let st = round.status_json();
+        assert!(!st.get("audit").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(st.get("reveal_threshold").and_then(Json::as_usize), Some(4));
+    }
+
+    #[test]
+    fn corrupted_share_rejected_against_commitment() {
+        let (mut round, clients, _v) = dh_round(47, 5, &[4], 3, &[0, 1]);
+        // a third survivor reveals a CORRUPTED share: flip one byte of
+        // the true decrypted share
+        let names: Vec<String> = clients.iter().map(|c| c.name.clone()).collect();
+        let ct_hex = round.shares_for(&names[2])[&names[4]].clone();
+        let shared =
+            keys::shared_key(&clients[2].keys.secret, &clients[4].keys.public);
+        let mut plain = keys::decrypt_share(
+            &shared,
+            47,
+            &names[4],
+            &names[2],
+            &crate::privacy::from_hex(&ct_hex).unwrap(),
+        )
+        .unwrap();
+        plain[7] ^= 0x40;
+        let err = round
+            .reveal_share(&names[2], &names[4], &to_hex(&plain))
+            .unwrap_err();
+        assert!(err.to_string().contains("commitment"), "{err}");
+        // the corrupt share never entered the pool: still only 2 shares
+        assert_eq!(round.revealed_share_count(&names[4]), 2);
+        assert!(round
+            .audit()
+            .iter()
+            .any(|a| a.get("event").and_then(Json::as_str)
+                == Some("corrupt_share")));
+    }
+
+    #[test]
+    fn phase_violating_reveal_after_aggregate_rejected() {
+        // satellite: a reveal for an already-aggregated round must be
+        // rejected, and the cached aggregate must be immutable
+        let ns = names(3);
+        let mut round =
+            SecAggRound::new(11, ns.clone(), SecAggConfig::default()).unwrap();
+        for n in &ns {
+            round.advertise(n, "x").unwrap();
+        }
+        for me in &ns[..2] {
+            let peers: Vec<String> =
+                ns.iter().filter(|n| *n != me).cloned().collect();
+            let masked =
+                mask_update(&[1.0, 2.0], 1.0, me, &peers, KEY, 11, 16).unwrap();
+            round.submit(me, TensorBuf::from_f32_vec(masked), 1.0).unwrap();
+        }
+        for me in &ns[..2] {
+            let seeds: BTreeMap<String, String> = [(
+                ns[2].clone(),
+                to_hex(&pair_seed(KEY, 11, me, &ns[2])),
+            )]
+            .into();
+            round.reveal(me, &seeds).unwrap();
+        }
+        let agg = round.try_aggregate().unwrap();
+        let before = agg.to_vec();
+
+        // every phase transition is now rejected...
+        let late: BTreeMap<String, String> =
+            [(ns[2].clone(), to_hex(&pair_seed(KEY, 11, &ns[0], &ns[2])))].into();
+        assert!(round.reveal(&ns[0], &late).is_err());
+        assert!(round.advertise(&ns[0], "x").is_err());
+        assert!(round
+            .submit(&ns[0], TensorBuf::from_f32_vec(vec![0.0, 0.0]), 1.0)
+            .is_err());
+        assert!(round.commit(&ns[0], BTreeMap::new()).is_err());
+        assert!(round.post_key(&ns[0], "00").is_err());
+        assert!(round
+            .post_shares(&ns[0], BTreeMap::new(), BTreeMap::new())
+            .is_err());
+        assert!(round.reveal_share(&ns[0], &ns[2], "0101").is_err());
+
+        // ...and the double-aggregate path returns the SAME cached buffer
+        let again = round.try_aggregate().unwrap();
+        assert_eq!(again.to_vec(), before);
+        assert_eq!(round.phase(), Phase::Done);
+    }
+
+    #[test]
+    fn key_and_share_phase_validation() {
+        let ns = names(3);
+        let clients = dh_clients(3, 1);
+        let mut round =
+            SecAggRound::new(1, ns.clone(), SecAggConfig::default()).unwrap();
+        // malformed / degenerate keys rejected
+        assert!(round.post_key(&ns[0], "zz").is_err());
+        assert!(round.post_key("stranger", &keys::pubkey_hex(&clients[0].keys.public)).is_err());
+        round.post_key(&ns[0], &keys::pubkey_hex(&clients[0].keys.public)).unwrap();
+        // idempotent; equivocation rejected
+        round.post_key(&ns[0], &keys::pubkey_hex(&clients[0].keys.public)).unwrap();
+        assert!(round.post_key(&ns[0], &keys::pubkey_hex(&clients[1].keys.public)).is_err());
+        // shares before key: rejected
+        assert!(round
+            .post_shares(&ns[1], BTreeMap::new(), BTreeMap::new())
+            .is_err());
+        // self-share rejected
+        round.post_key(&ns[1], &keys::pubkey_hex(&clients[1].keys.public)).unwrap();
+        let own: BTreeMap<String, String> = [(ns[1].clone(), "00".into())].into();
+        assert!(round.post_shares(&ns[1], own, BTreeMap::new()).is_err());
+        // commitment without a matching share rejected
+        let commits: BTreeMap<String, String> = [(ns[0].clone(), "ab".into())].into();
+        assert!(round
+            .post_shares(&ns[1], BTreeMap::new(), commits)
+            .is_err());
+        // share without a commitment rejected (an uncommitted share
+        // could later be "revealed" as arbitrary bytes)
+        let bare: BTreeMap<String, String> = [(ns[0].clone(), "0102".into())].into();
+        let err = round
+            .post_shares(&ns[1], bare, BTreeMap::new())
+            .unwrap_err();
+        assert!(err.to_string().contains("without a commitment"), "{err}");
     }
 
     #[test]

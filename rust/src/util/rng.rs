@@ -9,6 +9,11 @@
 //! `Rng` is a splitmix64-seeded xorshift generator used everywhere the
 //! coordinator needs reproducible randomness (data synthesis, shuffles,
 //! fault injection).  It is deliberately not cryptographic.
+//!
+//! `OsRng` reads `/dev/urandom` and is the entropy source for privacy
+//! material (DP noise, DH secrets, Shamir coefficients) in production;
+//! both generators implement [`NoiseSource`] so privacy code can keep the
+//! deterministic path for tests behind the same interface.
 
 /// The splitmix64 mixing function (public-domain, Vigna).
 #[inline]
@@ -187,6 +192,162 @@ impl Rng {
     }
 }
 
+/// Common randomness interface for privacy material: implemented by the
+/// deterministic testbed [`Rng`] (reproducible tests) and by [`OsRng`]
+/// (the production default — DP noise or a mask secret derived from a
+/// replayable stream would let the coordinator subtract it back out).
+pub trait NoiseSource {
+    fn next_u64(&mut self) -> u64;
+
+    /// Fill `out` with random bytes (little-endian `next_u64` words).
+    fn fill_bytes(&mut self, out: &mut [u8]) {
+        for chunk in out.chunks_mut(8) {
+            let w = self.next_u64().to_le_bytes();
+            chunk.copy_from_slice(&w[..chunk.len()]);
+        }
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal (Marsaglia polar, no pair cache — callers that
+    /// need the cached-pair stream use [`Rng::normal`] directly).
+    fn normal_f64(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform_f64() - 1.0;
+            let v = 2.0 * self.uniform_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * ((-2.0 * s.ln() / s).sqrt());
+            }
+        }
+    }
+}
+
+impl NoiseSource for Rng {
+    fn next_u64(&mut self) -> u64 {
+        Rng::next_u64(self)
+    }
+
+    fn normal_f64(&mut self) -> f64 {
+        // keep the cached-pair stream: `&mut Rng` behaves identically
+        // through the trait and through the inherent method
+        Rng::normal(self)
+    }
+}
+
+/// OS CSPRNG: buffered reads from `/dev/urandom` (no dependencies).  Used
+/// by default for privacy material; construction fails on platforms
+/// without the device, letting callers fall back explicitly.
+pub struct OsRng {
+    file: std::fs::File,
+    buf: [u8; 256],
+    /// bytes of `buf` already handed out
+    pos: usize,
+}
+
+impl OsRng {
+    pub fn new() -> std::io::Result<OsRng> {
+        Ok(OsRng {
+            file: std::fs::File::open("/dev/urandom")?,
+            buf: [0u8; 256],
+            pos: 256,
+        })
+    }
+
+    fn refill(&mut self) {
+        use std::io::Read;
+        let mut filled = 0;
+        while filled < self.buf.len() {
+            match self.file.read(&mut self.buf[filled..]) {
+                Ok(n) if n > 0 => filled += n,
+                // a signal mid-read is transient — retry, never degrade
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                other => {
+                    // /dev/urandom never EOFs or errors in practice; if it
+                    // somehow does, mix counter entropy rather than
+                    // looping forever — loudly, because these bytes feed
+                    // cryptographic material
+                    log::warn!(target: "util::rng",
+                        "/dev/urandom read degraded ({other:?}): splicing \
+                         time/pid fallback entropy");
+                    let w = splitmix64(
+                        entropy_fallback_seed() ^ filled as u64,
+                    )
+                    .to_le_bytes();
+                    self.buf[filled..(filled + 8).min(self.buf.len())]
+                        .copy_from_slice(&w[..8.min(self.buf.len() - filled)]);
+                    filled += 8.min(self.buf.len() - filled);
+                }
+            }
+        }
+        self.pos = 0;
+    }
+}
+
+impl NoiseSource for OsRng {
+    fn next_u64(&mut self) -> u64 {
+        if self.pos + 8 > self.buf.len() {
+            self.refill();
+        }
+        let w = u64::from_le_bytes(
+            self.buf[self.pos..self.pos + 8].try_into().unwrap(),
+        );
+        self.pos += 8;
+        w
+    }
+
+    fn fill_bytes(&mut self, out: &mut [u8]) {
+        for b in out.iter_mut() {
+            if self.pos >= self.buf.len() {
+                self.refill();
+            }
+            *b = self.buf[self.pos];
+            self.pos += 1;
+        }
+    }
+}
+
+fn entropy_fallback_seed() -> u64 {
+    std::process::id() as u64
+        ^ std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+}
+
+/// One 64-bit seed from the OS CSPRNG, with a time/pid fallback when the
+/// device is unavailable — for session tags and nonces that want real
+/// entropy but must not fail construction.
+pub fn entropy_seed() -> u64 {
+    match OsRng::new() {
+        Ok(mut r) => NoiseSource::next_u64(&mut r),
+        Err(_) => splitmix64(entropy_fallback_seed()),
+    }
+}
+
+/// Fill `out` from the OS CSPRNG; falls back to mixed time/pid entropy
+/// (returns false) when `/dev/urandom` is unavailable.
+pub fn entropy_bytes(out: &mut [u8]) -> bool {
+    match OsRng::new() {
+        Ok(mut r) => {
+            r.fill_bytes(out);
+            true
+        }
+        Err(_) => {
+            let mut s = splitmix64(entropy_fallback_seed());
+            for chunk in out.chunks_mut(8) {
+                s = splitmix64(s);
+                let w = s.to_le_bytes();
+                chunk.copy_from_slice(&w[..chunk.len()]);
+            }
+            false
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,6 +465,42 @@ mod tests {
         let even = avg_max(100.0, &mut r);
         assert!(sparse > 0.5, "sparse {sparse}");
         assert!(even < 0.2, "even {even}");
+    }
+
+    #[test]
+    fn os_rng_produces_entropy() {
+        let Ok(mut r) = OsRng::new() else { return }; // exotic platform
+        let a = NoiseSource::next_u64(&mut r);
+        let b = NoiseSource::next_u64(&mut r);
+        assert_ne!(a, b); // 2^-64 flake odds
+        let mut buf = [0u8; 300]; // crosses the refill boundary
+        r.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&x| x != 0));
+        // normals through the trait are sane
+        let n: f64 = (0..100).map(|_| r.normal_f64()).sum::<f64>() / 100.0;
+        assert!(n.abs() < 1.0, "mean {n}");
+    }
+
+    #[test]
+    fn noise_source_trait_matches_rng_stream() {
+        // `&mut Rng` used through the trait must produce the same normal
+        // stream as the inherent method (the DP determinism tests rely
+        // on seed-reproducibility through `dyn NoiseSource`)
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        let dynb: &mut dyn NoiseSource = &mut b;
+        for _ in 0..100 {
+            assert_eq!(a.normal(), dynb.normal_f64());
+        }
+    }
+
+    #[test]
+    fn entropy_seed_varies() {
+        // not a randomness test — just that consecutive calls differ
+        assert_ne!(entropy_seed(), entropy_seed());
+        let mut x = [0u8; 16];
+        entropy_bytes(&mut x);
+        assert!(x.iter().any(|&b| b != 0));
     }
 
     #[test]

@@ -33,13 +33,13 @@ use feddart::fact::FactServer;
 use feddart::json::Json;
 use feddart::privacy::dp::DpAccountant;
 use feddart::privacy::{
-    masking, round_id_from_hex, to_hex, PrivacyConfig, PrivacyMode,
+    keys, masking, round_id_from_hex, shamir, to_hex, PrivacyConfig,
+    PrivacyMode,
 };
-use feddart::util::rng::golden_f32;
+use feddart::util::rng::{golden_f32, Rng};
 use feddart::util::tensorbuf::TensorBuf;
 
 const PARAMS: usize = 32;
-const COHORT_KEY: &[u8] = b"participation-cohort-key";
 
 /// Minimal engine-free model with a uniform (secure-sum-capable) rule.
 struct TestModel;
@@ -329,6 +329,64 @@ fn secagg_cohort_recovers_straggler_and_dropout_masks() {
 
     let reg = TaskRegistry::new();
     reg.register("fact_init", |_| Ok(Json::Null));
+    // per-pair key agreement helpers (deterministic client secrets)
+    fn round_keys_of(device: &str, round_id: u64) -> keys::RoundKeys {
+        keys::keypair(&keys::derive_round_secret(
+            &[device_index(device) as u8 + 1; 32],
+            round_id,
+            device,
+        ))
+    }
+    fn keys_map_of(p: &Json) -> std::collections::BTreeMap<String, String> {
+        p.need("keys")
+            .unwrap()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+            .collect()
+    }
+    reg.register("fact_keys", |p| {
+        let device =
+            p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id = round_id_from_hex(
+            p.need("round_id")?.as_str().unwrap_or_default(),
+        )?;
+        let kp = round_keys_of(&device, round_id);
+        Ok(Json::obj().set("pubkey", keys::pubkey_hex(&kp.public)))
+    });
+    reg.register("fact_shares", |p| {
+        let device =
+            p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id = round_id_from_hex(
+            p.need("round_id")?.as_str().unwrap_or_default(),
+        )?;
+        let threshold = p.need("threshold")?.as_usize().unwrap();
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let peers: Vec<(String, u8)> = keys_map
+            .keys()
+            .enumerate()
+            .filter(|(_, n)| *n != &device)
+            .map(|(i, n)| (n.clone(), i as u8 + 1))
+            .collect();
+        let xs: Vec<u8> = peers.iter().map(|(_, x)| *x).collect();
+        let mut rng = Rng::new(round_id ^ device_index(&device) as u64);
+        let split = shamir::split_at(&kp.secret, threshold, &xs, &mut rng)?;
+        let mut shares = Json::obj();
+        let mut commits = Json::obj();
+        for (share, (peer, _)) in split.iter().zip(peers.iter()) {
+            let their = keys::parse_pubkey_hex(&keys_map[peer])?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            let ct = keys::encrypt_share(
+                &sk, round_id, &device, peer, &share.to_bytes(),
+            );
+            shares = shares.set(peer, to_hex(&ct));
+            commits =
+                commits.set(peer, to_hex(&shamir::share_commitment(share)));
+        }
+        Ok(Json::obj().set("shares", shares).set("commits", commits))
+    });
     {
         let straggler = straggler.clone();
         let dropout = dropout.clone();
@@ -363,18 +421,28 @@ fn secagg_cohort_recovers_straggler_and_dropout_masks() {
                     "'{device}' dispatched outside the cohort"
                 )));
             }
-            let peers: Vec<String> = participants
-                .into_iter()
-                .filter(|c| *c != device)
+            let keys_map = keys_map_of(pj);
+            let kp = round_keys_of(&device, round_id);
+            let seeds: Vec<(i64, [u8; 32])> = participants
+                .iter()
+                .filter(|c| *c != &device)
+                .map(|peer| {
+                    let their =
+                        keys::parse_pubkey_hex(&keys_map[peer]).unwrap();
+                    let sk = keys::shared_key(&kp.secret, &their);
+                    (
+                        masking::pair_sign(&device, peer),
+                        keys::pair_seed_from_shared(
+                            &sk, round_id, &device, peer,
+                        ),
+                    )
+                })
                 .collect();
             let update = vec![bump(&device); PARAMS];
-            let masked = masking::mask_update(
+            let masked = masking::mask_update_with_seeds(
                 &update,
                 1.0, // uniform rule -> weighted=false
-                &device,
-                &peers,
-                COHORT_KEY,
-                round_id,
+                &seeds,
                 cfg.frac_bits,
             )?;
             Ok(Json::obj()
@@ -392,15 +460,22 @@ fn secagg_cohort_recovers_straggler_and_dropout_masks() {
         let round_id = round_id_from_hex(
             p.need("round_id")?.as_str().unwrap_or_default(),
         )?;
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
         let mut seeds = Json::obj();
         for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
             let Some(name) = d.as_str() else { continue };
             if name == device {
                 continue;
             }
+            let Some(pub_hex) = keys_map.get(name) else { continue };
+            let their = keys::parse_pubkey_hex(pub_hex)?;
+            let sk = keys::shared_key(&kp.secret, &their);
             seeds = seeds.set(
                 name,
-                to_hex(&masking::pair_seed(COHORT_KEY, round_id, &device, name)),
+                to_hex(&keys::pair_seed_from_shared(
+                    &sk, round_id, &device, name,
+                )),
             );
         }
         Ok(Json::obj().set("seeds", seeds))

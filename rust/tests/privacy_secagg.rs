@@ -1,21 +1,25 @@
 //! Privacy subsystem integration: the FACT round pipeline under secure
-//! aggregation with mid-round client dropouts.
+//! aggregation with mid-round client dropouts and threshold recovery.
 //!
-//! Acceptance: a secagg round with 8 clients and 2 mid-round dropouts
-//! produces an aggregate bitwise-close (≤ 1e-5 relative) to the
-//! clear-mode aggregate of the survivors.
+//! Acceptance: an 8-client secagg round with 2 mid-round dropouts
+//! recovers via any 4-of-6 survivor share subset — the masked aggregate
+//! stays ≤ 1e-5 relative of the clear survivor aggregate with only 4 of
+//! the 6 survivors answering the recovery task — and a round left below
+//! the reveal threshold follows the configured abort/proceed policy with
+//! an audit record.
 //!
 //! The tests run engine-free: a custom task registry plays the client
-//! side (computing deterministic local updates and applying the privacy
-//! transform with the same `privacy::masking` primitives the real
-//! `FactClientRuntime` uses), so they exercise the full
-//! server-side path — privacy negotiation in the learn task, dropout
-//! detection, the `fact_reveal` recovery task, and the lattice unmasking
-//! — without needing compiled artifacts.
+//! side (deterministic local updates, per-pair DH key agreement,
+//! encrypted Shamir share dealing, and the privacy transform — all with
+//! the same `privacy::{keys, shamir, masking}` primitives the real
+//! `FactClientRuntime` uses), so they exercise the full server-side path
+//! — key/share setup phases, dropout detection, threshold
+//! reconstruction, the reveal policy — without compiled artifacts.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+use feddart::coordinator::workflow::WorkflowManager;
 use feddart::dart::TaskRegistry;
 use feddart::error::FedError;
 use feddart::fact::aggregation::Aggregation;
@@ -23,15 +27,14 @@ use feddart::fact::model::FactModel;
 use feddart::fact::stopping::FixedRoundFl;
 use feddart::fact::store::{FsObjectStore, ModelStore};
 use feddart::fact::FactServer;
-use feddart::coordinator::workflow::WorkflowManager;
 use feddart::json::Json;
 use feddart::privacy::{
-    dp, masking, round_id_from_hex, to_hex, PrivacyConfig, PrivacyMode,
+    dp, from_hex, keys, masking, round_id_from_hex, shamir, to_hex,
+    PrivacyConfig, PrivacyMode, RevealPolicy,
 };
 use feddart::util::rng::{golden_f32, Rng};
 use feddart::util::tensorbuf::TensorBuf;
 
-const COHORT_KEY: &[u8] = b"integration-cohort-key";
 const PARAMS: usize = 512;
 
 /// Minimal engine-free model: fixed params, weighted FedAvg.
@@ -60,16 +63,89 @@ fn samples_of(idx: usize) -> f32 {
     100.0 + 10.0 * idx as f32
 }
 
-/// Client-side registry: deterministic local updates, the round's privacy
-/// transform, and deterministic mid-round dropouts.  Captures every
-/// survivor's *clear* (post-DP, pre-mask) update so the test can compute
-/// the reference aggregate.
+/// Deterministic per-device client secret (the runtime draws these from
+/// the OS CSPRNG; the test pins them for reproducibility).
+fn client_secret(idx: usize) -> [u8; 32] {
+    [idx as u8 + 1; 32]
+}
+
+fn round_keys_of(device: &str, round_id: u64) -> keys::RoundKeys {
+    keys::keypair(&keys::derive_round_secret(
+        &client_secret(device_index(device)),
+        round_id,
+        device,
+    ))
+}
+
+fn keys_map_of(p: &Json) -> BTreeMap<String, String> {
+    p.need("keys")
+        .unwrap()
+        .as_obj()
+        .unwrap()
+        .iter()
+        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+        .collect()
+}
+
+/// What the client registry does when the recovery task reaches it.
+#[derive(Clone)]
+struct RevealBehaviour {
+    /// device indices that ANSWER the fact_reveal task (everyone else
+    /// errors, simulating unreachable survivors); None = all answer
+    responders: Option<&'static [usize]>,
+}
+
+/// Client-side registry: per-pair DH keys, encrypted Shamir shares,
+/// deterministic local updates with the round's privacy transform, and
+/// deterministic mid-round dropouts.  Captures every survivor's *clear*
+/// (post-DP, pre-mask) update so the test can compute the reference
+/// aggregate.
 fn registry_with_privacy_clients(
     dropped_idx: &'static [usize],
+    reveal: RevealBehaviour,
     captured: Arc<Mutex<BTreeMap<String, (Vec<f32>, f32)>>>,
 ) -> TaskRegistry {
     let registry = TaskRegistry::new();
     registry.register("fact_init", |_| Ok(Json::Null));
+
+    registry.register("fact_keys", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id = round_id_from_hex(
+            p.need("round_id")?.as_str().unwrap_or_default(),
+        )?;
+        let kp = round_keys_of(&device, round_id);
+        Ok(Json::obj().set("pubkey", keys::pubkey_hex(&kp.public)))
+    });
+
+    registry.register("fact_shares", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id = round_id_from_hex(
+            p.need("round_id")?.as_str().unwrap_or_default(),
+        )?;
+        let threshold = p.need("threshold")?.as_usize().unwrap();
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let peers: Vec<(String, u8)> = keys_map
+            .keys()
+            .enumerate()
+            .filter(|(_, n)| *n != &device)
+            .map(|(i, n)| (n.clone(), i as u8 + 1))
+            .collect();
+        let xs: Vec<u8> = peers.iter().map(|(_, x)| *x).collect();
+        let mut rng = Rng::new(round_id ^ device_index(&device) as u64);
+        let split = shamir::split_at(&kp.secret, threshold, &xs, &mut rng)?;
+        let mut shares = Json::obj();
+        let mut commits = Json::obj();
+        for (share, (peer, _)) in split.iter().zip(peers.iter()) {
+            let their = keys::parse_pubkey_hex(&keys_map[peer])?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            let ct =
+                keys::encrypt_share(&sk, round_id, &device, peer, &share.to_bytes());
+            shares = shares.set(peer, to_hex(&ct));
+            commits = commits.set(peer, to_hex(&shamir::share_commitment(share)));
+        }
+        Ok(Json::obj().set("shares", shares).set("commits", commits))
+    });
 
     registry.register("fact_learn", move |p| {
         let device = p
@@ -80,8 +156,8 @@ fn registry_with_privacy_clients(
         let idx = device_index(&device);
         if dropped_idx.contains(&idx) {
             // the client computed nothing visible: it crashed mid-round,
-            // after advertising (it is in the participant set) but before
-            // uploading its masked update
+            // after key agreement + share dealing (it is in the masking
+            // participant set) but before uploading its masked update
             return Err(FedError::Task(format!("'{device}' crashed mid-round")));
         }
         let global = TensorBuf::from_json(p.need("params")?)
@@ -114,6 +190,15 @@ fn registry_with_privacy_clients(
             .unwrap()
             .insert(device.clone(), (params.clone(), n_samples));
         if cfg.mode.has_secagg() {
+            let keys_map: BTreeMap<String, String> = pj
+                .need("keys")?
+                .as_obj()
+                .unwrap()
+                .iter()
+                .filter_map(|(k, v)| {
+                    v.as_str().map(|s| (k.clone(), s.to_string()))
+                })
+                .collect();
             let participants: Vec<String> = pj
                 .need("participants")?
                 .as_arr()
@@ -121,21 +206,35 @@ fn registry_with_privacy_clients(
                 .iter()
                 .filter_map(|j| j.as_str().map(String::from))
                 .collect();
-            let peers: Vec<String> =
-                participants.into_iter().filter(|c| *c != device).collect();
+            let kp = round_keys_of(&device, round_id);
+            assert_eq!(
+                keys_map[&device],
+                keys::pubkey_hex(&kp.public),
+                "coordinator echoed a different key"
+            );
+            let seeds: Vec<(i64, [u8; 32])> = participants
+                .iter()
+                .filter(|c| *c != &device)
+                .map(|peer| {
+                    let their =
+                        keys::parse_pubkey_hex(&keys_map[peer]).unwrap();
+                    let sk = keys::shared_key(&kp.secret, &their);
+                    (
+                        masking::pair_sign(&device, peer),
+                        keys::pair_seed_from_shared(&sk, round_id, &device, peer),
+                    )
+                })
+                .collect();
             let weighted = pj.get("weighted").and_then(Json::as_bool).unwrap_or(true);
             let weight = if weighted {
                 n_samples as f64 / cfg.weight_scale as f64
             } else {
                 1.0
             };
-            params = masking::mask_update(
+            params = masking::mask_update_with_seeds(
                 &params,
                 weight,
-                &device,
-                &peers,
-                COHORT_KEY,
-                round_id,
+                &seeds,
                 cfg.frac_bits,
             )?;
         }
@@ -145,24 +244,53 @@ fn registry_with_privacy_clients(
             .set("loss", 0.5))
     });
 
-    registry.register("fact_reveal", |p| {
+    registry.register("fact_reveal", move |p| {
         let device = p
             .get("_device")
             .and_then(Json::as_str)
             .ok_or_else(|| FedError::Task("missing _device".into()))?
             .to_string();
+        let idx = device_index(&device);
+        if let Some(responders) = reveal.responders {
+            if !responders.contains(&idx) {
+                return Err(FedError::Task(format!(
+                    "'{device}' unreachable during recovery"
+                )));
+            }
+        }
         let round_id = round_id_from_hex(
             p.need("round_id")?.as_str().unwrap_or_default(),
         )?;
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
         let mut seeds = Json::obj();
+        let mut shares_out = Json::obj();
         for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
             let Some(name) = d.as_str() else { continue };
+            if name == device {
+                continue;
+            }
+            let Some(pub_hex) = keys_map.get(name) else { continue };
+            let their = keys::parse_pubkey_hex(pub_hex)?;
+            let sk = keys::shared_key(&kp.secret, &their);
             seeds = seeds.set(
                 name,
-                to_hex(&masking::pair_seed(COHORT_KEY, round_id, &device, name)),
+                to_hex(&keys::pair_seed_from_shared(&sk, round_id, &device, name)),
             );
+            if let Some(ct_hex) =
+                p.get("shares").and_then(|s| s.get(name)).and_then(Json::as_str)
+            {
+                let plain = keys::decrypt_share(
+                    &sk,
+                    round_id,
+                    name,
+                    &device,
+                    &from_hex(ct_hex)?,
+                )?;
+                shares_out = shares_out.set(name, to_hex(&plain));
+            }
         }
-        Ok(Json::obj().set("seeds", seeds))
+        Ok(Json::obj().set("seeds", seeds).set("shares", shares_out))
     });
     registry
 }
@@ -195,21 +323,30 @@ fn rel_err(a: &[f32], b: &[f32]) -> f64 {
     num / den.max(1e-12)
 }
 
-fn run_private_session(
+fn private_server(
     mode: PrivacyMode,
     dropped: &'static [usize],
+    reveal: RevealBehaviour,
+    privacy_overrides: impl FnOnce(PrivacyConfig) -> PrivacyConfig,
+    clients: usize,
     rounds: usize,
-) -> (FactServer, Arc<Mutex<BTreeMap<String, (Vec<f32>, f32)>>>) {
+) -> (
+    feddart::Result<()>,
+    FactServer,
+    Arc<Mutex<BTreeMap<String, (Vec<f32>, f32)>>>,
+) {
     let captured = Arc::new(Mutex::new(BTreeMap::new()));
-    let registry = registry_with_privacy_clients(dropped, Arc::clone(&captured));
-    let wm = WorkflowManager::test_mode(8, registry, 4);
-    let mut server = FactServer::new(wm).with_privacy(PrivacyConfig {
+    let registry =
+        registry_with_privacy_clients(dropped, reveal, Arc::clone(&captured));
+    let wm = WorkflowManager::test_mode(clients, registry, 4);
+    let cfg = privacy_overrides(PrivacyConfig {
         mode,
         clip_norm: 4.0,
         noise_multiplier: 0.05,
         weight_scale: 128.0,
         ..PrivacyConfig::default()
     });
+    let mut server = FactServer::new(wm).with_privacy(cfg);
     server
         .initialization_by_model(
             Arc::new(TestModel),
@@ -217,7 +354,24 @@ fn run_private_session(
             3,
         )
         .unwrap();
-    server.learn().unwrap();
+    let out = server.learn();
+    (out, server, captured)
+}
+
+fn run_private_session(
+    mode: PrivacyMode,
+    dropped: &'static [usize],
+    rounds: usize,
+) -> (FactServer, Arc<Mutex<BTreeMap<String, (Vec<f32>, f32)>>>) {
+    let (out, server, captured) = private_server(
+        mode,
+        dropped,
+        RevealBehaviour { responders: None },
+        |c| c,
+        8,
+        rounds,
+    );
+    out.unwrap();
     (server, captured)
 }
 
@@ -229,6 +383,12 @@ fn secagg_8_clients_2_dropouts_matches_clear_survivor_aggregate() {
     let hist = server.history();
     assert_eq!(hist.len(), 1);
     assert_eq!(hist[0].n_clients, 6);
+    // the secagg audit rides on the round record
+    let audit = hist[0].secagg.as_ref().unwrap();
+    assert_eq!(audit.participants, 8);
+    assert_eq!(audit.threshold, 4); // auto: (8+1)/2
+    assert_eq!(audit.dropped.len(), 2);
+    assert!(audit.unrecovered.is_empty());
 
     let captured = captured.lock().unwrap();
     assert_eq!(captured.len(), 6);
@@ -244,10 +404,141 @@ fn secagg_8_clients_2_dropouts_matches_clear_survivor_aggregate() {
     assert!(server.latest_updates().is_empty());
 }
 
+/// Acceptance: the same 8-client / 2-dropout round recovers when only
+/// FOUR of the six survivors answer the recovery task — any 4-of-6
+/// subset reconstructs both dropped clients' mask secrets, covering the
+/// non-responsive survivors' pairs too.
+#[test]
+fn threshold_recovery_any_4_of_6_survivor_subset() {
+    for responders in [
+        &[0usize, 1, 2, 3] as &'static [usize],
+        &[2, 3, 4, 5],
+        &[0, 2, 3, 5],
+    ] {
+        let (out, server, captured) = private_server(
+            PrivacyMode::SecAgg,
+            &[6, 7],
+            RevealBehaviour { responders: Some(responders) },
+            |c| c,
+            8,
+            1,
+        );
+        out.unwrap();
+        let hist = server.history();
+        let audit = hist[0].secagg.as_ref().unwrap();
+        assert_eq!(audit.threshold, 4);
+        assert_eq!(audit.reconstructed.len(), 2, "subset {responders:?}");
+        assert_eq!(audit.outcome, "recovered");
+        let captured = captured.lock().unwrap();
+        let expect = reference_aggregate(&captured);
+        let e = rel_err(&server.container().clusters[0].params, &expect);
+        assert!(e <= 1e-5, "subset {responders:?}: rel err {e}");
+    }
+}
+
+/// Below the threshold with the default abort policy, the session fails
+/// loudly and names the policy.
+#[test]
+fn below_threshold_abort_policy_fails_the_session() {
+    // 3 responders < t=4: both dropped clients stay unrecoverable
+    let (out, server, _captured) = private_server(
+        PrivacyMode::SecAgg,
+        &[6, 7],
+        RevealBehaviour { responders: Some(&[0, 1, 2]) },
+        |c| c,
+        8,
+        1,
+    );
+    let err = out.unwrap_err().to_string();
+    assert!(err.contains("below reveal threshold"), "{err}");
+    assert!(err.contains("abort"), "{err}");
+    // the failed round was never applied
+    let init = TestModel.init_params(3).unwrap();
+    assert_eq!(server.container().clusters[0].params, init);
+}
+
+/// Below the threshold with the proceed policy, the round is voided
+/// (parameters unchanged), audited, and training continues.
+#[test]
+fn below_threshold_proceed_policy_voids_the_round() {
+    let (out, server, _captured) = private_server(
+        PrivacyMode::SecAgg,
+        &[6, 7],
+        RevealBehaviour { responders: Some(&[0, 1, 2]) },
+        |c| PrivacyConfig { reveal_policy: RevealPolicy::Proceed, ..c },
+        8,
+        2,
+    );
+    out.unwrap(); // the session survives
+    let hist = server.history();
+    assert_eq!(hist.len(), 2);
+    for r in hist {
+        let audit = r.secagg.as_ref().unwrap();
+        assert_eq!(audit.outcome, "skipped");
+        assert_eq!(audit.unrecovered.len(), 2);
+        assert_eq!(audit.policy, RevealPolicy::Proceed);
+    }
+    // voided rounds leave the global parameters untouched
+    let init = TestModel.init_params(3).unwrap();
+    assert_eq!(server.container().clusters[0].params, init);
+    assert_eq!(
+        server.metrics().counter("fact.secagg.rounds_voided").get(),
+        2
+    );
+}
+
+/// Regression: a 2-client secagg round must still work — share dealing is
+/// skipped (one holder per dealer can never meet t >= 2) and recovery
+/// falls back to direct reveals, the pre-threshold behavior.
+#[test]
+fn two_client_secagg_round_recovers_via_direct_reveal() {
+    // no dropouts: plain 2-party masked round
+    let (out, server, captured) = private_server(
+        PrivacyMode::SecAgg,
+        &[],
+        RevealBehaviour { responders: None },
+        |c| c,
+        2,
+        1,
+    );
+    out.unwrap();
+    {
+        let captured = captured.lock().unwrap();
+        assert_eq!(captured.len(), 2);
+        let expect = reference_aggregate(&captured);
+        let e = rel_err(&server.container().clusters[0].params, &expect);
+        assert!(e <= 1e-5, "rel err {e}");
+    }
+
+    // one dropout: the lone survivor's direct reveal recovers the round
+    let (out, server, captured) = private_server(
+        PrivacyMode::SecAgg,
+        &[1],
+        RevealBehaviour { responders: None },
+        |c| c,
+        2,
+        1,
+    );
+    out.unwrap();
+    let hist = server.history();
+    assert_eq!(hist[0].n_clients, 1);
+    let audit = hist[0].secagg.as_ref().unwrap();
+    assert_eq!(audit.dropped.len(), 1);
+    assert!(audit.reconstructed.is_empty(), "no shares exist at n=2");
+    assert_eq!(audit.direct_reveals, 1);
+    let captured = captured.lock().unwrap();
+    let expect = reference_aggregate(&captured);
+    let e = rel_err(&server.container().clusters[0].params, &expect);
+    assert!(e <= 1e-5, "rel err {e}");
+}
+
 #[test]
 fn secagg_without_dropouts_matches_clear() {
     let (server, captured) = run_private_session(PrivacyMode::SecAgg, &[], 1);
     assert_eq!(server.history()[0].n_clients, 8);
+    let audit = server.history()[0].secagg.as_ref().unwrap();
+    assert_eq!(audit.outcome, "ok");
+    assert!(audit.dropped.is_empty());
     let captured = captured.lock().unwrap();
     let expect = reference_aggregate(&captured);
     let e = rel_err(&server.container().clusters[0].params, &expect);
@@ -301,7 +592,11 @@ fn dp_only_mode_steps_accountant_and_persists_with_snapshots() {
 
     // a fresh server restoring the snapshot adopts the ε ledger
     let captured = Arc::new(Mutex::new(BTreeMap::new()));
-    let registry = registry_with_privacy_clients(&[], captured);
+    let registry = registry_with_privacy_clients(
+        &[],
+        RevealBehaviour { responders: None },
+        captured,
+    );
     let wm = WorkflowManager::test_mode(8, registry, 4);
     let mut resumed = FactServer::new(wm)
         .with_privacy(PrivacyConfig::with_mode(PrivacyMode::Dp));
@@ -331,7 +626,11 @@ fn secagg_rejects_order_statistic_aggregation() {
         }
     }
     let captured = Arc::new(Mutex::new(BTreeMap::new()));
-    let registry = registry_with_privacy_clients(&[], captured);
+    let registry = registry_with_privacy_clients(
+        &[],
+        RevealBehaviour { responders: None },
+        captured,
+    );
     let wm = WorkflowManager::test_mode(4, registry, 2);
     let mut server = FactServer::new(wm)
         .with_privacy(PrivacyConfig::with_mode(PrivacyMode::SecAgg));
