@@ -8,11 +8,22 @@
 //! ```bash
 //! make artifacts && cargo run --release --example fault_tolerance
 //! ```
+//!
+//! Pass a directory as the first argument to also exercise coordinator
+//! fault tolerance: every round transition is appended to a WAL-backed
+//! round store there, and a re-run against the same directory replays
+//! finished rounds and resumes whatever a kill left in flight
+//! (docs/OPERATIONS.md walks through a crash-mid-round session):
+//!
+//! ```bash
+//! cargo run --release --example fault_tolerance -- /tmp/ft-wal
+//! # kill it mid-run (ctrl-c), then run the same command again
+//! ```
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use feddart::coordinator::WorkflowManager;
+use feddart::coordinator::{RoundStore, WalRoundStore, WorkflowManager};
 use feddart::dart::faults::{FaultInjector, FaultProfile};
 use feddart::dart::testmode::SimClient;
 use feddart::dart::TaskRegistry;
@@ -60,12 +71,36 @@ fn main() -> feddart::Result<()> {
         })
         .collect();
 
+    let wal_dir = std::env::args().nth(1);
+    let store = match &wal_dir {
+        Some(dir) => {
+            let store = Arc::new(WalRoundStore::open(dir)?);
+            println!("round store: WAL at {}", store.dir().display());
+            Some(store)
+        }
+        None => None,
+    };
+
     let wm = WorkflowManager::test_mode_with(clients, registry, 6);
     let mut server = FactServer::new(wm)
         .with_hyper(Hyper { lr: 0.2, mu: 0.0, local_steps: 3, round: 0 });
     server.round_timeout = Duration::from_secs(300);
+    if let Some(store) = &store {
+        server = server.with_round_store(store.clone());
+    }
     let model = HloModel::arc(&engine, "mlp_default", Aggregation::WeightedFedAvg)?;
     server.initialization_by_model(model, Arc::new(FixedRoundFl(12)), 3)?;
+    if store.is_some() {
+        // replay whatever a previous (killed) run left in the WAL:
+        // finished rounds are skipped, in-flight ones resumed
+        let rep = server.recover()?;
+        if rep.replayed_records > 0 || rep.resumed > 0 {
+            println!(
+                "recovered from WAL: {} round(s) replayed, {} resumed",
+                rep.replayed_records, rep.resumed
+            );
+        }
+    }
 
     println!("\ntraining 12 rounds under churn ...");
     server.learn()?;
@@ -83,6 +118,16 @@ fn main() -> feddart::Result<()> {
         server.history().len(),
         e.accuracy
     );
+    if let Some(store) = &store {
+        let j = store.status_json()?;
+        println!(
+            "round store: {} round(s) on disk, {} in flight — inspect with \
+             `feddart rounds --round-store {}`",
+            j.get("total").and_then(|v| v.as_usize()).unwrap_or(0),
+            j.get("in_flight").and_then(|v| v.as_usize()).unwrap_or(0),
+            wal_dir.as_deref().unwrap_or(".")
+        );
+    }
     engine.shutdown();
     Ok(())
 }

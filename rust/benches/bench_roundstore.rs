@@ -1,0 +1,162 @@
+//! E12 — round-store durability cost: WAL append latency and restart
+//! replay time.
+//!
+//! Three measurements:
+//! * **append** — one round event appended + fsynced (phase boundary,
+//!   the per-transition overhead a durable round adds to the hot loop),
+//!   in-memory backend vs WAL file backend;
+//! * **charge** — one ε-ledger charge appended (always fsynced);
+//! * **replay** — `WalRoundStore::open` over logs of 10² / 10³ / 10⁴
+//!   events (smoke mode drops 10⁴): the coordinator restart cost.
+//!
+//! Writes `BENCH_roundstore.json` (`$BENCH_OUT` selects the directory);
+//! smoke mode (`BENCH_SMOKE=1` / `--smoke`) shrinks sizes for CI.
+
+use std::collections::BTreeMap;
+
+use feddart::benchkit::{fmt_s, smoke, time_n, BenchReport, Table};
+use feddart::coordinator::round_store::{
+    EventKind, LedgerCharge, MemRoundStore, RoundEvent, WalRoundStore,
+};
+use feddart::coordinator::RoundStore;
+use feddart::util::tensorbuf::TensorBuf;
+
+const PARAMS: usize = 1024;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("feddart-bench-roundstore-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn configured(round_id: u64, round: usize) -> RoundEvent {
+    RoundEvent::new(
+        round_id,
+        EventKind::Configured {
+            clustering_round: 0,
+            cluster_id: 0,
+            round,
+            cohort: (0..8).map(|i| format!("client-{i}")).collect(),
+            sample_rate: 1.0,
+            mode: "secagg+dp".into(),
+            params: TensorBuf::from_f32_vec(vec![0.125; PARAMS]),
+            deadline_ms: 0,
+            session_tag: 7,
+        },
+    )
+}
+
+fn keys_event(round_id: u64) -> RoundEvent {
+    let pubkeys: BTreeMap<String, String> = (0..8)
+        .map(|i| (format!("client-{i}"), format!("{:064x}", i + 1)))
+        .collect();
+    RoundEvent::new(round_id, EventKind::KeysCollected { pubkeys, threshold: 5 })
+}
+
+/// Fill a store with `n` events across `n / 2` rounds (a Configured +
+/// KeysCollected pair per round: one bulky, one small — the WAL's mix).
+fn fill(store: &dyn RoundStore, n: usize) {
+    for r in 0..n / 2 {
+        let id = r as u64 + 1;
+        store.append(configured(id, r)).unwrap();
+        store.append(keys_event(id)).unwrap();
+    }
+}
+
+fn append_bench(mut report: BenchReport) -> BenchReport {
+    let iters = if smoke() { 50 } else { 500 };
+    let mut t = Table::new(&["backend", "event_append", "charge_append"]);
+
+    let mem = MemRoundStore::new();
+    let mut next = 1u64;
+    let st = time_n(5, iters, || {
+        mem.append(configured(next, next as usize)).unwrap();
+        next += 1;
+    });
+    let mut cnext = 1usize;
+    let stc = time_n(5, iters, || {
+        mem.append_charge(LedgerCharge {
+            clustering_round: 0,
+            round: cnext,
+            q: 1.0,
+            noise_multiplier: 1.0,
+        })
+        .unwrap();
+        cnext += 1;
+    });
+    t.row(&["mem".into(), fmt_s(st.mean), fmt_s(stc.mean)]);
+    report = report
+        .set("mem_event_append_s", st.mean)
+        .set("mem_charge_append_s", stc.mean);
+
+    let dir = tmp_dir("append");
+    let wal = WalRoundStore::open(&dir).unwrap();
+    let mut next = 1u64;
+    let st = time_n(5, iters, || {
+        // Configured opens a round: a phase change, so this append pays
+        // the fsync — the worst-case per-event cost
+        wal.append(configured(next, next as usize)).unwrap();
+        next += 1;
+    });
+    let mut cnext = 1usize;
+    let stc = time_n(5, iters, || {
+        wal.append_charge(LedgerCharge {
+            clustering_round: 0,
+            round: cnext,
+            q: 1.0,
+            noise_multiplier: 1.0,
+        })
+        .unwrap();
+        cnext += 1;
+    });
+    t.row(&["wal".into(), fmt_s(st.mean), fmt_s(stc.mean)]);
+    report = report
+        .set("wal_event_append_s", st.mean)
+        .set("wal_charge_append_s", stc.mean);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    t.print(&format!("append latency ({PARAMS}-param rounds, fsync on)"));
+    report
+}
+
+fn replay_bench(mut report: BenchReport) -> BenchReport {
+    let sizes: &[usize] =
+        if smoke() { &[100, 1_000] } else { &[100, 1_000, 10_000] };
+    let iters = if smoke() { 2 } else { 5 };
+    let mut t = Table::new(&["events", "replay", "events/s"]);
+    for &n in sizes {
+        let dir = tmp_dir(&format!("replay-{n}"));
+        {
+            let wal = WalRoundStore::open(&dir).unwrap();
+            fill(&wal, n);
+        }
+        let st = time_n(1, iters, || {
+            let wal = WalRoundStore::open(&dir).unwrap();
+            std::hint::black_box(wal.recovery().events_replayed);
+        });
+        t.row(&[
+            n.to_string(),
+            fmt_s(st.mean),
+            format!("{:.0}", n as f64 / st.mean),
+        ]);
+        report = report.set(&format!("replay_s_{n}"), st.mean);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    t.print("restart replay (WAL open, CRC-checked)");
+    report
+}
+
+fn main() {
+    println!(
+        "bench_roundstore: smoke={} (BENCH_SMOKE=1 for CI mode)",
+        smoke()
+    );
+    let mut report = BenchReport::new("roundstore").set("smoke", smoke());
+    report = append_bench(report);
+    report = replay_bench(report);
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write report: {e}"),
+    }
+}

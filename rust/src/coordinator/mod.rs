@@ -10,10 +10,13 @@
 //! * [`task`] — task representation + the `check` function (§A.2).
 //! * [`participation`] — deterministic cohort sampling for
 //!   partial-participation rounds (uniform / weighted / sticky-stratified).
+//! * [`round_store`] — the explicit round state machine and its durable
+//!   (WAL-backed) / in-memory persistence backends.
 
 pub mod aggregator;
 pub mod device;
 pub mod participation;
+pub mod round_store;
 pub mod selector;
 pub mod task;
 pub mod workflow;
@@ -21,6 +24,10 @@ pub mod workflow;
 pub use aggregator::{flat_reduce_weighted, parallel_reduce_weighted, tree_reduce_weighted, Aggregator};
 pub use device::{DeviceHolder, DeviceSingle};
 pub use participation::{participation_round_key, Candidate, CohortSampler};
+pub use round_store::{
+    transition, EventKind, LedgerCharge, MemRoundStore, RecoveryStatus, RoundEvent,
+    RoundPhase, RoundState, RoundStore, StoredUpdate, WalRoundStore,
+};
 pub use selector::{InitTask, Selector, WfTaskStatus};
 pub use task::{Task, TaskHandle, TaskKind};
 pub use workflow::{QuorumOutcome, RoundClose, WorkflowManager};

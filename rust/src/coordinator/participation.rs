@@ -24,11 +24,14 @@ use crate::util::rng::{fnv1a, splitmix64, Rng};
 /// reads it.
 #[derive(Debug, Clone)]
 pub struct Candidate {
+    /// Client name (unique within the pool).
     pub name: String,
+    /// Last-known sample count, 1.0 when unknown.
     pub weight: f64,
 }
 
 impl Candidate {
+    /// A candidate with unit weight.
     pub fn uniform(name: &str) -> Candidate {
         Candidate { name: name.to_string(), weight: 1.0 }
     }
@@ -61,10 +64,12 @@ pub struct CohortSampler {
 }
 
 impl CohortSampler {
+    /// Wrap a participation config in a sampler.
     pub fn new(cfg: ParticipationConfig) -> CohortSampler {
         CohortSampler { cfg }
     }
 
+    /// The participation config the sampler draws with.
     pub fn config(&self) -> &ParticipationConfig {
         &self.cfg
     }

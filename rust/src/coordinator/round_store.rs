@@ -1,0 +1,2011 @@
+//! Durable round state: an explicit, serializable state machine for the
+//! federated round lifecycle, persisted behind the [`RoundStore`] trait.
+//!
+//! Before this module existed the round lifecycle was implicit — smeared
+//! across the FACT server round loop (`fact/server.rs`), the secure
+//! aggregation board (`privacy/secagg.rs`) and the participation quorum
+//! loop (`coordinator/workflow.rs`), all of it living in one process's
+//! memory.  A coordinator crash mid-round lost every in-flight round,
+//! every pending reveal, and any ε-ledger charge that had not yet made it
+//! into a model snapshot.
+//!
+//! This module makes the lifecycle explicit:
+//!
+//! ```text
+//!                        ┌──────────── recovery re-entry ────────────┐
+//!                        ▼                                           │
+//! Configured ──▶ Keys ──▶ Shares ──▶ Learn ──▶ Reveal ──▶ Aggregated ─▶ Closed
+//!     │            │        │          │  ▲       │            │
+//!     │            └────────┼──────────┤  │(re-dispatch)       │
+//!     └─────────────────────┴──────────┘  │                    │
+//!     (skip edges: no secagg / 2-client)  │                    │
+//!                        any non-terminal phase ──────────▶ Voided
+//! ```
+//!
+//! Every transition is produced by appending a [`RoundEvent`] through the
+//! single typed transition function ([`transition`]); illegal sequences
+//! are rejected before anything is persisted.  Two backends implement
+//! [`RoundStore`]:
+//!
+//! * [`MemRoundStore`] — the pre-existing in-memory maps, now behind the
+//!   trait.  This is the default: every round always runs through the
+//!   state machine, durable or not.
+//! * [`WalRoundStore`] — a write-ahead-logged directory: JSON-line
+//!   events CRC-framed like the `.tensor` sidecars (see
+//!   [`crate::util::tensorbuf`]), fsynced on phase boundaries, with
+//!   periodic compacted snapshots.  On reopen the WAL is replayed; a
+//!   corrupt tail is detected by the CRC frame, truncated, and every
+//!   round it may have touched is marked *tainted* so the coordinator
+//!   can void it under its [`RevealPolicy`] instead of silently
+//!   resuming from a half-written record.
+//!
+//! The DP ε-ledger is persisted here too ([`LedgerCharge`]), *not* in
+//! model snapshots: a charge and the round that caused it land in the
+//! same log, so a crash between "round closed" and "ε charged" can no
+//! longer fork the privacy accounting (the coordinator re-derives the
+//! missing charge from the closed round on recovery).
+//!
+//! Threat-model note: the WAL stores exactly what the coordinator
+//! already holds in memory — relayed *encrypted* Shamir shares, clear
+//! commitments, public DH keys, and (DP-noised, still pair-masked or
+//! aggregated) update tensors.  It never stores client secrets or pair
+//! seeds, so disk compromise grants nothing beyond coordinator-memory
+//! compromise.  See the "Privacy" section of the crate README for the
+//! full threat model.
+//!
+//! [`RevealPolicy`]: crate::privacy::RevealPolicy
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::privacy::{round_id_from_hex, round_id_to_hex};
+use crate::util::tensorbuf::{crc32, TensorBuf};
+
+/// Magic prefix of one CRC-framed WAL line: `FDW1 <8-hex-crc> <json>`.
+const WAL_MAGIC: &str = "FDW1";
+/// Magic prefix of the compacted snapshot file: `FDWS1 <8-hex-crc> <json>`.
+const SNAP_MAGIC: &str = "FDWS1";
+/// Appends between automatic compactions of a [`WalRoundStore`].
+const COMPACT_EVERY: usize = 4096;
+
+/// Wall-clock milliseconds since the unix epoch — the timestamp stamped
+/// on every [`RoundEvent`] at append time.
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+// ====================================================================
+// phases
+// ====================================================================
+
+/// The phase a round is in.  Terminal phases ([`RoundPhase::Closed`],
+/// [`RoundPhase::Voided`]) never transition again.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundPhase {
+    /// Cohort drawn, round id derived, broadcast params pinned.
+    Configured,
+    /// Secagg phase 1 done: per-round DH public keys collected.
+    Keys,
+    /// Secagg phase 2 done: encrypted Shamir shares + commitments relayed.
+    Shares,
+    /// Learn tasks dispatched (and possibly closed) — updates pending or
+    /// collected, aggregate not yet recovered.
+    Learn,
+    /// Dropout recovery ran: reveals collected, audit recorded.
+    Reveal,
+    /// Aggregate applied to the cluster model; post-apply params pinned.
+    Aggregated,
+    /// Terminal: round fully accounted (record + ε charge replayable).
+    Closed,
+    /// Terminal: round abandoned (unrecoverable dropout, elapsed
+    /// deadline, corrupt WAL tail, …) — audited, never applied.
+    Voided,
+}
+
+impl RoundPhase {
+    /// Stable lowercase name used in the serialized form and the REST
+    /// `GET /rounds` listing.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoundPhase::Configured => "configured",
+            RoundPhase::Keys => "keys",
+            RoundPhase::Shares => "shares",
+            RoundPhase::Learn => "learn",
+            RoundPhase::Reveal => "reveal",
+            RoundPhase::Aggregated => "aggregated",
+            RoundPhase::Closed => "closed",
+            RoundPhase::Voided => "voided",
+        }
+    }
+
+    /// Parse the serialized phase name back.
+    pub fn from_str(s: &str) -> Result<RoundPhase> {
+        Ok(match s {
+            "configured" => RoundPhase::Configured,
+            "keys" => RoundPhase::Keys,
+            "shares" => RoundPhase::Shares,
+            "learn" => RoundPhase::Learn,
+            "reveal" => RoundPhase::Reveal,
+            "aggregated" => RoundPhase::Aggregated,
+            "closed" => RoundPhase::Closed,
+            "voided" => RoundPhase::Voided,
+            other => {
+                return Err(FedError::Json(format!("unknown round phase '{other}'")))
+            }
+        })
+    }
+
+    /// Whether the phase is final ([`Closed`](RoundPhase::Closed) or
+    /// [`Voided`](RoundPhase::Voided)).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RoundPhase::Closed | RoundPhase::Voided)
+    }
+}
+
+// ====================================================================
+// events
+// ====================================================================
+
+/// One client update as persisted in a [`EventKind::LearnClosed`] event.
+///
+/// Mirrors the FACT layer's `ClientUpdate` field-for-field; redeclared
+/// here so the store stays a coordinator-layer concern with no FACT
+/// import.  Under secure aggregation `params` is still pair-masked —
+/// persisting it leaks nothing the coordinator did not already hold.
+#[derive(Debug, Clone)]
+pub struct StoredUpdate {
+    /// Reporting device name.
+    pub device: String,
+    /// The (possibly masked, possibly DP-noised) update tensor.
+    pub params: TensorBuf,
+    /// Client-reported sample count (aggregation weight).
+    pub n_samples: f32,
+    /// Client-reported training loss.
+    pub loss: f32,
+    /// Client-side wall-clock seconds spent on the task.
+    pub duration: f64,
+}
+
+impl StoredUpdate {
+    /// Serialize to the WAL JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("device", self.device.as_str())
+            .set("params", self.params.clone())
+            .set("n_samples", self.n_samples)
+            .set("loss", self.loss)
+            .set("duration", self.duration)
+    }
+
+    /// Parse the WAL JSON form back.
+    pub fn from_json(j: &Json) -> Result<StoredUpdate> {
+        let params = TensorBuf::from_json(j.need("params")?)?;
+        Ok(StoredUpdate {
+            device: j
+                .get("device")
+                .and_then(Json::as_str)
+                .ok_or_else(|| FedError::Json("update missing 'device'".into()))?
+                .to_string(),
+            params,
+            n_samples: j.get("n_samples").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            loss: j.get("loss").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            duration: j.get("duration").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+/// What happened to a round — the payload of a [`RoundEvent`].
+///
+/// Each variant carries everything needed to *re-enter* the round at
+/// that point after a crash, so the WAL alone (no process memory)
+/// reconstructs an in-flight round exactly.
+#[derive(Debug, Clone)]
+pub enum EventKind {
+    /// Round opened: cohort drawn, broadcast params pinned.
+    Configured {
+        /// Outer clustering-iteration index.
+        clustering_round: usize,
+        /// Cluster the round trains.
+        cluster_id: usize,
+        /// Federated round index within the cluster.
+        round: usize,
+        /// Sampled cohort (sorted device names).
+        cohort: Vec<String>,
+        /// Realized sampling rate `q` of the cohort draw (for DP).
+        sample_rate: f64,
+        /// Privacy mode string (`"none"`, `"dp"`, `"secagg"`, `"secagg+dp"`).
+        mode: String,
+        /// Cluster params broadcast this round (pre-update).
+        params: TensorBuf,
+        /// Configured participation deadline (0 = none).
+        deadline_ms: u64,
+        /// Session tag the round id was derived from.
+        session_tag: u64,
+    },
+    /// Secagg phase 1 closed: validated per-round DH public keys.
+    KeysCollected {
+        /// participant → lowercase hex DH public key.
+        pubkeys: BTreeMap<String, String>,
+        /// Resolved `t` of the t-of-n share recovery.
+        threshold: usize,
+    },
+    /// Secagg phase 2 closed: encrypted shares + commitments relayed.
+    SharesDealt {
+        /// Sorted clients that completed both setup phases.
+        participants: Vec<String>,
+        /// dealer → recipient → hex ciphertext (end-to-end encrypted).
+        enc_shares: BTreeMap<String, BTreeMap<String, String>>,
+        /// dealer → recipient → hex share commitment (clear).
+        commits: BTreeMap<String, BTreeMap<String, String>>,
+    },
+    /// Learn tasks handed to the scheduler.
+    LearnDispatched {
+        /// Devices the learn task was addressed to.
+        addressed: Vec<String>,
+        /// Wall-clock dispatch time (ms since epoch) — recovery measures
+        /// elapsed deadline from here.
+        dispatched_at_ms: u64,
+        /// Effective deadline for this dispatch (0 = none).
+        deadline_ms: u64,
+    },
+    /// Learn phase closed: updates collected (still masked under secagg).
+    LearnClosed {
+        /// Updates received before close, sorted by device.
+        updates: Vec<StoredUpdate>,
+        /// Stragglers that arrived in the late-grace window.
+        late: usize,
+        /// Participants that never reported.
+        dropped: Vec<String>,
+    },
+    /// Dropout recovery ran; the secagg audit trail for the round.
+    Revealed {
+        /// Serialized `SecAggAudit` (see `fact::server`).
+        audit: Json,
+    },
+    /// Aggregate applied to the cluster model.
+    Aggregated {
+        /// Post-apply cluster params — makes resuming at this phase an
+        /// idempotent replacement even under a momentum optimizer.
+        params: TensorBuf,
+        /// Serialized `RoundRecord` audit entry.
+        record: Json,
+    },
+    /// Round fully accounted; terminal.
+    Closed,
+    /// Round abandoned; terminal.
+    Voided {
+        /// Human-readable reason (policy void, elapsed deadline, taint…).
+        reason: String,
+        /// Serialized `RoundRecord` when one could be produced.
+        record: Json,
+    },
+}
+
+impl EventKind {
+    /// Stable lowercase tag used as the serialized `"kind"` field.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EventKind::Configured { .. } => "configured",
+            EventKind::KeysCollected { .. } => "keys_collected",
+            EventKind::SharesDealt { .. } => "shares_dealt",
+            EventKind::LearnDispatched { .. } => "learn_dispatched",
+            EventKind::LearnClosed { .. } => "learn_closed",
+            EventKind::Revealed { .. } => "revealed",
+            EventKind::Aggregated { .. } => "aggregated",
+            EventKind::Closed => "closed",
+            EventKind::Voided { .. } => "voided",
+        }
+    }
+}
+
+/// One serializable state-machine transition of one round.
+#[derive(Debug, Clone)]
+pub struct RoundEvent {
+    /// Round the event belongs to (the FACT server's derived round id).
+    pub round_id: u64,
+    /// Wall-clock append time, ms since the unix epoch.
+    pub at_ms: u64,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+fn str_map_json(m: &BTreeMap<String, String>) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in m {
+        o = o.set(k, v.as_str());
+    }
+    o
+}
+
+fn nested_map_json(m: &BTreeMap<String, BTreeMap<String, String>>) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in m {
+        o = o.set(k, str_map_json(v));
+    }
+    o
+}
+
+fn str_vec_json(v: &[String]) -> Json {
+    Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+fn parse_str_vec(j: Option<&Json>) -> Vec<String> {
+    j.and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn parse_str_map(j: Option<&Json>) -> BTreeMap<String, String> {
+    j.and_then(Json::as_obj)
+        .map(|o| {
+            o.iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn parse_nested_map(j: Option<&Json>) -> BTreeMap<String, BTreeMap<String, String>> {
+    j.and_then(Json::as_obj)
+        .map(|o| {
+            o.iter()
+                .map(|(k, v)| (k.clone(), parse_str_map(Some(v))))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| FedError::Json(format!("event missing usize '{key}'")))
+}
+
+fn need_hex_u64(j: &Json, key: &str) -> Result<u64> {
+    let s = j
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| FedError::Json(format!("event missing hex '{key}'")))?;
+    round_id_from_hex(s)
+}
+
+impl RoundEvent {
+    /// Build an event stamped with the current wall clock.
+    pub fn new(round_id: u64, kind: EventKind) -> RoundEvent {
+        RoundEvent {
+            round_id,
+            at_ms: now_ms(),
+            kind,
+        }
+    }
+
+    /// Serialize to the WAL JSON form.  `u64` identifiers are hex
+    /// strings — `f64` JSON numbers lose integer precision past 2⁵³.
+    pub fn to_json(&self) -> Json {
+        let base = Json::obj()
+            .set("round_id", round_id_to_hex(self.round_id).as_str())
+            .set("at_ms", self.at_ms as f64)
+            .set("kind", self.kind.tag());
+        match &self.kind {
+            EventKind::Configured {
+                clustering_round,
+                cluster_id,
+                round,
+                cohort,
+                sample_rate,
+                mode,
+                params,
+                deadline_ms,
+                session_tag,
+            } => base
+                .set("clustering_round", *clustering_round)
+                .set("cluster_id", *cluster_id)
+                .set("round", *round)
+                .set("cohort", str_vec_json(cohort))
+                .set("sample_rate", *sample_rate)
+                .set("mode", mode.as_str())
+                .set("params", params.clone())
+                .set("deadline_ms", *deadline_ms as f64)
+                .set("session_tag", round_id_to_hex(*session_tag).as_str()),
+            EventKind::KeysCollected { pubkeys, threshold } => base
+                .set("pubkeys", str_map_json(pubkeys))
+                .set("threshold", *threshold),
+            EventKind::SharesDealt {
+                participants,
+                enc_shares,
+                commits,
+            } => base
+                .set("participants", str_vec_json(participants))
+                .set("enc_shares", nested_map_json(enc_shares))
+                .set("commits", nested_map_json(commits)),
+            EventKind::LearnDispatched {
+                addressed,
+                dispatched_at_ms,
+                deadline_ms,
+            } => base
+                .set("addressed", str_vec_json(addressed))
+                .set("dispatched_at_ms", *dispatched_at_ms as f64)
+                .set("deadline_ms", *deadline_ms as f64),
+            EventKind::LearnClosed {
+                updates,
+                late,
+                dropped,
+            } => base
+                .set(
+                    "updates",
+                    Json::Arr(updates.iter().map(StoredUpdate::to_json).collect()),
+                )
+                .set("late", *late)
+                .set("dropped", str_vec_json(dropped)),
+            EventKind::Revealed { audit } => base.set("audit", audit.clone()),
+            EventKind::Aggregated { params, record } => base
+                .set("params", params.clone())
+                .set("record", record.clone()),
+            EventKind::Closed => base,
+            EventKind::Voided { reason, record } => base
+                .set("reason", reason.as_str())
+                .set("record", record.clone()),
+        }
+    }
+
+    /// Parse the WAL JSON form back.
+    pub fn from_json(j: &Json) -> Result<RoundEvent> {
+        let round_id = need_hex_u64(j, "round_id")?;
+        let at_ms = j.get("at_ms").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let tag = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Json("event missing 'kind'".into()))?;
+        let kind = match tag {
+            "configured" => EventKind::Configured {
+                clustering_round: need_usize(j, "clustering_round")?,
+                cluster_id: need_usize(j, "cluster_id")?,
+                round: need_usize(j, "round")?,
+                cohort: parse_str_vec(j.get("cohort")),
+                sample_rate: j.get("sample_rate").and_then(Json::as_f64).unwrap_or(1.0),
+                mode: j
+                    .get("mode")
+                    .and_then(Json::as_str)
+                    .unwrap_or("none")
+                    .to_string(),
+                params: TensorBuf::from_json(j.need("params")?)?,
+                deadline_ms: j.get("deadline_ms").and_then(Json::as_f64).unwrap_or(0.0)
+                    as u64,
+                session_tag: need_hex_u64(j, "session_tag")?,
+            },
+            "keys_collected" => EventKind::KeysCollected {
+                pubkeys: parse_str_map(j.get("pubkeys")),
+                threshold: need_usize(j, "threshold")?,
+            },
+            "shares_dealt" => EventKind::SharesDealt {
+                participants: parse_str_vec(j.get("participants")),
+                enc_shares: parse_nested_map(j.get("enc_shares")),
+                commits: parse_nested_map(j.get("commits")),
+            },
+            "learn_dispatched" => EventKind::LearnDispatched {
+                addressed: parse_str_vec(j.get("addressed")),
+                dispatched_at_ms: j
+                    .get("dispatched_at_ms")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as u64,
+                deadline_ms: j.get("deadline_ms").and_then(Json::as_f64).unwrap_or(0.0)
+                    as u64,
+            },
+            "learn_closed" => {
+                let updates = j
+                    .get("updates")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().map(StoredUpdate::from_json).collect())
+                    .transpose()?
+                    .unwrap_or_default();
+                EventKind::LearnClosed {
+                    updates,
+                    late: j.get("late").and_then(Json::as_usize).unwrap_or(0),
+                    dropped: parse_str_vec(j.get("dropped")),
+                }
+            }
+            "revealed" => EventKind::Revealed {
+                audit: j.get("audit").cloned().unwrap_or(Json::Null),
+            },
+            "aggregated" => EventKind::Aggregated {
+                params: TensorBuf::from_json(j.need("params")?)?,
+                record: j.get("record").cloned().unwrap_or(Json::Null),
+            },
+            "closed" => EventKind::Closed,
+            "voided" => EventKind::Voided {
+                reason: j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                record: j.get("record").cloned().unwrap_or(Json::Null),
+            },
+            other => {
+                return Err(FedError::Json(format!("unknown event kind '{other}'")))
+            }
+        };
+        Ok(RoundEvent {
+            round_id,
+            at_ms,
+            kind,
+        })
+    }
+}
+
+// ====================================================================
+// the transition function
+// ====================================================================
+
+/// THE typed transition function: given the round's current phase
+/// (`None` = round does not exist yet) and an incoming event, return the
+/// next phase or reject the sequence.
+///
+/// Skip and re-entry edges are deliberate parts of the machine, not
+/// leniency:
+///
+/// * `Configured → Learn` — non-secagg rounds have no setup phases;
+/// * `Keys → Learn` — a 2-client secagg round skips share dealing
+///   (below any meaningful threshold, direct reveals only);
+/// * `Keys → Keys`, `Shares → Shares` via `KeysCollected`/`SharesDealt`,
+///   and `Learn → Learn` via `LearnDispatched` — recovery re-entry: a
+///   coordinator that crashed after persisting a phase re-runs it and
+///   re-appends the (deterministically equal) result;
+/// * any non-terminal phase `→ Voided` — abandonment is always legal.
+pub fn transition(cur: Option<RoundPhase>, kind: &EventKind) -> Result<RoundPhase> {
+    use RoundPhase as P;
+    let next = match (cur, kind) {
+        (None, EventKind::Configured { .. }) => P::Configured,
+        (Some(P::Configured) | Some(P::Keys) | Some(P::Shares), EventKind::KeysCollected { .. }) => {
+            P::Keys
+        }
+        (Some(P::Keys) | Some(P::Shares), EventKind::SharesDealt { .. }) => P::Shares,
+        (
+            Some(P::Configured) | Some(P::Keys) | Some(P::Shares) | Some(P::Learn),
+            EventKind::LearnDispatched { .. },
+        ) => P::Learn,
+        (Some(P::Learn), EventKind::LearnClosed { .. }) => P::Learn,
+        // Reveal -> Reveal: a resumed round re-runs its (deterministic)
+        // reveal and re-appends the audit
+        (Some(P::Learn) | Some(P::Reveal), EventKind::Revealed { .. }) => P::Reveal,
+        (Some(P::Learn) | Some(P::Reveal), EventKind::Aggregated { .. }) => P::Aggregated,
+        (Some(P::Aggregated), EventKind::Closed) => P::Closed,
+        (Some(p), EventKind::Voided { .. }) if !p.is_terminal() => P::Voided,
+        (cur, kind) => {
+            return Err(FedError::Fact(format!(
+                "illegal round transition: {} in phase {}",
+                kind.tag(),
+                cur.map(|p| p.as_str()).unwrap_or("<none>")
+            )))
+        }
+    };
+    Ok(next)
+}
+
+// ====================================================================
+// accumulated round state
+// ====================================================================
+
+/// Everything known about one round — the fold of its event sequence.
+///
+/// This is what [`RoundStore::round`] returns and what the recovery path
+/// resumes from; every field is reconstructed from the WAL alone.
+#[derive(Debug, Clone)]
+pub struct RoundState {
+    /// Derived round id (see the FACT server's round-id derivation).
+    pub round_id: u64,
+    /// Current phase.
+    pub phase: RoundPhase,
+    /// Set when a corrupt WAL tail was truncated while this round was
+    /// in flight — its last persisted events may be missing, so it must
+    /// be voided (per `RevealPolicy`), never silently resumed.
+    pub tainted: bool,
+    /// Outer clustering-iteration index.
+    pub clustering_round: usize,
+    /// Cluster the round trains.
+    pub cluster_id: usize,
+    /// Federated round index within the cluster.
+    pub round: usize,
+    /// Sampled cohort.
+    pub cohort: Vec<String>,
+    /// Realized sampling rate of the cohort draw.
+    pub sample_rate: f64,
+    /// Privacy mode string at configure time.
+    pub mode: String,
+    /// Broadcast (pre-update) params; trimmed once terminal.
+    pub params: Option<TensorBuf>,
+    /// Configured participation deadline (0 = none).
+    pub deadline_ms: u64,
+    /// Session tag the round id was derived from.
+    pub session_tag: u64,
+    /// participant → hex DH public key (secagg phase 1).
+    pub pubkeys: BTreeMap<String, String>,
+    /// Resolved reveal threshold `t`.
+    pub threshold: usize,
+    /// Masking participant set (secagg phase 2, or key posters if share
+    /// dealing was skipped).
+    pub participants: Vec<String>,
+    /// dealer → recipient → hex encrypted share; trimmed once terminal.
+    pub enc_shares: BTreeMap<String, BTreeMap<String, String>>,
+    /// dealer → recipient → hex share commitment; trimmed once terminal.
+    pub commits: BTreeMap<String, BTreeMap<String, String>>,
+    /// Devices the learn task was addressed to.
+    pub addressed: Vec<String>,
+    /// Wall-clock ms of the last learn dispatch (0 = never dispatched).
+    pub dispatched_at_ms: u64,
+    /// Deadline of the last learn dispatch (0 = none).
+    pub learn_deadline_ms: u64,
+    /// Collected updates; trimmed once terminal.
+    pub updates: Vec<StoredUpdate>,
+    /// Late arrivals counted at learn close.
+    pub late: usize,
+    /// Participants that never reported to the learn phase.
+    pub dropped: Vec<String>,
+    /// Secagg audit (serialized `SecAggAudit`), if recovery ran.
+    pub audit: Option<Json>,
+    /// Post-apply cluster params — kept through `Closed` so recovery can
+    /// fast-forward the cluster model exactly.
+    pub params_after: Option<TensorBuf>,
+    /// Serialized `RoundRecord`, once aggregated or voided with one.
+    pub record: Option<Json>,
+    /// Why the round was voided, if it was.
+    pub void_reason: Option<String>,
+}
+
+impl RoundState {
+    fn new(round_id: u64) -> RoundState {
+        RoundState {
+            round_id,
+            phase: RoundPhase::Configured,
+            tainted: false,
+            clustering_round: 0,
+            cluster_id: 0,
+            round: 0,
+            cohort: Vec::new(),
+            sample_rate: 1.0,
+            mode: String::new(),
+            params: None,
+            deadline_ms: 0,
+            session_tag: 0,
+            pubkeys: BTreeMap::new(),
+            threshold: 0,
+            participants: Vec::new(),
+            enc_shares: BTreeMap::new(),
+            commits: BTreeMap::new(),
+            addressed: Vec::new(),
+            dispatched_at_ms: 0,
+            learn_deadline_ms: 0,
+            updates: Vec::new(),
+            late: 0,
+            dropped: Vec::new(),
+            audit: None,
+            params_after: None,
+            record: None,
+            void_reason: None,
+        }
+    }
+
+    /// Fold one event into the state (the caller has already validated
+    /// the transition).
+    fn absorb(&mut self, ev: &RoundEvent, next: RoundPhase) {
+        match &ev.kind {
+            EventKind::Configured {
+                clustering_round,
+                cluster_id,
+                round,
+                cohort,
+                sample_rate,
+                mode,
+                params,
+                deadline_ms,
+                session_tag,
+            } => {
+                self.clustering_round = *clustering_round;
+                self.cluster_id = *cluster_id;
+                self.round = *round;
+                self.cohort = cohort.clone();
+                self.sample_rate = *sample_rate;
+                self.mode = mode.clone();
+                self.params = Some(params.clone());
+                self.deadline_ms = *deadline_ms;
+                self.session_tag = *session_tag;
+            }
+            EventKind::KeysCollected { pubkeys, threshold } => {
+                self.pubkeys = pubkeys.clone();
+                self.threshold = *threshold;
+                // share dealing may be skipped (2-client round): until
+                // SharesDealt lands, the key posters ARE the participants
+                self.participants = pubkeys.keys().cloned().collect();
+            }
+            EventKind::SharesDealt {
+                participants,
+                enc_shares,
+                commits,
+            } => {
+                self.participants = participants.clone();
+                self.enc_shares = enc_shares.clone();
+                self.commits = commits.clone();
+            }
+            EventKind::LearnDispatched {
+                addressed,
+                dispatched_at_ms,
+                deadline_ms,
+            } => {
+                self.addressed = addressed.clone();
+                self.dispatched_at_ms = *dispatched_at_ms;
+                self.learn_deadline_ms = *deadline_ms;
+            }
+            EventKind::LearnClosed {
+                updates,
+                late,
+                dropped,
+            } => {
+                self.updates = updates.clone();
+                self.late = *late;
+                self.dropped = dropped.clone();
+            }
+            EventKind::Revealed { audit } => {
+                self.audit = Some(audit.clone());
+            }
+            EventKind::Aggregated { params, record } => {
+                self.params_after = Some(params.clone());
+                self.record = Some(record.clone());
+            }
+            EventKind::Closed => {}
+            EventKind::Voided { reason, record } => {
+                self.void_reason = Some(reason.clone());
+                if !record.is_null() {
+                    self.record = Some(record.clone());
+                }
+            }
+        }
+        self.phase = next;
+        if next.is_terminal() {
+            // trim bulk payloads a terminal round no longer needs;
+            // params_after stays (cluster fast-forward) and so does the
+            // record (audit history replay)
+            self.params = None;
+            self.updates.clear();
+            self.enc_shares.clear();
+            self.commits.clear();
+        }
+    }
+
+    /// Serialize the full state (snapshot form).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .set("round_id", round_id_to_hex(self.round_id).as_str())
+            .set("phase", self.phase.as_str())
+            .set("tainted", self.tainted)
+            .set("clustering_round", self.clustering_round)
+            .set("cluster_id", self.cluster_id)
+            .set("round", self.round)
+            .set("cohort", str_vec_json(&self.cohort))
+            .set("sample_rate", self.sample_rate)
+            .set("mode", self.mode.as_str())
+            .set("deadline_ms", self.deadline_ms as f64)
+            .set("session_tag", round_id_to_hex(self.session_tag).as_str())
+            .set("pubkeys", str_map_json(&self.pubkeys))
+            .set("threshold", self.threshold)
+            .set("participants", str_vec_json(&self.participants))
+            .set("enc_shares", nested_map_json(&self.enc_shares))
+            .set("commits", nested_map_json(&self.commits))
+            .set("addressed", str_vec_json(&self.addressed))
+            .set("dispatched_at_ms", self.dispatched_at_ms as f64)
+            .set("learn_deadline_ms", self.learn_deadline_ms as f64)
+            .set(
+                "updates",
+                Json::Arr(self.updates.iter().map(StoredUpdate::to_json).collect()),
+            )
+            .set("late", self.late)
+            .set("dropped", str_vec_json(&self.dropped));
+        if let Some(p) = &self.params {
+            o = o.set("params", p.clone());
+        }
+        if let Some(a) = &self.audit {
+            o = o.set("audit", a.clone());
+        }
+        if let Some(p) = &self.params_after {
+            o = o.set("params_after", p.clone());
+        }
+        if let Some(r) = &self.record {
+            o = o.set("record", r.clone());
+        }
+        if let Some(r) = &self.void_reason {
+            o = o.set("void_reason", r.as_str());
+        }
+        o
+    }
+
+    /// Parse the snapshot form back.
+    pub fn from_json(j: &Json) -> Result<RoundState> {
+        let mut s = RoundState::new(need_hex_u64(j, "round_id")?);
+        s.phase = RoundPhase::from_str(
+            j.get("phase")
+                .and_then(Json::as_str)
+                .ok_or_else(|| FedError::Json("round state missing 'phase'".into()))?,
+        )?;
+        s.tainted = j.get("tainted").and_then(Json::as_bool).unwrap_or(false);
+        s.clustering_round = need_usize(j, "clustering_round")?;
+        s.cluster_id = need_usize(j, "cluster_id")?;
+        s.round = need_usize(j, "round")?;
+        s.cohort = parse_str_vec(j.get("cohort"));
+        s.sample_rate = j.get("sample_rate").and_then(Json::as_f64).unwrap_or(1.0);
+        s.mode = j
+            .get("mode")
+            .and_then(Json::as_str)
+            .unwrap_or("none")
+            .to_string();
+        s.deadline_ms = j.get("deadline_ms").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        s.session_tag = need_hex_u64(j, "session_tag")?;
+        s.pubkeys = parse_str_map(j.get("pubkeys"));
+        s.threshold = j.get("threshold").and_then(Json::as_usize).unwrap_or(0);
+        s.participants = parse_str_vec(j.get("participants"));
+        s.enc_shares = parse_nested_map(j.get("enc_shares"));
+        s.commits = parse_nested_map(j.get("commits"));
+        s.addressed = parse_str_vec(j.get("addressed"));
+        s.dispatched_at_ms = j
+            .get("dispatched_at_ms")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64;
+        s.learn_deadline_ms = j
+            .get("learn_deadline_ms")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64;
+        s.updates = j
+            .get("updates")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().map(StoredUpdate::from_json).collect())
+            .transpose()?
+            .unwrap_or_default();
+        s.late = j.get("late").and_then(Json::as_usize).unwrap_or(0);
+        s.dropped = parse_str_vec(j.get("dropped"));
+        if let Some(p) = j.get("params") {
+            s.params = Some(TensorBuf::from_json(p)?);
+        }
+        s.audit = j.get("audit").cloned();
+        if let Some(p) = j.get("params_after") {
+            s.params_after = Some(TensorBuf::from_json(p)?);
+        }
+        s.record = j.get("record").cloned();
+        s.void_reason = j
+            .get("void_reason")
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        Ok(s)
+    }
+
+    /// Compact single-line summary for listings and logs.
+    pub fn summary_json(&self) -> Json {
+        Json::obj()
+            .set("round_id", round_id_to_hex(self.round_id).as_str())
+            .set("phase", self.phase.as_str())
+            .set("tainted", self.tainted)
+            .set("clustering_round", self.clustering_round)
+            .set("cluster_id", self.cluster_id)
+            .set("round", self.round)
+            .set("cohort_size", self.cohort.len())
+            .set("mode", self.mode.as_str())
+            .set("updates", self.updates.len())
+            .set(
+                "void_reason",
+                self.void_reason
+                    .as_deref()
+                    .map(Json::from)
+                    .unwrap_or(Json::Null),
+            )
+    }
+}
+
+// ====================================================================
+// ε-ledger charges
+// ====================================================================
+
+/// One DP ε-ledger charge, persisted in the same log as the rounds that
+/// caused it.
+///
+/// The accountant charges once per federated round *index* (the max
+/// sampling rate across clusters training that index), so the dedup key
+/// is `(clustering_round, round)` — replaying the WAL can never
+/// double-charge a round, and a crash between "round closed" and
+/// "charge appended" is healed by re-deriving the charge from the closed
+/// round on recovery.
+#[derive(Debug, Clone)]
+pub struct LedgerCharge {
+    /// Outer clustering-iteration index.
+    pub clustering_round: usize,
+    /// Federated round index charged.
+    pub round: usize,
+    /// Sampling rate charged (max across clusters for this index).
+    pub q: f64,
+    /// Noise multiplier the accountant ran with at charge time.
+    pub noise_multiplier: f64,
+}
+
+impl LedgerCharge {
+    /// Dedup key: one charge per federated round index.
+    pub fn key(&self) -> (usize, usize) {
+        (self.clustering_round, self.round)
+    }
+
+    /// Serialize to the WAL JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("clustering_round", self.clustering_round)
+            .set("round", self.round)
+            .set("q", self.q)
+            .set("noise_multiplier", self.noise_multiplier)
+    }
+
+    /// Parse the WAL JSON form back.
+    pub fn from_json(j: &Json) -> Result<LedgerCharge> {
+        Ok(LedgerCharge {
+            clustering_round: need_usize(j, "clustering_round")?,
+            round: need_usize(j, "round")?,
+            q: j.get("q").and_then(Json::as_f64).unwrap_or(0.0),
+            noise_multiplier: j
+                .get("noise_multiplier")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        })
+    }
+}
+
+// ====================================================================
+// the store trait
+// ====================================================================
+
+/// What a store reopen found — surfaced through `GET /rounds/recovery`
+/// and the `feddart rounds` CLI.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryStatus {
+    /// WAL event/charge/meta records replayed on open.
+    pub events_replayed: usize,
+    /// Rounds materialized (snapshot + WAL).
+    pub rounds_loaded: usize,
+    /// Rounds that were non-terminal at open time.
+    pub in_flight: usize,
+    /// WAL records discarded from a corrupt tail (0 = clean log).
+    pub corrupt_tail_events: usize,
+    /// Whether a compacted snapshot was loaded before WAL replay.
+    pub snapshot_loaded: bool,
+}
+
+impl RecoveryStatus {
+    /// Serialize for the REST recovery endpoint.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("events_replayed", self.events_replayed)
+            .set("rounds_loaded", self.rounds_loaded)
+            .set("in_flight", self.in_flight)
+            .set("corrupt_tail_events", self.corrupt_tail_events)
+            .set("snapshot_loaded", self.snapshot_loaded)
+    }
+}
+
+/// Durable (or not) home of all round state and the ε-ledger.
+///
+/// Every mutation is an event append validated by [`transition`]; the
+/// store is the single source of truth the coordinator resumes from
+/// after a crash.  Implementations must be safe to share across the
+/// FACT server's cluster worker threads.
+pub trait RoundStore: Send + Sync {
+    /// Validate and apply one event; persist it; return the new phase.
+    fn append(&self, ev: RoundEvent) -> Result<RoundPhase>;
+
+    /// Persist one ε-ledger charge (idempotent on [`LedgerCharge::key`]).
+    fn append_charge(&self, charge: LedgerCharge) -> Result<()>;
+
+    /// All persisted charges, in append order (deduped by key).
+    fn charges(&self) -> Result<Vec<LedgerCharge>>;
+
+    /// Look up one round by id.
+    fn round(&self, round_id: u64) -> Result<Option<RoundState>>;
+
+    /// All known rounds, in first-seen order.
+    fn rounds(&self) -> Result<Vec<RoundState>>;
+
+    /// The session tag persisted in the store, if any.
+    fn session_tag(&self) -> Result<Option<u64>>;
+
+    /// Adopt-or-persist a session tag: if the store already holds one
+    /// (a previous coordinator run), the stored tag wins and is
+    /// returned — fresh rounds after a resume then derive the same
+    /// round ids the dead coordinator would have.
+    fn set_session_tag(&self, tag: u64) -> Result<u64>;
+
+    /// Fold the log into a compacted snapshot and truncate it.
+    fn compact(&self) -> Result<()>;
+
+    /// What the last open replayed (all-zero for a fresh store).
+    fn recovery(&self) -> RecoveryStatus;
+
+    /// Rounds that are still in flight (non-terminal).
+    fn in_flight(&self) -> Result<Vec<RoundState>> {
+        Ok(self
+            .rounds()?
+            .into_iter()
+            .filter(|r| !r.phase.is_terminal())
+            .collect())
+    }
+
+    /// Round listing for `GET /rounds`: summaries plus recovery status.
+    fn status_json(&self) -> Result<Json> {
+        let rounds = self.rounds()?;
+        let in_flight = rounds.iter().filter(|r| !r.phase.is_terminal()).count();
+        Ok(Json::obj()
+            .set("attached", true)
+            .set("total", rounds.len())
+            .set("in_flight", in_flight)
+            .set(
+                "rounds",
+                Json::Arr(rounds.iter().map(RoundState::summary_json).collect()),
+            )
+            .set("recovery", self.recovery().to_json()))
+    }
+}
+
+// ====================================================================
+// shared fold (both backends)
+// ====================================================================
+
+#[derive(Default)]
+struct StoreInner {
+    order: Vec<u64>,
+    states: BTreeMap<u64, RoundState>,
+    charges: Vec<LedgerCharge>,
+    session_tag: Option<u64>,
+}
+
+impl StoreInner {
+    /// Validate + fold one event.  Validation happens before any
+    /// mutation, so a rejected event leaves the fold untouched.
+    fn apply_event(&mut self, ev: &RoundEvent) -> Result<RoundPhase> {
+        let cur = self.states.get(&ev.round_id).map(|s| s.phase);
+        let next = transition(cur, &ev.kind)?;
+        if !self.states.contains_key(&ev.round_id) {
+            self.order.push(ev.round_id);
+            self.states.insert(ev.round_id, RoundState::new(ev.round_id));
+        }
+        self.states
+            .get_mut(&ev.round_id)
+            .expect("state just ensured")
+            .absorb(ev, next);
+        Ok(next)
+    }
+
+    fn apply_charge(&mut self, charge: LedgerCharge) {
+        if !self.charges.iter().any(|c| c.key() == charge.key()) {
+            self.charges.push(charge);
+        }
+    }
+
+    fn rounds(&self) -> Vec<RoundState> {
+        self.order
+            .iter()
+            .filter_map(|id| self.states.get(id))
+            .cloned()
+            .collect()
+    }
+
+    fn snapshot_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "session_tag",
+                self.session_tag
+                    .map(|t| Json::Str(round_id_to_hex(t)))
+                    .unwrap_or(Json::Null),
+            )
+            .set(
+                "charges",
+                Json::Arr(self.charges.iter().map(LedgerCharge::to_json).collect()),
+            )
+            .set(
+                "rounds",
+                Json::Arr(self.rounds().iter().map(RoundState::to_json).collect()),
+            )
+    }
+
+    fn load_snapshot_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(tag) = j.get("session_tag").and_then(Json::as_str) {
+            self.session_tag = Some(round_id_from_hex(tag)?);
+        }
+        for c in j.get("charges").and_then(Json::as_arr).unwrap_or(&[]) {
+            self.apply_charge(LedgerCharge::from_json(c)?);
+        }
+        for r in j.get("rounds").and_then(Json::as_arr).unwrap_or(&[]) {
+            let state = RoundState::from_json(r)?;
+            if !self.states.contains_key(&state.round_id) {
+                self.order.push(state.round_id);
+            }
+            self.states.insert(state.round_id, state);
+        }
+        Ok(())
+    }
+}
+
+// ====================================================================
+// in-memory backend
+// ====================================================================
+
+/// The non-durable [`RoundStore`]: the same fold as the WAL backend,
+/// held in process memory.  This is the default backend — every round
+/// runs through the state machine whether or not durability was asked
+/// for, so the transition table is exercised by every test in the tree.
+#[derive(Default)]
+pub struct MemRoundStore {
+    inner: Mutex<StoreInner>,
+}
+
+impl MemRoundStore {
+    /// Fresh empty store.
+    pub fn new() -> MemRoundStore {
+        MemRoundStore::default()
+    }
+}
+
+impl RoundStore for MemRoundStore {
+    fn append(&self, ev: RoundEvent) -> Result<RoundPhase> {
+        self.inner.lock().unwrap().apply_event(&ev)
+    }
+
+    fn append_charge(&self, charge: LedgerCharge) -> Result<()> {
+        self.inner.lock().unwrap().apply_charge(charge);
+        Ok(())
+    }
+
+    fn charges(&self) -> Result<Vec<LedgerCharge>> {
+        Ok(self.inner.lock().unwrap().charges.clone())
+    }
+
+    fn round(&self, round_id: u64) -> Result<Option<RoundState>> {
+        Ok(self.inner.lock().unwrap().states.get(&round_id).cloned())
+    }
+
+    fn rounds(&self) -> Result<Vec<RoundState>> {
+        Ok(self.inner.lock().unwrap().rounds())
+    }
+
+    fn session_tag(&self) -> Result<Option<u64>> {
+        Ok(self.inner.lock().unwrap().session_tag)
+    }
+
+    fn set_session_tag(&self, tag: u64) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.session_tag {
+            Some(t) => Ok(t),
+            None => {
+                inner.session_tag = Some(tag);
+                Ok(tag)
+            }
+        }
+    }
+
+    fn compact(&self) -> Result<()> {
+        Ok(())
+    }
+
+    fn recovery(&self) -> RecoveryStatus {
+        RecoveryStatus::default()
+    }
+}
+
+// ====================================================================
+// WAL backend
+// ====================================================================
+
+/// One parsed WAL record.
+enum WalRecord {
+    Event(RoundEvent),
+    Charge(LedgerCharge),
+    Meta(u64),
+}
+
+impl WalRecord {
+    fn to_json(&self) -> Json {
+        match self {
+            WalRecord::Event(ev) => Json::obj().set("event", ev.to_json()),
+            WalRecord::Charge(c) => Json::obj().set("charge", c.to_json()),
+            WalRecord::Meta(tag) => Json::obj().set(
+                "meta",
+                Json::obj().set("session_tag", round_id_to_hex(*tag).as_str()),
+            ),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<WalRecord> {
+        if let Some(ev) = j.get("event") {
+            return Ok(WalRecord::Event(RoundEvent::from_json(ev)?));
+        }
+        if let Some(c) = j.get("charge") {
+            return Ok(WalRecord::Charge(LedgerCharge::from_json(c)?));
+        }
+        if let Some(m) = j.get("meta") {
+            return Ok(WalRecord::Meta(need_hex_u64(m, "session_tag")?));
+        }
+        Err(FedError::Json("unknown WAL record shape".into()))
+    }
+}
+
+/// Frame one serialized payload as a WAL line: `FDW1 <8-hex-crc> <json>\n`.
+fn frame_line(payload: &str) -> String {
+    format!("{WAL_MAGIC} {:08x} {payload}\n", crc32(payload.as_bytes()))
+}
+
+/// Unframe one WAL line; returns the verified JSON payload.
+fn unframe_line(line: &str) -> Result<&str> {
+    let rest = line
+        .strip_prefix(WAL_MAGIC)
+        .and_then(|r| r.strip_prefix(' '))
+        .ok_or_else(|| FedError::Json("WAL line missing FDW1 magic".into()))?;
+    let (crc_hex, payload) = rest
+        .split_once(' ')
+        .ok_or_else(|| FedError::Json("WAL line missing crc field".into()))?;
+    let want = u32::from_str_radix(crc_hex, 16)
+        .map_err(|_| FedError::Json("WAL line has malformed crc".into()))?;
+    let got = crc32(payload.as_bytes());
+    if want != got {
+        return Err(FedError::Json(format!(
+            "WAL line crc mismatch (want {want:08x}, got {got:08x})"
+        )));
+    }
+    Ok(payload)
+}
+
+struct WalInner {
+    mem: StoreInner,
+    file: fs::File,
+    appends_since_compact: usize,
+    recovery: RecoveryStatus,
+}
+
+/// The durable [`RoundStore`]: a directory holding
+///
+/// * `wal.jsonl` — one CRC-framed JSON record per line, appended on
+///   every transition, fsynced on phase boundaries (and always for
+///   `LearnClosed`, charges and metadata — the records recovery cannot
+///   re-derive);
+/// * `snapshot.json` — a CRC-framed compaction of everything before the
+///   current WAL, rewritten atomically (`snapshot.tmp` + rename) every
+///   [`COMPACT_EVERY`] appends or on [`RoundStore::compact`].
+///
+/// Reopening replays snapshot + WAL.  A line that fails its CRC or does
+/// not parse marks the *corrupt tail*: it and everything after it are
+/// counted, the file is truncated back to the last good line, and every
+/// round still in flight is marked [`RoundState::tainted`] — the
+/// coordinator then voids tainted rounds under its `RevealPolicy`
+/// rather than resuming from a log whose tail is missing.
+///
+/// One store directory belongs to one coordinator process at a time;
+/// concurrent writers are not detected.
+pub struct WalRoundStore {
+    dir: PathBuf,
+    inner: Mutex<WalInner>,
+}
+
+impl WalRoundStore {
+    /// Open (or create) a store directory, replaying any existing
+    /// snapshot + WAL.  A corrupt *snapshot* is a hard error — it is
+    /// rewritten atomically, so corruption means operator intervention;
+    /// a corrupt WAL *tail* is expected crash damage and is handled as
+    /// described on the type.
+    pub fn open(dir: impl AsRef<Path>) -> Result<WalRoundStore> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)?;
+        let mut mem = StoreInner::default();
+        let mut recovery = RecoveryStatus::default();
+
+        let snap_path = dir.join("snapshot.json");
+        if snap_path.exists() {
+            let text = fs::read_to_string(&snap_path)?;
+            let payload = text
+                .strip_prefix(SNAP_MAGIC)
+                .and_then(|r| r.strip_prefix(' '))
+                .ok_or_else(|| {
+                    FedError::Json(format!(
+                        "{}: missing {SNAP_MAGIC} magic",
+                        snap_path.display()
+                    ))
+                })?;
+            let (crc_hex, body) = payload.split_once(' ').ok_or_else(|| {
+                FedError::Json(format!("{}: missing crc field", snap_path.display()))
+            })?;
+            let want = u32::from_str_radix(crc_hex, 16).map_err(|_| {
+                FedError::Json(format!("{}: malformed crc", snap_path.display()))
+            })?;
+            if want != crc32(body.as_bytes()) {
+                return Err(FedError::Json(format!(
+                    "{}: snapshot crc mismatch — refusing to open a \
+                     corrupt round store snapshot",
+                    snap_path.display()
+                )));
+            }
+            mem.load_snapshot_json(&Json::parse(body)?)?;
+            recovery.snapshot_loaded = true;
+        }
+
+        let wal_path = dir.join("wal.jsonl");
+        let mut good_bytes: u64 = 0;
+        let mut corrupt_tail = 0usize;
+        if wal_path.exists() {
+            let text = fs::read_to_string(&wal_path)?;
+            let mut offset = 0usize;
+            let mut lines = Vec::new();
+            // split keeping byte offsets so the tail truncation point is
+            // exact even if the final line has no newline
+            for line in text.split_inclusive('\n') {
+                lines.push((offset, line));
+                offset += line.len();
+            }
+            for (i, (start, raw)) in lines.iter().enumerate() {
+                let line = raw.trim_end_matches('\n');
+                if line.is_empty() {
+                    good_bytes = (*start + raw.len()) as u64;
+                    continue;
+                }
+                let applied = unframe_line(line)
+                    .and_then(|payload| WalRecord::from_json(&Json::parse(payload)?))
+                    .and_then(|rec| {
+                        match rec {
+                            WalRecord::Event(ev) => {
+                                mem.apply_event(&ev)?;
+                            }
+                            WalRecord::Charge(c) => mem.apply_charge(c),
+                            WalRecord::Meta(tag) => {
+                                if mem.session_tag.is_none() {
+                                    mem.session_tag = Some(tag);
+                                }
+                            }
+                        }
+                        Ok(())
+                    });
+                match applied {
+                    Ok(()) => {
+                        // a line not terminated by '\n' replayed fine but a
+                        // concurrent append could interleave with it; still
+                        // count it good — append() always writes whole lines
+                        good_bytes = (*start + raw.len()) as u64;
+                        recovery.events_replayed += 1;
+                    }
+                    Err(e) => {
+                        corrupt_tail = lines.len() - i;
+                        log::warn!(target: "coordinator::round_store",
+                            "{}: corrupt WAL tail at byte {start} ({e}) — \
+                             truncating {corrupt_tail} record(s), tainting \
+                             in-flight rounds",
+                            wal_path.display());
+                        break;
+                    }
+                }
+            }
+            if corrupt_tail > 0 {
+                // drop the unreadable tail so the next append starts from
+                // a clean frame boundary...
+                let f = fs::OpenOptions::new().write(true).open(&wal_path)?;
+                f.set_len(good_bytes)?;
+                f.sync_data()?;
+                // ...and poison every round the missing records may have
+                // belonged to
+                for s in mem.states.values_mut() {
+                    if !s.phase.is_terminal() {
+                        s.tainted = true;
+                    }
+                }
+            }
+        }
+        recovery.corrupt_tail_events = corrupt_tail;
+        recovery.rounds_loaded = mem.states.len();
+        recovery.in_flight = mem
+            .states
+            .values()
+            .filter(|s| !s.phase.is_terminal())
+            .count();
+
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&wal_path)?;
+        Ok(WalRoundStore {
+            dir,
+            inner: Mutex::new(WalInner {
+                mem,
+                file,
+                appends_since_compact: 0,
+                recovery,
+            }),
+        })
+    }
+
+    /// The store directory this WAL lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn write_record(
+        &self,
+        inner: &mut WalInner,
+        rec: &WalRecord,
+        sync: bool,
+    ) -> Result<()> {
+        let line = frame_line(&rec.to_json().to_string());
+        inner.file.write_all(line.as_bytes())?;
+        inner.file.flush()?;
+        if sync {
+            inner.file.sync_data()?;
+        }
+        inner.appends_since_compact += 1;
+        if inner.appends_since_compact >= COMPACT_EVERY {
+            self.compact_locked(inner)?;
+        }
+        Ok(())
+    }
+
+    fn compact_locked(&self, inner: &mut WalInner) -> Result<()> {
+        let body = inner.mem.snapshot_json().to_string();
+        let framed = format!("{SNAP_MAGIC} {:08x} {body}", crc32(body.as_bytes()));
+        let tmp = self.dir.join("snapshot.tmp");
+        let snap = self.dir.join("snapshot.json");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(framed.as_bytes())?;
+            f.sync_data()?;
+        }
+        fs::rename(&tmp, &snap)?;
+        // make the rename + truncation durable on platforms where the
+        // directory entry needs its own sync; best-effort elsewhere
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        let wal_path = self.dir.join("wal.jsonl");
+        fs::File::create(&wal_path)?; // truncate: everything is in the snapshot now
+        inner.file = fs::OpenOptions::new().append(true).open(&wal_path)?;
+        inner.appends_since_compact = 0;
+        Ok(())
+    }
+}
+
+impl RoundStore for WalRoundStore {
+    fn append(&self, ev: RoundEvent) -> Result<RoundPhase> {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.mem.states.get(&ev.round_id).map(|s| s.phase);
+        let next = inner.mem.apply_event(&ev)?;
+        // fsync at phase boundaries; LearnClosed keeps Learn -> Learn but
+        // carries the collected updates — the one payload recovery cannot
+        // re-derive from the clients — so it syncs too
+        let sync =
+            before != Some(next) || matches!(ev.kind, EventKind::LearnClosed { .. });
+        self.write_record(&mut inner, &WalRecord::Event(ev), sync)?;
+        Ok(next)
+    }
+
+    fn append_charge(&self, charge: LedgerCharge) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.mem.apply_charge(charge.clone());
+        self.write_record(&mut inner, &WalRecord::Charge(charge), true)
+    }
+
+    fn charges(&self) -> Result<Vec<LedgerCharge>> {
+        Ok(self.inner.lock().unwrap().mem.charges.clone())
+    }
+
+    fn round(&self, round_id: u64) -> Result<Option<RoundState>> {
+        Ok(self
+            .inner
+            .lock()
+            .unwrap()
+            .mem
+            .states
+            .get(&round_id)
+            .cloned())
+    }
+
+    fn rounds(&self) -> Result<Vec<RoundState>> {
+        Ok(self.inner.lock().unwrap().mem.rounds())
+    }
+
+    fn session_tag(&self) -> Result<Option<u64>> {
+        Ok(self.inner.lock().unwrap().mem.session_tag)
+    }
+
+    fn set_session_tag(&self, tag: u64) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(t) = inner.mem.session_tag {
+            return Ok(t);
+        }
+        inner.mem.session_tag = Some(tag);
+        self.write_record(&mut inner, &WalRecord::Meta(tag), true)?;
+        Ok(tag)
+    }
+
+    fn compact(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        self.compact_locked(&mut inner)
+    }
+
+    fn recovery(&self) -> RecoveryStatus {
+        self.inner.lock().unwrap().recovery.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "feddart_round_store_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn tb(vals: &[f32]) -> TensorBuf {
+        TensorBuf::from_f32_slice(vals)
+    }
+
+    fn configured(round_id: u64) -> RoundEvent {
+        RoundEvent::new(
+            round_id,
+            EventKind::Configured {
+                clustering_round: 0,
+                cluster_id: 1,
+                round: 2,
+                cohort: vec!["a".into(), "b".into(), "c".into()],
+                sample_rate: 0.75,
+                mode: "secagg+dp".into(),
+                params: tb(&[1.0, 2.0, 3.0]),
+                deadline_ms: 500,
+                session_tag: 0xdead_beef_dead_beef,
+            },
+        )
+    }
+
+    fn keys(round_id: u64) -> RoundEvent {
+        let mut pk = BTreeMap::new();
+        pk.insert("a".to_string(), "aa11".to_string());
+        pk.insert("b".to_string(), "bb22".to_string());
+        pk.insert("c".to_string(), "cc33".to_string());
+        RoundEvent::new(
+            round_id,
+            EventKind::KeysCollected {
+                pubkeys: pk,
+                threshold: 2,
+            },
+        )
+    }
+
+    fn shares(round_id: u64) -> RoundEvent {
+        let mut enc = BTreeMap::new();
+        let mut inner = BTreeMap::new();
+        inner.insert("b".to_string(), "cafe".to_string());
+        enc.insert("a".to_string(), inner.clone());
+        let mut commits = BTreeMap::new();
+        commits.insert("a".to_string(), inner);
+        RoundEvent::new(
+            round_id,
+            EventKind::SharesDealt {
+                participants: vec!["a".into(), "b".into(), "c".into()],
+                enc_shares: enc,
+                commits,
+            },
+        )
+    }
+
+    fn dispatched(round_id: u64) -> RoundEvent {
+        RoundEvent::new(
+            round_id,
+            EventKind::LearnDispatched {
+                addressed: vec!["a".into(), "b".into(), "c".into()],
+                dispatched_at_ms: 1_000,
+                deadline_ms: 500,
+            },
+        )
+    }
+
+    fn learn_closed(round_id: u64) -> RoundEvent {
+        RoundEvent::new(
+            round_id,
+            EventKind::LearnClosed {
+                updates: vec![StoredUpdate {
+                    device: "a".into(),
+                    params: tb(&[0.5, 0.5, 0.5]),
+                    n_samples: 10.0,
+                    loss: 0.25,
+                    duration: 1.5,
+                }],
+                late: 1,
+                dropped: vec!["c".into()],
+            },
+        )
+    }
+
+    fn revealed(round_id: u64) -> RoundEvent {
+        RoundEvent::new(
+            round_id,
+            EventKind::Revealed {
+                audit: Json::obj().set("outcome", "recovered"),
+            },
+        )
+    }
+
+    fn aggregated(round_id: u64) -> RoundEvent {
+        RoundEvent::new(
+            round_id,
+            EventKind::Aggregated {
+                params: tb(&[1.5, 2.5, 3.5]),
+                record: Json::obj().set("mean_loss", 0.25),
+            },
+        )
+    }
+
+    fn full_round(store: &dyn RoundStore, round_id: u64) {
+        store.append(configured(round_id)).unwrap();
+        store.append(keys(round_id)).unwrap();
+        store.append(shares(round_id)).unwrap();
+        store.append(dispatched(round_id)).unwrap();
+        store.append(learn_closed(round_id)).unwrap();
+        store.append(revealed(round_id)).unwrap();
+        store.append(aggregated(round_id)).unwrap();
+        store.append(RoundEvent::new(round_id, EventKind::Closed)).unwrap();
+    }
+
+    #[test]
+    fn transition_table_legal_and_illegal() {
+        use RoundPhase as P;
+        // the canonical full path
+        assert_eq!(
+            transition(None, &configured(1).kind).unwrap(),
+            P::Configured
+        );
+        assert_eq!(
+            transition(Some(P::Configured), &keys(1).kind).unwrap(),
+            P::Keys
+        );
+        assert_eq!(transition(Some(P::Keys), &shares(1).kind).unwrap(), P::Shares);
+        assert_eq!(
+            transition(Some(P::Shares), &dispatched(1).kind).unwrap(),
+            P::Learn
+        );
+        assert_eq!(
+            transition(Some(P::Learn), &learn_closed(1).kind).unwrap(),
+            P::Learn
+        );
+        assert_eq!(
+            transition(Some(P::Learn), &revealed(1).kind).unwrap(),
+            P::Reveal
+        );
+        assert_eq!(
+            transition(Some(P::Reveal), &aggregated(1).kind).unwrap(),
+            P::Aggregated
+        );
+        assert_eq!(
+            transition(Some(P::Aggregated), &EventKind::Closed).unwrap(),
+            P::Closed
+        );
+        // skip edges
+        assert_eq!(
+            transition(Some(P::Configured), &dispatched(1).kind).unwrap(),
+            P::Learn
+        );
+        assert_eq!(
+            transition(Some(P::Keys), &dispatched(1).kind).unwrap(),
+            P::Learn
+        );
+        assert_eq!(
+            transition(Some(P::Learn), &aggregated(1).kind).unwrap(),
+            P::Aggregated
+        );
+        // recovery re-entry edges
+        assert_eq!(transition(Some(P::Keys), &keys(1).kind).unwrap(), P::Keys);
+        assert_eq!(
+            transition(Some(P::Shares), &shares(1).kind).unwrap(),
+            P::Shares
+        );
+        assert_eq!(
+            transition(Some(P::Learn), &dispatched(1).kind).unwrap(),
+            P::Learn
+        );
+        assert_eq!(
+            transition(Some(P::Reveal), &revealed(1).kind).unwrap(),
+            P::Reveal
+        );
+        // abandonment from any non-terminal phase
+        for p in [P::Configured, P::Keys, P::Shares, P::Learn, P::Reveal, P::Aggregated]
+        {
+            assert_eq!(
+                transition(
+                    Some(p),
+                    &EventKind::Voided {
+                        reason: "x".into(),
+                        record: Json::Null
+                    }
+                )
+                .unwrap(),
+                P::Voided
+            );
+        }
+        // illegal sequences
+        assert!(transition(None, &keys(1).kind).is_err());
+        assert!(transition(Some(P::Configured), &configured(1).kind).is_err());
+        assert!(transition(Some(P::Configured), &shares(1).kind).is_err());
+        assert!(transition(Some(P::Configured), &revealed(1).kind).is_err());
+        assert!(transition(Some(P::Closed), &dispatched(1).kind).is_err());
+        assert!(transition(
+            Some(P::Closed),
+            &EventKind::Voided {
+                reason: "x".into(),
+                record: Json::Null
+            }
+        )
+        .is_err());
+        assert!(transition(Some(P::Voided), &EventKind::Closed).is_err());
+    }
+
+    #[test]
+    fn event_json_round_trip() {
+        for ev in [
+            configured(42),
+            keys(42),
+            shares(42),
+            dispatched(42),
+            learn_closed(42),
+            revealed(42),
+            aggregated(42),
+            RoundEvent::new(42, EventKind::Closed),
+            RoundEvent::new(
+                42,
+                EventKind::Voided {
+                    reason: "deadline elapsed".into(),
+                    record: Json::obj().set("mean_loss", 0.0),
+                },
+            ),
+        ] {
+            let j = ev.to_json();
+            let text = j.to_string();
+            let back = RoundEvent::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.round_id, ev.round_id);
+            assert_eq!(back.kind.tag(), ev.kind.tag());
+            // round-trips stay equal through a second cycle
+            assert_eq!(back.to_json().to_string(), text);
+        }
+    }
+
+    #[test]
+    fn round_state_json_round_trip() {
+        let store = MemRoundStore::new();
+        let big = u64::MAX - 5; // above 2^53: hex encoding must hold it
+        store.append(configured(big)).unwrap();
+        store.append(keys(big)).unwrap();
+        store.append(shares(big)).unwrap();
+        store.append(dispatched(big)).unwrap();
+        store.append(learn_closed(big)).unwrap();
+        let state = store.round(big).unwrap().unwrap();
+        let text = state.to_json().to_string();
+        let back = RoundState::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.round_id, big);
+        assert_eq!(back.phase, RoundPhase::Learn);
+        assert_eq!(back.session_tag, 0xdead_beef_dead_beef);
+        assert_eq!(back.cohort, state.cohort);
+        assert_eq!(back.updates.len(), 1);
+        assert_eq!(back.updates[0].params.as_f32_slice(), &[0.5, 0.5, 0.5]);
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn terminal_rounds_trim_bulk_but_keep_outcome() {
+        let store = MemRoundStore::new();
+        full_round(&store, 7);
+        let s = store.round(7).unwrap().unwrap();
+        assert_eq!(s.phase, RoundPhase::Closed);
+        assert!(s.params.is_none());
+        assert!(s.updates.is_empty());
+        assert!(s.enc_shares.is_empty());
+        assert_eq!(
+            s.params_after.as_ref().unwrap().as_f32_slice(),
+            &[1.5, 2.5, 3.5]
+        );
+        assert!(s.record.is_some());
+    }
+
+    #[test]
+    fn mem_and_wal_agree() {
+        let dir = tmp_dir("agree");
+        let mem = MemRoundStore::new();
+        let wal = WalRoundStore::open(&dir).unwrap();
+        for store in [&mem as &dyn RoundStore, &wal as &dyn RoundStore] {
+            full_round(store, 11);
+            store.append(configured(12)).unwrap();
+            store.append(keys(12)).unwrap();
+            store
+                .append_charge(LedgerCharge {
+                    clustering_round: 0,
+                    round: 2,
+                    q: 0.75,
+                    noise_multiplier: 1.1,
+                })
+                .unwrap();
+        }
+        let a = mem.rounds().unwrap();
+        let b = wal.rounds().unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_json().to_string(), y.to_json().to_string());
+        }
+        assert_eq!(mem.charges().unwrap().len(), wal.charges().unwrap().len());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_replay_restores_everything() {
+        let dir = tmp_dir("replay");
+        {
+            let wal = WalRoundStore::open(&dir).unwrap();
+            assert_eq!(wal.set_session_tag(99).unwrap(), 99);
+            full_round(&wal, 21);
+            wal.append(configured(22)).unwrap();
+            wal.append(keys(22)).unwrap();
+            wal.append(shares(22)).unwrap();
+            wal.append_charge(LedgerCharge {
+                clustering_round: 0,
+                round: 2,
+                q: 0.75,
+                noise_multiplier: 1.1,
+            })
+            .unwrap();
+            // dropped without compaction: pure WAL replay
+        }
+        let wal = WalRoundStore::open(&dir).unwrap();
+        let rec = wal.recovery();
+        assert!(rec.events_replayed > 0);
+        assert_eq!(rec.corrupt_tail_events, 0);
+        assert_eq!(rec.rounds_loaded, 2);
+        assert_eq!(rec.in_flight, 1);
+        assert!(!rec.snapshot_loaded);
+        assert_eq!(wal.session_tag().unwrap(), Some(99));
+        // an existing tag wins over the caller's
+        assert_eq!(wal.set_session_tag(123).unwrap(), 99);
+        let closed = wal.round(21).unwrap().unwrap();
+        assert_eq!(closed.phase, RoundPhase::Closed);
+        assert_eq!(
+            closed.params_after.as_ref().unwrap().as_f32_slice(),
+            &[1.5, 2.5, 3.5]
+        );
+        let open_round = wal.round(22).unwrap().unwrap();
+        assert_eq!(open_round.phase, RoundPhase::Shares);
+        assert!(!open_round.tainted);
+        assert_eq!(
+            open_round.params.as_ref().unwrap().as_f32_slice(),
+            &[1.0, 2.0, 3.0]
+        );
+        assert_eq!(open_round.enc_shares["a"]["b"], "cafe");
+        let charges = wal.charges().unwrap();
+        assert_eq!(charges.len(), 1);
+        assert_eq!(charges[0].key(), (0, 2));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_tail_truncated_and_tainted() {
+        let dir = tmp_dir("corrupt");
+        {
+            let wal = WalRoundStore::open(&dir).unwrap();
+            full_round(&wal, 31);
+            wal.append(configured(32)).unwrap();
+            wal.append(keys(32)).unwrap();
+        }
+        // simulate a crash mid-write: garbage where the next frame began
+        let wal_path = dir.join("wal.jsonl");
+        let mut f = fs::OpenOptions::new().append(true).open(&wal_path).unwrap();
+        f.write_all(b"FDW1 00000000 {\"event\": garbage\nFDW1 trailing\n")
+            .unwrap();
+        drop(f);
+        let before_len = fs::metadata(&wal_path).unwrap().len();
+
+        let wal = WalRoundStore::open(&dir).unwrap();
+        let rec = wal.recovery();
+        assert_eq!(rec.corrupt_tail_events, 2);
+        assert_eq!(rec.rounds_loaded, 2);
+        // the closed round is untouched; the in-flight one is poisoned
+        assert!(!wal.round(31).unwrap().unwrap().tainted);
+        assert!(wal.round(32).unwrap().unwrap().tainted);
+        assert_eq!(wal.round(32).unwrap().unwrap().phase, RoundPhase::Keys);
+        // the unreadable tail was physically dropped
+        assert!(fs::metadata(&wal_path).unwrap().len() < before_len);
+        // and appends continue cleanly after truncation
+        wal.append(shares(32)).unwrap();
+        let wal2 = WalRoundStore::open(&dir).unwrap();
+        assert_eq!(wal2.recovery().corrupt_tail_events, 0);
+        assert_eq!(wal2.round(32).unwrap().unwrap().phase, RoundPhase::Shares);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_refuses_to_open() {
+        let dir = tmp_dir("badsnap");
+        {
+            let wal = WalRoundStore::open(&dir).unwrap();
+            full_round(&wal, 41);
+            wal.compact().unwrap();
+        }
+        let snap = dir.join("snapshot.json");
+        let mut text = fs::read_to_string(&snap).unwrap();
+        text.truncate(text.len() - 4); // chop the tail: crc must fail
+        fs::write(&snap, text).unwrap();
+        assert!(WalRoundStore::open(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_then_reopen() {
+        let dir = tmp_dir("compact");
+        {
+            let wal = WalRoundStore::open(&dir).unwrap();
+            wal.set_session_tag(7).unwrap();
+            full_round(&wal, 51);
+            wal.append(configured(52)).unwrap();
+            wal.append_charge(LedgerCharge {
+                clustering_round: 0,
+                round: 2,
+                q: 0.5,
+                noise_multiplier: 0.9,
+            })
+            .unwrap();
+            wal.compact().unwrap();
+            // WAL is empty after compaction; new appends land in it
+            assert_eq!(
+                fs::metadata(dir.join("wal.jsonl")).unwrap().len(),
+                0
+            );
+            wal.append(keys(52)).unwrap();
+        }
+        let wal = WalRoundStore::open(&dir).unwrap();
+        let rec = wal.recovery();
+        assert!(rec.snapshot_loaded);
+        assert_eq!(rec.rounds_loaded, 2);
+        assert_eq!(wal.session_tag().unwrap(), Some(7));
+        assert_eq!(wal.round(51).unwrap().unwrap().phase, RoundPhase::Closed);
+        assert_eq!(wal.round(52).unwrap().unwrap().phase, RoundPhase::Keys);
+        assert_eq!(wal.charges().unwrap().len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn charges_dedup_on_key() {
+        let store = MemRoundStore::new();
+        for _ in 0..3 {
+            store
+                .append_charge(LedgerCharge {
+                    clustering_round: 1,
+                    round: 4,
+                    q: 0.5,
+                    noise_multiplier: 1.0,
+                })
+                .unwrap();
+        }
+        assert_eq!(store.charges().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn status_json_lists_rounds() {
+        let store = MemRoundStore::new();
+        full_round(&store, 61);
+        store.append(configured(62)).unwrap();
+        let j = store.status_json().unwrap();
+        assert_eq!(j.get("attached").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("total").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("in_flight").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("rounds").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+}

@@ -17,6 +17,8 @@
 //! * `DELETE /tasks/{id}`        → stop task
 //! * `GET  /metrics`             → metrics registry snapshot
 //! * `GET  /logs?n=100`          → LogServer tail
+//! * `GET  /rounds`              → round-store listing (phase per round)
+//! * `GET  /rounds/recovery`     → what the last WAL open replayed
 //!
 //! Worker-side REST (batched dispatch for clients that cannot hold a DART
 //! TCP connection — see [`crate::dart::rest::RestWorker`]):
@@ -38,6 +40,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::config::HardwareConfig;
+use crate::coordinator::round_store::RoundStore;
 use crate::dart::protocol::{
     status_to_str, task_result_to_json, unit_report_from_json, work_unit_to_json,
     ClientMsg, ServerMsg,
@@ -86,6 +89,9 @@ pub struct DartServerConfig {
     /// Whether `/round/{id}/...` privacy rounds may be negotiated; when
     /// false every round config request is downgraded to mode `off`.
     pub privacy_enabled: bool,
+    /// Round store surfaced read-only under `GET /rounds` (typically the
+    /// coordinator's WAL-backed store); `None` hides the durability view.
+    pub round_store: Option<Arc<dyn RoundStore>>,
 }
 
 impl Default for DartServerConfig {
@@ -97,6 +103,7 @@ impl Default for DartServerConfig {
             rest_key: "000".into(),
             heartbeat_timeout_ms: HEARTBEAT_TIMEOUT_MS,
             privacy_enabled: true,
+            round_store: None,
         }
     }
 }
@@ -187,6 +194,7 @@ impl DartServer {
                 key: cfg.rest_key.clone(),
                 rounds: RoundRegistry::default(),
                 privacy_enabled: cfg.privacy_enabled,
+                round_store: cfg.round_store.clone(),
             }),
         )?;
 
@@ -341,6 +349,8 @@ struct RestHandler {
     /// secure-aggregation rounds (the privacy bulletin board)
     rounds: RoundRegistry,
     privacy_enabled: bool,
+    /// durable round-lifecycle view (`GET /rounds`), when attached
+    round_store: Option<Arc<dyn RoundStore>>,
 }
 
 impl Handler for RestHandler {
@@ -418,6 +428,22 @@ impl RestHandler {
                 self.scheduler.stop_task(id)?;
                 Ok(Response::ok_json(&Json::obj().set("stopped", true)))
             }
+            ("GET", ["rounds"]) => match &self.round_store {
+                Some(store) => Ok(Response::ok_json(&store.status_json()?)),
+                None => Ok(Response::ok_json(
+                    &Json::obj()
+                        .set("attached", false)
+                        .set("rounds", Json::Arr(Vec::new())),
+                )),
+            },
+            ("GET", ["rounds", "recovery"]) => match &self.round_store {
+                Some(store) => {
+                    Ok(Response::ok_json(&store.recovery().to_json()))
+                }
+                None => Ok(Response::ok_json(
+                    &Json::obj().set("attached", false),
+                )),
+            },
             // ------------------------- worker-side REST (batched dispatch)
             ("POST", ["worker", "register"]) => {
                 let body = req.body_json()?;

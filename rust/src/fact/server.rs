@@ -6,13 +6,17 @@
 //! methods, one for initializing the server and the clients and one to
 //! launch the training."
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::ParticipationConfig;
 use crate::coordinator::participation::{
     participation_round_key, Candidate, CohortSampler,
+};
+use crate::coordinator::round_store::{
+    now_ms, EventKind, LedgerCharge, MemRoundStore, RecoveryStatus, RoundEvent,
+    RoundPhase, RoundState, RoundStore, StoredUpdate,
 };
 use crate::coordinator::workflow::{RoundClose, WorkflowManager};
 use crate::error::{FedError, Result};
@@ -54,6 +58,68 @@ pub struct SecAggAudit {
     pub outcome: &'static str,
 }
 
+impl SecAggAudit {
+    /// Serialize for the round store (`Revealed` events, `RoundRecord`s).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("participants", self.participants)
+            .set("threshold", self.threshold)
+            .set(
+                "dropped",
+                Json::Arr(self.dropped.iter().cloned().map(Json::Str).collect()),
+            )
+            .set("direct_reveals", self.direct_reveals)
+            .set(
+                "reconstructed",
+                Json::Arr(self.reconstructed.iter().cloned().map(Json::Str).collect()),
+            )
+            .set(
+                "unrecovered",
+                Json::Arr(self.unrecovered.iter().cloned().map(Json::Str).collect()),
+            )
+            .set("policy", self.policy.as_str())
+            .set("outcome", self.outcome)
+    }
+
+    /// Parse the store form back.
+    pub fn from_json(j: &Json) -> Result<SecAggAudit> {
+        let strs = |key: &str| -> Vec<String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        Ok(SecAggAudit {
+            participants: j
+                .get("participants")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            threshold: j.get("threshold").and_then(Json::as_usize).unwrap_or(0),
+            dropped: strs("dropped"),
+            direct_reveals: j
+                .get("direct_reveals")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            reconstructed: strs("reconstructed"),
+            unrecovered: strs("unrecovered"),
+            policy: RevealPolicy::parse(
+                j.get("policy").and_then(Json::as_str).unwrap_or("abort"),
+            )?,
+            // map back onto the audit's static vocabulary
+            outcome: match j.get("outcome").and_then(Json::as_str) {
+                Some("recovered") => "recovered",
+                Some("skipped") => "skipped",
+                Some("aborted") => "aborted",
+                _ => "ok",
+            },
+        })
+    }
+}
+
 /// Per-round record (feeds EXPERIMENTS.md and the benches).
 #[derive(Debug, Clone)]
 pub struct RoundRecord {
@@ -84,6 +150,79 @@ pub struct RoundRecord {
     pub mean_client_s: f64,
     /// secure-aggregation recovery audit (None outside secagg modes)
     pub secagg: Option<SecAggAudit>,
+}
+
+impl RoundRecord {
+    /// Serialize for the round store (`Aggregated`/`Voided` events) so
+    /// the audit history survives a coordinator restart.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .set("clustering_round", self.clustering_round)
+            .set("cluster_id", self.cluster_id)
+            .set("round", self.round)
+            .set("n_clients", self.n_clients)
+            .set("sampled", self.sampled)
+            .set("late", self.late)
+            .set("dropped", self.dropped)
+            .set("sample_rate", self.sample_rate)
+            .set("mean_loss", self.mean_loss)
+            .set("round_ms", self.round_ms)
+            .set("agg_ms", self.agg_ms)
+            .set("mean_client_s", self.mean_client_s);
+        if let Some(a) = &self.secagg {
+            o = o.set("secagg", a.to_json());
+        }
+        o
+    }
+
+    /// Parse the store form back.
+    pub fn from_json(j: &Json) -> Result<RoundRecord> {
+        let us = |key: &str| j.get(key).and_then(Json::as_usize).unwrap_or(0);
+        let f = |key: &str| j.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        Ok(RoundRecord {
+            clustering_round: us("clustering_round"),
+            cluster_id: us("cluster_id"),
+            round: us("round"),
+            n_clients: us("n_clients"),
+            sampled: us("sampled"),
+            late: us("late"),
+            dropped: us("dropped"),
+            sample_rate: f("sample_rate"),
+            mean_loss: f("mean_loss") as f32,
+            round_ms: f("round_ms"),
+            agg_ms: f("agg_ms"),
+            mean_client_s: f("mean_client_s"),
+            secagg: j.get("secagg").map(SecAggAudit::from_json).transpose()?,
+        })
+    }
+}
+
+/// What [`FactServer::recover`] found in the round store and what it did
+/// about it.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// What the store itself replayed on open (WAL/snapshot detail).
+    pub status: RecoveryStatus,
+    /// Closed/voided rounds restored into the audit history.
+    pub replayed_records: usize,
+    /// In-flight rounds queued for resumption by the next `learn()`.
+    pub resumed: usize,
+    /// Tainted in-flight rounds voided (reveal policy `proceed`).
+    pub voided: usize,
+    /// ε-ledger charges re-derived for closed-but-uncharged rounds.
+    pub charges_restored: usize,
+}
+
+impl RecoveryReport {
+    /// Serialize for the CLI / REST recovery surfaces.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("store", self.status.to_json())
+            .set("replayed_records", self.replayed_records)
+            .set("resumed", self.resumed)
+            .set("voided", self.voided)
+            .set("charges_restored", self.charges_restored)
+    }
 }
 
 /// Evaluation summary for one cluster.
@@ -161,6 +300,25 @@ pub struct FactServer {
     /// latest local update per client (clustering input)
     latest_updates: BTreeMap<String, Vec<f32>>,
     initialized: bool,
+    /// The round state machine's home: every round's lifecycle is
+    /// appended here (in-memory by default, WAL-backed via
+    /// [`FactServer::with_round_store`]).
+    store: Arc<dyn RoundStore>,
+    /// In-flight rounds loaded by [`FactServer::recover`], keyed by
+    /// `(clustering_round, cluster_id, round)`; consumed by the next
+    /// `learn()` call, which resumes them instead of starting fresh.
+    resume_plans: BTreeMap<(usize, usize, usize), RoundState>,
+    /// Rounds the store already closed (replayed by `recover()`); the
+    /// next `learn()` skips them outright.
+    completed_rounds: BTreeSet<(usize, usize, usize)>,
+    /// ε-ledger charges already in the store — `learn()` must not charge
+    /// these round indices again.
+    already_charged: BTreeSet<(usize, usize)>,
+    /// Replayed charges whose round index still has an in-flight sibling
+    /// round: deferred so `learn()` can charge the max realized rate
+    /// across replayed + resumed clusters, exactly like an uninterrupted
+    /// run.
+    deferred_charges: BTreeMap<(usize, usize), f64>,
 }
 
 impl FactServer {
@@ -191,6 +349,11 @@ impl FactServer {
             history: Vec::new(),
             latest_updates: BTreeMap::new(),
             initialized: false,
+            store: Arc::new(MemRoundStore::new()),
+            resume_plans: BTreeMap::new(),
+            completed_rounds: BTreeSet::new(),
+            already_charged: BTreeSet::new(),
+            deferred_charges: BTreeMap::new(),
         }
     }
 
@@ -210,6 +373,208 @@ impl FactServer {
     /// The DP ledger accumulated so far (all zeros for non-DP modes).
     pub fn accountant(&self) -> &DpAccountant {
         &self.accountant
+    }
+
+    /// Put all round state behind a specific [`RoundStore`] backend
+    /// (e.g. [`crate::coordinator::round_store::WalRoundStore`] for a
+    /// durable, crash-recoverable coordinator).  Pair with
+    /// [`FactServer::recover`] after initialization to resume whatever
+    /// the store holds.
+    pub fn with_round_store(mut self, store: Arc<dyn RoundStore>) -> FactServer {
+        self.store = store;
+        self
+    }
+
+    /// Pin the per-process session tag (tests: reproducible round ids).
+    /// A tag already persisted in the round store still wins at
+    /// [`FactServer::recover`] time.
+    pub fn with_session_tag(mut self, tag: u64) -> FactServer {
+        self.session_tag = tag;
+        self
+    }
+
+    /// The round store every round's lifecycle is appended to.
+    pub fn round_store(&self) -> &Arc<dyn RoundStore> {
+        &self.store
+    }
+
+    /// The tag mixed into every derived round id this session.
+    pub fn session_tag(&self) -> u64 {
+        self.session_tag
+    }
+
+    /// Replay the round store and prepare to resume: adopt the stored
+    /// session tag (so fresh rounds derive the ids the dead coordinator
+    /// would have), rebuild the ε ledger from persisted charges, restore
+    /// the audit history and fast-forward cluster params over closed
+    /// rounds, heal closed-but-uncharged rounds (the snapshot/WAL fork),
+    /// and queue in-flight rounds for the next [`FactServer::learn`].
+    ///
+    /// Tainted rounds (a truncated/corrupt WAL tail touched them) are
+    /// never resumed: `RevealPolicy::Abort` fails recovery,
+    /// `RevealPolicy::Proceed` voids them and continues.
+    ///
+    /// Call after `initialization_by_*` (clusters must exist to
+    /// fast-forward) and after `with_privacy`.
+    pub fn recover(&mut self) -> Result<RecoveryReport> {
+        if !self.initialized {
+            return Err(FedError::Fact(
+                "recover() requires an initialized server".into(),
+            ));
+        }
+        self.session_tag = self.store.set_session_tag(self.session_tag)?;
+        let status = self.store.recovery();
+
+        // 1) the ε ledger: the store's charge log is the source of truth.
+        //    A stale Snapshot accountant can never fork history — the
+        //    never-backwards rule (mirroring restore_latest) keeps
+        //    whichever ledger has accounted more rounds.
+        let charges = self.store.charges()?;
+        if self.privacy.mode.has_dp() && !charges.is_empty() {
+            let mut acct =
+                DpAccountant::new(self.privacy.noise_multiplier as f64);
+            for c in &charges {
+                acct.add_round(c.q);
+            }
+            if acct.steps > self.accountant.steps {
+                self.accountant = acct;
+            }
+        }
+        self.already_charged = charges.iter().map(LedgerCharge::key).collect();
+
+        let rounds = self.store.rounds()?;
+        // 2) terminal rounds: restore records + loss history in execution
+        //    order, fast-forward params over closed rounds
+        let mut terminal: Vec<&RoundState> =
+            rounds.iter().filter(|r| r.phase.is_terminal()).collect();
+        terminal.sort_by_key(|r| (r.clustering_round, r.cluster_id, r.round));
+        let mut replayed_records = 0usize;
+        let mut uncharged: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+        for r in &terminal {
+            self.completed_rounds
+                .insert((r.clustering_round, r.cluster_id, r.round));
+            let rec = match &r.record {
+                Some(rj) => match RoundRecord::from_json(rj) {
+                    Ok(rec) => rec,
+                    Err(_) => continue,
+                },
+                None => continue, // e.g. voided before any update arrived
+            };
+            if let Some(cluster) = self
+                .container
+                .clusters
+                .iter_mut()
+                .find(|c| c.id == r.cluster_id)
+            {
+                cluster.loss_history.push(rec.mean_loss);
+                if r.phase == RoundPhase::Closed {
+                    if let Some(pa) = &r.params_after {
+                        if pa.len() == cluster.params.len() {
+                            cluster.params = pa.to_vec();
+                        }
+                    }
+                }
+            }
+            if r.phase == RoundPhase::Closed || r.void_reason.is_some() {
+                let key = (r.clustering_round, r.round);
+                if self.privacy.mode.has_dp() && !self.already_charged.contains(&key)
+                {
+                    let e = uncharged.entry(key).or_insert(0.0);
+                    if rec.sample_rate > *e {
+                        *e = rec.sample_rate;
+                    }
+                }
+            }
+            self.history.push(rec);
+            replayed_records += 1;
+        }
+
+        // 3) in-flight rounds: taint -> policy; otherwise queue a resume
+        //    plan for learn()
+        let mut resumed = 0usize;
+        let mut voided = 0usize;
+        let mut pending_keys: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for r in rounds.iter().filter(|r| !r.phase.is_terminal()) {
+            if r.tainted {
+                match self.privacy.reveal_policy {
+                    RevealPolicy::Abort => {
+                        return Err(FedError::Privacy(format!(
+                            "round store has a tainted in-flight round \
+                             (cluster {} round {}: corrupt WAL tail) — \
+                             reveal policy abort refuses to resume",
+                            r.cluster_id, r.round
+                        )));
+                    }
+                    RevealPolicy::Proceed => {
+                        self.store.append(RoundEvent::new(
+                            r.round_id,
+                            EventKind::Voided {
+                                reason: "corrupt WAL tail truncated mid-round"
+                                    .into(),
+                                record: Json::Null,
+                            },
+                        ))?;
+                        self.metrics.counter("fact.roundstore.voided").inc();
+                        // the round index is burned, not re-runnable: its
+                        // id is now terminal in the store
+                        self.completed_rounds.insert((
+                            r.clustering_round,
+                            r.cluster_id,
+                            r.round,
+                        ));
+                        voided += 1;
+                        continue;
+                    }
+                }
+            }
+            pending_keys.insert((r.clustering_round, r.round));
+            self.resume_plans
+                .insert((r.clustering_round, r.cluster_id, r.round), r.clone());
+            resumed += 1;
+        }
+
+        // 4) heal the ledger fork: closed rounds whose charge never made
+        //    it to disk.  Round indices with an in-flight sibling are
+        //    deferred so learn() charges the max realized rate across
+        //    replayed AND resumed clusters (what an uninterrupted run
+        //    would have charged).
+        let mut charges_restored = 0usize;
+        for (key, q) in uncharged {
+            if pending_keys.contains(&key) {
+                self.deferred_charges.insert(key, q);
+                continue;
+            }
+            self.store.append_charge(LedgerCharge {
+                clustering_round: key.0,
+                round: key.1,
+                q,
+                noise_multiplier: self.privacy.noise_multiplier as f64,
+            })?;
+            self.accountant.add_round(q);
+            self.already_charged.insert(key);
+            charges_restored += 1;
+        }
+
+        self.metrics
+            .counter("fact.roundstore.replayed")
+            .add(replayed_records as u64);
+        self.metrics
+            .counter("fact.roundstore.resumed")
+            .add(resumed as u64);
+        if status.events_replayed > 0 || resumed > 0 || voided > 0 {
+            log::info!(target: "fact::server",
+                "recover: {} event(s) replayed, {} record(s) restored, \
+                 {} round(s) to resume, {} voided, {} charge(s) healed",
+                status.events_replayed, replayed_records, resumed, voided,
+                charges_restored);
+        }
+        Ok(RecoveryReport {
+            status,
+            replayed_records,
+            resumed,
+            voided,
+            charges_restored,
+        })
     }
 
     /// Enable partial-participation rounds: every training round samples
@@ -429,6 +794,10 @@ impl FactServer {
                 }
             }
         }
+        // resume bookkeeping is consumed by THIS learn() call: a second
+        // call is a fresh session and must not skip its own rounds
+        let completed = Arc::new(std::mem::take(&mut self.completed_rounds));
+        let plans = Arc::new(std::mem::take(&mut self.resume_plans));
         let mut clustering_round = 0;
         loop {
             // Alg 4 line 2: "foreach cluster ... do in parallel".
@@ -444,6 +813,9 @@ impl FactServer {
             let known_samples = self.client_samples.clone();
             let metrics = self.metrics.clone();
             let session_tag = self.session_tag;
+            let store = Arc::clone(&self.store);
+            let completed = Arc::clone(&completed);
+            let plans = Arc::clone(&plans);
             let outputs = self.pool.map(clusters, move |mut cluster| {
                 let ctx = RoundCtx {
                     wm: &wm,
@@ -458,6 +830,9 @@ impl FactServer {
                     known_samples: &known_samples,
                     metrics: &metrics,
                     session_tag,
+                    store: &store,
+                    completed: &completed,
+                    plans: &plans,
                 };
                 let out = train_cluster(&ctx, &mut cluster);
                 (cluster, out)
@@ -484,6 +859,8 @@ impl FactServer {
                 }
                 restored.push(cluster);
             }
+            self.container.clusters = restored;
+            self.latest_updates.extend(latest);
             if self.privacy.mode.has_dp() {
                 // one accountant step per aggregation round a model ran.
                 // Clusters train in parallel on DISJOINT clients, so a
@@ -500,12 +877,40 @@ impl FactServer {
                         *q = r.sample_rate;
                     }
                 }
-                for (_, q) in per_round {
+                // charges deferred at recovery (a replayed closed round
+                // whose index still had a resumed sibling) join the max
+                let deferred: Vec<(usize, f64)> = self
+                    .deferred_charges
+                    .iter()
+                    .filter(|((cr, _), _)| *cr == clustering_round)
+                    .map(|((_, rd), q)| (*rd, *q))
+                    .collect();
+                for (rd, dq) in deferred {
+                    self.deferred_charges.remove(&(clustering_round, rd));
+                    let q = per_round.entry(rd).or_insert(0.0);
+                    if dq > *q {
+                        *q = dq;
+                    }
+                }
+                for (round, q) in per_round {
+                    let key = (clustering_round, round);
+                    if self.already_charged.remove(&key) {
+                        // charged in the store already (replayed session
+                        // or recovery heal) — charging again would fork ε
+                        continue;
+                    }
+                    // the charge hits the durable log BEFORE the ledger:
+                    // a crash in between re-derives the accountant from
+                    // the log, never the other way around
+                    self.store.append_charge(LedgerCharge {
+                        clustering_round,
+                        round,
+                        q,
+                        noise_multiplier: self.privacy.noise_multiplier as f64,
+                    })?;
                     self.accountant.add_round(q);
                 }
             }
-            self.container.clusters = restored;
-            self.latest_updates.extend(latest);
             if let Some(e) = first_err {
                 // state and ledger are consistent; surface the failure
                 return Err(e);
@@ -593,6 +998,12 @@ struct RoundCtx<'a> {
     known_samples: &'a BTreeMap<String, f64>,
     metrics: &'a Registry,
     session_tag: u64,
+    /// every round transition is appended (and validated) here
+    store: &'a Arc<dyn RoundStore>,
+    /// rounds the store already closed — skipped outright
+    completed: &'a BTreeSet<(usize, usize, usize)>,
+    /// in-flight rounds to resume instead of starting fresh
+    plans: &'a BTreeMap<(usize, usize, usize), RoundState>,
 }
 
 /// Alg 5: the training session of one cluster.
@@ -609,8 +1020,10 @@ fn train_cluster(
     ClusterOutcome { records, latest, samples, err }
 }
 
-/// The round loop behind [`train_cluster`]; completed rounds accumulate
-/// into the out-params so they survive an error return.
+/// The round loop behind [`train_cluster`]: per round index, skip what
+/// the store already closed, resume what it holds in flight, and run
+/// everything else fresh.  Completed rounds accumulate into the
+/// out-params so they survive an error return.
 fn train_cluster_rounds(
     ctx: &RoundCtx<'_>,
     cluster: &mut crate::fact::clustering::Cluster,
@@ -618,273 +1031,728 @@ fn train_cluster_rounds(
     latest: &mut BTreeMap<String, Vec<f32>>,
     seen_samples: &mut BTreeMap<String, f64>,
 ) -> Result<()> {
-    let RoundCtx {
-        wm,
-        hyper,
-        server_opt,
-        fl_stop,
-        timeout,
-        clustering_round,
-        pool,
-        privacy,
-        participation,
-        known_samples,
-        metrics,
-        session_tag,
-    } = *ctx;
     let mut round = 0usize;
     loop {
-        let sw = Stopwatch::start();
-        let hp = Hyper { round: round as u64, ..hyper.clone() };
-        // --- participation: draw this round's cohort (everyone without) --
-        let (cohort, realized_q, sampler) = match participation {
-            Some(p) => {
-                let sampler = CohortSampler::new(p.clone());
-                let key = participation_round_key(
-                    p.seed,
-                    clustering_round,
-                    cluster.id,
-                    round,
-                );
-                let candidates: Vec<Candidate> = cluster
-                    .clients
-                    .iter()
-                    .map(|n| Candidate {
-                        name: n.clone(),
-                        weight: seen_samples
-                            .get(n)
-                            .or_else(|| known_samples.get(n))
-                            .copied()
-                            .unwrap_or(1.0)
-                            .max(1.0),
-                    })
-                    .collect();
-                let cohort = sampler.sample(key, &candidates);
-                let q = sampler
-                    .amplification_rate(cohort.len(), cluster.clients.len());
-                (cohort, q, Some(sampler))
-            }
-            None => (cluster.clients.clone(), 1.0, None),
-        };
-        // Alg 5 line 3: send a training task to each cohort client.
-        // The global parameters are materialized into ONE shared buffer;
-        // every client's dict holds a cheap clone of it, and the binary
-        // wire encoding writes it once (envelope dedup) instead of one
-        // base64 copy per client.
-        let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
-        // privacy negotiation: the round's mode and a fresh round id ride
-        // in every learn task; clients transform their update accordingly
-        let round_id = splitmix64(
-            session_tag
-                ^ ((clustering_round as u64) << 42)
-                ^ ((cluster.id as u64) << 21)
-                ^ round as u64,
-        );
-        // secagg setup phases: per-pair key agreement + encrypted Shamir
-        // share distribution run BEFORE the learn dispatch (clients that
-        // fail either phase are excluded from the masking participant set)
-        let secagg_setup = if privacy.mode.has_secagg() {
-            Some(secagg_setup_phases(
-                wm, cluster, &cohort, round_id, privacy, participation,
-                timeout, metrics,
-            )?)
+        let key = (ctx.clustering_round, cluster.id, round);
+        if ctx.completed.contains(&key) {
+            // replayed by recover(): params + loss history were already
+            // fast-forwarded and the record is back in the history
+        } else if let Some(plan) = ctx.plans.get(&key) {
+            resume_round(ctx, cluster, round, plan, records, latest, seen_samples)?;
         } else {
-            None
-        };
-        let privacy_round = if privacy.mode == PrivacyMode::Off {
-            None
-        } else {
-            let mut pj = privacy
-                .to_json()
-                .set("round_id", round_id_to_hex(round_id));
-            if participation.is_some() {
-                // pin the sampled cohort in the task: a client outside it
-                // must refuse to contribute, or the accountant's
-                // amplification claim (only sampled clients respond)
-                // would be unsound
-                pj = pj.set(
-                    "cohort",
-                    Json::Arr(
-                        cohort.iter().map(|c| Json::Str(c.clone())).collect(),
-                    ),
-                );
-            }
-            if let Some(setup) = &secagg_setup {
-                pj = pj
-                    .set(
-                        "participants",
-                        Json::Arr(
-                            setup
-                                .participants
-                                .iter()
-                                .map(|c| Json::Str(c.clone()))
-                                .collect(),
-                        ),
-                    )
-                    .set("keys", setup.keys_json.clone())
-                    .set("weighted", cluster.model.aggregation().is_weighted());
-            }
-            Some(pj)
-        };
-        // under secagg, only the key+share completers can mask: they are
-        // the round's addressed set
-        let addressed: &[String] = match &secagg_setup {
-            Some(setup) => &setup.participants,
-            None => &cohort,
-        };
-        let dict: BTreeMap<String, Json> = addressed
-            .iter()
-            .map(|c| {
-                let mut params = cluster.model.learn_params_buf(&global, &hp);
-                if let Some(pj) = &privacy_round {
-                    params = params.set("privacy", pj.clone());
-                }
-                (c.clone(), params)
-            })
-            .collect();
-        let t_start = Instant::now();
-        let sampled = dict.len();
-        let (results, late, dropped) = match (&sampler, participation) {
-            (Some(sampler), Some(p)) => {
-                // production round loop: close at quorum or deadline,
-                // drop (and count) stragglers
-                let quorum = sampler.quorum_count(sampled);
-                let deadline = if p.deadline_ms > 0 {
-                    Duration::from_millis(p.deadline_ms)
-                } else {
-                    timeout
-                };
-                let out = wm.run_task_quorum(
-                    dict,
-                    "fact_learn",
-                    quorum,
-                    deadline,
-                    Duration::from_millis(p.late_grace_ms),
-                )?;
-                let late = out.late.len();
-                let dropped =
-                    sampled.saturating_sub(out.results.len() + late);
-                metrics
-                    .counter(match out.close {
-                        RoundClose::Complete => {
-                            "fact.participation.complete_closes"
-                        }
-                        RoundClose::Quorum => "fact.participation.quorum_closes",
-                        RoundClose::Deadline => {
-                            "fact.participation.deadline_closes"
-                        }
-                        RoundClose::Settled => {
-                            "fact.participation.settled_closes"
-                        }
-                    })
-                    .inc();
-                if out.results.len() < quorum {
-                    log::warn!(target: "fact::server",
-                        "cluster {} round {round}: closed below quorum \
-                         ({}/{quorum} of {sampled} sampled)",
-                        cluster.id, out.results.len());
-                }
-                (out.results, late, dropped)
-            }
-            _ => {
-                let results = wm.run_task(dict, "fact_learn", timeout)?;
-                let dropped = sampled.saturating_sub(results.len());
-                (results, 0usize, dropped)
-            }
-        };
-        metrics.counter("fact.participation.sampled").add(sampled as u64);
-        metrics
-            .counter("fact.participation.reported")
-            .add(results.len() as u64);
-        metrics.counter("fact.participation.late").add(late as u64);
-        metrics.counter("fact.participation.dropped").add(dropped as u64);
-        if results.is_empty() {
-            return Err(FedError::Fact(format!(
-                "cluster {}: no client returned a result in round {round}",
-                cluster.id
-            )));
+            fresh_round(ctx, cluster, round, records, latest, seen_samples)?;
         }
-        // Alg 5 line 5: fetch updated parameters and aggregate.
-        let mut updates: Vec<ClientUpdate> = results
-            .iter()
-            .map(|r| cluster.model.parse_update(&r.device_name, r.duration, &r.result))
-            .collect::<Result<Vec<_>>>()?;
-        // deterministic aggregation order regardless of arrival order:
-        // f32 reduction is order-sensitive, and mode parity (E6) demands
-        // bit-identical results between test mode and the TCP path
-        updates.sort_by(|a, b| a.device.cmp(&b.device));
-        let agg_sw = Stopwatch::start();
-        let (target, secagg_audit) = if let Some(setup) = &secagg_setup {
-            let out = secagg_recover_aggregate(
-                wm, cluster, setup, &updates, round_id, privacy, timeout,
-                metrics,
-            )?;
-            (out.target, Some(out.audit))
-        } else {
-            (Some(cluster.model.aggregate(&updates, Some(pool))?), None)
-        };
-        match target {
-            Some(target) => {
-                let mut buf = std::mem::take(&mut cluster.momentum);
-                server_opt.apply(&mut cluster.params, target, &mut buf);
-                cluster.momentum = buf;
-            }
-            None => {
-                // reveal policy `proceed`: the round is unrecoverable
-                // below the share threshold — void it (parameters
-                // unchanged), audit it, keep training
-                metrics.counter("fact.secagg.rounds_voided").inc();
-                log::warn!(target: "fact::server",
-                    "cluster {} round {round}: secagg recovery below \
-                     threshold, policy=proceed voids the round",
-                    cluster.id);
-            }
-        }
-        let agg_ms = agg_sw.elapsed_ms();
-
-        let mean_loss =
-            updates.iter().map(|u| u.loss).sum::<f32>() / updates.len() as f32;
-        let mean_client_s =
-            updates.iter().map(|u| u.duration).sum::<f64>() / updates.len() as f64;
-        cluster.loss_history.push(mean_loss);
-        for u in &updates {
-            // n_samples is clear even under secagg (the protocol ships it
-            // alongside the masked vector); it feeds weighted sampling
-            seen_samples.insert(u.device.clone(), u.n_samples as f64);
-        }
-        if !privacy.mode.has_secagg() {
-            // under secagg the per-client vectors are masked lattice noise
-            // — recording them would feed garbage to the clustering input
-            for u in &updates {
-                latest.insert(u.device.clone(), u.params.to_vec());
-            }
-        }
-        records.push(RoundRecord {
-            clustering_round,
-            cluster_id: cluster.id,
-            round,
-            n_clients: updates.len(),
-            sampled,
-            late,
-            dropped,
-            sample_rate: realized_q,
-            mean_loss,
-            round_ms: sw.elapsed_ms(),
-            agg_ms,
-            mean_client_s,
-            secagg: secagg_audit,
-        });
-        log::debug!(target: "fact::server",
-            "cluster {} round {round}: loss {mean_loss:.4} \
-             ({}/{sampled} sampled clients, {:.1}ms)",
-            cluster.id, updates.len(), t_start.elapsed().as_secs_f64() * 1e3);
-
         round += 1;
         // Alg 5 line 7: stopping criterion.
-        if fl_stop.should_stop(round, &cluster.loss_history) {
+        if ctx.fl_stop.should_stop(round, &cluster.loss_history) {
             break;
         }
     }
+    Ok(())
+}
+
+/// Draw this round's cohort (everyone, without participation sampling).
+fn draw_cohort(
+    ctx: &RoundCtx<'_>,
+    cluster: &crate::fact::clustering::Cluster,
+    round: usize,
+    seen_samples: &BTreeMap<String, f64>,
+) -> (Vec<String>, f64, Option<CohortSampler>) {
+    match ctx.participation {
+        Some(p) => {
+            let sampler = CohortSampler::new(p.clone());
+            let key = participation_round_key(
+                p.seed,
+                ctx.clustering_round,
+                cluster.id,
+                round,
+            );
+            let candidates: Vec<Candidate> = cluster
+                .clients
+                .iter()
+                .map(|n| Candidate {
+                    name: n.clone(),
+                    weight: seen_samples
+                        .get(n)
+                        .or_else(|| ctx.known_samples.get(n))
+                        .copied()
+                        .unwrap_or(1.0)
+                        .max(1.0),
+                })
+                .collect();
+            let cohort = sampler.sample(key, &candidates);
+            let q = sampler.amplification_rate(cohort.len(), cluster.clients.len());
+            (cohort, q, Some(sampler))
+        }
+        None => (cluster.clients.clone(), 1.0, None),
+    }
+}
+
+/// A round with no prior history in the store: derive its id, persist
+/// the opening `Configured` event, and run the full pipeline.
+fn fresh_round(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    round: usize,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    let sw = Stopwatch::start();
+    // --- participation: draw this round's cohort (everyone without) --
+    let (cohort, realized_q, sampler) = draw_cohort(ctx, cluster, round, seen_samples);
+    // Alg 5 line 3 prep: the global parameters are materialized into ONE
+    // shared buffer; every client's dict holds a cheap clone of it, and
+    // the binary wire encoding writes it once (envelope dedup) instead
+    // of one base64 copy per client.
+    let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
+    // privacy negotiation: the round's mode and a fresh round id ride in
+    // every learn task; clients transform their update accordingly
+    let round_id = splitmix64(
+        ctx.session_tag
+            ^ ((ctx.clustering_round as u64) << 42)
+            ^ ((cluster.id as u64) << 21)
+            ^ round as u64,
+    );
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::Configured {
+            clustering_round: ctx.clustering_round,
+            cluster_id: cluster.id,
+            round,
+            cohort: cohort.clone(),
+            sample_rate: realized_q,
+            mode: ctx.privacy.mode.as_str().to_string(),
+            params: global.clone(),
+            deadline_ms: ctx
+                .participation
+                .as_ref()
+                .map(|p| p.deadline_ms)
+                .unwrap_or(0),
+            session_tag: ctx.session_tag,
+        },
+    ))?;
+    run_round_pipeline(
+        ctx,
+        cluster,
+        round,
+        round_id,
+        &cohort,
+        realized_q,
+        sampler.as_ref(),
+        &global,
+        sw,
+        None,
+        records,
+        latest,
+        seen_samples,
+    )
+}
+
+/// Resume one in-flight round from its persisted state: fast-forward
+/// what already happened, re-run only what the crash interrupted.
+/// Client-side key/mask/noise derivation is deterministic in
+/// `(round_id, device)`, so a re-run phase reproduces byte-identical
+/// contributions and the resumed aggregate equals the uninterrupted one.
+fn resume_round(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    round: usize,
+    plan: &RoundState,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    let sw = Stopwatch::start();
+    let round_id = plan.round_id;
+    log::info!(target: "fact::server",
+        "cluster {} round {round}: resuming from round store at phase '{}'",
+        cluster.id, plan.phase.as_str());
+    // the config the round was persisted under must still hold
+    if plan.mode != ctx.privacy.mode.as_str() {
+        return void_round(
+            ctx,
+            round_id,
+            format!(
+                "privacy mode changed across restart ('{}' -> '{}')",
+                plan.mode,
+                ctx.privacy.mode.as_str()
+            ),
+        );
+    }
+    if let Some(p) = &plan.params {
+        if p.len() != cluster.params.len() {
+            return void_round(
+                ctx,
+                round_id,
+                format!(
+                    "broadcast params len {} no longer matches the cluster ({})",
+                    p.len(),
+                    cluster.params.len()
+                ),
+            );
+        }
+    }
+    let cohort = plan.cohort.clone();
+    let realized_q = plan.sample_rate;
+    let sampler = ctx
+        .participation
+        .as_ref()
+        .map(|p| CohortSampler::new(p.clone()));
+    let global = plan.params.clone().unwrap_or_else(|| {
+        crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params)
+    });
+    match plan.phase {
+        RoundPhase::Aggregated => {
+            // the aggregate was applied and its post-apply params pinned
+            // pre-crash: make them effective (plain replacement — exact
+            // under any server optimizer) and close
+            if let Some(pa) = &plan.params_after {
+                if pa.len() == cluster.params.len() {
+                    cluster.params = pa.to_vec();
+                }
+            }
+            if let Some(rj) = &plan.record {
+                if let Ok(rec) = RoundRecord::from_json(rj) {
+                    cluster.loss_history.push(rec.mean_loss);
+                    records.push(rec);
+                }
+            }
+            ctx.store
+                .append(RoundEvent::new(round_id, EventKind::Closed))?;
+            Ok(())
+        }
+        RoundPhase::Learn | RoundPhase::Reveal if !plan.updates.is_empty() => {
+            // learn already closed: the collected (still masked) updates
+            // are in the WAL — redo recovery + aggregation without
+            // touching the cohort's learn tasks
+            let setup = setup_from_plan(plan);
+            let updates: Vec<ClientUpdate> = plan
+                .updates
+                .iter()
+                .map(|u| ClientUpdate {
+                    device: u.device.clone(),
+                    params: u.params.clone(),
+                    n_samples: u.n_samples,
+                    loss: u.loss,
+                    duration: u.duration,
+                })
+                .collect();
+            let sampled = plan.addressed.len().max(updates.len());
+            finish_round(
+                ctx,
+                cluster,
+                round,
+                round_id,
+                realized_q,
+                sampled,
+                plan.late,
+                plan.dropped.len(),
+                setup.as_ref(),
+                updates,
+                sw,
+                records,
+                latest,
+                seen_samples,
+            )
+        }
+        RoundPhase::Reveal => {
+            // a Revealed event without a persisted LearnClosed should not
+            // occur; refuse to guess at the missing updates
+            void_round(
+                ctx,
+                round_id,
+                "reveal phase without persisted updates".into(),
+            )
+        }
+        RoundPhase::Learn => {
+            // dispatched, never closed: honor the part of the deadline
+            // that elapsed while the coordinator was down
+            let now = now_ms();
+            let deadline_at =
+                plan.dispatched_at_ms.saturating_add(plan.learn_deadline_ms);
+            if plan.learn_deadline_ms > 0 && now >= deadline_at {
+                ctx.metrics.counter("fact.roundstore.voided").inc();
+                log::warn!(target: "fact::server",
+                    "cluster {} round {round}: learn deadline elapsed \
+                     during the outage — voiding",
+                    cluster.id);
+                ctx.store.append(RoundEvent::new(
+                    round_id,
+                    EventKind::Voided {
+                        reason: "learn deadline elapsed during coordinator \
+                                 outage"
+                            .into(),
+                        record: Json::Null,
+                    },
+                ))?;
+                return Ok(());
+            }
+            let remaining = if plan.learn_deadline_ms > 0 {
+                Some(Duration::from_millis(deadline_at - now))
+            } else {
+                None
+            };
+            let setup = setup_from_plan(plan);
+            let (updates, sampled, late, dropped) = dispatch_learn(
+                ctx,
+                cluster,
+                round,
+                round_id,
+                &cohort,
+                sampler.as_ref(),
+                &global,
+                setup.as_ref(),
+                remaining,
+            )?;
+            finish_round(
+                ctx,
+                cluster,
+                round,
+                round_id,
+                realized_q,
+                sampled,
+                late,
+                dropped,
+                setup.as_ref(),
+                updates,
+                sw,
+                records,
+                latest,
+                seen_samples,
+            )
+        }
+        _ => {
+            // Configured / Keys / Shares: re-run the setup phases against
+            // the pinned cohort + params.  Clients re-derive keys, masks
+            // and noise deterministically from the same round id, so the
+            // re-run reproduces the dead coordinator's round exactly.
+            run_round_pipeline(
+                ctx,
+                cluster,
+                round,
+                round_id,
+                &cohort,
+                realized_q,
+                sampler.as_ref(),
+                &global,
+                sw,
+                None,
+                records,
+                latest,
+                seen_samples,
+            )
+        }
+    }
+}
+
+/// Abandon a round that cannot be safely resumed: persist the `Voided`
+/// event, then let [`RevealPolicy`] decide whether the session survives
+/// (`proceed`) or fails loudly (`abort`, the default).
+fn void_round(ctx: &RoundCtx<'_>, round_id: u64, reason: String) -> Result<()> {
+    ctx.metrics.counter("fact.roundstore.voided").inc();
+    log::warn!(target: "fact::server",
+        "voiding round {}: {reason}", round_id_to_hex(round_id));
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::Voided {
+            reason: reason.clone(),
+            record: Json::Null,
+        },
+    ))?;
+    match ctx.privacy.reveal_policy {
+        RevealPolicy::Abort => Err(FedError::Privacy(format!(
+            "cannot resume round {}: {reason} — reveal policy abort",
+            round_id_to_hex(round_id)
+        ))),
+        RevealPolicy::Proceed => Ok(()),
+    }
+}
+
+/// Rebuild the secagg setup snapshot from persisted round state (`None`
+/// when the round ran without secure aggregation).
+fn setup_from_plan(plan: &RoundState) -> Option<SecAggSetup> {
+    if plan.pubkeys.is_empty() {
+        return None;
+    }
+    let mut keys_json = Json::obj();
+    for (name, hex) in &plan.pubkeys {
+        keys_json = keys_json.set(name, hex.as_str());
+    }
+    Some(SecAggSetup {
+        participants: plan.participants.clone(),
+        keys: plan.pubkeys.clone(),
+        keys_json,
+        enc_shares: plan.enc_shares.clone(),
+        commits: plan.commits.clone(),
+        threshold: plan.threshold,
+    })
+}
+
+/// The setup -> learn -> recover -> aggregate pipeline of one round,
+/// entered either fresh (setup still to run) or on resume with the
+/// persisted setup already rebuilt (`setup_done`).
+#[allow(clippy::too_many_arguments)]
+fn run_round_pipeline(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    round: usize,
+    round_id: u64,
+    cohort: &[String],
+    realized_q: f64,
+    sampler: Option<&CohortSampler>,
+    global: &crate::util::tensorbuf::TensorBuf,
+    sw: Stopwatch,
+    setup_done: Option<Option<SecAggSetup>>,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    // secagg setup phases: per-pair key agreement + encrypted Shamir
+    // share distribution run BEFORE the learn dispatch (clients that
+    // fail either phase are excluded from the masking participant set)
+    let secagg_setup = match setup_done {
+        Some(setup) => setup,
+        None => {
+            if ctx.privacy.mode.has_secagg() {
+                Some(secagg_setup_phases(ctx, cluster, cohort, round_id)?)
+            } else {
+                None
+            }
+        }
+    };
+    let (updates, sampled, late, dropped) = dispatch_learn(
+        ctx,
+        cluster,
+        round,
+        round_id,
+        cohort,
+        sampler,
+        global,
+        secagg_setup.as_ref(),
+        None,
+    )?;
+    finish_round(
+        ctx,
+        cluster,
+        round,
+        round_id,
+        realized_q,
+        sampled,
+        late,
+        dropped,
+        secagg_setup.as_ref(),
+        updates,
+        sw,
+        records,
+        latest,
+        seen_samples,
+    )
+}
+
+/// Dispatch the learn tasks of one round and close the collection.
+/// `LearnDispatched` is persisted before the scheduler call and
+/// `LearnClosed` (with every collected update) after — a crash in
+/// between resumes by re-dispatching with the remaining deadline; a
+/// crash after resumes from the persisted updates without touching the
+/// clients again.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_learn(
+    ctx: &RoundCtx<'_>,
+    cluster: &crate::fact::clustering::Cluster,
+    round: usize,
+    round_id: u64,
+    cohort: &[String],
+    sampler: Option<&CohortSampler>,
+    global: &crate::util::tensorbuf::TensorBuf,
+    secagg_setup: Option<&SecAggSetup>,
+    deadline_override: Option<Duration>,
+) -> Result<(Vec<ClientUpdate>, usize, usize, usize)> {
+    let hp = Hyper { round: round as u64, ..ctx.hyper.clone() };
+    let privacy_round = if ctx.privacy.mode == PrivacyMode::Off {
+        None
+    } else {
+        let mut pj = ctx
+            .privacy
+            .to_json()
+            .set("round_id", round_id_to_hex(round_id));
+        if ctx.participation.is_some() {
+            // pin the sampled cohort in the task: a client outside it
+            // must refuse to contribute, or the accountant's
+            // amplification claim (only sampled clients respond) would
+            // be unsound
+            pj = pj.set(
+                "cohort",
+                Json::Arr(cohort.iter().map(|c| Json::Str(c.clone())).collect()),
+            );
+        }
+        if let Some(setup) = secagg_setup {
+            pj = pj
+                .set(
+                    "participants",
+                    Json::Arr(
+                        setup
+                            .participants
+                            .iter()
+                            .map(|c| Json::Str(c.clone()))
+                            .collect(),
+                    ),
+                )
+                .set("keys", setup.keys_json.clone())
+                .set("weighted", cluster.model.aggregation().is_weighted());
+        }
+        Some(pj)
+    };
+    // under secagg, only the key+share completers can mask: they are
+    // the round's addressed set
+    let addressed: &[String] = match secagg_setup {
+        Some(setup) => &setup.participants,
+        None => cohort,
+    };
+    let dict: BTreeMap<String, Json> = addressed
+        .iter()
+        .map(|c| {
+            let mut params = cluster.model.learn_params_buf(global, &hp);
+            if let Some(pj) = &privacy_round {
+                params = params.set("privacy", pj.clone());
+            }
+            (c.clone(), params)
+        })
+        .collect();
+    let sampled = dict.len();
+    // the effective deadline of THIS dispatch: on resume, the remaining
+    // window of the original deadline; otherwise the configured one
+    let deadline = match (deadline_override, ctx.participation) {
+        (Some(d), _) => Some(d),
+        (None, Some(p)) if p.deadline_ms > 0 => {
+            Some(Duration::from_millis(p.deadline_ms))
+        }
+        _ => None,
+    };
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::LearnDispatched {
+            addressed: addressed.to_vec(),
+            dispatched_at_ms: now_ms(),
+            deadline_ms: deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
+        },
+    ))?;
+    let (results, late_names, dropped) = match (sampler, ctx.participation) {
+        (Some(sampler), Some(p)) => {
+            // production round loop: close at quorum or deadline,
+            // drop (and count) stragglers
+            let quorum = sampler.quorum_count(sampled);
+            let deadline = deadline.unwrap_or(ctx.timeout);
+            let out = ctx.wm.run_task_quorum(
+                dict,
+                "fact_learn",
+                quorum,
+                deadline,
+                Duration::from_millis(p.late_grace_ms),
+            )?;
+            let late = out.late;
+            let dropped = sampled.saturating_sub(out.results.len() + late.len());
+            ctx.metrics
+                .counter(match out.close {
+                    RoundClose::Complete => "fact.participation.complete_closes",
+                    RoundClose::Quorum => "fact.participation.quorum_closes",
+                    RoundClose::Deadline => "fact.participation.deadline_closes",
+                    RoundClose::Settled => "fact.participation.settled_closes",
+                })
+                .inc();
+            if out.results.len() < quorum {
+                log::warn!(target: "fact::server",
+                    "cluster {} round {round}: closed below quorum \
+                     ({}/{quorum} of {sampled} sampled)",
+                    cluster.id, out.results.len());
+            }
+            (out.results, late, dropped)
+        }
+        _ => {
+            let results = ctx.wm.run_task(
+                dict,
+                "fact_learn",
+                deadline_override.unwrap_or(ctx.timeout),
+            )?;
+            let dropped = sampled.saturating_sub(results.len());
+            (results, Vec::new(), dropped)
+        }
+    };
+    ctx.metrics
+        .counter("fact.participation.sampled")
+        .add(sampled as u64);
+    ctx.metrics
+        .counter("fact.participation.reported")
+        .add(results.len() as u64);
+    ctx.metrics
+        .counter("fact.participation.late")
+        .add(late_names.len() as u64);
+    ctx.metrics
+        .counter("fact.participation.dropped")
+        .add(dropped as u64);
+    if results.is_empty() {
+        return Err(FedError::Fact(format!(
+            "cluster {}: no client returned a result in round {round}",
+            cluster.id
+        )));
+    }
+    // Alg 5 line 5: fetch updated parameters and aggregate.
+    let mut updates: Vec<ClientUpdate> = results
+        .iter()
+        .map(|r| cluster.model.parse_update(&r.device_name, r.duration, &r.result))
+        .collect::<Result<Vec<_>>>()?;
+    // deterministic aggregation order regardless of arrival order:
+    // f32 reduction is order-sensitive, and mode parity (E6) demands
+    // bit-identical results between test mode and the TCP path
+    updates.sort_by(|a, b| a.device.cmp(&b.device));
+    let late = late_names.len();
+    // the addressed clients that never delivered a counted result, by
+    // name — the recovery path reports them in the audit trail
+    let responded: BTreeSet<&String> =
+        results.iter().map(|r| &r.device_name).collect();
+    let dropped_names: Vec<String> = addressed
+        .iter()
+        .filter(|d| !responded.contains(*d) && !late_names.contains(*d))
+        .cloned()
+        .collect();
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::LearnClosed {
+            updates: updates
+                .iter()
+                .map(|u| StoredUpdate {
+                    device: u.device.clone(),
+                    params: u.params.clone(),
+                    n_samples: u.n_samples,
+                    loss: u.loss,
+                    duration: u.duration,
+                })
+                .collect(),
+            late,
+            dropped: dropped_names,
+        },
+    ))?;
+    Ok((updates, sampled, late, dropped))
+}
+
+/// The tail of a round: recover the aggregate (under secagg), apply the
+/// server optimizer, and persist the outcome — `Revealed` + `Aggregated`
+/// + `Closed` on success, or `Voided` when the reveal policy `proceed`
+/// abandons an unrecoverable round.  The `Aggregated` event pins the
+/// post-apply parameters, so resuming AT that phase is a plain
+/// replacement even under a momentum optimizer.
+#[allow(clippy::too_many_arguments)]
+fn finish_round(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    round: usize,
+    round_id: u64,
+    realized_q: f64,
+    sampled: usize,
+    late: usize,
+    dropped: usize,
+    secagg_setup: Option<&SecAggSetup>,
+    updates: Vec<ClientUpdate>,
+    sw: Stopwatch,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    let agg_sw = Stopwatch::start();
+    let (target, secagg_audit) = if let Some(setup) = secagg_setup {
+        let out = secagg_recover_aggregate(ctx, cluster, setup, &updates, round_id)?;
+        ctx.store.append(RoundEvent::new(
+            round_id,
+            EventKind::Revealed { audit: out.audit.to_json() },
+        ))?;
+        (out.target, Some(out.audit))
+    } else {
+        (Some(cluster.model.aggregate(&updates, Some(ctx.pool))?), None)
+    };
+    let applied = match target {
+        Some(target) => {
+            let mut buf = std::mem::take(&mut cluster.momentum);
+            ctx.server_opt.apply(&mut cluster.params, target, &mut buf);
+            cluster.momentum = buf;
+            true
+        }
+        None => {
+            // reveal policy `proceed`: the round is unrecoverable
+            // below the share threshold — void it (parameters
+            // unchanged), audit it, keep training
+            ctx.metrics.counter("fact.secagg.rounds_voided").inc();
+            log::warn!(target: "fact::server",
+                "cluster {} round {round}: secagg recovery below \
+                 threshold, policy=proceed voids the round",
+                cluster.id);
+            false
+        }
+    };
+    let agg_ms = agg_sw.elapsed_ms();
+
+    let mean_loss =
+        updates.iter().map(|u| u.loss).sum::<f32>() / updates.len() as f32;
+    let mean_client_s =
+        updates.iter().map(|u| u.duration).sum::<f64>() / updates.len() as f64;
+    cluster.loss_history.push(mean_loss);
+    for u in &updates {
+        // n_samples is clear even under secagg (the protocol ships it
+        // alongside the masked vector); it feeds weighted sampling
+        seen_samples.insert(u.device.clone(), u.n_samples as f64);
+    }
+    if !ctx.privacy.mode.has_secagg() {
+        // under secagg the per-client vectors are masked lattice noise
+        // — recording them would feed garbage to the clustering input
+        for u in &updates {
+            latest.insert(u.device.clone(), u.params.to_vec());
+        }
+    }
+    let record = RoundRecord {
+        clustering_round: ctx.clustering_round,
+        cluster_id: cluster.id,
+        round,
+        n_clients: updates.len(),
+        sampled,
+        late,
+        dropped,
+        sample_rate: realized_q,
+        mean_loss,
+        round_ms: sw.elapsed_ms(),
+        agg_ms,
+        mean_client_s,
+        secagg: secagg_audit,
+    };
+    if applied {
+        // pin the post-apply params + the audit record, then close — a
+        // crash between the two appends resumes at Aggregated, where
+        // fast-forwarding is an idempotent replacement
+        ctx.store.append(RoundEvent::new(
+            round_id,
+            EventKind::Aggregated {
+                params: crate::util::tensorbuf::TensorBuf::from_f32_slice(
+                    &cluster.params,
+                ),
+                record: record.to_json(),
+            },
+        ))?;
+        ctx.store
+            .append(RoundEvent::new(round_id, EventKind::Closed))?;
+    } else {
+        ctx.store.append(RoundEvent::new(
+            round_id,
+            EventKind::Voided {
+                reason: "secagg recovery below threshold (reveal policy \
+                         proceed)"
+                    .into(),
+                record: record.to_json(),
+            },
+        ))?;
+    }
+    log::debug!(target: "fact::server",
+        "cluster {} round {round}: loss {mean_loss:.4} \
+         ({}/{sampled} sampled clients, {:.1}ms)",
+        cluster.id, record.n_clients, sw.elapsed_ms());
+    records.push(record);
     Ok(())
 }
 
@@ -921,17 +1789,20 @@ struct SecAggSetup {
 /// participant set (they never derived the round's pair masks).
 /// Without a deadline, a client that hangs past the round timeout
 /// stalls the task like any other task.
-#[allow(clippy::too_many_arguments)]
+///
+/// Each completed phase is persisted to the round store (`KeysCollected`
+/// / `SharesDealt`) so a resumed round can skip straight to learn.
 fn secagg_setup_phases(
-    wm: &WorkflowManager,
+    ctx: &RoundCtx<'_>,
     cluster: &crate::fact::clustering::Cluster,
     cohort: &[String],
     round_id: u64,
-    privacy: &PrivacyConfig,
-    participation: &Option<ParticipationConfig>,
-    timeout: Duration,
-    metrics: &Registry,
 ) -> Result<SecAggSetup> {
+    let wm = ctx.wm;
+    let privacy = ctx.privacy;
+    let participation = ctx.participation;
+    let timeout = ctx.timeout;
+    let metrics = ctx.metrics;
     // setup phases want EVERY response but must not wait on a hung
     // client forever: under a participation deadline, close at the
     // deadline and exclude whoever had not answered (the straggler
@@ -1005,6 +1876,10 @@ fn secagg_setup_phases(
     }
     let threshold =
         resolve_reveal_threshold(privacy.reveal_threshold, pubkeys.len());
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::KeysCollected { pubkeys: pubkeys.clone(), threshold },
+    ))?;
     let mut keys_json = Json::obj();
     for (name, hex) in &pubkeys {
         keys_json = keys_json.set(name, hex.as_str());
@@ -1067,6 +1942,14 @@ fn secagg_setup_phases(
             .counter("fact.secagg.setup_dropouts")
             .add((cohort.len() - participants.len()) as u64);
     }
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::SharesDealt {
+            participants: participants.clone(),
+            enc_shares: enc_shares.clone(),
+            commits: commits.clone(),
+        },
+    ))?;
     Ok(SecAggSetup {
         participants,
         keys: pubkeys,
@@ -1104,17 +1987,17 @@ struct SecAggOutcome {
 /// The coordinator never materializes an unmasked individual update —
 /// `unmask_aggregate` folds zero-copy views of the masked buffers
 /// straight into the integer accumulator.
-#[allow(clippy::too_many_arguments)]
 fn secagg_recover_aggregate(
-    wm: &WorkflowManager,
+    ctx: &RoundCtx<'_>,
     cluster: &crate::fact::clustering::Cluster,
     setup: &SecAggSetup,
     updates: &[ClientUpdate],
     round_id: u64,
-    privacy: &PrivacyConfig,
-    timeout: Duration,
-    metrics: &Registry,
 ) -> Result<SecAggOutcome> {
+    let wm = ctx.wm;
+    let privacy = ctx.privacy;
+    let timeout = ctx.timeout;
+    let metrics = ctx.metrics;
     let weighted = cluster.model.aggregation().is_weighted();
     let masked: Vec<MaskedUpdate> = updates
         .iter()

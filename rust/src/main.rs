@@ -7,7 +7,13 @@
 //!              synthetic data shard, connecting to a server.
 //! * `train`  — drive federated training against a running server through
 //!              the REST-API (the aggregation component role).
+//! * `rounds` — inspect (or compact) a round-store WAL directory.
 //! * `info`   — show the AOT artifact manifest.
+//!
+//! `run`, `train`, and `server` accept `--round-store DIR` to persist
+//! every round transition to a crash-recoverable write-ahead log; on
+//! restart the coordinator replays it and resumes in-flight rounds
+//! (see ARCHITECTURE.md and docs/OPERATIONS.md).
 //!
 //! A full distributed demo on one machine:
 //! ```text
@@ -56,6 +62,7 @@ fn main() {
         Some("server") => cmd_server(&args),
         Some("client") => cmd_client(&args),
         Some("train") => cmd_train(&args),
+        Some("rounds") => cmd_rounds(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -72,7 +79,7 @@ fn print_usage() {
     println!(
         "feddart — Fed-DART + FACT federated learning runtime
 
-USAGE: feddart <run|server|client|train|info> [options]
+USAGE: feddart <run|server|client|train|rounds|info> [options]
 
 run     --model mlp_default --clients 8 --rounds 20 --local-steps 4
         --lr 0.1 --mu 0.0 --aggregation weighted_fedavg
@@ -83,7 +90,13 @@ client  --name client-0 --clients 2 --server 127.0.0.1:7700
         --transport-key feddart-demo-key --seed 42
 train   --server 127.0.0.1:7701 --rest-key 000 --model mlp_default
         --rounds 20 --min-clients 2
+rounds  --round-store DIR [--compact]
 info    [--artifacts DIR]
+
+durability (run/train/server): --round-store DIR
+        (append every round transition to a crash-recoverable WAL;
+         a restarted coordinator replays it and resumes in-flight
+         rounds — inspect with `feddart rounds --round-store DIR`)
 
 participation (run/train): --sample-rate 0.25 --quorum 0.75
         --deadline-ms 2000 --over-provision 1.3 --min-cohort 1
@@ -153,6 +166,32 @@ fn participation_from_args(args: &Args) -> Result<Option<ParticipationConfig>> {
         return Ok(None); // "address everyone, wait for all" — legacy loop
     }
     Ok(Some(cfg))
+}
+
+/// Open the `--round-store DIR` WAL backend, when the flag is present.
+fn round_store_from_args(
+    args: &Args,
+) -> Result<Option<Arc<feddart::coordinator::WalRoundStore>>> {
+    match args.opt("round-store") {
+        Some(dir) => {
+            Ok(Some(Arc::new(feddart::coordinator::WalRoundStore::open(dir)?)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Attach the round store to a server and replay whatever a previous
+/// coordinator left in it (call after initialization).
+fn recover_rounds(server: &mut FactServer) -> Result<()> {
+    let report = server.recover()?;
+    if report.resumed > 0 || report.replayed_records > 0 || report.voided > 0 {
+        println!(
+            "round store: {} finished round(s) replayed, {} in-flight \
+             round(s) to resume, {} voided",
+            report.replayed_records, report.resumed, report.voided
+        );
+    }
+    Ok(())
 }
 
 fn parse_partition(s: &str) -> Partition {
@@ -233,12 +272,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
         server = server.with_privacy(pc);
     }
+    let store = round_store_from_args(args)?;
+    if let Some(store) = &store {
+        println!("round store: WAL at {}", store.dir().display());
+        server = server.with_round_store(store.clone());
+    }
     let model = HloModel::arc(
         &engine,
         &model_name,
         Aggregation::parse(args.opt_or("aggregation", "weighted_fedavg"))?,
     )?;
     server.initialization_by_model(model, Arc::new(FixedRoundFl(rounds)), seed as i32)?;
+    if store.is_some() {
+        recover_rounds(&mut server)?;
+    }
     server.learn()?;
 
     println!("\nround  mean_loss  round_ms  agg_ms  sampled  reported  late  dropped");
@@ -273,6 +320,13 @@ fn cmd_server(args: &Args) -> Result<()> {
         rest_key: args.opt_or("rest-key", "000").to_string(),
         heartbeat_timeout_ms: args.opt_usize("heartbeat-ms", 3000)? as u64,
         privacy_enabled: args.opt_or("privacy", "on") != "off",
+        round_store: match round_store_from_args(args)? {
+            Some(store) => {
+                println!("round store: WAL at {}", store.dir().display());
+                Some(store)
+            }
+            None => None,
+        },
     };
     let server = DartServer::start(cfg)?;
     println!(
@@ -334,6 +388,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(pc) = privacy_from_args(args)? {
         server = server.with_privacy(pc);
     }
+    let store = round_store_from_args(args)?;
+    if let Some(store) = &store {
+        println!("round store: WAL at {}", store.dir().display());
+        server = server.with_round_store(store.clone());
+    }
     let model = HloModel::arc(
         &engine,
         args.opt_or("model", "mlp_default"),
@@ -344,6 +403,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         Arc::new(FixedRoundFl(args.opt_usize("rounds", 20)?)),
         args.opt_usize("seed", 42)? as i32,
     )?;
+    if store.is_some() {
+        recover_rounds(&mut server)?;
+    }
     server.learn()?;
     for r in server.history() {
         println!("round {:>3}: loss {:.4} ({:.1}ms)", r.round, r.mean_loss, r.round_ms);
@@ -352,6 +414,24 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("eval: loss {:.4} accuracy {:.3}", e.loss, e.accuracy);
     }
     engine.shutdown();
+    Ok(())
+}
+
+/// Inspect (and optionally compact) a round-store WAL directory without
+/// starting a coordinator: prints the same JSON `GET /rounds` serves.
+fn cmd_rounds(args: &Args) -> Result<()> {
+    use feddart::coordinator::{RoundStore, WalRoundStore};
+    let dir = args.opt("round-store").ok_or_else(|| {
+        feddart::error::FedError::Config(
+            "rounds requires --round-store DIR".into(),
+        )
+    })?;
+    let store = WalRoundStore::open(dir)?;
+    if args.flag("compact") {
+        store.compact()?;
+        println!("compacted {}", store.dir().display());
+    }
+    println!("{}", store.status_json()?);
     Ok(())
 }
 

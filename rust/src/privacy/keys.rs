@@ -245,6 +245,7 @@ pub fn parse_pubkey_hex(s: &str) -> Result<[u8; PUBKEY_BYTES]> {
     Ok(fixed)
 }
 
+/// Hex-encode a public key for the round board (fixed 512-char string).
 pub fn pubkey_hex(public: &[u8; PUBKEY_BYTES]) -> String {
     to_hex(public)
 }

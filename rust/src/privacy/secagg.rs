@@ -33,6 +33,10 @@
 //!
 //! [`RoundRegistry`] is the thread-safe map behind the DART REST
 //! `/round/{id}/...` endpoints.
+//!
+//! Threat model: honest-but-curious coordinator, up to `t−1` colluding
+//! clients — see the "Privacy" section of the repository README for the
+//! full statement and its limits.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -51,6 +55,7 @@ use crate::util::tensorbuf::TensorBuf;
 /// Lattice / weighting parameters shared by every participant of a round.
 #[derive(Debug, Clone)]
 pub struct SecAggConfig {
+    /// Fixed-point fractional bits of the lattice quantization.
     pub frac_bits: u32,
     /// Sample-count weighting (weighted FedAvg / FedProx) vs uniform.
     pub weighted: bool,
@@ -79,16 +84,22 @@ impl Default for SecAggConfig {
 /// aggregation weight recovered from the clear sample count.
 #[derive(Debug, Clone)]
 pub struct MaskedUpdate {
+    /// Submitting client name.
     pub device: String,
+    /// Lattice-masked, pre-weighted parameter vector.
     pub params: TensorBuf,
+    /// Aggregation weight recovered from the clear sample count.
     pub weight: f64,
 }
 
 /// A pair seed revealed by `survivor` for `dropped` during recovery.
 #[derive(Debug, Clone)]
 pub struct RevealedSeed {
+    /// Surviving client that held (or had reconstructed) the seed.
     pub survivor: String,
+    /// Dropped peer the pair mask was shared with.
     pub dropped: String,
+    /// The 32-byte pair mask seed.
     pub seed: [u8; 32],
 }
 
@@ -171,14 +182,20 @@ pub fn reconstruct_dealer_secret(
 /// Derived phase of a round (for status reporting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Waiting for every participant to enter (nonce or DH key).
     Seeds,
+    /// All entered; commitments / shares may still arrive.
     Commit,
+    /// Masked submissions underway.
     Submit,
+    /// Dropouts detected; waiting on seed or share reveals.
     Reveal,
+    /// Aggregate computed and cached; round is immutable.
     Done,
 }
 
 impl Phase {
+    /// Lowercase wire name used in status documents.
     pub fn as_str(&self) -> &'static str {
         match self {
             Phase::Seeds => "seeds",
@@ -193,7 +210,9 @@ impl Phase {
 /// Server-side state of one secure-aggregation round.
 #[derive(Debug)]
 pub struct SecAggRound {
+    /// Round identifier (splitmix hash or client-chosen).
     pub id: u64,
+    /// Lattice / weighting / reveal-policy parameters.
     pub cfg: SecAggConfig,
     participants: Vec<String>,
     /// resolved t of the t-of-n share recovery
@@ -224,6 +243,8 @@ pub struct SecAggRound {
 }
 
 impl SecAggRound {
+    /// Create a round for a sorted, deduplicated participant set (at
+    /// least 2 names) and resolve the reveal threshold.
     pub fn new(id: u64, participants: Vec<String>, cfg: SecAggConfig) -> Result<SecAggRound> {
         let mut p = participants;
         p.sort();
@@ -253,6 +274,7 @@ impl SecAggRound {
         })
     }
 
+    /// The sorted participant set the round was created with.
     pub fn participants(&self) -> &[String] {
         &self.participants
     }
@@ -280,6 +302,7 @@ impl SecAggRound {
         self.participation = Some(cfg);
     }
 
+    /// The granted participation config, if one was negotiated.
     pub fn participation(&self) -> Option<&Json> {
         self.participation.as_ref()
     }
@@ -321,10 +344,12 @@ impl SecAggRound {
         }
     }
 
+    /// Posted DH public keys (client → hex).
     pub fn pubkeys(&self) -> &BTreeMap<String, String> {
         &self.pubkeys
     }
 
+    /// Whether every participant has posted a DH public key.
     pub fn all_keyed(&self) -> bool {
         self.pubkeys.len() == self.participants.len()
     }
@@ -493,10 +518,12 @@ impl SecAggRound {
         }
     }
 
+    /// Whether every participant has advertised a nonce (legacy path).
     pub fn all_advertised(&self) -> bool {
         self.nonces.len() == self.participants.len()
     }
 
+    /// Advertised round nonces (client → nonce).
     pub fn nonces(&self) -> &BTreeMap<String, String> {
         &self.nonces
     }
@@ -592,6 +619,7 @@ impl SecAggRound {
         out
     }
 
+    /// Participants that submitted a masked update.
     pub fn survivors(&self) -> Vec<String> {
         self.updates.keys().cloned().collect()
     }
@@ -673,6 +701,7 @@ impl SecAggRound {
             .count()
     }
 
+    /// Derive the round's current phase from its collected state.
     pub fn phase(&self) -> Phase {
         if self.aggregate.is_some() {
             Phase::Done
@@ -792,6 +821,7 @@ impl SecAggRound {
         &self.audit
     }
 
+    /// Sum of the survivors' aggregation weights.
     pub fn total_weight(&self) -> f64 {
         self.updates.values().map(|u| u.weight).sum()
     }
@@ -850,6 +880,7 @@ impl Default for RoundRegistry {
 }
 
 impl RoundRegistry {
+    /// Create a registry caching at most `cap` rounds (min 1).
     pub fn new(cap: usize) -> RoundRegistry {
         RoundRegistry {
             inner: Mutex::new(RegistryInner {
@@ -860,6 +891,8 @@ impl RoundRegistry {
         }
     }
 
+    /// Create a round, evicting the oldest if the registry is full.
+    /// A duplicate id is an error.
     pub fn create(
         &self,
         id: u64,
@@ -897,10 +930,12 @@ impl RoundRegistry {
         f(round)
     }
 
+    /// Number of cached rounds.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().rounds.len()
     }
 
+    /// Whether no rounds are cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -73,7 +73,9 @@ fn ginv(a: u8) -> u8 {
 /// One share: the evaluation point `x` and the byte-wise evaluations.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Share {
+    /// Evaluation point (1..=255; 0 is the secret and is rejected).
     pub x: u8,
+    /// Byte-wise polynomial evaluations at `x`, one per secret byte.
     pub data: Vec<u8>,
 }
 
@@ -86,6 +88,7 @@ impl Share {
         out
     }
 
+    /// Parse the wire form; rejects `x = 0` and shares with no data.
     pub fn from_bytes(bytes: &[u8]) -> Result<Share> {
         if bytes.len() < 2 {
             return Err(FedError::Privacy("share too short".into()));

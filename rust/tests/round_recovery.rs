@@ -1,0 +1,678 @@
+//! Crash-recoverable rounds: kill the coordinator at EVERY write-ahead
+//! boundary of a secagg+dp session, restart from the WAL, and assert the
+//! resumed session produces the bit-identical aggregate and the identical
+//! final ε-ledger as an uninterrupted run.
+//!
+//! The client side is the same engine-free deterministic registry the
+//! privacy integration tests use (per-pair DH keys, encrypted Shamir
+//! shares, DP noise and pairwise masks all derived from `(round_id,
+//! device)`), so a re-run phase reproduces byte-identical contributions —
+//! which is exactly the property coordinator recovery leans on.
+//!
+//! Also covered: a corrupt WAL tail is detected (CRC), truncated, and the
+//! wounded round is voided per `RevealPolicy` — never silently resumed —
+//! and the ε-ledger can no longer fork between a stale model snapshot
+//! and the round store (the store's charge log wins in either restore
+//! order).
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+use feddart::coordinator::round_store::{
+    LedgerCharge, RecoveryStatus, RoundEvent, RoundPhase, RoundState,
+};
+use feddart::coordinator::workflow::WorkflowManager;
+use feddart::coordinator::{RoundStore, WalRoundStore};
+use feddart::dart::TaskRegistry;
+use feddart::error::FedError;
+use feddart::fact::aggregation::Aggregation;
+use feddart::fact::model::FactModel;
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::FactServer;
+use feddart::json::Json;
+use feddart::privacy::{
+    dp, from_hex, keys, masking, round_id_from_hex, shamir, to_hex,
+    PrivacyConfig, PrivacyMode, RevealPolicy,
+};
+use feddart::util::rng::{golden_f32, Rng};
+use feddart::util::tensorbuf::TensorBuf;
+
+const PARAMS: usize = 64;
+const CLIENTS: usize = 5;
+const ROUNDS: usize = 2;
+const SESSION_TAG: u64 = 0xfeed_d001;
+/// client-3 crashes in every learn phase (so every round exercises the
+/// dropout-recovery reveal path too)
+const DROPPED: &[usize] = &[3];
+
+// ------------------------------------------------------------ fixture
+
+struct TestModel;
+
+impl FactModel for TestModel {
+    fn name(&self) -> &str {
+        "recoverymodel"
+    }
+    fn param_count(&self) -> usize {
+        PARAMS
+    }
+    fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+        Ok(golden_f32(seed as u32, PARAMS))
+    }
+    fn aggregation(&self) -> &Aggregation {
+        &Aggregation::WeightedFedAvg
+    }
+}
+
+fn device_index(device: &str) -> usize {
+    device.rsplit('-').next().unwrap().parse().unwrap()
+}
+
+fn client_secret(idx: usize) -> [u8; 32] {
+    [idx as u8 + 1; 32]
+}
+
+fn round_keys_of(device: &str, round_id: u64) -> keys::RoundKeys {
+    keys::keypair(&keys::derive_round_secret(
+        &client_secret(device_index(device)),
+        round_id,
+        device,
+    ))
+}
+
+fn keys_map_of(p: &Json) -> BTreeMap<String, String> {
+    p.need("keys")
+        .unwrap()
+        .as_obj()
+        .unwrap()
+        .iter()
+        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+        .collect()
+}
+
+/// Deterministic secagg+dp clients (same construction as the privacy
+/// integration tests): everything a client derives is a pure function of
+/// `(round_id, device)`, so a coordinator that re-runs a phase after a
+/// crash gets byte-identical responses.
+fn deterministic_registry() -> TaskRegistry {
+    let registry = TaskRegistry::new();
+    registry.register("fact_init", |_| Ok(Json::Null));
+
+    registry.register("fact_keys", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let kp = round_keys_of(&device, round_id);
+        Ok(Json::obj().set("pubkey", keys::pubkey_hex(&kp.public)))
+    });
+
+    registry.register("fact_shares", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let threshold = p.need("threshold")?.as_usize().unwrap();
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let peers: Vec<(String, u8)> = keys_map
+            .keys()
+            .enumerate()
+            .filter(|(_, n)| *n != &device)
+            .map(|(i, n)| (n.clone(), i as u8 + 1))
+            .collect();
+        let xs: Vec<u8> = peers.iter().map(|(_, x)| *x).collect();
+        let mut rng = Rng::new(round_id ^ device_index(&device) as u64);
+        let split = shamir::split_at(&kp.secret, threshold, &xs, &mut rng)?;
+        let mut shares = Json::obj();
+        let mut commits = Json::obj();
+        for (share, (peer, _)) in split.iter().zip(peers.iter()) {
+            let their = keys::parse_pubkey_hex(&keys_map[peer])?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            let ct =
+                keys::encrypt_share(&sk, round_id, &device, peer, &share.to_bytes());
+            shares = shares.set(peer, to_hex(&ct));
+            commits = commits.set(peer, to_hex(&shamir::share_commitment(share)));
+        }
+        Ok(Json::obj().set("shares", shares).set("commits", commits))
+    });
+
+    registry.register("fact_learn", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let idx = device_index(&device);
+        if DROPPED.contains(&idx) {
+            return Err(FedError::Task(format!("'{device}' crashed mid-round")));
+        }
+        let global = TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Task(e.to_string()))?;
+        let gs = global.as_f32_slice();
+        let delta = golden_f32(idx as u32 + 1, gs.len());
+        let mut params: Vec<f32> =
+            gs.iter().zip(&delta).map(|(g, d)| g + 0.1 * d).collect();
+        let n_samples = 100.0 + 10.0 * idx as f32;
+
+        // clear-mode rounds carry no privacy envelope at all
+        let Some(pj) = p.get("privacy") else {
+            return Ok(Json::obj()
+                .set("params", TensorBuf::from_f32_vec(params))
+                .set("n_samples", n_samples)
+                .set("loss", 0.5));
+        };
+        let cfg = PrivacyConfig::from_json(pj)?;
+        let round_id =
+            round_id_from_hex(pj.need("round_id")?.as_str().unwrap_or_default())?;
+        if cfg.mode.has_dp() {
+            let mut rng = Rng::new(round_id ^ idx as u64);
+            dp::privatize_update(
+                &mut params,
+                gs,
+                cfg.clip_norm,
+                cfg.noise_multiplier,
+                &mut rng,
+            )?;
+        }
+        if cfg.mode.has_secagg() {
+            let keys_map: BTreeMap<String, String> = pj
+                .need("keys")?
+                .as_obj()
+                .unwrap()
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect();
+            let participants: Vec<String> = pj
+                .need("participants")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect();
+            let kp = round_keys_of(&device, round_id);
+            let seeds: Vec<(i64, [u8; 32])> = participants
+                .iter()
+                .filter(|c| *c != &device)
+                .map(|peer| {
+                    let their = keys::parse_pubkey_hex(&keys_map[peer]).unwrap();
+                    let sk = keys::shared_key(&kp.secret, &their);
+                    (
+                        masking::pair_sign(&device, peer),
+                        keys::pair_seed_from_shared(&sk, round_id, &device, peer),
+                    )
+                })
+                .collect();
+            let weighted =
+                pj.get("weighted").and_then(Json::as_bool).unwrap_or(true);
+            let weight = if weighted {
+                n_samples as f64 / cfg.weight_scale as f64
+            } else {
+                1.0
+            };
+            params = masking::mask_update_with_seeds(
+                &params,
+                weight,
+                &seeds,
+                cfg.frac_bits,
+            )?;
+        }
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(params))
+            .set("n_samples", n_samples)
+            .set("loss", 0.5))
+    });
+
+    registry.register("fact_reveal", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let mut seeds = Json::obj();
+        let mut shares_out = Json::obj();
+        for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
+            let Some(name) = d.as_str() else { continue };
+            if name == device {
+                continue;
+            }
+            let Some(pub_hex) = keys_map.get(name) else { continue };
+            let their = keys::parse_pubkey_hex(pub_hex)?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            seeds = seeds.set(
+                name,
+                to_hex(&keys::pair_seed_from_shared(&sk, round_id, &device, name)),
+            );
+            if let Some(ct_hex) =
+                p.get("shares").and_then(|s| s.get(name)).and_then(Json::as_str)
+            {
+                let plain = keys::decrypt_share(
+                    &sk,
+                    round_id,
+                    name,
+                    &device,
+                    &from_hex(ct_hex)?,
+                )?;
+                shares_out = shares_out.set(name, to_hex(&plain));
+            }
+        }
+        Ok(Json::obj().set("seeds", seeds).set("shares", shares_out))
+    });
+    registry
+}
+
+// ---------------------------------------------------------- kill store
+
+/// Delegates to a real [`WalRoundStore`] but injects a coordinator crash:
+/// the `kill_after`-th durable write (event or charge) is persisted and
+/// then errors — the moment a real process would die with the record
+/// already on disk — and every later write fails like a dead process.
+struct KillStore {
+    inner: WalRoundStore,
+    remaining: AtomicI64,
+}
+
+impl KillStore {
+    fn new(dir: &std::path::Path, kill_after: i64) -> KillStore {
+        KillStore {
+            inner: WalRoundStore::open(dir).unwrap(),
+            remaining: AtomicI64::new(kill_after),
+        }
+    }
+
+    /// Count one durable write; `Err(true)` once the crash point is hit.
+    fn tick(&self) -> bool {
+        self.remaining.fetch_sub(1, Ordering::SeqCst) <= 1
+    }
+
+    fn dead(&self) -> bool {
+        self.remaining.load(Ordering::SeqCst) <= 0
+    }
+
+    fn crash<T>() -> feddart::Result<T> {
+        Err(FedError::Fact("injected coordinator crash".into()))
+    }
+}
+
+impl RoundStore for KillStore {
+    fn append(&self, ev: RoundEvent) -> feddart::Result<RoundPhase> {
+        if self.dead() {
+            return Self::crash();
+        }
+        let phase = self.inner.append(ev)?;
+        if self.tick() {
+            return Self::crash();
+        }
+        Ok(phase)
+    }
+    fn append_charge(&self, charge: LedgerCharge) -> feddart::Result<()> {
+        if self.dead() {
+            return Self::crash();
+        }
+        self.inner.append_charge(charge)?;
+        if self.tick() {
+            return Self::crash();
+        }
+        Ok(())
+    }
+    fn charges(&self) -> feddart::Result<Vec<LedgerCharge>> {
+        self.inner.charges()
+    }
+    fn round(&self, round_id: u64) -> feddart::Result<Option<RoundState>> {
+        self.inner.round(round_id)
+    }
+    fn rounds(&self) -> feddart::Result<Vec<RoundState>> {
+        self.inner.rounds()
+    }
+    fn session_tag(&self) -> feddart::Result<Option<u64>> {
+        self.inner.session_tag()
+    }
+    fn set_session_tag(&self, tag: u64) -> feddart::Result<u64> {
+        self.inner.set_session_tag(tag)
+    }
+    fn compact(&self) -> feddart::Result<()> {
+        self.inner.compact()
+    }
+    fn recovery(&self) -> RecoveryStatus {
+        self.inner.recovery()
+    }
+}
+
+// ------------------------------------------------------------- drivers
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "feddart-round-recovery-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn server_with_store(store: Arc<dyn RoundStore>) -> FactServer {
+    let wm = WorkflowManager::test_mode(CLIENTS, deterministic_registry(), 4);
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig {
+            mode: PrivacyMode::SecAggDp,
+            clip_norm: 4.0,
+            noise_multiplier: 0.05,
+            weight_scale: 128.0,
+            ..PrivacyConfig::default()
+        })
+        .with_round_store(store)
+        .with_session_tag(SESSION_TAG);
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(ROUNDS)),
+            3,
+        )
+        .unwrap();
+    server
+}
+
+/// Run a full session against `store`; recover first (replays whatever a
+/// previous run left), then learn.
+fn run_session(store: Arc<dyn RoundStore>) -> (feddart::Result<()>, FactServer) {
+    let mut server = server_with_store(store);
+    if let Err(e) = server.recover() {
+        return (Err(e), server);
+    }
+    let out = server.learn();
+    (out, server)
+}
+
+struct Reference {
+    params: Vec<f32>,
+    steps: u64,
+    epsilon: f64,
+    total_writes: i64,
+}
+
+/// The uninterrupted run: final params + ε, and how many durable writes
+/// the session performs (the size of the kill matrix).
+fn reference_run(tag: &str) -> Reference {
+    let dir = tmp_dir(tag);
+    let store = Arc::new(KillStore::new(&dir, i64::MAX));
+    let start = store.remaining.load(Ordering::SeqCst);
+    let (out, server) = run_session(store.clone());
+    out.unwrap();
+    let total_writes = start - store.remaining.load(Ordering::SeqCst);
+    assert_eq!(server.history().len(), ROUNDS);
+    assert_eq!(server.accountant().steps, ROUNDS as u64);
+    Reference {
+        params: server.container().clusters[0].params.clone(),
+        steps: server.accountant().steps,
+        epsilon: server.accountant().epsilon(1e-5),
+        total_writes,
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+/// THE acceptance test: kill the coordinator after every single durable
+/// write of a 2-round secagg+dp session — covering a crash inside each of
+/// Configured/Keys/Shares/Learn/Reveal/Aggregated/Closed and between the
+/// ε-ledger charges — restart from the WAL, and require the resumed
+/// session to converge to the bit-identical aggregate and ε-ledger.
+#[test]
+fn killed_at_every_wal_boundary_resumes_to_identical_state() {
+    let reference = reference_run("reference");
+    assert!(
+        reference.total_writes >= 16,
+        "expected >= 8 events/round + charges, saw {}",
+        reference.total_writes
+    );
+
+    for k in 1..=reference.total_writes {
+        let dir = tmp_dir(&format!("kill-{k}"));
+
+        // phase 1: run until the injected crash
+        let killed = Arc::new(KillStore::new(&dir, k));
+        let (out, _) = run_session(killed);
+        out.unwrap_err(); // every kill point must surface the crash
+
+        // phase 2: a fresh coordinator restarts from the same WAL dir
+        let resumed_store = Arc::new(WalRoundStore::open(&dir).unwrap());
+        let (out, server) = run_session(resumed_store.clone());
+        out.unwrap_or_else(|e| panic!("kill point {k}: resume failed: {e}"));
+
+        assert_eq!(
+            server.container().clusters[0].params, reference.params,
+            "kill point {k}: resumed aggregate diverged"
+        );
+        assert_eq!(
+            server.accountant().steps, reference.steps,
+            "kill point {k}: ε-ledger step count diverged"
+        );
+        let eps = server.accountant().epsilon(1e-5);
+        assert!(
+            (eps - reference.epsilon).abs() < 1e-12,
+            "kill point {k}: ε diverged ({eps} vs {})",
+            reference.epsilon
+        );
+        assert_eq!(server.history().len(), ROUNDS, "kill point {k}");
+
+        // the store agrees: every round terminal, every charge present
+        assert!(resumed_store.in_flight().unwrap().is_empty());
+        assert_eq!(resumed_store.charges().unwrap().len(), ROUNDS);
+    }
+}
+
+/// A crash between `Closed` and the ε charge used to fork the ledger
+/// (rounds in the snapshot, charge nowhere).  The charge log in the
+/// round store is now the source of truth: recovery heals the missing
+/// charge exactly once.
+#[test]
+fn closed_but_uncharged_round_is_healed_exactly_once() {
+    let reference = reference_run("charge-ref");
+    // kill right after the LAST round event and before any charge: both
+    // rounds closed, zero charges on disk
+    let events_only = reference.total_writes - ROUNDS as i64;
+    let dir = tmp_dir("charge-fork");
+    let killed = Arc::new(KillStore::new(&dir, events_only));
+    let (out, _) = run_session(killed);
+    out.unwrap_err();
+
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    assert!(store.charges().unwrap().is_empty(), "no charge reached disk");
+    let (out, server) = run_session(store.clone());
+    out.unwrap();
+    assert_eq!(server.accountant().steps, reference.steps);
+    assert_eq!(store.charges().unwrap().len(), ROUNDS);
+
+    // a second restart replays the healed charges without re-charging
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    let (out, server) = run_session(store.clone());
+    out.unwrap();
+    assert_eq!(server.accountant().steps, reference.steps);
+    assert_eq!(store.charges().unwrap().len(), ROUNDS);
+}
+
+/// The store's charge log outranks a stale model-snapshot accountant in
+/// BOTH restore orders — the Snapshot-vs-WAL race can no longer fork ε
+/// history.
+#[test]
+fn stale_snapshot_accountant_cannot_fork_the_ledger() {
+    use feddart::fact::store::{FsObjectStore, ModelStore};
+
+    // a finished 2-round session in the WAL...
+    let dir = tmp_dir("snapshot-race");
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    let (out, server) = run_session(store.clone());
+    out.unwrap();
+    assert_eq!(server.accountant().steps, 2);
+
+    // ...and a STALE model snapshot carrying a 1-step accountant
+    let snap_dir = tmp_dir("snapshot-race-snap");
+    let model_store = ModelStore::new(FsObjectStore::new(&snap_dir).unwrap());
+    {
+        let sd = tmp_dir("snapshot-race-one");
+        let one = Arc::new(WalRoundStore::open(&sd).unwrap());
+        let wm =
+            WorkflowManager::test_mode(CLIENTS, deterministic_registry(), 4);
+        let mut s = FactServer::new(wm)
+            .with_privacy(PrivacyConfig {
+                mode: PrivacyMode::SecAggDp,
+                clip_norm: 4.0,
+                noise_multiplier: 0.05,
+                weight_scale: 128.0,
+                ..PrivacyConfig::default()
+            })
+            .with_round_store(one)
+            .with_session_tag(SESSION_TAG);
+        s.initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(1)),
+            3,
+        )
+        .unwrap();
+        s.learn().unwrap();
+        assert_eq!(s.accountant().steps, 1);
+        s.checkpoint(&model_store, 1).unwrap();
+    }
+
+    // restore-then-recover: the WAL's 2 charges beat the 1-step snapshot
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    let mut server = server_with_store(store);
+    assert!(server.restore_latest(&model_store, 0).unwrap());
+    assert_eq!(server.accountant().steps, 1, "stale ledger restored");
+    server.recover().unwrap();
+    assert_eq!(server.accountant().steps, 2, "store must win");
+
+    // recover-then-restore: never backwards
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    let mut server = server_with_store(store);
+    server.recover().unwrap();
+    assert_eq!(server.accountant().steps, 2);
+    assert!(server.restore_latest(&model_store, 0).unwrap());
+    assert_eq!(server.accountant().steps, 2, "restore must not roll back ε");
+}
+
+/// A corrupt WAL tail (torn write, disk damage) is detected by the CRC
+/// frame, truncated, and the wounded in-flight round is voided per
+/// `RevealPolicy` — with `abort` the coordinator refuses to resume, with
+/// `proceed` it burns the round index and keeps training.  Either way the
+/// damaged round is never silently resumed.
+#[test]
+fn corrupt_wal_tail_voids_the_wounded_round_per_policy() {
+    // round 0 closed (8 events), round 1 killed mid-flight at event 12
+    let make_wounded = |tag: &str| -> PathBuf {
+        let dir = tmp_dir(tag);
+        let killed = Arc::new(KillStore::new(&dir, 12));
+        let (out, _) = run_session(killed);
+        out.unwrap_err();
+        // torn write: garbage after the last intact record
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("wal.jsonl"))
+            .unwrap();
+        f.write_all(b"FDW1 deadbeef {\"event\":{\"torn").unwrap();
+        f.flush().unwrap();
+        dir
+    };
+
+    // abort (default): recovery refuses to touch the tainted round
+    let dir = make_wounded("corrupt-abort");
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    assert!(store.recovery().corrupt_tail_events > 0, "tail not detected");
+    let (out, _) = run_session(store);
+    let err = out.unwrap_err().to_string();
+    assert!(err.contains("corrupt WAL tail"), "{err}");
+
+    // proceed: the wounded round is voided and training completes the
+    // remaining schedule without it
+    let dir = make_wounded("corrupt-proceed");
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    let wm = WorkflowManager::test_mode(CLIENTS, deterministic_registry(), 4);
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig {
+            mode: PrivacyMode::SecAggDp,
+            clip_norm: 4.0,
+            noise_multiplier: 0.05,
+            weight_scale: 128.0,
+            reveal_policy: RevealPolicy::Proceed,
+            ..PrivacyConfig::default()
+        })
+        .with_round_store(store.clone())
+        .with_session_tag(SESSION_TAG);
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(ROUNDS)),
+            3,
+        )
+        .unwrap();
+    let report = server.recover().unwrap();
+    assert_eq!(report.voided, 1, "the wounded round must be voided");
+    server.learn().unwrap();
+    // round 0 replayed; round 1 burned — never re-run, never resumed
+    assert_eq!(server.history().len(), 1);
+    let voided: Vec<RoundState> = store
+        .rounds()
+        .unwrap()
+        .into_iter()
+        .filter(|r| r.phase == RoundPhase::Voided)
+        .collect();
+    assert_eq!(voided.len(), 1);
+    assert_eq!(
+        voided[0].void_reason.as_deref(),
+        Some("corrupt WAL tail truncated mid-round")
+    );
+    assert_eq!(
+        server.metrics().counter("fact.roundstore.voided").get(),
+        1
+    );
+}
+
+/// Plain-mode sanity: the WAL also rides along without privacy — the
+/// store sees the same Configured → Learn → Aggregated → Closed arc and a
+/// restart resumes it (this is the path `feddart run --round-store` uses
+/// without `--privacy`).
+#[test]
+fn plain_rounds_without_privacy_also_recover() {
+    // reference: uninterrupted 2-round clear session
+    let run_clear = |store: Arc<dyn RoundStore>| -> (feddart::Result<()>, FactServer) {
+        let wm =
+            WorkflowManager::test_mode(CLIENTS, deterministic_registry(), 4);
+        let mut server = FactServer::new(wm)
+            .with_round_store(store)
+            .with_session_tag(SESSION_TAG);
+        server
+            .initialization_by_model(
+                Arc::new(TestModel),
+                Arc::new(FixedRoundFl(ROUNDS)),
+                3,
+            )
+            .unwrap();
+        if let Err(e) = server.recover() {
+            return (Err(e), server);
+        }
+        (server.learn(), server)
+    };
+
+    let ref_dir = tmp_dir("clear-ref");
+    let (out, reference) =
+        run_clear(Arc::new(WalRoundStore::open(&ref_dir).unwrap()));
+    out.unwrap();
+
+    // clear rounds log Configured/LearnDispatched/LearnClosed/Aggregated/
+    // Closed = 5 events each; kill at write 7 = mid round 1, right after
+    // its LearnDispatched hit disk
+    let dir = tmp_dir("clear-kill");
+    let (out, _) = run_clear(Arc::new(KillStore::new(&dir, 7)));
+    out.unwrap_err();
+    let (out, resumed) =
+        run_clear(Arc::new(WalRoundStore::open(&dir).unwrap()));
+    out.unwrap();
+    assert_eq!(
+        resumed.container().clusters[0].params,
+        reference.container().clusters[0].params
+    );
+    assert_eq!(resumed.history().len(), ROUNDS);
+}
