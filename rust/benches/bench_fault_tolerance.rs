@@ -1,32 +1,399 @@
 //! E3 — fault tolerance (paper §2.1: "a client can connect or disconnect
 //! at any time, without stopping the execution of the workflow").
 //!
-//! Regenerates: round completion and convergence under increasing client
-//! failure rates (drop-before + crash-during, with rejoin), vs the
-//! reliable baseline.  Expected shape: all configurations complete every
-//! round; wall time grows with the failure rate (retries), final loss
-//! stays close to the reliable run.
+//! Three engine-free sections measure the self-healing round machinery
+//! (ISSUE 7) and write `BENCH_faults.json`:
+//!
+//!   1. static vs adaptive deadline close latency on straggler-heavy
+//!      rounds at equal quorum — the adaptive policy (p90 × margin,
+//!      clamped) should close rounds well before the static deadline;
+//!   2. in-round cohort repair cost — wall time of a round whose sampled
+//!      cohort contains a dead member (repaired in-round) vs a healthy
+//!      baseline;
+//!   3. a mini chaos soak — flaky + straggler clients over several
+//!      rounds; reports the fraction of rounds that reached a terminal
+//!      phase (the pass rate; 1.0 means nothing wedged).
+//!
+//! The original HLO churn sweep (convergence under increasing failure
+//! rates) still runs, but only when compiled artifacts exist.
 
 #[path = "common.rs"]
 mod common;
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use feddart::benchkit::{fmt_s, Table};
+use feddart::benchkit::{fmt_s, smoke, BenchReport, Stats, Table};
+use feddart::config::{DeadlineMode, ParticipationConfig, SamplingStrategy};
+use feddart::coordinator::participation::{
+    participation_round_key, Candidate, CohortSampler,
+};
+use feddart::coordinator::round_store::RoundPhase;
 use feddart::coordinator::WorkflowManager;
 use feddart::dart::faults::{FaultInjector, FaultProfile};
-use feddart::dart::testmode::SimClient;
-use feddart::dart::TaskRegistry;
-use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
-use feddart::fact::model::{HloModel, Hyper};
+use feddart::dart::scheduler::{TaskId, TaskResult, TaskSpec, TaskStatus};
+use feddart::dart::testmode::{SimClient, TestModeDart};
+use feddart::dart::{DartApi, DeviceInfo, TaskRegistry};
+use feddart::error::FedError;
+use feddart::fact::model::{FactModel, Hyper};
 use feddart::fact::stopping::FixedRoundFl;
-use feddart::fact::{Aggregation, FactClientRuntime, FactServer};
+use feddart::fact::{Aggregation, FactServer};
+use feddart::json::Json;
+use feddart::util::rng::golden_f32;
+use feddart::util::tensorbuf::TensorBuf;
+
+const PARAMS: usize = 16;
+
+struct BenchModel;
+
+impl FactModel for BenchModel {
+    fn name(&self) -> &str {
+        "benchmodel"
+    }
+    fn param_count(&self) -> usize {
+        PARAMS
+    }
+    fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+        Ok(golden_f32(seed as u32, PARAMS))
+    }
+    fn aggregation(&self) -> &Aggregation {
+        &Aggregation::FedAvg
+    }
+}
+
+/// Client registry: `fact_learn` echoes `params + 0.01` and sleeps for
+/// devices in the straggler set.
+fn bench_registry(
+    stragglers: Arc<BTreeSet<String>>,
+    straggle: Duration,
+) -> TaskRegistry {
+    let reg = TaskRegistry::new();
+    reg.register("fact_init", |_| Ok(Json::Null));
+    reg.register("fact_learn", move |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?;
+        if stragglers.contains(device) {
+            std::thread::sleep(straggle);
+        }
+        let global = TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Task(e.to_string()))?;
+        let out: Vec<f32> =
+            global.as_f32_slice().iter().map(|g| g + 0.01).collect();
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(out))
+            .set("n_samples", 16.0)
+            .set("loss", 1.0))
+    });
+    reg
+}
+
+/// Static vs adaptive deadline close latency under a straggler mix at
+/// equal quorum.  10 clients, 2 of them sleeping past the static
+/// deadline; quorum 1.0 so only the deadline ever closes the round.  The
+/// static arm waits the full `deadline_ms` every round; the adaptive arm
+/// pays it once (cold fallback), then closes at the clamped p90 of the
+/// fast clients.
+fn deadline_bench(mut report: BenchReport) -> BenchReport {
+    let n = 10;
+    let rounds = if smoke() { 3 } else { 6 };
+    let static_deadline_ms = 400u64;
+    let straggle = Duration::from_millis(700);
+    let stragglers: Arc<BTreeSet<String>> =
+        Arc::new([format!("client-{}", n - 2), format!("client-{}", n - 1)].into());
+
+    let mut t =
+        Table::new(&["arm", "round_mean", "warm_mean", "dropped", "rounds"]);
+    let mut means = std::collections::BTreeMap::new();
+    for (arm, mode) in
+        [("static", DeadlineMode::Static), ("adaptive", DeadlineMode::P90)]
+    {
+        let part = ParticipationConfig {
+            sample_rate: 1.0,
+            quorum: 1.0,
+            deadline_ms: static_deadline_ms,
+            deadline: mode,
+            deadline_margin: 2.0,
+            deadline_min_ms: 50,
+            deadline_max_ms: 150,
+            strategy: SamplingStrategy::Uniform,
+            seed: 11,
+            ..Default::default()
+        };
+        let reg = bench_registry(Arc::clone(&stragglers), straggle);
+        let wm = WorkflowManager::test_mode(n, reg, n);
+        let mut server = FactServer::new(wm).with_participation(part);
+        server
+            .initialization_by_model(
+                Arc::new(BenchModel),
+                Arc::new(FixedRoundFl(rounds)),
+                n,
+            )
+            .expect("init");
+        server.learn().expect("learn");
+        let hist = server.history();
+        assert_eq!(hist.len(), rounds);
+        let all: Vec<f64> = hist.iter().map(|r| r.round_ms / 1e3).collect();
+        let warm: Vec<f64> = all[1..].to_vec();
+        let dropped: usize = hist.iter().map(|r| r.late + r.dropped).sum();
+        let mean = Stats::from_samples(all).mean;
+        let warm_mean = Stats::from_samples(warm).mean;
+        t.row(&[
+            arm.to_string(),
+            fmt_s(mean),
+            fmt_s(warm_mean),
+            dropped.to_string(),
+            rounds.to_string(),
+        ]);
+        report = report
+            .set(&format!("deadline_{arm}_round_s"), mean)
+            .set(&format!("deadline_{arm}_warm_round_s"), warm_mean)
+            .set(&format!("deadline_{arm}_dropped"), dropped);
+        if arm == "adaptive" {
+            let m = server.metrics();
+            report = report
+                .set(
+                    "deadline_adaptive_closes",
+                    m.counter("fact.round.adaptive_closes").get() as usize,
+                )
+                .set(
+                    "deadline_adaptive_last_ms",
+                    m.counter("fact.round.deadline_adaptive_ms").get() as usize,
+                );
+        }
+        means.insert(arm, warm_mean);
+    }
+    t.print(&format!(
+        "static vs adaptive deadline (10 clients, 2 stragglers @{}ms, static deadline {}ms, quorum 1.0)",
+        straggle.as_millis(),
+        static_deadline_ms
+    ));
+    let speedup = means["static"] / means["adaptive"].max(1e-9);
+    report = report.set("deadline_adaptive_speedup", speedup);
+    println!("shape check: adaptive speedup over static = {speedup:.2}x");
+    assert!(
+        means["adaptive"] < means["static"],
+        "adaptive deadline must close straggler rounds faster than static"
+    );
+    report
+}
+
+/// [`TestModeDart`] decorator that masks chosen devices as dead at the
+/// `DartApi` level, which is the liveness view the repair pass consults.
+struct DeadMask {
+    inner: Arc<TestModeDart>,
+    dead: Arc<std::sync::Mutex<BTreeSet<String>>>,
+}
+
+impl DartApi for DeadMask {
+    fn devices(&self) -> feddart::Result<Vec<DeviceInfo>> {
+        let dead = self.dead.lock().unwrap();
+        Ok(self
+            .inner
+            .devices()?
+            .into_iter()
+            .map(|mut d| {
+                if dead.contains(&d.name) {
+                    d.alive = false;
+                }
+                d
+            })
+            .collect())
+    }
+    fn submit(&self, spec: TaskSpec) -> feddart::Result<TaskId> {
+        self.inner.submit(spec)
+    }
+    fn status(&self, id: TaskId) -> feddart::Result<TaskStatus> {
+        self.inner.status(id)
+    }
+    fn results(&self, id: TaskId) -> feddart::Result<Vec<TaskResult>> {
+        self.inner.results(id)
+    }
+    fn result_count(&self, id: TaskId) -> feddart::Result<usize> {
+        self.inner.result_count(id)
+    }
+    fn progress(&self, id: TaskId) -> feddart::Result<(TaskStatus, usize)> {
+        self.inner.progress(id)
+    }
+    fn stop_task(&self, id: TaskId) -> feddart::Result<()> {
+        self.inner.stop_task(id)
+    }
+}
+
+/// Wall time of one sampled round whose cohort contains a dead member
+/// (repaired in-round: dead member dropped, replacement drawn, union
+/// charged) vs the healthy baseline round.
+fn repair_bench(mut report: BenchReport) -> BenchReport {
+    let n = 8;
+    let iters = if smoke() { 3 } else { 10 };
+    let part = ParticipationConfig {
+        sample_rate: 0.5,
+        quorum: 1.0,
+        deadline_ms: 10_000,
+        strategy: SamplingStrategy::Uniform,
+        seed: 31,
+        ..Default::default()
+    };
+    let sampler = CohortSampler::new(part.clone());
+    let pool: Vec<Candidate> = (0..n)
+        .map(|i| Candidate::uniform(&format!("client-{i}")))
+        .collect();
+    let cohort =
+        sampler.sample(participation_round_key(part.seed, 0, 0, 0), &pool);
+
+    let one_round = |mask_dead: bool| -> f64 {
+        let reg = bench_registry(Arc::new(BTreeSet::new()), Duration::ZERO);
+        let sim = Arc::new(TestModeDart::start_reliable(n, reg, n));
+        let dead = Arc::new(std::sync::Mutex::new(BTreeSet::new()));
+        let wm = WorkflowManager::with_backend(Arc::new(DeadMask {
+            inner: sim,
+            dead: Arc::clone(&dead),
+        }));
+        let mut server =
+            FactServer::new(wm).with_participation(part.clone());
+        server
+            .initialization_by_model(
+                Arc::new(BenchModel),
+                Arc::new(FixedRoundFl(1)),
+                n,
+            )
+            .expect("init");
+        if mask_dead {
+            dead.lock().unwrap().insert(cohort[0].clone());
+        }
+        let t0 = Instant::now();
+        server.learn().expect("learn");
+        if mask_dead {
+            assert_eq!(server.metrics().counter("fact.round.repaired").get(), 1);
+        }
+        t0.elapsed().as_secs_f64()
+    };
+
+    let baseline = Stats::from_samples(
+        (0..iters).map(|_| one_round(false)).collect(),
+    );
+    let repaired = Stats::from_samples(
+        (0..iters).map(|_| one_round(true)).collect(),
+    );
+    let mut t = Table::new(&["arm", "round_mean", "p95"]);
+    t.row(&["healthy".into(), fmt_s(baseline.mean), fmt_s(baseline.p95)]);
+    t.row(&["repaired".into(), fmt_s(repaired.mean), fmt_s(repaired.p95)]);
+    t.print("in-round cohort repair cost (8 clients, cohort 4, 1 dead member)");
+    report
+        .set("repair_baseline_round_s", baseline.mean)
+        .set("repair_repaired_round_s", repaired.mean)
+        .set("repair_overhead_s", (repaired.mean - baseline.mean).max(0.0))
+}
+
+/// Mini chaos soak: flaky + straggler clients over several sampled
+/// adaptive-deadline rounds; the pass rate is the fraction of rounds
+/// that reached a terminal phase (Closed or Voided — nothing wedged).
+fn chaos_bench(mut report: BenchReport) -> BenchReport {
+    let n = 8;
+    let rounds = if smoke() { 4 } else { 8 };
+    let reg = bench_registry(Arc::new(BTreeSet::new()), Duration::ZERO);
+    let clients: Vec<SimClient> = (0..n)
+        .map(|i| {
+            let profile = match i {
+                0 | 1 => FaultProfile::flaky(0.2),
+                2 | 3 => FaultProfile::straggler(3.0, 20),
+                _ => FaultProfile::default(),
+            };
+            SimClient {
+                name: format!("client-{i}"),
+                hardware: Default::default(),
+                faults: FaultInjector::new(0xbe4c_0000 + i as u64, profile),
+                capacity: 1,
+            }
+        })
+        .collect();
+    let wm = WorkflowManager::test_mode_with(clients, reg, n);
+    let mut server = FactServer::new(wm).with_participation(ParticipationConfig {
+        sample_rate: 0.75,
+        quorum: 0.6,
+        deadline_ms: 2_000,
+        late_grace_ms: 50,
+        deadline: DeadlineMode::P90,
+        deadline_margin: 2.0,
+        deadline_min_ms: 200,
+        deadline_max_ms: 2_000,
+        strategy: SamplingStrategy::Uniform,
+        seed: 4242,
+        ..Default::default()
+    });
+    server
+        .initialization_by_model(
+            Arc::new(BenchModel),
+            Arc::new(FixedRoundFl(rounds)),
+            n,
+        )
+        .expect("init");
+    let t0 = Instant::now();
+    let outcome = server.learn();
+    let wall = t0.elapsed().as_secs_f64();
+    let stored = server.round_store().rounds().expect("rounds");
+    let terminal = stored
+        .iter()
+        .filter(|r| matches!(r.phase, RoundPhase::Closed | RoundPhase::Voided))
+        .count();
+    let pass_rate = terminal as f64 / rounds as f64;
+    let mut t = Table::new(&["rounds", "terminal", "pass_rate", "wall"]);
+    t.row(&[
+        rounds.to_string(),
+        terminal.to_string(),
+        format!("{pass_rate:.2}"),
+        fmt_s(wall),
+    ]);
+    t.print("mini chaos soak (2 flaky(0.2) + 2 straggler(3x) of 8, adaptive p90)");
+    if let Err(e) = outcome {
+        println!("chaos session error (rounds still audited): {e}");
+    }
+    assert_eq!(terminal, stored.len(), "no round may stay wedged");
+    report = report
+        .set("chaos_rounds", rounds)
+        .set("chaos_terminal_rounds", terminal)
+        .set("chaos_pass_rate", pass_rate)
+        .set("chaos_wall_s", wall);
+    report
+}
 
 fn main() {
-    let engine = common::require_artifacts();
+    println!(
+        "bench_fault_tolerance: smoke={} (BENCH_SMOKE=1 for CI mode)",
+        smoke()
+    );
+    let mut report = BenchReport::new("faults").set("smoke", smoke());
+    report = deadline_bench(report);
+    report = repair_bench(report);
+    report = chaos_bench(report);
+
+    // E3 proper — HLO training under churn; needs compiled artifacts.
+    if let Some(engine) = common::try_artifacts() {
+        report = hlo_churn(&engine, report);
+        engine.shutdown();
+    } else {
+        println!("\nskipping E3 HLO churn sweep (no compiled artifacts)");
+    }
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write report: {e}"),
+    }
+}
+
+/// The original E3 sweep: convergence and wall time under increasing
+/// failure rates, vs the reliable baseline.
+fn hlo_churn(
+    engine: &feddart::runtime::Engine,
+    mut report: BenchReport,
+) -> BenchReport {
+    use feddart::fact::data::{synthesize, Partition, SyntheticConfig};
+    use feddart::fact::model::HloModel;
+    use feddart::fact::FactClientRuntime;
+
     let n = 16;
-    let rounds = 8;
+    let rounds = if smoke() { 3 } else { 8 };
     let mut t = Table::new(&[
         "fault_rate", "rounds_done", "wall", "final_loss", "retries_visible",
     ]);
@@ -60,16 +427,14 @@ fn main() {
             .with_hyper(Hyper { lr: 0.2, mu: 0.0, local_steps: 2, round: 0 });
         server.round_timeout = Duration::from_secs(300);
         let model =
-            HloModel::arc(&engine, "mlp_default", Aggregation::WeightedFedAvg).unwrap();
+            HloModel::arc(engine, "mlp_default", Aggregation::WeightedFedAvg).unwrap();
         server
             .initialization_by_model(model, Arc::new(FixedRoundFl(rounds)), 9)
             .unwrap();
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         server.learn().unwrap();
         let wall = t0.elapsed().as_secs_f64();
         let hist = server.history();
-        // retries show up as rounds whose wall time exceeds the fault-free
-        // baseline by the retry turnaround
         t.row(&[
             format!("{rate:.1}"),
             format!("{}/{rounds}", hist.len()),
@@ -77,8 +442,14 @@ fn main() {
             format!("{:.4}", hist.last().unwrap().mean_loss),
             if rate > 0.0 { "yes".into() } else { "-".to_string() },
         ]);
+        report = report
+            .set(&format!("churn_wall_s_{rate:.1}"), wall)
+            .set(
+                &format!("churn_final_loss_{rate:.1}"),
+                hist.last().unwrap().mean_loss as f64,
+            );
     }
     t.print("E3: training under client churn (16 clients, drop+crash+rejoin)");
-    println!("\nE3 shape check: every row completes all rounds; loss comparable to rate=0.");
-    engine.shutdown();
+    println!("E3 shape check: every row completes all rounds; loss comparable to rate=0.");
+    report
 }

@@ -284,6 +284,64 @@ impl SamplingStrategy {
     }
 }
 
+/// How the learn-phase deadline of a round is resolved.
+///
+/// `Static` always uses the configured `deadline_ms`.  The percentile
+/// modes close the round at that percentile of the cohort's recently
+/// observed learn latencies × `deadline_margin`, clamped into
+/// `[deadline_min_ms, deadline_max_ms]` — falling back to the static
+/// `deadline_ms` until the latency tracker is warm (see
+/// `coordinator::latency`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlineMode {
+    /// Always use the static `deadline_ms`.
+    Static,
+    /// Median of observed learn latencies × margin.
+    P50,
+    /// 90th percentile of observed learn latencies × margin.
+    P90,
+    /// 99th percentile of observed learn latencies × margin.
+    P99,
+}
+
+impl DeadlineMode {
+    /// Parse the wire/CLI string: `static | p50 | p90 | p99`.
+    pub fn parse(s: &str) -> Result<DeadlineMode> {
+        Ok(match s {
+            "static" => DeadlineMode::Static,
+            "p50" => DeadlineMode::P50,
+            "p90" => DeadlineMode::P90,
+            "p99" => DeadlineMode::P99,
+            other => {
+                return Err(FedError::Config(format!(
+                    "unknown deadline mode '{other}' \
+                     (expected static | p50 | p90 | p99)"
+                )))
+            }
+        })
+    }
+
+    /// Stable lowercase name used in the serialized form and the CLI.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeadlineMode::Static => "static",
+            DeadlineMode::P50 => "p50",
+            DeadlineMode::P90 => "p90",
+            DeadlineMode::P99 => "p99",
+        }
+    }
+
+    /// The tracked quantile this mode closes at; `None` for `Static`.
+    pub fn quantile(&self) -> Option<f64> {
+        match self {
+            DeadlineMode::Static => None,
+            DeadlineMode::P50 => Some(0.50),
+            DeadlineMode::P90 => Some(0.90),
+            DeadlineMode::P99 => Some(0.99),
+        }
+    }
+}
+
 /// Partial-participation round configuration: cohort sampling, quorum and
 /// deadline semantics.  Shared by the FACT server, the CLI, and the DART
 /// REST round-config endpoint.
@@ -305,6 +363,16 @@ pub struct ParticipationConfig {
     /// Post-close window in which late arrivals are still *observed* (and
     /// counted in metrics) before being discarded.  0 skips the sweep.
     pub late_grace_ms: u64,
+    /// How the effective learn deadline is resolved (static or a tracked
+    /// latency percentile).
+    pub deadline: DeadlineMode,
+    /// Safety margin ≥ 1 multiplied onto the tracked percentile when
+    /// `deadline` is adaptive.
+    pub deadline_margin: f64,
+    /// Floor on an adaptive deadline in milliseconds (0 = no floor).
+    pub deadline_min_ms: u64,
+    /// Cap on an adaptive deadline in milliseconds (0 = no cap).
+    pub deadline_max_ms: u64,
     /// Floor on the cohort size (clamped to the pool size).
     pub min_cohort: usize,
     pub strategy: SamplingStrategy,
@@ -322,6 +390,10 @@ impl Default for ParticipationConfig {
             quorum: 1.0,
             deadline_ms: 0,
             late_grace_ms: 0,
+            deadline: DeadlineMode::Static,
+            deadline_margin: 1.5,
+            deadline_min_ms: 0,
+            deadline_max_ms: 0,
             min_cohort: 1,
             strategy: SamplingStrategy::Uniform,
             seed: 0x5eed_c0c0_a11e_d000,
@@ -352,6 +424,18 @@ impl ParticipationConfig {
         if self.min_cohort == 0 {
             return Err(FedError::Config("min_cohort must be >= 1".into()));
         }
+        if !(self.deadline_margin >= 1.0) {
+            return Err(FedError::Config(format!(
+                "deadline_margin must be >= 1, got {}",
+                self.deadline_margin
+            )));
+        }
+        if self.deadline_max_ms > 0 && self.deadline_max_ms < self.deadline_min_ms {
+            return Err(FedError::Config(format!(
+                "deadline_max_ms ({}) must be >= deadline_min_ms ({})",
+                self.deadline_max_ms, self.deadline_min_ms
+            )));
+        }
         Ok(())
     }
 
@@ -362,6 +446,10 @@ impl ParticipationConfig {
         self.quorum = self.quorum.clamp(1e-6, 1.0);
         self.over_provision = self.over_provision.max(1.0);
         self.min_cohort = self.min_cohort.max(1);
+        self.deadline_margin = self.deadline_margin.max(1.0);
+        if self.deadline_max_ms > 0 {
+            self.deadline_max_ms = self.deadline_max_ms.max(self.deadline_min_ms);
+        }
         self
     }
 
@@ -372,6 +460,10 @@ impl ParticipationConfig {
             .set("quorum", self.quorum)
             .set("deadline_ms", self.deadline_ms)
             .set("late_grace_ms", self.late_grace_ms)
+            .set("deadline", self.deadline.as_str())
+            .set("deadline_margin", self.deadline_margin)
+            .set("deadline_min_ms", self.deadline_min_ms)
+            .set("deadline_max_ms", self.deadline_max_ms)
             .set("min_cohort", self.min_cohort)
             .set("strategy", self.strategy.as_string())
             // decimal string: JSON numbers are f64 and silently corrupt
@@ -403,6 +495,24 @@ impl ParticipationConfig {
                 .get("late_grace_ms")
                 .and_then(Json::as_i64)
                 .unwrap_or(d.late_grace_ms as i64)
+                .max(0) as u64,
+            deadline: match j.get("deadline").and_then(Json::as_str) {
+                Some(s) => DeadlineMode::parse(s)?,
+                None => d.deadline,
+            },
+            deadline_margin: j
+                .get("deadline_margin")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.deadline_margin),
+            deadline_min_ms: j
+                .get("deadline_min_ms")
+                .and_then(Json::as_i64)
+                .unwrap_or(d.deadline_min_ms as i64)
+                .max(0) as u64,
+            deadline_max_ms: j
+                .get("deadline_max_ms")
+                .and_then(Json::as_i64)
+                .unwrap_or(d.deadline_max_ms as i64)
                 .max(0) as u64,
             min_cohort: j
                 .get("min_cohort")
@@ -525,6 +635,10 @@ mod tests {
             quorum: 0.75,
             deadline_ms: 2_000,
             late_grace_ms: 100,
+            deadline: DeadlineMode::P90,
+            deadline_margin: 2.0,
+            deadline_min_ms: 250,
+            deadline_max_ms: 5_000,
             min_cohort: 3,
             strategy: SamplingStrategy::StickyStratified { strata: 2 },
             // above 2^53 AND bit 63 set: a numeric JSON roundtrip would
@@ -565,6 +679,61 @@ mod tests {
         .unwrap();
         assert_eq!(neg.deadline_ms, 0);
         assert_eq!(neg.late_grace_ms, 0);
+    }
+
+    #[test]
+    fn deadline_mode_parse_and_validation() {
+        for m in [
+            DeadlineMode::Static,
+            DeadlineMode::P50,
+            DeadlineMode::P90,
+            DeadlineMode::P99,
+        ] {
+            assert_eq!(DeadlineMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(DeadlineMode::parse("p75").is_err());
+        assert_eq!(DeadlineMode::Static.quantile(), None);
+        assert!((DeadlineMode::P90.quantile().unwrap() - 0.9).abs() < 1e-12);
+        // a bad deadline mode string errors through from_json like a bad
+        // strategy does
+        assert!(ParticipationConfig::from_json(
+            &Json::obj().set("deadline", "p75")
+        )
+        .is_err());
+        // margin below 1 is rejected, normalized() heals it
+        let bad = ParticipationConfig {
+            deadline_margin: 0.5,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        assert!((bad.clone().normalized().deadline_margin - 1.0).abs() < 1e-12);
+        // an inverted clamp window is rejected (max > 0 only)
+        let inv = ParticipationConfig {
+            deadline_min_ms: 500,
+            deadline_max_ms: 100,
+            ..Default::default()
+        };
+        assert!(inv.validate().is_err());
+        assert_eq!(inv.clone().normalized().deadline_max_ms, 500);
+        let uncapped = ParticipationConfig {
+            deadline_min_ms: 500,
+            deadline_max_ms: 0,
+            ..Default::default()
+        };
+        uncapped.validate().unwrap();
+        // adaptive fields survive the wire; missing fields default Static
+        let j = Json::obj()
+            .set("deadline", "p99")
+            .set("deadline_margin", 3.0)
+            .set("deadline_min_ms", -5)
+            .set("deadline_max_ms", 9_000);
+        let c = ParticipationConfig::from_json(&j).unwrap();
+        assert_eq!(c.deadline, DeadlineMode::P99);
+        assert!((c.deadline_margin - 3.0).abs() < 1e-12);
+        assert_eq!(c.deadline_min_ms, 0); // negative clamps, never wraps
+        assert_eq!(c.deadline_max_ms, 9_000);
+        let d = ParticipationConfig::from_json(&Json::obj()).unwrap();
+        assert_eq!(d.deadline, DeadlineMode::Static);
     }
 
     #[test]

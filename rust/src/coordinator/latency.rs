@@ -1,0 +1,249 @@
+//! Per-client learn-latency tracking for adaptive round deadlines.
+//!
+//! A production cross-device round should not wait a static `deadline_ms`
+//! for a cohort whose healthy members reliably report in a fraction of
+//! it.  [`LatencyTracker`] keeps a small ring of recently observed learn
+//! latencies per client — fed by the quorum round loop's close data
+//! (completer-reported durations plus censored round-elapsed lower
+//! bounds for non-reporters) — and [`effective_deadline`] resolves a
+//! round's deadline from the configured percentile of those
+//! observations × a safety margin, clamped into `[min, max]`.  Until the
+//! tracker is warm the static `deadline_ms` applies, so a cold start is
+//! never more aggressive than the operator asked for.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::config::ParticipationConfig;
+
+/// Observations kept per client (ring buffer).
+const DEFAULT_WINDOW: usize = 64;
+/// Total observations before the tracker is considered warm.
+const DEFAULT_MIN_SAMPLES: usize = 8;
+
+/// Streaming per-client learn-latency quantile tracker.
+///
+/// Thread-safe; the FACT server shares one tracker across its cluster
+/// worker threads for the lifetime of a session.
+pub struct LatencyTracker {
+    window: usize,
+    min_samples: usize,
+    inner: Mutex<BTreeMap<String, VecDeque<u64>>>,
+}
+
+impl Default for LatencyTracker {
+    fn default() -> Self {
+        Self::new(DEFAULT_WINDOW, DEFAULT_MIN_SAMPLES)
+    }
+}
+
+impl LatencyTracker {
+    /// A tracker keeping up to `window` observations per client and
+    /// reporting quantiles only after `min_samples` total observations.
+    pub fn new(window: usize, min_samples: usize) -> LatencyTracker {
+        LatencyTracker {
+            window: window.max(1),
+            min_samples: min_samples.max(1),
+            inner: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Record one observed learn latency (ms) for `client`.
+    pub fn observe(&self, client: &str, ms: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let ring = inner.entry(client.to_string()).or_default();
+        if ring.len() >= self.window {
+            ring.pop_front();
+        }
+        ring.push_back(ms);
+    }
+
+    /// Record a censored observation: `client` had not reported when the
+    /// round closed after `ms`, so its true latency is *at least* `ms`.
+    /// Recording the lower bound keeps chronic stragglers from shrinking
+    /// the tracked percentile while never inflating it past what was
+    /// actually waited.
+    pub fn observe_censored(&self, client: &str, ms: u64) {
+        self.observe(client, ms);
+    }
+
+    /// Total observations held across all clients.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().values().map(VecDeque::len).sum()
+    }
+
+    /// Whether nothing has been observed yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether enough observations exist to trust a quantile.
+    pub fn is_warm(&self) -> bool {
+        self.len() >= self.min_samples
+    }
+
+    /// The `q`-quantile (0..=1, nearest-rank) over the observations of
+    /// `cohort`'s members — falling back to the whole pool when no cohort
+    /// member has history (a freshly sampled cohort still benefits from
+    /// fleet-wide latency knowledge).  `None` until warm.
+    pub fn quantile_for(&self, cohort: &[String], q: f64) -> Option<u64> {
+        if !self.is_warm() {
+            return None;
+        }
+        let inner = self.inner.lock().unwrap();
+        let mut samples: Vec<u64> = cohort
+            .iter()
+            .filter_map(|c| inner.get(c))
+            .flatten()
+            .copied()
+            .collect();
+        if samples.is_empty() {
+            samples = inner.values().flatten().copied().collect();
+        }
+        drop(inner);
+        if samples.is_empty() {
+            return None;
+        }
+        samples.sort_unstable();
+        let q = q.clamp(0.0, 1.0);
+        let idx = ((samples.len() as f64 * q).ceil() as usize)
+            .saturating_sub(1)
+            .min(samples.len() - 1);
+        Some(samples[idx])
+    }
+
+    /// Pool-wide `q`-quantile (`None` until warm).
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        self.quantile_for(&[], q)
+    }
+}
+
+/// Resolve the effective learn deadline for a round: the configured
+/// percentile of `cohort`'s tracked latencies × `deadline_margin`,
+/// clamped into `[deadline_min_ms, deadline_max_ms]` — or the static
+/// `deadline_ms` when the mode is static or the tracker is cold.
+///
+/// Returns `(deadline_ms, adaptive)`; `adaptive` is true only when a
+/// tracked percentile actually decided the value.
+pub fn effective_deadline(
+    tracker: &LatencyTracker,
+    p: &ParticipationConfig,
+    cohort: &[String],
+) -> (u64, bool) {
+    let Some(q) = p.deadline.quantile() else {
+        return (p.deadline_ms, false);
+    };
+    let Some(observed) = tracker.quantile_for(cohort, q) else {
+        return (p.deadline_ms, false); // cold: static fallback
+    };
+    let mut d = (observed as f64 * p.deadline_margin.max(1.0)).ceil() as u64;
+    if p.deadline_min_ms > 0 {
+        d = d.max(p.deadline_min_ms);
+    }
+    if p.deadline_max_ms > 0 {
+        d = d.min(p.deadline_max_ms);
+    }
+    // an adaptive deadline of 0 would mean "no deadline" downstream —
+    // never let clamping produce that inversion
+    (d.max(1), true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeadlineMode;
+
+    fn cfg(mode: DeadlineMode) -> ParticipationConfig {
+        ParticipationConfig {
+            deadline: mode,
+            deadline_ms: 2_000,
+            deadline_margin: 1.5,
+            deadline_min_ms: 10,
+            deadline_max_ms: 10_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn quantiles_over_observations() {
+        let t = LatencyTracker::new(16, 4);
+        for (i, ms) in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100]
+            .iter()
+            .enumerate()
+        {
+            t.observe(&format!("c-{}", i % 2), *ms);
+        }
+        assert!(t.is_warm());
+        assert_eq!(t.quantile(0.5).unwrap(), 50);
+        assert_eq!(t.quantile(0.9).unwrap(), 90);
+        assert_eq!(t.quantile(1.0).unwrap(), 100);
+        assert_eq!(t.quantile(0.0).unwrap(), 10);
+    }
+
+    #[test]
+    fn cold_tracker_reports_nothing_and_falls_back_static() {
+        let t = LatencyTracker::new(16, 8);
+        for i in 0..7 {
+            t.observe("c-0", 100 + i);
+        }
+        assert!(!t.is_warm());
+        assert_eq!(t.quantile(0.5), None);
+        // effective deadline: static fallback while cold
+        let (d, adaptive) = effective_deadline(&t, &cfg(DeadlineMode::P90), &[]);
+        assert_eq!(d, 2_000);
+        assert!(!adaptive);
+        // static mode never consults the tracker even when warm
+        t.observe("c-0", 107);
+        assert!(t.is_warm());
+        let (d, adaptive) = effective_deadline(&t, &cfg(DeadlineMode::Static), &[]);
+        assert_eq!(d, 2_000);
+        assert!(!adaptive);
+    }
+
+    #[test]
+    fn adaptive_deadline_applies_margin_and_clamps() {
+        let t = LatencyTracker::new(16, 4);
+        for ms in [100u64, 100, 100, 200] {
+            t.observe("c-0", ms);
+        }
+        let (d, adaptive) = effective_deadline(&t, &cfg(DeadlineMode::P50), &[]);
+        assert!(adaptive);
+        assert_eq!(d, 150); // 100 * 1.5
+        let (d, _) = effective_deadline(&t, &cfg(DeadlineMode::P99), &[]);
+        assert_eq!(d, 300); // 200 * 1.5
+        // the floor clamps up...
+        let mut c = cfg(DeadlineMode::P50);
+        c.deadline_min_ms = 400;
+        assert_eq!(effective_deadline(&t, &c, &[]).0, 400);
+        // ...and the cap clamps down
+        let mut c = cfg(DeadlineMode::P99);
+        c.deadline_max_ms = 120;
+        assert_eq!(effective_deadline(&t, &c, &[]).0, 120);
+    }
+
+    #[test]
+    fn cohort_scoped_quantile_falls_back_to_pool() {
+        let t = LatencyTracker::new(16, 4);
+        for _ in 0..8 {
+            t.observe("fast", 10);
+            t.observe("slow", 1_000);
+        }
+        // a cohort of only the slow client sees the slow distribution
+        let slow_cohort = vec!["slow".to_string()];
+        assert_eq!(t.quantile_for(&slow_cohort, 0.5).unwrap(), 1_000);
+        // a cohort with no history falls back to the fleet-wide pool
+        let fresh = vec!["newcomer".to_string()];
+        assert_eq!(t.quantile_for(&fresh, 0.5).unwrap(), 10);
+        assert_eq!(t.quantile_for(&fresh, 1.0).unwrap(), 1_000);
+    }
+
+    #[test]
+    fn window_evicts_oldest_observations() {
+        let t = LatencyTracker::new(4, 1);
+        for ms in [1_000u64, 1_000, 1_000, 1_000, 10, 10, 10, 10] {
+            t.observe("c", ms);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.quantile(1.0).unwrap(), 10); // the slow era aged out
+    }
+}

@@ -10,11 +10,14 @@
 //! * [`task`] — task representation + the `check` function (§A.2).
 //! * [`participation`] — deterministic cohort sampling for
 //!   partial-participation rounds (uniform / weighted / sticky-stratified).
+//! * [`latency`] — per-client learn-latency tracking behind adaptive
+//!   round deadlines.
 //! * [`round_store`] — the explicit round state machine and its durable
 //!   (WAL-backed) / in-memory persistence backends.
 
 pub mod aggregator;
 pub mod device;
+pub mod latency;
 pub mod participation;
 pub mod round_store;
 pub mod selector;
@@ -23,6 +26,7 @@ pub mod workflow;
 
 pub use aggregator::{flat_reduce_weighted, parallel_reduce_weighted, tree_reduce_weighted, Aggregator};
 pub use device::{DeviceHolder, DeviceSingle};
+pub use latency::{effective_deadline, LatencyTracker};
 pub use participation::{participation_round_key, Candidate, CohortSampler};
 pub use round_store::{
     transition, EventKind, LedgerCharge, MemRoundStore, RecoveryStatus, RoundEvent,

@@ -230,6 +230,28 @@ pub enum EventKind {
         /// Session tag the round id was derived from.
         session_tag: u64,
     },
+    /// Cohort repaired in-flight: members detected dead before learn
+    /// dispatch were replaced from the over-provisioned candidate pool
+    /// *inside the same round*.  Legal any time before dispatch in
+    /// clear/dp rounds and only before [`EventKind::SharesDealt`] under
+    /// secagg (after share dealing the threshold-reveal path is the
+    /// recovery mechanism) — the transition table enforces exactly that.
+    CohortRepaired {
+        /// Members detected dead at repair time.  They leave the
+        /// addressed cohort (a disconnected client rejects the whole
+        /// task at submit) but the accountant still charges the union
+        /// of both draws; one that revives mid-round simply waits for
+        /// the next draw.
+        presumed_dead: Vec<String>,
+        /// Replacements drawn from the candidate pool (sorted).
+        replacements: Vec<String>,
+        /// The full post-repair cohort (sorted) — resume/replay uses
+        /// this, not the original draw.
+        cohort: Vec<String>,
+        /// Conservative effective inclusion probability after repair
+        /// (the DP accountant charges this, never the original draw's).
+        sample_rate: f64,
+    },
     /// Secagg phase 1 closed: validated per-round DH public keys.
     KeysCollected {
         /// participant → lowercase hex DH public key.
@@ -294,6 +316,7 @@ impl EventKind {
     pub fn tag(&self) -> &'static str {
         match self {
             EventKind::Configured { .. } => "configured",
+            EventKind::CohortRepaired { .. } => "cohort_repaired",
             EventKind::KeysCollected { .. } => "keys_collected",
             EventKind::SharesDealt { .. } => "shares_dealt",
             EventKind::LearnDispatched { .. } => "learn_dispatched",
@@ -419,6 +442,16 @@ impl RoundEvent {
                 .set("params", params.clone())
                 .set("deadline_ms", *deadline_ms as f64)
                 .set("session_tag", round_id_to_hex(*session_tag).as_str()),
+            EventKind::CohortRepaired {
+                presumed_dead,
+                replacements,
+                cohort,
+                sample_rate,
+            } => base
+                .set("presumed_dead", str_vec_json(presumed_dead))
+                .set("replacements", str_vec_json(replacements))
+                .set("cohort", str_vec_json(cohort))
+                .set("sample_rate", *sample_rate),
             EventKind::KeysCollected { pubkeys, threshold } => base
                 .set("pubkeys", str_map_json(pubkeys))
                 .set("threshold", *threshold),
@@ -484,6 +517,12 @@ impl RoundEvent {
                 deadline_ms: j.get("deadline_ms").and_then(Json::as_f64).unwrap_or(0.0)
                     as u64,
                 session_tag: need_hex_u64(j, "session_tag")?,
+            },
+            "cohort_repaired" => EventKind::CohortRepaired {
+                presumed_dead: parse_str_vec(j.get("presumed_dead")),
+                replacements: parse_str_vec(j.get("replacements")),
+                cohort: parse_str_vec(j.get("cohort")),
+                sample_rate: j.get("sample_rate").and_then(Json::as_f64).unwrap_or(1.0),
             },
             "keys_collected" => EventKind::KeysCollected {
                 pubkeys: parse_str_map(j.get("pubkeys")),
@@ -567,6 +606,12 @@ pub fn transition(cur: Option<RoundPhase>, kind: &EventKind) -> Result<RoundPhas
     use RoundPhase as P;
     let next = match (cur, kind) {
         (None, EventKind::Configured { .. }) => P::Configured,
+        // in-round repair stays in phase; legal only before share dealing
+        // (clear/dp rounds never leave Configured before dispatch, and a
+        // secagg round past SharesDealt must use the threshold-reveal
+        // path instead)
+        (Some(P::Configured), EventKind::CohortRepaired { .. }) => P::Configured,
+        (Some(P::Keys), EventKind::CohortRepaired { .. }) => P::Keys,
         (Some(P::Configured) | Some(P::Keys) | Some(P::Shares), EventKind::KeysCollected { .. }) => {
             P::Keys
         }
@@ -617,10 +662,13 @@ pub struct RoundState {
     pub cluster_id: usize,
     /// Federated round index within the cluster.
     pub round: usize,
-    /// Sampled cohort.
+    /// Sampled cohort (post-repair when the round was repaired).
     pub cohort: Vec<String>,
-    /// Realized sampling rate of the cohort draw.
+    /// Realized sampling rate of the cohort draw (conservatively raised
+    /// by in-round repair).
     pub sample_rate: f64,
+    /// Replacements folded in by in-round cohort repair (0 = untouched).
+    pub repaired: usize,
     /// Privacy mode string at configure time.
     pub mode: String,
     /// Broadcast (pre-update) params; trimmed once terminal.
@@ -674,6 +722,7 @@ impl RoundState {
             round: 0,
             cohort: Vec::new(),
             sample_rate: 1.0,
+            repaired: 0,
             mode: String::new(),
             params: None,
             deadline_ms: 0,
@@ -720,6 +769,16 @@ impl RoundState {
                 self.params = Some(params.clone());
                 self.deadline_ms = *deadline_ms;
                 self.session_tag = *session_tag;
+            }
+            EventKind::CohortRepaired {
+                replacements,
+                cohort,
+                sample_rate,
+                ..
+            } => {
+                self.cohort = cohort.clone();
+                self.sample_rate = *sample_rate;
+                self.repaired += replacements.len();
             }
             EventKind::KeysCollected { pubkeys, threshold } => {
                 self.pubkeys = pubkeys.clone();
@@ -793,6 +852,7 @@ impl RoundState {
             .set("round", self.round)
             .set("cohort", str_vec_json(&self.cohort))
             .set("sample_rate", self.sample_rate)
+            .set("repaired", self.repaired)
             .set("mode", self.mode.as_str())
             .set("deadline_ms", self.deadline_ms as f64)
             .set("session_tag", round_id_to_hex(self.session_tag).as_str())
@@ -842,6 +902,7 @@ impl RoundState {
         s.round = need_usize(j, "round")?;
         s.cohort = parse_str_vec(j.get("cohort"));
         s.sample_rate = j.get("sample_rate").and_then(Json::as_f64).unwrap_or(1.0);
+        s.repaired = j.get("repaired").and_then(Json::as_usize).unwrap_or(0);
         s.mode = j
             .get("mode")
             .and_then(Json::as_str)
@@ -896,6 +957,7 @@ impl RoundState {
             .set("cluster_id", self.cluster_id)
             .set("round", self.round)
             .set("cohort_size", self.cohort.len())
+            .set("repaired", self.repaired)
             .set("mode", self.mode.as_str())
             .set("updates", self.updates.len())
             .set(
@@ -1572,6 +1634,18 @@ mod tests {
         )
     }
 
+    fn repaired(round_id: u64) -> RoundEvent {
+        RoundEvent::new(
+            round_id,
+            EventKind::CohortRepaired {
+                presumed_dead: vec!["c".into()],
+                replacements: vec!["d".into()],
+                cohort: vec!["a".into(), "b".into(), "c".into(), "d".into()],
+                sample_rate: 0.9,
+            },
+        )
+    }
+
     fn keys(round_id: u64) -> RoundEvent {
         let mut pk = BTreeMap::new();
         pk.insert("a".to_string(), "aa11".to_string());
@@ -1707,6 +1781,19 @@ mod tests {
             transition(Some(P::Learn), &aggregated(1).kind).unwrap(),
             P::Aggregated
         );
+        // in-round repair: stays in phase, legal only before share dealing
+        assert_eq!(
+            transition(Some(P::Configured), &repaired(1).kind).unwrap(),
+            P::Configured
+        );
+        assert_eq!(
+            transition(Some(P::Keys), &repaired(1).kind).unwrap(),
+            P::Keys
+        );
+        assert!(transition(Some(P::Shares), &repaired(1).kind).is_err());
+        assert!(transition(Some(P::Learn), &repaired(1).kind).is_err());
+        assert!(transition(Some(P::Closed), &repaired(1).kind).is_err());
+        assert!(transition(None, &repaired(1).kind).is_err());
         // recovery re-entry edges
         assert_eq!(transition(Some(P::Keys), &keys(1).kind).unwrap(), P::Keys);
         assert_eq!(
@@ -1757,6 +1844,7 @@ mod tests {
     fn event_json_round_trip() {
         for ev in [
             configured(42),
+            repaired(42),
             keys(42),
             shares(42),
             dispatched(42),
@@ -1801,6 +1889,29 @@ mod tests {
         assert_eq!(back.updates.len(), 1);
         assert_eq!(back.updates[0].params.as_f32_slice(), &[0.5, 0.5, 0.5]);
         assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn repaired_cohort_replaces_the_draw_in_state_and_replay() {
+        let store = MemRoundStore::new();
+        store.append(configured(9)).unwrap();
+        store.append(repaired(9)).unwrap();
+        let s = store.round(9).unwrap().unwrap();
+        assert_eq!(s.phase, RoundPhase::Configured);
+        assert_eq!(s.cohort, vec!["a", "b", "c", "d"]);
+        assert!((s.sample_rate - 0.9).abs() < 1e-12, "conservative q folded");
+        assert_eq!(s.repaired, 1);
+        // the repaired state survives a JSON round trip (WAL replay form)
+        let back =
+            RoundState::from_json(&Json::parse(&s.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.cohort, s.cohort);
+        assert_eq!(back.repaired, 1);
+        // and the round proceeds through the normal machine afterwards
+        store.append(keys(9)).unwrap();
+        store.append(shares(9)).unwrap();
+        // ...but repair after share dealing is rejected by the machine
+        assert!(store.append(repaired(9)).is_err());
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct QuorumOutcome {
     /// Devices whose results arrived *after* the close (observed during
     /// the late-grace sweep) — counted, then discarded.
     pub late: Vec<String>,
+    /// Wall-clock milliseconds from dispatch to close (grace sweep
+    /// excluded) — the censored latency lower bound for non-reporters,
+    /// fed into the adaptive-deadline latency tracker.
+    pub elapsed_ms: u64,
 }
 
 /// The WorkflowManager.
@@ -320,6 +324,7 @@ impl WorkflowManager {
                 }
             }
         };
+        let elapsed_ms = t0.elapsed().as_millis() as u64;
         let mut late = Vec::new();
         let mut close = close;
         if !backend_settled {
@@ -356,7 +361,7 @@ impl WorkflowManager {
                 }
             }
         }
-        Ok(QuorumOutcome { results, close, late })
+        Ok(QuorumOutcome { results, close, late, elapsed_ms })
     }
 
     /// Run a task to completion and return its results (the common Alg 2

@@ -20,6 +20,7 @@ use crate::dart::scheduler::{UnitReport, WorkUnit, DEFAULT_BATCH};
 use crate::dart::transport::{recv_json, send_json};
 use crate::dart::TaskRegistry;
 use crate::error::{FedError, Result};
+use crate::util::rng::{decorrelated_backoff, entropy_seed, fnv1a, splitmix64, Rng};
 
 /// Configuration of one DART-client process.
 #[derive(Clone)]
@@ -102,21 +103,38 @@ impl Drop for DartClient {
     }
 }
 
+/// Reconnect backoff bounds (ms).
+const BACKOFF_BASE_MS: u64 = 50;
+const BACKOFF_CAP_MS: u64 = 2_000;
+
 fn client_loop(cfg: DartClientConfig, registry: TaskRegistry, stop: Arc<AtomicBool>) {
-    let mut backoff = Duration::from_millis(50);
+    // Decorrelated-jitter reconnects: naive doubling gave every client
+    // that lost the same server the exact same 50/100/.../2000ms
+    // schedule, so the restarted server absorbed the whole fleet's
+    // reconnects on the same beat (thundering herd).  The jitter stream
+    // is seeded per client name + process entropy, so even same-named
+    // respawns diverge.
+    let mut rng = Rng::new(splitmix64(fnv1a(&cfg.name) ^ entropy_seed()));
+    let mut backoff_ms = BACKOFF_BASE_MS;
     while !stop.load(Ordering::Relaxed) {
         match session(&cfg, &registry, &stop) {
             Ok(()) => return, // clean shutdown (Bye sent)
             Err(e) => {
+                backoff_ms = decorrelated_backoff(
+                    &mut rng,
+                    backoff_ms,
+                    BACKOFF_BASE_MS,
+                    BACKOFF_CAP_MS,
+                );
                 log::warn!(target: "dart::client",
-                    "client '{}' session ended: {e}; reconnecting in {backoff:?}",
+                    "client '{}' session ended: {e}; reconnecting in {backoff_ms}ms",
                     cfg.name);
                 // interruptible backoff
                 let t0 = Instant::now();
+                let backoff = Duration::from_millis(backoff_ms);
                 while t0.elapsed() < backoff && !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(Duration::from_millis(10));
                 }
-                backoff = (backoff * 2).min(Duration::from_secs(2));
             }
         }
     }
@@ -308,6 +326,39 @@ mod tests {
             assert_eq!(
                 server.scheduler().status(*tid).unwrap(),
                 TaskStatus::Finished
+            );
+        }
+    }
+
+    #[test]
+    fn reconnect_backoff_schedules_diverge_between_clients() {
+        // regression: the old `(backoff * 2).min(2s)` schedule was
+        // identical for every client — a restarted server got the whole
+        // fleet back on the same beat.  Two clients' jittered schedules
+        // must diverge while staying inside [base, cap].
+        let mut a = Rng::new(splitmix64(fnv1a("alpha")));
+        let mut b = Rng::new(splitmix64(fnv1a("beta")));
+        let schedule = |rng: &mut Rng| -> Vec<u64> {
+            let mut prev = BACKOFF_BASE_MS;
+            (0..8)
+                .map(|_| {
+                    prev = decorrelated_backoff(
+                        rng,
+                        prev,
+                        BACKOFF_BASE_MS,
+                        BACKOFF_CAP_MS,
+                    );
+                    prev
+                })
+                .collect()
+        };
+        let sa = schedule(&mut a);
+        let sb = schedule(&mut b);
+        assert_ne!(sa, sb, "backoff schedules must not be in lockstep");
+        for w in sa.iter().chain(sb.iter()) {
+            assert!(
+                (BACKOFF_BASE_MS..=BACKOFF_CAP_MS).contains(w),
+                "wait {w}ms out of [{BACKOFF_BASE_MS}, {BACKOFF_CAP_MS}]"
             );
         }
     }

@@ -4,6 +4,7 @@
 //! In the other direction, the incoming traffic from the REST client is
 //! decoded").
 
+use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::config::{HardwareConfig, ServerConfig};
@@ -18,6 +19,62 @@ use crate::dart::{DartApi, DeviceInfo, TaskRegistry};
 use crate::error::{FedError, Result};
 use crate::http::client::HttpClient;
 use crate::json::Json;
+use crate::metrics::Registry;
+use crate::util::rng::{decorrelated_backoff, entropy_seed, Rng};
+
+/// Is this wire error worth retrying?  The transient class — transport,
+/// framing, and socket-level failures — covers a restarting server, a
+/// dropped keep-alive connection, or a mid-response disconnect; retried
+/// under backoff these usually heal.  Everything else (task rejection,
+/// scheduling errors, privacy violations, bad configuration) is
+/// terminal: the server answered, and asking again gets the same answer.
+pub fn is_transient_wire_error(e: &FedError) -> bool {
+    matches!(
+        e,
+        FedError::Http(_) | FedError::Transport(_) | FedError::Io(_)
+    )
+}
+
+/// Retry policy for transient wire errors at the FACT→DART seam.
+///
+/// Idempotent *reads* (device listing, status/progress polls, result
+/// fetches) and the idempotent `stop_task` retry under decorrelated
+/// jittered backoff; `submit` NEVER retries — a request that died after
+/// reaching the server would double-dispatch the round's learn tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// total attempts per call, including the first (0 or 1 = no retry)
+    pub max_attempts: u32,
+    /// first backoff draw lower bound (ms)
+    pub base_ms: u64,
+    /// per-wait upper bound (ms)
+    pub cap_ms: u64,
+    /// total backoff sleep budget per call (ms).  Bound this by the
+    /// round deadline: retrying past it burns time the quorum loop
+    /// could spend closing the round.
+    pub budget_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 4, base_ms: 25, cap_ms: 1_000, budget_ms: 5_000 }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries at all (every error surfaces immediately).
+    pub fn none() -> Self {
+        RetryPolicy { max_attempts: 1, base_ms: 0, cap_ms: 0, budget_ms: 0 }
+    }
+
+    /// Shrink the sleep budget to fit a round deadline (no-op for 0).
+    pub fn bounded_by_deadline(mut self, deadline_ms: u64) -> Self {
+        if deadline_ms > 0 {
+            self.budget_ms = self.budget_ms.min(deadline_ms);
+        }
+        self
+    }
+}
 
 /// DartApi over the https-server REST-API.
 ///
@@ -30,6 +87,11 @@ use crate::json::Json;
 pub struct RestDartApi {
     http: HttpClient,
     binary: bool,
+    retry: RetryPolicy,
+    /// jitter stream for the retry backoff draws
+    rng: Mutex<Rng>,
+    /// `dart.wire.retries` reports here
+    metrics: Registry,
 }
 
 impl RestDartApi {
@@ -40,6 +102,9 @@ impl RestDartApi {
                 .with_key(&cfg.client_key)
                 .with_timeout(Duration::from_secs(60)),
             binary: true,
+            retry: RetryPolicy::default(),
+            rng: Mutex::new(Rng::new(entropy_seed())),
+            metrics: Registry::new(),
         }
     }
 
@@ -51,6 +116,58 @@ impl RestDartApi {
     pub fn with_binary(mut self, binary: bool) -> Self {
         self.binary = binary;
         self
+    }
+
+    /// Override the transient-error retry policy (see [`RetryPolicy`]).
+    pub fn with_retry_policy(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
+    }
+
+    /// Report retry counters (`dart.wire.retries`) into a shared registry.
+    pub fn with_metrics(mut self, metrics: Registry) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    /// Run an idempotent call under the retry policy: transient wire
+    /// errors back off (decorrelated jitter, bounded by the attempt and
+    /// sleep budgets) and retry; terminal errors surface immediately.
+    fn with_retry<T>(&self, what: &str, call: impl Fn() -> Result<T>) -> Result<T> {
+        let mut slept = 0u64;
+        let mut prev = self.retry.base_ms;
+        let mut attempt = 1u32;
+        loop {
+            match call() {
+                Ok(v) => return Ok(v),
+                Err(e)
+                    if is_transient_wire_error(&e)
+                        && attempt < self.retry.max_attempts
+                        && slept < self.retry.budget_ms =>
+                {
+                    let wait = {
+                        let mut rng = self.rng.lock().unwrap();
+                        decorrelated_backoff(
+                            &mut rng,
+                            prev,
+                            self.retry.base_ms,
+                            self.retry.cap_ms,
+                        )
+                    }
+                    .min(self.retry.budget_ms - slept);
+                    self.metrics.counter("dart.wire.retries").inc();
+                    log::debug!(target: "dart::rest",
+                        "transient wire error on {what} (attempt \
+                         {attempt}/{}): {e}; retrying in {wait}ms",
+                        self.retry.max_attempts);
+                    std::thread::sleep(Duration::from_millis(wait));
+                    slept += wait;
+                    prev = wait.max(self.retry.base_ms);
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     fn post(&self, path: &str, body: &Json) -> Result<crate::http::Response> {
@@ -394,25 +511,27 @@ impl RestWorker {
 
 impl DartApi for RestDartApi {
     fn devices(&self) -> Result<Vec<DeviceInfo>> {
-        let body = expect_ok(self.http.get("/clients")?)?;
-        let arr = body
-            .as_arr()
-            .ok_or_else(|| FedError::Http("expected array".into()))?;
-        Ok(arr
-            .iter()
-            .map(|d| DeviceInfo {
-                name: d
-                    .get("name")
-                    .and_then(Json::as_str)
-                    .unwrap_or("")
-                    .to_string(),
-                hardware: d
-                    .get("hardware")
-                    .map(HardwareConfig::from_json)
-                    .unwrap_or_default(),
-                alive: d.get("alive").and_then(Json::as_bool).unwrap_or(false),
-            })
-            .collect())
+        self.with_retry("GET /clients", || {
+            let body = expect_ok(self.http.get("/clients")?)?;
+            let arr = body
+                .as_arr()
+                .ok_or_else(|| FedError::Http("expected array".into()))?;
+            Ok(arr
+                .iter()
+                .map(|d| DeviceInfo {
+                    name: d
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    hardware: d
+                        .get("hardware")
+                        .map(HardwareConfig::from_json)
+                        .unwrap_or_default(),
+                    alive: d.get("alive").and_then(Json::as_bool).unwrap_or(false),
+                })
+                .collect())
+        })
     }
 
     fn submit(&self, spec: TaskSpec) -> Result<TaskId> {
@@ -426,22 +545,26 @@ impl DartApi for RestDartApi {
     }
 
     fn status(&self, id: TaskId) -> Result<TaskStatus> {
-        let body = expect_ok(self.http.get(&format!("/tasks/{id}/status"))?)?;
-        status_from_str(body.need("status")?.as_str().unwrap_or(""))
+        self.with_retry("GET /tasks/../status", || {
+            let body = expect_ok(self.http.get(&format!("/tasks/{id}/status"))?)?;
+            status_from_str(body.need("status")?.as_str().unwrap_or(""))
+        })
     }
 
     fn results(&self, id: TaskId) -> Result<Vec<TaskResult>> {
-        let path = format!("/tasks/{id}/results");
-        let resp = if self.binary {
-            self.http.get_negotiated(&path)?
-        } else {
-            self.http.get(&path)?
-        };
-        let body = expect_ok(resp)?;
-        let arr = body
-            .as_arr()
-            .ok_or_else(|| FedError::Http("expected array".into()))?;
-        arr.iter().map(task_result_from_json).collect()
+        self.with_retry("GET /tasks/../results", || {
+            let path = format!("/tasks/{id}/results");
+            let resp = if self.binary {
+                self.http.get_negotiated(&path)?
+            } else {
+                self.http.get(&path)?
+            };
+            let body = expect_ok(resp)?;
+            let arr = body
+                .as_arr()
+                .ok_or_else(|| FedError::Http("expected array".into()))?;
+            arr.iter().map(task_result_from_json).collect()
+        })
     }
 
     fn result_count(&self, id: TaskId) -> Result<usize> {
@@ -451,7 +574,9 @@ impl DartApi for RestDartApi {
     fn progress(&self, id: TaskId) -> Result<(TaskStatus, usize)> {
         // the status document carries both fields — ONE tiny GET per
         // quorum poll instead of a status GET plus a full result download
-        let body = expect_ok(self.http.get(&format!("/tasks/{id}/status"))?)?;
+        let body = self.with_retry("GET /tasks/../status", || {
+            expect_ok(self.http.get(&format!("/tasks/{id}/status"))?)
+        })?;
         let st = status_from_str(body.need("status")?.as_str().unwrap_or(""))?;
         let n = match body.get("results").and_then(Json::as_usize) {
             Some(n) => n,
@@ -462,8 +587,12 @@ impl DartApi for RestDartApi {
     }
 
     fn stop_task(&self, id: TaskId) -> Result<()> {
-        expect_ok(self.http.delete(&format!("/tasks/{id}"))?)?;
-        Ok(())
+        // idempotent on the server (stopping a stopped task is a no-op),
+        // so safe to retry
+        self.with_retry("DELETE /tasks/..", || {
+            expect_ok(self.http.delete(&format!("/tasks/{id}"))?)?;
+            Ok(())
+        })
     }
 }
 
@@ -474,7 +603,64 @@ mod tests {
     use crate::dart::server::{DartServer, DartServerConfig};
     use crate::dart::TaskRegistry;
     use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicU32, Ordering};
     use std::time::Instant;
+
+    #[test]
+    fn wire_error_taxonomy() {
+        // transient: transport-level failures that healing servers cure
+        assert!(is_transient_wire_error(&FedError::Http("conn reset".into())));
+        assert!(is_transient_wire_error(&FedError::Transport("eof".into())));
+        assert!(is_transient_wire_error(&FedError::Io(std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            "reset",
+        ))));
+        // terminal: the server answered; retrying repeats the answer
+        assert!(!is_transient_wire_error(&FedError::Task("rejected".into())));
+        assert!(!is_transient_wire_error(&FedError::Device("unknown".into())));
+        assert!(!is_transient_wire_error(&FedError::Privacy("mode".into())));
+        assert!(!is_transient_wire_error(&FedError::Config("bad".into())));
+        assert!(!is_transient_wire_error(&FedError::Json("parse".into())));
+    }
+
+    #[test]
+    fn transient_errors_retry_terminal_errors_surface_immediately() {
+        let metrics = Registry::new();
+        let api = RestDartApi::from_addr("127.0.0.1:1", "k")
+            .with_retry_policy(RetryPolicy {
+                max_attempts: 3,
+                base_ms: 1,
+                cap_ms: 2,
+                budget_ms: 50,
+            })
+            .with_metrics(metrics.clone());
+        // two transient flaps, then success: three attempts, two retries
+        let calls = AtomicU32::new(0);
+        let out = api.with_retry("probe", || {
+            if calls.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err(FedError::Transport("flap".into()))
+            } else {
+                Ok(7u32)
+            }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+        assert_eq!(metrics.counter("dart.wire.retries").get(), 2);
+        // terminal error: exactly one attempt, counter untouched
+        let calls = AtomicU32::new(0);
+        let out: Result<u32> = api.with_retry("probe", || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Err(FedError::Task("rejected".into()))
+        });
+        assert!(matches!(out, Err(FedError::Task(_))));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        assert_eq!(metrics.counter("dart.wire.retries").get(), 2);
+        // attempts exhausted: the last transient error surfaces
+        let out: Result<u32> =
+            api.with_retry("probe", || Err(FedError::Http("down".into())));
+        assert!(matches!(out, Err(FedError::Http(_))));
+        assert_eq!(metrics.counter("dart.wire.retries").get(), 4);
+    }
 
     /// Full production-path smoke test: aggregation side -> REST ->
     /// DART-server -> TCP client -> result -> REST.

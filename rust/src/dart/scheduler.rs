@@ -198,6 +198,9 @@ pub struct Scheduler {
     workers: RwLock<BTreeMap<String, Arc<WorkerEntry>>>,
     shards: Vec<Mutex<BTreeMap<TaskId, TaskState>>>,
     next_id: AtomicU64,
+    /// fault-tolerance counters (`dart.scheduler.*`); private registry
+    /// until [`Scheduler::set_metrics`] points it at the server's
+    metrics: RwLock<crate::metrics::Registry>,
 }
 
 impl Default for Scheduler {
@@ -218,6 +221,19 @@ impl Scheduler {
             workers: RwLock::new(BTreeMap::new()),
             shards: (0..shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
             next_id: AtomicU64::new(1),
+            metrics: RwLock::new(crate::metrics::Registry::new()),
+        }
+    }
+
+    /// Report scheduler counters into a shared registry (the DART server
+    /// points this at the registry its `/metrics` endpoint snapshots).
+    pub fn set_metrics(&self, metrics: crate::metrics::Registry) {
+        *self.metrics.write().unwrap() = metrics;
+    }
+
+    fn count(&self, name: &str, n: u64) {
+        if n > 0 {
+            self.metrics.read().unwrap().counter(name).add(n);
         }
     }
 
@@ -308,6 +324,8 @@ impl Scheduler {
                 }
             }
         }
+        self.count("dart.scheduler.requeued", requeues.len() as u64);
+        self.count("dart.scheduler.unit_failures", failures.len() as u64);
         if !requeues.is_empty() {
             let mut q = entry.queue.lock().unwrap();
             for (tid, client, r) in requeues {
@@ -355,6 +373,7 @@ impl Scheduler {
                 .map(|w| w.name.clone())
                 .collect()
         };
+        self.count("dart.scheduler.reaped", stale.len() as u64);
         for name in &stale {
             log::warn!(target: "dart::scheduler",
                 "worker '{name}' missed heartbeats; declaring lost");

@@ -113,6 +113,9 @@ impl DartServer {
     pub fn start(cfg: DartServerConfig) -> Result<DartServer> {
         let scheduler = Arc::new(Scheduler::new());
         let metrics = Registry::new();
+        // scheduler fault-tolerance counters (reaps, requeues) land in
+        // the same registry `/metrics` and `/rounds/recovery` snapshot
+        scheduler.set_metrics(metrics.clone());
         let stop = Arc::new(AtomicBool::new(false));
 
         // --- DART transport listener ---
@@ -436,14 +439,32 @@ impl RestHandler {
                         .set("rounds", Json::Arr(Vec::new())),
                 )),
             },
-            ("GET", ["rounds", "recovery"]) => match &self.round_store {
-                Some(store) => {
-                    Ok(Response::ok_json(&store.recovery().to_json()))
+            ("GET", ["rounds", "recovery"]) => {
+                // the fault-tolerance counters ride along: scheduler
+                // reaps/requeues and wire retries always, the fact.*
+                // repair/adaptive-deadline counters when the FACT server
+                // shares this registry (`FactServer::with_metrics`) —
+                // zero otherwise
+                let mut counters = Json::obj();
+                for name in [
+                    "fact.round.repaired",
+                    "fact.round.replacements",
+                    "fact.round.adaptive_closes",
+                    "fact.round.deadline_adaptive_ms",
+                    "dart.scheduler.reaped",
+                    "dart.scheduler.requeued",
+                    "dart.wire.retries",
+                    "dart.clients_lost",
+                ] {
+                    counters =
+                        counters.set(name, self.metrics.counter(name).get());
                 }
-                None => Ok(Response::ok_json(
-                    &Json::obj().set("attached", false),
-                )),
-            },
+                let body = match &self.round_store {
+                    Some(store) => store.recovery().to_json(),
+                    None => Json::obj().set("attached", false),
+                };
+                Ok(Response::ok_json(&body.set("counters", counters)))
+            }
             // ------------------------- worker-side REST (batched dispatch)
             ("POST", ["worker", "register"]) => {
                 let body = req.body_json()?;

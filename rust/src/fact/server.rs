@@ -11,6 +11,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::ParticipationConfig;
+use crate::coordinator::latency::{effective_deadline, LatencyTracker};
 use crate::coordinator::participation::{
     participation_round_key, Candidate, CohortSampler,
 };
@@ -296,6 +297,9 @@ pub struct FactServer {
     session_tag: u64,
     pool: Arc<ThreadPool>,
     metrics: Registry,
+    /// Per-client learn-latency history feeding adaptive round deadlines
+    /// (shared across cluster worker threads; lives for the session).
+    latency: Arc<LatencyTracker>,
     history: Vec<RoundRecord>,
     /// latest local update per client (clustering input)
     latest_updates: BTreeMap<String, Vec<f32>>,
@@ -346,6 +350,7 @@ impl FactServer {
             ),
             pool: Arc::new(ThreadPool::default_size()),
             metrics: Registry::new(),
+            latency: Arc::new(LatencyTracker::default()),
             history: Vec::new(),
             latest_updates: BTreeMap::new(),
             initialized: false,
@@ -401,6 +406,20 @@ impl FactServer {
     /// The tag mixed into every derived round id this session.
     pub fn session_tag(&self) -> u64 {
         self.session_tag
+    }
+
+    /// Report into an external metrics [`Registry`] (e.g. the one a
+    /// co-located DART REST server snapshots for `/metrics` and
+    /// `/rounds/recovery`) instead of a private one.
+    pub fn with_metrics(mut self, metrics: Registry) -> FactServer {
+        self.metrics = metrics;
+        self
+    }
+
+    /// The learn-latency tracker behind adaptive deadlines (warm it up
+    /// in tests, or inspect the observed quantiles).
+    pub fn latency_tracker(&self) -> &Arc<LatencyTracker> {
+        &self.latency
     }
 
     /// Replay the round store and prepare to resume: adopt the stored
@@ -812,6 +831,7 @@ impl FactServer {
             let participation = self.participation.clone();
             let known_samples = self.client_samples.clone();
             let metrics = self.metrics.clone();
+            let latency = Arc::clone(&self.latency);
             let session_tag = self.session_tag;
             let store = Arc::clone(&self.store);
             let completed = Arc::clone(&completed);
@@ -829,6 +849,7 @@ impl FactServer {
                     participation: &participation,
                     known_samples: &known_samples,
                     metrics: &metrics,
+                    latency: &latency,
                     session_tag,
                     store: &store,
                     completed: &completed,
@@ -997,6 +1018,8 @@ struct RoundCtx<'a> {
     participation: &'a Option<ParticipationConfig>,
     known_samples: &'a BTreeMap<String, f64>,
     metrics: &'a Registry,
+    /// observed learn latencies feeding [`effective_deadline`]
+    latency: &'a LatencyTracker,
     session_tag: u64,
     /// every round transition is appended (and validated) here
     store: &'a Arc<dyn RoundStore>,
@@ -1088,6 +1111,124 @@ fn draw_cohort(
     }
 }
 
+/// Salt mixed into the round key for the repair draw, so a repaired
+/// round's replacement order never correlates with its cohort draw.
+const REPAIR_SALT: u64 = 0x5e1f_4ea1_1e55_0007;
+
+/// In-round cohort repair: replace cohort members the scheduler already
+/// knows are dead (lease expired / never connected) with fresh draws
+/// from the cluster's unsampled pool — inside the same round, before any
+/// setup phase addressed the dead.
+///
+/// The deterministic replacement draw is keyed off the round key + a
+/// salt, so a resumed coordinator repairs identically.  Presumed-dead
+/// members are dropped from the addressed cohort (both the selector and
+/// the scheduler reject tasks addressing a disconnected client — a dead
+/// member kept addressed would reject the whole learn task) and
+/// replacements take their slots; a presumed-dead client that revives
+/// mid-round re-registers and is eligible for the next draw.  The
+/// realized sampling rate only ever grows — the DP accountant charges
+/// the conservative effective inclusion probability of the UNION of the
+/// original draw and the repair draw (anyone in either set could have
+/// been addressed).
+///
+/// Legality is enforced by the round state machine: `CohortRepaired`
+/// appends only in `Configured`/`Keys`, i.e. any time in clear/dp modes
+/// but strictly before share dealing under secagg (after `SharesDealt`
+/// the threshold-reveal path recovers dropouts instead).
+fn repair_cohort(
+    ctx: &RoundCtx<'_>,
+    cluster: &crate::fact::clustering::Cluster,
+    round: usize,
+    round_id: u64,
+    cohort: Vec<String>,
+    realized_q: f64,
+    sampler: Option<&CohortSampler>,
+) -> Result<(Vec<String>, f64)> {
+    let (Some(p), Some(sampler)) = (ctx.participation.as_ref(), sampler) else {
+        // full participation: everyone is already addressed, there is no
+        // unsampled pool to draw replacements from
+        return Ok((cohort, realized_q));
+    };
+    let Ok(alive) = ctx.wm.get_all_device_names() else {
+        return Ok((cohort, realized_q));
+    };
+    let alive: BTreeSet<&String> = alive.iter().collect();
+    let presumed_dead: Vec<String> = cohort
+        .iter()
+        .filter(|c| !alive.contains(c))
+        .cloned()
+        .collect();
+    if presumed_dead.is_empty() {
+        return Ok((cohort, realized_q));
+    }
+    let in_cohort: BTreeSet<&String> = cohort.iter().collect();
+    // candidates: alive cluster members the draw skipped, ranked by a
+    // salted per-round hash (deterministic, uncorrelated with the draw)
+    let key = splitmix64(
+        participation_round_key(p.seed, ctx.clustering_round, cluster.id, round)
+            ^ REPAIR_SALT,
+    );
+    let mut pool: Vec<(u64, String)> = cluster
+        .clients
+        .iter()
+        .filter(|c| !in_cohort.contains(c) && alive.contains(c))
+        .map(|c| (splitmix64(key ^ crate::util::rng::fnv1a(c)), c.clone()))
+        .collect();
+    pool.sort();
+    let replacements: Vec<String> = pool
+        .into_iter()
+        .take(presumed_dead.len())
+        .map(|(_, c)| c)
+        .collect();
+    if replacements.is_empty() {
+        log::warn!(target: "fact::server",
+            "cluster {} round {round}: {} cohort member(s) presumed dead \
+             but no alive replacements remain in the pool; proceeding \
+             with the survivors",
+            cluster.id, presumed_dead.len());
+    }
+    // union of both draws — the conservative set the accountant charges
+    let union = cohort.len() + replacements.len();
+    let mut repaired: Vec<String> = cohort
+        .into_iter()
+        .filter(|c| alive.contains(c))
+        .collect();
+    repaired.extend(replacements.iter().cloned());
+    repaired.sort();
+    repaired.dedup();
+    if repaired.is_empty() {
+        // every member dead and no replacements: leave the round to fail
+        // at dispatch with the backend's own (clearer) error
+        return Err(FedError::Task(format!(
+            "cluster {} round {round}: entire cohort presumed dead and no \
+             alive replacements remain",
+            cluster.id
+        )));
+    }
+    let q = realized_q
+        .max(sampler.amplification_rate(union, cluster.clients.len()));
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::CohortRepaired {
+            presumed_dead: presumed_dead.clone(),
+            replacements: replacements.clone(),
+            cohort: repaired.clone(),
+            sample_rate: q,
+        },
+    ))?;
+    ctx.metrics.counter("fact.round.repaired").inc();
+    ctx.metrics
+        .counter("fact.round.replacements")
+        .add(replacements.len() as u64);
+    log::info!(target: "fact::server",
+        "cluster {} round {round}: repaired cohort in-round — {} presumed \
+         dead ({:?}), {} replacement(s) drawn ({:?}), q {:.3} -> {:.3}",
+        cluster.id, presumed_dead.len(), presumed_dead,
+        replacements.len(), replacements, realized_q, q);
+    Ok((repaired, q))
+}
+
 /// A round with no prior history in the store: derive its id, persist
 /// the opening `Configured` event, and run the full pipeline.
 fn fresh_round(
@@ -1132,6 +1273,10 @@ fn fresh_round(
             session_tag: ctx.session_tag,
         },
     ))?;
+    // self-healing: members the scheduler already knows are dead get
+    // replaced from the unsampled pool before any phase addresses them
+    let (cohort, realized_q) =
+        repair_cohort(ctx, cluster, round, round_id, cohort, realized_q, sampler.as_ref())?;
     run_round_pipeline(
         ctx,
         cluster,
@@ -1327,6 +1472,24 @@ fn resume_round(
             // the pinned cohort + params.  Clients re-derive keys, masks
             // and noise deterministically from the same round id, so the
             // re-run reproduces the dead coordinator's round exactly.
+            //
+            // Before share dealing the cohort is still repairable: members
+            // that died across the outage are replaced now (the repair is
+            // evented, so a second resume replays the repaired cohort).
+            let (cohort, realized_q) =
+                if matches!(plan.phase, RoundPhase::Configured | RoundPhase::Keys) {
+                    repair_cohort(
+                        ctx,
+                        cluster,
+                        round,
+                        round_id,
+                        cohort,
+                        realized_q,
+                        sampler.as_ref(),
+                    )?
+                } else {
+                    (cohort, realized_q)
+                };
             run_round_pipeline(
                 ctx,
                 cluster,
@@ -1521,11 +1684,32 @@ fn dispatch_learn(
         .collect();
     let sampled = dict.len();
     // the effective deadline of THIS dispatch: on resume, the remaining
-    // window of the original deadline; otherwise the configured one
+    // window of the original deadline; otherwise the configured one —
+    // which under an adaptive mode is the tracked cohort latency
+    // percentile × margin, clamped, once the tracker is warm
     let deadline = match (deadline_override, ctx.participation) {
         (Some(d), _) => Some(d),
-        (None, Some(p)) if p.deadline_ms > 0 => {
-            Some(Duration::from_millis(p.deadline_ms))
+        (None, Some(p)) => {
+            let (ms, adaptive) = effective_deadline(ctx.latency, p, addressed);
+            if adaptive {
+                ctx.metrics.counter("fact.round.adaptive_closes").inc();
+                ctx.metrics
+                    .counter("fact.round.deadline_adaptive_ms")
+                    .add(ms);
+                ctx.metrics
+                    .gauge("fact.round.deadline_effective_ms")
+                    .set(ms as i64);
+                log::debug!(target: "fact::server",
+                    "cluster {} round {round}: adaptive deadline {ms}ms \
+                     ({} × {:.2}, clamp [{}, {}])",
+                    cluster.id, p.deadline.as_str(), p.deadline_margin,
+                    p.deadline_min_ms, p.deadline_max_ms);
+            }
+            if ms > 0 {
+                Some(Duration::from_millis(ms))
+            } else {
+                None
+            }
         }
         _ => None,
     };
@@ -1550,6 +1734,18 @@ fn dispatch_learn(
                 deadline,
                 Duration::from_millis(p.late_grace_ms),
             )?;
+            // feed the adaptive-deadline tracker: completers with their
+            // reported learn duration, everyone else censored at the
+            // close (their true latency is at least the elapsed window)
+            let reported: BTreeSet<&String> =
+                out.results.iter().map(|r| &r.device_name).collect();
+            for r in &out.results {
+                ctx.latency
+                    .observe(&r.device_name, (r.duration * 1_000.0).round() as u64);
+            }
+            for name in addressed.iter().filter(|d| !reported.contains(*d)) {
+                ctx.latency.observe_censored(name, out.elapsed_ms.max(1));
+            }
             let late = out.late;
             let dropped = sampled.saturating_sub(out.results.len() + late.len());
             ctx.metrics

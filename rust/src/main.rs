@@ -27,9 +27,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use feddart::cli::Args;
-use feddart::config::{ParticipationConfig, SamplingStrategy, ServerConfig};
+use feddart::config::{
+    DeadlineMode, ParticipationConfig, SamplingStrategy, ServerConfig,
+};
 use feddart::coordinator::WorkflowManager;
 use feddart::dart::client::{DartClient, DartClientConfig};
+use feddart::dart::rest::{RestDartApi, RetryPolicy};
 use feddart::dart::server::{DartServer, DartServerConfig};
 use feddart::dart::TaskRegistry;
 use feddart::error::Result;
@@ -106,6 +109,12 @@ participation (run/train): --sample-rate 0.25 --quorum 0.75
         (rounds sample a cohort and close at quorum/deadline; uniform
          sampling earns DP amplification in the accountant)
 
+adaptive deadlines (run/train): --deadline-mode static|p50|p90|p99
+        --deadline-margin 1.5 --deadline-min-ms 0 --deadline-max-ms 0
+        (once the latency tracker is warm, rounds close at the observed
+         cohort latency percentile × margin, clamped into [min, max];
+         --deadline-ms stays the cold-start fallback)
+
 privacy (run/train): --privacy off|dp|secagg|secagg+dp
         --clip-norm 1.0 --noise-multiplier 1.0 --dp-delta 1e-5
         --weight-scale 128 --frac-bits 16
@@ -152,6 +161,10 @@ fn participation_from_args(args: &Args) -> Result<Option<ParticipationConfig>> {
         quorum: args.opt_ratio("quorum", 1.0)?,
         deadline_ms: args.opt_usize("deadline-ms", 0)? as u64,
         late_grace_ms: args.opt_usize("late-grace-ms", 0)? as u64,
+        deadline: DeadlineMode::parse(args.opt_or("deadline-mode", "static"))?,
+        deadline_margin: args.opt_f64("deadline-margin", 1.5)?,
+        deadline_min_ms: args.opt_usize("deadline-min-ms", 0)? as u64,
+        deadline_max_ms: args.opt_usize("deadline-max-ms", 0)? as u64,
         // no silent clamp: validate() rejects over_provision < 1 with an
         // error, consistent with the other flags
         over_provision: args.opt_f64("over-provision", 1.0)?,
@@ -162,7 +175,11 @@ fn participation_from_args(args: &Args) -> Result<Option<ParticipationConfig>> {
         seed: args.opt_usize("participation-seed", 17)? as u64,
     };
     cfg.validate()?;
-    if cfg.sample_rate >= 1.0 && cfg.quorum >= 1.0 && cfg.deadline_ms == 0 {
+    if cfg.sample_rate >= 1.0
+        && cfg.quorum >= 1.0
+        && cfg.deadline_ms == 0
+        && cfg.deadline == DeadlineMode::Static
+    {
         return Ok(None); // "address everyone, wait for all" — legacy loop
     }
     Ok(Some(cfg))
@@ -371,7 +388,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         client_key: args.opt_or("rest-key", "000").to_string(),
     };
     let engine = Engine::load(&default_artifacts_dir(), 1)?;
-    let wm = WorkflowManager::production(&server_cfg)?;
+    let participation = participation_from_args(args)?;
+    // transient wire errors (server restarts, dropped keep-alives) retry
+    // under jittered backoff; the sleep budget never outlives the round
+    // deadline, so retrying cannot wedge the quorum loop
+    let api = RestDartApi::connect(&server_cfg).with_retry_policy(
+        RetryPolicy::default().bounded_by_deadline(
+            participation.as_ref().map(|p| p.deadline_ms).unwrap_or(0),
+        ),
+    );
+    if !api.health().unwrap_or(false) {
+        return Err(feddart::error::FedError::Config(format!(
+            "DART-server at {} is not healthy",
+            server_cfg.server
+        )));
+    }
+    let wm = WorkflowManager::with_backend(Arc::new(api));
     wm.start_fed_dart(
         args.opt_usize("min-clients", 2)?,
         Duration::from_secs(30),
@@ -382,7 +414,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         local_steps: args.opt_usize("local-steps", 4)?,
         round: 0,
     });
-    if let Some(p) = participation_from_args(args)? {
+    if let Some(p) = participation {
         server = server.with_participation(p);
     }
     if let Some(pc) = privacy_from_args(args)? {

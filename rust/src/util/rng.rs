@@ -192,6 +192,24 @@ impl Rng {
     }
 }
 
+/// Decorrelated-jitter backoff: the next wait is drawn uniformly from
+/// `[base_ms, prev_ms * 3]`, capped at `cap_ms`.  Unlike pure doubling,
+/// two peers that fail at the same instant draw *different* schedules,
+/// so a restarted server is not hit by the whole fleet on the same
+/// beat (thundering herd); unlike full jitter, the expected wait still
+/// grows geometrically while failures persist.
+pub fn decorrelated_backoff(
+    rng: &mut Rng,
+    prev_ms: u64,
+    base_ms: u64,
+    cap_ms: u64,
+) -> u64 {
+    let base = base_ms.max(1);
+    let prev = prev_ms.clamp(base, cap_ms.max(base));
+    let span = prev.saturating_mul(3).saturating_sub(base) as usize + 1;
+    (base + rng.below(span) as u64).min(cap_ms.max(base))
+}
+
 /// Common randomness interface for privacy material: implemented by the
 /// deterministic testbed [`Rng`] (reproducible tests) and by [`OsRng`]
 /// (the production default — DP noise or a mask secret derived from a
@@ -501,6 +519,26 @@ mod tests {
         let mut x = [0u8; 16];
         entropy_bytes(&mut x);
         assert!(x.iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn decorrelated_backoff_stays_in_bounds_and_grows() {
+        let mut r = Rng::new(7);
+        let (base, cap) = (50u64, 2_000u64);
+        let mut prev = base;
+        let mut hit_cap = false;
+        for _ in 0..64 {
+            let next = decorrelated_backoff(&mut r, prev, base, cap);
+            assert!((base..=cap).contains(&next), "wait {next} out of bounds");
+            // each draw is bounded by 3x the previous wait
+            assert!(next <= prev.saturating_mul(3).max(base));
+            hit_cap |= next == cap;
+            prev = next;
+        }
+        assert!(hit_cap, "64 draws should reach the cap");
+        // degenerate inputs stay sane
+        assert_eq!(decorrelated_backoff(&mut r, 0, 0, 0), 1);
+        assert!(decorrelated_backoff(&mut r, 10_000, 50, 2_000) <= 2_000);
     }
 
     #[test]

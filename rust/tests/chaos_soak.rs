@@ -1,0 +1,664 @@
+//! End-to-end chaos soak (ISSUE 7 acceptance): a multi-round secagg+dp
+//! session with partial participation driven through layered fault
+//! profiles — flaky clients (drop-before / crash-during each unit),
+//! 3x stragglers with injected network latency, and one injected
+//! coordinator crash mid-session (`KillStore`) — must leave every round
+//! in a terminal phase (`Closed` or `Voided`), never wedge a round in
+//! flight, and keep the ε-ledger strictly monotone across the crash.
+//!
+//! A second, clear-view soak (dp only, no masking) additionally pins the
+//! aggregate: the final cluster params equal the weighted FedAvg of
+//! exactly the updates the server counted — chaos may shrink the
+//! reporting subset, but never corrupt what is aggregated.
+//!
+//! The client side reuses the deterministic engine-free registry of the
+//! recovery tests (keys/shares/masks/noise all pure in `(round_id,
+//! device)`), so the resumed session reproduces byte-identical
+//! contributions for re-run phases.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+use feddart::config::{DeadlineMode, HardwareConfig, ParticipationConfig, SamplingStrategy};
+use feddart::coordinator::round_store::{
+    EventKind, LedgerCharge, MemRoundStore, RecoveryStatus, RoundEvent,
+    RoundPhase, RoundState, StoredUpdate,
+};
+use feddart::coordinator::workflow::WorkflowManager;
+use feddart::coordinator::{RoundStore, WalRoundStore};
+use feddart::dart::faults::{FaultInjector, FaultProfile};
+use feddart::dart::testmode::SimClient;
+use feddart::dart::TaskRegistry;
+use feddart::error::FedError;
+use feddart::fact::aggregation::Aggregation;
+use feddart::fact::model::FactModel;
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::FactServer;
+use feddart::json::Json;
+use feddart::privacy::dp::DpAccountant;
+use feddart::privacy::{
+    dp, from_hex, keys, masking, round_id_from_hex, shamir, to_hex,
+    PrivacyConfig, PrivacyMode,
+};
+use feddart::util::rng::{golden_f32, Rng};
+use feddart::util::tensorbuf::TensorBuf;
+
+const PARAMS: usize = 32;
+const CLIENTS: usize = 8;
+const ROUNDS: usize = 6;
+const SESSION_TAG: u64 = 0xc4a0_5067_0000_0001;
+
+// ------------------------------------------------------------ fixture
+
+struct TestModel;
+
+impl FactModel for TestModel {
+    fn name(&self) -> &str {
+        "chaosmodel"
+    }
+    fn param_count(&self) -> usize {
+        PARAMS
+    }
+    fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+        Ok(golden_f32(seed as u32, PARAMS))
+    }
+    fn aggregation(&self) -> &Aggregation {
+        &Aggregation::WeightedFedAvg
+    }
+}
+
+fn device_index(device: &str) -> usize {
+    device.rsplit('-').next().unwrap().parse().unwrap()
+}
+
+fn client_secret(idx: usize) -> [u8; 32] {
+    [idx as u8 + 1; 32]
+}
+
+fn sample_weight(device: &str) -> f32 {
+    100.0 + 10.0 * device_index(device) as f32
+}
+
+fn round_keys_of(device: &str, round_id: u64) -> keys::RoundKeys {
+    keys::keypair(&keys::derive_round_secret(
+        &client_secret(device_index(device)),
+        round_id,
+        device,
+    ))
+}
+
+fn keys_map_of(p: &Json) -> BTreeMap<String, String> {
+    p.need("keys")
+        .unwrap()
+        .as_obj()
+        .unwrap()
+        .iter()
+        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+        .collect()
+}
+
+/// Deterministic privacy-aware clients (the recovery-test construction):
+/// every derived quantity is a pure function of `(round_id, device)`, so
+/// requeued units and resumed phases reproduce identical bytes.
+fn deterministic_registry() -> TaskRegistry {
+    let registry = TaskRegistry::new();
+    registry.register("fact_init", |_| Ok(Json::Null));
+
+    registry.register("fact_keys", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let kp = round_keys_of(&device, round_id);
+        Ok(Json::obj().set("pubkey", keys::pubkey_hex(&kp.public)))
+    });
+
+    registry.register("fact_shares", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let threshold = p.need("threshold")?.as_usize().unwrap();
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let peers: Vec<(String, u8)> = keys_map
+            .keys()
+            .enumerate()
+            .filter(|(_, n)| *n != &device)
+            .map(|(i, n)| (n.clone(), i as u8 + 1))
+            .collect();
+        let xs: Vec<u8> = peers.iter().map(|(_, x)| *x).collect();
+        let mut rng = Rng::new(round_id ^ device_index(&device) as u64);
+        let split = shamir::split_at(&kp.secret, threshold, &xs, &mut rng)?;
+        let mut shares = Json::obj();
+        let mut commits = Json::obj();
+        for (share, (peer, _)) in split.iter().zip(peers.iter()) {
+            let their = keys::parse_pubkey_hex(&keys_map[peer])?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            let ct =
+                keys::encrypt_share(&sk, round_id, &device, peer, &share.to_bytes());
+            shares = shares.set(peer, to_hex(&ct));
+            commits = commits.set(peer, to_hex(&shamir::share_commitment(share)));
+        }
+        Ok(Json::obj().set("shares", shares).set("commits", commits))
+    });
+
+    registry.register("fact_learn", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let idx = device_index(&device);
+        let global = TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Task(e.to_string()))?;
+        let gs = global.as_f32_slice();
+        let delta = golden_f32(idx as u32 + 1, gs.len());
+        let mut params: Vec<f32> =
+            gs.iter().zip(&delta).map(|(g, d)| g + 0.1 * d).collect();
+        let n_samples = sample_weight(&device);
+
+        let Some(pj) = p.get("privacy") else {
+            return Ok(Json::obj()
+                .set("params", TensorBuf::from_f32_vec(params))
+                .set("n_samples", n_samples)
+                .set("loss", 0.5));
+        };
+        let cfg = PrivacyConfig::from_json(pj)?;
+        let round_id =
+            round_id_from_hex(pj.need("round_id")?.as_str().unwrap_or_default())?;
+        if cfg.mode.has_dp() {
+            let mut rng = Rng::new(round_id ^ idx as u64);
+            dp::privatize_update(
+                &mut params,
+                gs,
+                cfg.clip_norm,
+                cfg.noise_multiplier,
+                &mut rng,
+            )?;
+        }
+        if cfg.mode.has_secagg() {
+            let keys_map: BTreeMap<String, String> = pj
+                .need("keys")?
+                .as_obj()
+                .unwrap()
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect();
+            let participants: Vec<String> = pj
+                .need("participants")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect();
+            let kp = round_keys_of(&device, round_id);
+            let seeds: Vec<(i64, [u8; 32])> = participants
+                .iter()
+                .filter(|c| *c != &device)
+                .map(|peer| {
+                    let their = keys::parse_pubkey_hex(&keys_map[peer]).unwrap();
+                    let sk = keys::shared_key(&kp.secret, &their);
+                    (
+                        masking::pair_sign(&device, peer),
+                        keys::pair_seed_from_shared(&sk, round_id, &device, peer),
+                    )
+                })
+                .collect();
+            let weighted =
+                pj.get("weighted").and_then(Json::as_bool).unwrap_or(true);
+            let weight = if weighted {
+                n_samples as f64 / cfg.weight_scale as f64
+            } else {
+                1.0
+            };
+            params = masking::mask_update_with_seeds(
+                &params,
+                weight,
+                &seeds,
+                cfg.frac_bits,
+            )?;
+        }
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(params))
+            .set("n_samples", n_samples)
+            .set("loss", 0.5))
+    });
+
+    registry.register("fact_reveal", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let mut seeds = Json::obj();
+        let mut shares_out = Json::obj();
+        for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
+            let Some(name) = d.as_str() else { continue };
+            if name == device {
+                continue;
+            }
+            let Some(pub_hex) = keys_map.get(name) else { continue };
+            let their = keys::parse_pubkey_hex(pub_hex)?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            seeds = seeds.set(
+                name,
+                to_hex(&keys::pair_seed_from_shared(&sk, round_id, &device, name)),
+            );
+            if let Some(ct_hex) =
+                p.get("shares").and_then(|s| s.get(name)).and_then(Json::as_str)
+            {
+                let plain = keys::decrypt_share(
+                    &sk,
+                    round_id,
+                    name,
+                    &device,
+                    &from_hex(ct_hex)?,
+                )?;
+                shares_out = shares_out.set(name, to_hex(&plain));
+            }
+        }
+        Ok(Json::obj().set("seeds", seeds).set("shares", shares_out))
+    });
+    registry
+}
+
+/// The chaos fleet: 2 flaky clients (p=0.2 split across drop-before and
+/// crash-during), 2 3x stragglers with injected latency, 4 reliable.
+fn chaos_clients() -> Vec<SimClient> {
+    (0..CLIENTS)
+        .map(|i| {
+            let profile = match i {
+                0 | 1 => FaultProfile::flaky(0.2),
+                2 | 3 => FaultProfile::straggler(3.0, 40),
+                _ => FaultProfile::reliable(),
+            };
+            SimClient {
+                name: format!("client-{i}"),
+                hardware: HardwareConfig::default(),
+                faults: FaultInjector::new(0xc4a0_5000 + i as u64, profile),
+                capacity: 1,
+            }
+        })
+        .collect()
+}
+
+fn participation() -> ParticipationConfig {
+    ParticipationConfig {
+        sample_rate: 0.75, // cohort of 6 from 8
+        quorum: 0.6,       // ceil(0.6 * 6) = 4
+        deadline_ms: 2_000,
+        late_grace_ms: 50,
+        deadline: DeadlineMode::P90,
+        deadline_margin: 2.0,
+        deadline_min_ms: 300,
+        deadline_max_ms: 3_000,
+        min_cohort: 3,
+        strategy: SamplingStrategy::Uniform,
+        seed: 4_242,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------- kill store
+
+/// Delegates to a real [`WalRoundStore`] but injects a coordinator
+/// crash: the `kill_after`-th durable write persists and then errors —
+/// the moment a real process would die with the record already on disk —
+/// and every later write fails like a dead process.
+struct KillStore {
+    inner: WalRoundStore,
+    remaining: AtomicI64,
+}
+
+impl KillStore {
+    fn new(dir: &std::path::Path, kill_after: i64) -> KillStore {
+        KillStore {
+            inner: WalRoundStore::open(dir).unwrap(),
+            remaining: AtomicI64::new(kill_after),
+        }
+    }
+
+    fn tick(&self) -> bool {
+        self.remaining.fetch_sub(1, Ordering::SeqCst) <= 1
+    }
+
+    fn dead(&self) -> bool {
+        self.remaining.load(Ordering::SeqCst) <= 0
+    }
+
+    fn crash<T>() -> feddart::Result<T> {
+        Err(FedError::Fact("injected coordinator crash".into()))
+    }
+}
+
+impl RoundStore for KillStore {
+    fn append(&self, ev: RoundEvent) -> feddart::Result<RoundPhase> {
+        if self.dead() {
+            return Self::crash();
+        }
+        let phase = self.inner.append(ev)?;
+        if self.tick() {
+            return Self::crash();
+        }
+        Ok(phase)
+    }
+    fn append_charge(&self, charge: LedgerCharge) -> feddart::Result<()> {
+        if self.dead() {
+            return Self::crash();
+        }
+        self.inner.append_charge(charge)?;
+        if self.tick() {
+            return Self::crash();
+        }
+        Ok(())
+    }
+    fn charges(&self) -> feddart::Result<Vec<LedgerCharge>> {
+        self.inner.charges()
+    }
+    fn round(&self, round_id: u64) -> feddart::Result<Option<RoundState>> {
+        self.inner.round(round_id)
+    }
+    fn rounds(&self) -> feddart::Result<Vec<RoundState>> {
+        self.inner.rounds()
+    }
+    fn session_tag(&self) -> feddart::Result<Option<u64>> {
+        self.inner.session_tag()
+    }
+    fn set_session_tag(&self, tag: u64) -> feddart::Result<u64> {
+        self.inner.set_session_tag(tag)
+    }
+    fn compact(&self) -> feddart::Result<()> {
+        self.inner.compact()
+    }
+    fn recovery(&self) -> RecoveryStatus {
+        self.inner.recovery()
+    }
+}
+
+// ------------------------------------------------------ recording store
+
+/// A [`MemRoundStore`] that additionally snapshots, per round, the
+/// counted updates (`LearnClosed`) and the post-apply params
+/// (`Aggregated`) *as they stream by* — terminal rounds trim both from
+/// the store proper, so a post-hoc aggregate audit needs this tap.
+#[derive(Default)]
+struct RecordingStore {
+    inner: MemRoundStore,
+    taps: std::sync::Mutex<BTreeMap<u64, (Vec<StoredUpdate>, Option<Vec<f32>>)>>,
+}
+
+impl RoundStore for RecordingStore {
+    fn append(&self, ev: RoundEvent) -> feddart::Result<RoundPhase> {
+        match &ev.kind {
+            EventKind::LearnClosed { updates, .. } => {
+                self.taps
+                    .lock()
+                    .unwrap()
+                    .entry(ev.round_id)
+                    .or_default()
+                    .0 = updates.clone();
+            }
+            EventKind::Aggregated { params, .. } => {
+                self.taps
+                    .lock()
+                    .unwrap()
+                    .entry(ev.round_id)
+                    .or_default()
+                    .1 = Some(params.as_f32_slice().to_vec());
+            }
+            _ => {}
+        }
+        self.inner.append(ev)
+    }
+    fn append_charge(&self, charge: LedgerCharge) -> feddart::Result<()> {
+        self.inner.append_charge(charge)
+    }
+    fn charges(&self) -> feddart::Result<Vec<LedgerCharge>> {
+        self.inner.charges()
+    }
+    fn round(&self, round_id: u64) -> feddart::Result<Option<RoundState>> {
+        self.inner.round(round_id)
+    }
+    fn rounds(&self) -> feddart::Result<Vec<RoundState>> {
+        self.inner.rounds()
+    }
+    fn session_tag(&self) -> feddart::Result<Option<u64>> {
+        self.inner.session_tag()
+    }
+    fn set_session_tag(&self, tag: u64) -> feddart::Result<u64> {
+        self.inner.set_session_tag(tag)
+    }
+    fn compact(&self) -> feddart::Result<()> {
+        self.inner.compact()
+    }
+    fn recovery(&self) -> RecoveryStatus {
+        self.inner.recovery()
+    }
+}
+
+// ------------------------------------------------------------- drivers
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("feddart-chaos-soak-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn secagg_server(store: Arc<dyn RoundStore>) -> FactServer {
+    let wm = WorkflowManager::test_mode_with(
+        chaos_clients(),
+        deterministic_registry(),
+        CLIENTS,
+    );
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig {
+            mode: PrivacyMode::SecAggDp,
+            clip_norm: 4.0,
+            noise_multiplier: 0.05,
+            weight_scale: 128.0,
+            ..PrivacyConfig::default()
+        })
+        .with_participation(participation())
+        .with_round_store(store)
+        .with_session_tag(SESSION_TAG);
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(ROUNDS)),
+            CLIENTS,
+        )
+        .unwrap();
+    server
+}
+
+fn run_session(store: Arc<dyn RoundStore>) -> (feddart::Result<()>, FactServer) {
+    let mut server = secagg_server(store);
+    if let Err(e) = server.recover() {
+        return (Err(e), server);
+    }
+    let out = server.learn();
+    (out, server)
+}
+
+/// Replay `charges` in order and require ε to grow strictly with every
+/// single charge — the ledger never flatlines or rolls back.
+fn assert_epsilon_strictly_monotone(charges: &[LedgerCharge]) {
+    assert!(!charges.is_empty(), "session charged nothing");
+    let mut acct = DpAccountant::new(charges[0].noise_multiplier);
+    let mut prev = 0.0_f64;
+    for (i, c) in charges.iter().enumerate() {
+        acct.add_round(c.q);
+        let eps = acct.epsilon(1e-5);
+        assert!(
+            eps > prev,
+            "ε not strictly monotone at charge {i}: {prev} -> {eps}"
+        );
+        prev = eps;
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+/// THE soak: 6 secagg+dp rounds with sampled cohorts, flaky clients,
+/// 3x stragglers, and one injected coordinator crash mid-session.  The
+/// resumed session must drive every round to a terminal phase with
+/// nothing left in flight, and the ε-ledger must be strictly monotone
+/// across the crash with the pre-crash prefix preserved verbatim.
+#[test]
+fn chaos_soak_survives_faults_and_a_mid_session_coordinator_crash() {
+    let dir = tmp_dir("secagg");
+
+    // session 1: crash on the 20th durable write (inside round 2-3)
+    let killed = Arc::new(KillStore::new(&dir, 20));
+    let (out, server) = run_session(killed);
+    out.unwrap_err(); // the injected crash must surface
+    drop(server);
+
+    // the ledger as the dying coordinator left it
+    let pre_crash = WalRoundStore::open(&dir).unwrap().charges().unwrap();
+
+    // session 2: a fresh coordinator restarts from the same WAL
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    let (out, server) = run_session(store.clone());
+    out.unwrap_or_else(|e| panic!("resumed chaos session failed: {e}"));
+
+    // every round reached a terminal phase; none wedged in flight
+    let rounds = store.rounds().unwrap();
+    assert_eq!(rounds.len(), ROUNDS, "expected {ROUNDS} rounds");
+    for r in &rounds {
+        assert!(
+            matches!(r.phase, RoundPhase::Closed | RoundPhase::Voided),
+            "round {} wedged in {:?}",
+            r.round,
+            r.phase
+        );
+    }
+    assert!(store.in_flight().unwrap().is_empty());
+
+    // every closed round carries exactly one ε charge; a round voided
+    // below the reveal threshold still charges (its clients added noise
+    // and shipped data — discarding the aggregate refunds nothing), so
+    // the charge count sits between the closed count and the round count
+    let closed =
+        rounds.iter().filter(|r| r.phase == RoundPhase::Closed).count();
+    assert!(closed >= 1, "chaos voided every single round");
+    assert!(server.history().len() >= closed);
+    let charges = store.charges().unwrap();
+    assert!(
+        charges.len() >= closed && charges.len() <= ROUNDS,
+        "{} charges for {closed} closed of {ROUNDS} rounds",
+        charges.len()
+    );
+    assert_eq!(server.accountant().steps, charges.len() as u64);
+
+    // strict ε monotonicity, and the crash never rewrote the prefix
+    assert_epsilon_strictly_monotone(&charges);
+    assert!(
+        pre_crash.len() <= charges.len(),
+        "charges vanished across the crash"
+    );
+    for (i, (a, b)) in pre_crash.iter().zip(charges.iter()).enumerate() {
+        assert_eq!(a.key(), b.key(), "charge {i} reordered across the crash");
+        assert!(
+            (a.q - b.q).abs() < 1e-12,
+            "charge {i} rewritten across the crash"
+        );
+    }
+
+    // quorum guarantees: every closed round counted at least quorum-many
+    // clients or closed at the deadline with what arrived
+    for rec in server.history() {
+        assert!(rec.n_clients >= 1, "round {} aggregated nothing", rec.round);
+        assert!(
+            rec.n_clients + rec.late + rec.dropped == rec.sampled,
+            "round {} lost count of its cohort",
+            rec.round
+        );
+    }
+}
+
+/// Clear-view soak (dp only — updates visible to the server): the same
+/// fault fleet over 6 sampled rounds, asserting after the fact that the
+/// final cluster params equal the weighted FedAvg of exactly the counted
+/// reporting subset of the last round.
+#[test]
+fn chaos_dp_rounds_aggregate_exactly_the_reporting_subset() {
+    let wm = WorkflowManager::test_mode_with(
+        chaos_clients(),
+        deterministic_registry(),
+        CLIENTS,
+    );
+    let store = Arc::new(RecordingStore::default());
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig {
+            mode: PrivacyMode::Dp,
+            clip_norm: 4.0,
+            noise_multiplier: 0.05,
+            ..PrivacyConfig::default()
+        })
+        .with_participation(participation())
+        .with_round_store(store.clone() as Arc<dyn RoundStore>)
+        .with_session_tag(SESSION_TAG ^ 1);
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(ROUNDS)),
+            CLIENTS,
+        )
+        .unwrap();
+    server.learn().unwrap();
+
+    // all rounds terminal in the (in-memory) store, ε strictly monotone
+    let rounds = server.round_store().rounds().unwrap();
+    assert_eq!(rounds.len(), ROUNDS);
+    for r in &rounds {
+        assert!(
+            matches!(r.phase, RoundPhase::Closed | RoundPhase::Voided),
+            "round {} wedged in {:?}",
+            r.round,
+            r.phase
+        );
+    }
+    assert!(server.round_store().in_flight().unwrap().is_empty());
+    assert_epsilon_strictly_monotone(&server.round_store().charges().unwrap());
+
+    // every aggregated round's post-apply params equal the weighted mean
+    // of EXACTLY the updates the server counted at close — late/dropped
+    // results never leak into the aggregate
+    let taps = store.taps.lock().unwrap();
+    let mut audited = 0usize;
+    for (round_id, (updates, applied)) in taps.iter() {
+        let Some(applied) = applied else { continue };
+        audited += 1;
+        assert!(
+            !updates.is_empty(),
+            "round {round_id:#x} aggregated without counted updates"
+        );
+        let total_w: f64 =
+            updates.iter().map(|u| u.n_samples as f64).sum();
+        for i in 0..PARAMS {
+            let want: f64 = updates
+                .iter()
+                .map(|u| u.n_samples as f64 * u.params.as_f32_slice()[i] as f64)
+                .sum::<f64>()
+                / total_w;
+            assert!(
+                (applied[i] as f64 - want).abs() < 1e-4,
+                "round {round_id:#x} param {i}: aggregate {} != weighted \
+                 mean {want} of the reporting subset",
+                applied[i]
+            );
+        }
+    }
+    assert_eq!(
+        audited,
+        server.history().len(),
+        "an aggregated round escaped the audit tap"
+    );
+}

@@ -19,12 +19,15 @@ use std::collections::BTreeSet;
 use std::sync::Arc;
 use std::time::Duration;
 
-use feddart::config::{ParticipationConfig, SamplingStrategy};
+use feddart::config::{DeadlineMode, ParticipationConfig, SamplingStrategy};
 use feddart::coordinator::participation::{
     participation_round_key, Candidate, CohortSampler,
 };
+use feddart::coordinator::round_store::RoundPhase;
 use feddart::coordinator::workflow::WorkflowManager;
-use feddart::dart::TaskRegistry;
+use feddart::dart::scheduler::{TaskId, TaskResult, TaskSpec, TaskStatus};
+use feddart::dart::testmode::TestModeDart;
+use feddart::dart::{DartApi, DeviceInfo, TaskRegistry};
 use feddart::error::FedError;
 use feddart::fact::aggregation::Aggregation;
 use feddart::fact::model::FactModel;
@@ -563,4 +566,248 @@ fn deadline_close_with_zero_reports_is_an_error() {
             .get(),
         1
     );
+}
+
+/// Deadline edge case (ISSUE 7 satellite): `deadline_ms = 0` disables
+/// the deadline entirely (the legacy "wait for quorum or completion"
+/// behaviour) — it must never be read as "close immediately", which
+/// would void every round with zero reports.
+#[test]
+fn deadline_zero_means_no_deadline_not_instant_close() {
+    let n = 4;
+    let part = ParticipationConfig {
+        sample_rate: 1.0,
+        quorum: 0.5, // ceil(0.5 * 4) = 2
+        deadline_ms: 0,
+        strategy: SamplingStrategy::Uniform,
+        seed: 5,
+        ..Default::default()
+    };
+    let stragglers: Arc<BTreeSet<(usize, String)>> =
+        Arc::new([(0usize, "client-3".to_string())].into());
+    let reg = scripted_registry(
+        stragglers,
+        Arc::new(BTreeSet::new()),
+        Duration::from_millis(300),
+    );
+    let wm = WorkflowManager::test_mode(n, reg, n);
+    let mut server = FactServer::new(wm).with_participation(part);
+    server
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(1)), 1)
+        .unwrap();
+    // an instant close would surface "no client returned a result"
+    server.learn().unwrap();
+
+    let r = &server.history()[0];
+    assert!(r.n_clients >= 2, "quorum close still applies: {}", r.n_clients);
+    let m = server.metrics();
+    assert_eq!(m.counter("fact.participation.deadline_closes").get(), 0);
+    assert_eq!(m.counter("fact.round.adaptive_closes").get(), 0);
+}
+
+/// Adaptive deadlines end-to-end (ISSUE 7 tentpole): round 0 runs with a
+/// cold tracker — static fallback, and with `deadline_ms = 0` that means
+/// *no* deadline, so a full-quorum round waits out its straggler.  Round
+/// 0's close data warms the tracker; round 1 then closes at the adaptive
+/// percentile deadline and drops the same straggler.
+#[test]
+fn adaptive_deadline_cold_falls_back_static_then_warm_drops_stragglers() {
+    let n = 10;
+    let part = ParticipationConfig {
+        sample_rate: 1.0,
+        quorum: 1.0, // only a deadline can close below n
+        deadline_ms: 0,
+        deadline: DeadlineMode::P90,
+        deadline_margin: 1.5,
+        deadline_min_ms: 150,
+        deadline_max_ms: 200,
+        strategy: SamplingStrategy::Uniform,
+        seed: 6,
+        ..Default::default()
+    };
+    let stragglers: Arc<BTreeSet<(usize, String)>> = Arc::new(
+        [(0usize, "client-9".to_string()), (1usize, "client-9".to_string())]
+            .into(),
+    );
+    let reg = scripted_registry(
+        stragglers,
+        Arc::new(BTreeSet::new()),
+        Duration::from_millis(400),
+    );
+    let wm = WorkflowManager::test_mode(n, reg, n);
+    let mut server = FactServer::new(wm).with_participation(part);
+    server
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(2)), n)
+        .unwrap();
+    assert!(!server.latency_tracker().is_warm());
+    server.learn().unwrap();
+
+    let h = server.history();
+    // round 0: cold tracker -> static fallback -> no deadline -> the
+    // full-quorum round waited for the straggler
+    assert_eq!(h[0].n_clients, 10);
+    assert_eq!(h[0].dropped, 0);
+    // round 0 fed the tracker past min_samples
+    assert!(server.latency_tracker().is_warm());
+    // round 1: p90 x margin, clamped into [150, 200] ms — far below the
+    // 400 ms straggle, so the straggler is dropped at the adaptive close
+    assert_eq!(h[1].n_clients, 9);
+    assert_eq!(h[1].dropped, 1);
+    assert!(
+        h[1].round_ms < 390.0,
+        "adaptive deadline did not shorten the round: {} ms",
+        h[1].round_ms
+    );
+    let m = server.metrics();
+    assert_eq!(m.counter("fact.round.adaptive_closes").get(), 1);
+    let adaptive_ms = m.counter("fact.round.deadline_adaptive_ms").get();
+    assert!(
+        (150..=200).contains(&adaptive_ms),
+        "adaptive deadline outside the clamp: {adaptive_ms} ms"
+    );
+    assert_eq!(m.counter("fact.participation.deadline_closes").get(), 1);
+}
+
+/// A [`TestModeDart`] decorator that masks chosen devices as dead at the
+/// `DartApi` level (the liveness view the repair pass consults) while
+/// the simulated client underneath keeps running.
+struct DeadMask {
+    inner: Arc<TestModeDart>,
+    dead: Arc<std::sync::Mutex<BTreeSet<String>>>,
+}
+
+impl DartApi for DeadMask {
+    fn devices(&self) -> feddart::Result<Vec<DeviceInfo>> {
+        let dead = self.dead.lock().unwrap();
+        Ok(self
+            .inner
+            .devices()?
+            .into_iter()
+            .map(|mut d| {
+                if dead.contains(&d.name) {
+                    d.alive = false;
+                }
+                d
+            })
+            .collect())
+    }
+    fn submit(&self, spec: TaskSpec) -> feddart::Result<TaskId> {
+        self.inner.submit(spec)
+    }
+    fn status(&self, id: TaskId) -> feddart::Result<TaskStatus> {
+        self.inner.status(id)
+    }
+    fn results(&self, id: TaskId) -> feddart::Result<Vec<TaskResult>> {
+        self.inner.results(id)
+    }
+    fn result_count(&self, id: TaskId) -> feddart::Result<usize> {
+        self.inner.result_count(id)
+    }
+    fn progress(&self, id: TaskId) -> feddart::Result<(TaskStatus, usize)> {
+        self.inner.progress(id)
+    }
+    fn stop_task(&self, id: TaskId) -> feddart::Result<()> {
+        self.inner.stop_task(id)
+    }
+}
+
+/// In-round cohort repair + late-grace interplay (ISSUE 7 tentpole +
+/// satellite): one sampled member is dead before dispatch — the repair
+/// pass drops it and draws a replacement inside the same round, records
+/// a `cohort_repaired` event, and charges the conservative union
+/// sampling rate.  A second member straggles past the deadline and
+/// reports inside the grace window: counted `late`, never aggregated —
+/// every contributing device enters the aggregate exactly once.
+#[test]
+fn dead_cohort_member_is_repaired_in_round_and_straggler_counts_late() {
+    let n = 8;
+    let part = ParticipationConfig {
+        sample_rate: 0.5, // cohort of 4
+        quorum: 1.0,      // only the deadline closes the round
+        deadline_ms: 350,
+        late_grace_ms: 1_500,
+        strategy: SamplingStrategy::Uniform,
+        seed: 77,
+        ..Default::default()
+    };
+    let cohort = expected_cohort(&part, n, 0);
+    assert_eq!(cohort.len(), 4, "cohort {cohort:?}");
+    let dead_member = cohort[0].clone();
+    let straggler = cohort[1].clone();
+
+    let stragglers: Arc<BTreeSet<(usize, String)>> =
+        Arc::new([(0usize, straggler.clone())].into());
+    let reg = scripted_registry(
+        stragglers,
+        Arc::new(BTreeSet::new()),
+        Duration::from_millis(900),
+    );
+    let dead = Arc::new(std::sync::Mutex::new(BTreeSet::new()));
+    let sim = Arc::new(TestModeDart::start_reliable(n, reg, n));
+    let wm = WorkflowManager::with_backend(Arc::new(DeadMask {
+        inner: sim,
+        dead: Arc::clone(&dead),
+    }));
+    let mut server = FactServer::new(wm).with_participation(part.clone());
+    // init while everyone is alive, so the cluster holds all n clients
+    server
+        .initialization_by_model(Arc::new(TestModel), Arc::new(FixedRoundFl(1)), n)
+        .unwrap();
+    let global0 = server.container().clusters[0].params.clone();
+    // the sampled member dies between the draw's pool snapshot and learn
+    dead.lock().unwrap().insert(dead_member.clone());
+    server.learn().unwrap();
+
+    // the repair pass swapped the dead member for one replacement
+    let m = server.metrics();
+    assert_eq!(m.counter("fact.round.repaired").get(), 1);
+    assert_eq!(m.counter("fact.round.replacements").get(), 1);
+
+    // the round store holds the repaired cohort and the repair audit
+    let rounds = server.round_store().rounds().unwrap();
+    assert_eq!(rounds.len(), 1);
+    let rs = &rounds[0];
+    assert_eq!(rs.phase, RoundPhase::Closed);
+    assert_eq!(rs.repaired, 1);
+    assert_eq!(rs.cohort.len(), 4, "repair preserves cohort size");
+    assert!(
+        !rs.cohort.contains(&dead_member),
+        "dead member must leave the addressed cohort: {:?}",
+        rs.cohort
+    );
+    let replacement: Vec<&String> =
+        rs.cohort.iter().filter(|c| !cohort.contains(c)).collect();
+    assert_eq!(replacement.len(), 1, "exactly one replacement drawn");
+
+    // union of both draws (4 + 1 = 5 of 8) is the conservative DP charge
+    let sampler = CohortSampler::new(part);
+    let want_q = sampler.amplification_rate(5, n);
+    let r = &server.history()[0];
+    assert!((r.sample_rate - want_q).abs() < 1e-9, "q {}", r.sample_rate);
+    assert!((rs.sample_rate - want_q).abs() < 1e-9);
+
+    // deadline close at 350 ms with 3 reporters; the straggler settles
+    // inside the grace window: counted late, excluded from the aggregate
+    assert_eq!(r.sampled, 4);
+    assert_eq!(r.n_clients, 3);
+    assert_eq!(r.late, 1, "straggler must be observed in the grace sweep");
+    assert_eq!(r.dropped, 0);
+    assert_eq!(r.n_clients + r.late + r.dropped, r.sampled);
+
+    // aggregate == mean over exactly the three in-time reporters — the
+    // late original is never folded in, nobody is counted twice
+    let reporters: Vec<&String> =
+        rs.cohort.iter().filter(|c| **c != straggler).collect();
+    assert_eq!(reporters.len(), 3);
+    let mean_bump: f32 =
+        reporters.iter().map(|d| bump(d)).sum::<f32>() / reporters.len() as f32;
+    for (got, g0) in
+        server.container().clusters[0].params.iter().zip(global0.iter())
+    {
+        assert!(
+            (got - (g0 + mean_bump)).abs() < 1e-5,
+            "aggregate drifted from the reporting subset: {got} vs {}",
+            g0 + mean_bump
+        );
+    }
 }
