@@ -1,0 +1,240 @@
+//! E13 — tracing cost: per-span overhead of the flight recorder, and the
+//! end-to-end price a traced round pays (enabled vs disabled).
+//!
+//! Three measurements:
+//! * **span** — create + finish one recorded span: enabled recorder,
+//!   disabled recorder (the production off-switch), and the noop span
+//!   (what `child_of_current` hands out with no ambient context);
+//! * **event** — one structured event appended to the current span;
+//! * **e2e** — a full clear-mode FL session (test-mode DART, trivial
+//!   clients) with the global recorder enabled vs disabled.
+//!
+//! The bench ASSERTS the observability acceptance bar: tracing that is
+//! compiled in but disabled must cost the round pipeline < 5% — checked
+//! both ways (a disabled session must not run slower than an enabled one
+//! beyond noise, and the measured disabled per-op cost extrapolated over
+//! a round's telemetry ops must stay under 5% of the round's wall time).
+//!
+//! Writes `BENCH_telemetry.json` (`$BENCH_OUT` selects the directory);
+//! smoke mode (`BENCH_SMOKE=1` / `--smoke`) shrinks sizes for CI.
+
+use std::sync::Arc;
+
+use feddart::benchkit::{fmt_s, smoke, time_n, BenchReport, Table};
+use feddart::coordinator::workflow::WorkflowManager;
+use feddart::dart::TaskRegistry;
+use feddart::error::FedError;
+use feddart::fact::aggregation::Aggregation;
+use feddart::fact::model::FactModel;
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::FactServer;
+use feddart::json::Json;
+use feddart::telemetry::{self, phase, Recorder, Span};
+use feddart::util::rng::golden_f32;
+use feddart::util::tensorbuf::TensorBuf;
+
+const PARAMS: usize = 256;
+const CLIENTS: usize = 5;
+
+struct BenchModel;
+
+impl FactModel for BenchModel {
+    fn name(&self) -> &str {
+        "benchmodel"
+    }
+    fn param_count(&self) -> usize {
+        PARAMS
+    }
+    fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+        Ok(golden_f32(seed as u32, PARAMS))
+    }
+    fn aggregation(&self) -> &Aggregation {
+        &Aggregation::WeightedFedAvg
+    }
+}
+
+/// Trivial clear-mode clients: echo a perturbed copy of the global.
+fn bench_registry() -> TaskRegistry {
+    let registry = TaskRegistry::new();
+    registry.register("fact_init", |_| Ok(Json::Null));
+    registry.register("fact_learn", |p| {
+        let global = TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Task(e.to_string()))?;
+        let params: Vec<f32> =
+            global.as_f32_slice().iter().map(|g| g + 0.01).collect();
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(params))
+            .set("n_samples", 100.0)
+            .set("loss", 0.5))
+    });
+    registry
+}
+
+/// One fresh clear-mode session: build server, run `rounds` FL rounds.
+fn run_session(rounds: usize) {
+    let wm = WorkflowManager::test_mode(CLIENTS, bench_registry(), 4);
+    let mut server = FactServer::new(wm);
+    server
+        .initialization_by_model(
+            Arc::new(BenchModel),
+            Arc::new(FixedRoundFl(rounds)),
+            11,
+        )
+        .unwrap();
+    server.learn().unwrap();
+}
+
+/// Returns the report plus the measured disabled per-span cost (the
+/// e2e bench extrapolates its overhead bound from it).
+fn span_bench(mut report: BenchReport) -> (BenchReport, f64) {
+    // batch ns-scale ops inside each timed sample: one sample = `batch`
+    // spans, so mean / batch is the per-span cost
+    let batch = if smoke() { 2_000 } else { 20_000 };
+    let iters = if smoke() { 10 } else { 30 };
+    let mut t = Table::new(&["recorder", "per_span"]);
+
+    let on = Arc::new(Recorder::with_defaults());
+    let mut rid = 0u64;
+    let st_on = time_n(2, iters, || {
+        for _ in 0..batch {
+            rid += 1;
+            let mut s = Span::root(&on, phase::ROUND, rid);
+            s.set_attr("cluster", 0);
+            s.finish();
+        }
+    });
+    t.row(&["enabled".into(), fmt_s(st_on.mean / batch as f64)]);
+
+    let off = Arc::new(Recorder::disabled());
+    let st_off = time_n(2, iters, || {
+        for _ in 0..batch {
+            rid += 1;
+            let mut s = Span::root(&off, phase::ROUND, rid);
+            s.set_attr("cluster", 0);
+            s.finish();
+        }
+    });
+    t.row(&["disabled".into(), fmt_s(st_off.mean / batch as f64)]);
+
+    let st_noop = time_n(2, iters, || {
+        for _ in 0..batch {
+            let mut s = Span::noop();
+            s.set_attr("cluster", 0);
+            s.finish();
+        }
+    });
+    t.row(&["noop".into(), fmt_s(st_noop.mean / batch as f64)]);
+
+    // one event appended to the current (entered) span
+    let root = Span::root(&on, phase::ROUND, u64::MAX);
+    let guard = root.enter();
+    let st_ev = time_n(2, iters, || {
+        for _ in 0..batch {
+            telemetry::event("bench_tick", &[("k", "v")]);
+        }
+    });
+    drop(guard);
+    root.finish();
+    t.row(&["event (enabled)".into(), fmt_s(st_ev.mean / batch as f64)]);
+    t.print("span + event cost (per op)");
+
+    // ring memory at steady state: the recorder self-reports its
+    // footprint after absorbing a full ring of spans
+    let sized = Arc::new(Recorder::with_defaults());
+    for i in 0..10_000u64 {
+        Span::root(&sized, phase::ROUND, i).finish();
+    }
+    let bytes = sized.approx_bytes();
+    println!("recorder footprint after 10k spans: ~{} KiB", bytes / 1024);
+
+    report = report
+        .set("span_enabled_s", st_on.mean / batch as f64)
+        .set("span_disabled_s", st_off.mean / batch as f64)
+        .set("span_noop_s", st_noop.mean / batch as f64)
+        .set("event_enabled_s", st_ev.mean / batch as f64)
+        .set("ring_bytes_10k_spans", bytes as f64);
+
+    // the disabled fast path must stay ns-scale: the pipeline leans on
+    // "a span you don't record is (almost) free"
+    let per_span_off = st_off.mean / batch as f64;
+    assert!(
+        per_span_off < 2e-6,
+        "disabled span path regressed to {per_span_off:.2e}s/span"
+    );
+    (report, per_span_off)
+}
+
+fn e2e_bench(mut report: BenchReport, per_span_off: f64) -> BenchReport {
+    let rounds = if smoke() { 2 } else { 5 };
+    let iters = if smoke() { 3 } else { 10 };
+    let mut t = Table::new(&["tracing", "session", "per_round"]);
+
+    telemetry::set_enabled(true);
+    let st_on = time_n(1, iters, || run_session(rounds));
+    t.row(&[
+        "enabled".into(),
+        fmt_s(st_on.mean),
+        fmt_s(st_on.mean / rounds as f64),
+    ]);
+
+    telemetry::set_enabled(false);
+    let st_off = time_n(1, iters, || run_session(rounds));
+    t.row(&[
+        "disabled".into(),
+        fmt_s(st_off.mean),
+        fmt_s(st_off.mean / rounds as f64),
+    ]);
+    telemetry::set_enabled(true);
+
+    t.print(&format!(
+        "end-to-end clear-mode session ({CLIENTS} clients, {rounds} rounds)"
+    ));
+
+    let per_round_off = st_off.mean / rounds as f64;
+    report = report
+        .set("e2e_enabled_s", st_on.mean)
+        .set("e2e_disabled_s", st_off.mean)
+        .set("e2e_per_round_disabled_s", per_round_off);
+
+    // acceptance: disabled tracing costs the pipeline < 5%.
+    //
+    // (1) direct: a disabled session must not be > 5% slower than the
+    //     enabled one (it does strictly less work); 2ms absolute slack
+    //     absorbs scheduler noise on loaded CI runners
+    assert!(
+        st_off.mean <= st_on.mean * 1.05 + 2e-3,
+        "disabled tracing slower than enabled: {} vs {}",
+        fmt_s(st_off.mean),
+        fmt_s(st_on.mean)
+    );
+    // (2) extrapolated: a round performs ~(phases + 3 ops/client)
+    //     telemetry calls; at the measured disabled per-op cost that
+    //     budget must stay under 5% of the round's wall time
+    let ops_per_round = (phase::ALL.len() + 2 + 3 * CLIENTS) as f64;
+    let frac = ops_per_round * per_span_off / per_round_off;
+    println!(
+        "disabled telemetry budget: {ops_per_round:.0} ops x {} = {:.3}% of a round",
+        fmt_s(per_span_off),
+        frac * 100.0
+    );
+    assert!(
+        frac < 0.05,
+        "disabled tracing overhead {:.2}% exceeds the 5% bar",
+        frac * 100.0
+    );
+    report.set("disabled_overhead_frac", frac)
+}
+
+fn main() {
+    println!(
+        "bench_telemetry: smoke={} (BENCH_SMOKE=1 for CI mode)",
+        smoke()
+    );
+    let report = BenchReport::new("telemetry").set("smoke", smoke());
+    let (report, per_span_off) = span_bench(report);
+    let report = e2e_bench(report, per_span_off);
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write report: {e}"),
+    }
+}

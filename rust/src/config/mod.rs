@@ -206,6 +206,41 @@ impl FlConfig {
     }
 }
 
+/// Tracing / flight-recorder settings.  Applied process-wide via
+/// [`TelemetryConfig::apply`] (the global recorder); tracing is on by
+/// default because a disabled-check costs one atomic load per span site.
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Master switch for live span/event recording.
+    pub enabled: bool,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: true }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn from_json(j: &Json) -> TelemetryConfig {
+        TelemetryConfig {
+            enabled: j
+                .get("enabled")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().set("enabled", self.enabled)
+    }
+
+    /// Apply to the process-wide flight recorder.
+    pub fn apply(&self) {
+        crate::telemetry::set_enabled(self.enabled);
+    }
+}
+
 /// How the participation cohort of a round is drawn from the client pool.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SamplingStrategy {

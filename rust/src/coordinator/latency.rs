@@ -118,23 +118,50 @@ impl LatencyTracker {
     }
 }
 
+/// A fully explained deadline resolution — every input the decision was
+/// made from, so the telemetry `deadline_decision` event (and with it a
+/// post-mortem) can say *why* a round closed when it did.
+#[derive(Debug, Clone, Copy)]
+pub struct DeadlineDecision {
+    /// The resolved deadline actually applied to the round.
+    pub deadline_ms: u64,
+    /// True only when a tracked percentile decided the value.
+    pub adaptive: bool,
+    /// The percentile consulted (0 when the mode is static).
+    pub quantile: f64,
+    /// The observed cohort latency at that percentile, when warm.
+    pub observed_ms: Option<u64>,
+    /// Observations the tracker held at decision time.
+    pub tracker_len: usize,
+}
+
+impl DeadlineDecision {
+    fn fallback(p: &ParticipationConfig, quantile: f64, tracker_len: usize) -> DeadlineDecision {
+        DeadlineDecision {
+            deadline_ms: p.deadline_ms,
+            adaptive: false,
+            quantile,
+            observed_ms: None,
+            tracker_len,
+        }
+    }
+}
+
 /// Resolve the effective learn deadline for a round: the configured
 /// percentile of `cohort`'s tracked latencies × `deadline_margin`,
 /// clamped into `[deadline_min_ms, deadline_max_ms]` — or the static
 /// `deadline_ms` when the mode is static or the tracker is cold.
-///
-/// Returns `(deadline_ms, adaptive)`; `adaptive` is true only when a
-/// tracked percentile actually decided the value.
-pub fn effective_deadline(
+pub fn effective_deadline_explained(
     tracker: &LatencyTracker,
     p: &ParticipationConfig,
     cohort: &[String],
-) -> (u64, bool) {
+) -> DeadlineDecision {
+    let len = tracker.len();
     let Some(q) = p.deadline.quantile() else {
-        return (p.deadline_ms, false);
+        return DeadlineDecision::fallback(p, 0.0, len);
     };
     let Some(observed) = tracker.quantile_for(cohort, q) else {
-        return (p.deadline_ms, false); // cold: static fallback
+        return DeadlineDecision::fallback(p, q, len); // cold: static fallback
     };
     let mut d = (observed as f64 * p.deadline_margin.max(1.0)).ceil() as u64;
     if p.deadline_min_ms > 0 {
@@ -143,9 +170,26 @@ pub fn effective_deadline(
     if p.deadline_max_ms > 0 {
         d = d.min(p.deadline_max_ms);
     }
-    // an adaptive deadline of 0 would mean "no deadline" downstream —
-    // never let clamping produce that inversion
-    (d.max(1), true)
+    DeadlineDecision {
+        // an adaptive deadline of 0 would mean "no deadline" downstream —
+        // never let clamping produce that inversion
+        deadline_ms: d.max(1),
+        adaptive: true,
+        quantile: q,
+        observed_ms: Some(observed),
+        tracker_len: len,
+    }
+}
+
+/// [`effective_deadline_explained`] reduced to `(deadline_ms, adaptive)`
+/// for callers that don't need the inputs.
+pub fn effective_deadline(
+    tracker: &LatencyTracker,
+    p: &ParticipationConfig,
+    cohort: &[String],
+) -> (u64, bool) {
+    let d = effective_deadline_explained(tracker, p, cohort);
+    (d.deadline_ms, d.adaptive)
 }
 
 #[cfg(test)]
@@ -235,6 +279,25 @@ mod tests {
         let fresh = vec!["newcomer".to_string()];
         assert_eq!(t.quantile_for(&fresh, 0.5).unwrap(), 10);
         assert_eq!(t.quantile_for(&fresh, 1.0).unwrap(), 1_000);
+    }
+
+    #[test]
+    fn explained_decision_carries_inputs() {
+        let t = LatencyTracker::new(16, 4);
+        for ms in [100u64, 100, 100, 200] {
+            t.observe("c-0", ms);
+        }
+        let d = effective_deadline_explained(&t, &cfg(DeadlineMode::P50), &[]);
+        assert!(d.adaptive);
+        assert_eq!(d.deadline_ms, 150);
+        assert_eq!(d.quantile, 0.5);
+        assert_eq!(d.observed_ms, Some(100));
+        assert_eq!(d.tracker_len, 4);
+        // static mode explains itself as non-adaptive with no observation
+        let d = effective_deadline_explained(&t, &cfg(DeadlineMode::Static), &[]);
+        assert!(!d.adaptive);
+        assert_eq!(d.observed_ms, None);
+        assert_eq!(d.deadline_ms, 2_000);
     }
 
     #[test]

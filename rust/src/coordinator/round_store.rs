@@ -1093,6 +1093,14 @@ pub trait RoundStore: Send + Sync {
     /// What the last open replayed (all-zero for a fresh store).
     fn recovery(&self) -> RecoveryStatus;
 
+    /// Directory where trace dumps (`trace.jsonl`) should live, for
+    /// durable stores — `None` for in-memory backends, the WAL directory
+    /// for [`WalRoundStore`].  The FACT server dumps each closed round's
+    /// flight-recorder trace there and replays it on `recover()`.
+    fn trace_dir(&self) -> Option<std::path::PathBuf> {
+        None
+    }
+
     /// Rounds that are still in flight (non-terminal).
     fn in_flight(&self) -> Result<Vec<RoundState>> {
         Ok(self
@@ -1597,6 +1605,10 @@ impl RoundStore for WalRoundStore {
 
     fn recovery(&self) -> RecoveryStatus {
         self.inner.lock().unwrap().recovery.clone()
+    }
+
+    fn trace_dir(&self) -> Option<PathBuf> {
+        Some(self.dir.clone())
     }
 }
 

@@ -33,6 +33,18 @@ pub enum RoundClose {
     Settled,
 }
 
+impl RoundClose {
+    /// Lowercase label for metrics and telemetry events.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoundClose::Complete => "complete",
+            RoundClose::Quorum => "quorum",
+            RoundClose::Deadline => "deadline",
+            RoundClose::Settled => "settled",
+        }
+    }
+}
+
 /// Outcome of [`WorkflowManager::run_task_quorum`].
 #[derive(Debug)]
 pub struct QuorumOutcome {
@@ -361,6 +373,20 @@ impl WorkflowManager {
                 }
             }
         }
+        // flight-recorder breadcrumb on the caller's active span (the
+        // round's quorum_wait phase): why the round closed, and when
+        crate::telemetry::event(
+            "quorum_close",
+            &[
+                ("function", execute_function),
+                ("close", close.as_str()),
+                ("results", &results.len().to_string()),
+                ("expected", &expected.to_string()),
+                ("quorum", &quorum.to_string()),
+                ("late", &late.len().to_string()),
+                ("elapsed_ms", &elapsed_ms.to_string()),
+            ],
+        );
         Ok(QuorumOutcome { results, close, late, elapsed_ms })
     }
 

@@ -228,6 +228,12 @@ fn session(
 
 /// Run one unit through the registry and wrap the outcome.  Shared with the
 /// REST worker path ([`crate::dart::rest::RestWorker`]).
+///
+/// Trace propagation rides for free here: `call_as` starts a client-side
+/// wire span when the unit's params carry a `trace` context (injected by
+/// the coordinator) and echoes it back on the result as `_span`, so a
+/// client's execution time lands in the coordinator's round trace without
+/// this transport knowing anything about telemetry.
 pub(crate) fn execute_unit(registry: &TaskRegistry, unit: WorkUnit) -> UnitReport {
     let WorkUnit { task_id, function, client, params } = unit;
     let t0 = Instant::now();

@@ -131,12 +131,24 @@ impl TaskRegistry {
     /// `"_device"` (object params only).  Client-side code uses this to
     /// select its own local data partition: on a real client it is the
     /// process's own name; in test mode it identifies the simulated client.
+    ///
+    /// This is the one execution choke point shared by the TCP client
+    /// worker, the REST worker, and test mode — so it also carries the
+    /// client half of the trace-echo protocol: when the params carry a
+    /// `trace` context, the execution is timed as a child span and the
+    /// finished span rides back on the result as `_span` for the
+    /// coordinator to absorb into the round's trace.
     pub fn call_as(&self, device: &str, name: &str, params: &Json) -> Result<Json> {
         let injected = match params {
             Json::Obj(_) => params.clone().set("_device", device),
             other => other.clone(),
         };
-        self.call(name, &injected)
+        let wire = crate::telemetry::start_wire_span(&injected, name);
+        let out = self.call(name, &injected)?;
+        Ok(match wire {
+            Some(w) => w.attach(out, device),
+            None => out,
+        })
     }
 
     pub fn names(&self) -> Vec<String> {
@@ -167,5 +179,27 @@ mod tests {
         let reg2 = reg.clone();
         reg.register("f", |_| Ok(Json::Null));
         assert!(reg2.call("f", &Json::Null).is_ok());
+    }
+
+    #[test]
+    fn call_as_echoes_wire_span_when_traced() {
+        let reg = TaskRegistry::new();
+        reg.register("f", |_| Ok(Json::obj().set("ok", true)));
+        let ctx = crate::telemetry::SpanContext {
+            trace_id: 7,
+            span_id: 3,
+            round_id: 9,
+        };
+        let params = crate::telemetry::inject(Json::obj(), Some(ctx));
+        let out = reg.call_as("c-1", "f", &params).unwrap();
+        let echo = out.get(crate::telemetry::ECHO_KEY).expect("span echo");
+        assert_eq!(echo.get("name").unwrap().as_str(), Some("f"));
+        assert_eq!(
+            echo.get("attrs").unwrap().get("client").unwrap().as_str(),
+            Some("c-1")
+        );
+        // untraced params produce no echo
+        let out = reg.call_as("c-1", "f", &Json::obj()).unwrap();
+        assert!(out.get(crate::telemetry::ECHO_KEY).is_none());
     }
 }

@@ -156,6 +156,13 @@ impl RestDartApi {
                     }
                     .min(self.retry.budget_ms - slept);
                     self.metrics.counter("dart.wire.retries").inc();
+                    // per-kind series (`what` is a bounded set of REST
+                    // call names) + a flight-recorder event on whatever
+                    // span is driving this call
+                    self.metrics
+                        .counter_labeled("dart.wire.retries", &[("kind", what)])
+                        .inc();
+                    crate::telemetry::wire_retry_event(what, attempt, &e.to_string());
                     log::debug!(target: "dart::rest",
                         "transient wire error on {what} (attempt \
                          {attempt}/{}): {e}; retrying in {wait}ms",

@@ -294,8 +294,9 @@ impl Scheduler {
         entry.alive.store(false, Ordering::SeqCst);
         entry.inflight.store(0, Ordering::SeqCst);
 
-        let mut requeues: Vec<(TaskId, String, u32)> = Vec::new();
-        let mut failures: Vec<(TaskId, String)> = Vec::new();
+        type Ctx = Option<crate::telemetry::SpanContext>;
+        let mut requeues: Vec<(TaskId, String, u32, Ctx)> = Vec::new();
+        let mut failures: Vec<(TaskId, String, Ctx)> = Vec::new();
         for shard in &self.shards {
             let mut g = shard.lock().unwrap();
             for (&tid, task) in g.iter_mut() {
@@ -305,11 +306,19 @@ impl Scheduler {
                 for (client, unit) in task.units.iter_mut() {
                     if let UnitState::Running { worker, retries_left } = unit {
                         if worker == name {
+                            // the unit's params may carry the round's
+                            // trace context — recover it so the requeue
+                            // lands on the right client span
+                            let ctx = task
+                                .spec
+                                .params
+                                .get(client.as_str())
+                                .and_then(crate::telemetry::extract);
                             if *retries_left > 0 {
                                 let r = *retries_left - 1;
                                 *unit = UnitState::Queued { retries_left: r };
                                 task.net.requeue().ok();
-                                requeues.push((tid, client.clone(), r));
+                                requeues.push((tid, client.clone(), r, ctx));
                             } else {
                                 *unit = UnitState::Failed {
                                     reason: format!(
@@ -317,7 +326,7 @@ impl Scheduler {
                                     ),
                                 };
                                 task.net.fail().ok();
-                                failures.push((tid, client.clone()));
+                                failures.push((tid, client.clone(), ctx));
                             }
                         }
                     }
@@ -328,16 +337,34 @@ impl Scheduler {
         self.count("dart.scheduler.unit_failures", failures.len() as u64);
         if !requeues.is_empty() {
             let mut q = entry.queue.lock().unwrap();
-            for (tid, client, r) in requeues {
+            for (tid, client, r, ctx) in requeues {
                 log::warn!(target: "dart::scheduler",
                     "task {tid} unit '{client}' re-queued after loss of '{name}' \
                      ({r} retries left)");
+                if let Some(ctx) = ctx {
+                    crate::telemetry::event_at(
+                        ctx,
+                        "unit_requeued",
+                        &[
+                            ("client", &client),
+                            ("worker", name),
+                            ("retries_left", &r.to_string()),
+                        ],
+                    );
+                }
                 q.push_back((tid, client));
             }
         }
-        for (tid, client) in failures {
+        for (tid, client, ctx) in failures {
             log::error!(target: "dart::scheduler",
                 "task {tid} unit '{client}' failed permanently after loss of '{name}'");
+            if let Some(ctx) = ctx {
+                crate::telemetry::event_at(
+                    ctx,
+                    "unit_failed",
+                    &[("client", &client), ("worker", name)],
+                );
+            }
         }
     }
 

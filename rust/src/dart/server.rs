@@ -459,6 +459,23 @@ impl RestHandler {
                     counters =
                         counters.set(name, self.metrics.counter(name).get());
                 }
+                // span-derived per-phase timings: one entry per
+                // `fact.round.phase_ms{phase,cluster}` series, fed by the
+                // telemetry phase spans
+                let mut phase_ms = Json::obj();
+                for (key, h) in
+                    self.metrics.histograms_with_prefix("fact.round.phase_ms")
+                {
+                    phase_ms = phase_ms.set(
+                        &key,
+                        Json::obj()
+                            .set("count", h.count())
+                            .set("mean", h.mean())
+                            .set("p50", h.quantile(0.5))
+                            .set("p95", h.quantile(0.95)),
+                    );
+                }
+                counters = counters.set("phase_ms", phase_ms);
                 let body = match &self.round_store {
                     Some(store) => store.recovery().to_json(),
                     None => Json::obj().set("attached", false),
@@ -728,7 +745,53 @@ impl RestHandler {
                         .set("total_weight", w),
                 ))
             }
-            ("GET", ["metrics"]) => Ok(Response::ok_json(&self.metrics.snapshot())),
+            ("GET", ["metrics"]) => {
+                // content negotiation: the JSON snapshot stays the
+                // default (byte-compatible for existing consumers);
+                // Prometheus scrapers ask with Accept: text/plain (or
+                // `?format=prometheus`)
+                let wants_prom = req
+                    .query
+                    .get("format")
+                    .map(|f| f.starts_with("prom"))
+                    .unwrap_or(false)
+                    || req
+                        .headers
+                        .get("accept")
+                        .map(|a| a.contains("text/plain"))
+                        .unwrap_or(false);
+                if wants_prom {
+                    Ok(Response::text(200, &self.metrics.prometheus()))
+                } else {
+                    Ok(Response::ok_json(&self.metrics.snapshot()))
+                }
+            }
+            ("GET", ["trace", "recent"]) => {
+                let n = req
+                    .query
+                    .get("n")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(50usize);
+                Ok(Response::ok_json(&crate::telemetry::global().recent_json(n)))
+            }
+            ("GET", ["trace", id]) => {
+                let rid = round_id_from_hex(id)?;
+                let rec = crate::telemetry::global();
+                if rec.trace_json(rid).is_none() {
+                    // not in the in-memory flight recorder (e.g. this
+                    // process restarted): replay the durable dump next to
+                    // the round-store WAL, then retry
+                    if let Some(dir) =
+                        self.round_store.as_ref().and_then(|s| s.trace_dir())
+                    {
+                        let _ = rec.load_jsonl(&dir.join("trace.jsonl"));
+                    }
+                }
+                match rec.trace_json(rid) {
+                    Some(j) => Ok(Response::ok_json(&j)),
+                    None => Ok(Response::error(404, "no trace for round")),
+                }
+            }
             ("GET", ["logs"]) => {
                 let n = req
                     .query

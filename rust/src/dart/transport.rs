@@ -9,6 +9,13 @@
 //! MAC covers the payload.  A client that does not hold the key cannot
 //! produce valid frames, and tampered frames are rejected — the same
 //! operational guarantees the SSH channel gives the paper's deployment.
+//!
+//! Trace context crosses this channel *inside* the payload, not beside
+//! it: the coordinator injects a `trace` field onto task params and
+//! clients echo a finished `_span` on results (see [`crate::telemetry`]),
+//! so framing and MAC coverage are unchanged — a traced frame is just a
+//! frame whose JSON has two more keys, and the MAC covers them like any
+//! other payload bytes.
 
 use std::io::{Read, Write};
 

@@ -11,7 +11,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::ParticipationConfig;
-use crate::coordinator::latency::{effective_deadline, LatencyTracker};
+use crate::coordinator::latency::{effective_deadline_explained, LatencyTracker};
 use crate::coordinator::participation::{
     participation_round_key, Candidate, CohortSampler,
 };
@@ -35,6 +35,7 @@ use crate::privacy::{
     from_hex, keys, resolve_reveal_threshold, round_id_to_hex, seed_from_hex,
     shamir, PrivacyConfig, PrivacyMode, RevealPolicy,
 };
+use crate::telemetry::{self, phase};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::splitmix64;
 use crate::util::Stopwatch;
@@ -323,6 +324,11 @@ pub struct FactServer {
     /// across replayed + resumed clusters, exactly like an uninterrupted
     /// run.
     deferred_charges: BTreeMap<(usize, usize), f64>,
+    /// Flight recorder round traces are written to: the process-global
+    /// recorder by default, a private one via
+    /// [`FactServer::with_telemetry`] (tests simulate a restart by
+    /// recovering into a fresh recorder).
+    tele: Arc<crate::telemetry::Recorder>,
 }
 
 impl FactServer {
@@ -359,7 +365,20 @@ impl FactServer {
             completed_rounds: BTreeSet::new(),
             already_charged: BTreeSet::new(),
             deferred_charges: BTreeMap::new(),
+            tele: Arc::clone(crate::telemetry::global()),
         }
+    }
+
+    /// Record round traces into an explicit flight recorder instead of
+    /// the process-global one.
+    pub fn with_telemetry(mut self, rec: Arc<crate::telemetry::Recorder>) -> FactServer {
+        self.tele = rec;
+        self
+    }
+
+    /// The flight recorder round traces land in.
+    pub fn telemetry(&self) -> &Arc<crate::telemetry::Recorder> {
+        &self.tele
     }
 
     pub fn with_hyper(mut self, hyper: Hyper) -> FactServer {
@@ -443,6 +462,20 @@ impl FactServer {
         }
         self.session_tag = self.store.set_session_tag(self.session_tag)?;
         let status = self.store.recovery();
+
+        // 0) replay the durable flight-recorder dump (trace.jsonl lives
+        //    next to the WAL): closed rounds' traces survive the crash,
+        //    so `GET /trace/{round_id}` keeps answering after a restart.
+        //    Span-id dedup makes the replay idempotent.
+        if let Some(dir) = self.store.trace_dir() {
+            match self.tele.load_jsonl(&dir.join("trace.jsonl")) {
+                Ok(n) if n > 0 => log::info!(target: "fact::server",
+                    "recover: replayed {n} trace records from trace.jsonl"),
+                Ok(_) => {}
+                Err(e) => log::warn!(target: "fact::server",
+                    "recover: trace.jsonl replay failed: {e}"),
+            }
+        }
 
         // 1) the ε ledger: the store's charge log is the source of truth.
         //    A stale Snapshot accountant can never fork history — the
@@ -836,6 +869,7 @@ impl FactServer {
             let store = Arc::clone(&self.store);
             let completed = Arc::clone(&completed);
             let plans = Arc::clone(&plans);
+            let tele = Arc::clone(&self.tele);
             let outputs = self.pool.map(clusters, move |mut cluster| {
                 let ctx = RoundCtx {
                     wm: &wm,
@@ -854,6 +888,7 @@ impl FactServer {
                     store: &store,
                     completed: &completed,
                     plans: &plans,
+                    tele: &tele,
                 };
                 let out = train_cluster(&ctx, &mut cluster);
                 (cluster, out)
@@ -882,6 +917,44 @@ impl FactServer {
             }
             self.container.clusters = restored;
             self.latest_updates.extend(latest);
+            // close out each finished round's trace BEFORE the ε charges
+            // below (whose durable append may fail on a dying store): a
+            // `charge` span marking the accounting step (under dp), then
+            // a dump to `trace.jsonl` next to the round-store WAL so the
+            // trace survives a coordinator crash (replayed by recover())
+            let trace_dir = self.store.trace_dir();
+            for r in &self.history[hist_before..] {
+                let rid = splitmix64(
+                    self.session_tag
+                        ^ ((r.clustering_round as u64) << 42)
+                        ^ ((r.cluster_id as u64) << 21)
+                        ^ r.round as u64,
+                );
+                if self.privacy.mode.has_dp() {
+                    if let Some(root) = self.tele.root_of_round(rid) {
+                        let mut span = crate::telemetry::Span::child_of(
+                            &self.tele,
+                            root,
+                            phase::CHARGE,
+                        );
+                        span.set_attr("q", format!("{:.4}", r.sample_rate));
+                        span.set_attr(
+                            "noise_multiplier",
+                            format!("{:.3}", self.privacy.noise_multiplier),
+                        );
+                        span.finish();
+                    }
+                }
+                if let Some(dir) = &trace_dir {
+                    if let Err(e) =
+                        self.tele.dump_round(rid, &dir.join("trace.jsonl"))
+                    {
+                        log::warn!(target: "fact::server",
+                            "trace dump for round {} failed: {e}",
+                            round_id_to_hex(rid));
+                    }
+                }
+            }
             if self.privacy.mode.has_dp() {
                 // one accountant step per aggregation round a model ran.
                 // Clusters train in parallel on DISJOINT clients, so a
@@ -1018,7 +1091,7 @@ struct RoundCtx<'a> {
     participation: &'a Option<ParticipationConfig>,
     known_samples: &'a BTreeMap<String, f64>,
     metrics: &'a Registry,
-    /// observed learn latencies feeding [`effective_deadline`]
+    /// observed learn latencies feeding [`effective_deadline_explained`]
     latency: &'a LatencyTracker,
     session_tag: u64,
     /// every round transition is appended (and validated) here
@@ -1027,6 +1100,22 @@ struct RoundCtx<'a> {
     completed: &'a BTreeSet<(usize, usize, usize)>,
     /// in-flight rounds to resume instead of starting fresh
     plans: &'a BTreeMap<(usize, usize, usize), RoundState>,
+    /// flight recorder the round's spans and events land in
+    tele: &'a Arc<telemetry::Recorder>,
+}
+
+impl RoundCtx<'_> {
+    /// Record one finished phase's wall time into the labeled histogram
+    /// behind `fact.round.phase_ms{phase,cluster}` (surfaced by
+    /// `/rounds/recovery` and the Prometheus exposition).
+    fn phase_ms(&self, name: &str, cluster_id: usize, ms: f64) {
+        self.metrics
+            .histogram_labeled(
+                "fact.round.phase_ms",
+                &[("phase", name), ("cluster", &cluster_id.to_string())],
+            )
+            .observe(ms);
+    }
 }
 
 /// Alg 5: the training session of one cluster.
@@ -1221,6 +1310,14 @@ fn repair_cohort(
     ctx.metrics
         .counter("fact.round.replacements")
         .add(replacements.len() as u64);
+    telemetry::event(
+        "cohort_repaired",
+        &[
+            ("presumed_dead", &presumed_dead.join(",")),
+            ("replacements", &replacements.join(",")),
+            ("q", &format!("{q:.4}")),
+        ],
+    );
     log::info!(target: "fact::server",
         "cluster {} round {round}: repaired cohort in-round — {} presumed \
          dead ({:?}), {} replacement(s) drawn ({:?}), q {:.3} -> {:.3}",
@@ -1240,21 +1337,35 @@ fn fresh_round(
     seen_samples: &mut BTreeMap<String, f64>,
 ) -> Result<()> {
     let sw = Stopwatch::start();
-    // --- participation: draw this round's cohort (everyone without) --
-    let (cohort, realized_q, sampler) = draw_cohort(ctx, cluster, round, seen_samples);
-    // Alg 5 line 3 prep: the global parameters are materialized into ONE
-    // shared buffer; every client's dict holds a cheap clone of it, and
-    // the binary wire encoding writes it once (envelope dedup) instead
-    // of one base64 copy per client.
-    let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
     // privacy negotiation: the round's mode and a fresh round id ride in
-    // every learn task; clients transform their update accordingly
+    // every learn task; clients transform their update accordingly.
+    // Derived before anything else so the round's root span carries it.
     let round_id = splitmix64(
         ctx.session_tag
             ^ ((ctx.clustering_round as u64) << 42)
             ^ ((cluster.id as u64) << 21)
             ^ round as u64,
     );
+    let mut root = telemetry::Span::root(ctx.tele, phase::ROUND, round_id);
+    root.set_attr("cluster", cluster.id);
+    root.set_attr("round", round);
+    root.set_attr("clustering_round", ctx.clustering_round);
+    root.set_attr("mode", ctx.privacy.mode.as_str());
+    let _root_guard = root.enter();
+    // --- participation: draw this round's cohort (everyone without) --
+    let (cohort, realized_q, sampler) = {
+        let span = telemetry::child_of_current(phase::DRAW_COHORT);
+        let _g = span.enter();
+        let psw = Stopwatch::start();
+        let out = draw_cohort(ctx, cluster, round, seen_samples);
+        ctx.phase_ms(phase::DRAW_COHORT, cluster.id, psw.elapsed_ms());
+        out
+    };
+    // Alg 5 line 3 prep: the global parameters are materialized into ONE
+    // shared buffer; every client's dict holds a cheap clone of it, and
+    // the binary wire encoding writes it once (envelope dedup) instead
+    // of one base64 copy per client.
+    let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
     ctx.store.append(RoundEvent::new(
         round_id,
         EventKind::Configured {
@@ -1310,6 +1421,16 @@ fn resume_round(
 ) -> Result<()> {
     let sw = Stopwatch::start();
     let round_id = plan.round_id;
+    // a resumed round gets a fresh trace (the pre-crash spans, if any,
+    // were replayed from trace.jsonl under their own trace id)
+    let mut root = telemetry::Span::root(ctx.tele, phase::ROUND, round_id);
+    root.set_attr("cluster", cluster.id);
+    root.set_attr("round", round);
+    root.set_attr("clustering_round", ctx.clustering_round);
+    root.set_attr("mode", ctx.privacy.mode.as_str());
+    root.set_attr("resumed", true);
+    root.set_attr("from_phase", plan.phase.as_str());
+    let _root_guard = root.enter();
     log::info!(target: "fact::server",
         "cluster {} round {round}: resuming from round store at phase '{}'",
         cluster.id, plan.phase.as_str());
@@ -1631,6 +1752,9 @@ fn dispatch_learn(
     secagg_setup: Option<&SecAggSetup>,
     deadline_override: Option<Duration>,
 ) -> Result<(Vec<ClientUpdate>, usize, usize, usize)> {
+    let dsw = Stopwatch::start();
+    let dspan = telemetry::child_of_current(phase::LEARN_DISPATCH);
+    let dguard = dspan.enter();
     let hp = Hyper { round: round as u64, ..ctx.hyper.clone() };
     let privacy_round = if ctx.privacy.mode == PrivacyMode::Off {
         None
@@ -1672,6 +1796,18 @@ fn dispatch_learn(
         Some(setup) => &setup.participants,
         None => cohort,
     };
+    // one child span per addressed client: opened at dispatch, closed
+    // when the collection closes with the client's outcome.  Its context
+    // rides the task params (`trace` key), so the client runtime's timed
+    // `fact_learn` span echoes back into the same trace via `_span`.
+    let mut client_spans: BTreeMap<String, telemetry::Span> = addressed
+        .iter()
+        .map(|c| {
+            let mut s = telemetry::child_of_current(phase::CLIENT_LEARN);
+            s.set_attr("client", c);
+            (c.clone(), s)
+        })
+        .collect();
     let dict: BTreeMap<String, Json> = addressed
         .iter()
         .map(|c| {
@@ -1679,6 +1815,10 @@ fn dispatch_learn(
             if let Some(pj) = &privacy_round {
                 params = params.set("privacy", pj.clone());
             }
+            params = telemetry::inject(
+                params,
+                client_spans.get(c).and_then(telemetry::Span::context),
+            );
             (c.clone(), params)
         })
         .collect();
@@ -1690,7 +1830,24 @@ fn dispatch_learn(
     let deadline = match (deadline_override, ctx.participation) {
         (Some(d), _) => Some(d),
         (None, Some(p)) => {
-            let (ms, adaptive) = effective_deadline(ctx.latency, p, addressed);
+            let d = effective_deadline_explained(ctx.latency, p, addressed);
+            telemetry::event(
+                "deadline_decision",
+                &[
+                    ("deadline_ms", &d.deadline_ms.to_string()),
+                    ("adaptive", if d.adaptive { "true" } else { "false" }),
+                    ("quantile", &format!("{:.2}", d.quantile)),
+                    (
+                        "observed_ms",
+                        &d.observed_ms
+                            .map(|v| v.to_string())
+                            .unwrap_or_else(|| "cold".into()),
+                    ),
+                    ("tracker_len", &d.tracker_len.to_string()),
+                    ("cohort", &addressed.len().to_string()),
+                ],
+            );
+            let (ms, adaptive) = (d.deadline_ms, d.adaptive);
             if adaptive {
                 ctx.metrics.counter("fact.round.adaptive_closes").inc();
                 ctx.metrics
@@ -1721,6 +1878,15 @@ fn dispatch_learn(
             deadline_ms: deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
         },
     ))?;
+    drop(dguard);
+    ctx.phase_ms(phase::LEARN_DISPATCH, cluster.id, dsw.elapsed_ms());
+    dspan.finish();
+    // the collection window: the scheduler call blocks here until
+    // complete/quorum/deadline — workflow.rs attaches its `quorum_close`
+    // event to this span via the thread-local context
+    let qsw = Stopwatch::start();
+    let qspan = telemetry::child_of_current(phase::QUORUM_WAIT);
+    let qguard = qspan.enter();
     let (results, late_names, dropped) = match (sampler, ctx.participation) {
         (Some(sampler), Some(p)) => {
             // production round loop: close at quorum or deadline,
@@ -1774,6 +1940,27 @@ fn dispatch_learn(
             (results, Vec::new(), dropped)
         }
     };
+    drop(qguard);
+    ctx.phase_ms(phase::QUORUM_WAIT, cluster.id, qsw.elapsed_ms());
+    qspan.finish();
+    // pull each client's echoed `fact_learn` span into the trace, then
+    // close the coordinator-side client spans with their outcome
+    for r in &results {
+        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
+    }
+    for (name, mut span) in client_spans {
+        if let Some(r) = results.iter().find(|r| r.device_name == name) {
+            span.set_attr("outcome", "ok");
+            ctx.metrics
+                .histogram_labeled("fact.client.learn_ms", &[("client", &name)])
+                .observe(r.duration * 1000.0);
+        } else if late_names.contains(&name) {
+            span.set_attr("outcome", "late");
+        } else {
+            span.set_attr("outcome", "dropped");
+        }
+        span.finish();
+    }
     ctx.metrics
         .counter("fact.participation.sampled")
         .add(sampled as u64);
@@ -1863,8 +2050,19 @@ fn finish_round(
         ))?;
         (out.target, Some(out.audit))
     } else {
-        (Some(cluster.model.aggregate(&updates, Some(ctx.pool))?), None)
+        // clear/dp aggregation shares the unmask phase name: same slot
+        // in the span taxonomy, no masks to fold (mode=clear)
+        let mut span = telemetry::child_of_current(phase::UNMASK_AGGREGATE);
+        span.set_attr("mode", "clear");
+        let _g = span.enter();
+        let psw = Stopwatch::start();
+        let target = cluster.model.aggregate(&updates, Some(ctx.pool))?;
+        ctx.phase_ms(phase::UNMASK_AGGREGATE, cluster.id, psw.elapsed_ms());
+        (Some(target), None)
     };
+    let asw = Stopwatch::start();
+    let mut aspan = telemetry::child_of_current(phase::APPLY);
+    let aguard = aspan.enter();
     let applied = match target {
         Some(target) => {
             let mut buf = std::mem::take(&mut cluster.momentum);
@@ -1944,6 +2142,10 @@ fn finish_round(
             },
         ))?;
     }
+    drop(aguard);
+    aspan.set_attr("applied", applied);
+    ctx.phase_ms(phase::APPLY, cluster.id, asw.elapsed_ms());
+    aspan.finish();
     log::debug!(target: "fact::server",
         "cluster {} round {round}: loss {mean_loss:.4} \
          ({}/{sampled} sampled clients, {:.1}ms)",
@@ -2024,11 +2226,26 @@ fn secagg_setup_phases(
     };
     let rid_hex = round_id_to_hex(round_id);
     // phase 1: key agreement
+    let ksw = Stopwatch::start();
+    let kspan = telemetry::child_of_current(phase::KEYS);
+    let kguard = kspan.enter();
+    let kctx = kspan.context();
     let dict: BTreeMap<String, Json> = cohort
         .iter()
-        .map(|c| (c.clone(), Json::obj().set("round_id", rid_hex.as_str())))
+        .map(|c| {
+            (
+                c.clone(),
+                telemetry::inject(
+                    Json::obj().set("round_id", rid_hex.as_str()),
+                    kctx,
+                ),
+            )
+        })
         .collect();
     let results = run_phase(dict, "fact_keys")?;
+    for r in &results {
+        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
+    }
     let mut pubkeys: BTreeMap<String, String> = BTreeMap::new();
     for r in &results {
         if let Some(hex) = r.result.get("pubkey").and_then(Json::as_str) {
@@ -2076,6 +2293,9 @@ fn secagg_setup_phases(
         round_id,
         EventKind::KeysCollected { pubkeys: pubkeys.clone(), threshold },
     ))?;
+    drop(kguard);
+    ctx.phase_ms(phase::KEYS, cluster.id, ksw.elapsed_ms());
+    kspan.finish();
     let mut keys_json = Json::obj();
     for (name, hex) in &pubkeys {
         keys_json = keys_json.set(name, hex.as_str());
@@ -2095,19 +2315,29 @@ fn secagg_setup_phases(
         });
     }
     // phase 2: encrypted share distribution among the key posters
+    let ssw = Stopwatch::start();
+    let sspan = telemetry::child_of_current(phase::SHARES);
+    let sguard = sspan.enter();
+    let sctx = sspan.context();
     let dict: BTreeMap<String, Json> = pubkeys
         .keys()
         .map(|c| {
             (
                 c.clone(),
-                Json::obj()
-                    .set("round_id", rid_hex.as_str())
-                    .set("keys", keys_json.clone())
-                    .set("threshold", threshold),
+                telemetry::inject(
+                    Json::obj()
+                        .set("round_id", rid_hex.as_str())
+                        .set("keys", keys_json.clone())
+                        .set("threshold", threshold),
+                    sctx,
+                ),
             )
         })
         .collect();
     let results = run_phase(dict, "fact_shares")?;
+    for r in &results {
+        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
+    }
     let mut enc_shares = BTreeMap::new();
     let mut commits = BTreeMap::new();
     for r in &results {
@@ -2146,6 +2376,9 @@ fn secagg_setup_phases(
             commits: commits.clone(),
         },
     ))?;
+    drop(sguard);
+    ctx.phase_ms(phase::SHARES, cluster.id, ssw.elapsed_ms());
+    sspan.finish();
     Ok(SecAggSetup {
         participants,
         keys: pubkeys,
@@ -2225,6 +2458,13 @@ fn secagg_recover_aggregate(
         policy: privacy.reveal_policy,
         outcome: "ok",
     };
+    // the reveal span opens even with zero dropouts — "nothing to
+    // recover" is itself a phase outcome worth a slot in the trace
+    let rsw = Stopwatch::start();
+    let mut rspan = telemetry::child_of_current(phase::REVEAL);
+    rspan.set_attr("participants", setup.participants.len());
+    rspan.set_attr("dropouts", dropped.len());
+    let rguard = rspan.enter();
     let mut revealed: Vec<RevealedSeed> = Vec::new();
     if !dropped.is_empty() {
         log::info!(target: "fact::server",
@@ -2250,15 +2490,21 @@ fn secagg_recover_aggregate(
                 }
                 (
                     s.clone(),
-                    Json::obj()
-                        .set("round_id", round_id_to_hex(round_id))
-                        .set("dropped", dropped_json.clone())
-                        .set("keys", setup.keys_json.clone())
-                        .set("shares", shares),
+                    telemetry::inject(
+                        Json::obj()
+                            .set("round_id", round_id_to_hex(round_id))
+                            .set("dropped", dropped_json.clone())
+                            .set("keys", setup.keys_json.clone())
+                            .set("shares", shares),
+                        telemetry::current(),
+                    ),
                 )
             })
             .collect();
         let reveals = wm.run_task(dict, "fact_reveal", timeout)?;
+        for r in &reveals {
+            telemetry::absorb_echo(ctx.tele, &r.result, round_id);
+        }
         // collect direct seed reveals and decrypted shares
         let mut shares_by_dealer: BTreeMap<String, Vec<shamir::Share>> =
             BTreeMap::new();
@@ -2414,7 +2660,16 @@ fn secagg_recover_aggregate(
             }
         }
     }
+    drop(rguard);
+    rspan.set_attr("outcome", audit.outcome);
+    ctx.phase_ms(phase::REVEAL, cluster.id, rsw.elapsed_ms());
+    rspan.finish();
+    let usw = Stopwatch::start();
+    let mut uspan = telemetry::child_of_current(phase::UNMASK_AGGREGATE);
+    uspan.set_attr("mode", "secagg");
+    let _uguard = uspan.enter();
     let target = unmask_aggregate(&masked, &revealed, privacy.frac_bits)?;
+    ctx.phase_ms(phase::UNMASK_AGGREGATE, cluster.id, usw.elapsed_ms());
     Ok(SecAggOutcome { target: Some(target), audit })
 }
 

@@ -163,6 +163,14 @@ impl HttpClient {
         if let Some(k) = &self.key {
             headers.insert("x-client-key".to_string(), k.clone());
         }
+        // propagate the caller's active trace so the server side of this
+        // request can join the same trace (adopted in http::server)
+        if let Some(ctx) = crate::telemetry::current() {
+            headers.insert(
+                crate::telemetry::HTTP_HEADER.to_string(),
+                ctx.header_value(),
+            );
+        }
         for (k, v) in extra_headers {
             headers.insert(k.to_string(), v.to_string());
         }

@@ -109,6 +109,17 @@ impl Response {
         Self::json(200, j)
     }
 
+    /// Plain-text response (Prometheus exposition at `/metrics`).
+    pub fn text(status: u16, body: &str) -> Self {
+        let mut r = Response::new(status);
+        r.headers.insert(
+            "content-type".into(),
+            "text/plain; version=0.0.4; charset=utf-8".into(),
+        );
+        r.body = body.as_bytes().to_vec();
+        r
+    }
+
     /// Content-negotiated response: a binary tensor envelope when the
     /// requester accepts it *and* the payload holds tensors, else plain
     /// JSON (tensors degrade to base64 strings automatically).  One

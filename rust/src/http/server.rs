@@ -192,7 +192,16 @@ fn serve_conn(
         }
         match read_request(&mut reader) {
             Ok(Some(req)) => {
+                // adopt a propagated trace context for the handler's
+                // duration so server-side spans/events join the caller's
+                // trace instead of floating free
+                let adopted = req
+                    .headers
+                    .get(crate::telemetry::HTTP_HEADER)
+                    .and_then(|v| crate::telemetry::SpanContext::from_header(v))
+                    .map(crate::telemetry::ContextGuard::adopt);
                 let resp = handler.handle(req);
+                drop(adopted);
                 write_response(&mut writer, &resp)?;
                 last_request = std::time::Instant::now();
             }

@@ -20,9 +20,9 @@
 //!   masks with dropout recovery) and differential privacy (clip + noise
 //!   + accountant) for the FACT round pipeline.
 //!
-//! Substrate modules ([`json`], [`http`], [`metrics`], [`util`], [`cli`],
-//! [`config`]) replace the crates unavailable in this offline environment —
-//! see DESIGN.md §Substitutions.
+//! Substrate modules ([`json`], [`http`], [`metrics`], [`telemetry`],
+//! [`util`], [`cli`], [`config`]) replace the crates unavailable in this
+//! offline environment — see DESIGN.md §Substitutions.
 
 pub mod benchkit;
 pub mod cli;
@@ -36,6 +36,7 @@ pub mod json;
 pub mod metrics;
 pub mod privacy;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 
 pub use error::{FedError, Result};

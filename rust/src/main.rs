@@ -93,7 +93,7 @@ client  --name client-0 --clients 2 --server 127.0.0.1:7700
         --transport-key feddart-demo-key --seed 42
 train   --server 127.0.0.1:7701 --rest-key 000 --model mlp_default
         --rounds 20 --min-clients 2
-rounds  --round-store DIR [--compact]
+rounds  --round-store DIR [--compact] [--trace ROUND_ID]
 info    [--artifacts DIR]
 
 durability (run/train/server): --round-store DIR
@@ -459,6 +459,22 @@ fn cmd_rounds(args: &Args) -> Result<()> {
         )
     })?;
     let store = WalRoundStore::open(dir)?;
+    if let Some(rid_hex) = args.opt("trace") {
+        // pretty-print one round's span tree from the durable flight
+        // recorder dump written next to the WAL on round close
+        let rid = feddart::privacy::round_id_from_hex(rid_hex)?;
+        let rec = feddart::telemetry::Recorder::with_defaults();
+        let path = store.dir().join("trace.jsonl");
+        let n = rec.load_jsonl(&path)?;
+        match rec.trace_json(rid) {
+            Some(t) => print!("{}", feddart::telemetry::render_tree(&t)),
+            None => println!(
+                "no trace for round {rid_hex} ({n} record(s) in {})",
+                path.display()
+            ),
+        }
+        return Ok(());
+    }
     if args.flag("compact") {
         store.compact()?;
         println!("compacted {}", store.dir().display());

@@ -24,6 +24,10 @@ pub struct LogRecord {
     pub level: Level,
     pub target: String,
     pub message: String,
+    /// Trace context active on the logging thread, if any — log lines
+    /// emitted inside a round phase carry the round's trace/span ids so
+    /// `/logs` output can be correlated with `/trace/{round_id}`.
+    pub trace: Option<crate::telemetry::SpanContext>,
 }
 
 /// The global LogServer instance (install with [`LogServer::init`]).
@@ -74,11 +78,15 @@ impl LogServer {
             self.tail(n)
                 .into_iter()
                 .map(|r| {
-                    Json::obj()
+                    let mut j = Json::obj()
                         .set("ts_ms", r.ts_ms)
                         .set("level", r.level.as_str())
                         .set("target", r.target.as_str())
-                        .set("message", r.message.as_str())
+                        .set("message", r.message.as_str());
+                    if let Some(ctx) = r.trace {
+                        j = j.set("trace", ctx.to_json());
+                    }
+                    j
                 })
                 .collect(),
         )
@@ -102,18 +110,40 @@ impl log::Log for LogServer {
         if !self.enabled(record.metadata()) {
             return;
         }
+        let trace = crate::telemetry::current();
         let rec = LogRecord {
             ts_ms: now_ms(),
             level: record.level(),
             target: record.target().to_string(),
             message: record.args().to_string(),
+            trace,
         };
         if record.level() <= self.stderr_level {
-            eprintln!(
-                "[{:>8}ms {:>5} {}] {}",
-                rec.ts_ms, rec.level, rec.target, rec.message
-            );
+            // plain stderr when no span is active; trace-suffixed inside one
+            match &rec.trace {
+                None => eprintln!(
+                    "[{:>8}ms {:>5} {}] {}",
+                    rec.ts_ms, rec.level, rec.target, rec.message
+                ),
+                Some(ctx) => eprintln!(
+                    "[{:>8}ms {:>5} {}] {} [trace={:x} span={:x} round={:x}]",
+                    rec.ts_ms,
+                    rec.level,
+                    rec.target,
+                    rec.message,
+                    ctx.trace_id,
+                    ctx.span_id,
+                    ctx.round_id
+                ),
+            }
         }
+        // mirror into the active trace so the flight recorder holds the
+        // log line next to the spans it happened inside
+        crate::telemetry::log_event(
+            rec.level.as_str(),
+            &rec.target,
+            &rec.message,
+        );
         self.push(rec);
     }
 
@@ -137,6 +167,7 @@ mod tests {
                 level: Level::Info,
                 target: "t".into(),
                 message: format!("m{i}"),
+                trace: None,
             });
         }
         assert_eq!(ls.len(), RING_CAPACITY);
@@ -158,6 +189,7 @@ mod tests {
             level: Level::Warn,
             target: "dart".into(),
             message: "client lost".into(),
+            trace: None,
         });
         let j = ls.snapshot(10);
         assert_eq!(j.as_arr().unwrap().len(), 1);

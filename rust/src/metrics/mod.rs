@@ -44,7 +44,13 @@ impl Gauge {
     }
 }
 
-/// Histogram storing raw samples (bounded reservoir) + running aggregates.
+/// Histogram storing raw samples (bounded reservoir) + running aggregates
+/// + cumulative fixed buckets.
+///
+/// The reservoir gives exact-ish quantiles for the JSON snapshot but is
+/// unsuitable for scraping (a scraper cannot merge or rate() sampled
+/// quantiles); the fixed powers-of-2 bucket ladder gives Prometheus the
+/// cumulative counts it needs for `histogram_quantile()`.
 pub struct Histogram {
     inner: Mutex<HistInner>,
 }
@@ -56,6 +62,10 @@ struct HistInner {
     max: f64,
     /// bounded sample reservoir for quantiles
     samples: Vec<f64>,
+    /// non-cumulative counts per fixed bucket; `buckets[i]` counts
+    /// observations `v <= BUCKET_BOUNDS[i]` (and greater than the
+    /// previous bound), the last slot is the +Inf overflow
+    buckets: [u64; NBUCKETS],
     /// per-histogram reservoir RNG.  A shared `splitmix64(count)` stream
     /// made every histogram at the same count overwrite the *same* index
     /// (correlated reservoirs) and skewed the acceptance probability away
@@ -64,6 +74,16 @@ struct HistInner {
 }
 
 const RESERVOIR: usize = 4096;
+
+/// Fixed bucket upper bounds: a powers-of-2 millisecond ladder from 1 ms
+/// to ~17.5 min.  One ladder for every histogram keeps scraped series
+/// mergeable across instances.
+pub const BUCKET_BOUNDS: [f64; 21] = [
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0,
+    16384.0, 32768.0, 65536.0, 131072.0, 262144.0, 524288.0, 1048576.0,
+];
+/// `BUCKET_BOUNDS.len() + 1` — the extra slot is the +Inf overflow bucket.
+const NBUCKETS: usize = BUCKET_BOUNDS.len() + 1;
 
 /// Distinct seed per histogram instance.
 static HIST_SEED: std::sync::atomic::AtomicU64 =
@@ -79,6 +99,7 @@ impl Default for Histogram {
                 min: f64::INFINITY,
                 max: f64::NEG_INFINITY,
                 samples: Vec::new(),
+                buckets: [0; NBUCKETS],
                 rng: crate::util::rng::Rng::new(seed),
             }),
         }
@@ -92,6 +113,11 @@ impl Histogram {
         h.sum += v;
         h.min = h.min.min(v);
         h.max = h.max.max(v);
+        let bucket = BUCKET_BOUNDS
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(NBUCKETS - 1);
+        h.buckets[bucket] += 1;
         if h.samples.len() < RESERVOIR {
             h.samples.push(v);
         } else {
@@ -136,6 +162,26 @@ impl Histogram {
         s[idx]
     }
 
+    pub fn sum(&self) -> f64 {
+        self.inner.lock().unwrap().sum
+    }
+
+    /// Cumulative fixed-bucket counts: `(upper_bound, count_le_bound)`
+    /// pairs ending with `(f64::INFINITY, total_count)` — the Prometheus
+    /// `_bucket{le=...}` series.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let h = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(NBUCKETS);
+        let mut cum = 0u64;
+        for (i, &bound) in BUCKET_BOUNDS.iter().enumerate() {
+            cum += h.buckets[i];
+            out.push((bound, cum));
+        }
+        cum += h.buckets[NBUCKETS - 1];
+        out.push((f64::INFINITY, cum));
+        out
+    }
+
     pub fn snapshot(&self) -> Json {
         let h = self.inner.lock().unwrap();
         let (min, max) = if h.count == 0 {
@@ -144,6 +190,17 @@ impl Histogram {
             (h.min, h.max)
         };
         drop(h);
+        // cumulative buckets ride alongside the reservoir quantiles; the
+        // pre-existing keys stay byte-identical for old consumers
+        let mut buckets = Json::obj();
+        for (bound, cum) in self.cumulative_buckets() {
+            let le = if bound.is_infinite() {
+                "+Inf".to_string()
+            } else {
+                format!("{bound}")
+            };
+            buckets = buckets.set(&le, cum);
+        }
         Json::obj()
             .set("count", self.count())
             .set("mean", self.mean())
@@ -152,7 +209,28 @@ impl Histogram {
             .set("p50", self.quantile(0.5))
             .set("p95", self.quantile(0.95))
             .set("p99", self.quantile(0.99))
+            .set("buckets", buckets)
     }
+}
+
+/// Canonical storage key for a labeled metric: `name{k="v",...}` with
+/// label keys sorted, so the same label set always maps to one series.
+pub fn labeled_key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut ls: Vec<(&str, &str)> = labels.to_vec();
+    ls.sort();
+    let body: Vec<String> = ls
+        .iter()
+        .map(|(k, v)| {
+            format!(
+                "{k}=\"{}\"",
+                v.replace('\\', "\\\\").replace('"', "\\\"")
+            )
+        })
+        .collect();
+    format!("{name}{{{}}}", body.join(","))
 }
 
 /// Named metrics registry shared across the process.
@@ -211,6 +289,38 @@ impl Registry {
         self.histogram(name).observe(ms);
     }
 
+    // ------------------------------------------------ labeled variants
+    //
+    // Labeled series share the name maps with plain ones under canonical
+    // `name{k="v",...}` keys, so snapshots and exposition need no second
+    // bookkeeping path.  Label cardinality is the caller's problem: keep
+    // label values bounded (phase names, retry kinds, cohort members).
+
+    pub fn counter_labeled(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        self.counter(&labeled_key(name, labels))
+    }
+
+    pub fn gauge_labeled(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        self.gauge(&labeled_key(name, labels))
+    }
+
+    pub fn histogram_labeled(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        self.histogram(&labeled_key(name, labels))
+    }
+
+    /// Snapshot of every histogram whose base name starts with `prefix`
+    /// (labeled keys included) — `GET /rounds/recovery` phase timings.
+    pub fn histograms_with_prefix(&self, prefix: &str) -> Vec<(String, Arc<Histogram>)> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect()
+    }
+
     /// JSON snapshot of everything (served at `/metrics`).
     pub fn snapshot(&self) -> Json {
         let mut counters = Json::obj();
@@ -230,6 +340,76 @@ impl Registry {
             .set("gauges", gauges)
             .set("histograms", hists)
     }
+
+    /// Prometheus text exposition (format 0.0.4) of everything — served
+    /// at `GET /metrics` under `Accept: text/plain`.  Dotted names become
+    /// underscore names; labeled series keep their labels; histograms
+    /// expose the cumulative fixed buckets as `_bucket{le=...}` plus
+    /// `_sum`/`_count`.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut typed: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        for (key, c) in self.inner.counters.lock().unwrap().iter() {
+            let (name, labels) = prom_split(key);
+            if typed.insert(name.clone()) {
+                out.push_str(&format!("# TYPE {name} counter\n"));
+            }
+            out.push_str(&format!("{name}{labels} {}\n", c.get()));
+        }
+        for (key, g) in self.inner.gauges.lock().unwrap().iter() {
+            let (name, labels) = prom_split(key);
+            if typed.insert(name.clone()) {
+                out.push_str(&format!("# TYPE {name} gauge\n"));
+            }
+            out.push_str(&format!("{name}{labels} {}\n", g.get()));
+        }
+        for (key, h) in self.inner.histograms.lock().unwrap().iter() {
+            let (name, labels) = prom_split(key);
+            if typed.insert(name.clone()) {
+                out.push_str(&format!("# TYPE {name} histogram\n"));
+            }
+            let label_body = labels
+                .strip_prefix('{')
+                .and_then(|s| s.strip_suffix('}'))
+                .unwrap_or("");
+            for (bound, cum) in h.cumulative_buckets() {
+                let le = if bound.is_infinite() {
+                    "+Inf".to_string()
+                } else {
+                    format!("{bound}")
+                };
+                let merged = if label_body.is_empty() {
+                    format!("le=\"{le}\"")
+                } else {
+                    format!("{label_body},le=\"{le}\"")
+                };
+                out.push_str(&format!("{name}_bucket{{{merged}}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_sum{labels} {}\n", h.sum()));
+            out.push_str(&format!("{name}_count{labels} {}\n", h.count()));
+        }
+        out
+    }
+}
+
+/// Split a canonical storage key into a Prometheus-sanitized base name
+/// and its verbatim `{...}` label block (empty when unlabeled).
+fn prom_split(key: &str) -> (String, String) {
+    let (base, labels) = match key.find('{') {
+        Some(i) => (&key[..i], key[i..].to_string()),
+        None => (key, String::new()),
+    };
+    let name: String = base
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    (name, labels)
 }
 
 #[cfg(test)]
@@ -347,5 +527,95 @@ mod tests {
         let r2 = r.clone();
         r.counter("x").inc();
         assert_eq!(r2.counter("x").get(), 1);
+    }
+
+    #[test]
+    fn labeled_keys_are_canonical() {
+        assert_eq!(labeled_key("m", &[]), "m");
+        assert_eq!(
+            labeled_key("m", &[("b", "2"), ("a", "1")]),
+            "m{a=\"1\",b=\"2\"}"
+        );
+        // label order does not split the series
+        let r = Registry::new();
+        r.counter_labeled("dart.wire.retries", &[("kind", "results")]).inc();
+        r.counter_labeled("dart.wire.retries", &[("kind", "results")]).add(2);
+        assert_eq!(
+            r.counter("dart.wire.retries{kind=\"results\"}").get(),
+            3
+        );
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let h = Histogram::default();
+        h.observe(0.5); // le=1
+        h.observe(3.0); // le=4
+        h.observe(3.5); // le=4
+        h.observe(2_000_000.0); // +Inf overflow
+        let b = h.cumulative_buckets();
+        assert_eq!(b[0], (1.0, 1));
+        assert_eq!(b[1], (2.0, 1));
+        assert_eq!(b[2], (4.0, 3));
+        let (inf, total) = *b.last().unwrap();
+        assert!(inf.is_infinite());
+        assert_eq!(total, 4);
+        // snapshot carries them without disturbing the legacy keys
+        let s = h.snapshot();
+        assert_eq!(s.get("count").unwrap().as_i64(), Some(4));
+        assert_eq!(
+            s.get("buckets").unwrap().get("4").unwrap().as_i64(),
+            Some(3)
+        );
+        assert_eq!(
+            s.get("buckets").unwrap().get("+Inf").unwrap().as_i64(),
+            Some(4)
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.counter("dart.wire.retries").add(5);
+        r.counter_labeled("dart.wire.retries", &[("kind", "results")]).add(2);
+        r.gauge("clients.connected").set(3);
+        r.histogram_labeled("fact.round.phase_ms", &[("phase", "keys"), ("cluster", "0")])
+            .observe(3.0);
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE dart_wire_retries counter\n"), "{text}");
+        assert!(text.contains("dart_wire_retries 5\n"), "{text}");
+        assert!(
+            text.contains("dart_wire_retries{kind=\"results\"} 2\n"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE clients_connected gauge\n"), "{text}");
+        assert!(text.contains("# TYPE fact_round_phase_ms histogram\n"), "{text}");
+        assert!(
+            text.contains(
+                "fact_round_phase_ms_bucket{cluster=\"0\",phase=\"keys\",le=\"4\"} 1\n"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains("fact_round_phase_ms_bucket{cluster=\"0\",phase=\"keys\",le=\"+Inf\"} 1\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("fact_round_phase_ms_count{cluster=\"0\",phase=\"keys\"} 1\n"),
+            "{text}"
+        );
+        // every TYPE line precedes its samples exactly once
+        assert_eq!(text.matches("# TYPE dart_wire_retries counter").count(), 1);
+    }
+
+    #[test]
+    fn histograms_with_prefix_finds_labeled_series() {
+        let r = Registry::new();
+        r.histogram_labeled("fact.round.phase_ms", &[("phase", "keys"), ("cluster", "0")])
+            .observe(1.0);
+        r.histogram("other").observe(1.0);
+        let found = r.histograms_with_prefix("fact.round.phase_ms");
+        assert_eq!(found.len(), 1);
+        assert!(found[0].0.contains("phase=\"keys\""));
     }
 }

@@ -1,0 +1,1223 @@
+//! End-to-end round tracing: spans, a flight recorder, wire propagation,
+//! and `trace.jsonl` persistence.
+//!
+//! The FACT coordinator opens one **root span per round** (128-bit trace
+//! id, 64-bit span ids) whose children cover every pipeline phase —
+//! `draw_cohort`, `keys`, `shares`, `learn_dispatch`, `quorum_wait`,
+//! `reveal`, `unmask_aggregate`, `apply`, `charge` — plus one child span
+//! per cohort client on the DART seam.  Trace context crosses the wire as
+//! a `trace` field on task params (and an `x-feddart-trace` HTTP header);
+//! the client execution choke point ([`crate::dart::TaskRegistry::call_as`])
+//! echoes a finished client-side span back as `_span` on the result, so
+//! client learn/reveal durations land in the *same* trace the coordinator
+//! assembled.
+//!
+//! Finished spans and structured events (retries, repairs, deadline
+//! decisions, log lines) go to a [`Recorder`] — a bounded lock-sharded
+//! ring buffer ("flight recorder") queryable via `GET /trace/{round_id}`
+//! and `GET /trace/recent`, dumped to `trace.jsonl` next to the
+//! round-store WAL on round close so post-mortems survive a coordinator
+//! crash ([`Recorder::load_jsonl`] replays the file on `recover()`).
+//!
+//! Everything is built for a near-zero disabled path: a disabled recorder
+//! hands out no-op [`Span`]s (a `None` inner — no allocation, no clock
+//! read), and the enabled check is one relaxed atomic load.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::OpenOptions;
+use std::io::{BufRead, BufReader, Write as IoWrite};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::util::now_ms;
+use crate::util::rng::{entropy_seed, fnv1a, splitmix64};
+
+/// Span names of the per-round pipeline phases, in pipeline order.
+/// `GET /rounds/recovery` and the docs iterate this taxonomy.
+pub mod phase {
+    pub const ROUND: &str = "round";
+    pub const DRAW_COHORT: &str = "draw_cohort";
+    pub const KEYS: &str = "keys";
+    pub const SHARES: &str = "shares";
+    pub const LEARN_DISPATCH: &str = "learn_dispatch";
+    pub const QUORUM_WAIT: &str = "quorum_wait";
+    pub const REVEAL: &str = "reveal";
+    pub const UNMASK_AGGREGATE: &str = "unmask_aggregate";
+    pub const APPLY: &str = "apply";
+    pub const CHARGE: &str = "charge";
+    /// Coordinator-side per-client learn span (attr `client`).
+    pub const CLIENT_LEARN: &str = "client_learn";
+
+    /// Every phase expected under a finished secagg round's root span.
+    pub const ALL: &[&str] = &[
+        DRAW_COHORT,
+        KEYS,
+        SHARES,
+        LEARN_DISPATCH,
+        QUORUM_WAIT,
+        REVEAL,
+        UNMASK_AGGREGATE,
+        APPLY,
+        CHARGE,
+    ];
+}
+
+/// Key under which trace context rides on task params.
+pub const WIRE_KEY: &str = "trace";
+/// Key under which a client echoes its finished span on a result.
+pub const ECHO_KEY: &str = "_span";
+/// HTTP header carrying `trace_id:span_id:round_id` (hex).
+pub const HTTP_HEADER: &str = "x-feddart-trace";
+
+// ------------------------------------------------------------------ ids
+
+fn hex_u128(v: u128) -> String {
+    format!("{v:032x}")
+}
+
+fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex_u128(s: &str) -> Option<u128> {
+    u128::from_str_radix(s, 16).ok()
+}
+
+fn parse_hex_u64(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Process-wide span-id sequence mixed with entropy so ids stay unique
+/// across restarts (trace files from different process lives merge).
+static SPAN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_span_id() -> u64 {
+    let seq = SPAN_SEQ.fetch_add(1, Ordering::Relaxed);
+    let id = splitmix64(entropy_seed() ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+fn fresh_trace_id() -> u128 {
+    ((fresh_span_id() as u128) << 64) | fresh_span_id() as u128
+}
+
+// ------------------------------------------------------------ contexts
+
+/// The propagatable identity of a live span: which trace it belongs to,
+/// its own id, and the round it is tracing (0 = none).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct SpanContext {
+    pub trace_id: u128,
+    pub span_id: u64,
+    pub round_id: u64,
+}
+
+impl SpanContext {
+    /// Wire form: `{"trace_id": hex32, "span_id": hex16, "round_id": hex16}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("trace_id", hex_u128(self.trace_id))
+            .set("span_id", hex_u64(self.span_id))
+            .set("round_id", hex_u64(self.round_id))
+    }
+
+    pub fn from_json(j: &Json) -> Option<SpanContext> {
+        Some(SpanContext {
+            trace_id: parse_hex_u128(j.get("trace_id")?.as_str()?)?,
+            span_id: parse_hex_u64(j.get("span_id")?.as_str()?)?,
+            round_id: parse_hex_u64(j.get("round_id")?.as_str()?)?,
+        })
+    }
+
+    /// `trace_id:span_id:round_id` for the `x-feddart-trace` header.
+    pub fn header_value(&self) -> String {
+        format!(
+            "{}:{}:{}",
+            hex_u128(self.trace_id),
+            hex_u64(self.span_id),
+            hex_u64(self.round_id)
+        )
+    }
+
+    pub fn from_header(s: &str) -> Option<SpanContext> {
+        let mut it = s.trim().split(':');
+        let ctx = SpanContext {
+            trace_id: parse_hex_u128(it.next()?)?,
+            span_id: parse_hex_u64(it.next()?)?,
+            round_id: parse_hex_u64(it.next()?)?,
+        };
+        if it.next().is_some() {
+            return None;
+        }
+        Some(ctx)
+    }
+}
+
+// ------------------------------------------------------- finished data
+
+/// A completed span as stored in the flight recorder / `trace.jsonl`.
+#[derive(Clone, Debug)]
+pub struct FinishedSpan {
+    pub trace_id: u128,
+    pub span_id: u64,
+    /// 0 = root.
+    pub parent_id: u64,
+    pub name: String,
+    /// 0 = not associated with a round.
+    pub round_id: u64,
+    pub start_ms: u64,
+    pub dur_us: u64,
+    pub attrs: Vec<(String, String)>,
+}
+
+impl FinishedSpan {
+    pub fn to_json(&self) -> Json {
+        let mut attrs = Json::obj();
+        for (k, v) in &self.attrs {
+            attrs = attrs.set(k, v.as_str());
+        }
+        Json::obj()
+            .set("type", "span")
+            .set("trace_id", hex_u128(self.trace_id))
+            .set("span_id", hex_u64(self.span_id))
+            .set("parent_id", hex_u64(self.parent_id))
+            .set("name", self.name.as_str())
+            .set("round_id", hex_u64(self.round_id))
+            .set("start_ms", self.start_ms)
+            .set("dur_us", self.dur_us)
+            .set("attrs", attrs)
+    }
+
+    pub fn from_json(j: &Json) -> Option<FinishedSpan> {
+        let mut attrs = Vec::new();
+        if let Some(obj) = j.get("attrs").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                if let Some(s) = v.as_str() {
+                    attrs.push((k.clone(), s.to_string()));
+                }
+            }
+        }
+        Some(FinishedSpan {
+            trace_id: parse_hex_u128(j.get("trace_id")?.as_str()?)?,
+            span_id: parse_hex_u64(j.get("span_id")?.as_str()?)?,
+            parent_id: parse_hex_u64(j.get("parent_id")?.as_str()?)?,
+            name: j.get("name")?.as_str()?.to_string(),
+            round_id: parse_hex_u64(j.get("round_id")?.as_str()?)?,
+            start_ms: j.get("start_ms")?.as_f64()? as u64,
+            dur_us: j.get("dur_us")?.as_f64()? as u64,
+            attrs,
+        })
+    }
+
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A structured event attached to a span (retry, repair, deadline
+/// decision, log line, ...).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub trace_id: u128,
+    /// Span the event is attached to (0 = trace-level).
+    pub span_id: u64,
+    pub round_id: u64,
+    pub ts_ms: u64,
+    pub kind: String,
+    pub attrs: Vec<(String, String)>,
+}
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        let mut attrs = Json::obj();
+        for (k, v) in &self.attrs {
+            attrs = attrs.set(k, v.as_str());
+        }
+        Json::obj()
+            .set("type", "event")
+            .set("trace_id", hex_u128(self.trace_id))
+            .set("span_id", hex_u64(self.span_id))
+            .set("round_id", hex_u64(self.round_id))
+            .set("ts_ms", self.ts_ms)
+            .set("kind", self.kind.as_str())
+            .set("attrs", attrs)
+    }
+
+    pub fn from_json(j: &Json) -> Option<TraceEvent> {
+        let mut attrs = Vec::new();
+        if let Some(obj) = j.get("attrs").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                if let Some(s) = v.as_str() {
+                    attrs.push((k.clone(), s.to_string()));
+                }
+            }
+        }
+        Some(TraceEvent {
+            trace_id: parse_hex_u128(j.get("trace_id")?.as_str()?)?,
+            span_id: parse_hex_u64(j.get("span_id")?.as_str()?)?,
+            round_id: parse_hex_u64(j.get("round_id")?.as_str()?)?,
+            ts_ms: j.get("ts_ms")?.as_f64()? as u64,
+            kind: j.get("kind")?.as_str()?.to_string(),
+            attrs,
+        })
+    }
+}
+
+// ------------------------------------------------------------ recorder
+
+const DEFAULT_SHARDS: usize = 8;
+const DEFAULT_SPANS_PER_SHARD: usize = 2048;
+const DEFAULT_EVENTS_PER_SHARD: usize = 1024;
+
+#[derive(Default)]
+struct Shard {
+    spans: VecDeque<FinishedSpan>,
+    events: VecDeque<TraceEvent>,
+}
+
+/// The flight recorder: a bounded, lock-sharded ring of finished spans
+/// and events.  Sharded by span id so concurrent cluster threads never
+/// contend on one mutex; eviction is per-shard FIFO.
+pub struct Recorder {
+    shards: Vec<Mutex<Shard>>,
+    enabled: AtomicBool,
+    span_cap: usize,
+    event_cap: usize,
+    dropped: AtomicU64,
+}
+
+impl Recorder {
+    pub fn new(shards: usize, span_cap_per_shard: usize, event_cap_per_shard: usize) -> Recorder {
+        let n = shards.max(1);
+        Recorder {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            enabled: AtomicBool::new(true),
+            span_cap: span_cap_per_shard.max(1),
+            event_cap: event_cap_per_shard.max(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Recorder with production-default capacity (~16k spans, ~8k events).
+    pub fn with_defaults() -> Recorder {
+        Recorder::new(
+            DEFAULT_SHARDS,
+            DEFAULT_SPANS_PER_SHARD,
+            DEFAULT_EVENTS_PER_SHARD,
+        )
+    }
+
+    /// A recorder that starts disabled (hands out no-op spans).
+    pub fn disabled() -> Recorder {
+        let r = Recorder::with_defaults();
+        r.set_enabled(false);
+        r
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    fn shard_for(&self, span_id: u64) -> &Mutex<Shard> {
+        &self.shards[(splitmix64(span_id) as usize) % self.shards.len()]
+    }
+
+    fn push_span(&self, s: FinishedSpan) {
+        let mut shard = self.shard_for(s.span_id).lock().unwrap();
+        if shard.spans.len() >= self.span_cap {
+            shard.spans.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        shard.spans.push_back(s);
+    }
+
+    /// Record a freshly finished span (no-op while disabled).
+    pub fn record_span(&self, s: FinishedSpan) {
+        if self.is_enabled() {
+            self.push_span(s);
+        }
+    }
+
+    /// Record an event (no-op while disabled).
+    pub fn record_event(&self, e: TraceEvent) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut shard = self.shard_for(e.span_id).lock().unwrap();
+        if shard.events.len() >= self.event_cap {
+            shard.events.pop_front();
+        }
+        shard.events.push_back(e);
+    }
+
+    /// Whether a span with this id is already recorded (its shard only —
+    /// span placement is deterministic in the id).
+    pub fn contains_span(&self, span_id: u64) -> bool {
+        self.shard_for(span_id)
+            .lock()
+            .unwrap()
+            .spans
+            .iter()
+            .any(|s| s.span_id == span_id)
+    }
+
+    /// Record a span that arrived from elsewhere (a wire echo or a
+    /// `trace.jsonl` replay), deduplicating by span id.  Works even while
+    /// live recording is disabled so post-mortems can always be loaded.
+    pub fn absorb_span(&self, s: FinishedSpan) -> bool {
+        if self.contains_span(s.span_id) {
+            return false;
+        }
+        self.push_span(s);
+        true
+    }
+
+    /// Events cannot be deduplicated by id; replay dedups by identity.
+    fn absorb_event(&self, e: TraceEvent) -> bool {
+        {
+            let shard = self.shard_for(e.span_id).lock().unwrap();
+            if shard.events.iter().any(|x| {
+                x.trace_id == e.trace_id
+                    && x.span_id == e.span_id
+                    && x.ts_ms == e.ts_ms
+                    && x.kind == e.kind
+            }) {
+                return false;
+            }
+        }
+        let mut shard = self.shard_for(e.span_id).lock().unwrap();
+        if shard.events.len() >= self.event_cap {
+            shard.events.pop_front();
+        }
+        shard.events.push_back(e);
+        true
+    }
+
+    /// Spans evicted by ring pressure since construction.
+    pub fn dropped_spans(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// All recorded spans (snapshot; unordered across shards).
+    pub fn spans(&self) -> Vec<FinishedSpan> {
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            out.extend(sh.lock().unwrap().spans.iter().cloned());
+        }
+        out
+    }
+
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            out.extend(sh.lock().unwrap().events.iter().cloned());
+        }
+        out
+    }
+
+    /// Approximate resident bytes of the recorded data (for the bench).
+    pub fn approx_bytes(&self) -> usize {
+        let mut total = 0usize;
+        for sh in &self.shards {
+            let sh = sh.lock().unwrap();
+            for s in &sh.spans {
+                total += std::mem::size_of::<FinishedSpan>()
+                    + s.name.len()
+                    + s.attrs
+                        .iter()
+                        .map(|(k, v)| k.len() + v.len() + 2 * std::mem::size_of::<String>())
+                        .sum::<usize>();
+            }
+            for e in &sh.events {
+                total += std::mem::size_of::<TraceEvent>()
+                    + e.kind.len()
+                    + e.attrs
+                        .iter()
+                        .map(|(k, v)| k.len() + v.len() + 2 * std::mem::size_of::<String>())
+                        .sum::<usize>();
+            }
+        }
+        total
+    }
+
+    // ------------------------------------------------------- queries
+
+    /// The root span context of `round_id`'s trace, if recorded.
+    pub fn root_of_round(&self, round_id: u64) -> Option<SpanContext> {
+        let mut fallback: Option<SpanContext> = None;
+        for sh in &self.shards {
+            for s in sh.lock().unwrap().spans.iter() {
+                if s.round_id != round_id {
+                    continue;
+                }
+                let ctx = SpanContext {
+                    trace_id: s.trace_id,
+                    span_id: s.span_id,
+                    round_id,
+                };
+                if s.parent_id == 0 {
+                    return Some(ctx);
+                }
+                fallback = Some(ctx);
+            }
+        }
+        fallback
+    }
+
+    /// Every span and event of the trace that covers `round_id`.
+    pub fn round_trace(&self, round_id: u64) -> Option<(Vec<FinishedSpan>, Vec<TraceEvent>)> {
+        let trace_id = self.root_of_round(round_id)?.trace_id;
+        let mut spans = Vec::new();
+        let mut events = Vec::new();
+        for sh in &self.shards {
+            let sh = sh.lock().unwrap();
+            spans.extend(sh.spans.iter().filter(|s| s.trace_id == trace_id).cloned());
+            events.extend(sh.events.iter().filter(|e| e.trace_id == trace_id).cloned());
+        }
+        spans.sort_by_key(|s| (s.start_ms, s.span_id));
+        events.sort_by_key(|e| (e.ts_ms, e.span_id));
+        Some((spans, events))
+    }
+
+    /// The assembled span tree for `round_id` as served by
+    /// `GET /trace/{round_id}`:
+    /// `{round_id, trace_id, span_count, event_count, spans: [tree...]}`
+    /// where each tree node is the span JSON plus `children` and `events`.
+    pub fn trace_json(&self, round_id: u64) -> Option<Json> {
+        let (spans, events) = self.round_trace(round_id)?;
+        let trace_id = spans.first().map(|s| s.trace_id)?;
+        let tree = assemble_tree(&spans, &events);
+        Some(
+            Json::obj()
+                .set("round_id", hex_u64(round_id))
+                .set("trace_id", hex_u128(trace_id))
+                .set("span_count", spans.len())
+                .set("event_count", events.len())
+                .set("spans", tree),
+        )
+    }
+
+    /// The most recent `n` root spans, newest first, as served by
+    /// `GET /trace/recent`.
+    pub fn recent_json(&self, n: usize) -> Json {
+        let mut roots: Vec<FinishedSpan> =
+            self.spans().into_iter().filter(|s| s.parent_id == 0).collect();
+        roots.sort_by(|a, b| b.start_ms.cmp(&a.start_ms));
+        roots.truncate(n);
+        let items: Vec<Json> = roots
+            .iter()
+            .map(|s| {
+                Json::obj()
+                    .set("round_id", hex_u64(s.round_id))
+                    .set("trace_id", hex_u128(s.trace_id))
+                    .set("name", s.name.as_str())
+                    .set("start_ms", s.start_ms)
+                    .set("dur_us", s.dur_us)
+            })
+            .collect();
+        Json::obj()
+            .set("traces", Json::Arr(items))
+            .set("dropped_spans", self.dropped_spans())
+    }
+
+    // --------------------------------------------------- persistence
+
+    /// Append every span and event of `round_id`'s trace to a JSONL file
+    /// (one object per line).  Returns the number of lines written.
+    pub fn dump_round(&self, round_id: u64, path: &Path) -> Result<usize> {
+        let Some((spans, events)) = self.round_trace(round_id) else {
+            return Ok(0);
+        };
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(FedError::Io)?;
+        let mut lines = 0usize;
+        let mut buf = String::new();
+        for s in &spans {
+            buf.push_str(&s.to_json().to_string());
+            buf.push('\n');
+            lines += 1;
+        }
+        for e in &events {
+            buf.push_str(&e.to_json().to_string());
+            buf.push('\n');
+            lines += 1;
+        }
+        f.write_all(buf.as_bytes()).map_err(FedError::Io)?;
+        Ok(lines)
+    }
+
+    /// Replay a `trace.jsonl` file into the recorder (span-id dedup, so
+    /// repeated loads and re-dumped rounds are harmless).  Unparseable
+    /// lines are skipped — a torn tail write must not poison recovery.
+    /// Returns the number of records absorbed.
+    pub fn load_jsonl(&self, path: &Path) -> Result<usize> {
+        let f = match std::fs::File::open(path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(FedError::Io(e)),
+        };
+        let mut absorbed = 0usize;
+        for line in BufReader::new(f).lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Ok(j) = Json::parse(&line) else { continue };
+            match j.get("type").and_then(Json::as_str) {
+                Some("span") => {
+                    if let Some(s) = FinishedSpan::from_json(&j) {
+                        if self.absorb_span(s) {
+                            absorbed += 1;
+                        }
+                    }
+                }
+                Some("event") => {
+                    if let Some(e) = TraceEvent::from_json(&j) {
+                        if self.absorb_event(e) {
+                            absorbed += 1;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(absorbed)
+    }
+}
+
+fn assemble_tree(spans: &[FinishedSpan], events: &[TraceEvent]) -> Json {
+    // node json per span, children attached by parent_id; spans whose
+    // parent is missing from the window surface as roots
+    let ids: std::collections::BTreeSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    let mut children: BTreeMap<u64, Vec<&FinishedSpan>> = BTreeMap::new();
+    let mut roots: Vec<&FinishedSpan> = Vec::new();
+    for s in spans {
+        if s.parent_id != 0 && ids.contains(&s.parent_id) {
+            children.entry(s.parent_id).or_default().push(s);
+        } else {
+            roots.push(s);
+        }
+    }
+    fn node(
+        s: &FinishedSpan,
+        children: &BTreeMap<u64, Vec<&FinishedSpan>>,
+        events: &[TraceEvent],
+    ) -> Json {
+        let mut j = s.to_json();
+        let evs: Vec<Json> = events
+            .iter()
+            .filter(|e| e.span_id == s.span_id)
+            .map(TraceEvent::to_json)
+            .collect();
+        if !evs.is_empty() {
+            j = j.set("events", Json::Arr(evs));
+        }
+        let kids: Vec<Json> = children
+            .get(&s.span_id)
+            .map(|v| v.iter().map(|c| node(c, children, events)).collect())
+            .unwrap_or_default();
+        if !kids.is_empty() {
+            j = j.set("children", Json::Arr(kids));
+        }
+        j
+    }
+    Json::Arr(roots.iter().map(|s| node(s, &children, events)).collect())
+}
+
+/// Pretty-print an assembled trace (the `trace_json` shape) as an
+/// indented span tree with durations — `feddart rounds --trace`.
+pub fn render_tree(trace: &Json) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace {}  round {}  ({} spans, {} events)\n",
+        trace.get("trace_id").and_then(Json::as_str).unwrap_or("?"),
+        trace.get("round_id").and_then(Json::as_str).unwrap_or("?"),
+        trace
+            .get("span_count")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0),
+        trace
+            .get("event_count")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0),
+    ));
+    fn walk(j: &Json, depth: usize, out: &mut String) {
+        let name = j.get("name").and_then(Json::as_str).unwrap_or("?");
+        let dur_us = j.get("dur_us").and_then(Json::as_f64).unwrap_or(0.0);
+        let mut label = name.to_string();
+        if let Some(attrs) = j.get("attrs").and_then(Json::as_obj) {
+            if let Some(Json::Str(c)) = attrs.get("client") {
+                label.push_str(&format!(" [{c}]"));
+            }
+        }
+        let indent = "  ".repeat(depth);
+        out.push_str(&format!(
+            "{indent}{label:<width$} {dur:>10.3} ms\n",
+            width = 32usize.saturating_sub(indent.len()).max(8),
+            dur = dur_us / 1000.0
+        ));
+        if let Some(Json::Arr(evs)) = j.get("events") {
+            for e in evs {
+                let kind = e.get("kind").and_then(Json::as_str).unwrap_or("?");
+                let mut detail = String::new();
+                if let Some(attrs) = e.get("attrs").and_then(Json::as_obj) {
+                    for (k, v) in attrs {
+                        if let Json::Str(s) = v {
+                            detail.push_str(&format!(" {k}={s}"));
+                        }
+                    }
+                }
+                out.push_str(&format!("{indent}  · {kind}{detail}\n"));
+            }
+        }
+        if let Some(Json::Arr(kids)) = j.get("children") {
+            for k in kids {
+                walk(k, depth + 1, out);
+            }
+        }
+    }
+    if let Some(Json::Arr(roots)) = trace.get("spans") {
+        for r in roots {
+            walk(r, 0, &mut out);
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------------- global
+
+static GLOBAL: OnceLock<Arc<Recorder>> = OnceLock::new();
+
+/// The process-wide flight recorder (enabled by default; bound lazily).
+pub fn global() -> &'static Arc<Recorder> {
+    GLOBAL.get_or_init(|| Arc::new(Recorder::with_defaults()))
+}
+
+/// Enable/disable live recording process-wide.
+pub fn set_enabled(on: bool) {
+    global().set_enabled(on);
+}
+
+// ---------------------------------------------------------------- spans
+
+struct SpanInner {
+    rec: Arc<Recorder>,
+    ctx: SpanContext,
+    parent_id: u64,
+    name: String,
+    start_ms: u64,
+    started: Instant,
+    attrs: Vec<(String, String)>,
+}
+
+/// A live span.  `inner == None` is the no-op form: every method is a
+/// cheap early-return, so disabled tracing costs one branch.  The span
+/// records itself into its recorder when dropped (or via
+/// [`Span::finish`]).
+pub struct Span {
+    inner: Option<Box<SpanInner>>,
+}
+
+impl Span {
+    pub fn noop() -> Span {
+        Span { inner: None }
+    }
+
+    fn live(rec: Arc<Recorder>, ctx: SpanContext, parent_id: u64, name: &str) -> Span {
+        Span {
+            inner: Some(Box::new(SpanInner {
+                rec,
+                ctx,
+                parent_id,
+                name: name.to_string(),
+                start_ms: now_ms(),
+                started: Instant::now(),
+                attrs: Vec::new(),
+            })),
+        }
+    }
+
+    /// Start a root span (fresh trace id) for `round_id` on `rec`.
+    pub fn root(rec: &Arc<Recorder>, name: &str, round_id: u64) -> Span {
+        if !rec.is_enabled() {
+            return Span::noop();
+        }
+        let ctx = SpanContext {
+            trace_id: fresh_trace_id(),
+            span_id: fresh_span_id(),
+            round_id,
+        };
+        Span::live(Arc::clone(rec), ctx, 0, name)
+    }
+
+    /// Start a child of an existing context on `rec`.
+    pub fn child_of(rec: &Arc<Recorder>, parent: SpanContext, name: &str) -> Span {
+        if !rec.is_enabled() {
+            return Span::noop();
+        }
+        let ctx = SpanContext {
+            trace_id: parent.trace_id,
+            span_id: fresh_span_id(),
+            round_id: parent.round_id,
+        };
+        Span::live(Arc::clone(rec), ctx, parent.span_id, name)
+    }
+
+    /// Start a child of this span.
+    pub fn child(&self, name: &str) -> Span {
+        match &self.inner {
+            Some(i) => Span::child_of(&i.rec, i.ctx, name),
+            None => Span::noop(),
+        }
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.inner.is_none()
+    }
+
+    pub fn context(&self) -> Option<SpanContext> {
+        self.inner.as_ref().map(|i| i.ctx)
+    }
+
+    pub fn set_attr(&mut self, key: &str, value: impl std::fmt::Display) {
+        if let Some(i) = self.inner.as_mut() {
+            i.attrs.push((key.to_string(), value.to_string()));
+        }
+    }
+
+    /// Attach an event to this span.
+    pub fn add_event(&self, kind: &str, attrs: &[(&str, &str)]) {
+        if let Some(i) = self.inner.as_ref() {
+            i.rec.record_event(TraceEvent {
+                trace_id: i.ctx.trace_id,
+                span_id: i.ctx.span_id,
+                round_id: i.ctx.round_id,
+                ts_ms: now_ms(),
+                kind: kind.to_string(),
+                attrs: attrs
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), v.to_string()))
+                    .collect(),
+            });
+        }
+    }
+
+    /// Milliseconds since the span started (0.0 for a no-op span).
+    pub fn elapsed_ms(&self) -> f64 {
+        self.inner
+            .as_ref()
+            .map(|i| i.started.elapsed().as_secs_f64() * 1000.0)
+            .unwrap_or(0.0)
+    }
+
+    /// Make this span current on the calling thread for the guard's
+    /// lifetime, so `child_of_current` / `event` nest under it.
+    pub fn enter(&self) -> ContextGuard {
+        match &self.inner {
+            Some(i) => ContextGuard::push(i.ctx, Some(Arc::clone(&i.rec))),
+            None => ContextGuard { active: false },
+        }
+    }
+
+    fn take_finished(&mut self) -> Option<(Arc<Recorder>, FinishedSpan)> {
+        let i = self.inner.take()?;
+        let fin = FinishedSpan {
+            trace_id: i.ctx.trace_id,
+            span_id: i.ctx.span_id,
+            parent_id: i.parent_id,
+            name: i.name,
+            round_id: i.ctx.round_id,
+            start_ms: i.start_ms,
+            dur_us: i.started.elapsed().as_micros() as u64,
+            attrs: i.attrs,
+        };
+        Some((i.rec, fin))
+    }
+
+    /// Finish and record the span now.
+    pub fn finish(mut self) {
+        if let Some((rec, fin)) = self.take_finished() {
+            rec.record_span(fin);
+        }
+    }
+
+    /// Finish the span and return its JSON **without recording it** —
+    /// the wire-echo path: clients serialize the finished span onto the
+    /// result instead of keeping their own recorder.
+    pub fn finish_to_json(mut self) -> Option<Json> {
+        self.take_finished().map(|(_, fin)| fin.to_json())
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((rec, fin)) = self.take_finished() {
+            rec.record_span(fin);
+        }
+    }
+}
+
+// --------------------------------------------------- thread-local stack
+
+thread_local! {
+    static CURRENT: RefCell<Vec<(SpanContext, Option<Arc<Recorder>>)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+/// RAII guard holding a span context on the thread-local current stack.
+pub struct ContextGuard {
+    active: bool,
+}
+
+impl ContextGuard {
+    fn push(ctx: SpanContext, rec: Option<Arc<Recorder>>) -> ContextGuard {
+        CURRENT.with(|c| c.borrow_mut().push((ctx, rec)));
+        ContextGuard { active: true }
+    }
+
+    /// Adopt a remote context (e.g. from an `x-feddart-trace` header) as
+    /// current on this thread, recording into the global recorder.
+    pub fn adopt(ctx: SpanContext) -> ContextGuard {
+        ContextGuard::push(ctx, Some(Arc::clone(global())))
+    }
+}
+
+impl Drop for ContextGuard {
+    fn drop(&mut self) {
+        if self.active {
+            CURRENT.with(|c| {
+                c.borrow_mut().pop();
+            });
+        }
+    }
+}
+
+/// The innermost span context current on this thread.
+pub fn current() -> Option<SpanContext> {
+    CURRENT.with(|c| c.borrow().last().map(|(ctx, _)| *ctx))
+}
+
+fn current_entry() -> Option<(SpanContext, Arc<Recorder>)> {
+    CURRENT.with(|c| {
+        c.borrow()
+            .last()
+            .and_then(|(ctx, rec)| rec.as_ref().map(|r| (*ctx, Arc::clone(r))))
+    })
+}
+
+/// Start a child of the thread's current span (no-op when none is
+/// active or its recorder is disabled).
+pub fn child_of_current(name: &str) -> Span {
+    match current_entry() {
+        Some((ctx, rec)) => Span::child_of(&rec, ctx, name),
+        None => Span::noop(),
+    }
+}
+
+/// Attach an event to the thread's current span (dropped when none).
+pub fn event(kind: &str, attrs: &[(&str, &str)]) {
+    if let Some((ctx, rec)) = current_entry() {
+        rec.record_event(TraceEvent {
+            trace_id: ctx.trace_id,
+            span_id: ctx.span_id,
+            round_id: ctx.round_id,
+            ts_ms: now_ms(),
+            kind: kind.to_string(),
+            attrs: attrs
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+        });
+    }
+}
+
+/// Attach an event to an explicit context on the global recorder — used
+/// by threads with no current span (e.g. the scheduler reaper requeueing
+/// a unit whose params carried the client's trace context).
+pub fn event_at(ctx: SpanContext, kind: &str, attrs: &[(&str, &str)]) {
+    global().record_event(TraceEvent {
+        trace_id: ctx.trace_id,
+        span_id: ctx.span_id,
+        round_id: ctx.round_id,
+        ts_ms: now_ms(),
+        kind: kind.to_string(),
+        attrs: attrs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect(),
+    });
+}
+
+/// A wire retry, attached to the thread's current span.  Shared by the
+/// REST transport's retry loop and test backends so the event shape is
+/// identical everywhere.
+pub fn wire_retry_event(kind: &str, attempt: u32, error: &str) {
+    let attempt = attempt.to_string();
+    event(
+        "wire_retry",
+        &[("kind", kind), ("attempt", &attempt), ("error", error)],
+    );
+}
+
+/// A log line, attached to the thread's current span (the vendored `log`
+/// facade routes here so log lines land inside the active trace).
+pub fn log_event(level: &str, target: &str, message: &str) {
+    event(
+        "log",
+        &[("level", level), ("target", target), ("message", message)],
+    );
+}
+
+// ------------------------------------------------------ wire propagation
+
+/// Embed `ctx` as the `trace` field on task params (object params only).
+pub fn inject(params: Json, ctx: Option<SpanContext>) -> Json {
+    match ctx {
+        Some(c) => match params {
+            Json::Obj(_) => params.set(WIRE_KEY, c.to_json()),
+            other => other,
+        },
+        None => params,
+    }
+}
+
+/// Read the `trace` field off task params.
+pub fn extract(params: &Json) -> Option<SpanContext> {
+    SpanContext::from_json(params.get(WIRE_KEY)?)
+}
+
+/// Client half of the wire echo: a timed span started from the trace
+/// context on task params.  No recorder needed — [`WireSpan::attach`]
+/// serializes the finished span onto the result as `_span`.
+pub struct WireSpan {
+    ctx: SpanContext,
+    name: String,
+    start_ms: u64,
+    started: Instant,
+}
+
+/// Start a client-side wire span if `params` carry trace context.
+pub fn start_wire_span(params: &Json, name: &str) -> Option<WireSpan> {
+    let ctx = extract(params)?;
+    Some(WireSpan {
+        ctx,
+        name: name.to_string(),
+        start_ms: now_ms(),
+        started: Instant::now(),
+    })
+}
+
+impl WireSpan {
+    /// Finish the span and attach it as `_span` to an (object) result.
+    pub fn attach(self, result: Json, device: &str) -> Json {
+        if !matches!(result, Json::Obj(_)) {
+            return result;
+        }
+        let fin = FinishedSpan {
+            trace_id: self.ctx.trace_id,
+            span_id: splitmix64(fresh_span_id() ^ fnv1a(device)),
+            parent_id: self.ctx.span_id,
+            name: self.name,
+            round_id: self.ctx.round_id,
+            start_ms: self.start_ms,
+            dur_us: self.started.elapsed().as_micros() as u64,
+            attrs: vec![("client".to_string(), device.to_string())],
+        };
+        result.set(ECHO_KEY, fin.to_json())
+    }
+}
+
+/// Coordinator half of the wire echo: absorb a `_span` echoed on a task
+/// result into `rec`, stamping `round_id` when the echo lacks one.
+/// Returns true when a span was absorbed.
+pub fn absorb_echo(rec: &Arc<Recorder>, result: &Json, round_id: u64) -> bool {
+    let Some(j) = result.get(ECHO_KEY) else {
+        return false;
+    };
+    let Some(mut fin) = FinishedSpan::from_json(j) else {
+        return false;
+    };
+    if fin.round_id == 0 {
+        fin.round_id = round_id;
+    }
+    rec.absorb_span(fin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> Arc<Recorder> {
+        Arc::new(Recorder::new(4, 64, 64))
+    }
+
+    #[test]
+    fn root_child_tree_assembles() {
+        let r = rec();
+        let root = Span::root(&r, phase::ROUND, 42);
+        let root_ctx = root.context().unwrap();
+        {
+            let _g = root.enter();
+            let child = child_of_current(phase::DRAW_COHORT);
+            assert_eq!(child.context().unwrap().trace_id, root_ctx.trace_id);
+            assert_eq!(child.context().unwrap().round_id, 42);
+            child.finish();
+        }
+        root.finish();
+        let j = r.trace_json(42).expect("trace recorded");
+        assert_eq!(j.get("round_id").unwrap().as_str(), Some("000000000000002a"));
+        let roots = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(roots.len(), 1);
+        let kids = roots[0].get("children").unwrap().as_arr().unwrap();
+        assert_eq!(kids.len(), 1);
+        assert_eq!(kids[0].get("name").unwrap().as_str(), Some("draw_cohort"));
+        // rendering mentions both spans
+        let txt = render_tree(&j);
+        assert!(txt.contains("round"), "{txt}");
+        assert!(txt.contains("draw_cohort"), "{txt}");
+    }
+
+    #[test]
+    fn disabled_recorder_hands_out_noops() {
+        let r = rec();
+        r.set_enabled(false);
+        let s = Span::root(&r, "x", 1);
+        assert!(s.is_noop());
+        s.finish();
+        assert!(r.spans().is_empty());
+        assert!(r.trace_json(1).is_none());
+    }
+
+    #[test]
+    fn events_attach_to_current_span() {
+        let r = rec();
+        let root = Span::root(&r, phase::ROUND, 7);
+        {
+            let _g = root.enter();
+            wire_retry_event("results", 1, "timeout");
+        }
+        root.finish();
+        let (_, events) = r.round_trace(7).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, "wire_retry");
+        assert!(events[0].attrs.iter().any(|(k, v)| k == "kind" && v == "results"));
+    }
+
+    #[test]
+    fn wire_roundtrip_inject_echo_absorb() {
+        let r = rec();
+        let root = Span::root(&r, phase::ROUND, 9);
+        let mut client_span = root.child(phase::CLIENT_LEARN);
+        client_span.set_attr("client", "c-0");
+        let params = inject(Json::obj().set("x", 1.0), client_span.context());
+        // client side
+        let ws = start_wire_span(&params, "fact_learn").expect("trace on params");
+        let result = ws.attach(Json::obj().set("ok", true), "c-0");
+        assert!(result.get(ECHO_KEY).is_some());
+        // coordinator side
+        assert!(absorb_echo(&r, &result, 9));
+        assert!(!absorb_echo(&r, &result, 9), "dedup by span id");
+        client_span.finish();
+        root.finish();
+        let (spans, _) = r.round_trace(9).unwrap();
+        assert_eq!(spans.len(), 3);
+        let echoed = spans.iter().find(|s| s.name == "fact_learn").unwrap();
+        assert_eq!(echoed.attr("client"), Some("c-0"));
+        assert_eq!(
+            echoed.parent_id,
+            spans
+                .iter()
+                .find(|s| s.name == phase::CLIENT_LEARN)
+                .unwrap()
+                .span_id
+        );
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let ctx = SpanContext {
+            trace_id: 0xdead_beef_dead_beef_0123_4567_89ab_cdef,
+            span_id: 0xfeed_face_cafe_f00d,
+            round_id: 77,
+        };
+        let parsed = SpanContext::from_header(&ctx.header_value()).unwrap();
+        assert_eq!(parsed, ctx);
+        assert!(SpanContext::from_header("nope").is_none());
+        assert!(SpanContext::from_header("0:1:2:3").is_none());
+    }
+
+    #[test]
+    fn jsonl_dump_and_replay_dedup() {
+        let dir = std::env::temp_dir().join(format!("feddart-tele-{}", fresh_span_id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let r = rec();
+        let root = Span::root(&r, phase::ROUND, 5);
+        {
+            let _g = root.enter();
+            event("deadline_decision", &[("deadline_ms", "250")]);
+            child_of_current(phase::APPLY).finish();
+        }
+        root.finish();
+        let written = r.dump_round(5, &path).unwrap();
+        assert_eq!(written, 3); // 2 spans + 1 event
+        // fresh recorder (a "new process") replays the file
+        let r2 = rec();
+        assert_eq!(r2.load_jsonl(&path).unwrap(), 3);
+        assert!(r2.trace_json(5).is_some());
+        // replaying again is a no-op thanks to dedup
+        assert_eq!(r2.load_jsonl(&path).unwrap(), 0);
+        // re-dumping from the replayed recorder then loading stays deduped
+        r2.dump_round(5, &path).unwrap();
+        assert_eq!(r2.load_jsonl(&path).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ring_eviction_is_bounded() {
+        let r = Arc::new(Recorder::new(2, 8, 8));
+        for i in 0..100 {
+            Span::root(&r, "s", i).finish();
+        }
+        assert!(r.spans().len() <= 16);
+        assert!(r.dropped_spans() >= 84);
+    }
+
+    #[test]
+    fn recent_lists_roots_newest_first() {
+        let r = rec();
+        for i in 0..5 {
+            let root = Span::root(&r, phase::ROUND, 100 + i);
+            root.child("inner").finish();
+            root.finish();
+        }
+        let j = r.recent_json(3);
+        let items = j.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 3);
+        for it in items {
+            assert_eq!(it.get("name").unwrap().as_str(), Some("round"));
+        }
+    }
+}

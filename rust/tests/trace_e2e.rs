@@ -1,0 +1,555 @@
+//! End-to-end round tracing: one secagg+dp session traced from the FACT
+//! pipeline through the DART seam to the client runtimes and back.
+//!
+//! Covered here:
+//! * a round with one straggler (dropout) and one wire retry produces a
+//!   SINGLE trace: every pipeline phase span exactly once, per-client
+//!   learn spans carrying the client id, the client-side echoed
+//!   `fact_learn` spans parented under them, and the retry event attached
+//!   to the right client's span;
+//! * the trace survives a coordinator crash: `trace.jsonl` is written
+//!   next to the round-store WAL when a round closes, and `recover()`
+//!   replays it into a recorder that never saw the live spans.
+//!
+//! The client side is the same engine-free deterministic secagg registry
+//! the recovery tests use, plus trace-context adoption so the shared
+//! `wire_retry_event` helper can attach a simulated transport retry to
+//! the in-flight client span.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+use feddart::coordinator::round_store::{
+    LedgerCharge, RecoveryStatus, RoundEvent, RoundPhase, RoundState,
+};
+use feddart::coordinator::workflow::WorkflowManager;
+use feddart::coordinator::{RoundStore, WalRoundStore};
+use feddart::dart::TaskRegistry;
+use feddart::error::FedError;
+use feddart::fact::aggregation::Aggregation;
+use feddart::fact::model::FactModel;
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::FactServer;
+use feddart::json::Json;
+use feddart::privacy::{
+    dp, from_hex, keys, masking, round_id_from_hex, shamir, to_hex,
+    PrivacyConfig, PrivacyMode,
+};
+use feddart::telemetry::{self, phase, FinishedSpan, TraceEvent};
+use feddart::util::rng::{golden_f32, Rng};
+use feddart::util::tensorbuf::TensorBuf;
+
+const PARAMS: usize = 32;
+const CLIENTS: usize = 5;
+/// client-3 crashes in every learn phase: the round's straggler/dropout,
+/// forcing the reveal + share-reconstruction path
+const DROPPED: usize = 3;
+/// client-1's transport "retries once" every learn: the wire-retry event
+/// that must land on client-1's span
+const RETRIED: usize = 1;
+
+// ------------------------------------------------------------ fixture
+
+struct TestModel;
+
+impl FactModel for TestModel {
+    fn name(&self) -> &str {
+        "tracemodel"
+    }
+    fn param_count(&self) -> usize {
+        PARAMS
+    }
+    fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+        Ok(golden_f32(seed as u32, PARAMS))
+    }
+    fn aggregation(&self) -> &Aggregation {
+        &Aggregation::WeightedFedAvg
+    }
+}
+
+fn device_index(device: &str) -> usize {
+    device.rsplit('-').next().unwrap().parse().unwrap()
+}
+
+fn client_secret(idx: usize) -> [u8; 32] {
+    [idx as u8 + 11; 32]
+}
+
+fn round_keys_of(device: &str, round_id: u64) -> keys::RoundKeys {
+    keys::keypair(&keys::derive_round_secret(
+        &client_secret(device_index(device)),
+        round_id,
+        device,
+    ))
+}
+
+fn keys_map_of(p: &Json) -> BTreeMap<String, String> {
+    p.need("keys")
+        .unwrap()
+        .as_obj()
+        .unwrap()
+        .iter()
+        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+        .collect()
+}
+
+/// Deterministic secagg+dp clients (see `round_recovery.rs`): every
+/// derivation is a pure function of `(round_id, device)`.  `fact_learn`
+/// additionally adopts the trace context the coordinator injected, so
+/// the simulated wire retry attaches to the right client span through
+/// the SAME `wire_retry_event` helper the REST transport uses.
+fn traced_registry() -> TaskRegistry {
+    let registry = TaskRegistry::new();
+    registry.register("fact_init", |_| Ok(Json::Null));
+
+    registry.register("fact_keys", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let kp = round_keys_of(&device, round_id);
+        Ok(Json::obj().set("pubkey", keys::pubkey_hex(&kp.public)))
+    });
+
+    registry.register("fact_shares", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let threshold = p.need("threshold")?.as_usize().unwrap();
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let peers: Vec<(String, u8)> = keys_map
+            .keys()
+            .enumerate()
+            .filter(|(_, n)| *n != &device)
+            .map(|(i, n)| (n.clone(), i as u8 + 1))
+            .collect();
+        let xs: Vec<u8> = peers.iter().map(|(_, x)| *x).collect();
+        let mut rng = Rng::new(round_id ^ device_index(&device) as u64);
+        let split = shamir::split_at(&kp.secret, threshold, &xs, &mut rng)?;
+        let mut shares = Json::obj();
+        let mut commits = Json::obj();
+        for (share, (peer, _)) in split.iter().zip(peers.iter()) {
+            let their = keys::parse_pubkey_hex(&keys_map[peer])?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            let ct =
+                keys::encrypt_share(&sk, round_id, &device, peer, &share.to_bytes());
+            shares = shares.set(peer, to_hex(&ct));
+            commits = commits.set(peer, to_hex(&shamir::share_commitment(share)));
+        }
+        Ok(Json::obj().set("shares", shares).set("commits", commits))
+    });
+
+    registry.register("fact_learn", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let idx = device_index(&device);
+        if idx == RETRIED {
+            // a transport hiccup the client's retry loop absorbed: the
+            // adopted trace context parents the event under THIS
+            // client's in-flight learn span on the coordinator side
+            if let Some(ctx) = telemetry::extract(p) {
+                let _g = telemetry::ContextGuard::adopt(ctx);
+                telemetry::wire_retry_event("learn", 1, "connection reset");
+            }
+        }
+        if idx == DROPPED {
+            return Err(FedError::Task(format!("'{device}' crashed mid-round")));
+        }
+        let global = TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Task(e.to_string()))?;
+        let gs = global.as_f32_slice();
+        let delta = golden_f32(idx as u32 + 1, gs.len());
+        let mut params: Vec<f32> =
+            gs.iter().zip(&delta).map(|(g, d)| g + 0.1 * d).collect();
+        let n_samples = 100.0 + 10.0 * idx as f32;
+        let pj = p.need("privacy")?;
+        let cfg = PrivacyConfig::from_json(pj)?;
+        let round_id =
+            round_id_from_hex(pj.need("round_id")?.as_str().unwrap_or_default())?;
+        if cfg.mode.has_dp() {
+            let mut rng = Rng::new(round_id ^ idx as u64);
+            dp::privatize_update(
+                &mut params,
+                gs,
+                cfg.clip_norm,
+                cfg.noise_multiplier,
+                &mut rng,
+            )?;
+        }
+        let keys_map: BTreeMap<String, String> = pj
+            .need("keys")?
+            .as_obj()
+            .unwrap()
+            .iter()
+            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+            .collect();
+        let participants: Vec<String> = pj
+            .need("participants")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|j| j.as_str().map(String::from))
+            .collect();
+        let kp = round_keys_of(&device, round_id);
+        let seeds: Vec<(i64, [u8; 32])> = participants
+            .iter()
+            .filter(|c| *c != &device)
+            .map(|peer| {
+                let their = keys::parse_pubkey_hex(&keys_map[peer]).unwrap();
+                let sk = keys::shared_key(&kp.secret, &their);
+                (
+                    masking::pair_sign(&device, peer),
+                    keys::pair_seed_from_shared(&sk, round_id, &device, peer),
+                )
+            })
+            .collect();
+        let weighted = pj.get("weighted").and_then(Json::as_bool).unwrap_or(true);
+        let weight = if weighted {
+            n_samples as f64 / cfg.weight_scale as f64
+        } else {
+            1.0
+        };
+        params =
+            masking::mask_update_with_seeds(&params, weight, &seeds, cfg.frac_bits)?;
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(params))
+            .set("n_samples", n_samples)
+            .set("loss", 0.5))
+    });
+
+    registry.register("fact_reveal", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let mut seeds = Json::obj();
+        let mut shares_out = Json::obj();
+        for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
+            let Some(name) = d.as_str() else { continue };
+            if name == device {
+                continue;
+            }
+            let Some(pub_hex) = keys_map.get(name) else { continue };
+            let their = keys::parse_pubkey_hex(pub_hex)?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            seeds = seeds.set(
+                name,
+                to_hex(&keys::pair_seed_from_shared(&sk, round_id, &device, name)),
+            );
+            if let Some(ct_hex) =
+                p.get("shares").and_then(|s| s.get(name)).and_then(Json::as_str)
+            {
+                let plain = keys::decrypt_share(
+                    &sk,
+                    round_id,
+                    name,
+                    &device,
+                    &from_hex(ct_hex)?,
+                )?;
+                shares_out = shares_out.set(name, to_hex(&plain));
+            }
+        }
+        Ok(Json::obj().set("seeds", seeds).set("shares", shares_out))
+    });
+    registry
+}
+
+// ---------------------------------------------------------- kill store
+
+/// Same crash-injection store as `round_recovery.rs`, but exposing
+/// `trace_dir()` so the coordinator dumps `trace.jsonl` next to the WAL.
+struct KillStore {
+    inner: WalRoundStore,
+    remaining: AtomicI64,
+}
+
+impl KillStore {
+    fn new(dir: &std::path::Path, kill_after: i64) -> KillStore {
+        KillStore {
+            inner: WalRoundStore::open(dir).unwrap(),
+            remaining: AtomicI64::new(kill_after),
+        }
+    }
+
+    fn tick(&self) -> bool {
+        self.remaining.fetch_sub(1, Ordering::SeqCst) <= 1
+    }
+
+    fn dead(&self) -> bool {
+        self.remaining.load(Ordering::SeqCst) <= 0
+    }
+
+    fn crash<T>() -> feddart::Result<T> {
+        Err(FedError::Fact("injected coordinator crash".into()))
+    }
+}
+
+impl RoundStore for KillStore {
+    fn append(&self, ev: RoundEvent) -> feddart::Result<RoundPhase> {
+        if self.dead() {
+            return Self::crash();
+        }
+        let phase = self.inner.append(ev)?;
+        if self.tick() {
+            return Self::crash();
+        }
+        Ok(phase)
+    }
+    fn append_charge(&self, charge: LedgerCharge) -> feddart::Result<()> {
+        if self.dead() {
+            return Self::crash();
+        }
+        self.inner.append_charge(charge)?;
+        if self.tick() {
+            return Self::crash();
+        }
+        Ok(())
+    }
+    fn charges(&self) -> feddart::Result<Vec<LedgerCharge>> {
+        self.inner.charges()
+    }
+    fn round(&self, round_id: u64) -> feddart::Result<Option<RoundState>> {
+        self.inner.round(round_id)
+    }
+    fn rounds(&self) -> feddart::Result<Vec<RoundState>> {
+        self.inner.rounds()
+    }
+    fn session_tag(&self) -> feddart::Result<Option<u64>> {
+        self.inner.session_tag()
+    }
+    fn set_session_tag(&self, tag: u64) -> feddart::Result<u64> {
+        self.inner.set_session_tag(tag)
+    }
+    fn compact(&self) -> feddart::Result<()> {
+        self.inner.compact()
+    }
+    fn recovery(&self) -> RecoveryStatus {
+        self.inner.recovery()
+    }
+    fn trace_dir(&self) -> Option<PathBuf> {
+        self.inner.trace_dir()
+    }
+}
+
+// ------------------------------------------------------------- drivers
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("feddart-trace-e2e-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn server_with(
+    store: Arc<dyn RoundStore>,
+    session_tag: u64,
+    rounds: usize,
+) -> FactServer {
+    let wm = WorkflowManager::test_mode(CLIENTS, traced_registry(), 4);
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig {
+            mode: PrivacyMode::SecAggDp,
+            clip_norm: 4.0,
+            noise_multiplier: 0.05,
+            weight_scale: 128.0,
+            ..PrivacyConfig::default()
+        })
+        .with_round_store(store)
+        .with_session_tag(session_tag);
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(rounds)),
+            7,
+        )
+        .unwrap();
+    server
+}
+
+/// Fetch one round's trace (spans + events) and sanity-check it is a
+/// single connected trace rooted at the `round` span.
+fn round_trace(
+    rec: &telemetry::Recorder,
+    round_id: u64,
+) -> (Vec<FinishedSpan>, Vec<TraceEvent>) {
+    let (spans, events) = rec
+        .round_trace(round_id)
+        .unwrap_or_else(|| panic!("no trace recorded for round {round_id:x}"));
+    let roots: Vec<&FinishedSpan> =
+        spans.iter().filter(|s| s.parent_id == 0).collect();
+    assert_eq!(roots.len(), 1, "expected exactly one root span");
+    assert_eq!(roots[0].name, phase::ROUND);
+    let tid = roots[0].trace_id;
+    for s in &spans {
+        assert_eq!(s.trace_id, tid, "span '{}' left the trace", s.name);
+    }
+    for e in &events {
+        assert_eq!(e.trace_id, tid, "event '{}' left the trace", e.kind);
+    }
+    (spans, events)
+}
+
+fn count_named(spans: &[FinishedSpan], name: &str) -> usize {
+    spans.iter().filter(|s| s.name == name).count()
+}
+
+// --------------------------------------------------------------- tests
+
+/// One secagg+dp round with a straggler and a wire retry: a single trace
+/// holding every pipeline phase exactly once, per-client spans with
+/// client ids, client-side echoed spans beneath them, and the retry
+/// event on the retried client's span.
+#[test]
+fn single_round_trace_is_complete() {
+    let dir = tmp_dir("complete");
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    let mut server = server_with(store.clone(), 0x7ace_0001, 1);
+    server.learn().unwrap();
+    assert_eq!(server.history().len(), 1);
+
+    let states = store.rounds().unwrap();
+    assert_eq!(states.len(), 1);
+    let rid = states[0].round_id;
+    let rec = server.telemetry();
+    let (spans, events) = round_trace(rec.as_ref(), rid);
+
+    // every pipeline phase exactly once
+    for name in phase::ALL {
+        assert_eq!(
+            count_named(&spans, name),
+            1,
+            "phase '{name}' must appear exactly once"
+        );
+    }
+
+    // one coordinator-side span per addressed client, each carrying the
+    // client id, with outcomes matching the round (one dropout)
+    let client_spans: Vec<&FinishedSpan> = spans
+        .iter()
+        .filter(|s| s.name == phase::CLIENT_LEARN)
+        .collect();
+    assert_eq!(client_spans.len(), CLIENTS);
+    let mut ok = 0;
+    let mut dropped = 0;
+    for s in &client_spans {
+        let client = s.attr("client").expect("client span without client id");
+        match s.attr("outcome") {
+            Some("ok") => ok += 1,
+            Some("dropped") => {
+                dropped += 1;
+                assert_eq!(device_index(client), DROPPED);
+            }
+            other => panic!("unexpected outcome {other:?} for '{client}'"),
+        }
+    }
+    assert_eq!((ok, dropped), (CLIENTS - 1, 1));
+
+    // client-side echoed learn spans: parented under the coordinator's
+    // client spans, one per responder
+    let echoes: Vec<&FinishedSpan> =
+        spans.iter().filter(|s| s.name == "fact_learn").collect();
+    assert_eq!(echoes.len(), CLIENTS - 1, "one echo per responding client");
+    for e in &echoes {
+        let parent = spans
+            .iter()
+            .find(|s| s.span_id == e.parent_id)
+            .expect("echo parented outside the trace");
+        assert_eq!(parent.name, phase::CLIENT_LEARN);
+        assert_eq!(parent.attr("client"), e.attr("client"));
+    }
+
+    // the wire retry landed on the retried client's span
+    let retries: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.kind == "wire_retry").collect();
+    assert_eq!(retries.len(), 1, "exactly one wire retry in the round");
+    let holder = spans
+        .iter()
+        .find(|s| s.span_id == retries[0].span_id)
+        .expect("retry event attached outside the trace");
+    assert_eq!(holder.name, phase::CLIENT_LEARN);
+    assert_eq!(
+        holder.attr("client").map(device_index),
+        Some(RETRIED),
+        "retry attached to the wrong client span"
+    );
+
+    // the queryable tree assembles and the flight-recorder dump landed
+    // next to the WAL
+    let tree = rec.trace_json(rid).expect("trace_json");
+    assert!(telemetry::render_tree(&tree).contains(phase::QUORUM_WAIT));
+    assert!(dir.join("trace.jsonl").exists(), "trace.jsonl not dumped");
+}
+
+/// Crash the coordinator mid-round-1: round 0 closed and its trace was
+/// dumped to `trace.jsonl`, so a restarted coordinator — with a PRIVATE
+/// recorder that never saw the live spans — replays the full round-0
+/// trace on `recover()` and finishes the session.
+#[test]
+fn trace_survives_crash_and_replays() {
+    const TAG: u64 = 0x7ace_0002;
+    let dir = tmp_dir("crash");
+
+    // phase 1: kill after round 0's full event arc (8 events) plus
+    // round 1's Configured + KeysCollected — round 0 terminal, dumped
+    let killed = Arc::new(KillStore::new(&dir, 10));
+    let mut server = server_with(killed.clone(), TAG, 2);
+    server.learn().unwrap_err();
+    let rid0 = killed
+        .rounds()
+        .unwrap()
+        .iter()
+        .find(|s| s.round == 0)
+        .expect("round 0 persisted")
+        .round_id;
+    assert!(dir.join("trace.jsonl").exists(), "dump must precede charges");
+
+    // phase 2: fresh coordinator, fresh PRIVATE recorder (empty by
+    // construction — a restarted process has no in-memory spans)
+    let replay_rec = Arc::new(telemetry::Recorder::with_defaults());
+    let store = Arc::new(WalRoundStore::open(&dir).unwrap());
+    let mut server =
+        server_with(store.clone(), TAG, 2).with_telemetry(Arc::clone(&replay_rec));
+    assert!(replay_rec.round_trace(rid0).is_none(), "recorder not fresh");
+    server.recover().unwrap();
+
+    // the replayed round-0 trace is complete: every phase span made it
+    // through the dump/replay cycle
+    let (spans, events) = round_trace(replay_rec.as_ref(), rid0);
+    for name in phase::ALL {
+        assert_eq!(
+            count_named(&spans, name),
+            1,
+            "replayed phase '{name}' must appear exactly once"
+        );
+    }
+    assert_eq!(count_named(&spans, phase::CLIENT_LEARN), CLIENTS);
+    assert!(
+        events.iter().any(|e| e.kind == "wire_retry"),
+        "retry event lost in the dump/replay cycle"
+    );
+
+    // and the resumed session still completes, with round 1's live
+    // spans landing in the private recorder too (a resumed round may
+    // skip already-durable phases, so only the root is guaranteed)
+    server.learn().unwrap();
+    assert_eq!(server.history().len(), 2);
+    let rid1 = store
+        .rounds()
+        .unwrap()
+        .iter()
+        .find(|s| s.round == 1)
+        .expect("round 1 persisted")
+        .round_id;
+    let (spans1, _) = round_trace(replay_rec.as_ref(), rid1);
+    assert_eq!(count_named(&spans1, phase::ROUND), 1);
+}
