@@ -1,0 +1,425 @@
+//! Crypto-hygiene rules for the privacy stack.
+//!
+//! Scope: `privacy::*` and `util::hmacsha` ([`CRYPTO_SCOPE`]).
+//!
+//! * `crypto-ct-eq` — `==` / `!=` where either side is a secret-bearing
+//!   identifier (see [`is_secret_ident`]).  Early-exit comparison leaks
+//!   a timing oracle on MACs, shares, and keys; use
+//!   `util::hmacsha::ct_eq`.  Method-call results (`x.verify() == true`)
+//!   are not flagged — only direct secret operands.
+//! * `crypto-secret-debug` — `#[derive(Debug)]` on a struct with
+//!   secret-named fields.  Debug output reaches logs and panics; write a
+//!   manual impl that redacts the secret fields.
+//! * `crypto-secret-leak` — a secret-bearing identifier (or `{secret}`
+//!   inline capture) inside `format!` / `println!` / log-macro
+//!   arguments.  Non-secret projections (`shares.len()`,
+//!   `key.is_empty()`) are exempt.
+//! * `crypto-weak-rng` — constructing the deterministic `util::rng::Rng`
+//!   inside a key-material module ([`WEAK_RNG_SCOPE`]); key and noise
+//!   entropy must come from `OsRng` / the `NoiseSource` seam.
+
+use super::lexer::{Tok, TokKind};
+use super::{in_scope, Finding, SrcFile};
+
+/// Modules holding secret material.
+pub const CRYPTO_SCOPE: &[&str] = &["privacy", "util::hmacsha"];
+
+/// Modules that generate key material or DP noise and must use a CSPRNG.
+pub const WEAK_RNG_SCOPE: &[&str] = &["privacy::keys", "privacy::shamir", "privacy::dp"];
+
+const SECRET_WORDS: &[&str] = &[
+    "secret", "secrets", "seed", "seeds", "share", "shares", "sk", "privkey", "passphrase",
+];
+
+/// Whether an identifier names secret material.  Matches whole
+/// underscore-separated words from [`SECRET_WORDS`], plus anything
+/// key-like (`key`, `keys`, `*key`) that is not explicitly public.
+pub fn is_secret_ident(name: &str) -> bool {
+    let lower = name.to_ascii_lowercase();
+    let parts: Vec<&str> = lower.split('_').collect();
+    if parts.iter().any(|p| SECRET_WORDS.contains(p)) {
+        return true;
+    }
+    if parts.contains(&"key") || parts.contains(&"keys") || lower.ends_with("key") {
+        return !(lower.contains("pub") || lower.contains("public"));
+    }
+    false
+}
+
+/// Final path segment of the expression ending just before `ts[i]`, and
+/// whether that expression is a call result.
+fn path_back<'a>(ts: &[&'a Tok], i: usize) -> (Option<&'a str>, bool) {
+    if i == 0 {
+        return (None, false);
+    }
+    let mut j = i - 1;
+    if ts[j].is(")") {
+        // method call result: find the callee name
+        let mut d = 1usize;
+        loop {
+            if j == 0 {
+                return (None, true);
+            }
+            j -= 1;
+            if ts[j].is(")") {
+                d += 1;
+            } else if ts[j].is("(") {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+        }
+        if j > 0 && ts[j - 1].kind == TokKind::Ident {
+            return (Some(&ts[j - 1].text), true);
+        }
+        return (None, true);
+    }
+    if ts[j].kind == TokKind::Ident {
+        return (Some(&ts[j].text), false);
+    }
+    (None, false)
+}
+
+/// First meaningful identifier after `ts[i]` (skipping `&`, `*`, `(` and
+/// `self`, following `.`/`::` paths), and whether it is called.
+fn path_fwd<'a>(ts: &[&'a Tok], i: usize) -> (Option<&'a str>, bool) {
+    let mut j = i + 1;
+    let mut last: Option<&'a str> = None;
+    while j < ts.len() {
+        let t = ts[j];
+        if t.kind == TokKind::Ident && t.text != "self" {
+            last = Some(&t.text);
+            j += 1;
+            if j < ts.len() && (ts[j].is(".") || ts[j].is("::")) {
+                j += 1;
+                continue;
+            }
+            let called = j < ts.len() && ts[j].is("(");
+            return (last, called);
+        }
+        if t.is("&") || t.is("*") || t.is("(") || t.is_ident("self") {
+            j += 1;
+            continue;
+        }
+        break;
+    }
+    (last, false)
+}
+
+/// `crypto-ct-eq`: non-constant-time comparison of secret material.
+pub fn check_ct_eq(f: &SrcFile, out: &mut Vec<Finding>) {
+    if !in_scope(&f.module, CRYPTO_SCOPE) {
+        return;
+    }
+    let ts: Vec<&Tok> = f.lexed.toks.iter().filter(|t| !t.test).collect();
+    for i in 0..ts.len() {
+        let t = ts[i];
+        if !(t.kind == TokKind::Punct && (t.text == "==" || t.text == "!=")) {
+            continue;
+        }
+        let (ln, lcall) = path_back(&ts, i);
+        let (rn, rcall) = path_fwd(&ts, i);
+        for (name, is_call) in [(ln, lcall), (rn, rcall)] {
+            if let Some(name) = name {
+                if !is_call && is_secret_ident(name) {
+                    out.push(Finding {
+                        rule: "crypto-ct-eq",
+                        file: f.rel.clone(),
+                        line: t.line,
+                        col: t.col,
+                        message: format!(
+                            "`{}` on secret-bearing `{name}`; use util::hmacsha::ct_eq",
+                            t.text
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+const FMT_MACROS: &[&str] = &[
+    "format", "println", "print", "eprintln", "write", "writeln", "debug", "info", "warn",
+    "error", "trace",
+];
+
+/// `{ident}` / `{ident:...}` inline captures in a format string literal.
+fn inline_captures(text: &str) -> Vec<String> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] != b'{' {
+            i += 1;
+            continue;
+        }
+        if i + 1 < b.len() && b[i + 1] == b'{' {
+            i += 2; // escaped brace
+            continue;
+        }
+        let mut j = i + 1;
+        while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+            j += 1;
+        }
+        if j > i + 1
+            && !b[i + 1].is_ascii_digit()
+            && j < b.len()
+            && (b[j] == b'}' || b[j] == b':')
+        {
+            out.push(text[i + 1..j].to_string());
+        }
+        i = j.max(i + 1);
+    }
+    out
+}
+
+/// Whether the secret identifier at `ts[j]` is immediately projected
+/// through a non-secret accessor (`.len()`, `.is_empty()`).
+fn projected_non_secret(ts: &[&Tok], j: usize) -> bool {
+    j + 3 < ts.len()
+        && ts[j + 1].is(".")
+        && (ts[j + 2].is_ident("len") || ts[j + 2].is_ident("is_empty"))
+        && ts[j + 3].is("(")
+}
+
+/// `crypto-secret-debug` + `crypto-secret-leak`.
+pub fn check_secret_exposure(f: &SrcFile, out: &mut Vec<Finding>) {
+    if !in_scope(&f.module, CRYPTO_SCOPE) {
+        return;
+    }
+    let ts: Vec<&Tok> = f.lexed.toks.iter().filter(|t| !t.test).collect();
+
+    // (a) #[derive(.. Debug ..)] on a struct with secret-named fields
+    for i in 0..ts.len() {
+        if !(ts[i].is_ident("derive") && i >= 2 && ts[i - 1].is("[") && ts[i - 2].is("#")) {
+            continue;
+        }
+        let mut j = i + 1;
+        let mut d = 0usize;
+        let mut has_debug = false;
+        while j < ts.len() {
+            if ts[j].is("(") {
+                d += 1;
+            } else if ts[j].is(")") {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            } else if ts[j].is_ident("Debug") {
+                has_debug = true;
+            }
+            j += 1;
+        }
+        if !has_debug {
+            continue;
+        }
+        // the following item must be a struct (enums with secret payloads
+        // are caught through their naming at the use sites)
+        let mut k = j;
+        while k < ts.len() && !ts[k].is_ident("struct") && !ts[k].is_ident("enum") {
+            if ts[k].is("{") {
+                break;
+            }
+            k += 1;
+        }
+        if k >= ts.len() || !ts[k].is_ident("struct") {
+            continue;
+        }
+        let name = ts.get(k + 1).map(|t| t.text.as_str()).unwrap_or("?");
+        let mut m = k;
+        while m < ts.len() && !ts[m].is("{") {
+            if ts[m].is(";") {
+                break;
+            }
+            m += 1;
+        }
+        if m >= ts.len() || !ts[m].is("{") {
+            continue;
+        }
+        let mut d = 1usize;
+        m += 1;
+        let mut secret_fields: Vec<&str> = Vec::new();
+        while m < ts.len() && d > 0 {
+            if ts[m].is("{") {
+                d += 1;
+            } else if ts[m].is("}") {
+                d -= 1;
+            } else if d == 1
+                && ts[m].is(":")
+                && m > 0
+                && ts[m - 1].kind == TokKind::Ident
+                && is_secret_ident(&ts[m - 1].text)
+            {
+                secret_fields.push(&ts[m - 1].text);
+            }
+            m += 1;
+        }
+        if !secret_fields.is_empty() {
+            out.push(Finding {
+                rule: "crypto-secret-debug",
+                file: f.rel.clone(),
+                line: ts[i].line,
+                col: ts[i].col,
+                message: format!(
+                    "#[derive(Debug)] on `{name}` exposes secret field(s) {}; \
+                     write a redacting manual impl",
+                    secret_fields.join(", ")
+                ),
+            });
+        }
+    }
+
+    // (b) secret identifiers in format!/log-macro arguments
+    for i in 0..ts.len() {
+        if !(ts[i].kind == TokKind::Ident
+            && FMT_MACROS.contains(&ts[i].text.as_str())
+            && ts.get(i + 1).map(|t| t.is("!")).unwrap_or(false))
+        {
+            continue;
+        }
+        let Some(open) = ts.get(i + 2) else { continue };
+        let (opn, close) = match open.text.as_str() {
+            "(" => ("(", ")"),
+            "[" => ("[", "]"),
+            _ => continue,
+        };
+        let mut d = 1usize;
+        let mut j = i + 3;
+        while j < ts.len() && d > 0 {
+            let t = ts[j];
+            if t.is(opn) {
+                d += 1;
+            } else if t.is(close) {
+                d -= 1;
+            } else if t.kind == TokKind::Ident
+                && is_secret_ident(&t.text)
+                && !projected_non_secret(&ts, j)
+            {
+                out.push(Finding {
+                    rule: "crypto-secret-leak",
+                    file: f.rel.clone(),
+                    line: t.line,
+                    col: t.col,
+                    message: format!("secret-bearing `{}` formatted/logged", t.text),
+                });
+            } else if t.kind == TokKind::Str {
+                for cap in inline_captures(&t.text) {
+                    if is_secret_ident(&cap) {
+                        out.push(Finding {
+                            rule: "crypto-secret-leak",
+                            file: f.rel.clone(),
+                            line: t.line,
+                            col: t.col,
+                            message: format!("secret-bearing `{cap}` formatted/logged"),
+                        });
+                    }
+                }
+            }
+            j += 1;
+        }
+    }
+}
+
+/// `crypto-weak-rng`: deterministic `Rng::new` in a key-material module.
+pub fn check_weak_rng(f: &SrcFile, out: &mut Vec<Finding>) {
+    if !in_scope(&f.module, WEAK_RNG_SCOPE) {
+        return;
+    }
+    let ts: Vec<&Tok> = f.lexed.toks.iter().filter(|t| !t.test).collect();
+    for i in 0..ts.len() {
+        if ts[i].is_ident("Rng")
+            && i + 2 < ts.len()
+            && ts[i + 1].is("::")
+            && ts[i + 2].is_ident("new")
+        {
+            out.push(Finding {
+                rule: "crypto-weak-rng",
+                file: f.rel.clone(),
+                line: ts[i].line,
+                col: ts[i].col,
+                message: "deterministic util::rng::Rng in a key-material module; \
+                          use OsRng / the NoiseSource seam"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_all(rel: &str, src: &str) -> Vec<Finding> {
+        let f = SrcFile::from_source(rel, src);
+        let mut out = Vec::new();
+        check_ct_eq(&f, &mut out);
+        check_secret_exposure(&f, &mut out);
+        check_weak_rng(&f, &mut out);
+        out
+    }
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn secret_ident_classification() {
+        for s in ["secret", "round_seed", "enc_shares", "sk", "node_key", "keys", "my_privkey"] {
+            assert!(is_secret_ident(s), "{s} should be secret");
+        }
+        for s in ["pubkey", "public_key", "keyspace_id", "monkey", "index", "value"] {
+            assert!(!is_secret_ident(s), "{s} should NOT be secret");
+        }
+    }
+
+    #[test]
+    fn flags_secret_equality_but_not_ct_eq_or_calls() {
+        let src = "fn f() { if mac_key == other { } if ct_eq(&a_secret, &b) { } \
+                   if derive_key(x) == y.tag() { } }";
+        let got = run_all("rust/src/privacy/secagg.rs", src);
+        assert_eq!(rules(&got), vec!["crypto-ct-eq"]);
+    }
+
+    #[test]
+    fn flags_derive_debug_on_secret_struct_only() {
+        let src = "#[derive(Debug, Clone)] pub struct RoundKeys { pub secret: [u8; 32] }\n\
+                   #[derive(Debug)] struct Meta { pub round_id: u64 }\n\
+                   #[derive(Clone)] struct AlsoSecret { seed: u64 }";
+        let got = run_all("rust/src/privacy/keys.rs", src);
+        assert_eq!(rules(&got), vec!["crypto-secret-debug"]);
+        assert!(got[0].message.contains("RoundKeys"));
+    }
+
+    #[test]
+    fn flags_secret_in_format_args_and_inline_captures() {
+        let src = "fn f() { let m = format!(\"seed={}\", round_seed); \
+                   debug!(\"k {mask_key}\"); }";
+        let got = run_all("rust/src/privacy/dp.rs", src);
+        assert_eq!(rules(&got), vec!["crypto-secret-leak", "crypto-secret-leak"]);
+    }
+
+    #[test]
+    fn len_projection_and_nonsecret_args_are_fine() {
+        let src = "fn f() { let m = format!(\"n={} k={}\", shares.len(), count); \
+                   info!(\"round {round_id} done\"); }";
+        assert!(run_all("rust/src/privacy/shamir.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_weak_rng_only_in_key_modules() {
+        let src = "fn f(seed_val: u64) { let mut r = Rng::new(seed_val); }";
+        let got = run_all("rust/src/privacy/keys.rs", src);
+        assert_eq!(rules(&got), vec!["crypto-weak-rng"]);
+        // privacy::accountant does bookkeeping, not key material
+        let got2 = run_all("rust/src/privacy/accountant.rs", src);
+        assert!(rules(&got2).contains(&"crypto-weak-rng") == false);
+    }
+
+    #[test]
+    fn out_of_scope_module_is_ignored() {
+        let src = "fn f() { if session_key == other { } }";
+        assert!(run_all("rust/src/dart/scheduler.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,449 @@
+//! Durability / observability drift rules.
+//!
+//! These are repo-level checks (they look across files and into
+//! docs/OPERATIONS.md) that keep three seams from silently drifting as
+//! the tree grows:
+//!
+//! * `drift-event-coverage` — every `EventKind` variant in the round
+//!   store must have an arm in both the `transition` legality check and
+//!   the `absorb` replay path.  A variant added to one but not the
+//!   other replays differently than it commits.
+//! * `drift-trace-order` — in `fact::server`, any function that both
+//!   dumps round traces and appends ε-charges must dump first: the
+//!   flight recorder write must land before the accountant mutates, so
+//!   a crash between the two leaves evidence, not a silent charge.
+//! * `drift-metrics-doc` — every emitted `fact.*` / `dart.*` metric
+//!   name must be documented in docs/OPERATIONS.md, and every
+//!   documented name must still be emitted (both directions).
+//!
+//! Metric *emission* is any `"fact.…"` / `"dart.…"` dotted string
+//! literal in non-test source — metric fns take names directly and
+//! helpers (e.g. the scheduler's `bump(name, n)`) forward them, so any
+//! such literal names a live series.  *Documentation* is a full dotted
+//! name in a code span anywhere in OPERATIONS.md, or a bare suffix in
+//! the first cell of a table row under a `### `fact.x.*`` section
+//! heading (the suffix joins the section prefix).
+
+use std::path::Path;
+
+use super::lexer::{Tok, TokKind};
+use super::{Finding, SrcFile};
+
+const ROUND_STORE: &str = "rust/src/coordinator/round_store.rs";
+const FACT_SERVER: &str = "rust/src/fact/server.rs";
+const OPS_DOC: &str = "docs/OPERATIONS.md";
+
+fn live(f: &SrcFile) -> Vec<&Tok> {
+    f.lexed.toks.iter().filter(|t| !t.test).collect()
+}
+
+fn by_rel<'a>(files: &'a [SrcFile], rel: &str) -> Option<&'a SrcFile> {
+    files.iter().find(|f| f.rel == rel)
+}
+
+/// Variant names of `enum <name>` (unit and struct variants).
+fn enum_variants<'a>(ts: &[&'a Tok], name: &str) -> Vec<&'a str> {
+    let mut i = 0usize;
+    while i + 1 < ts.len() {
+        if ts[i].is_ident("enum") && ts[i + 1].is_ident(name) {
+            let mut j = i + 2;
+            while j < ts.len() && !ts[j].is("{") {
+                j += 1;
+            }
+            let mut d = 1usize;
+            j += 1;
+            let mut variants = Vec::new();
+            let mut expect = true;
+            while j < ts.len() && d > 0 {
+                if ts[j].is("{") {
+                    d += 1;
+                } else if ts[j].is("}") {
+                    d -= 1;
+                } else if d == 1 {
+                    if expect && ts[j].kind == TokKind::Ident {
+                        variants.push(ts[j].text.as_str());
+                        expect = false;
+                    } else if ts[j].is(",") {
+                        expect = true;
+                    }
+                }
+                j += 1;
+            }
+            return variants;
+        }
+        i += 1;
+    }
+    Vec::new()
+}
+
+/// Body tokens (the `{ … }` block) of the first `fn <name>` in `ts`.
+fn fn_body<'s, 'a>(ts: &'s [&'a Tok], name: &str) -> &'s [&'a Tok] {
+    let mut i = 0usize;
+    while i + 1 < ts.len() {
+        if ts[i].is_ident("fn") && ts[i + 1].is_ident(name) {
+            let mut j = i + 2;
+            let mut d = 0isize;
+            while j < ts.len() {
+                let t = ts[j];
+                if t.is("(") || t.is("[") || t.is("<") {
+                    d += 1;
+                } else if t.is(")") || t.is("]") || t.is(">") {
+                    d -= 1;
+                } else if t.is("{") && d <= 0 {
+                    let mut k = j + 1;
+                    let mut bd = 1usize;
+                    while k < ts.len() && bd > 0 {
+                        if ts[k].is("{") {
+                            bd += 1;
+                        } else if ts[k].is("}") {
+                            bd -= 1;
+                        }
+                        k += 1;
+                    }
+                    return &ts[j..k];
+                }
+                j += 1;
+            }
+        }
+        i += 1;
+    }
+    &[]
+}
+
+/// `drift-event-coverage`: every EventKind variant has a `transition`
+/// arm and an `absorb` replay arm.
+pub fn check_event_coverage(files: &[SrcFile], out: &mut Vec<Finding>) {
+    let Some(f) = by_rel(files, ROUND_STORE) else { return };
+    let ts = live(f);
+    if ts.is_empty() {
+        return;
+    }
+    let variants = enum_variants(&ts, "EventKind");
+    if variants.is_empty() {
+        out.push(Finding {
+            rule: "drift-event-coverage",
+            file: f.rel.clone(),
+            line: ts[0].line,
+            col: ts[0].col,
+            message: "enum EventKind not found".to_string(),
+        });
+        return;
+    }
+    for fname in ["transition", "absorb"] {
+        let body = fn_body(&ts, fname);
+        let mut referenced: Vec<&str> = Vec::new();
+        for i in 0..body.len().saturating_sub(2) {
+            if body[i].is_ident("EventKind") && body[i + 1].is("::") {
+                referenced.push(body[i + 2].text.as_str());
+            }
+        }
+        for v in &variants {
+            if !referenced.contains(v) {
+                out.push(Finding {
+                    rule: "drift-event-coverage",
+                    file: f.rel.clone(),
+                    line: ts[0].line,
+                    col: ts[0].col,
+                    message: format!("EventKind::{v} has no arm in `{fname}`"),
+                });
+            }
+        }
+    }
+}
+
+/// `drift-trace-order`: the flight-recorder dump must precede ε-charge
+/// appends inside any fact::server function using both.
+pub fn check_trace_order(files: &[SrcFile], out: &mut Vec<Finding>) {
+    let Some(f) = by_rel(files, FACT_SERVER) else { return };
+    let ts = live(f);
+    let mut i = 0usize;
+    while i < ts.len() {
+        if ts[i].is_ident("fn") && i + 1 < ts.len() {
+            let fname = ts[i + 1].text.clone();
+            let body = fn_body(&ts[i..], &fname);
+            let dump = body.iter().position(|t| t.is_ident("dump_round"));
+            let charge = body.iter().position(|t| t.is_ident("append_charge"));
+            if let (Some(di), Some(ci)) = (dump, charge) {
+                if ci < di {
+                    out.push(Finding {
+                        rule: "drift-trace-order",
+                        file: f.rel.clone(),
+                        line: body[ci].line,
+                        col: body[ci].col,
+                        message: format!(
+                            "`append_charge` precedes `dump_round` in fn `{fname}`: \
+                             the trace dump must land before ε-charge appends"
+                        ),
+                    });
+                }
+            }
+            i += body.len().max(1);
+        }
+        i += 1;
+    }
+}
+
+/// Whether `s` is a well-formed dotted metric name (`fact.x.y`, `dart.x`).
+fn is_metric_literal(s: &str) -> bool {
+    let rest = match s.strip_prefix("fact.").or_else(|| s.strip_prefix("dart.")) {
+        Some(r) => r,
+        None => return false,
+    };
+    let b = rest.as_bytes();
+    !b.is_empty()
+        && (b[0] == b'_' || b[0].is_ascii_lowercase())
+        && b.iter().all(|c| {
+            *c == b'_' || *c == b'.' || c.is_ascii_lowercase() || c.is_ascii_digit()
+        })
+}
+
+/// Looser form for documented names (`fact.[a-z_.]+`).
+fn is_documented_name(s: &str) -> bool {
+    let rest = match s.strip_prefix("fact.").or_else(|| s.strip_prefix("dart.")) {
+        Some(r) => r,
+        None => return false,
+    };
+    !rest.is_empty()
+        && rest
+            .bytes()
+            .all(|c| c == b'_' || c == b'.' || c.is_ascii_lowercase())
+}
+
+/// Every emitted metric name → first emission site.
+fn emitted_metrics<'a>(files: &'a [SrcFile]) -> Vec<(&'a str, &'a SrcFile, &'a Tok)> {
+    let mut out: Vec<(&str, &SrcFile, &Tok)> = Vec::new();
+    for f in files {
+        if !f.rel.starts_with("rust/src/") {
+            continue;
+        }
+        for t in f.lexed.toks.iter().filter(|t| !t.test) {
+            if t.kind != TokKind::Str || !t.text.starts_with('"') || t.text.len() < 2 {
+                continue;
+            }
+            let name = t.text.trim_matches('"');
+            if is_metric_literal(name) && !out.iter().any(|(n, _, _)| *n == name) {
+                out.push((name, f, t));
+            }
+        }
+    }
+    out.sort_by_key(|(n, _, _)| *n);
+    out
+}
+
+/// A section heading's metric prefix (`### `fact.round.*`` → `fact.round`).
+fn heading_prefix(line: &str) -> Option<Option<String>> {
+    let hashes = line.bytes().take_while(|b| *b == b'#').count();
+    if hashes == 0 {
+        return None; // not a heading at all
+    }
+    if (2..=4).contains(&hashes) {
+        let rest = &line[hashes..];
+        if rest.starts_with(' ') || rest.starts_with('\t') {
+            let rest = rest.trim_start();
+            if let Some(body) = rest.strip_prefix('`') {
+                if let Some(end) = body.find('`') {
+                    let span = &body[..end];
+                    if let Some(base) = span.strip_suffix(".*") {
+                        let valid = base == "fact"
+                            || base == "dart"
+                            || is_documented_name(base);
+                        if valid {
+                            return Some(Some(base.to_string()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Some(None) // a heading, but not a prefix section — clears the prefix
+}
+
+/// The bare-suffix first cell of a table row (`| `closes` | …`).
+fn table_row_suffix(line: &str) -> Option<&str> {
+    let rest = line.strip_prefix('|')?;
+    let rest = rest.trim_start();
+    let body = rest.strip_prefix('`')?;
+    let end = body.find('`')?;
+    let suffix = &body[..end];
+    if suffix.is_empty() || !suffix.bytes().all(|c| c == b'_' || c.is_ascii_lowercase()) {
+        return None;
+    }
+    let after = body[end + 1..].trim_start();
+    after.starts_with('|').then_some(suffix)
+}
+
+/// Full metric names documented in OPERATIONS.md text.
+fn documented_metrics(ops: &str) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    let mut prefix: Option<String> = None;
+    for line in ops.lines() {
+        if let Some(p) = heading_prefix(line) {
+            prefix = p;
+            if prefix.is_some() {
+                continue;
+            }
+        }
+        // full dotted names in code spans document themselves anywhere
+        for (idx, span) in line.split('`').enumerate() {
+            if idx % 2 == 0 {
+                continue;
+            }
+            let core = span.split('{').next().unwrap_or("").trim();
+            if is_documented_name(core) && !names.iter().any(|n| n == core) {
+                names.push(core.to_string());
+            }
+        }
+        // bare suffixes join the active section prefix via table rows
+        if let (Some(p), Some(suffix)) = (&prefix, table_row_suffix(line)) {
+            let full = format!("{p}.{suffix}");
+            if !names.iter().any(|n| n == &full) {
+                names.push(full);
+            }
+        }
+    }
+    names
+}
+
+/// `drift-metrics-doc` against the OPERATIONS.md on disk.
+pub fn check_metrics_doc(files: &[SrcFile], ops_path: &Path, out: &mut Vec<Finding>) {
+    match std::fs::read_to_string(ops_path) {
+        Ok(text) => check_metrics_doc_text(files, &text, out),
+        Err(_) => out.push(Finding {
+            rule: "drift-metrics-doc",
+            file: OPS_DOC.to_string(),
+            line: 1,
+            col: 1,
+            message: format!("{OPS_DOC} missing"),
+        }),
+    }
+}
+
+/// `drift-metrics-doc` against in-memory doc text (fixtures use this).
+pub fn check_metrics_doc_text(files: &[SrcFile], ops: &str, out: &mut Vec<Finding>) {
+    let emitted = emitted_metrics(files);
+    let documented = documented_metrics(ops);
+    for (name, f, t) in &emitted {
+        if name.contains('{') || name.ends_with('.') {
+            continue;
+        }
+        if !documented.iter().any(|d| d == name) {
+            out.push(Finding {
+                rule: "drift-metrics-doc",
+                file: f.rel.clone(),
+                line: t.line,
+                col: t.col,
+                message: format!(
+                    "metric `{name}` is emitted but not documented in {OPS_DOC}"
+                ),
+            });
+        }
+    }
+    for name in &documented {
+        if !emitted.iter().any(|(n, _, _)| n == name) {
+            out.push(Finding {
+                rule: "drift-metrics-doc",
+                file: OPS_DOC.to_string(),
+                line: 1,
+                col: 1,
+                message: format!("metric `{name}` is documented but never emitted"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msgs(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.message.as_str()).collect()
+    }
+
+    #[test]
+    fn event_coverage_flags_missing_arms_both_ways() {
+        let src = "pub enum EventKind { Configured { t: u64 }, Voided, }\n\
+                   fn transition(k: &EventKind) { match k { EventKind::Configured { .. } => {}, \
+                   EventKind::Voided => {}, } }\n\
+                   fn absorb(k: EventKind) { match k { EventKind::Configured { .. } => {}, _ => {} } }";
+        let f = SrcFile::from_source(ROUND_STORE, src);
+        let mut out = Vec::new();
+        check_event_coverage(&[f], &mut out);
+        assert_eq!(msgs(&out), vec!["EventKind::Voided has no arm in `absorb`"]);
+    }
+
+    #[test]
+    fn event_coverage_clean_when_both_cover_all() {
+        let src = "pub enum EventKind { A, B }\n\
+                   fn transition(k: &EventKind) { match k { EventKind::A => {}, EventKind::B => {} } }\n\
+                   fn absorb(k: EventKind) { match k { EventKind::A => {}, EventKind::B => {} } }";
+        let f = SrcFile::from_source(ROUND_STORE, src);
+        let mut out = Vec::new();
+        check_event_coverage(&[f], &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn trace_order_flags_charge_before_dump() {
+        let src = "impl S { fn close(&mut self) { self.acct.append_charge(c); \
+                   self.rec.dump_round(id); } \
+                   fn fine(&mut self) { self.rec.dump_round(id); self.acct.append_charge(c); } }";
+        let f = SrcFile::from_source(FACT_SERVER, src);
+        let mut out = Vec::new();
+        check_trace_order(&[f], &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("fn `close`"));
+    }
+
+    #[test]
+    fn metrics_doc_flags_both_directions() {
+        let f = SrcFile::from_source(
+            "rust/src/metrics/mod.rs",
+            "fn f(m: &M) { m.counter(\"fact.rounds_open\", 1); }",
+        );
+        let ops = "## Counters\n\n`fact.rounds.closed` is incremented on close.\n";
+        let mut out = Vec::new();
+        check_metrics_doc_text(&[f], ops, &mut out);
+        assert_eq!(
+            msgs(&out),
+            vec![
+                "metric `fact.rounds_open` is emitted but not documented in docs/OPERATIONS.md",
+                "metric `fact.rounds.closed` is documented but never emitted",
+            ]
+        );
+    }
+
+    #[test]
+    fn metrics_doc_joins_table_rows_under_prefix_sections() {
+        let f = SrcFile::from_source(
+            "rust/src/fact/server.rs",
+            "fn f(m: &M) { m.counter(\"fact.participation.deadline_closes\", 1); }",
+        );
+        let ops = "### `fact.participation.*`\n\n\
+                   | counter | meaning |\n|---|---|\n\
+                   | `deadline_closes` | rounds closed at deadline |\n";
+        let mut out = Vec::new();
+        check_metrics_doc_text(&[f], ops, &mut out);
+        assert!(out.is_empty(), "unexpected: {:?}", msgs(&out));
+    }
+
+    #[test]
+    fn metrics_doc_prefix_scope_ends_at_next_heading() {
+        let f = SrcFile::from_source("rust/src/fact/server.rs", "fn f() {}");
+        let ops = "### `fact.round.*`\n\n## Other\n\n| `orphan` | row outside a prefix section |\n";
+        let mut out = Vec::new();
+        check_metrics_doc_text(&[f], ops, &mut out);
+        // `orphan` must NOT be documented as fact.round.orphan
+        assert!(out.is_empty(), "unexpected: {:?}", msgs(&out));
+    }
+
+    #[test]
+    fn metric_literals_in_test_code_do_not_count() {
+        let f = SrcFile::from_source(
+            "rust/src/metrics/mod.rs",
+            "#[cfg(test)]\nmod tests { fn t(m: &M) { m.counter(\"fact.test_only\", 1); } }",
+        );
+        let mut out = Vec::new();
+        check_metrics_doc_text(&[f], "", &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,488 @@
+//! Lightweight Rust tokenizer for the `feddart lint` analyzer.
+//!
+//! This is not a full Rust lexer — it is exactly enough structure for the
+//! project-invariant rules in this module: identifiers, literals (strings,
+//! raw strings, byte strings, chars, numbers), lifetimes, and punctuation,
+//! each carrying a source position.  Comments never enter the token stream
+//! (they are collected separately so inline `// feddart-lint: allow(..)`
+//! pragmas can be resolved), and string/char contents are opaque — a
+//! `".unwrap()"` inside a string literal can never look like a method call.
+//!
+//! Two pieces of higher-level structure are computed here because every
+//! rule needs them:
+//!
+//! * **test regions** — tokens inside a `#[cfg(test)]`-gated item (or a
+//!   bare `#[test]` function) are flagged so rules skip test code, where
+//!   `unwrap()` on known-good fixtures is idiomatic;
+//! * **pragmas** — `// feddart-lint: allow(rule-a, rule-b)` suppresses
+//!   those rules on the same and the following source line, and
+//!   `// feddart-lint: allow-file(rule)` suppresses a rule for the whole
+//!   file.  Pragma comments should carry a justification after the
+//!   closing parenthesis (`// feddart-lint: allow(panic-index): const
+//!   table, mask bounds the index`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Token classification — deliberately coarse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (integer or float, any base, with suffix).
+    Num,
+    /// String literal: `"…"`, `r#"…"#`, `b"…"` — content opaque.
+    Str,
+    /// Char or byte literal: `'x'`, `b'\n'`.
+    Char,
+    /// Lifetime: `'a`.
+    Lifetime,
+    /// Punctuation; multi-char operators (`==`, `::`, `..`) are one token.
+    Punct,
+}
+
+/// One token with its source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Kind of token.
+    pub kind: TokKind,
+    /// Raw text (for `Str`, includes the quotes).
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based source column.
+    pub col: u32,
+    /// Inside a `#[cfg(test)]`-gated item (rules skip these).
+    pub test: bool,
+}
+
+impl Tok {
+    fn new(kind: TokKind, text: impl Into<String>, line: u32, col: u32) -> Tok {
+        Tok { kind, text: text.into(), line, col, test: false }
+    }
+
+    /// `true` for a punct token with exactly this text.
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    /// `true` for an identifier with exactly this text.
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == text
+    }
+}
+
+/// Suppression pragmas collected from a file's comments.
+#[derive(Debug, Default, Clone)]
+pub struct Pragmas {
+    /// rule id → set of suppressed lines (pragma line + the next line).
+    pub line_allow: BTreeMap<String, BTreeSet<u32>>,
+    /// rule ids suppressed for the whole file.
+    pub file_allow: BTreeSet<String>,
+}
+
+impl Pragmas {
+    /// Whether `rule` is suppressed at `line`.
+    pub fn allows(&self, rule: &str, line: u32) -> bool {
+        if self.file_allow.contains(rule) {
+            return true;
+        }
+        self.line_allow.get(rule).map(|s| s.contains(&line)).unwrap_or(false)
+    }
+}
+
+/// Tokenized source file plus its comment-derived pragmas.
+#[derive(Debug)]
+pub struct Lexed {
+    /// Token stream (comments excluded, test regions marked).
+    pub toks: Vec<Tok>,
+    /// Pragmas parsed from comments.
+    pub pragmas: Pragmas,
+}
+
+const MULTI_PUNCT: &[&str] = &[
+    "..=", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>",
+    "+=", "-=", "*=", "/=", "..", "%=", "^=", "|=", "&=",
+];
+
+/// Tokenize `src`, collect pragmas, and mark `#[cfg(test)]` regions.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut pragmas = Pragmas::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+
+    // advance k bytes, tracking line/col
+    macro_rules! adv {
+        ($k:expr) => {{
+            let k: usize = $k;
+            for _ in 0..k {
+                if i < b.len() && b[i] == b'\n' {
+                    line += 1;
+                    col = 1;
+                } else {
+                    col += 1;
+                }
+                i += 1;
+            }
+        }};
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        if c == b' ' || c == b'\t' || c == b'\r' || c == b'\n' {
+            adv!(1);
+            continue;
+        }
+        // line comment (also doc comments)
+        if src[i..].starts_with("//") {
+            let end = src[i..].find('\n').map(|k| i + k).unwrap_or(b.len());
+            collect_pragma(&mut pragmas, line, &src[i..end]);
+            adv!(end - i);
+            continue;
+        }
+        // block comment, nested
+        if src[i..].starts_with("/*") {
+            let start_line = line;
+            let mut depth = 0usize;
+            let mut j = i;
+            while j < b.len() {
+                if src[j..].starts_with("/*") {
+                    depth += 1;
+                    j += 2;
+                } else if src[j..].starts_with("*/") {
+                    depth -= 1;
+                    j += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    j += 1;
+                }
+            }
+            collect_pragma(&mut pragmas, start_line, &src[i..j.min(b.len())]);
+            adv!(j - i);
+            continue;
+        }
+        // raw / byte-raw strings: r"…", r#"…"#, br#"…"#
+        if let Some(len) = raw_string_len(&src[i..]) {
+            toks.push(Tok::new(TokKind::Str, &src[i..i + len], line, col));
+            adv!(len);
+            continue;
+        }
+        // plain / byte strings
+        if c == b'"' || src[i..].starts_with("b\"") {
+            let open = if c == b'"' { 1 } else { 2 };
+            let mut j = i + open;
+            while j < b.len() {
+                if b[j] == b'\\' {
+                    j = (j + 2).min(b.len());
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Tok::new(TokKind::Str, &src[i..j], line, col));
+            adv!(j - i);
+            continue;
+        }
+        // lifetime vs char literal
+        if c == b'\'' || src[i..].starts_with("b'") {
+            let open = if c == b'\'' { 1 } else { 2 };
+            if c == b'\'' {
+                if let Some(len) = lifetime_len(&src[i..]) {
+                    toks.push(Tok::new(TokKind::Lifetime, &src[i..i + len], line, col));
+                    adv!(len);
+                    continue;
+                }
+            }
+            let mut j = i + open;
+            while j < b.len() {
+                if b[j] == b'\\' {
+                    j = (j + 2).min(b.len());
+                } else if b[j] == b'\'' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Tok::new(TokKind::Char, &src[i..j], line, col));
+            adv!(j - i);
+            continue;
+        }
+        // identifier / keyword
+        if c == b'_' || c.is_ascii_alphabetic() {
+            let mut j = i + 1;
+            while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                j += 1;
+            }
+            toks.push(Tok::new(TokKind::Ident, &src[i..j], line, col));
+            adv!(j - i);
+            continue;
+        }
+        // numeric literal: digits, hex/oct/bin, underscores, one float
+        // part, exponent, suffix — but never eat a `..` range or a method
+        // call on a literal (`1.max(2)`)
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            let mut seen_dot = false;
+            while j < b.len() {
+                let d = b[j];
+                if d == b'_' || d.is_ascii_alphanumeric() {
+                    j += 1;
+                } else if d == b'.' && !seen_dot {
+                    if j + 1 < b.len() && (b[j + 1] == b'.' || b[j + 1] == b'_' || b[j + 1].is_ascii_alphabetic()) {
+                        break; // range or method call
+                    }
+                    seen_dot = true;
+                    j += 1;
+                } else if (d == b'+' || d == b'-')
+                    && (b[j - 1] == b'e' || b[j - 1] == b'E')
+                    && seen_dot
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok::new(TokKind::Num, &src[i..j], line, col));
+            adv!(j - i);
+            continue;
+        }
+        // punctuation
+        let mut matched = false;
+        for p in MULTI_PUNCT {
+            if src[i..].starts_with(p) {
+                toks.push(Tok::new(TokKind::Punct, *p, line, col));
+                adv!(p.len());
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            toks.push(Tok::new(TokKind::Punct, &src[i..i + 1], line, col));
+            adv!(1);
+        }
+    }
+
+    mark_test_regions(&mut toks);
+    Lexed { toks, pragmas }
+}
+
+/// Length of a raw string literal at the start of `s`, or `None`.
+fn raw_string_len(s: &str) -> Option<usize> {
+    let body = s.strip_prefix("br").or_else(|| s.strip_prefix('r').map(|x| x))?;
+    let prefix_len = s.len() - body.len();
+    let hashes = body.len() - body.trim_start_matches('#').len();
+    let after = &body[hashes..];
+    if !after.starts_with('"') {
+        return None;
+    }
+    let close: String = format!("\"{}", "#".repeat(hashes));
+    match after[1..].find(&close) {
+        Some(k) => Some(prefix_len + hashes + 1 + k + close.len()),
+        None => Some(s.len()), // unterminated — consume the rest
+    }
+}
+
+/// Length of a lifetime token (`'a`, `'static`) at the start of `s`, or
+/// `None` when this is a char literal instead.
+fn lifetime_len(s: &str) -> Option<usize> {
+    let rest = s.strip_prefix('\'')?;
+    let ident_len = rest
+        .char_indices()
+        .take_while(|(k, c)| if *k == 0 { c.is_alphabetic() || *c == '_' } else { c.is_alphanumeric() || *c == '_' })
+        .count();
+    if ident_len == 0 {
+        return None;
+    }
+    // 'a' is a char literal; 'a followed by anything else is a lifetime
+    if rest[ident_len..].starts_with('\'') {
+        return None;
+    }
+    Some(1 + ident_len)
+}
+
+/// Parse a `feddart-lint:` pragma out of one comment's text.
+fn collect_pragma(pragmas: &mut Pragmas, line: u32, comment: &str) {
+    let body = comment.trim_start_matches(['/', '!', '*', ' ', '\t']);
+    let Some(rest) = body.strip_prefix("feddart-lint:") else { return };
+    let rest = rest.trim_start();
+    let (file_wide, rest) = if let Some(r) = rest.strip_prefix("allow-file(") {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        return;
+    };
+    let Some(close) = rest.find(')') else { return };
+    for rule in rest[..close].split(',') {
+        let rule = rule.trim();
+        if rule.is_empty() {
+            continue;
+        }
+        if file_wide {
+            pragmas.file_allow.insert(rule.to_string());
+        } else {
+            let lines = pragmas.line_allow.entry(rule.to_string()).or_default();
+            lines.insert(line);
+            lines.insert(line + 1);
+        }
+    }
+}
+
+/// Mark tokens inside `#[cfg(test)]`-gated items and `#[test]` functions.
+///
+/// After such an attribute, any further attributes are skipped, then the
+/// item is consumed through its terminating `;` or its balanced `{ … }`
+/// block, and every token in that span is flagged `test`.
+fn mark_test_regions(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].is("#") && i + 1 < toks.len() && toks[i + 1].is("[")) {
+            i += 1;
+            continue;
+        }
+        // collect the attribute's inner text
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut inner = String::new();
+        while j < toks.len() && depth > 0 {
+            if toks[j].is("[") {
+                depth += 1;
+            } else if toks[j].is("]") {
+                depth -= 1;
+            }
+            if depth > 0 {
+                inner.push_str(&toks[j].text);
+            }
+            j += 1;
+        }
+        let is_test_attr = inner.starts_with("cfg(test") || inner == "test";
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // skip any further attributes
+        let mut k = j;
+        while k + 1 < toks.len() && toks[k].is("#") && toks[k + 1].is("[") {
+            let mut d = 1usize;
+            k += 2;
+            while k < toks.len() && d > 0 {
+                if toks[k].is("[") {
+                    d += 1;
+                } else if toks[k].is("]") {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        // consume the item: through `;` or a balanced brace block at
+        // bracket depth 0
+        let mut d = 0isize;
+        while k < toks.len() {
+            let t = &toks[k].text;
+            if t == "(" || t == "[" {
+                d += 1;
+            } else if t == ")" || t == "]" {
+                d -= 1;
+            } else if t == ";" && d == 0 {
+                k += 1;
+                break;
+            } else if t == "{" && d == 0 {
+                let mut bd = 1usize;
+                k += 1;
+                while k < toks.len() && bd > 0 {
+                    if toks[k].is("{") {
+                        bd += 1;
+                    } else if toks[k].is("}") {
+                        bd -= 1;
+                    }
+                    k += 1;
+                }
+                break;
+            }
+            k += 1;
+        }
+        for t in toks.iter_mut().take(k).skip(i) {
+            t.test = true;
+        }
+        i = k;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let toks = kinds(r#"let s = ".unwrap()"; // .expect( in comment"#);
+        assert!(toks.iter().all(|(k, t)| *k != TokKind::Ident || t != "unwrap"));
+        assert!(toks.iter().all(|(_, t)| t != "expect"));
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes() {
+        let toks = kinds(r##"let s = r#"a "quoted" panic!("x")"#; x"##);
+        let idents: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "s", "x"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; }");
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Lifetime && t == "'a"));
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Char && t == "'x'"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_method_calls() {
+        let toks = kinds("for i in 0..10 { 1.max(2); 1.5e-3; }");
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Punct && t == ".."));
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "max"));
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Num && t == "1.5e-3"));
+    }
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let lexed = lex(
+            "fn live() { a.unwrap(); }\n\
+             #[cfg(test)]\nmod tests {\n fn t() { b.unwrap(); }\n}\n\
+             fn live2() {}",
+        );
+        let unwraps: Vec<bool> = lexed
+            .toks
+            .iter()
+            .filter(|t| t.is_ident("unwrap"))
+            .map(|t| t.test)
+            .collect();
+        assert_eq!(unwraps, vec![false, true]);
+        assert!(lexed.toks.iter().any(|t| t.is_ident("live2") && !t.test));
+    }
+
+    #[test]
+    fn pragmas_parse_and_scope() {
+        let lexed = lex(
+            "// feddart-lint: allow(panic-unwrap): checked above\n\
+             x.unwrap();\n\
+             // feddart-lint: allow-file(lock-io)\n",
+        );
+        assert!(lexed.pragmas.allows("panic-unwrap", 1));
+        assert!(lexed.pragmas.allows("panic-unwrap", 2));
+        assert!(!lexed.pragmas.allows("panic-unwrap", 3));
+        assert!(lexed.pragmas.allows("lock-io", 999));
+    }
+}

@@ -1,0 +1,275 @@
+//! Lock-discipline rules.
+//!
+//! The project's lock hierarchy (documented in docs/ANALYSIS.md and
+//! enforced here) orders every ranked lock class; threads must acquire
+//! in increasing rank:
+//!
+//! ```text
+//! sched.workers(1) < sched.shard(2) < sched.queue(3) < sched.hardware(4)
+//!     < metrics.registry(5) < telemetry.ring(6)
+//! ```
+//!
+//! * `lock-order` — acquiring a lower-ranked class while a guard of a
+//!   higher-ranked class is still live in the same scope.
+//! * `lock-io` — calling blocking durability I/O (`sync_all`,
+//!   `sync_data`, `fsync`) while *any* named lock guard is held; fsync
+//!   latency under a hot lock stalls every peer thread.
+//!
+//! Guard lifetime model (intra-procedural, matching how the codebase is
+//! written): a guard is **named** — lives to the end of its block —
+//! only when the lock call chain ends its `let` statement
+//! (`let g = x.lock().unwrap();`).  A chain that continues
+//! (`let v = x.lock().unwrap().pop();`) binds the popped value; the
+//! guard itself is a temporary dying at the `;`.  Guards passed into
+//! helper functions are not tracked across the call — see the known
+//! limitations section in docs/ANALYSIS.md.
+
+use super::lexer::{Tok, TokKind};
+use super::{Finding, SrcFile};
+
+/// (module prefix, receiver identifier, class name, rank).
+const LOCK_CLASSES: &[(&str, &str, &str, u32)] = &[
+    ("dart::scheduler", "workers", "sched.workers", 1),
+    ("dart::scheduler", "shard", "sched.shard", 2),
+    ("dart::scheduler", "shards", "sched.shard", 2),
+    ("dart::scheduler", "queue", "sched.queue", 3),
+    ("dart::scheduler", "hardware", "sched.hardware", 4),
+    ("metrics", "counters", "metrics.registry", 5),
+    ("metrics", "gauges", "metrics.registry", 5),
+    ("metrics", "histograms", "metrics.registry", 5),
+    ("dart::scheduler", "metrics", "metrics.registry", 5),
+    ("telemetry", "shard_for", "telemetry.ring", 6),
+    ("telemetry", "sh", "telemetry.ring", 6),
+    ("telemetry", "shards", "telemetry.ring", 6),
+];
+
+const BLOCKING_IO: &[&str] = &["sync_all", "sync_data", "fsync"];
+
+/// Human-readable declared order, used in messages and docs tests.
+pub const DECLARED_ORDER: &str = "sched.workers < sched.shard < sched.queue < \
+                                  sched.hardware < metrics.registry < telemetry.ring";
+
+fn lock_class(module: &str, recv: &str) -> Option<(&'static str, u32)> {
+    LOCK_CLASSES
+        .iter()
+        .find(|(m, r, _, _)| recv == *r && (module == *m || module.starts_with(*m)))
+        .map(|(_, _, cls, rank)| (*cls, *rank))
+}
+
+struct Held {
+    cls: String,
+    rank: Option<u32>,
+    depth: i32,
+    line: u32,
+    named: bool,
+}
+
+/// `lock-order` + `lock-io` over one file.
+pub fn check_locks(f: &SrcFile, out: &mut Vec<Finding>) {
+    let ts: Vec<&Tok> = f.lexed.toks.iter().filter(|t| !t.test).collect();
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth: i32 = 0;
+    let mut stmt_has_let = false;
+
+    let mut i = 0usize;
+    while i < ts.len() {
+        let t = ts[i];
+        if t.is("{") {
+            depth += 1;
+        } else if t.is("}") {
+            depth -= 1;
+            held.retain(|h| h.depth <= depth);
+        } else if t.is(";") {
+            held.retain(|h| h.named);
+            stmt_has_let = false;
+        } else if t.is_ident("let") {
+            stmt_has_let = true;
+        } else if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "lock" | "read" | "write")
+            && i + 2 < ts.len()
+            && ts[i + 1].is("(")
+            && ts[i + 2].is(")")
+            && i >= 2
+            && ts[i - 1].is(".")
+        {
+            let recv = receiver_ident(&ts, i - 2);
+            let class = recv.and_then(|r| lock_class(&f.module, r));
+            if let Some((cls, rank)) = class {
+                for h in &held {
+                    if let Some(hrank) = h.rank {
+                        if rank < hrank && h.cls != cls {
+                            out.push(Finding {
+                                rule: "lock-order",
+                                file: f.rel.clone(),
+                                line: t.line,
+                                col: t.col,
+                                message: format!(
+                                    "acquires {cls} (rank {rank}) while holding {} \
+                                     (rank {hrank}) from line {}; declared order is {}",
+                                    h.cls, h.line, DECLARED_ORDER
+                                ),
+                            });
+                            break;
+                        }
+                    }
+                }
+            }
+            // named iff the lock chain (through .unwrap()/.expect(..))
+            // terminates the `let` statement
+            let mut named = false;
+            if stmt_has_let {
+                let mut k = i + 3;
+                while k + 2 < ts.len()
+                    && ts[k].is(".")
+                    && (ts[k + 1].is_ident("unwrap") || ts[k + 1].is_ident("expect"))
+                    && ts[k + 2].is("(")
+                {
+                    let mut d = 1usize;
+                    k += 3;
+                    while k < ts.len() && d > 0 {
+                        if ts[k].is("(") {
+                            d += 1;
+                        } else if ts[k].is(")") {
+                            d -= 1;
+                        }
+                        k += 1;
+                    }
+                }
+                named = k < ts.len() && (ts[k].is(";") || ts[k].is("?"));
+            }
+            if class.is_some() || recv.is_some() {
+                held.push(Held {
+                    cls: class
+                        .map(|(c, _)| c.to_string())
+                        .unwrap_or_else(|| format!("?{}", recv.unwrap_or("_"))),
+                    rank: class.map(|(_, r)| r),
+                    depth,
+                    line: t.line,
+                    named,
+                });
+            }
+        } else if t.kind == TokKind::Ident
+            && BLOCKING_IO.contains(&t.text.as_str())
+            && i + 1 < ts.len()
+            && ts[i + 1].is("(")
+            && i >= 1
+            && ts[i - 1].is(".")
+        {
+            if let Some(h) = held.iter().find(|h| h.named) {
+                out.push(Finding {
+                    rule: "lock-io",
+                    file: f.rel.clone(),
+                    line: t.line,
+                    col: t.col,
+                    message: format!(
+                        "blocking `{}()` while holding lock guard ({}) acquired at line {}",
+                        t.text, h.cls, h.line
+                    ),
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// The identifier naming the receiver of a lock call whose `.` sits just
+/// after `ts[j]` — walks back over one trailing call or index expression.
+fn receiver_ident<'a>(ts: &[&'a Tok], j: usize) -> Option<&'a str> {
+    let t = ts[j];
+    if t.is(")") || t.is("]") {
+        let (open, close) = if t.is(")") { ("(", ")") } else { ("[", "]") };
+        let mut d = 1usize;
+        let mut k = j;
+        while k > 0 && d > 0 {
+            k -= 1;
+            if ts[k].is(close) {
+                d += 1;
+            } else if ts[k].is(open) {
+                d -= 1;
+            }
+        }
+        if d == 0 && k > 0 && ts[k - 1].kind == TokKind::Ident {
+            return Some(&ts[k - 1].text);
+        }
+        return None;
+    }
+    (t.kind == TokKind::Ident).then(|| t.text.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        let f = SrcFile::from_source(rel, src);
+        let mut out = Vec::new();
+        check_locks(&f, &mut out);
+        out
+    }
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn flags_out_of_order_acquisition() {
+        let src = "fn f(&self) { let q = self.queue.lock().unwrap(); \
+                   let w = self.workers.lock().unwrap(); }";
+        let got = run("rust/src/dart/scheduler.rs", src);
+        assert_eq!(rules(&got), vec!["lock-order"]);
+        assert!(got[0].message.contains("sched.workers (rank 1)"));
+    }
+
+    #[test]
+    fn in_order_acquisition_passes() {
+        let src = "fn f(&self) { let w = self.workers.lock().unwrap(); \
+                   let q = self.queue.lock().unwrap(); }";
+        assert!(run("rust/src/dart/scheduler.rs", src).is_empty());
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_statement_end() {
+        // the queue guard is a temporary (chain continues past unwrap),
+        // so the workers acquisition on the next statement is clean
+        let src = "fn f(&self) { let popped = self.queue.lock().unwrap().pop_front(); \
+                   let w = self.workers.lock().unwrap(); }";
+        assert!(run("rust/src/dart/scheduler.rs", src).is_empty());
+    }
+
+    #[test]
+    fn guard_scope_ends_with_block() {
+        let src = "fn f(&self) { { let q = self.queue.lock().unwrap(); } \
+                   let w = self.workers.lock().unwrap(); }";
+        assert!(run("rust/src/dart/scheduler.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_fsync_under_named_guard() {
+        let src = "fn f(&self) { let g = self.inner.lock().unwrap(); \
+                   self.file.sync_all()?; }";
+        let got = run("rust/src/coordinator/wal.rs", src);
+        assert_eq!(rules(&got), vec!["lock-io"]);
+    }
+
+    #[test]
+    fn fsync_after_guard_dropped_passes() {
+        let src = "fn f(&self) { { let g = self.inner.lock().unwrap(); } \
+                   self.file.sync_all()?; }";
+        assert!(run("rust/src/coordinator/wal.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unranked_receivers_do_not_trip_ordering() {
+        let src = "fn f(&self) { let a = self.inner.lock().unwrap(); \
+                   let b = self.other.lock().unwrap(); }";
+        assert!(run("rust/src/coordinator/round_store.rs", src).is_empty());
+    }
+
+    #[test]
+    fn indexed_receiver_resolves_through_brackets() {
+        let src = "fn f(&self) { let h = self.hardware.lock().unwrap(); \
+                   let s = self.shards[i].lock().unwrap(); }";
+        let got = run("rust/src/dart/scheduler.rs", src);
+        assert_eq!(rules(&got), vec!["lock-order"]);
+    }
+}

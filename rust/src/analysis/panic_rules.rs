@@ -1,0 +1,218 @@
+//! Panic-freedom rules for wire-facing and durability-critical modules.
+//!
+//! The modules in [`PANIC_SCOPE`] parse attacker-controlled bytes (HTTP,
+//! JSON, tensor frames, DART transport) or sit on the durability path
+//! (round store, FACT server).  A panic there is a remote crash — or a
+//! poisoned lock that cascades one — so these modules must surface
+//! failures as typed `FedError`s instead:
+//!
+//! * `panic-unwrap` — `.unwrap()` / `.expect(..)` calls.  The mutex
+//!   idiom `.lock().unwrap()` (and `.read()`/`.write()` for `RwLock`) is
+//!   exempt: poisoning only propagates a panic that already happened.
+//! * `panic-macro` — `panic!`, `unreachable!`, `todo!`, `unimplemented!`.
+//! * `panic-index` — unchecked `expr[..]` indexing.  A single numeric
+//!   literal index (fixed offset into a length-checked or compile-time
+//!   sized buffer) and the full-range form `[..]` are exempt.
+//!
+//! Test code (`#[cfg(test)]` / `#[test]`) is never flagged.
+
+use super::lexer::{Tok, TokKind};
+use super::{in_scope, Finding, SrcFile};
+
+/// Modules where panics are forbidden.
+pub const PANIC_SCOPE: &[&str] = &[
+    "http",
+    "dart::transport",
+    "dart::rest",
+    "json",
+    "util::tensorbuf",
+    "fact::server",
+    "coordinator::round_store",
+];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// `panic-unwrap` + `panic-macro`: unwrap/expect calls and panicking macros.
+pub fn check_panic_calls(f: &SrcFile, out: &mut Vec<Finding>) {
+    if !in_scope(&f.module, PANIC_SCOPE) {
+        return;
+    }
+    let ts: Vec<&Tok> = f.lexed.toks.iter().filter(|t| !t.test).collect();
+    for i in 0..ts.len() {
+        let t = ts[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let prv_dot = i > 0 && ts[i - 1].is(".");
+        let nxt_paren = ts.get(i + 1).map(|n| n.is("(")).unwrap_or(false);
+        if (t.text == "unwrap" || t.text == "expect") && prv_dot && nxt_paren {
+            // `.lock().unwrap()` / RwLock `.read()`/`.write()` poisoning idiom
+            if t.text == "unwrap"
+                && i >= 4
+                && ts[i - 2].is(")")
+                && ts[i - 3].is("(")
+                && matches!(ts[i - 4].text.as_str(), "lock" | "read" | "write")
+            {
+                continue;
+            }
+            out.push(Finding {
+                rule: "panic-unwrap",
+                file: f.rel.clone(),
+                line: t.line,
+                col: t.col,
+                message: format!(
+                    "`{}()` in a panic-free module; return a typed error instead",
+                    t.text
+                ),
+            });
+        } else if PANIC_MACROS.contains(&t.text.as_str())
+            && ts.get(i + 1).map(|n| n.is("!")).unwrap_or(false)
+        {
+            out.push(Finding {
+                rule: "panic-macro",
+                file: f.rel.clone(),
+                line: t.line,
+                col: t.col,
+                message: format!(
+                    "`{}!` in a panic-free module; return a typed error instead",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// `panic-index`: unchecked slice/array indexing.
+pub fn check_indexing(f: &SrcFile, out: &mut Vec<Finding>) {
+    if !in_scope(&f.module, PANIC_SCOPE) {
+        return;
+    }
+    let ts: Vec<&Tok> = f.lexed.toks.iter().filter(|t| !t.test).collect();
+    let mut i = 0usize;
+    while i < ts.len() {
+        let t = ts[i];
+        if !(t.kind == TokKind::Punct && t.text == "[") {
+            i += 1;
+            continue;
+        }
+        // only index *expressions*: `ident[..]`, `call()[..]`, `a[0][..]` —
+        // not array literals, attributes, or type syntax
+        let Some(prv) = (i > 0).then(|| ts[i - 1]) else {
+            i += 1;
+            continue;
+        };
+        let is_expr = prv.kind == TokKind::Ident || prv.is(")") || prv.is("]");
+        let keyword_before = prv.kind == TokKind::Ident
+            && matches!(
+                prv.text.as_str(),
+                "mut" | "dyn" | "return" | "in" | "as" | "if" | "else" | "match" | "box"
+            );
+        if !is_expr || keyword_before {
+            i += 1;
+            continue;
+        }
+        // collect the index tokens up to the matching `]`
+        let mut j = i + 1;
+        let mut d = 1usize;
+        let mut inner: Vec<&Tok> = Vec::new();
+        while j < ts.len() && d > 0 {
+            if ts[j].is("[") {
+                d += 1;
+            } else if ts[j].is("]") {
+                d -= 1;
+            }
+            if d > 0 {
+                inner.push(ts[j]);
+            }
+            j += 1;
+        }
+        if inner.is_empty() {
+            i += 1;
+            continue;
+        }
+        let single_literal = inner.len() == 1 && inner[0].kind == TokKind::Num;
+        let full_range = inner.iter().all(|tk| tk.is(".."));
+        if !single_literal && !full_range {
+            let txt: String = inner.iter().map(|tk| tk.text.as_str()).collect();
+            out.push(Finding {
+                rule: "panic-index",
+                file: f.rel.clone(),
+                line: t.line,
+                col: t.col,
+                message: format!(
+                    "unchecked slice index `[{txt}]`; use get()/split-checked access"
+                ),
+            });
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        let f = SrcFile::from_source(rel, src);
+        let mut out = Vec::new();
+        check_panic_calls(&f, &mut out);
+        check_indexing(&f, &mut out);
+        out
+    }
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn flags_unwrap_expect_and_macros_in_scope() {
+        let src = "fn f() { x.unwrap(); y.expect(\"msg\"); panic!(\"boom\"); }";
+        let got = run("rust/src/http/server.rs", src);
+        assert_eq!(rules(&got), vec!["panic-unwrap", "panic-unwrap", "panic-macro"]);
+    }
+
+    #[test]
+    fn out_of_scope_modules_are_ignored() {
+        let src = "fn f() { x.unwrap(); v[i]; }";
+        assert!(run("rust/src/dart/scheduler.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_idiom_is_exempt() {
+        let src = "fn f() { let g = m.lock().unwrap(); let r = rw.read().unwrap(); }";
+        assert!(run("rust/src/http/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_dynamic_index_but_not_literal_or_full_range() {
+        let src = "fn f(v: &[u8], i: usize) { v[i]; v[0]; v[..]; v[i + 1]; }";
+        let got = run("rust/src/json/mod.rs", src);
+        assert_eq!(rules(&got), vec!["panic-index", "panic-index"]);
+    }
+
+    #[test]
+    fn array_literals_attrs_and_types_are_not_indexing() {
+        let src = "#[derive(Clone)] struct S { a: [u8; 32] }\n\
+                   fn f() -> Vec<u8> { let a = [0u8, 1u8]; vec![1, 2] }";
+        assert!(run("rust/src/json/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn strings_comments_and_test_code_are_exempt() {
+        let src = "fn f() { let s = \"x.unwrap()\"; } // y.unwrap()\n\
+                   #[cfg(test)]\nmod tests { fn t() { z.unwrap(); q[i]; } }";
+        assert!(run("rust/src/http/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_suppresses_via_engine() {
+        // the pragma itself is honored by Linter::run; here we just check
+        // the raw finding is produced so the engine has something to drop
+        let src = "// feddart-lint: allow(panic-unwrap): fixture\nfn f() { x.unwrap(); }";
+        let f = SrcFile::from_source("rust/src/http/server.rs", src);
+        let mut out = Vec::new();
+        check_panic_calls(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(f.lexed.pragmas.allows("panic-unwrap", out[0].line));
+    }
+}

@@ -1,0 +1,83 @@
+//! Report rendering for `feddart lint` — human text and machine JSON.
+
+use super::Report;
+use crate::json::Json;
+
+/// `file:line:col: [rule] message` lines plus a summary footer.
+pub fn render_text(r: &Report) -> String {
+    let mut s = String::new();
+    for f in &r.findings {
+        s.push_str(&format!(
+            "{}:{}:{}: [{}] {}\n",
+            f.file, f.line, f.col, f.rule, f.message
+        ));
+    }
+    s.push_str(&format!(
+        "{} finding(s); {} file(s) scanned, {} rule(s) run\n",
+        r.findings.len(),
+        r.files_scanned,
+        r.rules_run.len()
+    ));
+    s
+}
+
+/// Stable JSON shape consumed by the CI lint job's report artifact.
+pub fn render_json(r: &Report) -> String {
+    let findings: Vec<Json> = r
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj()
+                .set("rule", f.rule)
+                .set("file", f.file.as_str())
+                .set("line", f.line as usize)
+                .set("col", f.col as usize)
+                .set("message", f.message.as_str())
+        })
+        .collect();
+    let rules: Vec<Json> = r.rules_run.iter().map(|&x| Json::from(x)).collect();
+    Json::obj()
+        .set("ok", r.findings.is_empty())
+        .set("findings", findings)
+        .set("files_scanned", r.files_scanned)
+        .set("rules_run", rules)
+        .to_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Finding;
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            findings: vec![Finding {
+                rule: "panic-unwrap",
+                file: "rust/src/http/server.rs".to_string(),
+                line: 12,
+                col: 9,
+                message: "`unwrap()` in a panic-free module".to_string(),
+            }],
+            files_scanned: 3,
+            rules_run: vec!["panic-unwrap", "panic-macro"],
+        }
+    }
+
+    #[test]
+    fn text_has_location_and_summary() {
+        let out = render_text(&sample());
+        assert!(out.contains("rust/src/http/server.rs:12:9: [panic-unwrap]"));
+        assert!(out.contains("1 finding(s); 3 file(s) scanned, 2 rule(s) run"));
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let out = render_json(&sample());
+        let j = Json::parse(&out).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        let f = j.get("findings").unwrap().idx(0).unwrap();
+        assert_eq!(f.get("rule").unwrap().as_str(), Some("panic-unwrap"));
+        assert_eq!(f.get("line").unwrap().as_usize(), Some(12));
+        assert_eq!(j.get("rules_run").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1146,11 +1146,10 @@ impl StoreInner {
         let next = transition(cur, &ev.kind)?;
         if !self.states.contains_key(&ev.round_id) {
             self.order.push(ev.round_id);
-            self.states.insert(ev.round_id, RoundState::new(ev.round_id));
         }
         self.states
-            .get_mut(&ev.round_id)
-            .expect("state just ensured")
+            .entry(ev.round_id)
+            .or_insert_with(|| RoundState::new(ev.round_id))
             .absorb(ev, next);
         Ok(next)
     }

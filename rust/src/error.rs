@@ -36,6 +36,9 @@ pub enum FedError {
     /// Privacy subsystem failures (masking, secure aggregation, DP).
     Privacy(String),
 
+    /// Static-analysis (`feddart lint`) configuration / load failures.
+    Lint(String),
+
     /// Underlying I/O.
     Io(std::io::Error),
 }
@@ -52,6 +55,7 @@ impl fmt::Display for FedError {
             FedError::Runtime(m) => write!(f, "runtime error: {m}"),
             FedError::Fact(m) => write!(f, "fact error: {m}"),
             FedError::Privacy(m) => write!(f, "privacy error: {m}"),
+            FedError::Lint(m) => write!(f, "lint error: {m}"),
             FedError::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -923,7 +923,7 @@ impl FactServer {
             // a dump to `trace.jsonl` next to the round-store WAL so the
             // trace survives a coordinator crash (replayed by recover())
             let trace_dir = self.store.trace_dir();
-            for r in &self.history[hist_before..] {
+            for r in self.history.get(hist_before..).unwrap_or(&[]) {
                 let rid = splitmix64(
                     self.session_tag
                         ^ ((r.clustering_round as u64) << 42)
@@ -965,7 +965,7 @@ impl FactServer {
                 // clusters upper-bounds every cluster's subsampled cost
                 // (RDP of the sampled Gaussian is monotone in q).
                 let mut per_round: BTreeMap<usize, f64> = BTreeMap::new();
-                for r in &self.history[hist_before..] {
+                for r in self.history.get(hist_before..).unwrap_or(&[]) {
                     let q = per_round.entry(r.round).or_insert(0.0);
                     if r.sample_rate > *q {
                         *q = r.sample_rate;
@@ -2551,12 +2551,9 @@ fn secagg_recover_aggregate(
                         .get(d)
                         .and_then(|m| m.get(&r.device_name))
                         .and_then(|c| from_hex(c).ok())
-                        .map(|want| {
-                            want.len() == 32
-                                && shamir::verify_share(
-                                    &share,
-                                    want.as_slice().try_into().unwrap(),
-                                )
+                        .map(|want| match <&[u8; 32]>::try_from(want.as_slice()) {
+                            Ok(w) => shamir::verify_share(&share, w),
+                            Err(_) => false,
                         })
                         .unwrap_or(false);
                     if !commit_ok {
@@ -2619,7 +2616,12 @@ fn secagg_recover_aggregate(
                 }
             };
             for s in &uncovered {
-                let their = keys::parse_pubkey_hex(&setup.keys[s])?;
+                let Some(posted_pk) = setup.keys.get(s) else {
+                    // a survivor that never posted a key has no pair mask
+                    // with this dealer to unwind
+                    continue;
+                };
+                let their = keys::parse_pubkey_hex(posted_pk)?;
                 let shared = keys::shared_key(&secret, &their);
                 revealed.push(RevealedSeed {
                     survivor: s.clone(),

@@ -18,7 +18,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::{read_request, write_response, Request, Response};
-use crate::error::Result;
+use crate::error::{FedError, Result};
 
 /// Upper bound on concurrently served connections; beyond it the accept
 /// loop blocks (TCP backlog absorbs the burst) rather than spawning
@@ -77,7 +77,12 @@ impl ConnGate {
     pub(crate) fn acquire(self: &Arc<Self>) -> ConnPermit {
         let mut g = self.count.lock().unwrap();
         while *g >= self.max {
-            g = self.cv.wait(g).unwrap();
+            // a poisoning panic elsewhere must not deadlock the accept
+            // loop: keep the recovered guard and proceed
+            g = match self.cv.wait(g) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
         *g += 1;
         drop(g);
@@ -147,7 +152,7 @@ impl HttpServer {
                     });
                 }
             })
-            .expect("spawn http accept loop");
+            .map_err(|e| FedError::Http(format!("spawn http accept loop: {e}")))?;
         Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread), gate })
     }
 

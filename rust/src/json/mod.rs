@@ -45,6 +45,7 @@ impl Json {
             Json::Obj(m) => {
                 m.insert(key.to_string(), value.into());
             }
+            // feddart-lint: allow(panic-macro): documented builder contract — set() only chains on Json::obj()
             _ => panic!("Json::set on non-object"),
         }
         self
@@ -470,7 +471,7 @@ impl Json {
     /// Parse a binary envelope back into a tree with [`Json::Tensor`]
     /// nodes.
     pub fn from_envelope(bytes: &[u8]) -> Result<Json> {
-        if bytes.len() < 12 || bytes[0..4] != ENVELOPE_MAGIC {
+        if bytes.len() < 12 || !bytes.starts_with(&ENVELOPE_MAGIC) {
             return Err(FedError::Transport("not a tensor envelope".into()));
         }
         let ntensors =
@@ -481,7 +482,10 @@ impl Json {
             .checked_add(json_len)
             .filter(|&e| e <= bytes.len())
             .ok_or_else(|| FedError::Transport("truncated envelope json".into()))?;
-        let js = std::str::from_utf8(&bytes[12..json_end])
+        let js_bytes = bytes
+            .get(12..json_end)
+            .ok_or_else(|| FedError::Transport("truncated envelope json".into()))?;
+        let js = std::str::from_utf8(js_bytes)
             .map_err(|_| FedError::Transport("non-utf8 envelope json".into()))?;
         let tree = Json::parse(js)?;
         // every frame is at least a header: a forged count field cannot
@@ -496,7 +500,10 @@ impl Json {
         let mut tensors = Vec::with_capacity(ntensors);
         let mut off = json_end;
         for _ in 0..ntensors {
-            let (t, used) = TensorBuf::decode_frame(&bytes[off..])?;
+            let frame = bytes.get(off..).ok_or_else(|| {
+                FedError::Transport("truncated tensor frames".into())
+            })?;
+            let (t, used) = TensorBuf::decode_frame(frame)?;
             tensors.push(t);
             off += used;
         }
@@ -505,7 +512,7 @@ impl Json {
 
     /// Whether a wire body is an envelope (vs plain JSON text).
     pub fn is_envelope(bytes: &[u8]) -> bool {
-        bytes.len() >= 4 && bytes[0..4] == ENVELOPE_MAGIC
+        bytes.starts_with(&ENVELOPE_MAGIC)
     }
 
     /// Encode for the wire in one pass: an envelope iff the tree holds
@@ -570,9 +577,7 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn ws(&mut self) {
-        while self.i < self.b.len()
-            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
-        {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
             self.i += 1;
         }
     }
@@ -613,7 +618,7 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
+        if self.b.get(self.i..).is_some_and(|r| r.starts_with(word.as_bytes())) {
             self.i += word.len();
             Ok(v)
         } else {
@@ -714,7 +719,7 @@ impl<'a> Parser<'a> {
                             let hi = self.hex4()?;
                             let c = if (0xD800..0xDC00).contains(&hi) {
                                 // surrogate pair
-                                if self.b[self.i..].starts_with(b"\\u") {
+                                if self.b.get(self.i..).is_some_and(|r| r.starts_with(b"\\u")) {
                                     self.i += 2;
                                     let lo = self.hex4()?;
                                     let cp = 0x10000
@@ -739,12 +744,12 @@ impl<'a> Parser<'a> {
                     }
                     self.i += 1;
                 }
-                Some(_) => {
+                Some(first) => {
                     // copy a full utf-8 scalar
-                    let rest = &self.b[self.i..];
-                    let ch_len = utf8_len(rest[0]);
-                    let chunk = rest
-                        .get(..ch_len)
+                    let ch_len = utf8_len(first);
+                    let chunk = self
+                        .b
+                        .get(self.i..self.i + ch_len)
                         .ok_or_else(|| FedError::Json("bad utf8".into()))?;
                     s.push_str(
                         std::str::from_utf8(chunk)
@@ -781,7 +786,11 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = self
+            .b
+            .get(start..self.i)
+            .and_then(|sl| std::str::from_utf8(sl).ok())
+            .ok_or_else(|| FedError::Json("bad number".into()))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| FedError::Json(format!("bad number '{s}'")))

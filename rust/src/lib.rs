@@ -24,6 +24,7 @@
 //! [`util`], [`cli`], [`config`]) replace the crates unavailable in this
 //! offline environment — see DESIGN.md §Substitutions.
 
+pub mod analysis;
 pub mod benchkit;
 pub mod cli;
 pub mod config;

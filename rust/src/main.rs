@@ -8,6 +8,9 @@
 //! * `train`  — drive federated training against a running server through
 //!              the REST-API (the aggregation component role).
 //! * `rounds` — inspect (or compact) a round-store WAL directory.
+//! * `lint`   — run the in-tree project-invariant static analyzer
+//!              (panic-freedom, crypto hygiene, lock discipline,
+//!              durability/observability drift — see docs/ANALYSIS.md).
 //! * `info`   — show the AOT artifact manifest.
 //!
 //! `run`, `train`, and `server` accept `--round-store DIR` to persist
@@ -66,6 +69,7 @@ fn main() {
         Some("client") => cmd_client(&args),
         Some("train") => cmd_train(&args),
         Some("rounds") => cmd_rounds(&args),
+        Some("lint") => cmd_lint(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -82,7 +86,7 @@ fn print_usage() {
     println!(
         "feddart — Fed-DART + FACT federated learning runtime
 
-USAGE: feddart <run|server|client|train|rounds|info> [options]
+USAGE: feddart <run|server|client|train|rounds|lint|info> [options]
 
 run     --model mlp_default --clients 8 --rounds 20 --local-steps 4
         --lr 0.1 --mu 0.0 --aggregation weighted_fedavg
@@ -94,6 +98,9 @@ client  --name client-0 --clients 2 --server 127.0.0.1:7700
 train   --server 127.0.0.1:7701 --rest-key 000 --model mlp_default
         --rounds 20 --min-clients 2
 rounds  --round-store DIR [--compact] [--trace ROUND_ID]
+lint    [--root DIR] [--format text|json] [--rule ID-or-family]
+        (project-invariant static analysis; exits 1 on findings —
+         see docs/ANALYSIS.md for the rule catalog and pragmas)
 info    [--artifacts DIR]
 
 durability (run/train/server): --round-store DIR
@@ -510,6 +517,29 @@ fn cmd_info(args: &Args) -> Result<()> {
             e.inputs.len(),
             e.outputs.len()
         );
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use feddart::analysis::{find_repo_root, report, Linter};
+    let root = match args.opt("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => find_repo_root(&std::env::current_dir()?)?,
+    };
+    let linter = Linter::load(&root)?;
+    let rep = linter.run(args.opt("rule"))?;
+    match args.opt_or("format", "text") {
+        "json" => println!("{}", report::render_json(&rep)),
+        "text" => print!("{}", report::render_text(&rep)),
+        other => {
+            return Err(feddart::FedError::Lint(format!(
+                "--format expects text or json, got '{other}'"
+            )))
+        }
+    }
+    if !rep.findings.is_empty() {
+        std::process::exit(1);
     }
     Ok(())
 }

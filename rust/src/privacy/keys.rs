@@ -183,13 +183,25 @@ fn modpow(base: &[u64; L], exp: &[u8; 32]) -> [u64; L] {
 }
 
 /// A per-round DH keypair.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct RoundKeys {
     /// The raw 32-byte secret (pre-clamp) — this exact value is what
     /// Shamir shares carry, so reconstruction regenerates the keypair.
     pub secret: [u8; 32],
     /// `g^clamp(secret) mod p`, fixed-width big-endian.
     pub public: [u8; PUBKEY_BYTES],
+}
+
+// Manual impl: the derive would print `secret` byte-for-byte into any
+// `{:?}` sink (logs, panics, test output).  Only the public half is
+// printable.
+impl std::fmt::Debug for RoundKeys {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RoundKeys")
+            .field("secret", &"[redacted; 32 bytes]")
+            .field("public", &to_hex(&self.public))
+            .finish()
+    }
 }
 
 /// Derive a client's round secret from its long-lived client secret:

@@ -93,7 +93,7 @@ pub struct MaskedUpdate {
 }
 
 /// A pair seed revealed by `survivor` for `dropped` during recovery.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct RevealedSeed {
     /// Surviving client that held (or had reconstructed) the seed.
     pub survivor: String,
@@ -101,6 +101,18 @@ pub struct RevealedSeed {
     pub dropped: String,
     /// The 32-byte pair mask seed.
     pub seed: [u8; 32],
+}
+
+// Manual impl: revealed seeds are secrets until the round retires — a
+// derived Debug would spill them into trace logs and test failures.
+impl std::fmt::Debug for RevealedSeed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RevealedSeed")
+            .field("survivor", &self.survivor)
+            .field("dropped", &self.dropped)
+            .field("seed", &"[redacted; 32 bytes]")
+            .finish()
+    }
 }
 
 /// Recover the weighted aggregate from masked submissions.
@@ -208,7 +220,6 @@ impl Phase {
 }
 
 /// Server-side state of one secure-aggregation round.
-#[derive(Debug)]
 pub struct SecAggRound {
     /// Round identifier (splitmix hash or client-chosen).
     pub id: u64,
@@ -240,6 +251,24 @@ pub struct SecAggRound {
     /// echoed in the status document so clients learn the round's close
     /// semantics from the bulletin board.
     participation: Option<Json>,
+}
+
+// Manual impl: the round state holds encrypted shares, share commitments
+// and revealed Shamir shares — all secret-bearing until the round
+// retires.  Debug prints phase/shape only, never the payloads.
+impl std::fmt::Debug for SecAggRound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SecAggRound")
+            .field("id", &self.id)
+            .field("phase", &self.phase().as_str())
+            .field("participants", &self.participants.len())
+            .field("threshold", &self.threshold)
+            .field("enc_shares", &"[redacted]")
+            .field("share_commits", &"[redacted]")
+            .field("revealed_shares", &"[redacted]")
+            .field("updates", &self.updates.len())
+            .finish_non_exhaustive()
+    }
 }
 
 impl SecAggRound {

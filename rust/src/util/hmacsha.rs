@@ -113,10 +113,21 @@ pub fn sha256(data: &[u8]) -> [u8; 32] {
 /// costs two compressions instead of four.  The privacy subsystem's mask
 /// expansion calls the PRF once per 32 output bytes, which makes this the
 /// hot path of a masked round.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct HmacKey {
     inner: [u32; 8],
     outer: [u32; 8],
+}
+
+// Manual impl: the cached ipad/opad states are derived from the raw key,
+// so a derived Debug would leak key material into any `{:?}` sink.
+impl std::fmt::Debug for HmacKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HmacKey")
+            .field("inner", &"[redacted]")
+            .field("outer", &"[redacted]")
+            .finish()
+    }
 }
 
 impl HmacKey {

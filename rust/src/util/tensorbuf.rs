@@ -141,8 +141,10 @@ impl TensorBuf {
         out.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
         out.extend_from_slice(&[0u8; 4]); // checksum patched below
         Self::extend_payload(&mut out, &self.data);
-        let crc = crc32(&out[TENSOR_HEADER_LEN..]);
-        out[8..12].copy_from_slice(&crc.to_le_bytes());
+        let crc = crc32(out.get(TENSOR_HEADER_LEN..).unwrap_or(&[]));
+        if let Some(dst) = out.get_mut(8..12) {
+            dst.copy_from_slice(&crc.to_le_bytes());
+        }
         out
     }
 
@@ -153,7 +155,7 @@ impl TensorBuf {
         if bytes.len() < TENSOR_HEADER_LEN {
             return Err(FedError::Transport("truncated tensor frame header".into()));
         }
-        if bytes[0..4] != TENSOR_MAGIC {
+        if !bytes.starts_with(&TENSOR_MAGIC) {
             return Err(FedError::Transport("bad tensor frame magic".into()));
         }
         let n = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
@@ -165,7 +167,9 @@ impl TensorBuf {
             )));
         }
         let expect = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
-        let payload = &bytes[TENSOR_HEADER_LEN..total];
+        let payload = bytes
+            .get(TENSOR_HEADER_LEN..total)
+            .ok_or_else(|| FedError::Transport("truncated tensor frame".into()))?;
         let got = crc32(payload);
         if got != expect {
             return Err(FedError::Transport(format!(
@@ -217,6 +221,7 @@ const CRC_TABLE: [u32; 256] = {
             c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
             k += 1;
         }
+        // feddart-lint: allow(panic-index): const-eval table build, i < 256 by the loop bound
         table[i] = c;
         i += 1;
     }
@@ -227,6 +232,7 @@ const CRC_TABLE: [u32; 256] = {
 pub fn crc32(data: &[u8]) -> u32 {
     let mut c = 0xFFFF_FFFFu32;
     for &b in data {
+        // feddart-lint: allow(panic-index): `& 0xFF` bounds the index to the 256-entry table
         c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
     c ^ 0xFFFF_FFFF

@@ -1,0 +1,183 @@
+//! Self-hosting gate for `feddart lint` (ISSUE 9 acceptance).
+//!
+//! Two halves:
+//!
+//! 1. **The repo lints itself clean.**  `lint_repo_is_clean` loads the
+//!    real source tree (the parent of `CARGO_MANIFEST_DIR`) and asserts
+//!    zero findings across every rule.  A change that introduces an
+//!    `unwrap()` in transport code, a derived `Debug` over key material,
+//!    a lock acquired against the declared hierarchy, or an undocumented
+//!    metric fails *this test* — before CI even reaches the dedicated
+//!    lint job.
+//!
+//! 2. **Every rule family still bites.**  A clean self-lint is only
+//!    meaningful if the rules detect anything at all, so the fixture
+//!    tests seed a temp-dir source tree with one violation per family
+//!    and assert the engine flags each.  This guards against the
+//!    classic linter failure mode: a refactor that silently turns every
+//!    rule into a no-op keeps the repo "clean" forever.
+
+use std::path::{Path, PathBuf};
+
+use feddart::analysis::{report, Linter};
+
+// ------------------------------------------------------------ self-host
+
+#[test]
+fn lint_repo_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf();
+    let linter = Linter::load(&root).expect("load repo sources");
+    let rep = linter.run(None).expect("run all rules");
+    assert!(
+        rep.findings.is_empty(),
+        "repo must lint clean; findings:\n{}",
+        report::render_text(&rep)
+    );
+    assert!(rep.files_scanned > 20, "expected to scan the real tree");
+    assert_eq!(rep.rules_run.len(), feddart::analysis::ALL_RULES.len());
+}
+
+// ------------------------------------------------------------- fixtures
+
+fn fixture_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("feddart-lint-fixture-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn put(root: &Path, rel: &str, src: &str) {
+    let p = root.join(rel);
+    std::fs::create_dir_all(p.parent().expect("parent")).expect("mkdir");
+    std::fs::write(p, src).expect("write fixture");
+}
+
+fn run_family(root: &Path, family: &str) -> Vec<String> {
+    let linter = Linter::load(root).expect("load fixtures");
+    let rep = linter.run(Some(family)).expect("run family");
+    rep.findings.iter().map(|f| f.rule.to_string()).collect()
+}
+
+#[test]
+fn fixture_panic_family_bites() {
+    let root = fixture_root("panic");
+    put(
+        &root,
+        "rust/src/http/mod.rs",
+        "pub fn handle(v: Vec<u8>, i: usize) -> u8 {\n\
+         \x20   let first = v.first().unwrap();\n\
+         \x20   let _ = first;\n\
+         \x20   v[i]\n\
+         }\n\
+         pub fn boom() {\n\
+         \x20   panic!(\"no\");\n\
+         }\n",
+    );
+    let rules = run_family(&root, "panic");
+    assert!(rules.iter().any(|r| r == "panic-unwrap"), "{rules:?}");
+    assert!(rules.iter().any(|r| r == "panic-index"), "{rules:?}");
+    assert!(rules.iter().any(|r| r == "panic-macro"), "{rules:?}");
+}
+
+#[test]
+fn fixture_crypto_family_bites() {
+    let root = fixture_root("crypto");
+    put(
+        &root,
+        "rust/src/privacy/keys.rs",
+        "#[derive(Debug, Clone)]\n\
+         pub struct Keys {\n\
+         \x20   pub secret_key: [u8; 32],\n\
+         \x20   pub tag: u64,\n\
+         }\n\
+         pub fn check(expected: &[u8], secret: &[u8]) -> bool {\n\
+         \x20   let r = Rng::new(7);\n\
+         \x20   let _ = r;\n\
+         \x20   println!(\"leak {:?}\", secret);\n\
+         \x20   secret == expected\n\
+         }\n",
+    );
+    let rules = run_family(&root, "crypto");
+    assert!(rules.iter().any(|r| r == "crypto-secret-debug"), "{rules:?}");
+    assert!(rules.iter().any(|r| r == "crypto-secret-leak"), "{rules:?}");
+    assert!(rules.iter().any(|r| r == "crypto-ct-eq"), "{rules:?}");
+    assert!(rules.iter().any(|r| r == "crypto-weak-rng"), "{rules:?}");
+}
+
+#[test]
+fn fixture_lock_family_bites() {
+    let root = fixture_root("lock");
+    put(
+        &root,
+        "rust/src/dart/scheduler.rs",
+        "pub fn bad(&self) {\n\
+         \x20   let q = self.queue.lock().unwrap();\n\
+         \x20   let w = self.workers.lock().unwrap();\n\
+         \x20   let _ = (q, w);\n\
+         \x20   self.file.sync_all().ok();\n\
+         }\n",
+    );
+    let rules = run_family(&root, "lock");
+    assert!(rules.iter().any(|r| r == "lock-order"), "{rules:?}");
+    assert!(rules.iter().any(|r| r == "lock-io"), "{rules:?}");
+}
+
+#[test]
+fn fixture_drift_family_bites() {
+    let root = fixture_root("drift");
+    put(
+        &root,
+        "rust/src/coordinator/round_store.rs",
+        "pub enum EventKind { Opened, Closed, Voided }\n\
+         pub fn transition(ev: &EventKind) {\n\
+         \x20   match ev { EventKind::Opened => {}, _ => {} }\n\
+         }\n\
+         pub fn absorb(ev: &EventKind) {\n\
+         \x20   match ev {\n\
+         \x20       EventKind::Opened => {}\n\
+         \x20       EventKind::Closed => {}\n\
+         \x20       EventKind::Voided => {}\n\
+         \x20   }\n\
+         }\n\
+         pub fn emit() {\n\
+         \x20   bump(\"fact.fixture_counter\");\n\
+         }\n",
+    );
+    put(
+        &root,
+        "rust/src/fact/server.rs",
+        "pub fn settle(&mut self) {\n\
+         \x20   self.ledger.append_charge(1);\n\
+         \x20   self.trace.dump_round(1);\n\
+         }\n",
+    );
+    put(&root, "docs/OPERATIONS.md", "# Operations\n\nNo counters yet.\n");
+    let rules = run_family(&root, "drift");
+    assert!(
+        rules.iter().any(|r| r == "drift-event-coverage"),
+        "{rules:?}"
+    );
+    assert!(rules.iter().any(|r| r == "drift-trace-order"), "{rules:?}");
+    assert!(rules.iter().any(|r| r == "drift-metrics-doc"), "{rules:?}");
+}
+
+#[test]
+fn fixture_pragma_suppresses_at_engine_level() {
+    let root = fixture_root("pragma");
+    put(
+        &root,
+        "rust/src/http/mod.rs",
+        "pub fn boom() {\n\
+         \x20   // feddart-lint: allow(panic-macro): fixture justification\n\
+         \x20   panic!(\"covered by the pragma above\");\n\
+         }\n",
+    );
+    let rules = run_family(&root, "panic");
+    assert!(
+        rules.is_empty(),
+        "pragma should suppress the sole finding: {rules:?}"
+    );
+}
