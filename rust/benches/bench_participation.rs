@@ -123,6 +123,115 @@ fn round_close_bench(mut report: BenchReport) -> BenchReport {
     report
 }
 
+/// Overhead of the layered round pipeline's pluggable seams: a clear-mode
+/// FactServer session under the identity configuration (`PlainReplace` +
+/// `plain`, behaviorally the pre-refactor update) vs the same session
+/// with the stateful seams fully engaged (FedAvgM server momentum +
+/// FedNova local normalization, which adds per-round optimizer-state
+/// serialization into the `Aggregated` event).  The seams must stay
+/// within 5% of the identity round time (or a small absolute delta —
+/// sub-millisecond machinery on a fast round must not flake CI).
+fn pipeline_overhead_bench(mut report: BenchReport) -> BenchReport {
+    use std::sync::Arc;
+
+    use feddart::fact::aggregation::Aggregation;
+    use feddart::fact::model::FactModel;
+    use feddart::fact::rounds::optimizer::{
+        FedAvgM, PlainReplace, ServerOptimizer,
+    };
+    use feddart::fact::rounds::strategy::LocalStrategy;
+    use feddart::fact::stopping::FixedRoundFl;
+    use feddart::fact::FactServer;
+    use feddart::util::tensorbuf::TensorBuf;
+
+    const PARAMS: usize = 10_000;
+    struct BenchModel;
+    impl FactModel for BenchModel {
+        fn name(&self) -> &str {
+            "benchmodel"
+        }
+        fn param_count(&self) -> usize {
+            PARAMS
+        }
+        fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+            Ok(feddart::util::rng::golden_f32(seed as u32, PARAMS))
+        }
+        fn aggregation(&self) -> &Aggregation {
+            &Aggregation::WeightedFedAvg
+        }
+    }
+
+    let clients = 8;
+    let rounds = if smoke() { 3 } else { 10 };
+    let iters = if smoke() { 2 } else { 5 };
+
+    let session =
+        |opt: Arc<dyn ServerOptimizer>, strategy: LocalStrategy| -> f64 {
+            let st = time_n(1, iters, || {
+                let reg = TaskRegistry::new();
+                reg.register("fact_init", |_| Ok(Json::Null));
+                reg.register("fact_learn", |p| {
+                    let t = TensorBuf::from_json(p.need("params")?)?;
+                    let out: Vec<f32> =
+                        t.as_f32_slice().iter().map(|v| v * 0.99).collect();
+                    Ok(Json::obj()
+                        .set("params", TensorBuf::from_f32_vec(out))
+                        .set("n_samples", 64)
+                        .set("tau", 4.0))
+                });
+                let wm = WorkflowManager::test_mode(clients, reg, 8);
+                let mut server = FactServer::new(wm)
+                    .with_server_opt(Arc::clone(&opt))
+                    .with_local_strategy(strategy);
+                server
+                    .initialization_by_model(
+                        Arc::new(BenchModel),
+                        Arc::new(FixedRoundFl(rounds)),
+                        1,
+                    )
+                    .expect("init");
+                server.learn().expect("learn");
+                std::hint::black_box(server.history().len());
+            });
+            st.mean / rounds as f64
+        };
+
+    let identity = session(Arc::new(PlainReplace), LocalStrategy::Plain);
+    let seams = session(
+        Arc::new(FedAvgM { lr: 1.0, momentum: 0.9 }),
+        LocalStrategy::FedNova,
+    );
+    let ratio = seams / identity.max(1e-12);
+    // lenient: percentage gate for real rounds, absolute floor so a
+    // microsecond-scale test-mode round cannot flake on scheduler noise
+    let ok = ratio < 1.05 || (seams - identity) < 2e-3;
+
+    let mut t = Table::new(&["config", "round", "ratio"]);
+    t.row(&["plain/plain (identity)".into(), fmt_s(identity), "1.00x".into()]);
+    t.row(&[
+        "fedavgm/fednova (seams)".into(),
+        fmt_s(seams),
+        format!("{ratio:.2}x"),
+    ]);
+    t.print(&format!(
+        "pipeline seam overhead ({clients} clients, {PARAMS} params, {rounds} rounds/session)"
+    ));
+    println!(
+        "\npipeline verdict: stateful seams cost {ratio:.2}x the identity round \
+         (target < 1.05x or < 2ms absolute)."
+    );
+    assert!(
+        ok,
+        "pipeline seam overhead regression: identity {identity:.6}s vs seams \
+         {seams:.6}s per round ({ratio:.2}x)"
+    );
+    report
+        .set("pipeline_identity_round_s", identity)
+        .set("pipeline_seams_round_s", seams)
+        .set("pipeline_overhead_ratio", ratio)
+        .set("pipeline_overhead_ok", ok)
+}
+
 fn main() {
     println!(
         "bench_participation: smoke={} (BENCH_SMOKE=1 for CI mode)",
@@ -131,6 +240,7 @@ fn main() {
     let mut report = BenchReport::new("participation").set("smoke", smoke());
     report = sampler_bench(report);
     report = round_close_bench(report);
+    report = pipeline_overhead_bench(report);
     match report.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\nfailed to write report: {e}"),

@@ -84,6 +84,7 @@ fn build_round(n: usize) -> (Vec<ClientUpdate>, Vec<MaskedUpdate>) {
             n_samples,
             loss: 0.0,
             duration: 0.0,
+            tau: 0.0,
         });
         masked.push(MaskedUpdate {
             device: me.clone(),

@@ -229,6 +229,7 @@ fn run_round(n_params: usize, binary: bool) -> f64 {
             n_samples: 32.0,
             loss: 0.0,
             duration: r.duration,
+            tau: 0.0,
         })
         .collect();
     let agg = Aggregation::WeightedFedAvg.aggregate(&updates, None).unwrap();

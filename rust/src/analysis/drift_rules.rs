@@ -7,11 +7,14 @@
 //! * `drift-event-coverage` — every `EventKind` variant in the round
 //!   store must have an arm in both the `transition` legality check and
 //!   the `absorb` replay path.  A variant added to one but not the
-//!   other replays differently than it commits.
-//! * `drift-trace-order` — in `fact::server`, any function that both
-//!   dumps round traces and appends ε-charges must dump first: the
-//!   flight recorder write must land before the accountant mutates, so
-//!   a crash between the two leaves evidence, not a silent charge.
+//!   other replays differently than it commits.  When the event schema
+//!   carries the durable server-optimizer state (`opt_state`), `absorb`
+//!   must also materialize it — else replay silently drops momentum.
+//! * `drift-trace-order` — in `fact::server` and the `fact::rounds`
+//!   pipeline, any function that both dumps round traces and appends
+//!   ε-charges must dump first: the flight recorder write must land
+//!   before the accountant mutates, so a crash between the two leaves
+//!   evidence, not a silent charge.
 //! * `drift-metrics-doc` — every emitted `fact.*` / `dart.*` metric
 //!   name must be documented in docs/OPERATIONS.md, and every
 //!   documented name must still be emitted (both directions).
@@ -31,6 +34,7 @@ use super::{Finding, SrcFile};
 
 const ROUND_STORE: &str = "rust/src/coordinator/round_store.rs";
 const FACT_SERVER: &str = "rust/src/fact/server.rs";
+const ROUNDS_DIR: &str = "rust/src/fact/rounds/";
 const OPS_DOC: &str = "docs/OPERATIONS.md";
 
 fn live(f: &SrcFile) -> Vec<&Tok> {
@@ -39,6 +43,32 @@ fn live(f: &SrcFile) -> Vec<&Tok> {
 
 fn by_rel<'a>(files: &'a [SrcFile], rel: &str) -> Option<&'a SrcFile> {
     files.iter().find(|f| f.rel == rel)
+}
+
+/// The `{ … }` body tokens of `enum <name>` (fields included).
+fn enum_body<'s, 'a>(ts: &'s [&'a Tok], name: &str) -> &'s [&'a Tok] {
+    let mut i = 0usize;
+    while i + 1 < ts.len() {
+        if ts[i].is_ident("enum") && ts[i + 1].is_ident(name) {
+            let mut j = i + 2;
+            while j < ts.len() && !ts[j].is("{") {
+                j += 1;
+            }
+            let mut k = j + 1;
+            let mut d = 1usize;
+            while k < ts.len() && d > 0 {
+                if ts[k].is("{") {
+                    d += 1;
+                } else if ts[k].is("}") {
+                    d -= 1;
+                }
+                k += 1;
+            }
+            return &ts[j..k];
+        }
+        i += 1;
+    }
+    &[]
 }
 
 /// Variant names of `enum <name>` (unit and struct variants).
@@ -149,12 +179,40 @@ pub fn check_event_coverage(files: &[SrcFile], out: &mut Vec<Finding>) {
             }
         }
     }
+    // Durable optimizer state: when the event schema carries `opt_state`
+    // (the `Aggregated` payload persisting server-optimizer buffers), the
+    // `absorb` replay path must materialize it — an absorb that pattern-
+    // matches the field away replays a crash into a state that silently
+    // forgot its momentum/Adam buffers.  Guarded on the enum declaration
+    // so schemas without the field are not held to it.
+    if enum_body(&ts, "EventKind").iter().any(|t| t.is_ident("opt_state")) {
+        let absorb = fn_body(&ts, "absorb");
+        if !absorb.iter().any(|t| t.is_ident("opt_state")) {
+            out.push(Finding {
+                rule: "drift-event-coverage",
+                file: f.rel.clone(),
+                line: ts[0].line,
+                col: ts[0].col,
+                message: "EventKind carries `opt_state` but `absorb` never \
+                          touches it: optimizer state would be dropped on replay"
+                    .to_string(),
+            });
+        }
+    }
 }
 
 /// `drift-trace-order`: the flight-recorder dump must precede ε-charge
-/// appends inside any fact::server function using both.
+/// appends inside any fact::server / fact::rounds function using both.
 pub fn check_trace_order(files: &[SrcFile], out: &mut Vec<Finding>) {
-    let Some(f) = by_rel(files, FACT_SERVER) else { return };
+    for f in files {
+        if f.rel != FACT_SERVER && !f.rel.starts_with(ROUNDS_DIR) {
+            continue;
+        }
+        check_trace_order_file(f, out);
+    }
+}
+
+fn check_trace_order_file(f: &SrcFile, out: &mut Vec<Finding>) {
     let ts = live(f);
     let mut i = 0usize;
     while i < ts.len() {
@@ -380,6 +438,52 @@ mod tests {
         let mut out = Vec::new();
         check_event_coverage(&[f], &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn event_coverage_requires_opt_state_in_absorb() {
+        // schema carries opt_state but absorb pattern-matches it away
+        let src = "pub enum EventKind { Aggregated { params: u64, opt_state: u64 } }\n\
+                   fn transition(k: &EventKind) { match k { EventKind::Aggregated { .. } => {} } }\n\
+                   fn absorb(k: EventKind) { match k { EventKind::Aggregated { .. } => {} } }";
+        let f = SrcFile::from_source(ROUND_STORE, src);
+        let mut out = Vec::new();
+        check_event_coverage(&[f], &mut out);
+        assert_eq!(
+            msgs(&out),
+            vec![
+                "EventKind carries `opt_state` but `absorb` never touches it: \
+                 optimizer state would be dropped on replay"
+            ]
+        );
+
+        // destructuring the field in absorb satisfies the rule
+        let src = "pub enum EventKind { Aggregated { params: u64, opt_state: u64 } }\n\
+                   fn transition(k: &EventKind) { match k { EventKind::Aggregated { .. } => {} } }\n\
+                   fn absorb(k: EventKind) { match k { EventKind::Aggregated { opt_state, .. } => { use_it(opt_state); } } }";
+        let f = SrcFile::from_source(ROUND_STORE, src);
+        let mut out = Vec::new();
+        check_event_coverage(&[f], &mut out);
+        assert!(out.is_empty(), "unexpected: {:?}", msgs(&out));
+
+        // schemas without the field are not held to it
+        let src = "pub enum EventKind { Aggregated { params: u64 } }\n\
+                   fn transition(k: &EventKind) { match k { EventKind::Aggregated { .. } => {} } }\n\
+                   fn absorb(k: EventKind) { match k { EventKind::Aggregated { .. } => {} } }";
+        let f = SrcFile::from_source(ROUND_STORE, src);
+        let mut out = Vec::new();
+        check_event_coverage(&[f], &mut out);
+        assert!(out.is_empty(), "unexpected: {:?}", msgs(&out));
+    }
+
+    #[test]
+    fn trace_order_scans_rounds_pipeline_files() {
+        let src = "fn finish(&mut self) { self.acct.append_charge(c); self.rec.dump_round(id); }";
+        let f = SrcFile::from_source("rust/src/fact/rounds/phases.rs", src);
+        let mut out = Vec::new();
+        check_trace_order(&[f], &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("fn `finish`"));
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! The modules in [`PANIC_SCOPE`] parse attacker-controlled bytes (HTTP,
 //! JSON, tensor frames, DART transport) or sit on the durability path
-//! (round store, FACT server).  A panic there is a remote crash — or a
+//! (round store, FACT server, the round pipeline under `fact::rounds`).  A panic there is a remote crash — or a
 //! poisoned lock that cascades one — so these modules must surface
 //! failures as typed `FedError`s instead:
 //!
@@ -27,6 +27,7 @@ pub const PANIC_SCOPE: &[&str] = &[
     "json",
     "util::tensorbuf",
     "fact::server",
+    "fact::rounds",
     "coordinator::round_store",
 ];
 

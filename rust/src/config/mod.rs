@@ -168,6 +168,12 @@ pub struct FlConfig {
     pub mu: f32,
     pub seed: u64,
     pub aggregation: String,
+    /// Server-side optimizer applied to the aggregate: `plain`,
+    /// `fedavgm[:momentum[:lr]]`, or `fedadam[:lr[:b1[:b2[:eps]]]]`.
+    pub server_opt: String,
+    /// Client local-update strategy: `plain`, `fedprox[:mu]`, or
+    /// `fednova`.
+    pub local_strategy: String,
 }
 
 impl Default for FlConfig {
@@ -180,6 +186,8 @@ impl Default for FlConfig {
             mu: 0.0,
             seed: 42,
             aggregation: "weighted_fedavg".into(),
+            server_opt: "plain".into(),
+            local_strategy: "plain".into(),
         }
     }
 }
@@ -201,6 +209,16 @@ impl FlConfig {
                 .get("aggregation")
                 .and_then(Json::as_str)
                 .unwrap_or(&d.aggregation)
+                .into(),
+            server_opt: j
+                .get("server_opt")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.server_opt)
+                .into(),
+            local_strategy: j
+                .get("local_strategy")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.local_strategy)
                 .into(),
         }
     }
@@ -632,6 +650,15 @@ mod tests {
         assert!((c.mu - 0.1).abs() < 1e-6);
         assert_eq!(c.model, "mlp_default");
         assert_eq!(c.local_steps, 4);
+        assert_eq!(c.server_opt, "plain");
+        assert_eq!(c.local_strategy, "plain");
+        let j = Json::parse(
+            r#"{"server_opt": "fedavgm:0.9:1.0", "local_strategy": "fednova"}"#,
+        )
+        .unwrap();
+        let c = FlConfig::from_json(&j);
+        assert_eq!(c.server_opt, "fedavgm:0.9:1.0");
+        assert_eq!(c.local_strategy, "fednova");
     }
 
     #[test]

@@ -58,6 +58,25 @@ impl LatencyTracker {
         ring.push_back(ms);
     }
 
+    /// Record one completed learn round for `client`: `total_ms` is the
+    /// server-observed submit→complete wall time, `compute_ms` the
+    /// client-reported on-device compute time when it reported one.
+    ///
+    /// When the client reports its compute time, *that* is what enters
+    /// the ring — a client that computes fast but sat in a deep worker
+    /// queue should not inflate the adaptive-deadline percentile with
+    /// queueing delay the next round will not repeat.  A client-reported
+    /// time above the server-observed total is clock skew, not signal,
+    /// so it is capped at `total_ms`.  Without a report, the wall time
+    /// is the best available estimate.
+    pub fn observe_round(&self, client: &str, total_ms: u64, compute_ms: Option<u64>) {
+        let ms = match compute_ms {
+            Some(c) => c.min(total_ms),
+            None => total_ms,
+        };
+        self.observe(client, ms);
+    }
+
     /// Record a censored observation: `client` had not reported when the
     /// round closed after `ms`, so its true latency is *at least* `ms`.
     /// Recording the lower bound keeps chronic stragglers from shrinking
@@ -298,6 +317,29 @@ mod tests {
         assert!(!d.adaptive);
         assert_eq!(d.observed_ms, None);
         assert_eq!(d.deadline_ms, 2_000);
+    }
+
+    #[test]
+    fn queue_time_does_not_inflate_compute_percentile() {
+        let t = LatencyTracker::new(16, 4);
+        // a fast-compute client stuck behind a deep worker queue: wall
+        // time 5s, on-device compute 80ms — the ring records the compute
+        for _ in 0..4 {
+            t.observe_round("queued", 5_000, Some(80));
+        }
+        assert_eq!(t.quantile(1.0).unwrap(), 80);
+        let (d, adaptive) = effective_deadline(&t, &cfg(DeadlineMode::P90), &[]);
+        assert!(adaptive);
+        assert_eq!(d, 120); // 80 * 1.5 margin — not 7_500
+        // no compute report: the wall time is all we have
+        t.observe_round("silent", 400, None);
+        let silent = vec!["silent".to_string()];
+        assert_eq!(t.quantile_for(&silent, 1.0).unwrap(), 400);
+        // skewed client clock claiming more compute than the round took
+        // is capped at the observed total
+        t.observe_round("skewed", 300, Some(9_999));
+        let skewed = vec!["skewed".to_string()];
+        assert_eq!(t.quantile_for(&skewed, 1.0).unwrap(), 300);
     }
 
     #[test]

@@ -172,17 +172,24 @@ pub struct StoredUpdate {
     pub loss: f32,
     /// Client-side wall-clock seconds spent on the task.
     pub duration: f64,
+    /// Client-reported effective local step count (FedNova; 0 = not
+    /// reported / not a FedNova round).
+    pub tau: f32,
 }
 
 impl StoredUpdate {
     /// Serialize to the WAL JSON form.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut o = Json::obj()
             .set("device", self.device.as_str())
             .set("params", self.params.clone())
             .set("n_samples", self.n_samples)
             .set("loss", self.loss)
-            .set("duration", self.duration)
+            .set("duration", self.duration);
+        if self.tau != 0.0 {
+            o = o.set("tau", self.tau);
+        }
+        o
     }
 
     /// Parse the WAL JSON form back.
@@ -198,6 +205,7 @@ impl StoredUpdate {
             n_samples: j.get("n_samples").and_then(Json::as_f64).unwrap_or(0.0) as f32,
             loss: j.get("loss").and_then(Json::as_f64).unwrap_or(0.0) as f32,
             duration: j.get("duration").and_then(Json::as_f64).unwrap_or(0.0),
+            tau: j.get("tau").and_then(Json::as_f64).unwrap_or(0.0) as f32,
         })
     }
 }
@@ -299,6 +307,10 @@ pub enum EventKind {
         params: TensorBuf,
         /// Serialized `RoundRecord` audit entry.
         record: Json,
+        /// Post-apply server-optimizer state (serialized `OptState`;
+        /// `Null` under a stateless rule) — resuming at this phase
+        /// restores the optimizer's buffers exactly, not just params.
+        opt_state: Json,
     },
     /// Round fully accounted; terminal.
     Closed,
@@ -483,9 +495,17 @@ impl RoundEvent {
                 .set("late", *late)
                 .set("dropped", str_vec_json(dropped)),
             EventKind::Revealed { audit } => base.set("audit", audit.clone()),
-            EventKind::Aggregated { params, record } => base
-                .set("params", params.clone())
-                .set("record", record.clone()),
+            EventKind::Aggregated { params, record, opt_state } => {
+                let mut o = base
+                    .set("params", params.clone())
+                    .set("record", record.clone());
+                // omitted when Null: a stateless optimizer's WAL stays
+                // byte-identical to the pre-seam format
+                if !matches!(opt_state, Json::Null) {
+                    o = o.set("opt_state", opt_state.clone());
+                }
+                o
+            }
             EventKind::Closed => base,
             EventKind::Voided { reason, record } => base
                 .set("reason", reason.as_str())
@@ -561,6 +581,7 @@ impl RoundEvent {
             "aggregated" => EventKind::Aggregated {
                 params: TensorBuf::from_json(j.need("params")?)?,
                 record: j.get("record").cloned().unwrap_or(Json::Null),
+                opt_state: j.get("opt_state").cloned().unwrap_or(Json::Null),
             },
             "closed" => EventKind::Closed,
             "voided" => EventKind::Voided {
@@ -705,6 +726,10 @@ pub struct RoundState {
     /// Post-apply cluster params — kept through `Closed` so recovery can
     /// fast-forward the cluster model exactly.
     pub params_after: Option<TensorBuf>,
+    /// Post-apply server-optimizer state (serialized `OptState`) — kept
+    /// through `Closed` like `params_after`, so recovery under a
+    /// stateful optimizer restores the exact momentum buffers.
+    pub opt_state: Option<Json>,
     /// Serialized `RoundRecord`, once aggregated or voided with one.
     pub record: Option<Json>,
     /// Why the round was voided, if it was.
@@ -740,6 +765,7 @@ impl RoundState {
             dropped: Vec::new(),
             audit: None,
             params_after: None,
+            opt_state: None,
             record: None,
             void_reason: None,
         }
@@ -817,9 +843,14 @@ impl RoundState {
             EventKind::Revealed { audit } => {
                 self.audit = Some(audit.clone());
             }
-            EventKind::Aggregated { params, record } => {
+            EventKind::Aggregated { params, record, opt_state } => {
                 self.params_after = Some(params.clone());
                 self.record = Some(record.clone());
+                self.opt_state = if opt_state.is_null() {
+                    None
+                } else {
+                    Some(opt_state.clone())
+                };
             }
             EventKind::Closed => {}
             EventKind::Voided { reason, record } => {
@@ -878,6 +909,9 @@ impl RoundState {
         }
         if let Some(p) = &self.params_after {
             o = o.set("params_after", p.clone());
+        }
+        if let Some(s) = &self.opt_state {
+            o = o.set("opt_state", s.clone());
         }
         if let Some(r) = &self.record {
             o = o.set("record", r.clone());
@@ -939,6 +973,7 @@ impl RoundState {
         if let Some(p) = j.get("params_after") {
             s.params_after = Some(TensorBuf::from_json(p)?);
         }
+        s.opt_state = j.get("opt_state").cloned();
         s.record = j.get("record").cloned();
         s.void_reason = j
             .get("void_reason")
@@ -949,7 +984,7 @@ impl RoundState {
 
     /// Compact single-line summary for listings and logs.
     pub fn summary_json(&self) -> Json {
-        Json::obj()
+        let mut o = Json::obj()
             .set("round_id", round_id_to_hex(self.round_id).as_str())
             .set("phase", self.phase.as_str())
             .set("tainted", self.tainted)
@@ -966,7 +1001,17 @@ impl RoundState {
                     .as_deref()
                     .map(Json::from)
                     .unwrap_or(Json::Null),
-            )
+            );
+        // echo the negotiated seams once the round's record carries them
+        if let Some(rec) = &self.record {
+            if let Some(s) = rec.get("server_opt").and_then(Json::as_str) {
+                o = o.set("server_opt", s);
+            }
+            if let Some(s) = rec.get("local_strategy").and_then(Json::as_str) {
+                o = o.set("local_strategy", s);
+            }
+        }
+        o
     }
 }
 
@@ -1122,6 +1167,30 @@ pub trait RoundStore: Send + Sync {
                 "rounds",
                 Json::Arr(rounds.iter().map(RoundState::summary_json).collect()),
             )
+            .set("recovery", self.recovery().to_json()))
+    }
+
+    /// Paginated round listing for `GET /rounds?offset=&limit=`: one
+    /// page of summaries in first-seen order, with `total`/`offset`/
+    /// `limit` echoed so clients can walk a long-lived store without
+    /// pulling every round on each poll.  Counters (`total`,
+    /// `in_flight`) always describe the WHOLE store, not the page.
+    fn status_json_page(&self, offset: usize, limit: usize) -> Result<Json> {
+        let rounds = self.rounds()?;
+        let in_flight = rounds.iter().filter(|r| !r.phase.is_terminal()).count();
+        let page: Vec<Json> = rounds
+            .iter()
+            .skip(offset)
+            .take(limit)
+            .map(RoundState::summary_json)
+            .collect();
+        Ok(Json::obj()
+            .set("attached", true)
+            .set("total", rounds.len())
+            .set("in_flight", in_flight)
+            .set("offset", offset)
+            .set("limit", limit)
+            .set("rounds", Json::Arr(page))
             .set("recovery", self.recovery().to_json()))
     }
 }
@@ -1709,6 +1778,7 @@ mod tests {
                     n_samples: 10.0,
                     loss: 0.25,
                     duration: 1.5,
+                    tau: 4.0,
                 }],
                 late: 1,
                 dropped: vec!["c".into()],
@@ -1731,6 +1801,7 @@ mod tests {
             EventKind::Aggregated {
                 params: tb(&[1.5, 2.5, 3.5]),
                 record: Json::obj().set("mean_loss", 0.25),
+                opt_state: Json::obj().set("step", 1.0),
             },
         )
     }
@@ -1939,6 +2010,36 @@ mod tests {
             &[1.5, 2.5, 3.5]
         );
         assert!(s.record.is_some());
+        // optimizer state rides with params_after through the trim
+        assert!(s.opt_state.is_some());
+    }
+
+    #[test]
+    fn status_json_page_slices_and_echoes_totals() {
+        let store = MemRoundStore::new();
+        for id in 1..=5u64 {
+            store.append(configured(id)).unwrap();
+        }
+        full_round(&store, 6);
+        let j = store.status_json_page(2, 2).unwrap();
+        assert_eq!(j.get("total").and_then(Json::as_usize), Some(6));
+        assert_eq!(j.get("in_flight").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("offset").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("limit").and_then(Json::as_usize), Some(2));
+        let page = j.get("rounds").and_then(Json::as_arr).unwrap();
+        assert_eq!(page.len(), 2);
+        // first-seen order: the page starting at 2 holds rounds 3 and 4
+        assert_eq!(
+            page[0].get("round_id").and_then(Json::as_str),
+            Some(round_id_to_hex(3).as_str())
+        );
+        // an offset past the end yields an empty page, not an error
+        let tail = store.status_json_page(100, 10).unwrap();
+        assert_eq!(
+            tail.get("rounds").and_then(Json::as_arr).map(Vec::len),
+            Some(0)
+        );
+        assert_eq!(tail.get("total").and_then(Json::as_usize), Some(6));
     }
 
     #[test]

@@ -432,7 +432,22 @@ impl RestHandler {
                 Ok(Response::ok_json(&Json::obj().set("stopped", true)))
             }
             ("GET", ["rounds"]) => match &self.round_store {
-                Some(store) => Ok(Response::ok_json(&store.status_json()?)),
+                Some(store) => {
+                    // paginated: `?offset=&limit=` slice the summary list
+                    // (default limit 100) while `total`/`in_flight` keep
+                    // describing the whole store
+                    let offset = req
+                        .query
+                        .get("offset")
+                        .and_then(|v| v.parse::<usize>().ok())
+                        .unwrap_or(0);
+                    let limit = req
+                        .query
+                        .get("limit")
+                        .and_then(|v| v.parse::<usize>().ok())
+                        .unwrap_or(100);
+                    Ok(Response::ok_json(&store.status_json_page(offset, limit)?))
+                }
                 None => Ok(Response::ok_json(
                     &Json::obj()
                         .set("attached", false)
@@ -986,6 +1001,59 @@ mod tests {
         let server = DartServer::start(DartServerConfig::default()).unwrap();
         let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
         assert_eq!(c.get("/nope").unwrap().status, 404);
+    }
+
+    #[test]
+    fn rest_rounds_pagination() {
+        use crate::coordinator::round_store::{EventKind, MemRoundStore, RoundEvent};
+        use crate::util::tensorbuf::TensorBuf;
+
+        let store = Arc::new(MemRoundStore::new());
+        for id in 1..=5u64 {
+            store
+                .append(RoundEvent::new(
+                    id,
+                    EventKind::Configured {
+                        clustering_round: 0,
+                        cluster_id: 0,
+                        round: id as usize,
+                        cohort: vec!["a".into()],
+                        sample_rate: 1.0,
+                        mode: "clear".into(),
+                        params: TensorBuf::from_f32_slice(&[0.0]),
+                        deadline_ms: 0,
+                        session_tag: 7,
+                    },
+                ))
+                .unwrap();
+        }
+        let cfg = DartServerConfig { round_store: Some(store), ..Default::default() };
+        let server = DartServer::start(cfg).unwrap();
+        let c = HttpClient::new(&server.rest_addr().to_string()).with_key("000");
+
+        // default page: everything fits under limit=100
+        let j = c.get("/rounds").unwrap().parse_json().unwrap();
+        assert_eq!(j.get("total").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("limit").and_then(Json::as_usize), Some(100));
+        assert_eq!(
+            j.get("rounds").and_then(Json::as_arr).map(Vec::len),
+            Some(5)
+        );
+
+        // an explicit slice echoes its offset/limit but totals keep
+        // describing the whole store
+        let j = c
+            .get("/rounds?offset=1&limit=2")
+            .unwrap()
+            .parse_json()
+            .unwrap();
+        assert_eq!(j.get("total").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("offset").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("limit").and_then(Json::as_usize), Some(2));
+        assert_eq!(
+            j.get("rounds").and_then(Json::as_arr).map(Vec::len),
+            Some(2)
+        );
     }
 
     #[test]

@@ -29,6 +29,9 @@ pub struct ClientUpdate {
     pub loss: f32,
     /// client wall time in seconds (paper taskResult.duration)
     pub duration: f64,
+    /// client-reported effective local step count (FedNova normalized
+    /// averaging; 0 when the round did not run under FedNova)
+    pub tau: f32,
 }
 
 /// The aggregation rule.
@@ -182,6 +185,60 @@ fn trimmed_mean(updates: &[ClientUpdate], trim: usize) -> Vec<f32> {
     out
 }
 
+/// FedNova server-side correction (Wang et al. 2020).
+///
+/// Under the FedNova local strategy each client reports
+/// `global + delta_i / tau_i` (its accumulated delta normalized by its
+/// effective local step count) plus `tau_i` in the clear.  The merged
+/// `target` therefore holds `global + normalized-mean-delta`; the true
+/// FedNova update re-scales that mean by the weighted effective step
+/// count `tau_eff = sum(w_i * tau_i) / sum(w_i)`:
+///
+/// ```text
+/// target <- global + tau_eff * (target - global)
+/// ```
+///
+/// With homogeneous `tau` this is exactly plain (weighted) FedAvg.  A
+/// client that did not report `tau` (0) counts as `fallback_tau` — the
+/// configured `local_steps` — so a mixed cohort stays well-defined.
+/// `tau` rides outside the masked vector, so the rescale composes with
+/// secure aggregation (it only ever touches the recovered sum).
+pub fn fednova_rescale(
+    target: &mut [f32],
+    global: &[f32],
+    updates: &[ClientUpdate],
+    fallback_tau: f32,
+) {
+    if updates.is_empty() || target.len() != global.len() {
+        return;
+    }
+    let fallback = if fallback_tau > 0.0 { fallback_tau } else { 1.0 };
+    let mut wsum = 0.0f64;
+    let mut wtau = 0.0f64;
+    for u in updates {
+        let w = f64::from(u.n_samples.max(0.0));
+        let tau = if u.tau > 0.0 { u.tau } else { fallback };
+        wsum += w;
+        wtau += w * f64::from(tau);
+    }
+    let tau_eff = if wsum > 0.0 {
+        (wtau / wsum) as f32
+    } else {
+        // all-zero weights: unweighted mean tau
+        updates
+            .iter()
+            .map(|u| if u.tau > 0.0 { u.tau } else { fallback })
+            .sum::<f32>()
+            / updates.len() as f32
+    };
+    if !tau_eff.is_finite() || tau_eff <= 0.0 {
+        return;
+    }
+    for (t, g) in target.iter_mut().zip(global) {
+        *t = g + tau_eff * (*t - g);
+    }
+}
+
 /// HLO-fused weighted FedAvg on the L1 Pallas kernel.
 ///
 /// The compiled entries have fixed `(K, P)`; updates are padded with
@@ -239,7 +296,55 @@ mod tests {
             n_samples: n,
             loss: 0.0,
             duration: 0.0,
+            tau: 0.0,
         }
+    }
+
+    fn upd_tau(device: &str, params: Vec<f32>, n: f32, tau: f32) -> ClientUpdate {
+        ClientUpdate { tau, ..upd(device, params, n) }
+    }
+
+    #[test]
+    fn fednova_homogeneous_tau_is_plain_fedavg() {
+        let global = vec![1.0f32, -1.0];
+        // both clients normalized by the SAME tau=4: the rescale must
+        // undo the normalization exactly
+        let ups = vec![
+            upd_tau("a", vec![1.0 + 2.0 / 4.0, -1.0], 1.0, 4.0),
+            upd_tau("b", vec![1.0 + 6.0 / 4.0, -1.0], 1.0, 4.0),
+        ];
+        let mut t = Aggregation::FedAvg.aggregate(&ups, None).unwrap();
+        fednova_rescale(&mut t, &global, &ups, 4.0);
+        // raw deltas 2 and 6, mean 4 -> 1 + 4 = 5
+        assert!((t[0] - 5.0).abs() < 1e-5, "got {}", t[0]);
+        assert!((t[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fednova_weights_tau_by_samples() {
+        let global = vec![0.0f32];
+        let ups = vec![
+            upd_tau("a", vec![1.0], 3.0, 2.0),
+            upd_tau("b", vec![1.0], 1.0, 6.0),
+        ];
+        // normalized deltas both 1.0 -> weighted target 1.0;
+        // tau_eff = (3*2 + 1*6) / 4 = 3
+        let mut t = Aggregation::WeightedFedAvg.aggregate(&ups, None).unwrap();
+        fednova_rescale(&mut t, &global, &ups, 1.0);
+        assert!((t[0] - 3.0).abs() < 1e-5, "got {}", t[0]);
+    }
+
+    #[test]
+    fn fednova_unreported_tau_uses_fallback() {
+        let global = vec![0.0f32];
+        let ups = vec![upd("a", vec![1.0], 1.0)]; // tau 0 -> fallback 5
+        let mut t = vec![1.0f32];
+        fednova_rescale(&mut t, &global, &ups, 5.0);
+        assert!((t[0] - 5.0).abs() < 1e-6);
+        // degenerate inputs leave the target untouched
+        let mut t2 = vec![1.0f32];
+        fednova_rescale(&mut t2, &global, &[], 5.0);
+        assert_eq!(t2, vec![1.0]);
     }
 
     #[test]

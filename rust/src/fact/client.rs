@@ -319,6 +319,10 @@ impl FactClientRuntime {
     }
 
     fn fact_learn(&self, p: &Json) -> Result<Json> {
+        // pure compute time, measured on the client: the coordinator
+        // subtracts it from the round trip to separate training speed
+        // from queueing/transport when tracking latency percentiles
+        let compute_sw = std::time::Instant::now();
         let device = Self::device_of(p)?;
         let model = p.need("model")?.as_str().unwrap_or("").to_string();
         let global_buf = Self::params_of(p)?;
@@ -413,11 +417,30 @@ impl FactClientRuntime {
                 }
             }
         }
+        // FedNova: normalize the accumulated delta by the effective
+        // local step count BEFORE the privacy transform (the server
+        // re-scales the merged mean by the weighted tau), and report
+        // tau in the clear alongside the (possibly masked) vector
+        let strategy = p.get("strategy").and_then(Json::as_str).unwrap_or("plain");
+        let tau = if strategy == "fednova" {
+            let tau = steps as f32;
+            for (w, g) in params.iter_mut().zip(global) {
+                *w = g + (*w - g) / tau;
+            }
+            Some(tau)
+        } else {
+            None
+        };
         let params_out = self.apply_privacy(&device, p, params, global, n_samples)?;
-        Ok(Json::obj()
+        let mut out = Json::obj()
             .set("params", params_out)
             .set("n_samples", n_samples)
-            .set("loss", loss_sum / steps as f32))
+            .set("loss", loss_sum / steps as f32)
+            .set("compute_s", compute_sw.elapsed().as_secs_f64());
+        if let Some(tau) = tau {
+            out = out.set("tau", tau);
+        }
+        Ok(out)
     }
 
     /// Apply the round's negotiated privacy transform to a finished local

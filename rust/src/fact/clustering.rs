@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use crate::error::{FedError, Result};
 use crate::fact::model::FactModel;
+use crate::fact::rounds::optimizer::OptState;
 use crate::util::rng::Rng;
 
 /// One cluster: a set of clients sharing a global model.
@@ -23,8 +24,10 @@ pub struct Cluster {
     pub clients: Vec<String>,
     /// mean client loss per completed training round
     pub loss_history: Vec<f32>,
-    /// server-side momentum buffer (FedAvgM), lazily initialised
-    pub momentum: Vec<f32>,
+    /// server-optimizer state (momentum / Adam moments), lazily
+    /// initialised by the configured `ServerOptimizer` and persisted
+    /// inside `Aggregated` round-store events
+    pub opt_state: OptState,
 }
 
 impl Cluster {
@@ -40,7 +43,7 @@ impl Cluster {
             params,
             clients,
             loss_history: Vec::new(),
-            momentum: Vec::new(),
+            opt_state: OptState::default(),
         }
     }
 }

@@ -20,6 +20,7 @@ pub mod clustering;
 pub mod data;
 pub mod ensemble;
 pub mod model;
+pub mod rounds;
 pub mod server;
 pub mod stopping;
 pub mod store;

@@ -119,6 +119,9 @@ pub trait FactModel: Send + Sync {
                 .unwrap_or(1.0) as f32,
             loss: result.get("loss").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
             duration,
+            // effective local step count, reported by FedNova clients;
+            // 0 marks "not reported" for everyone else
+            tau: result.get("tau").and_then(Json::as_f64).unwrap_or(0.0) as f32,
         })
     }
 }

@@ -1,0 +1,84 @@
+//! The typed context each round stage consumes — one bundle of
+//! per-session invariants instead of a dozen parameters threaded
+//! through every stage signature.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::ParticipationConfig;
+use crate::coordinator::latency::LatencyTracker;
+use crate::coordinator::round_store::{RoundState, RoundStore};
+use crate::coordinator::workflow::WorkflowManager;
+use crate::error::FedError;
+use crate::fact::model::Hyper;
+use crate::fact::rounds::optimizer::ServerOptimizer;
+use crate::fact::rounds::strategy::LocalStrategy;
+use crate::fact::server::RoundRecord;
+use crate::fact::stopping::FlStoppingCriterion;
+use crate::metrics::Registry;
+use crate::privacy::PrivacyConfig;
+use crate::telemetry;
+use crate::util::pool::ThreadPool;
+
+/// Outcome of one cluster's training session: everything that completed
+/// plus the first error.  Completed rounds ride OUTSIDE the error so a
+/// failure in round k never discards rounds 0..k — those aggregates were
+/// already applied to the cluster and must still be charged to the DP
+/// ledger.
+pub(crate) struct ClusterOutcome {
+    /// Audit records of every completed round, in order.
+    pub(crate) records: Vec<RoundRecord>,
+    /// Per-client latest (clear) update vectors, for clustering input.
+    pub(crate) latest: BTreeMap<String, Vec<f32>>,
+    /// Per-client reported sample counts, for weighted sampling.
+    pub(crate) samples: BTreeMap<String, f64>,
+    /// First error the round loop hit, if any.
+    pub(crate) err: Option<FedError>,
+}
+
+/// The per-session invariants every cluster's round loop reads — one
+/// bundle instead of a dozen parameters threaded through two signatures
+/// and the dispatch closure (future round-loop features extend this
+/// struct, not every call site).
+pub(crate) struct RoundCtx<'a> {
+    pub(crate) wm: &'a WorkflowManager,
+    pub(crate) hyper: &'a Hyper,
+    /// server-side update rule applied to every round's aggregate
+    pub(crate) server_opt: &'a dyn ServerOptimizer,
+    /// local-training variant negotiated into every learn dict
+    pub(crate) strategy: LocalStrategy,
+    pub(crate) fl_stop: &'a dyn FlStoppingCriterion,
+    pub(crate) timeout: Duration,
+    pub(crate) clustering_round: usize,
+    pub(crate) pool: &'a ThreadPool,
+    pub(crate) privacy: &'a PrivacyConfig,
+    pub(crate) participation: &'a Option<ParticipationConfig>,
+    pub(crate) known_samples: &'a BTreeMap<String, f64>,
+    pub(crate) metrics: &'a Registry,
+    /// observed learn latencies feeding `effective_deadline_explained`
+    pub(crate) latency: &'a LatencyTracker,
+    pub(crate) session_tag: u64,
+    /// every round transition is appended (and validated) here
+    pub(crate) store: &'a Arc<dyn RoundStore>,
+    /// rounds the store already closed — skipped outright
+    pub(crate) completed: &'a BTreeSet<(usize, usize, usize)>,
+    /// in-flight rounds to resume instead of starting fresh
+    pub(crate) plans: &'a BTreeMap<(usize, usize, usize), RoundState>,
+    /// flight recorder the round's spans and events land in
+    pub(crate) tele: &'a Arc<telemetry::Recorder>,
+}
+
+impl RoundCtx<'_> {
+    /// Record one finished phase's wall time into the labeled histogram
+    /// behind `fact.round.phase_ms{phase,cluster}` (surfaced by
+    /// `/rounds/recovery` and the Prometheus exposition).
+    pub(crate) fn phase_ms(&self, name: &str, cluster_id: usize, ms: f64) {
+        self.metrics
+            .histogram_labeled(
+                "fact.round.phase_ms",
+                &[("phase", name), ("cluster", &cluster_id.to_string())],
+            )
+            .observe(ms);
+    }
+}

@@ -1,0 +1,37 @@
+//! The layered round pipeline behind [`FactServer::learn`].
+//!
+//! [`FactServer::learn`]: crate::fact::server::FactServer::learn
+//!
+//! `fact::server` owns *session* orchestration — device pools, model
+//! negotiation, clustering, checkpointing, the DP ledger, recovery.
+//! Everything that happens *inside one federated round* lives here,
+//! split into three layers:
+//!
+//! * [`ctx`] — the typed [`RoundCtx`](ctx::RoundCtx) every stage
+//!   consumes: one bundle of per-session invariants (workflow manager,
+//!   hyper-parameters, privacy config, round store, telemetry, ...).
+//! * [`phases`] — the named stages: cohort draw/repair, secagg setup
+//!   (keys → shares), learn dispatch + quorum wait, reveal/unmask,
+//!   aggregate + apply.  Each stage appends its transition to the round
+//!   store and emits exactly one span of the fixed phase taxonomy.
+//! * [`pipeline`] — the driver that sequences the stages per round,
+//!   fresh or resumed, following the round-store state machine
+//!   (`Configured → Keys → Shares → Learn → Reveal → Aggregated →
+//!   Closed/Voided`).
+//!
+//! Two public seams parameterize the pipeline:
+//!
+//! * [`optimizer::ServerOptimizer`] — the server-side update rule
+//!   applied to each round's aggregate (plain replacement, FedAvgM,
+//!   FedAdam).  Its state is persisted inside the `Aggregated` event,
+//!   so crash recovery at that phase is exact even under a stateful
+//!   optimizer.
+//! * [`strategy::LocalStrategy`] — the client-side training variant
+//!   negotiated into every learn dict (plain, FedProx, FedNova
+//!   normalized averaging).
+
+pub(crate) mod ctx;
+pub mod optimizer;
+pub(crate) mod phases;
+pub(crate) mod pipeline;
+pub mod strategy;

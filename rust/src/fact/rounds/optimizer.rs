@@ -1,0 +1,342 @@
+//! Pluggable server-side optimizers (the `ServerOptimizer` seam).
+//!
+//! The aggregate the round pipeline produces is a *target* parameter
+//! vector; how the cluster's global parameters move toward it is the
+//! server optimizer's decision (Reddi et al. 2020, "Adaptive Federated
+//! Optimization").  Three rules ship in-tree:
+//!
+//! * [`PlainReplace`] — `params <- target`, the classic FedAvg update.
+//!   Bit-identical to assignment and stateless, so it is the
+//!   golden-equivalence anchor for the pipeline refactor.
+//! * [`FedAvgM`] — server momentum (Hsu et al. 2019): a velocity buffer
+//!   accumulates the per-round pseudo-gradient.
+//! * [`FedAdam`] — per-coordinate adaptive step sizes over the
+//!   pseudo-gradient (Reddi et al. 2020).
+//!
+//! Stateful optimizers serialize their buffers as an [`OptState`]; the
+//! round pipeline pins that state inside the `Aggregated` round-store
+//! event so resuming *at* the Aggregated phase restores the optimizer
+//! exactly — the PR 6 follow-up that pinned-params replacement alone
+//! could not discharge.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::{FedError, Result};
+use crate::json::Json;
+use crate::util::tensorbuf::TensorBuf;
+
+/// Serializable optimizer state: named f32 buffers plus a step counter.
+///
+/// Empty state serializes to `Json::Null` (and is omitted from the
+/// `Aggregated` event), so stateless optimizers keep the pre-refactor
+/// WAL byte format.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OptState {
+    /// Named per-parameter buffers (e.g. `"momentum"`, `"m"`, `"v"`),
+    /// lazily sized to the cluster's parameter vector.
+    pub buffers: BTreeMap<String, Vec<f32>>,
+    /// Server update steps applied since session start.
+    pub step: u64,
+}
+
+impl OptState {
+    /// True when no optimizer has written anything yet.
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty() && self.step == 0
+    }
+
+    /// Fetch (or lazily size) the named buffer.
+    pub fn buffer(&mut self, name: &str, len: usize) -> &mut Vec<f32> {
+        let buf = self.buffers.entry(name.to_string()).or_default();
+        if buf.len() != len {
+            *buf = vec![0.0; len];
+        }
+        buf
+    }
+
+    /// Serialize for the `Aggregated` round-store event.  Buffers ride
+    /// as [`TensorBuf`]s (exact f32 bits); empty state is `Json::Null`
+    /// so stateless sessions keep the pre-refactor event bytes.
+    pub fn to_json(&self) -> Json {
+        if self.is_empty() {
+            return Json::Null;
+        }
+        let mut bufs = Json::obj();
+        for (name, buf) in &self.buffers {
+            bufs = bufs.set(name.as_str(), TensorBuf::from_f32_slice(buf));
+        }
+        Json::obj()
+            .set("step", self.step as f64)
+            .set("buffers", bufs)
+    }
+
+    /// Parse the serialized form back; `Json::Null` is the empty state.
+    pub fn from_json(j: &Json) -> Result<OptState> {
+        if matches!(j, Json::Null) {
+            return Ok(OptState::default());
+        }
+        let mut buffers = BTreeMap::new();
+        if let Some(obj) = j.get("buffers").and_then(Json::as_obj) {
+            for (name, bj) in obj {
+                buffers.insert(name.clone(), TensorBuf::from_json(bj)?.to_vec());
+            }
+        }
+        Ok(OptState {
+            buffers,
+            step: j.get("step").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// Server-side update rule applied to the aggregated target — the
+/// "new aggregation algorithms can be added easily" extension point
+/// (paper §B.3), carved out as a trait so algorithms plug in without
+/// touching the round pipeline.
+pub trait ServerOptimizer: Send + Sync {
+    /// Stable lowercase name, echoed in round records and round status.
+    fn name(&self) -> &'static str;
+
+    /// `params <- update(params, target)`, mutating `state` in place.
+    ///
+    /// Implementations must be deterministic in `(params, target,
+    /// state)`: the crash-recovery path replays rounds and expects
+    /// bit-identical results.
+    fn apply(&self, params: &mut Vec<f32>, target: Vec<f32>, state: &mut OptState);
+}
+
+/// `params <- target`: the classic FedAvg replacement.  Stateless and
+/// bit-identical to assignment — `state` is never touched, so the
+/// `Aggregated` event carries no optimizer state and the WAL bytes
+/// match the pre-refactor format exactly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlainReplace;
+
+impl ServerOptimizer for PlainReplace {
+    fn name(&self) -> &'static str {
+        "plain"
+    }
+
+    fn apply(&self, params: &mut Vec<f32>, target: Vec<f32>, _state: &mut OptState) {
+        *params = target;
+    }
+}
+
+/// Server momentum (FedAvgM, Hsu et al. 2019):
+/// `v <- momentum*v + (target - params); params <- params + lr*v`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FedAvgM {
+    /// Server learning rate over the velocity (1.0 = full step).
+    pub lr: f32,
+    /// Velocity decay factor.
+    pub momentum: f32,
+}
+
+impl Default for FedAvgM {
+    fn default() -> Self {
+        FedAvgM { lr: 1.0, momentum: 0.9 }
+    }
+}
+
+impl ServerOptimizer for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    fn apply(&self, params: &mut Vec<f32>, target: Vec<f32>, state: &mut OptState) {
+        let n = params.len();
+        let buf = state.buffer("momentum", n);
+        for ((p, t), b) in params.iter_mut().zip(target).zip(buf.iter_mut()) {
+            *b = self.momentum * *b + (t - *p);
+            *p += self.lr * *b;
+        }
+        state.step += 1;
+    }
+}
+
+/// FedAdam (Reddi et al. 2020): Adam over the per-round pseudo-gradient
+/// `delta = target - params`, with first/second-moment buffers `m`/`v`:
+/// `params <- params + lr * m / (sqrt(v) + eps)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FedAdam {
+    /// Server learning rate.
+    pub lr: f32,
+    /// First-moment decay.
+    pub beta1: f32,
+    /// Second-moment decay.
+    pub beta2: f32,
+    /// Adaptivity floor (tau in the paper; large values damp adaptivity).
+    pub eps: f32,
+}
+
+impl Default for FedAdam {
+    fn default() -> Self {
+        FedAdam { lr: 0.1, beta1: 0.9, beta2: 0.99, eps: 1e-3 }
+    }
+}
+
+impl ServerOptimizer for FedAdam {
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+
+    fn apply(&self, params: &mut Vec<f32>, target: Vec<f32>, state: &mut OptState) {
+        let n = params.len();
+        // two named buffers: split the borrow by taking `m` out first
+        let mut m = std::mem::take(state.buffer("m", n));
+        let v = state.buffer("v", n);
+        for (((p, t), mi), vi) in
+            params.iter_mut().zip(target).zip(m.iter_mut()).zip(v.iter_mut())
+        {
+            let delta = t - *p;
+            *mi = self.beta1 * *mi + (1.0 - self.beta1) * delta;
+            *vi = self.beta2 * *vi + (1.0 - self.beta2) * delta * delta;
+            *p += self.lr * *mi / (vi.sqrt() + self.eps);
+        }
+        state.buffers.insert("m".to_string(), m);
+        state.step += 1;
+    }
+}
+
+/// Parse a `--server-opt` spec into an optimizer.
+///
+/// Grammar (positional, colon-separated, every tail optional):
+///
+/// * `plain`
+/// * `fedavgm[:momentum[:lr]]` — defaults `0.9`, `1.0`
+/// * `fedadam[:lr[:beta1[:beta2[:eps]]]]` — defaults `0.1`, `0.9`,
+///   `0.99`, `1e-3`
+pub fn parse_server_opt(spec: &str) -> Result<Arc<dyn ServerOptimizer>> {
+    let mut parts = spec.split(':');
+    let name = parts.next().unwrap_or("").trim();
+    let nums: Vec<f32> = parts
+        .map(|p| {
+            p.trim().parse::<f32>().map_err(|_| {
+                FedError::Config(format!(
+                    "--server-opt '{spec}': '{p}' is not a number"
+                ))
+            })
+        })
+        .collect::<Result<_>>()?;
+    let get = |i: usize, default: f32| nums.get(i).copied().unwrap_or(default);
+    match name {
+        "plain" | "" => {
+            if !nums.is_empty() {
+                return Err(FedError::Config(format!(
+                    "--server-opt '{spec}': 'plain' takes no parameters"
+                )));
+            }
+            Ok(Arc::new(PlainReplace))
+        }
+        "fedavgm" => Ok(Arc::new(FedAvgM {
+            momentum: get(0, 0.9),
+            lr: get(1, 1.0),
+        })),
+        "fedadam" => Ok(Arc::new(FedAdam {
+            lr: get(0, 0.1),
+            beta1: get(1, 0.9),
+            beta2: get(2, 0.99),
+            eps: get(3, 1e-3),
+        })),
+        other => Err(FedError::Config(format!(
+            "unknown --server-opt '{other}' (expected plain|fedavgm|fedadam)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_replace_is_exact_and_stateless() {
+        let opt = PlainReplace;
+        let mut params = vec![1.0f32, 2.0, 3.0];
+        let target = vec![0.5f32, -1.25, 7.0];
+        let mut state = OptState::default();
+        opt.apply(&mut params, target.clone(), &mut state);
+        assert_eq!(params, target, "plain replacement must be assignment");
+        assert!(state.is_empty(), "plain must not allocate state");
+        assert!(matches!(state.to_json(), Json::Null));
+    }
+
+    #[test]
+    fn fedavgm_momentum_accumulates() {
+        let opt = FedAvgM { lr: 1.0, momentum: 0.5 };
+        let mut params = vec![0.0f32];
+        let mut state = OptState::default();
+        opt.apply(&mut params, vec![1.0], &mut state);
+        assert_eq!(params, vec![1.0]); // v = 1.0, p = 1.0
+        opt.apply(&mut params, vec![1.0], &mut state);
+        // v = 0.5*1.0 + (1.0 - 1.0) = 0.5, p = 1.5
+        assert_eq!(params, vec![1.5]);
+        assert_eq!(state.step, 2);
+    }
+
+    #[test]
+    fn fedavgm_small_lr_damps() {
+        let opt = FedAvgM { lr: 0.1, momentum: 0.0 };
+        let mut params = vec![0.0f32];
+        let mut state = OptState::default();
+        opt.apply(&mut params, vec![1.0], &mut state);
+        assert!((params[0] - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fedadam_moves_toward_target_and_adapts() {
+        let opt = FedAdam::default();
+        let mut params = vec![0.0f32, 0.0];
+        let mut state = OptState::default();
+        for _ in 0..200 {
+            opt.apply(&mut params, vec![1.0, -1.0], &mut state);
+        }
+        assert!(params[0] > 0.5 && params[0] <= 1.5, "{params:?}");
+        assert!(params[1] < -0.5 && params[1] >= -1.5, "{params:?}");
+        assert!(state.buffers.contains_key("m") && state.buffers.contains_key("v"));
+        assert_eq!(state.step, 200);
+    }
+
+    #[test]
+    fn opt_state_round_trips_exactly() {
+        let opt = FedAdam::default();
+        let mut params = vec![0.25f32, -3.5, 1e-8];
+        let mut state = OptState::default();
+        opt.apply(&mut params, vec![1.0, 0.0, 2.0], &mut state);
+        let j = state.to_json();
+        let back = OptState::from_json(&j).expect("parse");
+        assert_eq!(back, state, "serialization must be bit-exact");
+    }
+
+    #[test]
+    fn resumed_state_continues_bit_identically() {
+        // the resume-at-Aggregated contract: (serialize, restore, step)
+        // equals (keep in memory, step)
+        let opt = FedAvgM { lr: 1.0, momentum: 0.9 };
+        let mut p_live = vec![0.0f32; 4];
+        let mut s_live = OptState::default();
+        opt.apply(&mut p_live, vec![1.0; 4], &mut s_live);
+        let mut p_resumed = p_live.clone();
+        let mut s_resumed =
+            OptState::from_json(&s_live.to_json()).expect("round trip");
+        opt.apply(&mut p_live, vec![0.5; 4], &mut s_live);
+        opt.apply(&mut p_resumed, vec![0.5; 4], &mut s_resumed);
+        assert_eq!(p_live, p_resumed);
+        assert_eq!(s_live, s_resumed);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(parse_server_opt("plain").expect("plain").name(), "plain");
+        assert_eq!(
+            parse_server_opt("fedavgm:0.8:0.5").expect("avgm").name(),
+            "fedavgm"
+        );
+        assert_eq!(
+            parse_server_opt("fedadam:0.05").expect("adam").name(),
+            "fedadam"
+        );
+        assert!(parse_server_opt("sgd").is_err());
+        assert!(parse_server_opt("plain:0.1").is_err());
+        assert!(parse_server_opt("fedavgm:x").is_err());
+    }
+}

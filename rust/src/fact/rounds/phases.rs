@@ -1,0 +1,1181 @@
+//! The named stages of one federated round: cohort draw/repair, secagg
+//! setup (keys → shares), learn dispatch + quorum wait, reveal/unmask,
+//! aggregate, and apply.  Every stage consumes the typed
+//! [`RoundCtx`](super::ctx::RoundCtx), appends its transition to the
+//! round store, and emits exactly one span of the fixed phase taxonomy
+//! (`telemetry::phase`) — the pipeline driver in `super::pipeline`
+//! sequences them.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+use crate::coordinator::latency::effective_deadline_explained;
+use crate::coordinator::participation::{
+    participation_round_key, Candidate, CohortSampler,
+};
+use crate::coordinator::round_store::{
+    now_ms, EventKind, RoundEvent, StoredUpdate,
+};
+use crate::coordinator::workflow::RoundClose;
+use crate::error::{FedError, Result};
+use crate::fact::aggregation::ClientUpdate;
+use crate::fact::model::Hyper;
+use crate::fact::rounds::ctx::RoundCtx;
+use crate::fact::rounds::optimizer::ServerOptimizer;
+use crate::fact::rounds::strategy::LocalStrategy;
+use crate::fact::server::{RoundRecord, SecAggAudit};
+use crate::json::Json;
+use crate::privacy::secagg::{unmask_aggregate, MaskedUpdate, RevealedSeed};
+use crate::privacy::{
+    from_hex, keys, resolve_reveal_threshold, round_id_to_hex, seed_from_hex,
+    shamir, PrivacyMode, RevealPolicy,
+};
+use crate::telemetry::{self, phase};
+use crate::util::rng::splitmix64;
+use crate::util::Stopwatch;
+
+/// Draw this round's cohort (everyone, without participation sampling).
+pub(crate) fn draw_cohort(
+    ctx: &RoundCtx<'_>,
+    cluster: &crate::fact::clustering::Cluster,
+    round: usize,
+    seen_samples: &BTreeMap<String, f64>,
+) -> (Vec<String>, f64, Option<CohortSampler>) {
+    match ctx.participation {
+        Some(p) => {
+            let sampler = CohortSampler::new(p.clone());
+            let key = participation_round_key(
+                p.seed,
+                ctx.clustering_round,
+                cluster.id,
+                round,
+            );
+            let candidates: Vec<Candidate> = cluster
+                .clients
+                .iter()
+                .map(|n| Candidate {
+                    name: n.clone(),
+                    weight: seen_samples
+                        .get(n)
+                        .or_else(|| ctx.known_samples.get(n))
+                        .copied()
+                        .unwrap_or(1.0)
+                        .max(1.0),
+                })
+                .collect();
+            let cohort = sampler.sample(key, &candidates);
+            let q = sampler.amplification_rate(cohort.len(), cluster.clients.len());
+            (cohort, q, Some(sampler))
+        }
+        None => (cluster.clients.clone(), 1.0, None),
+    }
+}
+
+/// Salt mixed into the round key for the repair draw, so a repaired
+/// round's replacement order never correlates with its cohort draw.
+const REPAIR_SALT: u64 = 0x5e1f_4ea1_1e55_0007;
+
+/// In-round cohort repair: replace cohort members the scheduler already
+/// knows are dead (lease expired / never connected) with fresh draws
+/// from the cluster's unsampled pool — inside the same round, before any
+/// setup phase addressed the dead.
+///
+/// The deterministic replacement draw is keyed off the round key + a
+/// salt, so a resumed coordinator repairs identically.  Presumed-dead
+/// members are dropped from the addressed cohort (both the selector and
+/// the scheduler reject tasks addressing a disconnected client — a dead
+/// member kept addressed would reject the whole learn task) and
+/// replacements take their slots; a presumed-dead client that revives
+/// mid-round re-registers and is eligible for the next draw.  The
+/// realized sampling rate only ever grows — the DP accountant charges
+/// the conservative effective inclusion probability of the UNION of the
+/// original draw and the repair draw (anyone in either set could have
+/// been addressed).
+///
+/// Legality is enforced by the round state machine: `CohortRepaired`
+/// appends only in `Configured`/`Keys`, i.e. any time in clear/dp modes
+/// but strictly before share dealing under secagg (after `SharesDealt`
+/// the threshold-reveal path recovers dropouts instead).
+pub(crate) fn repair_cohort(
+    ctx: &RoundCtx<'_>,
+    cluster: &crate::fact::clustering::Cluster,
+    round: usize,
+    round_id: u64,
+    cohort: Vec<String>,
+    realized_q: f64,
+    sampler: Option<&CohortSampler>,
+) -> Result<(Vec<String>, f64)> {
+    let (Some(p), Some(sampler)) = (ctx.participation.as_ref(), sampler) else {
+        // full participation: everyone is already addressed, there is no
+        // unsampled pool to draw replacements from
+        return Ok((cohort, realized_q));
+    };
+    let Ok(alive) = ctx.wm.get_all_device_names() else {
+        return Ok((cohort, realized_q));
+    };
+    let alive: BTreeSet<&String> = alive.iter().collect();
+    let presumed_dead: Vec<String> = cohort
+        .iter()
+        .filter(|c| !alive.contains(c))
+        .cloned()
+        .collect();
+    if presumed_dead.is_empty() {
+        return Ok((cohort, realized_q));
+    }
+    let in_cohort: BTreeSet<&String> = cohort.iter().collect();
+    // candidates: alive cluster members the draw skipped, ranked by a
+    // salted per-round hash (deterministic, uncorrelated with the draw)
+    let key = splitmix64(
+        participation_round_key(p.seed, ctx.clustering_round, cluster.id, round)
+            ^ REPAIR_SALT,
+    );
+    let mut pool: Vec<(u64, String)> = cluster
+        .clients
+        .iter()
+        .filter(|c| !in_cohort.contains(c) && alive.contains(c))
+        .map(|c| (splitmix64(key ^ crate::util::rng::fnv1a(c)), c.clone()))
+        .collect();
+    pool.sort();
+    let replacements: Vec<String> = pool
+        .into_iter()
+        .take(presumed_dead.len())
+        .map(|(_, c)| c)
+        .collect();
+    if replacements.is_empty() {
+        log::warn!(target: "fact::server",
+            "cluster {} round {round}: {} cohort member(s) presumed dead \
+             but no alive replacements remain in the pool; proceeding \
+             with the survivors",
+            cluster.id, presumed_dead.len());
+    }
+    // union of both draws — the conservative set the accountant charges
+    let union = cohort.len() + replacements.len();
+    let mut repaired: Vec<String> = cohort
+        .into_iter()
+        .filter(|c| alive.contains(c))
+        .collect();
+    repaired.extend(replacements.iter().cloned());
+    repaired.sort();
+    repaired.dedup();
+    if repaired.is_empty() {
+        // every member dead and no replacements: leave the round to fail
+        // at dispatch with the backend's own (clearer) error
+        return Err(FedError::Task(format!(
+            "cluster {} round {round}: entire cohort presumed dead and no \
+             alive replacements remain",
+            cluster.id
+        )));
+    }
+    let q = realized_q
+        .max(sampler.amplification_rate(union, cluster.clients.len()));
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::CohortRepaired {
+            presumed_dead: presumed_dead.clone(),
+            replacements: replacements.clone(),
+            cohort: repaired.clone(),
+            sample_rate: q,
+        },
+    ))?;
+    ctx.metrics.counter("fact.round.repaired").inc();
+    ctx.metrics
+        .counter("fact.round.replacements")
+        .add(replacements.len() as u64);
+    telemetry::event(
+        "cohort_repaired",
+        &[
+            ("presumed_dead", &presumed_dead.join(",")),
+            ("replacements", &replacements.join(",")),
+            ("q", &format!("{q:.4}")),
+        ],
+    );
+    log::info!(target: "fact::server",
+        "cluster {} round {round}: repaired cohort in-round — {} presumed \
+         dead ({:?}), {} replacement(s) drawn ({:?}), q {:.3} -> {:.3}",
+        cluster.id, presumed_dead.len(), presumed_dead,
+        replacements.len(), replacements, realized_q, q);
+    Ok((repaired, q))
+}
+
+/// Dispatch the learn tasks of one round and close the collection.
+/// `LearnDispatched` is persisted before the scheduler call and
+/// `LearnClosed` (with every collected update) after — a crash in
+/// between resumes by re-dispatching with the remaining deadline; a
+/// crash after resumes from the persisted updates without touching the
+/// clients again.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dispatch_learn(
+    ctx: &RoundCtx<'_>,
+    cluster: &crate::fact::clustering::Cluster,
+    round: usize,
+    round_id: u64,
+    cohort: &[String],
+    sampler: Option<&CohortSampler>,
+    global: &crate::util::tensorbuf::TensorBuf,
+    secagg_setup: Option<&SecAggSetup>,
+    deadline_override: Option<Duration>,
+) -> Result<(Vec<ClientUpdate>, usize, usize, usize)> {
+    let dsw = Stopwatch::start();
+    let dspan = telemetry::child_of_current(phase::LEARN_DISPATCH);
+    let dguard = dspan.enter();
+    let mut hp = Hyper { round: round as u64, ..ctx.hyper.clone() };
+    // the negotiated local strategy overrides the legacy `--mu` knob
+    // (a plain strategy keeps Hyper::mu for backward compatibility)
+    if let LocalStrategy::FedProx { mu } = ctx.strategy {
+        hp.mu = mu;
+    }
+    let privacy_round = if ctx.privacy.mode == PrivacyMode::Off {
+        None
+    } else {
+        let mut pj = ctx
+            .privacy
+            .to_json()
+            .set("round_id", round_id_to_hex(round_id));
+        if ctx.participation.is_some() {
+            // pin the sampled cohort in the task: a client outside it
+            // must refuse to contribute, or the accountant's
+            // amplification claim (only sampled clients respond) would
+            // be unsound
+            pj = pj.set(
+                "cohort",
+                Json::Arr(cohort.iter().map(|c| Json::Str(c.clone())).collect()),
+            );
+        }
+        if let Some(setup) = secagg_setup {
+            pj = pj
+                .set(
+                    "participants",
+                    Json::Arr(
+                        setup
+                            .participants
+                            .iter()
+                            .map(|c| Json::Str(c.clone()))
+                            .collect(),
+                    ),
+                )
+                .set("keys", setup.keys_json.clone())
+                .set("weighted", cluster.model.aggregation().is_weighted());
+        }
+        Some(pj)
+    };
+    // under secagg, only the key+share completers can mask: they are
+    // the round's addressed set
+    let addressed: &[String] = match secagg_setup {
+        Some(setup) => &setup.participants,
+        None => cohort,
+    };
+    // one child span per addressed client: opened at dispatch, closed
+    // when the collection closes with the client's outcome.  Its context
+    // rides the task params (`trace` key), so the client runtime's timed
+    // `fact_learn` span echoes back into the same trace via `_span`.
+    let mut client_spans: BTreeMap<String, telemetry::Span> = addressed
+        .iter()
+        .map(|c| {
+            let mut s = telemetry::child_of_current(phase::CLIENT_LEARN);
+            s.set_attr("client", c);
+            (c.clone(), s)
+        })
+        .collect();
+    let dict: BTreeMap<String, Json> = addressed
+        .iter()
+        .map(|c| {
+            let mut params = cluster
+                .model
+                .learn_params_buf(global, &hp)
+                .set("strategy", ctx.strategy.name());
+            if let Some(pj) = &privacy_round {
+                params = params.set("privacy", pj.clone());
+            }
+            params = telemetry::inject(
+                params,
+                client_spans.get(c).and_then(telemetry::Span::context),
+            );
+            (c.clone(), params)
+        })
+        .collect();
+    let sampled = dict.len();
+    // the effective deadline of THIS dispatch: on resume, the remaining
+    // window of the original deadline; otherwise the configured one —
+    // which under an adaptive mode is the tracked cohort latency
+    // percentile × margin, clamped, once the tracker is warm
+    let deadline = match (deadline_override, ctx.participation) {
+        (Some(d), _) => Some(d),
+        (None, Some(p)) => {
+            let d = effective_deadline_explained(ctx.latency, p, addressed);
+            telemetry::event(
+                "deadline_decision",
+                &[
+                    ("deadline_ms", &d.deadline_ms.to_string()),
+                    ("adaptive", if d.adaptive { "true" } else { "false" }),
+                    ("quantile", &format!("{:.2}", d.quantile)),
+                    (
+                        "observed_ms",
+                        &d.observed_ms
+                            .map(|v| v.to_string())
+                            .unwrap_or_else(|| "cold".into()),
+                    ),
+                    ("tracker_len", &d.tracker_len.to_string()),
+                    ("cohort", &addressed.len().to_string()),
+                ],
+            );
+            let (ms, adaptive) = (d.deadline_ms, d.adaptive);
+            if adaptive {
+                ctx.metrics.counter("fact.round.adaptive_closes").inc();
+                ctx.metrics
+                    .counter("fact.round.deadline_adaptive_ms")
+                    .add(ms);
+                ctx.metrics
+                    .gauge("fact.round.deadline_effective_ms")
+                    .set(ms as i64);
+                log::debug!(target: "fact::server",
+                    "cluster {} round {round}: adaptive deadline {ms}ms \
+                     ({} × {:.2}, clamp [{}, {}])",
+                    cluster.id, p.deadline.as_str(), p.deadline_margin,
+                    p.deadline_min_ms, p.deadline_max_ms);
+            }
+            if ms > 0 {
+                Some(Duration::from_millis(ms))
+            } else {
+                None
+            }
+        }
+        _ => None,
+    };
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::LearnDispatched {
+            addressed: addressed.to_vec(),
+            dispatched_at_ms: now_ms(),
+            deadline_ms: deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
+        },
+    ))?;
+    drop(dguard);
+    ctx.phase_ms(phase::LEARN_DISPATCH, cluster.id, dsw.elapsed_ms());
+    dspan.finish();
+    // the collection window: the scheduler call blocks here until
+    // complete/quorum/deadline — workflow.rs attaches its `quorum_close`
+    // event to this span via the thread-local context
+    let qsw = Stopwatch::start();
+    let qspan = telemetry::child_of_current(phase::QUORUM_WAIT);
+    let qguard = qspan.enter();
+    let (results, late_names, dropped) = match (sampler, ctx.participation) {
+        (Some(sampler), Some(p)) => {
+            // production round loop: close at quorum or deadline,
+            // drop (and count) stragglers
+            let quorum = sampler.quorum_count(sampled);
+            let deadline = deadline.unwrap_or(ctx.timeout);
+            let out = ctx.wm.run_task_quorum(
+                dict,
+                "fact_learn",
+                quorum,
+                deadline,
+                Duration::from_millis(p.late_grace_ms),
+            )?;
+            // feed the adaptive-deadline tracker: completers with their
+            // client-reported compute time when they report one (so
+            // coordinator-side queueing cannot inflate the percentile),
+            // falling back to the round-trip duration; everyone else
+            // censored at the close (their true latency is at least the
+            // elapsed window)
+            let reported: BTreeSet<&String> =
+                out.results.iter().map(|r| &r.device_name).collect();
+            for r in &out.results {
+                let total_ms = (r.duration * 1_000.0).round() as u64;
+                let compute_ms = r
+                    .result
+                    .get("compute_s")
+                    .and_then(Json::as_f64)
+                    .map(|s| (s * 1_000.0).round() as u64);
+                if let Some(c) = compute_ms {
+                    ctx.metrics
+                        .histogram("fact.client.queue_ms")
+                        .observe(total_ms.saturating_sub(c) as f64);
+                }
+                ctx.latency.observe_round(&r.device_name, total_ms, compute_ms);
+            }
+            for name in addressed.iter().filter(|d| !reported.contains(*d)) {
+                ctx.latency.observe_censored(name, out.elapsed_ms.max(1));
+            }
+            let late = out.late;
+            let dropped = sampled.saturating_sub(out.results.len() + late.len());
+            ctx.metrics
+                .counter(match out.close {
+                    RoundClose::Complete => "fact.participation.complete_closes",
+                    RoundClose::Quorum => "fact.participation.quorum_closes",
+                    RoundClose::Deadline => "fact.participation.deadline_closes",
+                    RoundClose::Settled => "fact.participation.settled_closes",
+                })
+                .inc();
+            if out.results.len() < quorum {
+                log::warn!(target: "fact::server",
+                    "cluster {} round {round}: closed below quorum \
+                     ({}/{quorum} of {sampled} sampled)",
+                    cluster.id, out.results.len());
+            }
+            (out.results, late, dropped)
+        }
+        _ => {
+            let results = ctx.wm.run_task(
+                dict,
+                "fact_learn",
+                deadline_override.unwrap_or(ctx.timeout),
+            )?;
+            let dropped = sampled.saturating_sub(results.len());
+            (results, Vec::new(), dropped)
+        }
+    };
+    drop(qguard);
+    ctx.phase_ms(phase::QUORUM_WAIT, cluster.id, qsw.elapsed_ms());
+    qspan.finish();
+    // pull each client's echoed `fact_learn` span into the trace, then
+    // close the coordinator-side client spans with their outcome
+    for r in &results {
+        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
+    }
+    for (name, mut span) in client_spans {
+        if let Some(r) = results.iter().find(|r| r.device_name == name) {
+            span.set_attr("outcome", "ok");
+            ctx.metrics
+                .histogram_labeled("fact.client.learn_ms", &[("client", &name)])
+                .observe(r.duration * 1000.0);
+        } else if late_names.contains(&name) {
+            span.set_attr("outcome", "late");
+        } else {
+            span.set_attr("outcome", "dropped");
+        }
+        span.finish();
+    }
+    ctx.metrics
+        .counter("fact.participation.sampled")
+        .add(sampled as u64);
+    ctx.metrics
+        .counter("fact.participation.reported")
+        .add(results.len() as u64);
+    ctx.metrics
+        .counter("fact.participation.late")
+        .add(late_names.len() as u64);
+    ctx.metrics
+        .counter("fact.participation.dropped")
+        .add(dropped as u64);
+    if results.is_empty() {
+        return Err(FedError::Fact(format!(
+            "cluster {}: no client returned a result in round {round}",
+            cluster.id
+        )));
+    }
+    // Alg 5 line 5: fetch updated parameters and aggregate.
+    let mut updates: Vec<ClientUpdate> = results
+        .iter()
+        .map(|r| cluster.model.parse_update(&r.device_name, r.duration, &r.result))
+        .collect::<Result<Vec<_>>>()?;
+    // deterministic aggregation order regardless of arrival order:
+    // f32 reduction is order-sensitive, and mode parity (E6) demands
+    // bit-identical results between test mode and the TCP path
+    updates.sort_by(|a, b| a.device.cmp(&b.device));
+    let late = late_names.len();
+    // the addressed clients that never delivered a counted result, by
+    // name — the recovery path reports them in the audit trail
+    let responded: BTreeSet<&String> =
+        results.iter().map(|r| &r.device_name).collect();
+    let dropped_names: Vec<String> = addressed
+        .iter()
+        .filter(|d| !responded.contains(*d) && !late_names.contains(*d))
+        .cloned()
+        .collect();
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::LearnClosed {
+            updates: updates
+                .iter()
+                .map(|u| StoredUpdate {
+                    device: u.device.clone(),
+                    params: u.params.clone(),
+                    n_samples: u.n_samples,
+                    loss: u.loss,
+                    duration: u.duration,
+                    tau: u.tau,
+                })
+                .collect(),
+            late,
+            dropped: dropped_names,
+        },
+    ))?;
+    Ok((updates, sampled, late, dropped))
+}
+
+/// The tail of a round: recover the aggregate (under secagg), apply the
+/// server optimizer, and persist the outcome — `Revealed` + `Aggregated`
+/// + `Closed` on success, or `Voided` when the reveal policy `proceed`
+/// abandons an unrecoverable round.  The `Aggregated` event pins the
+/// post-apply parameters *and* the post-apply optimizer state, so
+/// resuming AT that phase is exact even under a stateful optimizer.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish_round(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    round: usize,
+    round_id: u64,
+    realized_q: f64,
+    sampled: usize,
+    late: usize,
+    dropped: usize,
+    secagg_setup: Option<&SecAggSetup>,
+    updates: Vec<ClientUpdate>,
+    sw: Stopwatch,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    let agg_sw = Stopwatch::start();
+    let (target, secagg_audit) = if let Some(setup) = secagg_setup {
+        let out = secagg_recover_aggregate(ctx, cluster, setup, &updates, round_id)?;
+        ctx.store.append(RoundEvent::new(
+            round_id,
+            EventKind::Revealed { audit: out.audit.to_json() },
+        ))?;
+        (out.target, Some(out.audit))
+    } else {
+        // clear/dp aggregation shares the unmask phase name: same slot
+        // in the span taxonomy, no masks to fold (mode=clear)
+        let mut span = telemetry::child_of_current(phase::UNMASK_AGGREGATE);
+        span.set_attr("mode", "clear");
+        let _g = span.enter();
+        let psw = Stopwatch::start();
+        let target = cluster.model.aggregate(&updates, Some(ctx.pool))?;
+        ctx.phase_ms(phase::UNMASK_AGGREGATE, cluster.id, psw.elapsed_ms());
+        (Some(target), None)
+    };
+    // FedNova: clients reported tau-normalized deltas; re-scale the
+    // merged delta by the weighted effective step count before the
+    // optimizer sees it
+    let target = target.map(|mut t| {
+        if ctx.strategy.is_fednova() {
+            crate::fact::aggregation::fednova_rescale(
+                &mut t,
+                &cluster.params,
+                &updates,
+                ctx.hyper.local_steps as f32,
+            );
+        }
+        t
+    });
+    let asw = Stopwatch::start();
+    let mut aspan = telemetry::child_of_current(phase::APPLY);
+    let aguard = aspan.enter();
+    let applied = match target {
+        Some(target) => {
+            let mut state = std::mem::take(&mut cluster.opt_state);
+            ctx.server_opt.apply(&mut cluster.params, target, &mut state);
+            cluster.opt_state = state;
+            true
+        }
+        None => {
+            // reveal policy `proceed`: the round is unrecoverable
+            // below the share threshold — void it (parameters
+            // unchanged), audit it, keep training
+            ctx.metrics.counter("fact.secagg.rounds_voided").inc();
+            log::warn!(target: "fact::server",
+                "cluster {} round {round}: secagg recovery below \
+                 threshold, policy=proceed voids the round",
+                cluster.id);
+            false
+        }
+    };
+    let agg_ms = agg_sw.elapsed_ms();
+
+    let mean_loss =
+        updates.iter().map(|u| u.loss).sum::<f32>() / updates.len() as f32;
+    let mean_client_s =
+        updates.iter().map(|u| u.duration).sum::<f64>() / updates.len() as f64;
+    cluster.loss_history.push(mean_loss);
+    for u in &updates {
+        // n_samples is clear even under secagg (the protocol ships it
+        // alongside the masked vector); it feeds weighted sampling
+        seen_samples.insert(u.device.clone(), u.n_samples as f64);
+    }
+    if !ctx.privacy.mode.has_secagg() {
+        // under secagg the per-client vectors are masked lattice noise
+        // — recording them would feed garbage to the clustering input
+        for u in &updates {
+            latest.insert(u.device.clone(), u.params.to_vec());
+        }
+    }
+    let record = RoundRecord {
+        clustering_round: ctx.clustering_round,
+        cluster_id: cluster.id,
+        round,
+        n_clients: updates.len(),
+        sampled,
+        late,
+        dropped,
+        sample_rate: realized_q,
+        mean_loss,
+        round_ms: sw.elapsed_ms(),
+        agg_ms,
+        mean_client_s,
+        secagg: secagg_audit,
+        server_opt: ctx.server_opt.name().to_string(),
+        local_strategy: ctx.strategy.name().to_string(),
+    };
+    if applied {
+        // pin the post-apply params + optimizer state + the audit
+        // record, then close — a crash between the two appends resumes
+        // at Aggregated, where fast-forwarding is an idempotent
+        // replacement (of both params and optimizer buffers)
+        ctx.store.append(RoundEvent::new(
+            round_id,
+            EventKind::Aggregated {
+                params: crate::util::tensorbuf::TensorBuf::from_f32_slice(
+                    &cluster.params,
+                ),
+                record: record.to_json(),
+                opt_state: cluster.opt_state.to_json(),
+            },
+        ))?;
+        ctx.store
+            .append(RoundEvent::new(round_id, EventKind::Closed))?;
+    } else {
+        ctx.store.append(RoundEvent::new(
+            round_id,
+            EventKind::Voided {
+                reason: "secagg recovery below threshold (reveal policy \
+                         proceed)"
+                    .into(),
+                record: record.to_json(),
+            },
+        ))?;
+    }
+    drop(aguard);
+    aspan.set_attr("applied", applied);
+    ctx.phase_ms(phase::APPLY, cluster.id, asw.elapsed_ms());
+    aspan.finish();
+    log::debug!(target: "fact::server",
+        "cluster {} round {round}: loss {mean_loss:.4} \
+         ({}/{sampled} sampled clients, {:.1}ms)",
+        cluster.id, record.n_clients, sw.elapsed_ms());
+    records.push(record);
+    Ok(())
+}
+
+/// The artifacts of a round's secagg setup phases: who completed key
+/// agreement + share distribution, their public keys, and the relayed
+/// (still encrypted) shares + clear commitments.
+pub(crate) struct SecAggSetup {
+    /// sorted clients that completed BOTH setup phases — the masking
+    /// participant set of the round
+    pub(crate) participants: Vec<String>,
+    /// participant -> hex DH public key
+    pub(crate) keys: BTreeMap<String, String>,
+    pub(crate) keys_json: Json,
+    /// dealer -> recipient -> hex ciphertext (end-to-end encrypted)
+    pub(crate) enc_shares: BTreeMap<String, BTreeMap<String, String>>,
+    /// dealer -> recipient -> hex share commitment
+    pub(crate) commits: BTreeMap<String, BTreeMap<String, String>>,
+    /// resolved t of the t-of-n recovery (what the dealers split with)
+    pub(crate) threshold: usize,
+}
+
+/// Run the two secagg setup phases before a learn dispatch:
+///
+/// 1. `fact_keys` — every cohort client posts its per-round DH public
+///    key (validated here, so a malformed key fails fast).
+/// 2. `fact_shares` — every key-poster Shamir-splits its round secret at
+///    the resolved threshold and returns one end-to-end encrypted share
+///    per peer plus a clear commitment per share.  The coordinator
+///    relays ciphertext it cannot read — holding `t` *readable* shares
+///    would let it reconstruct any client's masks.
+///
+/// Clients whose phase task errors — or misses the participation
+/// deadline, when one is configured — are excluded from the masking
+/// participant set (they never derived the round's pair masks).
+/// Without a deadline, a client that hangs past the round timeout
+/// stalls the task like any other task.
+///
+/// Each completed phase is persisted to the round store (`KeysCollected`
+/// / `SharesDealt`) so a resumed round can skip straight to learn.
+pub(crate) fn secagg_setup_phases(
+    ctx: &RoundCtx<'_>,
+    cluster: &crate::fact::clustering::Cluster,
+    cohort: &[String],
+    round_id: u64,
+) -> Result<SecAggSetup> {
+    let wm = ctx.wm;
+    let privacy = ctx.privacy;
+    let participation = ctx.participation;
+    let timeout = ctx.timeout;
+    let metrics = ctx.metrics;
+    // setup phases want EVERY response but must not wait on a hung
+    // client forever: under a participation deadline, close at the
+    // deadline and exclude whoever had not answered (the straggler
+    // tolerance the learn phase already has)
+    let run_phase = |dict: BTreeMap<String, Json>,
+                     func: &str|
+     -> Result<Vec<crate::dart::scheduler::TaskResult>> {
+        match participation {
+            Some(p) if p.deadline_ms > 0 => {
+                let expected = dict.len();
+                Ok(wm
+                    .run_task_quorum(
+                        dict,
+                        func,
+                        expected, // close only when everyone reported...
+                        Duration::from_millis(p.deadline_ms),
+                        Duration::ZERO,
+                    )?
+                    .results) // ...or at the deadline, with whoever did
+            }
+            _ => wm.run_task(dict, func, timeout),
+        }
+    };
+    let rid_hex = round_id_to_hex(round_id);
+    // phase 1: key agreement
+    let ksw = Stopwatch::start();
+    let kspan = telemetry::child_of_current(phase::KEYS);
+    let kguard = kspan.enter();
+    let kctx = kspan.context();
+    let dict: BTreeMap<String, Json> = cohort
+        .iter()
+        .map(|c| {
+            (
+                c.clone(),
+                telemetry::inject(
+                    Json::obj().set("round_id", rid_hex.as_str()),
+                    kctx,
+                ),
+            )
+        })
+        .collect();
+    let results = run_phase(dict, "fact_keys")?;
+    for r in &results {
+        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
+    }
+    let mut pubkeys: BTreeMap<String, String> = BTreeMap::new();
+    for r in &results {
+        if let Some(hex) = r.result.get("pubkey").and_then(Json::as_str) {
+            // a malformed or degenerate key excludes THAT client from the
+            // round (like a missing response) — it must not abort the
+            // whole training session
+            match keys::parse_pubkey_hex(hex) {
+                Ok(_) => {
+                    // lowercase: the reconstruction integrity check
+                    // compares against regenerated (lowercase) hex
+                    pubkeys.insert(r.device_name.clone(), hex.to_lowercase());
+                }
+                Err(e) => {
+                    metrics.counter("fact.secagg.bad_keys").inc();
+                    log::warn!(target: "fact::server",
+                        "cluster {}: '{}' posted an invalid DH key ({e}) \
+                         — excluded from the round",
+                        cluster.id, r.device_name);
+                }
+            }
+        }
+    }
+    if pubkeys.len() < 2 {
+        return Err(FedError::Privacy(format!(
+            "cluster {}: only {} client(s) completed secagg key agreement \
+             (need >= 2)",
+            cluster.id,
+            pubkeys.len()
+        )));
+    }
+    if pubkeys.len() > 255 {
+        // GF(256) share x-coordinates are 1-based u8 positions: index
+        // 255 would wrap to x = 0 (the secret itself), so the holder
+        // list caps at 255 participants
+        return Err(FedError::Privacy(format!(
+            "cluster {}: {} secagg participants exceed the 255-participant \
+             limit of GF(256) share coordinates — shard the cohort",
+            cluster.id,
+            pubkeys.len()
+        )));
+    }
+    let threshold =
+        resolve_reveal_threshold(privacy.reveal_threshold, pubkeys.len());
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::KeysCollected { pubkeys: pubkeys.clone(), threshold },
+    ))?;
+    drop(kguard);
+    ctx.phase_ms(phase::KEYS, cluster.id, ksw.elapsed_ms());
+    kspan.finish();
+    let mut keys_json = Json::obj();
+    for (name, hex) in &pubkeys {
+        keys_json = keys_json.set(name, hex.as_str());
+    }
+    if pubkeys.len() < 3 {
+        // a 2-client round has a single share holder per dealer — below
+        // any meaningful threshold (t >= 2).  Skip share dealing and
+        // rely on direct reveals, the pre-threshold recovery path.
+        let participants: Vec<String> = pubkeys.keys().cloned().collect();
+        return Ok(SecAggSetup {
+            participants,
+            keys: pubkeys,
+            keys_json,
+            enc_shares: BTreeMap::new(),
+            commits: BTreeMap::new(),
+            threshold,
+        });
+    }
+    // phase 2: encrypted share distribution among the key posters
+    let ssw = Stopwatch::start();
+    let sspan = telemetry::child_of_current(phase::SHARES);
+    let sguard = sspan.enter();
+    let sctx = sspan.context();
+    let dict: BTreeMap<String, Json> = pubkeys
+        .keys()
+        .map(|c| {
+            (
+                c.clone(),
+                telemetry::inject(
+                    Json::obj()
+                        .set("round_id", rid_hex.as_str())
+                        .set("keys", keys_json.clone())
+                        .set("threshold", threshold),
+                    sctx,
+                ),
+            )
+        })
+        .collect();
+    let results = run_phase(dict, "fact_shares")?;
+    for r in &results {
+        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
+    }
+    let mut enc_shares = BTreeMap::new();
+    let mut commits = BTreeMap::new();
+    for r in &results {
+        let (Some(shares), Some(cs)) = (
+            r.result.get("shares").and_then(Json::as_obj),
+            r.result.get("commits").and_then(Json::as_obj),
+        ) else {
+            continue;
+        };
+        let to_map = |obj: &BTreeMap<String, Json>| -> BTreeMap<String, String> {
+            obj.iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect()
+        };
+        enc_shares.insert(r.device_name.clone(), to_map(shares));
+        commits.insert(r.device_name.clone(), to_map(cs));
+    }
+    let participants: Vec<String> = enc_shares.keys().cloned().collect();
+    if participants.len() < 2 {
+        return Err(FedError::Privacy(format!(
+            "cluster {}: only {} client(s) dealt secagg shares (need >= 2)",
+            cluster.id,
+            participants.len()
+        )));
+    }
+    if participants.len() < cohort.len() {
+        metrics
+            .counter("fact.secagg.setup_dropouts")
+            .add((cohort.len() - participants.len()) as u64);
+    }
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::SharesDealt {
+            participants: participants.clone(),
+            enc_shares: enc_shares.clone(),
+            commits: commits.clone(),
+        },
+    ))?;
+    drop(sguard);
+    ctx.phase_ms(phase::SHARES, cluster.id, ssw.elapsed_ms());
+    sspan.finish();
+    Ok(SecAggSetup {
+        participants,
+        keys: pubkeys,
+        keys_json,
+        enc_shares,
+        commits,
+        threshold,
+    })
+}
+
+/// Outcome of [`secagg_recover_aggregate`]: `target` is `None` when the
+/// round was unrecoverable and the `proceed` policy voided it.
+pub(crate) struct SecAggOutcome {
+    pub(crate) target: Option<Vec<f32>>,
+    pub(crate) audit: SecAggAudit,
+}
+
+/// Secure-aggregation server path for one round: every masking
+/// participant that answered is a survivor, everyone else dropped
+/// mid-round (under partial participation the cohort — not the whole
+/// cluster — was sampled first, so a straggler cut off at the deadline is
+/// recovered exactly like a crash).  Recovery is **threshold-based**:
+///
+/// * each responsive survivor reveals its own DH-derived pair seed with
+///   every dropped peer (covering its own pairs), and its decrypted
+///   Shamir share of each dropped dealer's round secret;
+/// * any `t` commitment-verified shares reconstruct a dropped client's
+///   secret, from which the coordinator derives the pair seed with
+///   *every* survivor — including survivors that never answered the
+///   reveal task, the exact wedge the PR 3 all-survivors-must-reveal
+///   protocol could not recover from;
+/// * below `t`, [`PrivacyConfig::reveal_policy`] decides: `abort` fails
+///   the session, `proceed` voids the round (audited either way).
+///
+/// The coordinator never materializes an unmasked individual update —
+/// `unmask_aggregate` folds zero-copy views of the masked buffers
+/// straight into the integer accumulator.
+///
+/// [`PrivacyConfig::reveal_policy`]: crate::privacy::PrivacyConfig
+pub(crate) fn secagg_recover_aggregate(
+    ctx: &RoundCtx<'_>,
+    cluster: &crate::fact::clustering::Cluster,
+    setup: &SecAggSetup,
+    updates: &[ClientUpdate],
+    round_id: u64,
+) -> Result<SecAggOutcome> {
+    let wm = ctx.wm;
+    let privacy = ctx.privacy;
+    let timeout = ctx.timeout;
+    let metrics = ctx.metrics;
+    let weighted = cluster.model.aggregation().is_weighted();
+    let masked: Vec<MaskedUpdate> = updates
+        .iter()
+        .map(|u| MaskedUpdate {
+            device: u.device.clone(),
+            params: u.params.clone(),
+            weight: if weighted {
+                u.n_samples as f64 / privacy.weight_scale as f64
+            } else {
+                1.0
+            },
+        })
+        .collect();
+    let survivors: Vec<String> =
+        updates.iter().map(|u| u.device.clone()).collect();
+    let dropped: Vec<String> = setup
+        .participants
+        .iter()
+        .filter(|c| !survivors.contains(c))
+        .cloned()
+        .collect();
+    let mut audit = SecAggAudit {
+        participants: setup.participants.len(),
+        threshold: setup.threshold,
+        dropped: dropped.clone(),
+        direct_reveals: 0,
+        reconstructed: Vec::new(),
+        unrecovered: Vec::new(),
+        policy: privacy.reveal_policy,
+        outcome: "ok",
+    };
+    // the reveal span opens even with zero dropouts — "nothing to
+    // recover" is itself a phase outcome worth a slot in the trace
+    let rsw = Stopwatch::start();
+    let mut rspan = telemetry::child_of_current(phase::REVEAL);
+    rspan.set_attr("participants", setup.participants.len());
+    rspan.set_attr("dropouts", dropped.len());
+    let rguard = rspan.enter();
+    let mut revealed: Vec<RevealedSeed> = Vec::new();
+    if !dropped.is_empty() {
+        log::info!(target: "fact::server",
+            "cluster {}: {} dropout(s) in secagg round, recovering masks \
+             (t={} of {})",
+            cluster.id, dropped.len(), setup.threshold,
+            setup.participants.len());
+        metrics.counter("fact.secagg.dropouts").add(dropped.len() as u64);
+        let dropped_json =
+            Json::Arr(dropped.iter().cloned().map(Json::Str).collect());
+        let dict: BTreeMap<String, Json> = survivors
+            .iter()
+            .map(|s| {
+                // the encrypted shares each dropped dealer addressed to
+                // this survivor, relayed for client-side decryption
+                let mut shares = Json::obj();
+                for d in &dropped {
+                    if let Some(ct) =
+                        setup.enc_shares.get(d).and_then(|m| m.get(s))
+                    {
+                        shares = shares.set(d, ct.as_str());
+                    }
+                }
+                (
+                    s.clone(),
+                    telemetry::inject(
+                        Json::obj()
+                            .set("round_id", round_id_to_hex(round_id))
+                            .set("dropped", dropped_json.clone())
+                            .set("keys", setup.keys_json.clone())
+                            .set("shares", shares),
+                        telemetry::current(),
+                    ),
+                )
+            })
+            .collect();
+        let reveals = wm.run_task(dict, "fact_reveal", timeout)?;
+        for r in &reveals {
+            telemetry::absorb_echo(ctx.tele, &r.result, round_id);
+        }
+        // collect direct seed reveals and decrypted shares
+        let mut shares_by_dealer: BTreeMap<String, Vec<shamir::Share>> =
+            BTreeMap::new();
+        for r in &reveals {
+            if let Some(seeds) = r.result.get("seeds").and_then(Json::as_obj) {
+                for (d, hex) in seeds {
+                    let Some(hex) = hex.as_str() else { continue };
+                    revealed.push(RevealedSeed {
+                        survivor: r.device_name.clone(),
+                        dropped: d.clone(),
+                        seed: seed_from_hex(hex)?,
+                    });
+                    audit.direct_reveals += 1;
+                }
+            }
+            if let Some(shares) = r.result.get("shares").and_then(Json::as_obj)
+            {
+                for (d, hex) in shares {
+                    let Some(hex) = hex.as_str() else { continue };
+                    // a malformed share is discarded exactly like a
+                    // commitment-failing one — one bad reveal must not
+                    // abort a recovery that t other valid shares can
+                    // still complete
+                    let share = match from_hex(hex)
+                        .ok()
+                        .and_then(|b| shamir::Share::from_bytes(&b).ok())
+                    {
+                        Some(s) => s,
+                        None => {
+                            metrics
+                                .counter("fact.secagg.corrupt_shares")
+                                .inc();
+                            log::warn!(target: "fact::server",
+                                "cluster {}: malformed share of '{d}' from \
+                                 '{}' — discarded",
+                                cluster.id, r.device_name);
+                            continue;
+                        }
+                    };
+                    // verify against the dealer's commitment for this
+                    // holder — a corrupted share must not enter the pool
+                    let commit_ok = setup
+                        .commits
+                        .get(d)
+                        .and_then(|m| m.get(&r.device_name))
+                        .and_then(|c| from_hex(c).ok())
+                        .map(|want| match <&[u8; 32]>::try_from(want.as_slice()) {
+                            Ok(w) => shamir::verify_share(&share, w),
+                            Err(_) => false,
+                        })
+                        .unwrap_or(false);
+                    if !commit_ok {
+                        metrics.counter("fact.secagg.corrupt_shares").inc();
+                        log::warn!(target: "fact::server",
+                            "cluster {}: share of '{d}' revealed by '{}' \
+                             fails its commitment — discarded",
+                            cluster.id, r.device_name);
+                        continue;
+                    }
+                    shares_by_dealer.entry(d.clone()).or_default().push(share);
+                }
+            }
+        }
+        // per dropped dealer: direct reveals may already cover every
+        // survivor; otherwise reconstruct from >= t verified shares
+        for d in &dropped {
+            let uncovered: Vec<String> = survivors
+                .iter()
+                .filter(|s| {
+                    !revealed
+                        .iter()
+                        .any(|rv| &rv.survivor == *s && &rv.dropped == d)
+                })
+                .cloned()
+                .collect();
+            if uncovered.is_empty() {
+                continue;
+            }
+            let shares = shares_by_dealer.get(d).map(Vec::as_slice).unwrap_or(&[]);
+            if shares.len() < setup.threshold {
+                audit.unrecovered.push(d.clone());
+                continue;
+            }
+            let Some(posted) = setup.keys.get(d) else {
+                audit.unrecovered.push(d.clone());
+                continue;
+            };
+            // shared with the REST board: reconstruct + length check +
+            // posted-pubkey integrity check.  A failure here (duplicate
+            // coordinates, or commitment-passing shares from a lying
+            // dealer that fail the pubkey check) makes THIS dealer
+            // unrecoverable — the reveal policy decides the round's
+            // fate, not a hard error that would bypass `proceed`.
+            let secret = match crate::privacy::secagg::reconstruct_dealer_secret(
+                shares,
+                setup.threshold,
+                posted,
+                d,
+            ) {
+                Ok(s) => s,
+                Err(e) => {
+                    metrics.counter("fact.secagg.corrupt_shares").inc();
+                    log::warn!(target: "fact::server",
+                        "cluster {}: reconstruction of '{d}' failed ({e}) \
+                         — dealer unrecoverable",
+                        cluster.id);
+                    audit.unrecovered.push(d.clone());
+                    continue;
+                }
+            };
+            for s in &uncovered {
+                let Some(posted_pk) = setup.keys.get(s) else {
+                    // a survivor that never posted a key has no pair mask
+                    // with this dealer to unwind
+                    continue;
+                };
+                let their = keys::parse_pubkey_hex(posted_pk)?;
+                let shared = keys::shared_key(&secret, &their);
+                revealed.push(RevealedSeed {
+                    survivor: s.clone(),
+                    dropped: d.clone(),
+                    seed: keys::pair_seed_from_shared(&shared, round_id, s, d),
+                });
+            }
+            audit.reconstructed.push(d.clone());
+        }
+        metrics
+            .counter("fact.secagg.reconstructions")
+            .add(audit.reconstructed.len() as u64);
+        if !audit.reconstructed.is_empty() {
+            audit.outcome = "recovered";
+        }
+        if !audit.unrecovered.is_empty() {
+            metrics.counter("fact.secagg.below_threshold").inc();
+            let detail = format!(
+                "cluster {}: secagg round below reveal threshold t={} for \
+                 {:?} ({} dropout(s), {} direct reveal(s))",
+                cluster.id,
+                setup.threshold,
+                audit.unrecovered,
+                dropped.len(),
+                audit.direct_reveals,
+            );
+            match privacy.reveal_policy {
+                RevealPolicy::Abort => {
+                    audit.outcome = "aborted";
+                    return Err(FedError::Privacy(format!(
+                        "{detail} — reveal policy abort"
+                    )));
+                }
+                RevealPolicy::Proceed => {
+                    audit.outcome = "skipped";
+                    return Ok(SecAggOutcome { target: None, audit });
+                }
+            }
+        }
+    }
+    drop(rguard);
+    rspan.set_attr("outcome", audit.outcome);
+    ctx.phase_ms(phase::REVEAL, cluster.id, rsw.elapsed_ms());
+    rspan.finish();
+    let usw = Stopwatch::start();
+    let mut uspan = telemetry::child_of_current(phase::UNMASK_AGGREGATE);
+    uspan.set_attr("mode", "secagg");
+    let _uguard = uspan.enter();
+    let target = unmask_aggregate(&masked, &revealed, privacy.frac_bits)?;
+    ctx.phase_ms(phase::UNMASK_AGGREGATE, cluster.id, usw.elapsed_ms());
+    Ok(SecAggOutcome { target: Some(target), audit })
+}

@@ -1,0 +1,486 @@
+//! The round pipeline driver: sequences the named stages in
+//! `super::phases` over a [`RoundCtx`], driven by the round-store state
+//! machine — per round index it skips what the store already closed,
+//! resumes what it holds in flight, and runs everything else fresh.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::coordinator::participation::CohortSampler;
+use crate::coordinator::round_store::{
+    now_ms, EventKind, RoundEvent, RoundPhase, RoundState,
+};
+use crate::error::{FedError, Result};
+use crate::fact::aggregation::ClientUpdate;
+use crate::fact::rounds::ctx::{ClusterOutcome, RoundCtx};
+use crate::fact::rounds::optimizer::OptState;
+use crate::fact::rounds::phases::{
+    dispatch_learn, draw_cohort, finish_round, repair_cohort,
+    secagg_setup_phases, SecAggSetup,
+};
+use crate::fact::server::RoundRecord;
+use crate::json::Json;
+use crate::privacy::{round_id_to_hex, RevealPolicy};
+use crate::telemetry::{self, phase};
+use crate::util::rng::splitmix64;
+use crate::util::Stopwatch;
+
+/// Alg 5: the training session of one cluster.
+pub(crate) fn train_cluster(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+) -> ClusterOutcome {
+    let mut records = Vec::new();
+    let mut latest = BTreeMap::new();
+    let mut samples = BTreeMap::new();
+    let err =
+        train_cluster_rounds(ctx, cluster, &mut records, &mut latest, &mut samples)
+            .err();
+    ClusterOutcome { records, latest, samples, err }
+}
+
+/// The round loop behind [`train_cluster`]: per round index, skip what
+/// the store already closed, resume what it holds in flight, and run
+/// everything else fresh.  Completed rounds accumulate into the
+/// out-params so they survive an error return.
+pub(crate) fn train_cluster_rounds(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    let mut round = 0usize;
+    loop {
+        let key = (ctx.clustering_round, cluster.id, round);
+        if ctx.completed.contains(&key) {
+            // replayed by recover(): params + loss history were already
+            // fast-forwarded and the record is back in the history
+        } else if let Some(plan) = ctx.plans.get(&key) {
+            resume_round(ctx, cluster, round, plan, records, latest, seen_samples)?;
+        } else {
+            fresh_round(ctx, cluster, round, records, latest, seen_samples)?;
+        }
+        round += 1;
+        // Alg 5 line 7: stopping criterion.
+        if ctx.fl_stop.should_stop(round, &cluster.loss_history) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// A round with no prior history in the store: derive its id, persist
+/// the opening `Configured` event, and run the full pipeline.
+fn fresh_round(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    round: usize,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    let sw = Stopwatch::start();
+    // privacy negotiation: the round's mode and a fresh round id ride in
+    // every learn task; clients transform their update accordingly.
+    // Derived before anything else so the round's root span carries it.
+    let round_id = splitmix64(
+        ctx.session_tag
+            ^ ((ctx.clustering_round as u64) << 42)
+            ^ ((cluster.id as u64) << 21)
+            ^ round as u64,
+    );
+    let mut root = telemetry::Span::root(ctx.tele, phase::ROUND, round_id);
+    root.set_attr("cluster", cluster.id);
+    root.set_attr("round", round);
+    root.set_attr("clustering_round", ctx.clustering_round);
+    root.set_attr("mode", ctx.privacy.mode.as_str());
+    let _root_guard = root.enter();
+    // --- participation: draw this round's cohort (everyone without) --
+    let (cohort, realized_q, sampler) = {
+        let span = telemetry::child_of_current(phase::DRAW_COHORT);
+        let _g = span.enter();
+        let psw = Stopwatch::start();
+        let out = draw_cohort(ctx, cluster, round, seen_samples);
+        ctx.phase_ms(phase::DRAW_COHORT, cluster.id, psw.elapsed_ms());
+        out
+    };
+    // Alg 5 line 3 prep: the global parameters are materialized into ONE
+    // shared buffer; every client's dict holds a cheap clone of it, and
+    // the binary wire encoding writes it once (envelope dedup) instead
+    // of one base64 copy per client.
+    let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::Configured {
+            clustering_round: ctx.clustering_round,
+            cluster_id: cluster.id,
+            round,
+            cohort: cohort.clone(),
+            sample_rate: realized_q,
+            mode: ctx.privacy.mode.as_str().to_string(),
+            params: global.clone(),
+            deadline_ms: ctx
+                .participation
+                .as_ref()
+                .map(|p| p.deadline_ms)
+                .unwrap_or(0),
+            session_tag: ctx.session_tag,
+        },
+    ))?;
+    // self-healing: members the scheduler already knows are dead get
+    // replaced from the unsampled pool before any phase addresses them
+    let (cohort, realized_q) =
+        repair_cohort(ctx, cluster, round, round_id, cohort, realized_q, sampler.as_ref())?;
+    run_round_pipeline(
+        ctx,
+        cluster,
+        round,
+        round_id,
+        &cohort,
+        realized_q,
+        sampler.as_ref(),
+        &global,
+        sw,
+        None,
+        records,
+        latest,
+        seen_samples,
+    )
+}
+
+/// Resume one in-flight round from its persisted state: fast-forward
+/// what already happened, re-run only what the crash interrupted.
+/// Client-side key/mask/noise derivation is deterministic in
+/// `(round_id, device)`, so a re-run phase reproduces byte-identical
+/// contributions and the resumed aggregate equals the uninterrupted one.
+fn resume_round(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    round: usize,
+    plan: &RoundState,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    let sw = Stopwatch::start();
+    let round_id = plan.round_id;
+    // a resumed round gets a fresh trace (the pre-crash spans, if any,
+    // were replayed from trace.jsonl under their own trace id)
+    let mut root = telemetry::Span::root(ctx.tele, phase::ROUND, round_id);
+    root.set_attr("cluster", cluster.id);
+    root.set_attr("round", round);
+    root.set_attr("clustering_round", ctx.clustering_round);
+    root.set_attr("mode", ctx.privacy.mode.as_str());
+    root.set_attr("resumed", true);
+    root.set_attr("from_phase", plan.phase.as_str());
+    let _root_guard = root.enter();
+    log::info!(target: "fact::server",
+        "cluster {} round {round}: resuming from round store at phase '{}'",
+        cluster.id, plan.phase.as_str());
+    // the config the round was persisted under must still hold
+    if plan.mode != ctx.privacy.mode.as_str() {
+        return void_round(
+            ctx,
+            round_id,
+            format!(
+                "privacy mode changed across restart ('{}' -> '{}')",
+                plan.mode,
+                ctx.privacy.mode.as_str()
+            ),
+        );
+    }
+    if let Some(p) = &plan.params {
+        if p.len() != cluster.params.len() {
+            return void_round(
+                ctx,
+                round_id,
+                format!(
+                    "broadcast params len {} no longer matches the cluster ({})",
+                    p.len(),
+                    cluster.params.len()
+                ),
+            );
+        }
+    }
+    let cohort = plan.cohort.clone();
+    let realized_q = plan.sample_rate;
+    let sampler = ctx
+        .participation
+        .as_ref()
+        .map(|p| CohortSampler::new(p.clone()));
+    let global = plan.params.clone().unwrap_or_else(|| {
+        crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params)
+    });
+    match plan.phase {
+        RoundPhase::Aggregated => {
+            // the aggregate was applied and its post-apply params AND
+            // optimizer state pinned pre-crash: make both effective
+            // (plain replacement — exact under any server optimizer)
+            // and close
+            if let Some(pa) = &plan.params_after {
+                if pa.len() == cluster.params.len() {
+                    cluster.params = pa.to_vec();
+                }
+            }
+            if let Some(oj) = &plan.opt_state {
+                if let Ok(st) = OptState::from_json(oj) {
+                    cluster.opt_state = st;
+                }
+            }
+            if let Some(rj) = &plan.record {
+                if let Ok(rec) = RoundRecord::from_json(rj) {
+                    cluster.loss_history.push(rec.mean_loss);
+                    records.push(rec);
+                }
+            }
+            ctx.store
+                .append(RoundEvent::new(round_id, EventKind::Closed))?;
+            Ok(())
+        }
+        RoundPhase::Learn | RoundPhase::Reveal if !plan.updates.is_empty() => {
+            // learn already closed: the collected (still masked) updates
+            // are in the WAL — redo recovery + aggregation without
+            // touching the cohort's learn tasks
+            let setup = setup_from_plan(plan);
+            let updates: Vec<ClientUpdate> = plan
+                .updates
+                .iter()
+                .map(|u| ClientUpdate {
+                    device: u.device.clone(),
+                    params: u.params.clone(),
+                    n_samples: u.n_samples,
+                    loss: u.loss,
+                    duration: u.duration,
+                    tau: u.tau,
+                })
+                .collect();
+            let sampled = plan.addressed.len().max(updates.len());
+            finish_round(
+                ctx,
+                cluster,
+                round,
+                round_id,
+                realized_q,
+                sampled,
+                plan.late,
+                plan.dropped.len(),
+                setup.as_ref(),
+                updates,
+                sw,
+                records,
+                latest,
+                seen_samples,
+            )
+        }
+        RoundPhase::Reveal => {
+            // a Revealed event without a persisted LearnClosed should not
+            // occur; refuse to guess at the missing updates
+            void_round(
+                ctx,
+                round_id,
+                "reveal phase without persisted updates".into(),
+            )
+        }
+        RoundPhase::Learn => {
+            // dispatched, never closed: honor the part of the deadline
+            // that elapsed while the coordinator was down
+            let now = now_ms();
+            let deadline_at =
+                plan.dispatched_at_ms.saturating_add(plan.learn_deadline_ms);
+            if plan.learn_deadline_ms > 0 && now >= deadline_at {
+                ctx.metrics.counter("fact.roundstore.voided").inc();
+                log::warn!(target: "fact::server",
+                    "cluster {} round {round}: learn deadline elapsed \
+                     during the outage — voiding",
+                    cluster.id);
+                ctx.store.append(RoundEvent::new(
+                    round_id,
+                    EventKind::Voided {
+                        reason: "learn deadline elapsed during coordinator \
+                                 outage"
+                            .into(),
+                        record: Json::Null,
+                    },
+                ))?;
+                return Ok(());
+            }
+            let remaining = if plan.learn_deadline_ms > 0 {
+                Some(Duration::from_millis(deadline_at - now))
+            } else {
+                None
+            };
+            let setup = setup_from_plan(plan);
+            let (updates, sampled, late, dropped) = dispatch_learn(
+                ctx,
+                cluster,
+                round,
+                round_id,
+                &cohort,
+                sampler.as_ref(),
+                &global,
+                setup.as_ref(),
+                remaining,
+            )?;
+            finish_round(
+                ctx,
+                cluster,
+                round,
+                round_id,
+                realized_q,
+                sampled,
+                late,
+                dropped,
+                setup.as_ref(),
+                updates,
+                sw,
+                records,
+                latest,
+                seen_samples,
+            )
+        }
+        _ => {
+            // Configured / Keys / Shares: re-run the setup phases against
+            // the pinned cohort + params.  Clients re-derive keys, masks
+            // and noise deterministically from the same round id, so the
+            // re-run reproduces the dead coordinator's round exactly.
+            //
+            // Before share dealing the cohort is still repairable: members
+            // that died across the outage are replaced now (the repair is
+            // evented, so a second resume replays the repaired cohort).
+            let (cohort, realized_q) =
+                if matches!(plan.phase, RoundPhase::Configured | RoundPhase::Keys) {
+                    repair_cohort(
+                        ctx,
+                        cluster,
+                        round,
+                        round_id,
+                        cohort,
+                        realized_q,
+                        sampler.as_ref(),
+                    )?
+                } else {
+                    (cohort, realized_q)
+                };
+            run_round_pipeline(
+                ctx,
+                cluster,
+                round,
+                round_id,
+                &cohort,
+                realized_q,
+                sampler.as_ref(),
+                &global,
+                sw,
+                None,
+                records,
+                latest,
+                seen_samples,
+            )
+        }
+    }
+}
+
+/// Abandon a round that cannot be safely resumed: persist the `Voided`
+/// event, then let [`RevealPolicy`] decide whether the session survives
+/// (`proceed`) or fails loudly (`abort`, the default).
+fn void_round(ctx: &RoundCtx<'_>, round_id: u64, reason: String) -> Result<()> {
+    ctx.metrics.counter("fact.roundstore.voided").inc();
+    log::warn!(target: "fact::server",
+        "voiding round {}: {reason}", round_id_to_hex(round_id));
+    ctx.store.append(RoundEvent::new(
+        round_id,
+        EventKind::Voided {
+            reason: reason.clone(),
+            record: Json::Null,
+        },
+    ))?;
+    match ctx.privacy.reveal_policy {
+        RevealPolicy::Abort => Err(FedError::Privacy(format!(
+            "cannot resume round {}: {reason} — reveal policy abort",
+            round_id_to_hex(round_id)
+        ))),
+        RevealPolicy::Proceed => Ok(()),
+    }
+}
+
+/// Rebuild the secagg setup snapshot from persisted round state (`None`
+/// when the round ran without secure aggregation).
+fn setup_from_plan(plan: &RoundState) -> Option<SecAggSetup> {
+    if plan.pubkeys.is_empty() {
+        return None;
+    }
+    let mut keys_json = Json::obj();
+    for (name, hex) in &plan.pubkeys {
+        keys_json = keys_json.set(name, hex.as_str());
+    }
+    Some(SecAggSetup {
+        participants: plan.participants.clone(),
+        keys: plan.pubkeys.clone(),
+        keys_json,
+        enc_shares: plan.enc_shares.clone(),
+        commits: plan.commits.clone(),
+        threshold: plan.threshold,
+    })
+}
+
+/// The setup -> learn -> recover -> aggregate pipeline of one round,
+/// entered either fresh (setup still to run) or on resume with the
+/// persisted setup already rebuilt (`setup_done`).
+#[allow(clippy::too_many_arguments)]
+fn run_round_pipeline(
+    ctx: &RoundCtx<'_>,
+    cluster: &mut crate::fact::clustering::Cluster,
+    round: usize,
+    round_id: u64,
+    cohort: &[String],
+    realized_q: f64,
+    sampler: Option<&CohortSampler>,
+    global: &crate::util::tensorbuf::TensorBuf,
+    sw: Stopwatch,
+    setup_done: Option<Option<SecAggSetup>>,
+    records: &mut Vec<RoundRecord>,
+    latest: &mut BTreeMap<String, Vec<f32>>,
+    seen_samples: &mut BTreeMap<String, f64>,
+) -> Result<()> {
+    // secagg setup phases: per-pair key agreement + encrypted Shamir
+    // share distribution run BEFORE the learn dispatch (clients that
+    // fail either phase are excluded from the masking participant set)
+    let secagg_setup = match setup_done {
+        Some(setup) => setup,
+        None => {
+            if ctx.privacy.mode.has_secagg() {
+                Some(secagg_setup_phases(ctx, cluster, cohort, round_id)?)
+            } else {
+                None
+            }
+        }
+    };
+    let (updates, sampled, late, dropped) = dispatch_learn(
+        ctx,
+        cluster,
+        round,
+        round_id,
+        cohort,
+        sampler,
+        global,
+        secagg_setup.as_ref(),
+        None,
+    )?;
+    finish_round(
+        ctx,
+        cluster,
+        round,
+        round_id,
+        realized_q,
+        sampled,
+        late,
+        dropped,
+        secagg_setup.as_ref(),
+        updates,
+        sw,
+        records,
+        latest,
+        seen_samples,
+    )
+}

@@ -1,0 +1,121 @@
+//! Pluggable local-training strategies (the `LocalStrategy` seam).
+//!
+//! Generalizes the hardcoded FedProx path: the strategy is negotiated
+//! into every `fact_learn` task dict (the client runtime reads the
+//! `strategy` field and adjusts its local loop), and the weighted merge
+//! in `fact::aggregation` applies the matching server-side correction.
+//!
+//! * [`LocalStrategy::Plain`] — local SGD as configured by `Hyper`
+//!   (including a nonzero `--mu`, the backward-compatible FedProx knob).
+//! * [`LocalStrategy::FedProx`] — proximal term `mu/2 * ||w - w_g||^2`
+//!   added to every local step (Li et al. 2020); overrides `Hyper::mu`.
+//! * [`LocalStrategy::FedNova`] — normalized averaging (Wang et al.
+//!   2020): each client divides its accumulated delta by its effective
+//!   local step count `tau` and reports `tau`; the server re-scales the
+//!   merged delta by the weighted mean `tau`, removing the objective
+//!   inconsistency of heterogeneous local epochs.
+
+use crate::error::{FedError, Result};
+
+/// The client-side training variant negotiated for a session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LocalStrategy {
+    /// Local SGD exactly as `Hyper` configures it.
+    Plain,
+    /// FedProx with the given proximal coefficient.
+    FedProx {
+        /// Proximal term weight (overrides `Hyper::mu`).
+        mu: f32,
+    },
+    /// FedNova normalized averaging.
+    FedNova,
+}
+
+impl Default for LocalStrategy {
+    fn default() -> Self {
+        LocalStrategy::Plain
+    }
+}
+
+impl LocalStrategy {
+    /// Stable lowercase name shipped in the learn dict and echoed in
+    /// round records / round status.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LocalStrategy::Plain => "plain",
+            LocalStrategy::FedProx { .. } => "fedprox",
+            LocalStrategy::FedNova => "fednova",
+        }
+    }
+
+    /// True when clients must tau-normalize their deltas and the merge
+    /// must re-scale (see `fact::aggregation::fednova_rescale`).
+    pub fn is_fednova(&self) -> bool {
+        matches!(self, LocalStrategy::FedNova)
+    }
+
+    /// Parse a `--local-strategy` spec:
+    /// `plain` | `fedprox[:mu]` (default `0.01`) | `fednova`.
+    pub fn parse(spec: &str) -> Result<LocalStrategy> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n.trim(), Some(a.trim())),
+            None => (spec.trim(), None),
+        };
+        match (name, arg) {
+            ("plain" | "", None) => Ok(LocalStrategy::Plain),
+            ("fedprox", None) => Ok(LocalStrategy::FedProx { mu: 0.01 }),
+            ("fedprox", Some(a)) => {
+                let mu = a.parse::<f32>().map_err(|_| {
+                    FedError::Config(format!(
+                        "--local-strategy '{spec}': '{a}' is not a number"
+                    ))
+                })?;
+                if !(mu >= 0.0) || !mu.is_finite() {
+                    return Err(FedError::Config(format!(
+                        "--local-strategy '{spec}': mu must be finite and >= 0"
+                    )));
+                }
+                Ok(LocalStrategy::FedProx { mu })
+            }
+            ("fednova", None) => Ok(LocalStrategy::FedNova),
+            _ => Err(FedError::Config(format!(
+                "unknown --local-strategy '{spec}' \
+                 (expected plain|fedprox[:mu]|fednova)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(LocalStrategy::parse("plain").expect("p"), LocalStrategy::Plain);
+        assert_eq!(
+            LocalStrategy::parse("fedprox").expect("fp"),
+            LocalStrategy::FedProx { mu: 0.01 }
+        );
+        assert_eq!(
+            LocalStrategy::parse("fedprox:0.1").expect("fp01"),
+            LocalStrategy::FedProx { mu: 0.1 }
+        );
+        assert_eq!(
+            LocalStrategy::parse("fednova").expect("fn"),
+            LocalStrategy::FedNova
+        );
+        assert!(LocalStrategy::parse("scaffold").is_err());
+        assert!(LocalStrategy::parse("fedprox:-1").is_err());
+        assert!(LocalStrategy::parse("fednova:2").is_err());
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(LocalStrategy::Plain.name(), "plain");
+        assert_eq!(LocalStrategy::FedProx { mu: 0.5 }.name(), "fedprox");
+        assert_eq!(LocalStrategy::FedNova.name(), "fednova");
+        assert!(LocalStrategy::FedNova.is_fednova());
+        assert!(!LocalStrategy::Plain.is_fednova());
+    }
+}

@@ -11,34 +11,31 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::ParticipationConfig;
-use crate::coordinator::latency::{effective_deadline_explained, LatencyTracker};
-use crate::coordinator::participation::{
-    participation_round_key, Candidate, CohortSampler,
-};
+use crate::coordinator::latency::LatencyTracker;
 use crate::coordinator::round_store::{
-    now_ms, EventKind, LedgerCharge, MemRoundStore, RecoveryStatus, RoundEvent,
-    RoundPhase, RoundState, RoundStore, StoredUpdate,
+    EventKind, LedgerCharge, MemRoundStore, RecoveryStatus, RoundEvent,
+    RoundPhase, RoundState, RoundStore,
 };
-use crate::coordinator::workflow::{RoundClose, WorkflowManager};
+use crate::coordinator::workflow::WorkflowManager;
 use crate::error::{FedError, Result};
-use crate::fact::aggregation::ClientUpdate;
 use crate::fact::clustering::{ClusterContainer, ClusteringAlgorithm, StaticClustering};
 use crate::fact::model::{FactModel, Hyper};
+use crate::fact::rounds::ctx::RoundCtx;
+use crate::fact::rounds::optimizer::{OptState, PlainReplace, ServerOptimizer};
+use crate::fact::rounds::pipeline::train_cluster;
+use crate::fact::rounds::strategy::LocalStrategy;
 use crate::fact::stopping::{
     ClusteringStoppingCriterion, FixedClusteringRounds, FlStoppingCriterion,
 };
 use crate::json::Json;
 use crate::metrics::Registry;
 use crate::privacy::dp::DpAccountant;
-use crate::privacy::secagg::{unmask_aggregate, MaskedUpdate, RevealedSeed};
 use crate::privacy::{
-    from_hex, keys, resolve_reveal_threshold, round_id_to_hex, seed_from_hex,
-    shamir, PrivacyConfig, PrivacyMode, RevealPolicy,
+    round_id_to_hex, PrivacyConfig, PrivacyMode, RevealPolicy,
 };
-use crate::telemetry::{self, phase};
+use crate::telemetry::phase;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::splitmix64;
-use crate::util::Stopwatch;
 
 /// Audit record of one secure-aggregation round's recovery (surfaced in
 /// [`RoundRecord`] and counted in `fact.secagg.*` metrics).
@@ -152,6 +149,10 @@ pub struct RoundRecord {
     pub mean_client_s: f64,
     /// secure-aggregation recovery audit (None outside secagg modes)
     pub secagg: Option<SecAggAudit>,
+    /// server optimizer the aggregate was applied with ("plain", ...)
+    pub server_opt: String,
+    /// local strategy negotiated into the round's learn dicts
+    pub local_strategy: String,
 }
 
 impl RoundRecord {
@@ -170,7 +171,9 @@ impl RoundRecord {
             .set("mean_loss", self.mean_loss)
             .set("round_ms", self.round_ms)
             .set("agg_ms", self.agg_ms)
-            .set("mean_client_s", self.mean_client_s);
+            .set("mean_client_s", self.mean_client_s)
+            .set("server_opt", self.server_opt.as_str())
+            .set("local_strategy", self.local_strategy.as_str());
         if let Some(a) = &self.secagg {
             o = o.set("secagg", a.to_json());
         }
@@ -195,6 +198,18 @@ impl RoundRecord {
             agg_ms: f("agg_ms"),
             mean_client_s: f("mean_client_s"),
             secagg: j.get("secagg").map(SecAggAudit::from_json).transpose()?,
+            // records persisted before the optimizer seam default to the
+            // only behavior that existed then
+            server_opt: j
+                .get("server_opt")
+                .and_then(Json::as_str)
+                .unwrap_or("plain")
+                .to_string(),
+            local_strategy: j
+                .get("local_strategy")
+                .and_then(Json::as_str)
+                .unwrap_or("plain")
+                .to_string(),
         })
     }
 }
@@ -239,39 +254,6 @@ pub struct EvalRecord {
     pub n_clients: usize,
 }
 
-/// Server-side update rule applied to the aggregated target (FedAvgM,
-/// Hsu et al. 2019 — the "new aggregation algorithms can be added easily"
-/// extension point, paper §B.3).  `lr = 1, momentum = 0` is plain
-/// parameter replacement (classic FedAvg) and takes a fast path that is
-/// bit-identical to assignment.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct ServerOpt {
-    pub lr: f32,
-    pub momentum: f32,
-}
-
-impl Default for ServerOpt {
-    fn default() -> Self {
-        ServerOpt { lr: 1.0, momentum: 0.0 }
-    }
-}
-
-impl ServerOpt {
-    /// params <- params + lr * buf, where buf <- momentum*buf + (target - params).
-    pub fn apply(&self, params: &mut Vec<f32>, target: Vec<f32>, buf: &mut Vec<f32>) {
-        if self.lr == 1.0 && self.momentum == 0.0 {
-            *params = target; // exact FedAvg replacement
-            return;
-        }
-        if buf.len() != params.len() {
-            *buf = vec![0.0; params.len()];
-        }
-        for ((p, t), b) in params.iter_mut().zip(target).zip(buf.iter_mut()) {
-            *b = self.momentum * *b + (t - *p);
-            *p += self.lr * *b;
-        }
-    }
-}
 
 /// The FACT Server.
 pub struct FactServer {
@@ -281,7 +263,12 @@ pub struct FactServer {
     cluster_stop: Box<dyn ClusteringStoppingCriterion>,
     fl_stop: Arc<dyn FlStoppingCriterion>,
     pub hyper: Hyper,
-    pub server_opt: ServerOpt,
+    /// Server-side update rule applied to every round's aggregate (the
+    /// `ServerOptimizer` seam — plain replacement by default).
+    pub server_opt: Arc<dyn ServerOptimizer>,
+    /// Client-side training variant negotiated into every learn dict
+    /// (the `LocalStrategy` seam — plain local SGD by default).
+    pub local_strategy: LocalStrategy,
     pub round_timeout: Duration,
     /// Negotiated privacy mode + parameters for every training round.
     pub privacy: PrivacyConfig,
@@ -341,7 +328,8 @@ impl FactServer {
             cluster_stop: Box::new(FixedClusteringRounds(1)),
             fl_stop: Arc::new(crate::fact::stopping::FixedRoundFl(10)),
             hyper: Hyper::default(),
-            server_opt: ServerOpt::default(),
+            server_opt: Arc::new(PlainReplace),
+            local_strategy: LocalStrategy::Plain,
             round_timeout: Duration::from_secs(300),
             privacy: PrivacyConfig::default(),
             participation: None,
@@ -383,6 +371,22 @@ impl FactServer {
 
     pub fn with_hyper(mut self, hyper: Hyper) -> FactServer {
         self.hyper = hyper;
+        self
+    }
+
+    /// Apply every round's aggregate through a specific server-side
+    /// optimizer (see [`crate::fact::rounds::optimizer`]).  Optimizer
+    /// state is persisted per cluster inside `Aggregated` round-store
+    /// events, so crash recovery is exact under stateful rules too.
+    pub fn with_server_opt(mut self, opt: Arc<dyn ServerOptimizer>) -> FactServer {
+        self.server_opt = opt;
+        self
+    }
+
+    /// Negotiate a local-training strategy into every learn dict (see
+    /// [`crate::fact::rounds::strategy`]).
+    pub fn with_local_strategy(mut self, s: LocalStrategy) -> FactServer {
+        self.local_strategy = s;
         self
     }
 
@@ -523,6 +527,14 @@ impl FactServer {
                     if let Some(pa) = &r.params_after {
                         if pa.len() == cluster.params.len() {
                             cluster.params = pa.to_vec();
+                        }
+                    }
+                    // fast-forward the server-optimizer state too, so a
+                    // stateful rule (FedAvgM/FedAdam) resumes with the
+                    // exact momentum buffers the dead coordinator held
+                    if let Some(oj) = &r.opt_state {
+                        if let Ok(st) = OptState::from_json(oj) {
+                            cluster.opt_state = st;
                         }
                     }
                 }
@@ -856,7 +868,8 @@ impl FactServer {
             let clusters = std::mem::take(&mut self.container.clusters);
             let wm = Arc::clone(&self.wm);
             let hyper = self.hyper.clone();
-            let server_opt = self.server_opt;
+            let server_opt = Arc::clone(&self.server_opt);
+            let strategy = self.local_strategy;
             let timeout = self.round_timeout;
             let fl_stop = Arc::clone(&self.fl_stop);
             let pool_for_agg = Arc::clone(&self.pool);
@@ -874,7 +887,8 @@ impl FactServer {
                 let ctx = RoundCtx {
                     wm: &wm,
                     hyper: &hyper,
-                    server_opt,
+                    server_opt: &*server_opt,
+                    strategy,
                     fl_stop: fl_stop.as_ref(),
                     timeout,
                     clustering_round,
@@ -1063,1652 +1077,10 @@ impl FactServer {
     }
 }
 
-/// Outcome of one cluster's training session: everything that completed
-/// plus the first error.  Completed rounds ride OUTSIDE the error so a
-/// failure in round k never discards rounds 0..k — those aggregates were
-/// already applied to the cluster and must still be charged to the DP
-/// ledger.
-struct ClusterOutcome {
-    records: Vec<RoundRecord>,
-    latest: BTreeMap<String, Vec<f32>>,
-    samples: BTreeMap<String, f64>,
-    err: Option<FedError>,
-}
-
-/// The per-session invariants every cluster's round loop reads — one
-/// bundle instead of a dozen parameters threaded through two signatures
-/// and the dispatch closure (future round-loop features extend this
-/// struct, not every call site).
-struct RoundCtx<'a> {
-    wm: &'a WorkflowManager,
-    hyper: &'a Hyper,
-    server_opt: ServerOpt,
-    fl_stop: &'a dyn FlStoppingCriterion,
-    timeout: Duration,
-    clustering_round: usize,
-    pool: &'a ThreadPool,
-    privacy: &'a PrivacyConfig,
-    participation: &'a Option<ParticipationConfig>,
-    known_samples: &'a BTreeMap<String, f64>,
-    metrics: &'a Registry,
-    /// observed learn latencies feeding [`effective_deadline_explained`]
-    latency: &'a LatencyTracker,
-    session_tag: u64,
-    /// every round transition is appended (and validated) here
-    store: &'a Arc<dyn RoundStore>,
-    /// rounds the store already closed — skipped outright
-    completed: &'a BTreeSet<(usize, usize, usize)>,
-    /// in-flight rounds to resume instead of starting fresh
-    plans: &'a BTreeMap<(usize, usize, usize), RoundState>,
-    /// flight recorder the round's spans and events land in
-    tele: &'a Arc<telemetry::Recorder>,
-}
-
-impl RoundCtx<'_> {
-    /// Record one finished phase's wall time into the labeled histogram
-    /// behind `fact.round.phase_ms{phase,cluster}` (surfaced by
-    /// `/rounds/recovery` and the Prometheus exposition).
-    fn phase_ms(&self, name: &str, cluster_id: usize, ms: f64) {
-        self.metrics
-            .histogram_labeled(
-                "fact.round.phase_ms",
-                &[("phase", name), ("cluster", &cluster_id.to_string())],
-            )
-            .observe(ms);
-    }
-}
-
-/// Alg 5: the training session of one cluster.
-fn train_cluster(
-    ctx: &RoundCtx<'_>,
-    cluster: &mut crate::fact::clustering::Cluster,
-) -> ClusterOutcome {
-    let mut records = Vec::new();
-    let mut latest = BTreeMap::new();
-    let mut samples = BTreeMap::new();
-    let err =
-        train_cluster_rounds(ctx, cluster, &mut records, &mut latest, &mut samples)
-            .err();
-    ClusterOutcome { records, latest, samples, err }
-}
-
-/// The round loop behind [`train_cluster`]: per round index, skip what
-/// the store already closed, resume what it holds in flight, and run
-/// everything else fresh.  Completed rounds accumulate into the
-/// out-params so they survive an error return.
-fn train_cluster_rounds(
-    ctx: &RoundCtx<'_>,
-    cluster: &mut crate::fact::clustering::Cluster,
-    records: &mut Vec<RoundRecord>,
-    latest: &mut BTreeMap<String, Vec<f32>>,
-    seen_samples: &mut BTreeMap<String, f64>,
-) -> Result<()> {
-    let mut round = 0usize;
-    loop {
-        let key = (ctx.clustering_round, cluster.id, round);
-        if ctx.completed.contains(&key) {
-            // replayed by recover(): params + loss history were already
-            // fast-forwarded and the record is back in the history
-        } else if let Some(plan) = ctx.plans.get(&key) {
-            resume_round(ctx, cluster, round, plan, records, latest, seen_samples)?;
-        } else {
-            fresh_round(ctx, cluster, round, records, latest, seen_samples)?;
-        }
-        round += 1;
-        // Alg 5 line 7: stopping criterion.
-        if ctx.fl_stop.should_stop(round, &cluster.loss_history) {
-            break;
-        }
-    }
-    Ok(())
-}
-
-/// Draw this round's cohort (everyone, without participation sampling).
-fn draw_cohort(
-    ctx: &RoundCtx<'_>,
-    cluster: &crate::fact::clustering::Cluster,
-    round: usize,
-    seen_samples: &BTreeMap<String, f64>,
-) -> (Vec<String>, f64, Option<CohortSampler>) {
-    match ctx.participation {
-        Some(p) => {
-            let sampler = CohortSampler::new(p.clone());
-            let key = participation_round_key(
-                p.seed,
-                ctx.clustering_round,
-                cluster.id,
-                round,
-            );
-            let candidates: Vec<Candidate> = cluster
-                .clients
-                .iter()
-                .map(|n| Candidate {
-                    name: n.clone(),
-                    weight: seen_samples
-                        .get(n)
-                        .or_else(|| ctx.known_samples.get(n))
-                        .copied()
-                        .unwrap_or(1.0)
-                        .max(1.0),
-                })
-                .collect();
-            let cohort = sampler.sample(key, &candidates);
-            let q = sampler.amplification_rate(cohort.len(), cluster.clients.len());
-            (cohort, q, Some(sampler))
-        }
-        None => (cluster.clients.clone(), 1.0, None),
-    }
-}
-
-/// Salt mixed into the round key for the repair draw, so a repaired
-/// round's replacement order never correlates with its cohort draw.
-const REPAIR_SALT: u64 = 0x5e1f_4ea1_1e55_0007;
-
-/// In-round cohort repair: replace cohort members the scheduler already
-/// knows are dead (lease expired / never connected) with fresh draws
-/// from the cluster's unsampled pool — inside the same round, before any
-/// setup phase addressed the dead.
-///
-/// The deterministic replacement draw is keyed off the round key + a
-/// salt, so a resumed coordinator repairs identically.  Presumed-dead
-/// members are dropped from the addressed cohort (both the selector and
-/// the scheduler reject tasks addressing a disconnected client — a dead
-/// member kept addressed would reject the whole learn task) and
-/// replacements take their slots; a presumed-dead client that revives
-/// mid-round re-registers and is eligible for the next draw.  The
-/// realized sampling rate only ever grows — the DP accountant charges
-/// the conservative effective inclusion probability of the UNION of the
-/// original draw and the repair draw (anyone in either set could have
-/// been addressed).
-///
-/// Legality is enforced by the round state machine: `CohortRepaired`
-/// appends only in `Configured`/`Keys`, i.e. any time in clear/dp modes
-/// but strictly before share dealing under secagg (after `SharesDealt`
-/// the threshold-reveal path recovers dropouts instead).
-fn repair_cohort(
-    ctx: &RoundCtx<'_>,
-    cluster: &crate::fact::clustering::Cluster,
-    round: usize,
-    round_id: u64,
-    cohort: Vec<String>,
-    realized_q: f64,
-    sampler: Option<&CohortSampler>,
-) -> Result<(Vec<String>, f64)> {
-    let (Some(p), Some(sampler)) = (ctx.participation.as_ref(), sampler) else {
-        // full participation: everyone is already addressed, there is no
-        // unsampled pool to draw replacements from
-        return Ok((cohort, realized_q));
-    };
-    let Ok(alive) = ctx.wm.get_all_device_names() else {
-        return Ok((cohort, realized_q));
-    };
-    let alive: BTreeSet<&String> = alive.iter().collect();
-    let presumed_dead: Vec<String> = cohort
-        .iter()
-        .filter(|c| !alive.contains(c))
-        .cloned()
-        .collect();
-    if presumed_dead.is_empty() {
-        return Ok((cohort, realized_q));
-    }
-    let in_cohort: BTreeSet<&String> = cohort.iter().collect();
-    // candidates: alive cluster members the draw skipped, ranked by a
-    // salted per-round hash (deterministic, uncorrelated with the draw)
-    let key = splitmix64(
-        participation_round_key(p.seed, ctx.clustering_round, cluster.id, round)
-            ^ REPAIR_SALT,
-    );
-    let mut pool: Vec<(u64, String)> = cluster
-        .clients
-        .iter()
-        .filter(|c| !in_cohort.contains(c) && alive.contains(c))
-        .map(|c| (splitmix64(key ^ crate::util::rng::fnv1a(c)), c.clone()))
-        .collect();
-    pool.sort();
-    let replacements: Vec<String> = pool
-        .into_iter()
-        .take(presumed_dead.len())
-        .map(|(_, c)| c)
-        .collect();
-    if replacements.is_empty() {
-        log::warn!(target: "fact::server",
-            "cluster {} round {round}: {} cohort member(s) presumed dead \
-             but no alive replacements remain in the pool; proceeding \
-             with the survivors",
-            cluster.id, presumed_dead.len());
-    }
-    // union of both draws — the conservative set the accountant charges
-    let union = cohort.len() + replacements.len();
-    let mut repaired: Vec<String> = cohort
-        .into_iter()
-        .filter(|c| alive.contains(c))
-        .collect();
-    repaired.extend(replacements.iter().cloned());
-    repaired.sort();
-    repaired.dedup();
-    if repaired.is_empty() {
-        // every member dead and no replacements: leave the round to fail
-        // at dispatch with the backend's own (clearer) error
-        return Err(FedError::Task(format!(
-            "cluster {} round {round}: entire cohort presumed dead and no \
-             alive replacements remain",
-            cluster.id
-        )));
-    }
-    let q = realized_q
-        .max(sampler.amplification_rate(union, cluster.clients.len()));
-    ctx.store.append(RoundEvent::new(
-        round_id,
-        EventKind::CohortRepaired {
-            presumed_dead: presumed_dead.clone(),
-            replacements: replacements.clone(),
-            cohort: repaired.clone(),
-            sample_rate: q,
-        },
-    ))?;
-    ctx.metrics.counter("fact.round.repaired").inc();
-    ctx.metrics
-        .counter("fact.round.replacements")
-        .add(replacements.len() as u64);
-    telemetry::event(
-        "cohort_repaired",
-        &[
-            ("presumed_dead", &presumed_dead.join(",")),
-            ("replacements", &replacements.join(",")),
-            ("q", &format!("{q:.4}")),
-        ],
-    );
-    log::info!(target: "fact::server",
-        "cluster {} round {round}: repaired cohort in-round — {} presumed \
-         dead ({:?}), {} replacement(s) drawn ({:?}), q {:.3} -> {:.3}",
-        cluster.id, presumed_dead.len(), presumed_dead,
-        replacements.len(), replacements, realized_q, q);
-    Ok((repaired, q))
-}
-
-/// A round with no prior history in the store: derive its id, persist
-/// the opening `Configured` event, and run the full pipeline.
-fn fresh_round(
-    ctx: &RoundCtx<'_>,
-    cluster: &mut crate::fact::clustering::Cluster,
-    round: usize,
-    records: &mut Vec<RoundRecord>,
-    latest: &mut BTreeMap<String, Vec<f32>>,
-    seen_samples: &mut BTreeMap<String, f64>,
-) -> Result<()> {
-    let sw = Stopwatch::start();
-    // privacy negotiation: the round's mode and a fresh round id ride in
-    // every learn task; clients transform their update accordingly.
-    // Derived before anything else so the round's root span carries it.
-    let round_id = splitmix64(
-        ctx.session_tag
-            ^ ((ctx.clustering_round as u64) << 42)
-            ^ ((cluster.id as u64) << 21)
-            ^ round as u64,
-    );
-    let mut root = telemetry::Span::root(ctx.tele, phase::ROUND, round_id);
-    root.set_attr("cluster", cluster.id);
-    root.set_attr("round", round);
-    root.set_attr("clustering_round", ctx.clustering_round);
-    root.set_attr("mode", ctx.privacy.mode.as_str());
-    let _root_guard = root.enter();
-    // --- participation: draw this round's cohort (everyone without) --
-    let (cohort, realized_q, sampler) = {
-        let span = telemetry::child_of_current(phase::DRAW_COHORT);
-        let _g = span.enter();
-        let psw = Stopwatch::start();
-        let out = draw_cohort(ctx, cluster, round, seen_samples);
-        ctx.phase_ms(phase::DRAW_COHORT, cluster.id, psw.elapsed_ms());
-        out
-    };
-    // Alg 5 line 3 prep: the global parameters are materialized into ONE
-    // shared buffer; every client's dict holds a cheap clone of it, and
-    // the binary wire encoding writes it once (envelope dedup) instead
-    // of one base64 copy per client.
-    let global = crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params);
-    ctx.store.append(RoundEvent::new(
-        round_id,
-        EventKind::Configured {
-            clustering_round: ctx.clustering_round,
-            cluster_id: cluster.id,
-            round,
-            cohort: cohort.clone(),
-            sample_rate: realized_q,
-            mode: ctx.privacy.mode.as_str().to_string(),
-            params: global.clone(),
-            deadline_ms: ctx
-                .participation
-                .as_ref()
-                .map(|p| p.deadline_ms)
-                .unwrap_or(0),
-            session_tag: ctx.session_tag,
-        },
-    ))?;
-    // self-healing: members the scheduler already knows are dead get
-    // replaced from the unsampled pool before any phase addresses them
-    let (cohort, realized_q) =
-        repair_cohort(ctx, cluster, round, round_id, cohort, realized_q, sampler.as_ref())?;
-    run_round_pipeline(
-        ctx,
-        cluster,
-        round,
-        round_id,
-        &cohort,
-        realized_q,
-        sampler.as_ref(),
-        &global,
-        sw,
-        None,
-        records,
-        latest,
-        seen_samples,
-    )
-}
-
-/// Resume one in-flight round from its persisted state: fast-forward
-/// what already happened, re-run only what the crash interrupted.
-/// Client-side key/mask/noise derivation is deterministic in
-/// `(round_id, device)`, so a re-run phase reproduces byte-identical
-/// contributions and the resumed aggregate equals the uninterrupted one.
-fn resume_round(
-    ctx: &RoundCtx<'_>,
-    cluster: &mut crate::fact::clustering::Cluster,
-    round: usize,
-    plan: &RoundState,
-    records: &mut Vec<RoundRecord>,
-    latest: &mut BTreeMap<String, Vec<f32>>,
-    seen_samples: &mut BTreeMap<String, f64>,
-) -> Result<()> {
-    let sw = Stopwatch::start();
-    let round_id = plan.round_id;
-    // a resumed round gets a fresh trace (the pre-crash spans, if any,
-    // were replayed from trace.jsonl under their own trace id)
-    let mut root = telemetry::Span::root(ctx.tele, phase::ROUND, round_id);
-    root.set_attr("cluster", cluster.id);
-    root.set_attr("round", round);
-    root.set_attr("clustering_round", ctx.clustering_round);
-    root.set_attr("mode", ctx.privacy.mode.as_str());
-    root.set_attr("resumed", true);
-    root.set_attr("from_phase", plan.phase.as_str());
-    let _root_guard = root.enter();
-    log::info!(target: "fact::server",
-        "cluster {} round {round}: resuming from round store at phase '{}'",
-        cluster.id, plan.phase.as_str());
-    // the config the round was persisted under must still hold
-    if plan.mode != ctx.privacy.mode.as_str() {
-        return void_round(
-            ctx,
-            round_id,
-            format!(
-                "privacy mode changed across restart ('{}' -> '{}')",
-                plan.mode,
-                ctx.privacy.mode.as_str()
-            ),
-        );
-    }
-    if let Some(p) = &plan.params {
-        if p.len() != cluster.params.len() {
-            return void_round(
-                ctx,
-                round_id,
-                format!(
-                    "broadcast params len {} no longer matches the cluster ({})",
-                    p.len(),
-                    cluster.params.len()
-                ),
-            );
-        }
-    }
-    let cohort = plan.cohort.clone();
-    let realized_q = plan.sample_rate;
-    let sampler = ctx
-        .participation
-        .as_ref()
-        .map(|p| CohortSampler::new(p.clone()));
-    let global = plan.params.clone().unwrap_or_else(|| {
-        crate::util::tensorbuf::TensorBuf::from_f32_slice(&cluster.params)
-    });
-    match plan.phase {
-        RoundPhase::Aggregated => {
-            // the aggregate was applied and its post-apply params pinned
-            // pre-crash: make them effective (plain replacement — exact
-            // under any server optimizer) and close
-            if let Some(pa) = &plan.params_after {
-                if pa.len() == cluster.params.len() {
-                    cluster.params = pa.to_vec();
-                }
-            }
-            if let Some(rj) = &plan.record {
-                if let Ok(rec) = RoundRecord::from_json(rj) {
-                    cluster.loss_history.push(rec.mean_loss);
-                    records.push(rec);
-                }
-            }
-            ctx.store
-                .append(RoundEvent::new(round_id, EventKind::Closed))?;
-            Ok(())
-        }
-        RoundPhase::Learn | RoundPhase::Reveal if !plan.updates.is_empty() => {
-            // learn already closed: the collected (still masked) updates
-            // are in the WAL — redo recovery + aggregation without
-            // touching the cohort's learn tasks
-            let setup = setup_from_plan(plan);
-            let updates: Vec<ClientUpdate> = plan
-                .updates
-                .iter()
-                .map(|u| ClientUpdate {
-                    device: u.device.clone(),
-                    params: u.params.clone(),
-                    n_samples: u.n_samples,
-                    loss: u.loss,
-                    duration: u.duration,
-                })
-                .collect();
-            let sampled = plan.addressed.len().max(updates.len());
-            finish_round(
-                ctx,
-                cluster,
-                round,
-                round_id,
-                realized_q,
-                sampled,
-                plan.late,
-                plan.dropped.len(),
-                setup.as_ref(),
-                updates,
-                sw,
-                records,
-                latest,
-                seen_samples,
-            )
-        }
-        RoundPhase::Reveal => {
-            // a Revealed event without a persisted LearnClosed should not
-            // occur; refuse to guess at the missing updates
-            void_round(
-                ctx,
-                round_id,
-                "reveal phase without persisted updates".into(),
-            )
-        }
-        RoundPhase::Learn => {
-            // dispatched, never closed: honor the part of the deadline
-            // that elapsed while the coordinator was down
-            let now = now_ms();
-            let deadline_at =
-                plan.dispatched_at_ms.saturating_add(plan.learn_deadline_ms);
-            if plan.learn_deadline_ms > 0 && now >= deadline_at {
-                ctx.metrics.counter("fact.roundstore.voided").inc();
-                log::warn!(target: "fact::server",
-                    "cluster {} round {round}: learn deadline elapsed \
-                     during the outage — voiding",
-                    cluster.id);
-                ctx.store.append(RoundEvent::new(
-                    round_id,
-                    EventKind::Voided {
-                        reason: "learn deadline elapsed during coordinator \
-                                 outage"
-                            .into(),
-                        record: Json::Null,
-                    },
-                ))?;
-                return Ok(());
-            }
-            let remaining = if plan.learn_deadline_ms > 0 {
-                Some(Duration::from_millis(deadline_at - now))
-            } else {
-                None
-            };
-            let setup = setup_from_plan(plan);
-            let (updates, sampled, late, dropped) = dispatch_learn(
-                ctx,
-                cluster,
-                round,
-                round_id,
-                &cohort,
-                sampler.as_ref(),
-                &global,
-                setup.as_ref(),
-                remaining,
-            )?;
-            finish_round(
-                ctx,
-                cluster,
-                round,
-                round_id,
-                realized_q,
-                sampled,
-                late,
-                dropped,
-                setup.as_ref(),
-                updates,
-                sw,
-                records,
-                latest,
-                seen_samples,
-            )
-        }
-        _ => {
-            // Configured / Keys / Shares: re-run the setup phases against
-            // the pinned cohort + params.  Clients re-derive keys, masks
-            // and noise deterministically from the same round id, so the
-            // re-run reproduces the dead coordinator's round exactly.
-            //
-            // Before share dealing the cohort is still repairable: members
-            // that died across the outage are replaced now (the repair is
-            // evented, so a second resume replays the repaired cohort).
-            let (cohort, realized_q) =
-                if matches!(plan.phase, RoundPhase::Configured | RoundPhase::Keys) {
-                    repair_cohort(
-                        ctx,
-                        cluster,
-                        round,
-                        round_id,
-                        cohort,
-                        realized_q,
-                        sampler.as_ref(),
-                    )?
-                } else {
-                    (cohort, realized_q)
-                };
-            run_round_pipeline(
-                ctx,
-                cluster,
-                round,
-                round_id,
-                &cohort,
-                realized_q,
-                sampler.as_ref(),
-                &global,
-                sw,
-                None,
-                records,
-                latest,
-                seen_samples,
-            )
-        }
-    }
-}
-
-/// Abandon a round that cannot be safely resumed: persist the `Voided`
-/// event, then let [`RevealPolicy`] decide whether the session survives
-/// (`proceed`) or fails loudly (`abort`, the default).
-fn void_round(ctx: &RoundCtx<'_>, round_id: u64, reason: String) -> Result<()> {
-    ctx.metrics.counter("fact.roundstore.voided").inc();
-    log::warn!(target: "fact::server",
-        "voiding round {}: {reason}", round_id_to_hex(round_id));
-    ctx.store.append(RoundEvent::new(
-        round_id,
-        EventKind::Voided {
-            reason: reason.clone(),
-            record: Json::Null,
-        },
-    ))?;
-    match ctx.privacy.reveal_policy {
-        RevealPolicy::Abort => Err(FedError::Privacy(format!(
-            "cannot resume round {}: {reason} — reveal policy abort",
-            round_id_to_hex(round_id)
-        ))),
-        RevealPolicy::Proceed => Ok(()),
-    }
-}
-
-/// Rebuild the secagg setup snapshot from persisted round state (`None`
-/// when the round ran without secure aggregation).
-fn setup_from_plan(plan: &RoundState) -> Option<SecAggSetup> {
-    if plan.pubkeys.is_empty() {
-        return None;
-    }
-    let mut keys_json = Json::obj();
-    for (name, hex) in &plan.pubkeys {
-        keys_json = keys_json.set(name, hex.as_str());
-    }
-    Some(SecAggSetup {
-        participants: plan.participants.clone(),
-        keys: plan.pubkeys.clone(),
-        keys_json,
-        enc_shares: plan.enc_shares.clone(),
-        commits: plan.commits.clone(),
-        threshold: plan.threshold,
-    })
-}
-
-/// The setup -> learn -> recover -> aggregate pipeline of one round,
-/// entered either fresh (setup still to run) or on resume with the
-/// persisted setup already rebuilt (`setup_done`).
-#[allow(clippy::too_many_arguments)]
-fn run_round_pipeline(
-    ctx: &RoundCtx<'_>,
-    cluster: &mut crate::fact::clustering::Cluster,
-    round: usize,
-    round_id: u64,
-    cohort: &[String],
-    realized_q: f64,
-    sampler: Option<&CohortSampler>,
-    global: &crate::util::tensorbuf::TensorBuf,
-    sw: Stopwatch,
-    setup_done: Option<Option<SecAggSetup>>,
-    records: &mut Vec<RoundRecord>,
-    latest: &mut BTreeMap<String, Vec<f32>>,
-    seen_samples: &mut BTreeMap<String, f64>,
-) -> Result<()> {
-    // secagg setup phases: per-pair key agreement + encrypted Shamir
-    // share distribution run BEFORE the learn dispatch (clients that
-    // fail either phase are excluded from the masking participant set)
-    let secagg_setup = match setup_done {
-        Some(setup) => setup,
-        None => {
-            if ctx.privacy.mode.has_secagg() {
-                Some(secagg_setup_phases(ctx, cluster, cohort, round_id)?)
-            } else {
-                None
-            }
-        }
-    };
-    let (updates, sampled, late, dropped) = dispatch_learn(
-        ctx,
-        cluster,
-        round,
-        round_id,
-        cohort,
-        sampler,
-        global,
-        secagg_setup.as_ref(),
-        None,
-    )?;
-    finish_round(
-        ctx,
-        cluster,
-        round,
-        round_id,
-        realized_q,
-        sampled,
-        late,
-        dropped,
-        secagg_setup.as_ref(),
-        updates,
-        sw,
-        records,
-        latest,
-        seen_samples,
-    )
-}
-
-/// Dispatch the learn tasks of one round and close the collection.
-/// `LearnDispatched` is persisted before the scheduler call and
-/// `LearnClosed` (with every collected update) after — a crash in
-/// between resumes by re-dispatching with the remaining deadline; a
-/// crash after resumes from the persisted updates without touching the
-/// clients again.
-#[allow(clippy::too_many_arguments)]
-fn dispatch_learn(
-    ctx: &RoundCtx<'_>,
-    cluster: &crate::fact::clustering::Cluster,
-    round: usize,
-    round_id: u64,
-    cohort: &[String],
-    sampler: Option<&CohortSampler>,
-    global: &crate::util::tensorbuf::TensorBuf,
-    secagg_setup: Option<&SecAggSetup>,
-    deadline_override: Option<Duration>,
-) -> Result<(Vec<ClientUpdate>, usize, usize, usize)> {
-    let dsw = Stopwatch::start();
-    let dspan = telemetry::child_of_current(phase::LEARN_DISPATCH);
-    let dguard = dspan.enter();
-    let hp = Hyper { round: round as u64, ..ctx.hyper.clone() };
-    let privacy_round = if ctx.privacy.mode == PrivacyMode::Off {
-        None
-    } else {
-        let mut pj = ctx
-            .privacy
-            .to_json()
-            .set("round_id", round_id_to_hex(round_id));
-        if ctx.participation.is_some() {
-            // pin the sampled cohort in the task: a client outside it
-            // must refuse to contribute, or the accountant's
-            // amplification claim (only sampled clients respond) would
-            // be unsound
-            pj = pj.set(
-                "cohort",
-                Json::Arr(cohort.iter().map(|c| Json::Str(c.clone())).collect()),
-            );
-        }
-        if let Some(setup) = secagg_setup {
-            pj = pj
-                .set(
-                    "participants",
-                    Json::Arr(
-                        setup
-                            .participants
-                            .iter()
-                            .map(|c| Json::Str(c.clone()))
-                            .collect(),
-                    ),
-                )
-                .set("keys", setup.keys_json.clone())
-                .set("weighted", cluster.model.aggregation().is_weighted());
-        }
-        Some(pj)
-    };
-    // under secagg, only the key+share completers can mask: they are
-    // the round's addressed set
-    let addressed: &[String] = match secagg_setup {
-        Some(setup) => &setup.participants,
-        None => cohort,
-    };
-    // one child span per addressed client: opened at dispatch, closed
-    // when the collection closes with the client's outcome.  Its context
-    // rides the task params (`trace` key), so the client runtime's timed
-    // `fact_learn` span echoes back into the same trace via `_span`.
-    let mut client_spans: BTreeMap<String, telemetry::Span> = addressed
-        .iter()
-        .map(|c| {
-            let mut s = telemetry::child_of_current(phase::CLIENT_LEARN);
-            s.set_attr("client", c);
-            (c.clone(), s)
-        })
-        .collect();
-    let dict: BTreeMap<String, Json> = addressed
-        .iter()
-        .map(|c| {
-            let mut params = cluster.model.learn_params_buf(global, &hp);
-            if let Some(pj) = &privacy_round {
-                params = params.set("privacy", pj.clone());
-            }
-            params = telemetry::inject(
-                params,
-                client_spans.get(c).and_then(telemetry::Span::context),
-            );
-            (c.clone(), params)
-        })
-        .collect();
-    let sampled = dict.len();
-    // the effective deadline of THIS dispatch: on resume, the remaining
-    // window of the original deadline; otherwise the configured one —
-    // which under an adaptive mode is the tracked cohort latency
-    // percentile × margin, clamped, once the tracker is warm
-    let deadline = match (deadline_override, ctx.participation) {
-        (Some(d), _) => Some(d),
-        (None, Some(p)) => {
-            let d = effective_deadline_explained(ctx.latency, p, addressed);
-            telemetry::event(
-                "deadline_decision",
-                &[
-                    ("deadline_ms", &d.deadline_ms.to_string()),
-                    ("adaptive", if d.adaptive { "true" } else { "false" }),
-                    ("quantile", &format!("{:.2}", d.quantile)),
-                    (
-                        "observed_ms",
-                        &d.observed_ms
-                            .map(|v| v.to_string())
-                            .unwrap_or_else(|| "cold".into()),
-                    ),
-                    ("tracker_len", &d.tracker_len.to_string()),
-                    ("cohort", &addressed.len().to_string()),
-                ],
-            );
-            let (ms, adaptive) = (d.deadline_ms, d.adaptive);
-            if adaptive {
-                ctx.metrics.counter("fact.round.adaptive_closes").inc();
-                ctx.metrics
-                    .counter("fact.round.deadline_adaptive_ms")
-                    .add(ms);
-                ctx.metrics
-                    .gauge("fact.round.deadline_effective_ms")
-                    .set(ms as i64);
-                log::debug!(target: "fact::server",
-                    "cluster {} round {round}: adaptive deadline {ms}ms \
-                     ({} × {:.2}, clamp [{}, {}])",
-                    cluster.id, p.deadline.as_str(), p.deadline_margin,
-                    p.deadline_min_ms, p.deadline_max_ms);
-            }
-            if ms > 0 {
-                Some(Duration::from_millis(ms))
-            } else {
-                None
-            }
-        }
-        _ => None,
-    };
-    ctx.store.append(RoundEvent::new(
-        round_id,
-        EventKind::LearnDispatched {
-            addressed: addressed.to_vec(),
-            dispatched_at_ms: now_ms(),
-            deadline_ms: deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
-        },
-    ))?;
-    drop(dguard);
-    ctx.phase_ms(phase::LEARN_DISPATCH, cluster.id, dsw.elapsed_ms());
-    dspan.finish();
-    // the collection window: the scheduler call blocks here until
-    // complete/quorum/deadline — workflow.rs attaches its `quorum_close`
-    // event to this span via the thread-local context
-    let qsw = Stopwatch::start();
-    let qspan = telemetry::child_of_current(phase::QUORUM_WAIT);
-    let qguard = qspan.enter();
-    let (results, late_names, dropped) = match (sampler, ctx.participation) {
-        (Some(sampler), Some(p)) => {
-            // production round loop: close at quorum or deadline,
-            // drop (and count) stragglers
-            let quorum = sampler.quorum_count(sampled);
-            let deadline = deadline.unwrap_or(ctx.timeout);
-            let out = ctx.wm.run_task_quorum(
-                dict,
-                "fact_learn",
-                quorum,
-                deadline,
-                Duration::from_millis(p.late_grace_ms),
-            )?;
-            // feed the adaptive-deadline tracker: completers with their
-            // reported learn duration, everyone else censored at the
-            // close (their true latency is at least the elapsed window)
-            let reported: BTreeSet<&String> =
-                out.results.iter().map(|r| &r.device_name).collect();
-            for r in &out.results {
-                ctx.latency
-                    .observe(&r.device_name, (r.duration * 1_000.0).round() as u64);
-            }
-            for name in addressed.iter().filter(|d| !reported.contains(*d)) {
-                ctx.latency.observe_censored(name, out.elapsed_ms.max(1));
-            }
-            let late = out.late;
-            let dropped = sampled.saturating_sub(out.results.len() + late.len());
-            ctx.metrics
-                .counter(match out.close {
-                    RoundClose::Complete => "fact.participation.complete_closes",
-                    RoundClose::Quorum => "fact.participation.quorum_closes",
-                    RoundClose::Deadline => "fact.participation.deadline_closes",
-                    RoundClose::Settled => "fact.participation.settled_closes",
-                })
-                .inc();
-            if out.results.len() < quorum {
-                log::warn!(target: "fact::server",
-                    "cluster {} round {round}: closed below quorum \
-                     ({}/{quorum} of {sampled} sampled)",
-                    cluster.id, out.results.len());
-            }
-            (out.results, late, dropped)
-        }
-        _ => {
-            let results = ctx.wm.run_task(
-                dict,
-                "fact_learn",
-                deadline_override.unwrap_or(ctx.timeout),
-            )?;
-            let dropped = sampled.saturating_sub(results.len());
-            (results, Vec::new(), dropped)
-        }
-    };
-    drop(qguard);
-    ctx.phase_ms(phase::QUORUM_WAIT, cluster.id, qsw.elapsed_ms());
-    qspan.finish();
-    // pull each client's echoed `fact_learn` span into the trace, then
-    // close the coordinator-side client spans with their outcome
-    for r in &results {
-        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
-    }
-    for (name, mut span) in client_spans {
-        if let Some(r) = results.iter().find(|r| r.device_name == name) {
-            span.set_attr("outcome", "ok");
-            ctx.metrics
-                .histogram_labeled("fact.client.learn_ms", &[("client", &name)])
-                .observe(r.duration * 1000.0);
-        } else if late_names.contains(&name) {
-            span.set_attr("outcome", "late");
-        } else {
-            span.set_attr("outcome", "dropped");
-        }
-        span.finish();
-    }
-    ctx.metrics
-        .counter("fact.participation.sampled")
-        .add(sampled as u64);
-    ctx.metrics
-        .counter("fact.participation.reported")
-        .add(results.len() as u64);
-    ctx.metrics
-        .counter("fact.participation.late")
-        .add(late_names.len() as u64);
-    ctx.metrics
-        .counter("fact.participation.dropped")
-        .add(dropped as u64);
-    if results.is_empty() {
-        return Err(FedError::Fact(format!(
-            "cluster {}: no client returned a result in round {round}",
-            cluster.id
-        )));
-    }
-    // Alg 5 line 5: fetch updated parameters and aggregate.
-    let mut updates: Vec<ClientUpdate> = results
-        .iter()
-        .map(|r| cluster.model.parse_update(&r.device_name, r.duration, &r.result))
-        .collect::<Result<Vec<_>>>()?;
-    // deterministic aggregation order regardless of arrival order:
-    // f32 reduction is order-sensitive, and mode parity (E6) demands
-    // bit-identical results between test mode and the TCP path
-    updates.sort_by(|a, b| a.device.cmp(&b.device));
-    let late = late_names.len();
-    // the addressed clients that never delivered a counted result, by
-    // name — the recovery path reports them in the audit trail
-    let responded: BTreeSet<&String> =
-        results.iter().map(|r| &r.device_name).collect();
-    let dropped_names: Vec<String> = addressed
-        .iter()
-        .filter(|d| !responded.contains(*d) && !late_names.contains(*d))
-        .cloned()
-        .collect();
-    ctx.store.append(RoundEvent::new(
-        round_id,
-        EventKind::LearnClosed {
-            updates: updates
-                .iter()
-                .map(|u| StoredUpdate {
-                    device: u.device.clone(),
-                    params: u.params.clone(),
-                    n_samples: u.n_samples,
-                    loss: u.loss,
-                    duration: u.duration,
-                })
-                .collect(),
-            late,
-            dropped: dropped_names,
-        },
-    ))?;
-    Ok((updates, sampled, late, dropped))
-}
-
-/// The tail of a round: recover the aggregate (under secagg), apply the
-/// server optimizer, and persist the outcome — `Revealed` + `Aggregated`
-/// + `Closed` on success, or `Voided` when the reveal policy `proceed`
-/// abandons an unrecoverable round.  The `Aggregated` event pins the
-/// post-apply parameters, so resuming AT that phase is a plain
-/// replacement even under a momentum optimizer.
-#[allow(clippy::too_many_arguments)]
-fn finish_round(
-    ctx: &RoundCtx<'_>,
-    cluster: &mut crate::fact::clustering::Cluster,
-    round: usize,
-    round_id: u64,
-    realized_q: f64,
-    sampled: usize,
-    late: usize,
-    dropped: usize,
-    secagg_setup: Option<&SecAggSetup>,
-    updates: Vec<ClientUpdate>,
-    sw: Stopwatch,
-    records: &mut Vec<RoundRecord>,
-    latest: &mut BTreeMap<String, Vec<f32>>,
-    seen_samples: &mut BTreeMap<String, f64>,
-) -> Result<()> {
-    let agg_sw = Stopwatch::start();
-    let (target, secagg_audit) = if let Some(setup) = secagg_setup {
-        let out = secagg_recover_aggregate(ctx, cluster, setup, &updates, round_id)?;
-        ctx.store.append(RoundEvent::new(
-            round_id,
-            EventKind::Revealed { audit: out.audit.to_json() },
-        ))?;
-        (out.target, Some(out.audit))
-    } else {
-        // clear/dp aggregation shares the unmask phase name: same slot
-        // in the span taxonomy, no masks to fold (mode=clear)
-        let mut span = telemetry::child_of_current(phase::UNMASK_AGGREGATE);
-        span.set_attr("mode", "clear");
-        let _g = span.enter();
-        let psw = Stopwatch::start();
-        let target = cluster.model.aggregate(&updates, Some(ctx.pool))?;
-        ctx.phase_ms(phase::UNMASK_AGGREGATE, cluster.id, psw.elapsed_ms());
-        (Some(target), None)
-    };
-    let asw = Stopwatch::start();
-    let mut aspan = telemetry::child_of_current(phase::APPLY);
-    let aguard = aspan.enter();
-    let applied = match target {
-        Some(target) => {
-            let mut buf = std::mem::take(&mut cluster.momentum);
-            ctx.server_opt.apply(&mut cluster.params, target, &mut buf);
-            cluster.momentum = buf;
-            true
-        }
-        None => {
-            // reveal policy `proceed`: the round is unrecoverable
-            // below the share threshold — void it (parameters
-            // unchanged), audit it, keep training
-            ctx.metrics.counter("fact.secagg.rounds_voided").inc();
-            log::warn!(target: "fact::server",
-                "cluster {} round {round}: secagg recovery below \
-                 threshold, policy=proceed voids the round",
-                cluster.id);
-            false
-        }
-    };
-    let agg_ms = agg_sw.elapsed_ms();
-
-    let mean_loss =
-        updates.iter().map(|u| u.loss).sum::<f32>() / updates.len() as f32;
-    let mean_client_s =
-        updates.iter().map(|u| u.duration).sum::<f64>() / updates.len() as f64;
-    cluster.loss_history.push(mean_loss);
-    for u in &updates {
-        // n_samples is clear even under secagg (the protocol ships it
-        // alongside the masked vector); it feeds weighted sampling
-        seen_samples.insert(u.device.clone(), u.n_samples as f64);
-    }
-    if !ctx.privacy.mode.has_secagg() {
-        // under secagg the per-client vectors are masked lattice noise
-        // — recording them would feed garbage to the clustering input
-        for u in &updates {
-            latest.insert(u.device.clone(), u.params.to_vec());
-        }
-    }
-    let record = RoundRecord {
-        clustering_round: ctx.clustering_round,
-        cluster_id: cluster.id,
-        round,
-        n_clients: updates.len(),
-        sampled,
-        late,
-        dropped,
-        sample_rate: realized_q,
-        mean_loss,
-        round_ms: sw.elapsed_ms(),
-        agg_ms,
-        mean_client_s,
-        secagg: secagg_audit,
-    };
-    if applied {
-        // pin the post-apply params + the audit record, then close — a
-        // crash between the two appends resumes at Aggregated, where
-        // fast-forwarding is an idempotent replacement
-        ctx.store.append(RoundEvent::new(
-            round_id,
-            EventKind::Aggregated {
-                params: crate::util::tensorbuf::TensorBuf::from_f32_slice(
-                    &cluster.params,
-                ),
-                record: record.to_json(),
-            },
-        ))?;
-        ctx.store
-            .append(RoundEvent::new(round_id, EventKind::Closed))?;
-    } else {
-        ctx.store.append(RoundEvent::new(
-            round_id,
-            EventKind::Voided {
-                reason: "secagg recovery below threshold (reveal policy \
-                         proceed)"
-                    .into(),
-                record: record.to_json(),
-            },
-        ))?;
-    }
-    drop(aguard);
-    aspan.set_attr("applied", applied);
-    ctx.phase_ms(phase::APPLY, cluster.id, asw.elapsed_ms());
-    aspan.finish();
-    log::debug!(target: "fact::server",
-        "cluster {} round {round}: loss {mean_loss:.4} \
-         ({}/{sampled} sampled clients, {:.1}ms)",
-        cluster.id, record.n_clients, sw.elapsed_ms());
-    records.push(record);
-    Ok(())
-}
-
-/// The artifacts of a round's secagg setup phases: who completed key
-/// agreement + share distribution, their public keys, and the relayed
-/// (still encrypted) shares + clear commitments.
-struct SecAggSetup {
-    /// sorted clients that completed BOTH setup phases — the masking
-    /// participant set of the round
-    participants: Vec<String>,
-    /// participant -> hex DH public key
-    keys: BTreeMap<String, String>,
-    keys_json: Json,
-    /// dealer -> recipient -> hex ciphertext (end-to-end encrypted)
-    enc_shares: BTreeMap<String, BTreeMap<String, String>>,
-    /// dealer -> recipient -> hex share commitment
-    commits: BTreeMap<String, BTreeMap<String, String>>,
-    /// resolved t of the t-of-n recovery (what the dealers split with)
-    threshold: usize,
-}
-
-/// Run the two secagg setup phases before a learn dispatch:
-///
-/// 1. `fact_keys` — every cohort client posts its per-round DH public
-///    key (validated here, so a malformed key fails fast).
-/// 2. `fact_shares` — every key-poster Shamir-splits its round secret at
-///    the resolved threshold and returns one end-to-end encrypted share
-///    per peer plus a clear commitment per share.  The coordinator
-///    relays ciphertext it cannot read — holding `t` *readable* shares
-///    would let it reconstruct any client's masks.
-///
-/// Clients whose phase task errors — or misses the participation
-/// deadline, when one is configured — are excluded from the masking
-/// participant set (they never derived the round's pair masks).
-/// Without a deadline, a client that hangs past the round timeout
-/// stalls the task like any other task.
-///
-/// Each completed phase is persisted to the round store (`KeysCollected`
-/// / `SharesDealt`) so a resumed round can skip straight to learn.
-fn secagg_setup_phases(
-    ctx: &RoundCtx<'_>,
-    cluster: &crate::fact::clustering::Cluster,
-    cohort: &[String],
-    round_id: u64,
-) -> Result<SecAggSetup> {
-    let wm = ctx.wm;
-    let privacy = ctx.privacy;
-    let participation = ctx.participation;
-    let timeout = ctx.timeout;
-    let metrics = ctx.metrics;
-    // setup phases want EVERY response but must not wait on a hung
-    // client forever: under a participation deadline, close at the
-    // deadline and exclude whoever had not answered (the straggler
-    // tolerance the learn phase already has)
-    let run_phase = |dict: BTreeMap<String, Json>,
-                     func: &str|
-     -> Result<Vec<crate::dart::scheduler::TaskResult>> {
-        match participation {
-            Some(p) if p.deadline_ms > 0 => {
-                let expected = dict.len();
-                Ok(wm
-                    .run_task_quorum(
-                        dict,
-                        func,
-                        expected, // close only when everyone reported...
-                        Duration::from_millis(p.deadline_ms),
-                        Duration::ZERO,
-                    )?
-                    .results) // ...or at the deadline, with whoever did
-            }
-            _ => wm.run_task(dict, func, timeout),
-        }
-    };
-    let rid_hex = round_id_to_hex(round_id);
-    // phase 1: key agreement
-    let ksw = Stopwatch::start();
-    let kspan = telemetry::child_of_current(phase::KEYS);
-    let kguard = kspan.enter();
-    let kctx = kspan.context();
-    let dict: BTreeMap<String, Json> = cohort
-        .iter()
-        .map(|c| {
-            (
-                c.clone(),
-                telemetry::inject(
-                    Json::obj().set("round_id", rid_hex.as_str()),
-                    kctx,
-                ),
-            )
-        })
-        .collect();
-    let results = run_phase(dict, "fact_keys")?;
-    for r in &results {
-        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
-    }
-    let mut pubkeys: BTreeMap<String, String> = BTreeMap::new();
-    for r in &results {
-        if let Some(hex) = r.result.get("pubkey").and_then(Json::as_str) {
-            // a malformed or degenerate key excludes THAT client from the
-            // round (like a missing response) — it must not abort the
-            // whole training session
-            match keys::parse_pubkey_hex(hex) {
-                Ok(_) => {
-                    // lowercase: the reconstruction integrity check
-                    // compares against regenerated (lowercase) hex
-                    pubkeys.insert(r.device_name.clone(), hex.to_lowercase());
-                }
-                Err(e) => {
-                    metrics.counter("fact.secagg.bad_keys").inc();
-                    log::warn!(target: "fact::server",
-                        "cluster {}: '{}' posted an invalid DH key ({e}) \
-                         — excluded from the round",
-                        cluster.id, r.device_name);
-                }
-            }
-        }
-    }
-    if pubkeys.len() < 2 {
-        return Err(FedError::Privacy(format!(
-            "cluster {}: only {} client(s) completed secagg key agreement \
-             (need >= 2)",
-            cluster.id,
-            pubkeys.len()
-        )));
-    }
-    if pubkeys.len() > 255 {
-        // GF(256) share x-coordinates are 1-based u8 positions: index
-        // 255 would wrap to x = 0 (the secret itself), so the holder
-        // list caps at 255 participants
-        return Err(FedError::Privacy(format!(
-            "cluster {}: {} secagg participants exceed the 255-participant \
-             limit of GF(256) share coordinates — shard the cohort",
-            cluster.id,
-            pubkeys.len()
-        )));
-    }
-    let threshold =
-        resolve_reveal_threshold(privacy.reveal_threshold, pubkeys.len());
-    ctx.store.append(RoundEvent::new(
-        round_id,
-        EventKind::KeysCollected { pubkeys: pubkeys.clone(), threshold },
-    ))?;
-    drop(kguard);
-    ctx.phase_ms(phase::KEYS, cluster.id, ksw.elapsed_ms());
-    kspan.finish();
-    let mut keys_json = Json::obj();
-    for (name, hex) in &pubkeys {
-        keys_json = keys_json.set(name, hex.as_str());
-    }
-    if pubkeys.len() < 3 {
-        // a 2-client round has a single share holder per dealer — below
-        // any meaningful threshold (t >= 2).  Skip share dealing and
-        // rely on direct reveals, the pre-threshold recovery path.
-        let participants: Vec<String> = pubkeys.keys().cloned().collect();
-        return Ok(SecAggSetup {
-            participants,
-            keys: pubkeys,
-            keys_json,
-            enc_shares: BTreeMap::new(),
-            commits: BTreeMap::new(),
-            threshold,
-        });
-    }
-    // phase 2: encrypted share distribution among the key posters
-    let ssw = Stopwatch::start();
-    let sspan = telemetry::child_of_current(phase::SHARES);
-    let sguard = sspan.enter();
-    let sctx = sspan.context();
-    let dict: BTreeMap<String, Json> = pubkeys
-        .keys()
-        .map(|c| {
-            (
-                c.clone(),
-                telemetry::inject(
-                    Json::obj()
-                        .set("round_id", rid_hex.as_str())
-                        .set("keys", keys_json.clone())
-                        .set("threshold", threshold),
-                    sctx,
-                ),
-            )
-        })
-        .collect();
-    let results = run_phase(dict, "fact_shares")?;
-    for r in &results {
-        telemetry::absorb_echo(ctx.tele, &r.result, round_id);
-    }
-    let mut enc_shares = BTreeMap::new();
-    let mut commits = BTreeMap::new();
-    for r in &results {
-        let (Some(shares), Some(cs)) = (
-            r.result.get("shares").and_then(Json::as_obj),
-            r.result.get("commits").and_then(Json::as_obj),
-        ) else {
-            continue;
-        };
-        let to_map = |obj: &BTreeMap<String, Json>| -> BTreeMap<String, String> {
-            obj.iter()
-                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
-                .collect()
-        };
-        enc_shares.insert(r.device_name.clone(), to_map(shares));
-        commits.insert(r.device_name.clone(), to_map(cs));
-    }
-    let participants: Vec<String> = enc_shares.keys().cloned().collect();
-    if participants.len() < 2 {
-        return Err(FedError::Privacy(format!(
-            "cluster {}: only {} client(s) dealt secagg shares (need >= 2)",
-            cluster.id,
-            participants.len()
-        )));
-    }
-    if participants.len() < cohort.len() {
-        metrics
-            .counter("fact.secagg.setup_dropouts")
-            .add((cohort.len() - participants.len()) as u64);
-    }
-    ctx.store.append(RoundEvent::new(
-        round_id,
-        EventKind::SharesDealt {
-            participants: participants.clone(),
-            enc_shares: enc_shares.clone(),
-            commits: commits.clone(),
-        },
-    ))?;
-    drop(sguard);
-    ctx.phase_ms(phase::SHARES, cluster.id, ssw.elapsed_ms());
-    sspan.finish();
-    Ok(SecAggSetup {
-        participants,
-        keys: pubkeys,
-        keys_json,
-        enc_shares,
-        commits,
-        threshold,
-    })
-}
-
-/// Outcome of [`secagg_recover_aggregate`]: `target` is `None` when the
-/// round was unrecoverable and the `proceed` policy voided it.
-struct SecAggOutcome {
-    target: Option<Vec<f32>>,
-    audit: SecAggAudit,
-}
-
-/// Secure-aggregation server path for one round: every masking
-/// participant that answered is a survivor, everyone else dropped
-/// mid-round (under partial participation the cohort — not the whole
-/// cluster — was sampled first, so a straggler cut off at the deadline is
-/// recovered exactly like a crash).  Recovery is **threshold-based**:
-///
-/// * each responsive survivor reveals its own DH-derived pair seed with
-///   every dropped peer (covering its own pairs), and its decrypted
-///   Shamir share of each dropped dealer's round secret;
-/// * any `t` commitment-verified shares reconstruct a dropped client's
-///   secret, from which the coordinator derives the pair seed with
-///   *every* survivor — including survivors that never answered the
-///   reveal task, the exact wedge the PR 3 all-survivors-must-reveal
-///   protocol could not recover from;
-/// * below `t`, [`PrivacyConfig::reveal_policy`] decides: `abort` fails
-///   the session, `proceed` voids the round (audited either way).
-///
-/// The coordinator never materializes an unmasked individual update —
-/// `unmask_aggregate` folds zero-copy views of the masked buffers
-/// straight into the integer accumulator.
-fn secagg_recover_aggregate(
-    ctx: &RoundCtx<'_>,
-    cluster: &crate::fact::clustering::Cluster,
-    setup: &SecAggSetup,
-    updates: &[ClientUpdate],
-    round_id: u64,
-) -> Result<SecAggOutcome> {
-    let wm = ctx.wm;
-    let privacy = ctx.privacy;
-    let timeout = ctx.timeout;
-    let metrics = ctx.metrics;
-    let weighted = cluster.model.aggregation().is_weighted();
-    let masked: Vec<MaskedUpdate> = updates
-        .iter()
-        .map(|u| MaskedUpdate {
-            device: u.device.clone(),
-            params: u.params.clone(),
-            weight: if weighted {
-                u.n_samples as f64 / privacy.weight_scale as f64
-            } else {
-                1.0
-            },
-        })
-        .collect();
-    let survivors: Vec<String> =
-        updates.iter().map(|u| u.device.clone()).collect();
-    let dropped: Vec<String> = setup
-        .participants
-        .iter()
-        .filter(|c| !survivors.contains(c))
-        .cloned()
-        .collect();
-    let mut audit = SecAggAudit {
-        participants: setup.participants.len(),
-        threshold: setup.threshold,
-        dropped: dropped.clone(),
-        direct_reveals: 0,
-        reconstructed: Vec::new(),
-        unrecovered: Vec::new(),
-        policy: privacy.reveal_policy,
-        outcome: "ok",
-    };
-    // the reveal span opens even with zero dropouts — "nothing to
-    // recover" is itself a phase outcome worth a slot in the trace
-    let rsw = Stopwatch::start();
-    let mut rspan = telemetry::child_of_current(phase::REVEAL);
-    rspan.set_attr("participants", setup.participants.len());
-    rspan.set_attr("dropouts", dropped.len());
-    let rguard = rspan.enter();
-    let mut revealed: Vec<RevealedSeed> = Vec::new();
-    if !dropped.is_empty() {
-        log::info!(target: "fact::server",
-            "cluster {}: {} dropout(s) in secagg round, recovering masks \
-             (t={} of {})",
-            cluster.id, dropped.len(), setup.threshold,
-            setup.participants.len());
-        metrics.counter("fact.secagg.dropouts").add(dropped.len() as u64);
-        let dropped_json =
-            Json::Arr(dropped.iter().cloned().map(Json::Str).collect());
-        let dict: BTreeMap<String, Json> = survivors
-            .iter()
-            .map(|s| {
-                // the encrypted shares each dropped dealer addressed to
-                // this survivor, relayed for client-side decryption
-                let mut shares = Json::obj();
-                for d in &dropped {
-                    if let Some(ct) =
-                        setup.enc_shares.get(d).and_then(|m| m.get(s))
-                    {
-                        shares = shares.set(d, ct.as_str());
-                    }
-                }
-                (
-                    s.clone(),
-                    telemetry::inject(
-                        Json::obj()
-                            .set("round_id", round_id_to_hex(round_id))
-                            .set("dropped", dropped_json.clone())
-                            .set("keys", setup.keys_json.clone())
-                            .set("shares", shares),
-                        telemetry::current(),
-                    ),
-                )
-            })
-            .collect();
-        let reveals = wm.run_task(dict, "fact_reveal", timeout)?;
-        for r in &reveals {
-            telemetry::absorb_echo(ctx.tele, &r.result, round_id);
-        }
-        // collect direct seed reveals and decrypted shares
-        let mut shares_by_dealer: BTreeMap<String, Vec<shamir::Share>> =
-            BTreeMap::new();
-        for r in &reveals {
-            if let Some(seeds) = r.result.get("seeds").and_then(Json::as_obj) {
-                for (d, hex) in seeds {
-                    let Some(hex) = hex.as_str() else { continue };
-                    revealed.push(RevealedSeed {
-                        survivor: r.device_name.clone(),
-                        dropped: d.clone(),
-                        seed: seed_from_hex(hex)?,
-                    });
-                    audit.direct_reveals += 1;
-                }
-            }
-            if let Some(shares) = r.result.get("shares").and_then(Json::as_obj)
-            {
-                for (d, hex) in shares {
-                    let Some(hex) = hex.as_str() else { continue };
-                    // a malformed share is discarded exactly like a
-                    // commitment-failing one — one bad reveal must not
-                    // abort a recovery that t other valid shares can
-                    // still complete
-                    let share = match from_hex(hex)
-                        .ok()
-                        .and_then(|b| shamir::Share::from_bytes(&b).ok())
-                    {
-                        Some(s) => s,
-                        None => {
-                            metrics
-                                .counter("fact.secagg.corrupt_shares")
-                                .inc();
-                            log::warn!(target: "fact::server",
-                                "cluster {}: malformed share of '{d}' from \
-                                 '{}' — discarded",
-                                cluster.id, r.device_name);
-                            continue;
-                        }
-                    };
-                    // verify against the dealer's commitment for this
-                    // holder — a corrupted share must not enter the pool
-                    let commit_ok = setup
-                        .commits
-                        .get(d)
-                        .and_then(|m| m.get(&r.device_name))
-                        .and_then(|c| from_hex(c).ok())
-                        .map(|want| match <&[u8; 32]>::try_from(want.as_slice()) {
-                            Ok(w) => shamir::verify_share(&share, w),
-                            Err(_) => false,
-                        })
-                        .unwrap_or(false);
-                    if !commit_ok {
-                        metrics.counter("fact.secagg.corrupt_shares").inc();
-                        log::warn!(target: "fact::server",
-                            "cluster {}: share of '{d}' revealed by '{}' \
-                             fails its commitment — discarded",
-                            cluster.id, r.device_name);
-                        continue;
-                    }
-                    shares_by_dealer.entry(d.clone()).or_default().push(share);
-                }
-            }
-        }
-        // per dropped dealer: direct reveals may already cover every
-        // survivor; otherwise reconstruct from >= t verified shares
-        for d in &dropped {
-            let uncovered: Vec<String> = survivors
-                .iter()
-                .filter(|s| {
-                    !revealed
-                        .iter()
-                        .any(|rv| &rv.survivor == *s && &rv.dropped == d)
-                })
-                .cloned()
-                .collect();
-            if uncovered.is_empty() {
-                continue;
-            }
-            let shares = shares_by_dealer.get(d).map(Vec::as_slice).unwrap_or(&[]);
-            if shares.len() < setup.threshold {
-                audit.unrecovered.push(d.clone());
-                continue;
-            }
-            let Some(posted) = setup.keys.get(d) else {
-                audit.unrecovered.push(d.clone());
-                continue;
-            };
-            // shared with the REST board: reconstruct + length check +
-            // posted-pubkey integrity check.  A failure here (duplicate
-            // coordinates, or commitment-passing shares from a lying
-            // dealer that fail the pubkey check) makes THIS dealer
-            // unrecoverable — the reveal policy decides the round's
-            // fate, not a hard error that would bypass `proceed`.
-            let secret = match crate::privacy::secagg::reconstruct_dealer_secret(
-                shares,
-                setup.threshold,
-                posted,
-                d,
-            ) {
-                Ok(s) => s,
-                Err(e) => {
-                    metrics.counter("fact.secagg.corrupt_shares").inc();
-                    log::warn!(target: "fact::server",
-                        "cluster {}: reconstruction of '{d}' failed ({e}) \
-                         — dealer unrecoverable",
-                        cluster.id);
-                    audit.unrecovered.push(d.clone());
-                    continue;
-                }
-            };
-            for s in &uncovered {
-                let Some(posted_pk) = setup.keys.get(s) else {
-                    // a survivor that never posted a key has no pair mask
-                    // with this dealer to unwind
-                    continue;
-                };
-                let their = keys::parse_pubkey_hex(posted_pk)?;
-                let shared = keys::shared_key(&secret, &their);
-                revealed.push(RevealedSeed {
-                    survivor: s.clone(),
-                    dropped: d.clone(),
-                    seed: keys::pair_seed_from_shared(&shared, round_id, s, d),
-                });
-            }
-            audit.reconstructed.push(d.clone());
-        }
-        metrics
-            .counter("fact.secagg.reconstructions")
-            .add(audit.reconstructed.len() as u64);
-        if !audit.reconstructed.is_empty() {
-            audit.outcome = "recovered";
-        }
-        if !audit.unrecovered.is_empty() {
-            metrics.counter("fact.secagg.below_threshold").inc();
-            let detail = format!(
-                "cluster {}: secagg round below reveal threshold t={} for \
-                 {:?} ({} dropout(s), {} direct reveal(s))",
-                cluster.id,
-                setup.threshold,
-                audit.unrecovered,
-                dropped.len(),
-                audit.direct_reveals,
-            );
-            match privacy.reveal_policy {
-                RevealPolicy::Abort => {
-                    audit.outcome = "aborted";
-                    return Err(FedError::Privacy(format!(
-                        "{detail} — reveal policy abort"
-                    )));
-                }
-                RevealPolicy::Proceed => {
-                    audit.outcome = "skipped";
-                    return Ok(SecAggOutcome { target: None, audit });
-                }
-            }
-        }
-    }
-    drop(rguard);
-    rspan.set_attr("outcome", audit.outcome);
-    ctx.phase_ms(phase::REVEAL, cluster.id, rsw.elapsed_ms());
-    rspan.finish();
-    let usw = Stopwatch::start();
-    let mut uspan = telemetry::child_of_current(phase::UNMASK_AGGREGATE);
-    uspan.set_attr("mode", "secagg");
-    let _uguard = uspan.enter();
-    let target = unmask_aggregate(&masked, &revealed, privacy.frac_bits)?;
-    ctx.phase_ms(phase::UNMASK_AGGREGATE, cluster.id, usw.elapsed_ms());
-    Ok(SecAggOutcome { target: Some(target), audit })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn server_opt_replacement_is_exact() {
-        let opt = ServerOpt::default();
-        let mut p = vec![1.0f32, 2.0];
-        let mut buf = Vec::new();
-        opt.apply(&mut p, vec![5.0, -1.0], &mut buf);
-        assert_eq!(p, vec![5.0, -1.0]);
-        assert!(buf.is_empty(), "fast path must not allocate a buffer");
-    }
-
-    #[test]
-    fn server_opt_momentum_accumulates() {
-        let opt = ServerOpt { lr: 1.0, momentum: 0.5 };
-        let mut p = vec![0.0f32];
-        let mut buf = Vec::new();
-        // constant target 1.0: step1 delta=1 -> p=1; step2 buf=0.5*1+(1-1)=0.5 -> p=1.5
-        opt.apply(&mut p, vec![1.0], &mut buf);
-        assert!((p[0] - 1.0).abs() < 1e-6);
-        opt.apply(&mut p, vec![1.0], &mut buf);
-        assert!((p[0] - 1.5).abs() < 1e-6, "momentum overshoot expected, got {}", p[0]);
-    }
-
-    #[test]
-    fn server_opt_small_lr_damps() {
-        let opt = ServerOpt { lr: 0.1, momentum: 0.0 };
-        let mut p = vec![0.0f32];
-        let mut buf = Vec::new();
-        opt.apply(&mut p, vec![1.0], &mut buf);
-        assert!((p[0] - 0.1).abs() < 1e-6);
-    }
     use crate::dart::TaskRegistry;
     use crate::fact::aggregation::Aggregation;
     use crate::fact::client::FactClientRuntime;

@@ -122,6 +122,12 @@ adaptive deadlines (run/train): --deadline-mode static|p50|p90|p99
          cohort latency percentile × margin, clamped into [min, max];
          --deadline-ms stays the cold-start fallback)
 
+algorithms (run/train): --server-opt plain|fedavgm[:m[:lr]]|fedadam[:lr[:b1[:b2[:eps]]]]
+        --local-strategy plain|fedprox[:mu]|fednova
+        (the server optimizer folds each round's aggregate into the
+         global model; the local strategy shapes the client update —
+         fedprox overrides --mu, fednova normalizes by local steps)
+
 privacy (run/train): --privacy off|dp|secagg|secagg+dp
         --clip-norm 1.0 --noise-multiplier 1.0 --dp-delta 1e-5
         --weight-scale 128 --frac-bits 16
@@ -129,6 +135,23 @@ privacy (run/train): --privacy off|dp|secagg|secagg+dp
         (secagg rounds run per-pair DH key agreement + t-of-n Shamir
          share recovery; --reveal-threshold 0 = majority auto)"
     );
+}
+
+/// Parse the algorithm-seam flags: the server-side optimizer applied to
+/// each round's aggregate and the client local-update strategy.
+fn seams_from_args(
+    args: &Args,
+) -> Result<(
+    Arc<dyn feddart::fact::rounds::optimizer::ServerOptimizer>,
+    feddart::fact::rounds::strategy::LocalStrategy,
+)> {
+    let opt = feddart::fact::rounds::optimizer::parse_server_opt(
+        args.opt_or("server-opt", "plain"),
+    )?;
+    let strategy = feddart::fact::rounds::strategy::LocalStrategy::parse(
+        args.opt_or("local-strategy", "plain"),
+    )?;
+    Ok((opt, strategy))
 }
 
 /// Build a privacy config from the CLI flags; `None` when `--privacy` is
@@ -279,6 +302,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         local_steps: args.opt_usize("local-steps", 4)?,
         round: 0,
     });
+    let (server_opt, strategy) = seams_from_args(args)?;
+    if server_opt.name() != "plain" || strategy.name() != "plain" {
+        println!("algorithms: server_opt={} local_strategy={}", server_opt.name(), strategy.name());
+    }
+    server = server.with_server_opt(server_opt).with_local_strategy(strategy);
     if let Some(p) = participation_from_args(args)? {
         println!(
             "participation: q={} quorum={} deadline={}ms strategy={}",
@@ -421,6 +449,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         local_steps: args.opt_usize("local-steps", 4)?,
         round: 0,
     });
+    let (server_opt, strategy) = seams_from_args(args)?;
+    if server_opt.name() != "plain" || strategy.name() != "plain" {
+        println!("algorithms: server_opt={} local_strategy={}", server_opt.name(), strategy.name());
+    }
+    server = server.with_server_opt(server_opt).with_local_strategy(strategy);
     if let Some(p) = participation {
         server = server.with_participation(p);
     }

@@ -165,6 +165,31 @@ fn fixture_drift_family_bites() {
 }
 
 #[test]
+fn fixture_drift_opt_state_replay_bites() {
+    // the event schema persists server-optimizer state, but the absorb
+    // replay path pattern-matches the field away: replay would silently
+    // drop momentum/Adam buffers
+    let root = fixture_root("drift-opt-state");
+    put(
+        &root,
+        "rust/src/coordinator/round_store.rs",
+        "pub enum EventKind { Aggregated { params: u64, opt_state: u64 } }\n\
+         pub fn transition(ev: &EventKind) {\n\
+         \x20   match ev { EventKind::Aggregated { .. } => {} }\n\
+         }\n\
+         pub fn absorb(ev: &EventKind) {\n\
+         \x20   match ev { EventKind::Aggregated { .. } => {} }\n\
+         }\n",
+    );
+    put(&root, "docs/OPERATIONS.md", "# Operations\n");
+    let rules = run_family(&root, "drift");
+    assert!(
+        rules.iter().any(|r| r == "drift-event-coverage"),
+        "absorb dropping opt_state must be flagged: {rules:?}"
+    );
+}
+
+#[test]
 fn fixture_pragma_suppresses_at_engine_level() {
     let root = fixture_root("pragma");
     put(

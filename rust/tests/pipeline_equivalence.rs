@@ -1,0 +1,482 @@
+//! Behavioral-equivalence golden for the round-pipeline refactor.
+//!
+//! The FactServer god-module was decomposed into `fact::rounds::{ctx,
+//! phases, pipeline}` with pluggable `ServerOptimizer` / `LocalStrategy`
+//! seams.  Under the identity configuration — `PlainReplace` + `plain` —
+//! the pipeline must be *behaviorally invisible*: a fixed-seed 3-round
+//! secagg+dp session reproduces bit-identically run over run, in
+//!
+//! * the final aggregate parameters (bitwise),
+//! * the ε-ledger (steps and epsilon, bitwise),
+//! * the durable event sequence (same tags in the same order), and
+//! * the per-round records (everything except wall-clock timings).
+//!
+//! It also pins the WAL compatibility anchor: a stateless optimizer must
+//! leave `Aggregated` events WITHOUT an `opt_state` key (pre-refactor
+//! byte format), while a stateful one must write it — so pre-refactor
+//! WALs replay unchanged and stateful sessions resume exactly.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use feddart::coordinator::round_store::{
+    LedgerCharge, MemRoundStore, RecoveryStatus, RoundEvent, RoundPhase,
+    RoundState,
+};
+use feddart::coordinator::workflow::WorkflowManager;
+use feddart::coordinator::RoundStore;
+use feddart::dart::TaskRegistry;
+use feddart::error::FedError;
+use feddart::fact::aggregation::Aggregation;
+use feddart::fact::model::FactModel;
+use feddart::fact::rounds::optimizer::FedAvgM;
+use feddart::fact::stopping::FixedRoundFl;
+use feddart::fact::FactServer;
+use feddart::json::Json;
+use feddart::privacy::{
+    dp, from_hex, keys, masking, round_id_from_hex, shamir, to_hex,
+    PrivacyConfig, PrivacyMode,
+};
+use feddart::util::rng::{golden_f32, Rng};
+use feddart::util::tensorbuf::TensorBuf;
+
+const PARAMS: usize = 48;
+const CLIENTS: usize = 4;
+const ROUNDS: usize = 3;
+const SESSION_TAG: u64 = 0x901d_e0aa;
+
+// ------------------------------------------------------------ fixture
+
+struct TestModel;
+
+impl FactModel for TestModel {
+    fn name(&self) -> &str {
+        "equivalencemodel"
+    }
+    fn param_count(&self) -> usize {
+        PARAMS
+    }
+    fn init_params(&self, seed: i32) -> feddart::Result<Vec<f32>> {
+        Ok(golden_f32(seed as u32, PARAMS))
+    }
+    fn aggregation(&self) -> &Aggregation {
+        &Aggregation::WeightedFedAvg
+    }
+}
+
+fn device_index(device: &str) -> usize {
+    device.rsplit('-').next().unwrap().parse().unwrap()
+}
+
+fn client_secret(idx: usize) -> [u8; 32] {
+    [idx as u8 + 11; 32]
+}
+
+fn round_keys_of(device: &str, round_id: u64) -> keys::RoundKeys {
+    keys::keypair(&keys::derive_round_secret(
+        &client_secret(device_index(device)),
+        round_id,
+        device,
+    ))
+}
+
+fn keys_map_of(p: &Json) -> BTreeMap<String, String> {
+    p.need("keys")
+        .unwrap()
+        .as_obj()
+        .unwrap()
+        .iter()
+        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+        .collect()
+}
+
+/// Deterministic secagg+dp clients (the same construction the recovery
+/// and privacy integration tests use): every derived quantity is a pure
+/// function of `(round_id, device)`, so two identically configured
+/// sessions produce byte-identical client traffic.
+fn deterministic_registry() -> TaskRegistry {
+    let registry = TaskRegistry::new();
+    registry.register("fact_init", |_| Ok(Json::Null));
+
+    registry.register("fact_keys", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let kp = round_keys_of(&device, round_id);
+        Ok(Json::obj().set("pubkey", keys::pubkey_hex(&kp.public)))
+    });
+
+    registry.register("fact_shares", |p| {
+        let device = p.get("_device").and_then(Json::as_str).unwrap().to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let threshold = p.need("threshold")?.as_usize().unwrap();
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let peers: Vec<(String, u8)> = keys_map
+            .keys()
+            .enumerate()
+            .filter(|(_, n)| *n != &device)
+            .map(|(i, n)| (n.clone(), i as u8 + 1))
+            .collect();
+        let xs: Vec<u8> = peers.iter().map(|(_, x)| *x).collect();
+        let mut rng = Rng::new(round_id ^ device_index(&device) as u64);
+        let split = shamir::split_at(&kp.secret, threshold, &xs, &mut rng)?;
+        let mut shares = Json::obj();
+        let mut commits = Json::obj();
+        for (share, (peer, _)) in split.iter().zip(peers.iter()) {
+            let their = keys::parse_pubkey_hex(&keys_map[peer])?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            let ct =
+                keys::encrypt_share(&sk, round_id, &device, peer, &share.to_bytes());
+            shares = shares.set(peer, to_hex(&ct));
+            commits = commits.set(peer, to_hex(&shamir::share_commitment(share)));
+        }
+        Ok(Json::obj().set("shares", shares).set("commits", commits))
+    });
+
+    registry.register("fact_learn", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let idx = device_index(&device);
+        let global = TensorBuf::from_json(p.need("params")?)
+            .map_err(|e| FedError::Task(e.to_string()))?;
+        let gs = global.as_f32_slice();
+        let delta = golden_f32(idx as u32 + 1, gs.len());
+        let mut params: Vec<f32> =
+            gs.iter().zip(&delta).map(|(g, d)| g + 0.1 * d).collect();
+        let n_samples = 100.0 + 10.0 * idx as f32;
+
+        let Some(pj) = p.get("privacy") else {
+            return Ok(Json::obj()
+                .set("params", TensorBuf::from_f32_vec(params))
+                .set("n_samples", n_samples)
+                .set("loss", 0.5));
+        };
+        let cfg = PrivacyConfig::from_json(pj)?;
+        let round_id =
+            round_id_from_hex(pj.need("round_id")?.as_str().unwrap_or_default())?;
+        if cfg.mode.has_dp() {
+            let mut rng = Rng::new(round_id ^ idx as u64);
+            dp::privatize_update(
+                &mut params,
+                gs,
+                cfg.clip_norm,
+                cfg.noise_multiplier,
+                &mut rng,
+            )?;
+        }
+        if cfg.mode.has_secagg() {
+            let keys_map: BTreeMap<String, String> = pj
+                .need("keys")?
+                .as_obj()
+                .unwrap()
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect();
+            let participants: Vec<String> = pj
+                .need("participants")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|j| j.as_str().map(String::from))
+                .collect();
+            let kp = round_keys_of(&device, round_id);
+            let seeds: Vec<(i64, [u8; 32])> = participants
+                .iter()
+                .filter(|c| *c != &device)
+                .map(|peer| {
+                    let their = keys::parse_pubkey_hex(&keys_map[peer]).unwrap();
+                    let sk = keys::shared_key(&kp.secret, &their);
+                    (
+                        masking::pair_sign(&device, peer),
+                        keys::pair_seed_from_shared(&sk, round_id, &device, peer),
+                    )
+                })
+                .collect();
+            let weighted =
+                pj.get("weighted").and_then(Json::as_bool).unwrap_or(true);
+            let weight = if weighted {
+                n_samples as f64 / cfg.weight_scale as f64
+            } else {
+                1.0
+            };
+            params = masking::mask_update_with_seeds(
+                &params,
+                weight,
+                &seeds,
+                cfg.frac_bits,
+            )?;
+        }
+        Ok(Json::obj()
+            .set("params", TensorBuf::from_f32_vec(params))
+            .set("n_samples", n_samples)
+            .set("loss", 0.5))
+    });
+
+    registry.register("fact_reveal", |p| {
+        let device = p
+            .get("_device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| FedError::Task("missing _device".into()))?
+            .to_string();
+        let round_id =
+            round_id_from_hex(p.need("round_id")?.as_str().unwrap_or_default())?;
+        let keys_map = keys_map_of(p);
+        let kp = round_keys_of(&device, round_id);
+        let mut seeds = Json::obj();
+        let mut shares_out = Json::obj();
+        for d in p.need("dropped")?.as_arr().unwrap_or(&[]) {
+            let Some(name) = d.as_str() else { continue };
+            if name == device {
+                continue;
+            }
+            let Some(pub_hex) = keys_map.get(name) else { continue };
+            let their = keys::parse_pubkey_hex(pub_hex)?;
+            let sk = keys::shared_key(&kp.secret, &their);
+            seeds = seeds.set(
+                name,
+                to_hex(&keys::pair_seed_from_shared(&sk, round_id, &device, name)),
+            );
+            if let Some(ct_hex) =
+                p.get("shares").and_then(|s| s.get(name)).and_then(Json::as_str)
+            {
+                let plain = keys::decrypt_share(
+                    &sk,
+                    round_id,
+                    name,
+                    &device,
+                    &from_hex(ct_hex)?,
+                )?;
+                shares_out = shares_out.set(name, to_hex(&plain));
+            }
+        }
+        Ok(Json::obj().set("seeds", seeds).set("shares", shares_out))
+    });
+    registry
+}
+
+// -------------------------------------------------------- logging store
+
+/// Delegates to a [`MemRoundStore`] while journaling every appended
+/// event's tag and whether its serialized form carries an `opt_state`
+/// key — the observable surface the golden compares across runs.
+#[derive(Default)]
+struct EventLogStore {
+    inner: MemRoundStore,
+    tags: Mutex<Vec<String>>,
+    aggregated_with_opt_state: Mutex<Vec<bool>>,
+}
+
+impl RoundStore for EventLogStore {
+    fn append(&self, ev: RoundEvent) -> feddart::Result<RoundPhase> {
+        let tag = ev.kind.tag().to_string();
+        if tag == "aggregated" {
+            self.aggregated_with_opt_state
+                .lock()
+                .unwrap()
+                .push(ev.to_json().get("opt_state").is_some());
+        }
+        self.tags.lock().unwrap().push(tag);
+        self.inner.append(ev)
+    }
+    fn append_charge(&self, charge: LedgerCharge) -> feddart::Result<()> {
+        self.tags.lock().unwrap().push("charge".to_string());
+        self.inner.append_charge(charge)
+    }
+    fn charges(&self) -> feddart::Result<Vec<LedgerCharge>> {
+        self.inner.charges()
+    }
+    fn round(&self, round_id: u64) -> feddart::Result<Option<RoundState>> {
+        self.inner.round(round_id)
+    }
+    fn rounds(&self) -> feddart::Result<Vec<RoundState>> {
+        self.inner.rounds()
+    }
+    fn session_tag(&self) -> feddart::Result<Option<u64>> {
+        self.inner.session_tag()
+    }
+    fn set_session_tag(&self, tag: u64) -> feddart::Result<u64> {
+        self.inner.set_session_tag(tag)
+    }
+    fn compact(&self) -> feddart::Result<()> {
+        self.inner.compact()
+    }
+    fn recovery(&self) -> RecoveryStatus {
+        self.inner.recovery()
+    }
+}
+
+// -------------------------------------------------------------- driver
+
+/// The timing-free projection of a round record (wall-clock fields are
+/// the only legitimately nondeterministic part of a fixed-seed session).
+fn record_fingerprint(r: &feddart::fact::server::RoundRecord) -> String {
+    format!(
+        "round={} clients={} sampled={} late={} dropped={} loss={} q={} \
+         server_opt={} local_strategy={}",
+        r.round,
+        r.n_clients,
+        r.sampled,
+        r.late,
+        r.dropped,
+        r.mean_loss,
+        r.sample_rate,
+        r.server_opt,
+        r.local_strategy
+    )
+}
+
+struct RunOutcome {
+    params: Vec<f32>,
+    steps: u64,
+    epsilon: f64,
+    tags: Vec<String>,
+    aggregated_with_opt_state: Vec<bool>,
+    records: Vec<String>,
+    summaries: Vec<Json>,
+}
+
+/// One fixed-seed secagg+dp session under the identity seams.
+fn run_identity_session() -> RunOutcome {
+    let store = Arc::new(EventLogStore::default());
+    let wm = WorkflowManager::test_mode(CLIENTS, deterministic_registry(), 4);
+    let mut server = FactServer::new(wm)
+        .with_privacy(PrivacyConfig {
+            mode: PrivacyMode::SecAggDp,
+            clip_norm: 4.0,
+            noise_multiplier: 0.05,
+            weight_scale: 128.0,
+            ..PrivacyConfig::default()
+        })
+        .with_round_store(store.clone())
+        .with_session_tag(SESSION_TAG);
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(ROUNDS)),
+            5,
+        )
+        .unwrap();
+    server.learn().unwrap();
+    let summaries = store
+        .rounds()
+        .unwrap()
+        .iter()
+        .map(|r| r.summary_json())
+        .collect();
+    RunOutcome {
+        params: server.container().clusters[0].params.clone(),
+        steps: server.accountant().steps,
+        epsilon: server.accountant().epsilon(1e-5),
+        tags: store.tags.lock().unwrap().clone(),
+        aggregated_with_opt_state: store
+            .aggregated_with_opt_state
+            .lock()
+            .unwrap()
+            .clone(),
+        records: server.history().iter().map(record_fingerprint).collect(),
+        summaries,
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+/// THE golden: two identically configured fixed-seed sessions through
+/// the layered pipeline are bit-identical in parameters, ε-ledger,
+/// event sequence, and per-round records.
+#[test]
+fn identity_seams_reproduce_bit_identically() {
+    let a = run_identity_session();
+    let b = run_identity_session();
+
+    assert_eq!(a.params, b.params, "aggregate params must be bit-identical");
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.steps, ROUNDS as u64);
+    assert!(
+        (a.epsilon - b.epsilon).abs() < 1e-12,
+        "ε diverged: {} vs {}",
+        a.epsilon,
+        b.epsilon
+    );
+    assert_eq!(a.tags, b.tags, "durable event sequence must be identical");
+    assert_eq!(a.records, b.records, "round records must be identical");
+
+    // the sequence itself is the full secagg arc every round (Revealed
+    // carries the audit even without dropouts), with the ε charges
+    // appended once the clustering round settles
+    assert_eq!(a.tags.len(), ROUNDS * 8 + ROUNDS);
+    for r in 0..ROUNDS {
+        assert_eq!(
+            &a.tags[r * 8..(r + 1) * 8],
+            &[
+                "configured",
+                "keys_collected",
+                "shares_dealt",
+                "learn_dispatched",
+                "learn_closed",
+                "revealed",
+                "aggregated",
+                "closed",
+            ],
+            "round {r} event arc"
+        );
+    }
+    assert!(
+        a.tags[ROUNDS * 8..].iter().all(|t| t == "charge"),
+        "tail must be the ε charges: {:?}",
+        &a.tags[ROUNDS * 8..]
+    );
+}
+
+/// WAL-format anchor: the stateless identity optimizer leaves
+/// `Aggregated` events without an `opt_state` key (pre-refactor byte
+/// format), and the round summaries echo the identity seams.
+#[test]
+fn stateless_optimizer_keeps_pre_refactor_event_format() {
+    let run = run_identity_session();
+    assert_eq!(run.aggregated_with_opt_state.len(), ROUNDS);
+    assert!(
+        run.aggregated_with_opt_state.iter().all(|w| !w),
+        "PlainReplace must not serialize opt_state into Aggregated events"
+    );
+    for s in &run.summaries {
+        assert_eq!(s.get("server_opt").and_then(Json::as_str), Some("plain"));
+        assert_eq!(
+            s.get("local_strategy").and_then(Json::as_str),
+            Some("plain")
+        );
+    }
+}
+
+/// The contrast case: a stateful optimizer writes its buffers into the
+/// `Aggregated` event — that payload is what makes resume-at-Aggregated
+/// exact for FedAvgM/FedAdam.
+#[test]
+fn stateful_optimizer_persists_opt_state_in_aggregated_events() {
+    let store = Arc::new(EventLogStore::default());
+    let wm = WorkflowManager::test_mode(CLIENTS, deterministic_registry(), 4);
+    let mut server = FactServer::new(wm)
+        .with_server_opt(Arc::new(FedAvgM { lr: 1.0, momentum: 0.9 }))
+        .with_round_store(store.clone())
+        .with_session_tag(SESSION_TAG);
+    server
+        .initialization_by_model(
+            Arc::new(TestModel),
+            Arc::new(FixedRoundFl(2)),
+            5,
+        )
+        .unwrap();
+    server.learn().unwrap();
+    let with_state = store.aggregated_with_opt_state.lock().unwrap().clone();
+    assert_eq!(with_state, vec![true, true]);
+    for s in store.rounds().unwrap().iter().map(|r| r.summary_json()) {
+        assert_eq!(
+            s.get("server_opt").and_then(Json::as_str),
+            Some("fedavgm")
+        );
+    }
+}

@@ -630,6 +630,77 @@ fn corrupt_wal_tail_voids_the_wounded_round_per_policy() {
     );
 }
 
+/// A stateful server optimizer survives the crash window the `Aggregated`
+/// event exists for: kill the coordinator at EVERY durable write of a
+/// clear-mode FedAvgM session — in particular right after `Aggregated`
+/// hits disk and before `Closed` — and require the resumed session to end
+/// with bit-identical parameters AND bit-identical momentum buffers.
+/// Before the optimizer state rode inside `Aggregated`, this resume could
+/// only restore parameters and silently reset the velocity to zero.
+#[test]
+fn fedavgm_killed_at_aggregated_resumes_with_exact_momentum() {
+    use feddart::fact::rounds::optimizer::FedAvgM;
+
+    let fedavgm = || FedAvgM { lr: 1.0, momentum: 0.9 };
+    let run = |store: Arc<dyn RoundStore>| -> (feddart::Result<()>, FactServer) {
+        let wm =
+            WorkflowManager::test_mode(CLIENTS, deterministic_registry(), 4);
+        let mut server = FactServer::new(wm)
+            .with_server_opt(Arc::new(fedavgm()))
+            .with_round_store(store)
+            .with_session_tag(SESSION_TAG);
+        server
+            .initialization_by_model(
+                Arc::new(TestModel),
+                Arc::new(FixedRoundFl(ROUNDS)),
+                3,
+            )
+            .unwrap();
+        if let Err(e) = server.recover() {
+            return (Err(e), server);
+        }
+        (server.learn(), server)
+    };
+
+    // uninterrupted reference, counting the session's durable writes
+    let ref_dir = tmp_dir("avgm-ref");
+    let counter = Arc::new(KillStore::new(&ref_dir, i64::MAX));
+    let start = counter.remaining.load(Ordering::SeqCst);
+    let (out, reference) = run(counter.clone());
+    out.unwrap();
+    let total_writes = start - counter.remaining.load(Ordering::SeqCst);
+    // clear-mode rounds log Configured/LearnDispatched/LearnClosed/
+    // Aggregated/Closed = 5 events each
+    assert_eq!(total_writes, (ROUNDS * 5) as i64);
+    let ref_cluster = &reference.container().clusters[0];
+    assert_eq!(ref_cluster.opt_state.step, ROUNDS as u64);
+    assert!(
+        ref_cluster.opt_state.buffers.contains_key("momentum"),
+        "FedAvgM must have accumulated a velocity buffer"
+    );
+    // momentum made the update visibly different from plain replacement:
+    // a resume that silently reset the buffer could not stay identical
+    assert!(ref_cluster.opt_state.buffers["momentum"].iter().any(|v| *v != 0.0));
+
+    for k in 1..=total_writes {
+        let dir = tmp_dir(&format!("avgm-kill-{k}"));
+        let (out, _) = run(Arc::new(KillStore::new(&dir, k)));
+        out.unwrap_err();
+        let (out, resumed) = run(Arc::new(WalRoundStore::open(&dir).unwrap()));
+        out.unwrap_or_else(|e| panic!("kill point {k}: resume failed: {e}"));
+        let cluster = &resumed.container().clusters[0];
+        assert_eq!(
+            cluster.params, ref_cluster.params,
+            "kill point {k}: resumed FedAvgM params diverged"
+        );
+        assert_eq!(
+            cluster.opt_state, ref_cluster.opt_state,
+            "kill point {k}: resumed momentum buffers diverged"
+        );
+        assert_eq!(resumed.history().len(), ROUNDS, "kill point {k}");
+    }
+}
+
 /// Plain-mode sanity: the WAL also rides along without privacy — the
 /// store sees the same Configured → Learn → Aggregated → Closed arc and a
 /// restart resumes it (this is the path `feddart run --round-store` uses
